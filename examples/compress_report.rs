@@ -1,0 +1,105 @@
+//! Regenerate Table 2 + the §3 compression claims, cross-checking the
+//! python accounting (artifacts/compress_report.json, if present)
+//! against the independent Rust model/profile accounting.
+//!
+//! ```sh
+//! cargo run --release --example compress_report
+//! ```
+
+use anyhow::{anyhow, Result};
+use cadnn::bench::{print_table, table2};
+use cadnn::compress::profile::paper_profile;
+use cadnn::compress::size;
+use cadnn::models;
+use cadnn::util::json::Json;
+
+fn main() -> Result<()> {
+    println!("== Table 2 ==\n");
+    let rows: Vec<Vec<String>> = table2::table2()
+        .iter()
+        .map(|r| {
+            vec![
+                r.model.to_string(),
+                format!("{:.1}", r.size_mb),
+                format!("{:.1}", r.paper_size_mb),
+                format!("{:.1}/{:.1}", r.top1, r.top5),
+                format!("{}", r.weight_layers),
+                format!("{}", r.compute_layers),
+                format!("{}", r.paper_layers),
+            ]
+        })
+        .collect();
+    print_table(
+        &["model", "size MB", "paper MB", "top1/top5 (quoted)", "w-layers", "c-layers", "paper"],
+        &rows,
+    );
+
+    println!("\n== §3 weight-pruning claims (accounting on exact architectures) ==\n");
+    let mut rows = Vec::new();
+    for (name, claim) in [
+        ("lenet5", 348.0),
+        ("alexnet", 36.0),
+        ("vgg16", 34.0),
+        ("resnet18", 8.0),
+        ("resnet50", 9.2),
+    ] {
+        let g = models::build(name, 1).unwrap();
+        let r = size::report(&g, &paper_profile(&g));
+        rows.push(vec![
+            name.to_string(),
+            format!("{}", r.weights),
+            format!("{}", r.nnz),
+            format!("{:.1}x", r.compression_rate),
+            format!("{claim}x"),
+            format!("{:.0}x", r.storage_reduction_no_idx()),
+        ]);
+    }
+    print_table(
+        &["model", "weights", "nnz", "rate", "paper", "4bit storage (no idx)"],
+        &rows,
+    );
+
+    // cross-check vs the python accounting if the report exists
+    if let Ok(text) = std::fs::read_to_string("artifacts/compress_report.json") {
+        let j = Json::parse(&text).map_err(|e| anyhow!("{e}"))?;
+        println!("\n== cross-check vs python (artifacts/compress_report.json) ==\n");
+        if let Some(acc) = j.get("accounted") {
+            for name in ["alexnet", "vgg16"] {
+                if let Some(a) = acc.get(name) {
+                    let py_total = a.get("total_weights").and_then(|v| v.as_usize()).unwrap_or(0);
+                    let py_rate = a.get("rate").and_then(|v| v.as_f64()).unwrap_or(0.0);
+                    let g = models::build(name, 1).unwrap();
+                    let r = size::report(&g, &paper_profile(&g));
+                    let total_match = py_total == r.weights;
+                    let rate_match = (py_rate - r.compression_rate).abs() < 1.0;
+                    println!(
+                        "{name}: weights {} (python {}) {}  rate {:.1} (python {:.1}) {}",
+                        r.weights,
+                        py_total,
+                        if total_match { "OK" } else { "MISMATCH" },
+                        r.compression_rate,
+                        py_rate,
+                        if rate_match { "OK" } else { "MISMATCH" },
+                    );
+                    if !total_match || !rate_match {
+                        return Err(anyhow!("{name}: rust/python accounting disagrees"));
+                    }
+                }
+            }
+        }
+        if let Some(l) = j.get("measured").and_then(|m| m.get("lenet5")) {
+            println!("\nmeasured lenet5 (python ADMM on synthetic digits):");
+            for key in [
+                "dense_acc", "pruned_acc", "pruned_rate", "quant_acc", "quant_rate",
+                "storage_reduction_no_idx",
+            ] {
+                if let Some(v) = l.get(key).and_then(|v| v.as_f64()) {
+                    println!("  {key:28} = {v}");
+                }
+            }
+        }
+    } else {
+        println!("\n(run `make compress-report` for the measured python ADMM results)");
+    }
+    Ok(())
+}

@@ -1,0 +1,53 @@
+//! Regenerate Figure 2 (thin wrapper over the shared harness; identical
+//! to `cadnn figure2`).
+//!
+//! ```sh
+//! cargo run --release --example figure2 [-- --measured]
+//! ```
+
+use cadnn::bench::{figure2, print_table};
+use cadnn::costmodel::calibrate;
+use cadnn::models;
+
+fn main() {
+    let measured = std::env::args().any(|a| a == "--measured");
+    let calib = if measured {
+        eprintln!("calibrating host kernels...");
+        calibrate::measure_host()
+    } else {
+        calibrate::CalibrationTable::nominal()
+    };
+    if calib.measured {
+        eprintln!(
+            "host peak {:.1} GFLOPS, ratios: naive {:.3} blocked {:.3} csr {:.3}",
+            calib.host_peak_gflops,
+            calib.direct_conv.compute,
+            calib.gemm.compute,
+            calib.csr_gemm.compute
+        );
+    }
+    let rows = figure2::figure2(&calib, 1.25);
+    let mut table = Vec::new();
+    for m in models::EVAL_MODELS {
+        let mut row = vec![m.to_string()];
+        for s in figure2::SERIES {
+            row.push(
+                rows.iter()
+                    .find(|r| r.model == m && r.series == s)
+                    .map(|r| format!("{:.1}", r.latency_ms))
+                    .unwrap_or_default(),
+            );
+        }
+        table.push(row);
+    }
+    let mut headers = vec!["model"];
+    headers.extend(figure2::SERIES);
+    println!("Figure 2 — inference latency (ms) on the Table-1 device model\n");
+    print_table(&headers, &table);
+    let h = figure2::headline(&rows);
+    println!(
+        "\nheadline: resnet50 SC {:.1} ms / SG {:.1} ms (paper 26 / 21); \
+         speedup vs TFLite up to {:.1}x (paper 8.8x), vs TVM up to {:.1}x (paper 6.4x)",
+        h.resnet50_sc_ms, h.resnet50_sg_ms, h.max_speedup_vs_tflite, h.max_speedup_vs_tvm
+    );
+}

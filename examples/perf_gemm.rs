@@ -1,0 +1,25 @@
+//! §Perf probe used during the performance pass (EXPERIMENTS.md §Perf):
+//! measures naive vs blocked GEMM across tile variants on a
+//! ResNet-50-representative shape. Kept as the reproducible harness for
+//! re-running the optimization log.
+use cadnn::kernels::gemm::{gemm_blocked, gemm_naive};
+use cadnn::kernels::Epilogue;
+use cadnn::passes::layout::TileConfig;
+use cadnn::util::rng::Rng;
+use cadnn::util::stats;
+
+fn main() {
+    let (m, k, n) = (784usize, 576usize, 128usize);
+    let mut rng = Rng::new(1);
+    let a: Vec<f32> = (0..m*k).map(|_| rng.normal() as f32).collect();
+    let b: Vec<f32> = (0..k*n).map(|_| rng.normal() as f32).collect();
+    let mut c = vec![0.0f32; m*n];
+    let flops = 2.0 * (m*k*n) as f64;
+    let t = stats::Summary::from(&stats::measure_adaptive_us(300_000.0, 10, || gemm_naive(&a,&b,&mut c,m,k,n))).unwrap().p50;
+    println!("naive: {:.0}us {:.1} GF/s", t, flops/t/1e3);
+    for (mc,nc,kc,u) in [(64,128,256,8),(64,128,192,8),(64,128,576,8),(128,256,256,8),(64,64,256,8)] {
+        let tile = TileConfig{mc,nc,kc,unroll:u};
+        let t = stats::Summary::from(&stats::measure_adaptive_us(300_000.0, 10, || gemm_blocked(&a,&b,&mut c,m,k,n,&tile,&Epilogue::None))).unwrap().p50;
+        println!("blocked mc{mc} nc{nc} kc{kc} u{u}: {:.0}us {:.1} GF/s", t, flops/t/1e3);
+    }
+}

@@ -1,0 +1,50 @@
+//! Quickstart: load the AOT-compiled LeNet-5 artifact via PJRT, classify
+//! one image from the golden set, print the prediction and latency.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use anyhow::{anyhow, Result};
+use cadnn::runtime::Runtime;
+use cadnn::util::json::Json;
+use cadnn::util::Stopwatch;
+
+fn main() -> Result<()> {
+    let dir = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
+    let mut rt = Runtime::open(&dir)?;
+    println!("PJRT platform: {}", rt.platform());
+
+    rt.load("lenet5", "dense")?;
+    let model = rt
+        .get("lenet5", "dense", 1)
+        .ok_or_else(|| anyhow!("batch-1 lenet5 not in manifest"))?;
+    println!(
+        "loaded lenet5/dense b1 ({} classes, trained acc {:.1}%)",
+        model.entry.classes,
+        model.entry.accuracy * 100.0
+    );
+
+    // One image from the golden set (written by aot.py alongside the HLO).
+    let golden_text = std::fs::read_to_string(format!("{dir}/golden/lenet5_dense.json"))?;
+    let golden = Json::parse(&golden_text).map_err(|e| anyhow!("{e}"))?;
+    let input = golden.get("input").and_then(|v| v.as_f32_vec()).unwrap();
+    let labels = golden.get("labels").and_then(|v| v.as_usize_vec()).unwrap();
+    let per_image = 28 * 28;
+
+    // warmup + timed single-image inference
+    let _ = model.run(&input[..per_image])?;
+    let sw = Stopwatch::new();
+    let logits = model.run(&input[..per_image])?;
+    let us = sw.elapsed_us();
+
+    let pred = logits
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap();
+    println!("prediction: {pred} (label: {}) in {:.2} ms", labels[0], us / 1e3);
+    println!("logits: {logits:?}");
+    Ok(())
+}

@@ -1,0 +1,128 @@
+//! End-to-end serving driver (DESIGN.md §5 "Serving E2E"): start the
+//! coordinator over the AOT artifacts, replay a Poisson request trace of
+//! synthetic digit images against the dense AND compressed variants, and
+//! report latency percentiles, throughput, batch utilization, and trace
+//! accuracy per variant.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example serve_classifier [-- <requests> <rps>]
+//! ```
+
+use anyhow::Result;
+use cadnn::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig};
+use cadnn::util::rng::Rng;
+
+/// Rasterize the same seven-segment procedural digits as
+/// python/compile/datasets.py (one glyph, random offset, light noise) so
+/// the served model sees in-distribution images.
+fn digit_image(digit: usize, rng: &mut Rng) -> Vec<f32> {
+    const SEGS: [(usize, usize, usize, usize); 7] = [
+        (0, 2, 1, 11),
+        (1, 10, 0, 2),
+        (1, 10, 10, 12),
+        (9, 11, 1, 11),
+        (10, 19, 0, 2),
+        (10, 19, 10, 12),
+        (18, 20, 1, 11),
+    ];
+    const ON: [[u8; 7]; 10] = [
+        [1, 1, 1, 0, 1, 1, 1],
+        [0, 0, 1, 0, 0, 1, 0],
+        [1, 0, 1, 1, 1, 0, 1],
+        [1, 0, 1, 1, 0, 1, 1],
+        [0, 1, 1, 1, 0, 1, 0],
+        [1, 1, 0, 1, 0, 1, 1],
+        [1, 1, 0, 1, 1, 1, 1],
+        [1, 0, 1, 0, 0, 1, 0],
+        [1, 1, 1, 1, 1, 1, 1],
+        [1, 1, 1, 1, 0, 1, 1],
+    ];
+    let mut img = vec![0.0f32; 28 * 28];
+    let (r0, c0) = (rng.range(0, 8), rng.range(0, 16));
+    for (s, &(a, b, c, d)) in SEGS.iter().enumerate() {
+        if ON[digit][s] == 1 {
+            for r in a..b {
+                for cc in c..d {
+                    img[(r0 + r) * 28 + (c0 + cc)] = 0.85;
+                }
+            }
+        }
+    }
+    for v in img.iter_mut() {
+        *v = (*v + rng.normal() as f32 * 0.08).clamp(0.0, 1.0);
+    }
+    img
+}
+
+fn run_variant(
+    variant: &str,
+    requests: usize,
+    rps: f64,
+) -> Result<(usize, f64, String)> {
+    let cfg = CoordinatorConfig {
+        artifacts_dir: "artifacts".into(),
+        model: "lenet5".into(),
+        variant: variant.into(),
+        max_batch: 8,
+        max_wait_us: 2_000,
+        policy: BatchPolicy::PadToFit,
+    };
+    let coord = Coordinator::start(cfg)?;
+    let mut rng = Rng::new(2024);
+    let mut truths = Vec::new();
+    let mut rxs = Vec::new();
+    for _ in 0..requests {
+        let digit = rng.below(10);
+        truths.push(digit);
+        rxs.push(coord.submit(digit_image(digit, &mut rng))?);
+        std::thread::sleep(std::time::Duration::from_secs_f64(rng.exp(rps)));
+    }
+    let mut correct = 0usize;
+    for (rx, truth) in rxs.into_iter().zip(&truths) {
+        let resp = rx.recv()?;
+        let pred = resp
+            .logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap();
+        if pred == *truth {
+            correct += 1;
+        }
+    }
+    let m = coord.metrics.lock().unwrap();
+    let p50 = m.latency_summary().map(|s| s.p50).unwrap_or(0.0);
+    let report = m.report();
+    drop(m);
+    coord.shutdown()?;
+    Ok((correct, p50, report))
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let requests: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(48);
+    let rps: f64 = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(60.0);
+
+    println!(
+        "=== serve_classifier: lenet5 dense vs compressed, {requests} reqs @ {rps} req/s ===\n"
+    );
+    let mut p50s = Vec::new();
+    for variant in ["dense", "sparse"] {
+        println!("--- variant: {variant} ---");
+        let (correct, p50, report) = run_variant(variant, requests, rps)?;
+        println!(
+            "{report}accuracy on trace: {}/{} = {:.1}%\n",
+            correct,
+            requests,
+            100.0 * correct as f64 / requests as f64
+        );
+        p50s.push(p50);
+    }
+    println!(
+        "p50 latency dense {:.1} ms vs compressed {:.1} ms",
+        p50s[0] / 1e3,
+        p50s[1] / 1e3
+    );
+    Ok(())
+}

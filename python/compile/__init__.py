@@ -1,0 +1,2 @@
+"""CADNN build-time Python: Layer-1 Pallas kernels, Layer-2 JAX models,
+ADMM compression, and the AOT lowering pipeline. Never imported at runtime."""

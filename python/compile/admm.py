@@ -1,0 +1,323 @@
+"""Unified ADMM weight pruning + quantization (paper §3).
+
+The paper extends Zhang et al. (2018a) in three ways, all implemented
+here:
+
+1. **ADMM regularization + masked mapping and retraining.** The ADMM
+   phase alternates (a) the x-step — DNN training with the dynamic
+   quadratic regularizer (rho/2)||W - Z + U||^2, solved with ordinary SGD;
+   (b) the z-step — Euclidean projection of (W + U) onto the constraint
+   set (top-k magnitude support for pruning; nearest-level for
+   quantization), which is the analytical optimum of the second
+   sub-problem; (c) the dual update U += W - Z. ADMM alone does not
+   guarantee feasibility, so a final *masked mapping* hard-projects W and
+   a *masked retraining* phase retrains only the surviving weights
+   (gradients masked to the fixed support), restoring accuracy.
+
+2. **Unified pruning + quantization.** The same machinery runs with a
+   quantization constraint set (each weight in a 2^bits-level codebook);
+   ``compress`` chains pruning then quantization-on-the-support.
+
+3. **Convergence techniques.** ``multi-rho``: rho is multiplied by a
+   fixed factor every ADMM iteration (starting small so early iterations
+   explore, ending large so W ~= Z); *progressive compression*: the
+   target sparsity is reached through a schedule of increasing rates,
+   re-running ADMM from the previous solution.
+
+Projection granularity is selectable: ``element`` (the paper's
+non-structured pruning, used for the compression-rate accounting and the
+CPU/CSR execution path) or ``block`` (tile-level, feeding the TPU-adapted
+block-sparse kernel — DESIGN.md §Hardware-Adaptation).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import train as T
+
+
+# ------------------------------------------------------------ projections
+
+
+def project_prune_element(w: jnp.ndarray, sparsity: float) -> jnp.ndarray:
+    """Euclidean projection onto {at most (1-sparsity)*size non-zeros}:
+    keep the largest-magnitude weights, zero the rest. Optimal for the
+    l2-proximal z-step (Boyd et al., 2011)."""
+    if sparsity <= 0.0:
+        return w
+    flat = w.reshape(-1)
+    keep = max(1, int(round(flat.size * (1.0 - sparsity))))
+    if keep >= flat.size:
+        return w
+    thresh = jnp.sort(jnp.abs(flat))[flat.size - keep]
+    return jnp.where(jnp.abs(w) >= thresh, w, 0.0)
+
+
+def project_prune_block(
+    w: jnp.ndarray, sparsity: float, bk: int, bn: int
+) -> jnp.ndarray:
+    """Tile-granular projection: rank (bk, bn) tiles of the (K, N) weight
+    matrix view by Frobenius norm; zero whole low-norm tiles."""
+    if sparsity <= 0.0:
+        return w
+    shape = w.shape
+    mat = w.reshape(-1, shape[-1])
+    k, n = mat.shape
+    kp = -(-k // bk) * bk
+    np_ = -(-n // bn) * bn
+    mp = jnp.pad(mat, ((0, kp - k), (0, np_ - n)))
+    tiles = mp.reshape(kp // bk, bk, np_ // bn, bn)
+    norms = jnp.sqrt(jnp.sum(tiles**2, axis=(1, 3)))
+    nt = norms.size
+    keep = max(1, int(round(nt * (1.0 - sparsity))))
+    if keep >= nt:
+        return w
+    thresh = jnp.sort(norms.reshape(-1))[nt - keep]
+    mask = (norms >= thresh).astype(mp.dtype)
+    mp = (tiles * mask[:, None, :, None]).reshape(kp, np_)
+    return mp[:k, :n].reshape(shape)
+
+
+def quant_levels(w: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """MSE-optimal symmetric uniform codebook step (outliers clip to the
+    last level). A max-driven step is so coarse that small surviving
+    weights round to zero — accidental extra pruning that destroys
+    accuracy; searching the step for minimum reconstruction error is the
+    true Euclidean projection onto the best codebook of this family,
+    matching the ADMM z-step's optimality requirement."""
+    flat = w.reshape(-1)
+    nzmask = flat != 0.0
+    amax = float(jnp.maximum(jnp.max(jnp.abs(flat)), 1e-8))
+    n = 2 ** (bits - 1) - 1  # e.g. bits=4 -> levels -7..7 scaled
+    best_step, best_err = amax / n, None
+    for f in np.linspace(0.05, 1.0, 39):
+        step = amax * f / n
+        q = jnp.clip(jnp.round(flat / step), -n, n) * step
+        err = float(jnp.sum(jnp.where(nzmask, (flat - q) ** 2, 0.0)))
+        if best_err is None or err < best_err:
+            best_err, best_step = err, step
+    return jnp.asarray(best_step, w.dtype)
+
+
+def project_quantize(w: jnp.ndarray, bits: int, preserve_zero: bool = True):
+    """Euclidean projection onto the quantized-codebook constraint set:
+    round each weight to the nearest level. Zeros stay zero so the pruning
+    support survives. Returns (projected, step)."""
+    step = quant_levels(w, bits)
+    n = 2 ** (bits - 1) - 1
+    q = jnp.clip(jnp.round(w / step), -n, n) * step
+    if preserve_zero:
+        q = jnp.where(w == 0.0, 0.0, q)
+    return q, step
+
+
+# ----------------------------------------------------------- ADMM config
+
+
+@dataclass
+class AdmmConfig:
+    """Hyper-parameters of one ADMM compression run."""
+
+    sparsity: Dict[str, float]  # layer name -> target sparsity in [0,1)
+    rho: float = 1e-3
+    rho_factor: float = 1.6  # multi-rho: rho *= factor per ADMM iteration
+    admm_iters: int = 6
+    epochs_per_iter: int = 2
+    retrain_epochs: int = 4
+    lr: float = 0.01
+    batch: int = 64
+    granularity: str = "element"  # "element" | "block"
+    block: Tuple[int, int] = (16, 16)
+    quant_bits: Optional[int] = None  # unified prune+quantize when set
+    progressive_stages: Sequence[float] = field(default_factory=lambda: (1.0,))
+    # each stage scales the per-layer sparsity: e.g. (0.6, 1.0) reaches the
+    # target in two progressive rounds (paper's progressive compression).
+    seed: int = 0
+
+
+@dataclass
+class CompressResult:
+    params: dict
+    masks: Dict[str, jnp.ndarray]  # element masks over "w"
+    history: list
+    per_layer_nnz: Dict[str, Tuple[int, int]]  # name -> (nnz, total)
+    quant_bits: Optional[int] = None
+
+    @property
+    def overall_rate(self) -> float:
+        nnz = sum(v[0] for v in self.per_layer_nnz.values())
+        tot = sum(v[1] for v in self.per_layer_nnz.values())
+        return tot / max(nnz, 1)
+
+
+def _project(w, sparsity, cfg: AdmmConfig):
+    if cfg.granularity == "block":
+        return project_prune_block(w, sparsity, *cfg.block)
+    return project_prune_element(w, sparsity)
+
+
+def admm_prune(
+    apply_fn: Callable,
+    params: dict,
+    x,
+    y,
+    cfg: AdmmConfig,
+    log: Optional[Callable[[str], None]] = None,
+) -> CompressResult:
+    """Full pipeline: progressive( ADMM-regularized training -> masked
+    mapping -> masked retraining ) [-> quantization-on-support]."""
+    log = log or (lambda s: None)
+    history: list = []
+
+    for stage_i, stage in enumerate(cfg.progressive_stages):
+        targets = {k: s * stage for k, s in cfg.sparsity.items()}
+        log(f"[stage {stage_i}] targets={ {k: round(v, 4) for k, v in targets.items()} }")
+
+        # --- ADMM regularization phase ------------------------------
+        Z = {k: _project(params[k]["w"], targets[k], cfg) for k in targets}
+        U = {k: jnp.zeros_like(params[k]["w"]) for k in targets}
+        rho = cfg.rho
+        for it in range(cfg.admm_iters):
+            rho_now = rho  # captured by the closure below
+
+            def prox(p, _Z=Z, _U=U, _rho=rho_now):
+                # (rho/2) sum_l ||W_l - Z_l + U_l||^2 — the q1 quadratic
+                # of the first sub-problem.
+                terms = [
+                    jnp.sum((p[k]["w"] - _Z[k] + _U[k]) ** 2) for k in _Z
+                ]
+                return 0.5 * _rho * sum(terms)
+
+            params, hist = T.train(
+                apply_fn, params, x, y,
+                epochs=cfg.epochs_per_iter, batch=cfg.batch, lr=cfg.lr,
+                seed=cfg.seed + it, loss_extra=prox,
+            )
+            history.extend(hist)
+            # z-step: analytical Euclidean projection; u-step: dual ascent.
+            Z = {k: _project(params[k]["w"] + U[k], targets[k], cfg) for k in Z}
+            U = {k: U[k] + params[k]["w"] - Z[k] for k in U}
+            gap = float(
+                sum(jnp.sum((params[k]["w"] - Z[k]) ** 2) for k in Z)
+            )
+            log(f"[stage {stage_i}] admm iter {it}: rho={rho:.2e} ||W-Z||^2={gap:.4e}")
+            rho *= cfg.rho_factor  # multi-rho schedule
+
+        # --- masked mapping (feasibility guarantee) ------------------
+        masks = {}
+        for k in targets:
+            pruned = _project(params[k]["w"], targets[k], cfg)
+            masks[k] = (pruned != 0.0).astype(jnp.float32)
+            params[k]["w"] = pruned
+
+        # --- masked retraining ---------------------------------------
+        params, hist = T.train(
+            apply_fn, params, x, y,
+            epochs=cfg.retrain_epochs, batch=cfg.batch, lr=cfg.lr * 0.5,
+            seed=cfg.seed + 100 + stage_i, weight_masks=masks,
+        )
+        history.extend(hist)
+
+    # --- unified quantization on the pruned support -------------------
+    # Alternating projection / masked retraining (a straight-through-
+    # style relaxation): each round projects onto the codebook, then
+    # lets masked SGD repair the damage; the LAST step is a projection,
+    # so the constraint holds exactly on exit.
+    if cfg.quant_bits is not None:
+        rounds = max(1, cfg.retrain_epochs // 2)
+        for r in range(rounds):
+            for k in cfg.sparsity:
+                q, _ = project_quantize(params[k]["w"], cfg.quant_bits)
+                params[k]["w"] = q * masks[k]
+            if r == rounds - 1:
+                break
+            params, hist = T.train(
+                apply_fn, params, x, y,
+                epochs=2, batch=cfg.batch, lr=cfg.lr * 0.25,
+                seed=cfg.seed + 999 + r, weight_masks=masks,
+            )
+            history.extend(hist)
+        # final recovery: quantized layers frozen (all-zero update mask),
+        # everything else (biases, unconstrained layers) adapts to the
+        # quantized weights — constraints stay exactly satisfied.
+        freeze = {k: jnp.zeros_like(masks[k]) for k in cfg.sparsity}
+        params, hist = T.train(
+            apply_fn, params, x, y,
+            epochs=2, batch=cfg.batch, lr=cfg.lr * 0.5,
+            seed=cfg.seed + 1999, weight_masks=freeze,
+        )
+        history.extend(hist)
+
+    per_layer = {}
+    for k in cfg.sparsity:
+        w = params[k]["w"]
+        per_layer[k] = (int(jnp.sum(w != 0.0)), int(w.size))
+    return CompressResult(
+        params=params,
+        masks=masks,
+        history=history,
+        per_layer_nnz=per_layer,
+        quant_bits=cfg.quant_bits,
+    )
+
+
+def quantize_on_support(
+    apply_fn: Callable,
+    params: dict,
+    masks: Dict[str, jnp.ndarray],
+    x,
+    y,
+    bits: int,
+    *,
+    rounds: int = 4,
+    epochs_per_round: int = 2,
+    lr: float = 0.0025,
+    batch: int = 64,
+    seed: int = 0,
+    log: Optional[Callable[[str], None]] = None,
+) -> dict:
+    """Quantize already-pruned params WITHOUT touching the support:
+    alternating codebook-projection / masked retraining, then a final
+    projection followed by frozen-weight recovery of the unconstrained
+    parameters. This is the §3 'unified framework' second phase run
+    standalone (re-running the prune phase would churn the support)."""
+    log = log or (lambda s: None)
+    for r in range(rounds):
+        for k in masks:
+            q, _ = project_quantize(params[k]["w"], bits)
+            params[k]["w"] = q * masks[k]
+        if r == rounds - 1:
+            break
+        params, _ = T.train(
+            apply_fn, params, x, y,
+            epochs=epochs_per_round, batch=batch, lr=lr,
+            seed=seed + r, weight_masks=masks,
+        )
+    freeze = {k: jnp.zeros_like(masks[k]) for k in masks}
+    params, _ = T.train(
+        apply_fn, params, x, y,
+        epochs=2 * epochs_per_round, batch=batch, lr=lr * 2,
+        seed=seed + 777, weight_masks=freeze,
+    )
+    return params
+
+
+# ------------------------------------------------- storage accounting
+
+
+def storage_bytes_dense(total_weights: int, bits: int = 32) -> int:
+    return total_weights * bits // 8
+
+
+def storage_bytes_compressed(
+    nnz: int, bits_per_weight: int, index_bits: int = 0
+) -> int:
+    """Paper's storage accounting: §3 quotes 3,438x 'not accounting for
+    indices', i.e. index_bits=0; we report both."""
+    return (nnz * (bits_per_weight + index_bits) + 7) // 8

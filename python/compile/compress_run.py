@@ -1,0 +1,190 @@
+"""§3 compression experiments: regenerate the paper's pruning-rate claims.
+
+Two kinds of evidence (DESIGN.md §2, §5):
+
+1. **Measured** — LeNet-5 on the synthetic digit task: dense baseline,
+   aggressive element-wise ADMM pruning (paper: 348x overall / 0.28%
+   weights remaining), and unified pruning+quantization (paper: up to
+   3,438x storage, indices not counted). We run the full pipeline and
+   report achieved rate + accuracy delta. The *absolute* rate at equal
+   accuracy depends on task difficulty (our synthetic task is easier than
+   MNIST, so very high rates are reachable); the claim-shape under test is
+   "two orders of magnitude at ~no accuracy loss".
+
+2. **Accounted** — AlexNet / VGG-16 / ResNet-18 / ResNet-50: the paper's
+   per-layer pruning profiles (from the ADMM papers it builds on) applied
+   to the exact architectures, yielding overall weight reduction and
+   storage. These architectures cannot be trained here (no ImageNet), so
+   rates are computed from the profiles, never measured accuracy.
+
+Emits artifacts/compress_report.json; `examples/compress_report.rs`
+cross-checks the accounted numbers against the Rust `compress::size`
+module.
+
+Usage: python -m compile.compress_run [--out ../artifacts/compress_report.json] [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import admm as A
+from . import datasets as D
+from . import model as M
+from . import train as T
+
+# Paper-prescribed overall rates (§3) used as accounting targets.
+PAPER_RATES = {
+    "lenet5": 348.0,
+    "alexnet": 36.0,
+    "vgg16": 34.0,
+    "resnet18": 8.0,   # abstract: 8x with (almost) zero accuracy loss
+    "resnet50": 9.2,
+}
+
+# Per-layer non-uniform profiles for the accounted subjects: conv layers
+# prune less, FC layers prune much more (the ADMM papers' shape). Each
+# entry: (layer kind, #weights, sparsity). Weights counts match the
+# canonical architectures; the Rust models/ module re-derives them
+# independently and the compress_report example cross-checks.
+ACCOUNTED_PROFILES = {
+    "alexnet": [
+        ("conv1", 34_848, 0.16),
+        ("conv2", 307_200, 0.65),
+        ("conv3", 884_736, 0.70),
+        ("conv4", 663_552, 0.66),
+        ("conv5", 442_368, 0.66),
+        ("fc6", 37_748_736, 0.988),
+        ("fc7", 16_777_216, 0.986),
+        ("fc8", 4_096_000, 0.95),
+    ],
+    "vgg16": [
+        ("conv1_1", 1_728, 0.42),
+        ("conv1_2", 36_864, 0.79),
+        ("conv2_1", 73_728, 0.78),
+        ("conv2_2", 147_456, 0.80),
+        ("conv3_1", 294_912, 0.77),
+        ("conv3_2", 589_824, 0.82),
+        ("conv3_3", 589_824, 0.80),
+        ("conv4_1", 1_179_648, 0.81),
+        ("conv4_2", 2_359_296, 0.82),
+        ("conv4_3", 2_359_296, 0.80),
+        ("conv5_1", 2_359_296, 0.78),
+        ("conv5_2", 2_359_296, 0.80),
+        ("conv5_3", 2_359_296, 0.78),
+        ("fc6", 102_760_448, 0.993),
+        ("fc7", 16_777_216, 0.99),
+        ("fc8", 4_096_000, 0.95),
+    ],
+}
+
+
+def measured_lenet5(quick: bool, log):
+    n = 1200 if quick else 4000
+    x, y = D.synthetic_digits(n, seed=1)
+    xt, yt = D.synthetic_digits(800, seed=2)
+    fwd = lambda p, xx: M.lenet5_apply(p, xx, backend="ref")
+
+    params = M.lenet5_init(0)
+    params, _ = T.train(fwd, params, x, y, epochs=3 if quick else 8, log=log)
+    dense_acc = T.accuracy(fwd, params, xt, yt)
+    total = sum(int(np.prod(params[k]["w"].shape)) for k in M.LENET5_PRUNABLE)
+    log(f"lenet5 dense acc={dense_acc:.4f} prunable weights={total}")
+
+    # Aggressive element-wise targets shaped like the paper's per-layer
+    # profile (conv light, fc heavy).
+    sparsity = {"c1": 0.65, "c2": 0.93, "f1": 0.997, "f2": 0.98}
+    cfg = A.AdmmConfig(
+        sparsity=sparsity,
+        rho=2e-3,
+        rho_factor=2.0,
+        admm_iters=2 if quick else 5,
+        epochs_per_iter=1 if quick else 2,
+        retrain_epochs=3 if quick else 20,
+        progressive_stages=(0.5, 0.8, 1.0),
+        seed=0,
+    )
+    t0 = time.time()
+    res = A.admm_prune(fwd, params, x, y, cfg, log=log)
+    prune_acc = T.accuracy(fwd, res.params, xt, yt)
+    log(
+        f"lenet5 pruned acc={prune_acc:.4f} rate={res.overall_rate:.1f}x "
+        f"({time.time()-t0:.0f}s)"
+    )
+
+    # Unified pruning + 4-bit quantization (storage claim): quantize ON
+    # the recovered support — re-running the prune phase would churn it.
+    import copy
+    qparams = A.quantize_on_support(
+        fwd, copy.deepcopy(res.params), res.masks, x, y, 4,
+        rounds=2 if quick else 5, seed=1, log=log,
+    )
+    quant_acc = T.accuracy(fwd, qparams, xt, yt)
+    nnz = sum(
+        int(np.sum(np.asarray(qparams[k]["w"]) != 0.0)) for k in sparsity
+    )
+    dense_bytes = A.storage_bytes_dense(total)
+    quant_bytes = A.storage_bytes_compressed(nnz, 4, index_bits=0)
+    quant_bytes_idx = A.storage_bytes_compressed(nnz, 4, index_bits=16)
+    log(
+        f"lenet5 prune+quant acc={quant_acc:.4f} rate={total/max(nnz,1):.1f}x "
+        f"storage {dense_bytes}/{quant_bytes} = {dense_bytes/max(quant_bytes,1):.0f}x"
+    )
+    return {
+        "task": "synthetic-digits (MNIST substitute, DESIGN.md §2)",
+        "dense_acc": round(float(dense_acc), 4),
+        "pruned_acc": round(float(prune_acc), 4),
+        "pruned_rate": round(float(res.overall_rate), 1),
+        "per_layer": {
+            k: {"nnz": v[0], "total": v[1]} for k, v in res.per_layer_nnz.items()
+        },
+        "quant_bits": 4,
+        "quant_acc": round(float(quant_acc), 4),
+        "quant_rate": round(float(total / max(nnz, 1)), 1),
+        "storage_dense_bytes": dense_bytes,
+        "storage_quant_bytes": quant_bytes,
+        "storage_quant_bytes_with_idx16": quant_bytes_idx,
+        "storage_reduction_no_idx": round(dense_bytes / max(quant_bytes, 1), 1),
+        "paper_rate": PAPER_RATES["lenet5"],
+        "paper_storage_reduction": 3438.0,
+    }
+
+
+def accounted():
+    out = {}
+    for name, profile in ACCOUNTED_PROFILES.items():
+        total = sum(wn for _, wn, _ in profile)
+        nnz = sum(int(round(wn * (1.0 - s))) for _, wn, s in profile)
+        out[name] = {
+            "total_weights": total,
+            "nnz": nnz,
+            "rate": round(total / nnz, 1),
+            "paper_rate": PAPER_RATES[name],
+            "per_layer": [
+                {"layer": ln, "weights": wn, "sparsity": s} for ln, wn, s in profile
+            ],
+        }
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts/compress_report.json")
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    report = {
+        "measured": {"lenet5": measured_lenet5(args.quick, print)},
+        "accounted": accounted(),
+    }
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=1)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,95 @@
+"""Synthetic datasets (DESIGN.md §2 substitution for MNIST/ImageNet).
+
+The paper measures accuracy on MNIST-class (LeNet-5) and ImageNet-class
+tasks. Neither dataset ships in this environment, so:
+
+- ``synthetic_digits`` renders a *procedural* 10-class digit task:
+  seven-segment glyphs rasterized at 28x28 with random translation, stroke
+  jitter and pixel noise. It is learnable-but-not-trivial, which is what
+  the pruning-accuracy experiments need (a task where damage from
+  over-pruning is measurable).
+- ``seeded_images`` produces deterministic natural-image-statistics tensors
+  (low-frequency mixture) for throughput/serving workloads where only the
+  shape and byte volume matter.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+# Seven-segment encodings for digits 0-9; segments:
+#   0: top, 1: top-left, 2: top-right, 3: middle, 4: bottom-left,
+#   5: bottom-right, 6: bottom.
+_SEGMENTS = {
+    0: (1, 1, 1, 0, 1, 1, 1),
+    1: (0, 0, 1, 0, 0, 1, 0),
+    2: (1, 0, 1, 1, 1, 0, 1),
+    3: (1, 0, 1, 1, 0, 1, 1),
+    4: (0, 1, 1, 1, 0, 1, 0),
+    5: (1, 1, 0, 1, 0, 1, 1),
+    6: (1, 1, 0, 1, 1, 1, 1),
+    7: (1, 0, 1, 0, 0, 1, 0),
+    8: (1, 1, 1, 1, 1, 1, 1),
+    9: (1, 1, 1, 1, 0, 1, 1),
+}
+
+# Segment geometry on a 20x12 glyph box: (row0, row1, col0, col1).
+_GEOM = {
+    0: (0, 2, 1, 11),
+    1: (1, 10, 0, 2),
+    2: (1, 10, 10, 12),
+    3: (9, 11, 1, 11),
+    4: (10, 19, 0, 2),
+    5: (10, 19, 10, 12),
+    6: (18, 20, 1, 11),
+}
+
+
+def _glyph(digit: int) -> np.ndarray:
+    g = np.zeros((20, 12), np.float32)
+    for seg, on in enumerate(_SEGMENTS[digit]):
+        if on:
+            r0, r1, c0, c1 = _GEOM[seg]
+            g[r0:r1, c0:c1] = 1.0
+    return g
+
+
+_GLYPHS = [_glyph(d) for d in range(10)]
+
+
+def synthetic_digits(n: int, seed: int = 0, size: int = 28):
+    """Return (images, labels): images (n, size, size, 1) f32 in [0,1],
+    labels (n,) int32."""
+    rng = np.random.default_rng(seed)
+    imgs = np.zeros((n, size, size, 1), np.float32)
+    labels = rng.integers(0, 10, size=n).astype(np.int32)
+    max_r = size - 20
+    max_c = size - 12
+    for i, d in enumerate(labels):
+        canvas = np.zeros((size, size), np.float32)
+        r = rng.integers(0, max_r + 1)
+        c = rng.integers(0, max_c + 1)
+        glyph = _GLYPHS[d] * rng.uniform(0.7, 1.0)
+        # Stroke jitter: randomly erode a few pixels.
+        jitter = (rng.random(glyph.shape) > 0.06).astype(np.float32)
+        canvas[r : r + 20, c : c + 12] = glyph * jitter
+        canvas += rng.normal(0.0, 0.08, canvas.shape).astype(np.float32)
+        imgs[i, :, :, 0] = np.clip(canvas, 0.0, 1.0)
+    return imgs, labels
+
+
+def seeded_images(n: int, h: int, w: int, c: int, seed: int = 0) -> np.ndarray:
+    """Deterministic low-frequency image-like tensors, (n,h,w,c) f32."""
+    rng = np.random.default_rng(seed)
+    yy, xx = np.mgrid[0:h, 0:w].astype(np.float32)
+    imgs = np.zeros((n, h, w, c), np.float32)
+    for i in range(n):
+        acc = np.zeros((h, w), np.float32)
+        for _ in range(4):
+            fx, fy = rng.uniform(0.02, 0.3, 2)
+            px, py = rng.uniform(0, 2 * np.pi, 2)
+            acc += rng.uniform(0.2, 1.0) * np.sin(fx * xx + px) * np.cos(fy * yy + py)
+        acc = (acc - acc.min()) / max(float(np.ptp(acc)), 1e-6)
+        for ch in range(c):
+            imgs[i, :, :, ch] = np.clip(acc + rng.normal(0, 0.05, (h, w)), 0, 1)
+    return imgs

@@ -1,0 +1,29 @@
+"""CADNN Layer-1 Pallas kernels.
+
+Each kernel is the TPU-adapted version of one of the paper's
+architecture-aware mobile kernels (DESIGN.md §Hardware-Adaptation):
+
+- ``gemm``         — tiled dense matmul (the paper's 1x1-conv->GEMM target)
+- ``sparse_gemm``  — block-sparse matmul (tile-level skipping of pruned work)
+- ``conv_fused``   — fused Conv+BN+ReLU via im2col-GEMM in a single kernel
+- ``depthwise``    — fused DepthwiseConv+BN+ReLU
+
+All kernels lower with ``interpret=True`` so the emitted HLO runs on any
+PJRT backend (the rust CPU client in particular). ``ref.py`` holds the
+pure-jnp oracles used by pytest.
+"""
+
+from .gemm import gemm, gemm_bn_relu
+from .sparse_gemm import sparse_gemm, sparse_gemm_bn_relu
+from .conv_fused import conv2d_fused, conv1x1_as_gemm
+from .depthwise import depthwise_fused
+
+__all__ = [
+    "gemm",
+    "gemm_bn_relu",
+    "sparse_gemm",
+    "sparse_gemm_bn_relu",
+    "conv2d_fused",
+    "conv1x1_as_gemm",
+    "depthwise_fused",
+]

@@ -1,0 +1,50 @@
+"""Shared helpers for the Pallas kernels: padding, block-size selection.
+
+The paper (§4, "memory layout transformation") pads and aligns filter
+layouts so tiles divide evenly; we do the same at the kernel boundary so
+the Pallas grids never see ragged blocks.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# MXU-friendly default tiles (128x128 systolic array). On the interpret
+# path these only shape the grid; on a real TPU they are the VMEM tiles.
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 128
+
+
+def round_up(x: int, m: int) -> int:
+    """Smallest multiple of ``m`` >= ``x``."""
+    return ((x + m - 1) // m) * m
+
+
+def pick_block(dim: int, preferred: int, minimum: int = 8) -> int:
+    """Pick a block size for ``dim``: the preferred MXU tile when the
+    dimension is large enough, otherwise the smallest power of two >= dim
+    (clamped to ``minimum``). Keeps tiny test shapes from exploding into
+    mostly-padding grids."""
+    if dim >= preferred:
+        return preferred
+    b = minimum
+    while b < dim:
+        b *= 2
+    return b
+
+
+def pad2(x: jnp.ndarray, m0: int, m1: int) -> jnp.ndarray:
+    """Zero-pad a rank-2 array so each dim is a multiple of (m0, m1)."""
+    p0 = round_up(x.shape[0], m0) - x.shape[0]
+    p1 = round_up(x.shape[1], m1) - x.shape[1]
+    if p0 == 0 and p1 == 0:
+        return x
+    return jnp.pad(x, ((0, p0), (0, p1)))
+
+
+def pad1(x: jnp.ndarray, m: int) -> jnp.ndarray:
+    p = round_up(x.shape[0], m) - x.shape[0]
+    if p == 0:
+        return x
+    return jnp.pad(x, ((0, p),))

@@ -1,0 +1,77 @@
+"""Fused DepthwiseConv+BN+ReLU Pallas kernel.
+
+The paper calls out "Depthwise Convolution layer + BatchNorm layer +
+Activation layer in MobileNetV1" as a fusion target (§4). A depthwise conv
+has no reduction over channels, so the MXU is useless — on TPU this is a
+VPU (vector-unit) kernel, exactly as it is a plain-SIMD (not GEMM) kernel
+on the phone's CPU. The grid partitions (batch, channel-blocks); each
+program holds its input slab in VMEM and produces the fused
+conv+affine+relu output slab without intermediate HBM traffic.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import pick_block, round_up
+
+
+def _dw_kernel(x_ref, w_ref, scale_ref, shift_ref, o_ref, *, kh, kw, stride, ho, wo):
+    """One (batch, channel-block) program: fully unrolled kh x kw taps."""
+    x = x_ref[0]  # (Hp, Wp, bc)
+    acc = jnp.zeros((ho, wo, x.shape[-1]), jnp.float32)
+    for i in range(kh):
+        for j in range(kw):
+            tap = x[i : i + stride * ho : stride, j : j + stride * wo : stride, :]
+            acc = acc + tap * w_ref[i, j, :]
+    acc = acc * scale_ref[...] + shift_ref[...]
+    o_ref[0] = jnp.maximum(acc, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "padding", "bc"))
+def depthwise_fused(x, w, scale, shift, *, stride: int = 1, padding: int = 0, bc=None):
+    """Fused depthwise conv + folded BN + ReLU.
+
+    x: (N, H, W, C) NHWC; w: (kh, kw, C); scale/shift: (C,).
+    """
+    n, h, wd, c = x.shape
+    kh, kw, cw = w.shape
+    assert cw == c, f"channel mismatch {cw} vs {c}"
+    bc_ = bc or pick_block(c, 128)
+    cp = round_up(c, bc_)
+    if padding:
+        x = jnp.pad(x, ((0, 0), (padding, padding), (padding, padding), (0, 0)))
+    if cp != c:
+        pad_c = cp - c
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, 0), (0, pad_c)))
+        w = jnp.pad(w, ((0, 0), (0, 0), (0, pad_c)))
+        scale = jnp.pad(scale, ((0, pad_c),))
+        shift = jnp.pad(shift, ((0, pad_c),))
+    hp, wp = x.shape[1], x.shape[2]
+    ho = (hp - kh) // stride + 1
+    wo = (wp - kw) // stride + 1
+    out = pl.pallas_call(
+        functools.partial(
+            _dw_kernel, kh=kh, kw=kw, stride=stride, ho=ho, wo=wo
+        ),
+        grid=(n, cp // bc_),
+        in_specs=[
+            pl.BlockSpec((1, hp, wp, bc_), lambda b, cb: (b, 0, 0, cb)),
+            pl.BlockSpec((kh, kw, bc_), lambda b, cb: (0, 0, cb)),
+            pl.BlockSpec((bc_,), lambda b, cb: (cb,)),
+            pl.BlockSpec((bc_,), lambda b, cb: (cb,)),
+        ],
+        out_specs=pl.BlockSpec((1, ho, wo, bc_), lambda b, cb: (b, 0, 0, cb)),
+        out_shape=jax.ShapeDtypeStruct((n, ho, wo, cp), jnp.float32),
+        interpret=True,
+    )(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        scale.astype(jnp.float32),
+        shift.astype(jnp.float32),
+    )
+    return out[..., :c]

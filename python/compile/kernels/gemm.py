@@ -1,0 +1,130 @@
+"""Tiled dense GEMM Pallas kernel, with an optional fused BN+ReLU epilogue.
+
+This is the workhorse the paper's 1x1-conv->matmul transformation targets
+(§4 "model computation fusion and transformation"). TPU adaptation: the
+threadblock tiling of the mobile GPU version becomes a (M/bm, N/bn, K/bk)
+Pallas grid whose BlockSpecs stage MXU-shaped tiles through VMEM; the
+epilogue (BatchNorm scale/shift folded to per-column affine, then ReLU)
+runs on the VMEM-resident accumulator so the intermediate never touches
+HBM — exactly the DRAM-round-trip elimination the paper's fusion buys on
+the phone.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import DEFAULT_BM, DEFAULT_BN, DEFAULT_BK, pad1, pad2, pick_block
+
+
+def _gemm_kernel(x_ref, y_ref, o_ref, *, nk: int):
+    """Grid (m, n, k): accumulate x_tile @ y_tile into the output tile.
+
+    The output BlockSpec ignores the k axis, so o_ref revisits the same
+    tile across the k loop — the canonical Pallas accumulation idiom.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _gemm_bn_relu_kernel(x_ref, y_ref, scale_ref, shift_ref, o_ref, *, nk: int):
+    """Same as :func:`_gemm_kernel` plus a fused affine+ReLU epilogue
+    applied on the last k step, while the accumulator is still in VMEM."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        acc = o_ref[...]
+        acc = acc * scale_ref[...] + shift_ref[...]
+        o_ref[...] = jnp.maximum(acc, 0.0)
+
+
+def _blocks(m: int, n: int, k: int, bm, bn, bk):
+    bm = bm or pick_block(m, DEFAULT_BM)
+    bn = bn or pick_block(n, DEFAULT_BN)
+    bk = bk or pick_block(k, DEFAULT_BK)
+    return bm, bn, bk
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def gemm(x, y, *, bm=None, bn=None, bk=None):
+    """Dense ``x @ y`` with ragged edges zero-padded to the tile grid.
+
+    x: (M, K) f32, y: (K, N) f32 -> (M, N) f32.
+    """
+    m, kdim = x.shape
+    k2, n = y.shape
+    assert kdim == k2, f"inner dims mismatch: {kdim} vs {k2}"
+    bm_, bn_, bk_ = _blocks(m, n, kdim, bm, bn, bk)
+    xp = pad2(x.astype(jnp.float32), bm_, bk_)
+    yp = pad2(y.astype(jnp.float32), bk_, bn_)
+    mp, kp = xp.shape
+    _, np_ = yp.shape
+    nk = kp // bk_
+    out = pl.pallas_call(
+        functools.partial(_gemm_kernel, nk=nk),
+        grid=(mp // bm_, np_ // bn_, nk),
+        in_specs=[
+            pl.BlockSpec((bm_, bk_), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk_, bn_), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, yp)
+    return out[:m, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def gemm_bn_relu(x, y, scale, shift, *, bm=None, bn=None, bk=None):
+    """Fused ``relu((x @ y) * scale + shift)`` — scale/shift broadcast over
+    rows (per output channel), i.e. an inference-time BatchNorm folded to
+    per-column affine.
+
+    x: (M, K), y: (K, N), scale/shift: (N,).
+    """
+    m, kdim = x.shape
+    k2, n = y.shape
+    assert kdim == k2
+    assert scale.shape == (n,) and shift.shape == (n,)
+    bm_, bn_, bk_ = _blocks(m, n, kdim, bm, bn, bk)
+    xp = pad2(x.astype(jnp.float32), bm_, bk_)
+    yp = pad2(y.astype(jnp.float32), bk_, bn_)
+    sp = pad1(scale.astype(jnp.float32), bn_).reshape(1, -1)
+    hp = pad1(shift.astype(jnp.float32), bn_).reshape(1, -1)
+    mp, kp = xp.shape
+    _, np_ = yp.shape
+    nk = kp // bk_
+    out = pl.pallas_call(
+        functools.partial(_gemm_bn_relu_kernel, nk=nk),
+        grid=(mp // bm_, np_ // bn_, nk),
+        in_specs=[
+            pl.BlockSpec((bm_, bk_), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk_, bn_), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, bn_), lambda i, j, k: (0, j)),
+            pl.BlockSpec((1, bn_), lambda i, j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, yp, sp, hp)
+    return out[:m, :n]

@@ -1,0 +1,82 @@
+"""Pure-jnp oracles for every Layer-1 kernel.
+
+These are the CORE correctness signal: pytest asserts each Pallas kernel
+allclose against these on hypothesis-generated shapes. Nothing here is
+ever lowered into artifacts.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def gemm(x, y):
+    return jnp.matmul(x.astype(jnp.float32), y.astype(jnp.float32))
+
+
+def gemm_bn_relu(x, y, scale, shift):
+    return jnp.maximum(gemm(x, y) * scale.reshape(1, -1) + shift.reshape(1, -1), 0.0)
+
+
+def expand_tile_mask(mask, k, n, bk, bn):
+    """(K/bk, N/bn) tile mask -> (K, N) element mask (cropped)."""
+    e = jnp.repeat(jnp.repeat(mask, bk, axis=0), bn, axis=1)
+    return e[:k, :n].astype(jnp.float32)
+
+
+def sparse_gemm(x, y, mask, bk, bn):
+    k, n = y.shape
+    return gemm(x, y * expand_tile_mask(mask, k, n, bk, bn))
+
+
+def sparse_gemm_bn_relu(x, y, mask, scale, shift, bk, bn):
+    k, n = y.shape
+    return gemm_bn_relu(x, y * expand_tile_mask(mask, k, n, bk, bn), scale, shift)
+
+
+def conv2d(x, w, stride=1, padding=0):
+    """NHWC x HWIO -> NHWC, matching conv2d_fused's geometry."""
+    return lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        window_strides=(stride, stride),
+        padding=[(padding, padding), (padding, padding)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def conv2d_fused(x, w, scale, shift, stride=1, padding=0, relu=True):
+    out = conv2d(x, w, stride, padding)
+    out = out * scale.reshape(1, 1, 1, -1) + shift.reshape(1, 1, 1, -1)
+    return jnp.maximum(out, 0.0) if relu else out
+
+
+def depthwise(x, w, stride=1, padding=0):
+    """NHWC, w: (kh, kw, C). Depthwise = grouped conv with groups=C."""
+    c = x.shape[-1]
+    wf = w[:, :, None, :]  # (kh, kw, 1, C): HWIO with I=1, O=C groups
+    return lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        wf.astype(jnp.float32),
+        window_strides=(stride, stride),
+        padding=[(padding, padding), (padding, padding)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=c,
+    )
+
+
+def depthwise_fused(x, w, scale, shift, stride=1, padding=0):
+    out = depthwise(x, w, stride, padding)
+    out = out * scale.reshape(1, 1, 1, -1) + shift.reshape(1, 1, 1, -1)
+    return jnp.maximum(out, 0.0)
+
+
+def maxpool(x, k=2, stride=2):
+    return lax.reduce_window(
+        x, -jnp.inf, lax.max, (1, k, k, 1), (1, stride, stride, 1), "VALID"
+    )
+
+
+def avgpool_global(x):
+    return jnp.mean(x, axis=(1, 2))

@@ -1,0 +1,138 @@
+"""Block-sparse GEMM Pallas kernel — the compressed-model hot path.
+
+TPU adaptation of the paper's non-structured sparsity (DESIGN.md
+§Hardware-Adaptation): element-level CSR irregularity does not pay on a
+128x128 systolic array, so pruning is expressed at *tile* granularity — a
+(K/bk, N/bn) {0,1} mask over weight tiles. Tiles whose mask is zero are
+skipped inside the kernel with ``pl.when``, which on a real TPU elides the
+MXU work for that grid step; the share of skipped steps equals the tile
+sparsity, preserving the paper's "pruned weights are never computed"
+property. The Rust (CPU) side keeps element-level CSR, mirroring the
+paper's CPU backend where irregular skipping *does* pay.
+
+The weight-tile mask is produced by the ADMM compressor
+(python/compile/admm.py) when run with block-granular projection.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import DEFAULT_BM, DEFAULT_BN, DEFAULT_BK, pad1, pad2, pick_block
+
+
+def _sparse_gemm_kernel(mask_ref, x_ref, y_ref, o_ref, *, nk: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    @pl.when(mask_ref[0, 0] != 0)
+    def _compute():
+        o_ref[...] += jnp.dot(
+            x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+        )
+
+
+def _sparse_gemm_bn_relu_kernel(
+    mask_ref, x_ref, y_ref, scale_ref, shift_ref, o_ref, *, nk: int
+):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    @pl.when(mask_ref[0, 0] != 0)
+    def _compute():
+        o_ref[...] += jnp.dot(
+            x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+        )
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        acc = o_ref[...]
+        o_ref[...] = jnp.maximum(acc * scale_ref[...] + shift_ref[...], 0.0)
+
+
+def _prep(x, y, bm, bn, bk):
+    m, kdim = x.shape
+    k2, n = y.shape
+    assert kdim == k2, f"inner dims mismatch: {kdim} vs {k2}"
+    bm_ = bm or pick_block(m, DEFAULT_BM)
+    bn_ = bn or pick_block(n, DEFAULT_BN)
+    bk_ = bk or pick_block(kdim, DEFAULT_BK)
+    xp = pad2(x.astype(jnp.float32), bm_, bk_)
+    yp = pad2(y.astype(jnp.float32), bk_, bn_)
+    return xp, yp, bm_, bn_, bk_, m, n
+
+
+def tile_mask_from_weights(y: jnp.ndarray, bk: int, bn: int) -> jnp.ndarray:
+    """Derive the (K/bk, N/bn) tile mask from a (K, N) weight matrix:
+    a tile is live iff it contains any non-zero weight."""
+    yp = pad2(y, bk, bn)
+    kp, np_ = yp.shape
+    t = yp.reshape(kp // bk, bk, np_ // bn, bn)
+    return (jnp.abs(t).sum(axis=(1, 3)) > 0).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def sparse_gemm(x, y, mask, *, bm=None, bn=None, bk=None):
+    """``x @ (y * expand(mask))`` where ``mask`` is the (K/bk, N/bn) weight
+    tile mask; zero tiles are skipped, not multiplied.
+
+    x: (M, K), y: (K, N), mask: (ceil(K/bk), ceil(N/bn)) int32.
+    """
+    xp, yp, bm_, bn_, bk_, m, n = _prep(x, y, bm, bn, bk)
+    mp, kp = xp.shape
+    _, np_ = yp.shape
+    nk = kp // bk_
+    assert mask.shape == (nk, np_ // bn_), (
+        f"mask shape {mask.shape} != {(nk, np_ // bn_)}"
+    )
+    out = pl.pallas_call(
+        functools.partial(_sparse_gemm_kernel, nk=nk),
+        grid=(mp // bm_, np_ // bn_, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bm_, bk_), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk_, bn_), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(mask.astype(jnp.int32), xp, yp)
+    return out[:m, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def sparse_gemm_bn_relu(x, y, mask, scale, shift, *, bm=None, bn=None, bk=None):
+    """Block-sparse GEMM with the fused BN+ReLU epilogue (compressed
+    1x1-conv / FC layer in one kernel)."""
+    xp, yp, bm_, bn_, bk_, m, n = _prep(x, y, bm, bn, bk)
+    mp, kp = xp.shape
+    _, np_ = yp.shape
+    nk = kp // bk_
+    assert mask.shape == (nk, np_ // bn_)
+    sp = pad1(scale.astype(jnp.float32), bn_).reshape(1, -1)
+    hp = pad1(shift.astype(jnp.float32), bn_).reshape(1, -1)
+    out = pl.pallas_call(
+        functools.partial(_sparse_gemm_bn_relu_kernel, nk=nk),
+        grid=(mp // bm_, np_ // bn_, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bm_, bk_), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk_, bn_), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, bn_), lambda i, j, k: (0, j)),
+            pl.BlockSpec((1, bn_), lambda i, j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(mask.astype(jnp.int32), xp, yp, sp, hp)
+    return out[:m, :n]

@@ -1,0 +1,308 @@
+"""Layer-2: the JAX model zoo.
+
+Every model is a *functional* (params, x) -> logits pair with two
+backends sharing identical math:
+
+- ``backend="ref"``    — pure jnp/lax ops (differentiable; used by the
+  trainer and the ADMM compressor).
+- ``backend="pallas"`` — the Layer-1 Pallas kernels (fused conv+bn+relu,
+  1x1->GEMM, block-sparse GEMM). This is what ``aot.py`` lowers into the
+  HLO artifacts the Rust runtime serves.
+
+Backend equivalence (pallas fwd == ref fwd) is itself a pytest property —
+it is the L2 analogue of the paper's claim that the architecture-aware
+transformations are semantics-preserving.
+
+Artifacts bake the (possibly compressed) weights in as HLO constants:
+the unit of deployment is a *model-specific compiled binary*, exactly
+like the paper's compiler-generated mobile code.
+
+The full-size ImageNet architectures (ResNet-50, MobileNet-V1/V2,
+Inception-V3, plus the §3 pruning subjects) live on the Rust side as IR
+graphs for work/latency accounting; the models here are the *executed*
+subjects (LeNet-5 full-size, plus scaled "tiny" residual/depthwise models
+exercising the same layer vocabulary) — DESIGN.md §2.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import (
+    conv2d_fused,
+    depthwise_fused,
+    gemm,
+    gemm_bn_relu,
+)
+from .kernels import ref
+from .kernels.conv_fused import conv2d_sparse_fused
+from .kernels.sparse_gemm import sparse_gemm_bn_relu, tile_mask_from_weights
+
+Params = Dict[str, Any]
+
+# Tile granularity used for block-sparse execution of compressed layers.
+# 16x16 keeps tiny-model masks meaningful; on a real TPU these would be
+# 128x128 MXU tiles (DESIGN.md §Hardware-Adaptation).
+SPARSE_BK = 16
+SPARSE_BN = 16
+
+
+# --------------------------------------------------------------- layers
+
+
+def _fold_bn(gamma, beta, mean, var, eps=1e-5):
+    """Inference-time BN folding -> per-channel affine (scale, shift)."""
+    scale = gamma / jnp.sqrt(var + eps)
+    return scale, beta - mean * scale
+
+
+def conv_block(x, p, *, stride, padding, relu=True, backend="ref", mask=None):
+    """Conv + folded-BN + optional ReLU. ``p`` holds w/(gamma,beta,mean,var).
+
+    When ``mask`` is given (a weight-tile mask from the compressor) the
+    pallas backend dispatches to the block-sparse fused kernel.
+    """
+    scale, shift = _fold_bn(p["gamma"], p["beta"], p["mean"], p["var"])
+    if backend == "pallas":
+        if mask is not None:
+            return conv2d_sparse_fused(
+                x, p["w"], mask, scale, shift, stride=stride, padding=padding,
+                bk=SPARSE_BK, bn=SPARSE_BN,
+            )
+        return conv2d_fused(
+            x, p["w"], scale, shift, stride=stride, padding=padding, relu=relu
+        )
+    out = ref.conv2d(x, p["w"], stride, padding)
+    out = out * scale.reshape(1, 1, 1, -1) + shift.reshape(1, 1, 1, -1)
+    return jnp.maximum(out, 0.0) if relu else out
+
+
+def dw_block(x, p, *, stride, padding, backend="ref"):
+    """DepthwiseConv + folded-BN + ReLU (the MobileNet fusion target)."""
+    scale, shift = _fold_bn(p["gamma"], p["beta"], p["mean"], p["var"])
+    if backend == "pallas":
+        return depthwise_fused(x, p["w"], scale, shift, stride=stride, padding=padding)
+    out = ref.depthwise(x, p["w"], stride, padding)
+    out = out * scale.reshape(1, 1, 1, -1) + shift.reshape(1, 1, 1, -1)
+    return jnp.maximum(out, 0.0)
+
+
+def fc_block(x, p, *, relu=True, backend="ref", mask=None):
+    """Fully connected + bias (+ ReLU): expressed as the same fused GEMM
+    epilogue with scale=1."""
+    n_out = p["w"].shape[1]
+    ones = jnp.ones((n_out,), jnp.float32)
+    if backend == "pallas":
+        if mask is not None:
+            return sparse_gemm_bn_relu(
+                x, p["w"], mask, ones, p["b"], bk=SPARSE_BK, bn=SPARSE_BN
+            )
+        if relu:
+            return gemm_bn_relu(x, p["w"], ones, p["b"])
+        return gemm(x, p["w"]) + p["b"].reshape(1, -1)
+    out = x @ p["w"] + p["b"].reshape(1, -1)
+    return jnp.maximum(out, 0.0) if relu else out
+
+
+# ------------------------------------------------------- initializers
+
+
+def _he(rng, shape):
+    fan_in = int(np.prod(shape[:-1]))
+    return jnp.asarray(
+        rng.normal(0.0, np.sqrt(2.0 / max(fan_in, 1)), size=shape), jnp.float32
+    )
+
+
+def _bn_init(c):
+    return dict(
+        gamma=jnp.ones((c,), jnp.float32),
+        beta=jnp.zeros((c,), jnp.float32),
+        mean=jnp.zeros((c,), jnp.float32),
+        var=jnp.ones((c,), jnp.float32),
+    )
+
+
+def _conv_p(rng, kh, kw, cin, cout):
+    return dict(w=_he(rng, (kh, kw, cin, cout)), **_bn_init(cout))
+
+
+def _dw_p(rng, kh, kw, c):
+    return dict(w=_he(rng, (kh, kw, c)), **_bn_init(c))
+
+
+def _fc_p(rng, nin, nout):
+    return dict(w=_he(rng, (nin, nout)), b=jnp.zeros((nout,), jnp.float32))
+
+
+# --------------------------------------------------------------- LeNet-5
+
+
+def lenet5_init(seed: int = 0) -> Params:
+    rng = np.random.default_rng(seed)
+    return {
+        "c1": _conv_p(rng, 5, 5, 1, 6),
+        "c2": _conv_p(rng, 5, 5, 6, 16),
+        "f1": _fc_p(rng, 16 * 5 * 5, 120),
+        "f2": _fc_p(rng, 120, 84),
+        "f3": _fc_p(rng, 84, 10),
+    }
+
+
+def lenet5_apply(p: Params, x, *, backend="ref", masks=None) -> jnp.ndarray:
+    """LeNet-5 (28x28x1 -> 10). ``masks`` maps layer name -> tile mask for
+    compressed execution (pallas backend only)."""
+    m = masks or {}
+    x = conv_block(x, p["c1"], stride=1, padding=2, backend=backend, mask=m.get("c1"))
+    x = ref.maxpool(x)  # pooling has no weights; plain lax reduce_window
+    x = conv_block(x, p["c2"], stride=1, padding=0, backend=backend, mask=m.get("c2"))
+    x = ref.maxpool(x)
+    x = x.reshape(x.shape[0], -1)
+    x = fc_block(x, p["f1"], backend=backend, mask=m.get("f1"))
+    x = fc_block(x, p["f2"], backend=backend, mask=m.get("f2"))
+    return fc_block(x, p["f3"], relu=False, backend=backend)
+
+
+# The layers ADMM compresses, with their weight-matrix views.
+LENET5_PRUNABLE = ("c1", "c2", "f1", "f2")
+
+
+# ----------------------------------------------------------- TinyResNet
+
+
+def tinyresnet_init(seed: int = 0, width: int = 8) -> Params:
+    rng = np.random.default_rng(seed)
+    w = width
+    p: Params = {"stem": _conv_p(rng, 3, 3, 3, w)}
+    cin = w
+    for s, cout in enumerate((w, 2 * w, 4 * w)):
+        for b in range(2):
+            pre = f"s{s}b{b}"
+            stride = 2 if (s > 0 and b == 0) else 1
+            p[f"{pre}_c1"] = _conv_p(rng, 3, 3, cin, cout)
+            p[f"{pre}_c2"] = _conv_p(rng, 3, 3, cout, cout)
+            if stride != 1 or cin != cout:
+                p[f"{pre}_sc"] = _conv_p(rng, 1, 1, cin, cout)
+            cin = cout
+    p["fc"] = _fc_p(rng, cin, 10)
+    return p
+
+
+def tinyresnet_apply(p: Params, x, *, backend="ref", masks=None) -> jnp.ndarray:
+    """Residual CNN for 32x32x3 -> 10 (ResNet-18-shaped, width-scaled)."""
+    m = masks or {}
+    x = conv_block(x, p["stem"], stride=1, padding=1, backend=backend, mask=m.get("stem"))
+    width = p["stem"]["w"].shape[-1]
+    for s in range(3):
+        for b in range(2):
+            pre = f"s{s}b{b}"
+            stride = 2 if (s > 0 and b == 0) else 1
+            idn = x
+            out = conv_block(
+                x, p[f"{pre}_c1"], stride=stride, padding=1, backend=backend,
+                mask=m.get(f"{pre}_c1"),
+            )
+            out = conv_block(
+                out, p[f"{pre}_c2"], stride=1, padding=1, relu=False,
+                backend=backend, mask=None if backend == "ref" else None,
+            )
+            if f"{pre}_sc" in p:
+                idn = conv_block(
+                    idn, p[f"{pre}_sc"], stride=stride, padding=0, relu=False,
+                    backend=backend,
+                )
+            x = jnp.maximum(out + idn, 0.0)
+    x = ref.avgpool_global(x)
+    return fc_block(x, p["fc"], relu=False, backend=backend)
+
+
+TINYRESNET_PRUNABLE = tuple(
+    [f"s{s}b{b}_c1" for s in range(3) for b in range(2)]
+    + [f"s{s}b{b}_c2" for s in range(3) for b in range(2)]
+)
+
+
+# -------------------------------------------------------- TinyMobileNet
+
+
+def tinymobilenet_init(seed: int = 0, width: int = 8) -> Params:
+    rng = np.random.default_rng(seed)
+    w = width
+    chans = [(w, 2 * w, 1), (2 * w, 2 * w, 1), (2 * w, 4 * w, 2), (4 * w, 4 * w, 1)]
+    p: Params = {"stem": _conv_p(rng, 3, 3, 3, w)}
+    for i, (cin, cout, _s) in enumerate(chans):
+        p[f"b{i}_dw"] = _dw_p(rng, 3, 3, cin)
+        p[f"b{i}_pw"] = _conv_p(rng, 1, 1, cin, cout)
+    p["fc"] = _fc_p(rng, chans[-1][1], 10)
+    return p
+
+
+def tinymobilenet_apply(p: Params, x, *, backend="ref", masks=None) -> jnp.ndarray:
+    """MobileNet-V1-shaped depthwise-separable CNN, 32x32x3 -> 10.
+
+    The pointwise (1x1) convs take the paper's 1x1->GEMM path inside
+    ``conv_block`` and are the block-sparse targets when compressed."""
+    m = masks or {}
+    x = conv_block(x, p["stem"], stride=2, padding=1, backend=backend)
+    strides = [1, 1, 2, 1]
+    for i, s in enumerate(strides):
+        x = dw_block(x, p[f"b{i}_dw"], stride=s, padding=1, backend=backend)
+        x = conv_block(
+            x, p[f"b{i}_pw"], stride=1, padding=0, backend=backend,
+            mask=m.get(f"b{i}_pw"),
+        )
+    x = ref.avgpool_global(x)
+    return fc_block(x, p["fc"], relu=False, backend=backend)
+
+
+TINYMOBILENET_PRUNABLE = tuple(f"b{i}_pw" for i in range(4))
+
+
+# -------------------------------------------------------------- registry
+
+
+def weight_matrix(p_layer: Params) -> jnp.ndarray:
+    """View a layer's weights as the (K, N) matrix the GEMM kernels see."""
+    w = p_layer["w"]
+    if w.ndim == 4:  # conv HWIO -> (kh*kw*cin, cout)
+        return w.reshape(-1, w.shape[-1])
+    return w  # fc already (nin, nout)
+
+
+def masks_from_params(params: Params, prunable) -> Dict[str, jnp.ndarray]:
+    """Derive per-layer weight-tile masks from (already pruned) params."""
+    out = {}
+    for name in prunable:
+        wm = weight_matrix(params[name])
+        out[name] = tile_mask_from_weights(wm, SPARSE_BK, SPARSE_BN)
+    return out
+
+
+MODELS = {
+    "lenet5": dict(
+        init=lenet5_init,
+        apply=lenet5_apply,
+        input_shape=(28, 28, 1),
+        classes=10,
+        prunable=LENET5_PRUNABLE,
+    ),
+    "tinyresnet": dict(
+        init=tinyresnet_init,
+        apply=tinyresnet_apply,
+        input_shape=(32, 32, 3),
+        classes=10,
+        prunable=TINYRESNET_PRUNABLE,
+    ),
+    "tinymobilenet": dict(
+        init=tinymobilenet_init,
+        apply=tinymobilenet_apply,
+        input_shape=(32, 32, 3),
+        classes=10,
+        prunable=TINYMOBILENET_PRUNABLE,
+    ),
+}

@@ -1,0 +1,107 @@
+"""Minimal trainer used by the ADMM compression experiments.
+
+SGD with momentum over softmax cross-entropy. Deliberately tiny: the
+compression experiments (compress_run.py) are the consumer, and they run
+on the synthetic digit task at LeNet-5 scale on CPU.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+def accuracy(apply_fn, params, x, y, batch: int = 256) -> float:
+    correct = 0
+    for i in range(0, len(x), batch):
+        logits = apply_fn(params, jnp.asarray(x[i : i + batch]))
+        correct += int(jnp.sum(jnp.argmax(logits, axis=1) == jnp.asarray(y[i : i + batch])))
+    return correct / len(x)
+
+
+def _tree_sgd(params, grads, vel, lr, momentum, mask=None):
+    new_p, new_v = {}, {}
+    for k, p in params.items():
+        if isinstance(p, dict):
+            sub_m = mask.get(k) if isinstance(mask, dict) else None
+            new_p[k], new_v[k] = _tree_sgd(p, grads[k], vel[k], lr, momentum, sub_m)
+        else:
+            g = grads[k]
+            v = momentum * vel[k] - lr * g
+            # Masked retraining (paper §3): updates are masked, so entries
+            # outside the support (already 0 after projection) stay 0, and
+            # an all-zero mask freezes a layer at its current (projected)
+            # values — used by the quantization-recovery phase.
+            m = mask.get(k) if isinstance(mask, dict) else None
+            if m is not None:
+                v = v * m
+            new_p[k], new_v[k] = p + v, v
+    return new_p, new_v
+
+
+def _tree_zeros(params):
+    return jax.tree_util.tree_map(jnp.zeros_like, params)
+
+
+def train(
+    apply_fn: Callable,
+    params,
+    x,
+    y,
+    *,
+    epochs: int = 5,
+    batch: int = 64,
+    lr: float = 0.01,
+    momentum: float = 0.9,
+    seed: int = 0,
+    loss_extra: Optional[Callable] = None,
+    weight_masks: Optional[Dict[str, jnp.ndarray]] = None,
+    log: Optional[Callable[[str], None]] = None,
+):
+    """Train ``params``; returns (params, loss_history).
+
+    ``loss_extra(params)`` adds a regularizer (the ADMM proximal term).
+    ``weight_masks`` maps layer name -> {0,1} mask over that layer's "w"
+    for masked (fixed-support) retraining.
+    """
+
+    def loss_fn(p, xb, yb):
+        loss = cross_entropy(apply_fn(p, xb), yb)
+        if loss_extra is not None:
+            loss = loss + loss_extra(p)
+        return loss
+
+    grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+    vel = _tree_zeros(params)
+    rng = np.random.default_rng(seed)
+    history = []
+    n = len(x)
+    mask_tree = (
+        {k: {"w": m} for k, m in weight_masks.items()} if weight_masks else None
+    )
+    for ep in range(epochs):
+        order = rng.permutation(n)
+        ep_loss, steps = 0.0, 0
+        for i in range(0, n, batch):
+            idx = order[i : i + batch]
+            xb = jnp.asarray(x[idx])
+            yb = jnp.asarray(y[idx])
+            loss, grads = grad_fn(params, xb, yb)
+            params, vel = _tree_sgd(
+                params, grads, vel, lr, momentum,
+                mask_tree if mask_tree else None,
+            )
+            ep_loss += float(loss)
+            steps += 1
+        history.append(ep_loss / max(steps, 1))
+        if log:
+            log(f"epoch {ep}: loss={history[-1]:.4f}")
+    return params, history

@@ -1,0 +1,197 @@
+"""ADMM compression framework: projection optimality, feasibility,
+convergence machinery, storage accounting."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import admm as A
+from compile import datasets as D
+from compile import model as M
+from compile import train as T
+
+
+# ----------------------------------------------------------- projections
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(4, 400),
+    sparsity=st.floats(0.0, 0.99),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_element_projection_feasible(n, sparsity, seed):
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(size=(n,)), jnp.float32)
+    z = A.project_prune_element(w, sparsity)
+    keep = max(1, int(round(n * (1.0 - sparsity))))
+    assert int(jnp.sum(z != 0)) <= max(keep, int(jnp.sum(jnp.abs(w) == jnp.abs(w).max())) * keep)
+    # kept entries are untouched
+    nz = np.asarray(z != 0)
+    np.testing.assert_array_equal(np.asarray(z)[nz], np.asarray(w)[nz])
+
+
+def test_element_projection_keeps_largest():
+    w = jnp.asarray([0.1, -3.0, 0.5, 2.0, -0.05], jnp.float32)
+    z = A.project_prune_element(w, 0.6)  # keep 2
+    np.testing.assert_allclose(np.asarray(z), [0.0, -3.0, 0.0, 2.0, 0.0])
+
+
+def test_element_projection_is_euclidean_optimal():
+    """Among all vectors with the same support size, the magnitude-top-k
+    projection minimizes ||w - z||_2 — check against brute force."""
+    import itertools
+
+    rng = np.random.default_rng(0)
+    w = rng.normal(size=6).astype(np.float32)
+    keep = 2
+    z = np.asarray(A.project_prune_element(jnp.asarray(w), 1.0 - keep / 6))
+    best = None
+    for support in itertools.combinations(range(6), keep):
+        cand = np.zeros(6, np.float32)
+        for i in support:
+            cand[i] = w[i]
+        d = np.sum((w - cand) ** 2)
+        best = d if best is None else min(best, d)
+    assert np.isclose(np.sum((w - z) ** 2), best, atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    k=st.integers(4, 60),
+    n=st.integers(4, 60),
+    sparsity=st.floats(0.0, 0.95),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_block_projection_zeroes_whole_tiles(k, n, sparsity, seed):
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+    z = A.project_prune_block(w, sparsity, 16, 16)
+    # every 16x16 tile is either all-zero or identical to w's tile
+    zk = np.asarray(z)
+    wk = np.asarray(w)
+    for i in range(0, k, 16):
+        for j in range(0, n, 16):
+            tz = zk[i : i + 16, j : j + 16]
+            tw = wk[i : i + 16, j : j + 16]
+            assert (tz == 0).all() or np.array_equal(tz, tw)
+
+
+def test_quantize_projection_levels():
+    rng = np.random.default_rng(1)
+    w = jnp.asarray(rng.normal(size=(64,)), jnp.float32)
+    q, step = A.project_quantize(w, 4)
+    lv = np.asarray(q) / float(step)
+    np.testing.assert_allclose(lv, np.round(lv), atol=1e-5)
+    assert np.abs(lv).max() <= 7  # 2^(4-1) - 1
+
+
+def test_quantize_preserves_zero_support():
+    w = jnp.asarray([0.0, 0.5, 0.0, -0.7], jnp.float32)
+    q, _ = A.project_quantize(w, 4)
+    assert float(q[0]) == 0.0 and float(q[2]) == 0.0
+
+
+def test_quantize_is_nearest_level():
+    w = jnp.asarray([0.31, -0.49, 1.0], jnp.float32)
+    q, step = A.project_quantize(w, 3)
+    np.testing.assert_allclose(
+        np.asarray(q), np.clip(np.round(np.asarray(w) / step), -3, 3) * step, rtol=1e-6
+    )
+
+
+# ------------------------------------------------- end-to-end (small)
+
+
+@pytest.fixture(scope="module")
+def digit_task():
+    x, y = D.synthetic_digits(600, seed=1)
+    xt, yt = D.synthetic_digits(300, seed=2)
+    fwd = lambda p, xx: M.lenet5_apply(p, xx, backend="ref")
+    p = M.lenet5_init(0)
+    p, _ = T.train(fwd, p, x, y, epochs=4)
+    return fwd, p, x, y, xt, yt
+
+
+def test_admm_feasibility_and_recovery(digit_task):
+    """After masked mapping + retraining, every layer satisfies its
+    sparsity constraint EXACTLY, and accuracy stays near dense."""
+    fwd, p, x, y, xt, yt = digit_task
+    dense_acc = T.accuracy(fwd, p, xt, yt)
+    sparsity = {"c1": 0.3, "c2": 0.6, "f1": 0.9, "f2": 0.8}
+    cfg = A.AdmmConfig(
+        sparsity=sparsity, admm_iters=2, epochs_per_iter=1, retrain_epochs=3
+    )
+    res = A.admm_prune(fwd, dict(p), x, y, cfg)
+    for k, target in sparsity.items():
+        nnz, total = res.per_layer_nnz[k]
+        achieved = 1.0 - nnz / total
+        assert achieved >= target - 0.02, f"{k}: {achieved} < {target}"
+    acc = T.accuracy(fwd, res.params, xt, yt)
+    assert acc >= dense_acc - 0.08, f"accuracy collapsed: {acc} vs {dense_acc}"
+
+
+def test_admm_masked_weights_stay_zero(digit_task):
+    fwd, p, x, y, xt, yt = digit_task
+    cfg = A.AdmmConfig(
+        sparsity={"f1": 0.95}, admm_iters=1, epochs_per_iter=1, retrain_epochs=2
+    )
+    res = A.admm_prune(fwd, dict(p), x, y, cfg)
+    w = np.asarray(res.params["f1"]["w"])
+    m = np.asarray(res.masks["f1"])
+    assert np.all(w[m == 0] == 0.0)
+
+
+def test_admm_unified_quantization(digit_task):
+    fwd, p, x, y, xt, yt = digit_task
+    cfg = A.AdmmConfig(
+        sparsity={"f1": 0.9, "f2": 0.8},
+        admm_iters=1,
+        epochs_per_iter=1,
+        retrain_epochs=1,
+        quant_bits=4,
+    )
+    res = A.admm_prune(fwd, dict(p), x, y, cfg)
+    for k in ("f1", "f2"):
+        w = np.asarray(res.params[k]["w"])
+        nz = w[w != 0]
+        # all non-zeros on a 15-level grid
+        step = np.abs(nz).max() / 7
+        np.testing.assert_allclose(nz / step, np.round(nz / step), atol=1e-4)
+
+
+def test_multi_rho_tightens_gap():
+    """On a convex toy problem, ||W - Z|| shrinks as rho grows."""
+    rng = np.random.default_rng(0)
+    target = jnp.asarray(rng.normal(size=(40,)), jnp.float32)
+    w = jnp.zeros((40,))
+    z = A.project_prune_element(w, 0.8)
+    u = jnp.zeros_like(w)
+    rho = 0.1
+    gaps = []
+    for _ in range(12):
+        # x-step: closed form for min ||w-target||^2 + rho/2 ||w-z+u||^2
+        w = (2 * target + rho * (z - u)) / (2 + rho)
+        z = A.project_prune_element(w + u, 0.8)
+        u = u + w - z
+        gaps.append(float(jnp.sum((w - z) ** 2)))
+        rho *= 1.7
+    assert gaps[-1] < gaps[0] * 0.05
+
+
+# ------------------------------------------------------------- storage
+
+
+def test_storage_accounting():
+    assert A.storage_bytes_dense(1000) == 4000
+    assert A.storage_bytes_compressed(100, 4) == 50
+    assert A.storage_bytes_compressed(100, 4, index_bits=16) == 250
+
+
+def test_overall_rate():
+    res = A.CompressResult(
+        params={}, masks={}, history=[],
+        per_layer_nnz={"a": (10, 1000), "b": (10, 1000)},
+    )
+    assert res.overall_rate == 100.0

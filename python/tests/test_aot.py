@@ -1,0 +1,77 @@
+"""AOT pipeline: HLO text format invariants + manifest round-trip.
+
+The expensive end-to-end check (rust loads the artifact and reproduces the
+golden logits) lives in rust/tests/artifact_roundtrip.rs; here we verify
+the python half: the text the 0.5.1 parser must accept.
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def lenet_hlo():
+    p = M.lenet5_init(0)
+    return aot.lower_model(M.lenet5_apply, p, (28, 28, 1), 1)
+
+
+def test_hlo_has_full_constants(lenet_hlo):
+    assert "{...}" not in lenet_hlo, "large constants were elided"
+
+
+def test_hlo_has_no_metadata(lenet_hlo):
+    # xla_extension 0.5.1's parser rejects source_end_line et al.
+    assert "metadata=" not in lenet_hlo
+    assert "source_end_line" not in lenet_hlo
+
+
+def test_hlo_is_entry_module(lenet_hlo):
+    assert lenet_hlo.startswith("HloModule")
+    assert "ENTRY" in lenet_hlo
+
+
+def test_hlo_single_param_tuple_root(lenet_hlo):
+    """One parameter (the image batch); weights are baked constants; the
+    root is a tuple (return_tuple=True) the rust side unwraps."""
+    entry = lenet_hlo[lenet_hlo.index("ENTRY") :]
+    first_line = entry.splitlines()[0]
+    assert first_line.count("f32[1,28,28,1]") == 1
+    assert "(f32[1,10])" in first_line  # tuple-wrapped logits
+
+
+def test_batch_variants_differ_only_in_batch():
+    p = M.lenet5_init(0)
+    h1 = aot.lower_model(M.lenet5_apply, p, (28, 28, 1), 1)
+    h4 = aot.lower_model(M.lenet5_apply, p, (28, 28, 1), 4)
+    assert "f32[1,28,28,1]" in h1 and "f32[4,28,28,1]" in h4
+
+
+def test_build_quick_manifest(tmp_path):
+    """Whole quick build: manifest schema + files exist + goldens coherent."""
+    aot.build(str(tmp_path), quick=True, log=lambda s: None)
+    man = json.load(open(tmp_path / "manifest.json"))
+    assert man["format"] == 1
+    assert len(man["models"]) == 4  # lenet5 x {dense,sparse} x {b1,b4}
+    for entry in man["models"]:
+        path = tmp_path / entry["path"]
+        assert path.exists() and path.stat().st_size > 10_000
+        assert entry["input_shape"][0] == entry["batch"]
+        assert entry["classes"] == 10
+        assert 0.0 <= entry["accuracy"] <= 1.0
+    for variant in ("dense", "sparse"):
+        g = json.load(open(tmp_path / "golden" / f"lenet5_{variant}.json"))
+        n = int(np.prod(g["input_shape"]))
+        assert len(g["input"]) == n
+        assert len(g["logits"]) == int(np.prod(g["logits_shape"]))
+        assert g["logits_shape"][1] == 10
+    # sparse variant records a real compression rate
+    sparse = [m for m in man["models"] if m["variant"] == "sparse"]
+    assert all(m["compression_rate"] > 1.5 for m in sparse)

@@ -1,0 +1,317 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes/strides/paddings/sparsity; fixed-seed cases pin
+the exact configurations the AOT models use.
+"""
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    conv2d_fused,
+    depthwise_fused,
+    gemm,
+    gemm_bn_relu,
+    ref,
+    sparse_gemm,
+    sparse_gemm_bn_relu,
+)
+from compile.kernels.conv_fused import conv1x1_as_gemm, conv2d_sparse_fused, im2col
+from compile.kernels.sparse_gemm import tile_mask_from_weights
+from compile.kernels.common import pick_block, round_up
+
+RTOL = 2e-4
+ATOL = 2e-4
+
+
+def _arr(rng, shape):
+    return jnp.asarray(rng.normal(size=shape), jnp.float32)
+
+
+# ---------------------------------------------------------------- gemm
+
+dims = st.integers(min_value=1, max_value=70)
+
+
+@settings(max_examples=12, deadline=None)
+@given(m=dims, k=dims, n=dims, seed=st.integers(0, 2**31 - 1))
+def test_gemm_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x, y = _arr(rng, (m, k)), _arr(rng, (k, n))
+    np.testing.assert_allclose(gemm(x, y), ref.gemm(x, y), rtol=RTOL, atol=ATOL)
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=dims, k=dims, n=dims, seed=st.integers(0, 2**31 - 1))
+def test_gemm_bn_relu_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x, y = _arr(rng, (m, k)), _arr(rng, (k, n))
+    s, h = _arr(rng, (n,)), _arr(rng, (n,))
+    np.testing.assert_allclose(
+        gemm_bn_relu(x, y, s, h), ref.gemm_bn_relu(x, y, s, h), rtol=RTOL, atol=ATOL
+    )
+
+
+def test_gemm_identity():
+    x = jnp.eye(33, dtype=jnp.float32)
+    y = jnp.arange(33 * 17, dtype=jnp.float32).reshape(33, 17)
+    np.testing.assert_allclose(gemm(x, y), y, rtol=RTOL, atol=ATOL)
+
+
+def test_gemm_explicit_blocks():
+    # Block sizes that do NOT divide the dims: exercises the padding path.
+    rng = np.random.default_rng(7)
+    x, y = _arr(rng, (130, 257)), _arr(rng, (257, 65))
+    out = gemm(x, y, bm=64, bn=32, bk=128)
+    np.testing.assert_allclose(out, ref.gemm(x, y), rtol=RTOL, atol=ATOL)
+
+
+def test_gemm_relu_clamps_negative():
+    x = -jnp.ones((4, 4), jnp.float32)
+    y = jnp.ones((4, 4), jnp.float32)
+    s = jnp.ones((4,), jnp.float32)
+    h = jnp.zeros((4,), jnp.float32)
+    out = gemm_bn_relu(x, y, s, h)
+    assert jnp.all(out == 0.0)
+
+
+# --------------------------------------------------------- sparse gemm
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    m=dims,
+    k=dims,
+    n=dims,
+    bk=st.sampled_from([8, 16, 32]),
+    bn=st.sampled_from([8, 16, 32]),
+    density=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sparse_gemm_matches_ref(m, k, n, bk, bn, density, seed):
+    rng = np.random.default_rng(seed)
+    x, y = _arr(rng, (m, k)), _arr(rng, (k, n))
+    nk, nn = math.ceil(k / bk), math.ceil(n / bn)
+    mask = jnp.asarray(rng.random((nk, nn)) < density, jnp.int32)
+    np.testing.assert_allclose(
+        sparse_gemm(x, y, mask, bk=bk, bn=bn),
+        ref.sparse_gemm(x, y, mask, bk, bn),
+        rtol=RTOL,
+        atol=ATOL,
+    )
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    m=dims,
+    k=dims,
+    n=dims,
+    density=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sparse_gemm_bn_relu_matches_ref(m, k, n, density, seed):
+    bk = bn = 16
+    rng = np.random.default_rng(seed)
+    x, y = _arr(rng, (m, k)), _arr(rng, (k, n))
+    s, h = _arr(rng, (n,)), _arr(rng, (n,))
+    mask = jnp.asarray(
+        rng.random((math.ceil(k / bk), math.ceil(n / bn))) < density, jnp.int32
+    )
+    np.testing.assert_allclose(
+        sparse_gemm_bn_relu(x, y, mask, s, h, bk=bk, bn=bn),
+        ref.sparse_gemm_bn_relu(x, y, mask, s, h, bk, bn),
+        rtol=RTOL,
+        atol=ATOL,
+    )
+
+
+def test_sparse_gemm_all_zero_mask_gives_zero():
+    rng = np.random.default_rng(1)
+    x, y = _arr(rng, (20, 32)), _arr(rng, (32, 24))
+    mask = jnp.zeros((2, 2), jnp.int32)
+    out = sparse_gemm(x, y, mask, bk=16, bn=16)
+    assert jnp.all(out == 0.0)
+
+
+def test_sparse_gemm_full_mask_equals_dense():
+    rng = np.random.default_rng(2)
+    x, y = _arr(rng, (20, 32)), _arr(rng, (32, 24))
+    mask = jnp.ones((2, 2), jnp.int32)
+    np.testing.assert_allclose(
+        sparse_gemm(x, y, mask, bk=16, bn=16), ref.gemm(x, y), rtol=RTOL, atol=ATOL
+    )
+
+
+def test_tile_mask_from_weights():
+    y = np.zeros((32, 32), np.float32)
+    y[0, 0] = 1.0   # tile (0, 0) live
+    y[20, 25] = 2.0  # tile (1, 1) live
+    mask = tile_mask_from_weights(jnp.asarray(y), 16, 16)
+    np.testing.assert_array_equal(np.asarray(mask), [[1, 0], [0, 1]])
+
+
+def test_sparse_gemm_consistent_with_derived_mask():
+    """Pruned weights + derived tile mask == dense matmul on pruned weights."""
+    rng = np.random.default_rng(3)
+    y = np.array(_arr(rng, (48, 48)))
+    y[y < 0.5] = 0.0  # heavy pruning
+    y = jnp.asarray(y)
+    x = _arr(rng, (10, 48))
+    mask = tile_mask_from_weights(y, 16, 16)
+    np.testing.assert_allclose(
+        sparse_gemm(x, y, mask, bk=16, bn=16), ref.gemm(x, y), rtol=RTOL, atol=ATOL
+    )
+
+
+# ---------------------------------------------------------------- conv
+
+small = st.integers(min_value=3, max_value=14)
+chan = st.integers(min_value=1, max_value=12)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n=st.integers(1, 3),
+    h=small,
+    cin=chan,
+    cout=chan,
+    ksp=st.sampled_from([(1, 1, 0), (3, 1, 1), (3, 2, 1), (5, 1, 2), (5, 2, 2), (3, 1, 0)]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv2d_fused_matches_ref(n, h, cin, cout, ksp, seed):
+    kh, stride, padding = ksp
+    if h + 2 * padding < kh:
+        return
+    rng = np.random.default_rng(seed)
+    x = _arr(rng, (n, h, h, cin))
+    w = _arr(rng, (kh, kh, cin, cout))
+    s, b = _arr(rng, (cout,)), _arr(rng, (cout,))
+    np.testing.assert_allclose(
+        conv2d_fused(x, w, s, b, stride=stride, padding=padding),
+        ref.conv2d_fused(x, w, s, b, stride, padding),
+        rtol=5e-4,
+        atol=5e-4,
+    )
+
+
+def test_conv2d_fused_no_relu():
+    rng = np.random.default_rng(11)
+    x = _arr(rng, (1, 8, 8, 3))
+    w = _arr(rng, (3, 3, 3, 6))
+    s, b = _arr(rng, (6,)), _arr(rng, (6,))
+    np.testing.assert_allclose(
+        conv2d_fused(x, w, s, b, stride=1, padding=1, relu=False),
+        ref.conv2d_fused(x, w, s, b, 1, 1, relu=False),
+        rtol=5e-4,
+        atol=5e-4,
+    )
+
+
+def test_conv1x1_as_gemm_equals_conv():
+    """The paper's 1x1->GEMM transformation is exact."""
+    rng = np.random.default_rng(12)
+    x = _arr(rng, (2, 7, 7, 9))
+    w = _arr(rng, (1, 1, 9, 13))
+    np.testing.assert_allclose(
+        conv1x1_as_gemm(x, w), ref.conv2d(x, w), rtol=5e-4, atol=5e-4
+    )
+
+
+def test_conv2d_sparse_fused_matches_masked_ref():
+    rng = np.random.default_rng(13)
+    x = _arr(rng, (1, 8, 8, 4))
+    w = np.array(_arr(rng, (3, 3, 4, 8)))
+    # Prune, then derive the tile mask exactly as the compressor does.
+    w[np.abs(w) < 0.7] = 0.0
+    w = jnp.asarray(w)
+    wmat = w.reshape(36, 8)
+    mask = tile_mask_from_weights(wmat, 16, 8)
+    s, b = _arr(rng, (8,)), _arr(rng, (8,))
+    np.testing.assert_allclose(
+        conv2d_sparse_fused(x, w, mask, s, b, stride=1, padding=1, bk=16, bn=8),
+        ref.conv2d_fused(x, w, s, b, 1, 1),
+        rtol=5e-4,
+        atol=5e-4,
+    )
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    h=small,
+    c=chan,
+    ksp=st.sampled_from([(3, 1, 1), (3, 2, 1), (1, 1, 0)]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_im2col_times_weights_equals_conv(h, c, ksp, seed):
+    """im2col is a pure layout transformation: patches @ W == conv."""
+    kh, stride, padding = ksp
+    if h + 2 * padding < kh:
+        return
+    rng = np.random.default_rng(seed)
+    x = _arr(rng, (2, h, h, c))
+    w = _arr(rng, (kh, kh, c, 5))
+    patches, (n, ho, wo) = im2col(x, kh, kh, stride, padding)
+    out = (patches @ w.reshape(-1, 5)).reshape(n, ho, wo, 5)
+    np.testing.assert_allclose(out, ref.conv2d(x, w, stride, padding), rtol=5e-4, atol=5e-4)
+
+
+# ----------------------------------------------------------- depthwise
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n=st.integers(1, 2),
+    h=small,
+    c=st.integers(1, 16),
+    ksp=st.sampled_from([(3, 1, 1), (3, 2, 1), (5, 1, 2)]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_depthwise_fused_matches_ref(n, h, c, ksp, seed):
+    kh, stride, padding = ksp
+    if h + 2 * padding < kh:
+        return
+    rng = np.random.default_rng(seed)
+    x = _arr(rng, (n, h, h, c))
+    w = _arr(rng, (kh, kh, c))
+    s, b = _arr(rng, (c,)), _arr(rng, (c,))
+    np.testing.assert_allclose(
+        depthwise_fused(x, w, s, b, stride=stride, padding=padding),
+        ref.depthwise_fused(x, w, s, b, stride, padding),
+        rtol=5e-4,
+        atol=5e-4,
+    )
+
+
+def test_depthwise_channel_block_padding():
+    """Channel count not a multiple of the block: padding path."""
+    rng = np.random.default_rng(21)
+    x = _arr(rng, (1, 6, 6, 5))
+    w = _arr(rng, (3, 3, 5))
+    s, b = _arr(rng, (5,)), _arr(rng, (5,))
+    np.testing.assert_allclose(
+        depthwise_fused(x, w, s, b, stride=1, padding=1, bc=4),
+        ref.depthwise_fused(x, w, s, b, 1, 1),
+        rtol=5e-4,
+        atol=5e-4,
+    )
+
+
+# ------------------------------------------------------------- helpers
+
+
+@given(st.integers(1, 10_000), st.sampled_from([1, 2, 8, 16, 128]))
+def test_round_up(x, m):
+    r = round_up(x, m)
+    assert r >= x and r % m == 0 and r - x < m
+
+
+@given(st.integers(1, 4096))
+def test_pick_block_divides_padded(dim):
+    b = pick_block(dim, 128)
+    assert b >= 1
+    assert round_up(dim, b) % b == 0
+    assert b <= 128 or b < 2 * dim

@@ -1,0 +1,71 @@
+//! Serving-coordinator bench: throughput/latency across offered load and
+//! batch policies over the real PJRT artifacts. Quantifies coordinator
+//! overhead (the §Perf L3 target: overhead << execution time).
+//!
+//! Requires `make artifacts`. Run: cargo bench --bench bench_coordinator
+
+use cadnn::bench::print_table;
+use cadnn::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig};
+use cadnn::util::rng::Rng;
+
+fn run(variant: &str, rps: f64, requests: usize, policy: BatchPolicy) -> Option<Vec<String>> {
+    let cfg = CoordinatorConfig {
+        artifacts_dir: "artifacts".into(),
+        model: "lenet5".into(),
+        variant: variant.into(),
+        max_batch: 8,
+        max_wait_us: 2_000,
+        policy,
+    };
+    let coord = Coordinator::start(cfg).ok()?;
+    let mut rng = Rng::new(77);
+    let mut rxs = Vec::new();
+    for _ in 0..requests {
+        let mut img = vec![0.0f32; coord.input_len];
+        rng.fill_normal(&mut img, 0.5);
+        rxs.push(coord.submit(img).ok()?);
+        std::thread::sleep(std::time::Duration::from_secs_f64(rng.exp(rps)));
+    }
+    for rx in rxs {
+        let _ = rx.recv();
+    }
+    let m = coord.metrics.lock().unwrap();
+    let lat = m.latency_summary()?;
+    let exec = m.exec_summary()?;
+    let row = vec![
+        variant.to_string(),
+        format!("{rps:.0}"),
+        format!("{:?}", policy),
+        format!("{:.1}", m.throughput_rps()),
+        format!("{:.1}", lat.p50 / 1e3),
+        format!("{:.1}", lat.p99 / 1e3),
+        format!("{:.0}%", m.batch_utilization() * 100.0),
+        format!("{:.1}", exec.p50 / 1e3),
+    ];
+    drop(m);
+    coord.shutdown().ok()?;
+    Some(row)
+}
+
+fn main() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("bench_coordinator: artifacts/ missing — run `make artifacts` first");
+        return;
+    }
+    println!("== coordinator serving bench (lenet5, Poisson arrivals) ==\n");
+    let mut rows = Vec::new();
+    for variant in ["dense", "sparse"] {
+        for rps in [30.0, 120.0, 400.0] {
+            for policy in [BatchPolicy::PadToFit, BatchPolicy::Greedy] {
+                if let Some(r) = run(variant, rps, 60, policy) {
+                    rows.push(r);
+                }
+            }
+        }
+    }
+    print_table(
+        &["variant", "offered rps", "policy", "achieved rps", "p50 ms", "p99 ms", "batch util", "exec p50 ms"],
+        &rows,
+    );
+    println!("\n(p50 - exec p50 gap at low load ~= coordinator overhead + batching wait)");
+}

@@ -1,0 +1,89 @@
+//! Fusion ablation (paper §4 "model computation fusion"): measured on the
+//! real executor — the same model run by TFLite-like (unfused, direct),
+//! an im2col-GEMM engine *without* fused epilogues, and CADNN (fused).
+//! Also reports the graph-level effect of the passes.
+//!
+//! Run: cargo bench --bench bench_fusion
+
+use cadnn::bench::print_table;
+use cadnn::exec::{ModelInstance, Personality};
+use cadnn::ir::Shape;
+use cadnn::ir::{Graph, Op};
+use cadnn::ir::ops::ActKind;
+use cadnn::kernels::Tensor;
+use cadnn::util::rng::Rng;
+use cadnn::util::stats;
+
+/// A MobileNet-ish tower at reduced resolution: the fusion targets
+/// (conv+bn+relu, dw+bn+relu, 1x1 convs) at host-benchable sizes.
+fn tower(batch: usize) -> Graph {
+    let mut g = Graph::new("tower", Shape::nhwc(batch, 56, 56, 16));
+    let mut x = 0;
+    let mut cin = 16;
+    for (i, (cout, stride)) in [(32usize, 1usize), (32, 2), (64, 1), (64, 2), (128, 1)]
+        .iter()
+        .enumerate()
+    {
+        let dw = g.add(
+            format!("b{i}_dw"),
+            Op::DepthwiseConv2d { kh: 3, kw: 3, c: cin, stride: *stride, padding: 1 },
+            vec![x],
+        );
+        let dwbn = g.add(format!("b{i}_dw_bn"), Op::BatchNorm { c: cin }, vec![dw]);
+        let dwact = g.add(
+            format!("b{i}_dw_act"),
+            Op::Activation { kind: ActKind::Relu },
+            vec![dwbn],
+        );
+        let pw = g.add(format!("b{i}_pw"), Op::conv(1, 1, cin, *cout, 1, 0), vec![dwact]);
+        let pwbn = g.add(format!("b{i}_pw_bn"), Op::BatchNorm { c: *cout }, vec![pw]);
+        x = g.add(
+            format!("b{i}_pw_act"),
+            Op::Activation { kind: ActKind::Relu },
+            vec![pwbn],
+        );
+        cin = *cout;
+    }
+    let gap = g.add("gap", Op::GlobalAvgPool, vec![x]);
+    g.add("fc", Op::fc(cin, 10), vec![gap]);
+    g
+}
+
+fn main() {
+    let g = tower(1);
+    let mut rng = Rng::new(3);
+    let mut input = Tensor::zeros(&g.nodes[0].shape.0);
+    rng.fill_normal(&mut input.data, 0.5);
+
+    println!("== fusion ablation on a depthwise-separable tower (56x56x16 input) ==\n");
+
+    // graph-level effect
+    let fused_graph = Personality::CadnnDense.lower(&g);
+    println!(
+        "graph nodes: {} unfused -> {} fused (eliminated {} intermediate tensors)\n",
+        g.len(),
+        fused_graph.len(),
+        g.len() - fused_graph.len()
+    );
+
+    let mut rows = Vec::new();
+    let mut base_us = 0.0;
+    for p in [Personality::TfLiteLike, Personality::TvmLike, Personality::CadnnDense] {
+        let inst = ModelInstance::build(&g, p, None, None, 2 << 20).unwrap();
+        let samples = stats::measure_adaptive_us(400_000.0, 12, || {
+            let _ = inst.execute(&input).unwrap();
+        });
+        let s = stats::Summary::from(&samples).unwrap();
+        if p == Personality::TfLiteLike {
+            base_us = s.p50;
+        }
+        rows.push(vec![
+            p.label().to_string(),
+            format!("{:.0}", s.p50),
+            format!("{:.0}", s.mean),
+            format!("{:.2}x", base_us / s.p50),
+        ]);
+    }
+    print_table(&["personality", "p50 us", "mean us", "speedup vs TFLite-like"], &rows);
+    println!("\n(TVM-like = fusion+GEMM with default tiles; CADNN-D adds tuned tiles)");
+}

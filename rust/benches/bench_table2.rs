@@ -1,0 +1,52 @@
+//! Table 2 bench target: model size / layer accounting vs the paper, and
+//! §3 compression-rate pins — a fast, fully deterministic table.
+//!
+//! Run: cargo bench --bench bench_table2
+
+use cadnn::bench::{print_table, table2};
+use cadnn::compress::profile::paper_profile;
+use cadnn::compress::size;
+use cadnn::models;
+
+fn main() {
+    println!("== Table 2 ==\n");
+    let rows: Vec<Vec<String>> = table2::table2()
+        .iter()
+        .map(|r| {
+            vec![
+                r.model.to_string(),
+                format!("{:.1}", r.size_mb),
+                format!("{:.1}", r.paper_size_mb),
+                format!("{:+.1}%", 100.0 * (r.size_mb - r.paper_size_mb) / r.paper_size_mb),
+                format!("{}", r.weight_layers),
+                format!("{}", r.compute_layers),
+                format!("{}", r.paper_layers),
+            ]
+        })
+        .collect();
+    print_table(
+        &["model", "size MB", "paper MB", "delta", "w-layers", "c-layers", "paper layers"],
+        &rows,
+    );
+
+    println!("\n== §3 pruning-rate pins ==\n");
+    let mut rows = Vec::new();
+    for (name, claim) in [
+        ("lenet5", 348.0),
+        ("alexnet", 36.0),
+        ("vgg16", 34.0),
+        ("resnet18", 8.0),
+        ("resnet50", 9.2),
+    ] {
+        let g = models::build(name, 1).unwrap();
+        let r = size::report(&g, &paper_profile(&g));
+        rows.push(vec![
+            name.to_string(),
+            format!("{:.1}x", r.compression_rate),
+            format!("{claim}x"),
+            format!("{:+.1}%", 100.0 * (r.compression_rate - claim) / claim),
+            format!("{:.0}x", r.storage_reduction_no_idx()),
+        ]);
+    }
+    print_table(&["model", "ours", "paper", "delta", "4bit storage"], &rows);
+}

@@ -1,0 +1,66 @@
+//! Tuner ablation (paper §4.3 "optimization parameters selection"):
+//! default vs tuned tiles on the Figure-2 models' GEMM shapes, plus the
+//! pruned-search-vs-space statistics that justify the knowledge-based
+//! pruning rules.
+//!
+//! Run: cargo bench --bench bench_tuner
+
+use cadnn::bench::print_table;
+use cadnn::exec::Personality;
+use cadnn::models;
+use cadnn::passes::layout;
+use cadnn::tuner;
+
+fn main() {
+    println!("== optimization-parameter selection ablation ==\n");
+    let mut all_rows = Vec::new();
+    let mut geo = 1.0f64;
+    let mut count = 0usize;
+    for model in ["resnet50", "mobilenet_v1"] {
+        let g = models::build(model, 1).unwrap();
+        let lowered = Personality::CadnnDense.lower(&g);
+        let plan = layout::plan(&lowered);
+        let mut shapes: Vec<(usize, usize, usize)> = plan
+            .per_node
+            .values()
+            .map(|i| (i.gemm_m.min(3136), i.gemm_k, i.gemm_n))
+            .collect();
+        shapes.sort();
+        shapes.dedup();
+        shapes.sort_by_key(|&(m, k, n)| std::cmp::Reverse(m * k * n));
+        shapes.truncate(4);
+        for (m, k, n) in shapes {
+            let r = tuner::tune(m, k, n, 2 << 20, 7);
+            geo *= r.speedup_vs_default();
+            count += 1;
+            all_rows.push(vec![
+                model.to_string(),
+                format!("{m}x{k}x{n}"),
+                format!("{:.0}", r.default_us),
+                format!("{:.0}", r.best_us),
+                format!("{:.2}x", r.speedup_vs_default()),
+                format!("mc{} nc{} kc{} u{}", r.best.mc, r.best.nc, r.best.kc, r.best.unroll),
+                format!("{}", r.evaluated),
+                format!("{}", r.pruned),
+            ]);
+        }
+    }
+    print_table(
+        &["model", "shape", "default us", "tuned us", "speedup", "best", "evals", "pruned"],
+        &all_rows,
+    );
+    println!(
+        "\ngeometric-mean speedup {:.2}x over {} shapes — the measured uplift used in Figure 2",
+        geo.powf(1.0 / count.max(1) as f64),
+        count
+    );
+
+    // pruning-rule effectiveness: candidates vs full grid
+    let (cands, pruned) = tuner::candidates(784, 576, 128, 2 << 20);
+    println!(
+        "\nsearch-space pruning (784x576x128): {} legal / {} pruned ({}% of the grid eliminated)",
+        cands.len(),
+        pruned,
+        100 * pruned / (cands.len() + pruned)
+    );
+}

@@ -1,0 +1,42 @@
+//! Shared bench harness: regenerates the paper's figures and tables
+//! (DESIGN.md §5-6). Used by `cargo bench` targets, `examples/` and the
+//! CLI so every entry point prints identical numbers.
+
+pub mod figure2;
+pub mod table2;
+
+pub use figure2::{figure2, Figure2Row};
+pub use table2::{table2, Table2Row};
+
+/// Fixed-width table printer for paper-style output.
+pub fn print_table(headers: &[&str], rows: &[Vec<String>]) {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let line = |cells: &[String]| {
+        let mut s = String::new();
+        for (i, c) in cells.iter().enumerate() {
+            s.push_str(&format!("{:>w$}  ", c, w = widths[i]));
+        }
+        s.trim_end().to_string()
+    };
+    println!("{}", line(&headers.iter().map(|s| s.to_string()).collect::<Vec<_>>()));
+    println!("{}", "-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+    for row in rows {
+        println!("{}", line(row));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn print_table_smoke() {
+        super::print_table(
+            &["a", "bbb"],
+            &[vec!["1".into(), "2".into()], vec!["333".into(), "4".into()]],
+        );
+    }
+}

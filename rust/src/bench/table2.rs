@@ -1,0 +1,93 @@
+//! Table 2 regeneration: model name, Size(M), top-1/top-5 (quoted —
+//! ImageNet accuracy is not re-measurable here, DESIGN.md §2), layer
+//! counts under two conventions.
+
+use crate::models;
+
+#[derive(Debug, Clone)]
+pub struct Table2Row {
+    pub model: &'static str,
+    pub size_mb: f64,
+    pub paper_size_mb: f64,
+    /// paper-quoted accuracies (not re-measured — no ImageNet)
+    pub top1: f64,
+    pub top5: f64,
+    /// weight layers (conv + dwconv + fc)
+    pub weight_layers: usize,
+    /// all compute nodes (conv/bn/act/pool/fc/add/concat) — closer to the
+    /// paper's looser "Layer" counting
+    pub compute_layers: usize,
+    pub paper_layers: usize,
+}
+
+pub fn table2() -> Vec<Table2Row> {
+    let paper: [(&str, f64, f64, f64, usize); 4] = [
+        ("mobilenet_v1", 17.1, 70.9, 89.9, 31),
+        ("mobilenet_v2", 14.1, 71.9, 91.0, 66),
+        ("inception_v3", 95.4, 78.0, 93.9, 126),
+        ("resnet50", 102.4, 75.2, 92.2, 94),
+    ];
+    paper
+        .iter()
+        .map(|&(name, size, top1, top5, layers)| {
+            let g = models::build(name, 1).unwrap();
+            let compute_layers = g
+                .nodes
+                .iter()
+                .filter(|n| {
+                    !matches!(
+                        n.op,
+                        crate::ir::Op::Input { .. }
+                            | crate::ir::Op::Flatten
+                            | crate::ir::Op::Softmax
+                    )
+                })
+                .count();
+            Table2Row {
+                model: name,
+                size_mb: g.size_mb(),
+                paper_size_mb: size,
+                top1,
+                top5,
+                weight_layers: g.weight_layer_count(),
+                compute_layers,
+                paper_layers: layers,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sizes_within_2pct_of_paper() {
+        for row in table2() {
+            let rel = (row.size_mb - row.paper_size_mb).abs() / row.paper_size_mb;
+            assert!(rel < 0.02, "{}: {} vs {}", row.model, row.size_mb, row.paper_size_mb);
+        }
+    }
+
+    #[test]
+    fn layer_counts_bracket_paper() {
+        // The paper's "Layer" convention is looser than weight-layers and
+        // tighter than all-compute-nodes; ours must bracket it.
+        for row in table2() {
+            assert!(
+                row.weight_layers <= row.paper_layers,
+                "{}: weight {} > paper {}",
+                row.model,
+                row.weight_layers,
+                row.paper_layers
+            );
+            assert!(
+                row.compute_layers >= row.paper_layers / 2,
+                "{}: compute {} << paper {}",
+                row.model,
+                row.compute_layers,
+                row.paper_layers
+            );
+        }
+    }
+}

@@ -1,0 +1,19 @@
+//! Model compression representation and accounting (paper §3).
+//!
+//! The ADMM *training* lives in python (build-time); this module owns the
+//! deployment-side artifacts of compression:
+//! - per-layer sparsity profiles (paper-prescribed, or imported from
+//!   `artifacts/compress_report.json` produced by the python run),
+//! - the CSR encoding the CPU execution path uses,
+//! - k-bit codebook quantization metadata,
+//! - storage accounting that regenerates the §3 compression-rate and
+//!   storage-reduction claims and Table 2 sizes.
+
+pub mod csr;
+pub mod profile;
+pub mod quant;
+pub mod size;
+
+pub use csr::CsrMatrix;
+pub use profile::{SparsityProfile, paper_profile};
+pub use quant::QuantizedTensor;

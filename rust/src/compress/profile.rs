@@ -1,0 +1,219 @@
+//! Per-layer sparsity profiles.
+//!
+//! A profile maps prunable layer names of an IR graph to sparsity in
+//! [0,1). `paper_profile` encodes the non-uniform shapes the ADMM papers
+//! report (convs pruned less, FC much more), scaled so the *overall*
+//! weight reduction matches the §3 claims; profiles can also be imported
+//! from the python ADMM run (`artifacts/compress_report.json`).
+
+use crate::ir::Graph;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct SparsityProfile {
+    /// layer name -> sparsity (fraction of weights pruned).
+    pub layers: BTreeMap<String, f64>,
+}
+
+impl SparsityProfile {
+    pub fn uniform(graph: &Graph, sparsity: f64) -> Self {
+        let mut layers = BTreeMap::new();
+        for n in &graph.nodes {
+            if n.op.prunable() {
+                layers.insert(n.name.clone(), sparsity);
+            }
+        }
+        SparsityProfile { layers }
+    }
+
+    pub fn get(&self, layer: &str) -> f64 {
+        self.layers.get(layer).copied().unwrap_or(0.0)
+    }
+
+    /// Overall weight reduction rate over a graph: total / nnz.
+    pub fn overall_rate(&self, graph: &Graph) -> f64 {
+        let mut total = 0usize;
+        let mut nnz = 0f64;
+        for n in &graph.nodes {
+            let w = n.op.weight_count();
+            if w == 0 {
+                continue;
+            }
+            total += w;
+            nnz += w as f64 * (1.0 - self.get(&n.name));
+        }
+        total as f64 / nnz.max(1.0)
+    }
+
+    /// Remaining (non-zero) weights over the graph.
+    pub fn nnz(&self, graph: &Graph) -> usize {
+        graph
+            .nodes
+            .iter()
+            .map(|n| {
+                let w = n.op.weight_count();
+                (w as f64 * (1.0 - self.get(&n.name))).round() as usize
+            })
+            .sum()
+    }
+
+    /// Import the measured per-layer profile from compress_report.json
+    /// ("measured" -> model -> "per_layer" -> {layer: {nnz, total}}).
+    pub fn from_report(report: &Json, model: &str) -> Option<Self> {
+        let per_layer = report.get("measured")?.get(model)?.get("per_layer")?;
+        let mut layers = BTreeMap::new();
+        if let Json::Obj(kv) = per_layer {
+            for (name, v) in kv {
+                let nnz = v.get("nnz")?.as_f64()?;
+                let total = v.get("total")?.as_f64()?;
+                layers.insert(name.clone(), 1.0 - nnz / total.max(1.0));
+            }
+        }
+        Some(SparsityProfile { layers })
+    }
+}
+
+/// Paper-shaped profile for a named model, tuned so the overall rate
+/// reproduces §3: LeNet-5 348x, AlexNet 36x, VGG-16 34x, ResNet-18 8x,
+/// ResNet-50 9.2x. Conv layers keep more weights than FC layers, first
+/// and last layers are pruned least — the shape every ADMM paper reports.
+pub fn paper_profile(graph: &Graph) -> SparsityProfile {
+    let mut layers = BTreeMap::new();
+    match graph.name.as_str() {
+        "lenet5" => {
+            // 348x overall (~0.28% kept), per-layer shape from the
+            // progressive-ADMM paper this work builds on.
+            layers.insert("c1".into(), 0.93);
+            layers.insert("c2".into(), 0.988);
+            layers.insert("f1".into(), 0.9991);
+            layers.insert("f2".into(), 0.9945);
+            layers.insert("f3".into(), 0.955);
+        }
+        "alexnet" => {
+            // 36x overall, matching Zhang et al.'s per-layer shape.
+            layers.insert("conv1".into(), 0.16);
+            layers.insert("conv2".into(), 0.65);
+            layers.insert("conv3".into(), 0.70);
+            layers.insert("conv4".into(), 0.66);
+            layers.insert("conv5".into(), 0.66);
+            layers.insert("fc6".into(), 0.988);
+            layers.insert("fc7".into(), 0.986);
+            layers.insert("fc8".into(), 0.95);
+        }
+        "vgg16" => {
+            for (name, s) in [
+                ("conv1_1", 0.42), ("conv1_2", 0.79),
+                ("conv2_1", 0.78), ("conv2_2", 0.80),
+                ("conv3_1", 0.77), ("conv3_2", 0.82), ("conv3_3", 0.80),
+                ("conv4_1", 0.81), ("conv4_2", 0.82), ("conv4_3", 0.80),
+                ("conv5_1", 0.78), ("conv5_2", 0.80), ("conv5_3", 0.78),
+                ("fc6", 0.993), ("fc7", 0.99), ("fc8", 0.95),
+            ] {
+                layers.insert(name.into(), s);
+            }
+        }
+        "resnet18" | "resnet50" => {
+            // Residual nets have no big FC to feast on: ~8-9.2x overall
+            // from uniform-ish conv pruning, stem/downsample kept denser.
+            for n in &graph.nodes {
+                if !n.op.prunable() {
+                    continue;
+                }
+                let s = if n.name == "conv1" {
+                    0.40
+                } else if n.name == "fc" {
+                    if graph.name == "resnet50" { 0.80 } else { 0.75 }
+                } else if graph.name == "resnet50" {
+                    0.8995
+                } else {
+                    0.881
+                };
+                layers.insert(n.name.clone(), s);
+            }
+        }
+        // Figure 2 subjects without published per-layer tables: the
+        // paper's CADNN-S variants; moderate conv pruning.
+        "mobilenet_v1" | "mobilenet_v2" => {
+            for n in &graph.nodes {
+                if n.op.prunable() {
+                    // pointwise convs tolerate more pruning than the stem
+                    let s = if n.name.contains("pw") || n.name.contains("proj") || n.name.contains("exp") {
+                        0.70
+                    } else if n.name == "fc" {
+                        0.75
+                    } else {
+                        0.30
+                    };
+                    layers.insert(n.name.clone(), s);
+                }
+            }
+        }
+        "inception_v3" => {
+            for n in &graph.nodes {
+                if n.op.prunable() {
+                    let s = if n.name.starts_with("stem") { 0.45 } else { 0.80 };
+                    layers.insert(n.name.clone(), s);
+                }
+            }
+        }
+        _ => {
+            return SparsityProfile::uniform(graph, 0.5);
+        }
+    }
+    SparsityProfile { layers }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models;
+
+    #[test]
+    fn uniform_profile_rate() {
+        let g = models::build("lenet5", 1).unwrap();
+        let p = SparsityProfile::uniform(&g, 0.9);
+        assert!((p.overall_rate(&g) - 10.0).abs() < 0.2);
+    }
+
+    /// §3 pins: the paper-shaped profiles land on the claimed overall
+    /// rates within 10%.
+    #[test]
+    fn paper_rates_reproduced() {
+        for (model, claim) in [
+            ("lenet5", 348.0),
+            ("alexnet", 36.0),
+            ("vgg16", 34.0),
+            ("resnet18", 8.0),
+            ("resnet50", 9.2),
+        ] {
+            let g = models::build(model, 1).unwrap();
+            let rate = paper_profile(&g).overall_rate(&g);
+            let rel = (rate - claim).abs() / claim;
+            assert!(rel < 0.10, "{model}: rate {rate:.1} vs paper {claim} ({rel:.3})");
+        }
+    }
+
+    #[test]
+    fn profile_only_touches_prunable() {
+        let g = models::build("mobilenet_v1", 1).unwrap();
+        let p = paper_profile(&g);
+        for name in p.layers.keys() {
+            let n = g.nodes.iter().find(|n| &n.name == name).unwrap();
+            assert!(n.op.prunable(), "{name} not prunable");
+        }
+    }
+
+    #[test]
+    fn import_from_report_json() {
+        let src = r#"{"measured": {"lenet5": {"per_layer": {
+            "c1": {"nnz": 50, "total": 150},
+            "f1": {"nnz": 480, "total": 48000}
+        }}}}"#;
+        let j = Json::parse(src).unwrap();
+        let p = SparsityProfile::from_report(&j, "lenet5").unwrap();
+        assert!((p.get("c1") - 2.0 / 3.0).abs() < 1e-9);
+        assert!((p.get("f1") - 0.99).abs() < 1e-9);
+        assert_eq!(p.get("missing"), 0.0);
+    }
+}

@@ -1,0 +1,116 @@
+//! k-bit codebook quantization (deployment side of the paper's unified
+//! ADMM prune+quantize). Values are symmetric uniform levels
+//! (-(2^(b-1)-1) .. 2^(b-1)-1) * step; zero is preserved so the pruning
+//! support survives — matching python/compile/admm.py's projection.
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantizedTensor {
+    pub bits: u8,
+    pub step: f32,
+    /// Signed level per element (fits in i8 for bits <= 8).
+    pub levels: Vec<i8>,
+    pub shape: Vec<usize>,
+}
+
+impl QuantizedTensor {
+    /// Quantize an f32 tensor to `bits` (2..=8).
+    pub fn quantize(data: &[f32], shape: &[usize], bits: u8) -> Self {
+        assert!((2..=8).contains(&bits));
+        assert_eq!(data.len(), shape.iter().product::<usize>());
+        let amax = data.iter().fold(0f32, |m, v| m.max(v.abs())).max(1e-8);
+        let n = (1i32 << (bits - 1)) - 1;
+        let step = amax / n as f32;
+        let levels = data
+            .iter()
+            .map(|&v| {
+                if v == 0.0 {
+                    0i8
+                } else {
+                    ((v / step).round() as i32).clamp(-n, n) as i8
+                }
+            })
+            .collect();
+        QuantizedTensor { bits, step, levels, shape: shape.to_vec() }
+    }
+
+    pub fn dequantize(&self) -> Vec<f32> {
+        self.levels.iter().map(|&l| l as f32 * self.step).collect()
+    }
+
+    pub fn numel(&self) -> usize {
+        self.levels.len()
+    }
+
+    /// Max absolute reconstruction error bound: step/2 (plus clamping,
+    /// which only affects |v| > amax — impossible by construction).
+    pub fn error_bound(&self) -> f32 {
+        self.step * 0.5
+    }
+
+    /// Packed storage bytes for the level array (no indices).
+    pub fn packed_bytes(&self) -> usize {
+        (self.numel() * self.bits as usize).div_ceil(8)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn roundtrip_error_bounded() {
+        let data: Vec<f32> = (-50..50).map(|i| i as f32 * 0.013).collect();
+        let q = QuantizedTensor::quantize(&data, &[100], 4);
+        let back = q.dequantize();
+        for (a, b) in data.iter().zip(&back) {
+            assert!((a - b).abs() <= q.error_bound() + 1e-6, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn zero_preserved() {
+        let data = vec![0.0, 0.7, 0.0, -0.2];
+        let q = QuantizedTensor::quantize(&data, &[4], 4);
+        assert_eq!(q.levels[0], 0);
+        assert_eq!(q.levels[2], 0);
+    }
+
+    #[test]
+    fn packed_bytes_4bit() {
+        let q = QuantizedTensor::quantize(&vec![1.0; 100], &[100], 4);
+        assert_eq!(q.packed_bytes(), 50);
+    }
+
+    #[test]
+    fn level_range_respected() {
+        let data = vec![1.0, -1.0, 0.5];
+        for bits in 2..=8u8 {
+            let q = QuantizedTensor::quantize(&data, &[3], bits);
+            let n = (1i32 << (bits - 1)) - 1;
+            assert!(q.levels.iter().all(|&l| (l as i32).abs() <= n));
+        }
+    }
+
+    #[test]
+    fn prop_quantize_error_bound_random() {
+        prop::check("quant error bound", |rng: &mut Rng| {
+            let n = rng.range(1, 200);
+            let bits = rng.range(2, 8) as u8;
+            let data: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            let q = QuantizedTensor::quantize(&data, &[n], bits);
+            let back = q.dequantize();
+            for (a, b) in data.iter().zip(&back) {
+                prop_assert!(
+                    (a - b).abs() <= q.error_bound() + 1e-5,
+                    "err {} > bound {}",
+                    (a - b).abs(),
+                    q.error_bound()
+                );
+            }
+            Ok(())
+        });
+    }
+}

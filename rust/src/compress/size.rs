@@ -1,0 +1,97 @@
+//! Storage accounting: regenerates Table 2's Size(M) column and the §3
+//! compression / storage-reduction claims from the IR graphs + profiles.
+
+use super::profile::SparsityProfile;
+use crate::ir::Graph;
+
+#[derive(Debug, Clone)]
+pub struct SizeReport {
+    pub model: String,
+    pub params: usize,
+    pub weights: usize,
+    pub dense_mb: f64,
+    pub nnz: usize,
+    pub compression_rate: f64,
+    /// CSR-ish on-disk bytes: values f32 + 16-bit indices.
+    pub sparse_bytes_idx16: usize,
+    /// 4-bit quantized values, no indices (the paper's 3,438x convention).
+    pub quant4_bytes_no_idx: usize,
+    /// 4-bit quantized + 16-bit indices.
+    pub quant4_bytes_idx16: usize,
+}
+
+impl SizeReport {
+    pub fn storage_reduction_no_idx(&self) -> f64 {
+        (self.weights * 4) as f64 / self.quant4_bytes_no_idx.max(1) as f64
+    }
+    pub fn storage_reduction_idx16(&self) -> f64 {
+        (self.weights * 4) as f64 / self.quant4_bytes_idx16.max(1) as f64
+    }
+}
+
+/// Account a graph under a sparsity profile (+4-bit quantization).
+pub fn report(graph: &Graph, profile: &SparsityProfile) -> SizeReport {
+    let weights = graph.weight_count();
+    let nnz = profile.nnz(graph);
+    SizeReport {
+        model: graph.name.clone(),
+        params: graph.param_count(),
+        weights,
+        dense_mb: graph.size_mb(),
+        nnz,
+        compression_rate: weights as f64 / nnz.max(1) as f64,
+        sparse_bytes_idx16: nnz * 4 + nnz * 2,
+        quant4_bytes_no_idx: (nnz * 4).div_ceil(8),
+        quant4_bytes_idx16: (nnz * 4).div_ceil(8) + nnz * 2,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::profile::paper_profile;
+    use crate::models;
+
+    #[test]
+    fn lenet5_storage_reduction_two_orders() {
+        // §3: "reduction of up to 3,438x in weight storage (LeNet-5, not
+        // accounting for indices)" — dense f32 vs 4-bit on the surviving
+        // weights. With our 348x profile: 348 * 8 = 2,784x; the paper's
+        // 3,438x uses its slightly higher rate + 3-bit fc. Same order.
+        let g = models::build("lenet5", 1).unwrap();
+        let r = report(&g, &paper_profile(&g));
+        let red = r.storage_reduction_no_idx();
+        assert!(red > 2000.0, "storage reduction {red}");
+        assert!(red < 5000.0);
+    }
+
+    #[test]
+    fn table2_sizes() {
+        for (model, mb) in [
+            ("mobilenet_v1", 17.1),
+            ("mobilenet_v2", 14.1),
+            ("inception_v3", 95.4),
+            ("resnet50", 102.4),
+        ] {
+            let g = models::build(model, 1).unwrap();
+            let r = report(&g, &SparsityProfile::default());
+            assert!((r.dense_mb - mb).abs() / mb < 0.02, "{model}: {}", r.dense_mb);
+        }
+    }
+
+    #[test]
+    fn sparse_smaller_than_dense_above_breakeven() {
+        // CSR(f32+idx16) pays 1.5x per nnz: wins iff sparsity > 1/3.
+        let g = models::build("alexnet", 1).unwrap();
+        let r = report(&g, &paper_profile(&g));
+        assert!(r.sparse_bytes_idx16 < r.weights * 4);
+    }
+
+    #[test]
+    fn rate_consistency() {
+        let g = models::build("vgg16", 1).unwrap();
+        let p = paper_profile(&g);
+        let r = report(&g, &p);
+        assert!((r.compression_rate - p.overall_rate(&g)).abs() < 0.5);
+    }
+}

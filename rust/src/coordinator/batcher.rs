@@ -1,0 +1,103 @@
+//! Batch-size selection among the compiled (shape-static) batch variants.
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BatchPolicy {
+    /// Smallest compiled batch >= pending (pads the remainder). Wastes
+    /// some compute, minimizes queue latency.
+    PadToFit,
+    /// Largest compiled batch <= pending (runs multiple rounds). No
+    /// padding waste, but the tail waits.
+    Greedy,
+}
+
+/// Choose the compiled batch for `pending` requests from `available`
+/// (ascending batch sizes, non-empty).
+pub fn pick_batch(pending: usize, available: &[usize], policy: BatchPolicy) -> usize {
+    debug_assert!(!available.is_empty());
+    debug_assert!(available.windows(2).all(|w| w[0] < w[1]), "must be ascending");
+    let pending = pending.max(1);
+    match policy {
+        BatchPolicy::PadToFit => available
+            .iter()
+            .copied()
+            .find(|&b| b >= pending)
+            .unwrap_or(*available.last().unwrap()),
+        BatchPolicy::Greedy => available
+            .iter()
+            .copied()
+            .rev()
+            .find(|&b| b <= pending)
+            .unwrap_or(available[0]),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    const AVAIL: [usize; 3] = [1, 4, 8];
+
+    #[test]
+    fn pad_to_fit_picks_smallest_covering() {
+        assert_eq!(pick_batch(1, &AVAIL, BatchPolicy::PadToFit), 1);
+        assert_eq!(pick_batch(2, &AVAIL, BatchPolicy::PadToFit), 4);
+        assert_eq!(pick_batch(4, &AVAIL, BatchPolicy::PadToFit), 4);
+        assert_eq!(pick_batch(5, &AVAIL, BatchPolicy::PadToFit), 8);
+        assert_eq!(pick_batch(50, &AVAIL, BatchPolicy::PadToFit), 8);
+    }
+
+    #[test]
+    fn greedy_picks_largest_fitting() {
+        assert_eq!(pick_batch(1, &AVAIL, BatchPolicy::Greedy), 1);
+        assert_eq!(pick_batch(3, &AVAIL, BatchPolicy::Greedy), 1);
+        assert_eq!(pick_batch(4, &AVAIL, BatchPolicy::Greedy), 4);
+        assert_eq!(pick_batch(7, &AVAIL, BatchPolicy::Greedy), 4);
+        assert_eq!(pick_batch(9, &AVAIL, BatchPolicy::Greedy), 8);
+    }
+
+    #[test]
+    fn zero_pending_treated_as_one() {
+        assert_eq!(pick_batch(0, &AVAIL, BatchPolicy::PadToFit), 1);
+        assert_eq!(pick_batch(0, &AVAIL, BatchPolicy::Greedy), 1);
+    }
+
+    #[test]
+    fn prop_pick_batch_invariants() {
+        prop::check("pick_batch invariants", |rng: &mut Rng| {
+            // random ascending available set
+            let mut avail = vec![1usize];
+            let mut v = 1;
+            for _ in 0..rng.range(0, 4) {
+                v *= rng.range(2, 4);
+                avail.push(v);
+            }
+            let pending = rng.range(0, 40);
+            for policy in [BatchPolicy::PadToFit, BatchPolicy::Greedy] {
+                let b = pick_batch(pending, &avail, policy);
+                prop_assert!(avail.contains(&b), "picked {} not available", b);
+                // progress guarantee: the flush loop always drains >= 1
+                prop_assert!(b >= 1, "no progress");
+                if policy == BatchPolicy::PadToFit && pending.max(1) <= *avail.last().unwrap() {
+                    prop_assert!(
+                        b >= pending.max(1),
+                        "pad-to-fit must cover pending: {} < {}",
+                        b,
+                        pending
+                    );
+                }
+                if policy == BatchPolicy::Greedy && pending >= 1 {
+                    prop_assert!(
+                        b <= pending.max(1) || b == avail[0],
+                        "greedy overshoot: {} > {}",
+                        b,
+                        pending
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+}

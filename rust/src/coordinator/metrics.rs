@@ -1,0 +1,123 @@
+//! Serving metrics: per-request latency percentiles, batch utilization,
+//! throughput.
+
+use crate::util::stats::{Recorder, Summary};
+use std::time::Instant;
+
+#[derive(Debug)]
+pub struct Metrics {
+    started: Instant,
+    latency: Recorder,
+    /// exec time per batch run
+    exec: Recorder,
+    pub requests: u64,
+    pub batches: u64,
+    /// sum over runs of (used slots) and (total slots) — padding waste.
+    pub used_slots: u64,
+    pub total_slots: u64,
+}
+
+impl Metrics {
+    #[allow(clippy::new_without_default)]
+    pub fn new() -> Metrics {
+        Metrics {
+            started: Instant::now(),
+            latency: Recorder::new(),
+            exec: Recorder::new(),
+            requests: 0,
+            batches: 0,
+            used_slots: 0,
+            total_slots: 0,
+        }
+    }
+
+    pub fn record_request(&mut self, latency_us: f64) {
+        self.latency.record(latency_us);
+        self.requests += 1;
+    }
+
+    pub fn record_batch(&mut self, batch: usize, used: usize, exec_us: f64) {
+        self.batches += 1;
+        self.used_slots += used as u64;
+        self.total_slots += batch as u64;
+        self.exec.record(exec_us);
+    }
+
+    pub fn latency_summary(&self) -> Option<Summary> {
+        self.latency.summary()
+    }
+
+    pub fn exec_summary(&self) -> Option<Summary> {
+        self.exec.summary()
+    }
+
+    /// Requests per second since start.
+    pub fn throughput_rps(&self) -> f64 {
+        self.requests as f64 / self.started.elapsed().as_secs_f64().max(1e-9)
+    }
+
+    /// Fraction of executed batch slots carrying real requests.
+    pub fn batch_utilization(&self) -> f64 {
+        if self.total_slots == 0 {
+            return 1.0;
+        }
+        self.used_slots as f64 / self.total_slots as f64
+    }
+
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "requests={} batches={} throughput={:.1} req/s batch_util={:.0}%\n",
+            self.requests,
+            self.batches,
+            self.throughput_rps(),
+            self.batch_utilization() * 100.0
+        ));
+        if let Some(s) = self.latency_summary() {
+            out.push_str(&format!(
+                "latency  p50={:.1}ms p95={:.1}ms p99={:.1}ms max={:.1}ms\n",
+                s.p50 / 1e3,
+                s.p95 / 1e3,
+                s.p99 / 1e3,
+                s.max / 1e3
+            ));
+        }
+        if let Some(s) = self.exec_summary() {
+            out.push_str(&format!(
+                "exec     p50={:.1}ms mean={:.1}ms\n",
+                s.p50 / 1e3,
+                s.mean / 1e3
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_reports() {
+        let mut m = Metrics::new();
+        m.record_request(1000.0);
+        m.record_request(3000.0);
+        m.record_batch(4, 2, 500.0);
+        assert_eq!(m.requests, 2);
+        assert_eq!(m.batches, 1);
+        assert_eq!(m.batch_utilization(), 0.5);
+        let s = m.latency_summary().unwrap();
+        assert_eq!(s.count, 2);
+        let rpt = m.report();
+        assert!(rpt.contains("requests=2"));
+        assert!(rpt.contains("latency"));
+    }
+
+    #[test]
+    fn empty_metrics_safe() {
+        let m = Metrics::new();
+        assert!(m.latency_summary().is_none());
+        assert_eq!(m.batch_utilization(), 1.0);
+        assert!(m.report().contains("requests=0"));
+    }
+}

@@ -1,0 +1,290 @@
+//! Serving coordinator: request queue -> dynamic batcher -> PJRT worker.
+//!
+//! The L3 contribution rendered for serving: clients submit single-image
+//! requests; the batcher coalesces them (bounded by `max_batch` and
+//! `max_wait_us`) and picks among the AOT batch variants (PJRT programs
+//! are shape-static, so "dynamic batching" = choosing the best-fitting
+//! compiled batch and padding the remainder). Latency percentiles and
+//! throughput are recorded per request.
+
+pub mod batcher;
+pub mod metrics;
+
+pub use batcher::{pick_batch, BatchPolicy};
+pub use metrics::Metrics;
+
+use crate::runtime::Runtime;
+use anyhow::{anyhow, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    pub artifacts_dir: String,
+    pub model: String,
+    pub variant: String,
+    pub max_batch: usize,
+    pub max_wait_us: u64,
+    pub policy: BatchPolicy,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            artifacts_dir: "artifacts".into(),
+            model: "lenet5".into(),
+            variant: "dense".into(),
+            max_batch: 8,
+            max_wait_us: 2_000,
+            policy: BatchPolicy::PadToFit,
+        }
+    }
+}
+
+/// One inference request (flat NHWC image) with its reply channel.
+struct Request {
+    id: u64,
+    input: Vec<f32>,
+    enqueued: Instant,
+    reply: Sender<Response>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub logits: Vec<f32>,
+    /// end-to-end latency (enqueue -> reply), microseconds
+    pub latency_us: f64,
+    /// batch this request rode in
+    pub batch: usize,
+}
+
+enum Msg {
+    Req(Request),
+    Shutdown,
+}
+
+/// Client handle: submit images, await responses.
+pub struct Coordinator {
+    tx: Sender<Msg>,
+    next_id: AtomicU64,
+    pub metrics: Arc<Mutex<Metrics>>,
+    worker: Option<std::thread::JoinHandle<Result<()>>>,
+    pub input_len: usize,
+    pub classes: usize,
+}
+
+impl Coordinator {
+    /// Start the worker thread: it opens the runtime, compiles the model
+    /// variants, then serves until shutdown.
+    pub fn start(cfg: CoordinatorConfig) -> Result<Coordinator> {
+        let (tx, rx) = channel::<Msg>();
+        let metrics = Arc::new(Mutex::new(Metrics::new()));
+        let m2 = metrics.clone();
+        // probe the manifest up front for input geometry (fail fast)
+        let text = std::fs::read_to_string(format!("{}/manifest.json", cfg.artifacts_dir))?;
+        let manifest = crate::runtime::Manifest::parse(&text)?;
+        let entry = manifest
+            .models
+            .iter()
+            .find(|e| e.name == cfg.model && e.variant == cfg.variant && e.batch == 1)
+            .ok_or_else(|| anyhow!("no batch-1 artifact for {}/{}", cfg.model, cfg.variant))?
+            .clone();
+        let input_len: usize = entry.input_shape.iter().product();
+        let classes = entry.classes;
+
+        let cfg2 = cfg.clone();
+        // readiness handshake: the worker compiles the PJRT executables
+        // before serving; block here so client latency measurements see
+        // steady-state, and so load errors surface at start().
+        let (ready_tx, ready_rx) = channel::<Result<(), String>>();
+        let worker = std::thread::Builder::new()
+            .name("cadnn-coordinator".into())
+            .spawn(move || worker_loop(cfg2, rx, m2, ready_tx))?;
+        match ready_rx.recv() {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => return Err(anyhow!("coordinator worker failed to start: {e}")),
+            Err(_) => return Err(anyhow!("coordinator worker died during startup")),
+        }
+        Ok(Coordinator {
+            tx,
+            next_id: AtomicU64::new(1),
+            metrics,
+            worker: Some(worker),
+            input_len,
+            classes,
+        })
+    }
+
+    /// Submit one image; returns a receiver for the response.
+    pub fn submit(&self, input: Vec<f32>) -> Result<Receiver<Response>> {
+        if input.len() != self.input_len {
+            return Err(anyhow!(
+                "input length {} != expected {}",
+                input.len(),
+                self.input_len
+            ));
+        }
+        let (rtx, rrx) = channel();
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.tx
+            .send(Msg::Req(Request { id, input, enqueued: Instant::now(), reply: rtx }))
+            .map_err(|_| anyhow!("coordinator stopped"))?;
+        Ok(rrx)
+    }
+
+    /// Submit and wait (convenience).
+    pub fn infer(&self, input: Vec<f32>) -> Result<Response> {
+        let rx = self.submit(input)?;
+        rx.recv().map_err(|_| anyhow!("worker dropped request"))
+    }
+
+    pub fn shutdown(mut self) -> Result<()> {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(w) = self.worker.take() {
+            w.join().map_err(|_| anyhow!("worker panicked"))??;
+        }
+        Ok(())
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(
+    cfg: CoordinatorConfig,
+    rx: Receiver<Msg>,
+    metrics: Arc<Mutex<Metrics>>,
+    ready: Sender<Result<(), String>>,
+) -> Result<()> {
+    // PJRT objects are created inside the worker thread (no Send bound).
+    let init = (|| -> Result<Runtime> {
+        let mut rt = Runtime::open(&cfg.artifacts_dir)?;
+        rt.load(&cfg.model, &cfg.variant)?;
+        Ok(rt)
+    })();
+    let rt = match init {
+        Ok(rt) => {
+            let _ = ready.send(Ok(()));
+            rt
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e.to_string()));
+            return Err(e);
+        }
+    };
+    let batches = rt.batches(&cfg.model, &cfg.variant);
+    if batches.is_empty() {
+        return Err(anyhow!("no batch variants loaded"));
+    }
+    let per_image = rt
+        .get(&cfg.model, &cfg.variant, batches[0])
+        .map(|m| m.entry.input_shape.iter().skip(1).product::<usize>())
+        .unwrap();
+    let classes = rt
+        .get(&cfg.model, &cfg.variant, batches[0])
+        .map(|m| m.entry.classes)
+        .unwrap();
+
+    let mut queue: Vec<Request> = Vec::new();
+    loop {
+        // fill the queue: block for the first request, then drain for up
+        // to max_wait_us or until max_batch requests are pending.
+        if queue.is_empty() {
+            match rx.recv() {
+                Ok(Msg::Req(r)) => queue.push(r),
+                Ok(Msg::Shutdown) | Err(_) => return Ok(()),
+            }
+        }
+        // drain whatever is already queued (a burst that arrived while
+        // the previous batch executed) without waiting
+        while queue.len() < cfg.max_batch {
+            match rx.try_recv() {
+                Ok(Msg::Req(r)) => queue.push(r),
+                Ok(Msg::Shutdown) => {
+                    flush(&rt, &cfg, &mut queue, &batches, per_image, classes, &metrics);
+                    return Ok(());
+                }
+                Err(_) => break,
+            }
+        }
+        let deadline = queue[0].enqueued + Duration::from_micros(cfg.max_wait_us);
+        while queue.len() < cfg.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(Msg::Req(r)) => queue.push(r),
+                Ok(Msg::Shutdown) => {
+                    flush(&rt, &cfg, &mut queue, &batches, per_image, classes, &metrics);
+                    return Ok(());
+                }
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => break,
+                Err(_) => {
+                    flush(&rt, &cfg, &mut queue, &batches, per_image, classes, &metrics);
+                    return Ok(());
+                }
+            }
+        }
+        flush(&rt, &cfg, &mut queue, &batches, per_image, classes, &metrics);
+    }
+}
+
+/// Execute and reply to as many queued requests as one batch allows.
+fn flush(
+    rt: &Runtime,
+    cfg: &CoordinatorConfig,
+    queue: &mut Vec<Request>,
+    batches: &[usize],
+    per_image: usize,
+    classes: usize,
+    metrics: &Arc<Mutex<Metrics>>,
+) {
+    while !queue.is_empty() {
+        let b = pick_batch(queue.len().min(cfg.max_batch), batches, cfg.policy);
+        let take = b.min(queue.len());
+        let mut input = vec![0.0f32; b * per_image];
+        for (i, r) in queue.iter().take(take).enumerate() {
+            input[i * per_image..(i + 1) * per_image].copy_from_slice(&r.input);
+        }
+        let model = rt
+            .get(&cfg.model, &cfg.variant, b)
+            .expect("picked batch must be loaded");
+        let t0 = Instant::now();
+        let out = match model.run(&input) {
+            Ok(o) => o,
+            Err(e) => {
+                crate::util::log::log(
+                    crate::util::log::Level::Error,
+                    "coordinator",
+                    format_args!("execute failed: {e}"),
+                );
+                // drop the affected requests (reply channels close)
+                queue.drain(..take);
+                continue;
+            }
+        };
+        let exec_us = t0.elapsed().as_secs_f64() * 1e6;
+        let mut m = metrics.lock().unwrap();
+        m.record_batch(b, take, exec_us);
+        for (i, r) in queue.drain(..take).enumerate() {
+            let latency_us = r.enqueued.elapsed().as_secs_f64() * 1e6;
+            m.record_request(latency_us);
+            let _ = r.reply.send(Response {
+                id: r.id,
+                logits: out[i * classes..(i + 1) * classes].to_vec(),
+                latency_us,
+                batch: b,
+            });
+        }
+    }
+}

@@ -1,0 +1,206 @@
+//! Host calibration: measure the real Rust kernels to obtain per-class
+//! efficiency ratios (achieved / peak) that the device projection reuses.
+//!
+//! `nominal()` provides deterministic defaults (used by unit tests and
+//! when a bench wants reproducible numbers); `measure_host()` runs the
+//! actual microbenchmarks and returns a table with measured ratios plus
+//! the host peak. EXPERIMENTS.md records both.
+
+use crate::kernels::gemm::{gemm_blocked, gemm_naive, gemm_parallel};
+use crate::kernels::sparse::csr_gemm;
+use crate::kernels::Epilogue;
+use crate::compress::csr::CsrMatrix;
+use crate::passes::layout::TileConfig;
+use crate::util::rng::Rng;
+use crate::util::stats;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum KernelClass {
+    /// Naive 7-loop convolution (TFLite-like engine).
+    DirectConv,
+    /// im2col + blocked GEMM convolution.
+    GemmConv,
+    /// Plain blocked GEMM (1x1 conv / FC).
+    Gemm,
+    /// CSR sparse GEMM (compressed layers).
+    CsrGemm,
+    Depthwise,
+    Pool,
+    Elementwise,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Efficiency {
+    /// Fraction of device peak FLOPS this kernel class achieves.
+    pub compute: f64,
+    /// Fraction of device peak bandwidth for its memory streams.
+    pub memory: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct CalibrationTable {
+    pub host_peak_gflops: f64,
+    pub host_bw_gbps: f64,
+    pub direct_conv: Efficiency,
+    pub gemm_conv: Efficiency,
+    pub gemm: Efficiency,
+    pub csr_gemm: Efficiency,
+    pub depthwise: Efficiency,
+    pub pool: Efficiency,
+    pub elementwise: Efficiency,
+    /// True when ratios came from live measurement.
+    pub measured: bool,
+}
+
+impl CalibrationTable {
+    /// Deterministic defaults, shaped like typical measured ratios:
+    /// blocked GEMM reaches ~half of a hand-measured peak, the naive
+    /// direct loop ~an eighth of that, CSR about a third of dense GEMM
+    /// per non-zero. Tests and reproducible benches use this.
+    pub fn nominal() -> Self {
+        CalibrationTable {
+            host_peak_gflops: 0.0,
+            host_bw_gbps: 0.0,
+            // real TFLite ships optimized (if unfused, untransformed)
+            // kernels — ~1/3 of a tuned GEMM, not our naive loop's 0.06.
+            direct_conv: Efficiency { compute: 0.18, memory: 0.5 },
+            gemm_conv: Efficiency { compute: 0.45, memory: 0.7 },
+            gemm: Efficiency { compute: 0.50, memory: 0.7 },
+            csr_gemm: Efficiency { compute: 0.18, memory: 0.65 },
+            depthwise: Efficiency { compute: 0.12, memory: 0.6 },
+            pool: Efficiency { compute: 0.05, memory: 0.6 },
+            elementwise: Efficiency { compute: 0.04, memory: 0.8 },
+            measured: false,
+        }
+    }
+
+    pub fn efficiency(&self, class: KernelClass, sparsity: f64) -> Efficiency {
+        let mut e = match class {
+            KernelClass::DirectConv => self.direct_conv,
+            KernelClass::GemmConv => self.gemm_conv,
+            KernelClass::Gemm => self.gemm,
+            KernelClass::CsrGemm => self.csr_gemm,
+            KernelClass::Depthwise => self.depthwise,
+            KernelClass::Pool => self.pool,
+            KernelClass::Elementwise => self.elementwise,
+        };
+        // very high sparsity degrades per-nnz efficiency (irregular
+        // gathers dominate) — measured shape on the host csr kernel.
+        if class == KernelClass::CsrGemm && sparsity > 0.95 {
+            e.compute *= 0.6;
+        }
+        e
+    }
+
+    /// Apply a tuned-tile uplift (CADNN vs TVM-like default tiles): the
+    /// measured ratio between tuned and DEFAULT blocked GEMM on the host.
+    pub fn with_tuning_uplift(mut self, uplift: f64) -> Self {
+        self.gemm_conv.compute *= uplift;
+        self.gemm.compute *= uplift;
+        self.csr_gemm.compute *= uplift; // CADNN tunes sparse kernels too
+        self
+    }
+}
+
+fn gflops_of(flops: u64, us: f64) -> f64 {
+    flops as f64 / us / 1e3
+}
+
+/// Measure host kernels and build a live table.
+pub fn measure_host() -> CalibrationTable {
+    let mut rng = Rng::new(42);
+    // representative conv-as-GEMM shape (ResNet-50 3x3 stage-2-ish)
+    let (m, k, n) = (784usize, 576usize, 128usize);
+    let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+    let b: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+    let mut c = vec![0.0f32; m * n];
+    let flops = 2 * (m * k * n) as u64;
+
+    // peak proxy: parallel blocked GEMM on a big square
+    let samples = stats::measure_adaptive_us(200_000.0, 12, || {
+        gemm_parallel(&a, &b, &mut c, m, k, n, &TileConfig::DEFAULT, &Epilogue::None);
+    });
+    let peak = gflops_of(flops, stats::Summary::from(&samples).unwrap().p50);
+
+    // naive single-thread (direct-conv proxy: same loop structure)
+    let (ms, ks, ns) = (196usize, 576usize, 64usize);
+    let a2 = &a[..ms * ks];
+    let b2 = &b[..ks * ns];
+    let mut c2 = vec![0.0f32; ms * ns];
+    let fl2 = 2 * (ms * ks * ns) as u64;
+    let naive_s = stats::measure_adaptive_us(100_000.0, 8, || {
+        gemm_naive(a2, b2, &mut c2, ms, ks, ns);
+    });
+    let naive = gflops_of(fl2, stats::Summary::from(&naive_s).unwrap().p50);
+
+    // blocked single-thread
+    let blocked_s = stats::measure_adaptive_us(100_000.0, 8, || {
+        gemm_blocked(a2, b2, &mut c2, ms, ks, ns, &TileConfig::DEFAULT, &Epilogue::None);
+    });
+    let blocked = gflops_of(fl2, stats::Summary::from(&blocked_s).unwrap().p50);
+
+    // csr at 90% sparsity: per-nnz achieved
+    let mut dense = vec![0.0f32; ks * ns];
+    for v in dense.iter_mut() {
+        if rng.f64() < 0.1 {
+            *v = rng.normal() as f32;
+        }
+    }
+    let csr = CsrMatrix::from_dense(&dense, ks, ns);
+    let nnz_flops = 2 * (ms * csr.nnz()) as u64;
+    let csr_s = stats::measure_adaptive_us(100_000.0, 8, || {
+        csr_gemm(a2, &csr, &mut c2, ms, &Epilogue::None);
+    });
+    let csr_g = gflops_of(nnz_flops, stats::Summary::from(&csr_s).unwrap().p50);
+
+    // bandwidth proxy: big memcpy-like sweep
+    let big = vec![1.0f32; 8 << 20];
+    let mut dst = vec![0.0f32; 8 << 20];
+    let bw_s = stats::measure_adaptive_us(100_000.0, 8, || {
+        dst.copy_from_slice(&big);
+    });
+    let bw = (big.len() * 8) as f64 / stats::Summary::from(&bw_s).unwrap().p50 / 1e3;
+
+    let nominal = CalibrationTable::nominal();
+    CalibrationTable {
+        host_peak_gflops: peak,
+        host_bw_gbps: bw,
+        // measured naive/peak is the floor; real TFLite kernels sit ~3x
+        // above a textbook loop (documented in EXPERIMENTS.md §Figure2).
+        direct_conv: Efficiency { compute: (naive / peak * 3.0).min(0.3), memory: 0.5 },
+        gemm_conv: Efficiency { compute: (blocked / peak).min(1.0), memory: 0.7 },
+        gemm: Efficiency { compute: (blocked / peak).min(1.0), memory: 0.7 },
+        csr_gemm: Efficiency { compute: (csr_g / peak).min(1.0), memory: 0.65 },
+        depthwise: nominal.depthwise,
+        pool: nominal.pool,
+        elementwise: nominal.elementwise,
+        measured: true,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nominal_ordering_sane() {
+        let t = CalibrationTable::nominal();
+        assert!(t.gemm.compute > t.direct_conv.compute * 2.0);
+        assert!(t.gemm.compute > t.csr_gemm.compute);
+        assert!(!t.measured);
+    }
+
+    #[test]
+    fn high_sparsity_penalty() {
+        let t = CalibrationTable::nominal();
+        let lo = t.efficiency(KernelClass::CsrGemm, 0.5);
+        let hi = t.efficiency(KernelClass::CsrGemm, 0.99);
+        assert!(hi.compute < lo.compute);
+    }
+
+    #[test]
+    fn tuning_uplift_applies() {
+        let t = CalibrationTable::nominal().with_tuning_uplift(1.3);
+        assert!((t.gemm.compute - 0.65).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,80 @@
+//! Device descriptors (Table 1 substitution — DESIGN.md §2).
+//!
+//! Published peaks for the Xiaomi 6's SoC; the host descriptor is
+//! measured at calibration time.
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceSpec {
+    pub name: String,
+    /// Peak f32 throughput in GFLOPS (all cores / ALUs).
+    pub peak_gflops: f64,
+    /// Peak memory bandwidth, GB/s.
+    pub mem_bw_gbps: f64,
+    /// Per-kernel dispatch overhead in microseconds (GPU >> CPU).
+    pub dispatch_overhead_us: f64,
+    /// Last-level cache available to a core cluster, bytes (tuner budget).
+    pub cache_bytes: usize,
+    /// SIMD lanes (f32) — layout alignment target.
+    pub simd_lanes: usize,
+}
+
+/// Snapdragon 835 CPU cluster: 4x Kryo 280 "big" @ 2.45 GHz, 2x 128-bit
+/// NEON FMA pipes per core: 4 * 2.45e9 * 8 = 78.4 GFLOPS nominal peak;
+/// LPDDR4X-1866 dual channel ~= 29.8 GB/s.
+pub fn snapdragon835_cpu() -> DeviceSpec {
+    DeviceSpec {
+        name: "Snapdragon 835 CPU (4x Kryo280 2.45GHz)".into(),
+        peak_gflops: 78.4,
+        mem_bw_gbps: 29.8,
+        dispatch_overhead_us: 2.0,
+        cache_bytes: 2 * 1024 * 1024, // 2MB L2 on the big cluster
+        simd_lanes: 4,                // 128-bit NEON f32
+    }
+}
+
+/// Adreno 540 @ 710 MHz: 256 ALUs * 2 (FMA) * 0.71 GHz ~= 363 GFLOPS
+/// nominal f32 peak; same shared LPDDR4X bandwidth; large kernel-launch
+/// overhead typical of mobile GPU queues.
+pub fn adreno540_gpu() -> DeviceSpec {
+    DeviceSpec {
+        name: "Adreno 540 GPU (710MHz)".into(),
+        peak_gflops: 363.0,
+        mem_bw_gbps: 29.8,
+        dispatch_overhead_us: 25.0,
+        cache_bytes: 1024 * 1024,
+        simd_lanes: 32, // wave width
+    }
+}
+
+/// Host CPU descriptor: peaks filled in by `calibrate::measure_host`.
+pub fn host_cpu(peak_gflops: f64, mem_bw_gbps: f64) -> DeviceSpec {
+    DeviceSpec {
+        name: "host CPU (measured)".into(),
+        peak_gflops,
+        mem_bw_gbps,
+        dispatch_overhead_us: 0.5,
+        cache_bytes: 32 * 1024 * 1024,
+        simd_lanes: 8,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn specs_sane() {
+        let cpu = snapdragon835_cpu();
+        let gpu = adreno540_gpu();
+        assert!(gpu.peak_gflops > cpu.peak_gflops);
+        assert_eq!(cpu.mem_bw_gbps, gpu.mem_bw_gbps); // shared LPDDR4X
+        assert!(gpu.dispatch_overhead_us > cpu.dispatch_overhead_us);
+    }
+
+    #[test]
+    fn host_spec_paramized() {
+        let h = host_cpu(100.0, 20.0);
+        assert_eq!(h.peak_gflops, 100.0);
+        assert_eq!(h.mem_bw_gbps, 20.0);
+    }
+}

@@ -1,0 +1,23 @@
+//! Graph executor with framework personalities.
+//!
+//! A `Personality` is a (passes, engine, tuning, sparsity) bundle — the
+//! executable definition of each Figure 2 series:
+//!
+//! | personality   | passes              | conv engine   | tiles   | weights |
+//! |---------------|---------------------|---------------|---------|---------|
+//! | `TfLiteLike`  | none                | direct loops  | —       | dense   |
+//! | `TvmLike`     | fusion + 1x1->GEMM  | im2col GEMM   | default | dense   |
+//! | `CadnnDense`  | fusion + 1x1->GEMM  | im2col GEMM   | tuned   | dense   |
+//! | `CadnnSparse` | fusion + 1x1->GEMM  | CSR GEMM      | tuned   | pruned  |
+//!
+//! Weights are generated deterministically from layer names, so every
+//! personality of the same model computes the *same function* (the
+//! correctness tests assert it); CadnnSparse computes the function of
+//! the pruned weights, asserted against a dense run on those pruned
+//! weights.
+
+pub mod instance;
+pub mod personality;
+
+pub use instance::ModelInstance;
+pub use personality::Personality;

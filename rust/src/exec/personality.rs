@@ -1,0 +1,94 @@
+//! Framework personalities (the Figure 2 series, minus the device axis).
+
+use crate::ir::Graph;
+use crate::passes::{conv1x1_gemm::Conv1x1ToGemm, fusion::FusionPass, run_pipeline, Pass};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Personality {
+    /// Dense, unfused, direct convolution — TensorFlow-Lite-like.
+    TfLiteLike,
+    /// Dense, fused, GEMM-transformed, default tiles — TVM-like.
+    TvmLike,
+    /// Dense + all CADNN architecture-aware optimizations (tuned tiles,
+    /// layout, load hoisting) — CADNN-D.
+    CadnnDense,
+    /// Compressed (per-layer sparsity profile) + all optimizations —
+    /// CADNN-S.
+    CadnnSparse,
+}
+
+impl Personality {
+    pub const ALL: [Personality; 4] = [
+        Personality::TfLiteLike,
+        Personality::TvmLike,
+        Personality::CadnnDense,
+        Personality::CadnnSparse,
+    ];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Personality::TfLiteLike => "TFLITE-like-D",
+            Personality::TvmLike => "TVM-like-D",
+            Personality::CadnnDense => "CADNN-D",
+            Personality::CadnnSparse => "CADNN-S",
+        }
+    }
+
+    /// Does this personality run the fusion + 1x1->GEMM pipeline?
+    pub fn transforms(&self) -> bool {
+        !matches!(self, Personality::TfLiteLike)
+    }
+
+    /// Direct-loop convolution engine (no im2col/GEMM)?
+    pub fn direct_conv(&self) -> bool {
+        matches!(self, Personality::TfLiteLike)
+    }
+
+    /// Per-layer tile tuning?
+    pub fn tuned(&self) -> bool {
+        matches!(self, Personality::CadnnDense | Personality::CadnnSparse)
+    }
+
+    /// Compressed weights?
+    pub fn sparse(&self) -> bool {
+        matches!(self, Personality::CadnnSparse)
+    }
+
+    /// Apply this personality's compiler passes to a pre-pass graph.
+    pub fn lower(&self, g: &Graph) -> Graph {
+        if self.transforms() {
+            let fusion = FusionPass;
+            let gemm = Conv1x1ToGemm;
+            run_pipeline(g, &[&fusion as &dyn Pass, &gemm as &dyn Pass])
+        } else {
+            g.clone()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models;
+
+    #[test]
+    fn labels_distinct() {
+        let labels: std::collections::BTreeSet<_> =
+            Personality::ALL.iter().map(|p| p.label()).collect();
+        assert_eq!(labels.len(), 4);
+    }
+
+    #[test]
+    fn tflite_does_not_transform() {
+        let g = models::build("mobilenet_v1", 1).unwrap();
+        let lowered = Personality::TfLiteLike.lower(&g);
+        assert_eq!(lowered.len(), g.len());
+    }
+
+    #[test]
+    fn cadnn_transforms_shrink_graph() {
+        let g = models::build("mobilenet_v1", 1).unwrap();
+        let lowered = Personality::CadnnDense.lower(&g);
+        assert!(lowered.len() < g.len() / 2);
+    }
+}

@@ -1,0 +1,17 @@
+//! DNN graph IR.
+//!
+//! The Rust side reasons about the *exact* paper architectures
+//! (ResNet-50, MobileNet-V1/V2, Inception-V3, plus the §3 pruning
+//! subjects) as dataflow graphs of typed layer ops. The compiler passes
+//! (`passes/`), the compression accounting (`compress/`), the cost model
+//! (`costmodel/`) and the native executor (`exec/`) all operate on this
+//! IR. Tensors are NHWC; conv weights are HWIO (matching the Python L2
+//! models and the Pallas kernels).
+
+pub mod graph;
+pub mod ops;
+pub mod shape;
+
+pub use graph::{Graph, Node, NodeId};
+pub use ops::{ActKind, Op, PoolKind};
+pub use shape::Shape;

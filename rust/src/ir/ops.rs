@@ -1,0 +1,268 @@
+//! Layer operators, their parameter counts and work (FLOP) accounting.
+//!
+//! Pre-pass graphs contain the "textbook" ops (Conv2d, BatchNorm, Act as
+//! separate nodes); the paper's fusion/transformation passes rewrite them
+//! into the fused forms (`FusedConvBnAct`, `Gemm`, ...) that carry a
+//! schedule and map 1:1 onto executable kernels.
+
+use super::shape::{conv_out, Shape};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ActKind {
+    Relu,
+    Relu6,
+    None,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PoolKind {
+    Max,
+    Avg,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Op {
+    /// Graph input placeholder.
+    Input { shape: Shape },
+    /// Standard convolution, NHWC x HWIO. `padding` is symmetric;
+    /// `groups` > 1 models grouped conv (AlexNet conv2/4/5).
+    Conv2d { kh: usize, kw: usize, cin: usize, cout: usize, stride: usize, padh: usize, padw: usize, bias: bool, groups: usize },
+    /// Depthwise convolution (channel multiplier 1).
+    DepthwiseConv2d { kh: usize, kw: usize, c: usize, stride: usize, padding: usize },
+    /// Inference BatchNorm (folds to per-channel affine).
+    BatchNorm { c: usize },
+    Activation { kind: ActKind },
+    Pool { kind: PoolKind, k: usize, stride: usize, padding: usize },
+    GlobalAvgPool,
+    FullyConnected { cin: usize, cout: usize, bias: bool },
+    /// Elementwise residual add (two inputs).
+    Add,
+    /// Channel concat (>= 2 inputs).
+    Concat,
+    Softmax,
+    Flatten,
+
+    // ----- post-pass fused / transformed ops -----
+    /// Conv + folded BN + activation in one kernel (paper §4 fusion).
+    FusedConvBnAct { kh: usize, kw: usize, cin: usize, cout: usize, stride: usize, padh: usize, padw: usize, act: ActKind, groups: usize },
+    /// Depthwise conv + folded BN + activation.
+    FusedDwBnAct { kh: usize, kw: usize, c: usize, stride: usize, padding: usize, act: ActKind },
+    /// 1x1 conv rewritten as (N*H*W, Cin) x (Cin, Cout) GEMM (paper §4
+    /// transformation); `act`/`bn` carried as a fused epilogue.
+    Gemm { m: usize, k: usize, n: usize, act: ActKind, fused_epilogue: bool, out_shape: Shape },
+}
+
+impl Op {
+    /// Dense conv, no bias, groups=1 (the BN-style model family).
+    pub fn conv(kh: usize, kw: usize, cin: usize, cout: usize, stride: usize, padding: usize) -> Op {
+        Op::Conv2d { kh, kw, cin, cout, stride, padh: padding, padw: padding, bias: false, groups: 1 }
+    }
+
+    /// Asymmetric-kernel conv (Inception 1x7/7x1), no bias, groups=1.
+    pub fn conv_asym(kh: usize, kw: usize, cin: usize, cout: usize, stride: usize, padh: usize, padw: usize) -> Op {
+        Op::Conv2d { kh, kw, cin, cout, stride, padh, padw, bias: false, groups: 1 }
+    }
+
+    /// Conv with bias (classic pre-BN nets: LeNet/AlexNet/VGG).
+    pub fn conv_b(kh: usize, kw: usize, cin: usize, cout: usize, stride: usize, padding: usize) -> Op {
+        Op::Conv2d { kh, kw, cin, cout, stride, padh: padding, padw: padding, bias: true, groups: 1 }
+    }
+
+    /// Grouped conv with bias (AlexNet conv2/4/5).
+    pub fn conv_bg(kh: usize, kw: usize, cin: usize, cout: usize, stride: usize, padding: usize, groups: usize) -> Op {
+        Op::Conv2d { kh, kw, cin, cout, stride, padh: padding, padw: padding, bias: true, groups }
+    }
+
+    pub fn fc(cin: usize, cout: usize) -> Op {
+        Op::FullyConnected { cin, cout, bias: true }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Op::Input { .. } => "input",
+            Op::Conv2d { .. } => "conv2d",
+            Op::DepthwiseConv2d { .. } => "dwconv2d",
+            Op::BatchNorm { .. } => "batchnorm",
+            Op::Activation { .. } => "activation",
+            Op::Pool { .. } => "pool",
+            Op::GlobalAvgPool => "global_avg_pool",
+            Op::FullyConnected { .. } => "fc",
+            Op::Add => "add",
+            Op::Concat => "concat",
+            Op::Softmax => "softmax",
+            Op::Flatten => "flatten",
+            Op::FusedConvBnAct { .. } => "fused_conv_bn_act",
+            Op::FusedDwBnAct { .. } => "fused_dw_bn_act",
+            Op::Gemm { .. } => "gemm",
+        }
+    }
+
+    /// Trainable weight count (what pruning operates on; biases/BN params
+    /// counted separately in `aux_params`).
+    pub fn weight_count(&self) -> usize {
+        match self {
+            Op::Conv2d { kh, kw, cin, cout, groups, .. } => kh * kw * (cin / groups) * cout,
+            Op::DepthwiseConv2d { kh, kw, c, .. } => kh * kw * c,
+            Op::FullyConnected { cin, cout, .. } => cin * cout,
+            Op::FusedConvBnAct { kh, kw, cin, cout, groups, .. } => kh * kw * (cin / groups) * cout,
+            Op::FusedDwBnAct { kh, kw, c, .. } => kh * kw * c,
+            Op::Gemm { k, n, .. } => k * n,
+            _ => 0,
+        }
+    }
+
+    /// Bias / BN parameter count.
+    pub fn aux_params(&self) -> usize {
+        match self {
+            Op::Conv2d { cout, bias, .. } => if *bias { *cout } else { 0 },
+            Op::FullyConnected { cout, bias, .. } => if *bias { *cout } else { 0 },
+            Op::BatchNorm { c } => 4 * c,
+            // fused ops carry the folded scale+shift
+            Op::FusedConvBnAct { cout, .. } => 2 * cout,
+            Op::FusedDwBnAct { c, .. } => 2 * c,
+            Op::Gemm { n, fused_epilogue, .. } => if *fused_epilogue { 2 * n } else { *n },
+            _ => 0,
+        }
+    }
+
+    /// Whether this op is a pruning target (has a weight matrix).
+    pub fn prunable(&self) -> bool {
+        self.weight_count() > 0 && !matches!(self, Op::DepthwiseConv2d { .. } | Op::FusedDwBnAct { .. })
+    }
+
+    /// Infer output shape from input shapes.
+    pub fn infer_shape(&self, inputs: &[&Shape]) -> Shape {
+        match self {
+            Op::Input { shape } => shape.clone(),
+            Op::Conv2d { kh, kw, cout, stride, padh, padw, cin, .. }
+            | Op::FusedConvBnAct { kh, kw, cout, stride, padh, padw, cin, .. } => {
+                let s = inputs[0];
+                debug_assert_eq!(s.c(), *cin, "conv cin mismatch");
+                Shape::nhwc(
+                    s.n(),
+                    conv_out(s.h(), *kh, *stride, *padh),
+                    conv_out(s.w(), *kw, *stride, *padw),
+                    *cout,
+                )
+            }
+            Op::DepthwiseConv2d { kh, kw, c, stride, padding }
+            | Op::FusedDwBnAct { kh, kw, c, stride, padding, .. } => {
+                let s = inputs[0];
+                debug_assert_eq!(s.c(), *c, "dwconv channel mismatch");
+                Shape::nhwc(
+                    s.n(),
+                    conv_out(s.h(), *kh, *stride, *padding),
+                    conv_out(s.w(), *kw, *stride, *padding),
+                    *c,
+                )
+            }
+            Op::BatchNorm { .. } | Op::Activation { .. } | Op::Add | Op::Softmax => {
+                inputs[0].clone()
+            }
+            Op::Pool { k, stride, padding, .. } => {
+                let s = inputs[0];
+                Shape::nhwc(
+                    s.n(),
+                    conv_out(s.h(), *k, *stride, *padding),
+                    conv_out(s.w(), *k, *stride, *padding),
+                    s.c(),
+                )
+            }
+            Op::GlobalAvgPool => {
+                let s = inputs[0];
+                Shape::vec2(s.n(), s.c())
+            }
+            Op::FullyConnected { cout, .. } => Shape::vec2(inputs[0].n(), *cout),
+            Op::Concat => {
+                let s0 = inputs[0];
+                let c: usize = inputs.iter().map(|s| s.c()).sum();
+                Shape::nhwc(s0.n(), s0.h(), s0.w(), c)
+            }
+            Op::Flatten => {
+                let s = inputs[0];
+                Shape::vec2(s.n(), s.numel() / s.n())
+            }
+            Op::Gemm { out_shape, .. } => out_shape.clone(),
+        }
+    }
+
+    /// Multiply-accumulate FLOPs (2 * MACs) for the op given its input
+    /// and output shapes. Elementwise ops count 1 FLOP/element.
+    pub fn flops(&self, inputs: &[&Shape], output: &Shape) -> u64 {
+        let out_n = output.numel() as u64;
+        match self {
+            Op::Conv2d { kh, kw, cin, groups, .. }
+            | Op::FusedConvBnAct { kh, kw, cin, groups, .. } => {
+                let macs = out_n * (*kh * *kw * (*cin / *groups)) as u64;
+                2 * macs + if matches!(self, Op::FusedConvBnAct { .. }) { 2 * out_n } else { 0 }
+            }
+            Op::DepthwiseConv2d { kh, kw, .. } | Op::FusedDwBnAct { kh, kw, .. } => {
+                2 * out_n * (*kh * *kw) as u64
+            }
+            Op::BatchNorm { .. } => 2 * out_n,
+            Op::Activation { .. } => out_n,
+            Op::Pool { k, .. } => out_n * (*k * *k) as u64,
+            Op::GlobalAvgPool => inputs[0].numel() as u64,
+            Op::FullyConnected { cin, .. } => 2 * out_n * *cin as u64,
+            Op::Add => out_n,
+            Op::Concat | Op::Flatten | Op::Input { .. } => 0,
+            Op::Softmax => 5 * out_n,
+            Op::Gemm { m, k, n, .. } => 2 * (*m * *k * *n) as u64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_weight_count() {
+        let op = Op::conv(3, 3, 64, 128, 1, 1);
+        assert_eq!(op.weight_count(), 3 * 3 * 64 * 128);
+        assert!(op.prunable());
+    }
+
+    #[test]
+    fn depthwise_not_prunable() {
+        let op = Op::DepthwiseConv2d { kh: 3, kw: 3, c: 32, stride: 1, padding: 1 };
+        assert_eq!(op.weight_count(), 288);
+        assert!(!op.prunable());
+    }
+
+    #[test]
+    fn shape_inference_conv() {
+        let op = Op::conv(7, 7, 3, 64, 2, 3);
+        let s = Shape::nhwc(1, 224, 224, 3);
+        assert_eq!(op.infer_shape(&[&s]), Shape::nhwc(1, 112, 112, 64));
+    }
+
+    #[test]
+    fn shape_inference_concat() {
+        let a = Shape::nhwc(1, 8, 8, 16);
+        let b = Shape::nhwc(1, 8, 8, 32);
+        assert_eq!(Op::Concat.infer_shape(&[&a, &b]), Shape::nhwc(1, 8, 8, 48));
+    }
+
+    #[test]
+    fn flops_conv_known() {
+        // 3x3x64->64 conv on 56x56: 2 * 56*56*64 * 3*3*64
+        let op = Op::conv(3, 3, 64, 64, 1, 1);
+        let inp = Shape::nhwc(1, 56, 56, 64);
+        let out = op.infer_shape(&[&inp]);
+        assert_eq!(op.flops(&[&inp], &out), 2 * 56 * 56 * 64 * 9 * 64);
+    }
+
+    #[test]
+    fn bn_params() {
+        assert_eq!(Op::BatchNorm { c: 32 }.aux_params(), 128);
+    }
+
+    #[test]
+    fn fc_shape() {
+        let op = Op::FullyConnected { cin: 400, cout: 120, bias: true };
+        assert_eq!(op.infer_shape(&[&Shape::vec2(8, 400)]), Shape::vec2(8, 120));
+        assert_eq!(op.weight_count(), 48_000);
+        assert_eq!(op.aux_params(), 120);
+    }
+}

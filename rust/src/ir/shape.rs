@@ -1,0 +1,89 @@
+//! Tensor shapes (NHWC activations).
+
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Shape(pub Vec<usize>);
+
+impl Shape {
+    pub fn nhwc(n: usize, h: usize, w: usize, c: usize) -> Self {
+        Shape(vec![n, h, w, c])
+    }
+
+    pub fn vec2(n: usize, d: usize) -> Self {
+        Shape(vec![n, d])
+    }
+
+    pub fn rank(&self) -> usize {
+        self.0.len()
+    }
+
+    pub fn numel(&self) -> usize {
+        self.0.iter().product()
+    }
+
+    pub fn bytes_f32(&self) -> usize {
+        self.numel() * 4
+    }
+
+    pub fn n(&self) -> usize {
+        self.0[0]
+    }
+
+    pub fn h(&self) -> usize {
+        debug_assert_eq!(self.rank(), 4);
+        self.0[1]
+    }
+
+    pub fn w(&self) -> usize {
+        debug_assert_eq!(self.rank(), 4);
+        self.0[2]
+    }
+
+    pub fn c(&self) -> usize {
+        *self.0.last().unwrap()
+    }
+}
+
+impl std::fmt::Display for Shape {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "[")?;
+        for (i, d) in self.0.iter().enumerate() {
+            if i > 0 {
+                write!(f, ",")?;
+            }
+            write!(f, "{d}")?;
+        }
+        write!(f, "]")
+    }
+}
+
+/// Conv output spatial size: floor((in + 2p - k) / s) + 1.
+pub fn conv_out(input: usize, k: usize, stride: usize, pad: usize) -> usize {
+    debug_assert!(input + 2 * pad >= k, "conv window larger than input");
+    (input + 2 * pad - k) / stride + 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn numel_and_bytes() {
+        let s = Shape::nhwc(2, 8, 8, 3);
+        assert_eq!(s.numel(), 384);
+        assert_eq!(s.bytes_f32(), 1536);
+        assert_eq!((s.n(), s.h(), s.w(), s.c()), (2, 8, 8, 3));
+    }
+
+    #[test]
+    fn conv_out_matches_convention() {
+        assert_eq!(conv_out(224, 7, 2, 3), 112); // ResNet-50 stem
+        assert_eq!(conv_out(28, 5, 1, 2), 28); // LeNet c1 'same'
+        assert_eq!(conv_out(14, 5, 1, 0), 10); // LeNet c2 'valid'
+        assert_eq!(conv_out(112, 3, 2, 1), 56);
+    }
+
+    #[test]
+    fn display() {
+        assert_eq!(Shape::nhwc(1, 2, 3, 4).to_string(), "[1,2,3,4]");
+    }
+}

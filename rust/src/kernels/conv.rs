@@ -1,0 +1,441 @@
+//! Convolution and supporting layer kernels over NHWC tensors.
+//!
+//! Two conv engines, matching the personalities:
+//! - `conv2d_direct` — the 7-loop direct convolution (TFLite-like
+//!   baseline engine, no layout transformation);
+//! - `im2col` + GEMM — the transformed path (TVM-like / CADNN), where
+//!   the conv becomes the tiled (fused-epilogue) GEMM of `gemm.rs` or the
+//!   CSR GEMM of `sparse.rs` when compressed.
+
+use super::gemm::gemm_parallel;
+use super::sparse::csr_gemm_parallel;
+use super::{Epilogue, Tensor};
+use crate::compress::csr::CsrMatrix;
+use crate::passes::layout::TileConfig;
+
+/// Direct NHWC convolution, weights HWIO (kh, kw, cin, cout), groups=1.
+pub fn conv2d_direct(
+    x: &Tensor,
+    w: &Tensor,
+    stride: usize,
+    padh: usize,
+    padw: usize,
+) -> Tensor {
+    let (n, h, wd, cin) = (x.n(), x.h(), x.w(), x.c());
+    let (kh, kw, wcin, cout) = (w.shape[0], w.shape[1], w.shape[2], w.shape[3]);
+    assert_eq!(cin, wcin);
+    let ho = (h + 2 * padh - kh) / stride + 1;
+    let wo = (wd + 2 * padw - kw) / stride + 1;
+    let mut out = Tensor::zeros(&[n, ho, wo, cout]);
+    for b in 0..n {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let obase = ((b * ho + oy) * wo + ox) * cout;
+                for ky in 0..kh {
+                    let iy = oy * stride + ky;
+                    if iy < padh || iy - padh >= h {
+                        continue;
+                    }
+                    for kx in 0..kw {
+                        let ix = ox * stride + kx;
+                        if ix < padw || ix - padw >= wd {
+                            continue;
+                        }
+                        let ibase = ((b * h + (iy - padh)) * wd + (ix - padw)) * cin;
+                        let wbase = (ky * kw + kx) * cin * cout;
+                        for ci in 0..cin {
+                            let xv = x.data[ibase + ci];
+                            if xv == 0.0 {
+                                continue;
+                            }
+                            let wrow = &w.data[wbase + ci * cout..wbase + ci * cout + cout];
+                            let orow = &mut out.data[obase..obase + cout];
+                            for co in 0..cout {
+                                orow[co] += xv * wrow[co];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// im2col: NHWC -> (N*Ho*Wo, kh*kw*Cin) patch matrix. Column order is
+/// (ky, kx, cin) — identical to the HWIO weight reshape and the python
+/// kernels' layout.
+pub fn im2col(
+    x: &Tensor,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    padh: usize,
+    padw: usize,
+) -> (Tensor, usize, usize) {
+    let (n, h, wd, c) = (x.n(), x.h(), x.w(), x.c());
+    let ho = (h + 2 * padh - kh) / stride + 1;
+    let wo = (wd + 2 * padw - kw) / stride + 1;
+    let cols = kh * kw * c;
+    let mut out = Tensor::zeros(&[n * ho * wo, cols]);
+    for b in 0..n {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let row = (b * ho + oy) * wo + ox;
+                let rbase = row * cols;
+                for ky in 0..kh {
+                    let iy = oy * stride + ky;
+                    if iy < padh || iy - padh >= h {
+                        continue; // padding region stays zero
+                    }
+                    for kx in 0..kw {
+                        let ix = ox * stride + kx;
+                        if ix < padw || ix - padw >= wd {
+                            continue;
+                        }
+                        let src = ((b * h + (iy - padh)) * wd + (ix - padw)) * c;
+                        let dst = rbase + (ky * kw + kx) * c;
+                        out.data[dst..dst + c].copy_from_slice(&x.data[src..src + c]);
+                    }
+                }
+            }
+        }
+    }
+    (out, ho, wo)
+}
+
+/// Fused conv via im2col + blocked GEMM + epilogue (dense weights as the
+/// (kh*kw*cin, cout) matrix).
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_gemm(
+    x: &Tensor,
+    wmat: &[f32],
+    kh: usize,
+    kw: usize,
+    cout: usize,
+    stride: usize,
+    padh: usize,
+    padw: usize,
+    tile: &TileConfig,
+    epilogue: &Epilogue,
+) -> Tensor {
+    let cin = x.c();
+    let k = kh * kw * cin;
+    debug_assert_eq!(wmat.len(), k * cout);
+    // 1x1 fast path: no im2col copy (the paper's transformation).
+    if kh == 1 && kw == 1 && stride == 1 && padh == 0 && padw == 0 {
+        let m = x.n() * x.h() * x.w();
+        let mut out = Tensor::zeros(&[x.n(), x.h(), x.w(), cout]);
+        gemm_parallel(&x.data, wmat, &mut out.data, m, cin, cout, tile, epilogue);
+        return out;
+    }
+    let (patches, ho, wo) = im2col(x, kh, kw, stride, padh, padw);
+    let m = x.n() * ho * wo;
+    let mut out = Tensor::zeros(&[x.n(), ho, wo, cout]);
+    gemm_parallel(&patches.data, wmat, &mut out.data, m, k, cout, tile, epilogue);
+    out
+}
+
+/// Compressed fused conv: CSR weights over the same (k, cout) view.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_csr(
+    x: &Tensor,
+    w: &CsrMatrix,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    padh: usize,
+    padw: usize,
+    epilogue: &Epilogue,
+) -> Tensor {
+    let cout = w.cols;
+    if kh == 1 && kw == 1 && stride == 1 && padh == 0 && padw == 0 {
+        let m = x.n() * x.h() * x.w();
+        let mut out = Tensor::zeros(&[x.n(), x.h(), x.w(), cout]);
+        csr_gemm_parallel(&x.data, w, &mut out.data, m, epilogue);
+        return out;
+    }
+    let (patches, ho, wo) = im2col(x, kh, kw, stride, padh, padw);
+    let m = x.n() * ho * wo;
+    let mut out = Tensor::zeros(&[x.n(), ho, wo, cout]);
+    csr_gemm_parallel(&patches.data, w, &mut out.data, m, epilogue);
+    out
+}
+
+/// Depthwise conv (weights (kh, kw, c)) with fused epilogue.
+pub fn depthwise(
+    x: &Tensor,
+    w: &Tensor,
+    stride: usize,
+    padding: usize,
+    epilogue: &Epilogue,
+) -> Tensor {
+    let (n, h, wd, c) = (x.n(), x.h(), x.w(), x.c());
+    let (kh, kw) = (w.shape[0], w.shape[1]);
+    assert_eq!(w.shape[2], c);
+    let ho = (h + 2 * padding - kh) / stride + 1;
+    let wo = (wd + 2 * padding - kw) / stride + 1;
+    let mut out = Tensor::zeros(&[n, ho, wo, c]);
+    for b in 0..n {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let obase = ((b * ho + oy) * wo + ox) * c;
+                for ky in 0..kh {
+                    let iy = oy * stride + ky;
+                    if iy < padding || iy - padding >= h {
+                        continue;
+                    }
+                    for kx in 0..kw {
+                        let ix = ox * stride + kx;
+                        if ix < padding || ix - padding >= wd {
+                            continue;
+                        }
+                        let ibase = ((b * h + (iy - padding)) * wd + (ix - padding)) * c;
+                        let wbase = (ky * kw + kx) * c;
+                        for ch in 0..c {
+                            out.data[obase + ch] += x.data[ibase + ch] * w.data[wbase + ch];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    epilogue.apply(&mut out.data, n * ho * wo, c);
+    out
+}
+
+/// Max / avg pooling (square window, symmetric padding; avg divides by
+/// the full window — matching jax `avg_pool` with count_include_pad).
+pub fn pool(x: &Tensor, k: usize, stride: usize, padding: usize, max_pool: bool) -> Tensor {
+    let (n, h, wd, c) = (x.n(), x.h(), x.w(), x.c());
+    let ho = (h + 2 * padding - k) / stride + 1;
+    let wo = (wd + 2 * padding - k) / stride + 1;
+    let mut out = Tensor::zeros(&[n, ho, wo, c]);
+    for b in 0..n {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let obase = ((b * ho + oy) * wo + ox) * c;
+                for ch in 0..c {
+                    let mut acc = if max_pool { f32::NEG_INFINITY } else { 0.0 };
+                    for ky in 0..k {
+                        let iy = oy * stride + ky;
+                        if iy < padding || iy - padding >= h {
+                            if max_pool {
+                                continue;
+                            } else {
+                                continue; // zero contribution
+                            }
+                        }
+                        for kx in 0..k {
+                            let ix = ox * stride + kx;
+                            if ix < padding || ix - padding >= wd {
+                                continue;
+                            }
+                            let v = x.at4(b, iy - padding, ix - padding, ch);
+                            if max_pool {
+                                acc = acc.max(v);
+                            } else {
+                                acc += v;
+                            }
+                        }
+                    }
+                    out.data[obase + ch] = if max_pool { acc } else { acc / (k * k) as f32 };
+                }
+            }
+        }
+    }
+    out
+}
+
+pub fn global_avg_pool(x: &Tensor) -> Tensor {
+    let (n, h, wd, c) = (x.n(), x.h(), x.w(), x.c());
+    let mut out = Tensor::zeros(&[n, c]);
+    for b in 0..n {
+        for y in 0..h {
+            for xx in 0..wd {
+                let base = ((b * h + y) * wd + xx) * c;
+                for ch in 0..c {
+                    out.data[b * c + ch] += x.data[base + ch];
+                }
+            }
+        }
+    }
+    for v in out.data.iter_mut() {
+        *v /= (h * wd) as f32;
+    }
+    out
+}
+
+pub fn add(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(a.shape, b.shape);
+    let mut out = a.clone();
+    for (o, v) in out.data.iter_mut().zip(&b.data) {
+        *o += v;
+    }
+    out
+}
+
+pub fn relu(x: &mut Tensor, max: Option<f32>) {
+    for v in x.data.iter_mut() {
+        *v = v.max(0.0);
+        if let Some(m) = max {
+            *v = v.min(m);
+        }
+    }
+}
+
+/// Standalone inference BatchNorm (unfused personalities).
+pub fn batchnorm(x: &mut Tensor, scale: &[f32], shift: &[f32]) {
+    let c = x.c();
+    let rows = x.numel() / c;
+    Epilogue::Affine {
+        scale: scale.to_vec(),
+        shift: shift.to_vec(),
+        relu_max: None,
+        relu: false,
+    }
+    .apply(&mut x.data, rows, c);
+}
+
+pub fn softmax(x: &mut Tensor) {
+    let c = *x.shape.last().unwrap();
+    let rows = x.numel() / c;
+    for r in 0..rows {
+        let row = &mut x.data[r * c..(r + 1) * c];
+        let m = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+        let mut sum = 0.0;
+        for v in row.iter_mut() {
+            *v = (*v - m).exp();
+            sum += *v;
+        }
+        for v in row.iter_mut() {
+            *v /= sum;
+        }
+    }
+}
+
+/// Concat along the channel axis.
+pub fn concat_channels(xs: &[&Tensor]) -> Tensor {
+    let (n, h, w) = (xs[0].n(), xs[0].h(), xs[0].w());
+    let ctot: usize = xs.iter().map(|t| t.c()).sum();
+    let mut out = Tensor::zeros(&[n, h, w, ctot]);
+    for b in 0..n {
+        for y in 0..h {
+            for x_ in 0..w {
+                let mut off = 0;
+                let dst_base = ((b * h + y) * w + x_) * ctot;
+                for t in xs {
+                    let c = t.c();
+                    let src = ((b * h + y) * w + x_) * c;
+                    out.data[dst_base + off..dst_base + off + c]
+                        .copy_from_slice(&t.data[src..src + c]);
+                    off += c;
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_t(shape: &[usize], seed: u64) -> Tensor {
+        let mut rng = Rng::new(seed);
+        Tensor::randn(shape, &mut rng, 1.0)
+    }
+
+    #[test]
+    fn im2col_gemm_matches_direct() {
+        for (kh, stride, pad) in [(1usize, 1usize, 0usize), (3, 1, 1), (3, 2, 1), (5, 2, 2)] {
+            let x = rand_t(&[2, 9, 9, 4], 1);
+            let w = rand_t(&[kh, kh, 4, 6], 2);
+            let direct = conv2d_direct(&x, &w, stride, pad, pad);
+            let got = conv2d_gemm(
+                &x, &w.data, kh, kh, 6, stride, pad, pad,
+                &TileConfig::DEFAULT, &Epilogue::None,
+            );
+            assert_eq!(direct.shape, got.shape, "k{kh}s{stride}p{pad}");
+            assert!(direct.max_abs_diff(&got) < 1e-4, "k{kh}s{stride}p{pad}");
+        }
+    }
+
+    #[test]
+    fn csr_conv_matches_dense_conv() {
+        let x = rand_t(&[1, 8, 8, 4], 3);
+        let mut w = rand_t(&[3, 3, 4, 8], 4);
+        // prune ~70%
+        let mut rng = Rng::new(5);
+        for v in w.data.iter_mut() {
+            if rng.f64() < 0.7 {
+                *v = 0.0;
+            }
+        }
+        let dense = conv2d_direct(&x, &w, 1, 1, 1);
+        let csr = CsrMatrix::from_dense(&w.data, 36, 8);
+        let got = conv2d_csr(&x, &csr, 3, 3, 1, 1, 1, &Epilogue::None);
+        assert!(dense.max_abs_diff(&got) < 1e-4);
+    }
+
+    #[test]
+    fn depthwise_known_values() {
+        // 1 channel, 2x2 input, 2x2 kernel of ones, no pad -> sum
+        let x = Tensor::from_vec(&[1, 2, 2, 1], vec![1.0, 2.0, 3.0, 4.0]);
+        let w = Tensor::from_vec(&[2, 2, 1], vec![1.0; 4]);
+        let out = depthwise(&x, &w, 1, 0, &Epilogue::None);
+        assert_eq!(out.shape, vec![1, 1, 1, 1]);
+        assert_eq!(out.data[0], 10.0);
+    }
+
+    #[test]
+    fn maxpool_known_values() {
+        let x = Tensor::from_vec(&[1, 2, 2, 1], vec![1.0, 5.0, 3.0, 2.0]);
+        let out = pool(&x, 2, 2, 0, true);
+        assert_eq!(out.data, vec![5.0]);
+    }
+
+    #[test]
+    fn avgpool_divides_full_window() {
+        let x = Tensor::from_vec(&[1, 2, 2, 1], vec![1.0, 5.0, 3.0, 3.0]);
+        let out = pool(&x, 2, 2, 0, false);
+        assert_eq!(out.data, vec![3.0]);
+    }
+
+    #[test]
+    fn global_avg_pool_mean() {
+        let x = Tensor::from_vec(&[1, 2, 2, 2], vec![1., 10., 2., 20., 3., 30., 4., 40.]);
+        let out = global_avg_pool(&x);
+        assert_eq!(out.data, vec![2.5, 25.0]);
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let mut x = rand_t(&[4, 10], 6);
+        softmax(&mut x);
+        for r in 0..4 {
+            let s: f32 = x.data[r * 10..(r + 1) * 10].iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn concat_channels_layout() {
+        let a = Tensor::from_vec(&[1, 1, 2, 1], vec![1.0, 2.0]);
+        let b = Tensor::from_vec(&[1, 1, 2, 2], vec![3.0, 4.0, 5.0, 6.0]);
+        let out = concat_channels(&[&a, &b]);
+        assert_eq!(out.shape, vec![1, 1, 2, 3]);
+        assert_eq!(out.data, vec![1.0, 3.0, 4.0, 2.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn relu_and_bn() {
+        let mut x = Tensor::from_vec(&[1, 1, 1, 2], vec![-1.0, 8.0]);
+        relu(&mut x, Some(6.0));
+        assert_eq!(x.data, vec![0.0, 6.0]);
+        let mut y = Tensor::from_vec(&[1, 1, 1, 2], vec![2.0, 3.0]);
+        batchnorm(&mut y, &[2.0, 0.5], &[1.0, 0.0]);
+        assert_eq!(y.data, vec![5.0, 1.5]);
+    }
+}

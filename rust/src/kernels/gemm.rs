@@ -1,0 +1,303 @@
+//! Dense GEMM kernels: C(M,N) = A(M,K) @ B(K,N), row-major.
+//!
+//! Three schedules, mirroring the paper's optimization ladder:
+//! - `gemm_naive`   — textbook triple loop (the unoptimized reference and
+//!   the TFLite-like personality's inner engine)
+//! - `gemm_blocked` — cache-tiled (mc x kc x nc) with a register-
+//!   resident micro-kernel (4 rows x 4-or-8 columns selected by the
+//!   `unroll` tune parameter), load-hoisted exactly as the paper's
+//!   redundant-load-elimination describes
+//! - `gemm_parallel`— `gemm_blocked` sharded over row panels on the
+//!   global thread pool
+//!
+//! All accept an `Epilogue` applied while the output panel is hot
+//! (fusion); the unfused personalities pass `Epilogue::None` and run
+//! separate bn/act sweeps instead.
+
+use super::Epilogue;
+use crate::passes::layout::TileConfig;
+use crate::util::pool;
+
+/// Textbook ikj loop (k-major inner for contiguous B rows).
+pub fn gemm_naive(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    c.fill(0.0);
+    for i in 0..m {
+        for p in 0..k {
+            let av = a[i * k + p];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[p * n..p * n + n];
+            let crow = &mut c[i * n..i * n + n];
+            for j in 0..n {
+                crow[j] += av * brow[j];
+            }
+        }
+    }
+}
+
+/// Cache-blocked GEMM with a register-resident MR x NR micro-kernel over
+/// the row range [m0, m1).
+///
+/// §Perf note: the first implementation accumulated straight into C
+/// (`c[..] += a*b` inside the p loop), re-loading/storing every
+/// accumulator each reduction step — memory-bound at ~2 GFLOPS. The
+/// micro-kernel now keeps an MR x NR accumulator block in registers for
+/// the whole pb..pe reduction and stores once (EXPERIMENTS.md §Perf).
+fn gemm_blocked_rows(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m0: usize,
+    m1: usize,
+    k: usize,
+    n: usize,
+    tile: &TileConfig,
+) {
+    const MR: usize = 4; // micro-kernel rows (matches load_elim::MICRO_ROWS)
+    let (mc, kc, nc) = (tile.mc.max(MR), tile.kc.max(1), tile.nc.max(1));
+    c[m0 * n..m1 * n].fill(0.0);
+    // register-tile width from the tune parameter (8 suits AVX2 f32x8)
+    let nr = if tile.unroll >= 8 { 8 } else { 4 };
+    let mut ib = m0;
+    while ib < m1 {
+        let ie = (ib + mc).min(m1);
+        let mut pb = 0;
+        while pb < k {
+            let pe = (pb + kc).min(k);
+            let mut jb = 0;
+            while jb < n {
+                let je = (jb + nc).min(n);
+                // macro tile [ib..ie) x [pb..pe) x [jb..je)
+                let mut i = ib;
+                while i + MR <= ie {
+                    let mut j = jb;
+                    if nr == 8 {
+                        while j + 8 <= je {
+                            micro_kernel::<MR, 8>(a, b, c, i, pb, pe, j, k, n);
+                            j += 8;
+                        }
+                    }
+                    while j + 4 <= je {
+                        micro_kernel::<MR, 4>(a, b, c, i, pb, pe, j, k, n);
+                        j += 4;
+                    }
+                    // remainder columns (< 4)
+                    if j < je {
+                        edge_kernel(a, b, c, i, i + MR, pb, pe, j, je, k, n);
+                    }
+                    i += MR;
+                }
+                // remainder rows
+                if i < ie {
+                    edge_kernel(a, b, c, i, ie, pb, pe, jb, je, k, n);
+                }
+                jb = je;
+            }
+            pb = pe;
+        }
+        ib = ie;
+    }
+}
+
+/// MR x NR register micro-kernel: the accumulator block lives in
+/// registers across the whole reduction; every A and B element is loaded
+/// once per micro-tile (the paper's redundant-load elimination).
+#[inline]
+fn micro_kernel<const MR: usize, const NR: usize>(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    i: usize,
+    pb: usize,
+    pe: usize,
+    j: usize,
+    k: usize,
+    n: usize,
+) {
+    let mut acc = [[0f32; NR]; MR];
+    // load current C block (we may revisit the tile across kc panels)
+    for r in 0..MR {
+        let crow = &c[(i + r) * n + j..(i + r) * n + j + NR];
+        acc[r].copy_from_slice(crow);
+    }
+    for p in pb..pe {
+        let brow = &b[p * n + j..p * n + j + NR];
+        for r in 0..MR {
+            let av = a[(i + r) * k + p];
+            for x in 0..NR {
+                acc[r][x] += av * brow[x];
+            }
+        }
+    }
+    for r in 0..MR {
+        c[(i + r) * n + j..(i + r) * n + j + NR].copy_from_slice(&acc[r]);
+    }
+}
+
+/// Scalar fallback for ragged tile edges.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn edge_kernel(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    i0: usize,
+    i1: usize,
+    pb: usize,
+    pe: usize,
+    jb: usize,
+    je: usize,
+    k: usize,
+    n: usize,
+) {
+    for ir in i0..i1 {
+        for p in pb..pe {
+            let av = a[ir * k + p];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[p * n..];
+            let crow = &mut c[ir * n..];
+            for j in jb..je {
+                crow[j] += av * brow[j];
+            }
+        }
+    }
+}
+
+/// Blocked GEMM + fused epilogue (single thread).
+pub fn gemm_blocked(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    tile: &TileConfig,
+    epilogue: &Epilogue,
+) {
+    gemm_blocked_rows(a, b, c, 0, m, k, n, tile);
+    epilogue.apply(c, m, n);
+}
+
+/// Pointer wrapper so disjoint row panels can be written from the pool.
+struct SendPtr(*mut f32);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+impl SendPtr {
+    /// Method (not field) access so closures capture the whole wrapper,
+    /// keeping the Sync impl in play under disjoint-capture rules.
+    fn get(&self) -> *mut f32 {
+        self.0
+    }
+}
+
+/// Multithreaded blocked GEMM: row panels are disjoint slices of C.
+pub fn gemm_parallel(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    tile: &TileConfig,
+    epilogue: &Epilogue,
+) {
+    let threads = pool::global().size().min(m.div_ceil(64)).max(1);
+    if threads <= 1 || m < 128 {
+        return gemm_blocked(a, b, c, m, k, n, tile, epilogue);
+    }
+    let chunk = m.div_ceil(threads);
+    let cptr = SendPtr(c.as_mut_ptr());
+    pool::parallel_for_n(threads, threads, |t| {
+        let m0 = t * chunk;
+        let m1 = ((t + 1) * chunk).min(m);
+        if m0 >= m1 {
+            return;
+        }
+        // SAFETY: row panels [m0*n, m1*n) are disjoint across t.
+        let c_all = unsafe { std::slice::from_raw_parts_mut(cptr.get(), m * n) };
+        gemm_blocked_rows(a, b, c_all, m0, m1, k, n, tile);
+        epilogue.apply(&mut c_all[m0 * n..m1 * n], m1 - m0, n);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randv(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    fn assert_close(a: &[f32], b: &[f32], tol: f32) {
+        assert_eq!(a.len(), b.len());
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert!((x - y).abs() <= tol * (1.0 + x.abs()), "idx {i}: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn blocked_matches_naive() {
+        for (m, k, n) in [(1, 1, 1), (5, 7, 3), (33, 65, 17), (128, 64, 96)] {
+            let a = randv(m * k, 1);
+            let b = randv(k * n, 2);
+            let mut c1 = vec![0.0; m * n];
+            let mut c2 = vec![0.0; m * n];
+            gemm_naive(&a, &b, &mut c1, m, k, n);
+            gemm_blocked(&a, &b, &mut c2, m, k, n, &TileConfig::DEFAULT, &Epilogue::None);
+            assert_close(&c1, &c2, 1e-4);
+        }
+    }
+
+    #[test]
+    fn blocked_with_odd_tiles_matches() {
+        let (m, k, n) = (50, 30, 41);
+        let a = randv(m * k, 3);
+        let b = randv(k * n, 4);
+        let mut c1 = vec![0.0; m * n];
+        let mut c2 = vec![0.0; m * n];
+        gemm_naive(&a, &b, &mut c1, m, k, n);
+        let tile = TileConfig { mc: 7, nc: 13, kc: 11, unroll: 2 };
+        gemm_blocked(&a, &b, &mut c2, m, k, n, &tile, &Epilogue::None);
+        assert_close(&c1, &c2, 1e-4);
+    }
+
+    #[test]
+    fn parallel_matches_naive() {
+        let (m, k, n) = (300, 64, 48);
+        let a = randv(m * k, 5);
+        let b = randv(k * n, 6);
+        let mut c1 = vec![0.0; m * n];
+        let mut c2 = vec![0.0; m * n];
+        gemm_naive(&a, &b, &mut c1, m, k, n);
+        gemm_parallel(&a, &b, &mut c2, m, k, n, &TileConfig::DEFAULT, &Epilogue::None);
+        assert_close(&c1, &c2, 1e-4);
+    }
+
+    #[test]
+    fn fused_epilogue_equals_separate() {
+        let (m, k, n) = (40, 20, 12);
+        let a = randv(m * k, 7);
+        let b = randv(k * n, 8);
+        let scale: Vec<f32> = (0..n).map(|i| 0.5 + i as f32 * 0.1).collect();
+        let shift: Vec<f32> = (0..n).map(|i| i as f32 * 0.01 - 0.05).collect();
+        let ep = Epilogue::bn_act(scale.clone(), shift.clone(), true, false);
+        let mut c1 = vec![0.0; m * n];
+        gemm_naive(&a, &b, &mut c1, m, k, n);
+        for r in 0..m {
+            for j in 0..n {
+                c1[r * n + j] = (c1[r * n + j] * scale[j] + shift[j]).max(0.0);
+            }
+        }
+        let mut c2 = vec![0.0; m * n];
+        gemm_blocked(&a, &b, &mut c2, m, k, n, &TileConfig::DEFAULT, &ep);
+        assert_close(&c1, &c2, 1e-4);
+    }
+}

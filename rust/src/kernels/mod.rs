@@ -1,0 +1,89 @@
+//! Native CPU kernels — the executable analogue of the paper's
+//! compiler-generated mobile kernels. The framework personalities in
+//! `exec/` compose these differently (direct vs im2col-GEMM conv, fused
+//! vs separate epilogues, dense vs CSR) and the tuner picks tile
+//! configurations; measured efficiency feeds the Figure-2 projection.
+
+pub mod conv;
+pub mod gemm;
+pub mod sparse;
+pub mod tensor;
+
+pub use tensor::Tensor;
+
+/// Fused epilogue applied to a GEMM/conv output tile while it is hot:
+/// out = act(out * scale[n] + shift[n]) — folded BatchNorm or bias.
+#[derive(Debug, Clone, Default)]
+pub enum Epilogue {
+    #[default]
+    None,
+    /// Per-output-channel affine + optional ReLU/ReLU6 clamp.
+    Affine { scale: Vec<f32>, shift: Vec<f32>, relu_max: Option<f32>, relu: bool },
+}
+
+impl Epilogue {
+    pub fn bias_relu(bias: Vec<f32>, relu: bool) -> Self {
+        let n = bias.len();
+        Epilogue::Affine { scale: vec![1.0; n], shift: bias, relu_max: None, relu }
+    }
+
+    pub fn bn_act(scale: Vec<f32>, shift: Vec<f32>, relu: bool, relu6: bool) -> Self {
+        Epilogue::Affine {
+            scale,
+            shift,
+            relu_max: if relu6 { Some(6.0) } else { None },
+            relu,
+        }
+    }
+
+    /// Apply to a row-major (rows x n) block in place.
+    pub fn apply(&self, out: &mut [f32], rows: usize, n: usize) {
+        match self {
+            Epilogue::None => {}
+            Epilogue::Affine { scale, shift, relu_max, relu } => {
+                debug_assert!(scale.len() >= n && shift.len() >= n);
+                for r in 0..rows {
+                    let row = &mut out[r * n..r * n + n];
+                    for (j, v) in row.iter_mut().enumerate() {
+                        let mut x = *v * scale[j] + shift[j];
+                        if *relu {
+                            x = x.max(0.0);
+                            if let Some(m) = relu_max {
+                                x = x.min(*m);
+                            }
+                        }
+                        *v = x;
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn epilogue_none_is_identity() {
+        let mut v = vec![1.0, -2.0, 3.0];
+        Epilogue::None.apply(&mut v, 1, 3);
+        assert_eq!(v, vec![1.0, -2.0, 3.0]);
+    }
+
+    #[test]
+    fn epilogue_bias_relu() {
+        let mut v = vec![1.0, -2.0, 3.0, -4.0];
+        let e = Epilogue::bias_relu(vec![0.5, 0.5], true);
+        e.apply(&mut v, 2, 2);
+        assert_eq!(v, vec![1.5, 0.0, 3.5, 0.0]);
+    }
+
+    #[test]
+    fn epilogue_relu6_clamps() {
+        let mut v = vec![10.0, 2.0];
+        let e = Epilogue::bn_act(vec![1.0, 1.0], vec![0.0, 0.0], true, true);
+        e.apply(&mut v, 1, 2);
+        assert_eq!(v, vec![6.0, 2.0]);
+    }
+}

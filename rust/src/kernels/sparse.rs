@@ -1,0 +1,182 @@
+//! Sparse kernels: activations (dense, M x K) times CSR weights (K x N).
+//!
+//! This is the paper's compressed execution path on CPU: pruned weights
+//! are never touched, so work scales with nnz. The row-major CSR over K
+//! lets the kernel stream A columns and scatter into C rows with the
+//! same register blocking as the dense micro-kernel.
+
+use super::Epilogue;
+use crate::compress::csr::CsrMatrix;
+use crate::util::pool;
+
+/// C(M,N) = A(M,K) @ W_csr(K,N), single thread.
+pub fn csr_gemm(a: &[f32], w: &CsrMatrix, c: &mut [f32], m: usize, epilogue: &Epilogue) {
+    let (k, n) = (w.rows, w.cols);
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(c.len(), m * n);
+    csr_gemm_rows(a, w, c, 0, m, k, n);
+    epilogue.apply(c, m, n);
+}
+
+fn csr_gemm_rows(a: &[f32], w: &CsrMatrix, c: &mut [f32], m0: usize, m1: usize, k: usize, n: usize) {
+    c[m0 * n..m1 * n].fill(0.0);
+    const MR: usize = 4;
+    let mut i = m0;
+    while i + MR <= m1 {
+        for p in 0..k {
+            // hoist MR activation values (one per row) into registers
+            let av = [
+                a[i * k + p],
+                a[(i + 1) * k + p],
+                a[(i + 2) * k + p],
+                a[(i + 3) * k + p],
+            ];
+            if av == [0.0; 4] {
+                continue;
+            }
+            let (s, e) = (w.row_ptr[p] as usize, w.row_ptr[p + 1] as usize);
+            for idx in s..e {
+                let col = w.col_idx[idx] as usize;
+                let v = w.values[idx];
+                c[i * n + col] += av[0] * v;
+                c[(i + 1) * n + col] += av[1] * v;
+                c[(i + 2) * n + col] += av[2] * v;
+                c[(i + 3) * n + col] += av[3] * v;
+            }
+        }
+        i += MR;
+    }
+    for ir in i..m1 {
+        for p in 0..k {
+            let av = a[ir * k + p];
+            if av == 0.0 {
+                continue;
+            }
+            let (s, e) = (w.row_ptr[p] as usize, w.row_ptr[p + 1] as usize);
+            for idx in s..e {
+                c[ir * n + w.col_idx[idx] as usize] += av * w.values[idx];
+            }
+        }
+    }
+}
+
+struct SendPtr(*mut f32);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+impl SendPtr {
+    /// Method (not field) access so closures capture the whole wrapper,
+    /// keeping the Sync impl in play under disjoint-capture rules.
+    fn get(&self) -> *mut f32 {
+        self.0
+    }
+}
+
+/// Multithreaded CSR GEMM over disjoint row panels.
+pub fn csr_gemm_parallel(a: &[f32], w: &CsrMatrix, c: &mut [f32], m: usize, epilogue: &Epilogue) {
+    let (k, n) = (w.rows, w.cols);
+    let threads = pool::global().size().min(m.div_ceil(64)).max(1);
+    if threads <= 1 || m < 128 {
+        return csr_gemm(a, w, c, m, epilogue);
+    }
+    let chunk = m.div_ceil(threads);
+    let cptr = SendPtr(c.as_mut_ptr());
+    pool::parallel_for_n(threads, threads, |t| {
+        let m0 = t * chunk;
+        let m1 = ((t + 1) * chunk).min(m);
+        if m0 >= m1 {
+            return;
+        }
+        // SAFETY: disjoint row panels.
+        let c_all = unsafe { std::slice::from_raw_parts_mut(cptr.get(), m * n) };
+        csr_gemm_rows(a, w, c_all, m0, m1, k, n);
+        epilogue.apply(&mut c_all[m0 * n..m1 * n], m1 - m0, n);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::gemm::gemm_naive;
+    use crate::prop_assert;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn sparse_weights(k: usize, n: usize, density: f64, seed: u64) -> (Vec<f32>, CsrMatrix) {
+        let mut rng = Rng::new(seed);
+        let mut dense = vec![0.0f32; k * n];
+        for v in dense.iter_mut() {
+            if rng.f64() < density {
+                *v = rng.normal() as f32;
+            }
+        }
+        let csr = CsrMatrix::from_dense(&dense, k, n);
+        (dense, csr)
+    }
+
+    #[test]
+    fn csr_matches_dense_gemm() {
+        let (m, k, n) = (17, 40, 23);
+        let mut rng = Rng::new(1);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+        let (dense, csr) = sparse_weights(k, n, 0.2, 2);
+        let mut c1 = vec![0.0; m * n];
+        let mut c2 = vec![0.0; m * n];
+        gemm_naive(&a, &dense, &mut c1, m, k, n);
+        csr_gemm(&a, &csr, &mut c2, m, &Epilogue::None);
+        for (x, y) in c1.iter().zip(&c2) {
+            assert!((x - y).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let (m, k, n) = (300, 64, 32);
+        let mut rng = Rng::new(3);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+        let (_, csr) = sparse_weights(k, n, 0.1, 4);
+        let mut c1 = vec![0.0; m * n];
+        let mut c2 = vec![0.0; m * n];
+        csr_gemm(&a, &csr, &mut c1, m, &Epilogue::None);
+        csr_gemm_parallel(&a, &csr, &mut c2, m, &Epilogue::None);
+        for (x, y) in c1.iter().zip(&c2) {
+            assert!((x - y).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn empty_weights_give_zero_plus_epilogue() {
+        let (m, k, n) = (6, 10, 4);
+        let a = vec![1.0; m * k];
+        let csr = CsrMatrix::from_dense(&vec![0.0; k * n], k, n);
+        let mut c = vec![9.0; m * n];
+        let ep = Epilogue::bias_relu(vec![0.5; n], false);
+        csr_gemm(&a, &csr, &mut c, m, &ep);
+        assert!(c.iter().all(|&v| v == 0.5));
+    }
+
+    #[test]
+    fn prop_csr_gemm_random() {
+        prop::check_n("csr gemm vs dense", 40, |rng: &mut Rng| {
+            let m = rng.range(1, 24);
+            let k = rng.range(1, 24);
+            let n = rng.range(1, 24);
+            let density = rng.f64();
+            let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+            let mut dense = vec![0.0f32; k * n];
+            for v in dense.iter_mut() {
+                if rng.f64() < density {
+                    *v = rng.normal() as f32;
+                }
+            }
+            let csr = CsrMatrix::from_dense(&dense, k, n);
+            let mut c1 = vec![0.0; m * n];
+            let mut c2 = vec![0.0; m * n];
+            gemm_naive(&a, &dense, &mut c1, m, k, n);
+            csr_gemm(&a, &csr, &mut c2, m, &Epilogue::None);
+            for (x, y) in c1.iter().zip(&c2) {
+                prop_assert!((x - y).abs() < 1e-3, "{} vs {}", x, y);
+            }
+            Ok(())
+        });
+    }
+}

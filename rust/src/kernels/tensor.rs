@@ -1,0 +1,106 @@
+//! Row-major f32 tensor (NHWC activations, (K, N) weight matrices).
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Self {
+        Tensor { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    /// He-initialized random tensor (for synthetic weights).
+    pub fn randn(shape: &[usize], rng: &mut Rng, scale: f32) -> Self {
+        let mut t = Tensor::zeros(shape);
+        rng.fill_normal(&mut t.data, scale);
+        t
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// NHWC accessors (rank-4 only).
+    pub fn n(&self) -> usize {
+        self.shape[0]
+    }
+    pub fn h(&self) -> usize {
+        self.shape[1]
+    }
+    pub fn w(&self) -> usize {
+        self.shape[2]
+    }
+    pub fn c(&self) -> usize {
+        *self.shape.last().unwrap()
+    }
+
+    #[inline]
+    pub fn at4(&self, n: usize, y: usize, x: usize, c: usize) -> f32 {
+        let (h, w, ch) = (self.shape[1], self.shape[2], self.shape[3]);
+        self.data[((n * h + y) * w + x) * ch + c]
+    }
+
+    /// Reinterpret as (rows, cols) without copying (row-major flatten).
+    pub fn as_2d(&self, rows: usize, cols: usize) -> &[f32] {
+        assert_eq!(rows * cols, self.data.len());
+        &self.data
+    }
+
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_from_vec() {
+        let t = Tensor::zeros(&[2, 3]);
+        assert_eq!(t.numel(), 6);
+        let u = Tensor::from_vec(&[2, 3], vec![1.0; 6]);
+        assert_eq!(u.shape, vec![2, 3]);
+    }
+
+    #[test]
+    fn at4_indexing() {
+        let mut t = Tensor::zeros(&[1, 2, 2, 3]);
+        t.data[((0 * 2 + 1) * 2 + 0) * 3 + 2] = 7.0;
+        assert_eq!(t.at4(0, 1, 0, 2), 7.0);
+    }
+
+    #[test]
+    fn randn_deterministic() {
+        let mut r1 = Rng::new(5);
+        let mut r2 = Rng::new(5);
+        let a = Tensor::randn(&[10], &mut r1, 1.0);
+        let b = Tensor::randn(&[10], &mut r2, 1.0);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn max_abs_diff() {
+        let a = Tensor::from_vec(&[3], vec![1.0, 2.0, 3.0]);
+        let b = Tensor::from_vec(&[3], vec![1.0, 2.5, 2.0]);
+        assert_eq!(a.max_abs_diff(&b), 1.0);
+    }
+}

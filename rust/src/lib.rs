@@ -1,0 +1,15 @@
+//! CADNN — compression-aware DNN inference for mobile, reproduced as a
+//! three-layer Rust + JAX + Pallas stack. See DESIGN.md.
+
+pub mod bench;
+pub mod ir;
+pub mod kernels;
+pub mod compress;
+pub mod models;
+pub mod passes;
+pub mod costmodel;
+pub mod coordinator;
+pub mod exec;
+pub mod tuner;
+pub mod runtime;
+pub mod util;

@@ -1,0 +1,292 @@
+//! CADNN CLI: the leader entrypoint.
+//!
+//! ```text
+//! cadnn figure2 [--measured] [--uplift X]   regenerate Figure 2
+//! cadnn table2                              regenerate Table 2
+//! cadnn compress [--report PATH]            §3 compression claims
+//! cadnn tune [--model NAME]                 optimization-parameter selection demo
+//! cadnn serve [--model M] [--variant V] [--requests N] [--rps R]
+//!                                           serve a Poisson trace and report
+//! cadnn calibrate                           host kernel calibration table
+//! ```
+
+use anyhow::{anyhow, Result};
+use cadnn::bench::{figure2, print_table, table2};
+use cadnn::compress::profile::paper_profile;
+use cadnn::compress::size;
+use cadnn::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig};
+use cadnn::costmodel::calibrate;
+use cadnn::models;
+use cadnn::util::json::Json;
+use cadnn::util::rng::Rng;
+
+fn flag(args: &[String], name: &str) -> bool {
+    args.iter().any(|a| a == name)
+}
+
+fn opt(args: &[String], name: &str) -> Option<String> {
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1).cloned())
+}
+
+fn main() -> Result<()> {
+    cadnn::util::log::init();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("figure2") => cmd_figure2(&args),
+        Some("table2") => cmd_table2(),
+        Some("compress") => cmd_compress(&args),
+        Some("tune") => cmd_tune(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("profile") => cmd_profile(&args),
+        Some("calibrate") => cmd_calibrate(),
+        _ => {
+            eprintln!(
+                "usage: cadnn <figure2|table2|compress|tune|serve|profile|calibrate> [options]"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn cmd_figure2(args: &[String]) -> Result<()> {
+    let calib = if flag(args, "--measured") {
+        eprintln!("calibrating host kernels...");
+        calibrate::measure_host()
+    } else {
+        calibrate::CalibrationTable::nominal()
+    };
+    let uplift: f64 = opt(args, "--uplift").and_then(|s| s.parse().ok()).unwrap_or(1.25);
+    println!("Figure 2 — inference latency (ms), projected onto the Xiaomi 6");
+    println!("(Table 1 device model: Snapdragon 835 CPU @2.45GHz, Adreno 540 GPU @710MHz,");
+    println!(" shared LPDDR4X; calibration: {})\n", if calib.measured { "host-measured" } else { "nominal" });
+    let rows = figure2::figure2(&calib, uplift);
+    let mut table = Vec::new();
+    for m in models::EVAL_MODELS {
+        let mut row = vec![m.to_string()];
+        for s in figure2::SERIES {
+            let v = rows
+                .iter()
+                .find(|r| r.model == m && r.series == s)
+                .map(|r| format!("{:.1}", r.latency_ms))
+                .unwrap_or_default();
+            row.push(v);
+        }
+        table.push(row);
+    }
+    let mut headers = vec!["model"];
+    headers.extend(figure2::SERIES);
+    print_table(&headers, &table);
+    let h = figure2::headline(&rows);
+    println!();
+    println!(
+        "headline: resnet50 CADNN-SC {:.1} ms (paper: 26), CADNN-SG {:.1} ms (paper: 21)",
+        h.resnet50_sc_ms, h.resnet50_sg_ms
+    );
+    println!("          inception_v3 best {:.1} ms (paper: 35)", h.inception_best_ms);
+    println!(
+        "          max speedup vs TFLite {:.1}x (paper: up to 8.8x), vs TVM {:.1}x (paper: up to 6.4x)",
+        h.max_speedup_vs_tflite, h.max_speedup_vs_tvm
+    );
+    Ok(())
+}
+
+fn cmd_table2() -> Result<()> {
+    println!("Table 2 — DNN configurations (top-1/top-5 quoted from the paper; no ImageNet here)\n");
+    let rows: Vec<Vec<String>> = table2::table2()
+        .iter()
+        .map(|r| {
+            vec![
+                r.model.to_string(),
+                format!("{:.1}", r.size_mb),
+                format!("{:.1}", r.paper_size_mb),
+                format!("{:.1}", r.top1),
+                format!("{:.1}", r.top5),
+                r.weight_layers.to_string(),
+                r.compute_layers.to_string(),
+                r.paper_layers.to_string(),
+            ]
+        })
+        .collect();
+    print_table(
+        &["model", "size(MB)", "paper", "top1%", "top5%", "w-layers", "c-layers", "paper-layers"],
+        &rows,
+    );
+    Ok(())
+}
+
+fn cmd_compress(args: &[String]) -> Result<()> {
+    println!("§3 compression claims — accounting over exact architectures\n");
+    let mut rows = Vec::new();
+    for (name, claim) in [
+        ("lenet5", 348.0),
+        ("alexnet", 36.0),
+        ("vgg16", 34.0),
+        ("resnet18", 8.0),
+        ("resnet50", 9.2),
+    ] {
+        let g = models::build(name, 1).unwrap();
+        let p = paper_profile(&g);
+        let r = size::report(&g, &p);
+        rows.push(vec![
+            name.to_string(),
+            format!("{}", r.weights),
+            format!("{:.1}x", r.compression_rate),
+            format!("{claim}x"),
+            format!("{:.1}", r.dense_mb),
+            format!("{:.0}x", r.storage_reduction_no_idx()),
+            format!("{:.0}x", r.storage_reduction_idx16()),
+        ]);
+    }
+    print_table(
+        &["model", "weights", "rate", "paper", "dense MB", "4b-quant(no idx)", "4b+idx16"],
+        &rows,
+    );
+    // measured python run, if present
+    let report_path = opt(args, "--report")
+        .unwrap_or_else(|| "artifacts/compress_report.json".into());
+    if let Ok(text) = std::fs::read_to_string(&report_path) {
+        let j = Json::parse(&text).map_err(|e| anyhow!("{e}"))?;
+        if let Some(l) = j.get("measured").and_then(|m| m.get("lenet5")) {
+            println!("\nmeasured (python ADMM on synthetic digits — {report_path}):");
+            for key in [
+                "dense_acc", "pruned_acc", "pruned_rate", "quant_acc", "quant_rate",
+                "storage_reduction_no_idx",
+            ] {
+                if let Some(v) = l.get(key).and_then(|v| v.as_f64()) {
+                    println!("  {key} = {v}");
+                }
+            }
+        }
+    } else {
+        println!("\n(no measured report at {report_path}; run `make compress-report`)");
+    }
+    Ok(())
+}
+
+fn cmd_tune(args: &[String]) -> Result<()> {
+    let model = opt(args, "--model").unwrap_or_else(|| "resnet50".into());
+    let g = models::build(&model, 1).ok_or_else(|| anyhow!("unknown model {model}"))?;
+    println!("optimization-parameter selection on {model} GEMM shapes\n");
+    // representative conv-as-gemm shapes from the lowered graph
+    let lowered = cadnn::exec::Personality::CadnnDense.lower(&g);
+    let plan = cadnn::passes::layout::plan(&lowered);
+    let mut shapes: Vec<(usize, usize, usize)> = plan
+        .per_node
+        .values()
+        .map(|i| (i.gemm_m.min(4096), i.gemm_k, i.gemm_n))
+        .collect();
+    shapes.sort();
+    shapes.dedup();
+    shapes.truncate(6);
+    let mut rows = Vec::new();
+    for (m, k, n) in shapes {
+        let r = cadnn::tuner::tune(m, k, n, 2 << 20, 7);
+        rows.push(vec![
+            format!("{m}x{k}x{n}"),
+            format!("{:.0}", r.default_us),
+            format!("{:.0}", r.best_us),
+            format!("{:.2}x", r.speedup_vs_default()),
+            format!("mc{} nc{} kc{} u{}", r.best.mc, r.best.nc, r.best.kc, r.best.unroll),
+            format!("{}", r.evaluated),
+            format!("{}", r.pruned),
+        ]);
+    }
+    print_table(
+        &["shape (MxKxN)", "default us", "tuned us", "speedup", "best config", "evals", "pruned"],
+        &rows,
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &[String]) -> Result<()> {
+    let cfg = CoordinatorConfig {
+        artifacts_dir: opt(args, "--artifacts").unwrap_or_else(|| "artifacts".into()),
+        model: opt(args, "--model").unwrap_or_else(|| "lenet5".into()),
+        variant: opt(args, "--variant").unwrap_or_else(|| "dense".into()),
+        max_batch: opt(args, "--max-batch").and_then(|s| s.parse().ok()).unwrap_or(8),
+        max_wait_us: opt(args, "--max-wait-us").and_then(|s| s.parse().ok()).unwrap_or(2000),
+        policy: if flag(args, "--greedy") { BatchPolicy::Greedy } else { BatchPolicy::PadToFit },
+    };
+    let requests: usize = opt(args, "--requests").and_then(|s| s.parse().ok()).unwrap_or(64);
+    let rps: f64 = opt(args, "--rps").and_then(|s| s.parse().ok()).unwrap_or(100.0);
+    println!(
+        "serving {}/{} from {} — {} requests @ {:.0} req/s (Poisson)",
+        cfg.model, cfg.variant, cfg.artifacts_dir, requests, rps
+    );
+    let coord = Coordinator::start(cfg)?;
+    let input_len = coord.input_len;
+    let mut rng = Rng::new(9);
+    let mut pending = Vec::new();
+    for _ in 0..requests {
+        let mut img = vec![0.0f32; input_len];
+        rng.fill_normal(&mut img, 0.5);
+        pending.push(coord.submit(img)?);
+        std::thread::sleep(std::time::Duration::from_secs_f64(rng.exp(rps)));
+    }
+    for rx in pending {
+        let _ = rx.recv();
+    }
+    println!("\n{}", coord.metrics.lock().unwrap().report());
+    coord.shutdown()?;
+    Ok(())
+}
+
+/// The paper's §6 "DNN profiler" work-in-progress item: per-layer
+/// measured timing of a model under a personality on the native executor.
+fn cmd_profile(args: &[String]) -> Result<()> {
+    use cadnn::exec::{ModelInstance, Personality};
+    use cadnn::kernels::Tensor;
+    // full ImageNet models are heavy on one host core: profile a scaled
+    // tower by default, or any named model with --model
+    let model = opt(args, "--model").unwrap_or_else(|| "mobilenet_v1".into());
+    let personality = match opt(args, "--personality").as_deref() {
+        Some("tflite") => Personality::TfLiteLike,
+        Some("tvm") => Personality::TvmLike,
+        Some("cadnn-sparse") => Personality::CadnnSparse,
+        _ => Personality::CadnnDense,
+    };
+    let top: usize = opt(args, "--top").and_then(|s| s.parse().ok()).unwrap_or(15);
+    let g = models::build(&model, 1).ok_or_else(|| anyhow!("unknown model {model}"))?;
+    let profile_sp = paper_profile(&g);
+    let inst = ModelInstance::build(
+        &g,
+        personality,
+        if personality.sparse() { Some(&profile_sp) } else { None },
+        None,
+        2 << 20,
+    )
+    .map_err(|e| anyhow!(e))?;
+    let mut input = Tensor::zeros(&g.nodes[0].shape.0);
+    let mut rng = Rng::new(1);
+    rng.fill_normal(&mut input.data, 0.5);
+    eprintln!("profiling {model} under {} ...", personality.label());
+    let mut prof = inst.profile(&input, 1).map_err(|e| anyhow!(e))?;
+    let total: f64 = prof.iter().map(|p| p.us).sum();
+    prof.sort_by(|a, b| b.us.partial_cmp(&a.us).unwrap());
+    let mut rows = Vec::new();
+    for p in prof.iter().take(top) {
+        rows.push(vec![
+            p.name.clone(),
+            p.kind.to_string(),
+            format!("{:.0}", p.us),
+            format!("{:.1}%", 100.0 * p.us / total),
+            format!("{:.2}", p.gflops()),
+            format!("{}", p.out_bytes / 1024),
+        ]);
+    }
+    println!("total {:.1} ms over {} nodes; top {top} layers:", total / 1e3, prof.len());
+    print_table(&["layer", "kind", "us", "share", "GF/s", "out KiB"], &rows);
+    Ok(())
+}
+
+fn cmd_calibrate() -> Result<()> {
+    println!("measuring host kernels...");
+    let t = calibrate::measure_host();
+    println!("host peak (parallel blocked gemm): {:.1} GFLOPS", t.host_peak_gflops);
+    println!("host bandwidth (copy):             {:.1} GB/s", t.host_bw_gbps);
+    println!("efficiency ratios (achieved/peak):");
+    println!("  direct conv (naive): {:.3}", t.direct_conv.compute);
+    println!("  blocked gemm:        {:.3}", t.gemm.compute);
+    println!("  csr gemm (90% sp):   {:.3}", t.csr_gemm.compute);
+    Ok(())
+}

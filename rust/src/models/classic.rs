@@ -1,0 +1,143 @@
+//! Pre-BN classics: LeNet-5, AlexNet (grouped, 2-tower), VGG-16.
+
+use crate::ir::ops::{ActKind, Op, PoolKind};
+use crate::ir::{Graph, NodeId, Shape};
+
+fn relu(g: &mut Graph, name: &str, x: NodeId) -> NodeId {
+    g.add(format!("{name}_relu"), Op::Activation { kind: ActKind::Relu }, vec![x])
+}
+
+fn maxpool(g: &mut Graph, name: &str, x: NodeId, k: usize, s: usize) -> NodeId {
+    g.add(name, Op::Pool { kind: PoolKind::Max, k, stride: s, padding: 0 }, vec![x])
+}
+
+/// LeNet-5 (28x28x1, 'same' c1 then 'valid' c2 — the common MNIST
+/// variant; 61,706 params).
+pub fn lenet5(batch: usize) -> Graph {
+    let mut g = Graph::new("lenet5", Shape::nhwc(batch, 28, 28, 1));
+    let mut x = g.add("c1", Op::conv_b(5, 5, 1, 6, 1, 2), vec![0]);
+    x = relu(&mut g, "c1", x);
+    x = maxpool(&mut g, "p1", x, 2, 2);
+    x = g.add("c2", Op::conv_b(5, 5, 6, 16, 1, 0), vec![x]);
+    x = relu(&mut g, "c2", x);
+    x = maxpool(&mut g, "p2", x, 2, 2);
+    x = g.add("flat", Op::Flatten, vec![x]);
+    x = g.add("f1", Op::fc(400, 120), vec![x]);
+    x = relu(&mut g, "f1", x);
+    x = g.add("f2", Op::fc(120, 84), vec![x]);
+    x = relu(&mut g, "f2", x);
+    x = g.add("f3", Op::fc(84, 10), vec![x]);
+    g.add("softmax", Op::Softmax, vec![x]);
+    g
+}
+
+/// AlexNet (original grouped variant; 60,965,224 params at 1000 classes).
+pub fn alexnet(batch: usize) -> Graph {
+    let mut g = Graph::new("alexnet", Shape::nhwc(batch, 227, 227, 3));
+    let mut x = g.add("conv1", Op::conv_b(11, 11, 3, 96, 4, 0), vec![0]);
+    x = relu(&mut g, "conv1", x);
+    x = maxpool(&mut g, "pool1", x, 3, 2);
+    x = g.add("conv2", Op::conv_bg(5, 5, 96, 256, 1, 2, 2), vec![x]);
+    x = relu(&mut g, "conv2", x);
+    x = maxpool(&mut g, "pool2", x, 3, 2);
+    x = g.add("conv3", Op::conv_b(3, 3, 256, 384, 1, 1), vec![x]);
+    x = relu(&mut g, "conv3", x);
+    x = g.add("conv4", Op::conv_bg(3, 3, 384, 384, 1, 1, 2), vec![x]);
+    x = relu(&mut g, "conv4", x);
+    x = g.add("conv5", Op::conv_bg(3, 3, 384, 256, 1, 1, 2), vec![x]);
+    x = relu(&mut g, "conv5", x);
+    x = maxpool(&mut g, "pool5", x, 3, 2);
+    x = g.add("flat", Op::Flatten, vec![x]);
+    x = g.add("fc6", Op::fc(9216, 4096), vec![x]);
+    x = relu(&mut g, "fc6", x);
+    x = g.add("fc7", Op::fc(4096, 4096), vec![x]);
+    x = relu(&mut g, "fc7", x);
+    x = g.add("fc8", Op::fc(4096, 1000), vec![x]);
+    g.add("softmax", Op::Softmax, vec![x]);
+    g
+}
+
+/// VGG-16 (configuration D; 138,357,544 params at 1000 classes).
+pub fn vgg16(batch: usize) -> Graph {
+    let mut g = Graph::new("vgg16", Shape::nhwc(batch, 224, 224, 3));
+    let mut x: NodeId = 0;
+    let cfg: [(usize, usize, usize); 13] = [
+        (1, 3, 64), (2, 64, 64),
+        (1, 64, 128), (2, 128, 128),
+        (1, 128, 256), (2, 256, 256), (3, 256, 256),
+        (1, 256, 512), (2, 512, 512), (3, 512, 512),
+        (1, 512, 512), (2, 512, 512), (3, 512, 512),
+    ];
+    let mut stage = 1usize;
+    for (i, (idx, cin, cout)) in cfg.iter().enumerate() {
+        let name = format!("conv{stage}_{idx}");
+        x = g.add(&name, Op::conv_b(3, 3, *cin, *cout, 1, 1), vec![x]);
+        x = relu(&mut g, &name, x);
+        // pool after the last conv of each stage (indices 1,3,6,9,12)
+        if matches!(i, 1 | 3 | 6 | 9 | 12) {
+            x = maxpool(&mut g, &format!("pool{stage}"), x, 2, 2);
+            stage += 1;
+        }
+    }
+    x = g.add("flat", Op::Flatten, vec![x]);
+    x = g.add("fc6", Op::fc(25088, 4096), vec![x]);
+    x = relu(&mut g, "fc6", x);
+    x = g.add("fc7", Op::fc(4096, 4096), vec![x]);
+    x = relu(&mut g, "fc7", x);
+    x = g.add("fc8", Op::fc(4096, 1000), vec![x]);
+    g.add("softmax", Op::Softmax, vec![x]);
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lenet5_shapes() {
+        let g = lenet5(2);
+        assert!(g.validate().is_ok());
+        assert_eq!(g.nodes.last().unwrap().shape, Shape::vec2(2, 10));
+        assert_eq!(g.param_count(), 61_706);
+        assert_eq!(g.weight_layer_count(), 5);
+    }
+
+    #[test]
+    fn alexnet_fc6_geometry() {
+        // pool5 must produce 6x6x256 = 9216 features
+        let g = alexnet(1);
+        let flat = g.nodes.iter().find(|n| n.name == "flat").unwrap();
+        assert_eq!(flat.shape, Shape::vec2(1, 9216));
+        assert_eq!(g.param_count(), 60_965_224);
+    }
+
+    #[test]
+    fn alexnet_grouped_conv2_weights() {
+        let g = alexnet(1);
+        let c2 = g.nodes.iter().find(|n| n.name == "conv2").unwrap();
+        assert_eq!(c2.op.weight_count(), 307_200); // 5*5*48*256
+    }
+
+    #[test]
+    fn vgg16_geometry_and_params() {
+        let g = vgg16(1);
+        assert!(g.validate().is_ok());
+        let flat = g.nodes.iter().find(|n| n.name == "flat").unwrap();
+        assert_eq!(flat.shape, Shape::vec2(1, 25088)); // 7*7*512
+        assert_eq!(g.param_count(), 138_357_544);
+        assert_eq!(g.weight_layer_count(), 16);
+    }
+
+    #[test]
+    fn vgg16_conv_weight_profile_matches_compress_run() {
+        // The python compress_run.py profile hard-codes these; keep in sync.
+        let g = vgg16(1);
+        let w = |name: &str| {
+            g.nodes.iter().find(|n| n.name == name).unwrap().op.weight_count()
+        };
+        assert_eq!(w("conv1_1"), 1_728);
+        assert_eq!(w("conv3_2"), 589_824);
+        assert_eq!(w("conv5_3"), 2_359_296);
+        assert_eq!(w("fc6"), 102_760_448);
+    }
+}

@@ -1,0 +1,173 @@
+//! Inception-V3 (299x299, no aux head at inference) — the torchvision /
+//! TF-slim structure: stem, 3x InceptionA, InceptionB, 4x InceptionC,
+//! InceptionD, 2x InceptionE, GAP, FC.
+
+use crate::ir::ops::{ActKind, Op, PoolKind};
+use crate::ir::{Graph, NodeId, Shape};
+
+/// BasicConv2d: conv (possibly asymmetric) + BN + ReLU.
+#[allow(clippy::too_many_arguments)]
+fn bconv(
+    g: &mut Graph,
+    name: &str,
+    x: NodeId,
+    kh: usize,
+    kw: usize,
+    cin: usize,
+    cout: usize,
+    stride: usize,
+    padh: usize,
+    padw: usize,
+) -> NodeId {
+    let c = g.add(name, Op::conv_asym(kh, kw, cin, cout, stride, padh, padw), vec![x]);
+    let b = g.add(format!("{name}_bn"), Op::BatchNorm { c: cout }, vec![c]);
+    g.add(format!("{name}_relu"), Op::Activation { kind: ActKind::Relu }, vec![b])
+}
+
+fn avgpool3(g: &mut Graph, name: &str, x: NodeId) -> NodeId {
+    g.add(name, Op::Pool { kind: PoolKind::Avg, k: 3, stride: 1, padding: 1 }, vec![x])
+}
+
+fn maxpool3s2(g: &mut Graph, name: &str, x: NodeId) -> NodeId {
+    g.add(name, Op::Pool { kind: PoolKind::Max, k: 3, stride: 2, padding: 0 }, vec![x])
+}
+
+/// InceptionA(cin, pool_features): out = 64 + 64 + 96 + pf channels.
+fn inception_a(g: &mut Graph, name: &str, x: NodeId, cin: usize, pf: usize) -> NodeId {
+    let b1 = bconv(g, &format!("{name}_1x1"), x, 1, 1, cin, 64, 1, 0, 0);
+    let b5 = bconv(g, &format!("{name}_5x5a"), x, 1, 1, cin, 48, 1, 0, 0);
+    let b5 = bconv(g, &format!("{name}_5x5b"), b5, 5, 5, 48, 64, 1, 2, 2);
+    let d = bconv(g, &format!("{name}_dbl_a"), x, 1, 1, cin, 64, 1, 0, 0);
+    let d = bconv(g, &format!("{name}_dbl_b"), d, 3, 3, 64, 96, 1, 1, 1);
+    let d = bconv(g, &format!("{name}_dbl_c"), d, 3, 3, 96, 96, 1, 1, 1);
+    let p = avgpool3(g, &format!("{name}_pool"), x);
+    let p = bconv(g, &format!("{name}_pool_proj"), p, 1, 1, cin, pf, 1, 0, 0);
+    g.add(format!("{name}_cat"), Op::Concat, vec![b1, b5, d, p])
+}
+
+/// InceptionB (grid reduction 35 -> 17): out = 384 + 96 + cin.
+fn inception_b(g: &mut Graph, name: &str, x: NodeId, cin: usize) -> NodeId {
+    let b3 = bconv(g, &format!("{name}_3x3"), x, 3, 3, cin, 384, 2, 0, 0);
+    let d = bconv(g, &format!("{name}_dbl_a"), x, 1, 1, cin, 64, 1, 0, 0);
+    let d = bconv(g, &format!("{name}_dbl_b"), d, 3, 3, 64, 96, 1, 1, 1);
+    let d = bconv(g, &format!("{name}_dbl_c"), d, 3, 3, 96, 96, 2, 0, 0);
+    let p = maxpool3s2(g, &format!("{name}_pool"), x);
+    g.add(format!("{name}_cat"), Op::Concat, vec![b3, d, p])
+}
+
+/// InceptionC (17x17, factorized 7x7; c7 = intermediate width): out = 768.
+fn inception_c(g: &mut Graph, name: &str, x: NodeId, cin: usize, c7: usize) -> NodeId {
+    let b1 = bconv(g, &format!("{name}_1x1"), x, 1, 1, cin, 192, 1, 0, 0);
+    let b7 = bconv(g, &format!("{name}_7a"), x, 1, 1, cin, c7, 1, 0, 0);
+    let b7 = bconv(g, &format!("{name}_7b"), b7, 1, 7, c7, c7, 1, 0, 3);
+    let b7 = bconv(g, &format!("{name}_7c"), b7, 7, 1, c7, 192, 1, 3, 0);
+    let d = bconv(g, &format!("{name}_7dbl_a"), x, 1, 1, cin, c7, 1, 0, 0);
+    let d = bconv(g, &format!("{name}_7dbl_b"), d, 7, 1, c7, c7, 1, 3, 0);
+    let d = bconv(g, &format!("{name}_7dbl_c"), d, 1, 7, c7, c7, 1, 0, 3);
+    let d = bconv(g, &format!("{name}_7dbl_d"), d, 7, 1, c7, c7, 1, 3, 0);
+    let d = bconv(g, &format!("{name}_7dbl_e"), d, 1, 7, c7, 192, 1, 0, 3);
+    let p = avgpool3(g, &format!("{name}_pool"), x);
+    let p = bconv(g, &format!("{name}_pool_proj"), p, 1, 1, cin, 192, 1, 0, 0);
+    g.add(format!("{name}_cat"), Op::Concat, vec![b1, b7, d, p])
+}
+
+/// InceptionD (grid reduction 17 -> 8): out = 320 + 192 + cin.
+fn inception_d(g: &mut Graph, name: &str, x: NodeId, cin: usize) -> NodeId {
+    let b3 = bconv(g, &format!("{name}_3x3a"), x, 1, 1, cin, 192, 1, 0, 0);
+    let b3 = bconv(g, &format!("{name}_3x3b"), b3, 3, 3, 192, 320, 2, 0, 0);
+    let b7 = bconv(g, &format!("{name}_7x7a"), x, 1, 1, cin, 192, 1, 0, 0);
+    let b7 = bconv(g, &format!("{name}_7x7b"), b7, 1, 7, 192, 192, 1, 0, 3);
+    let b7 = bconv(g, &format!("{name}_7x7c"), b7, 7, 1, 192, 192, 1, 3, 0);
+    let b7 = bconv(g, &format!("{name}_7x7d"), b7, 3, 3, 192, 192, 2, 0, 0);
+    let p = maxpool3s2(g, &format!("{name}_pool"), x);
+    g.add(format!("{name}_cat"), Op::Concat, vec![b3, b7, p])
+}
+
+/// InceptionE (8x8, expanded splits): out = 320 + 768 + 768 + 192 = 2048.
+fn inception_e(g: &mut Graph, name: &str, x: NodeId, cin: usize) -> NodeId {
+    let b1 = bconv(g, &format!("{name}_1x1"), x, 1, 1, cin, 320, 1, 0, 0);
+    let b3 = bconv(g, &format!("{name}_3x3a"), x, 1, 1, cin, 384, 1, 0, 0);
+    let b3a = bconv(g, &format!("{name}_3x3b1"), b3, 1, 3, 384, 384, 1, 0, 1);
+    let b3b = bconv(g, &format!("{name}_3x3b2"), b3, 3, 1, 384, 384, 1, 1, 0);
+    let b3 = g.add(format!("{name}_3x3cat"), Op::Concat, vec![b3a, b3b]);
+    let d = bconv(g, &format!("{name}_dbl_a"), x, 1, 1, cin, 448, 1, 0, 0);
+    let d = bconv(g, &format!("{name}_dbl_b"), d, 3, 3, 448, 384, 1, 1, 1);
+    let da = bconv(g, &format!("{name}_dbl_c1"), d, 1, 3, 384, 384, 1, 0, 1);
+    let db = bconv(g, &format!("{name}_dbl_c2"), d, 3, 1, 384, 384, 1, 1, 0);
+    let d = g.add(format!("{name}_dblcat"), Op::Concat, vec![da, db]);
+    let p = avgpool3(g, &format!("{name}_pool"), x);
+    let p = bconv(g, &format!("{name}_pool_proj"), p, 1, 1, cin, 192, 1, 0, 0);
+    g.add(format!("{name}_cat"), Op::Concat, vec![b1, b3, d, p])
+}
+
+pub fn v3(batch: usize) -> Graph {
+    let mut g = Graph::new("inception_v3", Shape::nhwc(batch, 299, 299, 3));
+    // stem
+    let mut x = bconv(&mut g, "stem1", 0, 3, 3, 3, 32, 2, 0, 0); // 149
+    x = bconv(&mut g, "stem2", x, 3, 3, 32, 32, 1, 0, 0); // 147
+    x = bconv(&mut g, "stem3", x, 3, 3, 32, 64, 1, 1, 1); // 147
+    x = maxpool3s2(&mut g, "stem_pool1", x); // 73
+    x = bconv(&mut g, "stem4", x, 1, 1, 64, 80, 1, 0, 0);
+    x = bconv(&mut g, "stem5", x, 3, 3, 80, 192, 1, 0, 0); // 71
+    x = maxpool3s2(&mut g, "stem_pool2", x); // 35
+    // 3x InceptionA
+    x = inception_a(&mut g, "mixed0", x, 192, 32); // 256
+    x = inception_a(&mut g, "mixed1", x, 256, 64); // 288
+    x = inception_a(&mut g, "mixed2", x, 288, 64); // 288
+    // reduction
+    x = inception_b(&mut g, "mixed3", x, 288); // 768 @ 17
+    // 4x InceptionC
+    x = inception_c(&mut g, "mixed4", x, 768, 128);
+    x = inception_c(&mut g, "mixed5", x, 768, 160);
+    x = inception_c(&mut g, "mixed6", x, 768, 160);
+    x = inception_c(&mut g, "mixed7", x, 768, 192);
+    // reduction
+    x = inception_d(&mut g, "mixed8", x, 768); // 1280 @ 8
+    // 2x InceptionE
+    x = inception_e(&mut g, "mixed9", x, 1280); // 2048
+    x = inception_e(&mut g, "mixed10", x, 2048); // 2048
+    x = g.add("gap", Op::GlobalAvgPool, vec![x]);
+    x = g.add("fc", Op::fc(2048, 1000), vec![x]);
+    g.add("softmax", Op::Softmax, vec![x]);
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_and_validates() {
+        let g = v3(1);
+        g.validate().unwrap();
+        assert_eq!(g.nodes.last().unwrap().shape, Shape::vec2(1, 1000));
+    }
+
+    #[test]
+    fn params_match_table2() {
+        // canonical 23.85M params -> 95.4 MB (Table 2: 95.4)
+        let g = v3(1);
+        let p = g.param_count();
+        assert!(
+            (23_600_000..24_000_000).contains(&p),
+            "inception_v3 params {p}"
+        );
+    }
+
+    #[test]
+    fn grid_sizes() {
+        let g = v3(1);
+        let find = |n: &str| g.nodes.iter().find(|x| x.name == n).unwrap().shape.clone();
+        assert_eq!(find("mixed2_cat"), Shape::nhwc(1, 35, 35, 288));
+        assert_eq!(find("mixed3_cat"), Shape::nhwc(1, 17, 17, 768));
+        assert_eq!(find("mixed8_cat"), Shape::nhwc(1, 8, 8, 1280));
+        assert_eq!(find("mixed10_cat"), Shape::nhwc(1, 8, 8, 2048));
+    }
+
+    #[test]
+    fn flops_around_6g() {
+        // canonical ~5.7 GMACs -> ~11.4 GFLOPs (2*MACs convention)
+        let gf = v3(1).flops() as f64 / 1e9;
+        assert!((10.5..12.5).contains(&gf), "inception flops {gf}");
+    }
+}

@@ -1,0 +1,168 @@
+//! MobileNet-V1 (depthwise-separable) and MobileNet-V2 (inverted
+//! residuals, ReLU6), width multiplier 1.0, 224x224.
+
+use crate::ir::ops::{ActKind, Op};
+use crate::ir::{Graph, NodeId, Shape};
+
+fn conv_bn_act(
+    g: &mut Graph,
+    name: &str,
+    x: NodeId,
+    kh: usize,
+    cin: usize,
+    cout: usize,
+    stride: usize,
+    padding: usize,
+    act: ActKind,
+) -> NodeId {
+    let c = g.add(name, Op::conv(kh, kh, cin, cout, stride, padding), vec![x]);
+    let b = g.add(format!("{name}_bn"), Op::BatchNorm { c: cout }, vec![c]);
+    if act == ActKind::None {
+        b
+    } else {
+        g.add(format!("{name}_act"), Op::Activation { kind: act }, vec![b])
+    }
+}
+
+fn dw_bn_act(
+    g: &mut Graph,
+    name: &str,
+    x: NodeId,
+    c: usize,
+    stride: usize,
+    act: ActKind,
+) -> NodeId {
+    let d = g.add(name, Op::DepthwiseConv2d { kh: 3, kw: 3, c, stride, padding: 1 }, vec![x]);
+    let b = g.add(format!("{name}_bn"), Op::BatchNorm { c }, vec![d]);
+    g.add(format!("{name}_act"), Op::Activation { kind: act }, vec![b])
+}
+
+/// MobileNet-V1: stem + 13 depthwise-separable blocks (paper §4's
+/// "Depthwise Conv + BN + Activation" fusion target).
+pub fn v1(batch: usize) -> Graph {
+    let mut g = Graph::new("mobilenet_v1", Shape::nhwc(batch, 224, 224, 3));
+    let mut x = conv_bn_act(&mut g, "stem", 0, 3, 3, 32, 2, 1, ActKind::Relu);
+    // (cin, cout, stride) for the 13 separable blocks
+    let blocks: [(usize, usize, usize); 13] = [
+        (32, 64, 1),
+        (64, 128, 2),
+        (128, 128, 1),
+        (128, 256, 2),
+        (256, 256, 1),
+        (256, 512, 2),
+        (512, 512, 1),
+        (512, 512, 1),
+        (512, 512, 1),
+        (512, 512, 1),
+        (512, 512, 1),
+        (512, 1024, 2),
+        (1024, 1024, 1),
+    ];
+    for (i, (cin, cout, s)) in blocks.iter().enumerate() {
+        x = dw_bn_act(&mut g, &format!("b{i}_dw"), x, *cin, *s, ActKind::Relu);
+        x = conv_bn_act(&mut g, &format!("b{i}_pw"), x, 1, *cin, *cout, 1, 0, ActKind::Relu);
+    }
+    x = g.add("gap", Op::GlobalAvgPool, vec![x]);
+    x = g.add("fc", Op::fc(1024, 1000), vec![x]);
+    g.add("softmax", Op::Softmax, vec![x]);
+    g
+}
+
+/// One MobileNet-V2 inverted-residual block.
+fn inverted_residual(
+    g: &mut Graph,
+    name: &str,
+    x: NodeId,
+    cin: usize,
+    cout: usize,
+    stride: usize,
+    expand: usize,
+) -> NodeId {
+    let hidden = cin * expand;
+    let mut h = x;
+    if expand != 1 {
+        h = conv_bn_act(g, &format!("{name}_exp"), h, 1, cin, hidden, 1, 0, ActKind::Relu6);
+    }
+    h = dw_bn_act(g, &format!("{name}_dw"), h, hidden, stride, ActKind::Relu6);
+    // linear bottleneck: no activation after the projection
+    h = conv_bn_act(g, &format!("{name}_proj"), h, 1, hidden, cout, 1, 0, ActKind::None);
+    if stride == 1 && cin == cout {
+        g.add(format!("{name}_add"), Op::Add, vec![h, x])
+    } else {
+        h
+    }
+}
+
+/// MobileNet-V2 (t,c,n,s table from the paper).
+pub fn v2(batch: usize) -> Graph {
+    let mut g = Graph::new("mobilenet_v2", Shape::nhwc(batch, 224, 224, 3));
+    let mut x = conv_bn_act(&mut g, "stem", 0, 3, 3, 32, 2, 1, ActKind::Relu6);
+    let cfg: [(usize, usize, usize, usize); 7] = [
+        // (expand, cout, repeats, stride)
+        (1, 16, 1, 1),
+        (6, 24, 2, 2),
+        (6, 32, 3, 2),
+        (6, 64, 4, 2),
+        (6, 96, 3, 1),
+        (6, 160, 3, 2),
+        (6, 320, 1, 1),
+    ];
+    let mut cin = 32;
+    for (bi, (t, c, n, s)) in cfg.iter().enumerate() {
+        for r in 0..*n {
+            let stride = if r == 0 { *s } else { 1 };
+            x = inverted_residual(&mut g, &format!("ir{bi}_{r}"), x, cin, *c, stride, *t);
+            cin = *c;
+        }
+    }
+    x = conv_bn_act(&mut g, "head", x, 1, 320, 1280, 1, 0, ActKind::Relu6);
+    x = g.add("gap", Op::GlobalAvgPool, vec![x]);
+    x = g.add("fc", Op::fc(1280, 1000), vec![x]);
+    g.add("softmax", Op::Softmax, vec![x]);
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn v1_params_match_table2() {
+        let g = v1(1);
+        assert!(g.validate().is_ok());
+        // canonical 4.23M params -> 16.9 MB; Table 2 says 17.1 MB
+        let p = g.param_count();
+        assert!((4_200_000..4_280_000).contains(&p), "v1 params {p}");
+        // 27 convs (1 stem + 13 dw + 13 pw) + 1 fc
+        assert_eq!(g.weight_layer_count(), 28);
+    }
+
+    #[test]
+    fn v1_flops_around_1_1g() {
+        let gf = v1(1).flops() as f64 / 1e9;
+        assert!((1.1..1.3).contains(&gf), "v1 flops {gf}");
+    }
+
+    #[test]
+    fn v2_params_match_table2() {
+        let g = v2(1);
+        assert!(g.validate().is_ok());
+        let p = g.param_count();
+        assert!((3_470_000..3_540_000).contains(&p), "v2 params {p}");
+    }
+
+    #[test]
+    fn v2_residual_adds_present() {
+        let g = v2(1);
+        let adds = g.nodes.iter().filter(|n| matches!(n.op, Op::Add)).count();
+        // repeats beyond the first in each stage: 1+2+3+2+2+0 = 10
+        assert_eq!(adds, 10);
+    }
+
+    #[test]
+    fn v2_final_spatial_7x7() {
+        let g = v2(1);
+        let head = g.nodes.iter().find(|n| n.name == "head_act").unwrap();
+        assert_eq!(head.shape, Shape::nhwc(1, 7, 7, 1280));
+    }
+}

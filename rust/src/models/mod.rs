@@ -1,0 +1,122 @@
+//! Exact-architecture model builders.
+//!
+//! Two families:
+//! - **Evaluation subjects** (Figure 2 / Table 2): MobileNet-V1,
+//!   MobileNet-V2, Inception-V3, ResNet-50 at 224x224(299 for Inception)
+//!   ImageNet geometry. Parameter counts are pinned against the canonical
+//!   values in unit tests (Table 2's Size(M) = params * 4 bytes).
+//! - **§3 pruning subjects**: LeNet-5, AlexNet, VGG-16, ResNet-18, used
+//!   by the compression accounting.
+//!
+//! Builders emit *pre-pass* graphs (Conv/BN/Act as separate nodes) —
+//! exactly what a model zoo hands a mobile framework — so the paper's
+//! fusion/transformation passes have real work to do.
+
+pub mod classic;
+pub mod inception;
+pub mod mobilenet;
+pub mod resnet;
+
+use crate::ir::Graph;
+
+/// Figure 2 / Table 2 evaluation subjects.
+pub const EVAL_MODELS: [&str; 4] = ["mobilenet_v1", "mobilenet_v2", "inception_v3", "resnet50"];
+
+/// §3 compression subjects.
+pub const COMPRESS_MODELS: [&str; 4] = ["lenet5", "alexnet", "vgg16", "resnet18"];
+
+/// Build any model by name at the given batch size.
+pub fn build(name: &str, batch: usize) -> Option<Graph> {
+    Some(match name {
+        "lenet5" => classic::lenet5(batch),
+        "alexnet" => classic::alexnet(batch),
+        "vgg16" => classic::vgg16(batch),
+        "resnet18" => resnet::resnet18(batch),
+        "resnet50" => resnet::resnet50(batch),
+        "mobilenet_v1" => mobilenet::v1(batch),
+        "mobilenet_v2" => mobilenet::v2(batch),
+        "inception_v3" => inception::v3(batch),
+        _ => return None,
+    })
+}
+
+pub fn all_names() -> Vec<&'static str> {
+    vec![
+        "lenet5", "alexnet", "vgg16", "resnet18", "resnet50",
+        "mobilenet_v1", "mobilenet_v2", "inception_v3",
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_models_build_and_validate() {
+        for name in all_names() {
+            let g = build(name, 1).unwrap();
+            g.validate().unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert!(g.flops() > 0, "{name} has zero flops");
+        }
+    }
+
+    #[test]
+    fn batch_scales_flops_linearly() {
+        let f1 = build("resnet50", 1).unwrap().flops();
+        let f4 = build("resnet50", 4).unwrap().flops();
+        assert_eq!(f4, 4 * f1);
+    }
+
+    #[test]
+    fn unknown_model_is_none() {
+        assert!(build("nope", 1).is_none());
+    }
+
+    /// Table 2 "Size (M)" pins: params * 4 bytes within 2% of the paper.
+    #[test]
+    fn table2_model_sizes() {
+        let cases = [
+            ("mobilenet_v1", 17.1),
+            ("mobilenet_v2", 14.1),
+            ("inception_v3", 95.4),
+            ("resnet50", 102.4),
+        ];
+        for (name, paper_mb) in cases {
+            let g = build(name, 1).unwrap();
+            let mb = g.size_mb();
+            let rel = (mb - paper_mb).abs() / paper_mb;
+            assert!(rel < 0.02, "{name}: {mb:.1} MB vs paper {paper_mb} MB ({rel:.3})");
+        }
+    }
+
+    /// Canonical parameter counts for the §3 subjects.
+    #[test]
+    fn classic_param_counts() {
+        assert_eq!(build("lenet5", 1).unwrap().param_count(), 61_706);
+        assert_eq!(build("alexnet", 1).unwrap().param_count(), 60_965_224);
+        assert_eq!(build("vgg16", 1).unwrap().param_count(), 138_357_544);
+        // ResNet-18: 11.69M (weights + BN), canonical torchvision count.
+        let r18 = build("resnet18", 1).unwrap().param_count();
+        assert!((11_600_000..11_800_000).contains(&r18), "resnet18: {r18}");
+    }
+
+    /// ResNet-50: 25.557M *learnable* params (torchvision convention:
+    /// BN gamma/beta only) — our stored-model convention also counts BN
+    /// running stats (4/channel, what a deployed file ships), giving
+    /// 25.610M = 102.4 MB, exactly Table 2's "102.4".
+    #[test]
+    fn resnet50_param_count() {
+        let g = build("resnet50", 1).unwrap();
+        assert_eq!(g.param_count(), 25_610_152, "stored params (BN=4/c)");
+        // learnable convention: subtract the 2 running stats per BN channel
+        let bn_channels: usize = g
+            .nodes
+            .iter()
+            .map(|n| match n.op {
+                crate::ir::Op::BatchNorm { c } => c,
+                _ => 0,
+            })
+            .sum();
+        assert_eq!(g.param_count() - 2 * bn_channels, 25_557_032, "learnable params");
+    }
+}

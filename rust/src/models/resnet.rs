@@ -1,0 +1,142 @@
+//! ResNet-18 (basic blocks) and ResNet-50 (bottleneck blocks), ImageNet
+//! geometry, BN after every conv (pre-pass graphs: Conv/BN/Act separate).
+
+use crate::ir::ops::{ActKind, Op, PoolKind};
+use crate::ir::{Graph, NodeId, Shape};
+
+fn conv_bn(
+    g: &mut Graph,
+    name: &str,
+    x: NodeId,
+    kh: usize,
+    cin: usize,
+    cout: usize,
+    stride: usize,
+    padding: usize,
+    relu: bool,
+) -> NodeId {
+    let c = g.add(name, Op::conv(kh, kh, cin, cout, stride, padding), vec![x]);
+    let b = g.add(format!("{name}_bn"), Op::BatchNorm { c: cout }, vec![c]);
+    if relu {
+        g.add(format!("{name}_relu"), Op::Activation { kind: ActKind::Relu }, vec![b])
+    } else {
+        b
+    }
+}
+
+fn stem(g: &mut Graph) -> NodeId {
+    let x = conv_bn(g, "conv1", 0, 7, 3, 64, 2, 3, true);
+    g.add("maxpool", Op::Pool { kind: PoolKind::Max, k: 3, stride: 2, padding: 1 }, vec![x])
+}
+
+/// Basic block: 3x3 -> 3x3 (+ 1x1 downsample shortcut when needed).
+fn basic_block(
+    g: &mut Graph,
+    name: &str,
+    x: NodeId,
+    cin: usize,
+    cout: usize,
+    stride: usize,
+) -> NodeId {
+    let c1 = conv_bn(g, &format!("{name}_c1"), x, 3, cin, cout, stride, 1, true);
+    let c2 = conv_bn(g, &format!("{name}_c2"), c1, 3, cout, cout, 1, 1, false);
+    let shortcut = if stride != 1 || cin != cout {
+        conv_bn(g, &format!("{name}_down"), x, 1, cin, cout, stride, 0, false)
+    } else {
+        x
+    };
+    let add = g.add(format!("{name}_add"), Op::Add, vec![c2, shortcut]);
+    g.add(format!("{name}_out"), Op::Activation { kind: ActKind::Relu }, vec![add])
+}
+
+/// Bottleneck block: 1x1 reduce -> 3x3 -> 1x1 expand (expansion 4).
+fn bottleneck(
+    g: &mut Graph,
+    name: &str,
+    x: NodeId,
+    cin: usize,
+    planes: usize,
+    stride: usize,
+) -> NodeId {
+    let cout = planes * 4;
+    let c1 = conv_bn(g, &format!("{name}_c1"), x, 1, cin, planes, 1, 0, true);
+    let c2 = conv_bn(g, &format!("{name}_c2"), c1, 3, planes, planes, stride, 1, true);
+    let c3 = conv_bn(g, &format!("{name}_c3"), c2, 1, planes, cout, 1, 0, false);
+    let shortcut = if stride != 1 || cin != cout {
+        conv_bn(g, &format!("{name}_down"), x, 1, cin, cout, stride, 0, false)
+    } else {
+        x
+    };
+    let add = g.add(format!("{name}_add"), Op::Add, vec![c3, shortcut]);
+    g.add(format!("{name}_out"), Op::Activation { kind: ActKind::Relu }, vec![add])
+}
+
+pub fn resnet18(batch: usize) -> Graph {
+    let mut g = Graph::new("resnet18", Shape::nhwc(batch, 224, 224, 3));
+    let mut x = stem(&mut g);
+    let mut cin = 64;
+    for (si, (planes, blocks)) in [(64, 2), (128, 2), (256, 2), (512, 2)].iter().enumerate() {
+        for b in 0..*blocks {
+            let stride = if si > 0 && b == 0 { 2 } else { 1 };
+            x = basic_block(&mut g, &format!("s{si}b{b}"), x, cin, *planes, stride);
+            cin = *planes;
+        }
+    }
+    x = g.add("gap", Op::GlobalAvgPool, vec![x]);
+    x = g.add("fc", Op::fc(512, 1000), vec![x]);
+    g.add("softmax", Op::Softmax, vec![x]);
+    g
+}
+
+pub fn resnet50(batch: usize) -> Graph {
+    let mut g = Graph::new("resnet50", Shape::nhwc(batch, 224, 224, 3));
+    let mut x = stem(&mut g);
+    let mut cin = 64;
+    for (si, (planes, blocks)) in [(64, 3), (128, 4), (256, 6), (512, 3)].iter().enumerate() {
+        for b in 0..*blocks {
+            let stride = if si > 0 && b == 0 { 2 } else { 1 };
+            x = bottleneck(&mut g, &format!("s{si}b{b}"), x, cin, *planes, stride);
+            cin = planes * 4;
+        }
+    }
+    x = g.add("gap", Op::GlobalAvgPool, vec![x]);
+    x = g.add("fc", Op::fc(2048, 1000), vec![x]);
+    g.add("softmax", Op::Softmax, vec![x]);
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resnet50_structure() {
+        let g = resnet50(1);
+        assert!(g.validate().is_ok());
+        // 53 convs + 1 fc
+        assert_eq!(g.weight_layer_count(), 54);
+        assert_eq!(g.nodes.last().unwrap().shape, Shape::vec2(1, 1000));
+        // ~4.1 GFLOPs/image (2 * 2.05 GMACs, includes BN/act/pool overhead)
+        let gf = g.flops() as f64 / 1e9;
+        assert!((7.5..8.6).contains(&gf), "resnet50 flops {gf}");
+    }
+
+    #[test]
+    fn resnet18_structure() {
+        let g = resnet18(1);
+        assert!(g.validate().is_ok());
+        assert_eq!(g.weight_layer_count(), 21); // 20 convs + fc
+        let gf = g.flops() as f64 / 1e9;
+        assert!((3.3..3.9).contains(&gf), "resnet18 flops {gf}");
+    }
+
+    #[test]
+    fn stage_downsampling_shapes() {
+        let g = resnet50(1);
+        let find = |n: &str| g.nodes.iter().find(|x| x.name == n).unwrap().shape.clone();
+        assert_eq!(find("maxpool"), Shape::nhwc(1, 56, 56, 64));
+        assert_eq!(find("s0b2_out"), Shape::nhwc(1, 56, 56, 256));
+        assert_eq!(find("s1b0_out"), Shape::nhwc(1, 28, 28, 512));
+        assert_eq!(find("s3b2_out"), Shape::nhwc(1, 7, 7, 2048));
+    }
+}

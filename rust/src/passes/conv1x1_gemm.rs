@@ -1,0 +1,105 @@
+//! 1x1-convolution -> GEMM transformation (paper §4).
+//!
+//! A stride-1, pad-0 1x1 conv over NHWC is *exactly* a
+//! (N*H*W, Cin) x (Cin, Cout) matrix multiply on the same buffer (NHWC
+//! row-major flattens to rows of Cin features). The rewrite keeps the
+//! NHWC output shape in the Gemm op so downstream shape inference is
+//! untouched; the executor treats the buffer as 2-D.
+
+use super::Pass;
+use crate::ir::ops::{ActKind, Op};
+use crate::ir::Graph;
+
+pub struct Conv1x1ToGemm;
+
+impl Pass for Conv1x1ToGemm {
+    fn name(&self) -> &'static str {
+        "conv1x1_to_gemm"
+    }
+
+    fn run(&self, g: &Graph) -> Graph {
+        let mut out = Graph::new(&g.name, g.nodes[0].shape.clone());
+        for n in g.nodes.iter().skip(1) {
+            let in_shape = &g.node(n.inputs[0]).shape;
+            let new_op = match &n.op {
+                // fused 1x1 conv (post-fusion pipelines)
+                Op::FusedConvBnAct {
+                    kh: 1, kw: 1, cin, cout, stride: 1, padh: 0, padw: 0, act, groups: 1,
+                } => Some(Op::Gemm {
+                    m: in_shape.n() * in_shape.h() * in_shape.w(),
+                    k: *cin,
+                    n: *cout,
+                    act: *act,
+                    fused_epilogue: true,
+                    out_shape: n.shape.clone(),
+                }),
+                // bare 1x1 conv (unfused pipelines keep bn/act separate)
+                Op::Conv2d {
+                    kh: 1, kw: 1, cin, cout, stride: 1, padh: 0, padw: 0, bias, groups: 1,
+                } => Some(Op::Gemm {
+                    m: in_shape.n() * in_shape.h() * in_shape.w(),
+                    k: *cin,
+                    n: *cout,
+                    act: ActKind::None,
+                    fused_epilogue: *bias,
+                    out_shape: n.shape.clone(),
+                }),
+                _ => None,
+            };
+            out.add(n.name.clone(), new_op.unwrap_or_else(|| n.op.clone()), n.inputs.clone());
+        }
+        out.output = g.output;
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::passes::fusion::FusionPass;
+    use crate::models;
+
+    fn count_kind(g: &Graph, name: &str) -> usize {
+        g.nodes.iter().filter(|n| n.op.name() == name).count()
+    }
+
+    #[test]
+    fn mobilenet_v1_pointwise_become_gemm() {
+        let g = models::build("mobilenet_v1", 1).unwrap();
+        let f = FusionPass.run(&g);
+        let t = Conv1x1ToGemm.run(&f);
+        t.validate().unwrap();
+        assert_eq!(count_kind(&t, "gemm"), 13); // all pointwise convs
+        assert_eq!(count_kind(&t, "fused_conv_bn_act"), 1); // 3x3 stem stays
+    }
+
+    #[test]
+    fn resnet50_bottleneck_1x1s_transform() {
+        let g = models::build("resnet50", 1).unwrap();
+        let t = Conv1x1ToGemm.run(&FusionPass.run(&g));
+        t.validate().unwrap();
+        // 1x1 convs: c1+c3 per block (32) + stride-1 downsample (only s0:
+        // stride-2 downsamples are NOT gemm-eligible) = 33
+        assert_eq!(count_kind(&t, "gemm"), 33);
+    }
+
+    #[test]
+    fn gemm_preserves_flops() {
+        let g = models::build("mobilenet_v1", 1).unwrap();
+        let f = FusionPass.run(&g);
+        let t = Conv1x1ToGemm.run(&f);
+        let (a, b) = (f.flops() as f64, t.flops() as f64);
+        assert!((a - b).abs() / a < 0.02, "{a} vs {b}");
+    }
+
+    #[test]
+    fn strided_1x1_not_transformed() {
+        // build a graph with a stride-2 1x1 conv: must stay a conv
+        use crate::ir::Shape;
+        let mut g = Graph::new("t", Shape::nhwc(1, 8, 8, 4));
+        g.add("c", Op::conv(1, 1, 4, 8, 2, 0), vec![0]);
+        let t = Conv1x1ToGemm.run(&g);
+        assert_eq!(count_kind(&t, "conv2d"), 1);
+        assert_eq!(count_kind(&t, "gemm"), 0);
+    }
+}

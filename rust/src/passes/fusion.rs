@@ -1,0 +1,179 @@
+//! Fusion pass: Conv2d/DepthwiseConv2d + BatchNorm + Activation chains
+//! become single fused kernels (paper §4 "model computation fusion").
+//!
+//! Matching is consumer-aware: a BN or Act node is absorbed only when it
+//! is the *sole* consumer of its producer, so residual taps (e.g. ResNet
+//! shortcuts read the pre-activation tensor) are never miscompiled.
+
+use super::Pass;
+use crate::ir::ops::{ActKind, Op};
+use crate::ir::{Graph, NodeId};
+
+pub struct FusionPass;
+
+impl Pass for FusionPass {
+    fn name(&self) -> &'static str {
+        "fusion"
+    }
+
+    fn run(&self, g: &Graph) -> Graph {
+        let consumers = g.consumers();
+        // Nodes absorbed into a predecessor; maps old id -> old id whose
+        // rewritten node produces its value.
+        let mut absorbed: Vec<Option<NodeId>> = vec![None; g.len()];
+        // Fused op replacement for conv nodes (old conv id -> fused op +
+        // the last absorbed old id, whose consumers move to the fusion).
+        let mut fused: Vec<Option<(Op, NodeId)>> = vec![None; g.len()];
+
+        for n in &g.nodes {
+            let (conv_like, is_dw) = match &n.op {
+                Op::Conv2d { bias: false, .. } => (true, false),
+                Op::DepthwiseConv2d { .. } => (true, true),
+                _ => (false, false),
+            };
+            if !conv_like {
+                continue;
+            }
+            // conv -> bn (sole consumer)
+            let bn_id = match consumers[n.id].as_slice() {
+                [b] if matches!(g.node(*b).op, Op::BatchNorm { .. }) => *b,
+                _ => continue,
+            };
+            // bn -> act (sole consumer) — optional
+            let (act, tail) = match consumers[bn_id].as_slice() {
+                [a] => match g.node(*a).op {
+                    Op::Activation { kind } => (kind, *a),
+                    _ => (ActKind::None, bn_id),
+                },
+                _ => (ActKind::None, bn_id),
+            };
+            let fused_op = match &n.op {
+                Op::Conv2d { kh, kw, cin, cout, stride, padh, padw, groups, .. } => {
+                    Op::FusedConvBnAct {
+                        kh: *kh, kw: *kw, cin: *cin, cout: *cout,
+                        stride: *stride, padh: *padh, padw: *padw,
+                        act, groups: *groups,
+                    }
+                }
+                Op::DepthwiseConv2d { kh, kw, c, stride, padding } => {
+                    debug_assert!(is_dw);
+                    Op::FusedDwBnAct {
+                        kh: *kh, kw: *kw, c: *c,
+                        stride: *stride, padding: *padding, act,
+                    }
+                }
+                _ => unreachable!(),
+            };
+            fused[n.id] = Some((fused_op, tail));
+            absorbed[bn_id] = Some(n.id);
+            if tail != bn_id {
+                absorbed[tail] = Some(n.id);
+            }
+        }
+
+        // Rebuild with dense ids.
+        let input_shape = g.nodes[0].shape.clone();
+        let mut out = Graph::new(&g.name, input_shape);
+        // old id -> new id (for nodes that exist in the new graph; absorbed
+        // nodes map to their fusion's new id).
+        let mut remap: Vec<Option<NodeId>> = vec![None; g.len()];
+        remap[0] = Some(0);
+        for n in g.nodes.iter().skip(1) {
+            if absorbed[n.id].is_some() {
+                continue; // value produced by the fused node
+            }
+            let inputs: Vec<NodeId> = n
+                .inputs
+                .iter()
+                .map(|&i| {
+                    let src = resolve(&absorbed, i);
+                    remap[src].expect("input not yet emitted")
+                })
+                .collect();
+            let new_id = if let Some((fop, _)) = &fused[n.id] {
+                out.add(n.name.clone(), fop.clone(), inputs)
+            } else {
+                out.add(n.name.clone(), n.op.clone(), inputs)
+            };
+            remap[n.id] = Some(new_id);
+        }
+        out.output = remap[resolve(&absorbed, g.output)].unwrap();
+        out
+    }
+}
+
+/// Follow absorption links to the producing conv node.
+fn resolve(absorbed: &[Option<NodeId>], mut id: NodeId) -> NodeId {
+    while let Some(p) = absorbed[id] {
+        id = p;
+    }
+    id
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models;
+
+    fn count_kind(g: &Graph, name: &str) -> usize {
+        g.nodes.iter().filter(|n| n.op.name() == name).count()
+    }
+
+    #[test]
+    fn mobilenet_v1_fully_fuses() {
+        let g = models::build("mobilenet_v1", 1).unwrap();
+        let f = FusionPass.run(&g);
+        f.validate().unwrap();
+        // every conv + dw fused, zero bare bn/act remain
+        assert_eq!(count_kind(&f, "batchnorm"), 0);
+        assert_eq!(count_kind(&f, "activation"), 0);
+        assert_eq!(count_kind(&f, "fused_conv_bn_act"), 14); // stem + 13 pw
+        assert_eq!(count_kind(&f, "fused_dw_bn_act"), 13);
+        // paper's fusion motivation: node count collapses ~3x
+        assert!(f.len() * 2 < g.len());
+    }
+
+    #[test]
+    fn resnet50_keeps_preactivation_adds() {
+        let g = models::build("resnet50", 1).unwrap();
+        let f = FusionPass.run(&g);
+        f.validate().unwrap();
+        // The c3/downsample BNs fuse (act=None); the post-add ReLU cannot
+        // fuse into a conv (its producer is Add), so 16 block ReLUs + ...
+        assert_eq!(count_kind(&f, "batchnorm"), 0);
+        assert_eq!(count_kind(&f, "add"), 16);
+        // every add's relu survives as a bare activation
+        assert_eq!(count_kind(&f, "activation"), 16);
+        assert_eq!(count_kind(&f, "conv2d"), 0);
+        assert_eq!(count_kind(&f, "fused_conv_bn_act"), 53);
+    }
+
+    #[test]
+    fn fusion_preserves_weight_count() {
+        for name in ["resnet50", "mobilenet_v2", "inception_v3"] {
+            let g = models::build(name, 1).unwrap();
+            let f = FusionPass.run(&g);
+            assert_eq!(g.weight_count(), f.weight_count(), "{name}");
+        }
+    }
+
+    #[test]
+    fn fusion_preserves_flops_shape() {
+        // FLOPs change only by the folded BN/act epsilon (BN as separate
+        // op costs 2/elem; folded costs 2/elem in the fused op): within 2%.
+        let g = models::build("mobilenet_v2", 1).unwrap();
+        let f = FusionPass.run(&g);
+        let (a, b) = (g.flops() as f64, f.flops() as f64);
+        assert!((a - b).abs() / a < 0.02, "{a} vs {b}");
+    }
+
+    #[test]
+    fn classic_nets_without_bn_untouched_by_bn_fusion() {
+        // LeNet/AlexNet/VGG have conv(bias)+relu, no BN: the conv+bn
+        // matcher must not fire (bias convs are excluded).
+        let g = models::build("vgg16", 1).unwrap();
+        let f = FusionPass.run(&g);
+        assert_eq!(count_kind(&f, "fused_conv_bn_act"), 0);
+        assert_eq!(count_kind(&f, "conv2d"), 13);
+    }
+}

@@ -1,0 +1,180 @@
+//! Memory-layout transformation planning (paper §4: tiling, alignment,
+//! padding of filter layouts).
+//!
+//! The plan assigns each weight-bearing node a `LayoutInfo`: the SIMD
+//! alignment padding of its output-channel dimension, the tile shape the
+//! kernels will iterate in, and the resulting padded weight bytes. The
+//! executor and the cost model both consume the plan; the tuner can
+//! override the tile choice per layer.
+
+use crate::ir::ops::Op;
+use crate::ir::{Graph, NodeId};
+use crate::util::round_up;
+use std::collections::BTreeMap;
+
+/// SIMD vector width (f32 lanes) the layout aligns to. 8 = AVX2 on the
+/// host; the Snapdragon's NEON is 4 — the device spec carries its own.
+pub const SIMD_LANES: usize = 8;
+
+/// Tile configuration for a GEMM-like kernel (rows of the patch matrix x
+/// output channels x reduction depth), plus the register-unroll factor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct TileConfig {
+    pub mc: usize,
+    pub nc: usize,
+    pub kc: usize,
+    pub unroll: usize,
+}
+
+impl TileConfig {
+    /// The untuned default every personality starts from.
+    pub const DEFAULT: TileConfig = TileConfig { mc: 64, nc: 128, kc: 256, unroll: 8 };
+
+    /// Working-set bytes of one tile iteration (A + B + C panels, f32).
+    pub fn working_set_bytes(&self) -> usize {
+        4 * (self.mc * self.kc + self.kc * self.nc + self.mc * self.nc)
+    }
+
+    /// Legal for a given cache budget and problem shape.
+    pub fn legal(&self, m: usize, k: usize, n: usize, cache_bytes: usize) -> bool {
+        self.mc >= 1
+            && self.nc >= 1
+            && self.kc >= 1
+            && self.unroll >= 1
+            && self.unroll <= self.nc
+            && self.working_set_bytes() <= cache_bytes
+            && self.mc <= round_up(m.max(1), 8)
+            && self.nc <= round_up(n.max(1), 8)
+            && self.kc <= round_up(k.max(1), 8)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct LayoutInfo {
+    /// Output channels padded to the SIMD width.
+    pub cout_padded: usize,
+    /// Weight bytes after padding (what the transformed layout stores).
+    pub weight_bytes_padded: usize,
+    /// Chosen tile (DEFAULT until the tuner overrides).
+    pub tile: TileConfig,
+    /// GEMM-view dims (m = output pixels, k = reduction, n = cout).
+    pub gemm_m: usize,
+    pub gemm_k: usize,
+    pub gemm_n: usize,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct LayoutPlan {
+    pub per_node: BTreeMap<NodeId, LayoutInfo>,
+}
+
+impl LayoutPlan {
+    pub fn get(&self, id: NodeId) -> Option<&LayoutInfo> {
+        self.per_node.get(&id)
+    }
+
+    pub fn set_tile(&mut self, id: NodeId, tile: TileConfig) {
+        if let Some(info) = self.per_node.get_mut(&id) {
+            info.tile = tile;
+        }
+    }
+}
+
+/// Build the layout plan for a (post-pass) graph.
+pub fn plan(graph: &Graph) -> LayoutPlan {
+    let mut per_node = BTreeMap::new();
+    for n in &graph.nodes {
+        let (m, k, cout) = match &n.op {
+            Op::Conv2d { kh, kw, cin, cout, groups, .. }
+            | Op::FusedConvBnAct { kh, kw, cin, cout, groups, .. } => (
+                n.shape.n() * n.shape.h() * n.shape.w(),
+                kh * kw * (cin / groups),
+                *cout,
+            ),
+            Op::Gemm { m, k, n: nn, .. } => (*m, *k, *nn),
+            Op::FullyConnected { cin, cout, .. } => (n.shape.n(), *cin, *cout),
+            Op::DepthwiseConv2d { kh, kw, c, .. }
+            | Op::FusedDwBnAct { kh, kw, c, .. } => {
+                // depthwise: no reduction over channels; model as m=pixels,
+                // k=taps, n=channels for tiling purposes.
+                (n.shape.n() * n.shape.h() * n.shape.w(), kh * kw, *c)
+            }
+            _ => continue,
+        };
+        let cout_padded = round_up(cout, SIMD_LANES);
+        let weight_bytes_padded = k * cout_padded * 4;
+        per_node.insert(
+            n.id,
+            LayoutInfo {
+                cout_padded,
+                weight_bytes_padded,
+                tile: TileConfig::DEFAULT,
+                gemm_m: m,
+                gemm_k: k,
+                gemm_n: cout,
+            },
+        );
+    }
+    LayoutPlan { per_node }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models;
+    use crate::passes::{conv1x1_gemm::Conv1x1ToGemm, fusion::FusionPass, Pass};
+
+    #[test]
+    fn plan_covers_all_weight_nodes() {
+        let g = models::build("resnet50", 1).unwrap();
+        let t = Conv1x1ToGemm.run(&FusionPass.run(&g));
+        let p = plan(&t);
+        let weight_nodes = t.nodes.iter().filter(|n| n.op.weight_count() > 0).count();
+        assert_eq!(p.per_node.len(), weight_nodes);
+    }
+
+    #[test]
+    fn padding_is_simd_aligned() {
+        let g = models::build("lenet5", 1).unwrap();
+        let p = plan(&g);
+        for info in p.per_node.values() {
+            assert_eq!(info.cout_padded % SIMD_LANES, 0);
+            assert!(info.cout_padded >= info.gemm_n);
+            assert!(info.weight_bytes_padded >= info.gemm_k * info.gemm_n * 4);
+        }
+    }
+
+    #[test]
+    fn tile_legality() {
+        let t = TileConfig::DEFAULT;
+        assert!(t.legal(1000, 1000, 1000, 512 * 1024));
+        // too big for a 16KB budget
+        assert!(!TileConfig { mc: 256, nc: 256, kc: 256, unroll: 4 }.legal(
+            1000, 1000, 1000, 16 * 1024
+        ));
+        // unroll must not exceed nc
+        assert!(!TileConfig { mc: 8, nc: 4, kc: 8, unroll: 8 }.legal(100, 100, 100, 1 << 20));
+    }
+
+    #[test]
+    fn set_tile_overrides() {
+        let g = models::build("lenet5", 1).unwrap();
+        let mut p = plan(&g);
+        let id = *p.per_node.keys().next().unwrap();
+        let custom = TileConfig { mc: 32, nc: 16, kc: 128, unroll: 8 };
+        p.set_tile(id, custom);
+        assert_eq!(p.get(id).unwrap().tile, custom);
+    }
+
+    #[test]
+    fn gemm_dims_match_conv_geometry() {
+        let g = models::build("mobilenet_v1", 1).unwrap();
+        let p = plan(&g);
+        // stem conv: 3x3x3 -> 32 over 112x112 output
+        let stem = g.nodes.iter().find(|n| n.name == "stem").unwrap();
+        let info = p.get(stem.id).unwrap();
+        assert_eq!(info.gemm_m, 112 * 112);
+        assert_eq!(info.gemm_k, 27);
+        assert_eq!(info.gemm_n, 32);
+    }
+}

@@ -1,0 +1,57 @@
+//! Architecture-aware compiler passes over the IR (paper §4).
+//!
+//! - `fusion`       — Conv/DwConv + BatchNorm + Activation -> one fused op
+//! - `conv1x1_gemm` — 1x1 convolutions -> GEMM
+//! - `layout`       — tiling / alignment / padding planning
+//! - `load_elim`    — redundant-register-load elimination analysis
+//!
+//! Passes are pure Graph -> Graph rewrites; a rebuild helper keeps ids
+//! dense and topological. The framework personalities in `exec/` differ
+//! exactly in which passes they run — that is how the Figure 2 baselines
+//! (TFLite-like: none; TVM-like: fusion+gemm; CADNN: all) are expressed.
+
+pub mod conv1x1_gemm;
+pub mod fusion;
+pub mod layout;
+pub mod load_elim;
+
+use crate::ir::Graph;
+
+/// A named graph rewrite.
+pub trait Pass {
+    fn name(&self) -> &'static str;
+    fn run(&self, g: &Graph) -> Graph;
+}
+
+/// Run a pipeline of passes in order.
+pub fn run_pipeline(g: &Graph, passes: &[&dyn Pass]) -> Graph {
+    let mut out = g.clone();
+    for p in passes {
+        out = p.run(&out);
+        debug_assert!(out.validate().is_ok(), "pass {} broke the graph", p.name());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models;
+
+    #[test]
+    fn full_pipeline_on_all_models() {
+        let fusion = fusion::FusionPass;
+        let gemm = conv1x1_gemm::Conv1x1ToGemm;
+        for name in models::all_names() {
+            let g = models::build(name, 1).unwrap();
+            let out = run_pipeline(&g, &[&fusion, &gemm]);
+            out.validate().unwrap_or_else(|e| panic!("{name}: {e}"));
+            // passes must preserve the final logits shape
+            assert_eq!(
+                g.nodes.last().unwrap().shape,
+                out.nodes.last().unwrap().shape,
+                "{name} output shape changed"
+            );
+        }
+    }
+}

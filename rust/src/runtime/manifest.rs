@@ -1,0 +1,129 @@
+//! artifacts/manifest.json schema (written by python/compile/aot.py).
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Result};
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ManifestEntry {
+    pub name: String,
+    pub variant: String,
+    pub batch: usize,
+    pub path: String,
+    pub input_shape: Vec<usize>,
+    pub classes: usize,
+    pub accuracy: f64,
+    pub compression_rate: f64,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub models: Vec<ManifestEntry>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let format = j.get("format").and_then(|v| v.as_usize()).unwrap_or(0);
+        if format != 1 {
+            return Err(anyhow!("unsupported manifest format {format}"));
+        }
+        let mut models = Vec::new();
+        for m in j
+            .get("models")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow!("manifest: missing models"))?
+        {
+            models.push(ManifestEntry {
+                name: m
+                    .get("name")
+                    .and_then(|v| v.as_str())
+                    .ok_or_else(|| anyhow!("entry missing name"))?
+                    .to_string(),
+                variant: m
+                    .get("variant")
+                    .and_then(|v| v.as_str())
+                    .unwrap_or("dense")
+                    .to_string(),
+                batch: m
+                    .get("batch")
+                    .and_then(|v| v.as_usize())
+                    .ok_or_else(|| anyhow!("entry missing batch"))?,
+                path: m
+                    .get("path")
+                    .and_then(|v| v.as_str())
+                    .ok_or_else(|| anyhow!("entry missing path"))?
+                    .to_string(),
+                input_shape: m
+                    .get("input_shape")
+                    .and_then(|v| v.as_usize_vec())
+                    .ok_or_else(|| anyhow!("entry missing input_shape"))?,
+                classes: m.get("classes").and_then(|v| v.as_usize()).unwrap_or(0),
+                accuracy: m.get("accuracy").and_then(|v| v.as_f64()).unwrap_or(0.0),
+                compression_rate: m
+                    .get("compression_rate")
+                    .and_then(|v| v.as_f64())
+                    .unwrap_or(1.0),
+            });
+        }
+        Ok(Manifest { models })
+    }
+
+    /// Distinct (name, variant) pairs.
+    pub fn model_variants(&self) -> Vec<(String, String)> {
+        let mut out: Vec<(String, String)> = self
+            .models
+            .iter()
+            .map(|e| (e.name.clone(), e.variant.clone()))
+            .collect();
+        out.sort();
+        out.dedup();
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": 1,
+      "models": [
+        {"name": "lenet5", "variant": "dense", "batch": 1,
+         "path": "lenet5_dense_b1.hlo.txt",
+         "input_shape": [1, 28, 28, 1], "classes": 10,
+         "accuracy": 0.99, "compression_rate": 1.0},
+        {"name": "lenet5", "variant": "sparse", "batch": 4,
+         "path": "lenet5_sparse_b4.hlo.txt",
+         "input_shape": [4, 28, 28, 1], "classes": 10,
+         "accuracy": 0.97, "compression_rate": 2.5}
+      ]
+    }"#;
+
+    #[test]
+    fn parse_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.models.len(), 2);
+        assert_eq!(m.models[0].name, "lenet5");
+        assert_eq!(m.models[1].batch, 4);
+        assert_eq!(m.models[1].input_shape, vec![4, 28, 28, 1]);
+        assert!(m.models[1].compression_rate > 2.0);
+    }
+
+    #[test]
+    fn model_variants_deduped() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(
+            m.model_variants(),
+            vec![
+                ("lenet5".to_string(), "dense".to_string()),
+                ("lenet5".to_string(), "sparse".to_string())
+            ]
+        );
+    }
+
+    #[test]
+    fn rejects_bad_format() {
+        assert!(Manifest::parse(r#"{"format": 9, "models": []}"#).is_err());
+        assert!(Manifest::parse("not json").is_err());
+    }
+}

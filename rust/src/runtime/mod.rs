@@ -1,0 +1,123 @@
+//! PJRT runtime: load AOT HLO-text artifacts (built by `make artifacts`)
+//! and execute them from the Rust request path. Python never runs here.
+//!
+//! One compiled executable per (model, variant, batch) — PJRT programs
+//! are shape-static, so the coordinator's dynamic batcher picks among
+//! batch variants (manifest-driven).
+
+pub mod manifest;
+
+pub use manifest::{Manifest, ManifestEntry};
+
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// A compiled (model, variant, batch) program.
+pub struct LoadedModel {
+    pub entry: ManifestEntry,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl LoadedModel {
+    /// Execute on a flat f32 input of `entry.input_shape`; returns logits
+    /// (batch * classes).
+    pub fn run(&self, input: &[f32]) -> Result<Vec<f32>> {
+        let want: usize = self.entry.input_shape.iter().product();
+        if input.len() != want {
+            return Err(anyhow!(
+                "input length {} != expected {} for {}",
+                input.len(),
+                want,
+                self.entry.path
+            ));
+        }
+        let dims: Vec<i64> = self.entry.input_shape.iter().map(|&d| d as i64).collect();
+        let x = xla::Literal::vec1(input).reshape(&dims)?;
+        let result = self.exe.execute::<xla::Literal>(&[x])?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True -> 1-tuple
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}
+
+/// PJRT CPU client + model registry.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    artifacts_dir: PathBuf,
+    pub manifest: Manifest,
+    /// (name, variant) -> batch-ascending loaded models.
+    models: BTreeMap<(String, String), Vec<LoadedModel>>,
+}
+
+impl Runtime {
+    /// Create a CPU runtime over an artifacts directory (reads
+    /// manifest.json; compiles nothing yet).
+    pub fn open(artifacts_dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {}", manifest_path.display()))?;
+        let manifest = Manifest::parse(&text)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime { client, artifacts_dir: dir, manifest, models: BTreeMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile every batch variant of (model, variant). Idempotent.
+    pub fn load(&mut self, name: &str, variant: &str) -> Result<usize> {
+        let key = (name.to_string(), variant.to_string());
+        if self.models.contains_key(&key) {
+            return Ok(self.models[&key].len());
+        }
+        let mut loaded = Vec::new();
+        let mut entries: Vec<ManifestEntry> = self
+            .manifest
+            .models
+            .iter()
+            .filter(|e| e.name == name && e.variant == variant)
+            .cloned()
+            .collect();
+        entries.sort_by_key(|e| e.batch);
+        if entries.is_empty() {
+            return Err(anyhow!("no manifest entries for {name}/{variant}"));
+        }
+        for entry in entries {
+            let path = self.artifacts_dir.join(&entry.path);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            loaded.push(LoadedModel { entry, exe });
+        }
+        let n = loaded.len();
+        self.models.insert(key, loaded);
+        Ok(n)
+    }
+
+    /// Available batch sizes for a loaded (model, variant).
+    pub fn batches(&self, name: &str, variant: &str) -> Vec<usize> {
+        self.models
+            .get(&(name.to_string(), variant.to_string()))
+            .map(|v| v.iter().map(|m| m.entry.batch).collect())
+            .unwrap_or_default()
+    }
+
+    /// Fetch the loaded model with exactly this batch.
+    pub fn get(&self, name: &str, variant: &str, batch: usize) -> Option<&LoadedModel> {
+        self.models
+            .get(&(name.to_string(), variant.to_string()))?
+            .iter()
+            .find(|m| m.entry.batch == batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // PJRT-dependent integration tests live in rust/tests/ (they need
+    // built artifacts); here only pure helpers are covered via manifest.rs.
+}

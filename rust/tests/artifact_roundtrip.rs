@@ -1,0 +1,123 @@
+//! Integration: every AOT artifact loads through PJRT and reproduces the
+//! golden logits recorded by aot.py at lowering time — the end-to-end
+//! proof that the three layers compose (Pallas kernel -> JAX model ->
+//! HLO text -> Rust runtime).
+//!
+//! Requires `make artifacts`; tests no-op (with a loud message) otherwise.
+
+use cadnn::runtime::Runtime;
+use cadnn::util::json::Json;
+
+fn artifacts_dir() -> Option<String> {
+    let dir = std::env::var("CADNN_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    if std::path::Path::new(&format!("{dir}/manifest.json")).exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: no artifacts at {dir} (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn manifest_entries_all_load_and_execute() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::open(&dir).unwrap();
+    for (name, variant) in rt.manifest.model_variants() {
+        let n = rt.load(&name, &variant).unwrap();
+        assert!(n >= 2, "{name}/{variant}: expected multiple batch variants");
+        for batch in rt.batches(&name, &variant) {
+            let model = rt.get(&name, &variant, batch).unwrap();
+            let len: usize = model.entry.input_shape.iter().product();
+            let out = model.run(&vec![0.1f32; len]).unwrap();
+            assert_eq!(
+                out.len(),
+                batch * model.entry.classes,
+                "{name}/{variant} b{batch} output length"
+            );
+            assert!(out.iter().all(|v| v.is_finite()), "{name}/{variant} non-finite");
+        }
+    }
+}
+
+#[test]
+fn golden_logits_reproduced() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::open(&dir).unwrap();
+    for (name, variant) in rt.manifest.model_variants() {
+        let golden_path = format!("{dir}/golden/{name}_{variant}.json");
+        let Ok(text) = std::fs::read_to_string(&golden_path) else {
+            panic!("missing golden file {golden_path}");
+        };
+        let g = Json::parse(&text).unwrap();
+        let input = g.get("input").and_then(|v| v.as_f32_vec()).unwrap();
+        let want = g.get("logits").and_then(|v| v.as_f32_vec()).unwrap();
+        let ishape = g.get("input_shape").and_then(|v| v.as_usize_vec()).unwrap();
+        let lshape = g.get("logits_shape").and_then(|v| v.as_usize_vec()).unwrap();
+        let (gb, classes) = (ishape[0], lshape[1]);
+        let per_image: usize = ishape.iter().skip(1).product();
+
+        rt.load(&name, &variant).unwrap();
+        // run the golden images through the batch-1 executable one by one
+        let model = rt.get(&name, &variant, 1).unwrap();
+        for i in 0..gb {
+            let out = model.run(&input[i * per_image..(i + 1) * per_image]).unwrap();
+            let expect = &want[i * classes..(i + 1) * classes];
+            let max_err = out
+                .iter()
+                .zip(expect)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0f32, f32::max);
+            assert!(
+                max_err < 1e-3,
+                "{name}/{variant} image {i}: max_err {max_err}"
+            );
+        }
+    }
+}
+
+#[test]
+fn batch_variants_agree_with_batch1() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::open(&dir).unwrap();
+    rt.load("lenet5", "dense").unwrap();
+    let b1 = rt.get("lenet5", "dense", 1).unwrap();
+    let batches = rt.batches("lenet5", "dense");
+    let per_image = 28 * 28;
+    // deterministic pseudo-images
+    let img: Vec<f32> = (0..per_image).map(|i| ((i % 17) as f32) / 17.0).collect();
+    let single = b1.run(&img).unwrap();
+    for &b in batches.iter().filter(|&&b| b > 1) {
+        let model = rt.get("lenet5", "dense", b).unwrap();
+        let mut input = Vec::with_capacity(b * per_image);
+        for _ in 0..b {
+            input.extend_from_slice(&img);
+        }
+        let out = model.run(&input).unwrap();
+        for row in 0..b {
+            let got = &out[row * 10..(row + 1) * 10];
+            let max_err = got
+                .iter()
+                .zip(&single)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0f32, f32::max);
+            assert!(max_err < 1e-4, "b{b} row {row}: max_err {max_err}");
+        }
+    }
+}
+
+#[test]
+fn sparse_artifact_advertises_compression() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::open(&dir).unwrap();
+    let sparse: Vec<_> = rt
+        .manifest
+        .models
+        .iter()
+        .filter(|e| e.variant == "sparse")
+        .collect();
+    assert!(!sparse.is_empty());
+    for e in sparse {
+        assert!(e.compression_rate > 1.5, "{}: rate {}", e.name, e.compression_rate);
+        assert!(e.accuracy > 0.35, "{}: acc {}", e.name, e.accuracy);
+    }
+}

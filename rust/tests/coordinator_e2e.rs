@@ -1,0 +1,104 @@
+//! Integration: the serving coordinator over real PJRT artifacts —
+//! batching invariants, response integrity, shutdown under load.
+//! Requires `make artifacts`; no-ops otherwise.
+
+use cadnn::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig};
+use cadnn::util::rng::Rng;
+
+fn cfg(variant: &str) -> Option<CoordinatorConfig> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("SKIP: no artifacts (run `make artifacts`)");
+        return None;
+    }
+    Some(CoordinatorConfig {
+        artifacts_dir: "artifacts".into(),
+        model: "lenet5".into(),
+        variant: variant.into(),
+        max_batch: 8,
+        max_wait_us: 1_000,
+        policy: BatchPolicy::PadToFit,
+    })
+}
+
+#[test]
+fn serves_burst_and_batches() {
+    let Some(cfg) = cfg("dense") else { return };
+    let coord = Coordinator::start(cfg).unwrap();
+    let mut rng = Rng::new(5);
+    // a burst: all submitted at once -> batcher should coalesce
+    let n = 24;
+    let mut rxs = Vec::new();
+    for _ in 0..n {
+        let mut img = vec![0.0f32; coord.input_len];
+        rng.fill_normal(&mut img, 0.5);
+        rxs.push(coord.submit(img).unwrap());
+    }
+    let mut ids = Vec::new();
+    for rx in rxs {
+        let resp = rx.recv().unwrap();
+        assert_eq!(resp.logits.len(), coord.classes);
+        assert!(resp.logits.iter().all(|v| v.is_finite()));
+        assert!(resp.latency_us > 0.0);
+        assert!(resp.batch >= 1 && resp.batch <= 8);
+        ids.push(resp.id);
+    }
+    // every request answered exactly once
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), n);
+    let m = coord.metrics.lock().unwrap();
+    assert_eq!(m.requests as usize, n);
+    // a burst must produce some multi-request batches
+    assert!(
+        (m.batches as usize) < n,
+        "no batching happened: {} batches for {} requests",
+        m.batches,
+        n
+    );
+    drop(m);
+    coord.shutdown().unwrap();
+}
+
+#[test]
+fn rejects_wrong_input_length() {
+    let Some(cfg) = cfg("dense") else { return };
+    let coord = Coordinator::start(cfg).unwrap();
+    assert!(coord.submit(vec![0.0; 3]).is_err());
+    coord.shutdown().unwrap();
+}
+
+#[test]
+fn sparse_variant_serves() {
+    let Some(cfg) = cfg("sparse") else { return };
+    let coord = Coordinator::start(cfg).unwrap();
+    let resp = coord.infer(vec![0.2f32; coord.input_len]).unwrap();
+    assert_eq!(resp.logits.len(), 10);
+    coord.shutdown().unwrap();
+}
+
+#[test]
+fn shutdown_drains_pending() {
+    let Some(cfg) = cfg("dense") else { return };
+    let coord = Coordinator::start(cfg).unwrap();
+    let mut rxs = Vec::new();
+    for _ in 0..8 {
+        rxs.push(coord.submit(vec![0.1f32; coord.input_len]).unwrap());
+    }
+    coord.shutdown().unwrap();
+    // all pending requests either answered or their channel closed — but
+    // none should hang
+    let mut answered = 0;
+    for rx in rxs {
+        if rx.recv_timeout(std::time::Duration::from_secs(5)).is_ok() {
+            answered += 1;
+        }
+    }
+    assert!(answered >= 1, "shutdown dropped every pending request");
+}
+
+#[test]
+fn unknown_model_fails_fast() {
+    let Some(mut cfg) = cfg("dense") else { return };
+    cfg.model = "nonexistent".into();
+    assert!(Coordinator::start(cfg).is_err());
+}

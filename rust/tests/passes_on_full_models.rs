@@ -1,0 +1,137 @@
+//! Integration: compiler passes on the full paper architectures —
+//! structural post-conditions per model, cost-model consistency, and the
+//! tuned-instance path.
+
+use cadnn::costmodel::{calibrate::CalibrationTable, devices, graph_cost};
+use cadnn::exec::{ModelInstance, Personality};
+use cadnn::ir::Op;
+use cadnn::models;
+use cadnn::passes::{conv1x1_gemm::Conv1x1ToGemm, fusion::FusionPass, Pass};
+use cadnn::tuner::TunerCache;
+
+fn count(g: &cadnn::ir::Graph, name: &str) -> usize {
+    g.nodes.iter().filter(|n| n.op.name() == name).count()
+}
+
+#[test]
+fn inception_v3_fusion_postconditions() {
+    let g = models::build("inception_v3", 1).unwrap();
+    let f = FusionPass.run(&g);
+    f.validate().unwrap();
+    // every conv has a BN: all fuse, none remain
+    assert_eq!(count(&f, "batchnorm"), 0);
+    assert_eq!(count(&f, "conv2d"), 0);
+    assert_eq!(count(&f, "fused_conv_bn_act"), 94); // 94 convs
+    // concat structure untouched (11 mixed blocks + 2x2 inner concats)
+    assert_eq!(count(&f, "concat"), count(&g, "concat"));
+}
+
+#[test]
+fn mobilenet_v2_linear_bottleneck_preserved() {
+    // the projection conv has NO activation; fusion must fold bn with
+    // act=None, not invent a relu
+    let g = models::build("mobilenet_v2", 1).unwrap();
+    let f = FusionPass.run(&g);
+    let t = Conv1x1ToGemm.run(&f);
+    t.validate().unwrap();
+    let relu_none_gemms = t
+        .nodes
+        .iter()
+        .filter(|n| {
+            matches!(
+                n.op,
+                Op::Gemm { act: cadnn::ir::ops::ActKind::None, .. }
+            )
+        })
+        .count();
+    // 17 projection convs (1 per inverted-residual block) are linear
+    assert!(relu_none_gemms >= 17, "{relu_none_gemms}");
+}
+
+#[test]
+fn gemm_transform_counts_per_model() {
+    // 1x1 conv population is a well-known architectural fact per model
+    for (name, min_gemms) in [("resnet50", 30), ("mobilenet_v2", 30), ("inception_v3", 40)] {
+        let g = models::build(name, 1).unwrap();
+        let t = Conv1x1ToGemm.run(&FusionPass.run(&g));
+        let gemms = count(&t, "gemm");
+        assert!(gemms >= min_gemms, "{name}: {gemms} gemms");
+    }
+}
+
+#[test]
+fn cost_model_batch_monotone() {
+    let calib = CalibrationTable::nominal();
+    let dev = devices::snapdragon835_cpu();
+    for name in ["mobilenet_v1", "resnet50"] {
+        let g1 = models::build(name, 1).unwrap();
+        let g4 = models::build(name, 4).unwrap();
+        let (c1, _) = graph_cost(&g1, &dev, &calib, false, None, None);
+        let (c4, _) = graph_cost(&g4, &dev, &calib, false, None, None);
+        assert!(c4 > c1 * 3.0 && c4 < c1 * 4.5, "{name}: {c1} -> {c4}");
+    }
+}
+
+#[test]
+fn node_costs_all_positive_and_sum() {
+    let calib = CalibrationTable::nominal();
+    let dev = devices::adreno540_gpu();
+    let g = models::build("inception_v3", 1).unwrap();
+    let (total, costs) = graph_cost(&g, &dev, &calib, false, None, None);
+    let sum: f64 = costs.iter().map(|c| c.us).sum();
+    assert!((total - sum).abs() < 1e-6);
+    assert!(costs.iter().all(|c| c.us > 0.0));
+    // a GPU projection of inception has some compute-bound conv layers
+    assert!(costs.iter().any(|c| c.compute_bound));
+}
+
+#[test]
+fn tuned_instance_builds_and_runs() {
+    use cadnn::ir::{Graph, Shape};
+    use cadnn::ir::ops::ActKind;
+    use cadnn::kernels::Tensor;
+    let mut g = Graph::new("tuned", Shape::nhwc(1, 16, 16, 8));
+    let c = g.add("c1", Op::conv(3, 3, 8, 16, 1, 1), vec![0]);
+    let b = g.add("c1_bn", Op::BatchNorm { c: 16 }, vec![c]);
+    g.add("c1_relu", Op::Activation { kind: ActKind::Relu }, vec![b]);
+    let mut cache = TunerCache::new();
+    let inst =
+        ModelInstance::build(&g, Personality::CadnnDense, None, Some(&mut cache), 1 << 20)
+            .unwrap();
+    assert!(!cache.is_empty(), "tuner cache unpopulated");
+    let x = Tensor::zeros(&[1, 16, 16, 8]);
+    let out = inst.execute(&x).unwrap();
+    assert_eq!(out.shape, vec![1, 16, 16, 16]);
+}
+
+#[test]
+fn grouped_conv_models_rejected_by_executor() {
+    // AlexNet has grouped convs; the native executor declines them
+    // explicitly rather than silently computing the wrong thing.
+    let g = models::build("alexnet", 1).unwrap();
+    let r = ModelInstance::build(&g, Personality::TfLiteLike, None, None, 1 << 20);
+    assert!(r.is_err());
+    assert!(r.err().unwrap().contains("grouped"));
+}
+
+#[test]
+fn profiler_accounts_all_nodes() {
+    use cadnn::ir::{Graph, Shape};
+    use cadnn::ir::ops::ActKind;
+    use cadnn::kernels::Tensor;
+    let mut g = Graph::new("prof", Shape::nhwc(1, 12, 12, 4));
+    let c = g.add("c1", Op::conv(3, 3, 4, 8, 1, 1), vec![0]);
+    let b = g.add("c1_bn", Op::BatchNorm { c: 8 }, vec![c]);
+    let r = g.add("c1_relu", Op::Activation { kind: ActKind::Relu }, vec![b]);
+    let gap = g.add("gap", Op::GlobalAvgPool, vec![r]);
+    g.add("fc", Op::fc(8, 10), vec![gap]);
+    let inst = ModelInstance::build(&g, Personality::CadnnDense, None, None, 1 << 20).unwrap();
+    let x = Tensor::zeros(&[1, 12, 12, 4]);
+    let prof = inst.profile(&x, 1).unwrap();
+    // fused graph: fused_conv_bn_act + gap + fc = 3 nodes after input
+    assert_eq!(prof.len(), inst.graph.len() - 1);
+    assert!(prof.iter().all(|p| p.us >= 0.0));
+    let conv = prof.iter().find(|p| p.kind == "fused_conv_bn_act").unwrap();
+    assert!(conv.flops > 0);
+    assert!(conv.gflops() >= 0.0);
+}

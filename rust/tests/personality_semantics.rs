@@ -1,0 +1,161 @@
+//! Integration: the framework personalities are semantics-preserving on
+//! every layer vocabulary the paper's models use — residual adds, channel
+//! concat (Inception), depthwise towers (MobileNet), classic conv+bias
+//! (VGG). No artifacts required (native executor only).
+
+use cadnn::exec::{ModelInstance, Personality};
+use cadnn::ir::ops::{ActKind, Op, PoolKind};
+use cadnn::ir::{Graph, Shape};
+use cadnn::kernels::Tensor;
+use cadnn::util::rng::Rng;
+
+fn input_for(g: &Graph, seed: u64) -> Tensor {
+    let mut rng = Rng::new(seed);
+    let mut t = Tensor::zeros(&g.nodes[0].shape.0);
+    rng.fill_normal(&mut t.data, 0.5);
+    t
+}
+
+fn assert_personalities_agree(g: &Graph, tol: f32) {
+    let x = input_for(g, 42);
+    let base = ModelInstance::build(g, Personality::TfLiteLike, None, None, 1 << 20)
+        .unwrap()
+        .execute(&x)
+        .unwrap();
+    for p in [Personality::TvmLike, Personality::CadnnDense] {
+        let inst = ModelInstance::build(g, p, None, None, 1 << 20).unwrap();
+        let out = inst.execute(&x).unwrap();
+        assert_eq!(base.shape, out.shape, "{} shape", p.label());
+        let d = base.max_abs_diff(&out);
+        assert!(d < tol, "{}: diff {d}", p.label());
+    }
+}
+
+/// Inception-style: parallel branches + avg-pool branch + channel concat.
+#[test]
+fn concat_branches_agree() {
+    let mut g = Graph::new("mini_inception", Shape::nhwc(1, 12, 12, 8));
+    let b1 = {
+        let c = g.add("br1_1x1", Op::conv(1, 1, 8, 8, 1, 0), vec![0]);
+        let b = g.add("br1_1x1_bn", Op::BatchNorm { c: 8 }, vec![c]);
+        g.add("br1_1x1_relu", Op::Activation { kind: ActKind::Relu }, vec![b])
+    };
+    let b2 = {
+        let c = g.add("br2_a", Op::conv(1, 1, 8, 4, 1, 0), vec![0]);
+        let b = g.add("br2_a_bn", Op::BatchNorm { c: 4 }, vec![c]);
+        let r = g.add("br2_a_relu", Op::Activation { kind: ActKind::Relu }, vec![b]);
+        let c2 = g.add("br2_b", Op::conv_asym(1, 5, 4, 8, 1, 0, 2), vec![r]);
+        let b2 = g.add("br2_b_bn", Op::BatchNorm { c: 8 }, vec![c2]);
+        g.add("br2_b_relu", Op::Activation { kind: ActKind::Relu }, vec![b2])
+    };
+    let b3 = {
+        let p = g.add(
+            "br3_pool",
+            Op::Pool { kind: PoolKind::Avg, k: 3, stride: 1, padding: 1 },
+            vec![0],
+        );
+        let c = g.add("br3_proj", Op::conv(1, 1, 8, 4, 1, 0), vec![p]);
+        let b = g.add("br3_proj_bn", Op::BatchNorm { c: 4 }, vec![c]);
+        g.add("br3_proj_relu", Op::Activation { kind: ActKind::Relu }, vec![b])
+    };
+    let cat = g.add("cat", Op::Concat, vec![b1, b2, b3]);
+    let gap = g.add("gap", Op::GlobalAvgPool, vec![cat]);
+    g.add("fc", Op::fc(20, 10), vec![gap]);
+    g.validate().unwrap();
+    assert_personalities_agree(&g, 2e-3);
+}
+
+/// MobileNet-style depthwise-separable tower with relu6.
+#[test]
+fn depthwise_tower_agrees() {
+    let mut g = Graph::new("mini_mobilenet", Shape::nhwc(2, 16, 16, 6));
+    let mut x = 0;
+    let mut cin = 6;
+    for (i, (cout, s)) in [(12usize, 2usize), (12, 1), (24, 2)].iter().enumerate() {
+        let dw = g.add(
+            format!("b{i}_dw"),
+            Op::DepthwiseConv2d { kh: 3, kw: 3, c: cin, stride: *s, padding: 1 },
+            vec![x],
+        );
+        let dwb = g.add(format!("b{i}_dw_bn"), Op::BatchNorm { c: cin }, vec![dw]);
+        let dwa = g.add(
+            format!("b{i}_dw_act"),
+            Op::Activation { kind: ActKind::Relu6 },
+            vec![dwb],
+        );
+        let pw = g.add(format!("b{i}_pw"), Op::conv(1, 1, cin, *cout, 1, 0), vec![dwa]);
+        let pwb = g.add(format!("b{i}_pw_bn"), Op::BatchNorm { c: *cout }, vec![pw]);
+        x = g.add(
+            format!("b{i}_pw_act"),
+            Op::Activation { kind: ActKind::Relu6 },
+            vec![pwb],
+        );
+        cin = *cout;
+    }
+    let gap = g.add("gap", Op::GlobalAvgPool, vec![x]);
+    g.add("fc", Op::fc(24, 10), vec![gap]);
+    g.validate().unwrap();
+    assert_personalities_agree(&g, 2e-3);
+}
+
+/// VGG-style conv+bias (no BN) with maxpool: fusion must leave it alone
+/// but the GEMM engine must still match the direct engine.
+#[test]
+fn classic_conv_bias_agrees() {
+    let mut g = Graph::new("mini_vgg", Shape::nhwc(1, 14, 14, 3));
+    let c1 = g.add("c1", Op::conv_b(3, 3, 3, 8, 1, 1), vec![0]);
+    let r1 = g.add("c1_relu", Op::Activation { kind: ActKind::Relu }, vec![c1]);
+    let p1 = g.add(
+        "p1",
+        Op::Pool { kind: PoolKind::Max, k: 2, stride: 2, padding: 0 },
+        vec![r1],
+    );
+    let c2 = g.add("c2", Op::conv_b(3, 3, 8, 16, 1, 1), vec![p1]);
+    let r2 = g.add("c2_relu", Op::Activation { kind: ActKind::Relu }, vec![c2]);
+    let f = g.add("flat", Op::Flatten, vec![r2]);
+    let fc = g.add("f1", Op::fc(7 * 7 * 16, 32), vec![f]);
+    let rf = g.add("f1_relu", Op::Activation { kind: ActKind::Relu }, vec![fc]);
+    g.add("f2", Op::fc(32, 10), vec![rf]);
+    g.validate().unwrap();
+    assert_personalities_agree(&g, 2e-3);
+}
+
+/// ResNet-style strided residual block with 1x1 downsample.
+#[test]
+fn residual_downsample_agrees() {
+    let mut g = Graph::new("mini_resnet", Shape::nhwc(1, 12, 12, 8));
+    let c1 = g.add("c1", Op::conv(3, 3, 8, 16, 2, 1), vec![0]);
+    let b1 = g.add("c1_bn", Op::BatchNorm { c: 16 }, vec![c1]);
+    let r1 = g.add("c1_relu", Op::Activation { kind: ActKind::Relu }, vec![b1]);
+    let c2 = g.add("c2", Op::conv(3, 3, 16, 16, 1, 1), vec![r1]);
+    let b2 = g.add("c2_bn", Op::BatchNorm { c: 16 }, vec![c2]);
+    let dn = g.add("down", Op::conv(1, 1, 8, 16, 2, 0), vec![0]);
+    let db = g.add("down_bn", Op::BatchNorm { c: 16 }, vec![dn]);
+    let add = g.add("add", Op::Add, vec![b2, db]);
+    let out = g.add("out_relu", Op::Activation { kind: ActKind::Relu }, vec![add]);
+    let gap = g.add("gap", Op::GlobalAvgPool, vec![out]);
+    g.add("fc", Op::fc(16, 10), vec![gap]);
+    g.validate().unwrap();
+    assert_personalities_agree(&g, 2e-3);
+}
+
+/// CadnnSparse at sparsity 0 must agree exactly with CadnnDense.
+#[test]
+fn sparse_at_zero_sparsity_equals_dense() {
+    use cadnn::compress::profile::SparsityProfile;
+    let mut g = Graph::new("zsp", Shape::nhwc(1, 8, 8, 4));
+    let c = g.add("c1", Op::conv(3, 3, 4, 8, 1, 1), vec![0]);
+    let b = g.add("c1_bn", Op::BatchNorm { c: 8 }, vec![c]);
+    g.add("c1_relu", Op::Activation { kind: ActKind::Relu }, vec![b]);
+    let x = input_for(&g, 3);
+    let dense = ModelInstance::build(&g, Personality::CadnnDense, None, None, 1 << 20)
+        .unwrap()
+        .execute(&x)
+        .unwrap();
+    let profile = SparsityProfile::default(); // empty -> sparsity 0 everywhere
+    let sparse = ModelInstance::build(&g, Personality::CadnnSparse, Some(&profile), None, 1 << 20)
+        .unwrap()
+        .execute(&x)
+        .unwrap();
+    assert!(dense.max_abs_diff(&sparse) < 1e-5);
+}

@@ -1,0 +1,129 @@
+//! Property test over randomly generated CNNs: for any valid graph made
+//! of the paper's layer vocabulary, (1) the compiler passes preserve
+//! shapes and weight counts, and (2) every framework personality computes
+//! the same function (fusion / 1x1->GEMM / tiling are semantics-
+//! preserving program transformations — the paper's implicit claim).
+
+use cadnn::exec::{ModelInstance, Personality};
+use cadnn::ir::ops::{ActKind, Op, PoolKind};
+use cadnn::ir::{Graph, Shape};
+use cadnn::kernels::Tensor;
+use cadnn::util::rng::Rng;
+
+/// Random chain CNN with optional residual links, 4-18 layers.
+fn random_graph(rng: &mut Rng) -> Graph {
+    let h = [8usize, 10, 12, 16][rng.below(4)];
+    let c0 = [1usize, 3, 4, 8][rng.below(4)];
+    let mut g = Graph::new("rand", Shape::nhwc(1, h, h, c0));
+    let mut x = 0usize;
+    let mut cin = c0;
+    let layers = rng.range(2, 6);
+    for i in 0..layers {
+        match rng.below(5) {
+            // conv+bn+act block
+            0 | 1 => {
+                let cout = [4usize, 8, 12, 16][rng.below(4)];
+                let ksp: (usize, usize, usize) =
+                    [(1, 1, 0), (3, 1, 1), (3, 2, 1), (5, 1, 2)][rng.below(4)];
+                let cur_h = g.node(x).shape.h();
+                if cur_h + 2 * ksp.2 < ksp.0 {
+                    continue;
+                }
+                let c = g.add(
+                    format!("l{i}_conv"),
+                    Op::conv(ksp.0, ksp.0, cin, cout, ksp.1, ksp.2),
+                    vec![x],
+                );
+                let b = g.add(format!("l{i}_conv_bn"), Op::BatchNorm { c: cout }, vec![c]);
+                let kind = [ActKind::Relu, ActKind::Relu6][rng.below(2)];
+                x = g.add(format!("l{i}_conv_act"), Op::Activation { kind }, vec![b]);
+                cin = cout;
+            }
+            // depthwise block
+            2 => {
+                let stride = 1 + rng.below(2);
+                if g.node(x).shape.h() + 2 < 3 {
+                    continue;
+                }
+                let d = g.add(
+                    format!("l{i}_dw"),
+                    Op::DepthwiseConv2d { kh: 3, kw: 3, c: cin, stride, padding: 1 },
+                    vec![x],
+                );
+                let b = g.add(format!("l{i}_dw_bn"), Op::BatchNorm { c: cin }, vec![d]);
+                x = g.add(
+                    format!("l{i}_dw_act"),
+                    Op::Activation { kind: ActKind::Relu },
+                    vec![b],
+                );
+            }
+            // pool
+            3 => {
+                let cur_h = g.node(x).shape.h();
+                if cur_h < 2 {
+                    continue;
+                }
+                let kind = [PoolKind::Max, PoolKind::Avg][rng.below(2)];
+                x = g.add(
+                    format!("l{i}_pool"),
+                    Op::Pool { kind, k: 2, stride: 2, padding: 0 },
+                    vec![x],
+                );
+            }
+            // residual 1x1 branch + add (shape-preserving)
+            _ => {
+                let c = g.add(format!("l{i}_res"), Op::conv(1, 1, cin, cin, 1, 0), vec![x]);
+                let b = g.add(format!("l{i}_res_bn"), Op::BatchNorm { c: cin }, vec![c]);
+                let a = g.add(format!("l{i}_add"), Op::Add, vec![b, x]);
+                x = g.add(
+                    format!("l{i}_add_act"),
+                    Op::Activation { kind: ActKind::Relu },
+                    vec![a],
+                );
+            }
+        }
+    }
+    let gap = g.add("gap", Op::GlobalAvgPool, vec![x]);
+    g.add("fc", Op::fc(cin, 10), vec![gap]);
+    g
+}
+
+#[test]
+fn prop_passes_preserve_semantics_on_random_graphs() {
+    let cases = 25;
+    for case in 0..cases {
+        let mut rng = Rng::new(0xBEEF ^ (case as u64) * 0x9E3779B97F4A7C15);
+        let g = random_graph(&mut rng);
+        g.validate().unwrap_or_else(|e| panic!("case {case}: {e}"));
+
+        // pass invariants
+        let lowered = Personality::CadnnDense.lower(&g);
+        lowered.validate().unwrap_or_else(|e| panic!("case {case} lowered: {e}"));
+        assert_eq!(
+            g.weight_count(),
+            lowered.weight_count(),
+            "case {case}: weights changed"
+        );
+        assert_eq!(
+            g.nodes.last().unwrap().shape,
+            lowered.nodes.last().unwrap().shape,
+            "case {case}: output shape changed"
+        );
+
+        // numeric agreement
+        let mut input = Tensor::zeros(&g.nodes[0].shape.0);
+        rng.fill_normal(&mut input.data, 0.5);
+        let base = ModelInstance::build(&g, Personality::TfLiteLike, None, None, 1 << 20)
+            .unwrap()
+            .execute(&input)
+            .unwrap();
+        for p in [Personality::TvmLike, Personality::CadnnDense] {
+            let out = ModelInstance::build(&g, p, None, None, 1 << 20)
+                .unwrap()
+                .execute(&input)
+                .unwrap();
+            let d = base.max_abs_diff(&out);
+            assert!(d < 5e-3, "case {case} {}: diff {d}", p.label());
+        }
+    }
+}
