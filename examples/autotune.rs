@@ -7,17 +7,20 @@
 //! ```
 
 use anyhow::{anyhow, Result};
+use cadnn::api::Engine;
 use cadnn::bench::print_table;
-use cadnn::exec::Personality;
-use cadnn::models;
 use cadnn::passes::layout;
 use cadnn::tuner;
 
 fn main() -> Result<()> {
     let model = std::env::args().nth(1).unwrap_or_else(|| "resnet50".into());
-    let g = models::build(&model, 1).ok_or_else(|| anyhow!("unknown model {model}"))?;
-    let lowered = Personality::CadnnDense.lower(&g);
-    let plan = layout::plan(&lowered);
+    // the engine's native instance holds the CADNN-lowered graph
+    let engine = Engine::native(&model).build()?;
+    let inst = engine
+        .native_backend()
+        .and_then(|b| b.instance(1))
+        .ok_or_else(|| anyhow!("no native batch-1 instance for {model}"))?;
+    let plan = layout::plan(&inst.graph);
 
     // dedupe GEMM shapes, largest first, cap the demo at 8 shapes
     let mut shapes: Vec<(usize, usize, usize)> = plan

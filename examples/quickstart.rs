@@ -1,41 +1,66 @@
-//! Quickstart: load the AOT-compiled LeNet-5 artifact via PJRT, classify
-//! one image from the golden set, print the prediction and latency.
+//! Quickstart for the unified API: build an `Engine`, open a `Session`,
+//! classify one image, print the prediction and latency.
+//!
+//! Prefers the AOT-compiled PJRT artifact (`make artifacts` + the real
+//! `xla` binding); transparently falls back to the native-kernel engine
+//! when artifacts are unavailable, so it runs anywhere.
 //!
 //! ```sh
-//! make artifacts && cargo run --release --example quickstart
+//! cargo run --release --example quickstart [-- <artifacts_dir>]
 //! ```
 
 use anyhow::{anyhow, Result};
-use cadnn::runtime::Runtime;
+use cadnn::api::Engine;
 use cadnn::util::json::Json;
 use cadnn::util::Stopwatch;
 
 fn main() -> Result<()> {
     let dir = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
-    let mut rt = Runtime::open(&dir)?;
-    println!("PJRT platform: {}", rt.platform());
 
-    rt.load("lenet5", "dense")?;
-    let model = rt
-        .get("lenet5", "dense", 1)
-        .ok_or_else(|| anyhow!("batch-1 lenet5 not in manifest"))?;
+    // one builder flow for both execution worlds
+    let (engine, golden) = match Engine::artifacts(&dir, "lenet5", "dense").build() {
+        Ok(engine) => {
+            println!("engine: {} (AOT artifact)", engine.name());
+            (engine, Some(format!("{dir}/golden/lenet5_dense.json")))
+        }
+        Err(e) => {
+            eprintln!("artifacts unavailable ({e}); falling back to native kernels");
+            let engine = Engine::native("lenet5").build()?;
+            println!("engine: {} (native)", engine.name());
+            (engine, None)
+        }
+    };
     println!(
-        "loaded lenet5/dense b1 ({} classes, trained acc {:.1}%)",
-        model.entry.classes,
-        model.entry.accuracy * 100.0
+        "input {:?} -> {} classes, batches {:?}",
+        engine.input_shape(),
+        engine.classes(),
+        engine.batch_sizes()
     );
 
-    // One image from the golden set (written by aot.py alongside the HLO).
-    let golden_text = std::fs::read_to_string(format!("{dir}/golden/lenet5_dense.json"))?;
-    let golden = Json::parse(&golden_text).map_err(|e| anyhow!("{e}"))?;
-    let input = golden.get("input").and_then(|v| v.as_f32_vec()).unwrap();
-    let labels = golden.get("labels").and_then(|v| v.as_usize_vec()).unwrap();
-    let per_image = 28 * 28;
+    // image: golden set when artifacts exist, a deterministic ramp otherwise
+    let per_image = engine.input_len();
+    let (image, label): (Vec<f32>, Option<usize>) = match &golden {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)?;
+            let g = Json::parse(&text).map_err(|e| anyhow!("{e}"))?;
+            let input = g
+                .get("input")
+                .and_then(|v| v.as_f32_vec())
+                .ok_or_else(|| anyhow!("golden file missing input"))?;
+            let labels = g
+                .get("labels")
+                .and_then(|v| v.as_usize_vec())
+                .ok_or_else(|| anyhow!("golden file missing labels"))?;
+            (input[..per_image].to_vec(), Some(labels[0]))
+        }
+        None => ((0..per_image).map(|i| ((i % 17) as f32) / 17.0).collect(), None),
+    };
 
-    // warmup + timed single-image inference
-    let _ = model.run(&input[..per_image])?;
+    // warmup + timed single-image inference; the session reuses buffers
+    let mut session = engine.session();
+    let _ = session.run(&image)?;
     let sw = Stopwatch::new();
-    let logits = model.run(&input[..per_image])?;
+    let logits = session.run(&image)?;
     let us = sw.elapsed_us();
 
     let pred = logits
@@ -44,7 +69,10 @@ fn main() -> Result<()> {
         .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
         .map(|(i, _)| i)
         .unwrap();
-    println!("prediction: {pred} (label: {}) in {:.2} ms", labels[0], us / 1e3);
+    match label {
+        Some(l) => println!("prediction: {pred} (label: {l}) in {:.2} ms", us / 1e3),
+        None => println!("prediction: {pred} in {:.2} ms", us / 1e3),
+    }
     println!("logits: {logits:?}");
     Ok(())
 }

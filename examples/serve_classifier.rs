@@ -1,15 +1,25 @@
 //! End-to-end serving driver (DESIGN.md §5 "Serving E2E"): start the
-//! coordinator over the AOT artifacts, replay a Poisson request trace of
-//! synthetic digit images against the dense AND compressed variants, and
-//! report latency percentiles, throughput, batch utilization, and trace
-//! accuracy per variant.
+//! coordinator, replay a Poisson request trace of synthetic digit images
+//! against the dense AND compressed variants, and report latency
+//! percentiles, throughput, batch utilization, and trace accuracy per
+//! variant.
+//!
+//! Serves the AOT artifacts when present (`make artifacts` + real PJRT);
+//! otherwise the same coordinator batches over the native-kernel engine
+//! through the `Backend` trait — no artifacts directory required. (Native
+//! weights are synthetic, so trace accuracy is only meaningful on the
+//! trained artifact path.)
 //!
 //! ```sh
-//! make artifacts && cargo run --release --example serve_classifier [-- <requests> <rps>]
+//! cargo run --release --example serve_classifier [-- <requests> <rps>]
 //! ```
 
 use anyhow::Result;
-use cadnn::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig};
+use cadnn::api::Engine;
+use cadnn::compress::profile::paper_profile;
+use cadnn::coordinator::{BatchPolicy, BatcherConfig, Coordinator, CoordinatorConfig};
+use cadnn::exec::Personality;
+use cadnn::models;
 use cadnn::util::rng::Rng;
 
 /// Rasterize the same seven-segment procedural digits as
@@ -54,20 +64,43 @@ fn digit_image(digit: usize, rng: &mut Rng) -> Vec<f32> {
     img
 }
 
+/// Start a coordinator for the variant: AOT artifacts when available,
+/// otherwise the native engine behind the same `Backend` trait.
+fn start_coordinator(variant: &str) -> Result<Coordinator> {
+    let batcher = BatcherConfig {
+        max_batch: 8,
+        max_wait_us: 2_000,
+        policy: BatchPolicy::PadToFit,
+    };
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        match Coordinator::start(CoordinatorConfig {
+            artifacts_dir: "artifacts".into(),
+            model: "lenet5".into(),
+            variant: variant.into(),
+            max_batch: batcher.max_batch,
+            max_wait_us: batcher.max_wait_us,
+            policy: batcher.policy,
+        }) {
+            Ok(coord) => return Ok(coord),
+            Err(e) => eprintln!("(artifact path failed: {e}; serving natively instead)"),
+        }
+    }
+    let mut builder = Engine::native("lenet5").batch_sizes(&[1, 2, 4, 8]);
+    if variant == "sparse" {
+        let g = models::build("lenet5", 1).expect("lenet5 exists");
+        builder = builder
+            .personality(Personality::CadnnSparse)
+            .sparsity_profile(paper_profile(&g));
+    }
+    Coordinator::serve_engine(&builder.build()?, batcher)
+}
+
 fn run_variant(
     variant: &str,
     requests: usize,
     rps: f64,
 ) -> Result<(usize, f64, String)> {
-    let cfg = CoordinatorConfig {
-        artifacts_dir: "artifacts".into(),
-        model: "lenet5".into(),
-        variant: variant.into(),
-        max_batch: 8,
-        max_wait_us: 2_000,
-        policy: BatchPolicy::PadToFit,
-    };
-    let coord = Coordinator::start(cfg)?;
+    let coord = start_coordinator(variant)?;
     let mut rng = Rng::new(2024);
     let mut truths = Vec::new();
     let mut rxs = Vec::new();
@@ -80,8 +113,8 @@ fn run_variant(
     let mut correct = 0usize;
     for (rx, truth) in rxs.into_iter().zip(&truths) {
         let resp = rx.recv()?;
-        let pred = resp
-            .logits
+        let logits = resp.into_logits()?;
+        let pred = logits
             .iter()
             .enumerate()
             .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())

@@ -1,0 +1,284 @@
+//! The pluggable execution backend beneath [`crate::api::Engine`].
+//!
+//! A [`Backend`] answers three questions — what shape of image it takes,
+//! how many classes it emits, and which batch sizes it can execute — and
+//! runs flat batches. Two implementations ship:
+//!
+//! - [`NativeBackend`] wraps [`ModelInstance`]s built per batch size and
+//!   executes on the in-process kernels (always available);
+//! - [`ArtifactBackend`] wraps the PJRT [`Runtime`] over AOT-compiled HLO
+//!   artifacts (available when the real `xla` binding is linked).
+//!
+//! The serving [`crate::coordinator::Coordinator`] is generic over
+//! `Box<dyn Backend>`, so the dynamic batcher works identically for both.
+
+use crate::error::CadnnError;
+use crate::exec::{ExecScratch, ModelInstance, Personality};
+use crate::runtime::{ManifestEntry, Runtime};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Execution telemetry, primarily buffer-reuse counters for the native
+/// scratch pool.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct BackendStats {
+    /// Completed `run_batch` calls.
+    pub runs: u64,
+    /// Fresh intermediate-tensor allocations.
+    pub buffer_allocs: u64,
+    /// Intermediate tensors served from the reuse pool.
+    pub buffer_reuses: u64,
+}
+
+/// A model execution engine the [`crate::api::Engine`] / coordinator can
+/// drive. Object-safe; implementations decide how batches actually run.
+pub trait Backend {
+    /// Human-readable identity (model/variant).
+    fn name(&self) -> &str;
+
+    /// Per-image input shape, batch axis excluded (e.g. `[28, 28, 1]`).
+    fn input_shape(&self) -> &[usize];
+
+    /// Logits per image.
+    fn classes(&self) -> usize;
+
+    /// Ascending batch sizes this backend can execute.
+    fn batch_sizes(&self) -> Vec<usize>;
+
+    /// Execute a flat NHWC batch (`batch * input_shape.product()` floats);
+    /// returns `batch * classes` logits.
+    fn run_batch(&self, batch: usize, input: &[f32]) -> Result<Vec<f32>, CadnnError>;
+
+    /// Telemetry; defaults to zeroes for backends that don't track it.
+    fn stats(&self) -> BackendStats {
+        BackendStats::default()
+    }
+}
+
+/// Native-kernel backend: one [`ModelInstance`] per batch size, with a
+/// pool of [`ExecScratch`]es so repeated runs (one session, or the
+/// coordinator's serve loop) reuse intermediate buffers instead of
+/// reallocating the per-node value table every call.
+pub struct NativeBackend {
+    name: String,
+    instances: BTreeMap<usize, ModelInstance>,
+    scratch: Mutex<BTreeMap<usize, Vec<ExecScratch>>>,
+    input_shape: Vec<usize>,
+    classes: usize,
+    runs: AtomicU64,
+    // monotonic telemetry: per-run deltas accumulated when a leased
+    // scratch is returned, so in-flight scratches can't make stats()
+    // regress between calls
+    buffer_allocs: AtomicU64,
+    buffer_reuses: AtomicU64,
+}
+
+impl NativeBackend {
+    /// Assemble from prebuilt instances keyed by batch size (the
+    /// [`crate::api::EngineBuilder`] does this).
+    pub(crate) fn from_instances(
+        name: String,
+        instances: BTreeMap<usize, ModelInstance>,
+    ) -> Result<NativeBackend, CadnnError> {
+        let first = instances
+            .values()
+            .next()
+            .ok_or_else(|| CadnnError::config("no batch variants built"))?;
+        let in_full = &first.graph.nodes[0].shape.0;
+        if in_full.len() < 2 {
+            return Err(CadnnError::config("model input must have a batch axis"));
+        }
+        let input_shape = in_full[1..].to_vec();
+        let out_shape = &first.graph.nodes[first.graph.output].shape.0;
+        let classes = out_shape.last().copied().unwrap_or(0);
+        for (&b, inst) in &instances {
+            let got = inst.graph.nodes[0].shape.0[0];
+            if got != b {
+                return Err(CadnnError::config(format!(
+                    "instance keyed as batch {b} has input batch {got}"
+                )));
+            }
+        }
+        Ok(NativeBackend {
+            name,
+            instances,
+            scratch: Mutex::new(BTreeMap::new()),
+            input_shape,
+            classes,
+            runs: AtomicU64::new(0),
+            buffer_allocs: AtomicU64::new(0),
+            buffer_reuses: AtomicU64::new(0),
+        })
+    }
+
+    /// Return a leased scratch, folding its per-run counter deltas into
+    /// the backend's monotonic totals.
+    fn return_scratch(&self, batch: usize, scratch: ExecScratch, allocs0: u64, reuses0: u64) {
+        self.buffer_allocs
+            .fetch_add(scratch.buffer_allocs().saturating_sub(allocs0), Ordering::Relaxed);
+        self.buffer_reuses
+            .fetch_add(scratch.buffer_reuses().saturating_sub(reuses0), Ordering::Relaxed);
+        self.scratch.lock().unwrap().entry(batch).or_default().push(scratch);
+    }
+
+    /// The instance serving a given batch size (advanced use: profiling,
+    /// weight inspection).
+    pub fn instance(&self, batch: usize) -> Option<&ModelInstance> {
+        self.instances.get(&batch)
+    }
+
+    /// The personality every instance was built under.
+    pub fn personality(&self) -> Personality {
+        self.instances
+            .values()
+            .next()
+            .map(|i| i.personality)
+            .unwrap_or(Personality::CadnnDense)
+    }
+
+    fn per_image(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn input_shape(&self) -> &[usize] {
+        &self.input_shape
+    }
+
+    fn classes(&self) -> usize {
+        self.classes
+    }
+
+    fn batch_sizes(&self) -> Vec<usize> {
+        self.instances.keys().copied().collect()
+    }
+
+    fn run_batch(&self, batch: usize, input: &[f32]) -> Result<Vec<f32>, CadnnError> {
+        let inst = self.instances.get(&batch).ok_or_else(|| CadnnError::BatchUnavailable {
+            batch,
+            available: self.batch_sizes(),
+        })?;
+        let want = batch * self.per_image();
+        if input.len() != want {
+            return Err(CadnnError::InvalidInput {
+                reason: format!("input length {} != batch {batch} * image {}", input.len(),
+                    self.per_image()),
+            });
+        }
+        // lease a scratch: a serial caller gets the same one back every
+        // run (full buffer reuse); concurrent callers each get their own.
+        let leased = {
+            let mut pools = self.scratch.lock().unwrap();
+            pools.get_mut(&batch).and_then(|v| v.pop())
+        };
+        let mut scratch = leased.unwrap_or_else(|| inst.scratch());
+        let (allocs0, reuses0) = (scratch.buffer_allocs(), scratch.buffer_reuses());
+        let result = inst.execute_slice(input, &mut scratch);
+        let out = match result {
+            Ok(out) => out,
+            Err(e) => {
+                self.return_scratch(batch, scratch, allocs0, reuses0);
+                return Err(e);
+            }
+        };
+        let logits = out.data.clone();
+        scratch.recycle(out);
+        self.runs.fetch_add(1, Ordering::Relaxed);
+        self.return_scratch(batch, scratch, allocs0, reuses0);
+        Ok(logits)
+    }
+
+    fn stats(&self) -> BackendStats {
+        BackendStats {
+            runs: self.runs.load(Ordering::Relaxed),
+            buffer_allocs: self.buffer_allocs.load(Ordering::Relaxed),
+            buffer_reuses: self.buffer_reuses.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// PJRT artifact backend: AOT-compiled (model, variant) batch programs
+/// loaded from an artifacts directory. With the offline `xla` stub this
+/// constructor fails with [`CadnnError::BackendUnavailable`]; with the
+/// real binding it serves compiled HLO.
+pub struct ArtifactBackend {
+    name: String,
+    rt: Runtime,
+    model: String,
+    variant: String,
+    input_shape: Vec<usize>,
+    classes: usize,
+}
+
+impl ArtifactBackend {
+    /// Open an artifacts directory and compile every batch variant of
+    /// (model, variant).
+    pub fn open(artifacts_dir: &str, model: &str, variant: &str) -> Result<ArtifactBackend, CadnnError> {
+        let unavailable = |e: anyhow::Error| CadnnError::BackendUnavailable {
+            backend: "pjrt-artifact".into(),
+            reason: e.to_string(),
+        };
+        let mut rt = Runtime::open(artifacts_dir).map_err(unavailable)?;
+        rt.load(model, variant).map_err(unavailable)?;
+        let batches = rt.batches(model, variant);
+        let entry = rt
+            .get(model, variant, batches[0])
+            .ok_or_else(|| CadnnError::BackendUnavailable {
+                backend: "pjrt-artifact".into(),
+                reason: format!("no loaded batch variants for {model}/{variant}"),
+            })?
+            .entry
+            .clone();
+        if entry.input_shape.len() < 2 {
+            return Err(CadnnError::Manifest {
+                reason: format!("entry {model}/{variant} input_shape lacks a batch axis"),
+            });
+        }
+        Ok(ArtifactBackend {
+            name: format!("{model}/{variant}@{artifacts_dir}"),
+            rt,
+            model: model.to_string(),
+            variant: variant.to_string(),
+            input_shape: entry.input_shape[1..].to_vec(),
+            classes: entry.classes,
+        })
+    }
+
+    /// Manifest metadata for one batch variant.
+    pub fn manifest_entry(&self, batch: usize) -> Option<&ManifestEntry> {
+        self.rt.get(&self.model, &self.variant, batch).map(|m| &m.entry)
+    }
+}
+
+impl Backend for ArtifactBackend {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn input_shape(&self) -> &[usize] {
+        &self.input_shape
+    }
+
+    fn classes(&self) -> usize {
+        self.classes
+    }
+
+    fn batch_sizes(&self) -> Vec<usize> {
+        self.rt.batches(&self.model, &self.variant)
+    }
+
+    fn run_batch(&self, batch: usize, input: &[f32]) -> Result<Vec<f32>, CadnnError> {
+        let model = self.rt.get(&self.model, &self.variant, batch).ok_or_else(|| {
+            CadnnError::BatchUnavailable { batch, available: self.batch_sizes() }
+        })?;
+        model
+            .run(input)
+            .map_err(|e| CadnnError::Execution { reason: e.to_string() })
+    }
+}

@@ -1,0 +1,460 @@
+//! The unified front door: `EngineBuilder → Engine → Session`.
+//!
+//! The paper's CADNN framework is one pipeline — compress, optimize,
+//! execute. This module is the one public API over that pipeline,
+//! replacing the two disconnected entry points the repo grew up with
+//! (positional-argument `ModelInstance::build` for native execution,
+//! manifest-only `Runtime` for AOT artifacts):
+//!
+//! ```ignore
+//! use cadnn::api::Engine;
+//! use cadnn::exec::Personality;
+//!
+//! // native execution (always available)
+//! let engine = Engine::native("lenet5")
+//!     .personality(Personality::CadnnDense)
+//!     .batch_sizes(&[1, 2, 4])
+//!     .build()?;
+//! let mut session = engine.session();
+//! let logits = session.run(&image)?; // repeated runs reuse buffers
+//!
+//! // AOT artifacts (needs the real PJRT binding + `make artifacts`)
+//! let engine = Engine::artifacts("artifacts", "lenet5", "dense").build()?;
+//! ```
+//!
+//! An [`Engine`] is cheap to clone (shared state behind an `Arc`) and is
+//! itself a [`Backend`], so it plugs straight into the serving
+//! [`crate::coordinator::Coordinator`] via `Coordinator::serve_engine`.
+//! [`Session`]s opened from one engine share weights but lease dedicated
+//! scratch buffers, so `session.run` in a loop stops reallocating the
+//! per-node tensor table (see [`crate::exec::ExecScratch`]).
+
+pub mod backend;
+
+pub use backend::{ArtifactBackend, Backend, BackendStats, NativeBackend};
+
+use crate::compress::profile::SparsityProfile;
+use crate::error::CadnnError;
+use crate::exec::{ModelInstance, Personality};
+use crate::ir::Graph;
+use crate::models;
+use crate::tuner::TunerCache;
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+/// Where the engine's model comes from.
+enum ModelSource {
+    /// A named architecture from [`crate::models`], rebuilt per batch size.
+    Named(String),
+    /// A caller-supplied graph (fixed batch = the graph's input batch).
+    Graph(Box<Graph>),
+    /// AOT artifacts on disk: (dir, model, variant).
+    Artifacts { dir: String, model: String, variant: String },
+}
+
+/// Typed, named options for constructing an [`Engine`]. Replaces the old
+/// five-positional-argument `ModelInstance::build` call at the public
+/// boundary (which remains available as the low-level layer).
+pub struct EngineBuilder {
+    source: ModelSource,
+    personality: Personality,
+    profile: Option<SparsityProfile>,
+    tuned: bool,
+    cache_bytes: usize,
+    batch_sizes: Option<Vec<usize>>,
+    threads: Option<usize>,
+}
+
+impl EngineBuilder {
+    fn new(source: ModelSource) -> EngineBuilder {
+        EngineBuilder {
+            source,
+            personality: Personality::CadnnDense,
+            profile: None,
+            tuned: false,
+            cache_bytes: 2 << 20,
+            batch_sizes: None,
+            threads: None,
+        }
+    }
+
+    /// Framework personality (passes + engine + tiles + weights). Default:
+    /// [`Personality::CadnnDense`]. Native sources only.
+    pub fn personality(mut self, p: Personality) -> EngineBuilder {
+        self.personality = p;
+        self
+    }
+
+    /// Per-layer sparsity for compressed execution. Requires
+    /// [`Personality::CadnnSparse`]; `build` rejects other personalities.
+    pub fn sparsity_profile(mut self, profile: SparsityProfile) -> EngineBuilder {
+        self.profile = Some(profile);
+        self
+    }
+
+    /// Run the optimization-parameter search per layer (slower build,
+    /// faster inference). Default: off.
+    pub fn tuned(mut self, on: bool) -> EngineBuilder {
+        self.tuned = on;
+        self
+    }
+
+    /// Cache budget (bytes) the tuner assumes for one macro-tile.
+    /// Default: 2 MiB.
+    pub fn cache_bytes(mut self, bytes: usize) -> EngineBuilder {
+        self.cache_bytes = bytes;
+        self
+    }
+
+    /// Batch sizes to build (named models only; the coordinator's dynamic
+    /// batcher picks among them). Default: `[1]`.
+    pub fn batch_sizes(mut self, sizes: &[usize]) -> EngineBuilder {
+        self.batch_sizes = Some(sizes.to_vec());
+        self
+    }
+
+    /// Hint the global kernel thread-pool size. Best-effort: only applies
+    /// if no kernel has run yet in this process.
+    pub fn threads(mut self, n: usize) -> EngineBuilder {
+        self.threads = Some(n);
+        self
+    }
+
+    /// Validate the configuration and construct the engine.
+    pub fn build(self) -> Result<Engine, CadnnError> {
+        if let Some(n) = self.threads {
+            crate::util::pool::request_threads(n);
+        }
+        if self.profile.is_some() && !self.personality.sparse() {
+            return Err(CadnnError::config(
+                "sparsity profile set but personality is not CadnnSparse",
+            ));
+        }
+        match self.source {
+            ModelSource::Named(name) => {
+                let mut sizes = self.batch_sizes.clone().unwrap_or_else(|| vec![1]);
+                sizes.sort_unstable();
+                sizes.dedup();
+                if sizes.is_empty() || sizes[0] == 0 {
+                    return Err(CadnnError::config("batch sizes must be nonempty and nonzero"));
+                }
+                let mut cache = TunerCache::new();
+                let mut instances = BTreeMap::new();
+                for &b in &sizes {
+                    let g = models::build(&name, b)
+                        .ok_or_else(|| CadnnError::UnknownModel { name: name.clone() })?;
+                    let inst = ModelInstance::build(
+                        &g,
+                        self.personality,
+                        self.profile.as_ref(),
+                        if self.tuned { Some(&mut cache) } else { None },
+                        self.cache_bytes,
+                    )?;
+                    instances.insert(b, inst);
+                }
+                let label = format!("{name}[{}]", self.personality.label());
+                let nb = Arc::new(NativeBackend::from_instances(label, instances)?);
+                Ok(Engine { backend: nb.clone(), native: Some(nb) })
+            }
+            ModelSource::Graph(g) => {
+                g.validate()?;
+                let graph_batch = g.nodes[0].shape.0.first().copied().unwrap_or(0);
+                if let Some(sizes) = &self.batch_sizes {
+                    if sizes.len() != 1 || sizes[0] != graph_batch {
+                        return Err(CadnnError::config(format!(
+                            "a fixed graph serves only its own input batch ({graph_batch}); \
+                             use Engine::native(name) for batch variants"
+                        )));
+                    }
+                }
+                let mut cache = TunerCache::new();
+                let inst = ModelInstance::build(
+                    &g,
+                    self.personality,
+                    self.profile.as_ref(),
+                    if self.tuned { Some(&mut cache) } else { None },
+                    self.cache_bytes,
+                )?;
+                let label = format!("{}[{}]", g.name, self.personality.label());
+                let mut instances = BTreeMap::new();
+                instances.insert(graph_batch, inst);
+                let nb = Arc::new(NativeBackend::from_instances(label, instances)?);
+                Ok(Engine { backend: nb.clone(), native: Some(nb) })
+            }
+            ModelSource::Artifacts { dir, model, variant } => {
+                if self.batch_sizes.is_some() {
+                    return Err(CadnnError::config(
+                        "artifact batch variants come from the manifest, not the builder",
+                    ));
+                }
+                // NOTE: with the real (non-stub) xla binding, PJRT handles
+                // are not Sync; artifact engines would then need the
+                // factory-based Coordinator::serve_with path instead.
+                let backend = Arc::new(ArtifactBackend::open(&dir, &model, &variant)?);
+                Ok(Engine { backend, native: None })
+            }
+        }
+    }
+}
+
+/// A ready-to-run model behind a pluggable [`Backend`]. Cheap to clone;
+/// all clones share weights, compiled programs, and scratch pools.
+#[derive(Clone)]
+pub struct Engine {
+    backend: Arc<dyn Backend + Send + Sync>,
+    native: Option<Arc<NativeBackend>>,
+}
+
+impl Engine {
+    /// Build a named model (see [`crate::models::all_names`]) on the
+    /// native kernels.
+    pub fn native(model: &str) -> EngineBuilder {
+        EngineBuilder::new(ModelSource::Named(model.to_string()))
+    }
+
+    /// Build a caller-supplied graph on the native kernels.
+    pub fn from_graph(graph: Graph) -> EngineBuilder {
+        EngineBuilder::new(ModelSource::Graph(Box::new(graph)))
+    }
+
+    /// Open AOT artifacts compiled by `make artifacts`.
+    pub fn artifacts(dir: &str, model: &str, variant: &str) -> EngineBuilder {
+        EngineBuilder::new(ModelSource::Artifacts {
+            dir: dir.to_string(),
+            model: model.to_string(),
+            variant: variant.to_string(),
+        })
+    }
+
+    /// Open a session: a single-stream handle whose repeated `run` calls
+    /// reuse intermediate buffers.
+    pub fn session(&self) -> Session {
+        Session { backend: self.backend.clone(), runs: 0 }
+    }
+
+    /// Backend identity (model/variant/personality).
+    pub fn name(&self) -> &str {
+        self.backend.name()
+    }
+
+    /// Per-image input shape (batch axis excluded).
+    pub fn input_shape(&self) -> &[usize] {
+        self.backend.input_shape()
+    }
+
+    /// Flat floats per image.
+    pub fn input_len(&self) -> usize {
+        self.backend.input_shape().iter().product()
+    }
+
+    /// Logits per image.
+    pub fn classes(&self) -> usize {
+        self.backend.classes()
+    }
+
+    /// Batch sizes this engine can execute, ascending.
+    pub fn batch_sizes(&self) -> Vec<usize> {
+        self.backend.batch_sizes()
+    }
+
+    /// Execution/buffer-reuse telemetry.
+    pub fn stats(&self) -> BackendStats {
+        self.backend.stats()
+    }
+
+    /// The native backend, when this engine runs on the in-process
+    /// kernels (profiling, weight inspection).
+    pub fn native_backend(&self) -> Option<&NativeBackend> {
+        self.native.as_deref()
+    }
+}
+
+/// An [`Engine`] is itself a [`Backend`], so it plugs directly into the
+/// coordinator (`Coordinator::serve_engine`) or any other generic driver.
+impl Backend for Engine {
+    fn name(&self) -> &str {
+        self.backend.name()
+    }
+
+    fn input_shape(&self) -> &[usize] {
+        self.backend.input_shape()
+    }
+
+    fn classes(&self) -> usize {
+        self.backend.classes()
+    }
+
+    fn batch_sizes(&self) -> Vec<usize> {
+        self.backend.batch_sizes()
+    }
+
+    fn run_batch(&self, batch: usize, input: &[f32]) -> Result<Vec<f32>, CadnnError> {
+        self.backend.run_batch(batch, input)
+    }
+
+    fn stats(&self) -> BackendStats {
+        self.backend.stats()
+    }
+}
+
+/// Single-stream inference handle. `&mut self` expresses that a session
+/// is one serial stream: each call leases the same scratch buffers back
+/// from the engine's pool, so steady-state runs allocate nothing on the
+/// per-node hot path.
+pub struct Session {
+    backend: Arc<dyn Backend + Send + Sync>,
+    runs: u64,
+}
+
+impl Session {
+    /// Classify one image (flat NHWC, `input_len` floats); returns
+    /// `classes` logits.
+    pub fn run(&mut self, image: &[f32]) -> Result<Vec<f32>, CadnnError> {
+        self.run_batch(1, image)
+    }
+
+    /// Run a whole batch (must be one of `batch_sizes`).
+    pub fn run_batch(&mut self, batch: usize, input: &[f32]) -> Result<Vec<f32>, CadnnError> {
+        let out = self.backend.run_batch(batch, input)?;
+        self.runs += 1;
+        Ok(out)
+    }
+
+    /// Completed runs on this session.
+    pub fn runs(&self) -> u64 {
+        self.runs
+    }
+
+    /// Per-image input shape (batch axis excluded).
+    pub fn input_shape(&self) -> &[usize] {
+        self.backend.input_shape()
+    }
+
+    /// Flat floats per image.
+    pub fn input_len(&self) -> usize {
+        self.backend.input_shape().iter().product()
+    }
+
+    /// Logits per image.
+    pub fn classes(&self) -> usize {
+        self.backend.classes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::profile::paper_profile;
+    use crate::util::rng::Rng;
+
+    fn image(len: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        let mut v = vec![0.0f32; len];
+        rng.fill_normal(&mut v, 0.5);
+        v
+    }
+
+    #[test]
+    fn engine_builds_and_runs_lenet5() {
+        let engine = Engine::native("lenet5").build().unwrap();
+        assert_eq!(engine.input_shape(), &[28, 28, 1]);
+        assert_eq!(engine.classes(), 10);
+        assert_eq!(engine.batch_sizes(), vec![1]);
+        let mut session = engine.session();
+        let logits = session.run(&image(engine.input_len(), 1)).unwrap();
+        assert_eq!(logits.len(), 10);
+        let s: f32 = logits.iter().sum();
+        assert!((s - 1.0).abs() < 1e-4, "softmax rows sum to 1, got {s}");
+        assert_eq!(session.runs(), 1);
+    }
+
+    #[test]
+    fn unknown_model_is_typed_error() {
+        match Engine::native("nope").build() {
+            Err(CadnnError::UnknownModel { name }) => assert_eq!(name, "nope"),
+            other => panic!("expected UnknownModel, got {:?}", other.err()),
+        }
+    }
+
+    #[test]
+    fn profile_requires_sparse_personality() {
+        let g = models::build("lenet5", 1).unwrap();
+        let err = Engine::native("lenet5")
+            .sparsity_profile(paper_profile(&g))
+            .build()
+            .err()
+            .unwrap();
+        assert!(matches!(err, CadnnError::Config { .. }), "{err}");
+    }
+
+    #[test]
+    fn batch_variants_and_unavailable_batch() {
+        let engine = Engine::native("lenet5").batch_sizes(&[2, 1, 2]).build().unwrap();
+        assert_eq!(engine.batch_sizes(), vec![1, 2]);
+        let mut session = engine.session();
+        let out = session.run_batch(2, &image(2 * engine.input_len(), 3)).unwrap();
+        assert_eq!(out.len(), 20);
+        match session.run_batch(4, &image(4 * engine.input_len(), 3)) {
+            Err(CadnnError::BatchUnavailable { batch: 4, available }) => {
+                assert_eq!(available, vec![1, 2]);
+            }
+            other => panic!("expected BatchUnavailable, got {:?}", other.err()),
+        }
+    }
+
+    #[test]
+    fn sessions_share_one_engine() {
+        let engine = Engine::native("lenet5").build().unwrap();
+        let img = image(engine.input_len(), 5);
+        let mut s1 = engine.session();
+        let mut s2 = engine.session();
+        let a = s1.run(&img).unwrap();
+        let b = s2.run(&img).unwrap();
+        assert_eq!(a, b, "sessions over one engine must agree");
+    }
+
+    #[test]
+    fn repeated_session_runs_reuse_buffers() {
+        let engine = Engine::native("lenet5").build().unwrap();
+        let img = image(engine.input_len(), 7);
+        let mut session = engine.session();
+        let first = session.run(&img).unwrap();
+        let after_one = engine.stats();
+        assert!(after_one.buffer_allocs > 0);
+        let second = session.run(&img).unwrap();
+        let after_two = engine.stats();
+        assert_eq!(first, second);
+        assert!(
+            after_two.buffer_reuses > after_one.buffer_reuses,
+            "second run must reuse pooled buffers: {after_two:?}"
+        );
+        let third = session.run(&img).unwrap();
+        let after_three = engine.stats();
+        assert_eq!(first, third);
+        assert_eq!(
+            after_three.buffer_allocs, after_two.buffer_allocs,
+            "steady state must not allocate fresh buffers"
+        );
+    }
+
+    #[test]
+    fn from_graph_serves_fixed_batch() {
+        let g = models::build("lenet5", 2).unwrap();
+        let engine = Engine::from_graph(g).personality(Personality::TvmLike).build().unwrap();
+        assert_eq!(engine.batch_sizes(), vec![2]);
+        let mut session = engine.session();
+        let out = session.run_batch(2, &image(2 * engine.input_len(), 9)).unwrap();
+        assert_eq!(out.len(), 20);
+    }
+
+    #[test]
+    fn artifact_engine_unavailable_offline() {
+        // with the stub xla binding, artifact engines must fail loudly and
+        // typed — never panic
+        let err = Engine::artifacts("artifacts", "lenet5", "dense").build().err().unwrap();
+        assert!(
+            matches!(err, CadnnError::BackendUnavailable { .. }),
+            "expected BackendUnavailable, got {err}"
+        );
+    }
+}

@@ -2,6 +2,8 @@
 //! sparse format of the paper's CPU backend. Row-major over the (K, N)
 //! weight-matrix view: row = input feature, col = output channel.
 
+use crate::error::CadnnError;
+
 /// CSR with u32 column indices (the paper's storage accounting uses
 /// 16-bit indices where N < 65536; we keep u32 in memory and account
 /// 16-bit on disk where applicable).
@@ -69,29 +71,30 @@ impl CsrMatrix {
     }
 
     /// Structural validation (used by property tests).
-    pub fn validate(&self) -> Result<(), String> {
+    pub fn validate(&self) -> Result<(), CadnnError> {
+        let invalid = |reason: String| CadnnError::InvalidCsr { reason };
         if self.row_ptr.len() != self.rows + 1 {
-            return Err("row_ptr length".into());
+            return Err(invalid("row_ptr length".into()));
         }
         if *self.row_ptr.last().unwrap() as usize != self.values.len() {
-            return Err("row_ptr tail".into());
+            return Err(invalid("row_ptr tail".into()));
         }
         if self.col_idx.len() != self.values.len() {
-            return Err("idx/val length mismatch".into());
+            return Err(invalid("idx/val length mismatch".into()));
         }
         for r in 0..self.rows {
             let (a, b) = (self.row_ptr[r] as usize, self.row_ptr[r + 1] as usize);
             if a > b {
-                return Err(format!("row {r} ptr not monotone"));
+                return Err(invalid(format!("row {r} ptr not monotone")));
             }
             let mut prev: i64 = -1;
             for i in a..b {
                 let c = self.col_idx[i] as i64;
                 if c <= prev {
-                    return Err(format!("row {r} columns not strictly increasing"));
+                    return Err(invalid(format!("row {r} columns not strictly increasing")));
                 }
                 if c as usize >= self.cols {
-                    return Err(format!("row {r} column out of range"));
+                    return Err(invalid(format!("row {r} column out of range")));
                 }
                 prev = c;
             }

@@ -65,6 +65,35 @@ mod tests {
     }
 
     #[test]
+    fn non_contiguous_batch_sets() {
+        // gaps and a floor above 1 — e.g. a manifest compiled at [2, 3, 7]
+        let avail = [2usize, 3, 7];
+        // PadToFit: smallest covering, or the largest when none covers
+        assert_eq!(pick_batch(1, &avail, BatchPolicy::PadToFit), 2);
+        assert_eq!(pick_batch(2, &avail, BatchPolicy::PadToFit), 2);
+        assert_eq!(pick_batch(3, &avail, BatchPolicy::PadToFit), 3);
+        assert_eq!(pick_batch(4, &avail, BatchPolicy::PadToFit), 7);
+        assert_eq!(pick_batch(6, &avail, BatchPolicy::PadToFit), 7);
+        assert_eq!(pick_batch(7, &avail, BatchPolicy::PadToFit), 7);
+        assert_eq!(pick_batch(100, &avail, BatchPolicy::PadToFit), 7);
+        // Greedy: largest fitting, or the smallest when none fits
+        assert_eq!(pick_batch(1, &avail, BatchPolicy::Greedy), 2);
+        assert_eq!(pick_batch(2, &avail, BatchPolicy::Greedy), 2);
+        assert_eq!(pick_batch(4, &avail, BatchPolicy::Greedy), 3);
+        assert_eq!(pick_batch(6, &avail, BatchPolicy::Greedy), 3);
+        assert_eq!(pick_batch(7, &avail, BatchPolicy::Greedy), 7);
+        assert_eq!(pick_batch(9, &avail, BatchPolicy::Greedy), 7);
+    }
+
+    #[test]
+    fn singleton_batch_set() {
+        for pending in [0usize, 1, 5, 40] {
+            assert_eq!(pick_batch(pending, &[4], BatchPolicy::PadToFit), 4);
+            assert_eq!(pick_batch(pending, &[4], BatchPolicy::Greedy), 4);
+        }
+    }
+
+    #[test]
     fn prop_pick_batch_invariants() {
         prop::check("pick_batch invariants", |rng: &mut Rng| {
             // random ascending available set

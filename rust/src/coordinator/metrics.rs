@@ -15,6 +15,8 @@ pub struct Metrics {
     /// sum over runs of (used slots) and (total slots) — padding waste.
     pub used_slots: u64,
     pub total_slots: u64,
+    /// requests answered with a backend-error outcome.
+    pub backend_errors: u64,
 }
 
 impl Metrics {
@@ -28,6 +30,7 @@ impl Metrics {
             batches: 0,
             used_slots: 0,
             total_slots: 0,
+            backend_errors: 0,
         }
     }
 
@@ -41,6 +44,11 @@ impl Metrics {
         self.used_slots += used as u64;
         self.total_slots += batch as u64;
         self.exec.record(exec_us);
+    }
+
+    /// Count requests that received an explicit backend-error response.
+    pub fn record_errors(&mut self, n: u64) {
+        self.backend_errors += n;
     }
 
     pub fn latency_summary(&self) -> Option<Summary> {
@@ -67,9 +75,10 @@ impl Metrics {
     pub fn report(&self) -> String {
         let mut out = String::new();
         out.push_str(&format!(
-            "requests={} batches={} throughput={:.1} req/s batch_util={:.0}%\n",
+            "requests={} batches={} errors={} throughput={:.1} req/s batch_util={:.0}%\n",
             self.requests,
             self.batches,
+            self.backend_errors,
             self.throughput_rps(),
             self.batch_utilization() * 100.0
         ));

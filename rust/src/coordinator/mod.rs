@@ -1,11 +1,22 @@
-//! Serving coordinator: request queue -> dynamic batcher -> PJRT worker.
+//! Serving coordinator: request queue -> dynamic batcher -> any backend.
 //!
-//! The L3 contribution rendered for serving: clients submit single-image
-//! requests; the batcher coalesces them (bounded by `max_batch` and
-//! `max_wait_us`) and picks among the AOT batch variants (PJRT programs
-//! are shape-static, so "dynamic batching" = choosing the best-fitting
-//! compiled batch and padding the remainder). Latency percentiles and
-//! throughput are recorded per request.
+//! Clients submit single-image requests; the batcher coalesces them
+//! (bounded by `max_batch` and `max_wait_us`) and picks among the
+//! backend's batch variants (programs are shape-static, so "dynamic
+//! batching" = choosing the best-fitting batch and padding the
+//! remainder). Latency percentiles and throughput are recorded per
+//! request.
+//!
+//! The worker serves any [`Backend`] — a natively-executed
+//! [`crate::api::Engine`] via [`Coordinator::serve_engine`], AOT PJRT
+//! artifacts via [`Coordinator::start`], or anything else via
+//! [`Coordinator::serve_with`] (the factory runs *inside* the worker
+//! thread, accommodating backends whose handles are not `Send`).
+//!
+//! Error semantics: a request that fails in the backend receives an
+//! explicit [`ServeError::Backend`] response, while coordinator shutdown
+//! closes the reply channel (`RecvError`) — clients can tell the two
+//! apart.
 
 pub mod batcher;
 pub mod metrics;
@@ -13,13 +24,30 @@ pub mod metrics;
 pub use batcher::{pick_batch, BatchPolicy};
 pub use metrics::Metrics;
 
-use crate::runtime::Runtime;
+use crate::api::{ArtifactBackend, Backend};
+use crate::error::CadnnError;
 use anyhow::{anyhow, Result};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
+/// Batching knobs, independent of where the model comes from.
+#[derive(Debug, Clone)]
+pub struct BatcherConfig {
+    pub max_batch: usize,
+    pub max_wait_us: u64,
+    pub policy: BatchPolicy,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig { max_batch: 8, max_wait_us: 2_000, policy: BatchPolicy::PadToFit }
+    }
+}
+
+/// Artifact-serving configuration (the original entry point, kept for
+/// the AOT path; native engines use [`Coordinator::serve_engine`]).
 #[derive(Debug, Clone)]
 pub struct CoordinatorConfig {
     pub artifacts_dir: String,
@@ -51,14 +79,45 @@ struct Request {
     reply: Sender<Response>,
 }
 
+/// Why a request failed while the coordinator stayed alive. (Shutdown is
+/// signalled differently: the reply channel closes.)
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// The backend rejected or failed the batch this request rode in.
+    Backend(String),
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Backend(msg) => write!(f, "backend error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
 #[derive(Debug, Clone)]
 pub struct Response {
     pub id: u64,
-    pub logits: Vec<f32>,
+    /// Logits on success, or an explicit backend error.
+    pub outcome: Result<Vec<f32>, ServeError>,
     /// end-to-end latency (enqueue -> reply), microseconds
     pub latency_us: f64,
     /// batch this request rode in
     pub batch: usize,
+}
+
+impl Response {
+    /// Logits, if the request succeeded.
+    pub fn logits(&self) -> Option<&[f32]> {
+        self.outcome.as_ref().ok().map(|v| v.as_slice())
+    }
+
+    /// Consume into logits or the serve error.
+    pub fn into_logits(self) -> Result<Vec<f32>, ServeError> {
+        self.outcome
+    }
 }
 
 enum Msg {
@@ -77,37 +136,27 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
-    /// Start the worker thread: it opens the runtime, compiles the model
-    /// variants, then serves until shutdown.
-    pub fn start(cfg: CoordinatorConfig) -> Result<Coordinator> {
+    /// Serve a backend constructed *inside* the worker thread (required
+    /// for backends whose handles are not `Send`, e.g. real PJRT). The
+    /// call blocks until the backend is ready (or failed), so client
+    /// latency measurements see steady state and load errors surface
+    /// here.
+    pub fn serve_with<F>(factory: F, cfg: BatcherConfig) -> Result<Coordinator>
+    where
+        F: FnOnce() -> Result<Box<dyn Backend>, CadnnError> + Send + 'static,
+    {
         let (tx, rx) = channel::<Msg>();
         let metrics = Arc::new(Mutex::new(Metrics::new()));
         let m2 = metrics.clone();
-        // probe the manifest up front for input geometry (fail fast)
-        let text = std::fs::read_to_string(format!("{}/manifest.json", cfg.artifacts_dir))?;
-        let manifest = crate::runtime::Manifest::parse(&text)?;
-        let entry = manifest
-            .models
-            .iter()
-            .find(|e| e.name == cfg.model && e.variant == cfg.variant && e.batch == 1)
-            .ok_or_else(|| anyhow!("no batch-1 artifact for {}/{}", cfg.model, cfg.variant))?
-            .clone();
-        let input_len: usize = entry.input_shape.iter().product();
-        let classes = entry.classes;
-
-        let cfg2 = cfg.clone();
-        // readiness handshake: the worker compiles the PJRT executables
-        // before serving; block here so client latency measurements see
-        // steady-state, and so load errors surface at start().
-        let (ready_tx, ready_rx) = channel::<Result<(), String>>();
+        let (ready_tx, ready_rx) = channel::<Result<(usize, usize), String>>();
         let worker = std::thread::Builder::new()
             .name("cadnn-coordinator".into())
-            .spawn(move || worker_loop(cfg2, rx, m2, ready_tx))?;
-        match ready_rx.recv() {
-            Ok(Ok(())) => {}
+            .spawn(move || worker_loop(factory, cfg, rx, m2, ready_tx))?;
+        let (input_len, classes) = match ready_rx.recv() {
+            Ok(Ok(geometry)) => geometry,
             Ok(Err(e)) => return Err(anyhow!("coordinator worker failed to start: {e}")),
             Err(_) => return Err(anyhow!("coordinator worker died during startup")),
-        }
+        };
         Ok(Coordinator {
             tx,
             next_id: AtomicU64::new(1),
@@ -116,6 +165,48 @@ impl Coordinator {
             input_len,
             classes,
         })
+    }
+
+    /// Serve an already-constructed backend.
+    pub fn serve(backend: Box<dyn Backend + Send>, cfg: BatcherConfig) -> Result<Coordinator> {
+        Self::serve_with(
+            move || {
+                let backend: Box<dyn Backend> = backend;
+                Ok(backend)
+            },
+            cfg,
+        )
+    }
+
+    /// Serve a (cheaply cloned) [`crate::api::Engine`] — the way to put
+    /// the dynamic batcher in front of a natively-executed model, no
+    /// artifacts directory required.
+    pub fn serve_engine(engine: &crate::api::Engine, cfg: BatcherConfig) -> Result<Coordinator> {
+        let engine = engine.clone();
+        Self::serve_with(
+            move || {
+                let backend: Box<dyn Backend> = Box::new(engine);
+                Ok(backend)
+            },
+            cfg,
+        )
+    }
+
+    /// Start an artifact-serving worker: it opens the PJRT runtime,
+    /// compiles the model's batch variants, then serves until shutdown.
+    pub fn start(cfg: CoordinatorConfig) -> Result<Coordinator> {
+        let batcher = BatcherConfig {
+            max_batch: cfg.max_batch,
+            max_wait_us: cfg.max_wait_us,
+            policy: cfg.policy,
+        };
+        Self::serve_with(
+            move || {
+                ArtifactBackend::open(&cfg.artifacts_dir, &cfg.model, &cfg.variant)
+                    .map(|b| -> Box<dyn Backend> { Box::new(b) })
+            },
+            batcher,
+        )
     }
 
     /// Submit one image; returns a receiver for the response.
@@ -159,40 +250,35 @@ impl Drop for Coordinator {
     }
 }
 
-fn worker_loop(
-    cfg: CoordinatorConfig,
+fn worker_loop<F>(
+    factory: F,
+    cfg: BatcherConfig,
     rx: Receiver<Msg>,
     metrics: Arc<Mutex<Metrics>>,
-    ready: Sender<Result<(), String>>,
-) -> Result<()> {
-    // PJRT objects are created inside the worker thread (no Send bound).
-    let init = (|| -> Result<Runtime> {
-        let mut rt = Runtime::open(&cfg.artifacts_dir)?;
-        rt.load(&cfg.model, &cfg.variant)?;
-        Ok(rt)
-    })();
-    let rt = match init {
-        Ok(rt) => {
-            let _ = ready.send(Ok(()));
-            rt
-        }
+    ready: Sender<Result<(usize, usize), String>>,
+) -> Result<()>
+where
+    F: FnOnce() -> Result<Box<dyn Backend>, CadnnError>,
+{
+    // Backend objects are created inside the worker thread (no Send bound
+    // on the backend itself, only on the factory).
+    let backend = match factory() {
+        Ok(b) => b,
         Err(e) => {
             let _ = ready.send(Err(e.to_string()));
-            return Err(e);
+            return Err(anyhow!("backend init failed: {e}"));
         }
     };
-    let batches = rt.batches(&cfg.model, &cfg.variant);
+    let batches = backend.batch_sizes();
     if batches.is_empty() {
-        return Err(anyhow!("no batch variants loaded"));
+        let msg = "backend reports no batch variants".to_string();
+        let _ = ready.send(Err(msg.clone()));
+        return Err(anyhow!(msg));
     }
-    let per_image = rt
-        .get(&cfg.model, &cfg.variant, batches[0])
-        .map(|m| m.entry.input_shape.iter().skip(1).product::<usize>())
-        .unwrap();
-    let classes = rt
-        .get(&cfg.model, &cfg.variant, batches[0])
-        .map(|m| m.entry.classes)
-        .unwrap();
+    let per_image: usize = backend.input_shape().iter().product();
+    let classes = backend.classes();
+    let _ = ready.send(Ok((per_image, classes)));
+    let backend = backend.as_ref();
 
     let mut queue: Vec<Request> = Vec::new();
     loop {
@@ -210,7 +296,7 @@ fn worker_loop(
             match rx.try_recv() {
                 Ok(Msg::Req(r)) => queue.push(r),
                 Ok(Msg::Shutdown) => {
-                    flush(&rt, &cfg, &mut queue, &batches, per_image, classes, &metrics);
+                    flush(backend, &cfg, &mut queue, &batches, per_image, classes, &metrics);
                     return Ok(());
                 }
                 Err(_) => break,
@@ -225,24 +311,24 @@ fn worker_loop(
             match rx.recv_timeout(deadline - now) {
                 Ok(Msg::Req(r)) => queue.push(r),
                 Ok(Msg::Shutdown) => {
-                    flush(&rt, &cfg, &mut queue, &batches, per_image, classes, &metrics);
+                    flush(backend, &cfg, &mut queue, &batches, per_image, classes, &metrics);
                     return Ok(());
                 }
                 Err(std::sync::mpsc::RecvTimeoutError::Timeout) => break,
                 Err(_) => {
-                    flush(&rt, &cfg, &mut queue, &batches, per_image, classes, &metrics);
+                    flush(backend, &cfg, &mut queue, &batches, per_image, classes, &metrics);
                     return Ok(());
                 }
             }
         }
-        flush(&rt, &cfg, &mut queue, &batches, per_image, classes, &metrics);
+        flush(backend, &cfg, &mut queue, &batches, per_image, classes, &metrics);
     }
 }
 
 /// Execute and reply to as many queued requests as one batch allows.
 fn flush(
-    rt: &Runtime,
-    cfg: &CoordinatorConfig,
+    backend: &dyn Backend,
+    cfg: &BatcherConfig,
     queue: &mut Vec<Request>,
     batches: &[usize],
     per_image: usize,
@@ -256,11 +342,8 @@ fn flush(
         for (i, r) in queue.iter().take(take).enumerate() {
             input[i * per_image..(i + 1) * per_image].copy_from_slice(&r.input);
         }
-        let model = rt
-            .get(&cfg.model, &cfg.variant, b)
-            .expect("picked batch must be loaded");
         let t0 = Instant::now();
-        let out = match model.run(&input) {
+        let out = match backend.run_batch(b, &input) {
             Ok(o) => o,
             Err(e) => {
                 crate::util::log::log(
@@ -268,8 +351,22 @@ fn flush(
                     "coordinator",
                     format_args!("execute failed: {e}"),
                 );
-                // drop the affected requests (reply channels close)
-                queue.drain(..take);
+                // answer the affected requests with an explicit backend
+                // error so clients can distinguish this from shutdown
+                // (where the reply channel just closes)
+                let err = ServeError::Backend(e.to_string());
+                let mut m = metrics.lock().unwrap();
+                m.record_errors(take as u64);
+                drop(m);
+                for r in queue.drain(..take) {
+                    let latency_us = r.enqueued.elapsed().as_secs_f64() * 1e6;
+                    let _ = r.reply.send(Response {
+                        id: r.id,
+                        outcome: Err(err.clone()),
+                        latency_us,
+                        batch: b,
+                    });
+                }
                 continue;
             }
         };
@@ -281,7 +378,7 @@ fn flush(
             m.record_request(latency_us);
             let _ = r.reply.send(Response {
                 id: r.id,
-                logits: out[i * classes..(i + 1) * classes].to_vec(),
+                outcome: Ok(out[i * classes..(i + 1) * classes].to_vec()),
                 latency_us,
                 batch: b,
             });

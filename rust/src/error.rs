@@ -1,0 +1,121 @@
+//! Typed errors for the whole crate.
+//!
+//! `CadnnError` replaces the ad-hoc `Result<T, String>` plumbing that the
+//! seed used in `ir`, `exec`, and `compress`. It is a hand-rolled
+//! `thiserror`-style enum (no new dependencies): every variant carries the
+//! data a caller needs to react programmatically, `Display` renders a
+//! human-readable message, and the `std::error::Error` impl lets `anyhow`
+//! layers (the CLI, examples, coordinator plumbing) consume it with `?`.
+
+use std::fmt;
+
+/// Every way the CADNN stack can fail, from graph construction through
+/// backend execution.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CadnnError {
+    /// A graph failed structural validation.
+    InvalidGraph { graph: String, reason: String },
+    /// A node uses an op (or op configuration) the native executor cannot run.
+    UnsupportedOp { node: String, reason: String },
+    /// An executable node has no generated weights (internal invariant).
+    MissingWeights { node: String },
+    /// Input tensor shape does not match the model's input shape.
+    InputShape { expected: Vec<usize>, got: Vec<usize> },
+    /// Flat input buffer has the wrong length (or is otherwise malformed).
+    InvalidInput { reason: String },
+    /// `models::build` does not know this model name.
+    UnknownModel { name: String },
+    /// The requested batch size has no compiled/built variant.
+    BatchUnavailable { batch: usize, available: Vec<usize> },
+    /// A backend could not be constructed (e.g. PJRT missing, artifacts absent).
+    BackendUnavailable { backend: String, reason: String },
+    /// A CSR matrix failed structural validation.
+    InvalidCsr { reason: String },
+    /// artifacts/manifest.json is malformed.
+    Manifest { reason: String },
+    /// A forward pass failed mid-execution.
+    Execution { reason: String },
+    /// Builder/config misuse (e.g. batch variants on a fixed graph source).
+    Config { reason: String },
+}
+
+impl CadnnError {
+    /// Shorthand for [`CadnnError::Execution`].
+    pub fn execution(reason: impl Into<String>) -> CadnnError {
+        CadnnError::Execution { reason: reason.into() }
+    }
+
+    /// Shorthand for [`CadnnError::Config`].
+    pub fn config(reason: impl Into<String>) -> CadnnError {
+        CadnnError::Config { reason: reason.into() }
+    }
+}
+
+impl fmt::Display for CadnnError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CadnnError::InvalidGraph { graph, reason } => {
+                write!(f, "invalid graph '{graph}': {reason}")
+            }
+            CadnnError::UnsupportedOp { node, reason } => {
+                write!(f, "unsupported op at node '{node}': {reason}")
+            }
+            CadnnError::MissingWeights { node } => {
+                write!(f, "missing weights for node '{node}'")
+            }
+            CadnnError::InputShape { expected, got } => {
+                write!(f, "input shape {got:?} != model input {expected:?}")
+            }
+            CadnnError::InvalidInput { reason } => write!(f, "invalid input: {reason}"),
+            CadnnError::UnknownModel { name } => write!(f, "unknown model '{name}'"),
+            CadnnError::BatchUnavailable { batch, available } => {
+                write!(f, "batch {batch} unavailable (have {available:?})")
+            }
+            CadnnError::BackendUnavailable { backend, reason } => {
+                write!(f, "backend '{backend}' unavailable: {reason}")
+            }
+            CadnnError::InvalidCsr { reason } => write!(f, "invalid CSR matrix: {reason}"),
+            CadnnError::Manifest { reason } => write!(f, "manifest: {reason}"),
+            CadnnError::Execution { reason } => write!(f, "execution failed: {reason}"),
+            CadnnError::Config { reason } => write!(f, "invalid configuration: {reason}"),
+        }
+    }
+}
+
+impl std::error::Error for CadnnError {}
+
+/// Lets property-test closures (`Result<(), String>`) use `?` on fallible
+/// CADNN calls.
+impl From<CadnnError> for String {
+    fn from(e: CadnnError) -> String {
+        e.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_is_informative() {
+        let e = CadnnError::BatchUnavailable { batch: 3, available: vec![1, 2, 4] };
+        let s = e.to_string();
+        assert!(s.contains('3') && s.contains("[1, 2, 4]"), "{s}");
+    }
+
+    #[test]
+    fn anyhow_consumes_cadnn_errors() {
+        fn fails() -> anyhow::Result<()> {
+            Err(CadnnError::UnknownModel { name: "nope".into() })?;
+            Ok(())
+        }
+        let e = fails().unwrap_err();
+        assert!(e.to_string().contains("unknown model 'nope'"));
+    }
+
+    #[test]
+    fn string_conversion_for_prop_closures() {
+        let s: String = CadnnError::execution("boom").into();
+        assert_eq!(s, "execution failed: boom");
+    }
+}

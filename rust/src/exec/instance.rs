@@ -1,8 +1,16 @@
 //! Executable model instance: lowered graph + generated weights +
 //! per-layer kernel/tile choices, runnable on the native kernels.
+//!
+//! Hot-path note: `execute` allocates a fresh value table per call; the
+//! serving / benchmark loops should instead hold an [`ExecScratch`]
+//! (via [`ModelInstance::scratch`]) and call [`ModelInstance::execute_with`]
+//! or [`ModelInstance::execute_slice`], which reuse the per-node value
+//! table and recycle intermediate tensors through a size-keyed pool.
+//! `cadnn::api::Session` does exactly this.
 
 use crate::compress::csr::CsrMatrix;
 use crate::compress::profile::SparsityProfile;
+use crate::error::CadnnError;
 use crate::ir::ops::{ActKind, Op, PoolKind};
 use crate::ir::{Graph, NodeId};
 use crate::kernels::conv as K;
@@ -51,12 +59,111 @@ impl NodeProfile {
     }
 }
 
+/// Size-keyed free list of intermediate tensors. Kernels that allocate
+/// internally donate their outputs on death; the executor-allocated ops
+/// (GEMM, FC, elementwise, input staging) draw from it, so repeated runs
+/// through one scratch stop allocating.
+#[derive(Debug, Default)]
+pub struct TensorPool {
+    free: BTreeMap<usize, Vec<Tensor>>,
+    allocs: u64,
+    reuses: u64,
+}
+
+/// Bound on retained buffers per distinct size, so long-lived scratches
+/// don't accumulate duplicates of kernel-allocated intermediates.
+const POOL_MAX_PER_SIZE: usize = 4;
+
+impl TensorPool {
+    fn take_raw(&mut self, shape: &[usize]) -> Option<Tensor> {
+        let numel: usize = shape.iter().product();
+        match self.free.get_mut(&numel).and_then(|v| v.pop()) {
+            Some(mut t) => {
+                self.reuses += 1;
+                t.shape = shape.to_vec();
+                Some(t)
+            }
+            None => {
+                self.allocs += 1;
+                None
+            }
+        }
+    }
+
+    /// Zero-filled tensor of `shape` (for kernels that accumulate).
+    fn take_zeroed(&mut self, shape: &[usize]) -> Tensor {
+        match self.take_raw(shape) {
+            Some(mut t) => {
+                t.data.fill(0.0);
+                t
+            }
+            None => Tensor::zeros(shape),
+        }
+    }
+
+    /// Tensor of `shape` initialized from `src` (lengths must agree).
+    fn take_copy(&mut self, shape: &[usize], src: &[f32]) -> Tensor {
+        debug_assert_eq!(shape.iter().product::<usize>(), src.len());
+        match self.take_raw(shape) {
+            Some(mut t) => {
+                t.data.copy_from_slice(src);
+                t
+            }
+            None => Tensor::from_vec(shape, src.to_vec()),
+        }
+    }
+
+    /// Return a tensor to the pool for later reuse.
+    pub fn give(&mut self, t: Tensor) {
+        let numel = t.numel();
+        if numel == 0 {
+            return;
+        }
+        let slot = self.free.entry(numel).or_default();
+        if slot.len() < POOL_MAX_PER_SIZE {
+            slot.push(t);
+        }
+    }
+}
+
+/// Reusable per-run state for [`ModelInstance::execute_with`]: the
+/// per-node value table, the liveness schedule, and the tensor pool.
+/// Create once per serving stream (`ModelInstance::scratch`) and reuse —
+/// that removes the per-call `Vec<Option<Tensor>>` allocation and most
+/// intermediate-tensor allocations from the hot path.
+#[derive(Debug)]
+pub struct ExecScratch {
+    values: Vec<Option<Tensor>>,
+    last_use: Vec<NodeId>,
+    pool: TensorPool,
+}
+
+impl ExecScratch {
+    /// Fresh tensor allocations made through the pool so far.
+    pub fn buffer_allocs(&self) -> u64 {
+        self.pool.allocs
+    }
+
+    /// Pool hits (reused buffers) so far.
+    pub fn buffer_reuses(&self) -> u64 {
+        self.pool.reuses
+    }
+
+    /// Donate a tensor (e.g. a returned output) back for reuse.
+    pub fn recycle(&mut self, t: Tensor) {
+        self.pool.give(t);
+    }
+}
+
 pub struct ModelInstance {
     pub name: String,
     pub personality: Personality,
     pub graph: Graph,
     weights: BTreeMap<NodeId, NodeWeights>,
     tiles: BTreeMap<NodeId, TileConfig>,
+    /// HWIO weight tensors pre-materialized for the direct-conv engine
+    /// (TfLite-like), so the hot path stops cloning the weight matrix.
+    direct_w: BTreeMap<NodeId, Tensor>,
     /// Sparsity profile actually applied (CadnnSparse only).
     pub profile: Option<SparsityProfile>,
 }
@@ -94,23 +201,32 @@ fn gen_bias(name: &str, c: usize) -> Vec<f32> {
 }
 
 /// Prune a weight matrix to the given sparsity by magnitude (matching
-/// the ADMM projection's final support selection).
+/// the ADMM projection's final support selection). The cut is exact:
+/// `round(len * sparsity)` entries are zeroed, selected by sorted
+/// (magnitude, index) order, so tied magnitudes cannot make the achieved
+/// density drift from the requested sparsity.
 fn prune_matrix(mat: &mut [f32], sparsity: f64) {
-    if sparsity <= 0.0 {
+    if sparsity <= 0.0 || mat.is_empty() {
         return;
     }
-    let mut mags: Vec<f32> = mat.iter().map(|v| v.abs()).collect();
-    mags.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let cut = ((mat.len() as f64) * sparsity) as usize;
+    let cut = ((mat.len() as f64) * sparsity).round() as usize;
+    let cut = cut.min(mat.len());
     if cut == 0 {
         return;
     }
-    let thresh = mags[cut.min(mags.len() - 1)];
-    for v in mat.iter_mut() {
-        if v.abs() < thresh {
-            *v = 0.0;
-        }
+    let mut idx: Vec<usize> = (0..mat.len()).collect();
+    let cmp = |a: &usize, b: &usize| {
+        mat[*a]
+            .abs()
+            .partial_cmp(&mat[*b].abs())
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(b))
+    };
+    let (smallest, nth, _) = idx.select_nth_unstable_by(cut - 1, cmp);
+    for &i in smallest.iter() {
+        mat[i] = 0.0;
     }
+    mat[*nth] = 0.0;
 }
 
 fn act_flags(act: ActKind) -> (bool, bool) {
@@ -130,16 +246,20 @@ impl ModelInstance {
         profile: Option<&SparsityProfile>,
         tuner: Option<&mut TunerCache>,
         cache_bytes: usize,
-    ) -> Result<ModelInstance, String> {
+    ) -> Result<ModelInstance, CadnnError> {
         let graph = personality.lower(model);
         let mut weights = BTreeMap::new();
         let mut tiles = BTreeMap::new();
+        let mut direct_w = BTreeMap::new();
         let mut tuner = tuner;
         for n in &graph.nodes {
             match &n.op {
                 Op::Conv2d { kh, kw, cin, cout, groups, bias, .. } => {
                     if *groups != 1 {
-                        return Err(format!("grouped conv '{}' not executable", n.name));
+                        return Err(CadnnError::UnsupportedOp {
+                            node: n.name.clone(),
+                            reason: format!("grouped conv (groups={groups}) not executable"),
+                        });
                     }
                     let k = kh * kw * cin;
                     let mat = gen_matrix(&n.name, k, *cout);
@@ -148,6 +268,12 @@ impl ModelInstance {
                     } else {
                         Epilogue::None
                     };
+                    if personality.direct_conv() {
+                        direct_w.insert(
+                            n.id,
+                            Tensor::from_vec(&[*kh, *kw, *cin, *cout], mat.clone()),
+                        );
+                    }
                     weights.insert(
                         n.id,
                         NodeWeights::Dense { mat, hwio: [*kh, *kw, *cin, *cout], epi },
@@ -155,7 +281,10 @@ impl ModelInstance {
                 }
                 Op::FusedConvBnAct { kh, kw, cin, cout, act, groups, .. } => {
                     if *groups != 1 {
-                        return Err(format!("grouped conv '{}' not executable", n.name));
+                        return Err(CadnnError::UnsupportedOp {
+                            node: n.name.clone(),
+                            reason: format!("grouped conv (groups={groups}) not executable"),
+                        });
                     }
                     let k = kh * kw * cin;
                     let mut mat = gen_matrix(&n.name, k, *cout);
@@ -248,6 +377,7 @@ impl ModelInstance {
             graph,
             weights,
             tiles,
+            direct_w,
             profile: profile.cloned().filter(|_| personality.sparse()),
         })
     }
@@ -256,18 +386,36 @@ impl ModelInstance {
         self.tiles.get(&id).copied().unwrap_or(TileConfig::DEFAULT)
     }
 
-    /// Per-node timing profile from `execute_profiled`.
-    pub fn profile(&self, input: &Tensor, warmup: usize) -> Result<Vec<NodeProfile>, String> {
+    /// Build a reusable scratch for this instance (value table sized to
+    /// the lowered graph + precomputed liveness).
+    pub fn scratch(&self) -> ExecScratch {
+        let g = &self.graph;
+        let mut last_use = vec![0usize; g.len()];
+        for n in &g.nodes {
+            for &i in &n.inputs {
+                last_use[i] = last_use[i].max(n.id);
+            }
+        }
+        ExecScratch {
+            values: vec![None; g.len()],
+            last_use,
+            pool: TensorPool::default(),
+        }
+    }
+
+    /// Per-node timing profile from repeated execution.
+    pub fn profile(&self, input: &Tensor, warmup: usize) -> Result<Vec<NodeProfile>, CadnnError> {
         for _ in 0..warmup {
             self.execute(input)?;
         }
         let g = &self.graph;
+        let mut pool = TensorPool::default();
         let mut values: Vec<Option<Tensor>> = vec![None; g.len()];
         values[0] = Some(input.clone());
         let mut out = Vec::new();
         for n in g.nodes.iter().skip(1) {
             let t0 = std::time::Instant::now();
-            let v = self.exec_node(n, &values)?;
+            let v = self.exec_node(n, &values, &mut pool)?;
             let us = t0.elapsed().as_secs_f64() * 1e6;
             let ins: Vec<&crate::ir::Shape> =
                 n.inputs.iter().map(|&i| &g.nodes[i].shape).collect();
@@ -283,52 +431,102 @@ impl ModelInstance {
         Ok(out)
     }
 
-    /// Run a forward pass. Input NHWC must match the graph input shape.
-    pub fn execute(&self, input: &Tensor) -> Result<Tensor, String> {
-        let g = &self.graph;
-        if input.shape != g.nodes[0].shape.0 {
-            return Err(format!(
-                "input shape {:?} != model {:?}",
-                input.shape, g.nodes[0].shape.0
-            ));
+    /// Run a forward pass with a one-shot scratch. Input NHWC must match
+    /// the graph input shape. Serving loops should prefer
+    /// [`ModelInstance::execute_with`] with a held [`ExecScratch`].
+    pub fn execute(&self, input: &Tensor) -> Result<Tensor, CadnnError> {
+        let mut scratch = self.scratch();
+        self.execute_with(input, &mut scratch)
+    }
+
+    /// Forward pass reusing `scratch` across calls.
+    pub fn execute_with(
+        &self,
+        input: &Tensor,
+        scratch: &mut ExecScratch,
+    ) -> Result<Tensor, CadnnError> {
+        let want = &self.graph.nodes[0].shape.0;
+        if &input.shape != want {
+            return Err(CadnnError::InputShape {
+                expected: want.clone(),
+                got: input.shape.clone(),
+            });
         }
-        let mut values: Vec<Option<Tensor>> = vec![None; g.len()];
-        // liveness: free a value after its last consumer
-        let mut last_use = vec![0usize; g.len()];
-        for n in &g.nodes {
-            for &i in &n.inputs {
-                last_use[i] = last_use[i].max(n.id);
+        self.execute_slice(&input.data, scratch)
+    }
+
+    /// Forward pass over a flat input buffer (interpreted as the graph's
+    /// input shape), reusing `scratch` across calls.
+    pub fn execute_slice(
+        &self,
+        input: &[f32],
+        scratch: &mut ExecScratch,
+    ) -> Result<Tensor, CadnnError> {
+        let g = &self.graph;
+        let in_shape = &g.nodes[0].shape.0;
+        let want: usize = in_shape.iter().product();
+        if input.len() != want {
+            return Err(CadnnError::InvalidInput {
+                reason: format!("input length {} != expected {want}", input.len()),
+            });
+        }
+        if scratch.values.len() != g.len() {
+            // scratch built for a different graph: rebuild rather than UB
+            *scratch = self.scratch();
+        }
+        let ExecScratch { values, last_use, pool } = scratch;
+        // recycle leftovers from the previous run
+        for slot in values.iter_mut() {
+            if let Some(t) = slot.take() {
+                pool.give(t);
             }
         }
-        values[0] = Some(input.clone());
+        values[0] = Some(pool.take_copy(in_shape, input));
         for n in g.nodes.iter().skip(1) {
-            let out = self.exec_node(n, &values)?;
+            let out = self.exec_node(n, values, pool)?;
             values[n.id] = Some(out);
-            // free dead values
+            // free dead values into the pool
             for &i in &n.inputs {
                 if last_use[i] == n.id && i != g.output {
-                    values[i] = None;
+                    if let Some(t) = values[i].take() {
+                        pool.give(t);
+                    }
                 }
             }
         }
         values[g.output]
             .take()
-            .ok_or_else(|| "output value missing".into())
+            .ok_or_else(|| CadnnError::execution("output value missing"))
     }
 
-    fn exec_node(&self, n: &crate::ir::Node, values: &[Option<Tensor>]) -> Result<Tensor, String> {
-        let val = |i: usize| -> Result<&Tensor, String> {
-            values[i].as_ref().ok_or_else(|| format!("value {i} freed too early"))
+    fn exec_node(
+        &self,
+        n: &crate::ir::Node,
+        values: &[Option<Tensor>],
+        pool: &mut TensorPool,
+    ) -> Result<Tensor, CadnnError> {
+        let val = |i: usize| -> Result<&Tensor, CadnnError> {
+            values[i]
+                .as_ref()
+                .ok_or_else(|| CadnnError::execution(format!("value {i} freed too early")))
         };
+        let missing = |name: &str| CadnnError::MissingWeights { node: name.to_string() };
         let x = val(n.inputs[0])?;
         let out = match &n.op {
             Op::Conv2d { kh, kw, cout, stride, padh, padw, .. } => {
                 let Some(NodeWeights::Dense { mat, hwio, epi }) = self.weights.get(&n.id) else {
-                    return Err(format!("missing weights for {}", n.name));
+                    return Err(missing(&n.name));
                 };
                 if self.personality.direct_conv() {
-                    let w = Tensor::from_vec(&hwio.to_vec(), mat.clone());
-                    let mut out = K::conv2d_direct(x, &w, *stride, *padh, *padw);
+                    let built;
+                    let w = match self.direct_w.get(&n.id) {
+                        Some(w) => w,
+                        None => {
+                            built = Tensor::from_vec(&hwio.to_vec(), mat.clone());
+                            &built
+                        }
+                    };
+                    let mut out = K::conv2d_direct(x, w, *stride, *padh, *padw);
                     let (rows, ch) = (out.numel() / out.c(), out.c());
                     epi.apply(&mut out.data, rows, ch);
                     out
@@ -350,11 +548,11 @@ impl ModelInstance {
                 Some(NodeWeights::Sparse { csr, epi, .. }) => {
                     K::conv2d_csr(x, csr, *kh, *kw, *stride, *padh, *padw, epi)
                 }
-                _ => return Err(format!("missing weights for {}", n.name)),
+                _ => return Err(missing(&n.name)),
             },
             Op::Gemm { k, n: nn, out_shape, .. } => {
                 let m = out_shape.numel() / nn;
-                let mut out = Tensor::zeros(&out_shape.0);
+                let mut out = pool.take_zeroed(&out_shape.0);
                 match self.weights.get(&n.id) {
                     Some(NodeWeights::Dense { mat, epi, .. }) => {
                         crate::kernels::gemm::gemm_parallel(
@@ -367,32 +565,32 @@ impl ModelInstance {
                             &x.data, csr, &mut out.data, m, epi,
                         );
                     }
-                    _ => return Err(format!("missing weights for {}", n.name)),
+                    _ => return Err(missing(&n.name)),
                 }
                 out
             }
             Op::DepthwiseConv2d { stride, padding, .. } => {
                 let Some(NodeWeights::Dw { w, epi }) = self.weights.get(&n.id) else {
-                    return Err(format!("missing weights for {}", n.name));
+                    return Err(missing(&n.name));
                 };
                 K::depthwise(x, w, *stride, *padding, epi)
             }
             Op::FusedDwBnAct { stride, padding, .. } => {
                 let Some(NodeWeights::Dw { w, epi }) = self.weights.get(&n.id) else {
-                    return Err(format!("missing weights for {}", n.name));
+                    return Err(missing(&n.name));
                 };
                 K::depthwise(x, w, *stride, *padding, epi)
             }
             Op::BatchNorm { .. } => {
                 let Some(NodeWeights::Bn { scale, shift }) = self.weights.get(&n.id) else {
-                    return Err(format!("missing bn params for {}", n.name));
+                    return Err(missing(&n.name));
                 };
-                let mut out = x.clone();
+                let mut out = pool.take_copy(&x.shape, &x.data);
                 K::batchnorm(&mut out, scale, shift);
                 out
             }
             Op::Activation { kind } => {
-                let mut out = x.clone();
+                let mut out = pool.take_copy(&x.shape, &x.data);
                 match kind {
                     ActKind::Relu => K::relu(&mut out, None),
                     ActKind::Relu6 => K::relu(&mut out, Some(6.0)),
@@ -406,10 +604,10 @@ impl ModelInstance {
             Op::GlobalAvgPool => K::global_avg_pool(x),
             Op::FullyConnected { cin, cout, .. } => {
                 let Some(NodeWeights::Dense { mat, epi, .. }) = self.weights.get(&n.id) else {
-                    return Err(format!("missing weights for {}", n.name));
+                    return Err(missing(&n.name));
                 };
                 let m = x.numel() / cin;
-                let mut out = Tensor::zeros(&[m, *cout]);
+                let mut out = pool.take_zeroed(&[m, *cout]);
                 crate::kernels::gemm::gemm_parallel(
                     &x.data, mat, &mut out.data, m, *cin, *cout,
                     &self.tile(n.id), epi,
@@ -420,7 +618,17 @@ impl ModelInstance {
             }
             Op::Add => {
                 let y = val(n.inputs[1])?;
-                K::add(x, y)
+                if x.shape != y.shape {
+                    return Err(CadnnError::execution(format!(
+                        "add '{}': operand shapes {:?} vs {:?}",
+                        n.name, x.shape, y.shape
+                    )));
+                }
+                let mut out = pool.take_copy(&x.shape, &x.data);
+                for (o, v) in out.data.iter_mut().zip(&y.data) {
+                    *o += v;
+                }
+                out
             }
             Op::Concat => {
                 let mut parts: Vec<&Tensor> = Vec::with_capacity(n.inputs.len());
@@ -430,13 +638,13 @@ impl ModelInstance {
                 K::concat_channels(&parts)
             }
             Op::Softmax => {
-                let mut out = x.clone();
+                let mut out = pool.take_copy(&x.shape, &x.data);
                 K::softmax(&mut out);
                 out
             }
             Op::Flatten => {
                 let m = x.n();
-                Tensor::from_vec(&[m, x.numel() / m], x.data.clone())
+                pool.take_copy(&[m, x.numel() / m], &x.data)
             }
             Op::Input { .. } => unreachable!("input handled by execute"),
         };
@@ -541,13 +749,27 @@ mod tests {
         let out_d = dense.execute(&x).unwrap();
         // sparse output must differ from unpruned dense (it pruned 70%)...
         assert!(out_s.max_abs_diff(&out_d) > 1e-6);
-        // ...but equal a dense instance whose weights went through the
-        // same prune_matrix: verified structurally via CSR density
-        let sp = match sparse.weights.get(&1) {
-            Some(NodeWeights::Sparse { csr, .. }) => csr.density(),
+        // ...and the achieved density must be *exactly* the requested one
+        // (up to the integral cut): len = 3*3*4*16 = 576, cut = round(.7*576)
+        let (nnz, total) = match sparse.weights.get(&1) {
+            Some(NodeWeights::Sparse { csr, .. }) => (csr.nnz(), csr.rows * csr.cols),
             _ => panic!("expected sparse weights"),
         };
-        assert!((sp - 0.3).abs() < 0.05, "density {sp}");
+        let cut = ((total as f64) * 0.7).round() as usize;
+        assert_eq!(nnz, total - cut, "inexact prune: nnz {nnz} of {total}");
+    }
+
+    #[test]
+    fn prune_matrix_exact_cut_with_ties() {
+        // tied magnitudes must not change the cut count
+        let mut mat = vec![0.5f32; 10];
+        mat[3] = 0.1;
+        mat[7] = -0.9;
+        prune_matrix(&mut mat, 0.5);
+        let zeros = mat.iter().filter(|v| **v == 0.0).count();
+        assert_eq!(zeros, 5);
+        assert_eq!(mat[7], -0.9, "largest magnitude must survive");
+        assert_eq!(mat[3], 0.0, "smallest magnitude must be pruned");
     }
 
     #[test]
@@ -569,6 +791,39 @@ mod tests {
         let g = models::build("lenet5", 1).unwrap();
         let inst = ModelInstance::build(&g, Personality::TvmLike, None, None, 1 << 20).unwrap();
         let bad = Tensor::zeros(&[1, 27, 28, 1]);
-        assert!(inst.execute(&bad).is_err());
+        match inst.execute(&bad) {
+            Err(CadnnError::InputShape { expected, got }) => {
+                assert_eq!(expected, vec![1, 28, 28, 1]);
+                assert_eq!(got, vec![1, 27, 28, 1]);
+            }
+            other => panic!("expected InputShape error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn scratch_reuses_buffers_across_runs() {
+        let g = models::build("lenet5", 1).unwrap();
+        let inst = ModelInstance::build(&g, Personality::TvmLike, None, None, 1 << 20).unwrap();
+        let x = input_for(&g, 11);
+        let mut s = inst.scratch();
+
+        let a = inst.execute_with(&x, &mut s).unwrap();
+        assert!(s.buffer_allocs() > 0);
+        s.recycle(a.clone());
+        let after_first = s.buffer_allocs();
+
+        let b = inst.execute_with(&x, &mut s).unwrap();
+        assert_eq!(a.data, b.data, "reused buffers changed the result");
+        assert!(s.buffer_reuses() > 0, "second run must hit the pool");
+        s.recycle(b);
+        let after_second = s.buffer_allocs();
+
+        let c = inst.execute_with(&x, &mut s).unwrap();
+        assert_eq!(a.data, c.data);
+        assert_eq!(
+            s.buffer_allocs(),
+            after_second,
+            "steady state must stop allocating (first run: {after_first})"
+        );
     }
 }

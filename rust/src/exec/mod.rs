@@ -19,5 +19,5 @@
 pub mod instance;
 pub mod personality;
 
-pub use instance::ModelInstance;
+pub use instance::{ExecScratch, ModelInstance, NodeProfile, TensorPool};
 pub use personality::Personality;

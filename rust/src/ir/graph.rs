@@ -4,6 +4,7 @@
 
 use super::ops::Op;
 use super::shape::Shape;
+use crate::error::CadnnError;
 
 pub type NodeId = usize;
 
@@ -112,39 +113,43 @@ impl Graph {
 
     /// Validate topological invariants: inputs precede users, shapes are
     /// consistent under re-inference, single entry node.
-    pub fn validate(&self) -> Result<(), String> {
+    pub fn validate(&self) -> Result<(), CadnnError> {
+        let invalid = |reason: String| CadnnError::InvalidGraph {
+            graph: self.name.clone(),
+            reason,
+        };
         if self.nodes.is_empty() {
-            return Err("empty graph".into());
+            return Err(invalid("empty graph".into()));
         }
         if !matches!(self.nodes[0].op, Op::Input { .. }) {
-            return Err("node 0 must be Input".into());
+            return Err(invalid("node 0 must be Input".into()));
         }
         for n in &self.nodes {
             if n.id >= self.nodes.len() {
-                return Err(format!("node {} id out of range", n.name));
+                return Err(invalid(format!("node {} id out of range", n.name)));
             }
             for &i in &n.inputs {
                 if i >= n.id {
-                    return Err(format!(
+                    return Err(invalid(format!(
                         "node '{}' ({}) uses input {} that does not precede it",
                         n.name, n.id, i
-                    ));
+                    )));
                 }
             }
             if n.id > 0 && n.inputs.is_empty() && !matches!(n.op, Op::Input { .. }) {
-                return Err(format!("node '{}' has no inputs", n.name));
+                return Err(invalid(format!("node '{}' has no inputs", n.name)));
             }
             let ins: Vec<&Shape> = n.inputs.iter().map(|&i| &self.nodes[i].shape).collect();
             let inferred = n.op.infer_shape(&ins);
             if inferred != n.shape {
-                return Err(format!(
+                return Err(invalid(format!(
                     "node '{}' shape {} != inferred {}",
                     n.name, n.shape, inferred
-                ));
+                )));
             }
         }
         if self.output >= self.nodes.len() {
-            return Err("output id out of range".into());
+            return Err(invalid("output id out of range".into()));
         }
         Ok(())
     }

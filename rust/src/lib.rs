@@ -1,15 +1,74 @@
 //! CADNN — compression-aware DNN inference for mobile, reproduced as a
-//! three-layer Rust + JAX + Pallas stack. See DESIGN.md.
+//! three-layer Rust + JAX + Pallas stack. See DESIGN.md and docs/API.md.
+//!
+//! # The front door: `EngineBuilder → Engine → Session`
+//!
+//! All inference — native kernels or AOT PJRT artifacts — goes through
+//! [`api`]:
+//!
+//! ```ignore
+//! use cadnn::api::Engine;
+//! use cadnn::exec::Personality;
+//!
+//! let engine = Engine::native("resnet50")
+//!     .personality(Personality::CadnnSparse)
+//!     .sparsity_profile(profile)
+//!     .tuned(true)
+//!     .batch_sizes(&[1, 4, 8])
+//!     .build()?;
+//!
+//! let mut session = engine.session();
+//! let logits = session.run(&image)?; // repeated runs reuse buffers
+//! ```
+//!
+//! Beneath the engine sits the pluggable [`api::Backend`] trait with two
+//! implementations: [`api::NativeBackend`] (in-process kernels, always
+//! available) and [`api::ArtifactBackend`] (PJRT over AOT HLO artifacts).
+//! The serving [`coordinator::Coordinator`] drives any `Box<dyn Backend>`,
+//! so the dynamic batcher works for natively-executed models too:
+//!
+//! ```ignore
+//! use cadnn::coordinator::{BatcherConfig, Coordinator};
+//! let coord = Coordinator::serve_engine(&engine, BatcherConfig::default())?;
+//! let response = coord.infer(image)?;     // Ok(logits) | backend error
+//! ```
+//!
+//! Errors are typed ([`error::CadnnError`]) below the API boundary and
+//! `anyhow` at the binary/example boundary.
+//!
+//! # Layer map
+//!
+//! | module        | role                                                     |
+//! |---------------|----------------------------------------------------------|
+//! | [`api`]       | Engine/Session/Backend — the public inference surface    |
+//! | [`error`]     | `CadnnError`, the crate-wide typed error enum            |
+//! | [`ir`]        | dataflow graph IR of the exact paper architectures       |
+//! | [`models`]    | graph builders (ResNet-50, MobileNets, Inception, §3 nets)|
+//! | [`passes`]    | fusion / 1x1→GEMM / layout / load-elimination passes     |
+//! | [`exec`]      | native executor: personalities, instances, scratch reuse |
+//! | [`kernels`]   | dense/sparse GEMM, conv engines, epilogues               |
+//! | [`compress`]  | CSR weights, sparsity profiles, size accounting          |
+//! | [`tuner`]     | optimization-parameter selection (paper §4)              |
+//! | [`runtime`]   | PJRT artifact loader (vendored stub offline)             |
+//! | [`coordinator`]| request queue → dynamic batcher → any backend           |
+//! | [`costmodel`] | device projection behind Figure 2                        |
+//! | [`bench`]     | Figure 2 / Table 2 regeneration harnesses                |
+//! | [`util`]      | offline substrate: json, rng, stats, thread pool, prop   |
 
+pub mod api;
 pub mod bench;
+pub mod compress;
+pub mod coordinator;
+pub mod costmodel;
+pub mod error;
+pub mod exec;
 pub mod ir;
 pub mod kernels;
-pub mod compress;
 pub mod models;
 pub mod passes;
-pub mod costmodel;
-pub mod coordinator;
-pub mod exec;
-pub mod tuner;
 pub mod runtime;
+pub mod tuner;
 pub mod util;
+
+pub use api::{Backend, Engine, EngineBuilder, Session};
+pub use error::CadnnError;

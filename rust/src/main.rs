@@ -5,17 +5,21 @@
 //! cadnn table2                              regenerate Table 2
 //! cadnn compress [--report PATH]            §3 compression claims
 //! cadnn tune [--model NAME]                 optimization-parameter selection demo
-//! cadnn serve [--model M] [--variant V] [--requests N] [--rps R]
+//! cadnn serve [--model M] [--variant V] [--requests N] [--rps R] [--native]
 //!                                           serve a Poisson trace and report
+//!                                           (--native: no artifacts needed —
+//!                                           batcher over the native engine)
 //! cadnn calibrate                           host kernel calibration table
 //! ```
 
 use anyhow::{anyhow, Result};
+use cadnn::api::Engine;
 use cadnn::bench::{figure2, print_table, table2};
 use cadnn::compress::profile::paper_profile;
 use cadnn::compress::size;
-use cadnn::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig};
+use cadnn::coordinator::{BatchPolicy, BatcherConfig, Coordinator, CoordinatorConfig};
 use cadnn::costmodel::calibrate;
+use cadnn::exec::Personality;
 use cadnn::models;
 use cadnn::util::json::Json;
 use cadnn::util::rng::Rng;
@@ -199,21 +203,55 @@ fn cmd_tune(args: &[String]) -> Result<()> {
 }
 
 fn cmd_serve(args: &[String]) -> Result<()> {
-    let cfg = CoordinatorConfig {
-        artifacts_dir: opt(args, "--artifacts").unwrap_or_else(|| "artifacts".into()),
-        model: opt(args, "--model").unwrap_or_else(|| "lenet5".into()),
-        variant: opt(args, "--variant").unwrap_or_else(|| "dense".into()),
+    let model = opt(args, "--model").unwrap_or_else(|| "lenet5".into());
+    let variant = opt(args, "--variant").unwrap_or_else(|| "dense".into());
+    let batcher = BatcherConfig {
         max_batch: opt(args, "--max-batch").and_then(|s| s.parse().ok()).unwrap_or(8),
         max_wait_us: opt(args, "--max-wait-us").and_then(|s| s.parse().ok()).unwrap_or(2000),
         policy: if flag(args, "--greedy") { BatchPolicy::Greedy } else { BatchPolicy::PadToFit },
     };
     let requests: usize = opt(args, "--requests").and_then(|s| s.parse().ok()).unwrap_or(64);
     let rps: f64 = opt(args, "--rps").and_then(|s| s.parse().ok()).unwrap_or(100.0);
-    println!(
-        "serving {}/{} from {} — {} requests @ {:.0} req/s (Poisson)",
-        cfg.model, cfg.variant, cfg.artifacts_dir, requests, rps
-    );
-    let coord = Coordinator::start(cfg)?;
+    let coord = if flag(args, "--native") {
+        // the Backend abstraction at work: same batcher, no artifacts dir
+        let personality = if variant == "sparse" {
+            Personality::CadnnSparse
+        } else {
+            Personality::CadnnDense
+        };
+        let sizes: Vec<usize> = [1usize, 2, 4, 8]
+            .into_iter()
+            .filter(|&b| b <= batcher.max_batch.max(1))
+            .collect();
+        let mut builder = Engine::native(&model)
+            .personality(personality)
+            .batch_sizes(&sizes);
+        if personality.sparse() {
+            let g = models::build(&model, 1).ok_or_else(|| anyhow!("unknown model {model}"))?;
+            builder = builder.sparsity_profile(paper_profile(&g));
+        }
+        let engine = builder.build()?;
+        println!(
+            "serving {} natively — {} requests @ {:.0} req/s (Poisson)",
+            engine.name(),
+            requests,
+            rps
+        );
+        Coordinator::serve_engine(&engine, batcher)?
+    } else {
+        let artifacts_dir = opt(args, "--artifacts").unwrap_or_else(|| "artifacts".into());
+        println!(
+            "serving {model}/{variant} from {artifacts_dir} — {requests} requests @ {rps:.0} req/s (Poisson)"
+        );
+        Coordinator::start(CoordinatorConfig {
+            artifacts_dir,
+            model: model.clone(),
+            variant: variant.clone(),
+            max_batch: batcher.max_batch,
+            max_wait_us: batcher.max_wait_us,
+            policy: batcher.policy,
+        })?
+    };
     let input_len = coord.input_len;
     let mut rng = Rng::new(9);
     let mut pending = Vec::new();
@@ -234,7 +272,6 @@ fn cmd_serve(args: &[String]) -> Result<()> {
 /// The paper's §6 "DNN profiler" work-in-progress item: per-layer
 /// measured timing of a model under a personality on the native executor.
 fn cmd_profile(args: &[String]) -> Result<()> {
-    use cadnn::exec::{ModelInstance, Personality};
     use cadnn::kernels::Tensor;
     // full ImageNet models are heavy on one host core: profile a scaled
     // tower by default, or any named model with --model
@@ -246,21 +283,21 @@ fn cmd_profile(args: &[String]) -> Result<()> {
         _ => Personality::CadnnDense,
     };
     let top: usize = opt(args, "--top").and_then(|s| s.parse().ok()).unwrap_or(15);
-    let g = models::build(&model, 1).ok_or_else(|| anyhow!("unknown model {model}"))?;
-    let profile_sp = paper_profile(&g);
-    let inst = ModelInstance::build(
-        &g,
-        personality,
-        if personality.sparse() { Some(&profile_sp) } else { None },
-        None,
-        2 << 20,
-    )
-    .map_err(|e| anyhow!(e))?;
-    let mut input = Tensor::zeros(&g.nodes[0].shape.0);
+    let mut builder = Engine::native(&model).personality(personality);
+    if personality.sparse() {
+        let g = models::build(&model, 1).ok_or_else(|| anyhow!("unknown model {model}"))?;
+        builder = builder.sparsity_profile(paper_profile(&g));
+    }
+    let engine = builder.build()?;
+    let inst = engine
+        .native_backend()
+        .and_then(|b| b.instance(1))
+        .ok_or_else(|| anyhow!("profiling needs a native batch-1 instance"))?;
+    let mut input = Tensor::zeros(&inst.graph.nodes[0].shape.0);
     let mut rng = Rng::new(1);
     rng.fill_normal(&mut input.data, 0.5);
     eprintln!("profiling {model} under {} ...", personality.label());
-    let mut prof = inst.profile(&input, 1).map_err(|e| anyhow!(e))?;
+    let mut prof = inst.profile(&input, 1)?;
     let total: f64 = prof.iter().map(|p| p.us).sum();
     prof.sort_by(|a, b| b.us.partial_cmp(&a.us).unwrap());
     let mut rows = Vec::new();

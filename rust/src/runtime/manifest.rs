@@ -126,4 +126,62 @@ mod tests {
         assert!(Manifest::parse(r#"{"format": 9, "models": []}"#).is_err());
         assert!(Manifest::parse("not json").is_err());
     }
+
+    #[test]
+    fn rejects_missing_or_wrong_format_field() {
+        // absent format -> treated as 0 -> unsupported
+        let e = Manifest::parse(r#"{"models": []}"#).err().unwrap();
+        assert!(e.to_string().contains("unsupported manifest format"), "{e}");
+        // non-numeric format -> same rejection
+        let e = Manifest::parse(r#"{"format": "one", "models": []}"#).err().unwrap();
+        assert!(e.to_string().contains("unsupported manifest format"), "{e}");
+    }
+
+    #[test]
+    fn rejects_missing_models_list() {
+        let e = Manifest::parse(r#"{"format": 1}"#).err().unwrap();
+        assert!(e.to_string().contains("missing models"), "{e}");
+        // models present but not an array
+        let e = Manifest::parse(r#"{"format": 1, "models": 3}"#).err().unwrap();
+        assert!(e.to_string().contains("missing models"), "{e}");
+    }
+
+    #[test]
+    fn empty_models_list_parses_to_empty_manifest() {
+        let m = Manifest::parse(r#"{"format": 1, "models": []}"#).unwrap();
+        assert!(m.models.is_empty());
+        assert!(m.model_variants().is_empty());
+    }
+
+    #[test]
+    fn rejects_entries_missing_required_fields() {
+        // each required field, dropped one at a time
+        let full = r#"{"name": "m", "batch": 1, "path": "p", "input_shape": [1, 2]}"#;
+        assert!(Manifest::parse(&wrap(full)).is_ok());
+        for (missing, entry) in [
+            ("name", r#"{"batch": 1, "path": "p", "input_shape": [1, 2]}"#),
+            ("batch", r#"{"name": "m", "path": "p", "input_shape": [1, 2]}"#),
+            ("path", r#"{"name": "m", "batch": 1, "input_shape": [1, 2]}"#),
+            ("input_shape", r#"{"name": "m", "batch": 1, "path": "p"}"#),
+        ] {
+            let e = Manifest::parse(&wrap(entry)).err()
+                .unwrap_or_else(|| panic!("entry without {missing} must be rejected"));
+            assert!(e.to_string().contains(missing), "{missing}: {e}");
+        }
+    }
+
+    #[test]
+    fn optional_fields_get_defaults() {
+        let m = wrap(r#"{"name": "m", "batch": 2, "path": "p", "input_shape": [2, 4]}"#);
+        let m = Manifest::parse(&m).unwrap();
+        let e = &m.models[0];
+        assert_eq!(e.variant, "dense");
+        assert_eq!(e.classes, 0);
+        assert_eq!(e.accuracy, 0.0);
+        assert_eq!(e.compression_rate, 1.0);
+    }
+
+    fn wrap(entry: &str) -> String {
+        format!(r#"{{"format": 1, "models": [{entry}]}}"#)
+    }
 }

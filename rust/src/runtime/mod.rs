@@ -4,6 +4,13 @@
 //! One compiled executable per (model, variant, batch) — PJRT programs
 //! are shape-static, so the coordinator's dynamic batcher picks among
 //! batch variants (manifest-driven).
+//!
+//! Serving code should not use this module directly: wrap it in
+//! [`crate::api::ArtifactBackend`] (or `Engine::artifacts`), which
+//! normalizes errors to [`crate::error::CadnnError`] and plugs into the
+//! coordinator. Note the in-tree `xla` crate is an offline stub that
+//! fails at `Runtime::open`; swap in the real binding to execute
+//! artifacts.
 
 pub mod manifest;
 

@@ -123,11 +123,27 @@ impl Drop for ThreadPool {
     }
 }
 
-/// Global pool sized to the host (shared by kernels and benches).
+static GLOBAL_POOL: std::sync::OnceLock<ThreadPool> = std::sync::OnceLock::new();
+static REQUESTED_THREADS: AtomicUsize = AtomicUsize::new(0);
+
+/// Hint the size of the global pool before first use (e.g. from
+/// `EngineBuilder::threads`). Returns `false` if the pool already exists,
+/// in which case the hint has no effect.
+pub fn request_threads(n: usize) -> bool {
+    REQUESTED_THREADS.store(n, Ordering::SeqCst);
+    GLOBAL_POOL.get().is_none()
+}
+
+/// Global pool sized to the host (shared by kernels and benches), or to
+/// the last `request_threads` hint made before first use.
 pub fn global() -> &'static ThreadPool {
-    static POOL: std::sync::OnceLock<ThreadPool> = std::sync::OnceLock::new();
-    POOL.get_or_init(|| {
-        let n = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(4);
+    GLOBAL_POOL.get_or_init(|| {
+        let requested = REQUESTED_THREADS.load(Ordering::SeqCst);
+        let n = if requested > 0 {
+            requested
+        } else {
+            std::thread::available_parallelism().map(|v| v.get()).unwrap_or(4)
+        };
         ThreadPool::new(n.min(16))
     })
 }

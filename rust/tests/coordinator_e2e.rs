@@ -36,8 +36,9 @@ fn serves_burst_and_batches() {
     let mut ids = Vec::new();
     for rx in rxs {
         let resp = rx.recv().unwrap();
-        assert_eq!(resp.logits.len(), coord.classes);
-        assert!(resp.logits.iter().all(|v| v.is_finite()));
+        let logits = resp.logits().expect("backend must not error");
+        assert_eq!(logits.len(), coord.classes);
+        assert!(logits.iter().all(|v| v.is_finite()));
         assert!(resp.latency_us > 0.0);
         assert!(resp.batch >= 1 && resp.batch <= 8);
         ids.push(resp.id);
@@ -72,7 +73,7 @@ fn sparse_variant_serves() {
     let Some(cfg) = cfg("sparse") else { return };
     let coord = Coordinator::start(cfg).unwrap();
     let resp = coord.infer(vec![0.2f32; coord.input_len]).unwrap();
-    assert_eq!(resp.logits.len(), 10);
+    assert_eq!(resp.into_logits().unwrap().len(), 10);
     coord.shutdown().unwrap();
 }
 

@@ -1,0 +1,165 @@
+//! Integration: the serving coordinator over the *native* backend — no
+//! artifacts directory, no PJRT. The `Backend` trait is the seam: the
+//! same queue/batcher/metrics path that serves AOT artifacts serves
+//! `ModelInstance`s built in-process, and backend failures surface as
+//! explicit error responses (distinct from shutdown, which closes the
+//! reply channel).
+
+use cadnn::api::{Backend, Engine};
+use cadnn::compress::profile::paper_profile;
+use cadnn::coordinator::{BatchPolicy, BatcherConfig, Coordinator, ServeError};
+use cadnn::error::CadnnError;
+use cadnn::exec::Personality;
+use cadnn::models;
+use cadnn::util::rng::Rng;
+
+fn batcher() -> BatcherConfig {
+    BatcherConfig { max_batch: 4, max_wait_us: 1_000, policy: BatchPolicy::PadToFit }
+}
+
+#[test]
+fn coordinator_serves_native_engine_end_to_end() {
+    let engine = Engine::native("lenet5").batch_sizes(&[1, 2, 4]).build().unwrap();
+    let coord = Coordinator::serve_engine(&engine, batcher()).unwrap();
+    assert_eq!(coord.input_len, 28 * 28);
+    assert_eq!(coord.classes, 10);
+
+    let mut rng = Rng::new(3);
+    let n = 16;
+    let mut rxs = Vec::new();
+    for _ in 0..n {
+        let mut img = vec![0.0f32; coord.input_len];
+        rng.fill_normal(&mut img, 0.5);
+        rxs.push(coord.submit(img).unwrap());
+    }
+    let mut ids = Vec::new();
+    for rx in rxs {
+        let resp = rx.recv().unwrap();
+        let logits = resp.logits().expect("native backend must not error");
+        assert_eq!(logits.len(), 10);
+        assert!(logits.iter().all(|v| v.is_finite()));
+        let s: f32 = logits.iter().sum();
+        assert!((s - 1.0).abs() < 1e-3, "softmax row sums to {s}");
+        assert!(resp.batch >= 1 && resp.batch <= 4);
+        ids.push(resp.id);
+    }
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), n, "every request answered exactly once");
+
+    let m = coord.metrics.lock().unwrap();
+    assert_eq!(m.requests as usize, n);
+    assert_eq!(m.backend_errors, 0);
+    // a burst must produce some multi-request batches
+    assert!((m.batches as usize) < n, "no batching: {} batches / {n} requests", m.batches);
+    drop(m);
+    coord.shutdown().unwrap();
+}
+
+#[test]
+fn native_responses_match_direct_session_runs() {
+    // what the coordinator serves must be exactly what a session computes
+    let engine = Engine::native("lenet5").batch_sizes(&[1, 2]).build().unwrap();
+    let mut session = engine.session();
+    let img: Vec<f32> = (0..28 * 28).map(|i| ((i % 13) as f32) / 13.0).collect();
+    let direct = session.run(&img).unwrap();
+
+    let coord = Coordinator::serve_engine(&engine, batcher()).unwrap();
+    let resp = coord.infer(img).unwrap();
+    let served = resp.into_logits().unwrap();
+    let d = direct
+        .iter()
+        .zip(&served)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0f32, f32::max);
+    assert!(d < 1e-5, "served logits diverge from session: {d}");
+    coord.shutdown().unwrap();
+}
+
+#[test]
+fn sparse_native_engine_serves() {
+    let g = models::build("lenet5", 1).unwrap();
+    let engine = Engine::native("lenet5")
+        .personality(Personality::CadnnSparse)
+        .sparsity_profile(paper_profile(&g))
+        .batch_sizes(&[1, 2])
+        .build()
+        .unwrap();
+    let coord = Coordinator::serve_engine(&engine, batcher()).unwrap();
+    let resp = coord.infer(vec![0.2f32; coord.input_len]).unwrap();
+    assert_eq!(resp.into_logits().unwrap().len(), 10);
+    coord.shutdown().unwrap();
+}
+
+/// A backend that always fails, to prove the error-response contract.
+struct FailingBackend {
+    shape: Vec<usize>,
+}
+
+impl Backend for FailingBackend {
+    fn name(&self) -> &str {
+        "failing"
+    }
+    fn input_shape(&self) -> &[usize] {
+        &self.shape
+    }
+    fn classes(&self) -> usize {
+        10
+    }
+    fn batch_sizes(&self) -> Vec<usize> {
+        vec![1, 4]
+    }
+    fn run_batch(&self, _batch: usize, _input: &[f32]) -> Result<Vec<f32>, CadnnError> {
+        Err(CadnnError::execution("injected failure"))
+    }
+}
+
+#[test]
+fn backend_errors_reach_clients_as_explicit_responses() {
+    let coord = Coordinator::serve_with(
+        || {
+            let b: Box<dyn Backend> = Box::new(FailingBackend { shape: vec![4, 4, 1] });
+            Ok(b)
+        },
+        batcher(),
+    )
+    .unwrap();
+    let mut rxs = Vec::new();
+    for _ in 0..3 {
+        rxs.push(coord.submit(vec![0.5f32; 16]).unwrap());
+    }
+    for rx in rxs {
+        // the channel must NOT close (that would mean shutdown); clients
+        // get a typed backend-error outcome instead
+        let resp = rx.recv().expect("reply channel closed on backend error");
+        match resp.outcome {
+            Err(ServeError::Backend(msg)) => {
+                assert!(msg.contains("injected failure"), "{msg}");
+            }
+            Ok(_) => panic!("failing backend produced logits"),
+        }
+    }
+    let m = coord.metrics.lock().unwrap();
+    assert_eq!(m.backend_errors, 3);
+    assert_eq!(m.requests, 0, "failed requests must not count as served");
+    drop(m);
+    coord.shutdown().unwrap();
+}
+
+#[test]
+fn coordinator_rejects_wrong_native_input_length() {
+    let engine = Engine::native("lenet5").build().unwrap();
+    let coord = Coordinator::serve_engine(&engine, batcher()).unwrap();
+    assert!(coord.submit(vec![0.0; 3]).is_err());
+    coord.shutdown().unwrap();
+}
+
+#[test]
+fn engine_factory_failure_surfaces_at_start() {
+    let result = Coordinator::serve_with(
+        || Err(CadnnError::BackendUnavailable { backend: "test".into(), reason: "nope".into() }),
+        batcher(),
+    );
+    let e = result.err().expect("factory failure must fail start");
+    assert!(e.to_string().contains("nope"), "{e}");
+}

@@ -107,11 +107,30 @@ fn tuned_instance_builds_and_runs() {
 #[test]
 fn grouped_conv_models_rejected_by_executor() {
     // AlexNet has grouped convs; the native executor declines them
-    // explicitly rather than silently computing the wrong thing.
+    // explicitly (typed) rather than silently computing the wrong thing.
     let g = models::build("alexnet", 1).unwrap();
     let r = ModelInstance::build(&g, Personality::TfLiteLike, None, None, 1 << 20);
-    assert!(r.is_err());
-    assert!(r.err().unwrap().contains("grouped"));
+    match r {
+        Err(cadnn::error::CadnnError::UnsupportedOp { reason, .. }) => {
+            assert!(reason.contains("grouped"), "{reason}");
+        }
+        other => panic!("expected UnsupportedOp, got {:?}", other.err()),
+    }
+}
+
+#[test]
+fn tuned_engine_builds_through_api() {
+    use cadnn::api::Engine;
+    use cadnn::ir::ops::ActKind;
+    use cadnn::ir::{Graph, Shape};
+    let mut g = Graph::new("tuned_api", Shape::nhwc(1, 16, 16, 8));
+    let c = g.add("c1", Op::conv(3, 3, 8, 16, 1, 1), vec![0]);
+    let b = g.add("c1_bn", Op::BatchNorm { c: 16 }, vec![c]);
+    g.add("c1_relu", Op::Activation { kind: ActKind::Relu }, vec![b]);
+    let engine = Engine::from_graph(g).tuned(true).cache_bytes(1 << 20).build().unwrap();
+    let mut session = engine.session();
+    let out = session.run(&vec![0.25f32; engine.input_len()]).unwrap();
+    assert_eq!(out.len(), 16 * 16 * 16);
 }
 
 #[test]

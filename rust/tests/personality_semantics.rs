@@ -1,8 +1,10 @@
 //! Integration: the framework personalities are semantics-preserving on
 //! every layer vocabulary the paper's models use — residual adds, channel
 //! concat (Inception), depthwise towers (MobileNet), classic conv+bias
-//! (VGG). No artifacts required (native executor only).
+//! (VGG). No artifacts required (native executor only). Exercised through
+//! the public `Engine`/`Session` API where possible.
 
+use cadnn::api::Engine;
 use cadnn::exec::{ModelInstance, Personality};
 use cadnn::ir::ops::{ActKind, Op, PoolKind};
 use cadnn::ir::{Graph, Shape};
@@ -16,17 +18,23 @@ fn input_for(g: &Graph, seed: u64) -> Tensor {
     t
 }
 
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}
+
 fn assert_personalities_agree(g: &Graph, tol: f32) {
     let x = input_for(g, 42);
-    let base = ModelInstance::build(g, Personality::TfLiteLike, None, None, 1 << 20)
-        .unwrap()
-        .execute(&x)
-        .unwrap();
+    let batch = g.nodes[0].shape.0[0];
+    let run = |p: Personality| -> Vec<f32> {
+        let engine = Engine::from_graph(g.clone()).personality(p).build().unwrap();
+        let mut session = engine.session();
+        session.run_batch(batch, &x.data).unwrap()
+    };
+    let base = run(Personality::TfLiteLike);
     for p in [Personality::TvmLike, Personality::CadnnDense] {
-        let inst = ModelInstance::build(g, p, None, None, 1 << 20).unwrap();
-        let out = inst.execute(&x).unwrap();
-        assert_eq!(base.shape, out.shape, "{} shape", p.label());
-        let d = base.max_abs_diff(&out);
+        let out = run(p);
+        assert_eq!(base.len(), out.len(), "{} output length", p.label());
+        let d = max_abs_diff(&base, &out);
         assert!(d < tol, "{}: diff {d}", p.label());
     }
 }

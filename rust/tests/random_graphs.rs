@@ -4,7 +4,8 @@
 //! the same function (fusion / 1x1->GEMM / tiling are semantics-
 //! preserving program transformations — the paper's implicit claim).
 
-use cadnn::exec::{ModelInstance, Personality};
+use cadnn::api::Engine;
+use cadnn::exec::Personality;
 use cadnn::ir::ops::{ActKind, Op, PoolKind};
 use cadnn::ir::{Graph, Shape};
 use cadnn::kernels::Tensor;
@@ -110,19 +111,23 @@ fn prop_passes_preserve_semantics_on_random_graphs() {
             "case {case}: output shape changed"
         );
 
-        // numeric agreement
+        // numeric agreement, driven through the public Engine/Session API
         let mut input = Tensor::zeros(&g.nodes[0].shape.0);
         rng.fill_normal(&mut input.data, 0.5);
-        let base = ModelInstance::build(&g, Personality::TfLiteLike, None, None, 1 << 20)
-            .unwrap()
-            .execute(&input)
-            .unwrap();
+        let run = |p: Personality| -> Vec<f32> {
+            let engine = Engine::from_graph(g.clone()).personality(p).build().unwrap();
+            let mut session = engine.session();
+            session.run(&input.data).unwrap()
+        };
+        let base = run(Personality::TfLiteLike);
         for p in [Personality::TvmLike, Personality::CadnnDense] {
-            let out = ModelInstance::build(&g, p, None, None, 1 << 20)
-                .unwrap()
-                .execute(&input)
-                .unwrap();
-            let d = base.max_abs_diff(&out);
+            let out = run(p);
+            assert_eq!(base.len(), out.len(), "case {case} {}", p.label());
+            let d = base
+                .iter()
+                .zip(&out)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0f32, f32::max);
             assert!(d < 5e-3, "case {case} {}: diff {d}", p.label());
         }
     }

@@ -1,0 +1,170 @@
+//! Minimal, offline, API-compatible shim of the `anyhow` crate covering the
+//! subset this repository uses: `Error`, `Result`, the `anyhow!` / `bail!`
+//! macros, and the `Context` extension trait. The real crate is not
+//! vendorable in this environment; this shim keeps the public error-handling
+//! idiom (`anyhow::Result` at binary/app boundaries, typed errors below)
+//! intact so swapping the real crate back in is a one-line Cargo change.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// Dynamic error type: a boxed error plus an optional chain of context
+/// messages (most recent first when displayed via `{:#}` / `Debug`).
+pub struct Error {
+    inner: Box<dyn StdError + Send + Sync + 'static>,
+    context: Vec<String>,
+}
+
+/// `Result<T, anyhow::Error>` with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Construct an error from a displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { inner: Box::new(MessageError(message.to_string())), context: Vec::new() }
+    }
+
+    /// Construct from any concrete error type.
+    pub fn new<E: StdError + Send + Sync + 'static>(error: E) -> Error {
+        Error { inner: Box::new(error), context: Vec::new() }
+    }
+
+    fn push_context(mut self, ctx: String) -> Error {
+        self.context.push(ctx);
+        self
+    }
+
+    /// The root cause, for downcasting or inspection.
+    pub fn root_cause(&self) -> &(dyn StdError + 'static) {
+        self.inner.as_ref()
+    }
+
+    /// Attempt to downcast the root cause to a concrete type.
+    pub fn downcast_ref<E: StdError + 'static>(&self) -> Option<&E> {
+        self.inner.downcast_ref::<E>()
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.context.last() {
+            Some(ctx) => write!(f, "{ctx}: {}", self.inner),
+            None => write!(f, "{}", self.inner),
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for ctx in self.context.iter().rev() {
+            write!(f, "{ctx}: ")?;
+        }
+        write!(f, "{}", self.inner)
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(error: E) -> Error {
+        Error::new(error)
+    }
+}
+
+/// Plain-string error payload used by `anyhow!`.
+#[derive(Debug)]
+struct MessageError(String);
+
+impl fmt::Display for MessageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl StdError for MessageError {}
+
+/// Attach context to errors, mirroring `anyhow::Context`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().push_context(context.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().push_context(f().to_string()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f().to_string()))
+    }
+}
+
+/// `anyhow!("...")` — format a message into an [`Error`].
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $err))
+    };
+}
+
+/// `bail!("...")` — early-return an error from a `Result` function.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert!(e.to_string().contains("missing"));
+    }
+
+    #[test]
+    fn context_chains_messages() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.with_context(|| "reading manifest").unwrap_err();
+        assert!(e.to_string().contains("reading manifest"));
+        assert!(e.to_string().contains("missing"));
+    }
+
+    #[test]
+    fn macro_formats() {
+        let e = anyhow!("bad value {}", 7);
+        assert_eq!(e.to_string(), "bad value 7");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("empty").unwrap_err();
+        assert_eq!(e.to_string(), "empty");
+    }
+}

@@ -1,0 +1,119 @@
+//! Offline stub of the XLA/PJRT Rust binding.
+//!
+//! This container has no PJRT plugin, so the real binding cannot link.
+//! The stub mirrors the exact API surface `cadnn::runtime` consumes and
+//! fails fast (and loudly) at `PjRtClient::cpu()` with a descriptive
+//! error, which the runtime surfaces as `CadnnError::BackendUnavailable`.
+//! Serving still works end-to-end through `cadnn::api::NativeBackend`;
+//! to execute AOT HLO artifacts, replace this vendor crate with the real
+//! binding in the workspace `Cargo.toml`.
+
+use std::fmt;
+
+/// Stub error: every fallible entry point returns this.
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl Error {
+    fn unavailable(what: &str) -> Error {
+        Error(format!(
+            "{what}: XLA/PJRT runtime unavailable in this offline build \
+             (rust/vendor/xla is a stub; swap in the real binding to run AOT artifacts)"
+        ))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// PJRT client handle (stub: cannot be constructed).
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::unavailable("PjRtClient::compile"))
+    }
+}
+
+/// Parsed HLO module (stub).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(Error::unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// XLA computation wrapper (stub).
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Host literal (stub).
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1<T>(_data: &[T]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Err(Error::unavailable("Literal::reshape"))
+    }
+
+    pub fn to_tuple1(&self) -> Result<Literal> {
+        Err(Error::unavailable("Literal::to_tuple1"))
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(Error::unavailable("Literal::to_vec"))
+    }
+}
+
+/// Device buffer returned by an execution (stub).
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Compiled executable (stub).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_reports_unavailable() {
+        let e = PjRtClient::cpu().err().unwrap();
+        assert!(e.to_string().contains("unavailable"));
+    }
+}
