@@ -1,0 +1,60 @@
+//! Sparse-format planner walkthrough: build one compressed model under
+//! every `FormatPolicy`, show what the planner chose per layer, and time
+//! a few inferences per policy so the format/latency tradeoff is visible.
+//!
+//! ```sh
+//! cargo run --release --example sparse_formats [-- <model>]
+//! ```
+
+use anyhow::{anyhow, Result};
+use cadnn::api::Engine;
+use cadnn::compress::profile::paper_profile;
+use cadnn::exec::Personality;
+use cadnn::models;
+use cadnn::planner::FormatPolicy;
+use cadnn::util::Stopwatch;
+
+fn main() -> Result<()> {
+    let model = std::env::args().nth(1).unwrap_or_else(|| "lenet5".into());
+    let g = models::build(&model, 1).ok_or_else(|| anyhow!("unknown model {model}"))?;
+    let profile = paper_profile(&g);
+
+    for policy in [FormatPolicy::Auto, FormatPolicy::Csr, FormatPolicy::Bsr] {
+        let engine = Engine::native(&model)
+            .personality(Personality::CadnnSparse)
+            .sparsity_profile(profile.clone())
+            .sparse_format(policy)
+            .build()?;
+        let inst = engine
+            .native_backend()
+            .and_then(|b| b.instance(1))
+            .ok_or_else(|| anyhow!("native instance missing"))?;
+        let counts: Vec<String> = inst
+            .plan
+            .format_counts()
+            .iter()
+            .map(|(f, c)| format!("{f} x{c}"))
+            .collect();
+        println!("policy {policy:?}: {}", counts.join(", "));
+        for (name, lp) in &inst.plan.layers {
+            println!(
+                "  {name:<12} {:<7} reorder={} cutover={}",
+                lp.format.label(),
+                lp.reorder,
+                lp.parallel_cutover
+            );
+        }
+
+        // a few timed runs — sessions reuse buffers, so this is steady state
+        let image: Vec<f32> = (0..engine.input_len()).map(|i| ((i % 17) as f32) / 17.0).collect();
+        let mut session = engine.session();
+        let _ = session.run(&image)?;
+        let sw = Stopwatch::new();
+        let iters = 10;
+        for _ in 0..iters {
+            let _ = session.run(&image)?;
+        }
+        println!("  -> {:.2} ms/inference\n", sw.elapsed_us() / iters as f64 / 1e3);
+    }
+    Ok(())
+}

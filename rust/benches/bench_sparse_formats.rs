@@ -1,0 +1,164 @@
+//! Sparse-format sweep: density x structure x format over
+//! ResNet-50-shaped GEMM layers, with the planner's Auto choice recorded
+//! next to the measured winner. Emits `BENCH_sparse_formats.json` so the
+//! perf trajectory of the format subsystem is recorded run over run.
+//!
+//! Run: cargo bench --bench bench_sparse_formats
+
+use cadnn::bench::print_table;
+use cadnn::compress::bsr::BsrMatrix;
+use cadnn::compress::csr::CsrMatrix;
+use cadnn::compress::reorder;
+use cadnn::kernels::bsr::bsr_gemm;
+use cadnn::kernels::gemm::gemm_blocked;
+use cadnn::kernels::sparse::csr_gemm;
+use cadnn::kernels::Epilogue;
+use cadnn::passes::layout::TileConfig;
+use cadnn::planner::{choose, FormatPolicy};
+use cadnn::util::json::{obj, Json};
+use cadnn::util::rng::Rng;
+use cadnn::util::stats;
+
+/// (m, hwio, label): im2col GEMM shapes of representative ResNet-50
+/// convolutions at 224x224 (m = output pixels, hwio = [kh, kw, cin,
+/// cout] so the planner sees the same spatial-vs-GEMM margin the real
+/// executor applies; k = kh*kw*cin, n = cout).
+const SHAPES: [(usize, [usize; 4], &str); 4] = [
+    (3136, [3, 3, 64, 64], "res2_3x3"),
+    (3136, [1, 1, 64, 256], "res2_1x1"),
+    (784, [3, 3, 128, 128], "res3_3x3"),
+    (196, [3, 3, 256, 256], "res4_3x3"),
+];
+
+const DENSITIES: [f64; 4] = [0.1, 0.2, 0.3, 0.5];
+
+fn random_weights(rng: &mut Rng, k: usize, n: usize, density: f64) -> Vec<f32> {
+    let mut dense = vec![0.0f32; k * n];
+    for v in dense.iter_mut() {
+        if rng.f64() < density {
+            *v = rng.normal() as f32;
+        }
+    }
+    dense
+}
+
+/// Structured pruning: whole 4x4 blocks survive or die (the ADMM
+/// block-pattern regime BSR exists for).
+fn block_weights(rng: &mut Rng, k: usize, n: usize, density: f64) -> Vec<f32> {
+    let mut dense = vec![0.0f32; k * n];
+    for b in 0..k.div_ceil(4) {
+        for j in 0..n.div_ceil(4) {
+            if rng.f64() >= density {
+                continue;
+            }
+            for p in 0..(k - b * 4).min(4) {
+                for x in 0..(n - j * 4).min(4) {
+                    dense[(b * 4 + p) * n + j * 4 + x] = rng.normal() as f32;
+                }
+            }
+        }
+    }
+    dense
+}
+
+fn measure(mut f: impl FnMut()) -> f64 {
+    let samples = stats::measure_adaptive_us(25_000.0, 5, || f());
+    stats::Summary::from(&samples).unwrap().p50
+}
+
+fn main() {
+    let mut rng = Rng::new(17);
+    let mut report: Vec<Json> = Vec::new();
+    let mut rows = Vec::new();
+    for (m, hwio, label) in SHAPES {
+        let (k, n) = (hwio[0] * hwio[1] * hwio[2], hwio[3]);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+        let mut c = vec![0.0f32; m * n];
+        for structure in ["random", "block4x4"] {
+            for density in DENSITIES {
+                let dense = if structure == "random" {
+                    random_weights(&mut rng, k, n, density)
+                } else {
+                    block_weights(&mut rng, k, n, density)
+                };
+                let csr = CsrMatrix::from_dense(&dense, k, n);
+                let bsr41 = BsrMatrix::from_dense(&dense, k, n, 4, 1);
+                let bsr44 = BsrMatrix::from_dense(&dense, k, n, 4, 4);
+                let perm = reorder::cluster_columns(&dense, k, n, 4);
+                let reordered = reorder::permute_cols(&dense, k, n, &perm);
+                let bsr44r = BsrMatrix::from_dense(&reordered, k, n, 4, 4);
+
+                let t_dense = measure(|| {
+                    gemm_blocked(&a, &dense, &mut c, m, k, n, &TileConfig::DEFAULT, &Epilogue::None)
+                });
+                let t_csr = measure(|| csr_gemm(&a, &csr, &mut c, m, &Epilogue::None));
+                let t_b41 = measure(|| bsr_gemm(&a, &bsr41, &mut c, m, &Epilogue::None));
+                let t_b44 = measure(|| bsr_gemm(&a, &bsr44, &mut c, m, &Epilogue::None));
+                let t_b44r = measure(|| bsr_gemm(&a, &bsr44r, &mut c, m, &Epilogue::None));
+
+                let auto = choose(FormatPolicy::Auto, &csr, m, hwio);
+                let times = [
+                    ("dense", t_dense),
+                    ("csr", t_csr),
+                    ("bsr4x1", t_b41),
+                    ("bsr4x4", t_b44),
+                    ("bsr4x4+reorder", t_b44r),
+                ];
+                let winner = times
+                    .iter()
+                    .min_by(|x, y| x.1.partial_cmp(&y.1).unwrap())
+                    .unwrap()
+                    .0;
+                rows.push(vec![
+                    label.to_string(),
+                    structure.to_string(),
+                    format!("{:.0}%", density * 100.0),
+                    format!("{t_dense:.0}"),
+                    format!("{t_csr:.0}"),
+                    format!("{t_b41:.0}"),
+                    format!("{t_b44:.0}"),
+                    format!("{t_b44r:.0}"),
+                    winner.to_string(),
+                    auto.format.label(),
+                ]);
+                report.push(obj(vec![
+                    ("shape", Json::Str(format!("{m}x{k}x{n}"))),
+                    ("layer", Json::Str(label.to_string())),
+                    ("structure", Json::Str(structure.to_string())),
+                    ("density", Json::Num(density)),
+                    ("fill_bsr4x1", Json::Num(bsr41.fill_ratio())),
+                    ("fill_bsr4x4", Json::Num(bsr44.fill_ratio())),
+                    ("fill_bsr4x4_reordered", Json::Num(bsr44r.fill_ratio())),
+                    (
+                        "us",
+                        obj(times.iter().map(|(f, t)| (*f, Json::Num(*t))).collect()),
+                    ),
+                    ("winner", Json::Str(winner.to_string())),
+                    ("auto_choice", Json::Str(auto.format.label())),
+                    ("auto_reorder", Json::Bool(auto.reorder)),
+                ]));
+            }
+        }
+    }
+    println!("== sparse formats on ResNet-50 GEMM shapes (us, serial kernels) ==\n");
+    print_table(
+        &[
+            "layer", "structure", "density", "dense", "csr", "bsr4x1", "bsr4x4", "bsr4x4+r",
+            "winner", "auto",
+        ],
+        &rows,
+    );
+    let out = Json::Obj(vec![
+        ("bench".to_string(), Json::Str("sparse_formats".to_string())),
+        ("rows".to_string(), Json::Arr(report)),
+    ]);
+    let path = "BENCH_sparse_formats.json";
+    match std::fs::write(path, out.to_string_pretty()) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\ncould not write {path}: {e}"),
+    }
+    println!(
+        "(planner cost constants live in cadnn::planner; retune them against the \
+         'winner' column when kernels change)"
+    );
+}

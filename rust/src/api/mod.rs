@@ -38,6 +38,7 @@ use crate::error::CadnnError;
 use crate::exec::{ModelInstance, Personality};
 use crate::ir::Graph;
 use crate::models;
+use crate::planner::FormatPolicy;
 use crate::tuner::TunerCache;
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -59,6 +60,7 @@ pub struct EngineBuilder {
     source: ModelSource,
     personality: Personality,
     profile: Option<SparsityProfile>,
+    sparse_format: FormatPolicy,
     tuned: bool,
     cache_bytes: usize,
     batch_sizes: Option<Vec<usize>>,
@@ -71,6 +73,7 @@ impl EngineBuilder {
             source,
             personality: Personality::CadnnDense,
             profile: None,
+            sparse_format: FormatPolicy::Auto,
             tuned: false,
             cache_bytes: 2 << 20,
             batch_sizes: None,
@@ -89,6 +92,17 @@ impl EngineBuilder {
     /// [`Personality::CadnnSparse`]; `build` rejects other personalities.
     pub fn sparsity_profile(mut self, profile: SparsityProfile) -> EngineBuilder {
         self.profile = Some(profile);
+        self
+    }
+
+    /// How pruned layers are stored and executed:
+    /// [`FormatPolicy::Auto`] lets the planner pick Dense / CSR / BSR per
+    /// layer (default), [`FormatPolicy::Csr`] pins the pre-planner CSR
+    /// baseline, [`FormatPolicy::Bsr`] pins block-sparse. Non-`Auto`
+    /// values require [`Personality::CadnnSparse`]; `build` rejects the
+    /// combination otherwise.
+    pub fn sparse_format(mut self, policy: FormatPolicy) -> EngineBuilder {
+        self.sparse_format = policy;
         self
     }
 
@@ -130,6 +144,11 @@ impl EngineBuilder {
                 "sparsity profile set but personality is not CadnnSparse",
             ));
         }
+        if self.sparse_format != FormatPolicy::Auto && !self.personality.sparse() {
+            return Err(CadnnError::config(
+                "sparse_format pinned but personality is not CadnnSparse",
+            ));
+        }
         match self.source {
             ModelSource::Named(name) => {
                 let mut sizes = self.batch_sizes.clone().unwrap_or_else(|| vec![1]);
@@ -143,12 +162,13 @@ impl EngineBuilder {
                 for &b in &sizes {
                     let g = models::build(&name, b)
                         .ok_or_else(|| CadnnError::UnknownModel { name: name.clone() })?;
-                    let inst = ModelInstance::build(
+                    let inst = ModelInstance::build_planned(
                         &g,
                         self.personality,
                         self.profile.as_ref(),
                         if self.tuned { Some(&mut cache) } else { None },
                         self.cache_bytes,
+                        self.sparse_format,
                     )?;
                     instances.insert(b, inst);
                 }
@@ -168,12 +188,13 @@ impl EngineBuilder {
                     }
                 }
                 let mut cache = TunerCache::new();
-                let inst = ModelInstance::build(
+                let inst = ModelInstance::build_planned(
                     &g,
                     self.personality,
                     self.profile.as_ref(),
                     if self.tuned { Some(&mut cache) } else { None },
                     self.cache_bytes,
+                    self.sparse_format,
                 )?;
                 let label = format!("{}[{}]", g.name, self.personality.label());
                 let mut instances = BTreeMap::new();
@@ -385,6 +406,42 @@ mod tests {
             .err()
             .unwrap();
         assert!(matches!(err, CadnnError::Config { .. }), "{err}");
+    }
+
+    #[test]
+    fn pinned_sparse_format_requires_sparse_personality() {
+        let err = Engine::native("lenet5")
+            .sparse_format(FormatPolicy::Bsr)
+            .build()
+            .err()
+            .unwrap();
+        assert!(matches!(err, CadnnError::Config { .. }), "{err}");
+    }
+
+    #[test]
+    fn sparse_format_policies_agree() {
+        let g = models::build("lenet5", 1).unwrap();
+        let build = |policy: FormatPolicy| {
+            Engine::native("lenet5")
+                .personality(Personality::CadnnSparse)
+                .sparsity_profile(paper_profile(&g))
+                .sparse_format(policy)
+                .build()
+                .unwrap()
+        };
+        let csr = build(FormatPolicy::Csr);
+        let bsr = build(FormatPolicy::Bsr);
+        let auto = build(FormatPolicy::Auto);
+        let img = image(csr.input_len(), 21);
+        let a = csr.session().run(&img).unwrap();
+        let b = bsr.session().run(&img).unwrap();
+        let c = auto.session().run(&img).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-3, "csr {x} vs bsr {y}");
+        }
+        for (x, y) in a.iter().zip(&c) {
+            assert!((x - y).abs() < 1e-3, "csr {x} vs auto {y}");
+        }
     }
 
     #[test]

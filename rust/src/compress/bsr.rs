@@ -1,0 +1,353 @@
+//! BSR (block compressed sparse row) weight matrices — the structured
+//! sparse format of the PatDNN-style execution path. Blocks are (br x bc)
+//! tiles over the same row-major (K, N) weight view as [`CsrMatrix`]:
+//! row = input feature, col = output channel.
+//!
+//! A block is stored iff it contains at least one nonzero; stored blocks
+//! are dense (padding slots hold explicit zeros), so the micro-kernel
+//! streams contiguous `br * bc` value runs with one column index per
+//! block instead of one per element. The price is padding: the
+//! [`BsrMatrix::fill_ratio`] (true nonzeros / stored values) quantifies
+//! it, and the planner's cost model decides when the contiguity win pays
+//! for the padded work (see `docs/FORMATS.md`).
+
+use crate::compress::csr::CsrMatrix;
+use crate::error::CadnnError;
+
+/// Block-CSR with u32 block-column indices. Logical shape is
+/// (`rows`, `cols`); the block grid is `ceil(rows/br) x ceil(cols/bc)`
+/// with edge blocks zero-padded.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BsrMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    /// Block height (rows per block, along the K reduction axis).
+    pub br: usize,
+    /// Block width (cols per block, along the N output axis).
+    pub bc: usize,
+    /// Block-row pointers, length `ceil(rows/br) + 1`.
+    pub row_ptr: Vec<u32>,
+    /// Block-column index (grid coordinate, not element column) per block.
+    pub col_idx: Vec<u32>,
+    /// Stored blocks, `br * bc` row-major values each; padding is 0.0.
+    pub values: Vec<f32>,
+    /// True nonzero count (padding excluded) — fill accounting.
+    nnz: usize,
+}
+
+impl BsrMatrix {
+    /// Encode from a dense row-major matrix. Blocks with no nonzero are
+    /// dropped; everything else is stored dense (zero-padded at edges).
+    pub fn from_dense(dense: &[f32], rows: usize, cols: usize, br: usize, bc: usize) -> Self {
+        assert!(br > 0 && bc > 0, "block dims must be nonzero");
+        assert_eq!(dense.len(), rows * cols);
+        let nbr = rows.div_ceil(br);
+        let nbc = cols.div_ceil(bc);
+        let mut row_ptr = Vec::with_capacity(nbr + 1);
+        let mut col_idx = Vec::new();
+        let mut values = Vec::new();
+        let mut nnz = 0usize;
+        let mut block = vec![0.0f32; br * bc];
+        row_ptr.push(0u32);
+        for b in 0..nbr {
+            let r0 = b * br;
+            let rl = br.min(rows - r0);
+            for j in 0..nbc {
+                let c0 = j * bc;
+                let cl = bc.min(cols - c0);
+                block.fill(0.0);
+                let mut block_nnz = 0usize;
+                for p in 0..rl {
+                    let row = &dense[(r0 + p) * cols + c0..(r0 + p) * cols + c0 + cl];
+                    for (x, &v) in row.iter().enumerate() {
+                        if v != 0.0 {
+                            block_nnz += 1;
+                        }
+                        block[p * bc + x] = v;
+                    }
+                }
+                if block_nnz > 0 {
+                    nnz += block_nnz;
+                    col_idx.push(j as u32);
+                    values.extend_from_slice(&block);
+                }
+            }
+            row_ptr.push(col_idx.len() as u32);
+        }
+        BsrMatrix { rows, cols, br, bc, row_ptr, col_idx, values, nnz }
+    }
+
+    /// Re-encode an element-granular CSR matrix into blocks.
+    pub fn from_csr(csr: &CsrMatrix, br: usize, bc: usize) -> Self {
+        Self::from_dense(&csr.to_dense(), csr.rows, csr.cols, br, bc)
+    }
+
+    /// Stored blocks.
+    pub fn blocks(&self) -> usize {
+        self.col_idx.len()
+    }
+
+    /// Block rows in the grid.
+    pub fn block_rows(&self) -> usize {
+        self.row_ptr.len() - 1
+    }
+
+    /// Stored values including padding (`blocks * br * bc`).
+    pub fn stored(&self) -> usize {
+        self.values.len()
+    }
+
+    /// True nonzeros (padding excluded).
+    pub fn nnz(&self) -> usize {
+        self.nnz
+    }
+
+    /// nnz / stored — 1.0 means perfectly block-aligned sparsity, low
+    /// values mean the format is paying for padded zeros.
+    pub fn fill_ratio(&self) -> f64 {
+        self.nnz as f64 / self.stored().max(1) as f64
+    }
+
+    /// True-nonzero density over the logical matrix.
+    pub fn density(&self) -> f64 {
+        self.nnz as f64 / (self.rows * self.cols).max(1) as f64
+    }
+
+    /// Decode back to dense row-major (padding vanishes).
+    pub fn to_dense(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.rows * self.cols];
+        for b in 0..self.block_rows() {
+            let r0 = b * self.br;
+            let rl = self.br.min(self.rows - r0);
+            let (s, e) = (self.row_ptr[b] as usize, self.row_ptr[b + 1] as usize);
+            for bi in s..e {
+                let c0 = self.col_idx[bi] as usize * self.bc;
+                let cl = self.bc.min(self.cols - c0);
+                let vals = &self.values[bi * self.br * self.bc..];
+                for p in 0..rl {
+                    for x in 0..cl {
+                        out[(r0 + p) * self.cols + c0 + x] = vals[p * self.bc + x];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// In-memory bytes (u32 row_ptr + u32 block col_idx + f32 values).
+    pub fn bytes_in_memory(&self) -> usize {
+        4 * (self.row_ptr.len() + self.col_idx.len() + self.values.len())
+    }
+
+    /// On-disk bytes with 16-bit block-column indices and `value_bits`-bit
+    /// values — one index per block is where BSR beats CSR on storage.
+    pub fn bytes_on_disk_idx16(&self, value_bits: usize) -> usize {
+        self.row_ptr.len() * 4
+            + self.col_idx.len() * 2
+            + (self.values.len() * value_bits).div_ceil(8)
+    }
+
+    /// Structural validation (used by property tests).
+    pub fn validate(&self) -> Result<(), CadnnError> {
+        let invalid = |reason: String| CadnnError::InvalidCsr { reason: format!("bsr: {reason}") };
+        if self.br == 0 || self.bc == 0 {
+            return Err(invalid("zero block dims".into()));
+        }
+        if self.row_ptr.len() != self.rows.div_ceil(self.br) + 1 {
+            return Err(invalid("row_ptr length".into()));
+        }
+        if *self.row_ptr.last().unwrap() as usize != self.col_idx.len() {
+            return Err(invalid("row_ptr tail".into()));
+        }
+        if self.values.len() != self.col_idx.len() * self.br * self.bc {
+            return Err(invalid("values length".into()));
+        }
+        if self.nnz > self.values.len() {
+            return Err(invalid("nnz exceeds stored values".into()));
+        }
+        let nbc = self.cols.div_ceil(self.bc);
+        for b in 0..self.block_rows() {
+            let (s, e) = (self.row_ptr[b] as usize, self.row_ptr[b + 1] as usize);
+            if s > e {
+                return Err(invalid(format!("block row {b} ptr not monotone")));
+            }
+            if e > self.col_idx.len() {
+                return Err(invalid(format!("block row {b} ptr out of range")));
+            }
+            let mut prev: i64 = -1;
+            for bi in s..e {
+                let j = self.col_idx[bi] as i64;
+                if j <= prev {
+                    return Err(invalid(format!("block row {b} cols not strictly increasing")));
+                }
+                if j as usize >= nbc {
+                    return Err(invalid(format!("block row {b} col out of range")));
+                }
+                prev = j;
+            }
+        }
+        let true_nnz = self.values.iter().filter(|v| **v != 0.0).count();
+        if true_nnz != self.nnz {
+            return Err(invalid(format!("nnz {} != counted {true_nnz}", self.nnz)));
+        }
+        Ok(())
+    }
+}
+
+/// Stored-block count a `(br x bc)` BSR encoding of `csr` would have —
+/// O(nnz), no densification. The planner's fill estimator.
+pub fn count_blocks(csr: &CsrMatrix, br: usize, bc: usize) -> usize {
+    count_blocks_impl(csr, br, bc, None)
+}
+
+/// [`count_blocks`] after applying a column permutation
+/// (`col_to_new[old] = new`) — the planner's reorder-gain estimator.
+/// Shares the counting loop with [`count_blocks`] so estimate and
+/// encoder can't drift apart.
+pub fn count_blocks_mapped(csr: &CsrMatrix, br: usize, bc: usize, col_to_new: &[u32]) -> usize {
+    count_blocks_impl(csr, br, bc, Some(col_to_new))
+}
+
+fn count_blocks_impl(csr: &CsrMatrix, br: usize, bc: usize, map: Option<&[u32]>) -> usize {
+    let nbr = csr.rows.div_ceil(br);
+    let nbc = csr.cols.div_ceil(bc);
+    let mut seen = vec![false; nbc];
+    let mut touched: Vec<u32> = Vec::new();
+    let mut total = 0usize;
+    for b in 0..nbr {
+        let r0 = b * br;
+        let r1 = (r0 + br).min(csr.rows);
+        for r in r0..r1 {
+            let (s, e) = (csr.row_ptr[r] as usize, csr.row_ptr[r + 1] as usize);
+            for idx in s..e {
+                let col = csr.col_idx[idx] as usize;
+                let col = match map {
+                    Some(m) => m[col] as usize,
+                    None => col,
+                };
+                let j = col / bc;
+                if !seen[j] {
+                    seen[j] = true;
+                    touched.push(j as u32);
+                }
+            }
+        }
+        total += touched.len();
+        for &j in &touched {
+            seen[j as usize] = false;
+        }
+        touched.clear();
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn random_sparse(rng: &mut Rng, rows: usize, cols: usize, density: f64) -> Vec<f32> {
+        let mut dense = vec![0.0f32; rows * cols];
+        for v in dense.iter_mut() {
+            if rng.f64() < density {
+                *v = rng.normal() as f32;
+            }
+        }
+        dense
+    }
+
+    #[test]
+    fn roundtrip_small_4x1() {
+        // 6x3 with one dense column stripe
+        let mut dense = vec![0.0f32; 18];
+        for r in 0..6 {
+            dense[r * 3 + 1] = (r + 1) as f32;
+        }
+        let bsr = BsrMatrix::from_dense(&dense, 6, 3, 4, 1);
+        bsr.validate().unwrap();
+        assert_eq!(bsr.nnz(), 6);
+        assert_eq!(bsr.blocks(), 2); // two block rows, one block each
+        assert_eq!(bsr.to_dense(), dense);
+    }
+
+    #[test]
+    fn edge_blocks_are_padded_not_truncated() {
+        // 5x5 with 4x4 blocks: grid is 2x2, edges padded
+        let dense: Vec<f32> = (1..=25).map(|v| v as f32).collect();
+        let bsr = BsrMatrix::from_dense(&dense, 5, 5, 4, 4);
+        bsr.validate().unwrap();
+        assert_eq!(bsr.blocks(), 4);
+        assert_eq!(bsr.stored(), 4 * 16);
+        assert_eq!(bsr.nnz(), 25);
+        assert_eq!(bsr.to_dense(), dense);
+        assert!((bsr.fill_ratio() - 25.0 / 64.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn validate_rejects_out_of_range_row_ptr() {
+        // intermediate row_ptr beyond col_idx: must Err, not panic
+        let mut bsr = BsrMatrix::from_dense(&vec![1.0; 8 * 4], 8, 4, 4, 4);
+        bsr.row_ptr = vec![0, 5, 2];
+        assert!(bsr.validate().is_err());
+    }
+
+    #[test]
+    fn all_zero_matrix_stores_nothing() {
+        let bsr = BsrMatrix::from_dense(&vec![0.0; 12 * 8], 12, 8, 4, 4);
+        bsr.validate().unwrap();
+        assert_eq!(bsr.blocks(), 0);
+        assert_eq!(bsr.nnz(), 0);
+        assert_eq!(bsr.to_dense(), vec![0.0; 96]);
+    }
+
+    #[test]
+    fn disk_bytes_prefer_bsr_on_block_structure() {
+        // one fully dense 4x4 block in a 16x16 matrix
+        let mut dense = vec![0.0f32; 256];
+        for r in 4..8 {
+            for c in 8..12 {
+                dense[r * 16 + c] = 1.0;
+            }
+        }
+        let csr = CsrMatrix::from_dense(&dense, 16, 16);
+        let bsr = BsrMatrix::from_dense(&dense, 16, 16, 4, 4);
+        assert_eq!(bsr.blocks(), 1);
+        assert_eq!(bsr.fill_ratio(), 1.0);
+        // same value payload, 16x fewer column indices
+        assert!(bsr.bytes_on_disk_idx16(32) < csr.bytes_on_disk_idx16(32));
+    }
+
+    #[test]
+    fn prop_roundtrip_matches_csr_and_counts() {
+        prop::check_n("bsr roundtrip", 64, |rng: &mut Rng| {
+            let rows = rng.range(1, 40);
+            let cols = rng.range(1, 40);
+            let br = [1usize, 2, 4, 8][rng.below(4)];
+            let bc = [1usize, 2, 4][rng.below(3)];
+            let density = rng.f64();
+            let dense = random_sparse(rng, rows, cols, density);
+            let bsr = BsrMatrix::from_dense(&dense, rows, cols, br, bc);
+            bsr.validate()?;
+            prop_assert!(bsr.to_dense() == dense, "roundtrip mismatch");
+            let csr = CsrMatrix::from_dense(&dense, rows, cols);
+            prop_assert!(bsr.nnz() == csr.nnz(), "nnz {} vs csr {}", bsr.nnz(), csr.nnz());
+            let via_csr = BsrMatrix::from_csr(&csr, br, bc);
+            prop_assert!(via_csr == bsr, "from_csr disagrees with from_dense");
+            prop_assert!(
+                count_blocks(&csr, br, bc) == bsr.blocks(),
+                "count_blocks {} vs stored {}",
+                count_blocks(&csr, br, bc),
+                bsr.blocks()
+            );
+            let ident: Vec<u32> = (0..cols as u32).collect();
+            prop_assert!(
+                count_blocks_mapped(&csr, br, bc, &ident) == bsr.blocks(),
+                "identity map changed the block count"
+            );
+            prop_assert!(bsr.stored() >= bsr.nnz(), "stored < nnz");
+            Ok(())
+        });
+    }
+}

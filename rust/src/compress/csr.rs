@@ -87,6 +87,9 @@ impl CsrMatrix {
             if a > b {
                 return Err(invalid(format!("row {r} ptr not monotone")));
             }
+            if b > self.col_idx.len() {
+                return Err(invalid(format!("row {r} ptr out of range")));
+            }
             let mut prev: i64 = -1;
             for i in a..b {
                 let c = self.col_idx[i] as i64;
@@ -135,6 +138,14 @@ mod tests {
         assert_eq!(csr.bytes_on_disk_idx16(32), 44 + 200 + 400);
         // 4-bit values: 100*4/8 = 50
         assert_eq!(csr.bytes_on_disk_idx16(4), 44 + 200 + 50);
+    }
+
+    #[test]
+    fn validate_rejects_out_of_range_row_ptr() {
+        // intermediate row_ptr beyond col_idx: must Err, not panic
+        let mut csr = CsrMatrix::from_dense(&vec![1.0; 6], 3, 2);
+        csr.row_ptr = vec![0, 9, 2, 6];
+        assert!(csr.validate().is_err());
     }
 
     #[test]

@@ -4,16 +4,22 @@
 //! deployment-side artifacts of compression:
 //! - per-layer sparsity profiles (paper-prescribed, or imported from
 //!   `artifacts/compress_report.json` produced by the python run),
-//! - the CSR encoding the CPU execution path uses,
+//! - the CSR encoding the element-granular CPU execution path uses,
+//! - the BSR block format + filter-kernel reordering the structured
+//!   execution path uses (see `docs/FORMATS.md`),
 //! - k-bit codebook quantization metadata,
 //! - storage accounting that regenerates the §3 compression-rate and
 //!   storage-reduction claims and Table 2 sizes.
 
+pub mod bsr;
 pub mod csr;
 pub mod profile;
 pub mod quant;
+pub mod reorder;
 pub mod size;
 
+pub use bsr::BsrMatrix;
 pub use csr::CsrMatrix;
 pub use profile::{SparsityProfile, paper_profile};
 pub use quant::QuantizedTensor;
+pub use reorder::Permutation;

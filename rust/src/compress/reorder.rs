@@ -1,0 +1,257 @@
+//! Filter-kernel-style reordering (PatDNN §"filter kernel reorder").
+//!
+//! Pruned weight matrices rarely have block structure by accident; what
+//! they do have is output channels (columns of the (K, N) weight view)
+//! with *similar* support. Permuting columns so similar ones sit in the
+//! same (br x bc) block raises the BSR fill ratio without changing the
+//! computed function: the permutation is carried next to the weights, the
+//! per-channel epilogue parameters are permuted with it, and the output
+//! columns are scattered back through the inverse permutation after the
+//! kernel runs. Because a column permutation never changes the reduction
+//! order over K for any output element, the restored output is
+//! bit-identical to the unreordered execution (property-tested in
+//! `kernels::bsr`).
+
+use crate::compress::csr::CsrMatrix;
+use crate::error::CadnnError;
+
+/// A column (output-channel) permutation: `perm[new] = old`, i.e. column
+/// `new` of the reordered matrix is column `perm[new]` of the original.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Permutation {
+    pub perm: Vec<u32>,
+}
+
+impl Permutation {
+    pub fn identity(n: usize) -> Self {
+        Permutation { perm: (0..n as u32).collect() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.perm.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.perm.is_empty()
+    }
+
+    pub fn is_identity(&self) -> bool {
+        self.perm.iter().enumerate().all(|(i, &p)| i as u32 == p)
+    }
+
+    /// The inverse mapping: `inv[old] = new`.
+    pub fn inverse(&self) -> Permutation {
+        let mut inv = vec![0u32; self.perm.len()];
+        for (new, &old) in self.perm.iter().enumerate() {
+            inv[old as usize] = new as u32;
+        }
+        Permutation { perm: inv }
+    }
+
+    /// Check this is a bijection over 0..len.
+    pub fn validate(&self) -> Result<(), CadnnError> {
+        let n = self.perm.len();
+        let mut seen = vec![false; n];
+        for &p in &self.perm {
+            let p = p as usize;
+            if p >= n || seen[p] {
+                return Err(CadnnError::InvalidCsr {
+                    reason: format!("reorder: not a permutation of 0..{n}"),
+                });
+            }
+            seen[p] = true;
+        }
+        Ok(())
+    }
+}
+
+/// Cluster the columns of a dense (rows x cols) matrix by their support
+/// signature over `block_rows`-row stripes: columns whose nonzeros live in
+/// the same stripes sort together, so a (block_rows x bc) BSR encoding of
+/// the permuted matrix stores fewer, fuller blocks. Deterministic.
+pub fn cluster_columns(dense: &[f32], rows: usize, cols: usize, block_rows: usize) -> Permutation {
+    assert_eq!(dense.len(), rows * cols);
+    let sigs = column_signatures(
+        cols,
+        rows.div_ceil(block_rows),
+        (0..rows).flat_map(|r| {
+            let row = &dense[r * cols..(r + 1) * cols];
+            let b = r / block_rows;
+            row.iter()
+                .enumerate()
+                .filter(|(_, v)| **v != 0.0)
+                .map(move |(c, _)| (b, c))
+        }),
+    );
+    order_by_signature(sigs)
+}
+
+/// [`cluster_columns`] straight from a CSR encoding (no densification) —
+/// what the planner uses to estimate reorder benefit.
+pub fn cluster_columns_csr(csr: &CsrMatrix, block_rows: usize) -> Permutation {
+    let sigs = column_signatures(
+        csr.cols,
+        csr.rows.div_ceil(block_rows),
+        (0..csr.rows).flat_map(|r| {
+            let (s, e) = (csr.row_ptr[r] as usize, csr.row_ptr[r + 1] as usize);
+            let b = r / block_rows;
+            csr.col_idx[s..e].iter().map(move |&c| (b, c as usize))
+        }),
+    );
+    order_by_signature(sigs)
+}
+
+/// Per-column occupancy bitmask over `stripes` block-row stripes, from a
+/// (stripe, col) stream of nonzero positions.
+fn column_signatures(
+    cols: usize,
+    stripes: usize,
+    nonzeros: impl Iterator<Item = (usize, usize)>,
+) -> Vec<Vec<u64>> {
+    let words = stripes.div_ceil(64).max(1);
+    let mut sigs = vec![vec![0u64; words]; cols];
+    for (stripe, col) in nonzeros {
+        sigs[col][stripe / 64] |= 1u64 << (stripe % 64);
+    }
+    sigs
+}
+
+/// Stable order: group identical signatures, then by descending stripe
+/// count so dense columns cluster at the front; ties broken by original
+/// index for determinism.
+fn order_by_signature(sigs: Vec<Vec<u64>>) -> Permutation {
+    let pop = |s: &[u64]| s.iter().map(|w| w.count_ones()).sum::<u32>();
+    let mut order: Vec<u32> = (0..sigs.len() as u32).collect();
+    order.sort_by(|&a, &b| {
+        let (sa, sb) = (&sigs[a as usize], &sigs[b as usize]);
+        pop(sb).cmp(&pop(sa)).then_with(|| sa.cmp(sb)).then(a.cmp(&b))
+    });
+    Permutation { perm: order }
+}
+
+/// Apply a column permutation to a dense (rows x cols) matrix:
+/// `out[:, new] = dense[:, perm[new]]`.
+pub fn permute_cols(dense: &[f32], rows: usize, cols: usize, p: &Permutation) -> Vec<f32> {
+    assert_eq!(dense.len(), rows * cols);
+    assert_eq!(p.len(), cols);
+    let mut out = vec![0.0f32; rows * cols];
+    for r in 0..rows {
+        let src = &dense[r * cols..(r + 1) * cols];
+        let dst = &mut out[r * cols..(r + 1) * cols];
+        for (new, &old) in p.perm.iter().enumerate() {
+            dst[new] = src[old as usize];
+        }
+    }
+    out
+}
+
+/// Scatter permuted output columns back to their original positions, in
+/// place: `data[:, perm[j]] = data[:, j]` for every row of the
+/// (rows x cols) buffer. Used on kernel outputs computed against
+/// column-permuted weights.
+pub fn unpermute_cols_inplace(data: &mut [f32], rows: usize, cols: usize, p: &Permutation) {
+    assert_eq!(data.len(), rows * cols);
+    assert_eq!(p.len(), cols);
+    let mut buf = vec![0.0f32; cols];
+    for r in 0..rows {
+        let row = &mut data[r * cols..(r + 1) * cols];
+        buf.copy_from_slice(row);
+        for (new, &old) in p.perm.iter().enumerate() {
+            row[old as usize] = buf[new];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::bsr::BsrMatrix;
+    use crate::prop_assert;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn identity_roundtrip() {
+        let p = Permutation::identity(5);
+        assert!(p.is_identity());
+        p.validate().unwrap();
+        assert_eq!(p.inverse().perm, p.perm);
+    }
+
+    #[test]
+    fn inverse_composes_to_identity() {
+        let p = Permutation { perm: vec![2, 0, 3, 1] };
+        p.validate().unwrap();
+        let inv = p.inverse();
+        for old in 0..4u32 {
+            assert_eq!(p.perm[inv.perm[old as usize] as usize], old);
+        }
+    }
+
+    #[test]
+    fn validate_rejects_non_bijections() {
+        assert!(Permutation { perm: vec![0, 0, 1] }.validate().is_err());
+        assert!(Permutation { perm: vec![0, 5] }.validate().is_err());
+    }
+
+    #[test]
+    fn clustering_groups_equal_support_columns() {
+        // 8x4; columns 0 and 2 live in stripe 0, columns 1 and 3 in
+        // stripe 1 — clustering must make the pairs adjacent.
+        let mut dense = vec![0.0f32; 32];
+        for r in 0..4 {
+            dense[r * 4] = 1.0;
+            dense[r * 4 + 2] = 1.0;
+        }
+        for r in 4..8 {
+            dense[r * 4 + 1] = 1.0;
+            dense[r * 4 + 3] = 1.0;
+        }
+        let p = cluster_columns(&dense, 8, 4, 4);
+        p.validate().unwrap();
+        let pos = p.inverse();
+        let adjacent = |a: usize, b: usize| {
+            (pos.perm[a] as i64 - pos.perm[b] as i64).abs() == 1
+        };
+        assert!(adjacent(0, 2), "perm {:?}", p.perm);
+        assert!(adjacent(1, 3), "perm {:?}", p.perm);
+        // reordered 4x2 blocks: 2 stored instead of 4
+        let reordered = permute_cols(&dense, 8, 4, &p);
+        let bsr = BsrMatrix::from_dense(&reordered, 8, 4, 4, 2);
+        assert_eq!(bsr.blocks(), 2);
+        assert_eq!(BsrMatrix::from_dense(&dense, 8, 4, 4, 2).blocks(), 4);
+    }
+
+    #[test]
+    fn csr_clustering_matches_dense_clustering() {
+        let mut rng = Rng::new(3);
+        let mut dense = vec![0.0f32; 24 * 10];
+        for v in dense.iter_mut() {
+            if rng.f64() < 0.3 {
+                *v = rng.normal() as f32;
+            }
+        }
+        let csr = crate::compress::csr::CsrMatrix::from_dense(&dense, 24, 10);
+        assert_eq!(cluster_columns(&dense, 24, 10, 4).perm, cluster_columns_csr(&csr, 4).perm);
+    }
+
+    #[test]
+    fn prop_permute_then_unpermute_is_identity() {
+        prop::check_n("reorder roundtrip", 64, |rng: &mut Rng| {
+            let rows = rng.range(1, 12);
+            let cols = rng.range(1, 20);
+            let mut dense = vec![0.0f32; rows * cols];
+            for v in dense.iter_mut() {
+                if rng.f64() < 0.5 {
+                    *v = rng.normal() as f32;
+                }
+            }
+            let p = cluster_columns(&dense, rows, cols, 4);
+            p.validate()?;
+            let mut permuted = permute_cols(&dense, rows, cols, &p);
+            unpermute_cols_inplace(&mut permuted, rows, cols, &p);
+            prop_assert!(permuted == dense, "permute/unpermute not identity");
+            Ok(())
+        });
+    }
+}

@@ -1,6 +1,9 @@
 //! Storage accounting: regenerates Table 2's Size(M) column and the §3
-//! compression / storage-reduction claims from the IR graphs + profiles.
+//! compression / storage-reduction claims from the IR graphs + profiles,
+//! plus per-matrix format comparisons (CSR vs BSR padding overhead).
 
+use super::bsr::BsrMatrix;
+use super::csr::CsrMatrix;
 use super::profile::SparsityProfile;
 use crate::ir::Graph;
 
@@ -46,11 +49,46 @@ pub fn report(graph: &Graph, profile: &SparsityProfile) -> SizeReport {
     }
 }
 
+/// One format's on-disk footprint for a concrete pruned matrix.
+#[derive(Debug, Clone)]
+pub struct FormatBytes {
+    /// `csr`, `bsr4x1`, `bsr4x4` (matching `planner::SparseFormat` labels).
+    pub format: String,
+    /// On-disk bytes with 16-bit indices and `value_bits`-bit values.
+    pub bytes_idx16: usize,
+    /// nnz / stored values — 1.0 for CSR; BSR pays padding below 1.0 and
+    /// saves on indices (one per block instead of one per value).
+    pub fill_ratio: f64,
+}
+
+/// Compare one pruned matrix's storage across the executable formats.
+/// This is the fill-ratio accounting side of the planner's tradeoff: a
+/// block format can be *smaller* than CSR despite padding (fewer
+/// indices) when the sparsity is block-structured, and much larger when
+/// it is scattered.
+pub fn format_bytes(csr: &CsrMatrix, value_bits: usize) -> Vec<FormatBytes> {
+    let mut out = vec![FormatBytes {
+        format: "csr".to_string(),
+        bytes_idx16: csr.bytes_on_disk_idx16(value_bits),
+        fill_ratio: 1.0,
+    }];
+    for (br, bc) in [(4usize, 1usize), (4, 4)] {
+        let b = BsrMatrix::from_csr(csr, br, bc);
+        out.push(FormatBytes {
+            format: format!("bsr{br}x{bc}"),
+            bytes_idx16: b.bytes_on_disk_idx16(value_bits),
+            fill_ratio: b.fill_ratio(),
+        });
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::compress::profile::paper_profile;
     use crate::models;
+    use crate::util::rng::Rng;
 
     #[test]
     fn lenet5_storage_reduction_two_orders() {
@@ -85,6 +123,44 @@ mod tests {
         let g = models::build("alexnet", 1).unwrap();
         let r = report(&g, &paper_profile(&g));
         assert!(r.sparse_bytes_idx16 < r.weights * 4);
+    }
+
+    #[test]
+    fn format_bytes_tracks_structure() {
+        let (k, n) = (32usize, 32usize);
+        // block-structured: whole 4x4 blocks, fill 1.0 -> BSR smaller
+        let mut rng = Rng::new(1);
+        let mut blocky = vec![0.0f32; k * n];
+        for b in 0..k / 4 {
+            for j in 0..n / 4 {
+                if rng.f64() < 0.25 {
+                    for p in 0..4 {
+                        for x in 0..4 {
+                            blocky[(b * 4 + p) * n + j * 4 + x] = rng.normal() as f32;
+                        }
+                    }
+                }
+            }
+        }
+        let csr = CsrMatrix::from_dense(&blocky, k, n);
+        let sizes = format_bytes(&csr, 32);
+        let by = |f: &str| sizes.iter().find(|s| s.format == f).unwrap().clone();
+        assert!((by("bsr4x4").fill_ratio - 1.0).abs() < 1e-12);
+        assert!(by("bsr4x4").bytes_idx16 < by("csr").bytes_idx16);
+
+        // scattered: BSR pays padding, fill < 1, bytes balloon
+        let mut scattered = vec![0.0f32; k * n];
+        for v in scattered.iter_mut() {
+            if rng.f64() < 0.1 {
+                *v = rng.normal() as f32;
+            }
+        }
+        let csr2 = CsrMatrix::from_dense(&scattered, k, n);
+        let sizes2 = format_bytes(&csr2, 32);
+        let b44 = sizes2.iter().find(|s| s.format == "bsr4x4").unwrap();
+        assert!(b44.fill_ratio < 0.5, "fill {}", b44.fill_ratio);
+        let c = sizes2.iter().find(|s| s.format == "csr").unwrap();
+        assert!(b44.bytes_idx16 > c.bytes_idx16);
     }
 
     #[test]

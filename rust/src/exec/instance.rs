@@ -8,14 +8,17 @@
 //! table and recycle intermediate tensors through a size-keyed pool.
 //! `cadnn::api::Session` does exactly this.
 
+use crate::compress::bsr::BsrMatrix;
 use crate::compress::csr::CsrMatrix;
 use crate::compress::profile::SparsityProfile;
+use crate::compress::reorder::{self, Permutation};
 use crate::error::CadnnError;
 use crate::ir::ops::{ActKind, Op, PoolKind};
 use crate::ir::{Graph, NodeId};
 use crate::kernels::conv as K;
-use crate::kernels::{Epilogue, Tensor};
+use crate::kernels::{Epilogue, Tensor, PARALLEL_M_CUTOVER};
 use crate::passes::layout::TileConfig;
+use crate::planner::{self, ExecPlan, FormatPolicy, SparseFormat};
 use crate::tuner::TunerCache;
 use crate::util::rng::Rng;
 use std::collections::BTreeMap;
@@ -28,12 +31,19 @@ enum NodeWeights {
     /// (k x cout) weight matrix — the HWIO flatten; serves both the GEMM
     /// path (as-is) and the direct path (reinterpreted as HWIO tensor).
     Dense { mat: Vec<f32>, hwio: [usize; 4], epi: Epilogue },
-    /// CSR weights for compressed layers.
-    Sparse {
-        csr: CsrMatrix,
-        #[allow(dead_code)] // kept for debugging / future direct-sparse engines
-        hwio: [usize; 4],
+    /// CSR weights for compressed layers. `hwio` feeds the format
+    /// planner's spatial-vs-GEMM distinction; `cutover` is the
+    /// planner-chosen serial→parallel row threshold.
+    Sparse { csr: CsrMatrix, hwio: [usize; 4], epi: Epilogue, cutover: usize },
+    /// BSR block weights for compressed layers the planner moved off
+    /// CSR. When `perm` is set the weight columns (and the epilogue's
+    /// per-channel parameters) are filter-kernel-reordered, and outputs
+    /// are scattered back through the permutation after the kernel.
+    BlockSparse {
+        bsr: BsrMatrix,
+        perm: Option<Permutation>,
         epi: Epilogue,
+        cutover: usize,
     },
     /// Depthwise (kh, kw, c) weights.
     Dw { w: Tensor, epi: Epilogue },
@@ -166,6 +176,10 @@ pub struct ModelInstance {
     direct_w: BTreeMap<NodeId, Tensor>,
     /// Sparsity profile actually applied (CadnnSparse only).
     pub profile: Option<SparsityProfile>,
+    /// Per-layer format decisions the planner made (empty when nothing
+    /// was pruned). Serialized into artifact manifests, shown by
+    /// `cadnn plan`.
+    pub plan: ExecPlan,
 }
 
 fn name_seed(name: &str) -> u64 {
@@ -240,6 +254,9 @@ fn act_flags(act: ActKind) -> (bool, bool) {
 impl ModelInstance {
     /// Build an instance for `model` under `personality`. `profile`
     /// provides per-layer sparsity for CadnnSparse (ignored otherwise).
+    /// Pruned layers get their format planned under
+    /// [`FormatPolicy::Auto`]; use [`ModelInstance::build_planned`] to
+    /// pin a policy.
     pub fn build(
         model: &Graph,
         personality: Personality,
@@ -247,10 +264,26 @@ impl ModelInstance {
         tuner: Option<&mut TunerCache>,
         cache_bytes: usize,
     ) -> Result<ModelInstance, CadnnError> {
+        Self::build_planned(model, personality, profile, tuner, cache_bytes, FormatPolicy::Auto)
+    }
+
+    /// [`ModelInstance::build`] with an explicit sparse-format policy.
+    /// When a tuner is supplied, format choices are refined by the
+    /// planner's measured mode (the same micro-benchmark loop as tile
+    /// tuning); otherwise the cost-model heuristic decides.
+    pub fn build_planned(
+        model: &Graph,
+        personality: Personality,
+        profile: Option<&SparsityProfile>,
+        tuner: Option<&mut TunerCache>,
+        cache_bytes: usize,
+        policy: FormatPolicy,
+    ) -> Result<ModelInstance, CadnnError> {
         let graph = personality.lower(model);
         let mut weights = BTreeMap::new();
         let mut tiles = BTreeMap::new();
         let mut direct_w = BTreeMap::new();
+        let measured_formats = tuner.is_some();
         let mut tuner = tuner;
         for n in &graph.nodes {
             match &n.op {
@@ -297,7 +330,12 @@ impl ModelInstance {
                         let csr = CsrMatrix::from_dense(&mat, k, *cout);
                         weights.insert(
                             n.id,
-                            NodeWeights::Sparse { csr, hwio: [*kh, *kw, *cin, *cout], epi },
+                            NodeWeights::Sparse {
+                                csr,
+                                hwio: [*kh, *kw, *cin, *cout],
+                                epi,
+                                cutover: PARALLEL_M_CUTOVER,
+                            },
                         );
                     } else {
                         weights.insert(
@@ -322,7 +360,10 @@ impl ModelInstance {
                     if sparsity > 0.0 {
                         prune_matrix(&mut mat, sparsity);
                         let csr = CsrMatrix::from_dense(&mat, *k, *nn);
-                        weights.insert(n.id, NodeWeights::Sparse { csr, hwio, epi });
+                        weights.insert(
+                            n.id,
+                            NodeWeights::Sparse { csr, hwio, epi, cutover: PARALLEL_M_CUTOVER },
+                        );
                     } else {
                         weights.insert(n.id, NodeWeights::Dense { mat, hwio, epi });
                     }
@@ -371,6 +412,61 @@ impl ModelInstance {
                 _ => {}
             }
         }
+        // Per-layer format planning over the pruned layers — the BSR
+        // conversion path. Consumes each Sparse entry's `hwio` (the
+        // spatial-vs-GEMM signal) plus the node's GEMM row count, and
+        // rewrites the payload to the planned format.
+        let mut plan = ExecPlan::default();
+        for (id, w) in weights.iter_mut() {
+            let NodeWeights::Sparse { csr, hwio, epi, cutover } = w else {
+                continue;
+            };
+            let node = graph.node(*id);
+            let m = node.shape.numel() / csr.cols.max(1);
+            let lp = if measured_formats {
+                planner::choose_measured(policy, csr, m, *hwio, name_seed(&node.name))
+            } else {
+                planner::choose(policy, csr, m, *hwio)
+            };
+            plan.layers.insert(node.name.clone(), lp.clone());
+            match lp.format {
+                SparseFormat::Csr => {
+                    *cutover = lp.parallel_cutover;
+                }
+                SparseFormat::Dense => {
+                    let new_w = NodeWeights::Dense {
+                        mat: csr.to_dense(),
+                        hwio: *hwio,
+                        epi: epi.clone(),
+                    };
+                    *w = new_w;
+                }
+                SparseFormat::Bsr { br, bc } => {
+                    let (kk, nn) = (csr.rows, csr.cols);
+                    let dense = csr.to_dense();
+                    let new_w = if lp.reorder {
+                        // same clustering entry point the planner's
+                        // estimate used, so plan and payload agree
+                        let perm = reorder::cluster_columns_csr(csr, br);
+                        let permuted = reorder::permute_cols(&dense, kk, nn, &perm);
+                        NodeWeights::BlockSparse {
+                            bsr: BsrMatrix::from_dense(&permuted, kk, nn, br, bc),
+                            epi: epi.permute_channels(&perm.perm),
+                            perm: Some(perm),
+                            cutover: lp.parallel_cutover,
+                        }
+                    } else {
+                        NodeWeights::BlockSparse {
+                            bsr: BsrMatrix::from_dense(&dense, kk, nn, br, bc),
+                            epi: epi.clone(),
+                            perm: None,
+                            cutover: lp.parallel_cutover,
+                        }
+                    };
+                    *w = new_w;
+                }
+            }
+        }
         Ok(ModelInstance {
             name: model.name.clone(),
             personality,
@@ -379,6 +475,7 @@ impl ModelInstance {
             tiles,
             direct_w,
             profile: profile.cloned().filter(|_| personality.sparse()),
+            plan,
         })
     }
 
@@ -545,8 +642,18 @@ impl ModelInstance {
                     x, mat, *kh, *kw, *cout, *stride, *padh, *padw,
                     &self.tile(n.id), epi,
                 ),
-                Some(NodeWeights::Sparse { csr, epi, .. }) => {
-                    K::conv2d_csr(x, csr, *kh, *kw, *stride, *padh, *padw, epi)
+                Some(NodeWeights::Sparse { csr, epi, cutover, .. }) => {
+                    K::conv2d_csr(x, csr, *kh, *kw, *stride, *padh, *padw, epi, *cutover)
+                }
+                Some(NodeWeights::BlockSparse { bsr, perm, epi, cutover }) => {
+                    let mut out =
+                        K::conv2d_bsr(x, bsr, *kh, *kw, *stride, *padh, *padw, epi, *cutover);
+                    if let Some(p) = perm {
+                        let rows = out.numel() / out.c();
+                        let ch = out.c();
+                        reorder::unpermute_cols_inplace(&mut out.data, rows, ch, p);
+                    }
+                    out
                 }
                 _ => return Err(missing(&n.name)),
             },
@@ -560,10 +667,18 @@ impl ModelInstance {
                             &self.tile(n.id), epi,
                         );
                     }
-                    Some(NodeWeights::Sparse { csr, epi, .. }) => {
-                        crate::kernels::sparse::csr_gemm_parallel(
-                            &x.data, csr, &mut out.data, m, epi,
+                    Some(NodeWeights::Sparse { csr, epi, cutover, .. }) => {
+                        crate::kernels::sparse::csr_gemm_parallel_cutover(
+                            &x.data, csr, &mut out.data, m, epi, *cutover,
                         );
+                    }
+                    Some(NodeWeights::BlockSparse { bsr, perm, epi, cutover }) => {
+                        crate::kernels::bsr::bsr_gemm_parallel_cutover(
+                            &x.data, bsr, &mut out.data, m, epi, *cutover,
+                        );
+                        if let Some(p) = perm {
+                            reorder::unpermute_cols_inplace(&mut out.data, m, *nn, p);
+                        }
                     }
                     _ => return Err(missing(&n.name)),
                 }
@@ -737,10 +852,23 @@ mod tests {
         let mut profile = SparsityProfile::default();
         profile.layers.insert("c1".into(), 0.7);
 
-        let sparse =
-            ModelInstance::build(&g, Personality::CadnnSparse, Some(&profile), None, 1 << 20)
-                .unwrap();
+        // pin the CSR format: at 30% density the Auto planner is free to
+        // rematerialize dense, and this test inspects the CSR payload
+        let sparse = ModelInstance::build_planned(
+            &g,
+            Personality::CadnnSparse,
+            Some(&profile),
+            None,
+            1 << 20,
+            FormatPolicy::Csr,
+        )
+        .unwrap();
         let out_s = sparse.execute(&x).unwrap();
+        assert_eq!(
+            sparse.plan.get("c1").map(|lp| lp.format),
+            Some(SparseFormat::Csr),
+            "pinned policy must reach the plan"
+        );
 
         // dense execution on the SAME pruned weights: rebuild dense and
         // manually prune using the same code path
@@ -757,6 +885,54 @@ mod tests {
         };
         let cut = ((total as f64) * 0.7).round() as usize;
         assert_eq!(nnz, total - cut, "inexact prune: nnz {nnz} of {total}");
+    }
+
+    /// Every format policy computes the same function on the same pruned
+    /// weights; BSR must actually be exercised under the Bsr policy.
+    #[test]
+    fn format_policies_agree_on_pruned_model() {
+        use crate::ir::Shape;
+        let mut g = Graph::new("miniformats", Shape::nhwc(1, 8, 8, 4));
+        let c1 = g.add("c1", Op::conv(3, 3, 4, 16, 1, 1), vec![0]);
+        let b1 = g.add("c1_bn", Op::BatchNorm { c: 16 }, vec![c1]);
+        let r1 = g.add("c1_relu", Op::Activation { kind: ActKind::Relu }, vec![b1]);
+        let c2 = g.add("c2", Op::conv(1, 1, 16, 8, 1, 0), vec![r1]);
+        let b2 = g.add("c2_bn", Op::BatchNorm { c: 8 }, vec![c2]);
+        g.add("c2_relu", Op::Activation { kind: ActKind::Relu }, vec![b2]);
+        g.validate().unwrap();
+        let x = input_for(&g, 9);
+
+        let mut profile = SparsityProfile::default();
+        profile.layers.insert("c1".into(), 0.8);
+        profile.layers.insert("c2".into(), 0.8);
+
+        let build = |policy: FormatPolicy| {
+            ModelInstance::build_planned(
+                &g,
+                Personality::CadnnSparse,
+                Some(&profile),
+                None,
+                1 << 20,
+                policy,
+            )
+            .unwrap()
+        };
+        let csr = build(FormatPolicy::Csr);
+        let bsr = build(FormatPolicy::Bsr);
+        let auto = build(FormatPolicy::Auto);
+        assert!(
+            bsr.plan
+                .layers
+                .values()
+                .all(|lp| matches!(lp.format, SparseFormat::Bsr { .. })),
+            "Bsr policy must block every pruned layer: {:?}",
+            bsr.plan
+        );
+        let out_csr = csr.execute(&x).unwrap();
+        let out_bsr = bsr.execute(&x).unwrap();
+        let out_auto = auto.execute(&x).unwrap();
+        assert!(out_csr.max_abs_diff(&out_bsr) < 1e-3, "{}", out_csr.max_abs_diff(&out_bsr));
+        assert!(out_csr.max_abs_diff(&out_auto) < 1e-3, "{}", out_csr.max_abs_diff(&out_auto));
     }
 
     #[test]

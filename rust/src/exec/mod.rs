@@ -8,7 +8,13 @@
 //! | `TfLiteLike`  | none                | direct loops  | —       | dense   |
 //! | `TvmLike`     | fusion + 1x1->GEMM  | im2col GEMM   | default | dense   |
 //! | `CadnnDense`  | fusion + 1x1->GEMM  | im2col GEMM   | tuned   | dense   |
-//! | `CadnnSparse` | fusion + 1x1->GEMM  | CSR GEMM      | tuned   | pruned  |
+//! | `CadnnSparse` | fusion + 1x1->GEMM  | planned¹      | tuned   | pruned  |
+//!
+//! ¹ CadnnSparse's per-layer engine is chosen by [`crate::planner`]:
+//! scalar CSR, block-sparse BSR (optionally filter-kernel-reordered), or
+//! dense rematerialization, whichever the cost model (or the tuner's
+//! measured mode) expects to be fastest for that layer's sparsity
+//! structure.
 //!
 //! Weights are generated deterministically from layer names, so every
 //! personality of the same model computes the *same function* (the

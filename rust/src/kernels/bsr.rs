@@ -1,0 +1,368 @@
+//! Block-sparse kernels: activations (dense, M x K) times BSR weights
+//! (K x N).
+//!
+//! Where the CSR kernel pays one column index and one scattered store per
+//! nonzero, the BSR kernel pays one index per (br x bc) block and streams
+//! the block's values contiguously, keeping a bc-wide accumulator strip
+//! in registers across the block's br-deep reduction. That makes the
+//! per-stored-value cost much lower than CSR's — the planner's cost model
+//! (`planner::COST_*`) trades that against the padding the block format
+//! stores (see `docs/FORMATS.md`).
+//!
+//! Specialized micro-kernels exist for the planner's candidate shapes
+//! (4x1 and 4x4); other block shapes fall back to a generic path.
+
+use super::{Epilogue, SendPtr, PARALLEL_M_CUTOVER};
+use crate::compress::bsr::BsrMatrix;
+use crate::util::pool;
+
+/// C(M,N) = A(M,K) @ W_bsr(K,N), single thread.
+pub fn bsr_gemm(a: &[f32], w: &BsrMatrix, c: &mut [f32], m: usize, epilogue: &Epilogue) {
+    let (k, n) = (w.rows, w.cols);
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(c.len(), m * n);
+    bsr_gemm_rows(a, w, c, 0, m, k, n);
+    epilogue.apply(c, m, n);
+}
+
+fn bsr_gemm_rows(
+    a: &[f32],
+    w: &BsrMatrix,
+    c: &mut [f32],
+    m0: usize,
+    m1: usize,
+    k: usize,
+    n: usize,
+) {
+    c[m0 * n..m1 * n].fill(0.0);
+    match (w.br, w.bc) {
+        (4, 1) => bsr_rows_spec::<4, 1>(a, w, c, m0, m1, k, n),
+        (4, 4) => bsr_rows_spec::<4, 4>(a, w, c, m0, m1, k, n),
+        (8, 1) => bsr_rows_spec::<8, 1>(a, w, c, m0, m1, k, n),
+        (8, 4) => bsr_rows_spec::<8, 4>(a, w, c, m0, m1, k, n),
+        _ => bsr_rows_generic(a, w, c, m0, m1, k, n),
+    }
+}
+
+/// Monomorphized micro-kernel: MR=4 activation rows x (BR x BC) blocks.
+/// The (MR x BR) activation panel is hoisted once per block row and the
+/// BC-wide accumulator strip lives in registers across the BR reduction,
+/// so each C element is loaded/stored once per stored block.
+fn bsr_rows_spec<const BR: usize, const BC: usize>(
+    a: &[f32],
+    w: &BsrMatrix,
+    c: &mut [f32],
+    m0: usize,
+    m1: usize,
+    k: usize,
+    n: usize,
+) {
+    const MR: usize = 4;
+    let nbr = w.block_rows();
+    let mut i = m0;
+    while i + MR <= m1 {
+        for kb in 0..nbr {
+            let (s, e) = (w.row_ptr[kb] as usize, w.row_ptr[kb + 1] as usize);
+            if s == e {
+                // empty block row: skip before touching activations, so
+                // deeply pruned layers keep scaling with stored blocks
+                continue;
+            }
+            let p0 = kb * BR;
+            let pl = BR.min(k - p0);
+            // hoist the MR x BR activation panel (zeros past the K edge)
+            let mut av = [[0f32; BR]; MR];
+            let mut any = false;
+            for (r, avr) in av.iter_mut().enumerate() {
+                let base = (i + r) * k + p0;
+                for (p, slot) in avr.iter_mut().take(pl).enumerate() {
+                    let v = a[base + p];
+                    *slot = v;
+                    any |= v != 0.0;
+                }
+            }
+            if !any {
+                continue;
+            }
+            for bi in s..e {
+                let j0 = w.col_idx[bi] as usize * BC;
+                let vals = &w.values[bi * BR * BC..(bi + 1) * BR * BC];
+                let cl = BC.min(n - j0);
+                for (r, avr) in av.iter().enumerate() {
+                    let mut acc = [0f32; BC];
+                    for (p, &apv) in avr.iter().take(pl).enumerate() {
+                        if apv == 0.0 {
+                            continue;
+                        }
+                        let vrow = &vals[p * BC..p * BC + BC];
+                        for x in 0..BC {
+                            acc[x] += apv * vrow[x];
+                        }
+                    }
+                    let crow = &mut c[(i + r) * n + j0..(i + r) * n + j0 + cl];
+                    for (x, cv) in crow.iter_mut().enumerate() {
+                        *cv += acc[x];
+                    }
+                }
+            }
+        }
+        i += MR;
+    }
+    // remainder rows (< MR), one at a time
+    for ir in i..m1 {
+        for kb in 0..nbr {
+            let (s, e) = (w.row_ptr[kb] as usize, w.row_ptr[kb + 1] as usize);
+            if s == e {
+                continue;
+            }
+            let p0 = kb * BR;
+            let pl = BR.min(k - p0);
+            let mut av = [0f32; BR];
+            let mut any = false;
+            let base = ir * k + p0;
+            for (p, slot) in av.iter_mut().take(pl).enumerate() {
+                let v = a[base + p];
+                *slot = v;
+                any |= v != 0.0;
+            }
+            if !any {
+                continue;
+            }
+            for bi in s..e {
+                let j0 = w.col_idx[bi] as usize * BC;
+                let vals = &w.values[bi * BR * BC..(bi + 1) * BR * BC];
+                let cl = BC.min(n - j0);
+                let mut acc = [0f32; BC];
+                for (p, &apv) in av.iter().take(pl).enumerate() {
+                    if apv == 0.0 {
+                        continue;
+                    }
+                    let vrow = &vals[p * BC..p * BC + BC];
+                    for x in 0..BC {
+                        acc[x] += apv * vrow[x];
+                    }
+                }
+                let crow = &mut c[ir * n + j0..ir * n + j0 + cl];
+                for (x, cv) in crow.iter_mut().enumerate() {
+                    *cv += acc[x];
+                }
+            }
+        }
+    }
+}
+
+/// Generic fallback for unusual block shapes — correct for any (br, bc).
+fn bsr_rows_generic(
+    a: &[f32],
+    w: &BsrMatrix,
+    c: &mut [f32],
+    m0: usize,
+    m1: usize,
+    k: usize,
+    n: usize,
+) {
+    let (br, bc) = (w.br, w.bc);
+    for ir in m0..m1 {
+        for kb in 0..w.block_rows() {
+            let p0 = kb * br;
+            let pl = br.min(k - p0);
+            let (s, e) = (w.row_ptr[kb] as usize, w.row_ptr[kb + 1] as usize);
+            for bi in s..e {
+                let j0 = w.col_idx[bi] as usize * bc;
+                let vals = &w.values[bi * br * bc..(bi + 1) * br * bc];
+                let cl = bc.min(n - j0);
+                let crow = &mut c[ir * n + j0..ir * n + j0 + cl];
+                for p in 0..pl {
+                    let apv = a[ir * k + p0 + p];
+                    if apv == 0.0 {
+                        continue;
+                    }
+                    let vrow = &vals[p * bc..p * bc + cl];
+                    for (cv, &wv) in crow.iter_mut().zip(vrow) {
+                        *cv += apv * wv;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Multithreaded BSR GEMM over disjoint row panels, default cutover.
+pub fn bsr_gemm_parallel(a: &[f32], w: &BsrMatrix, c: &mut [f32], m: usize, epilogue: &Epilogue) {
+    bsr_gemm_parallel_cutover(a, w, c, m, epilogue, PARALLEL_M_CUTOVER);
+}
+
+/// Multithreaded BSR GEMM with a caller-chosen serial cutover (the
+/// planner's per-layer override; see [`PARALLEL_M_CUTOVER`]).
+pub fn bsr_gemm_parallel_cutover(
+    a: &[f32],
+    w: &BsrMatrix,
+    c: &mut [f32],
+    m: usize,
+    epilogue: &Epilogue,
+    cutover: usize,
+) {
+    let (k, n) = (w.rows, w.cols);
+    let threads = pool::global().size().min(m.div_ceil(64)).max(1);
+    if threads <= 1 || m < cutover {
+        return bsr_gemm(a, w, c, m, epilogue);
+    }
+    let chunk = m.div_ceil(threads);
+    let cptr = SendPtr(c.as_mut_ptr());
+    pool::parallel_for_n(threads, threads, |t| {
+        let m0 = t * chunk;
+        let m1 = ((t + 1) * chunk).min(m);
+        if m0 >= m1 {
+            return;
+        }
+        // SAFETY: disjoint row panels.
+        let c_all = unsafe { std::slice::from_raw_parts_mut(cptr.get(), m * n) };
+        bsr_gemm_rows(a, w, c_all, m0, m1, k, n);
+        epilogue.apply(&mut c_all[m0 * n..m1 * n], m1 - m0, n);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::reorder;
+    use crate::kernels::gemm::gemm_naive;
+    use crate::prop_assert;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn sparse_dense(rng: &mut Rng, k: usize, n: usize, density: f64) -> Vec<f32> {
+        let mut dense = vec![0.0f32; k * n];
+        for v in dense.iter_mut() {
+            if rng.f64() < density {
+                *v = rng.normal() as f32;
+            }
+        }
+        dense
+    }
+
+    #[test]
+    fn bsr_matches_dense_gemm_both_shapes() {
+        let (m, k, n) = (13, 37, 21);
+        let mut rng = Rng::new(1);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+        let dense = sparse_dense(&mut rng, k, n, 0.3);
+        let mut c_ref = vec![0.0; m * n];
+        gemm_naive(&a, &dense, &mut c_ref, m, k, n);
+        for (br, bc) in [(4usize, 1usize), (4, 4), (8, 1), (3, 2)] {
+            let bsr = BsrMatrix::from_dense(&dense, k, n, br, bc);
+            let mut c = vec![0.0; m * n];
+            bsr_gemm(&a, &bsr, &mut c, m, &Epilogue::None);
+            for (x, y) in c_ref.iter().zip(&c) {
+                assert!((x - y).abs() < 1e-4, "{br}x{bc}: {x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let (m, k, n) = (300, 64, 32);
+        let mut rng = Rng::new(3);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+        let dense = sparse_dense(&mut rng, k, n, 0.2);
+        let bsr = BsrMatrix::from_dense(&dense, k, n, 4, 4);
+        let mut c1 = vec![0.0; m * n];
+        let mut c2 = vec![0.0; m * n];
+        bsr_gemm(&a, &bsr, &mut c1, m, &Epilogue::None);
+        bsr_gemm_parallel(&a, &bsr, &mut c2, m, &Epilogue::None);
+        for (x, y) in c1.iter().zip(&c2) {
+            assert!((x - y).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn cutover_forces_serial_with_identical_result() {
+        let (m, k, n) = (200, 32, 16);
+        let mut rng = Rng::new(5);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+        let dense = sparse_dense(&mut rng, k, n, 0.4);
+        let bsr = BsrMatrix::from_dense(&dense, k, n, 4, 1);
+        let mut c1 = vec![0.0; m * n];
+        let mut c2 = vec![0.0; m * n];
+        bsr_gemm(&a, &bsr, &mut c1, m, &Epilogue::None);
+        // cutover above m: parallel entry point must take the serial path
+        bsr_gemm_parallel_cutover(&a, &bsr, &mut c2, m, &Epilogue::None, m + 1);
+        assert_eq!(c1, c2, "serial-cutover path must be the serial kernel");
+    }
+
+    #[test]
+    fn empty_weights_give_zero_plus_epilogue() {
+        let (m, k, n) = (6, 10, 4);
+        let a = vec![1.0; m * k];
+        let bsr = BsrMatrix::from_dense(&vec![0.0; k * n], k, n, 4, 4);
+        let mut c = vec![9.0; m * n];
+        let ep = Epilogue::bias_relu(vec![0.5; n], false);
+        bsr_gemm(&a, &bsr, &mut c, m, &ep);
+        assert!(c.iter().all(|&v| v == 0.5));
+    }
+
+    /// Satellite (a): BSR x dense matches the naive reference across
+    /// random densities, including matrices with all-zero blocks.
+    #[test]
+    fn prop_bsr_gemm_random() {
+        prop::check_n("bsr gemm vs dense", 40, |rng: &mut Rng| {
+            let m = rng.range(1, 24);
+            let k = rng.range(1, 40);
+            let n = rng.range(1, 24);
+            let density = rng.f64() * rng.f64(); // skew sparse: zero blocks common
+            let br = [4usize, 8][rng.below(2)];
+            let bc = [1usize, 4][rng.below(2)];
+            let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+            let dense = sparse_dense(rng, k, n, density);
+            let bsr = BsrMatrix::from_dense(&dense, k, n, br, bc);
+            bsr.validate()?;
+            let mut c1 = vec![0.0; m * n];
+            let mut c2 = vec![0.0; m * n];
+            gemm_naive(&a, &dense, &mut c1, m, k, n);
+            bsr_gemm(&a, &bsr, &mut c2, m, &Epilogue::None);
+            for (x, y) in c1.iter().zip(&c2) {
+                prop_assert!((x - y).abs() < 1e-3, "{} vs {}", x, y);
+            }
+            Ok(())
+        });
+    }
+
+    /// Satellite (b): reorder -> execute -> inverse-permute is
+    /// bit-identical to the unreordered path (a column permutation never
+    /// changes any output element's reduction order over K).
+    #[test]
+    fn prop_reordered_execution_bit_identical() {
+        prop::check_n("bsr reorder bit-identical", 40, |rng: &mut Rng| {
+            let m = rng.range(1, 16);
+            let k = rng.range(1, 32);
+            let n = rng.range(1, 24);
+            let density = rng.f64();
+            let br = 4usize;
+            let bc = [1usize, 4][rng.below(2)];
+            let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+            let dense = sparse_dense(rng, k, n, density);
+            let scale: Vec<f32> = (0..n).map(|_| 0.5 + rng.f32()).collect();
+            let shift: Vec<f32> = (0..n).map(|_| rng.f32() - 0.5).collect();
+            let epi = Epilogue::bn_act(scale, shift, true, false);
+
+            // unreordered reference
+            let bsr = BsrMatrix::from_dense(&dense, k, n, br, bc);
+            let mut c_ref = vec![0.0; m * n];
+            bsr_gemm(&a, &bsr, &mut c_ref, m, &epi);
+
+            // reorder columns, permute the epilogue with them, execute,
+            // scatter the output back
+            let p = reorder::cluster_columns(&dense, k, n, br);
+            p.validate()?;
+            let permuted = reorder::permute_cols(&dense, k, n, &p);
+            let bsr_p = BsrMatrix::from_dense(&permuted, k, n, br, bc);
+            let epi_p = epi.permute_channels(&p.perm);
+            let mut c = vec![0.0; m * n];
+            bsr_gemm(&a, &bsr_p, &mut c, m, &epi_p);
+            reorder::unpermute_cols_inplace(&mut c, m, n, &p);
+
+            prop_assert!(c == c_ref, "reordered path not bit-identical");
+            Ok(())
+        });
+    }
+}

@@ -7,9 +7,11 @@
 //!   the conv becomes the tiled (fused-epilogue) GEMM of `gemm.rs` or the
 //!   CSR GEMM of `sparse.rs` when compressed.
 
+use super::bsr::bsr_gemm_parallel_cutover;
 use super::gemm::gemm_parallel;
-use super::sparse::csr_gemm_parallel;
+use super::sparse::csr_gemm_parallel_cutover;
 use super::{Epilogue, Tensor};
+use crate::compress::bsr::BsrMatrix;
 use crate::compress::csr::CsrMatrix;
 use crate::passes::layout::TileConfig;
 
@@ -137,6 +139,8 @@ pub fn conv2d_gemm(
 }
 
 /// Compressed fused conv: CSR weights over the same (k, cout) view.
+/// `cutover` is the serial→parallel row threshold (planner-chosen; pass
+/// [`super::PARALLEL_M_CUTOVER`] for the default).
 #[allow(clippy::too_many_arguments)]
 pub fn conv2d_csr(
     x: &Tensor,
@@ -147,18 +151,46 @@ pub fn conv2d_csr(
     padh: usize,
     padw: usize,
     epilogue: &Epilogue,
+    cutover: usize,
 ) -> Tensor {
     let cout = w.cols;
     if kh == 1 && kw == 1 && stride == 1 && padh == 0 && padw == 0 {
         let m = x.n() * x.h() * x.w();
         let mut out = Tensor::zeros(&[x.n(), x.h(), x.w(), cout]);
-        csr_gemm_parallel(&x.data, w, &mut out.data, m, epilogue);
+        csr_gemm_parallel_cutover(&x.data, w, &mut out.data, m, epilogue, cutover);
         return out;
     }
     let (patches, ho, wo) = im2col(x, kh, kw, stride, padh, padw);
     let m = x.n() * ho * wo;
     let mut out = Tensor::zeros(&[x.n(), ho, wo, cout]);
-    csr_gemm_parallel(&patches.data, w, &mut out.data, m, epilogue);
+    csr_gemm_parallel_cutover(&patches.data, w, &mut out.data, m, epilogue, cutover);
+    out
+}
+
+/// Block-compressed fused conv: BSR weights over the same (k, cout) view.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_bsr(
+    x: &Tensor,
+    w: &BsrMatrix,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    padh: usize,
+    padw: usize,
+    epilogue: &Epilogue,
+    cutover: usize,
+) -> Tensor {
+    let cout = w.cols;
+    if kh == 1 && kw == 1 && stride == 1 && padh == 0 && padw == 0 {
+        let m = x.n() * x.h() * x.w();
+        let mut out = Tensor::zeros(&[x.n(), x.h(), x.w(), cout]);
+        bsr_gemm_parallel_cutover(&x.data, w, &mut out.data, m, epilogue, cutover);
+        return out;
+    }
+    let (patches, ho, wo) = im2col(x, kh, kw, stride, padh, padw);
+    let m = x.n() * ho * wo;
+    let mut out = Tensor::zeros(&[x.n(), ho, wo, cout]);
+    bsr_gemm_parallel_cutover(&patches.data, w, &mut out.data, m, epilogue, cutover);
     out
 }
 
@@ -374,9 +406,13 @@ mod tests {
             }
         }
         let dense = conv2d_direct(&x, &w, 1, 1, 1);
+        let cut = crate::kernels::PARALLEL_M_CUTOVER;
         let csr = CsrMatrix::from_dense(&w.data, 36, 8);
-        let got = conv2d_csr(&x, &csr, 3, 3, 1, 1, 1, &Epilogue::None);
+        let got = conv2d_csr(&x, &csr, 3, 3, 1, 1, 1, &Epilogue::None, cut);
         assert!(dense.max_abs_diff(&got) < 1e-4);
+        let bsr = BsrMatrix::from_dense(&w.data, 36, 8, 4, 4);
+        let got_b = conv2d_bsr(&x, &bsr, 3, 3, 1, 1, 1, &Epilogue::None, cut);
+        assert!(dense.max_abs_diff(&got_b) < 1e-4);
     }
 
     #[test]

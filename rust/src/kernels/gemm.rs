@@ -14,7 +14,7 @@
 //! (fusion); the unfused personalities pass `Epilogue::None` and run
 //! separate bn/act sweeps instead.
 
-use super::Epilogue;
+use super::{Epilogue, SendPtr, PARALLEL_M_CUTOVER};
 use crate::passes::layout::TileConfig;
 use crate::util::pool;
 
@@ -184,18 +184,6 @@ pub fn gemm_blocked(
     epilogue.apply(c, m, n);
 }
 
-/// Pointer wrapper so disjoint row panels can be written from the pool.
-struct SendPtr(*mut f32);
-unsafe impl Send for SendPtr {}
-unsafe impl Sync for SendPtr {}
-impl SendPtr {
-    /// Method (not field) access so closures capture the whole wrapper,
-    /// keeping the Sync impl in play under disjoint-capture rules.
-    fn get(&self) -> *mut f32 {
-        self.0
-    }
-}
-
 /// Multithreaded blocked GEMM: row panels are disjoint slices of C.
 pub fn gemm_parallel(
     a: &[f32],
@@ -208,7 +196,7 @@ pub fn gemm_parallel(
     epilogue: &Epilogue,
 ) {
     let threads = pool::global().size().min(m.div_ceil(64)).max(1);
-    if threads <= 1 || m < 128 {
+    if threads <= 1 || m < PARALLEL_M_CUTOVER {
         return gemm_blocked(a, b, c, m, k, n, tile, epilogue);
     }
     let chunk = m.div_ceil(threads);

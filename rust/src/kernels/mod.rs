@@ -4,12 +4,40 @@
 //! vs separate epilogues, dense vs CSR) and the tuner picks tile
 //! configurations; measured efficiency feeds the Figure-2 projection.
 
+pub mod bsr;
 pub mod conv;
 pub mod gemm;
 pub mod sparse;
 pub mod tensor;
 
 pub use tensor::Tensor;
+
+/// Row count below which the panel-parallel kernels (dense, CSR, BSR)
+/// run their serial variant instead of fanning out to the thread pool.
+///
+/// Rationale: a row panel needs ~64+ rows per thread before the pool's
+/// wake/join overhead amortizes, and M below this threshold usually means
+/// a latency-sensitive small batch where cache-warm serial execution
+/// wins. The planner can override it per layer ([`crate::planner`]
+/// carries a `parallel_cutover` in each `LayerPlan`, refined by the
+/// tuner's micro-benchmark loop when enabled); the `*_parallel` entry
+/// points without a cutover argument use this default.
+pub const PARALLEL_M_CUTOVER: usize = 128;
+
+/// Pointer wrapper letting disjoint row panels of one output buffer be
+/// written from the thread pool (shared by the dense/CSR/BSR parallel
+/// kernels). SAFETY contract for users: each worker may write only
+/// through ranges that no other worker touches.
+pub(crate) struct SendPtr(pub(crate) *mut f32);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+impl SendPtr {
+    /// Method (not field) access so closures capture the whole wrapper,
+    /// keeping the Sync impl in play under disjoint-capture rules.
+    pub(crate) fn get(&self) -> *mut f32 {
+        self.0
+    }
+}
 
 /// Fused epilogue applied to a GEMM/conv output tile while it is hot:
 /// out = act(out * scale[n] + shift[n]) — folded BatchNorm or bias.
@@ -33,6 +61,22 @@ impl Epilogue {
             shift,
             relu_max: if relu6 { Some(6.0) } else { None },
             relu,
+        }
+    }
+
+    /// Reorder the per-channel parameters to match a column permutation
+    /// of the weight matrix (`perm[new] = old`), so a kernel running on
+    /// column-reordered weights applies each channel's own affine (see
+    /// [`crate::compress::reorder`]).
+    pub fn permute_channels(&self, perm: &[u32]) -> Epilogue {
+        match self {
+            Epilogue::None => Epilogue::None,
+            Epilogue::Affine { scale, shift, relu_max, relu } => Epilogue::Affine {
+                scale: perm.iter().map(|&o| scale[o as usize]).collect(),
+                shift: perm.iter().map(|&o| shift[o as usize]).collect(),
+                relu_max: *relu_max,
+                relu: *relu,
+            },
         }
     }
 

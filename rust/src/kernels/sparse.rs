@@ -5,7 +5,7 @@
 //! lets the kernel stream A columns and scatter into C rows with the
 //! same register blocking as the dense micro-kernel.
 
-use super::Epilogue;
+use super::{Epilogue, SendPtr, PARALLEL_M_CUTOVER};
 use crate::compress::csr::CsrMatrix;
 use crate::util::pool;
 
@@ -60,22 +60,24 @@ fn csr_gemm_rows(a: &[f32], w: &CsrMatrix, c: &mut [f32], m0: usize, m1: usize, 
     }
 }
 
-struct SendPtr(*mut f32);
-unsafe impl Send for SendPtr {}
-unsafe impl Sync for SendPtr {}
-impl SendPtr {
-    /// Method (not field) access so closures capture the whole wrapper,
-    /// keeping the Sync impl in play under disjoint-capture rules.
-    fn get(&self) -> *mut f32 {
-        self.0
-    }
+/// Multithreaded CSR GEMM over disjoint row panels, default cutover.
+pub fn csr_gemm_parallel(a: &[f32], w: &CsrMatrix, c: &mut [f32], m: usize, epilogue: &Epilogue) {
+    csr_gemm_parallel_cutover(a, w, c, m, epilogue, PARALLEL_M_CUTOVER);
 }
 
-/// Multithreaded CSR GEMM over disjoint row panels.
-pub fn csr_gemm_parallel(a: &[f32], w: &CsrMatrix, c: &mut [f32], m: usize, epilogue: &Epilogue) {
+/// Multithreaded CSR GEMM with a caller-chosen serial cutover (the
+/// planner's per-layer override; see [`PARALLEL_M_CUTOVER`]).
+pub fn csr_gemm_parallel_cutover(
+    a: &[f32],
+    w: &CsrMatrix,
+    c: &mut [f32],
+    m: usize,
+    epilogue: &Epilogue,
+    cutover: usize,
+) {
     let (k, n) = (w.rows, w.cols);
     let threads = pool::global().size().min(m.div_ceil(64)).max(1);
-    if threads <= 1 || m < 128 {
+    if threads <= 1 || m < cutover {
         return csr_gemm(a, w, c, m, epilogue);
     }
     let chunk = m.div_ceil(threads);

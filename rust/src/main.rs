@@ -5,8 +5,10 @@
 //! cadnn table2                              regenerate Table 2
 //! cadnn compress [--report PATH]            §3 compression claims
 //! cadnn tune [--model NAME]                 optimization-parameter selection demo
+//! cadnn plan [--model NAME] [--format auto|csr|bsr] [--measured]
+//!                                           per-layer sparse-format plan
 //! cadnn serve [--model M] [--variant V] [--requests N] [--rps R] [--native]
-//!                                           serve a Poisson trace and report
+//!             [--format auto|csr|bsr]       serve a Poisson trace and report
 //!                                           (--native: no artifacts needed —
 //!                                           batcher over the native engine)
 //! cadnn calibrate                           host kernel calibration table
@@ -21,6 +23,7 @@ use cadnn::coordinator::{BatchPolicy, BatcherConfig, Coordinator, CoordinatorCon
 use cadnn::costmodel::calibrate;
 use cadnn::exec::Personality;
 use cadnn::models;
+use cadnn::planner::FormatPolicy;
 use cadnn::util::json::Json;
 use cadnn::util::rng::Rng;
 
@@ -32,6 +35,15 @@ fn opt(args: &[String], name: &str) -> Option<String> {
     args.iter().position(|a| a == name).and_then(|i| args.get(i + 1).cloned())
 }
 
+fn format_policy(args: &[String]) -> Result<FormatPolicy> {
+    match opt(args, "--format").as_deref() {
+        None | Some("auto") => Ok(FormatPolicy::Auto),
+        Some("csr") => Ok(FormatPolicy::Csr),
+        Some("bsr") => Ok(FormatPolicy::Bsr),
+        Some(other) => Err(anyhow!("unknown --format '{other}' (auto|csr|bsr)")),
+    }
+}
+
 fn main() -> Result<()> {
     cadnn::util::log::init();
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -40,16 +52,59 @@ fn main() -> Result<()> {
         Some("table2") => cmd_table2(),
         Some("compress") => cmd_compress(&args),
         Some("tune") => cmd_tune(&args),
+        Some("plan") => cmd_plan(&args),
         Some("serve") => cmd_serve(&args),
         Some("profile") => cmd_profile(&args),
         Some("calibrate") => cmd_calibrate(),
         _ => {
             eprintln!(
-                "usage: cadnn <figure2|table2|compress|tune|serve|profile|calibrate> [options]"
+                "usage: cadnn <figure2|table2|compress|tune|plan|serve|profile|calibrate> [options]"
             );
             Ok(())
         }
     }
+}
+
+/// Per-layer sparse-format plan for a model under the paper profile —
+/// the planner subsystem's front door.
+fn cmd_plan(args: &[String]) -> Result<()> {
+    let model = opt(args, "--model").unwrap_or_else(|| "resnet50".into());
+    let policy = format_policy(args)?;
+    let g = models::build(&model, 1).ok_or_else(|| anyhow!("unknown model {model}"))?;
+    let profile = paper_profile(&g);
+    let mut builder = Engine::native(&model)
+        .personality(Personality::CadnnSparse)
+        .sparsity_profile(profile.clone())
+        .sparse_format(policy);
+    if flag(args, "--measured") {
+        eprintln!("measuring candidate kernels per layer (tuner mode)...");
+        builder = builder.tuned(true);
+    }
+    let engine = builder.build()?;
+    let inst = engine
+        .native_backend()
+        .and_then(|b| b.instance(1))
+        .ok_or_else(|| anyhow!("planning needs a native batch-1 instance"))?;
+    let mut rows = Vec::new();
+    for (name, lp) in &inst.plan.layers {
+        rows.push(vec![
+            name.clone(),
+            format!("{:.1}%", 100.0 * profile.get(name)),
+            lp.format.label(),
+            if lp.reorder { "yes" } else { "-" }.to_string(),
+            format!("{}", lp.parallel_cutover),
+        ]);
+    }
+    println!("sparse-format plan for {model} ({:?} policy)\n", policy);
+    print_table(&["layer", "sparsity", "format", "reorder", "cutover"], &rows);
+    let counts: Vec<String> = inst
+        .plan
+        .format_counts()
+        .iter()
+        .map(|(f, c)| format!("{f} x{c}"))
+        .collect();
+    println!("\n{} pruned layers planned: {}", inst.plan.len(), counts.join(", "));
+    Ok(())
 }
 
 fn cmd_figure2(args: &[String]) -> Result<()> {
@@ -223,12 +278,18 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             .into_iter()
             .filter(|&b| b <= batcher.max_batch.max(1))
             .collect();
+        let policy = format_policy(args)?;
+        if opt(args, "--format").is_some() && !personality.sparse() {
+            return Err(anyhow!("--format applies to the sparse variant only"));
+        }
         let mut builder = Engine::native(&model)
             .personality(personality)
             .batch_sizes(&sizes);
         if personality.sparse() {
             let g = models::build(&model, 1).ok_or_else(|| anyhow!("unknown model {model}"))?;
-            builder = builder.sparsity_profile(paper_profile(&g));
+            builder = builder
+                .sparsity_profile(paper_profile(&g))
+                .sparse_format(policy);
         }
         let engine = builder.build()?;
         println!(
@@ -283,10 +344,16 @@ fn cmd_profile(args: &[String]) -> Result<()> {
         _ => Personality::CadnnDense,
     };
     let top: usize = opt(args, "--top").and_then(|s| s.parse().ok()).unwrap_or(15);
+    let policy = format_policy(args)?;
+    if opt(args, "--format").is_some() && !personality.sparse() {
+        return Err(anyhow!("--format requires --personality cadnn-sparse"));
+    }
     let mut builder = Engine::native(&model).personality(personality);
     if personality.sparse() {
         let g = models::build(&model, 1).ok_or_else(|| anyhow!("unknown model {model}"))?;
-        builder = builder.sparsity_profile(paper_profile(&g));
+        builder = builder
+            .sparsity_profile(paper_profile(&g))
+            .sparse_format(policy);
     }
     let engine = builder.build()?;
     let inst = engine

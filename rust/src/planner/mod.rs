@@ -1,0 +1,547 @@
+//! Per-layer sparse-format execution planning.
+//!
+//! Compression only pays when the executor can exploit it: an 80%-pruned
+//! layer in scalar CSR can still lose to the dense blocked micro-kernel,
+//! and a block format only wins when the nonzeros actually cluster. The
+//! planner closes that loop. Given a pruned layer (its [`CsrMatrix`],
+//! GEMM row count and HWIO weight shape) and a [`FormatPolicy`], it
+//! chooses Dense / CSR / BSR{br,bc} — plus whether filter-kernel
+//! reordering ([`crate::compress::reorder`]) is worth carrying and which
+//! serial→parallel cutover the kernels should use — and records every
+//! choice in an [`ExecPlan`] that the executor dispatches on and the
+//! artifact manifest serializes.
+//!
+//! Two modes, mirroring the tuner's split:
+//! - **heuristic** ([`choose`]): a relative cost model over exact fill
+//!   counts (no densification, no timing) — the default, used at every
+//!   instance build;
+//! - **measured** ([`choose_measured`]): the heuristic shortlist timed
+//!   with the real kernels on the layer's own shape, the same
+//!   micro-benchmark loop the tile tuner runs — enabled with the tuner
+//!   (`EngineBuilder::tuned(true)`).
+//!
+//! The cost constants are relative per-value costs calibrated against
+//! this crate's kernels (see `docs/FORMATS.md` for the derivation and
+//! `benches/bench_sparse_formats.rs` for the regeneration harness).
+
+use crate::compress::bsr;
+use crate::compress::bsr::BsrMatrix;
+use crate::compress::csr::CsrMatrix;
+use crate::compress::reorder;
+use crate::kernels::{Epilogue, PARALLEL_M_CUTOVER};
+use crate::passes::layout::TileConfig;
+use crate::util::json::{obj, Json};
+use crate::util::stats;
+use std::collections::BTreeMap;
+
+/// How a layer's weights are stored and which kernel runs it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SparseFormat {
+    /// Dense matrix + blocked GEMM (pruned zeros rematerialized).
+    Dense,
+    /// Element-granular CSR + scalar-indexed kernel.
+    Csr,
+    /// Block-CSR with (br x bc) blocks + register-blocked kernel.
+    Bsr { br: usize, bc: usize },
+}
+
+impl SparseFormat {
+    /// Stable textual name (`dense`, `csr`, `bsr4x1`, ...) — the manifest
+    /// encoding.
+    pub fn label(&self) -> String {
+        match self {
+            SparseFormat::Dense => "dense".to_string(),
+            SparseFormat::Csr => "csr".to_string(),
+            SparseFormat::Bsr { br, bc } => format!("bsr{br}x{bc}"),
+        }
+    }
+
+    /// Inverse of [`SparseFormat::label`].
+    pub fn parse(s: &str) -> Option<SparseFormat> {
+        match s {
+            "dense" => Some(SparseFormat::Dense),
+            "csr" => Some(SparseFormat::Csr),
+            _ => {
+                let rest = s.strip_prefix("bsr")?;
+                let (a, b) = rest.split_once('x')?;
+                let (br, bc) = (a.parse().ok()?, b.parse().ok()?);
+                if br == 0 || bc == 0 {
+                    return None;
+                }
+                Some(SparseFormat::Bsr { br, bc })
+            }
+        }
+    }
+}
+
+/// User-facing format policy (`EngineBuilder::sparse_format`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum FormatPolicy {
+    /// Planner decides per layer (never knowingly worse than CSR).
+    #[default]
+    Auto,
+    /// Pin every pruned layer to element-granular CSR (the pre-planner
+    /// behavior).
+    Csr,
+    /// Pin every pruned layer to the best-filling BSR block shape.
+    Bsr,
+}
+
+/// One layer's execution decision.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LayerPlan {
+    pub format: SparseFormat,
+    /// Carry a filter-kernel column permutation with the weights.
+    pub reorder: bool,
+    /// Serial→parallel row cutover for this layer's kernel.
+    pub parallel_cutover: usize,
+}
+
+impl LayerPlan {
+    /// The CSR-only baseline plan (pre-planner behavior).
+    pub fn csr() -> LayerPlan {
+        LayerPlan {
+            format: SparseFormat::Csr,
+            reorder: false,
+            parallel_cutover: PARALLEL_M_CUTOVER,
+        }
+    }
+
+    fn with_format(format: SparseFormat, reorder: bool) -> LayerPlan {
+        LayerPlan { format, reorder, parallel_cutover: PARALLEL_M_CUTOVER }
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("format", Json::Str(self.format.label())),
+            ("reorder", Json::Bool(self.reorder)),
+            ("cutover", Json::Num(self.parallel_cutover as f64)),
+        ])
+    }
+
+    /// Missing optional fields default (reorder=false, cutover=default);
+    /// an unknown format string rejects the whole plan.
+    pub fn from_json(j: &Json) -> Option<LayerPlan> {
+        let format = SparseFormat::parse(j.get("format")?.as_str()?)?;
+        Some(LayerPlan {
+            format,
+            reorder: j.get("reorder").and_then(|v| v.as_bool()).unwrap_or(false),
+            parallel_cutover: j
+                .get("cutover")
+                .and_then(|v| v.as_usize())
+                .unwrap_or(PARALLEL_M_CUTOVER),
+        })
+    }
+}
+
+/// The whole model's per-layer decisions, keyed by layer name. Emitted by
+/// `ModelInstance::build_planned`, serialized into the artifact manifest
+/// (`runtime::manifest`), surfaced by `cadnn plan`.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ExecPlan {
+    pub layers: BTreeMap<String, LayerPlan>,
+}
+
+impl ExecPlan {
+    pub fn get(&self, layer: &str) -> Option<&LayerPlan> {
+        self.layers.get(layer)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.layers.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// format label -> how many layers chose it (CLI summary).
+    pub fn format_counts(&self) -> BTreeMap<String, usize> {
+        let mut out = BTreeMap::new();
+        for lp in self.layers.values() {
+            *out.entry(lp.format.label()).or_insert(0) += 1;
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        let layers: Vec<(String, Json)> = self
+            .layers
+            .iter()
+            .map(|(name, lp)| (name.clone(), lp.to_json()))
+            .collect();
+        Json::Obj(vec![("layers".to_string(), Json::Obj(layers))])
+    }
+
+    /// `None` on anything malformed — callers treat that as "no plan"
+    /// (the old-manifest fallback).
+    pub fn from_json(j: &Json) -> Option<ExecPlan> {
+        let Json::Obj(kv) = j.get("layers")? else {
+            return None;
+        };
+        let mut layers = BTreeMap::new();
+        for (name, v) in kv {
+            layers.insert(name.clone(), LayerPlan::from_json(v)?);
+        }
+        Some(ExecPlan { layers })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Relative cost model (heuristic mode)
+//
+// Unit: the cost of one CSR stored value (one indexed scalar FMA with a
+// scattered accumulate) = 1.0. The others are per-value throughput ratios
+// measured against this crate's kernels on the bench harness's
+// ResNet-50 shapes; regenerate with `cargo bench --bench
+// bench_sparse_formats` and see docs/FORMATS.md before retuning.
+// ---------------------------------------------------------------------------
+
+/// Dense blocked GEMM cost per MAC (register-tiled, load-hoisted; ~6-8x
+/// the per-value throughput of the scalar CSR kernel).
+pub const COST_DENSE_MAC: f64 = 0.15;
+/// CSR cost per stored value — the unit.
+pub const COST_CSR_NNZ: f64 = 1.0;
+/// BSR 4x1 cost per stored value (one index per 4 values, contiguous
+/// reduction run, still scalar-width output).
+pub const COST_BSR_4X1: f64 = 0.55;
+/// BSR 4x4 cost per stored value (one index per 16 values, 4-wide
+/// vectorizable accumulator strip).
+pub const COST_BSR_4X4: f64 = 0.30;
+/// A non-CSR format must beat the CSR estimate by this factor before
+/// Auto switches away from the baseline (GEMM-shaped layers).
+pub const AUTO_SWITCH_MARGIN: f64 = 0.85;
+/// Stricter margin for spatial (im2col) convolutions, whose activation
+/// panels make the estimates noisier.
+pub const SPATIAL_SWITCH_MARGIN: f64 = 0.75;
+/// Reordering must cut the stored-block count by at least this factor
+/// before the plan carries a permutation (the output scatter isn't free).
+pub const REORDER_MIN_GAIN: f64 = 0.90;
+
+/// Block shapes Auto considers, with their per-stored-value costs.
+pub const BSR_CANDIDATES: [(usize, usize, f64); 2] =
+    [(4, 1, COST_BSR_4X1), (4, 4, COST_BSR_4X4)];
+
+/// (block count, reorder worthwhile) for one candidate block shape.
+fn blocks_for(csr: &CsrMatrix, br: usize, bc: usize) -> (usize, bool) {
+    let plain = bsr::count_blocks(csr, br, bc);
+    if bc <= 1 || plain == 0 {
+        return (plain, false);
+    }
+    let perm = reorder::cluster_columns_csr(csr, br);
+    let mapped = bsr::count_blocks_mapped(csr, br, bc, &perm.inverse().perm);
+    if (mapped as f64) < plain as f64 * REORDER_MIN_GAIN {
+        (mapped, true)
+    } else {
+        (plain, false)
+    }
+}
+
+/// Heuristic per-layer format choice. `m` is the GEMM row count the layer
+/// runs at (batch * output pixels); `hwio` is the conv weight shape
+/// `[kh, kw, cin, cout]` — spatial kernels (kh*kw > 1) run through
+/// im2col, so Auto demands a stricter win before leaving the CSR
+/// baseline for those.
+pub fn choose(policy: FormatPolicy, csr: &CsrMatrix, m: usize, hwio: [usize; 4]) -> LayerPlan {
+    debug_assert_eq!(csr.rows, hwio[0] * hwio[1] * hwio[2], "hwio inconsistent with K");
+    debug_assert_eq!(csr.cols, hwio[3], "hwio inconsistent with N");
+    match policy {
+        FormatPolicy::Csr => LayerPlan::csr(),
+        FormatPolicy::Bsr => {
+            // best-filling candidate, fill traded by per-value cost
+            let mut best = None;
+            for (br, bc, cost) in BSR_CANDIDATES {
+                let (blocks, reorder_on) = blocks_for(csr, br, bc);
+                let est = (blocks * br * bc) as f64 * cost;
+                if best.as_ref().map(|(e, _)| est < *e).unwrap_or(true) {
+                    best = Some((
+                        est,
+                        LayerPlan::with_format(SparseFormat::Bsr { br, bc }, reorder_on),
+                    ));
+                }
+            }
+            best.map(|(_, lp)| lp).unwrap_or_else(LayerPlan::csr)
+        }
+        FormatPolicy::Auto => {
+            let nnz = csr.nnz();
+            if nnz == 0 {
+                return LayerPlan::csr();
+            }
+            let mf = m.max(1) as f64;
+            let est_csr = mf * nnz as f64 * COST_CSR_NNZ;
+            let spatial = hwio[0] * hwio[1] > 1;
+            let margin = if spatial { SPATIAL_SWITCH_MARGIN } else { AUTO_SWITCH_MARGIN };
+            // a challenger must beat the *discounted* CSR estimate; after
+            // that, challengers compete on raw estimates
+            let mut best = LayerPlan::csr();
+            let mut best_est = est_csr * margin;
+            let est_dense = mf * (csr.rows * csr.cols) as f64 * COST_DENSE_MAC;
+            if est_dense < best_est {
+                best = LayerPlan::with_format(SparseFormat::Dense, false);
+                best_est = est_dense;
+            }
+            for (br, bc, cost) in BSR_CANDIDATES {
+                let (blocks, reorder_on) = blocks_for(csr, br, bc);
+                let est = mf * (blocks * br * bc) as f64 * cost;
+                if est < best_est {
+                    best = LayerPlan::with_format(SparseFormat::Bsr { br, bc }, reorder_on);
+                    best_est = est;
+                }
+            }
+            best
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Measured refinement (tuner mode)
+// ---------------------------------------------------------------------------
+
+/// Approximate thread-pool dispatch overhead (µs) used to refine the
+/// serial→parallel cutover from a measured serial time.
+pub const PARALLEL_DISPATCH_US: f64 = 30.0;
+
+/// Rows measured per candidate (capped so tuning a ResNet-50 stays in
+/// the same budget class as the tile tuner).
+const MEASURE_M_CAP: usize = 256;
+/// Per-candidate measurement budget (µs), matching the tile tuner's
+/// adaptive loop scale.
+const MEASURE_BUDGET_US: f64 = 2_000.0;
+
+fn measure_us<F: FnMut()>(f: F) -> f64 {
+    let samples = stats::measure_adaptive_us(MEASURE_BUDGET_US, 6, f);
+    stats::Summary::from(&samples).map(|s| s.p50).unwrap_or(f64::MAX)
+}
+
+/// Measured per-layer choice: time the heuristic shortlist (CSR, dense,
+/// both BSR candidates) with the real serial kernels on the layer's own
+/// weights, then pick the winner — CSR keeps ties. Also refines the
+/// layer's parallel cutover from the measured per-row cost: cheap layers
+/// need more rows before the pool dispatch amortizes.
+pub fn choose_measured(
+    policy: FormatPolicy,
+    csr: &CsrMatrix,
+    m: usize,
+    hwio: [usize; 4],
+    seed: u64,
+) -> LayerPlan {
+    if policy != FormatPolicy::Auto {
+        return choose(policy, csr, m, hwio);
+    }
+    let (k, n) = (csr.rows, csr.cols);
+    if csr.nnz() == 0 || k == 0 || n == 0 {
+        return LayerPlan::csr();
+    }
+    let mm = m.clamp(1, MEASURE_M_CAP);
+    let mut rng = crate::util::rng::Rng::new(seed);
+    let mut a = vec![0.0f32; mm * k];
+    rng.fill_normal(&mut a, 0.5);
+    let mut c = vec![0.0f32; mm * n];
+
+    let t_csr = measure_us(|| {
+        crate::kernels::sparse::csr_gemm(&a, csr, &mut c, mm, &Epilogue::None);
+    });
+    let mut best = LayerPlan::csr();
+    let mut best_us = t_csr * 0.98; // CSR keeps ties
+
+    let dense = csr.to_dense();
+    let t_dense = measure_us(|| {
+        crate::kernels::gemm::gemm_blocked(
+            &a,
+            &dense,
+            &mut c,
+            mm,
+            k,
+            n,
+            &TileConfig::DEFAULT,
+            &Epilogue::None,
+        );
+    });
+    if t_dense < best_us {
+        best = LayerPlan::with_format(SparseFormat::Dense, false);
+        best_us = t_dense;
+    }
+
+    for (br, bc, _) in BSR_CANDIDATES {
+        let (_, reorder_on) = blocks_for(csr, br, bc);
+        let mat = if reorder_on {
+            let perm = reorder::cluster_columns_csr(csr, br);
+            let permuted = reorder::permute_cols(&dense, k, n, &perm);
+            BsrMatrix::from_dense(&permuted, k, n, br, bc)
+        } else {
+            BsrMatrix::from_dense(&dense, k, n, br, bc)
+        };
+        let t = measure_us(|| {
+            crate::kernels::bsr::bsr_gemm(&a, &mat, &mut c, mm, &Epilogue::None);
+        });
+        if t < best_us {
+            best = LayerPlan::with_format(SparseFormat::Bsr { br, bc }, reorder_on);
+            best_us = t;
+        }
+    }
+
+    // cutover refinement: rows needed before the pool dispatch amortizes
+    // to <50% overhead at the measured per-row cost
+    let per_row_us = (best_us.max(1e-3)) / mm as f64;
+    let amortize_rows = (2.0 * PARALLEL_DISPATCH_US / per_row_us).ceil() as usize;
+    best.parallel_cutover = amortize_rows.max(PARALLEL_M_CUTOVER);
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_csr(k: usize, n: usize, density: f64, seed: u64) -> CsrMatrix {
+        let mut rng = Rng::new(seed);
+        let mut dense = vec![0.0f32; k * n];
+        for v in dense.iter_mut() {
+            if rng.f64() < density {
+                *v = rng.normal() as f32;
+            }
+        }
+        CsrMatrix::from_dense(&dense, k, n)
+    }
+
+    /// Whole (br x bc)-aligned blocks survive, everything else pruned —
+    /// the structured sparsity BSR exists for.
+    fn block_structured_csr(
+        k: usize,
+        n: usize,
+        br: usize,
+        bc: usize,
+        keep: f64,
+        seed: u64,
+    ) -> CsrMatrix {
+        let mut rng = Rng::new(seed);
+        let mut dense = vec![0.0f32; k * n];
+        for b in 0..k.div_ceil(br) {
+            for j in 0..n.div_ceil(bc) {
+                if rng.f64() >= keep {
+                    continue;
+                }
+                for p in 0..br.min(k - b * br) {
+                    for x in 0..bc.min(n - j * bc) {
+                        dense[(b * br + p) * n + j * bc + x] = rng.normal() as f32;
+                    }
+                }
+            }
+        }
+        CsrMatrix::from_dense(&dense, k, n)
+    }
+
+    fn gemm_hwio(k: usize, n: usize) -> [usize; 4] {
+        [1, 1, k, n]
+    }
+
+    #[test]
+    fn format_labels_roundtrip() {
+        for f in [
+            SparseFormat::Dense,
+            SparseFormat::Csr,
+            SparseFormat::Bsr { br: 4, bc: 1 },
+            SparseFormat::Bsr { br: 4, bc: 4 },
+        ] {
+            assert_eq!(SparseFormat::parse(&f.label()), Some(f));
+        }
+        assert_eq!(SparseFormat::parse("bsrXxY"), None);
+        assert_eq!(SparseFormat::parse("bsr0x4"), None);
+        assert_eq!(SparseFormat::parse("coo"), None);
+    }
+
+    #[test]
+    fn auto_keeps_csr_on_scattered_low_density() {
+        let csr = random_csr(128, 64, 0.08, 1);
+        let lp = choose(FormatPolicy::Auto, &csr, 196, gemm_hwio(128, 64));
+        assert_eq!(lp.format, SparseFormat::Csr, "{lp:?}");
+    }
+
+    #[test]
+    fn auto_goes_dense_when_pruning_is_shallow() {
+        let csr = random_csr(128, 64, 0.6, 2);
+        let lp = choose(FormatPolicy::Auto, &csr, 196, gemm_hwio(128, 64));
+        assert_eq!(lp.format, SparseFormat::Dense, "{lp:?}");
+    }
+
+    #[test]
+    fn auto_picks_bsr_on_block_structure() {
+        let csr = block_structured_csr(128, 64, 4, 4, 0.3, 3);
+        let lp = choose(FormatPolicy::Auto, &csr, 196, gemm_hwio(128, 64));
+        assert!(
+            matches!(lp.format, SparseFormat::Bsr { .. }),
+            "block-aligned sparsity must choose BSR, got {lp:?}"
+        );
+    }
+
+    #[test]
+    fn policies_pin_formats() {
+        let csr = random_csr(64, 32, 0.1, 4);
+        let hwio = gemm_hwio(64, 32);
+        assert_eq!(choose(FormatPolicy::Csr, &csr, 64, hwio).format, SparseFormat::Csr);
+        assert!(matches!(
+            choose(FormatPolicy::Bsr, &csr, 64, hwio).format,
+            SparseFormat::Bsr { .. }
+        ));
+    }
+
+    #[test]
+    fn spatial_layers_need_a_bigger_win() {
+        // density between the GEMM boundary (COST_DENSE_MAC / 0.85 =
+        // 0.176) and the spatial boundary (0.15 / 0.75 = 0.20): a 1x1
+        // (GEMM) layer flips to Dense, the same matrix as a 3x3 conv
+        // stays CSR
+        let csr = random_csr(288, 128, 0.19, 5);
+        let gemm = choose(FormatPolicy::Auto, &csr, 196, [1, 1, 288, 128]);
+        let conv = choose(FormatPolicy::Auto, &csr, 196, [3, 3, 32, 128]);
+        assert_eq!(gemm.format, SparseFormat::Dense, "{gemm:?}");
+        assert_eq!(conv.format, SparseFormat::Csr, "{conv:?}");
+    }
+
+    #[test]
+    fn exec_plan_json_roundtrip() {
+        let mut plan = ExecPlan::default();
+        plan.layers.insert("c1".into(), LayerPlan::csr());
+        plan.layers.insert(
+            "c2".into(),
+            LayerPlan {
+                format: SparseFormat::Bsr { br: 4, bc: 4 },
+                reorder: true,
+                parallel_cutover: 256,
+            },
+        );
+        let text = plan.to_json().to_string_pretty();
+        let parsed = ExecPlan::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(parsed, plan);
+    }
+
+    #[test]
+    fn malformed_plan_json_is_none() {
+        for src in [
+            r#"{"no_layers": {}}"#,
+            r#"{"layers": {"c1": {"format": "coo"}}}"#,
+            r#"{"layers": {"c1": {}}}"#,
+        ] {
+            let j = Json::parse(src).unwrap();
+            assert!(ExecPlan::from_json(&j).is_none(), "{src}");
+        }
+        // defaults fill in optional fields
+        let j = Json::parse(r#"{"layers": {"c1": {"format": "bsr4x1"}}}"#).unwrap();
+        let p = ExecPlan::from_json(&j).unwrap();
+        let lp = p.get("c1").unwrap();
+        assert_eq!(lp.format, SparseFormat::Bsr { br: 4, bc: 1 });
+        assert!(!lp.reorder);
+        assert_eq!(lp.parallel_cutover, PARALLEL_M_CUTOVER);
+    }
+
+    #[test]
+    fn measured_mode_returns_a_shortlist_member() {
+        let csr = random_csr(48, 24, 0.25, 7);
+        let lp = choose_measured(FormatPolicy::Auto, &csr, 64, gemm_hwio(48, 24), 11);
+        assert!(lp.parallel_cutover >= PARALLEL_M_CUTOVER);
+        assert!(matches!(
+            lp.format,
+            SparseFormat::Csr | SparseFormat::Dense | SparseFormat::Bsr { .. }
+        ));
+    }
+}

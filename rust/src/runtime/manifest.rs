@@ -1,6 +1,13 @@
 //! artifacts/manifest.json schema (written by python/compile/aot.py).
+//!
+//! Format 1 entries may carry an optional `exec_plan` — the per-layer
+//! sparse-format decisions a [`crate::planner::ExecPlan`] serializes —
+//! so a deployed artifact pins the formats it was validated with.
+//! Manifests written before the planner existed (or with a malformed
+//! plan) simply load with `exec_plan: None` and the runtime replans.
 
-use crate::util::json::Json;
+use crate::planner::ExecPlan;
+use crate::util::json::{obj, Json};
 use anyhow::{anyhow, Result};
 
 #[derive(Debug, Clone, PartialEq)]
@@ -13,6 +20,9 @@ pub struct ManifestEntry {
     pub classes: usize,
     pub accuracy: f64,
     pub compression_rate: f64,
+    /// Planned per-layer formats; `None` for old manifests (pre-planner)
+    /// or dense variants.
+    pub exec_plan: Option<ExecPlan>,
 }
 
 #[derive(Debug, Clone, Default)]
@@ -63,9 +73,39 @@ impl Manifest {
                     .get("compression_rate")
                     .and_then(|v| v.as_f64())
                     .unwrap_or(1.0),
+                exec_plan: m.get("exec_plan").and_then(ExecPlan::from_json),
             });
         }
         Ok(Manifest { models })
+    }
+
+    /// Serialize back to the format-1 JSON [`Manifest::parse`] accepts
+    /// (entries with a plan carry `exec_plan`; entries without omit it).
+    pub fn to_json(&self) -> Json {
+        let models: Vec<Json> = self
+            .models
+            .iter()
+            .map(|e| {
+                let mut kv = vec![
+                    ("name", Json::Str(e.name.clone())),
+                    ("variant", Json::Str(e.variant.clone())),
+                    ("batch", Json::Num(e.batch as f64)),
+                    ("path", Json::Str(e.path.clone())),
+                    (
+                        "input_shape",
+                        Json::Arr(e.input_shape.iter().map(|&v| Json::Num(v as f64)).collect()),
+                    ),
+                    ("classes", Json::Num(e.classes as f64)),
+                    ("accuracy", Json::Num(e.accuracy)),
+                    ("compression_rate", Json::Num(e.compression_rate)),
+                ];
+                if let Some(plan) = &e.exec_plan {
+                    kv.push(("exec_plan", plan.to_json()));
+                }
+                obj(kv)
+            })
+            .collect();
+        obj(vec![("format", Json::Num(1.0)), ("models", Json::Arr(models))])
     }
 
     /// Distinct (name, variant) pairs.
@@ -168,6 +208,44 @@ mod tests {
                 .unwrap_or_else(|| panic!("entry without {missing} must be rejected"));
             assert!(e.to_string().contains(missing), "{missing}: {e}");
         }
+    }
+
+    #[test]
+    fn old_manifest_without_plan_still_loads() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert!(m.models.iter().all(|e| e.exec_plan.is_none()));
+    }
+
+    #[test]
+    fn exec_plan_round_trips_through_json() {
+        use crate::planner::{LayerPlan, SparseFormat};
+        let mut plan = ExecPlan::default();
+        plan.layers.insert("c1".into(), LayerPlan::csr());
+        plan.layers.insert(
+            "f1".into(),
+            LayerPlan {
+                format: SparseFormat::Bsr { br: 4, bc: 4 },
+                reorder: true,
+                parallel_cutover: 192,
+            },
+        );
+        let mut m = Manifest::parse(SAMPLE).unwrap();
+        m.models[1].exec_plan = Some(plan.clone());
+        let text = m.to_json().to_string_pretty();
+        let back = Manifest::parse(&text).unwrap();
+        assert_eq!(back.models, m.models);
+        assert_eq!(back.models[1].exec_plan.as_ref(), Some(&plan));
+        assert!(back.models[0].exec_plan.is_none());
+    }
+
+    #[test]
+    fn malformed_plan_degrades_to_none() {
+        // an unknown format label must not fail the whole manifest — the
+        // entry loads planless and the runtime replans
+        let entry = r#"{"name": "m", "batch": 1, "path": "p", "input_shape": [1, 2],
+                        "exec_plan": {"layers": {"c1": {"format": "coo"}}}}"#;
+        let m = Manifest::parse(&wrap(entry)).unwrap();
+        assert!(m.models[0].exec_plan.is_none());
     }
 
     #[test]

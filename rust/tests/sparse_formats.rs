@@ -1,0 +1,125 @@
+//! End-to-end coverage of the sparse-format subsystem through the public
+//! API: format policies compute the same function, the planner's Auto
+//! mode respects the CSR baseline on scattered sparsity, and exec plans
+//! survive the manifest.
+
+use cadnn::api::Engine;
+use cadnn::compress::bsr::BsrMatrix;
+use cadnn::compress::csr::CsrMatrix;
+use cadnn::compress::profile::SparsityProfile;
+use cadnn::exec::Personality;
+use cadnn::ir::ops::{ActKind, Op};
+use cadnn::ir::{Graph, Shape};
+use cadnn::planner::{choose, ExecPlan, FormatPolicy, LayerPlan, SparseFormat};
+use cadnn::runtime::Manifest;
+use cadnn::util::rng::Rng;
+
+fn conv_stack() -> Graph {
+    let relu = || Op::Activation { kind: ActKind::Relu };
+    let mut g = Graph::new("formats_e2e", Shape::nhwc(1, 10, 10, 4));
+    let c1 = g.add("c1", Op::conv(3, 3, 4, 32, 1, 1), vec![0]);
+    let b1 = g.add("c1_bn", Op::BatchNorm { c: 32 }, vec![c1]);
+    let r1 = g.add("c1_relu", relu(), vec![b1]);
+    let c2 = g.add("c2", Op::conv(1, 1, 32, 32, 1, 0), vec![r1]);
+    let b2 = g.add("c2_bn", Op::BatchNorm { c: 32 }, vec![c2]);
+    let r2 = g.add("c2_relu", relu(), vec![b2]);
+    let p = g.add("gap", Op::GlobalAvgPool, vec![r2]);
+    g.add("fc", Op::fc(32, 8), vec![p]);
+    g.validate().unwrap();
+    g
+}
+
+fn engine_with(policy: FormatPolicy, sparsity: f64) -> Engine {
+    let g = conv_stack();
+    let profile = SparsityProfile::uniform(&g, sparsity);
+    Engine::from_graph(conv_stack())
+        .personality(Personality::CadnnSparse)
+        .sparsity_profile(profile)
+        .sparse_format(policy)
+        .build()
+        .unwrap()
+}
+
+fn image(len: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    let mut v = vec![0.0f32; len];
+    rng.fill_normal(&mut v, 0.5);
+    v
+}
+
+#[test]
+fn all_policies_compute_the_same_function() {
+    let csr = engine_with(FormatPolicy::Csr, 0.8);
+    let bsr = engine_with(FormatPolicy::Bsr, 0.8);
+    let auto = engine_with(FormatPolicy::Auto, 0.8);
+    let img = image(csr.input_len(), 1);
+    let a = csr.session().run(&img).unwrap();
+    let b = bsr.session().run(&img).unwrap();
+    let c = auto.session().run(&img).unwrap();
+    assert_eq!(a.len(), 8);
+    for i in 0..a.len() {
+        assert!((a[i] - b[i]).abs() < 1e-3, "csr vs bsr at {i}: {} vs {}", a[i], b[i]);
+        assert!((a[i] - c[i]).abs() < 1e-3, "csr vs auto at {i}: {} vs {}", a[i], c[i]);
+    }
+}
+
+#[test]
+fn auto_never_leaves_csr_for_scattered_deep_pruning() {
+    // magnitude pruning of generated weights scatters the support; at
+    // 92% sparsity the planner must keep every layer on the CSR baseline
+    let auto = engine_with(FormatPolicy::Auto, 0.92);
+    let inst = auto.native_backend().unwrap().instance(1).unwrap();
+    assert!(!inst.plan.is_empty());
+    for (name, lp) in &inst.plan.layers {
+        assert_eq!(lp.format, SparseFormat::Csr, "{name} left the baseline: {lp:?}");
+    }
+}
+
+#[test]
+fn planner_prefers_bsr_on_block_structured_weights() {
+    // whole 4x4 blocks at 30% density: fill ratio 1.0, BSR must win
+    let (k, n) = (64usize, 32usize);
+    let mut rng = Rng::new(7);
+    let mut dense = vec![0.0f32; k * n];
+    for b in 0..k / 4 {
+        for j in 0..n / 4 {
+            if rng.f64() >= 0.3 {
+                continue;
+            }
+            for p in 0..4 {
+                for x in 0..4 {
+                    dense[(b * 4 + p) * n + j * 4 + x] = rng.normal() as f32;
+                }
+            }
+        }
+    }
+    let csr = CsrMatrix::from_dense(&dense, k, n);
+    let lp = choose(FormatPolicy::Auto, &csr, 128, [1, 1, k, n]);
+    assert!(matches!(lp.format, SparseFormat::Bsr { .. }), "{lp:?}");
+    // and the chosen encoding really is padding-free
+    if let SparseFormat::Bsr { br, bc } = lp.format {
+        let bsr = BsrMatrix::from_dense(&dense, k, n, br, bc);
+        assert!(bsr.fill_ratio() > 0.99, "fill {}", bsr.fill_ratio());
+    }
+}
+
+#[test]
+fn exec_plan_survives_a_manifest_round_trip() {
+    let mut manifest = Manifest::parse(
+        r#"{"format": 1, "models": [
+            {"name": "m", "variant": "sparse", "batch": 1, "path": "p",
+             "input_shape": [1, 8, 8, 3]}
+        ]}"#,
+    )
+    .unwrap();
+    let mut plan = ExecPlan::default();
+    plan.layers.insert("c1".into(), LayerPlan::csr());
+    plan.layers.insert(
+        "c2".into(),
+        LayerPlan { format: SparseFormat::Bsr { br: 4, bc: 4 }, reorder: true, parallel_cutover: 256 },
+    );
+    manifest.models[0].exec_plan = Some(plan.clone());
+    let text = manifest.to_json().to_string_pretty();
+    let back = Manifest::parse(&text).unwrap();
+    assert_eq!(back.models[0].exec_plan.as_ref(), Some(&plan));
+}
