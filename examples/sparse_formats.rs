@@ -19,7 +19,9 @@ fn main() -> Result<()> {
     let g = models::build(&model, 1).ok_or_else(|| anyhow!("unknown model {model}"))?;
     let profile = paper_profile(&g);
 
-    for policy in [FormatPolicy::Auto, FormatPolicy::Csr, FormatPolicy::Bsr] {
+    for policy in
+        [FormatPolicy::Auto, FormatPolicy::Csr, FormatPolicy::Bsr, FormatPolicy::Pattern]
+    {
         let engine = Engine::native(&model)
             .personality(Personality::CadnnSparse)
             .sparsity_profile(profile.clone())

@@ -26,8 +26,17 @@ here:
 
 Projection granularity is selectable: ``element`` (the paper's
 non-structured pruning, used for the compression-rate accounting and the
-CPU/CSR execution path) or ``block`` (tile-level, feeding the TPU-adapted
-block-sparse kernel — DESIGN.md §Hardware-Adaptation).
+CPU/CSR execution path), ``block`` (whole (bk, bn) tiles of the (K, N)
+weight view, feeding the BSR execution path and the TPU-adapted
+block-sparse kernel — DESIGN.md §Hardware-Adaptation), or ``pattern``
+(PatDNN, Niu et al. 2020: each surviving kh x kw kernel keeps one of a
+small library of canonical ``entries``-position patterns, and whole
+low-energy kernels are *connectivity-pruned*; feeds the Rust
+``SparseFormat::Pattern`` execution path — docs/PIPELINE.md walks the
+full co-design end to end). The achieved per-layer density of the
+structured projections stays within 1% of the request (one tile /
+half a pattern of slack), and the exported profile records the
+structure label so the Rust planner can pick the matching format.
 """
 
 from __future__ import annotations
@@ -59,29 +68,122 @@ def project_prune_element(w: jnp.ndarray, sparsity: float) -> jnp.ndarray:
     return jnp.where(jnp.abs(w) >= thresh, w, 0.0)
 
 
+def _round_half_up(x: float) -> int:
+    """Half-away-from-zero rounding for non-negative x, matching Rust's
+    ``f64::round`` — python's banker's ``round`` would cut a different
+    support than the native-engine pruners at exact .5 boundaries."""
+    return int(np.floor(x + 0.5))
+
+
 def project_prune_block(
     w: jnp.ndarray, sparsity: float, bk: int, bn: int
 ) -> jnp.ndarray:
     """Tile-granular projection: rank (bk, bn) tiles of the (K, N) weight
-    matrix view by Frobenius norm; zero whole low-norm tiles."""
+    matrix view by Frobenius norm and keep whole tiles greedily until the
+    surviving *element* count reaches ``round(size * (1 - sparsity))``
+    (floor of one element: extreme sparsity keeps the single best tile,
+    like the element projection, never a zeroed layer). Edge tiles count
+    at their true (truncated) size, so the achieved density stays within
+    one tile of the request — the Rust planner's BSR cost model consumes
+    the profile without fallback."""
     if sparsity <= 0.0:
         return w
     shape = w.shape
-    mat = w.reshape(-1, shape[-1])
+    mat = np.asarray(w).reshape(-1, shape[-1])
     k, n = mat.shape
-    kp = -(-k // bk) * bk
-    np_ = -(-n // bn) * bn
-    mp = jnp.pad(mat, ((0, kp - k), (0, np_ - n)))
-    tiles = mp.reshape(kp // bk, bk, np_ // bn, bn)
-    norms = jnp.sqrt(jnp.sum(tiles**2, axis=(1, 3)))
-    nt = norms.size
-    keep = max(1, int(round(nt * (1.0 - sparsity))))
-    if keep >= nt:
+    target = max(1, _round_half_up(mat.size * (1.0 - sparsity)))
+    nbk, nbn = -(-k // bk), -(-n // bn)
+    # vectorized tile norms (zero-padded edges contribute nothing) and
+    # analytic true tile sizes — the z-step runs per layer per ADMM
+    # iteration, so no Python-level per-tile loops here
+    mp = np.pad(mat.astype(np.float64), ((0, nbk * bk - k), (0, nbn * bn - n)))
+    norms = np.sum(mp.reshape(nbk, bk, nbn, bn) ** 2, axis=(1, 3))
+    row_sz = np.minimum(bk, k - np.arange(nbk) * bk)
+    col_sz = np.minimum(bn, n - np.arange(nbn) * bn)
+    sizes = np.outer(row_sz, col_sz).reshape(-1)
+    order = np.argsort(-norms.reshape(-1), kind="stable")
+    keep = np.zeros(nbk * nbn, dtype=bool)
+    kept = 0
+    for t in order:
+        size = int(sizes[t])
+        if kept >= target:
+            break
+        # the best tile always survives: a nonzero target must not zero
+        # the whole layer
+        if kept > 0 and kept + size > target and (kept + size - target) > (target - kept):
+            break
+        keep[t] = True
+        kept += size
+    mask = np.repeat(np.repeat(keep.reshape(nbk, nbn), bk, axis=0), bn, axis=1)[:k, :n]
+    return jnp.asarray((mat * mask).reshape(shape), jnp.asarray(w).dtype)
+
+
+def select_pattern_library(
+    w: jnp.ndarray, entries: int = 4, library_size: int = 8
+) -> np.ndarray:
+    """Per-layer pattern library selection (PatDNN): every kernel
+    nominates its top-``entries`` magnitude positions; the masks with the
+    largest accumulated magnitude across kernels form the library.
+    ``w`` is HWIO (kh, kw, cin, cout); returns a (lib, kh*kw) bool
+    array. Deterministic (ties by position, then mask order)."""
+    kh, kw = w.shape[0], w.shape[1]
+    kk = kh * kw
+    entries = max(1, min(entries, kk))
+    mags = np.abs(np.asarray(w)).reshape(kk, -1)  # (positions, kernels)
+    nk = mags.shape[1]
+    top = np.argsort(-mags, axis=0, kind="stable")[:entries]  # (entries, nk)
+    masks = np.zeros((kk, nk), dtype=bool)
+    masks[top, np.arange(nk)[None, :]] = True
+    scores = np.sum(mags * masks, axis=0)
+    # accumulate weight per distinct mask, vectorized: the z-step runs
+    # per layer per ADMM iteration, so no per-kernel Python loops (the
+    # per-*unique-mask* loop below is bounded by C(kk, entries) <= 126
+    # for 3x3/4-entry)
+    uniq, inverse = np.unique(masks.T, axis=0, return_inverse=True)  # (u, kk)
+    weights = np.bincount(inverse.reshape(-1), weights=scores, minlength=len(uniq))
+    keys = [tuple(np.nonzero(row)[0].tolist()) for row in uniq]
+    order = sorted(
+        range(len(uniq)), key=lambda i: (-float(weights[i]), keys[i])
+    )[: max(1, library_size)]
+    return uniq[order]
+
+
+def project_prune_pattern(
+    w: jnp.ndarray, sparsity: float, entries: int = 4, library_size: int = 8
+) -> jnp.ndarray:
+    """PatDNN projection: select the layer's pattern library, snap every
+    kernel to its best library pattern, then *connectivity-prune* whole
+    kernels (lowest projected magnitude first) until the surviving value
+    count lands on ``round(size * (1 - sparsity))`` — within half a
+    pattern, i.e. well inside 1% for real layers. Non-conv weights (or
+    1x1 kernels) fall back to the element projection. If the requested
+    density exceeds ``entries / (kh*kw)`` every kernel survives and the
+    density saturates at that ceiling."""
+    if sparsity <= 0.0:
         return w
-    thresh = jnp.sort(norms.reshape(-1))[nt - keep]
-    mask = (norms >= thresh).astype(mp.dtype)
-    mp = (tiles * mask[:, None, :, None]).reshape(kp, np_)
-    return mp[:k, :n].reshape(shape)
+    arr = np.asarray(w)
+    if arr.ndim != 4 or arr.shape[0] * arr.shape[1] <= 1:
+        return project_prune_element(w, sparsity)
+    kh, kw, cin, cout = arr.shape
+    kk = kh * kw
+    entries = max(1, min(entries, kk))
+    lib = select_pattern_library(w, entries, library_size)
+    mags = np.abs(arr).reshape(kk, -1).astype(np.float64)  # (kk, nk)
+    nk = mags.shape[1]
+    lib_scores = lib.astype(np.float64) @ mags  # (lib, nk)
+    best = np.argmax(lib_scores, axis=0)  # (nk,)
+    best_score = lib_scores[best, np.arange(nk)]
+    # floor of one element, half-up rounding: both match the Rust-side
+    # pruners so python-exported supports agree with native re-pruning
+    target = max(1, _round_half_up(arr.size * (1.0 - sparsity)))
+    n_keep = min(nk, max(1, _round_half_up(target / float(entries))))
+    keep = np.zeros(nk, dtype=bool)
+    if n_keep > 0:
+        order = np.argsort(-best_score, kind="stable")
+        keep[order[:n_keep]] = True
+    final = lib[best].T & keep[None, :]  # (kk, nk)
+    mask = final.reshape(arr.shape)
+    return jnp.asarray(arr * mask.astype(arr.dtype))
 
 
 def quant_levels(w: jnp.ndarray, bits: int) -> jnp.ndarray:
@@ -132,8 +234,14 @@ class AdmmConfig:
     retrain_epochs: int = 4
     lr: float = 0.01
     batch: int = 64
-    granularity: str = "element"  # "element" | "block"
+    granularity: str = "element"  # "element" | "block" | "pattern"
+    # (bk, bn) tiles for "block". The default matches the TPU pallas
+    # kernel's SPARSE_BK/SPARSE_BN (model.py); pass (4, 4) to target the
+    # Rust BSR candidates instead (a 16x16-aligned support is also
+    # 4x4-aligned, so either feeds the native planner).
     block: Tuple[int, int] = (16, 16)
+    pattern_entries: int = 4  # surviving positions per kernel ("pattern")
+    pattern_library: int = 8  # canonical patterns per layer ("pattern")
     quant_bits: Optional[int] = None  # unified prune+quantize when set
     progressive_stages: Sequence[float] = field(default_factory=lambda: (1.0,))
     # each stage scales the per-layer sparsity: e.g. (0.6, 1.0) reaches the
@@ -148,6 +256,10 @@ class CompressResult:
     history: list
     per_layer_nnz: Dict[str, Tuple[int, int]]  # name -> (nnz, total)
     quant_bits: Optional[int] = None
+    # name -> achieved structure label ("element" | "block{bk}x{bn}" |
+    # "pattern{entries}"); exported into compress_report.json so the Rust
+    # planner (SparsityProfile::from_report) knows which format to plan.
+    structures: Dict[str, str] = field(default_factory=dict)
 
     @property
     def overall_rate(self) -> float:
@@ -159,7 +271,23 @@ class CompressResult:
 def _project(w, sparsity, cfg: AdmmConfig):
     if cfg.granularity == "block":
         return project_prune_block(w, sparsity, *cfg.block)
+    if cfg.granularity == "pattern":
+        return project_prune_pattern(
+            w, sparsity, cfg.pattern_entries, cfg.pattern_library
+        )
     return project_prune_element(w, sparsity)
+
+
+def _structure_label(w, cfg: AdmmConfig) -> str:
+    """The structure a layer's support actually has after `_project`
+    (pattern degrades to element on non-conv / 1x1 weights)."""
+    if cfg.granularity == "block":
+        return f"block{cfg.block[0]}x{cfg.block[1]}"
+    if cfg.granularity == "pattern":
+        arr = np.asarray(w)
+        if arr.ndim == 4 and arr.shape[0] * arr.shape[1] > 1:
+            return f"pattern{cfg.pattern_entries}"
+    return "element"
 
 
 def admm_prune(
@@ -255,15 +383,18 @@ def admm_prune(
         history.extend(hist)
 
     per_layer = {}
+    structures = {}
     for k in cfg.sparsity:
         w = params[k]["w"]
         per_layer[k] = (int(jnp.sum(w != 0.0)), int(w.size))
+        structures[k] = _structure_label(w, cfg)
     return CompressResult(
         params=params,
         masks=masks,
         history=history,
         per_layer_nnz=per_layer,
         quant_bits=cfg.quant_bits,
+        structures=structures,
     )
 
 

@@ -78,6 +78,102 @@ def test_block_projection_zeroes_whole_tiles(k, n, sparsity, seed):
             assert (tz == 0).all() or np.array_equal(tz, tw)
 
 
+@settings(max_examples=15, deadline=None)
+@given(
+    k=st.integers(8, 64),
+    n=st.integers(8, 64),
+    sparsity=st.floats(0.3, 0.95),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_block_projection_density_within_one_tile(k, n, sparsity, seed):
+    """The rewritten greedy keep targets the *element* count: achieved
+    nnz lands within one (4, 4) tile of round(size * (1 - sparsity)),
+    and never zeroes the whole layer."""
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+    z = A.project_prune_block(w, sparsity, 4, 4)
+    nnz = int(jnp.sum(z != 0))
+    target = max(1, int(np.floor(k * n * (1.0 - sparsity) + 0.5)))
+    assert abs(nnz - target) <= 16, (nnz, target)
+    assert nnz > 0
+
+
+def test_block_projection_keeps_best_tile_at_extreme_sparsity():
+    rng = np.random.default_rng(3)
+    w = jnp.asarray(rng.normal(size=(8, 8)), jnp.float32)
+    z = A.project_prune_block(w, 0.97, 4, 4)  # target = 2 elements
+    assert int(jnp.sum(z != 0)) == 16, "the single best tile must survive"
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    cin=st.integers(1, 8),
+    cout=st.integers(1, 16),
+    sparsity=st.floats(0.6, 0.95),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pattern_projection_constraint_set(cin, cout, sparsity, seed):
+    """PatDNN projection invariants: every surviving 3x3 kernel keeps
+    exactly `entries` positions drawn from a library of at most
+    `library_size` distinct masks; kept values are untouched; achieved
+    nnz is within half a pattern of the target (floor of one kernel)."""
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(size=(3, 3, cin, cout)), jnp.float32)
+    z = A.project_prune_pattern(w, sparsity, entries=4, library_size=8)
+    zk = np.asarray(z).reshape(9, -1)
+    wk = np.asarray(w).reshape(9, -1)
+    masks = set()
+    for j in range(zk.shape[1]):
+        nz = np.nonzero(zk[:, j])[0]
+        assert len(nz) in (0, 4), f"kernel {j} has {len(nz)} entries"
+        if len(nz):
+            masks.add(tuple(nz.tolist()))
+            np.testing.assert_array_equal(zk[nz, j], wk[nz, j])
+    assert len(masks) <= 8
+    nnz = int(jnp.sum(z != 0))
+    target = max(1, int(np.floor(w.size * (1.0 - sparsity) + 0.5)))
+    n_keep = min(cin * cout, max(1, int(np.floor(target / 4.0 + 0.5))))
+    assert nnz == 4 * n_keep
+
+
+def test_pattern_projection_falls_back_on_fc_weights():
+    rng = np.random.default_rng(5)
+    w = jnp.asarray(rng.normal(size=(100, 40)), jnp.float32)
+    z = A.project_prune_pattern(w, 0.9, entries=4, library_size=8)
+    ze = A.project_prune_element(w, 0.9)
+    np.testing.assert_array_equal(np.asarray(z), np.asarray(ze))
+
+
+def test_pattern_library_selection_is_deterministic_and_bounded():
+    rng = np.random.default_rng(7)
+    w = jnp.asarray(rng.normal(size=(3, 3, 4, 8)), jnp.float32)
+    lib1 = A.select_pattern_library(w, entries=4, library_size=6)
+    lib2 = A.select_pattern_library(w, entries=4, library_size=6)
+    np.testing.assert_array_equal(lib1, lib2)
+    assert lib1.shape[1] == 9 and lib1.shape[0] <= 6
+    assert (lib1.sum(axis=1) == 4).all()
+
+
+def test_structures_exported_per_layer(digit_task):
+    """CompressResult.structures records what each layer actually got:
+    pattern for conv (4D) weights, element fallback for FC."""
+    fwd, params, x, y, _xt, _yt = digit_task
+    cfg = A.AdmmConfig(
+        sparsity={"c1": 0.7, "f1": 0.9},
+        granularity="pattern",
+        admm_iters=1,
+        epochs_per_iter=1,
+        retrain_epochs=1,
+        seed=0,
+    )
+    res = A.admm_prune(fwd, params, x, y, cfg)
+    assert res.structures["c1"] == "pattern4"
+    assert res.structures["f1"] == "element"
+    # the exported labels parse on the Rust side (PruneStructure::parse
+    # accepts "pattern{entries}" / "element"); pin the exact strings
+    assert set(res.structures.values()) <= {"pattern4", "element"}
+
+
 def test_quantize_projection_levels():
     rng = np.random.default_rng(1)
     w = jnp.asarray(rng.normal(size=(64,)), jnp.float32)

@@ -1,16 +1,22 @@
 //! Sparse-format sweep: density x structure x format over
 //! ResNet-50-shaped GEMM layers, with the planner's Auto choice recorded
-//! next to the measured winner. Emits `BENCH_sparse_formats.json` so the
-//! perf trajectory of the format subsystem is recorded run over run.
+//! next to the measured winner. Structures cover scattered magnitude
+//! pruning (`random`), block-pattern ADMM (`block4x4`), and PatDNN
+//! pattern pruning (`pattern4` — 4-entry patterns from an 8-pattern
+//! library + connectivity pruning, 3x3 shapes only). Emits
+//! `BENCH_sparse_formats.json` so the perf trajectory of the format
+//! subsystem is recorded run over run.
 //!
 //! Run: cargo bench --bench bench_sparse_formats
 
 use cadnn::bench::print_table;
 use cadnn::compress::bsr::BsrMatrix;
 use cadnn::compress::csr::CsrMatrix;
+use cadnn::compress::pattern::{prune_patterns, PatternMatrix};
 use cadnn::compress::reorder;
 use cadnn::kernels::bsr::bsr_gemm;
 use cadnn::kernels::gemm::gemm_blocked;
+use cadnn::kernels::pattern::pattern_gemm;
 use cadnn::kernels::sparse::csr_gemm;
 use cadnn::kernels::Epilogue;
 use cadnn::passes::layout::TileConfig;
@@ -66,20 +72,36 @@ fn measure(mut f: impl FnMut()) -> f64 {
     stats::Summary::from(&samples).unwrap().p50
 }
 
+/// PatDNN pattern pruning: 4-entry patterns from an 8-pattern library +
+/// connectivity pruning, applied to an initially dense matrix.
+fn pattern_weights(rng: &mut Rng, hwio: [usize; 4], density: f64) -> Vec<f32> {
+    let (k, n) = (hwio[0] * hwio[1] * hwio[2], hwio[3]);
+    let mut dense = vec![0.0f32; k * n];
+    rng.fill_normal(&mut dense, 0.5);
+    prune_patterns(&mut dense, hwio[0], hwio[1], hwio[2], hwio[3], 1.0 - density, 4, 8);
+    dense
+}
+
 fn main() {
     let mut rng = Rng::new(17);
     let mut report: Vec<Json> = Vec::new();
     let mut rows = Vec::new();
     for (m, hwio, label) in SHAPES {
         let (k, n) = (hwio[0] * hwio[1] * hwio[2], hwio[3]);
+        let spatial = hwio[0] * hwio[1] > 1;
         let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
         let mut c = vec![0.0f32; m * n];
-        for structure in ["random", "block4x4"] {
+        for structure in ["random", "block4x4", "pattern4"] {
             for density in DENSITIES {
-                let dense = if structure == "random" {
-                    random_weights(&mut rng, k, n, density)
-                } else {
-                    block_weights(&mut rng, k, n, density)
+                if structure == "pattern4" && (!spatial || density > 4.0 / 9.0) {
+                    // pattern pruning needs spatial kernels and cannot
+                    // express densities above entries/positions
+                    continue;
+                }
+                let dense = match structure {
+                    "random" => random_weights(&mut rng, k, n, density),
+                    "block4x4" => block_weights(&mut rng, k, n, density),
+                    _ => pattern_weights(&mut rng, hwio, density),
                 };
                 let csr = CsrMatrix::from_dense(&dense, k, n);
                 let bsr41 = BsrMatrix::from_dense(&dense, k, n, 4, 1);
@@ -95,15 +117,27 @@ fn main() {
                 let t_b41 = measure(|| bsr_gemm(&a, &bsr41, &mut c, m, &Epilogue::None));
                 let t_b44 = measure(|| bsr_gemm(&a, &bsr44, &mut c, m, &Epilogue::None));
                 let t_b44r = measure(|| bsr_gemm(&a, &bsr44r, &mut c, m, &Epilogue::None));
+                let (t_pat, pat_kernels) = if spatial {
+                    let pat = PatternMatrix::from_dense(&dense, hwio[0], hwio[1], hwio[2], n);
+                    (
+                        measure(|| pattern_gemm(&a, &pat, &mut c, m, &Epilogue::None)),
+                        pat.kernels(),
+                    )
+                } else {
+                    (f64::NAN, 0)
+                };
 
                 let auto = choose(FormatPolicy::Auto, &csr, m, hwio);
-                let times = [
+                let mut times = vec![
                     ("dense", t_dense),
                     ("csr", t_csr),
                     ("bsr4x1", t_b41),
                     ("bsr4x4", t_b44),
                     ("bsr4x4+reorder", t_b44r),
                 ];
+                if spatial {
+                    times.push(("pattern", t_pat));
+                }
                 let winner = times
                     .iter()
                     .min_by(|x, y| x.1.partial_cmp(&y.1).unwrap())
@@ -118,6 +152,7 @@ fn main() {
                     format!("{t_b41:.0}"),
                     format!("{t_b44:.0}"),
                     format!("{t_b44r:.0}"),
+                    if spatial { format!("{t_pat:.0}") } else { "-".to_string() },
                     winner.to_string(),
                     auto.format.label(),
                 ]);
@@ -129,6 +164,7 @@ fn main() {
                     ("fill_bsr4x1", Json::Num(bsr41.fill_ratio())),
                     ("fill_bsr4x4", Json::Num(bsr44.fill_ratio())),
                     ("fill_bsr4x4_reordered", Json::Num(bsr44r.fill_ratio())),
+                    ("pattern_kernels", Json::Num(pat_kernels as f64)),
                     (
                         "us",
                         obj(times.iter().map(|(f, t)| (*f, Json::Num(*t))).collect()),
@@ -144,7 +180,7 @@ fn main() {
     print_table(
         &[
             "layer", "structure", "density", "dense", "csr", "bsr4x1", "bsr4x4", "bsr4x4+r",
-            "winner", "auto",
+            "pattern", "winner", "auto",
         ],
         &rows,
     );

@@ -96,10 +96,12 @@ impl EngineBuilder {
     }
 
     /// How pruned layers are stored and executed:
-    /// [`FormatPolicy::Auto`] lets the planner pick Dense / CSR / BSR per
-    /// layer (default), [`FormatPolicy::Csr`] pins the pre-planner CSR
-    /// baseline, [`FormatPolicy::Bsr`] pins block-sparse. Non-`Auto`
-    /// values require [`Personality::CadnnSparse`]; `build` rejects the
+    /// [`FormatPolicy::Auto`] lets the planner pick Dense / CSR / BSR /
+    /// Pattern per layer (default), [`FormatPolicy::Csr`] pins the
+    /// pre-planner CSR baseline, [`FormatPolicy::Bsr`] pins block-sparse,
+    /// [`FormatPolicy::Pattern`] pins the PatDNN pattern format on
+    /// eligible spatial conv layers (others keep CSR). Non-`Auto` values
+    /// require [`Personality::CadnnSparse`]; `build` rejects the
     /// combination otherwise.
     pub fn sparse_format(mut self, policy: FormatPolicy) -> EngineBuilder {
         self.sparse_format = policy;

@@ -17,6 +17,24 @@ use crate::error::CadnnError;
 /// Block-CSR with u32 block-column indices. Logical shape is
 /// (`rows`, `cols`); the block grid is `ceil(rows/br) x ceil(cols/bc)`
 /// with edge blocks zero-padded.
+///
+/// # Examples
+///
+/// ```
+/// use cadnn::compress::bsr::BsrMatrix;
+///
+/// // one fully dense 4x4 block in an 8x8 matrix
+/// let mut dense = vec![0.0f32; 64];
+/// for r in 0..4 {
+///     for c in 4..8 {
+///         dense[r * 8 + c] = 1.0;
+///     }
+/// }
+/// let bsr = BsrMatrix::from_dense(&dense, 8, 8, 4, 4);
+/// assert_eq!(bsr.blocks(), 1);
+/// assert_eq!(bsr.fill_ratio(), 1.0);      // no padding stored
+/// assert_eq!(bsr.to_dense(), dense);      // lossless round-trip
+/// ```
 #[derive(Debug, Clone, PartialEq)]
 pub struct BsrMatrix {
     pub rows: usize,
@@ -196,6 +214,21 @@ impl BsrMatrix {
 
 /// Stored-block count a `(br x bc)` BSR encoding of `csr` would have —
 /// O(nnz), no densification. The planner's fill estimator.
+///
+/// # Examples
+///
+/// ```
+/// use cadnn::compress::bsr::{count_blocks, BsrMatrix};
+/// use cadnn::compress::csr::CsrMatrix;
+///
+/// let mut dense = vec![0.0f32; 8 * 8];
+/// dense[0] = 1.0;      // block (0, 0)
+/// dense[5 * 8 + 7] = 2.0; // block (1, 1)
+/// let csr = CsrMatrix::from_dense(&dense, 8, 8);
+/// assert_eq!(count_blocks(&csr, 4, 4), 2);
+/// // the estimate always matches what the encoder stores
+/// assert_eq!(count_blocks(&csr, 4, 4), BsrMatrix::from_csr(&csr, 4, 4).blocks());
+/// ```
 pub fn count_blocks(csr: &CsrMatrix, br: usize, bc: usize) -> usize {
     count_blocks_impl(csr, br, bc, None)
 }
@@ -239,6 +272,84 @@ fn count_blocks_impl(csr: &CsrMatrix, br: usize, bc: usize, map: Option<&[u32]>)
         touched.clear();
     }
     total
+}
+
+/// Block-structured pruning of a dense (rows x cols) matrix, in place —
+/// the native-engine analogue of `python/compile/admm.py`'s
+/// `project_prune_block` z-step. Tiles are ranked by Frobenius norm and
+/// kept greedily (highest first, edge tiles at their true size) until
+/// the surviving element count is as close as possible to
+/// `round(len * (1 - sparsity))`; every other tile is zeroed whole, so
+/// the surviving support is exactly `(br x bc)`-block-aligned and the
+/// achieved density stays within one tile of the request. Deterministic:
+/// ties break by tile index.
+pub fn prune_blocks(
+    mat: &mut [f32],
+    rows: usize,
+    cols: usize,
+    br: usize,
+    bc: usize,
+    sparsity: f64,
+) {
+    assert!(br > 0 && bc > 0, "block dims must be nonzero");
+    assert_eq!(mat.len(), rows * cols);
+    if sparsity <= 0.0 || mat.is_empty() {
+        return;
+    }
+    // floor of one element: like the element projection, extreme
+    // sparsity keeps the single best tile instead of zeroing the layer
+    let target = (((mat.len() as f64) * (1.0 - sparsity)).round() as usize).max(1);
+    let (nbr, nbc) = (rows.div_ceil(br), cols.div_ceil(bc));
+    // rank tiles by squared Frobenius norm (same order as by norm)
+    let mut tiles: Vec<(f64, usize)> = Vec::with_capacity(nbr * nbc);
+    for b in 0..nbr {
+        for j in 0..nbc {
+            let (r0, c0) = (b * br, j * bc);
+            let (rl, cl) = (br.min(rows - r0), bc.min(cols - c0));
+            let mut norm2 = 0.0f64;
+            for p in 0..rl {
+                for x in 0..cl {
+                    let v = mat[(r0 + p) * cols + c0 + x] as f64;
+                    norm2 += v * v;
+                }
+            }
+            tiles.push((norm2, b * nbc + j));
+        }
+    }
+    tiles.sort_by(|a, b| {
+        b.0.partial_cmp(&a.0).unwrap_or(std::cmp::Ordering::Equal).then(a.1.cmp(&b.1))
+    });
+    // greedy keep until the next tile would overshoot more than it
+    // helps; the best tile always survives (a nonzero target must not
+    // zero the whole layer)
+    let mut keep = vec![false; nbr * nbc];
+    let mut kept = 0usize;
+    for &(_, t) in &tiles {
+        let (b, j) = (t / nbc, t % nbc);
+        let size = br.min(rows - b * br) * bc.min(cols - j * bc);
+        if kept >= target {
+            break;
+        }
+        if kept > 0 && kept + size > target && (kept + size - target) > (target - kept) {
+            break;
+        }
+        keep[t] = true;
+        kept += size;
+    }
+    for b in 0..nbr {
+        for j in 0..nbc {
+            if keep[b * nbc + j] {
+                continue;
+            }
+            let (r0, c0) = (b * br, j * bc);
+            let (rl, cl) = (br.min(rows - r0), bc.min(cols - c0));
+            for p in 0..rl {
+                for x in 0..cl {
+                    mat[(r0 + p) * cols + c0 + x] = 0.0;
+                }
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -317,6 +428,24 @@ mod tests {
         assert_eq!(bsr.fill_ratio(), 1.0);
         // same value payload, 16x fewer column indices
         assert!(bsr.bytes_on_disk_idx16(32) < csr.bytes_on_disk_idx16(32));
+    }
+
+    #[test]
+    fn prune_blocks_is_block_aligned_and_density_exact() {
+        let (k, n) = (64usize, 32usize);
+        let mut rng = Rng::new(9);
+        let mut mat = vec![0.0f32; k * n];
+        rng.fill_normal(&mut mat, 0.5);
+        let sparsity = 0.75;
+        prune_blocks(&mut mat, k, n, 4, 4, sparsity);
+        let nnz = mat.iter().filter(|v| **v != 0.0).count();
+        let target = ((mat.len() as f64) * (1.0 - sparsity)).round() as usize;
+        let rel = (nnz as f64 - target as f64).abs() / target as f64;
+        assert!(rel < 0.01, "achieved nnz {nnz} vs target {target}");
+        // surviving support is exactly block-aligned: fill ratio 1.0
+        let bsr = BsrMatrix::from_dense(&mat, k, n, 4, 4);
+        assert_eq!(bsr.fill_ratio(), 1.0, "non-block-aligned survivor");
+        assert_eq!(bsr.nnz(), nnz);
     }
 
     #[test]

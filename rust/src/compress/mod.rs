@@ -7,12 +7,15 @@
 //! - the CSR encoding the element-granular CPU execution path uses,
 //! - the BSR block format + filter-kernel reordering the structured
 //!   execution path uses (see `docs/FORMATS.md`),
+//! - the PatDNN pattern format (per-kernel canonical patterns + shared
+//!   pattern table) and its structured pruners (`docs/PIPELINE.md`),
 //! - k-bit codebook quantization metadata,
 //! - storage accounting that regenerates the §3 compression-rate and
 //!   storage-reduction claims and Table 2 sizes.
 
 pub mod bsr;
 pub mod csr;
+pub mod pattern;
 pub mod profile;
 pub mod quant;
 pub mod reorder;
@@ -20,6 +23,7 @@ pub mod size;
 
 pub use bsr::BsrMatrix;
 pub use csr::CsrMatrix;
-pub use profile::{SparsityProfile, paper_profile};
+pub use pattern::PatternMatrix;
+pub use profile::{PruneStructure, SparsityProfile, paper_profile};
 pub use quant::QuantizedTensor;
 pub use reorder::Permutation;

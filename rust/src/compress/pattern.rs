@@ -1,0 +1,596 @@
+//! Pattern-based sparse weight matrices (PatDNN, Niu et al. 2020).
+//!
+//! Where BSR imposes structure on the *(K, N) matrix view*, the pattern
+//! format imposes it on the *convolution kernels themselves*: every
+//! surviving `kh x kw` kernel slice (one per (input channel, output
+//! channel) pair) keeps its nonzeros at one of a small set of canonical
+//! position sets — the *pattern table* — and whole low-energy kernels
+//! are removed entirely (*connectivity pruning*). The encoding stores,
+//! per surviving kernel, one output-channel index, one pattern id, and
+//! only the true nonzero values; the pattern table (a few entries, shared
+//! across the whole layer) is stored once.
+//!
+//! Compared to the other formats on a pattern-pruned 3x3 conv layer:
+//!
+//! - **no padding** — unlike BSR, stored values == true nonzeros
+//!   (`fill_ratio` is 1.0 by construction);
+//! - **amortized indices** — one column index per kernel (≈4 values)
+//!   instead of CSR's one per value;
+//! - **specialized inner loops** — the kernel's trip count and offsets
+//!   are fixed by the pattern id, so `kernels::pattern` runs an unrolled
+//!   accumulator per kernel instead of CSR's scattered updates.
+//!
+//! The row-major (K, N) view is shared with [`CsrMatrix`]: row
+//! `(ky*kw + kx)*cin + ci`, column `co`. A kernel slice (ci, co) is the
+//! `kh*kw` rows `{pos*cin + ci}` of column `co`.
+//!
+//! See `docs/PIPELINE.md` for where pattern pruning happens (the ADMM
+//! z-step in `python/compile/admm.py` or the native engine's
+//! [`prune_patterns`]) and `docs/FORMATS.md` for the storage formula.
+
+use crate::compress::csr::CsrMatrix;
+use crate::error::CadnnError;
+use std::collections::BTreeMap;
+
+/// Most kernel positions (`kh*kw`) the format supports: pattern ids are
+/// u16 and a scattered support can intern up to `2^(kh*kw) - 1` distinct
+/// masks, so 16 positions (e.g. 3x3 or 4x4 kernels) is the ceiling.
+/// The planner only considers the format for eligible shapes.
+pub const MAX_POSITIONS: usize = 16;
+
+/// Pattern-library size used by [`prune_patterns`] when a caller has no
+/// reason to choose otherwise (PatDNN finds 6-8 patterns sufficient).
+pub const DEFAULT_LIBRARY: usize = 8;
+
+/// Entries each canonical pattern keeps per kernel (PatDNN's 4-entry
+/// patterns for 3x3 kernels).
+pub const DEFAULT_ENTRIES: usize = 4;
+
+/// Pattern-encoded sparse weights over the (K, N) im2col view with
+/// `K = kh*kw*cin`, `N = cols` output channels.
+///
+/// Kernels are grouped by input channel: `kernel_ptr[ci]..kernel_ptr[ci+1]`
+/// indexes the stored kernels of channel `ci`, each with an output channel
+/// (`col_idx`), a pattern id (`pat_idx`) and its values
+/// (`val_ptr[kn]..val_ptr[kn+1]`, in ascending-position order). The shared
+/// pattern table lives in `pat_ptr`/`pat_pos`: pattern `p` occupies the
+/// kernel positions `pat_pos[pat_ptr[p]..pat_ptr[p+1]]` (each in
+/// `0..kh*kw`, strictly ascending).
+///
+/// # Examples
+///
+/// ```
+/// use cadnn::compress::pattern::PatternMatrix;
+///
+/// // one input channel, two output channels, 3x3 kernels:
+/// // column 0 keeps a 2-entry pattern, column 1 is connectivity-pruned
+/// let (kh, kw, cin, cols) = (3, 3, 1, 2);
+/// let mut dense = vec![0.0f32; kh * kw * cin * cols];
+/// dense[0 * cols + 0] = 1.0; // position 0
+/// dense[4 * cols + 0] = 2.0; // position 4 (kernel center)
+/// let pat = PatternMatrix::from_dense(&dense, kh, kw, cin, cols);
+/// assert_eq!(pat.kernels(), 1);
+/// assert_eq!(pat.patterns(), 1);
+/// assert_eq!(pat.nnz(), 2);
+/// assert_eq!(pat.to_dense(), dense); // lossless round-trip
+/// ```
+#[derive(Debug, Clone, PartialEq)]
+pub struct PatternMatrix {
+    /// Logical rows, `kh * kw * cin`.
+    pub rows: usize,
+    /// Logical columns (output channels).
+    pub cols: usize,
+    pub kh: usize,
+    pub kw: usize,
+    pub cin: usize,
+    /// Kernel extents per input channel, length `cin + 1`.
+    pub kernel_ptr: Vec<u32>,
+    /// Output channel per stored kernel, strictly ascending within a `ci`.
+    pub col_idx: Vec<u32>,
+    /// Pattern-table id per stored kernel.
+    pub pat_idx: Vec<u16>,
+    /// Value extents per stored kernel, length `kernels + 1`.
+    pub val_ptr: Vec<u32>,
+    /// True nonzero values, ascending-position order within each kernel.
+    pub values: Vec<f32>,
+    /// Pattern extents into `pat_pos`, length `patterns + 1`.
+    pub pat_ptr: Vec<u32>,
+    /// Kernel positions (`0..kh*kw`) of each pattern, strictly ascending.
+    pub pat_pos: Vec<u8>,
+}
+
+impl PatternMatrix {
+    /// Encode from a dense row-major (K, N) matrix. Every kernel slice's
+    /// exact nonzero support becomes its pattern (interned into the
+    /// shared table in first-seen order); kernels with no nonzeros are
+    /// dropped, so the encoding is lossless and padding-free.
+    pub fn from_dense(dense: &[f32], kh: usize, kw: usize, cin: usize, cols: usize) -> Self {
+        assert!(kh > 0 && kw > 0 && cin > 0, "kernel dims must be nonzero");
+        let kk = kh * kw;
+        assert!(kk <= MAX_POSITIONS, "pattern format supports at most {MAX_POSITIONS} positions");
+        let rows = kk * cin;
+        assert_eq!(dense.len(), rows * cols);
+        let mut table: Vec<Vec<u8>> = Vec::new();
+        let mut intern: BTreeMap<Vec<u8>, u16> = BTreeMap::new();
+        let mut kernel_ptr = Vec::with_capacity(cin + 1);
+        let mut col_idx = Vec::new();
+        let mut pat_idx = Vec::new();
+        let mut val_ptr = vec![0u32];
+        let mut values = Vec::new();
+        kernel_ptr.push(0u32);
+        for ci in 0..cin {
+            for co in 0..cols {
+                let mut mask: Vec<u8> = Vec::new();
+                for pos in 0..kk {
+                    if dense[(pos * cin + ci) * cols + co] != 0.0 {
+                        mask.push(pos as u8);
+                    }
+                }
+                if mask.is_empty() {
+                    continue; // connectivity-pruned kernel
+                }
+                for &pos in &mask {
+                    values.push(dense[(pos as usize * cin + ci) * cols + co]);
+                }
+                let next_id = table.len() as u16;
+                let id = *intern.entry(mask.clone()).or_insert_with(|| {
+                    table.push(mask.clone());
+                    next_id
+                });
+                col_idx.push(co as u32);
+                pat_idx.push(id);
+                val_ptr.push(values.len() as u32);
+            }
+            kernel_ptr.push(col_idx.len() as u32);
+        }
+        let mut pat_ptr = vec![0u32];
+        let mut pat_pos = Vec::new();
+        for m in &table {
+            pat_pos.extend_from_slice(m);
+            pat_ptr.push(pat_pos.len() as u32);
+        }
+        PatternMatrix {
+            rows,
+            cols,
+            kh,
+            kw,
+            cin,
+            kernel_ptr,
+            col_idx,
+            pat_idx,
+            val_ptr,
+            values,
+            pat_ptr,
+            pat_pos,
+        }
+    }
+
+    /// Re-encode an element-granular CSR matrix (`csr.rows` must equal
+    /// `kh*kw*cin`).
+    pub fn from_csr(csr: &CsrMatrix, kh: usize, kw: usize, cin: usize) -> Self {
+        assert_eq!(csr.rows, kh * kw * cin, "csr rows inconsistent with kernel shape");
+        Self::from_dense(&csr.to_dense(), kh, kw, cin, csr.cols)
+    }
+
+    /// Stored (surviving) kernels.
+    pub fn kernels(&self) -> usize {
+        self.col_idx.len()
+    }
+
+    /// Distinct patterns in the shared table.
+    pub fn patterns(&self) -> usize {
+        self.pat_ptr.len() - 1
+    }
+
+    /// True nonzeros — identical to stored values (no padding).
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// True-nonzero density over the logical matrix.
+    pub fn density(&self) -> f64 {
+        self.nnz() as f64 / (self.rows * self.cols).max(1) as f64
+    }
+
+    /// Decode back to dense row-major.
+    pub fn to_dense(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.rows * self.cols];
+        for ci in 0..self.cin {
+            let (s, e) = (self.kernel_ptr[ci] as usize, self.kernel_ptr[ci + 1] as usize);
+            for kn in s..e {
+                let co = self.col_idx[kn] as usize;
+                let pid = self.pat_idx[kn] as usize;
+                let (ps, pe) = (self.pat_ptr[pid] as usize, self.pat_ptr[pid + 1] as usize);
+                let vals = &self.values[self.val_ptr[kn] as usize..self.val_ptr[kn + 1] as usize];
+                for (x, &pos) in self.pat_pos[ps..pe].iter().enumerate() {
+                    out[(pos as usize * self.cin + ci) * self.cols + co] = vals[x];
+                }
+            }
+        }
+        out
+    }
+
+    /// Decode to the element-granular CSR encoding (for cross-format
+    /// comparisons and round-trip tests).
+    pub fn to_csr(&self) -> CsrMatrix {
+        CsrMatrix::from_dense(&self.to_dense(), self.rows, self.cols)
+    }
+
+    /// In-memory bytes (u32 pointers/indices, u16 pattern ids, u8
+    /// positions, f32 values).
+    pub fn bytes_in_memory(&self) -> usize {
+        4 * (self.kernel_ptr.len() + self.col_idx.len() + self.val_ptr.len() + self.pat_ptr.len())
+            + 4 * self.values.len()
+            + 2 * self.pat_idx.len()
+            + self.pat_pos.len()
+    }
+
+    /// On-disk bytes with 16-bit output-channel indices and
+    /// `value_bits`-bit values, **including the shared pattern table**
+    /// (positions at one byte each + 16-bit pattern extents). Pattern ids
+    /// cost one byte while the table stays within 256 patterns (the
+    /// pattern-pruned regime), two otherwise. `val_ptr` is derivable from
+    /// the pattern popcounts, so it is not accounted.
+    pub fn bytes_on_disk_idx16(&self, value_bits: usize) -> usize {
+        let id_bytes = if self.patterns() <= 256 { 1 } else { 2 };
+        self.kernel_ptr.len() * 4
+            + self.col_idx.len() * 2
+            + self.pat_idx.len() * id_bytes
+            + self.pat_pos.len()
+            + self.pat_ptr.len() * 2
+            + (self.values.len() * value_bits).div_ceil(8)
+    }
+
+    /// Structural validation (used by property tests).
+    pub fn validate(&self) -> Result<(), CadnnError> {
+        let invalid =
+            |reason: String| CadnnError::InvalidCsr { reason: format!("pattern: {reason}") };
+        let kk = self.kh * self.kw;
+        if self.kh == 0 || self.kw == 0 || self.cin == 0 {
+            return Err(invalid("zero kernel dims".into()));
+        }
+        if self.rows != kk * self.cin {
+            return Err(invalid("rows inconsistent with kh*kw*cin".into()));
+        }
+        if self.kernel_ptr.len() != self.cin + 1 {
+            return Err(invalid("kernel_ptr length".into()));
+        }
+        if *self.kernel_ptr.last().unwrap() as usize != self.col_idx.len() {
+            return Err(invalid("kernel_ptr tail".into()));
+        }
+        if self.pat_idx.len() != self.col_idx.len() {
+            return Err(invalid("pat_idx length".into()));
+        }
+        if self.val_ptr.len() != self.col_idx.len() + 1 {
+            return Err(invalid("val_ptr length".into()));
+        }
+        if *self.val_ptr.last().unwrap() as usize != self.values.len() {
+            return Err(invalid("val_ptr tail".into()));
+        }
+        if self.pat_ptr.is_empty() || *self.pat_ptr.last().unwrap() as usize != self.pat_pos.len()
+        {
+            return Err(invalid("pat_ptr tail".into()));
+        }
+        // pattern table: ascending unique in-range positions, nonempty
+        for p in 0..self.patterns() {
+            let (s, e) = (self.pat_ptr[p] as usize, self.pat_ptr[p + 1] as usize);
+            if s >= e {
+                return Err(invalid(format!("pattern {p} empty or not monotone")));
+            }
+            let mut prev: i32 = -1;
+            for &pos in &self.pat_pos[s..e] {
+                if (pos as i32) <= prev || pos as usize >= kk {
+                    return Err(invalid(format!("pattern {p} positions invalid")));
+                }
+                prev = pos as i32;
+            }
+        }
+        // kernels: ascending cols per channel, pattern ids in range,
+        // value extents matching the pattern popcount, values nonzero
+        for ci in 0..self.cin {
+            let (s, e) = (self.kernel_ptr[ci] as usize, self.kernel_ptr[ci + 1] as usize);
+            if s > e || e > self.col_idx.len() {
+                return Err(invalid(format!("channel {ci} kernel_ptr out of range")));
+            }
+            let mut prev: i64 = -1;
+            for kn in s..e {
+                let co = self.col_idx[kn] as i64;
+                if co <= prev || co as usize >= self.cols {
+                    return Err(invalid(format!("channel {ci} cols invalid")));
+                }
+                prev = co;
+                let pid = self.pat_idx[kn] as usize;
+                if pid >= self.patterns() {
+                    return Err(invalid(format!("kernel {kn} pattern id out of range")));
+                }
+                let want = (self.pat_ptr[pid + 1] - self.pat_ptr[pid]) as usize;
+                let got = (self.val_ptr[kn + 1] - self.val_ptr[kn]) as usize;
+                if want != got {
+                    return Err(invalid(format!("kernel {kn} has {got} values, pattern {want}")));
+                }
+            }
+        }
+        if self.values.iter().any(|v| *v == 0.0) {
+            return Err(invalid("stored value is zero (padding is not allowed)".into()));
+        }
+        Ok(())
+    }
+}
+
+/// Surviving-kernel count a pattern encoding of `csr` would have —
+/// O(nnz), no densification. The planner's per-kernel-overhead estimator
+/// (the value count is exactly `csr.nnz()`: the format stores no
+/// padding).
+pub fn count_kernels(csr: &CsrMatrix, cin: usize) -> usize {
+    assert!(cin > 0);
+    debug_assert_eq!(csr.rows % cin, 0, "rows must be kh*kw*cin");
+    let slots = cin * csr.cols;
+    let mut seen = vec![0u64; slots.div_ceil(64).max(1)];
+    let mut count = 0usize;
+    for r in 0..csr.rows {
+        let ci = r % cin;
+        let (s, e) = (csr.row_ptr[r] as usize, csr.row_ptr[r + 1] as usize);
+        for idx in s..e {
+            let key = ci * csr.cols + csr.col_idx[idx] as usize;
+            let (w, b) = (key / 64, key % 64);
+            if seen[w] & (1u64 << b) == 0 {
+                seen[w] |= 1u64 << b;
+                count += 1;
+            }
+        }
+    }
+    count
+}
+
+/// PatDNN-style pattern pruning of a dense (K, N) weight matrix, in
+/// place — the native-engine analogue of `python/compile/admm.py`'s
+/// `project_prune_pattern` z-step:
+///
+/// 1. each kernel nominates its top-`entries` magnitude positions;
+/// 2. the `library_size` masks with the largest accumulated magnitude
+///    form the layer's pattern library;
+/// 3. every kernel is projected onto its best library pattern, and
+///    *connectivity pruning* keeps only the highest-energy kernels —
+///    enough that the surviving value count lands on
+///    `round(len * (1 - sparsity))` (within half a pattern).
+///
+/// If the target density exceeds what `entries`-entry patterns can
+/// express (`entries / (kh*kw)`), every kernel survives and the achieved
+/// density saturates at that ceiling. Deterministic: ties break by
+/// position, then kernel index.
+#[allow(clippy::too_many_arguments)]
+pub fn prune_patterns(
+    mat: &mut [f32],
+    kh: usize,
+    kw: usize,
+    cin: usize,
+    cols: usize,
+    sparsity: f64,
+    entries: usize,
+    library_size: usize,
+) {
+    let kk = kh * kw;
+    let rows = kk * cin;
+    assert_eq!(mat.len(), rows * cols);
+    if sparsity <= 0.0 || mat.is_empty() || kk <= 1 {
+        return;
+    }
+    let entries = entries.clamp(1, kk);
+    // floor of one element: like the element projection, extreme
+    // sparsity keeps the single best kernel instead of zeroing the layer
+    let target = (((mat.len() as f64) * (1.0 - sparsity)).round() as usize).max(1);
+    let nk = cin * cols;
+    let at = |pos: usize, ci: usize, co: usize| mat[(pos * cin + ci) * cols + co];
+
+    // 1. per-kernel candidate mask (top-`entries` magnitudes, ties by
+    //    ascending position) with its accumulated magnitude
+    let mut weight_of: BTreeMap<Vec<u8>, f64> = BTreeMap::new();
+    for ci in 0..cin {
+        for co in 0..cols {
+            let mut idx: Vec<usize> = (0..kk).collect();
+            idx.sort_by(|&x, &y| {
+                let (mx, my) = (at(x, ci, co).abs(), at(y, ci, co).abs());
+                my.partial_cmp(&mx).unwrap_or(std::cmp::Ordering::Equal).then(x.cmp(&y))
+            });
+            let mut mask: Vec<u8> = idx[..entries].iter().map(|&p| p as u8).collect();
+            mask.sort_unstable();
+            let score: f64 =
+                mask.iter().map(|&p| at(p as usize, ci, co).abs() as f64).sum();
+            *weight_of.entry(mask).or_insert(0.0) += score;
+        }
+    }
+
+    // 2. library = top masks by accumulated magnitude (ties lexicographic)
+    let mut ranked: Vec<(Vec<u8>, f64)> = weight_of.into_iter().collect();
+    ranked.sort_by(|a, b| {
+        b.1.partial_cmp(&a.1).unwrap_or(std::cmp::Ordering::Equal).then(a.0.cmp(&b.0))
+    });
+    ranked.truncate(library_size.max(1));
+    let library: Vec<Vec<u8>> = ranked.into_iter().map(|(m, _)| m).collect();
+
+    // 3. project each kernel onto its best library pattern, then keep the
+    //    highest-energy kernels up to the target value count
+    let mut best = vec![(0usize, 0.0f64); nk];
+    for ci in 0..cin {
+        for co in 0..cols {
+            let mut bi = 0usize;
+            let mut bs = f64::NEG_INFINITY;
+            for (li, m) in library.iter().enumerate() {
+                let s: f64 = m.iter().map(|&p| at(p as usize, ci, co).abs() as f64).sum();
+                if s > bs {
+                    bs = s;
+                    bi = li;
+                }
+            }
+            best[ci * cols + co] = (bi, bs);
+        }
+    }
+    // at least one kernel survives (target has a floor of one element)
+    let n_keep = ((target as f64 / entries as f64).round() as usize).max(1).min(nk);
+    let mut order: Vec<usize> = (0..nk).collect();
+    order.sort_by(|&a, &b| {
+        best[b].1.partial_cmp(&best[a].1).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
+    });
+    let mut keep = vec![false; nk];
+    for &kn in order.iter().take(n_keep) {
+        keep[kn] = true;
+    }
+    for ci in 0..cin {
+        for co in 0..cols {
+            let kn = ci * cols + co;
+            let mask = &library[best[kn].0];
+            for pos in 0..kk {
+                let on = keep[kn] && mask.contains(&(pos as u8));
+                if !on {
+                    mat[(pos * cin + ci) * cols + co] = 0.0;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn random_sparse(rng: &mut Rng, len: usize, density: f64) -> Vec<f32> {
+        let mut dense = vec![0.0f32; len];
+        for v in dense.iter_mut() {
+            if rng.f64() < density {
+                *v = rng.normal() as f32;
+            }
+        }
+        dense
+    }
+
+    #[test]
+    fn roundtrip_small() {
+        // 3x3, cin=2, cols=3 with a couple of kernels sharing a pattern
+        let (kh, kw, cin, cols) = (3, 3, 2, 3);
+        let mut dense = vec![0.0f32; kh * kw * cin * cols];
+        for &(pos, ci, co, v) in
+            &[(0usize, 0usize, 0usize, 1.0f32), (4, 0, 0, 2.0), (0, 1, 2, 3.0), (4, 1, 2, 4.0)]
+        {
+            dense[(pos * cin + ci) * cols + co] = v;
+        }
+        let pat = PatternMatrix::from_dense(&dense, kh, kw, cin, cols);
+        pat.validate().unwrap();
+        assert_eq!(pat.kernels(), 2);
+        assert_eq!(pat.patterns(), 1, "identical supports must intern to one pattern");
+        assert_eq!(pat.nnz(), 4);
+        assert_eq!(pat.to_dense(), dense);
+    }
+
+    #[test]
+    fn all_zero_matrix_stores_nothing() {
+        let pat = PatternMatrix::from_dense(&vec![0.0; 9 * 4 * 8], 3, 3, 4, 8);
+        pat.validate().unwrap();
+        assert_eq!(pat.kernels(), 0);
+        assert_eq!(pat.patterns(), 0);
+        assert_eq!(pat.nnz(), 0);
+        assert_eq!(pat.to_dense(), vec![0.0; 9 * 4 * 8]);
+    }
+
+    #[test]
+    fn validate_rejects_padding_values() {
+        let mut dense = vec![0.0f32; 9 * 1 * 2];
+        dense[0] = 1.0;
+        let mut pat = PatternMatrix::from_dense(&dense, 3, 3, 1, 2);
+        pat.values[0] = 0.0;
+        assert!(pat.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_bad_val_ptr() {
+        let mut dense = vec![0.0f32; 9 * 1 * 2];
+        dense[0] = 1.0;
+        dense[2] = 2.0;
+        let mut pat = PatternMatrix::from_dense(&dense, 3, 3, 1, 2);
+        pat.val_ptr = vec![0, 1];
+        assert!(pat.validate().is_err());
+    }
+
+    #[test]
+    fn prune_patterns_hits_target_density_with_small_library() {
+        let (kh, kw, cin, cols) = (3usize, 3usize, 8usize, 32usize);
+        let mut rng = Rng::new(11);
+        let mut mat = vec![0.0f32; kh * kw * cin * cols];
+        rng.fill_normal(&mut mat, 0.5);
+        let sparsity = 0.8;
+        prune_patterns(&mut mat, kh, kw, cin, cols, sparsity, 4, 8);
+        let nnz = mat.iter().filter(|v| **v != 0.0).count();
+        let target = ((mat.len() as f64) * (1.0 - sparsity)).round() as usize;
+        let rel = (nnz as f64 - target as f64).abs() / target as f64;
+        assert!(rel < 0.01, "achieved nnz {nnz} vs target {target} ({rel:.4})");
+        // every surviving kernel uses one of <= 8 patterns of exactly 4 entries
+        let pat = PatternMatrix::from_dense(&mat, kh, kw, cin, cols);
+        pat.validate().unwrap();
+        assert!(pat.patterns() <= 8, "library leaked: {} patterns", pat.patterns());
+        for p in 0..pat.patterns() {
+            assert_eq!((pat.pat_ptr[p + 1] - pat.pat_ptr[p]), 4);
+        }
+        assert_eq!(pat.nnz(), nnz);
+    }
+
+    #[test]
+    fn prune_patterns_saturates_at_entry_ceiling() {
+        // requested density above entries/kk: every kernel survives
+        let (kh, kw, cin, cols) = (3usize, 3usize, 2usize, 4usize);
+        let mut rng = Rng::new(3);
+        let mut mat = vec![0.0f32; kh * kw * cin * cols];
+        rng.fill_normal(&mut mat, 0.5);
+        prune_patterns(&mut mat, kh, kw, cin, cols, 0.2, 4, 8);
+        let nnz = mat.iter().filter(|v| **v != 0.0).count();
+        assert_eq!(nnz, 4 * cin * cols, "all kernels kept at 4 entries each");
+    }
+
+    #[test]
+    fn prop_roundtrip_matches_csr_and_counts() {
+        prop::check_n("pattern roundtrip", 64, |rng: &mut Rng| {
+            let kh = [1usize, 2, 3][rng.below(3)];
+            let kw = [1usize, 2, 3][rng.below(3)];
+            let cin = rng.range(1, 9);
+            let cols = rng.range(1, 17);
+            let density = rng.f64();
+            let dense = random_sparse(rng, kh * kw * cin * cols, density);
+            let pat = PatternMatrix::from_dense(&dense, kh, kw, cin, cols);
+            pat.validate()?;
+            prop_assert!(pat.to_dense() == dense, "roundtrip mismatch");
+            let csr = CsrMatrix::from_dense(&dense, kh * kw * cin, cols);
+            prop_assert!(pat.nnz() == csr.nnz(), "nnz {} vs csr {}", pat.nnz(), csr.nnz());
+            let via_csr = PatternMatrix::from_csr(&csr, kh, kw, cin);
+            prop_assert!(via_csr == pat, "from_csr disagrees with from_dense");
+            prop_assert!(
+                count_kernels(&csr, cin) == pat.kernels(),
+                "count_kernels {} vs stored {}",
+                count_kernels(&csr, cin),
+                pat.kernels()
+            );
+            prop_assert!(pat.to_csr() == csr, "to_csr mismatch");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn disk_bytes_beat_csr_on_pattern_pruned_kernels() {
+        // pattern-pruned 3x3 layer: one index + one id per 4 values vs
+        // CSR's one index per value — pattern must be smaller even with
+        // the table accounted
+        let (kh, kw, cin, cols) = (3usize, 3usize, 16usize, 64usize);
+        let mut rng = Rng::new(7);
+        let mut mat = vec![0.0f32; kh * kw * cin * cols];
+        rng.fill_normal(&mut mat, 0.5);
+        prune_patterns(&mut mat, kh, kw, cin, cols, 0.8, 4, 8);
+        let csr = CsrMatrix::from_dense(&mat, kh * kw * cin, cols);
+        let pat = PatternMatrix::from_dense(&mat, kh, kw, cin, cols);
+        assert!(
+            pat.bytes_on_disk_idx16(32) < csr.bytes_on_disk_idx16(32),
+            "pattern {} vs csr {}",
+            pat.bytes_on_disk_idx16(32),
+            csr.bytes_on_disk_idx16(32)
+        );
+    }
+}

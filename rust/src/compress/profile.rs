@@ -1,34 +1,113 @@
 //! Per-layer sparsity profiles.
 //!
 //! A profile maps prunable layer names of an IR graph to sparsity in
-//! [0,1). `paper_profile` encodes the non-uniform shapes the ADMM papers
-//! report (convs pruned less, FC much more), scaled so the *overall*
-//! weight reduction matches the §3 claims; profiles can also be imported
-//! from the python ADMM run (`artifacts/compress_report.json`).
+//! [0,1) plus the *structure* the pruning imposed ([`PruneStructure`]):
+//! element-granular magnitude pruning, whole (br x bc) blocks, or PatDNN
+//! kernel patterns. The structure is what makes the per-layer format
+//! planner's block/pattern formats win end-to-end — a sparsity fraction
+//! alone cannot express it. `paper_profile` encodes the non-uniform
+//! shapes the ADMM papers report (convs pruned less, FC much more),
+//! scaled so the *overall* weight reduction matches the §3 claims;
+//! profiles can also be imported from the python ADMM run
+//! (`artifacts/compress_report.json`, whose per-layer entries carry an
+//! optional `structure` label since the block/pattern projections
+//! landed — see `docs/PIPELINE.md`).
 
 use crate::ir::Graph;
 use crate::util::json::Json;
 use std::collections::BTreeMap;
 
+/// How a layer's pruning support is structured — the contract between
+/// the build-time pruner (python ADMM or the native engine's generated
+/// weights) and the execution planner.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PruneStructure {
+    /// Scattered top-magnitude support (the paper's non-structured
+    /// pruning; executes as CSR or rematerialized dense).
+    #[default]
+    Element,
+    /// Whole (br x bc) tiles of the (K, N) weight view survive or die —
+    /// the support BSR stores without padding.
+    Block { br: usize, bc: usize },
+    /// Each surviving kernel keeps `entries` positions from a small
+    /// per-layer pattern library; whole kernels are connectivity-pruned
+    /// (PatDNN) — the support the pattern format exists for.
+    Pattern { entries: usize },
+}
+
+impl PruneStructure {
+    /// Stable textual name (`element`, `block4x4`, `pattern4`) — the
+    /// compress-report encoding.
+    pub fn label(&self) -> String {
+        match self {
+            PruneStructure::Element => "element".to_string(),
+            PruneStructure::Block { br, bc } => format!("block{br}x{bc}"),
+            PruneStructure::Pattern { entries } => format!("pattern{entries}"),
+        }
+    }
+
+    /// Inverse of [`PruneStructure::label`]; `None` on anything unknown
+    /// (callers fall back to [`PruneStructure::Element`]).
+    pub fn parse(s: &str) -> Option<PruneStructure> {
+        if s == "element" {
+            return Some(PruneStructure::Element);
+        }
+        if let Some(rest) = s.strip_prefix("block") {
+            let (a, b) = rest.split_once('x')?;
+            let (br, bc) = (a.parse().ok()?, b.parse().ok()?);
+            if br == 0 || bc == 0 {
+                return None;
+            }
+            return Some(PruneStructure::Block { br, bc });
+        }
+        if let Some(rest) = s.strip_prefix("pattern") {
+            let entries: usize = rest.parse().ok()?;
+            if entries == 0 {
+                return None;
+            }
+            return Some(PruneStructure::Pattern { entries });
+        }
+        None
+    }
+}
+
 #[derive(Debug, Clone, Default)]
 pub struct SparsityProfile {
     /// layer name -> sparsity (fraction of weights pruned).
     pub layers: BTreeMap<String, f64>,
+    /// layer name -> pruning structure; absent means
+    /// [`PruneStructure::Element`].
+    pub structures: BTreeMap<String, PruneStructure>,
 }
 
 impl SparsityProfile {
     pub fn uniform(graph: &Graph, sparsity: f64) -> Self {
+        Self::uniform_structured(graph, sparsity, PruneStructure::Element)
+    }
+
+    /// Uniform sparsity with an explicit pruning structure on every
+    /// prunable layer (what `cadnn plan --pruning pattern` builds).
+    pub fn uniform_structured(graph: &Graph, sparsity: f64, structure: PruneStructure) -> Self {
         let mut layers = BTreeMap::new();
+        let mut structures = BTreeMap::new();
         for n in &graph.nodes {
             if n.op.prunable() {
                 layers.insert(n.name.clone(), sparsity);
+                if structure != PruneStructure::Element {
+                    structures.insert(n.name.clone(), structure);
+                }
             }
         }
-        SparsityProfile { layers }
+        SparsityProfile { layers, structures }
     }
 
     pub fn get(&self, layer: &str) -> f64 {
         self.layers.get(layer).copied().unwrap_or(0.0)
+    }
+
+    /// The pruning structure recorded for a layer (Element when absent).
+    pub fn structure(&self, layer: &str) -> PruneStructure {
+        self.structures.get(layer).copied().unwrap_or_default()
     }
 
     /// Overall weight reduction rate over a graph: total / nnz.
@@ -59,18 +138,31 @@ impl SparsityProfile {
     }
 
     /// Import the measured per-layer profile from compress_report.json
-    /// ("measured" -> model -> "per_layer" -> {layer: {nnz, total}}).
+    /// ("measured" -> model -> "per_layer" -> {layer: {nnz, total,
+    /// structure?}}). The optional `structure` label (written by the
+    /// block/pattern ADMM projections) is parsed with
+    /// [`PruneStructure::parse`]; unknown or absent labels degrade to
+    /// element-granular, never fail the import.
     pub fn from_report(report: &Json, model: &str) -> Option<Self> {
         let per_layer = report.get("measured")?.get(model)?.get("per_layer")?;
         let mut layers = BTreeMap::new();
+        let mut structures = BTreeMap::new();
         if let Json::Obj(kv) = per_layer {
             for (name, v) in kv {
                 let nnz = v.get("nnz")?.as_f64()?;
                 let total = v.get("total")?.as_f64()?;
                 layers.insert(name.clone(), 1.0 - nnz / total.max(1.0));
+                let s = v
+                    .get("structure")
+                    .and_then(|s| s.as_str())
+                    .and_then(PruneStructure::parse)
+                    .unwrap_or_default();
+                if s != PruneStructure::Element {
+                    structures.insert(name.clone(), s);
+                }
             }
         }
-        Some(SparsityProfile { layers })
+        Some(SparsityProfile { layers, structures })
     }
 }
 
@@ -161,7 +253,7 @@ pub fn paper_profile(graph: &Graph) -> SparsityProfile {
             return SparsityProfile::uniform(graph, 0.5);
         }
     }
-    SparsityProfile { layers }
+    SparsityProfile { layers, structures: BTreeMap::new() }
 }
 
 #[cfg(test)]
@@ -215,5 +307,35 @@ mod tests {
         assert!((p.get("c1") - 2.0 / 3.0).abs() < 1e-9);
         assert!((p.get("f1") - 0.99).abs() < 1e-9);
         assert_eq!(p.get("missing"), 0.0);
+        assert_eq!(p.structure("c1"), PruneStructure::Element);
+    }
+
+    #[test]
+    fn structure_labels_roundtrip() {
+        for s in [
+            PruneStructure::Element,
+            PruneStructure::Block { br: 4, bc: 4 },
+            PruneStructure::Pattern { entries: 4 },
+        ] {
+            assert_eq!(PruneStructure::parse(&s.label()), Some(s));
+        }
+        assert_eq!(PruneStructure::parse("block0x4"), None);
+        assert_eq!(PruneStructure::parse("pattern0"), None);
+        assert_eq!(PruneStructure::parse("banded"), None);
+    }
+
+    #[test]
+    fn import_structure_from_report_json() {
+        let src = r#"{"measured": {"lenet5": {"per_layer": {
+            "c1": {"nnz": 64, "total": 576, "structure": "pattern4"},
+            "c2": {"nnz": 64, "total": 256, "structure": "block4x4"},
+            "f1": {"nnz": 480, "total": 48000, "structure": "martian"}
+        }}}}"#;
+        let j = Json::parse(src).unwrap();
+        let p = SparsityProfile::from_report(&j, "lenet5").unwrap();
+        assert_eq!(p.structure("c1"), PruneStructure::Pattern { entries: 4 });
+        assert_eq!(p.structure("c2"), PruneStructure::Block { br: 4, bc: 4 });
+        // unknown labels degrade to element, never fail the import
+        assert_eq!(p.structure("f1"), PruneStructure::Element);
     }
 }

@@ -17,6 +17,21 @@ use crate::error::CadnnError;
 
 /// A column (output-channel) permutation: `perm[new] = old`, i.e. column
 /// `new` of the reordered matrix is column `perm[new]` of the original.
+///
+/// # Examples
+///
+/// ```
+/// use cadnn::compress::reorder::Permutation;
+///
+/// let p = Permutation { perm: vec![2, 0, 3, 1] };
+/// p.validate().unwrap();
+/// let inv = p.inverse();
+/// // inverse composes back to the identity: perm[inv[old]] == old
+/// for old in 0..4u32 {
+///     assert_eq!(p.perm[inv.perm[old as usize] as usize], old);
+/// }
+/// assert!(Permutation::identity(4).is_identity());
+/// ```
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Permutation {
     pub perm: Vec<u32>,
@@ -69,6 +84,28 @@ impl Permutation {
 /// signature over `block_rows`-row stripes: columns whose nonzeros live in
 /// the same stripes sort together, so a (block_rows x bc) BSR encoding of
 /// the permuted matrix stores fewer, fuller blocks. Deterministic.
+///
+/// # Examples
+///
+/// ```
+/// use cadnn::compress::reorder::{cluster_columns, permute_cols, unpermute_cols_inplace};
+///
+/// // 8x4: columns 0/2 live in the top stripe, columns 1/3 in the bottom
+/// let mut dense = vec![0.0f32; 32];
+/// for r in 0..4 {
+///     dense[r * 4] = 1.0;
+///     dense[r * 4 + 2] = 1.0;
+/// }
+/// for r in 4..8 {
+///     dense[r * 4 + 1] = 1.0;
+///     dense[r * 4 + 3] = 1.0;
+/// }
+/// let p = cluster_columns(&dense, 8, 4, 4);
+/// // permute, then scatter back: identity
+/// let mut reordered = permute_cols(&dense, 8, 4, &p);
+/// unpermute_cols_inplace(&mut reordered, 8, 4, &p);
+/// assert_eq!(reordered, dense);
+/// ```
 pub fn cluster_columns(dense: &[f32], rows: usize, cols: usize, block_rows: usize) -> Permutation {
     assert_eq!(dense.len(), rows * cols);
     let sigs = column_signatures(

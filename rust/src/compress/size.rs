@@ -4,6 +4,7 @@
 
 use super::bsr::BsrMatrix;
 use super::csr::CsrMatrix;
+use super::pattern::PatternMatrix;
 use super::profile::SparsityProfile;
 use crate::ir::Graph;
 
@@ -52,12 +53,17 @@ pub fn report(graph: &Graph, profile: &SparsityProfile) -> SizeReport {
 /// One format's on-disk footprint for a concrete pruned matrix.
 #[derive(Debug, Clone)]
 pub struct FormatBytes {
-    /// `csr`, `bsr4x1`, `bsr4x4` (matching `planner::SparseFormat` labels).
+    /// `csr`, `bsr4x1`, `bsr4x4`, `pattern` (matching
+    /// `planner::SparseFormat` labels).
     pub format: String,
     /// On-disk bytes with 16-bit indices and `value_bits`-bit values.
+    /// For `pattern` this includes the shared pattern table (positions +
+    /// extents) next to the per-kernel ids — the table is part of the
+    /// layer's payload, not free metadata.
     pub bytes_idx16: usize,
-    /// nnz / stored values — 1.0 for CSR; BSR pays padding below 1.0 and
-    /// saves on indices (one per block instead of one per value).
+    /// nnz / stored values — 1.0 for CSR and Pattern (no padding); BSR
+    /// pays padding below 1.0 and saves on indices (one per block
+    /// instead of one per value).
     pub fill_ratio: f64,
 }
 
@@ -65,8 +71,11 @@ pub struct FormatBytes {
 /// This is the fill-ratio accounting side of the planner's tradeoff: a
 /// block format can be *smaller* than CSR despite padding (fewer
 /// indices) when the sparsity is block-structured, and much larger when
-/// it is scattered.
-pub fn format_bytes(csr: &CsrMatrix, value_bits: usize) -> Vec<FormatBytes> {
+/// it is scattered. `hwio` is the layer's `[kh, kw, cin, cout]` weight
+/// shape; the pattern row appears whenever the shape is
+/// pattern-eligible (spatial kernels within the table ceiling — see
+/// [`crate::planner::pattern_eligible`]).
+pub fn format_bytes(csr: &CsrMatrix, value_bits: usize, hwio: [usize; 4]) -> Vec<FormatBytes> {
     let mut out = vec![FormatBytes {
         format: "csr".to_string(),
         bytes_idx16: csr.bytes_on_disk_idx16(value_bits),
@@ -78,6 +87,14 @@ pub fn format_bytes(csr: &CsrMatrix, value_bits: usize) -> Vec<FormatBytes> {
             format: format!("bsr{br}x{bc}"),
             bytes_idx16: b.bytes_on_disk_idx16(value_bits),
             fill_ratio: b.fill_ratio(),
+        });
+    }
+    if crate::planner::pattern_eligible(csr, hwio) {
+        let p = PatternMatrix::from_csr(csr, hwio[0], hwio[1], hwio[2]);
+        out.push(FormatBytes {
+            format: "pattern".to_string(),
+            bytes_idx16: p.bytes_on_disk_idx16(value_bits),
+            fill_ratio: 1.0,
         });
     }
     out
@@ -143,7 +160,7 @@ mod tests {
             }
         }
         let csr = CsrMatrix::from_dense(&blocky, k, n);
-        let sizes = format_bytes(&csr, 32);
+        let sizes = format_bytes(&csr, 32, [1, 1, k, n]);
         let by = |f: &str| sizes.iter().find(|s| s.format == f).unwrap().clone();
         assert!((by("bsr4x4").fill_ratio - 1.0).abs() < 1e-12);
         assert!(by("bsr4x4").bytes_idx16 < by("csr").bytes_idx16);
@@ -156,11 +173,46 @@ mod tests {
             }
         }
         let csr2 = CsrMatrix::from_dense(&scattered, k, n);
-        let sizes2 = format_bytes(&csr2, 32);
+        let sizes2 = format_bytes(&csr2, 32, [1, 1, k, n]);
         let b44 = sizes2.iter().find(|s| s.format == "bsr4x4").unwrap();
         assert!(b44.fill_ratio < 0.5, "fill {}", b44.fill_ratio);
         let c = sizes2.iter().find(|s| s.format == "csr").unwrap();
         assert!(b44.bytes_idx16 > c.bytes_idx16);
+    }
+
+    /// Pins the exact per-format byte formulas on a hand-computable
+    /// matrix, so storage accounting cannot drift silently — in
+    /// particular the pattern row must charge the shared pattern table
+    /// (positions + extents), not just per-kernel ids.
+    #[test]
+    fn format_bytes_pinned_counts() {
+        // 3x3 kernels, cin=2, cout=4 (K=18, N=4); three surviving
+        // kernels over two 4-entry patterns, nnz = 12
+        let (kh, kw, cin, cout) = (3usize, 3usize, 2usize, 4usize);
+        let mut dense = vec![0.0f32; kh * kw * cin * cout];
+        let mut put = |pos: usize, ci: usize, co: usize| {
+            dense[(pos * cin + ci) * cout + co] = 1.0;
+        };
+        for pos in [0usize, 2, 4, 6] {
+            put(pos, 0, 0); // kernel (0,0), pattern {0,2,4,6}
+            put(pos, 1, 1); // kernel (1,1), same pattern
+        }
+        for pos in [1usize, 3, 5, 7] {
+            put(pos, 1, 3); // kernel (1,3), pattern {1,3,5,7}
+        }
+        let csr = CsrMatrix::from_dense(&dense, kh * kw * cin, cout);
+        assert_eq!(csr.nnz(), 12);
+        let sizes = format_bytes(&csr, 32, [kh, kw, cin, cout]);
+        let by = |f: &str| sizes.iter().find(|s| s.format == f).unwrap().bytes_idx16;
+        // CSR: 19*4 row_ptr + 12*2 idx + 12*4 values
+        assert_eq!(by("csr"), 76 + 24 + 48);
+        // BSR 4x1: 12 blocks -> 6*4 row_ptr + 12*2 idx + 48*4 values
+        assert_eq!(by("bsr4x1"), 24 + 24 + 192);
+        // BSR 4x4: 4 blocks -> 6*4 row_ptr + 4*2 idx + 64*4 values
+        assert_eq!(by("bsr4x4"), 24 + 8 + 256);
+        // Pattern: 3*4 kernel_ptr + 3*2 col idx + 3*1 pattern ids
+        //          + (8*1 positions + 3*2 extents) table + 12*4 values
+        assert_eq!(by("pattern"), 12 + 6 + 3 + 8 + 6 + 48);
     }
 
     #[test]

@@ -8,9 +8,10 @@
 //! table and recycle intermediate tensors through a size-keyed pool.
 //! `cadnn::api::Session` does exactly this.
 
-use crate::compress::bsr::BsrMatrix;
+use crate::compress::bsr::{self, BsrMatrix};
 use crate::compress::csr::CsrMatrix;
-use crate::compress::profile::SparsityProfile;
+use crate::compress::pattern::{self, PatternMatrix};
+use crate::compress::profile::{PruneStructure, SparsityProfile};
 use crate::compress::reorder::{self, Permutation};
 use crate::error::CadnnError;
 use crate::ir::ops::{ActKind, Op, PoolKind};
@@ -45,6 +46,9 @@ enum NodeWeights {
         epi: Epilogue,
         cutover: usize,
     },
+    /// PatDNN pattern weights (per-kernel pattern id + shared table) for
+    /// pattern-pruned spatial conv layers the planner moved off CSR.
+    PatternSparse { pat: PatternMatrix, epi: Epilogue, cutover: usize },
     /// Depthwise (kh, kw, c) weights.
     Dw { w: Tensor, epi: Epilogue },
     /// Standalone BatchNorm parameters (unfused personalities).
@@ -243,6 +247,42 @@ fn prune_matrix(mat: &mut [f32], sparsity: f64) {
     mat[*nth] = 0.0;
 }
 
+/// Prune a weight matrix in the structure the profile prescribes: the
+/// native-engine stand-in for the python ADMM projections (element /
+/// block / pattern z-steps), so the planner sees the same support shape
+/// a real compressed artifact would carry. Pattern structure needs
+/// spatial kernel positions; on 1x1 / GEMM-shaped layers it degrades to
+/// the element cut.
+fn prune_matrix_structured(
+    mat: &mut [f32],
+    hwio: [usize; 4],
+    sparsity: f64,
+    structure: PruneStructure,
+) {
+    let (k, n) = (hwio[0] * hwio[1] * hwio[2], hwio[3]);
+    debug_assert_eq!(mat.len(), k * n);
+    match structure {
+        PruneStructure::Element => prune_matrix(mat, sparsity),
+        PruneStructure::Block { br, bc } => bsr::prune_blocks(mat, k, n, br, bc, sparsity),
+        PruneStructure::Pattern { entries } => {
+            if hwio[0] * hwio[1] > 1 {
+                pattern::prune_patterns(
+                    mat,
+                    hwio[0],
+                    hwio[1],
+                    hwio[2],
+                    hwio[3],
+                    sparsity,
+                    entries,
+                    pattern::DEFAULT_LIBRARY,
+                );
+            } else {
+                prune_matrix(mat, sparsity);
+            }
+        }
+    }
+}
+
 fn act_flags(act: ActKind) -> (bool, bool) {
     match act {
         ActKind::Relu => (true, false),
@@ -326,16 +366,13 @@ impl ModelInstance {
                     let epi = Epilogue::bn_act(scale, shift, relu, relu6);
                     let sparsity = sparsity_of(personality, profile, &graph, n.id);
                     if sparsity > 0.0 {
-                        prune_matrix(&mut mat, sparsity);
+                        let hwio = [*kh, *kw, *cin, *cout];
+                        let structure = structure_of(personality, profile, &graph, n.id);
+                        prune_matrix_structured(&mut mat, hwio, sparsity, structure);
                         let csr = CsrMatrix::from_dense(&mat, k, *cout);
                         weights.insert(
                             n.id,
-                            NodeWeights::Sparse {
-                                csr,
-                                hwio: [*kh, *kw, *cin, *cout],
-                                epi,
-                                cutover: PARALLEL_M_CUTOVER,
-                            },
+                            NodeWeights::Sparse { csr, hwio, epi, cutover: PARALLEL_M_CUTOVER },
                         );
                     } else {
                         weights.insert(
@@ -358,7 +395,8 @@ impl ModelInstance {
                     let sparsity = sparsity_of(personality, profile, &graph, n.id);
                     let hwio = [1, 1, *k, *nn];
                     if sparsity > 0.0 {
-                        prune_matrix(&mut mat, sparsity);
+                        let structure = structure_of(personality, profile, &graph, n.id);
+                        prune_matrix_structured(&mut mat, hwio, sparsity, structure);
                         let csr = CsrMatrix::from_dense(&mat, *k, *nn);
                         weights.insert(
                             n.id,
@@ -438,6 +476,14 @@ impl ModelInstance {
                         mat: csr.to_dense(),
                         hwio: *hwio,
                         epi: epi.clone(),
+                    };
+                    *w = new_w;
+                }
+                SparseFormat::Pattern => {
+                    let new_w = NodeWeights::PatternSparse {
+                        pat: PatternMatrix::from_csr(csr, hwio[0], hwio[1], hwio[2]),
+                        epi: epi.clone(),
+                        cutover: lp.parallel_cutover,
                     };
                     *w = new_w;
                 }
@@ -655,6 +701,9 @@ impl ModelInstance {
                     }
                     out
                 }
+                Some(NodeWeights::PatternSparse { pat, epi, cutover }) => {
+                    K::conv2d_pattern(x, pat, *kh, *kw, *stride, *padh, *padw, epi, *cutover)
+                }
                 _ => return Err(missing(&n.name)),
             },
             Op::Gemm { k, n: nn, out_shape, .. } => {
@@ -679,6 +728,11 @@ impl ModelInstance {
                         if let Some(p) = perm {
                             reorder::unpermute_cols_inplace(&mut out.data, m, *nn, p);
                         }
+                    }
+                    Some(NodeWeights::PatternSparse { pat, epi, cutover }) => {
+                        crate::kernels::pattern::pattern_gemm_parallel_cutover(
+                            &x.data, pat, &mut out.data, m, epi, *cutover,
+                        );
                     }
                     _ => return Err(missing(&n.name)),
                 }
@@ -781,6 +835,20 @@ fn sparsity_of(
         return 0.0;
     }
     profile.map(|p| p.get(&n.name)).unwrap_or(0.0)
+}
+
+fn structure_of(
+    personality: Personality,
+    profile: Option<&SparsityProfile>,
+    graph: &Graph,
+    id: NodeId,
+) -> PruneStructure {
+    if !personality.sparse() {
+        return PruneStructure::Element;
+    }
+    profile
+        .map(|p| p.structure(&graph.node(id).name))
+        .unwrap_or_default()
 }
 
 #[cfg(test)]
@@ -933,6 +1001,52 @@ mod tests {
         let out_auto = auto.execute(&x).unwrap();
         assert!(out_csr.max_abs_diff(&out_bsr) < 1e-3, "{}", out_csr.max_abs_diff(&out_bsr));
         assert!(out_csr.max_abs_diff(&out_auto) < 1e-3, "{}", out_csr.max_abs_diff(&out_auto));
+    }
+
+    /// A pattern-structured profile must reach the pattern format under
+    /// Auto planning and compute the same function as the CSR baseline
+    /// on the identical pruned weights.
+    #[test]
+    fn pattern_profile_plans_and_executes_pattern_format() {
+        use crate::ir::Shape;
+        let mut g = Graph::new("minipattern", Shape::nhwc(1, 8, 8, 8));
+        let c1 = g.add("c1", Op::conv(3, 3, 8, 32, 1, 1), vec![0]);
+        let b1 = g.add("c1_bn", Op::BatchNorm { c: 32 }, vec![c1]);
+        g.add("c1_relu", Op::Activation { kind: ActKind::Relu }, vec![b1]);
+        g.validate().unwrap();
+        let x = input_for(&g, 13);
+
+        let profile = SparsityProfile::uniform_structured(
+            &g,
+            0.8,
+            PruneStructure::Pattern { entries: 4 },
+        );
+        let build = |policy: FormatPolicy| {
+            ModelInstance::build_planned(
+                &g,
+                Personality::CadnnSparse,
+                Some(&profile),
+                None,
+                1 << 20,
+                policy,
+            )
+            .unwrap()
+        };
+        let auto = build(FormatPolicy::Auto);
+        assert_eq!(
+            auto.plan.get("c1").map(|lp| lp.format),
+            Some(SparseFormat::Pattern),
+            "pattern-pruned conv must plan Pattern: {:?}",
+            auto.plan
+        );
+        assert!(
+            matches!(auto.weights.get(&1), Some(NodeWeights::PatternSparse { .. })),
+            "payload must be rewritten to the pattern encoding"
+        );
+        let csr = build(FormatPolicy::Csr);
+        let out_a = auto.execute(&x).unwrap();
+        let out_c = csr.execute(&x).unwrap();
+        assert!(out_a.max_abs_diff(&out_c) < 1e-3, "{}", out_a.max_abs_diff(&out_c));
     }
 
     #[test]

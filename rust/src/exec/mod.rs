@@ -11,10 +11,13 @@
 //! | `CadnnSparse` | fusion + 1x1->GEMM  | planned¹      | tuned   | pruned  |
 //!
 //! ¹ CadnnSparse's per-layer engine is chosen by [`crate::planner`]:
-//! scalar CSR, block-sparse BSR (optionally filter-kernel-reordered), or
-//! dense rematerialization, whichever the cost model (or the tuner's
-//! measured mode) expects to be fastest for that layer's sparsity
-//! structure.
+//! scalar CSR, block-sparse BSR (optionally filter-kernel-reordered),
+//! PatDNN pattern-sparse, or dense rematerialization, whichever the cost
+//! model (or the tuner's measured mode) expects to be fastest for that
+//! layer's sparsity structure. Pruning follows the profile's
+//! [`crate::compress::PruneStructure`] (element / block / pattern), so
+//! the support the planner sees matches what the ADMM projections would
+//! produce.
 //!
 //! Weights are generated deterministically from layer names, so every
 //! personality of the same model computes the *same function* (the

@@ -9,10 +9,12 @@
 
 use super::bsr::bsr_gemm_parallel_cutover;
 use super::gemm::gemm_parallel;
+use super::pattern::pattern_gemm_parallel_cutover;
 use super::sparse::csr_gemm_parallel_cutover;
 use super::{Epilogue, Tensor};
 use crate::compress::bsr::BsrMatrix;
 use crate::compress::csr::CsrMatrix;
+use crate::compress::pattern::PatternMatrix;
 use crate::passes::layout::TileConfig;
 
 /// Direct NHWC convolution, weights HWIO (kh, kw, cin, cout), groups=1.
@@ -191,6 +193,35 @@ pub fn conv2d_bsr(
     let m = x.n() * ho * wo;
     let mut out = Tensor::zeros(&[x.n(), ho, wo, cout]);
     bsr_gemm_parallel_cutover(&patches.data, w, &mut out.data, m, epilogue, cutover);
+    out
+}
+
+/// Pattern-compressed fused conv: PatDNN pattern weights over the same
+/// (k, cout) view. The pattern positions index the same (ky, kx, cin)
+/// im2col column order the dense reshape uses.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_pattern(
+    x: &Tensor,
+    w: &PatternMatrix,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    padh: usize,
+    padw: usize,
+    epilogue: &Epilogue,
+    cutover: usize,
+) -> Tensor {
+    let cout = w.cols;
+    if kh == 1 && kw == 1 && stride == 1 && padh == 0 && padw == 0 {
+        let m = x.n() * x.h() * x.w();
+        let mut out = Tensor::zeros(&[x.n(), x.h(), x.w(), cout]);
+        pattern_gemm_parallel_cutover(&x.data, w, &mut out.data, m, epilogue, cutover);
+        return out;
+    }
+    let (patches, ho, wo) = im2col(x, kh, kw, stride, padh, padw);
+    let m = x.n() * ho * wo;
+    let mut out = Tensor::zeros(&[x.n(), ho, wo, cout]);
+    pattern_gemm_parallel_cutover(&patches.data, w, &mut out.data, m, epilogue, cutover);
     out
 }
 
@@ -413,6 +444,9 @@ mod tests {
         let bsr = BsrMatrix::from_dense(&w.data, 36, 8, 4, 4);
         let got_b = conv2d_bsr(&x, &bsr, 3, 3, 1, 1, 1, &Epilogue::None, cut);
         assert!(dense.max_abs_diff(&got_b) < 1e-4);
+        let pat = PatternMatrix::from_dense(&w.data, 3, 3, 4, 8);
+        let got_p = conv2d_pattern(&x, &pat, 3, 3, 1, 1, 1, &Epilogue::None, cut);
+        assert!(dense.max_abs_diff(&got_p) < 1e-4);
     }
 
     #[test]

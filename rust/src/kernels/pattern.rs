@@ -1,0 +1,258 @@
+//! Pattern-sparse kernels: activations (dense, M x K) times
+//! pattern-encoded weights (K x N) — the PatDNN execution path.
+//!
+//! Where the CSR kernel pays one column index and one scattered
+//! read-modify-write per nonzero, the pattern kernel walks *kernels*
+//! (surviving `(ci, co)` slices): it reads the kernel's `entries` values
+//! contiguously, gathers the matching activations at offsets fixed by
+//! the pattern id, reduces them in a register accumulator, and touches
+//! `c[m, co]` exactly once per kernel. The 4-entry case (PatDNN's
+//! canonical pattern size) is fully unrolled; other sizes take a short
+//! generic loop. Per-pattern activation offsets (`pos * cin`) are
+//! precomputed once per call, so the inner loop does no index
+//! arithmetic beyond one add.
+//!
+//! Accumulation order per output element is (input channel, kernel
+//! position) — ascending K *within* a kernel. The planner's cost model
+//! for this kernel lives at `planner::COST_PATTERN_VAL` /
+//! `planner::COST_PATTERN_KERNEL`.
+
+use super::{Epilogue, SendPtr, PARALLEL_M_CUTOVER};
+use crate::compress::pattern::PatternMatrix;
+use crate::util::pool;
+
+/// C(M,N) = A(M,K) @ W_pattern(K,N), single thread.
+pub fn pattern_gemm(a: &[f32], w: &PatternMatrix, c: &mut [f32], m: usize, epilogue: &Epilogue) {
+    let (k, n) = (w.rows, w.cols);
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(c.len(), m * n);
+    let offs = row_offsets(w);
+    pattern_gemm_rows(a, w, &offs, c, 0, m, k, n);
+    epilogue.apply(c, m, n);
+}
+
+/// Per-pattern activation row offsets (`pos * cin`), one per table
+/// position — resolved once per call instead of once per FMA.
+fn row_offsets(w: &PatternMatrix) -> Vec<usize> {
+    w.pat_pos.iter().map(|&p| p as usize * w.cin).collect()
+}
+
+#[allow(clippy::too_many_arguments)]
+fn pattern_gemm_rows(
+    a: &[f32],
+    w: &PatternMatrix,
+    offs: &[usize],
+    c: &mut [f32],
+    m0: usize,
+    m1: usize,
+    k: usize,
+    n: usize,
+) {
+    c[m0 * n..m1 * n].fill(0.0);
+    const MR: usize = 4;
+    let mut i = m0;
+    while i + MR <= m1 {
+        for ci in 0..w.cin {
+            let (s, e) = (w.kernel_ptr[ci] as usize, w.kernel_ptr[ci + 1] as usize);
+            for kn in s..e {
+                let co = w.col_idx[kn] as usize;
+                let pid = w.pat_idx[kn] as usize;
+                let ps = w.pat_ptr[pid] as usize;
+                let pe = w.pat_ptr[pid + 1] as usize;
+                let vals = &w.values[w.val_ptr[kn] as usize..w.val_ptr[kn + 1] as usize];
+                if pe - ps == 4 {
+                    // canonical 4-entry pattern, fully unrolled
+                    let o =
+                        [offs[ps] + ci, offs[ps + 1] + ci, offs[ps + 2] + ci, offs[ps + 3] + ci];
+                    for r in 0..MR {
+                        let base = (i + r) * k;
+                        let acc = a[base + o[0]] * vals[0]
+                            + a[base + o[1]] * vals[1]
+                            + a[base + o[2]] * vals[2]
+                            + a[base + o[3]] * vals[3];
+                        c[(i + r) * n + co] += acc;
+                    }
+                } else {
+                    for r in 0..MR {
+                        let base = (i + r) * k;
+                        let mut acc = 0.0f32;
+                        for (x, &v) in vals.iter().enumerate() {
+                            acc += a[base + offs[ps + x] + ci] * v;
+                        }
+                        c[(i + r) * n + co] += acc;
+                    }
+                }
+            }
+        }
+        i += MR;
+    }
+    // remainder rows (< MR), one at a time
+    for ir in i..m1 {
+        let base = ir * k;
+        for ci in 0..w.cin {
+            let (s, e) = (w.kernel_ptr[ci] as usize, w.kernel_ptr[ci + 1] as usize);
+            for kn in s..e {
+                let co = w.col_idx[kn] as usize;
+                let pid = w.pat_idx[kn] as usize;
+                let ps = w.pat_ptr[pid] as usize;
+                let vals = &w.values[w.val_ptr[kn] as usize..w.val_ptr[kn + 1] as usize];
+                let mut acc = 0.0f32;
+                for (x, &v) in vals.iter().enumerate() {
+                    acc += a[base + offs[ps + x] + ci] * v;
+                }
+                c[ir * n + co] += acc;
+            }
+        }
+    }
+}
+
+/// Multithreaded pattern GEMM over disjoint row panels, default cutover.
+pub fn pattern_gemm_parallel(
+    a: &[f32],
+    w: &PatternMatrix,
+    c: &mut [f32],
+    m: usize,
+    epilogue: &Epilogue,
+) {
+    pattern_gemm_parallel_cutover(a, w, c, m, epilogue, PARALLEL_M_CUTOVER);
+}
+
+/// Multithreaded pattern GEMM with a caller-chosen serial cutover (the
+/// planner's per-layer override; see [`PARALLEL_M_CUTOVER`]).
+pub fn pattern_gemm_parallel_cutover(
+    a: &[f32],
+    w: &PatternMatrix,
+    c: &mut [f32],
+    m: usize,
+    epilogue: &Epilogue,
+    cutover: usize,
+) {
+    let (k, n) = (w.rows, w.cols);
+    let threads = pool::global().size().min(m.div_ceil(64)).max(1);
+    if threads <= 1 || m < cutover {
+        return pattern_gemm(a, w, c, m, epilogue);
+    }
+    let offs = row_offsets(w);
+    let chunk = m.div_ceil(threads);
+    let cptr = SendPtr(c.as_mut_ptr());
+    pool::parallel_for_n(threads, threads, |t| {
+        let m0 = t * chunk;
+        let m1 = ((t + 1) * chunk).min(m);
+        if m0 >= m1 {
+            return;
+        }
+        // SAFETY: disjoint row panels.
+        let c_all = unsafe { std::slice::from_raw_parts_mut(cptr.get(), m * n) };
+        pattern_gemm_rows(a, w, &offs, c_all, m0, m1, k, n);
+        epilogue.apply(&mut c_all[m0 * n..m1 * n], m1 - m0, n);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::pattern::prune_patterns;
+    use crate::kernels::gemm::gemm_naive;
+    use crate::prop_assert;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn sparse_dense(rng: &mut Rng, len: usize, density: f64) -> Vec<f32> {
+        let mut dense = vec![0.0f32; len];
+        for v in dense.iter_mut() {
+            if rng.f64() < density {
+                *v = rng.normal() as f32;
+            }
+        }
+        dense
+    }
+
+    #[test]
+    fn pattern_matches_dense_gemm() {
+        let (kh, kw, cin, n) = (3usize, 3usize, 7usize, 13usize);
+        let k = kh * kw * cin;
+        let m = 11;
+        let mut rng = Rng::new(1);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+        let dense = sparse_dense(&mut rng, k * n, 0.25);
+        let pat = PatternMatrix::from_dense(&dense, kh, kw, cin, n);
+        pat.validate().unwrap();
+        let mut c_ref = vec![0.0; m * n];
+        let mut c = vec![0.0; m * n];
+        gemm_naive(&a, &dense, &mut c_ref, m, k, n);
+        pattern_gemm(&a, &pat, &mut c, m, &Epilogue::None);
+        for (x, y) in c_ref.iter().zip(&c) {
+            assert!((x - y).abs() < 1e-4, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let (kh, kw, cin, n) = (3usize, 3usize, 8usize, 16usize);
+        let k = kh * kw * cin;
+        let m = 300;
+        let mut rng = Rng::new(3);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+        let mut dense = vec![0.0f32; k * n];
+        rng.fill_normal(&mut dense, 0.5);
+        prune_patterns(&mut dense, kh, kw, cin, n, 0.8, 4, 8);
+        let pat = PatternMatrix::from_dense(&dense, kh, kw, cin, n);
+        let mut c1 = vec![0.0; m * n];
+        let mut c2 = vec![0.0; m * n];
+        pattern_gemm(&a, &pat, &mut c1, m, &Epilogue::None);
+        pattern_gemm_parallel(&a, &pat, &mut c2, m, &Epilogue::None);
+        assert_eq!(c1, c2, "row panels must not change the result");
+    }
+
+    #[test]
+    fn cutover_forces_serial_with_identical_result() {
+        let (kh, kw, cin, n) = (3usize, 3usize, 4usize, 8usize);
+        let k = kh * kw * cin;
+        let m = 200;
+        let mut rng = Rng::new(5);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+        let dense = sparse_dense(&mut rng, k * n, 0.3);
+        let pat = PatternMatrix::from_dense(&dense, kh, kw, cin, n);
+        let mut c1 = vec![0.0; m * n];
+        let mut c2 = vec![0.0; m * n];
+        pattern_gemm(&a, &pat, &mut c1, m, &Epilogue::None);
+        pattern_gemm_parallel_cutover(&a, &pat, &mut c2, m, &Epilogue::None, m + 1);
+        assert_eq!(c1, c2, "serial-cutover path must be the serial kernel");
+    }
+
+    #[test]
+    fn empty_weights_give_zero_plus_epilogue() {
+        let (m, k, n) = (6, 18, 4);
+        let a = vec![1.0; m * k];
+        let pat = PatternMatrix::from_dense(&vec![0.0; k * n], 3, 3, 2, n);
+        let mut c = vec![9.0; m * n];
+        let ep = Epilogue::bias_relu(vec![0.5; n], false);
+        pattern_gemm(&a, &pat, &mut c, m, &ep);
+        assert!(c.iter().all(|&v| v == 0.5));
+    }
+
+    #[test]
+    fn prop_pattern_gemm_random() {
+        prop::check_n("pattern gemm vs dense", 40, |rng: &mut Rng| {
+            let kh = [1usize, 2, 3][rng.below(3)];
+            let kw = [2usize, 3][rng.below(2)];
+            let cin = rng.range(1, 9);
+            let n = rng.range(1, 20);
+            let k = kh * kw * cin;
+            let m = rng.range(1, 20);
+            let density = rng.f64() * rng.f64();
+            let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+            let dense = sparse_dense(rng, k * n, density);
+            let pat = PatternMatrix::from_dense(&dense, kh, kw, cin, n);
+            pat.validate()?;
+            let mut c1 = vec![0.0; m * n];
+            let mut c2 = vec![0.0; m * n];
+            gemm_naive(&a, &dense, &mut c1, m, k, n);
+            pattern_gemm(&a, &pat, &mut c2, m, &Epilogue::None);
+            for (x, y) in c1.iter().zip(&c2) {
+                prop_assert!((x - y).abs() < 1e-3, "{} vs {}", x, y);
+            }
+            Ok(())
+        });
+    }
+}

@@ -36,6 +36,14 @@
 //! Errors are typed ([`error::CadnnError`]) below the API boundary and
 //! `anyhow` at the binary/example boundary.
 //!
+//! # The compression pipeline
+//!
+//! The full train → ADMM prune (element / block / PatDNN pattern) →
+//! profile export → `cadnn plan` → planned execution walkthrough lives
+//! in `docs/PIPELINE.md`; `docs/FORMATS.md` documents the sparse weight
+//! formats ([`compress`]) and the per-layer planner ([`planner`]) that
+//! turn those profiles into kernel choices.
+//!
 //! # Layer map
 //!
 //! | module        | role                                                     |
@@ -46,9 +54,9 @@
 //! | [`models`]    | graph builders (ResNet-50, MobileNets, Inception, §3 nets)|
 //! | [`passes`]    | fusion / 1x1→GEMM / layout / load-elimination passes     |
 //! | [`exec`]      | native executor: personalities, instances, scratch reuse |
-//! | [`kernels`]   | dense/CSR/BSR GEMM, conv engines, epilogues              |
-//! | [`compress`]  | CSR/BSR weights, reordering, profiles, size accounting   |
-//! | [`planner`]   | per-layer sparse-format choice (Dense/CSR/BSR + reorder) |
+//! | [`kernels`]   | dense/CSR/BSR/pattern GEMM, conv engines, epilogues      |
+//! | [`compress`]  | CSR/BSR/pattern weights, reordering, profiles, sizes     |
+//! | [`planner`]   | per-layer format choice (Dense/CSR/BSR/Pattern + reorder)|
 //! | [`tuner`]     | optimization-parameter selection (paper §4)              |
 //! | [`runtime`]   | PJRT artifact loader (vendored stub offline)             |
 //! | [`coordinator`]| request queue → dynamic batcher → any backend           |

@@ -5,10 +5,11 @@
 //! cadnn table2                              regenerate Table 2
 //! cadnn compress [--report PATH]            §3 compression claims
 //! cadnn tune [--model NAME]                 optimization-parameter selection demo
-//! cadnn plan [--model NAME] [--format auto|csr|bsr] [--measured]
+//! cadnn plan [--model NAME] [--format auto|csr|bsr|pattern]
+//!            [--pruning element|block|pattern] [--measured]
 //!                                           per-layer sparse-format plan
 //! cadnn serve [--model M] [--variant V] [--requests N] [--rps R] [--native]
-//!             [--format auto|csr|bsr]       serve a Poisson trace and report
+//!             [--format auto|csr|bsr|pattern] serve a Poisson trace and report
 //!                                           (--native: no artifacts needed —
 //!                                           batcher over the native engine)
 //! cadnn calibrate                           host kernel calibration table
@@ -40,7 +41,21 @@ fn format_policy(args: &[String]) -> Result<FormatPolicy> {
         None | Some("auto") => Ok(FormatPolicy::Auto),
         Some("csr") => Ok(FormatPolicy::Csr),
         Some("bsr") => Ok(FormatPolicy::Bsr),
-        Some(other) => Err(anyhow!("unknown --format '{other}' (auto|csr|bsr)")),
+        Some("pattern") => Ok(FormatPolicy::Pattern),
+        Some(other) => Err(anyhow!("unknown --format '{other}' (auto|csr|bsr|pattern)")),
+    }
+}
+
+/// `--pruning` structure applied on top of the paper profile's per-layer
+/// sparsities (element = the paper's scattered magnitude pruning; block /
+/// pattern = the structured ADMM projections).
+fn prune_structure(args: &[String]) -> Result<cadnn::compress::PruneStructure> {
+    use cadnn::compress::PruneStructure;
+    match opt(args, "--pruning").as_deref() {
+        None | Some("element") => Ok(PruneStructure::Element),
+        Some("block") => Ok(PruneStructure::Block { br: 4, bc: 4 }),
+        Some("pattern") => Ok(PruneStructure::Pattern { entries: 4 }),
+        Some(other) => Err(anyhow!("unknown --pruning '{other}' (element|block|pattern)")),
     }
 }
 
@@ -70,8 +85,15 @@ fn main() -> Result<()> {
 fn cmd_plan(args: &[String]) -> Result<()> {
     let model = opt(args, "--model").unwrap_or_else(|| "resnet50".into());
     let policy = format_policy(args)?;
+    let structure = prune_structure(args)?;
     let g = models::build(&model, 1).ok_or_else(|| anyhow!("unknown model {model}"))?;
-    let profile = paper_profile(&g);
+    let mut profile = paper_profile(&g);
+    if structure != cadnn::compress::PruneStructure::Element {
+        let names: Vec<String> = profile.layers.keys().cloned().collect();
+        for name in names {
+            profile.structures.insert(name, structure);
+        }
+    }
     let mut builder = Engine::native(&model)
         .personality(Personality::CadnnSparse)
         .sparsity_profile(profile.clone())

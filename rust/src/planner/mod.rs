@@ -5,11 +5,17 @@
 //! and a block format only wins when the nonzeros actually cluster. The
 //! planner closes that loop. Given a pruned layer (its [`CsrMatrix`],
 //! GEMM row count and HWIO weight shape) and a [`FormatPolicy`], it
-//! chooses Dense / CSR / BSR{br,bc} — plus whether filter-kernel
-//! reordering ([`crate::compress::reorder`]) is worth carrying and which
-//! serial→parallel cutover the kernels should use — and records every
-//! choice in an [`ExecPlan`] that the executor dispatches on and the
-//! artifact manifest serializes.
+//! chooses Dense / CSR / BSR{br,bc} / Pattern — plus whether
+//! filter-kernel reordering ([`crate::compress::reorder`]) is worth
+//! carrying and which serial→parallel cutover the kernels should use —
+//! and records every choice in an [`ExecPlan`] that the executor
+//! dispatches on and the artifact manifest serializes.
+//!
+//! The Pattern format ([`crate::compress::pattern`]) is only considered
+//! for spatial convolutions whose kernels fit the pattern table
+//! (`1 < kh*kw <= 16`); it wins on *pattern-pruned* profiles (the PatDNN
+//! regime `docs/PIPELINE.md` walks through) where it stores no padding
+//! and amortizes one index over each kernel's entries.
 //!
 //! Two modes, mirroring the tuner's split:
 //! - **heuristic** ([`choose`]): a relative cost model over exact fill
@@ -27,6 +33,8 @@
 use crate::compress::bsr;
 use crate::compress::bsr::BsrMatrix;
 use crate::compress::csr::CsrMatrix;
+use crate::compress::pattern;
+use crate::compress::pattern::PatternMatrix;
 use crate::compress::reorder;
 use crate::kernels::{Epilogue, PARALLEL_M_CUTOVER};
 use crate::passes::layout::TileConfig;
@@ -35,6 +43,23 @@ use crate::util::stats;
 use std::collections::BTreeMap;
 
 /// How a layer's weights are stored and which kernel runs it.
+///
+/// # Examples
+///
+/// ```
+/// use cadnn::planner::SparseFormat;
+///
+/// // labels are the stable manifest encoding and parse back losslessly
+/// for f in [
+///     SparseFormat::Dense,
+///     SparseFormat::Csr,
+///     SparseFormat::Bsr { br: 4, bc: 4 },
+///     SparseFormat::Pattern,
+/// ] {
+///     assert_eq!(SparseFormat::parse(&f.label()), Some(f));
+/// }
+/// assert_eq!(SparseFormat::parse("coo"), None);
+/// ```
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SparseFormat {
     /// Dense matrix + blocked GEMM (pruned zeros rematerialized).
@@ -43,16 +68,20 @@ pub enum SparseFormat {
     Csr,
     /// Block-CSR with (br x bc) blocks + register-blocked kernel.
     Bsr { br: usize, bc: usize },
+    /// PatDNN per-kernel patterns + shared pattern table
+    /// ([`crate::compress::pattern`]) + kernel-accumulator micro-kernel.
+    Pattern,
 }
 
 impl SparseFormat {
-    /// Stable textual name (`dense`, `csr`, `bsr4x1`, ...) — the manifest
-    /// encoding.
+    /// Stable textual name (`dense`, `csr`, `bsr4x1`, `pattern`, ...) —
+    /// the manifest encoding.
     pub fn label(&self) -> String {
         match self {
             SparseFormat::Dense => "dense".to_string(),
             SparseFormat::Csr => "csr".to_string(),
             SparseFormat::Bsr { br, bc } => format!("bsr{br}x{bc}"),
+            SparseFormat::Pattern => "pattern".to_string(),
         }
     }
 
@@ -61,6 +90,7 @@ impl SparseFormat {
         match s {
             "dense" => Some(SparseFormat::Dense),
             "csr" => Some(SparseFormat::Csr),
+            "pattern" => Some(SparseFormat::Pattern),
             _ => {
                 let rest = s.strip_prefix("bsr")?;
                 let (a, b) = rest.split_once('x')?;
@@ -85,6 +115,21 @@ pub enum FormatPolicy {
     Csr,
     /// Pin every pruned layer to the best-filling BSR block shape.
     Bsr,
+    /// Pin every eligible spatial conv layer to the PatDNN pattern
+    /// format; ineligible layers (1x1 / GEMM, or kernels larger than the
+    /// pattern table supports) keep the CSR baseline.
+    Pattern,
+}
+
+/// Whether the pattern format can encode a layer of this HWIO shape:
+/// a spatial kernel whose `kh*kw` positions fit the pattern table
+/// ([`pattern::MAX_POSITIONS`]), with the (K, N) view consistent.
+pub fn pattern_eligible(csr: &CsrMatrix, hwio: [usize; 4]) -> bool {
+    let kk = hwio[0] * hwio[1];
+    (2..=pattern::MAX_POSITIONS).contains(&kk)
+        && hwio[2] > 0
+        && csr.rows == kk * hwio[2]
+        && csr.cols == hwio[3]
 }
 
 /// One layer's execution decision.
@@ -137,6 +182,24 @@ impl LayerPlan {
 /// The whole model's per-layer decisions, keyed by layer name. Emitted by
 /// `ModelInstance::build_planned`, serialized into the artifact manifest
 /// (`runtime::manifest`), surfaced by `cadnn plan`.
+///
+/// # Examples
+///
+/// ```
+/// use cadnn::planner::{ExecPlan, LayerPlan, SparseFormat};
+///
+/// let mut plan = ExecPlan::default();
+/// plan.layers.insert("c1".into(), LayerPlan::csr());
+/// plan.layers.insert(
+///     "c2".into(),
+///     LayerPlan { format: SparseFormat::Pattern, reorder: false, parallel_cutover: 192 },
+/// );
+/// // the manifest encoding round-trips losslessly
+/// let json = plan.to_json().to_string_pretty();
+/// let back = ExecPlan::from_json(&cadnn::util::json::Json::parse(&json).unwrap()).unwrap();
+/// assert_eq!(back, plan);
+/// assert_eq!(back.format_counts()["pattern"], 1);
+/// ```
 #[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct ExecPlan {
     pub layers: BTreeMap<String, LayerPlan>,
@@ -208,6 +271,16 @@ pub const COST_BSR_4X1: f64 = 0.55;
 /// BSR 4x4 cost per stored value (one index per 16 values, 4-wide
 /// vectorizable accumulator strip).
 pub const COST_BSR_4X4: f64 = 0.30;
+/// Pattern cost per stored value (contiguous values, activation gather
+/// at precomputed offsets, register accumulator — and *no padding*:
+/// stored values are exactly nnz).
+pub const COST_PATTERN_VAL: f64 = 0.45;
+/// Pattern cost per surviving kernel (column index + pattern id load +
+/// one output update), in the same per-CSR-value unit. Scattered
+/// sparsity degrades toward 1-2 entries per kernel, where this term
+/// keeps Auto on the CSR baseline; pattern-pruned layers amortize it
+/// over a full pattern (4+ entries) per kernel.
+pub const COST_PATTERN_KERNEL: f64 = 0.80;
 /// A non-CSR format must beat the CSR estimate by this factor before
 /// Auto switches away from the baseline (GEMM-shaped layers).
 pub const AUTO_SWITCH_MARGIN: f64 = 0.85;
@@ -241,12 +314,38 @@ fn blocks_for(csr: &CsrMatrix, br: usize, bc: usize) -> (usize, bool) {
 /// runs at (batch * output pixels); `hwio` is the conv weight shape
 /// `[kh, kw, cin, cout]` — spatial kernels (kh*kw > 1) run through
 /// im2col, so Auto demands a stricter win before leaving the CSR
-/// baseline for those.
+/// baseline for those. Spatial kernels are also where the Pattern
+/// challenger enters (see [`pattern_eligible`]).
+///
+/// # Examples
+///
+/// ```
+/// use cadnn::compress::csr::CsrMatrix;
+/// use cadnn::compress::pattern::prune_patterns;
+/// use cadnn::planner::{choose, FormatPolicy, SparseFormat};
+///
+/// // a pattern-pruned 3x3 conv layer: Auto must pick the pattern format
+/// let (kh, kw, cin, cout) = (3, 3, 8, 32);
+/// let mut w: Vec<f32> = (0..kh * kw * cin * cout)
+///     .map(|i| ((i * 2654435761usize) % 1000) as f32 / 1000.0 + 0.001)
+///     .collect();
+/// prune_patterns(&mut w, kh, kw, cin, cout, 0.8, 4, 8);
+/// let csr = CsrMatrix::from_dense(&w, kh * kw * cin, cout);
+/// let plan = choose(FormatPolicy::Auto, &csr, 196, [kh, kw, cin, cout]);
+/// assert_eq!(plan.format, SparseFormat::Pattern);
+/// ```
 pub fn choose(policy: FormatPolicy, csr: &CsrMatrix, m: usize, hwio: [usize; 4]) -> LayerPlan {
     debug_assert_eq!(csr.rows, hwio[0] * hwio[1] * hwio[2], "hwio inconsistent with K");
     debug_assert_eq!(csr.cols, hwio[3], "hwio inconsistent with N");
     match policy {
         FormatPolicy::Csr => LayerPlan::csr(),
+        FormatPolicy::Pattern => {
+            if pattern_eligible(csr, hwio) && csr.nnz() > 0 {
+                LayerPlan::with_format(SparseFormat::Pattern, false)
+            } else {
+                LayerPlan::csr()
+            }
+        }
         FormatPolicy::Bsr => {
             // best-filling candidate, fill traded by per-value cost
             let mut best = None;
@@ -288,6 +387,14 @@ pub fn choose(policy: FormatPolicy, csr: &CsrMatrix, m: usize, hwio: [usize; 4])
                     best_est = est;
                 }
             }
+            if pattern_eligible(csr, hwio) {
+                let kernels = pattern::count_kernels(csr, hwio[2]);
+                let est = mf
+                    * (nnz as f64 * COST_PATTERN_VAL + kernels as f64 * COST_PATTERN_KERNEL);
+                if est < best_est {
+                    best = LayerPlan::with_format(SparseFormat::Pattern, false);
+                }
+            }
             best
         }
     }
@@ -314,10 +421,11 @@ fn measure_us<F: FnMut()>(f: F) -> f64 {
 }
 
 /// Measured per-layer choice: time the heuristic shortlist (CSR, dense,
-/// both BSR candidates) with the real serial kernels on the layer's own
-/// weights, then pick the winner — CSR keeps ties. Also refines the
-/// layer's parallel cutover from the measured per-row cost: cheap layers
-/// need more rows before the pool dispatch amortizes.
+/// both BSR candidates, Pattern where eligible) with the real serial
+/// kernels on the layer's own weights, then pick the winner — CSR keeps
+/// ties. Also refines the layer's parallel cutover from the measured
+/// per-row cost: cheap layers need more rows before the pool dispatch
+/// amortizes.
 pub fn choose_measured(
     policy: FormatPolicy,
     csr: &CsrMatrix,
@@ -376,6 +484,17 @@ pub fn choose_measured(
         });
         if t < best_us {
             best = LayerPlan::with_format(SparseFormat::Bsr { br, bc }, reorder_on);
+            best_us = t;
+        }
+    }
+
+    if pattern_eligible(csr, hwio) {
+        let mat = PatternMatrix::from_dense(&dense, hwio[0], hwio[1], hwio[2], n);
+        let t = measure_us(|| {
+            crate::kernels::pattern::pattern_gemm(&a, &mat, &mut c, mm, &Epilogue::None);
+        });
+        if t < best_us {
+            best = LayerPlan::with_format(SparseFormat::Pattern, false);
             best_us = t;
         }
     }
@@ -442,12 +561,57 @@ mod tests {
             SparseFormat::Csr,
             SparseFormat::Bsr { br: 4, bc: 1 },
             SparseFormat::Bsr { br: 4, bc: 4 },
+            SparseFormat::Pattern,
         ] {
             assert_eq!(SparseFormat::parse(&f.label()), Some(f));
         }
         assert_eq!(SparseFormat::parse("bsrXxY"), None);
         assert_eq!(SparseFormat::parse("bsr0x4"), None);
         assert_eq!(SparseFormat::parse("coo"), None);
+    }
+
+    /// Pattern-pruned 3x3 conv weights (the PatDNN regime): Auto must
+    /// leave the CSR baseline for the pattern format, and a pinned
+    /// Pattern policy must do the same.
+    #[test]
+    fn auto_picks_pattern_on_pattern_pruned_weights() {
+        let (kh, kw, cin, cout) = (3usize, 3usize, 8usize, 32usize);
+        let mut rng = Rng::new(21);
+        let mut w = vec![0.0f32; kh * kw * cin * cout];
+        rng.fill_normal(&mut w, 0.5);
+        crate::compress::pattern::prune_patterns(&mut w, kh, kw, cin, cout, 0.8, 4, 8);
+        let csr = CsrMatrix::from_dense(&w, kh * kw * cin, cout);
+        let hwio = [kh, kw, cin, cout];
+        let auto = choose(FormatPolicy::Auto, &csr, 196, hwio);
+        assert_eq!(auto.format, SparseFormat::Pattern, "{auto:?}");
+        assert!(!auto.reorder, "pattern plans carry no column permutation");
+        let pinned = choose(FormatPolicy::Pattern, &csr, 196, hwio);
+        assert_eq!(pinned.format, SparseFormat::Pattern);
+    }
+
+    /// The pattern format never applies to 1x1 (GEMM-shaped) layers or
+    /// kernels beyond the table ceiling; pinning Pattern there falls back
+    /// to the CSR baseline instead of failing.
+    #[test]
+    fn pattern_policy_falls_back_off_spatial() {
+        let csr = random_csr(128, 64, 0.2, 6);
+        let gemm = choose(FormatPolicy::Pattern, &csr, 196, gemm_hwio(128, 64));
+        assert_eq!(gemm.format, SparseFormat::Csr, "{gemm:?}");
+        // 5x5 kernels: 25 positions exceed the u16-id table ceiling
+        let csr5 = random_csr(25 * 4, 16, 0.2, 7);
+        let conv5 = choose(FormatPolicy::Pattern, &csr5, 196, [5, 5, 4, 16]);
+        assert_eq!(conv5.format, SparseFormat::Csr, "{conv5:?}");
+        let auto = choose(FormatPolicy::Auto, &csr, 196, gemm_hwio(128, 64));
+        assert_ne!(auto.format, SparseFormat::Pattern, "{auto:?}");
+    }
+
+    /// Scattered magnitude pruning leaves too few entries per kernel for
+    /// the per-kernel overhead to amortize: Auto keeps CSR.
+    #[test]
+    fn auto_keeps_csr_on_scattered_spatial_pruning() {
+        let csr = random_csr(9 * 16, 64, 0.08, 8);
+        let lp = choose(FormatPolicy::Auto, &csr, 196, [3, 3, 16, 64]);
+        assert_eq!(lp.format, SparseFormat::Csr, "{lp:?}");
     }
 
     #[test]
@@ -541,7 +705,10 @@ mod tests {
         assert!(lp.parallel_cutover >= PARALLEL_M_CUTOVER);
         assert!(matches!(
             lp.format,
-            SparseFormat::Csr | SparseFormat::Dense | SparseFormat::Bsr { .. }
+            SparseFormat::Csr
+                | SparseFormat::Dense
+                | SparseFormat::Bsr { .. }
+                | SparseFormat::Pattern
         ));
     }
 }

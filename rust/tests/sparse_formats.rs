@@ -6,10 +6,14 @@
 use cadnn::api::Engine;
 use cadnn::compress::bsr::BsrMatrix;
 use cadnn::compress::csr::CsrMatrix;
-use cadnn::compress::profile::SparsityProfile;
+use cadnn::compress::pattern::{prune_patterns, PatternMatrix};
+use cadnn::compress::profile::{PruneStructure, SparsityProfile};
 use cadnn::exec::Personality;
 use cadnn::ir::ops::{ActKind, Op};
 use cadnn::ir::{Graph, Shape};
+use cadnn::kernels::conv::{conv2d_csr, conv2d_gemm, conv2d_pattern};
+use cadnn::kernels::{Epilogue, Tensor, PARALLEL_M_CUTOVER};
+use cadnn::passes::layout::TileConfig;
 use cadnn::planner::{choose, ExecPlan, FormatPolicy, LayerPlan, SparseFormat};
 use cadnn::runtime::Manifest;
 use cadnn::util::rng::Rng;
@@ -103,6 +107,99 @@ fn planner_prefers_bsr_on_block_structured_weights() {
     }
 }
 
+fn engine_with_structure(policy: FormatPolicy, sparsity: f64, structure: PruneStructure) -> Engine {
+    let g = conv_stack();
+    let profile = SparsityProfile::uniform_structured(&g, sparsity, structure);
+    Engine::from_graph(conv_stack())
+        .personality(Personality::CadnnSparse)
+        .sparsity_profile(profile)
+        .sparse_format(policy)
+        .build()
+        .unwrap()
+}
+
+/// Cross-format execution equivalence on pattern-pruned weights, at the
+/// kernel level where the reduction order is provable: with a single
+/// input channel every output channel is fed by at most one kernel
+/// slice, so the Dense (blocked GEMM), CSR, and Pattern conv paths all
+/// reduce over K in the same ascending order — outputs must be
+/// **bit-identical**, not just close.
+#[test]
+fn dense_csr_pattern_conv_outputs_bit_identical_single_channel() {
+    let (kh, kw, cin, cout) = (3usize, 3usize, 1usize, 16usize);
+    let k = kh * kw * cin;
+    let mut rng = Rng::new(41);
+    let x = Tensor::randn(&[1, 8, 8, cin], &mut rng, 1.0);
+    let mut w = vec![0.0f32; k * cout];
+    rng.fill_normal(&mut w, 0.5);
+    prune_patterns(&mut w, kh, kw, cin, cout, 0.6, 4, 8);
+    let scale: Vec<f32> = (0..cout).map(|_| 0.5 + rng.f32()).collect();
+    let shift: Vec<f32> = (0..cout).map(|_| rng.f32() + 0.1).collect();
+    let epi = Epilogue::bn_act(scale, shift, true, false);
+    let cut = PARALLEL_M_CUTOVER;
+
+    let dense = conv2d_gemm(&x, &w, kh, kw, cout, 1, 1, 1, &TileConfig::DEFAULT, &epi);
+    let csr = CsrMatrix::from_dense(&w, k, cout);
+    let via_csr = conv2d_csr(&x, &csr, kh, kw, 1, 1, 1, &epi, cut);
+    let pat = PatternMatrix::from_dense(&w, kh, kw, cin, cout);
+    let via_pat = conv2d_pattern(&x, &pat, kh, kw, 1, 1, 1, &epi, cut);
+
+    assert_eq!(dense.data, via_csr.data, "dense vs csr must be bit-identical");
+    assert_eq!(via_csr.data, via_pat.data, "csr vs pattern must be bit-identical");
+}
+
+/// Multi-channel pattern-pruned weights through the full engine under
+/// every policy: same function within float-reassociation tolerance
+/// (multiple kernels feed one output channel, so the formats reduce in
+/// different orders).
+#[test]
+fn pattern_policy_agrees_with_csr_on_pattern_pruned_model() {
+    let s = PruneStructure::Pattern { entries: 4 };
+    let csr = engine_with_structure(FormatPolicy::Csr, 0.8, s);
+    let pat = engine_with_structure(FormatPolicy::Pattern, 0.8, s);
+    let auto = engine_with_structure(FormatPolicy::Auto, 0.8, s);
+    let img = image(csr.input_len(), 31);
+    let a = csr.session().run(&img).unwrap();
+    let b = pat.session().run(&img).unwrap();
+    let c = auto.session().run(&img).unwrap();
+    for i in 0..a.len() {
+        assert!((a[i] - b[i]).abs() < 1e-3, "csr vs pattern at {i}: {} vs {}", a[i], b[i]);
+        assert!((a[i] - c[i]).abs() < 1e-3, "csr vs auto at {i}: {} vs {}", a[i], c[i]);
+    }
+}
+
+/// On a pattern-pruned profile, Auto must move the 3x3 conv onto the
+/// pattern format (the PatDNN co-design working end-to-end), while the
+/// 1x1 conv — ineligible for patterns — stays on a baseline format.
+#[test]
+fn auto_picks_pattern_for_3x3_on_pattern_pruned_profile() {
+    let auto = engine_with_structure(
+        FormatPolicy::Auto,
+        0.8,
+        PruneStructure::Pattern { entries: 4 },
+    );
+    let inst = auto.native_backend().unwrap().instance(1).unwrap();
+    let c1 = inst.plan.get("c1").expect("c1 planned");
+    assert_eq!(c1.format, SparseFormat::Pattern, "3x3 conv: {c1:?}");
+    let c2 = inst.plan.get("c2").expect("c2 planned");
+    assert_ne!(c2.format, SparseFormat::Pattern, "1x1 conv is not pattern-eligible: {c2:?}");
+}
+
+/// Pinning Pattern on an element-pruned (scattered) profile still
+/// executes correctly — the format tolerates arbitrary supports even
+/// when the planner would not choose it.
+#[test]
+fn pinned_pattern_policy_is_correct_on_scattered_support() {
+    let csr = engine_with(FormatPolicy::Csr, 0.8);
+    let pat = engine_with(FormatPolicy::Pattern, 0.8);
+    let img = image(csr.input_len(), 37);
+    let a = csr.session().run(&img).unwrap();
+    let b = pat.session().run(&img).unwrap();
+    for i in 0..a.len() {
+        assert!((a[i] - b[i]).abs() < 1e-3, "at {i}: {} vs {}", a[i], b[i]);
+    }
+}
+
 #[test]
 fn exec_plan_survives_a_manifest_round_trip() {
     let mut manifest = Manifest::parse(
@@ -117,6 +214,10 @@ fn exec_plan_survives_a_manifest_round_trip() {
     plan.layers.insert(
         "c2".into(),
         LayerPlan { format: SparseFormat::Bsr { br: 4, bc: 4 }, reorder: true, parallel_cutover: 256 },
+    );
+    plan.layers.insert(
+        "c3".into(),
+        LayerPlan { format: SparseFormat::Pattern, reorder: false, parallel_cutover: 128 },
     );
     manifest.models[0].exec_plan = Some(plan.clone());
     let text = manifest.to_json().to_string_pretty();
