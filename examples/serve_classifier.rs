@@ -1,25 +1,28 @@
-//! End-to-end serving driver (DESIGN.md §5 "Serving E2E"): start the
-//! coordinator, replay a Poisson request trace of synthetic digit images
-//! against the dense AND compressed variants, and report latency
-//! percentiles, throughput, batch utilization, and trace accuracy per
-//! variant.
+//! End-to-end serving driver (DESIGN.md §5 "Serving E2E"): register the
+//! dense AND compressed lenet5 variants in ONE multi-model
+//! `serve::Server`, replay an interleaved Poisson request trace of
+//! synthetic digit images, and report per-model latency percentiles,
+//! throughput, batch utilization, and trace accuracy.
 //!
-//! Serves the AOT artifacts when present (`make artifacts` + real PJRT);
-//! otherwise the same coordinator batches over the native-kernel engine
-//! through the `Backend` trait — no artifacts directory required. (Native
-//! weights are synthetic, so trace accuracy is only meaningful on the
-//! trained artifact path.)
+//! Each variant serves the AOT artifacts when present (`make artifacts`
+//! + real PJRT) via a factory-built backend inside that model's worker
+//! thread; otherwise the same server batches over the native-kernel
+//! engine through the `Backend` trait — no artifacts directory
+//! required. (Native weights are synthetic, so trace accuracy is only
+//! meaningful on the trained artifact path.) The sparse variant carries
+//! an `ExecPlan`, so its batch sizes come from the planner cost model;
+//! requests opt into a deadline and top-1 via `ServeRequest`.
 //!
 //! ```sh
 //! cargo run --release --example serve_classifier [-- <requests> <rps>]
 //! ```
 
 use anyhow::Result;
-use cadnn::api::Engine;
+use cadnn::api::{ArtifactBackend, Backend, Engine};
 use cadnn::compress::profile::paper_profile;
-use cadnn::coordinator::{BatchPolicy, BatcherConfig, Coordinator, CoordinatorConfig};
 use cadnn::exec::Personality;
 use cadnn::models;
+use cadnn::serve::{QueueConfig, ServeError, ServeRequest, Server};
 use cadnn::util::rng::Rng;
 
 /// Rasterize the same seven-segment procedural digits as
@@ -64,72 +67,42 @@ fn digit_image(digit: usize, rng: &mut Rng) -> Vec<f32> {
     img
 }
 
-/// Start a coordinator for the variant: AOT artifacts when available,
-/// otherwise the native engine behind the same `Backend` trait.
-fn start_coordinator(variant: &str) -> Result<Coordinator> {
-    let batcher = BatcherConfig {
-        max_batch: 8,
-        max_wait_us: 2_000,
-        policy: BatchPolicy::PadToFit,
-    };
-    if std::path::Path::new("artifacts/manifest.json").exists() {
-        match Coordinator::start(CoordinatorConfig {
-            artifacts_dir: "artifacts".into(),
-            model: "lenet5".into(),
-            variant: variant.into(),
-            max_batch: batcher.max_batch,
-            max_wait_us: batcher.max_wait_us,
-            policy: batcher.policy,
-        }) {
-            Ok(coord) => return Ok(coord),
-            Err(e) => eprintln!("(artifact path failed: {e}; serving natively instead)"),
-        }
+/// Register one lenet5 variant: an artifact-backed worker (the factory
+/// runs inside the worker thread, as real PJRT handles require) or a
+/// native engine.
+fn register(
+    builder: cadnn::serve::ServerBuilder,
+    variant: &'static str,
+    use_artifacts: bool,
+    cfg: QueueConfig,
+) -> Result<cadnn::serve::ServerBuilder> {
+    if use_artifacts {
+        return Ok(builder.backend_with(
+            variant,
+            move || {
+                ArtifactBackend::open("artifacts", "lenet5", variant)
+                    .map(|b| -> Box<dyn Backend> { Box::new(b) })
+            },
+            cfg,
+        ));
     }
-    let mut builder = Engine::native("lenet5").batch_sizes(&[1, 2, 4, 8]);
+    let mut eb = Engine::native("lenet5").batch_sizes(&[1, 2, 4, 8]);
     if variant == "sparse" {
         let g = models::build("lenet5", 1).expect("lenet5 exists");
-        builder = builder
+        eb = eb
             .personality(Personality::CadnnSparse)
             .sparsity_profile(paper_profile(&g));
     }
-    Coordinator::serve_engine(&builder.build()?, batcher)
+    Ok(builder.engine_with(variant, &eb.build()?, cfg))
 }
 
-fn run_variant(
-    variant: &str,
-    requests: usize,
-    rps: f64,
-) -> Result<(usize, f64, String)> {
-    let coord = start_coordinator(variant)?;
-    let mut rng = Rng::new(2024);
-    let mut truths = Vec::new();
-    let mut rxs = Vec::new();
-    for _ in 0..requests {
-        let digit = rng.below(10);
-        truths.push(digit);
-        rxs.push(coord.submit(digit_image(digit, &mut rng))?);
-        std::thread::sleep(std::time::Duration::from_secs_f64(rng.exp(rps)));
+/// Both variants behind one server; artifact path when requested.
+fn build_server(use_artifacts: bool, cfg: QueueConfig) -> Result<Server> {
+    let mut builder = Server::builder();
+    for variant in ["dense", "sparse"] {
+        builder = register(builder, variant, use_artifacts, cfg)?;
     }
-    let mut correct = 0usize;
-    for (rx, truth) in rxs.into_iter().zip(&truths) {
-        let resp = rx.recv()?;
-        let logits = resp.into_logits()?;
-        let pred = logits
-            .iter()
-            .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .map(|(i, _)| i)
-            .unwrap();
-        if pred == *truth {
-            correct += 1;
-        }
-    }
-    let m = coord.metrics.lock().unwrap();
-    let p50 = m.latency_summary().map(|s| s.p50).unwrap_or(0.0);
-    let report = m.report();
-    drop(m);
-    coord.shutdown()?;
-    Ok((correct, p50, report))
+    Ok(builder.build()?)
 }
 
 fn main() -> Result<()> {
@@ -138,24 +111,83 @@ fn main() -> Result<()> {
     let rps: f64 = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(60.0);
 
     println!(
-        "=== serve_classifier: lenet5 dense vs compressed, {requests} reqs @ {rps} req/s ===\n"
+        "=== serve_classifier: one Server, dense + compressed lenet5, \
+         {requests} reqs/variant @ {rps} req/s ===\n"
     );
-    let mut p50s = Vec::new();
-    for variant in ["dense", "sparse"] {
-        println!("--- variant: {variant} ---");
-        let (correct, p50, report) = run_variant(variant, requests, rps)?;
+    let cfg = QueueConfig { max_batch: 8, max_wait_us: 2_000, ..QueueConfig::default() };
+    let have_artifacts = std::path::Path::new("artifacts/manifest.json").exists();
+    let server = if have_artifacts {
+        match build_server(true, cfg) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("(artifact path failed: {e}; serving natively instead)");
+                build_server(false, cfg)?
+            }
+        }
+    } else {
+        build_server(false, cfg)?
+    };
+    for (name, entry) in server.registry().iter() {
         println!(
-            "{report}accuracy on trace: {}/{} = {:.1}%\n",
-            correct,
-            requests,
-            100.0 * correct as f64 / requests as f64
+            "registered '{name}': batches {:?}, scheduler {}",
+            entry.batch_sizes,
+            if entry.plan_costs.is_empty() { "policy fallback" } else { "planner cost model" },
         );
-        p50s.push(p50);
+    }
+    println!();
+
+    // interleaved trace: both variants loaded at once, each request with
+    // a generous deadline and top-1 attached
+    let mut rng = Rng::new(2024);
+    let mut inflight = Vec::new();
+    for _ in 0..requests {
+        for variant in ["dense", "sparse"] {
+            let digit = rng.below(10);
+            let req = ServeRequest::new(variant, digit_image(digit, &mut rng))
+                .deadline_ms(250)
+                .topk(1);
+            inflight.push((variant, digit, server.submit(req)?));
+        }
+        std::thread::sleep(std::time::Duration::from_secs_f64(rng.exp(rps)));
+    }
+
+    let mut correct = [0usize; 2];
+    let mut missed = [0usize; 2];
+    for (variant, truth, rx) in inflight {
+        let slot = if variant == "dense" { 0 } else { 1 };
+        let resp = rx.recv()?;
+        match resp.outcome {
+            Ok(_) => {
+                let pred = resp.topk.as_ref().and_then(|t| t.first()).map(|&(i, _)| i);
+                if pred == Some(truth) {
+                    correct[slot] += 1;
+                }
+            }
+            Err(ServeError::Deadline { .. }) => missed[slot] += 1,
+            Err(e) => return Err(e.into()),
+        }
+    }
+
+    let stats = server.stats();
+    let mut p50s = Vec::new();
+    for (slot, variant) in ["dense", "sparse"].iter().enumerate() {
+        let m = server.metrics(variant).unwrap();
+        println!("--- variant: {variant} ---");
+        println!(
+            "{}accuracy on trace: {}/{} = {:.1}% (deadline misses: {})\n",
+            m.lock().unwrap().report(),
+            correct[slot],
+            requests,
+            100.0 * correct[slot] as f64 / requests as f64,
+            missed[slot],
+        );
+        p50s.push(stats[*variant].latency.as_ref().map(|s| s.p50).unwrap_or(0.0));
     }
     println!(
         "p50 latency dense {:.1} ms vs compressed {:.1} ms",
         p50s[0] / 1e3,
         p50s[1] / 1e3
     );
+    server.shutdown()?;
     Ok(())
 }

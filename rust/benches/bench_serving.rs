@@ -1,0 +1,151 @@
+//! Serving bench: open-loop Poisson arrivals against the native sparse
+//! lenet5 engine, sweeping offered load across three batch-selection
+//! modes — the old greedy batcher, pad-to-fit, and the planner-informed
+//! deadline-aware scheduler (`ExecPlan::cost_at` + online calibration).
+//! Quantifies what plan-aware batching buys: p50/p99 latency, batch
+//! utilization, and deadline misses at each load. No artifacts needed.
+//! Emits `BENCH_serving.json`. Run: cargo bench --bench bench_serving
+
+use cadnn::api::Engine;
+use cadnn::bench::print_table;
+use cadnn::compress::profile::paper_profile;
+use cadnn::exec::Personality;
+use cadnn::models;
+use cadnn::serve::{BatchPolicy, QueueConfig, ServeError, ServeRequest, Server};
+use cadnn::util::json::{obj, Json};
+use cadnn::util::rng::Rng;
+
+const DEADLINE_MS: u64 = 60;
+
+struct RunResult {
+    ok: usize,
+    missed: usize,
+    p50_ms: f64,
+    p99_ms: f64,
+    batch_util: f64,
+    batches: u64,
+}
+
+fn run(engine: &Engine, cfg: QueueConfig, rps: f64, requests: usize) -> Option<RunResult> {
+    let server = Server::builder().engine_with("m", engine, cfg).build().ok()?;
+    let input_len = server.input_len("m")?;
+    let mut rng = Rng::new(77);
+    // open loop: arrivals follow the Poisson schedule regardless of
+    // completions, so overload shows up as queueing (not back-pressure)
+    let mut inflight = Vec::new();
+    for _ in 0..requests {
+        let mut img = vec![0.0f32; input_len];
+        rng.fill_normal(&mut img, 0.5);
+        let req = ServeRequest::new("m", img).deadline_ms(DEADLINE_MS);
+        inflight.push(server.submit(req).ok()?);
+        std::thread::sleep(std::time::Duration::from_secs_f64(rng.exp(rps)));
+    }
+    let (mut ok, mut missed) = (0usize, 0usize);
+    for rx in inflight {
+        match rx.recv() {
+            Ok(resp) => match resp.outcome {
+                Ok(_) => ok += 1,
+                Err(ServeError::Deadline { .. }) => missed += 1,
+                Err(_) => {}
+            },
+            Err(_) => {}
+        }
+    }
+    let stats = server.stats();
+    let s = &stats["m"];
+    let (p50, p99) = s
+        .latency
+        .as_ref()
+        .map(|l| (l.p50 / 1e3, l.p99 / 1e3))
+        .unwrap_or((0.0, 0.0));
+    let result = RunResult {
+        ok,
+        missed,
+        p50_ms: p50,
+        p99_ms: p99,
+        batch_util: s.batch_utilization,
+        batches: s.batches,
+    };
+    server.shutdown().ok()?;
+    Some(result)
+}
+
+fn main() {
+    let g = models::build("lenet5", 1).expect("lenet5 exists");
+    let engine = Engine::native("lenet5")
+        .personality(Personality::CadnnSparse)
+        .sparsity_profile(paper_profile(&g))
+        .batch_sizes(&[1, 2, 4, 8])
+        .build()
+        .expect("native sparse lenet5 builds");
+    assert!(
+        !engine.plan_costs().is_empty(),
+        "sparse engine must expose plan costs for the planned mode"
+    );
+
+    let modes: [(&str, QueueConfig); 3] = [
+        (
+            "greedy",
+            QueueConfig { fallback: BatchPolicy::Greedy, planned: false, ..QueueConfig::default() },
+        ),
+        (
+            "padtofit",
+            QueueConfig { fallback: BatchPolicy::PadToFit, planned: false, ..QueueConfig::default() },
+        ),
+        ("planned", QueueConfig { planned: true, ..QueueConfig::default() }),
+    ];
+
+    println!(
+        "== serving bench (native sparse lenet5, open-loop Poisson, deadline {DEADLINE_MS}ms) ==\n"
+    );
+    let requests = 60;
+    let mut rows = Vec::new();
+    let mut report = Vec::new();
+    for rps in [50.0, 200.0, 600.0] {
+        for (mode, cfg) in &modes {
+            let Some(r) = run(&engine, *cfg, rps, requests) else {
+                eprintln!("run failed: {mode} @ {rps}");
+                continue;
+            };
+            rows.push(vec![
+                mode.to_string(),
+                format!("{rps:.0}"),
+                format!("{}", r.ok),
+                format!("{}", r.missed),
+                format!("{:.1}", r.p50_ms),
+                format!("{:.1}", r.p99_ms),
+                format!("{:.0}%", r.batch_util * 100.0),
+                format!("{}", r.batches),
+            ]);
+            report.push(obj(vec![
+                ("mode", Json::Str(mode.to_string())),
+                ("offered_rps", Json::Num(rps)),
+                ("requests", Json::Num(requests as f64)),
+                ("ok", Json::Num(r.ok as f64)),
+                ("deadline_missed", Json::Num(r.missed as f64)),
+                ("p50_ms", Json::Num(r.p50_ms)),
+                ("p99_ms", Json::Num(r.p99_ms)),
+                ("batch_utilization", Json::Num(r.batch_util)),
+                ("batches", Json::Num(r.batches as f64)),
+            ]));
+        }
+    }
+    print_table(
+        &["mode", "offered rps", "ok", "missed", "p50 ms", "p99 ms", "batch util", "batches"],
+        &rows,
+    );
+    let out = Json::Obj(vec![
+        ("bench".to_string(), Json::Str("serving".to_string())),
+        ("deadline_ms".to_string(), Json::Num(DEADLINE_MS as f64)),
+        ("rows".to_string(), Json::Arr(report)),
+    ]);
+    let path = "BENCH_serving.json";
+    match std::fs::write(path, out.to_string_pretty()) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\ncould not write {path}: {e}"),
+    }
+    println!(
+        "(planned = scheduler on ExecPlan::cost_at with online µs calibration; \
+         greedy/padtofit = the pre-planner policy batcher)"
+    );
+}

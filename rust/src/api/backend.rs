@@ -9,11 +9,15 @@
 //! - [`ArtifactBackend`] wraps the PJRT [`Runtime`] over AOT-compiled HLO
 //!   artifacts (available when the real `xla` binding is linked).
 //!
-//! The serving [`crate::coordinator::Coordinator`] is generic over
-//! `Box<dyn Backend>`, so the dynamic batcher works identically for both.
+//! The serving [`crate::serve::Server`] (and its deprecated single-model
+//! shim [`crate::coordinator::Coordinator`]) is generic over
+//! `Box<dyn Backend>`, so the dynamic batcher works identically for
+//! both; [`Backend::exec_plan`] / [`Backend::plan_costs`] surface the
+//! planner's cost model to the server's deadline-aware scheduler.
 
 use crate::error::CadnnError;
 use crate::exec::{ExecScratch, ModelInstance, Personality};
+use crate::planner::ExecPlan;
 use crate::runtime::{ManifestEntry, Runtime};
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -53,6 +57,23 @@ pub trait Backend {
     /// Telemetry; defaults to zeroes for backends that don't track it.
     fn stats(&self) -> BackendStats {
         BackendStats::default()
+    }
+
+    /// The per-layer execution plan behind this backend, when known
+    /// (native engines: the smallest batch variant's plan; artifact
+    /// backends: the manifest's plan). `None` when planning never ran or
+    /// nothing was pruned.
+    fn exec_plan(&self) -> Option<ExecPlan> {
+        None
+    }
+
+    /// `(batch size, plan cost units)` per batch variant —
+    /// [`ExecPlan::cost_at`] evaluated at each variant's batch size, the
+    /// prior the serving scheduler ([`crate::serve::Scheduler`]) maps to
+    /// microseconds from observed exec times. Empty when no cost model
+    /// exists.
+    fn plan_costs(&self) -> Vec<(usize, f64)> {
+        Vec::new()
     }
 }
 
@@ -201,6 +222,21 @@ impl Backend for NativeBackend {
             buffer_reuses: self.buffer_reuses.load(Ordering::Relaxed),
         }
     }
+
+    fn exec_plan(&self) -> Option<ExecPlan> {
+        self.instances
+            .values()
+            .next()
+            .map(|i| i.plan.clone())
+            .filter(|p| !p.is_empty())
+    }
+
+    fn plan_costs(&self) -> Vec<(usize, f64)> {
+        self.instances
+            .iter()
+            .filter_map(|(&b, inst)| inst.plan_cost().map(|c| (b, c)))
+            .collect()
+    }
 }
 
 /// PJRT artifact backend: AOT-compiled (model, variant) batch programs
@@ -280,5 +316,22 @@ impl Backend for ArtifactBackend {
         model
             .run(input)
             .map_err(|e| CadnnError::Execution { reason: e.to_string() })
+    }
+
+    fn exec_plan(&self) -> Option<ExecPlan> {
+        let b = *self.batch_sizes().first()?;
+        self.manifest_entry(b)
+            .and_then(|e| e.exec_plan.clone())
+            .filter(|p| !p.is_empty())
+    }
+
+    fn plan_costs(&self) -> Vec<(usize, f64)> {
+        self.batch_sizes()
+            .into_iter()
+            .filter_map(|b| {
+                let plan = self.manifest_entry(b)?.exec_plan.as_ref()?;
+                plan.cost_at(b).map(|c| (b, c))
+            })
+            .collect()
     }
 }

@@ -23,8 +23,9 @@
 //! ```
 //!
 //! An [`Engine`] is cheap to clone (shared state behind an `Arc`) and is
-//! itself a [`Backend`], so it plugs straight into the serving
-//! [`crate::coordinator::Coordinator`] via `Coordinator::serve_engine`.
+//! itself a [`Backend`], so it plugs straight into the multi-model
+//! serving [`crate::serve::Server`] (`Server::builder().engine(...)`)
+//! or the deprecated single-model `Coordinator` shim.
 //! [`Session`]s opened from one engine share weights but lease dedicated
 //! scratch buffers, so `session.run` in a loop stops reallocating the
 //! per-node tensor table (see [`crate::exec::ExecScratch`]).
@@ -38,7 +39,7 @@ use crate::error::CadnnError;
 use crate::exec::{ModelInstance, Personality};
 use crate::ir::Graph;
 use crate::models;
-use crate::planner::FormatPolicy;
+use crate::planner::{ExecPlan, FormatPolicy, PlanCache};
 use crate::tuner::TunerCache;
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -160,17 +161,24 @@ impl EngineBuilder {
                     return Err(CadnnError::config("batch sizes must be nonempty and nonzero"));
                 }
                 let mut cache = TunerCache::new();
+                // one plan cache across every batch variant: column
+                // clustering, densification, and pattern-library
+                // selection run once per pruned layer, not once per
+                // variant (weights are keyed by layer name, so variants
+                // share them exactly)
+                let mut plan_cache = PlanCache::default();
                 let mut instances = BTreeMap::new();
                 for &b in &sizes {
                     let g = models::build(&name, b)
                         .ok_or_else(|| CadnnError::UnknownModel { name: name.clone() })?;
-                    let inst = ModelInstance::build_planned(
+                    let inst = ModelInstance::build_planned_cached(
                         &g,
                         self.personality,
                         self.profile.as_ref(),
                         if self.tuned { Some(&mut cache) } else { None },
                         self.cache_bytes,
                         self.sparse_format,
+                        Some(&mut plan_cache),
                     )?;
                     instances.insert(b, inst);
                 }
@@ -285,6 +293,19 @@ impl Engine {
         self.backend.stats()
     }
 
+    /// The per-layer execution plan behind this engine, when known (see
+    /// [`Backend::exec_plan`]). This is what a serving registry entry
+    /// carries next to the engine.
+    pub fn exec_plan(&self) -> Option<ExecPlan> {
+        self.backend.exec_plan()
+    }
+
+    /// Per-batch-variant plan costs (see [`Backend::plan_costs`]) — the
+    /// scheduler prior behind `serve`'s deadline-aware batching.
+    pub fn plan_costs(&self) -> Vec<(usize, f64)> {
+        self.backend.plan_costs()
+    }
+
     /// The native backend, when this engine runs on the in-process
     /// kernels (profiling, weight inspection).
     pub fn native_backend(&self) -> Option<&NativeBackend> {
@@ -317,6 +338,14 @@ impl Backend for Engine {
 
     fn stats(&self) -> BackendStats {
         self.backend.stats()
+    }
+
+    fn exec_plan(&self) -> Option<ExecPlan> {
+        self.backend.exec_plan()
+    }
+
+    fn plan_costs(&self) -> Vec<(usize, f64)> {
+        self.backend.plan_costs()
     }
 }
 
@@ -459,6 +488,35 @@ mod tests {
             }
             other => panic!("expected BatchUnavailable, got {:?}", other.err()),
         }
+    }
+
+    /// Engines surface the planner's cost model to the serving layer:
+    /// the per-variant costs are exactly `ExecPlan::cost_at(b)`.
+    #[test]
+    fn engine_exposes_plan_and_costs() {
+        let dense = Engine::native("lenet5").batch_sizes(&[1, 2]).build().unwrap();
+        assert!(dense.exec_plan().is_none(), "nothing pruned -> no plan");
+        assert!(dense.plan_costs().is_empty());
+
+        let g = models::build("lenet5", 1).unwrap();
+        let sparse = Engine::native("lenet5")
+            .personality(Personality::CadnnSparse)
+            .sparsity_profile(paper_profile(&g))
+            .batch_sizes(&[1, 2, 4])
+            .build()
+            .unwrap();
+        let plan = sparse.exec_plan().expect("pruned engine has a plan");
+        assert!(!plan.is_empty());
+        let costs = sparse.plan_costs();
+        assert_eq!(costs.len(), 3, "one cost per batch variant: {costs:?}");
+        for (b, c) in &costs {
+            let from_plan = plan.cost_at(*b).expect("plan carries costs");
+            assert!(
+                (from_plan - c).abs() < 1e-6,
+                "variant {b}: cost {c} != ExecPlan::cost_at {from_plan}"
+            );
+        }
+        assert!(costs[2].1 > costs[0].1, "bigger batches cost more: {costs:?}");
     }
 
     #[test]

@@ -370,16 +370,37 @@ pub fn prune_patterns(
     library_size: usize,
 ) {
     let kk = kh * kw;
-    let rows = kk * cin;
-    assert_eq!(mat.len(), rows * cols);
+    assert_eq!(mat.len(), kk * cin * cols);
     if sparsity <= 0.0 || mat.is_empty() || kk <= 1 {
         return;
     }
+    let library = select_pattern_library(mat, kh, kw, cin, cols, entries, library_size);
+    prune_with_library(mat, kh, kw, cin, cols, sparsity, entries, &library);
+}
+
+/// Steps 1-2 of [`prune_patterns`]: nominate per-kernel candidate masks
+/// and rank them into the layer's pattern library (`library_size` masks
+/// of `entries` positions each). Split out so builds can select a
+/// library once per layer *family* — PatDNN's observation that pattern
+/// libraries transfer across same-shape layers — and reuse it via
+/// [`prune_with_library`] (`crate::planner::PlanCache` does exactly
+/// this). Returns an empty library for shapes patterns cannot encode
+/// (`kh*kw <= 1`).
+pub fn select_pattern_library(
+    mat: &[f32],
+    kh: usize,
+    kw: usize,
+    cin: usize,
+    cols: usize,
+    entries: usize,
+    library_size: usize,
+) -> Vec<Vec<u8>> {
+    let kk = kh * kw;
+    assert_eq!(mat.len(), kk * cin * cols);
+    if mat.is_empty() || kk <= 1 {
+        return Vec::new();
+    }
     let entries = entries.clamp(1, kk);
-    // floor of one element: like the element projection, extreme
-    // sparsity keeps the single best kernel instead of zeroing the layer
-    let target = (((mat.len() as f64) * (1.0 - sparsity)).round() as usize).max(1);
-    let nk = cin * cols;
     let at = |pos: usize, ci: usize, co: usize| mat[(pos * cin + ci) * cols + co];
 
     // 1. per-kernel candidate mask (top-`entries` magnitudes, ties by
@@ -406,7 +427,37 @@ pub fn prune_patterns(
         b.1.partial_cmp(&a.1).unwrap_or(std::cmp::Ordering::Equal).then(a.0.cmp(&b.0))
     });
     ranked.truncate(library_size.max(1));
-    let library: Vec<Vec<u8>> = ranked.into_iter().map(|(m, _)| m).collect();
+    ranked.into_iter().map(|(m, _)| m).collect()
+}
+
+/// Step 3 of [`prune_patterns`]: project every kernel onto its best
+/// pattern from `library` (which may come from another layer of the same
+/// (kh, kw, cin) family — see [`select_pattern_library`]) and apply
+/// connectivity pruning down to the sparsity target. No-op on an empty
+/// library or a non-positive sparsity.
+#[allow(clippy::too_many_arguments)]
+pub fn prune_with_library(
+    mat: &mut [f32],
+    kh: usize,
+    kw: usize,
+    cin: usize,
+    cols: usize,
+    sparsity: f64,
+    entries: usize,
+    library: &[Vec<u8>],
+) {
+    let kk = kh * kw;
+    let rows = kk * cin;
+    assert_eq!(mat.len(), rows * cols);
+    if sparsity <= 0.0 || mat.is_empty() || kk <= 1 || library.is_empty() {
+        return;
+    }
+    let entries = entries.clamp(1, kk);
+    // floor of one element: like the element projection, extreme
+    // sparsity keeps the single best kernel instead of zeroing the layer
+    let target = (((mat.len() as f64) * (1.0 - sparsity)).round() as usize).max(1);
+    let nk = cin * cols;
+    let at = |pos: usize, ci: usize, co: usize| mat[(pos * cin + ci) * cols + co];
 
     // 3. project each kernel onto its best library pattern, then keep the
     //    highest-energy kernels up to the target value count
@@ -464,6 +515,29 @@ mod tests {
             }
         }
         dense
+    }
+
+    /// The split entry points compose back into exactly `prune_patterns`.
+    #[test]
+    fn split_library_matches_prune_patterns() {
+        let mut rng = Rng::new(31);
+        let (kh, kw, cin, cols) = (3, 3, 4, 16);
+        let mut a = random_sparse(&mut rng, kh * kw * cin * cols, 1.0);
+        let mut b = a.clone();
+        prune_patterns(&mut a, kh, kw, cin, cols, 0.75, 4, 8);
+        let lib = select_pattern_library(&b, kh, kw, cin, cols, 4, 8);
+        assert!(!lib.is_empty() && lib.len() <= 8);
+        prune_with_library(&mut b, kh, kw, cin, cols, 0.75, 4, &lib);
+        assert_eq!(a, b);
+        // a foreign (family) library still prunes to the same target count
+        let mut c = random_sparse(&mut rng, kh * kw * cin * cols, 1.0);
+        prune_with_library(&mut c, kh, kw, cin, cols, 0.75, 4, &lib);
+        let nnz = c.iter().filter(|v| **v != 0.0).count();
+        let want = ((c.len() as f64) * 0.25).round() as usize;
+        assert!(
+            nnz.abs_diff(want) <= 2,
+            "family-library prune landed at {nnz}, want ~{want}"
+        );
     }
 
     #[test]

@@ -1,36 +1,45 @@
-//! Serving coordinator: request queue -> dynamic batcher -> any backend.
+//! **Deprecated shim** — the single-model serving coordinator, kept as a
+//! thin compatibility layer over [`crate::serve`].
 //!
-//! Clients submit single-image requests; the batcher coalesces them
-//! (bounded by `max_batch` and `max_wait_us`) and picks among the
-//! backend's batch variants (programs are shape-static, so "dynamic
-//! batching" = choosing the best-fitting batch and padding the
-//! remainder). Latency percentiles and throughput are recorded per
-//! request.
+//! The coordinator predates the multi-model [`crate::serve::Server`]:
+//! it serves exactly one backend under the registry name `"default"`
+//! and exposes the original `submit`/`infer`/`metrics` surface. New
+//! code should use `serve` directly — it adds named multi-model routing,
+//! per-request deadlines and top-k, planner-informed batch scheduling
+//! ([`crate::planner::ExecPlan::cost_at`]), and per-model stats
+//! snapshots. See `docs/SERVING.md` and the `docs/API.md` migration
+//! table.
 //!
-//! The worker serves any [`Backend`] — a natively-executed
-//! [`crate::api::Engine`] via [`Coordinator::serve_engine`], AOT PJRT
-//! artifacts via [`Coordinator::start`], or anything else via
-//! [`Coordinator::serve_with`] (the factory runs *inside* the worker
-//! thread, accommodating backends whose handles are not `Send`).
-//!
-//! Error semantics: a request that fails in the backend receives an
-//! explicit [`ServeError::Backend`] response, while coordinator shutdown
-//! closes the reply channel (`RecvError`) — clients can tell the two
-//! apart.
+//! Behavior notes for legacy callers: responses are
+//! [`crate::serve::ServeResponse`] (re-exported here as [`Response`]) —
+//! same fields as before plus `model`/`topk`; [`ServeError`] gained a
+//! `Deadline` variant (never produced through this shim, which sets no
+//! deadlines); batch-size choice upgrades from the plain policy rule to
+//! the planner-informed scheduler once the backend's cost model
+//! calibrates, falling back to the configured [`BatchPolicy`] otherwise.
 
-pub mod batcher;
-pub mod metrics;
+/// Legacy path: `coordinator::batcher::{pick_batch, BatchPolicy}`.
+pub mod batcher {
+    pub use crate::serve::scheduler::{pick_batch, BatchPolicy};
+}
+/// Legacy path: `coordinator::metrics::Metrics`.
+pub mod metrics {
+    pub use crate::serve::metrics::{Metrics, MetricsSnapshot};
+}
 
-pub use batcher::{pick_batch, BatchPolicy};
-pub use metrics::Metrics;
+pub use crate::serve::{pick_batch, BatchPolicy, Metrics, ServeError};
+/// The coordinator's response type is the serve response.
+pub use crate::serve::ServeResponse as Response;
 
 use crate::api::{ArtifactBackend, Backend};
 use crate::error::CadnnError;
+use crate::serve::{QueueConfig, ServeRequest, Server};
 use anyhow::{anyhow, Result};
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::Receiver;
 use std::sync::{Arc, Mutex};
-use std::time::{Duration, Instant};
+
+/// The one registry name the shim serves under.
+const MODEL: &str = "default";
 
 /// Batching knobs, independent of where the model comes from.
 #[derive(Debug, Clone)]
@@ -43,6 +52,17 @@ pub struct BatcherConfig {
 impl Default for BatcherConfig {
     fn default() -> Self {
         BatcherConfig { max_batch: 8, max_wait_us: 2_000, policy: BatchPolicy::PadToFit }
+    }
+}
+
+impl BatcherConfig {
+    fn queue(&self) -> QueueConfig {
+        QueueConfig {
+            max_batch: self.max_batch,
+            max_wait_us: self.max_wait_us,
+            fallback: self.policy,
+            planned: true,
+        }
     }
 }
 
@@ -71,66 +91,11 @@ impl Default for CoordinatorConfig {
     }
 }
 
-/// One inference request (flat NHWC image) with its reply channel.
-struct Request {
-    id: u64,
-    input: Vec<f32>,
-    enqueued: Instant,
-    reply: Sender<Response>,
-}
-
-/// Why a request failed while the coordinator stayed alive. (Shutdown is
-/// signalled differently: the reply channel closes.)
-#[derive(Debug, Clone, PartialEq, Eq)]
-pub enum ServeError {
-    /// The backend rejected or failed the batch this request rode in.
-    Backend(String),
-}
-
-impl std::fmt::Display for ServeError {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        match self {
-            ServeError::Backend(msg) => write!(f, "backend error: {msg}"),
-        }
-    }
-}
-
-impl std::error::Error for ServeError {}
-
-#[derive(Debug, Clone)]
-pub struct Response {
-    pub id: u64,
-    /// Logits on success, or an explicit backend error.
-    pub outcome: Result<Vec<f32>, ServeError>,
-    /// end-to-end latency (enqueue -> reply), microseconds
-    pub latency_us: f64,
-    /// batch this request rode in
-    pub batch: usize,
-}
-
-impl Response {
-    /// Logits, if the request succeeded.
-    pub fn logits(&self) -> Option<&[f32]> {
-        self.outcome.as_ref().ok().map(|v| v.as_slice())
-    }
-
-    /// Consume into logits or the serve error.
-    pub fn into_logits(self) -> Result<Vec<f32>, ServeError> {
-        self.outcome
-    }
-}
-
-enum Msg {
-    Req(Request),
-    Shutdown,
-}
-
-/// Client handle: submit images, await responses.
+/// Client handle: submit images, await responses. A single-model
+/// [`Server`] underneath.
 pub struct Coordinator {
-    tx: Sender<Msg>,
-    next_id: AtomicU64,
+    server: Server,
     pub metrics: Arc<Mutex<Metrics>>,
-    worker: Option<std::thread::JoinHandle<Result<()>>>,
     pub input_len: usize,
     pub classes: usize,
 }
@@ -145,26 +110,14 @@ impl Coordinator {
     where
         F: FnOnce() -> Result<Box<dyn Backend>, CadnnError> + Send + 'static,
     {
-        let (tx, rx) = channel::<Msg>();
-        let metrics = Arc::new(Mutex::new(Metrics::new()));
-        let m2 = metrics.clone();
-        let (ready_tx, ready_rx) = channel::<Result<(usize, usize), String>>();
-        let worker = std::thread::Builder::new()
-            .name("cadnn-coordinator".into())
-            .spawn(move || worker_loop(factory, cfg, rx, m2, ready_tx))?;
-        let (input_len, classes) = match ready_rx.recv() {
-            Ok(Ok(geometry)) => geometry,
-            Ok(Err(e)) => return Err(anyhow!("coordinator worker failed to start: {e}")),
-            Err(_) => return Err(anyhow!("coordinator worker died during startup")),
-        };
-        Ok(Coordinator {
-            tx,
-            next_id: AtomicU64::new(1),
-            metrics,
-            worker: Some(worker),
-            input_len,
-            classes,
-        })
+        let server = Server::builder()
+            .backend_with(MODEL, factory, cfg.queue())
+            .build()
+            .map_err(|e| anyhow!("coordinator worker failed to start: {e}"))?;
+        let metrics = server.metrics(MODEL).expect("default model registered");
+        let input_len = server.input_len(MODEL).expect("default model registered");
+        let classes = server.classes(MODEL).expect("default model registered");
+        Ok(Coordinator { server, metrics, input_len, classes })
     }
 
     /// Serve an already-constructed backend.
@@ -218,12 +171,9 @@ impl Coordinator {
                 self.input_len
             ));
         }
-        let (rtx, rrx) = channel();
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        self.tx
-            .send(Msg::Req(Request { id, input, enqueued: Instant::now(), reply: rtx }))
-            .map_err(|_| anyhow!("coordinator stopped"))?;
-        Ok(rrx)
+        self.server
+            .submit(ServeRequest::new(MODEL, input))
+            .map_err(|e| anyhow!("coordinator stopped: {e}"))
     }
 
     /// Submit and wait (convenience).
@@ -232,156 +182,7 @@ impl Coordinator {
         rx.recv().map_err(|_| anyhow!("worker dropped request"))
     }
 
-    pub fn shutdown(mut self) -> Result<()> {
-        let _ = self.tx.send(Msg::Shutdown);
-        if let Some(w) = self.worker.take() {
-            w.join().map_err(|_| anyhow!("worker panicked"))??;
-        }
-        Ok(())
-    }
-}
-
-impl Drop for Coordinator {
-    fn drop(&mut self) {
-        let _ = self.tx.send(Msg::Shutdown);
-        if let Some(w) = self.worker.take() {
-            let _ = w.join();
-        }
-    }
-}
-
-fn worker_loop<F>(
-    factory: F,
-    cfg: BatcherConfig,
-    rx: Receiver<Msg>,
-    metrics: Arc<Mutex<Metrics>>,
-    ready: Sender<Result<(usize, usize), String>>,
-) -> Result<()>
-where
-    F: FnOnce() -> Result<Box<dyn Backend>, CadnnError>,
-{
-    // Backend objects are created inside the worker thread (no Send bound
-    // on the backend itself, only on the factory).
-    let backend = match factory() {
-        Ok(b) => b,
-        Err(e) => {
-            let _ = ready.send(Err(e.to_string()));
-            return Err(anyhow!("backend init failed: {e}"));
-        }
-    };
-    let batches = backend.batch_sizes();
-    if batches.is_empty() {
-        let msg = "backend reports no batch variants".to_string();
-        let _ = ready.send(Err(msg.clone()));
-        return Err(anyhow!(msg));
-    }
-    let per_image: usize = backend.input_shape().iter().product();
-    let classes = backend.classes();
-    let _ = ready.send(Ok((per_image, classes)));
-    let backend = backend.as_ref();
-
-    let mut queue: Vec<Request> = Vec::new();
-    loop {
-        // fill the queue: block for the first request, then drain for up
-        // to max_wait_us or until max_batch requests are pending.
-        if queue.is_empty() {
-            match rx.recv() {
-                Ok(Msg::Req(r)) => queue.push(r),
-                Ok(Msg::Shutdown) | Err(_) => return Ok(()),
-            }
-        }
-        // drain whatever is already queued (a burst that arrived while
-        // the previous batch executed) without waiting
-        while queue.len() < cfg.max_batch {
-            match rx.try_recv() {
-                Ok(Msg::Req(r)) => queue.push(r),
-                Ok(Msg::Shutdown) => {
-                    flush(backend, &cfg, &mut queue, &batches, per_image, classes, &metrics);
-                    return Ok(());
-                }
-                Err(_) => break,
-            }
-        }
-        let deadline = queue[0].enqueued + Duration::from_micros(cfg.max_wait_us);
-        while queue.len() < cfg.max_batch {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            match rx.recv_timeout(deadline - now) {
-                Ok(Msg::Req(r)) => queue.push(r),
-                Ok(Msg::Shutdown) => {
-                    flush(backend, &cfg, &mut queue, &batches, per_image, classes, &metrics);
-                    return Ok(());
-                }
-                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => break,
-                Err(_) => {
-                    flush(backend, &cfg, &mut queue, &batches, per_image, classes, &metrics);
-                    return Ok(());
-                }
-            }
-        }
-        flush(backend, &cfg, &mut queue, &batches, per_image, classes, &metrics);
-    }
-}
-
-/// Execute and reply to as many queued requests as one batch allows.
-fn flush(
-    backend: &dyn Backend,
-    cfg: &BatcherConfig,
-    queue: &mut Vec<Request>,
-    batches: &[usize],
-    per_image: usize,
-    classes: usize,
-    metrics: &Arc<Mutex<Metrics>>,
-) {
-    while !queue.is_empty() {
-        let b = pick_batch(queue.len().min(cfg.max_batch), batches, cfg.policy);
-        let take = b.min(queue.len());
-        let mut input = vec![0.0f32; b * per_image];
-        for (i, r) in queue.iter().take(take).enumerate() {
-            input[i * per_image..(i + 1) * per_image].copy_from_slice(&r.input);
-        }
-        let t0 = Instant::now();
-        let out = match backend.run_batch(b, &input) {
-            Ok(o) => o,
-            Err(e) => {
-                crate::util::log::log(
-                    crate::util::log::Level::Error,
-                    "coordinator",
-                    format_args!("execute failed: {e}"),
-                );
-                // answer the affected requests with an explicit backend
-                // error so clients can distinguish this from shutdown
-                // (where the reply channel just closes)
-                let err = ServeError::Backend(e.to_string());
-                let mut m = metrics.lock().unwrap();
-                m.record_errors(take as u64);
-                drop(m);
-                for r in queue.drain(..take) {
-                    let latency_us = r.enqueued.elapsed().as_secs_f64() * 1e6;
-                    let _ = r.reply.send(Response {
-                        id: r.id,
-                        outcome: Err(err.clone()),
-                        latency_us,
-                        batch: b,
-                    });
-                }
-                continue;
-            }
-        };
-        let exec_us = t0.elapsed().as_secs_f64() * 1e6;
-        let mut m = metrics.lock().unwrap();
-        m.record_batch(b, take, exec_us);
-        for (i, r) in queue.drain(..take).enumerate() {
-            let latency_us = r.enqueued.elapsed().as_secs_f64() * 1e6;
-            m.record_request(latency_us);
-            let _ = r.reply.send(Response {
-                id: r.id,
-                outcome: Ok(out[i * classes..(i + 1) * classes].to_vec()),
-                latency_us,
-                batch: b,
-            });
-        }
+    pub fn shutdown(self) -> Result<()> {
+        self.server.shutdown().map_err(|e| anyhow!("{e}"))
     }
 }

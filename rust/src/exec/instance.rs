@@ -252,12 +252,16 @@ fn prune_matrix(mat: &mut [f32], sparsity: f64) {
 /// block / pattern z-steps), so the planner sees the same support shape
 /// a real compressed artifact would carry. Pattern structure needs
 /// spatial kernel positions; on 1x1 / GEMM-shaped layers it degrades to
-/// the element cut.
+/// the element cut. The pattern library is selected once per
+/// (kh, kw, cin) layer family through `cache` (PatDNN: libraries
+/// transfer across same-shape layers), so tuned ResNet-50 builds stop
+/// re-running library selection per layer and per batch variant.
 fn prune_matrix_structured(
     mat: &mut [f32],
     hwio: [usize; 4],
     sparsity: f64,
     structure: PruneStructure,
+    cache: &mut planner::PlanCache,
 ) {
     let (k, n) = (hwio[0] * hwio[1] * hwio[2], hwio[3]);
     debug_assert_eq!(mat.len(), k * n);
@@ -266,15 +270,22 @@ fn prune_matrix_structured(
         PruneStructure::Block { br, bc } => bsr::prune_blocks(mat, k, n, br, bc, sparsity),
         PruneStructure::Pattern { entries } => {
             if hwio[0] * hwio[1] > 1 {
-                pattern::prune_patterns(
-                    mat,
-                    hwio[0],
-                    hwio[1],
-                    hwio[2],
-                    hwio[3],
-                    sparsity,
-                    entries,
-                    pattern::DEFAULT_LIBRARY,
+                if sparsity <= 0.0 || mat.is_empty() {
+                    return;
+                }
+                let lib = cache.pattern_library(hwio[0], hwio[1], hwio[2], entries, || {
+                    pattern::select_pattern_library(
+                        mat,
+                        hwio[0],
+                        hwio[1],
+                        hwio[2],
+                        hwio[3],
+                        entries,
+                        pattern::DEFAULT_LIBRARY,
+                    )
+                });
+                pattern::prune_with_library(
+                    mat, hwio[0], hwio[1], hwio[2], hwio[3], sparsity, entries, &lib,
                 );
             } else {
                 prune_matrix(mat, sparsity);
@@ -319,6 +330,31 @@ impl ModelInstance {
         cache_bytes: usize,
         policy: FormatPolicy,
     ) -> Result<ModelInstance, CadnnError> {
+        Self::build_planned_cached(model, personality, profile, tuner, cache_bytes, policy, None)
+    }
+
+    /// [`ModelInstance::build_planned`] sharing a [`planner::PlanCache`]
+    /// across calls. `EngineBuilder` threads one cache through every
+    /// batch variant it builds, so per-layer column clustering,
+    /// densification, and pattern-library selection run once per pruned
+    /// layer instead of once per batch variant — and within one build
+    /// the payload rewrite reuses the exact `Permutation` the planner's
+    /// estimate computed (nothing cache-derived enters the serialized
+    /// [`ExecPlan`]).
+    pub fn build_planned_cached(
+        model: &Graph,
+        personality: Personality,
+        profile: Option<&SparsityProfile>,
+        tuner: Option<&mut TunerCache>,
+        cache_bytes: usize,
+        policy: FormatPolicy,
+        plan_cache: Option<&mut planner::PlanCache>,
+    ) -> Result<ModelInstance, CadnnError> {
+        let mut local_cache = planner::PlanCache::default();
+        let build_cache: &mut planner::PlanCache = match plan_cache {
+            Some(c) => c,
+            None => &mut local_cache,
+        };
         let graph = personality.lower(model);
         let mut weights = BTreeMap::new();
         let mut tiles = BTreeMap::new();
@@ -368,7 +404,7 @@ impl ModelInstance {
                     if sparsity > 0.0 {
                         let hwio = [*kh, *kw, *cin, *cout];
                         let structure = structure_of(personality, profile, &graph, n.id);
-                        prune_matrix_structured(&mut mat, hwio, sparsity, structure);
+                        prune_matrix_structured(&mut mat, hwio, sparsity, structure, build_cache);
                         let csr = CsrMatrix::from_dense(&mat, k, *cout);
                         weights.insert(
                             n.id,
@@ -396,7 +432,7 @@ impl ModelInstance {
                     let hwio = [1, 1, *k, *nn];
                     if sparsity > 0.0 {
                         let structure = structure_of(personality, profile, &graph, n.id);
-                        prune_matrix_structured(&mut mat, hwio, sparsity, structure);
+                        prune_matrix_structured(&mut mat, hwio, sparsity, structure, build_cache);
                         let csr = CsrMatrix::from_dense(&mat, *k, *nn);
                         weights.insert(
                             n.id,
@@ -453,7 +489,11 @@ impl ModelInstance {
         // Per-layer format planning over the pruned layers — the BSR
         // conversion path. Consumes each Sparse entry's `hwio` (the
         // spatial-vs-GEMM signal) plus the node's GEMM row count, and
-        // rewrites the payload to the planned format.
+        // rewrites the payload to the planned format. Clustering and
+        // densification flow through the layer's `PlanCache` slot, so
+        // the estimate and the rewrite share one computation (and later
+        // batch variants share it too).
+        let batch = graph.nodes[0].shape.0.first().copied().unwrap_or(1).max(1);
         let mut plan = ExecPlan::default();
         for (id, w) in weights.iter_mut() {
             let NodeWeights::Sparse { csr, hwio, epi, cutover } = w else {
@@ -461,11 +501,22 @@ impl ModelInstance {
             };
             let node = graph.node(*id);
             let m = node.shape.numel() / csr.cols.max(1);
-            let lp = if measured_formats {
-                planner::choose_measured(policy, csr, m, *hwio, name_seed(&node.name))
+            let arts = build_cache.layer(&node.name, csr);
+            let mut lp = if measured_formats {
+                planner::plan_layer_measured(
+                    policy,
+                    csr,
+                    m,
+                    *hwio,
+                    name_seed(&node.name),
+                    arts,
+                )
             } else {
-                planner::choose(policy, csr, m, *hwio)
+                planner::plan_layer(policy, csr, m, *hwio, arts)
             };
+            // one image contributes m/batch GEMM rows to this layer —
+            // with cost_per_row this makes ExecPlan::cost_at batch-aware
+            lp.rows_per_image = m / batch;
             plan.layers.insert(node.name.clone(), lp.clone());
             match lp.format {
                 SparseFormat::Csr => {
@@ -473,7 +524,7 @@ impl ModelInstance {
                 }
                 SparseFormat::Dense => {
                     let new_w = NodeWeights::Dense {
-                        mat: csr.to_dense(),
+                        mat: arts.dense(csr).as_ref().clone(),
                         hwio: *hwio,
                         epi: epi.clone(),
                     };
@@ -489,11 +540,12 @@ impl ModelInstance {
                 }
                 SparseFormat::Bsr { br, bc } => {
                     let (kk, nn) = (csr.rows, csr.cols);
-                    let dense = csr.to_dense();
+                    let dense = arts.dense(csr);
                     let new_w = if lp.reorder {
-                        // same clustering entry point the planner's
-                        // estimate used, so plan and payload agree
-                        let perm = reorder::cluster_columns_csr(csr, br);
+                        // the cached permutation IS the one the planner's
+                        // estimate used, so plan and payload agree and the
+                        // clustering runs once per layer
+                        let perm = arts.permutation(csr, br).clone();
                         let permuted = reorder::permute_cols(&dense, kk, nn, &perm);
                         NodeWeights::BlockSparse {
                             bsr: BsrMatrix::from_dense(&permuted, kk, nn, br, bc),
@@ -527,6 +579,20 @@ impl ModelInstance {
 
     fn tile(&self, id: NodeId) -> TileConfig {
         self.tiles.get(&id).copied().unwrap_or(TileConfig::DEFAULT)
+    }
+
+    /// The batch size this instance executes (its graph's input batch).
+    pub fn batch(&self) -> usize {
+        self.graph.nodes[0].shape.0.first().copied().unwrap_or(1).max(1)
+    }
+
+    /// Estimated planner cost (units) of executing one batch on this
+    /// instance — `ExecPlan::cost_at` evaluated at this variant's batch
+    /// size. `None` when nothing was pruned (empty plan): the engine's
+    /// batch variants expose these to the serving scheduler
+    /// ([`crate::api::Backend::plan_costs`]).
+    pub fn plan_cost(&self) -> Option<f64> {
+        self.plan.cost_at(self.batch())
     }
 
     /// Build a reusable scratch for this instance (value table sized to
@@ -1047,6 +1113,46 @@ mod tests {
         let out_a = auto.execute(&x).unwrap();
         let out_c = csr.execute(&x).unwrap();
         assert!(out_a.max_abs_diff(&out_c) < 1e-3, "{}", out_a.max_abs_diff(&out_c));
+    }
+
+    /// One `PlanCache` across batch variants: the cached build produces
+    /// the same plan, weights, and outputs as the uncached build, and
+    /// per-variant plan costs scale with the batch while the per-image
+    /// cost stays put.
+    #[test]
+    fn shared_plan_cache_matches_uncached_builds() {
+        let g1 = models::build("lenet5", 1).unwrap();
+        let g4 = models::build("lenet5", 4).unwrap();
+        let profile = SparsityProfile::uniform(&g1, 0.8);
+        let mut cache = planner::PlanCache::default();
+        let build = |g: &Graph, c: Option<&mut planner::PlanCache>| {
+            ModelInstance::build_planned_cached(
+                g,
+                Personality::CadnnSparse,
+                Some(&profile),
+                None,
+                1 << 20,
+                FormatPolicy::Auto,
+                c,
+            )
+            .unwrap()
+        };
+        let i1 = build(&g1, Some(&mut cache));
+        let i4 = build(&g4, Some(&mut cache));
+        let fresh4 = build(&g4, None);
+        assert_eq!(i4.plan, fresh4.plan, "cache must not change planning");
+        let x = input_for(&g4, 17);
+        let a = i4.execute(&x).unwrap();
+        let b = fresh4.execute(&x).unwrap();
+        assert_eq!(a.data, b.data, "cache must not change execution");
+        // per-batch-variant plan costs: affine in the batch size
+        let (c1, c4) = (i1.plan_cost().unwrap(), i4.plan_cost().unwrap());
+        assert!(c4 > c1, "batch-4 cost {c4} must exceed batch-1 cost {c1}");
+        assert_eq!(i1.batch(), 1);
+        assert_eq!(i4.batch(), 4);
+        let per_image = i1.plan.per_image_cost();
+        assert!((i4.plan.per_image_cost() - per_image).abs() < 1e-9);
+        assert!((c4 - c1 - 3.0 * per_image).abs() < 1e-6, "cost must be affine in m");
     }
 
     #[test]

@@ -24,14 +24,22 @@
 //! Beneath the engine sits the pluggable [`api::Backend`] trait with two
 //! implementations: [`api::NativeBackend`] (in-process kernels, always
 //! available) and [`api::ArtifactBackend`] (PJRT over AOT HLO artifacts).
-//! The serving [`coordinator::Coordinator`] drives any `Box<dyn Backend>`,
-//! so the dynamic batcher works for natively-executed models too:
+//! The multi-model [`serve::Server`] drives any `Box<dyn Backend>`: each
+//! registered model gets its own queue and a deadline-aware dynamic
+//! batcher whose batch-size choice runs on the planner's cost model
+//! ([`planner::ExecPlan::cost_at`]):
 //!
 //! ```ignore
-//! use cadnn::coordinator::{BatcherConfig, Coordinator};
-//! let coord = Coordinator::serve_engine(&engine, BatcherConfig::default())?;
-//! let response = coord.infer(image)?;     // Ok(logits) | backend error
+//! use cadnn::serve::{ServeRequest, Server};
+//! let server = Server::builder().engine("resnet50", &engine).build()?;
+//! let resp = server.infer(
+//!     ServeRequest::new("resnet50", image).deadline_ms(30).topk(5),
+//! )?;                                      // Ok(logits) | Deadline | Backend
+//! let stats = server.stats();              // per-model snapshots
 //! ```
+//!
+//! (The old single-model [`coordinator::Coordinator`] remains as a thin
+//! deprecated shim over `serve` — see `docs/SERVING.md`.)
 //!
 //! Errors are typed ([`error::CadnnError`]) below the API boundary and
 //! `anyhow` at the binary/example boundary.
@@ -56,10 +64,11 @@
 //! | [`exec`]      | native executor: personalities, instances, scratch reuse |
 //! | [`kernels`]   | dense/CSR/BSR/pattern GEMM, conv engines, epilogues      |
 //! | [`compress`]  | CSR/BSR/pattern weights, reordering, profiles, sizes     |
-//! | [`planner`]   | per-layer format choice (Dense/CSR/BSR/Pattern + reorder)|
+//! | [`planner`]   | per-layer format choice + batch cost model (`cost_at`)   |
 //! | [`tuner`]     | optimization-parameter selection (paper §4)              |
 //! | [`runtime`]   | PJRT artifact loader (vendored stub offline)             |
-//! | [`coordinator`]| request queue → dynamic batcher → any backend           |
+//! | [`serve`]     | multi-model Server: deadline-aware planner-driven batching|
+//! | [`coordinator`]| deprecated single-model shim over [`serve`]             |
 //! | [`costmodel`] | device projection behind Figure 2                        |
 //! | [`bench`]     | Figure 2 / Table 2 regeneration harnesses                |
 //! | [`util`]      | offline substrate: json, rng, stats, thread pool, prop   |
@@ -83,8 +92,10 @@ pub mod models;
 pub mod passes;
 pub mod planner;
 pub mod runtime;
+pub mod serve;
 pub mod tuner;
 pub mod util;
 
 pub use api::{Backend, Engine, EngineBuilder, Session};
 pub use error::CadnnError;
+pub use serve::{ServeRequest, ServeResponse, Server};

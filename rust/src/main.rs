@@ -9,9 +9,14 @@
 //!            [--pruning element|block|pattern] [--measured]
 //!                                           per-layer sparse-format plan
 //! cadnn serve [--model M] [--variant V] [--requests N] [--rps R] [--native]
+//!             [--models a=lenet5,b=lenet5:sparse] [--deadline-ms D]
+//!             [--greedy] [--no-planner] [--topk K]
 //!             [--format auto|csr|bsr|pattern] serve a Poisson trace and report
-//!                                           (--native: no artifacts needed —
-//!                                           batcher over the native engine)
+//!                                           (--native / --models: no artifacts
+//!                                           needed — the multi-model Server
+//!                                           batches over native engines with
+//!                                           planner-informed, deadline-aware
+//!                                           batch selection)
 //! cadnn calibrate                           host kernel calibration table
 //! ```
 
@@ -20,11 +25,12 @@ use cadnn::api::Engine;
 use cadnn::bench::{figure2, print_table, table2};
 use cadnn::compress::profile::paper_profile;
 use cadnn::compress::size;
-use cadnn::coordinator::{BatchPolicy, BatcherConfig, Coordinator, CoordinatorConfig};
+use cadnn::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig};
 use cadnn::costmodel::calibrate;
 use cadnn::exec::Personality;
 use cadnn::models;
 use cadnn::planner::FormatPolicy;
+use cadnn::serve::{QueueConfig, ServeRequest, Server};
 use cadnn::util::json::Json;
 use cadnn::util::rng::Rng;
 
@@ -279,76 +285,155 @@ fn cmd_tune(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// Parse `--models a=lenet5,b=lenet5:sparse` into
+/// `(alias, model, sparse?)` triples. A bare entry (`lenet5`) registers
+/// under its own name; a `:sparse` suffix serves the compressed variant.
+fn parse_model_specs(spec: &str) -> Result<Vec<(String, String, bool)>> {
+    let mut out = Vec::new();
+    for part in spec.split(',').filter(|s| !s.is_empty()) {
+        let (alias, rest) = match part.split_once('=') {
+            Some((a, r)) => (a.to_string(), r),
+            None => (part.split(':').next().unwrap_or(part).to_string(), part),
+        };
+        let (model, sparse) = match rest.split_once(':') {
+            Some((m, "sparse")) => (m.to_string(), true),
+            Some((m, "dense")) => (m.to_string(), false),
+            Some((_, v)) => return Err(anyhow!("unknown variant ':{v}' (dense|sparse)")),
+            None => (rest.to_string(), false),
+        };
+        if alias.is_empty() || model.is_empty() {
+            return Err(anyhow!("bad --models entry '{part}' (alias=model[:sparse])"));
+        }
+        out.push((alias, model, sparse));
+    }
+    if out.is_empty() {
+        return Err(anyhow!("--models given but empty"));
+    }
+    Ok(out)
+}
+
 fn cmd_serve(args: &[String]) -> Result<()> {
     let model = opt(args, "--model").unwrap_or_else(|| "lenet5".into());
     let variant = opt(args, "--variant").unwrap_or_else(|| "dense".into());
-    let batcher = BatcherConfig {
-        max_batch: opt(args, "--max-batch").and_then(|s| s.parse().ok()).unwrap_or(8),
-        max_wait_us: opt(args, "--max-wait-us").and_then(|s| s.parse().ok()).unwrap_or(2000),
-        policy: if flag(args, "--greedy") { BatchPolicy::Greedy } else { BatchPolicy::PadToFit },
-    };
+    let max_batch: usize = opt(args, "--max-batch").and_then(|s| s.parse().ok()).unwrap_or(8);
+    let max_wait_us: u64 =
+        opt(args, "--max-wait-us").and_then(|s| s.parse().ok()).unwrap_or(2000);
+    let policy = if flag(args, "--greedy") { BatchPolicy::Greedy } else { BatchPolicy::PadToFit };
     let requests: usize = opt(args, "--requests").and_then(|s| s.parse().ok()).unwrap_or(64);
     let rps: f64 = opt(args, "--rps").and_then(|s| s.parse().ok()).unwrap_or(100.0);
-    let coord = if flag(args, "--native") {
-        // the Backend abstraction at work: same batcher, no artifacts dir
-        let personality = if variant == "sparse" {
-            Personality::CadnnSparse
-        } else {
-            Personality::CadnnDense
-        };
-        let sizes: Vec<usize> = [1usize, 2, 4, 8]
-            .into_iter()
-            .filter(|&b| b <= batcher.max_batch.max(1))
-            .collect();
-        let policy = format_policy(args)?;
-        if opt(args, "--format").is_some() && !personality.sparse() {
-            return Err(anyhow!("--format applies to the sparse variant only"));
-        }
-        let mut builder = Engine::native(&model)
-            .personality(personality)
-            .batch_sizes(&sizes);
-        if personality.sparse() {
-            let g = models::build(&model, 1).ok_or_else(|| anyhow!("unknown model {model}"))?;
-            builder = builder
-                .sparsity_profile(paper_profile(&g))
-                .sparse_format(policy);
-        }
-        let engine = builder.build()?;
-        println!(
-            "serving {} natively — {} requests @ {:.0} req/s (Poisson)",
-            engine.name(),
-            requests,
-            rps
-        );
-        Coordinator::serve_engine(&engine, batcher)?
-    } else {
+    let deadline_ms: Option<u64> = opt(args, "--deadline-ms").and_then(|s| s.parse().ok());
+    let topk: Option<usize> = opt(args, "--topk").and_then(|s| s.parse().ok());
+    let models_spec = opt(args, "--models");
+
+    if !flag(args, "--native") && models_spec.is_none() {
+        // the artifact path keeps the original single-model coordinator
         let artifacts_dir = opt(args, "--artifacts").unwrap_or_else(|| "artifacts".into());
         println!(
             "serving {model}/{variant} from {artifacts_dir} — {requests} requests @ {rps:.0} req/s (Poisson)"
         );
-        Coordinator::start(CoordinatorConfig {
+        let coord = Coordinator::start(CoordinatorConfig {
             artifacts_dir,
             model: model.clone(),
             variant: variant.clone(),
-            max_batch: batcher.max_batch,
-            max_wait_us: batcher.max_wait_us,
-            policy: batcher.policy,
-        })?
+            max_batch,
+            max_wait_us,
+            policy,
+        })?;
+        let input_len = coord.input_len;
+        let mut rng = Rng::new(9);
+        let mut pending = Vec::new();
+        for _ in 0..requests {
+            let mut img = vec![0.0f32; input_len];
+            rng.fill_normal(&mut img, 0.5);
+            pending.push(coord.submit(img)?);
+            std::thread::sleep(std::time::Duration::from_secs_f64(rng.exp(rps)));
+        }
+        for rx in pending {
+            let _ = rx.recv();
+        }
+        println!("\n{}", coord.metrics.lock().unwrap().report());
+        coord.shutdown()?;
+        return Ok(());
+    }
+
+    // native multi-model serving through cadnn::serve::Server
+    let specs = match &models_spec {
+        Some(s) => parse_model_specs(s)?,
+        None => vec![(model.clone(), model.clone(), variant == "sparse")],
     };
-    let input_len = coord.input_len;
+    let policy_fmt = format_policy(args)?;
+    if opt(args, "--format").is_some() && !specs.iter().any(|(_, _, sp)| *sp) {
+        return Err(anyhow!("--format applies to sparse variants only"));
+    }
+    let qcfg = QueueConfig {
+        max_batch,
+        max_wait_us,
+        fallback: policy,
+        planned: !flag(args, "--no-planner"),
+    };
+    let sizes: Vec<usize> = [1usize, 2, 4, 8]
+        .into_iter()
+        .filter(|&b| b <= max_batch.max(1))
+        .collect();
+    let mut builder = Server::builder();
+    for (alias, name, sparse) in &specs {
+        let mut eb = Engine::native(name)
+            .personality(if *sparse { Personality::CadnnSparse } else { Personality::CadnnDense })
+            .batch_sizes(&sizes);
+        if *sparse {
+            let g = models::build(name, 1).ok_or_else(|| anyhow!("unknown model {name}"))?;
+            eb = eb.sparsity_profile(paper_profile(&g)).sparse_format(policy_fmt);
+        }
+        let engine = eb.build()?;
+        let planned = qcfg.planned && !engine.plan_costs().is_empty();
+        println!(
+            "registered '{alias}' -> {} ({} batch variants, scheduler: {})",
+            engine.name(),
+            engine.batch_sizes().len(),
+            if planned { "planner cost model" } else { "policy fallback" },
+        );
+        builder = builder.engine_with(alias.as_str(), &engine, qcfg);
+    }
+    let server = builder.build()?;
+    println!(
+        "serving {} model(s) — {requests} requests @ {rps:.0} req/s (Poisson){}",
+        specs.len(),
+        deadline_ms.map(|d| format!(", deadline {d}ms")).unwrap_or_default(),
+    );
+
     let mut rng = Rng::new(9);
     let mut pending = Vec::new();
-    for _ in 0..requests {
-        let mut img = vec![0.0f32; input_len];
+    for i in 0..requests {
+        let alias = &specs[i % specs.len()].0;
+        let mut img = vec![0.0f32; server.input_len(alias).unwrap()];
         rng.fill_normal(&mut img, 0.5);
-        pending.push(coord.submit(img)?);
+        let mut req = ServeRequest::new(alias.clone(), img);
+        if let Some(d) = deadline_ms {
+            req = req.deadline_ms(d);
+        }
+        if let Some(k) = topk {
+            req = req.topk(k);
+        }
+        pending.push(server.submit(req)?);
         std::thread::sleep(std::time::Duration::from_secs_f64(rng.exp(rps)));
     }
+    let (mut ok, mut missed, mut failed) = (0usize, 0usize, 0usize);
     for rx in pending {
-        let _ = rx.recv();
+        match rx.recv() {
+            Ok(resp) => match resp.outcome {
+                Ok(_) => ok += 1,
+                Err(cadnn::serve::ServeError::Deadline { .. }) => missed += 1,
+                Err(_) => failed += 1,
+            },
+            Err(_) => failed += 1,
+        }
     }
-    println!("\n{}", coord.metrics.lock().unwrap().report());
-    coord.shutdown()?;
+    println!("\nok={ok} deadline_missed={missed} failed={failed}");
+    for (alias, _, _) in &specs {
+        let m = server.metrics(alias).unwrap();
+        println!("--- {alias} ---\n{}", m.lock().unwrap().report());
+    }
+    server.shutdown()?;
     Ok(())
 }
 

@@ -36,11 +36,13 @@ use crate::compress::csr::CsrMatrix;
 use crate::compress::pattern;
 use crate::compress::pattern::PatternMatrix;
 use crate::compress::reorder;
+use crate::compress::reorder::Permutation;
 use crate::kernels::{Epilogue, PARALLEL_M_CUTOVER};
 use crate::passes::layout::TileConfig;
 use crate::util::json::{obj, Json};
 use crate::util::stats;
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 /// How a layer's weights are stored and which kernel runs it.
 ///
@@ -133,13 +135,24 @@ pub fn pattern_eligible(csr: &CsrMatrix, hwio: [usize; 4]) -> bool {
 }
 
 /// One layer's execution decision.
-#[derive(Debug, Clone, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct LayerPlan {
     pub format: SparseFormat,
     /// Carry a filter-kernel column permutation with the weights.
     pub reorder: bool,
     /// Serial→parallel row cutover for this layer's kernel.
     pub parallel_cutover: usize,
+    /// Estimated execution cost of ONE GEMM row of this layer under the
+    /// chosen format, in the relative cost units below (one CSR stored
+    /// value = 1.0). Feeds [`ExecPlan::cost_at`] / [`BatchCost`] so the
+    /// serving scheduler can reason about batch sizes. `0.0` = unknown
+    /// (plans loaded from pre-cost manifests).
+    pub cost_per_row: f64,
+    /// GEMM rows one image contributes to this layer (convolution:
+    /// output pixels; fully-connected: 1). With `cost_per_row` this
+    /// makes the plan's cost batch-size-aware: the layer runs
+    /// `batch * rows_per_image` rows. `0` = unknown.
+    pub rows_per_image: usize,
 }
 
 impl LayerPlan {
@@ -149,11 +162,13 @@ impl LayerPlan {
             format: SparseFormat::Csr,
             reorder: false,
             parallel_cutover: PARALLEL_M_CUTOVER,
+            cost_per_row: 0.0,
+            rows_per_image: 0,
         }
     }
 
     fn with_format(format: SparseFormat, reorder: bool) -> LayerPlan {
-        LayerPlan { format, reorder, parallel_cutover: PARALLEL_M_CUTOVER }
+        LayerPlan { format, reorder, ..LayerPlan::csr() }
     }
 
     pub fn to_json(&self) -> Json {
@@ -161,11 +176,13 @@ impl LayerPlan {
             ("format", Json::Str(self.format.label())),
             ("reorder", Json::Bool(self.reorder)),
             ("cutover", Json::Num(self.parallel_cutover as f64)),
+            ("cost_per_row", Json::Num(self.cost_per_row)),
+            ("rows_per_image", Json::Num(self.rows_per_image as f64)),
         ])
     }
 
-    /// Missing optional fields default (reorder=false, cutover=default);
-    /// an unknown format string rejects the whole plan.
+    /// Missing optional fields default (reorder=false, cutover=default,
+    /// costs unknown); an unknown format string rejects the whole plan.
     pub fn from_json(j: &Json) -> Option<LayerPlan> {
         let format = SparseFormat::parse(j.get("format")?.as_str()?)?;
         Some(LayerPlan {
@@ -175,6 +192,8 @@ impl LayerPlan {
                 .get("cutover")
                 .and_then(|v| v.as_usize())
                 .unwrap_or(PARALLEL_M_CUTOVER),
+            cost_per_row: j.get("cost_per_row").and_then(|v| v.as_f64()).unwrap_or(0.0),
+            rows_per_image: j.get("rows_per_image").and_then(|v| v.as_usize()).unwrap_or(0),
         })
     }
 }
@@ -192,15 +211,23 @@ impl LayerPlan {
 /// plan.layers.insert("c1".into(), LayerPlan::csr());
 /// plan.layers.insert(
 ///     "c2".into(),
-///     LayerPlan { format: SparseFormat::Pattern, reorder: false, parallel_cutover: 192 },
+///     LayerPlan {
+///         format: SparseFormat::Pattern,
+///         parallel_cutover: 192,
+///         cost_per_row: 64.0,
+///         rows_per_image: 196,
+///         ..LayerPlan::csr()
+///     },
 /// );
 /// // the manifest encoding round-trips losslessly
 /// let json = plan.to_json().to_string_pretty();
 /// let back = ExecPlan::from_json(&cadnn::util::json::Json::parse(&json).unwrap()).unwrap();
 /// assert_eq!(back, plan);
 /// assert_eq!(back.format_counts()["pattern"], 1);
+/// // ...and the per-layer costs make the plan batch-size-aware
+/// assert!(back.cost_at(8).unwrap() > back.cost_at(1).unwrap());
 /// ```
-#[derive(Debug, Clone, Default, PartialEq, Eq)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct ExecPlan {
     pub layers: BTreeMap<String, LayerPlan>,
 }
@@ -248,6 +275,69 @@ impl ExecPlan {
         }
         Some(ExecPlan { layers })
     }
+
+    /// Summed per-image cost of the planned layers (cost units): one
+    /// image contributes `rows_per_image` GEMM rows to each layer at
+    /// `cost_per_row` units each. `0.0` when the plan carries no cost
+    /// information (empty plan, or one loaded from a pre-cost manifest).
+    pub fn per_image_cost(&self) -> f64 {
+        self.layers
+            .values()
+            .map(|lp| lp.cost_per_row * lp.rows_per_image as f64)
+            .sum()
+    }
+
+    /// Estimated cost (units) of executing one batch of `m` images under
+    /// this plan — the planner cost model the serving scheduler runs on
+    /// ([`crate::serve::Scheduler`]). `None` when the plan carries no
+    /// cost information, so callers fall back to a plain batching policy.
+    pub fn cost_at(&self, m: usize) -> Option<f64> {
+        BatchCost::from_plan(self).map(|c| c.cost_at(m))
+    }
+}
+
+/// Batch-size cost estimator distilled from an [`ExecPlan`]: a fixed
+/// per-dispatch overhead plus a per-image term, both in the relative
+/// cost units below. Larger batches amortize the overhead (higher
+/// throughput) at the price of a longer wall-clock run (worse tail
+/// latency) — exactly the tradeoff a deadline-aware scheduler arbitrates.
+///
+/// # Examples
+///
+/// ```
+/// use cadnn::planner::{BatchCost, COST_BATCH_OVERHEAD};
+///
+/// let c = BatchCost { per_image: 500.0, overhead: COST_BATCH_OVERHEAD };
+/// // total cost grows with m...
+/// assert!(c.cost_at(8) > c.cost_at(1));
+/// // ...but the cost *per image* shrinks (overhead amortizes)
+/// assert!(c.cost_at(8) / 8.0 < c.cost_at(1));
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BatchCost {
+    /// Cost units added by every image in the batch.
+    pub per_image: f64,
+    /// Fixed cost units per executed batch (dispatch, staging, the
+    /// unplanned layers' envelope).
+    pub overhead: f64,
+}
+
+impl BatchCost {
+    /// Distill a plan's per-layer costs; `None` when the plan carries no
+    /// cost information.
+    pub fn from_plan(plan: &ExecPlan) -> Option<BatchCost> {
+        let per_image = plan.per_image_cost();
+        if per_image > 0.0 {
+            Some(BatchCost { per_image, overhead: COST_BATCH_OVERHEAD })
+        } else {
+            None
+        }
+    }
+
+    /// Estimated cost (units) of one batch of `m` images.
+    pub fn cost_at(&self, m: usize) -> f64 {
+        self.overhead + m as f64 * self.per_image
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -290,23 +380,173 @@ pub const SPATIAL_SWITCH_MARGIN: f64 = 0.75;
 /// Reordering must cut the stored-block count by at least this factor
 /// before the plan carries a permutation (the output scatter isn't free).
 pub const REORDER_MIN_GAIN: f64 = 0.90;
+/// Fixed per-batch dispatch cost (units) in [`BatchCost`]: queue
+/// hand-off, input staging, epilogues, and the unplanned (dense) layers'
+/// envelope. Makes `cost_at(m)` affine rather than linear, so larger
+/// batches amortize — the serving scheduler calibrates the units→µs
+/// scale from observed batches, so only the *ratio* to the per-value
+/// costs above matters here.
+pub const COST_BATCH_OVERHEAD: f64 = 1_000.0;
 
 /// Block shapes Auto considers, with their per-stored-value costs.
 pub const BSR_CANDIDATES: [(usize, usize, f64); 2] =
     [(4, 1, COST_BSR_4X1), (4, 4, COST_BSR_4X4)];
 
-/// (block count, reorder worthwhile) for one candidate block shape.
-fn blocks_for(csr: &CsrMatrix, br: usize, bc: usize) -> (usize, bool) {
-    let plain = bsr::count_blocks(csr, br, bc);
-    if bc <= 1 || plain == 0 {
-        return (plain, false);
+fn bsr_cost(br: usize, bc: usize) -> f64 {
+    BSR_CANDIDATES
+        .iter()
+        .find(|(a, b, _)| *a == br && *b == bc)
+        .map(|(_, _, c)| *c)
+        .unwrap_or(COST_BSR_4X1)
+}
+
+// ---------------------------------------------------------------------------
+// Build-time artifact cache
+// ---------------------------------------------------------------------------
+
+/// Memoized per-layer planning artifacts: candidate block counts, the
+/// column-clustering [`Permutation`], and the densified weight matrix.
+/// The planner's estimate and the instance's payload rewrite both
+/// consume these, so clustering/densification run **once per pruned
+/// layer** instead of once in the estimate plus once per batch variant —
+/// without the permutation ever entering the serialized [`ExecPlan`].
+#[derive(Debug, Default)]
+pub struct LayerArtifacts {
+    /// (rows, cols, nnz, content fingerprint) of the matrix these
+    /// artifacts were computed for — a stale-entry guard for cross-build
+    /// cache reuse. The fingerprint covers support *and* values, so two
+    /// same-shape matrices pruned to the same exact nnz (the density-
+    /// exact cut makes that collision easy) can never alias.
+    key: Option<(usize, usize, usize, u64)>,
+    /// (br, bc) -> (stored block count, reorder worthwhile).
+    blocks: BTreeMap<(usize, usize), (usize, bool)>,
+    /// br -> column-clustering permutation.
+    perms: BTreeMap<usize, Permutation>,
+    /// Densified weights (shared, cheap to hand out).
+    dense: Option<Arc<Vec<f32>>>,
+}
+
+impl LayerArtifacts {
+    /// (block count, reorder worthwhile) for one candidate block shape,
+    /// memoized.
+    fn blocks_for(&mut self, csr: &CsrMatrix, br: usize, bc: usize) -> (usize, bool) {
+        if let Some(&hit) = self.blocks.get(&(br, bc)) {
+            return hit;
+        }
+        let plain = bsr::count_blocks(csr, br, bc);
+        let result = if bc <= 1 || plain == 0 {
+            (plain, false)
+        } else {
+            let perm = self.permutation(csr, br);
+            let mapped = bsr::count_blocks_mapped(csr, br, bc, &perm.inverse().perm);
+            if (mapped as f64) < plain as f64 * REORDER_MIN_GAIN {
+                (mapped, true)
+            } else {
+                (plain, false)
+            }
+        };
+        self.blocks.insert((br, bc), result);
+        result
     }
-    let perm = reorder::cluster_columns_csr(csr, br);
-    let mapped = bsr::count_blocks_mapped(csr, br, bc, &perm.inverse().perm);
-    if (mapped as f64) < plain as f64 * REORDER_MIN_GAIN {
-        (mapped, true)
-    } else {
-        (plain, false)
+
+    /// The column-clustering permutation for `br`-row stripes, computed
+    /// at most once per layer. The instance build reuses exactly this
+    /// permutation for the payload rewrite, so plan and payload agree by
+    /// construction.
+    pub fn permutation(&mut self, csr: &CsrMatrix, br: usize) -> &Permutation {
+        self.perms
+            .entry(br)
+            .or_insert_with(|| reorder::cluster_columns_csr(csr, br))
+    }
+
+    /// The densified weight matrix, computed at most once per layer.
+    pub fn dense(&mut self, csr: &CsrMatrix) -> Arc<Vec<f32>> {
+        self.dense.get_or_insert_with(|| Arc::new(csr.to_dense())).clone()
+    }
+}
+
+/// Cross-batch-variant build cache, held by one engine build
+/// (`EngineBuilder` creates one and threads it through every
+/// `ModelInstance::build_planned_cached` call): [`LayerArtifacts`] keyed
+/// by layer name, plus the per-layer-family PatDNN pattern library so
+/// tuned ResNet-50 builds don't re-run library selection for every layer
+/// with the same (kh, kw, cin) shape.
+#[derive(Debug, Default)]
+pub struct PlanCache {
+    layers: BTreeMap<String, LayerArtifacts>,
+    /// (kh, kw, cin, entries) -> selected pattern library.
+    pattern_libs: BTreeMap<(usize, usize, usize, usize), Arc<Vec<Vec<u8>>>>,
+}
+
+/// FNV-1a over a CSR matrix's support and values (bit patterns), the
+/// content part of the [`LayerArtifacts`] stale-entry key. O(nnz) — the
+/// same order as one `count_blocks` pass.
+fn csr_fingerprint(csr: &CsrMatrix) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    let mix = |h: u64, x: u64| (h ^ x).wrapping_mul(0x100000001b3);
+    h = mix(h, csr.rows as u64);
+    h = mix(h, csr.cols as u64);
+    for &c in &csr.col_idx {
+        h = mix(h, c as u64);
+    }
+    for &p in &csr.row_ptr {
+        h = mix(h, p as u64);
+    }
+    for &v in &csr.values {
+        h = mix(h, v.to_bits() as u64);
+    }
+    h
+}
+
+impl PlanCache {
+    /// The artifacts slot for `name`, reset if the cached entry was
+    /// computed for a different matrix — shape, nnz, and a content
+    /// fingerprint all have to match, so a caller-held cache reused
+    /// across builds can never serve another matrix's permutation or
+    /// densified weights (layer names are unique within one build, but
+    /// the cache is a public type).
+    pub fn layer(&mut self, name: &str, csr: &CsrMatrix) -> &mut LayerArtifacts {
+        let key = (csr.rows, csr.cols, csr.nnz(), csr_fingerprint(csr));
+        let e = self.layers.entry(name.to_string()).or_default();
+        if e.key != Some(key) {
+            *e = LayerArtifacts { key: Some(key), ..LayerArtifacts::default() };
+        }
+        e
+    }
+
+    /// The pattern library for a (kh, kw, cin) layer family, selecting it
+    /// from the first such layer's weights (`build`) and reusing it for
+    /// every later family member — the PatDNN observation that pattern
+    /// libraries transfer across layers of one family.
+    pub fn pattern_library(
+        &mut self,
+        kh: usize,
+        kw: usize,
+        cin: usize,
+        entries: usize,
+        build: impl FnOnce() -> Vec<Vec<u8>>,
+    ) -> Arc<Vec<Vec<u8>>> {
+        self.pattern_libs
+            .entry((kh, kw, cin, entries))
+            .or_insert_with(|| Arc::new(build()))
+            .clone()
+    }
+}
+
+/// Per-row execution cost (units) of a layer under `lp`'s format — the
+/// `cost_per_row` every planned [`LayerPlan`] carries.
+fn unit_cost(lp: &LayerPlan, csr: &CsrMatrix, hwio: [usize; 4], arts: &mut LayerArtifacts) -> f64 {
+    match lp.format {
+        SparseFormat::Dense => (csr.rows * csr.cols) as f64 * COST_DENSE_MAC,
+        SparseFormat::Csr => csr.nnz() as f64 * COST_CSR_NNZ,
+        SparseFormat::Bsr { br, bc } => {
+            let (blocks, _) = arts.blocks_for(csr, br, bc);
+            (blocks * br * bc) as f64 * bsr_cost(br, bc)
+        }
+        SparseFormat::Pattern => {
+            csr.nnz() as f64 * COST_PATTERN_VAL
+                + pattern::count_kernels(csr, hwio[2]) as f64 * COST_PATTERN_KERNEL
+        }
     }
 }
 
@@ -335,6 +575,34 @@ fn blocks_for(csr: &CsrMatrix, br: usize, bc: usize) -> (usize, bool) {
 /// assert_eq!(plan.format, SparseFormat::Pattern);
 /// ```
 pub fn choose(policy: FormatPolicy, csr: &CsrMatrix, m: usize, hwio: [usize; 4]) -> LayerPlan {
+    plan_layer(policy, csr, m, hwio, &mut LayerArtifacts::default())
+}
+
+/// [`choose`] with memoized per-layer artifacts: the instance build
+/// passes the layer's [`PlanCache`] slot so block counts, the clustering
+/// permutation, and the densified matrix are computed once per pruned
+/// layer and shared with the payload rewrite (and later batch variants).
+/// Fills the plan's `cost_per_row`; the caller owns `rows_per_image`
+/// (the planner cannot know the batch size behind `m`).
+pub fn plan_layer(
+    policy: FormatPolicy,
+    csr: &CsrMatrix,
+    m: usize,
+    hwio: [usize; 4],
+    arts: &mut LayerArtifacts,
+) -> LayerPlan {
+    let mut lp = choose_impl(policy, csr, m, hwio, arts);
+    lp.cost_per_row = unit_cost(&lp, csr, hwio, arts);
+    lp
+}
+
+fn choose_impl(
+    policy: FormatPolicy,
+    csr: &CsrMatrix,
+    m: usize,
+    hwio: [usize; 4],
+    arts: &mut LayerArtifacts,
+) -> LayerPlan {
     debug_assert_eq!(csr.rows, hwio[0] * hwio[1] * hwio[2], "hwio inconsistent with K");
     debug_assert_eq!(csr.cols, hwio[3], "hwio inconsistent with N");
     match policy {
@@ -350,7 +618,7 @@ pub fn choose(policy: FormatPolicy, csr: &CsrMatrix, m: usize, hwio: [usize; 4])
             // best-filling candidate, fill traded by per-value cost
             let mut best = None;
             for (br, bc, cost) in BSR_CANDIDATES {
-                let (blocks, reorder_on) = blocks_for(csr, br, bc);
+                let (blocks, reorder_on) = arts.blocks_for(csr, br, bc);
                 let est = (blocks * br * bc) as f64 * cost;
                 if best.as_ref().map(|(e, _)| est < *e).unwrap_or(true) {
                     best = Some((
@@ -380,7 +648,7 @@ pub fn choose(policy: FormatPolicy, csr: &CsrMatrix, m: usize, hwio: [usize; 4])
                 best_est = est_dense;
             }
             for (br, bc, cost) in BSR_CANDIDATES {
-                let (blocks, reorder_on) = blocks_for(csr, br, bc);
+                let (blocks, reorder_on) = arts.blocks_for(csr, br, bc);
                 let est = mf * (blocks * br * bc) as f64 * cost;
                 if est < best_est {
                     best = LayerPlan::with_format(SparseFormat::Bsr { br, bc }, reorder_on);
@@ -433,8 +701,24 @@ pub fn choose_measured(
     hwio: [usize; 4],
     seed: u64,
 ) -> LayerPlan {
+    plan_layer_measured(policy, csr, m, hwio, seed, &mut LayerArtifacts::default())
+}
+
+/// [`choose_measured`] with memoized per-layer artifacts (densification
+/// and clustering shared with the heuristic estimate, the payload
+/// rewrite, and later batch variants). Fills `cost_per_row` from the
+/// heuristic unit model (the measured times pick the format; the cost
+/// units stay comparable across layers and batch sizes).
+pub fn plan_layer_measured(
+    policy: FormatPolicy,
+    csr: &CsrMatrix,
+    m: usize,
+    hwio: [usize; 4],
+    seed: u64,
+    arts: &mut LayerArtifacts,
+) -> LayerPlan {
     if policy != FormatPolicy::Auto {
-        return choose(policy, csr, m, hwio);
+        return plan_layer(policy, csr, m, hwio, arts);
     }
     let (k, n) = (csr.rows, csr.cols);
     if csr.nnz() == 0 || k == 0 || n == 0 {
@@ -452,7 +736,7 @@ pub fn choose_measured(
     let mut best = LayerPlan::csr();
     let mut best_us = t_csr * 0.98; // CSR keeps ties
 
-    let dense = csr.to_dense();
+    let dense = arts.dense(csr);
     let t_dense = measure_us(|| {
         crate::kernels::gemm::gemm_blocked(
             &a,
@@ -471,9 +755,9 @@ pub fn choose_measured(
     }
 
     for (br, bc, _) in BSR_CANDIDATES {
-        let (_, reorder_on) = blocks_for(csr, br, bc);
+        let (_, reorder_on) = arts.blocks_for(csr, br, bc);
         let mat = if reorder_on {
-            let perm = reorder::cluster_columns_csr(csr, br);
+            let perm = arts.permutation(csr, br).clone();
             let permuted = reorder::permute_cols(&dense, k, n, &perm);
             BsrMatrix::from_dense(&permuted, k, n, br, bc)
         } else {
@@ -504,6 +788,7 @@ pub fn choose_measured(
     let per_row_us = (best_us.max(1e-3)) / mm as f64;
     let amortize_rows = (2.0 * PARALLEL_DISPATCH_US / per_row_us).ceil() as usize;
     best.parallel_cutover = amortize_rows.max(PARALLEL_M_CUTOVER);
+    best.cost_per_row = unit_cost(&best, csr, hwio, arts);
     best
 }
 
@@ -672,11 +957,91 @@ mod tests {
                 format: SparseFormat::Bsr { br: 4, bc: 4 },
                 reorder: true,
                 parallel_cutover: 256,
+                cost_per_row: 172.8,
+                rows_per_image: 196,
             },
         );
         let text = plan.to_json().to_string_pretty();
         let parsed = ExecPlan::from_json(&Json::parse(&text).unwrap()).unwrap();
         assert_eq!(parsed, plan);
+    }
+
+    #[test]
+    fn plan_costs_are_batch_aware() {
+        let mut plan = ExecPlan::default();
+        // no cost info -> no cost model
+        plan.layers.insert("c1".into(), LayerPlan::csr());
+        assert_eq!(plan.cost_at(4), None);
+        assert_eq!(BatchCost::from_plan(&plan), None);
+        // per-layer costs compose into an affine batch cost
+        plan.layers.insert(
+            "c2".into(),
+            LayerPlan { cost_per_row: 10.0, rows_per_image: 50, ..LayerPlan::csr() },
+        );
+        plan.layers.insert(
+            "c3".into(),
+            LayerPlan { cost_per_row: 2.0, rows_per_image: 100, ..LayerPlan::csr() },
+        );
+        assert_eq!(plan.per_image_cost(), 700.0);
+        let c = BatchCost::from_plan(&plan).unwrap();
+        assert_eq!(c.cost_at(1), COST_BATCH_OVERHEAD + 700.0);
+        assert_eq!(c.cost_at(8), COST_BATCH_OVERHEAD + 8.0 * 700.0);
+        // per-image cost shrinks with m: the overhead amortizes
+        assert!(c.cost_at(8) / 8.0 < c.cost_at(1));
+        assert_eq!(plan.cost_at(8), Some(c.cost_at(8)));
+    }
+
+    /// Planned layers carry a positive `cost_per_row` matching the
+    /// heuristic unit model for the chosen format.
+    #[test]
+    fn plans_carry_unit_costs() {
+        let csr = random_csr(128, 64, 0.08, 1);
+        let lp = choose(FormatPolicy::Auto, &csr, 196, gemm_hwio(128, 64));
+        assert_eq!(lp.format, SparseFormat::Csr);
+        assert_eq!(lp.cost_per_row, csr.nnz() as f64 * COST_CSR_NNZ);
+        let dense_lp = choose(FormatPolicy::Auto, &random_csr(128, 64, 0.6, 2), 196,
+            gemm_hwio(128, 64));
+        assert_eq!(dense_lp.format, SparseFormat::Dense);
+        assert_eq!(dense_lp.cost_per_row, (128 * 64) as f64 * COST_DENSE_MAC);
+    }
+
+    /// The memoized artifacts agree with the uncached entry points and
+    /// only compute clustering once.
+    #[test]
+    fn layer_artifacts_match_uncached_choice() {
+        let csr = block_structured_csr(128, 64, 4, 4, 0.3, 3);
+        let hwio = gemm_hwio(128, 64);
+        let mut arts = LayerArtifacts::default();
+        let cached = plan_layer(FormatPolicy::Auto, &csr, 196, hwio, &mut arts);
+        let plain = choose(FormatPolicy::Auto, &csr, 196, hwio);
+        assert_eq!(cached, plain);
+        // a second pass hits the memo and yields the identical plan
+        let again = plan_layer(FormatPolicy::Auto, &csr, 196, hwio, &mut arts);
+        assert_eq!(again, plain);
+        // the cached permutation is the same one the estimate used
+        let p = arts.permutation(&csr, 4).clone();
+        assert_eq!(p, reorder::cluster_columns_csr(&csr, 4));
+        // the cache guards against stale entries for a different matrix
+        let mut cache = PlanCache::default();
+        cache.layer("c1", &csr).permutation(&csr, 4);
+        let other = random_csr(64, 32, 0.2, 9);
+        let slot = cache.layer("c1", &other);
+        assert!(slot.perms.is_empty(), "stale artifacts must reset");
+        // ...including a same-shape, same-nnz matrix with different
+        // values (the collision the density-exact cut makes easy): the
+        // content fingerprint must reset the slot
+        cache.layer("c2", &csr).permutation(&csr, 4);
+        let mut perturbed = csr.clone();
+        for v in perturbed.values.iter_mut() {
+            *v += 1.0;
+        }
+        assert_eq!((perturbed.rows, perturbed.cols, perturbed.nnz()), (csr.rows, csr.cols,
+            csr.nnz()));
+        let slot = cache.layer("c2", &perturbed);
+        assert!(slot.perms.is_empty(), "value change must invalidate the slot");
+        // and an identical matrix keeps the memo
+        cache.layer("c3", &csr).permutation(&csr, 4);
+        assert!(!cache.layer("c3", &csr).perms.is_empty(), "identical matrix must hit");
     }
 
     #[test]

@@ -227,6 +227,8 @@ mod tests {
                 format: SparseFormat::Bsr { br: 4, bc: 4 },
                 reorder: true,
                 parallel_cutover: 192,
+                cost_per_row: 57.6,
+                rows_per_image: 196,
             },
         );
         let mut m = Manifest::parse(SAMPLE).unwrap();

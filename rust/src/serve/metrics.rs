@@ -1,0 +1,209 @@
+//! Serving metrics: per-request latency percentiles, batch utilization,
+//! throughput, deadline misses — recorded per model, snapshotable for
+//! [`crate::serve::Server::stats`].
+
+use crate::util::stats::{Recorder, Summary};
+use std::time::Instant;
+
+#[derive(Debug)]
+pub struct Metrics {
+    started: Instant,
+    latency: Recorder,
+    /// exec time per batch run
+    exec: Recorder,
+    pub requests: u64,
+    pub batches: u64,
+    /// sum over runs of (used slots) and (total slots) — padding waste.
+    pub used_slots: u64,
+    pub total_slots: u64,
+    /// requests answered with a backend-error outcome.
+    pub backend_errors: u64,
+    /// requests answered with a deadline-miss outcome (never executed).
+    pub deadline_misses: u64,
+}
+
+/// Plain-data view of one model's [`Metrics`] at a point in time — what
+/// [`crate::serve::Server::stats`] hands out per model, safe to hold
+/// without keeping the metrics mutex.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub batches: u64,
+    pub backend_errors: u64,
+    pub deadline_misses: u64,
+    /// Fraction of executed batch slots carrying real requests
+    /// (0.0 when nothing executed yet).
+    pub batch_utilization: f64,
+    /// Served requests per second over the window since metrics start
+    /// (0.0 when nothing served or the window has zero width).
+    pub throughput_rps: f64,
+    pub latency: Option<Summary>,
+    pub exec: Option<Summary>,
+}
+
+impl Metrics {
+    #[allow(clippy::new_without_default)]
+    pub fn new() -> Metrics {
+        Metrics {
+            started: Instant::now(),
+            latency: Recorder::new(),
+            exec: Recorder::new(),
+            requests: 0,
+            batches: 0,
+            used_slots: 0,
+            total_slots: 0,
+            backend_errors: 0,
+            deadline_misses: 0,
+        }
+    }
+
+    pub fn record_request(&mut self, latency_us: f64) {
+        self.latency.record(latency_us);
+        self.requests += 1;
+    }
+
+    pub fn record_batch(&mut self, batch: usize, used: usize, exec_us: f64) {
+        self.batches += 1;
+        self.used_slots += used as u64;
+        self.total_slots += batch as u64;
+        self.exec.record(exec_us);
+    }
+
+    /// Count requests that received an explicit backend-error response.
+    pub fn record_errors(&mut self, n: u64) {
+        self.backend_errors += n;
+    }
+
+    /// Count requests answered with `ServeError::Deadline` (expired in
+    /// the queue, never executed).
+    pub fn record_deadline_misses(&mut self, n: u64) {
+        self.deadline_misses += n;
+    }
+
+    pub fn latency_summary(&self) -> Option<Summary> {
+        self.latency.summary()
+    }
+
+    pub fn exec_summary(&self) -> Option<Summary> {
+        self.exec.summary()
+    }
+
+    /// Requests per second since start. 0.0 when nothing has been served
+    /// yet or the elapsed window has zero width (coarse clocks right
+    /// after startup) — never a division-blowup artifact.
+    pub fn throughput_rps(&self) -> f64 {
+        let secs = self.started.elapsed().as_secs_f64();
+        if self.requests == 0 || secs <= 0.0 {
+            return 0.0;
+        }
+        self.requests as f64 / secs
+    }
+
+    /// Fraction of executed batch slots carrying real requests. 0.0
+    /// before the first batch executes: an idle model reports no
+    /// utilization rather than a fake-perfect 100%.
+    pub fn batch_utilization(&self) -> f64 {
+        if self.total_slots == 0 {
+            return 0.0;
+        }
+        self.used_slots as f64 / self.total_slots as f64
+    }
+
+    /// Freeze the current counters into a plain-data snapshot.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            requests: self.requests,
+            batches: self.batches,
+            backend_errors: self.backend_errors,
+            deadline_misses: self.deadline_misses,
+            batch_utilization: self.batch_utilization(),
+            throughput_rps: self.throughput_rps(),
+            latency: self.latency_summary(),
+            exec: self.exec_summary(),
+        }
+    }
+
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "requests={} batches={} errors={} deadline_misses={} \
+             throughput={:.1} req/s batch_util={:.0}%\n",
+            self.requests,
+            self.batches,
+            self.backend_errors,
+            self.deadline_misses,
+            self.throughput_rps(),
+            self.batch_utilization() * 100.0
+        ));
+        if let Some(s) = self.latency_summary() {
+            out.push_str(&format!(
+                "latency  p50={:.1}ms p95={:.1}ms p99={:.1}ms max={:.1}ms\n",
+                s.p50 / 1e3,
+                s.p95 / 1e3,
+                s.p99 / 1e3,
+                s.max / 1e3
+            ));
+        }
+        if let Some(s) = self.exec_summary() {
+            out.push_str(&format!(
+                "exec     p50={:.1}ms mean={:.1}ms\n",
+                s.p50 / 1e3,
+                s.mean / 1e3
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_reports() {
+        let mut m = Metrics::new();
+        m.record_request(1000.0);
+        m.record_request(3000.0);
+        m.record_batch(4, 2, 500.0);
+        m.record_deadline_misses(1);
+        assert_eq!(m.requests, 2);
+        assert_eq!(m.batches, 1);
+        assert_eq!(m.batch_utilization(), 0.5);
+        let s = m.latency_summary().unwrap();
+        assert_eq!(s.count, 2);
+        let rpt = m.report();
+        assert!(rpt.contains("requests=2"));
+        assert!(rpt.contains("deadline_misses=1"));
+        assert!(rpt.contains("latency"));
+    }
+
+    #[test]
+    fn empty_metrics_safe() {
+        let m = Metrics::new();
+        assert!(m.latency_summary().is_none());
+        // no batches executed: no utilization to report (not fake 100%)
+        assert_eq!(m.batch_utilization(), 0.0);
+        // no requests served: zero throughput even on a zero-width
+        // elapsed window (no 1e9-req/s division artifacts)
+        assert_eq!(m.throughput_rps(), 0.0);
+        assert!(m.report().contains("requests=0"));
+    }
+
+    #[test]
+    fn snapshot_freezes_counters() {
+        let mut m = Metrics::new();
+        m.record_request(2000.0);
+        m.record_batch(2, 2, 800.0);
+        m.record_errors(3);
+        let s = m.snapshot();
+        assert_eq!(s.requests, 1);
+        assert_eq!(s.batches, 1);
+        assert_eq!(s.backend_errors, 3);
+        assert_eq!(s.deadline_misses, 0);
+        assert_eq!(s.batch_utilization, 1.0);
+        assert_eq!(s.latency.as_ref().unwrap().count, 1);
+        // the snapshot is detached: later recording doesn't change it
+        m.record_errors(1);
+        assert_eq!(s.backend_errors, 3);
+    }
+}

@@ -1,0 +1,726 @@
+//! Multi-model serving: named engines behind one [`Server`], a request
+//! queue per model, and a planner-informed, deadline-aware dynamic
+//! batcher.
+//!
+//! The paper's real-time claim (26 ms ResNet-50) is a statement about
+//! *latency under load*, so the serving layer must understand what a
+//! batch costs before it commits to one. This module closes that loop:
+//! every registered model carries its [`crate::planner::ExecPlan`], the
+//! plan prices each batch variant
+//! ([`crate::planner::ExecPlan::cost_at`]), and the [`Scheduler`] picks
+//! the batch that maximizes throughput *subject to the tightest pending
+//! request's deadline* — instead of greedily filling to `max_batch`.
+//!
+//! ```ignore
+//! use cadnn::serve::{QueueConfig, ServeRequest, Server};
+//!
+//! let server = Server::builder()
+//!     .engine("resnet50", &resnet)            // default queue config
+//!     .engine_with("lenet5", &lenet, QueueConfig::default())
+//!     .build()?;
+//!
+//! let resp = server.infer(
+//!     ServeRequest::new("resnet50", image).deadline_ms(30).topk(5),
+//! )?;
+//! match resp.outcome {
+//!     Ok(logits) => println!("top-1 {:?}", resp.topk),
+//!     Err(e) => eprintln!("{e}"),             // Deadline | Backend
+//! }
+//! let stats = server.stats();                 // per-model snapshots
+//! server.shutdown()?;
+//! ```
+//!
+//! Request lifecycle, deadline semantics, and the cost model are
+//! documented in `docs/SERVING.md`. The old single-model
+//! [`crate::coordinator::Coordinator`] remains as a thin deprecated shim
+//! over this module.
+
+pub mod metrics;
+pub mod registry;
+pub mod scheduler;
+
+pub use metrics::{Metrics, MetricsSnapshot};
+pub use registry::{ModelEntry, Registry};
+pub use scheduler::{pick_batch, BatchPolicy, Scheduler};
+
+use crate::api::Backend;
+use crate::error::CadnnError;
+use crate::planner::ExecPlan;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Per-model queue/batcher knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct QueueConfig {
+    /// Queue depth considered per batch decision.
+    pub max_batch: usize,
+    /// Batching window: how long the worker waits for co-riders after
+    /// the first queued request (a pending deadline shortens the wait).
+    pub max_wait_us: u64,
+    /// Policy used while no cost model / calibration is available (and
+    /// always, when `planned` is off).
+    pub fallback: BatchPolicy,
+    /// Use the planner cost model for batch-size choice when the backend
+    /// provides one. Off = always the plain `fallback` policy (the
+    /// pre-planner behavior, kept for A/B benchmarking).
+    pub planned: bool,
+}
+
+impl Default for QueueConfig {
+    fn default() -> Self {
+        QueueConfig {
+            max_batch: 8,
+            max_wait_us: 2_000,
+            fallback: BatchPolicy::PadToFit,
+            planned: true,
+        }
+    }
+}
+
+/// One inference request: which model, the image, and per-request
+/// options (deadline, top-k).
+#[derive(Debug, Clone)]
+pub struct ServeRequest {
+    /// Registry name of the target model.
+    pub model: String,
+    /// Flat NHWC image (`input_len` floats of the target model).
+    pub input: Vec<f32>,
+    /// Answer-by budget relative to submission. A request still queued
+    /// when its deadline passes is answered with
+    /// [`ServeError::Deadline`] instead of being executed; the scheduler
+    /// also avoids batch sizes whose estimated run time would blow the
+    /// tightest queued deadline.
+    pub deadline_us: Option<u64>,
+    /// Attach the top-k (class, logit) pairs to the response.
+    pub topk: Option<usize>,
+}
+
+impl ServeRequest {
+    pub fn new(model: impl Into<String>, input: Vec<f32>) -> ServeRequest {
+        ServeRequest { model: model.into(), input, deadline_us: None, topk: None }
+    }
+
+    pub fn deadline_us(mut self, us: u64) -> ServeRequest {
+        self.deadline_us = Some(us);
+        self
+    }
+
+    pub fn deadline_ms(self, ms: u64) -> ServeRequest {
+        self.deadline_us(ms.saturating_mul(1_000))
+    }
+
+    pub fn topk(mut self, k: usize) -> ServeRequest {
+        self.topk = Some(k);
+        self
+    }
+}
+
+/// Why a request failed while the server stayed alive. (Shutdown is
+/// signalled differently: the reply channel closes.)
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// The backend rejected or failed the batch this request rode in.
+    Backend(String),
+    /// The request's deadline passed while it was queued; it was never
+    /// executed. (A request that *starts* executing is always answered
+    /// with its logits — clients can compare `latency_us` against their
+    /// budget for the overran-while-running case.)
+    Deadline {
+        /// The request's deadline budget.
+        deadline_us: u64,
+        /// How long it had been queued when the miss was detected.
+        waited_us: u64,
+    },
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Backend(msg) => write!(f, "backend error: {msg}"),
+            ServeError::Deadline { deadline_us, waited_us } => write!(
+                f,
+                "deadline missed: budget {deadline_us}µs, waited {waited_us}µs"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// One request's answer.
+#[derive(Debug, Clone)]
+pub struct ServeResponse {
+    pub id: u64,
+    /// Which registered model served (or expired) this request.
+    pub model: String,
+    /// Logits on success, or an explicit serve error.
+    pub outcome: Result<Vec<f32>, ServeError>,
+    /// (class, logit) pairs, descending — present iff the request asked
+    /// for top-k and succeeded.
+    pub topk: Option<Vec<(usize, f32)>>,
+    /// end-to-end latency (enqueue -> reply), microseconds
+    pub latency_us: f64,
+    /// batch this request rode in (0 for requests never executed)
+    pub batch: usize,
+}
+
+impl ServeResponse {
+    /// Logits, if the request succeeded.
+    pub fn logits(&self) -> Option<&[f32]> {
+        self.outcome.as_ref().ok().map(|v| v.as_slice())
+    }
+
+    /// Consume into logits or the serve error.
+    pub fn into_logits(self) -> Result<Vec<f32>, ServeError> {
+        self.outcome
+    }
+}
+
+/// Queued request, inside the worker.
+struct Pending {
+    id: u64,
+    input: Vec<f32>,
+    enqueued: Instant,
+    deadline: Option<Instant>,
+    deadline_us: Option<u64>,
+    topk: Option<usize>,
+    reply: Sender<ServeResponse>,
+}
+
+enum Msg {
+    Req(Pending),
+    Shutdown,
+}
+
+/// What a worker reports back once its backend is up.
+struct ReadyInfo {
+    input_shape: Vec<usize>,
+    classes: usize,
+    batch_sizes: Vec<usize>,
+    plan: Option<ExecPlan>,
+    plan_costs: Vec<(usize, f64)>,
+}
+
+struct ModelHandle {
+    tx: Sender<Msg>,
+    worker: Option<std::thread::JoinHandle<Result<(), CadnnError>>>,
+    metrics: Arc<Mutex<Metrics>>,
+    input_len: usize,
+}
+
+type BackendFactory = Box<dyn FnOnce() -> Result<Box<dyn Backend>, CadnnError> + Send>;
+
+struct ModelSpec {
+    name: String,
+    factory: BackendFactory,
+    cfg: QueueConfig,
+    engine: Option<crate::api::Engine>,
+}
+
+/// Configure a [`Server`]: register models, then `build` to spawn one
+/// worker (queue + scheduler + metrics) per model.
+#[derive(Default)]
+pub struct ServerBuilder {
+    specs: Vec<ModelSpec>,
+}
+
+impl ServerBuilder {
+    /// Register an engine under `name` with the default [`QueueConfig`].
+    pub fn engine(self, name: impl Into<String>, engine: &crate::api::Engine) -> ServerBuilder {
+        self.engine_with(name, engine, QueueConfig::default())
+    }
+
+    /// Register an engine under `name` with explicit queue knobs.
+    pub fn engine_with(
+        mut self,
+        name: impl Into<String>,
+        engine: &crate::api::Engine,
+        cfg: QueueConfig,
+    ) -> ServerBuilder {
+        let e = engine.clone();
+        let for_worker = e.clone();
+        self.specs.push(ModelSpec {
+            name: name.into(),
+            factory: Box::new(move || Ok(Box::new(for_worker) as Box<dyn Backend>)),
+            cfg,
+            engine: Some(e),
+        });
+        self
+    }
+
+    /// Register a backend built *inside* the worker thread (required for
+    /// backends whose handles are not `Send`, e.g. real PJRT).
+    pub fn backend_with<F>(mut self, name: impl Into<String>, factory: F, cfg: QueueConfig) -> ServerBuilder
+    where
+        F: FnOnce() -> Result<Box<dyn Backend>, CadnnError> + Send + 'static,
+    {
+        self.specs.push(ModelSpec {
+            name: name.into(),
+            factory: Box::new(factory),
+            cfg,
+            engine: None,
+        });
+        self
+    }
+
+    /// Spawn every model's worker and wait until each backend is up (so
+    /// client latency measurements see steady state and load errors
+    /// surface here).
+    pub fn build(self) -> Result<Server, CadnnError> {
+        if self.specs.is_empty() {
+            return Err(CadnnError::config("no models registered"));
+        }
+        let mut handles = BTreeMap::new();
+        let mut registry = Registry::default();
+        for spec in self.specs {
+            if handles.contains_key(&spec.name) {
+                return Err(CadnnError::config(format!(
+                    "model '{}' registered twice",
+                    spec.name
+                )));
+            }
+            let (tx, rx) = channel::<Msg>();
+            let metrics = Arc::new(Mutex::new(Metrics::new()));
+            let m2 = metrics.clone();
+            let (ready_tx, ready_rx) = channel::<Result<ReadyInfo, CadnnError>>();
+            let name = spec.name.clone();
+            let cfg = spec.cfg;
+            let factory = spec.factory;
+            let worker = std::thread::Builder::new()
+                .name(format!("cadnn-serve-{name}"))
+                .spawn(move || worker_loop(name, factory, cfg, rx, m2, ready_tx))
+                .map_err(|e| CadnnError::execution(format!("spawn failed: {e}")))?;
+            let info = match ready_rx.recv() {
+                Ok(Ok(info)) => info,
+                Ok(Err(e)) => {
+                    let _ = worker.join();
+                    return Err(e);
+                }
+                Err(_) => {
+                    let _ = worker.join();
+                    return Err(CadnnError::execution(format!(
+                        "serve worker for '{}' died during startup",
+                        spec.name
+                    )));
+                }
+            };
+            let entry = ModelEntry {
+                name: spec.name.clone(),
+                engine: spec.engine,
+                plan: info.plan,
+                plan_costs: info.plan_costs,
+                input_shape: info.input_shape,
+                classes: info.classes,
+                batch_sizes: info.batch_sizes,
+            };
+            let input_len = entry.input_len();
+            registry.insert(entry);
+            handles.insert(
+                spec.name,
+                ModelHandle { tx, worker: Some(worker), metrics, input_len },
+            );
+        }
+        Ok(Server { handles, registry, next_id: AtomicU64::new(1) })
+    }
+}
+
+/// Multi-model serving front: owns the [`Registry`] and one worker
+/// (queue → scheduler → backend) per registered model.
+pub struct Server {
+    handles: BTreeMap<String, ModelHandle>,
+    registry: Registry,
+    next_id: AtomicU64,
+}
+
+impl Server {
+    pub fn builder() -> ServerBuilder {
+        ServerBuilder::default()
+    }
+
+    /// What is being served: names, plans, batch variants, costs.
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    /// Registered model names, sorted.
+    pub fn models(&self) -> Vec<&str> {
+        self.registry.names()
+    }
+
+    /// Flat floats per image for one model.
+    pub fn input_len(&self, model: &str) -> Option<usize> {
+        self.handles.get(model).map(|h| h.input_len)
+    }
+
+    /// Logits per image for one model.
+    pub fn classes(&self, model: &str) -> Option<usize> {
+        self.registry.get(model).map(|e| e.classes)
+    }
+
+    /// One model's live metrics handle (the shim and the CLI report off
+    /// this); prefer [`Server::stats`] for point-in-time reads.
+    pub fn metrics(&self, model: &str) -> Option<Arc<Mutex<Metrics>>> {
+        self.handles.get(model).map(|h| h.metrics.clone())
+    }
+
+    /// Point-in-time per-model metrics snapshots.
+    pub fn stats(&self) -> BTreeMap<String, MetricsSnapshot> {
+        self.handles
+            .iter()
+            .map(|(name, h)| (name.clone(), h.metrics.lock().unwrap().snapshot()))
+            .collect()
+    }
+
+    /// Submit one request; returns a receiver for its response. Routing
+    /// and input-length errors surface synchronously; deadline misses
+    /// and backend failures arrive as explicit response outcomes.
+    pub fn submit(&self, req: ServeRequest) -> Result<Receiver<ServeResponse>, CadnnError> {
+        let handle = self
+            .handles
+            .get(&req.model)
+            .ok_or_else(|| CadnnError::UnknownModel { name: req.model.clone() })?;
+        if req.input.len() != handle.input_len {
+            return Err(CadnnError::InvalidInput {
+                reason: format!(
+                    "input length {} != expected {} for model '{}'",
+                    req.input.len(),
+                    handle.input_len,
+                    req.model
+                ),
+            });
+        }
+        let (rtx, rrx) = channel();
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let enqueued = Instant::now();
+        let pending = Pending {
+            id,
+            input: req.input,
+            enqueued,
+            deadline: req.deadline_us.map(|us| enqueued + Duration::from_micros(us)),
+            deadline_us: req.deadline_us,
+            topk: req.topk,
+            reply: rtx,
+        };
+        handle
+            .tx
+            .send(Msg::Req(pending))
+            .map_err(|_| CadnnError::execution(format!("model '{}' stopped", req.model)))?;
+        Ok(rrx)
+    }
+
+    /// Submit and wait (convenience).
+    pub fn infer(&self, req: ServeRequest) -> Result<ServeResponse, CadnnError> {
+        let rx = self.submit(req)?;
+        rx.recv()
+            .map_err(|_| CadnnError::execution("server dropped request"))
+    }
+
+    /// Stop every worker, draining queued requests first. All workers
+    /// are signalled before any is joined, so the total shutdown time is
+    /// the slowest model's drain, not the sum of all drains.
+    pub fn shutdown(mut self) -> Result<(), CadnnError> {
+        for h in self.handles.values() {
+            let _ = h.tx.send(Msg::Shutdown);
+        }
+        let mut result = Ok(());
+        for (name, h) in self.handles.iter_mut() {
+            if let Some(w) = h.worker.take() {
+                match w.join() {
+                    Ok(r) => {
+                        if result.is_ok() {
+                            if let Err(e) = r {
+                                result = Err(e);
+                            }
+                        }
+                    }
+                    Err(_) => {
+                        if result.is_ok() {
+                            result = Err(CadnnError::execution(format!(
+                                "worker for '{name}' panicked"
+                            )));
+                        }
+                    }
+                }
+            }
+        }
+        result
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        for h in self.handles.values() {
+            let _ = h.tx.send(Msg::Shutdown);
+        }
+        for h in self.handles.values_mut() {
+            if let Some(w) = h.worker.take() {
+                let _ = w.join();
+            }
+        }
+    }
+}
+
+fn worker_loop(
+    model: String,
+    factory: BackendFactory,
+    cfg: QueueConfig,
+    rx: Receiver<Msg>,
+    metrics: Arc<Mutex<Metrics>>,
+    ready: Sender<Result<ReadyInfo, CadnnError>>,
+) -> Result<(), CadnnError> {
+    // Backend objects are created inside the worker thread (no Send bound
+    // on the backend itself, only on the factory).
+    let backend = match factory() {
+        Ok(b) => b,
+        Err(e) => {
+            let msg = e.to_string();
+            let _ = ready.send(Err(e));
+            return Err(CadnnError::execution(format!("backend init failed: {msg}")));
+        }
+    };
+    let batches = backend.batch_sizes();
+    if batches.is_empty() {
+        let err = CadnnError::config("backend reports no batch variants");
+        let _ = ready.send(Err(err.clone()));
+        return Err(err);
+    }
+    let input_shape = backend.input_shape().to_vec();
+    let per_image: usize = input_shape.iter().product();
+    let classes = backend.classes();
+    let plan_costs = if cfg.planned { backend.plan_costs() } else { Vec::new() };
+    let mut sched = Scheduler::new(batches.clone(), plan_costs.clone(), cfg.fallback);
+    let _ = ready.send(Ok(ReadyInfo {
+        input_shape,
+        classes,
+        batch_sizes: batches,
+        plan: backend.exec_plan(),
+        plan_costs,
+    }));
+    let backend = backend.as_ref();
+
+    let mut queue: Vec<Pending> = Vec::new();
+    loop {
+        // fill the queue: block for the first request, then drain the
+        // burst that arrived while the previous batch executed
+        if queue.is_empty() {
+            match rx.recv() {
+                Ok(Msg::Req(r)) => queue.push(r),
+                Ok(Msg::Shutdown) | Err(_) => return Ok(()),
+            }
+        }
+        while queue.len() < cfg.max_batch {
+            match rx.try_recv() {
+                Ok(Msg::Req(r)) => queue.push(r),
+                Ok(Msg::Shutdown) => {
+                    flush(&model, backend, &cfg, &mut sched, &mut queue, per_image, classes, &metrics);
+                    return Ok(());
+                }
+                Err(_) => break,
+            }
+        }
+        // batching window: wait for co-riders up to max_wait_us past the
+        // head-of-line arrival — but never past a pending deadline
+        let mut wait_until = queue[0].enqueued + Duration::from_micros(cfg.max_wait_us);
+        if let Some(d) = queue.iter().filter_map(|r| r.deadline).min() {
+            wait_until = wait_until.min(d);
+        }
+        while queue.len() < cfg.max_batch {
+            let now = Instant::now();
+            if now >= wait_until {
+                break;
+            }
+            match rx.recv_timeout(wait_until - now) {
+                Ok(Msg::Req(r)) => {
+                    if let Some(d) = r.deadline {
+                        wait_until = wait_until.min(d);
+                    }
+                    queue.push(r);
+                }
+                Ok(Msg::Shutdown) => {
+                    flush(&model, backend, &cfg, &mut sched, &mut queue, per_image, classes, &metrics);
+                    return Ok(());
+                }
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => break,
+                Err(_) => {
+                    flush(&model, backend, &cfg, &mut sched, &mut queue, per_image, classes, &metrics);
+                    return Ok(());
+                }
+            }
+        }
+        flush(&model, backend, &cfg, &mut sched, &mut queue, per_image, classes, &metrics);
+    }
+}
+
+/// Answer every queued request whose deadline already passed with an
+/// explicit [`ServeError::Deadline`] — they are never executed.
+fn expire(model: &str, queue: &mut Vec<Pending>, metrics: &Arc<Mutex<Metrics>>) {
+    let now = Instant::now();
+    if !queue.iter().any(|r| r.deadline.is_some_and(|d| d <= now)) {
+        return;
+    }
+    let (expired, keep): (Vec<Pending>, Vec<Pending>) = queue
+        .drain(..)
+        .partition(|r| r.deadline.is_some_and(|d| d <= now));
+    *queue = keep;
+    metrics
+        .lock()
+        .unwrap()
+        .record_deadline_misses(expired.len() as u64);
+    for r in expired {
+        let waited_us = r.enqueued.elapsed().as_secs_f64() * 1e6;
+        let _ = r.reply.send(ServeResponse {
+            id: r.id,
+            model: model.to_string(),
+            outcome: Err(ServeError::Deadline {
+                deadline_us: r.deadline_us.unwrap_or(0),
+                waited_us: waited_us as u64,
+            }),
+            topk: None,
+            latency_us: waited_us,
+            batch: 0,
+        });
+    }
+}
+
+/// (class, logit) pairs sorted by descending logit, ties by class.
+fn topk_of(logits: &[f32], k: usize) -> Vec<(usize, f32)> {
+    let mut idx: Vec<usize> = (0..logits.len()).collect();
+    idx.sort_by(|&a, &b| {
+        logits[b]
+            .partial_cmp(&logits[a])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    idx.into_iter().take(k).map(|i| (i, logits[i])).collect()
+}
+
+/// Execute and reply to as many queued requests as scheduled batches
+/// allow, expiring dead requests between rounds.
+#[allow(clippy::too_many_arguments)]
+fn flush(
+    model: &str,
+    backend: &dyn Backend,
+    cfg: &QueueConfig,
+    sched: &mut Scheduler,
+    queue: &mut Vec<Pending>,
+    per_image: usize,
+    classes: usize,
+    metrics: &Arc<Mutex<Metrics>>,
+) {
+    while !queue.is_empty() {
+        expire(model, queue, metrics);
+        if queue.is_empty() {
+            return;
+        }
+        // per-prefix deadline slack: a batch of size b serves the first
+        // min(b, horizon) FIFO requests, so only their deadlines
+        // constrain it — an urgent request deeper in the queue is not
+        // helped by shrinking a batch that won't include it
+        let now = Instant::now();
+        let horizon = queue.len().min(cfg.max_batch);
+        let mut prefix_slack: Vec<Option<f64>> = Vec::with_capacity(horizon);
+        let mut tightest: Option<f64> = None;
+        for r in queue.iter().take(horizon) {
+            if let Some(d) = r.deadline {
+                let s = d.saturating_duration_since(now).as_secs_f64() * 1e6;
+                tightest = Some(tightest.map_or(s, |t: f64| t.min(s)));
+            }
+            prefix_slack.push(tightest);
+        }
+        let b = sched.pick_with(horizon, |b| prefix_slack[b.min(horizon) - 1]);
+        let take = b.min(queue.len());
+        let mut input = vec![0.0f32; b * per_image];
+        for (i, r) in queue.iter().take(take).enumerate() {
+            input[i * per_image..(i + 1) * per_image].copy_from_slice(&r.input);
+        }
+        let t0 = Instant::now();
+        let out = match backend.run_batch(b, &input) {
+            Ok(o) => o,
+            Err(e) => {
+                crate::util::log::log(
+                    crate::util::log::Level::Error,
+                    "serve",
+                    format_args!("{model}: execute failed: {e}"),
+                );
+                // answer the affected requests with an explicit backend
+                // error so clients can distinguish this from shutdown
+                // (where the reply channel just closes)
+                let err = ServeError::Backend(e.to_string());
+                metrics.lock().unwrap().record_errors(take as u64);
+                for r in queue.drain(..take) {
+                    let latency_us = r.enqueued.elapsed().as_secs_f64() * 1e6;
+                    let _ = r.reply.send(ServeResponse {
+                        id: r.id,
+                        model: model.to_string(),
+                        outcome: Err(err.clone()),
+                        topk: None,
+                        latency_us,
+                        batch: b,
+                    });
+                }
+                continue;
+            }
+        };
+        let exec_us = t0.elapsed().as_secs_f64() * 1e6;
+        sched.observe(b, exec_us);
+        let mut m = metrics.lock().unwrap();
+        m.record_batch(b, take, exec_us);
+        for (i, r) in queue.drain(..take).enumerate() {
+            let latency_us = r.enqueued.elapsed().as_secs_f64() * 1e6;
+            m.record_request(latency_us);
+            let logits = out[i * classes..(i + 1) * classes].to_vec();
+            let topk = r.topk.map(|k| topk_of(&logits, k));
+            let _ = r.reply.send(ServeResponse {
+                id: r.id,
+                model: model.to_string(),
+                outcome: Ok(logits),
+                topk,
+                latency_us,
+                batch: b,
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_builder_composes_options() {
+        let r = ServeRequest::new("m", vec![0.0; 4]).deadline_ms(30).topk(5);
+        assert_eq!(r.model, "m");
+        assert_eq!(r.deadline_us, Some(30_000));
+        assert_eq!(r.topk, Some(5));
+        let plain = ServeRequest::new("m", vec![0.0; 4]);
+        assert_eq!(plain.deadline_us, None);
+        assert_eq!(plain.topk, None);
+    }
+
+    #[test]
+    fn topk_sorts_descending_with_stable_ties() {
+        let logits = [0.1f32, 0.7, 0.7, 0.05, 0.9];
+        let t = topk_of(&logits, 3);
+        assert_eq!(t[0], (4, 0.9));
+        assert_eq!(t[1], (1, 0.7), "ties break by class index");
+        assert_eq!(t[2], (2, 0.7));
+        assert_eq!(topk_of(&logits, 99).len(), logits.len());
+    }
+
+    #[test]
+    fn serve_error_displays() {
+        let d = ServeError::Deadline { deadline_us: 5_000, waited_us: 7_500 };
+        let s = d.to_string();
+        assert!(s.contains("5000") && s.contains("7500"), "{s}");
+        assert!(ServeError::Backend("boom".into()).to_string().contains("boom"));
+    }
+
+    #[test]
+    fn empty_builder_is_a_config_error() {
+        let err = Server::builder().build().err().unwrap();
+        assert!(matches!(err, CadnnError::Config { .. }), "{err}");
+    }
+}

@@ -1,0 +1,73 @@
+//! The server's named model registry: what is being served, under which
+//! plan, at which batch variants and costs.
+
+use crate::api::Engine;
+use crate::planner::ExecPlan;
+use std::collections::BTreeMap;
+
+/// One registered model, as the [`crate::serve::Server`] sees it after
+/// its worker came up: identity, geometry, the execution plan behind the
+/// backend (when known), and the per-batch-variant plan costs the
+/// scheduler runs on.
+#[derive(Clone)]
+pub struct ModelEntry {
+    /// Registry name (the routing key in
+    /// [`crate::serve::ServeRequest::model`]).
+    pub name: String,
+    /// The engine behind this entry, when it was registered as one
+    /// (`None` for opaque factory-built backends, whose handles live
+    /// inside the worker thread).
+    pub engine: Option<Engine>,
+    /// The per-layer execution plan the backend reported, when known.
+    pub plan: Option<ExecPlan>,
+    /// (batch size, plan cost units) per batch variant —
+    /// `ExecPlan::cost_at(b)` evaluated per variant; empty when the
+    /// backend has no cost model (nothing pruned, or planning disabled).
+    pub plan_costs: Vec<(usize, f64)>,
+    /// Per-image input shape (batch axis excluded).
+    pub input_shape: Vec<usize>,
+    /// Logits per image.
+    pub classes: usize,
+    /// Ascending executable batch sizes.
+    pub batch_sizes: Vec<usize>,
+}
+
+impl ModelEntry {
+    /// Flat floats per image.
+    pub fn input_len(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+}
+
+/// Named, inspectable collection of the server's [`ModelEntry`]s.
+#[derive(Clone, Default)]
+pub struct Registry {
+    entries: BTreeMap<String, ModelEntry>,
+}
+
+impl Registry {
+    pub(crate) fn insert(&mut self, entry: ModelEntry) {
+        self.entries.insert(entry.name.clone(), entry);
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ModelEntry> {
+        self.entries.get(name)
+    }
+
+    /// Registered model names, sorted.
+    pub fn names(&self) -> Vec<&str> {
+        self.entries.keys().map(String::as_str).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&String, &ModelEntry)> {
+        self.entries.iter()
+    }
+}

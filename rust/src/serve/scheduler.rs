@@ -1,0 +1,478 @@
+//! Batch-size selection among the compiled (shape-static) batch
+//! variants: the legacy policy-driven [`pick_batch`] and the
+//! planner-informed, deadline-aware [`Scheduler`].
+//!
+//! The scheduler closes the loop the ROADMAP called "planner-aware
+//! batching": the per-layer format planner already prices every pruned
+//! layer ([`crate::planner::ExecPlan::cost_at`]), so the batch-size
+//! choice can trade throughput (larger batches amortize the dispatch
+//! overhead) against each pending request's deadline (larger batches run
+//! longer) on the *same* cost model that chose the kernels. The abstract
+//! cost units are mapped to microseconds online, from the exec times the
+//! worker observes ([`Scheduler::observe`]), so no device-specific
+//! calibration table is needed.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BatchPolicy {
+    /// Smallest compiled batch >= pending (pads the remainder). Wastes
+    /// some compute, minimizes queue latency.
+    PadToFit,
+    /// Largest compiled batch <= pending (runs multiple rounds). No
+    /// padding waste, but the tail waits.
+    Greedy,
+}
+
+/// Choose the compiled batch for `pending` requests from `available`
+/// (ascending batch sizes, non-empty) — the pre-planner policy rule,
+/// still the fallback whenever no cost model is available.
+pub fn pick_batch(pending: usize, available: &[usize], policy: BatchPolicy) -> usize {
+    debug_assert!(!available.is_empty());
+    debug_assert!(available.windows(2).all(|w| w[0] < w[1]), "must be ascending");
+    let pending = pending.max(1);
+    match policy {
+        BatchPolicy::PadToFit => available
+            .iter()
+            .copied()
+            .find(|&b| b >= pending)
+            .unwrap_or(*available.last().unwrap()),
+        BatchPolicy::Greedy => available
+            .iter()
+            .copied()
+            .rev()
+            .find(|&b| b <= pending)
+            .unwrap_or(available[0]),
+    }
+}
+
+/// Smoothing factor for the exec-time observations (higher = newer
+/// observations dominate faster).
+const EWMA_ALPHA: f64 = 0.3;
+
+/// Planner-informed, deadline-aware batch-size chooser.
+///
+/// Construction takes the backend's batch variants and their plan costs
+/// (`(batch, units)` pairs from [`crate::api::Backend::plan_costs`] —
+/// i.e. `ExecPlan::cost_at(b)` per variant). Until a units→µs scale
+/// exists (first [`Scheduler::observe`] or an explicit
+/// [`Scheduler::calibrate`]), or when the cost model doesn't cover every
+/// variant, [`Scheduler::pick`] falls back to the plain policy rule.
+///
+/// Once estimable, `pick` maximizes throughput — served images per
+/// estimated microsecond — over the variants whose estimated run time
+/// fits the tightest pending deadline's slack. When no variant fits, it
+/// picks the cheapest one so the queue still drains (the expired
+/// requests are answered with an explicit deadline miss by the worker).
+#[derive(Debug)]
+pub struct Scheduler {
+    available: Vec<usize>,
+    /// batch -> plan cost units.
+    units: BTreeMap<usize, f64>,
+    fallback: BatchPolicy,
+    /// batch -> EWMA of observed exec µs (trusted over the prior).
+    observed: BTreeMap<usize, f64>,
+    /// EWMA of observed µs per cost unit (scales the prior to batches
+    /// not yet observed).
+    us_per_unit: Option<f64>,
+}
+
+impl Scheduler {
+    /// `available` must be ascending (the backend contract).
+    pub fn new(
+        available: Vec<usize>,
+        plan_costs: Vec<(usize, f64)>,
+        fallback: BatchPolicy,
+    ) -> Scheduler {
+        let units = plan_costs.into_iter().filter(|(_, u)| *u > 0.0).collect();
+        Scheduler {
+            available,
+            units,
+            fallback,
+            observed: BTreeMap::new(),
+            us_per_unit: None,
+        }
+    }
+
+    /// True when every available batch variant has a cost-model entry —
+    /// the precondition for planner-driven picks.
+    pub fn planned(&self) -> bool {
+        !self.available.is_empty() && self.available.iter().all(|b| self.units.contains_key(b))
+    }
+
+    /// Seed the units→µs scale directly (tests, benches, or a known
+    /// device profile); observations keep refining it.
+    pub fn calibrate(&mut self, us_per_unit: f64) {
+        if us_per_unit > 0.0 {
+            self.us_per_unit = Some(us_per_unit);
+        }
+    }
+
+    /// Feed back one executed batch's wall-clock time. Updates the
+    /// per-batch estimate and the units→µs scale.
+    pub fn observe(&mut self, batch: usize, exec_us: f64) {
+        if !exec_us.is_finite() || exec_us <= 0.0 {
+            return;
+        }
+        let e = self.observed.entry(batch).or_insert(exec_us);
+        *e += EWMA_ALPHA * (exec_us - *e);
+        if let Some(&u) = self.units.get(&batch) {
+            if u > 0.0 {
+                let sample = exec_us / u;
+                let s = self.us_per_unit.get_or_insert(sample);
+                *s += EWMA_ALPHA * (sample - *s);
+            }
+        }
+    }
+
+    /// Estimated wall-clock µs for one run of `batch`: the observed EWMA
+    /// when this batch has run before, otherwise the plan cost scaled by
+    /// the calibrated units→µs rate. `None` when neither exists.
+    pub fn est_us(&self, batch: usize) -> Option<f64> {
+        if let Some(&o) = self.observed.get(&batch) {
+            return Some(o);
+        }
+        match (self.us_per_unit, self.units.get(&batch)) {
+            (Some(upu), Some(&u)) => Some(upu * u),
+            _ => None,
+        }
+    }
+
+    /// Choose the batch for `pending` queued requests. `slack_us` is the
+    /// tightest pending deadline's remaining time (`None` when no queued
+    /// request carries a deadline).
+    pub fn pick(&self, pending: usize, slack_us: Option<f64>) -> usize {
+        self.pick_with(pending, |_| slack_us)
+    }
+
+    /// Generalized [`Scheduler::pick`]: `slack_of(b)` is the tightest
+    /// deadline slack among the requests that would actually ride a
+    /// batch of size `b` (the FIFO prefix the worker will take) — `None`
+    /// when none of those requests carries a deadline. A tight deadline
+    /// *behind* the batch boundary must not shrink the batch: the
+    /// urgent request isn't served by it either way, and a bigger batch
+    /// drains the queue toward it faster.
+    ///
+    /// The policy fallback applies whenever the scheduler was built
+    /// without a full cost model ([`Scheduler::planned`] is false —
+    /// including `QueueConfig { planned: false }`, which passes no
+    /// costs) or the units→µs scale is not yet known; exec-time
+    /// observations alone never flip a policy-only scheduler into
+    /// planner mode.
+    pub fn pick_with(
+        &self,
+        pending: usize,
+        slack_of: impl Fn(usize) -> Option<f64>,
+    ) -> usize {
+        let pending = pending.max(1);
+        if !self.planned() {
+            return pick_batch(pending, &self.available, self.fallback);
+        }
+        let ests: Vec<(usize, f64)> = self
+            .available
+            .iter()
+            .filter_map(|&b| self.est_us(b).map(|e| (b, e.max(1e-9))))
+            .collect();
+        if ests.len() != self.available.len() {
+            // not yet calibrated: plain policy
+            return pick_batch(pending, &self.available, self.fallback);
+        }
+        let feasible: Vec<(usize, f64)> = ests
+            .iter()
+            .copied()
+            .filter(|&(b, e)| slack_of(b).is_none_or(|s| e <= s))
+            .collect();
+        if feasible.is_empty() {
+            // nothing fits its riders' tightest deadline: run the
+            // cheapest batch so the queue drains (the worker answers
+            // expired requests with an explicit deadline miss)
+            return ests
+                .iter()
+                .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                .map(|&(b, _)| b)
+                .unwrap();
+        }
+        feasible
+            .iter()
+            .max_by(|a, b| {
+                let ta = pending.min(a.0) as f64 / a.1;
+                let tb = pending.min(b.0) as f64 / b.1;
+                // higher throughput wins; ties go to the smaller batch
+                // (lower latency, less padding)
+                ta.partial_cmp(&tb).unwrap().then(b.0.cmp(&a.0))
+            })
+            .map(|&(b, _)| b)
+            .unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::planner::BatchCost;
+    use crate::prop_assert;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    const AVAIL: [usize; 3] = [1, 4, 8];
+
+    #[test]
+    fn pad_to_fit_picks_smallest_covering() {
+        assert_eq!(pick_batch(1, &AVAIL, BatchPolicy::PadToFit), 1);
+        assert_eq!(pick_batch(2, &AVAIL, BatchPolicy::PadToFit), 4);
+        assert_eq!(pick_batch(4, &AVAIL, BatchPolicy::PadToFit), 4);
+        assert_eq!(pick_batch(5, &AVAIL, BatchPolicy::PadToFit), 8);
+        assert_eq!(pick_batch(50, &AVAIL, BatchPolicy::PadToFit), 8);
+    }
+
+    #[test]
+    fn greedy_picks_largest_fitting() {
+        assert_eq!(pick_batch(1, &AVAIL, BatchPolicy::Greedy), 1);
+        assert_eq!(pick_batch(3, &AVAIL, BatchPolicy::Greedy), 1);
+        assert_eq!(pick_batch(4, &AVAIL, BatchPolicy::Greedy), 4);
+        assert_eq!(pick_batch(7, &AVAIL, BatchPolicy::Greedy), 4);
+        assert_eq!(pick_batch(9, &AVAIL, BatchPolicy::Greedy), 8);
+    }
+
+    #[test]
+    fn zero_pending_treated_as_one() {
+        assert_eq!(pick_batch(0, &AVAIL, BatchPolicy::PadToFit), 1);
+        assert_eq!(pick_batch(0, &AVAIL, BatchPolicy::Greedy), 1);
+    }
+
+    #[test]
+    fn non_contiguous_batch_sets() {
+        // gaps and a floor above 1 — e.g. a manifest compiled at [2, 3, 7]
+        let avail = [2usize, 3, 7];
+        // PadToFit: smallest covering, or the largest when none covers
+        assert_eq!(pick_batch(1, &avail, BatchPolicy::PadToFit), 2);
+        assert_eq!(pick_batch(2, &avail, BatchPolicy::PadToFit), 2);
+        assert_eq!(pick_batch(3, &avail, BatchPolicy::PadToFit), 3);
+        assert_eq!(pick_batch(4, &avail, BatchPolicy::PadToFit), 7);
+        assert_eq!(pick_batch(6, &avail, BatchPolicy::PadToFit), 7);
+        assert_eq!(pick_batch(7, &avail, BatchPolicy::PadToFit), 7);
+        assert_eq!(pick_batch(100, &avail, BatchPolicy::PadToFit), 7);
+        // Greedy: largest fitting, or the smallest when none fits
+        assert_eq!(pick_batch(1, &avail, BatchPolicy::Greedy), 2);
+        assert_eq!(pick_batch(2, &avail, BatchPolicy::Greedy), 2);
+        assert_eq!(pick_batch(4, &avail, BatchPolicy::Greedy), 3);
+        assert_eq!(pick_batch(6, &avail, BatchPolicy::Greedy), 3);
+        assert_eq!(pick_batch(7, &avail, BatchPolicy::Greedy), 7);
+        assert_eq!(pick_batch(9, &avail, BatchPolicy::Greedy), 7);
+    }
+
+    #[test]
+    fn singleton_batch_set() {
+        for pending in [0usize, 1, 5, 40] {
+            assert_eq!(pick_batch(pending, &[4], BatchPolicy::PadToFit), 4);
+            assert_eq!(pick_batch(pending, &[4], BatchPolicy::Greedy), 4);
+        }
+    }
+
+    #[test]
+    fn prop_pick_batch_invariants() {
+        prop::check("pick_batch invariants", |rng: &mut Rng| {
+            // random ascending available set
+            let mut avail = vec![1usize];
+            let mut v = 1;
+            for _ in 0..rng.range(0, 4) {
+                v *= rng.range(2, 4);
+                avail.push(v);
+            }
+            let pending = rng.range(0, 40);
+            for policy in [BatchPolicy::PadToFit, BatchPolicy::Greedy] {
+                let b = pick_batch(pending, &avail, policy);
+                prop_assert!(avail.contains(&b), "picked {} not available", b);
+                // progress guarantee: the flush loop always drains >= 1
+                prop_assert!(b >= 1, "no progress");
+                if policy == BatchPolicy::PadToFit && pending.max(1) <= *avail.last().unwrap() {
+                    prop_assert!(
+                        b >= pending.max(1),
+                        "pad-to-fit must cover pending: {} < {}",
+                        b,
+                        pending
+                    );
+                }
+                if policy == BatchPolicy::Greedy && pending >= 1 {
+                    prop_assert!(
+                        b <= pending.max(1) || b == avail[0],
+                        "greedy overshoot: {} > {}",
+                        b,
+                        pending
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    // -----------------------------------------------------------------
+    // Scheduler
+    // -----------------------------------------------------------------
+
+    fn affine_costs(avail: &[usize], overhead: f64, per_image: f64) -> Vec<(usize, f64)> {
+        let c = BatchCost { per_image, overhead };
+        avail.iter().map(|&b| (b, c.cost_at(b))).collect()
+    }
+
+    /// The acceptance demonstration: under a tight pending deadline the
+    /// planner-informed scheduler picks a *smaller* batch than the greedy
+    /// policy, and one whose estimated run time fits the slack.
+    #[test]
+    fn deadline_picks_smaller_batch_than_greedy() {
+        let avail = vec![1usize, 2, 4, 8];
+        let costs = affine_costs(&avail, 1000.0, 1000.0); // est(b) = 1000 + 1000b
+        let mut s = Scheduler::new(avail.clone(), costs, BatchPolicy::Greedy);
+        s.calibrate(1.0); // 1 unit = 1 µs
+        let greedy = pick_batch(8, &avail, BatchPolicy::Greedy);
+        assert_eq!(greedy, 8);
+        // slack 6000µs: batch 8 (est 9000µs) would blow the deadline
+        let picked = s.pick(8, Some(6_000.0));
+        assert!(picked < greedy, "scheduler must back off from greedy {greedy}");
+        assert_eq!(picked, 4, "best-throughput feasible batch");
+        assert!(s.est_us(picked).unwrap() <= 6_000.0);
+        // without deadline pressure, throughput wins: overhead amortizes
+        assert_eq!(s.pick(8, None), 8);
+        // pad-to-fit would also have overshot the deadline
+        assert_eq!(pick_batch(8, &avail, BatchPolicy::PadToFit), 8);
+    }
+
+    #[test]
+    fn uncalibrated_scheduler_falls_back_to_policy() {
+        let avail = vec![1usize, 4, 8];
+        let costs = affine_costs(&avail, 500.0, 200.0);
+        let s = Scheduler::new(avail.clone(), costs, BatchPolicy::PadToFit);
+        // no observation, no calibration -> plain policy
+        assert_eq!(s.pick(3, Some(1.0)), 4);
+        let none = Scheduler::new(avail, Vec::new(), BatchPolicy::Greedy);
+        assert_eq!(none.pick(7, Some(1.0)), 4);
+    }
+
+    #[test]
+    fn observations_override_the_prior() {
+        let avail = vec![1usize, 4];
+        let costs = affine_costs(&avail, 100.0, 100.0);
+        let mut s = Scheduler::new(avail, costs, BatchPolicy::PadToFit);
+        s.observe(4, 10_000.0);
+        // batch 4 estimated from observation; batch 1 scaled from the
+        // calibration the observation induced
+        let e4 = s.est_us(4).unwrap();
+        assert!((e4 - 10_000.0).abs() < 1e-6);
+        let e1 = s.est_us(1).unwrap();
+        assert!(e1 > 0.0 && e1 < e4, "batch 1 prior must be cheaper: {e1} vs {e4}");
+        // repeated observations converge the EWMA
+        for _ in 0..50 {
+            s.observe(4, 2_000.0);
+        }
+        assert!((s.est_us(4).unwrap() - 2_000.0).abs() < 50.0);
+    }
+
+    #[test]
+    fn nothing_feasible_picks_cheapest_and_still_drains() {
+        let avail = vec![2usize, 4, 8];
+        let costs = affine_costs(&avail, 1000.0, 1000.0);
+        let mut s = Scheduler::new(avail.clone(), costs, BatchPolicy::Greedy);
+        s.calibrate(1.0);
+        // slack below the cheapest batch's estimate: progress over purity
+        let b = s.pick(8, Some(10.0));
+        assert_eq!(b, 2, "cheapest available batch drains the queue");
+    }
+
+    /// The satellite property: whenever *some* available batch fits the
+    /// tightest pending deadline, the scheduler never picks one whose
+    /// estimated cost exceeds it (and always picks an available batch).
+    #[test]
+    fn prop_scheduler_respects_tightest_deadline() {
+        prop::check("scheduler deadline feasibility", |rng: &mut Rng| {
+            let mut avail = vec![rng.range(1, 3)];
+            for _ in 0..rng.range(1, 4) {
+                let next = avail.last().unwrap() * rng.range(2, 4);
+                avail.push(next);
+            }
+            let overhead = rng.range(0, 2000) as f64;
+            let per_image = rng.range(1, 3000) as f64;
+            let mut s = Scheduler::new(
+                avail.clone(),
+                affine_costs(&avail, overhead, per_image),
+                BatchPolicy::PadToFit,
+            );
+            s.calibrate(0.25 + rng.f64());
+            let pending = rng.range(1, 40);
+            let slack = rng.range(1, 40_000) as f64;
+            let picked = s.pick(pending, Some(slack));
+            prop_assert!(avail.contains(&picked), "picked {} not available", picked);
+            let est = s.est_us(picked).unwrap();
+            let any_fits = avail.iter().any(|&b| s.est_us(b).unwrap() <= slack);
+            if any_fits {
+                prop_assert!(
+                    est <= slack,
+                    "picked batch {} est {:.0}µs exceeds tightest deadline slack {:.0}µs",
+                    picked,
+                    est,
+                    slack
+                );
+            } else {
+                let cheapest = avail
+                    .iter()
+                    .map(|&b| s.est_us(b).unwrap())
+                    .fold(f64::INFINITY, f64::min);
+                prop_assert!(
+                    est <= cheapest + 1e-9,
+                    "infeasible case must pick the cheapest batch"
+                );
+            }
+            // and with no deadline, the pick is still an available batch
+            let free = s.pick(pending, None);
+            prop_assert!(avail.contains(&free), "picked {} not available", free);
+            Ok(())
+        });
+    }
+
+    /// `QueueConfig { planned: false }` builds the scheduler with no
+    /// cost units; exec-time observations must never flip it into
+    /// planner mode — the policy stays in charge forever (that's what
+    /// bench_serving's greedy/padtofit baselines rely on).
+    #[test]
+    fn policy_mode_survives_observations() {
+        let avail = vec![1usize, 4, 8];
+        let mut s = Scheduler::new(avail.clone(), Vec::new(), BatchPolicy::Greedy);
+        for &b in &avail {
+            s.observe(b, 1_000.0 * b as f64);
+        }
+        assert!(!s.planned());
+        // Greedy(3) = 1 even though the observed estimates would argue
+        // for a different batch under throughput/deadline reasoning
+        assert_eq!(s.pick(3, Some(10.0)), 1);
+        assert_eq!(s.pick(3, None), 1);
+    }
+
+    /// A tight deadline *behind* the batch boundary must not shrink the
+    /// batch — only the deadlines of the requests that would ride it
+    /// (the FIFO prefix) constrain the choice.
+    #[test]
+    fn prefix_slack_ignores_deadlines_beyond_the_batch() {
+        let avail = vec![1usize, 2, 4, 8];
+        let costs = affine_costs(&avail, 1000.0, 1000.0); // est(b) = 1000 + 1000b
+        let mut s = Scheduler::new(avail, costs, BatchPolicy::Greedy);
+        s.calibrate(1.0);
+        // 8 pending; only request #8 has a deadline (slack 3500µs).
+        // est(8)=9000 blows it, but batches 1/2/4 don't serve #8 at all:
+        let slack_of = |b: usize| if b >= 8 { Some(3_500.0) } else { None };
+        let picked = s.pick_with(8, slack_of);
+        assert_eq!(picked, 4, "free prefix must keep the throughput batch");
+        // uniform slack (the degenerate pick()) would have collapsed to 2
+        assert_eq!(s.pick(8, Some(3_500.0)), 2);
+    }
+
+    #[test]
+    fn planned_requires_full_coverage() {
+        let avail = vec![1usize, 2, 4];
+        let full = Scheduler::new(avail.clone(), affine_costs(&avail, 10.0, 10.0),
+            BatchPolicy::Greedy);
+        assert!(full.planned());
+        let partial = Scheduler::new(avail.clone(), vec![(1, 20.0)], BatchPolicy::Greedy);
+        assert!(!partial.planned());
+        let empty = Scheduler::new(avail, Vec::new(), BatchPolicy::Greedy);
+        assert!(!empty.planned());
+    }
+}

@@ -136,6 +136,7 @@ fn backend_errors_reach_clients_as_explicit_responses() {
             Err(ServeError::Backend(msg)) => {
                 assert!(msg.contains("injected failure"), "{msg}");
             }
+            Err(other) => panic!("expected Backend error, got {other:?}"),
             Ok(_) => panic!("failing backend produced logits"),
         }
     }

@@ -1,0 +1,264 @@
+//! Integration: the multi-model `serve::Server` — named routing across
+//! engines, deadline-miss semantics, top-k options, and the
+//! planner-cost-driven batch scheduler (the `ExecPlan::cost_at` loop
+//! from request to kernel choice).
+
+use cadnn::api::{Backend, Engine};
+use cadnn::compress::profile::paper_profile;
+use cadnn::error::CadnnError;
+use cadnn::exec::Personality;
+use cadnn::models;
+use cadnn::serve::{
+    pick_batch, BatchPolicy, QueueConfig, Scheduler, ServeError, ServeRequest, Server,
+};
+use cadnn::util::rng::Rng;
+
+fn qcfg() -> QueueConfig {
+    QueueConfig { max_batch: 4, max_wait_us: 1_000, ..QueueConfig::default() }
+}
+
+fn image(len: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    let mut v = vec![0.0f32; len];
+    rng.fill_normal(&mut v, 0.5);
+    v
+}
+
+fn sparse_engine(batches: &[usize]) -> Engine {
+    let g = models::build("lenet5", 1).unwrap();
+    Engine::native("lenet5")
+        .personality(Personality::CadnnSparse)
+        .sparsity_profile(paper_profile(&g))
+        .batch_sizes(batches)
+        .build()
+        .unwrap()
+}
+
+/// Two registered engines, interleaved requests: every response routes
+/// back from the model its request named, per-model stats stay separate,
+/// and the dense model's answers match a direct session run.
+#[test]
+fn multi_model_routing_interleaved() {
+    let dense = Engine::native("lenet5").batch_sizes(&[1, 2, 4]).build().unwrap();
+    let sparse = sparse_engine(&[1, 2, 4]);
+    let server = Server::builder()
+        .engine_with("dense", &dense, qcfg())
+        .engine_with("sparse", &sparse, qcfg())
+        .build()
+        .unwrap();
+    assert_eq!(server.models(), vec!["dense", "sparse"]);
+    assert_eq!(server.input_len("dense"), Some(28 * 28));
+    assert_eq!(server.classes("sparse"), Some(10));
+
+    let img = image(28 * 28, 3);
+    let expected = dense.session().run(&img).unwrap();
+
+    let n = 6;
+    let mut rxs = Vec::new();
+    for _ in 0..n {
+        for m in ["dense", "sparse"] {
+            rxs.push((m, server.submit(ServeRequest::new(m, img.clone())).unwrap()));
+        }
+    }
+    for (model, rx) in rxs {
+        let resp = rx.recv().unwrap();
+        assert_eq!(resp.model, model, "response must carry its model");
+        let logits = resp.logits().expect("no backend errors");
+        assert_eq!(logits.len(), 10);
+        if model == "dense" {
+            let d = logits
+                .iter()
+                .zip(&expected)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0f32, f32::max);
+            assert!(d < 1e-5, "served dense logits diverge from session: {d}");
+        }
+    }
+    let stats = server.stats();
+    assert_eq!(stats["dense"].requests as usize, n);
+    assert_eq!(stats["sparse"].requests as usize, n);
+    assert_eq!(stats["dense"].deadline_misses, 0);
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn unknown_model_and_bad_input_fail_synchronously() {
+    let engine = Engine::native("lenet5").build().unwrap();
+    let server = Server::builder().engine("lenet5", &engine).build().unwrap();
+    match server.submit(ServeRequest::new("nope", vec![0.0; 28 * 28])) {
+        Err(CadnnError::UnknownModel { name }) => assert_eq!(name, "nope"),
+        other => panic!("expected UnknownModel, got {:?}", other.err()),
+    }
+    match server.submit(ServeRequest::new("lenet5", vec![0.0; 3])) {
+        Err(CadnnError::InvalidInput { reason }) => assert!(reason.contains("3"), "{reason}"),
+        other => panic!("expected InvalidInput, got {:?}", other.err()),
+    }
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn duplicate_model_name_is_a_config_error() {
+    let engine = Engine::native("lenet5").build().unwrap();
+    let err = Server::builder()
+        .engine("m", &engine)
+        .engine("m", &engine)
+        .build()
+        .err()
+        .unwrap();
+    assert!(matches!(err, CadnnError::Config { .. }), "{err}");
+}
+
+/// A backend slow enough that a short-deadline request expires while the
+/// previous batch executes.
+struct SlowBackend {
+    shape: Vec<usize>,
+    delay_ms: u64,
+}
+
+impl Backend for SlowBackend {
+    fn name(&self) -> &str {
+        "slow"
+    }
+    fn input_shape(&self) -> &[usize] {
+        &self.shape
+    }
+    fn classes(&self) -> usize {
+        4
+    }
+    fn batch_sizes(&self) -> Vec<usize> {
+        vec![1, 2]
+    }
+    fn run_batch(&self, batch: usize, _input: &[f32]) -> Result<Vec<f32>, CadnnError> {
+        std::thread::sleep(std::time::Duration::from_millis(self.delay_ms));
+        Ok(vec![0.25; batch * 4])
+    }
+}
+
+/// The deadline-miss path: a request whose deadline passes while queued
+/// is answered with an explicit `ServeError::Deadline` (never executed),
+/// counted in the per-model metrics — while the in-flight request still
+/// gets its logits.
+#[test]
+fn expired_request_gets_explicit_deadline_error() {
+    let server = Server::builder()
+        .backend_with(
+            "slow",
+            || {
+                let b: Box<dyn Backend> =
+                    Box::new(SlowBackend { shape: vec![2, 2, 1], delay_ms: 120 });
+                Ok(b)
+            },
+            qcfg(),
+        )
+        .build()
+        .unwrap();
+    // r1 starts executing (~120ms); r2 arrives mid-flight with a 5ms
+    // deadline, so it has expired long before the worker frees up
+    let r1 = server.submit(ServeRequest::new("slow", vec![0.1; 4])).unwrap();
+    std::thread::sleep(std::time::Duration::from_millis(40));
+    let r2 = server
+        .submit(ServeRequest::new("slow", vec![0.2; 4]).deadline_ms(5))
+        .unwrap();
+
+    let first = r1.recv().expect("served request answered");
+    assert!(first.outcome.is_ok(), "in-flight request must succeed: {:?}", first.outcome);
+    let second = r2.recv().expect("expired request still answered");
+    match second.outcome {
+        Err(ServeError::Deadline { deadline_us, waited_us }) => {
+            assert_eq!(deadline_us, 5_000);
+            assert!(waited_us >= 5_000, "waited {waited_us}µs < budget");
+        }
+        other => panic!("expected Deadline, got {other:?}"),
+    }
+    assert_eq!(second.batch, 0, "expired requests never ride a batch");
+
+    let stats = server.stats();
+    assert_eq!(stats["slow"].deadline_misses, 1);
+    assert_eq!(stats["slow"].requests, 1, "only the served request counts");
+    server.shutdown().unwrap();
+}
+
+/// Per-request top-k rides along with the logits.
+#[test]
+fn topk_option_attaches_sorted_classes() {
+    let engine = Engine::native("lenet5").build().unwrap();
+    let server = Server::builder().engine("m", &engine).build().unwrap();
+    let resp = server
+        .infer(ServeRequest::new("m", image(28 * 28, 7)).topk(3))
+        .unwrap();
+    let logits = resp.logits().unwrap().to_vec();
+    let topk = resp.topk.expect("topk requested");
+    assert_eq!(topk.len(), 3);
+    let argmax = logits
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap();
+    assert_eq!(topk[0].0, argmax);
+    assert!(topk[0].1 >= topk[1].1 && topk[1].1 >= topk[2].1, "{topk:?}");
+    // without the option, no topk is computed
+    let plain = server.infer(ServeRequest::new("m", image(28 * 28, 8))).unwrap();
+    assert!(plain.topk.is_none());
+    server.shutdown().unwrap();
+}
+
+/// The acceptance loop, end to end on a real engine: the registry entry
+/// carries the engine's `ExecPlan`, the per-variant scheduler costs ARE
+/// `ExecPlan::cost_at(b)`, and under a tight pending deadline the
+/// scheduler built from them picks a *smaller* batch than greedy
+/// `pick_batch` — one whose estimate fits the slack.
+#[test]
+fn planner_costs_drive_deadline_aware_batching() {
+    let engine = sparse_engine(&[1, 2, 4, 8]);
+    let server = Server::builder().engine_with("m", &engine, qcfg()).build().unwrap();
+    let entry = server.registry().get("m").expect("registered");
+    let plan = entry.plan.as_ref().expect("pruned engine has a plan");
+    assert_eq!(entry.batch_sizes, vec![1, 2, 4, 8]);
+    assert_eq!(entry.plan_costs.len(), 4, "{:?}", entry.plan_costs);
+    for (b, c) in &entry.plan_costs {
+        let from_plan = plan.cost_at(*b).unwrap();
+        assert!(
+            (from_plan - c).abs() < 1e-6,
+            "scheduler units must be ExecPlan::cost_at: batch {b}, {c} vs {from_plan}"
+        );
+    }
+
+    let mut sched = Scheduler::new(
+        entry.batch_sizes.clone(),
+        entry.plan_costs.clone(),
+        BatchPolicy::Greedy,
+    );
+    assert!(sched.planned());
+    sched.calibrate(1.0); // 1 unit = 1µs, deterministic for the assert
+    let greedy = pick_batch(8, &entry.batch_sizes, BatchPolicy::Greedy);
+    assert_eq!(greedy, 8);
+    // slack between the batch-4 and batch-8 estimates: 8 must be refused
+    let (e4, e8) = (plan.cost_at(4).unwrap(), plan.cost_at(8).unwrap());
+    let slack = (e4 + e8) / 2.0;
+    let picked = sched.pick(8, Some(slack));
+    assert!(
+        picked < greedy,
+        "deadline must force a smaller batch than greedy {greedy}, got {picked}"
+    );
+    assert!(sched.est_us(picked).unwrap() <= slack);
+    // without deadline pressure the scheduler serves throughput
+    assert_eq!(sched.pick(8, None), 8);
+    server.shutdown().unwrap();
+}
+
+/// Old-surface smoke through the shim, proving `Coordinator` call sites
+/// still behave (the dedicated legacy suite lives in native_serving.rs).
+#[test]
+fn coordinator_shim_still_serves() {
+    use cadnn::coordinator::{BatcherConfig, Coordinator};
+    let engine = Engine::native("lenet5").batch_sizes(&[1, 2]).build().unwrap();
+    let coord = Coordinator::serve_engine(&engine, BatcherConfig::default()).unwrap();
+    assert_eq!(coord.input_len, 28 * 28);
+    let resp = coord.infer(image(28 * 28, 11)).unwrap();
+    assert_eq!(resp.into_logits().unwrap().len(), 10);
+    let m = coord.metrics.lock().unwrap();
+    assert_eq!(m.requests, 1);
+    drop(m);
+    coord.shutdown().unwrap();
+}

@@ -213,11 +213,23 @@ fn exec_plan_survives_a_manifest_round_trip() {
     plan.layers.insert("c1".into(), LayerPlan::csr());
     plan.layers.insert(
         "c2".into(),
-        LayerPlan { format: SparseFormat::Bsr { br: 4, bc: 4 }, reorder: true, parallel_cutover: 256 },
+        LayerPlan {
+            format: SparseFormat::Bsr { br: 4, bc: 4 },
+            reorder: true,
+            parallel_cutover: 256,
+            cost_per_row: 172.8,
+            rows_per_image: 64,
+        },
     );
     plan.layers.insert(
         "c3".into(),
-        LayerPlan { format: SparseFormat::Pattern, reorder: false, parallel_cutover: 128 },
+        LayerPlan {
+            format: SparseFormat::Pattern,
+            parallel_cutover: 128,
+            cost_per_row: 96.5,
+            rows_per_image: 100,
+            ..LayerPlan::csr()
+        },
     );
     manifest.models[0].exec_plan = Some(plan.clone());
     let text = manifest.to_json().to_string_pretty();
