@@ -439,6 +439,36 @@ def quantize_on_support(
     return params
 
 
+def codebook_of(w, bits: int) -> np.ndarray:
+    """Distinct nonzero values of a quantized weight tensor, ascending —
+    the codebook the Rust side's quantized sparse payloads reconstruct
+    from (``compress::qsparse``). After ``project_quantize`` /
+    ``quantize_on_support`` the distinct nonzero count is at most
+    ``2^bits - 1`` (zero is the reserved support level and is never in
+    the codebook); the export asserts that invariant rather than
+    silently shipping an over-wide table."""
+    arr = np.asarray(w)
+    vals = np.unique(arr[arr != 0.0])
+    assert len(vals) <= 2**bits - 1, (
+        f"{len(vals)} distinct nonzero levels exceed the {bits}-bit codebook"
+    )
+    return vals
+
+
+def export_quant(params: dict, layers, bits: int) -> dict:
+    """Per-layer ``{"bits", "codebook"}`` export for compress_report.json
+    (the step docs/PIPELINE.md documents): what
+    ``SparsityProfile::from_report`` parses to drive the planner's
+    ``ValuePolicy::Auto`` onto quantized payloads."""
+    return {
+        k: {
+            "bits": bits,
+            "codebook": [float(v) for v in codebook_of(params[k]["w"], bits)],
+        }
+        for k in layers
+    }
+
+
 # ------------------------------------------------- storage accounting
 
 

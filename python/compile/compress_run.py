@@ -132,6 +132,10 @@ def measured_lenet5(quick: bool, log, granularity: str = "element"):
         rounds=2 if quick else 5, seed=1, log=log,
     )
     quant_acc = T.accuracy(fwd, qparams, xt, yt)
+    # per-layer codebook export: the quantized params' distinct nonzero
+    # levels, parsed by the Rust SparsityProfile so Auto planning picks
+    # quantized (LUT) payloads for these layers
+    quant_export = A.export_quant(qparams, sparsity, 4)
     nnz = sum(
         int(np.sum(np.asarray(qparams[k]["w"]) != 0.0)) for k in sparsity
     )
@@ -152,6 +156,7 @@ def measured_lenet5(quick: bool, log, granularity: str = "element"):
                 "nnz": v[0],
                 "total": v[1],
                 "structure": res.structures.get(k, "element"),
+                "quant": quant_export[k],
             }
             for k, v in res.per_layer_nnz.items()
         },

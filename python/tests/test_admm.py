@@ -197,6 +197,57 @@ def test_quantize_is_nearest_level():
     )
 
 
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(8, 400),
+    bits=st.integers(2, 8),
+    sparsity=st.floats(0.0, 0.9),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_codebook_export_bounded_and_exact(n, bits, sparsity, seed):
+    """The codebook export invariants the Rust importer relies on:
+    at most 2^bits - 1 ascending nonzero levels, zero never exported,
+    and every nonzero quantized value is reconstructible from the
+    codebook (the LUT kernels' contract)."""
+    rng = np.random.default_rng(seed)
+    w = A.project_prune_element(
+        jnp.asarray(rng.normal(size=(n,)), jnp.float32), sparsity
+    )
+    q, _ = A.project_quantize(w, bits)
+    cb = A.codebook_of(q, bits)
+    assert len(cb) <= 2**bits - 1
+    assert (np.diff(cb) > 0).all() if len(cb) > 1 else True
+    assert not np.any(cb == 0.0), "zero is the reserved support level"
+    nz = np.asarray(q)[np.asarray(q) != 0.0]
+    assert np.isin(nz, cb).all(), "every nonzero value must be in the codebook"
+
+
+def test_codebook_of_rejects_overwide_tables():
+    # 4 distinct nonzero values cannot ship as a 2-bit codebook (max 3)
+    w = jnp.asarray([0.1, 0.2, 0.3, 0.4], jnp.float32)
+    with pytest.raises(AssertionError):
+        A.codebook_of(w, 2)
+
+
+def test_export_quant_shapes_report_entries():
+    """export_quant emits exactly what compress_report.json ships and
+    SparsityProfile::from_report parses: {"bits", "codebook"} per layer,
+    JSON-serializable floats, codebook within the declared width."""
+    import json
+
+    q, _ = A.project_quantize(
+        jnp.asarray(np.linspace(-1.0, 1.0, 50), jnp.float32), 4
+    )
+    params = {"c1": {"w": q}, "f1": {"w": q * 0.5}}
+    out = A.export_quant(params, ["c1", "f1"], 4)
+    assert set(out) == {"c1", "f1"}
+    for entry in out.values():
+        assert entry["bits"] == 4
+        assert len(entry["codebook"]) <= 15
+        assert all(isinstance(v, float) for v in entry["codebook"])
+    json.dumps(out)  # must be serializable as-is
+
+
 # ------------------------------------------------- end-to-end (small)
 
 

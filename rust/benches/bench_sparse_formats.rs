@@ -13,9 +13,11 @@ use cadnn::bench::print_table;
 use cadnn::compress::bsr::BsrMatrix;
 use cadnn::compress::csr::CsrMatrix;
 use cadnn::compress::pattern::{prune_patterns, PatternMatrix};
+use cadnn::compress::qsparse::{QBsr, QCsr, QPattern};
 use cadnn::compress::reorder;
 use cadnn::kernels::bsr::bsr_gemm;
 use cadnn::kernels::gemm::gemm_blocked;
+use cadnn::kernels::lut::{qbsr_gemm, qcsr_gemm, qpattern_gemm};
 use cadnn::kernels::pattern::pattern_gemm;
 use cadnn::kernels::sparse::csr_gemm;
 use cadnn::kernels::Epilogue;
@@ -117,14 +119,24 @@ fn main() {
                 let t_b41 = measure(|| bsr_gemm(&a, &bsr41, &mut c, m, &Epilogue::None));
                 let t_b44 = measure(|| bsr_gemm(&a, &bsr44, &mut c, m, &Epilogue::None));
                 let t_b44r = measure(|| bsr_gemm(&a, &bsr44r, &mut c, m, &Epilogue::None));
-                let (t_pat, pat_kernels) = if spatial {
+                // the value_bits axis: same formats, codebook-packed
+                // values through the LUT kernels (feeds COST_LUT_Q8/Q4)
+                let qcsr8 = QCsr::from_csr(&csr, 8);
+                let qcsr4 = QCsr::from_csr(&csr, 4);
+                let t_csr_q8 = measure(|| qcsr_gemm(&a, &qcsr8, &mut c, m, &Epilogue::None));
+                let t_csr_q4 = measure(|| qcsr_gemm(&a, &qcsr4, &mut c, m, &Epilogue::None));
+                let qb44 = QBsr::from_bsr(&bsr44, 8);
+                let t_b44_q8 = measure(|| qbsr_gemm(&a, &qb44, &mut c, m, &Epilogue::None));
+                let (t_pat, t_pat_q4, pat_kernels) = if spatial {
                     let pat = PatternMatrix::from_dense(&dense, hwio[0], hwio[1], hwio[2], n);
+                    let qpat4 = QPattern::from_pattern(&pat, 4);
                     (
                         measure(|| pattern_gemm(&a, &pat, &mut c, m, &Epilogue::None)),
+                        measure(|| qpattern_gemm(&a, &qpat4, &mut c, m, &Epilogue::None)),
                         pat.kernels(),
                     )
                 } else {
-                    (f64::NAN, 0)
+                    (f64::NAN, f64::NAN, 0)
                 };
 
                 let auto = choose(FormatPolicy::Auto, &csr, m, hwio);
@@ -134,9 +146,13 @@ fn main() {
                     ("bsr4x1", t_b41),
                     ("bsr4x4", t_b44),
                     ("bsr4x4+reorder", t_b44r),
+                    ("csr+q8", t_csr_q8),
+                    ("csr+q4", t_csr_q4),
+                    ("bsr4x4+q8", t_b44_q8),
                 ];
                 if spatial {
                     times.push(("pattern", t_pat));
+                    times.push(("pattern+q4", t_pat_q4));
                 }
                 let winner = times
                     .iter()
@@ -152,7 +168,9 @@ fn main() {
                     format!("{t_b41:.0}"),
                     format!("{t_b44:.0}"),
                     format!("{t_b44r:.0}"),
+                    format!("{t_csr_q4:.0}"),
                     if spatial { format!("{t_pat:.0}") } else { "-".to_string() },
+                    if spatial { format!("{t_pat_q4:.0}") } else { "-".to_string() },
                     winner.to_string(),
                     auto.format.label(),
                 ]);
@@ -180,7 +198,7 @@ fn main() {
     print_table(
         &[
             "layer", "structure", "density", "dense", "csr", "bsr4x1", "bsr4x4", "bsr4x4+r",
-            "pattern", "winner", "auto",
+            "csr_q4", "pattern", "pat_q4", "winner", "auto",
         ],
         &rows,
     );

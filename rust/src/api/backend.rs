@@ -75,6 +75,14 @@ pub trait Backend {
     fn plan_costs(&self) -> Vec<(usize, f64)> {
         Vec::new()
     }
+
+    /// Persisted serving-cost calibration (µs per plan cost unit), when
+    /// one exists — artifact backends read the manifest's `us_per_unit`
+    /// so a fresh process's scheduler is deadline-accurate from its
+    /// first batch. `None` when never served or not persisted.
+    fn calibration(&self) -> Option<f64> {
+        None
+    }
 }
 
 /// Native-kernel backend: one [`ModelInstance`] per batch size, with a
@@ -333,5 +341,13 @@ impl Backend for ArtifactBackend {
                 plan.cost_at(b).map(|c| (b, c))
             })
             .collect()
+    }
+
+    fn calibration(&self) -> Option<f64> {
+        // any batch variant carries the (model, variant)-level value;
+        // take the first that has one
+        self.batch_sizes()
+            .into_iter()
+            .find_map(|b| self.manifest_entry(b).and_then(|e| e.us_per_unit))
     }
 }

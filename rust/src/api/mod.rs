@@ -39,7 +39,7 @@ use crate::error::CadnnError;
 use crate::exec::{ModelInstance, Personality};
 use crate::ir::Graph;
 use crate::models;
-use crate::planner::{ExecPlan, FormatPolicy, PlanCache};
+use crate::planner::{ExecPlan, FormatPolicy, PlanCache, ValuePolicy};
 use crate::tuner::TunerCache;
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -62,6 +62,7 @@ pub struct EngineBuilder {
     personality: Personality,
     profile: Option<SparsityProfile>,
     sparse_format: FormatPolicy,
+    value_bits: ValuePolicy,
     tuned: bool,
     cache_bytes: usize,
     batch_sizes: Option<Vec<usize>>,
@@ -75,6 +76,7 @@ impl EngineBuilder {
             personality: Personality::CadnnDense,
             profile: None,
             sparse_format: FormatPolicy::Auto,
+            value_bits: ValuePolicy::Auto,
             tuned: false,
             cache_bytes: 2 << 20,
             batch_sizes: None,
@@ -106,6 +108,20 @@ impl EngineBuilder {
     /// combination otherwise.
     pub fn sparse_format(mut self, policy: FormatPolicy) -> EngineBuilder {
         self.sparse_format = policy;
+        self
+    }
+
+    /// How sparse payloads store their *values* — the precision axis
+    /// orthogonal to [`EngineBuilder::sparse_format`]:
+    /// [`ValuePolicy::Auto`] follows the profile (layers whose compress
+    /// report exported a codebook get quantized payloads at the exported
+    /// width, everything else stays f32), [`ValuePolicy::F32`] pins raw
+    /// floats, [`ValuePolicy::Q8`] / [`ValuePolicy::Q4`] pin codebook
+    /// payloads executed through the LUT kernels. Non-`Auto` values
+    /// require [`Personality::CadnnSparse`]; `build` rejects the
+    /// combination otherwise. Dense-planned layers always stay f32.
+    pub fn value_bits(mut self, policy: ValuePolicy) -> EngineBuilder {
+        self.value_bits = policy;
         self
     }
 
@@ -152,6 +168,11 @@ impl EngineBuilder {
                 "sparse_format pinned but personality is not CadnnSparse",
             ));
         }
+        if self.value_bits != ValuePolicy::Auto && !self.personality.sparse() {
+            return Err(CadnnError::config(
+                "value_bits pinned but personality is not CadnnSparse",
+            ));
+        }
         match self.source {
             ModelSource::Named(name) => {
                 let mut sizes = self.batch_sizes.clone().unwrap_or_else(|| vec![1]);
@@ -178,6 +199,7 @@ impl EngineBuilder {
                         if self.tuned { Some(&mut cache) } else { None },
                         self.cache_bytes,
                         self.sparse_format,
+                        self.value_bits,
                         Some(&mut plan_cache),
                     )?;
                     instances.insert(b, inst);
@@ -198,13 +220,15 @@ impl EngineBuilder {
                     }
                 }
                 let mut cache = TunerCache::new();
-                let inst = ModelInstance::build_planned(
+                let inst = ModelInstance::build_planned_cached(
                     &g,
                     self.personality,
                     self.profile.as_ref(),
                     if self.tuned { Some(&mut cache) } else { None },
                     self.cache_bytes,
                     self.sparse_format,
+                    self.value_bits,
+                    None,
                 )?;
                 let label = format!("{}[{}]", g.name, self.personality.label());
                 let mut instances = BTreeMap::new();
@@ -347,6 +371,10 @@ impl Backend for Engine {
     fn plan_costs(&self) -> Vec<(usize, f64)> {
         self.backend.plan_costs()
     }
+
+    fn calibration(&self) -> Option<f64> {
+        self.backend.calibration()
+    }
 }
 
 /// Single-stream inference handle. `&mut self` expresses that a session
@@ -447,6 +475,52 @@ mod tests {
             .err()
             .unwrap();
         assert!(matches!(err, CadnnError::Config { .. }), "{err}");
+    }
+
+    #[test]
+    fn pinned_value_bits_requires_sparse_personality() {
+        let err = Engine::native("lenet5")
+            .value_bits(ValuePolicy::Q4)
+            .build()
+            .err()
+            .unwrap();
+        assert!(matches!(err, CadnnError::Config { .. }), "{err}");
+    }
+
+    /// The value axis end-to-end through the public API: a pinned Q8
+    /// engine executes through the LUT kernels and agrees with the f32
+    /// engine within the codebook error, and the plan records the width.
+    #[test]
+    fn quantized_engine_agrees_with_f32_within_bound() {
+        use crate::compress::qsparse::ValueBits;
+        let g = models::build("lenet5", 1).unwrap();
+        let build = |vp: ValuePolicy| {
+            Engine::native("lenet5")
+                .personality(Personality::CadnnSparse)
+                .sparsity_profile(paper_profile(&g))
+                .value_bits(vp)
+                .build()
+                .unwrap()
+        };
+        let f = build(ValuePolicy::F32);
+        let q = build(ValuePolicy::Q8);
+        let plan = q.exec_plan().unwrap();
+        assert!(
+            plan.layers
+                .values()
+                .filter(|lp| lp.format != crate::planner::SparseFormat::Dense)
+                .all(|lp| lp.value_bits == ValueBits::Q8),
+            "pinned Q8 must reach every sparse layer: {plan:?}"
+        );
+        let img = image(f.input_len(), 23);
+        let a = f.session().run(&img).unwrap();
+        let b = q.session().run(&img).unwrap();
+        // logits pass through softmax, which is 1-Lipschitz-ish in the
+        // max-abs sense for bounded inputs; 8-bit codebooks keep the
+        // pre-softmax drift tiny, so a loose tolerance is meaningful
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 0.05, "f32 {x} vs q8 {y}");
+        }
     }
 
     #[test]

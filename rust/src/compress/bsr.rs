@@ -100,6 +100,24 @@ impl BsrMatrix {
         Self::from_dense(&csr.to_dense(), csr.rows, csr.cols, br, bc)
     }
 
+    /// Reassemble from raw structure + value arrays (the quantized
+    /// payload's dequantization path — `compress::qsparse::QBsr`
+    /// round-trips through this). The true-nonzero count is recomputed
+    /// from the values; `validate` checks the rest.
+    #[allow(clippy::too_many_arguments)]
+    pub fn from_parts(
+        rows: usize,
+        cols: usize,
+        br: usize,
+        bc: usize,
+        row_ptr: Vec<u32>,
+        col_idx: Vec<u32>,
+        values: Vec<f32>,
+    ) -> Self {
+        let nnz = values.iter().filter(|v| **v != 0.0).count();
+        BsrMatrix { rows, cols, br, bc, row_ptr, col_idx, values, nnz }
+    }
+
     /// Stored blocks.
     pub fn blocks(&self) -> usize {
         self.col_idx.len()

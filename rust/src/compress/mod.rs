@@ -9,7 +9,9 @@
 //!   execution path uses (see `docs/FORMATS.md`),
 //! - the PatDNN pattern format (per-kernel canonical patterns + shared
 //!   pattern table) and its structured pruners (`docs/PIPELINE.md`),
-//! - k-bit codebook quantization metadata,
+//! - k-bit codebook quantization metadata, and the quantized sparse
+//!   payloads (`qsparse`) that pack every format's value array behind a
+//!   shared codebook for the LUT execution path (`kernels::lut`),
 //! - storage accounting that regenerates the §3 compression-rate and
 //!   storage-reduction claims and Table 2 sizes.
 
@@ -17,6 +19,7 @@ pub mod bsr;
 pub mod csr;
 pub mod pattern;
 pub mod profile;
+pub mod qsparse;
 pub mod quant;
 pub mod reorder;
 pub mod size;
@@ -25,5 +28,6 @@ pub use bsr::BsrMatrix;
 pub use csr::CsrMatrix;
 pub use pattern::PatternMatrix;
 pub use profile::{PruneStructure, SparsityProfile, paper_profile};
+pub use qsparse::{QBsr, QCsr, QPattern, QSparseMatrix, QuantizedValues, ValueBits};
 pub use quant::QuantizedTensor;
 pub use reorder::Permutation;

@@ -430,6 +430,59 @@ pub fn select_pattern_library(
     ranked.into_iter().map(|(m, _)| m).collect()
 }
 
+/// How well a pattern `library` fits a layer's weights, in [0, 1]: the
+/// magnitude its best per-kernel library mask captures, as a fraction of
+/// the magnitude each kernel's own top-`entries` mask would capture
+/// (the unconstrained optimum [`select_pattern_library`] nominates
+/// from). 1.0 means the library loses nothing; a library selected on a
+/// layer with a *different* magnitude layout scores low. `PlanCache`
+/// uses this to decide whether a cached family library transfers to a
+/// new layer or must be re-selected — the fix for same-shape layers
+/// silently inheriting the first layer's patterns. Returns 1.0 for
+/// all-zero weights or shapes patterns cannot encode.
+pub fn library_fit(
+    mat: &[f32],
+    kh: usize,
+    kw: usize,
+    cin: usize,
+    cols: usize,
+    entries: usize,
+    library: &[Vec<u8>],
+) -> f64 {
+    let kk = kh * kw;
+    assert_eq!(mat.len(), kk * cin * cols);
+    if mat.is_empty() || kk <= 1 || library.is_empty() {
+        return 1.0;
+    }
+    let entries = entries.clamp(1, kk);
+    let at = |pos: usize, ci: usize, co: usize| mat[(pos * cin + ci) * cols + co];
+    let mut captured = 0.0f64;
+    let mut ideal = 0.0f64;
+    let mut mags = vec![0.0f64; kk];
+    for ci in 0..cin {
+        for co in 0..cols {
+            for (pos, m) in mags.iter_mut().enumerate() {
+                *m = at(pos, ci, co).abs() as f64;
+            }
+            let mut best = 0.0f64;
+            for mask in library {
+                let s: f64 = mask.iter().map(|&p| mags[p as usize]).sum();
+                if s > best {
+                    best = s;
+                }
+            }
+            captured += best;
+            let mut sorted = mags.clone();
+            sorted.sort_by(|a, b| b.partial_cmp(a).unwrap_or(std::cmp::Ordering::Equal));
+            ideal += sorted[..entries].iter().sum::<f64>();
+        }
+    }
+    if ideal <= 0.0 {
+        return 1.0;
+    }
+    (captured / ideal).min(1.0)
+}
+
 /// Step 3 of [`prune_patterns`]: project every kernel onto its best
 /// pattern from `library` (which may come from another layer of the same
 /// (kh, kw, cin) family — see [`select_pattern_library`]) and apply

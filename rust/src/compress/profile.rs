@@ -71,6 +71,20 @@ impl PruneStructure {
     }
 }
 
+/// A layer's exported quantization: the codebook width the python
+/// unified prune+quantize run validated the layer at, plus the codebook
+/// itself (informational — the native engine re-fits on its own
+/// generated weights; the *width* is what drives
+/// [`crate::planner::ValuePolicy::Auto`] toward a quantized payload).
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantSpec {
+    /// Codebook index width (the report's `quant.bits`).
+    pub bits: u8,
+    /// Exported distinct nonzero levels (may be empty for hand-built
+    /// profiles; at most `2^bits - 1` entries when exported).
+    pub codebook: Vec<f32>,
+}
+
 #[derive(Debug, Clone, Default)]
 pub struct SparsityProfile {
     /// layer name -> sparsity (fraction of weights pruned).
@@ -78,6 +92,9 @@ pub struct SparsityProfile {
     /// layer name -> pruning structure; absent means
     /// [`PruneStructure::Element`].
     pub structures: BTreeMap<String, PruneStructure>,
+    /// layer name -> exported codebook; absent means the layer was not
+    /// quantized (f32 payload under `ValuePolicy::Auto`).
+    pub quant: BTreeMap<String, QuantSpec>,
 }
 
 impl SparsityProfile {
@@ -98,7 +115,20 @@ impl SparsityProfile {
                 }
             }
         }
-        SparsityProfile { layers, structures }
+        SparsityProfile { layers, structures, quant: BTreeMap::new() }
+    }
+
+    /// This profile with every pruned layer declared quantized at
+    /// `bits` (empty codebooks — the engine fits its own): the
+    /// hand-built analogue of a report whose layers all exported
+    /// codebooks, used by `cadnn plan` and tests to drive
+    /// `ValuePolicy::Auto` onto quantized payloads.
+    pub fn with_uniform_quant(mut self, bits: u8) -> Self {
+        let names: Vec<String> = self.layers.keys().cloned().collect();
+        for name in names {
+            self.quant.insert(name, QuantSpec { bits, codebook: Vec::new() });
+        }
+        self
     }
 
     pub fn get(&self, layer: &str) -> f64 {
@@ -108,6 +138,12 @@ impl SparsityProfile {
     /// The pruning structure recorded for a layer (Element when absent).
     pub fn structure(&self, layer: &str) -> PruneStructure {
         self.structures.get(layer).copied().unwrap_or_default()
+    }
+
+    /// The exported codebook width for a layer, if its compress report
+    /// declared one — what `ValuePolicy::Auto` resolves value bits from.
+    pub fn quant_bits(&self, layer: &str) -> Option<u8> {
+        self.quant.get(layer).map(|q| q.bits)
     }
 
     /// Overall weight reduction rate over a graph: total / nnz.
@@ -139,14 +175,18 @@ impl SparsityProfile {
 
     /// Import the measured per-layer profile from compress_report.json
     /// ("measured" -> model -> "per_layer" -> {layer: {nnz, total,
-    /// structure?}}). The optional `structure` label (written by the
-    /// block/pattern ADMM projections) is parsed with
+    /// structure?, quant?}}). The optional `structure` label (written by
+    /// the block/pattern ADMM projections) is parsed with
     /// [`PruneStructure::parse`]; unknown or absent labels degrade to
-    /// element-granular, never fail the import.
+    /// element-granular, never fail the import. The optional `quant`
+    /// object (`{bits, codebook}` — written by the unified
+    /// prune+quantize export) is parsed into [`QuantSpec`]; malformed
+    /// entries are dropped, never fail the import.
     pub fn from_report(report: &Json, model: &str) -> Option<Self> {
         let per_layer = report.get("measured")?.get(model)?.get("per_layer")?;
         let mut layers = BTreeMap::new();
         let mut structures = BTreeMap::new();
+        let mut quant = BTreeMap::new();
         if let Json::Obj(kv) = per_layer {
             for (name, v) in kv {
                 let nnz = v.get("nnz")?.as_f64()?;
@@ -160,10 +200,35 @@ impl SparsityProfile {
                 if s != PruneStructure::Element {
                     structures.insert(name.clone(), s);
                 }
+                if let Some(spec) = v.get("quant").and_then(parse_quant) {
+                    quant.insert(name.clone(), spec);
+                }
             }
         }
-        Some(SparsityProfile { layers, structures })
+        Some(SparsityProfile { layers, structures, quant })
     }
+}
+
+/// Parse one per-layer `quant` object: `bits` in 2..=8 required,
+/// `codebook` an optional float array bounded by `2^bits - 1` nonzero
+/// levels. Anything malformed yields `None` (the layer imports
+/// unquantized — same degradation contract as unknown structure labels).
+fn parse_quant(q: &Json) -> Option<QuantSpec> {
+    let bits = q.get("bits")?.as_usize()?;
+    if !(2..=8).contains(&bits) {
+        return None;
+    }
+    let codebook: Vec<f32> = match q.get("codebook") {
+        None => Vec::new(),
+        Some(arr) => {
+            let vals = arr.as_arr()?;
+            if vals.len() > (1usize << bits) - 1 {
+                return None;
+            }
+            vals.iter().map(|v| v.as_f64().map(|f| f as f32)).collect::<Option<Vec<f32>>>()?
+        }
+    };
+    Some(QuantSpec { bits: bits as u8, codebook })
 }
 
 /// Paper-shaped profile for a named model, tuned so the overall rate
@@ -253,7 +318,7 @@ pub fn paper_profile(graph: &Graph) -> SparsityProfile {
             return SparsityProfile::uniform(graph, 0.5);
         }
     }
-    SparsityProfile { layers, structures: BTreeMap::new() }
+    SparsityProfile { layers, structures: BTreeMap::new(), quant: BTreeMap::new() }
 }
 
 #[cfg(test)]
@@ -322,6 +387,48 @@ mod tests {
         assert_eq!(PruneStructure::parse("block0x4"), None);
         assert_eq!(PruneStructure::parse("pattern0"), None);
         assert_eq!(PruneStructure::parse("banded"), None);
+    }
+
+    /// The codebook export lands in the profile: bits + levels parsed
+    /// per layer, malformed entries dropped without failing the import,
+    /// absent entries mean "not quantized".
+    #[test]
+    fn import_codebook_from_report_json() {
+        let src = r#"{"measured": {"lenet5": {"per_layer": {
+            "c1": {"nnz": 64, "total": 576, "structure": "pattern4",
+                   "quant": {"bits": 4, "codebook": [-0.5, 0.25, 0.5]}},
+            "c2": {"nnz": 64, "total": 256, "quant": {"bits": 8}},
+            "f1": {"nnz": 480, "total": 48000, "quant": {"bits": 99}},
+            "f2": {"nnz": 10, "total": 100}
+        }}}}"#;
+        let j = Json::parse(src).unwrap();
+        let p = SparsityProfile::from_report(&j, "lenet5").unwrap();
+        assert_eq!(p.quant_bits("c1"), Some(4));
+        assert_eq!(
+            p.quant.get("c1").unwrap().codebook,
+            vec![-0.5f32, 0.25, 0.5],
+            "exported levels survive the import"
+        );
+        assert_eq!(p.quant_bits("c2"), Some(8), "codebook array is optional");
+        assert_eq!(p.quant_bits("f1"), None, "bad bits degrade to unquantized");
+        assert_eq!(p.quant_bits("f2"), None);
+        // oversized codebook for the declared width is malformed
+        let src = r#"{"measured": {"m": {"per_layer": {
+            "c": {"nnz": 1, "total": 2,
+                  "quant": {"bits": 2, "codebook": [1.0, 2.0, 3.0, 4.0]}}
+        }}}}"#;
+        let p = SparsityProfile::from_report(&Json::parse(src).unwrap(), "m").unwrap();
+        assert_eq!(p.quant_bits("c"), None);
+    }
+
+    #[test]
+    fn uniform_quant_declares_every_pruned_layer() {
+        let g = models::build("lenet5", 1).unwrap();
+        let p = SparsityProfile::uniform(&g, 0.8).with_uniform_quant(4);
+        for name in p.layers.keys() {
+            assert_eq!(p.quant_bits(name), Some(4));
+        }
+        assert_eq!(p.quant_bits("not_a_layer"), None);
     }
 
     #[test]

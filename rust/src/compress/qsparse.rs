@@ -1,0 +1,759 @@
+//! Quantized sparse value stores: codebook-packed payloads for the
+//! CSR / BSR / Pattern formats (paper §3, quantization stacked on
+//! sparsity).
+//!
+//! `compress::quant` quantizes a tensor to symmetric uniform levels but
+//! leaves the result as a dead-end `i8` array; every sparse payload in
+//! the format subsystem still ships f32 values, so the storage win the
+//! paper claims from *unified* prune+quantize never compounds with the
+//! formats. This module closes that gap:
+//!
+//! - [`QuantizedValues`] — a codebook (`<= 2^bits` f32 entries, entry 0
+//!   pinned to 0.0) plus bit-packed per-value indices (two per byte at
+//!   4 bits). The codebook is fitted with deterministic 1-D k-means
+//!   (Lloyd) seeded from the *uniform symmetric grid* `compress::quant`
+//!   uses, so the fit subsumes the uniform quantizer under the sparse
+//!   payloads' support constraint: no nonzero value may land on the
+//!   zero entry (unlike `QuantizedTensor`, which snaps small weights to
+//!   level 0 and silently changes the support), and within that
+//!   constraint the reconstruction error is never worse than the
+//!   uniform grid's (property-tested).
+//! - [`QCsr`] / [`QBsr`] / [`QPattern`] — the three sparse formats with
+//!   their f32 value arrays replaced by a `QuantizedValues` store. The
+//!   structural arrays (pointers, indices, pattern table) are unchanged,
+//!   so the LUT micro-kernels ([`crate::kernels::lut`]) walk the exact
+//!   same loops as the f32 kernels and gather `codebook[idx]` instead of
+//!   loading a float — no intermediate dense buffer, bit-identical to
+//!   dequantize-then-execute.
+//! - [`QSparseMatrix`] — the payload enum the executor dispatches on.
+//!
+//! Disk accounting (`disk_bytes` / `bytes_on_disk_idx16`) always charges
+//! the codebook next to the packed indices: it is part of the layer's
+//! payload, not free metadata. The index round-trip is lossless
+//! (`pack`/`index` are exact inverses); the only lossy step is the value
+//! → codebook-entry snap, bounded by [`QuantizedValues::error_bound`].
+
+use crate::compress::bsr::BsrMatrix;
+use crate::compress::csr::CsrMatrix;
+use crate::compress::pattern::PatternMatrix;
+
+/// How a sparse payload's values are stored: raw f32, or packed indices
+/// into an 8-bit / 4-bit codebook. This is the *per-layer decision* the
+/// planner records in `LayerPlan::value_bits` and the manifest
+/// serializes; [`crate::planner::ValuePolicy`] is the user-facing knob.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ValueBits {
+    /// Raw f32 values (the pre-quantization baseline).
+    #[default]
+    F32,
+    /// 8-bit codebook indices (<= 256 entries).
+    Q8,
+    /// 4-bit codebook indices (<= 16 entries), two per byte.
+    Q4,
+}
+
+impl ValueBits {
+    /// Bits per stored value (32 / 8 / 4) — the manifest encoding.
+    pub fn bits(&self) -> usize {
+        match self {
+            ValueBits::F32 => 32,
+            ValueBits::Q8 => 8,
+            ValueBits::Q4 => 4,
+        }
+    }
+
+    /// Inverse of [`ValueBits::bits`].
+    pub fn from_bits(bits: usize) -> Option<ValueBits> {
+        match bits {
+            32 => Some(ValueBits::F32),
+            8 => Some(ValueBits::Q8),
+            4 => Some(ValueBits::Q4),
+            _ => None,
+        }
+    }
+
+    /// Stable textual name (`f32`, `q8`, `q4`).
+    pub fn label(&self) -> &'static str {
+        match self {
+            ValueBits::F32 => "f32",
+            ValueBits::Q8 => "q8",
+            ValueBits::Q4 => "q4",
+        }
+    }
+
+    pub fn quantized(&self) -> bool {
+        *self != ValueBits::F32
+    }
+}
+
+/// Lloyd iterations for the codebook fit. 1-D k-means on sorted data
+/// converges in a handful of passes; a fixed count keeps the fit
+/// deterministic and cheap (O(iters * n log k)).
+const FIT_ITERS: usize = 10;
+
+/// Codebook-quantized value array: `codebook[indices[i]]` reconstructs
+/// value `i`. Entry 0 of the codebook is pinned to exactly 0.0 and only
+/// exact-zero inputs map to it, so a pruning support (and BSR padding)
+/// survives quantization bit-for-bit — matching `compress::quant`'s
+/// zero-preservation contract.
+///
+/// # Examples
+///
+/// ```
+/// use cadnn::compress::qsparse::QuantizedValues;
+///
+/// let vals = [0.0f32, 0.5, -0.25, 0.5, 0.0];
+/// let q = QuantizedValues::fit(&vals, 4);
+/// assert_eq!(q.len(), 5);
+/// assert_eq!(q.codebook[0], 0.0);
+/// // three distinct values -> lossless reconstruction
+/// assert_eq!(q.dequantize(), vals);
+/// assert_eq!(q.error_bound(), 0.0);
+/// ```
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantizedValues {
+    /// 4 or 8.
+    pub bits: u8,
+    /// Reconstruction table; `codebook[0] == 0.0`, nonzero entries
+    /// ascending. Length `<= 1 << bits`.
+    pub codebook: Vec<f32>,
+    /// Bit-packed indices, `bits` per value (4-bit: low nibble first).
+    pub packed: Vec<u8>,
+    /// Stored value count (the packed array rounds up to whole bytes).
+    len: usize,
+    /// Max |v - codebook[index(v)]| over the fitted values.
+    max_err: f32,
+}
+
+impl QuantizedValues {
+    /// Fit a codebook to `values` and pack their indices. `bits` must be
+    /// 4 or 8. Nonzero centroids are 1-D k-means (Lloyd) seeded from the
+    /// uniform symmetric levels of [`crate::compress::quant`] — the fit
+    /// starts at the uniform quantizer and only improves, so this
+    /// subsumes `QuantizedTensor` for codebook purposes.
+    pub fn fit(values: &[f32], bits: u8) -> QuantizedValues {
+        assert!(bits == 4 || bits == 8, "codebook payloads support 4 or 8 bits");
+        let nonzero: Vec<f32> = values.iter().copied().filter(|v| *v != 0.0).collect();
+        let centers = fit_centers(&nonzero, bits);
+        let mut codebook = Vec::with_capacity(centers.len() + 1);
+        codebook.push(0.0f32);
+        codebook.extend_from_slice(&centers);
+        let mut packed = vec![0u8; (values.len() * bits as usize).div_ceil(8)];
+        let mut max_err = 0.0f32;
+        for (i, &v) in values.iter().enumerate() {
+            let idx = if v == 0.0 { 0 } else { 1 + nearest(&centers, v) };
+            let err = (v - codebook[idx]).abs();
+            if err > max_err {
+                max_err = err;
+            }
+            match bits {
+                8 => packed[i] = idx as u8,
+                _ => packed[i >> 1] |= (idx as u8) << ((i & 1) << 2),
+            }
+        }
+        QuantizedValues { bits, codebook, packed, len: values.len(), max_err }
+    }
+
+    /// Stored values.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Codebook index of value `i` (lossless: exactly what `fit` packed).
+    #[inline(always)]
+    pub fn index(&self, i: usize) -> usize {
+        debug_assert!(i < self.len);
+        match self.bits {
+            8 => self.packed[i] as usize,
+            _ => ((self.packed[i >> 1] >> ((i & 1) << 2)) & 0xF) as usize,
+        }
+    }
+
+    /// All indices, unpacked (tests and re-encoders).
+    pub fn unpack_indices(&self) -> Vec<u16> {
+        (0..self.len).map(|i| self.index(i) as u16).collect()
+    }
+
+    /// Reconstructed f32 values (`codebook[index(i)]` per value) — what
+    /// every LUT kernel computes with, gathered lazily instead.
+    pub fn dequantize(&self) -> Vec<f32> {
+        (0..self.len).map(|i| self.codebook[self.index(i)]).collect()
+    }
+
+    /// Max absolute reconstruction error over the fitted values. 0.0
+    /// when the distinct nonzero values fit the codebook (lossless).
+    pub fn error_bound(&self) -> f32 {
+        self.max_err
+    }
+
+    /// On-disk bytes: packed indices **plus the codebook** (f32 entries)
+    /// plus one length byte for the codebook — the codebook is part of
+    /// the payload, not free metadata.
+    pub fn disk_bytes(&self) -> usize {
+        self.packed.len() + self.codebook.len() * 4 + 1
+    }
+
+    /// Sum of squared reconstruction errors (fit-quality accounting; the
+    /// uniform-seeding property test pins k-means <= uniform on this).
+    pub fn sse(&self, values: &[f32]) -> f64 {
+        assert_eq!(values.len(), self.len);
+        values
+            .iter()
+            .enumerate()
+            .map(|(i, &v)| {
+                let d = (v - self.codebook[self.index(i)]) as f64;
+                d * d
+            })
+            .sum()
+    }
+}
+
+/// Nearest center to `v` among ascending `centers` (ties to the lower
+/// index). Binary search + one neighbor comparison.
+#[inline]
+fn nearest(centers: &[f32], v: f32) -> usize {
+    debug_assert!(!centers.is_empty());
+    let p = centers.partition_point(|&c| c < v);
+    if p == 0 {
+        return 0;
+    }
+    if p == centers.len() {
+        return centers.len() - 1;
+    }
+    // centers[p-1] < v <= centers[p]; lower index wins exact ties
+    if (v - centers[p - 1]).abs() <= (centers[p] - v).abs() {
+        p - 1
+    } else {
+        p
+    }
+}
+
+/// Deterministic 1-D k-means over the nonzero values, seeded with the
+/// exact uniform symmetric grid `compress::quant` rounds to
+/// (`2^(bits-1)-1` levels per side at step `amax/n`), refined with
+/// [`FIT_ITERS`] Lloyd passes — each pass only lowers the squared
+/// reconstruction error, so the fit subsumes the uniform quantizer.
+/// Returns ascending, deduplicated, nonzero centers (empty for no data;
+/// the distinct values themselves when they fit the budget).
+fn fit_centers(nonzero: &[f32], bits: u8) -> Vec<f32> {
+    if nonzero.is_empty() {
+        return Vec::new();
+    }
+    let mut sorted = nonzero.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mut distinct = sorted.clone();
+    distinct.dedup();
+    let budget = (1usize << bits) - 1; // entry 0 of the codebook is the zero
+    if distinct.len() <= budget {
+        return distinct; // lossless: every distinct value is a center
+    }
+    // quant.rs seed: levels i * (amax / n), i in -n..=n without 0 —
+    // 2n <= budget centers
+    let n = (1i32 << (bits - 1)) - 1;
+    let amax = sorted.iter().fold(0.0f32, |m, v| m.max(v.abs())).max(1e-8);
+    let step = (amax / n as f32) as f64;
+    let centers_seed: Vec<f64> =
+        (-n..=n).filter(|&i| i != 0).map(|i| i as f64 * step).collect();
+    let mut centers = centers_seed;
+    // Lloyd on sorted data: clusters are contiguous ranges split at the
+    // midpoints between adjacent centers
+    let s64: Vec<f64> = sorted.iter().map(|&v| v as f64).collect();
+    let mut prefix = vec![0.0f64; s64.len() + 1];
+    for (i, &v) in s64.iter().enumerate() {
+        prefix[i + 1] = prefix[i] + v;
+    }
+    for _ in 0..FIT_ITERS {
+        let mut bounds = Vec::with_capacity(centers.len() + 1);
+        bounds.push(0usize);
+        for w in centers.windows(2) {
+            let mid = (w[0] + w[1]) / 2.0;
+            bounds.push(s64.partition_point(|&v| v <= mid));
+        }
+        bounds.push(s64.len());
+        let mut moved = false;
+        for (j, c) in centers.iter_mut().enumerate() {
+            let (a, b) = (bounds[j], bounds[j + 1]);
+            if a < b {
+                let mean = (prefix[b] - prefix[a]) / (b - a) as f64;
+                if mean != *c {
+                    moved = true;
+                }
+                *c = mean;
+            }
+        }
+        if !moved {
+            break;
+        }
+    }
+    let mut out: Vec<f32> = centers.iter().map(|&c| c as f32).collect();
+    // zero is reserved for the pruning support: a symmetric cluster can
+    // average to exactly 0.0 — snap it to its nearest actual value
+    for c in out.iter_mut() {
+        if *c == 0.0 {
+            let i = sorted.partition_point(|&v| v < 0.0);
+            *c = if i < sorted.len() && (i == 0 || sorted[i].abs() <= sorted[i - 1].abs()) {
+                sorted[i]
+            } else {
+                sorted[i - 1]
+            };
+        }
+    }
+    out.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    out.dedup();
+    out
+}
+
+/// CSR structure with a codebook-packed value store (see [`CsrMatrix`]
+/// for the layout contract).
+#[derive(Debug, Clone, PartialEq)]
+pub struct QCsr {
+    pub rows: usize,
+    pub cols: usize,
+    pub row_ptr: Vec<u32>,
+    pub col_idx: Vec<u32>,
+    pub values: QuantizedValues,
+}
+
+impl QCsr {
+    /// Quantize a CSR payload's values to a `bits`-bit codebook; the
+    /// structure arrays are copied unchanged.
+    pub fn from_csr(csr: &CsrMatrix, bits: u8) -> QCsr {
+        QCsr {
+            rows: csr.rows,
+            cols: csr.cols,
+            row_ptr: csr.row_ptr.clone(),
+            col_idx: csr.col_idx.clone(),
+            values: QuantizedValues::fit(&csr.values, bits),
+        }
+    }
+
+    /// Dequantize back to an f32 CSR matrix — the reference the LUT
+    /// kernel must match bit-for-bit.
+    pub fn to_csr(&self) -> CsrMatrix {
+        CsrMatrix {
+            rows: self.rows,
+            cols: self.cols,
+            row_ptr: self.row_ptr.clone(),
+            col_idx: self.col_idx.clone(),
+            values: self.values.dequantize(),
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// On-disk bytes: CSR structure at 16-bit column indices plus the
+    /// packed values **and codebook**.
+    pub fn bytes_on_disk_idx16(&self) -> usize {
+        self.row_ptr.len() * 4 + self.col_idx.len() * 2 + self.values.disk_bytes()
+    }
+}
+
+/// BSR structure with a codebook-packed value store. Padding zeros pack
+/// as index 0 and reconstruct to exactly 0.0, so fill accounting and the
+/// kernels' zero-skips are unaffected.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QBsr {
+    pub rows: usize,
+    pub cols: usize,
+    pub br: usize,
+    pub bc: usize,
+    pub row_ptr: Vec<u32>,
+    pub col_idx: Vec<u32>,
+    pub values: QuantizedValues,
+}
+
+impl QBsr {
+    pub fn from_bsr(bsr: &BsrMatrix, bits: u8) -> QBsr {
+        QBsr {
+            rows: bsr.rows,
+            cols: bsr.cols,
+            br: bsr.br,
+            bc: bsr.bc,
+            row_ptr: bsr.row_ptr.clone(),
+            col_idx: bsr.col_idx.clone(),
+            values: QuantizedValues::fit(&bsr.values, bits),
+        }
+    }
+
+    pub fn to_bsr(&self) -> BsrMatrix {
+        BsrMatrix::from_parts(
+            self.rows,
+            self.cols,
+            self.br,
+            self.bc,
+            self.row_ptr.clone(),
+            self.col_idx.clone(),
+            self.values.dequantize(),
+        )
+    }
+
+    pub fn block_rows(&self) -> usize {
+        self.row_ptr.len() - 1
+    }
+
+    pub fn bytes_on_disk_idx16(&self) -> usize {
+        self.row_ptr.len() * 4 + self.col_idx.len() * 2 + self.values.disk_bytes()
+    }
+}
+
+/// Pattern structure with a codebook-packed value store (see
+/// [`PatternMatrix`] for the layout contract). This is the friendliest
+/// pairing: per-kernel value runs are contiguous, so 4-bit packing never
+/// straddles a kernel on the canonical even-entry patterns.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QPattern {
+    pub rows: usize,
+    pub cols: usize,
+    pub kh: usize,
+    pub kw: usize,
+    pub cin: usize,
+    pub kernel_ptr: Vec<u32>,
+    pub col_idx: Vec<u32>,
+    pub pat_idx: Vec<u16>,
+    pub val_ptr: Vec<u32>,
+    pub pat_ptr: Vec<u32>,
+    pub pat_pos: Vec<u8>,
+    pub values: QuantizedValues,
+}
+
+impl QPattern {
+    pub fn from_pattern(pat: &PatternMatrix, bits: u8) -> QPattern {
+        QPattern {
+            rows: pat.rows,
+            cols: pat.cols,
+            kh: pat.kh,
+            kw: pat.kw,
+            cin: pat.cin,
+            kernel_ptr: pat.kernel_ptr.clone(),
+            col_idx: pat.col_idx.clone(),
+            pat_idx: pat.pat_idx.clone(),
+            val_ptr: pat.val_ptr.clone(),
+            pat_ptr: pat.pat_ptr.clone(),
+            pat_pos: pat.pat_pos.clone(),
+            values: QuantizedValues::fit(&pat.values, bits),
+        }
+    }
+
+    /// Dequantize back to an f32 pattern matrix. NOTE: quantization can
+    /// snap two distinct values to one codebook entry but never a
+    /// nonzero to zero (entry 0 is reserved for exact zeros), so the
+    /// reconstruction still passes `PatternMatrix::validate`.
+    pub fn to_pattern(&self) -> PatternMatrix {
+        PatternMatrix {
+            rows: self.rows,
+            cols: self.cols,
+            kh: self.kh,
+            kw: self.kw,
+            cin: self.cin,
+            kernel_ptr: self.kernel_ptr.clone(),
+            col_idx: self.col_idx.clone(),
+            pat_idx: self.pat_idx.clone(),
+            val_ptr: self.val_ptr.clone(),
+            pat_ptr: self.pat_ptr.clone(),
+            pat_pos: self.pat_pos.clone(),
+            values: self.values.dequantize(),
+        }
+    }
+
+    pub fn kernels(&self) -> usize {
+        self.col_idx.len()
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// On-disk bytes mirroring `PatternMatrix::bytes_on_disk_idx16`
+    /// (16-bit column indices, 1-byte pattern ids while the table stays
+    /// within 256 patterns, the shared table itself) with the value
+    /// payload replaced by packed indices **plus the codebook**.
+    pub fn bytes_on_disk_idx16(&self) -> usize {
+        let id_bytes = if self.pat_ptr.len() - 1 <= 256 { 1 } else { 2 };
+        self.kernel_ptr.len() * 4
+            + self.col_idx.len() * 2
+            + self.pat_idx.len() * id_bytes
+            + self.pat_pos.len()
+            + self.pat_ptr.len() * 2
+            + self.values.disk_bytes()
+    }
+}
+
+/// The quantized payload the executor dispatches on — one variant per
+/// sparse format (dense layers never quantize: the blocked GEMM has no
+/// LUT path and shallow pruning is not where storage hurts).
+#[derive(Debug, Clone, PartialEq)]
+pub enum QSparseMatrix {
+    Csr(QCsr),
+    Bsr(QBsr),
+    Pattern(QPattern),
+}
+
+impl QSparseMatrix {
+    pub fn rows(&self) -> usize {
+        match self {
+            QSparseMatrix::Csr(q) => q.rows,
+            QSparseMatrix::Bsr(q) => q.rows,
+            QSparseMatrix::Pattern(q) => q.rows,
+        }
+    }
+
+    pub fn cols(&self) -> usize {
+        match self {
+            QSparseMatrix::Csr(q) => q.cols,
+            QSparseMatrix::Bsr(q) => q.cols,
+            QSparseMatrix::Pattern(q) => q.cols,
+        }
+    }
+
+    /// The value store behind this payload.
+    pub fn values(&self) -> &QuantizedValues {
+        match self {
+            QSparseMatrix::Csr(q) => &q.values,
+            QSparseMatrix::Bsr(q) => &q.values,
+            QSparseMatrix::Pattern(q) => &q.values,
+        }
+    }
+
+    pub fn bytes_on_disk_idx16(&self) -> usize {
+        match self {
+            QSparseMatrix::Csr(q) => q.bytes_on_disk_idx16(),
+            QSparseMatrix::Bsr(q) => q.bytes_on_disk_idx16(),
+            QSparseMatrix::Pattern(q) => q.bytes_on_disk_idx16(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::pattern::prune_patterns;
+    use crate::prop_assert;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn random_sparse(rng: &mut Rng, len: usize, density: f64) -> Vec<f32> {
+        let mut dense = vec![0.0f32; len];
+        for v in dense.iter_mut() {
+            if rng.f64() < density {
+                *v = rng.normal() as f32;
+            }
+        }
+        dense
+    }
+
+    #[test]
+    fn value_bits_roundtrip() {
+        for vb in [ValueBits::F32, ValueBits::Q8, ValueBits::Q4] {
+            assert_eq!(ValueBits::from_bits(vb.bits()), Some(vb));
+        }
+        assert_eq!(ValueBits::from_bits(16), None);
+        assert!(ValueBits::Q4.quantized());
+        assert!(!ValueBits::F32.quantized());
+    }
+
+    /// The index path is lossless: pack -> unpack reproduces exactly the
+    /// index every value was assigned, for both widths, any length
+    /// (including odd lengths straddling 4-bit byte boundaries).
+    #[test]
+    fn prop_pack_unpack_lossless() {
+        prop::check("qsparse pack/unpack", |rng: &mut Rng| {
+            let n = rng.range(0, 600);
+            let bits = [4u8, 8][rng.below(2)];
+            let vals = random_sparse(rng, n, rng.f64());
+            let q = QuantizedValues::fit(&vals, bits);
+            prop_assert!(q.len() == n, "len");
+            prop_assert!(
+                q.packed.len() == (n * bits as usize).div_ceil(8),
+                "packed bytes {} for {} x {}",
+                q.packed.len(),
+                n,
+                bits
+            );
+            let idx = q.unpack_indices();
+            // re-derive each index independently and compare
+            for (i, &ix) in idx.iter().enumerate() {
+                prop_assert!(q.index(i) == ix as usize, "index {i}");
+                prop_assert!((ix as usize) < q.codebook.len(), "index {i} out of range");
+            }
+            // zeros (and only zeros) land on the reserved entry 0
+            for (i, &v) in vals.iter().enumerate() {
+                if v == 0.0 {
+                    prop_assert!(q.index(i) == 0, "zero must map to entry 0");
+                } else {
+                    prop_assert!(q.index(i) != 0, "nonzero mapped to zero entry");
+                    prop_assert!(q.codebook[q.index(i)] != 0.0, "nonzero reconstructs to 0");
+                }
+            }
+            // dequantize matches codebook gather and the error bound
+            let back = q.dequantize();
+            for (a, b) in vals.iter().zip(&back) {
+                prop_assert!(
+                    (a - b).abs() <= q.error_bound() + 1e-7,
+                    "err {} > bound {}",
+                    (a - b).abs(),
+                    q.error_bound()
+                );
+            }
+            Ok(())
+        });
+    }
+
+    /// Few distinct values fit the codebook exactly: reconstruction is
+    /// lossless and the bound is zero.
+    #[test]
+    fn lossless_when_distinct_values_fit() {
+        let vals = [0.0f32, 1.5, -2.0, 1.5, 0.0, -2.0, 3.25];
+        for bits in [4u8, 8] {
+            let q = QuantizedValues::fit(&vals, bits);
+            assert_eq!(q.dequantize(), vals);
+            assert_eq!(q.error_bound(), 0.0);
+        }
+    }
+
+    /// The k-means fit subsumes the uniform quantizer under the same
+    /// support constraint: seeded from `compress::quant`'s symmetric
+    /// grid, its SSE is never worse than assigning each nonzero value to
+    /// its nearest NONZERO uniform level. (The unconstrained
+    /// `QuantizedTensor` may snap small nonzeros to level 0 — cheaper in
+    /// SSE but it silently changes the support, which sparse payloads
+    /// must never do; that is exactly the constraint this fit adds.)
+    #[test]
+    fn prop_kmeans_no_worse_than_support_preserving_uniform() {
+        prop::check_n("kmeans vs uniform", 40, |rng: &mut Rng| {
+            let n = rng.range(20, 400);
+            let bits = [4u8, 8][rng.below(2)];
+            let vals = random_sparse(rng, n, 0.7);
+            let q = QuantizedValues::fit(&vals, bits);
+            // support-preserving uniform baseline: nearest nonzero level
+            let amax = vals.iter().fold(0.0f32, |m, v| m.max(v.abs())).max(1e-8);
+            let levels = (1i32 << (bits - 1)) - 1;
+            let step = amax / levels as f32;
+            let uni_sse: f64 = vals
+                .iter()
+                .filter(|v| **v != 0.0)
+                .map(|&v| {
+                    let mut lvl = ((v / step).round() as i32).clamp(-levels, levels);
+                    if lvl == 0 {
+                        lvl = if v > 0.0 { 1 } else { -1 };
+                    }
+                    let d = (v - lvl as f32 * step) as f64;
+                    d * d
+                })
+                .sum();
+            let sse = q.sse(&vals);
+            prop_assert!(
+                sse <= uni_sse * (1.0 + 1e-4) + 1e-6,
+                "kmeans sse {} worse than support-preserving uniform {}",
+                sse,
+                uni_sse
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn codebook_size_respects_bits() {
+        let mut rng = Rng::new(5);
+        let vals = random_sparse(&mut rng, 4000, 0.9);
+        let q4 = QuantizedValues::fit(&vals, 4);
+        assert!(q4.codebook.len() <= 16, "{}", q4.codebook.len());
+        assert!(q4.codebook.len() > 8, "fit should use the budget");
+        let q8 = QuantizedValues::fit(&vals, 8);
+        assert!(q8.codebook.len() <= 256);
+        assert!(
+            q8.error_bound() <= q4.error_bound(),
+            "more levels cannot hurt: {} vs {}",
+            q8.error_bound(),
+            q4.error_bound()
+        );
+    }
+
+    #[test]
+    fn empty_and_all_zero_values() {
+        let q = QuantizedValues::fit(&[], 4);
+        assert_eq!(q.len(), 0);
+        assert_eq!(q.codebook, vec![0.0]);
+        assert!(q.dequantize().is_empty());
+        let qz = QuantizedValues::fit(&[0.0; 7], 8);
+        assert_eq!(qz.dequantize(), vec![0.0; 7]);
+        assert_eq!(qz.error_bound(), 0.0);
+    }
+
+    /// Structure arrays survive quantization untouched for all three
+    /// formats; dequantization reproduces a valid matrix whose support
+    /// is exactly the original's.
+    #[test]
+    fn prop_wrappers_preserve_structure() {
+        prop::check_n("qsparse wrappers", 40, |rng: &mut Rng| {
+            let kh = [2usize, 3][rng.below(2)];
+            let kw = [2usize, 3][rng.below(2)];
+            let cin = rng.range(1, 6);
+            let cols = rng.range(1, 12);
+            let k = kh * kw * cin;
+            let bits = [4u8, 8][rng.below(2)];
+            let dense = random_sparse(rng, k * cols, rng.f64());
+
+            let csr = CsrMatrix::from_dense(&dense, k, cols);
+            let qcsr = QCsr::from_csr(&csr, bits);
+            let back = qcsr.to_csr();
+            back.validate()?;
+            prop_assert!(back.row_ptr == csr.row_ptr, "csr row_ptr");
+            prop_assert!(back.col_idx == csr.col_idx, "csr col_idx");
+            prop_assert!(qcsr.nnz() == csr.nnz(), "csr nnz");
+
+            let bsr = BsrMatrix::from_dense(&dense, k, cols, 4, 4);
+            let qbsr = QBsr::from_bsr(&bsr, bits);
+            let bback = qbsr.to_bsr();
+            bback.validate()?;
+            prop_assert!(bback.row_ptr == bsr.row_ptr, "bsr row_ptr");
+            prop_assert!(bback.nnz() == bsr.nnz(), "bsr nnz survives padding-zero packing");
+
+            let pat = PatternMatrix::from_dense(&dense, kh, kw, cin, cols);
+            let qpat = QPattern::from_pattern(&pat, bits);
+            let pback = qpat.to_pattern();
+            pback.validate()?;
+            prop_assert!(pback.pat_idx == pat.pat_idx, "pattern ids");
+            prop_assert!(pback.val_ptr == pat.val_ptr, "pattern val_ptr");
+            Ok(())
+        });
+    }
+
+    /// The §3 compounding claim at the payload level: a q4 pattern
+    /// payload, codebook charged, lands under 40% of the f32 pattern
+    /// payload on a pattern-pruned layer.
+    #[test]
+    fn q4_pattern_payload_under_40_percent_of_f32() {
+        let (kh, kw, cin, cols) = (3usize, 3usize, 16usize, 64usize);
+        let mut rng = Rng::new(7);
+        let mut mat = vec![0.0f32; kh * kw * cin * cols];
+        rng.fill_normal(&mut mat, 0.5);
+        prune_patterns(&mut mat, kh, kw, cin, cols, 0.8, 4, 8);
+        let pat = PatternMatrix::from_dense(&mat, kh, kw, cin, cols);
+        let qpat = QPattern::from_pattern(&pat, 4);
+        let f32_bytes = pat.bytes_on_disk_idx16(32);
+        let q4_bytes = qpat.bytes_on_disk_idx16();
+        assert!(
+            (q4_bytes as f64) < 0.4 * f32_bytes as f64,
+            "q4 {} vs f32 {} ({:.1}%)",
+            q4_bytes,
+            f32_bytes,
+            100.0 * q4_bytes as f64 / f32_bytes as f64
+        );
+    }
+
+    #[test]
+    fn disk_bytes_charge_the_codebook() {
+        let vals = vec![1.0f32; 100];
+        let q = QuantizedValues::fit(&vals, 4);
+        // codebook [0.0, 1.0]: 2 entries * 4 bytes + 1 length byte;
+        // packed: 100 * 4 bits = 50 bytes
+        assert_eq!(q.codebook.len(), 2);
+        assert_eq!(q.disk_bytes(), 50 + 8 + 1);
+    }
+}

@@ -6,6 +6,7 @@ use super::bsr::BsrMatrix;
 use super::csr::CsrMatrix;
 use super::pattern::PatternMatrix;
 use super::profile::SparsityProfile;
+use super::qsparse::{QBsr, QCsr, QPattern, ValueBits};
 use crate::ir::Graph;
 
 #[derive(Debug, Clone)]
@@ -94,6 +95,47 @@ pub fn format_bytes(csr: &CsrMatrix, value_bits: usize, hwio: [usize; 4]) -> Vec
         out.push(FormatBytes {
             format: "pattern".to_string(),
             bytes_idx16: p.bytes_on_disk_idx16(value_bits),
+            fill_ratio: 1.0,
+        });
+    }
+    out
+}
+
+/// [`format_bytes`] with the value-precision axis: f32 delegates to the
+/// plain rows; q8/q4 rows (`csr+q8`, `pattern+q4`, ...) account the
+/// *actual* quantized payloads — structure at 16-bit indices, packed
+/// codebook indices, **and the codebook itself** (fitted on the
+/// matrix's real values, so the byte counts are what a serialized
+/// artifact would ship, not an estimate). Fill ratios are unchanged:
+/// quantization packs the same stored values.
+pub fn format_bytes_valued(
+    csr: &CsrMatrix,
+    hwio: [usize; 4],
+    value_bits: ValueBits,
+) -> Vec<FormatBytes> {
+    if !value_bits.quantized() {
+        return format_bytes(csr, 32, hwio);
+    }
+    let bits = value_bits.bits() as u8;
+    let suffix = value_bits.label();
+    let mut out = vec![FormatBytes {
+        format: format!("csr+{suffix}"),
+        bytes_idx16: QCsr::from_csr(csr, bits).bytes_on_disk_idx16(),
+        fill_ratio: 1.0,
+    }];
+    for (br, bc) in [(4usize, 1usize), (4, 4)] {
+        let b = BsrMatrix::from_csr(csr, br, bc);
+        out.push(FormatBytes {
+            format: format!("bsr{br}x{bc}+{suffix}"),
+            bytes_idx16: QBsr::from_bsr(&b, bits).bytes_on_disk_idx16(),
+            fill_ratio: b.fill_ratio(),
+        });
+    }
+    if crate::planner::pattern_eligible(csr, hwio) {
+        let p = PatternMatrix::from_csr(csr, hwio[0], hwio[1], hwio[2]);
+        out.push(FormatBytes {
+            format: format!("pattern+{suffix}"),
+            bytes_idx16: QPattern::from_pattern(&p, bits).bytes_on_disk_idx16(),
             fill_ratio: 1.0,
         });
     }
@@ -213,6 +255,58 @@ mod tests {
         // Pattern: 3*4 kernel_ptr + 3*2 col idx + 3*1 pattern ids
         //          + (8*1 positions + 3*2 extents) table + 12*4 values
         assert_eq!(by("pattern"), 12 + 6 + 3 + 8 + 6 + 48);
+    }
+
+    /// Pins the exact quantized-row byte formulas on the same
+    /// hand-computable matrix as `format_bytes_pinned_counts`: packed
+    /// indices at the declared width plus the codebook (2 f32 entries +
+    /// 1 length byte here — every value is 1.0, so the fit is the
+    /// smallest possible lossless codebook).
+    #[test]
+    fn format_bytes_quantized_pinned_counts() {
+        let (kh, kw, cin, cout) = (3usize, 3usize, 2usize, 4usize);
+        let mut dense = vec![0.0f32; kh * kw * cin * cout];
+        let mut put = |pos: usize, ci: usize, co: usize| {
+            dense[(pos * cin + ci) * cout + co] = 1.0;
+        };
+        for pos in [0usize, 2, 4, 6] {
+            put(pos, 0, 0);
+            put(pos, 1, 1);
+        }
+        for pos in [1usize, 3, 5, 7] {
+            put(pos, 1, 3);
+        }
+        let csr = CsrMatrix::from_dense(&dense, kh * kw * cin, cout);
+        assert_eq!(csr.nnz(), 12);
+        let hwio = [kh, kw, cin, cout];
+        // f32 delegates to the plain rows (labels unchanged)
+        let f32_rows = format_bytes_valued(&csr, hwio, ValueBits::F32);
+        assert_eq!(f32_rows[0].format, "csr");
+        assert_eq!(f32_rows[0].bytes_idx16, 76 + 24 + 48);
+
+        let codebook = 2 * 4 + 1; // [0.0, 1.0] + length byte
+        let q4 = format_bytes_valued(&csr, hwio, ValueBits::Q4);
+        let by4 = |f: &str| q4.iter().find(|s| s.format == f).unwrap().bytes_idx16;
+        // CSR: 19*4 row_ptr + 12*2 idx + ceil(12*4/8) packed + codebook
+        assert_eq!(by4("csr+q4"), 76 + 24 + 6 + codebook);
+        // BSR 4x1: 12 blocks -> 6*4 + 12*2 + ceil(48*4/8) + codebook
+        assert_eq!(by4("bsr4x1+q4"), 24 + 24 + 24 + codebook);
+        // BSR 4x4: 4 blocks -> 6*4 + 4*2 + ceil(64*4/8) + codebook
+        assert_eq!(by4("bsr4x4+q4"), 24 + 8 + 32 + codebook);
+        // Pattern: structure as the f32 row + ceil(12*4/8) + codebook
+        assert_eq!(by4("pattern+q4"), 12 + 6 + 3 + 8 + 6 + 6 + codebook);
+
+        let q8 = format_bytes_valued(&csr, hwio, ValueBits::Q8);
+        let by8 = |f: &str| q8.iter().find(|s| s.format == f).unwrap().bytes_idx16;
+        assert_eq!(by8("csr+q8"), 76 + 24 + 12 + codebook);
+        assert_eq!(by8("pattern+q8"), 12 + 6 + 3 + 8 + 6 + 12 + codebook);
+        // fill accounting is unchanged by quantization
+        let b44_f32 = format_bytes(&csr, 32, hwio)
+            .into_iter()
+            .find(|s| s.format == "bsr4x4")
+            .unwrap();
+        let b44_q4 = q4.iter().find(|s| s.format == "bsr4x4+q4").unwrap();
+        assert_eq!(b44_f32.fill_ratio, b44_q4.fill_ratio);
     }
 
     #[test]

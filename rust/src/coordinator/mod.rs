@@ -62,6 +62,7 @@ impl BatcherConfig {
             max_wait_us: self.max_wait_us,
             fallback: self.policy,
             planned: true,
+            ..QueueConfig::default()
         }
     }
 }

@@ -12,6 +12,7 @@ use crate::compress::bsr::{self, BsrMatrix};
 use crate::compress::csr::CsrMatrix;
 use crate::compress::pattern::{self, PatternMatrix};
 use crate::compress::profile::{PruneStructure, SparsityProfile};
+use crate::compress::qsparse::{QBsr, QCsr, QPattern, QSparseMatrix};
 use crate::compress::reorder::{self, Permutation};
 use crate::error::CadnnError;
 use crate::ir::ops::{ActKind, Op, PoolKind};
@@ -19,7 +20,7 @@ use crate::ir::{Graph, NodeId};
 use crate::kernels::conv as K;
 use crate::kernels::{Epilogue, Tensor, PARALLEL_M_CUTOVER};
 use crate::passes::layout::TileConfig;
-use crate::planner::{self, ExecPlan, FormatPolicy, SparseFormat};
+use crate::planner::{self, ExecPlan, FormatPolicy, SparseFormat, ValuePolicy};
 use crate::tuner::TunerCache;
 use crate::util::rng::Rng;
 use std::collections::BTreeMap;
@@ -49,6 +50,16 @@ enum NodeWeights {
     /// PatDNN pattern weights (per-kernel pattern id + shared table) for
     /// pattern-pruned spatial conv layers the planner moved off CSR.
     PatternSparse { pat: PatternMatrix, epi: Epilogue, cutover: usize },
+    /// Codebook-packed sparse weights (any sparse format) for layers the
+    /// planner gave a quantized value store; executed through the LUT
+    /// kernels (`kernels::lut`). `perm` carries the BSR reorder contract
+    /// exactly as `BlockSparse` does.
+    QuantSparse {
+        mat: QSparseMatrix,
+        perm: Option<Permutation>,
+        epi: Epilogue,
+        cutover: usize,
+    },
     /// Depthwise (kh, kw, c) weights.
     Dw { w: Tensor, epi: Epilogue },
     /// Standalone BatchNorm parameters (unfused personalities).
@@ -273,17 +284,8 @@ fn prune_matrix_structured(
                 if sparsity <= 0.0 || mat.is_empty() {
                     return;
                 }
-                let lib = cache.pattern_library(hwio[0], hwio[1], hwio[2], entries, || {
-                    pattern::select_pattern_library(
-                        mat,
-                        hwio[0],
-                        hwio[1],
-                        hwio[2],
-                        hwio[3],
-                        entries,
-                        pattern::DEFAULT_LIBRARY,
-                    )
-                });
+                let lib =
+                    cache.pattern_library(hwio[0], hwio[1], hwio[2], entries, hwio[3], mat);
                 pattern::prune_with_library(
                     mat, hwio[0], hwio[1], hwio[2], hwio[3], sparsity, entries, &lib,
                 );
@@ -321,7 +323,9 @@ impl ModelInstance {
     /// [`ModelInstance::build`] with an explicit sparse-format policy.
     /// When a tuner is supplied, format choices are refined by the
     /// planner's measured mode (the same micro-benchmark loop as tile
-    /// tuning); otherwise the cost-model heuristic decides.
+    /// tuning); otherwise the cost-model heuristic decides. Value
+    /// precision follows the profile ([`ValuePolicy::Auto`]); use
+    /// [`ModelInstance::build_planned_cached`] to pin it.
     pub fn build_planned(
         model: &Graph,
         personality: Personality,
@@ -330,17 +334,28 @@ impl ModelInstance {
         cache_bytes: usize,
         policy: FormatPolicy,
     ) -> Result<ModelInstance, CadnnError> {
-        Self::build_planned_cached(model, personality, profile, tuner, cache_bytes, policy, None)
+        Self::build_planned_cached(
+            model,
+            personality,
+            profile,
+            tuner,
+            cache_bytes,
+            policy,
+            ValuePolicy::Auto,
+            None,
+        )
     }
 
     /// [`ModelInstance::build_planned`] sharing a [`planner::PlanCache`]
-    /// across calls. `EngineBuilder` threads one cache through every
-    /// batch variant it builds, so per-layer column clustering,
-    /// densification, and pattern-library selection run once per pruned
-    /// layer instead of once per batch variant — and within one build
-    /// the payload rewrite reuses the exact `Permutation` the planner's
-    /// estimate computed (nothing cache-derived enters the serialized
-    /// [`ExecPlan`]).
+    /// across calls, with an explicit value-precision policy
+    /// (`EngineBuilder::value_bits`). `EngineBuilder` threads one cache
+    /// through every batch variant it builds, so per-layer column
+    /// clustering, densification, and pattern-library selection run once
+    /// per pruned layer instead of once per batch variant — and within
+    /// one build the payload rewrite reuses the exact `Permutation` the
+    /// planner's estimate computed (nothing cache-derived enters the
+    /// serialized [`ExecPlan`]).
+    #[allow(clippy::too_many_arguments)]
     pub fn build_planned_cached(
         model: &Graph,
         personality: Personality,
@@ -348,6 +363,7 @@ impl ModelInstance {
         tuner: Option<&mut TunerCache>,
         cache_bytes: usize,
         policy: FormatPolicy,
+        value_policy: ValuePolicy,
         plan_cache: Option<&mut planner::PlanCache>,
     ) -> Result<ModelInstance, CadnnError> {
         let mut local_cache = planner::PlanCache::default();
@@ -501,10 +517,15 @@ impl ModelInstance {
             };
             let node = graph.node(*id);
             let m = node.shape.numel() / csr.cols.max(1);
+            // the exported codebook width (if the compress report
+            // declared one) is what ValuePolicy::Auto resolves against
+            let declared = profile.and_then(|p| p.quant_bits(&node.name));
             let arts = build_cache.layer(&node.name, csr);
             let mut lp = if measured_formats {
-                planner::plan_layer_measured(
+                planner::plan_layer_measured_valued(
                     policy,
+                    value_policy,
+                    declared,
                     csr,
                     m,
                     *hwio,
@@ -512,15 +533,26 @@ impl ModelInstance {
                     arts,
                 )
             } else {
-                planner::plan_layer(policy, csr, m, *hwio, arts)
+                planner::plan_layer_valued(policy, value_policy, declared, csr, m, *hwio, arts)
             };
             // one image contributes m/batch GEMM rows to this layer —
             // with cost_per_row this makes ExecPlan::cost_at batch-aware
             lp.rows_per_image = m / batch;
             plan.layers.insert(node.name.clone(), lp.clone());
+            let qbits = lp.value_bits.bits() as u8;
             match lp.format {
                 SparseFormat::Csr => {
-                    *cutover = lp.parallel_cutover;
+                    if lp.value_bits.quantized() {
+                        let new_w = NodeWeights::QuantSparse {
+                            mat: QSparseMatrix::Csr(QCsr::from_csr(csr, qbits)),
+                            perm: None,
+                            epi: epi.clone(),
+                            cutover: lp.parallel_cutover,
+                        };
+                        *w = new_w;
+                    } else {
+                        *cutover = lp.parallel_cutover;
+                    }
                 }
                 SparseFormat::Dense => {
                     let new_w = NodeWeights::Dense {
@@ -531,33 +563,52 @@ impl ModelInstance {
                     *w = new_w;
                 }
                 SparseFormat::Pattern => {
-                    let new_w = NodeWeights::PatternSparse {
-                        pat: PatternMatrix::from_csr(csr, hwio[0], hwio[1], hwio[2]),
-                        epi: epi.clone(),
-                        cutover: lp.parallel_cutover,
+                    let pat = PatternMatrix::from_csr(csr, hwio[0], hwio[1], hwio[2]);
+                    let new_w = if lp.value_bits.quantized() {
+                        NodeWeights::QuantSparse {
+                            mat: QSparseMatrix::Pattern(QPattern::from_pattern(&pat, qbits)),
+                            perm: None,
+                            epi: epi.clone(),
+                            cutover: lp.parallel_cutover,
+                        }
+                    } else {
+                        NodeWeights::PatternSparse {
+                            pat,
+                            epi: epi.clone(),
+                            cutover: lp.parallel_cutover,
+                        }
                     };
                     *w = new_w;
                 }
                 SparseFormat::Bsr { br, bc } => {
                     let (kk, nn) = (csr.rows, csr.cols);
                     let dense = arts.dense(csr);
-                    let new_w = if lp.reorder {
+                    let (bsr_mat, perm, epi2) = if lp.reorder {
                         // the cached permutation IS the one the planner's
                         // estimate used, so plan and payload agree and the
                         // clustering runs once per layer
                         let perm = arts.permutation(csr, br).clone();
                         let permuted = reorder::permute_cols(&dense, kk, nn, &perm);
-                        NodeWeights::BlockSparse {
-                            bsr: BsrMatrix::from_dense(&permuted, kk, nn, br, bc),
-                            epi: epi.permute_channels(&perm.perm),
-                            perm: Some(perm),
+                        (
+                            BsrMatrix::from_dense(&permuted, kk, nn, br, bc),
+                            Some(perm.clone()),
+                            epi.permute_channels(&perm.perm),
+                        )
+                    } else {
+                        (BsrMatrix::from_dense(&dense, kk, nn, br, bc), None, epi.clone())
+                    };
+                    let new_w = if lp.value_bits.quantized() {
+                        NodeWeights::QuantSparse {
+                            mat: QSparseMatrix::Bsr(QBsr::from_bsr(&bsr_mat, qbits)),
+                            perm,
+                            epi: epi2,
                             cutover: lp.parallel_cutover,
                         }
                     } else {
                         NodeWeights::BlockSparse {
-                            bsr: BsrMatrix::from_dense(&dense, kk, nn, br, bc),
-                            epi: epi.clone(),
-                            perm: None,
+                            bsr: bsr_mat,
+                            perm,
+                            epi: epi2,
                             cutover: lp.parallel_cutover,
                         }
                     };
@@ -770,6 +821,16 @@ impl ModelInstance {
                 Some(NodeWeights::PatternSparse { pat, epi, cutover }) => {
                     K::conv2d_pattern(x, pat, *kh, *kw, *stride, *padh, *padw, epi, *cutover)
                 }
+                Some(NodeWeights::QuantSparse { mat, perm, epi, cutover }) => {
+                    let mut out =
+                        K::conv2d_qsparse(x, mat, *kh, *kw, *stride, *padh, *padw, epi, *cutover);
+                    if let Some(p) = perm {
+                        let rows = out.numel() / out.c();
+                        let ch = out.c();
+                        reorder::unpermute_cols_inplace(&mut out.data, rows, ch, p);
+                    }
+                    out
+                }
                 _ => return Err(missing(&n.name)),
             },
             Op::Gemm { k, n: nn, out_shape, .. } => {
@@ -799,6 +860,14 @@ impl ModelInstance {
                         crate::kernels::pattern::pattern_gemm_parallel_cutover(
                             &x.data, pat, &mut out.data, m, epi, *cutover,
                         );
+                    }
+                    Some(NodeWeights::QuantSparse { mat, perm, epi, cutover }) => {
+                        crate::kernels::lut::qsparse_gemm_parallel_cutover(
+                            &x.data, mat, &mut out.data, m, epi, *cutover,
+                        );
+                        if let Some(p) = perm {
+                            reorder::unpermute_cols_inplace(&mut out.data, m, *nn, p);
+                        }
                     }
                     _ => return Err(missing(&n.name)),
                 }
@@ -1115,6 +1184,87 @@ mod tests {
         assert!(out_a.max_abs_diff(&out_c) < 1e-3, "{}", out_a.max_abs_diff(&out_c));
     }
 
+    /// The quantized-payload acceptance at the instance level: a
+    /// pattern-pruned profile with an exported codebook width makes Auto
+    /// planning choose a quantized pattern payload; the build rewrites
+    /// the weights to `QuantSparse`; execution runs the LUT kernel and
+    /// stays within the fit's propagated error bound of the f32 path.
+    #[test]
+    fn quantized_pattern_profile_builds_and_executes_lut_payload() {
+        use crate::compress::qsparse::ValueBits;
+        use crate::ir::Shape;
+        let mut g = Graph::new("miniquant", Shape::nhwc(1, 8, 8, 8));
+        let c1 = g.add("c1", Op::conv(3, 3, 8, 32, 1, 1), vec![0]);
+        let b1 = g.add("c1_bn", Op::BatchNorm { c: 32 }, vec![c1]);
+        g.add("c1_relu", Op::Activation { kind: ActKind::Relu }, vec![b1]);
+        g.validate().unwrap();
+        let x = input_for(&g, 19);
+
+        let profile = SparsityProfile::uniform_structured(
+            &g,
+            0.8,
+            PruneStructure::Pattern { entries: 4 },
+        );
+        let build = |p: &SparsityProfile, vp: ValuePolicy| {
+            ModelInstance::build_planned_cached(
+                &g,
+                Personality::CadnnSparse,
+                Some(p),
+                None,
+                1 << 20,
+                FormatPolicy::Auto,
+                vp,
+                None,
+            )
+            .unwrap()
+        };
+        // without a declared codebook, Auto stays f32
+        let f32_inst = build(&profile, ValuePolicy::Auto);
+        let lp = f32_inst.plan.get("c1").unwrap();
+        assert_eq!(lp.format, SparseFormat::Pattern);
+        assert_eq!(lp.value_bits, ValueBits::F32);
+
+        // with the exported codebook, Auto selects the quantized payload
+        let qprofile = profile.clone().with_uniform_quant(4);
+        let q_inst = build(&qprofile, ValuePolicy::Auto);
+        let qlp = q_inst.plan.get("c1").unwrap();
+        assert_eq!(qlp.format, SparseFormat::Pattern);
+        assert_eq!(qlp.value_bits, ValueBits::Q4);
+        assert!(
+            qlp.cost_per_row > lp.cost_per_row,
+            "the plan must price the LUT gather: {} vs {}",
+            qlp.cost_per_row,
+            lp.cost_per_row
+        );
+        let Some(NodeWeights::QuantSparse { mat, .. }) = q_inst.weights.get(&1) else {
+            panic!("payload must be rewritten to the quantized encoding");
+        };
+        let QSparseMatrix::Pattern(qpat) = mat else {
+            panic!("pattern plan must carry a pattern payload, got {mat:?}");
+        };
+        let eb = qpat.values.error_bound() as f64;
+
+        // both instances prune identically (same deterministic weights +
+        // profile), so |Δweight| <= eb elementwise with equal support:
+        // each output differs by at most eb * sum|activation| per column
+        // <= eb * max|x| * K, scaled by the BN epilogue's max |scale|
+        let out_f = f32_inst.execute(&x).unwrap();
+        let out_q = q_inst.execute(&x).unwrap();
+        let k = (3 * 3 * 8) as f64;
+        let amax = x.data.iter().fold(0.0f32, |m, v| m.max(v.abs())) as f64;
+        let scale_max = 1.5; // gen_bn scales are 0.5 + U[0,1)
+        let bound = (eb * amax * k * scale_max).max(1e-6) + 1e-4;
+        let diff = out_f.max_abs_diff(&out_q);
+        assert!(diff as f64 <= bound, "diff {diff} exceeds propagated bound {bound}");
+        assert!(diff > 0.0, "q4 on rich values must actually differ from f32");
+
+        // pinning F32 on the quantized profile restores the f32 payload
+        let pinned = build(&qprofile, ValuePolicy::F32);
+        assert_eq!(pinned.plan.get("c1").unwrap().value_bits, ValueBits::F32);
+        assert!(matches!(pinned.weights.get(&1), Some(NodeWeights::PatternSparse { .. })));
+        assert_eq!(pinned.execute(&x).unwrap().data, out_f.data);
+    }
+
     /// One `PlanCache` across batch variants: the cached build produces
     /// the same plan, weights, and outputs as the uncached build, and
     /// per-variant plan costs scale with the batch while the per-image
@@ -1133,6 +1283,7 @@ mod tests {
                 None,
                 1 << 20,
                 FormatPolicy::Auto,
+                ValuePolicy::Auto,
                 c,
             )
             .unwrap()

@@ -9,12 +9,14 @@
 
 use super::bsr::bsr_gemm_parallel_cutover;
 use super::gemm::gemm_parallel;
+use super::lut::qsparse_gemm_parallel_cutover;
 use super::pattern::pattern_gemm_parallel_cutover;
 use super::sparse::csr_gemm_parallel_cutover;
 use super::{Epilogue, Tensor};
 use crate::compress::bsr::BsrMatrix;
 use crate::compress::csr::CsrMatrix;
 use crate::compress::pattern::PatternMatrix;
+use crate::compress::qsparse::QSparseMatrix;
 use crate::passes::layout::TileConfig;
 
 /// Direct NHWC convolution, weights HWIO (kh, kw, cin, cout), groups=1.
@@ -222,6 +224,36 @@ pub fn conv2d_pattern(
     let m = x.n() * ho * wo;
     let mut out = Tensor::zeros(&[x.n(), ho, wo, cout]);
     pattern_gemm_parallel_cutover(&patches.data, w, &mut out.data, m, epilogue, cutover);
+    out
+}
+
+/// Quantized-payload fused conv: codebook-packed weights over the same
+/// (k, cout) view, executed through the matching LUT micro-kernel
+/// ([`crate::kernels::lut`]) — no dequantized weight buffer exists at
+/// any point.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_qsparse(
+    x: &Tensor,
+    w: &QSparseMatrix,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    padh: usize,
+    padw: usize,
+    epilogue: &Epilogue,
+    cutover: usize,
+) -> Tensor {
+    let cout = w.cols();
+    if kh == 1 && kw == 1 && stride == 1 && padh == 0 && padw == 0 {
+        let m = x.n() * x.h() * x.w();
+        let mut out = Tensor::zeros(&[x.n(), x.h(), x.w(), cout]);
+        qsparse_gemm_parallel_cutover(&x.data, w, &mut out.data, m, epilogue, cutover);
+        return out;
+    }
+    let (patches, ho, wo) = im2col(x, kh, kw, stride, padh, padw);
+    let m = x.n() * ho * wo;
+    let mut out = Tensor::zeros(&[x.n(), ho, wo, cout]);
+    qsparse_gemm_parallel_cutover(&patches.data, w, &mut out.data, m, epilogue, cutover);
     out
 }
 

@@ -1,0 +1,681 @@
+//! LUT micro-kernels: activations (dense, M x K) times codebook-packed
+//! sparse weights ([`crate::compress::qsparse`]) — quantized execution
+//! without an intermediate dense (or dequantized) buffer.
+//!
+//! Each kernel is a literal mirror of its f32 counterpart
+//! (`kernels::sparse` / `kernels::bsr` / `kernels::pattern`): the loop
+//! structure, skip conditions, and accumulation order are identical, and
+//! the only change is where a weight value comes from — `codebook[idx]`
+//! gathered from the packed index stream instead of an f32 load. Because
+//! the gathered float IS the dequantized value, every LUT kernel's
+//! output is **bit-identical** to running the matching f32 kernel on the
+//! dequantized matrix (property-tested below); the only approximation in
+//! the whole path is the one-time value→codebook snap at fit time,
+//! bounded by [`crate::compress::qsparse::QuantizedValues::error_bound`].
+//!
+//! Gather strategy per format:
+//! - **CSR**: per-nonzero gather (`lut[idx]`), same MR=4 activation-row
+//!   hoisting as `csr_gemm`.
+//! - **BSR**: the block's `BR*BC` indices are expanded into a stack
+//!   panel once per (row-panel, block) visit — the same per-visit value
+//!   traffic as the f32 kernel, which also re-reads the block per
+//!   row-panel — then the register-blocked accumulator strip runs
+//!   unchanged.
+//! - **Pattern**: the kernel's `entries` values are gathered into the
+//!   unrolled 4-entry accumulator (contiguous `val_ptr` runs make the
+//!   index stream sequential — the layout PatDNN's sub-byte packing
+//!   argument is about).
+//!
+//! Cost-model hooks: `planner::COST_LUT_Q8` / `COST_LUT_Q4` price the
+//! extra unpack+gather per value relative to the f32 kernels.
+
+use super::{Epilogue, SendPtr, PARALLEL_M_CUTOVER};
+use crate::compress::qsparse::{QBsr, QCsr, QPattern, QSparseMatrix};
+use crate::util::pool;
+
+// ---------------------------------------------------------------------------
+// CSR
+// ---------------------------------------------------------------------------
+
+/// C(M,N) = A(M,K) @ W_qcsr(K,N), single thread — mirrors
+/// [`crate::kernels::sparse::csr_gemm`].
+pub fn qcsr_gemm(a: &[f32], w: &QCsr, c: &mut [f32], m: usize, epilogue: &Epilogue) {
+    let (k, n) = (w.rows, w.cols);
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(c.len(), m * n);
+    qcsr_gemm_rows(a, w, c, 0, m, k, n);
+    epilogue.apply(c, m, n);
+}
+
+fn qcsr_gemm_rows(a: &[f32], w: &QCsr, c: &mut [f32], m0: usize, m1: usize, k: usize, n: usize) {
+    c[m0 * n..m1 * n].fill(0.0);
+    let lut = w.values.codebook.as_slice();
+    const MR: usize = 4;
+    let mut i = m0;
+    while i + MR <= m1 {
+        for p in 0..k {
+            let av = [
+                a[i * k + p],
+                a[(i + 1) * k + p],
+                a[(i + 2) * k + p],
+                a[(i + 3) * k + p],
+            ];
+            if av == [0.0; 4] {
+                continue;
+            }
+            let (s, e) = (w.row_ptr[p] as usize, w.row_ptr[p + 1] as usize);
+            for idx in s..e {
+                let col = w.col_idx[idx] as usize;
+                let v = lut[w.values.index(idx)];
+                c[i * n + col] += av[0] * v;
+                c[(i + 1) * n + col] += av[1] * v;
+                c[(i + 2) * n + col] += av[2] * v;
+                c[(i + 3) * n + col] += av[3] * v;
+            }
+        }
+        i += MR;
+    }
+    for ir in i..m1 {
+        for p in 0..k {
+            let av = a[ir * k + p];
+            if av == 0.0 {
+                continue;
+            }
+            let (s, e) = (w.row_ptr[p] as usize, w.row_ptr[p + 1] as usize);
+            for idx in s..e {
+                c[ir * n + w.col_idx[idx] as usize] += av * lut[w.values.index(idx)];
+            }
+        }
+    }
+}
+
+/// Multithreaded LUT CSR GEMM over disjoint row panels, default cutover.
+pub fn qcsr_gemm_parallel(a: &[f32], w: &QCsr, c: &mut [f32], m: usize, epilogue: &Epilogue) {
+    qcsr_gemm_parallel_cutover(a, w, c, m, epilogue, PARALLEL_M_CUTOVER);
+}
+
+/// Multithreaded LUT CSR GEMM with a caller-chosen serial cutover.
+pub fn qcsr_gemm_parallel_cutover(
+    a: &[f32],
+    w: &QCsr,
+    c: &mut [f32],
+    m: usize,
+    epilogue: &Epilogue,
+    cutover: usize,
+) {
+    let (k, n) = (w.rows, w.cols);
+    let threads = pool::global().size().min(m.div_ceil(64)).max(1);
+    if threads <= 1 || m < cutover {
+        return qcsr_gemm(a, w, c, m, epilogue);
+    }
+    let chunk = m.div_ceil(threads);
+    let cptr = SendPtr(c.as_mut_ptr());
+    pool::parallel_for_n(threads, threads, |t| {
+        let m0 = t * chunk;
+        let m1 = ((t + 1) * chunk).min(m);
+        if m0 >= m1 {
+            return;
+        }
+        // SAFETY: disjoint row panels.
+        let c_all = unsafe { std::slice::from_raw_parts_mut(cptr.get(), m * n) };
+        qcsr_gemm_rows(a, w, c_all, m0, m1, k, n);
+        epilogue.apply(&mut c_all[m0 * n..m1 * n], m1 - m0, n);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// BSR
+// ---------------------------------------------------------------------------
+
+/// C(M,N) = A(M,K) @ W_qbsr(K,N), single thread — mirrors
+/// [`crate::kernels::bsr::bsr_gemm`].
+pub fn qbsr_gemm(a: &[f32], w: &QBsr, c: &mut [f32], m: usize, epilogue: &Epilogue) {
+    let (k, n) = (w.rows, w.cols);
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(c.len(), m * n);
+    qbsr_gemm_rows(a, w, c, 0, m, k, n);
+    epilogue.apply(c, m, n);
+}
+
+fn qbsr_gemm_rows(a: &[f32], w: &QBsr, c: &mut [f32], m0: usize, m1: usize, k: usize, n: usize) {
+    c[m0 * n..m1 * n].fill(0.0);
+    match (w.br, w.bc) {
+        (4, 1) => qbsr_rows_spec::<4, 1>(a, w, c, m0, m1, k, n),
+        (4, 4) => qbsr_rows_spec::<4, 4>(a, w, c, m0, m1, k, n),
+        (8, 1) => qbsr_rows_spec::<8, 1>(a, w, c, m0, m1, k, n),
+        (8, 4) => qbsr_rows_spec::<8, 4>(a, w, c, m0, m1, k, n),
+        _ => qbsr_rows_generic(a, w, c, m0, m1, k, n),
+    }
+}
+
+/// Stack capacity for one expanded block (largest specialized shape is
+/// 8x4 = 32 values); the panel lives in registers / L1, never the heap.
+const MAX_BLOCK: usize = 32;
+
+/// Expand one stored block's packed indices through the codebook into a
+/// stack panel — the per-visit analogue of the f32 kernel's contiguous
+/// block read (which also touches the whole block per row-panel visit).
+#[inline(always)]
+fn expand_block(w: &QBsr, bi: usize, brc: usize, lut: &[f32], blk: &mut [f32; MAX_BLOCK]) {
+    debug_assert!(brc <= MAX_BLOCK);
+    let base = bi * brc;
+    for (t, slot) in blk.iter_mut().take(brc).enumerate() {
+        *slot = lut[w.values.index(base + t)];
+    }
+}
+
+fn qbsr_rows_spec<const BR: usize, const BC: usize>(
+    a: &[f32],
+    w: &QBsr,
+    c: &mut [f32],
+    m0: usize,
+    m1: usize,
+    k: usize,
+    n: usize,
+) {
+    const MR: usize = 4;
+    let lut = w.values.codebook.as_slice();
+    let mut blk = [0f32; MAX_BLOCK];
+    let nbr = w.block_rows();
+    let mut i = m0;
+    while i + MR <= m1 {
+        for kb in 0..nbr {
+            let (s, e) = (w.row_ptr[kb] as usize, w.row_ptr[kb + 1] as usize);
+            if s == e {
+                continue;
+            }
+            let p0 = kb * BR;
+            let pl = BR.min(k - p0);
+            let mut av = [[0f32; BR]; MR];
+            let mut any = false;
+            for (r, avr) in av.iter_mut().enumerate() {
+                let base = (i + r) * k + p0;
+                for (p, slot) in avr.iter_mut().take(pl).enumerate() {
+                    let v = a[base + p];
+                    *slot = v;
+                    any |= v != 0.0;
+                }
+            }
+            if !any {
+                continue;
+            }
+            for bi in s..e {
+                let j0 = w.col_idx[bi] as usize * BC;
+                expand_block(w, bi, BR * BC, lut, &mut blk);
+                let vals = &blk[..BR * BC];
+                let cl = BC.min(n - j0);
+                for (r, avr) in av.iter().enumerate() {
+                    let mut acc = [0f32; BC];
+                    for (p, &apv) in avr.iter().take(pl).enumerate() {
+                        if apv == 0.0 {
+                            continue;
+                        }
+                        let vrow = &vals[p * BC..p * BC + BC];
+                        for x in 0..BC {
+                            acc[x] += apv * vrow[x];
+                        }
+                    }
+                    let crow = &mut c[(i + r) * n + j0..(i + r) * n + j0 + cl];
+                    for (x, cv) in crow.iter_mut().enumerate() {
+                        *cv += acc[x];
+                    }
+                }
+            }
+        }
+        i += MR;
+    }
+    // remainder rows (< MR), one at a time
+    for ir in i..m1 {
+        for kb in 0..nbr {
+            let (s, e) = (w.row_ptr[kb] as usize, w.row_ptr[kb + 1] as usize);
+            if s == e {
+                continue;
+            }
+            let p0 = kb * BR;
+            let pl = BR.min(k - p0);
+            let mut av = [0f32; BR];
+            let mut any = false;
+            let base = ir * k + p0;
+            for (p, slot) in av.iter_mut().take(pl).enumerate() {
+                let v = a[base + p];
+                *slot = v;
+                any |= v != 0.0;
+            }
+            if !any {
+                continue;
+            }
+            for bi in s..e {
+                let j0 = w.col_idx[bi] as usize * BC;
+                expand_block(w, bi, BR * BC, lut, &mut blk);
+                let vals = &blk[..BR * BC];
+                let cl = BC.min(n - j0);
+                let mut acc = [0f32; BC];
+                for (p, &apv) in av.iter().take(pl).enumerate() {
+                    if apv == 0.0 {
+                        continue;
+                    }
+                    let vrow = &vals[p * BC..p * BC + BC];
+                    for x in 0..BC {
+                        acc[x] += apv * vrow[x];
+                    }
+                }
+                let crow = &mut c[ir * n + j0..ir * n + j0 + cl];
+                for (x, cv) in crow.iter_mut().enumerate() {
+                    *cv += acc[x];
+                }
+            }
+        }
+    }
+}
+
+/// Generic fallback for unusual block shapes — correct for any (br, bc).
+fn qbsr_rows_generic(
+    a: &[f32],
+    w: &QBsr,
+    c: &mut [f32],
+    m0: usize,
+    m1: usize,
+    k: usize,
+    n: usize,
+) {
+    let (br, bc) = (w.br, w.bc);
+    let lut = w.values.codebook.as_slice();
+    for ir in m0..m1 {
+        for kb in 0..w.block_rows() {
+            let p0 = kb * br;
+            let pl = br.min(k - p0);
+            let (s, e) = (w.row_ptr[kb] as usize, w.row_ptr[kb + 1] as usize);
+            for bi in s..e {
+                let j0 = w.col_idx[bi] as usize * bc;
+                let base = bi * br * bc;
+                let cl = bc.min(n - j0);
+                let crow = &mut c[ir * n + j0..ir * n + j0 + cl];
+                for p in 0..pl {
+                    let apv = a[ir * k + p0 + p];
+                    if apv == 0.0 {
+                        continue;
+                    }
+                    for (x, cv) in crow.iter_mut().enumerate() {
+                        *cv += apv * lut[w.values.index(base + p * bc + x)];
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Multithreaded LUT BSR GEMM over disjoint row panels, default cutover.
+pub fn qbsr_gemm_parallel(a: &[f32], w: &QBsr, c: &mut [f32], m: usize, epilogue: &Epilogue) {
+    qbsr_gemm_parallel_cutover(a, w, c, m, epilogue, PARALLEL_M_CUTOVER);
+}
+
+/// Multithreaded LUT BSR GEMM with a caller-chosen serial cutover.
+pub fn qbsr_gemm_parallel_cutover(
+    a: &[f32],
+    w: &QBsr,
+    c: &mut [f32],
+    m: usize,
+    epilogue: &Epilogue,
+    cutover: usize,
+) {
+    let (k, n) = (w.rows, w.cols);
+    let threads = pool::global().size().min(m.div_ceil(64)).max(1);
+    if threads <= 1 || m < cutover {
+        return qbsr_gemm(a, w, c, m, epilogue);
+    }
+    let chunk = m.div_ceil(threads);
+    let cptr = SendPtr(c.as_mut_ptr());
+    pool::parallel_for_n(threads, threads, |t| {
+        let m0 = t * chunk;
+        let m1 = ((t + 1) * chunk).min(m);
+        if m0 >= m1 {
+            return;
+        }
+        // SAFETY: disjoint row panels.
+        let c_all = unsafe { std::slice::from_raw_parts_mut(cptr.get(), m * n) };
+        qbsr_gemm_rows(a, w, c_all, m0, m1, k, n);
+        epilogue.apply(&mut c_all[m0 * n..m1 * n], m1 - m0, n);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Pattern
+// ---------------------------------------------------------------------------
+
+/// C(M,N) = A(M,K) @ W_qpattern(K,N), single thread — mirrors
+/// [`crate::kernels::pattern::pattern_gemm`].
+pub fn qpattern_gemm(a: &[f32], w: &QPattern, c: &mut [f32], m: usize, epilogue: &Epilogue) {
+    let (k, n) = (w.rows, w.cols);
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(c.len(), m * n);
+    let offs = row_offsets(w);
+    qpattern_gemm_rows(a, w, &offs, c, 0, m, k, n);
+    epilogue.apply(c, m, n);
+}
+
+/// Per-pattern activation row offsets (`pos * cin`) — resolved once per
+/// call, exactly as the f32 pattern kernel does.
+fn row_offsets(w: &QPattern) -> Vec<usize> {
+    w.pat_pos.iter().map(|&p| p as usize * w.cin).collect()
+}
+
+#[allow(clippy::too_many_arguments)]
+fn qpattern_gemm_rows(
+    a: &[f32],
+    w: &QPattern,
+    offs: &[usize],
+    c: &mut [f32],
+    m0: usize,
+    m1: usize,
+    k: usize,
+    n: usize,
+) {
+    c[m0 * n..m1 * n].fill(0.0);
+    let lut = w.values.codebook.as_slice();
+    const MR: usize = 4;
+    let mut i = m0;
+    while i + MR <= m1 {
+        for ci in 0..w.cin {
+            let (s, e) = (w.kernel_ptr[ci] as usize, w.kernel_ptr[ci + 1] as usize);
+            for kn in s..e {
+                let co = w.col_idx[kn] as usize;
+                let pid = w.pat_idx[kn] as usize;
+                let ps = w.pat_ptr[pid] as usize;
+                let pe = w.pat_ptr[pid + 1] as usize;
+                let vb = w.val_ptr[kn] as usize;
+                if pe - ps == 4 {
+                    // canonical 4-entry pattern, fully unrolled; the four
+                    // codebook gathers replace the contiguous f32 run
+                    let o =
+                        [offs[ps] + ci, offs[ps + 1] + ci, offs[ps + 2] + ci, offs[ps + 3] + ci];
+                    let vals = [
+                        lut[w.values.index(vb)],
+                        lut[w.values.index(vb + 1)],
+                        lut[w.values.index(vb + 2)],
+                        lut[w.values.index(vb + 3)],
+                    ];
+                    for r in 0..MR {
+                        let base = (i + r) * k;
+                        let acc = a[base + o[0]] * vals[0]
+                            + a[base + o[1]] * vals[1]
+                            + a[base + o[2]] * vals[2]
+                            + a[base + o[3]] * vals[3];
+                        c[(i + r) * n + co] += acc;
+                    }
+                } else {
+                    let ve = w.val_ptr[kn + 1] as usize;
+                    for r in 0..MR {
+                        let base = (i + r) * k;
+                        let mut acc = 0.0f32;
+                        for (x, vi) in (vb..ve).enumerate() {
+                            acc += a[base + offs[ps + x] + ci] * lut[w.values.index(vi)];
+                        }
+                        c[(i + r) * n + co] += acc;
+                    }
+                }
+            }
+        }
+        i += MR;
+    }
+    // remainder rows (< MR), one at a time
+    for ir in i..m1 {
+        let base = ir * k;
+        for ci in 0..w.cin {
+            let (s, e) = (w.kernel_ptr[ci] as usize, w.kernel_ptr[ci + 1] as usize);
+            for kn in s..e {
+                let co = w.col_idx[kn] as usize;
+                let pid = w.pat_idx[kn] as usize;
+                let ps = w.pat_ptr[pid] as usize;
+                let (vb, ve) = (w.val_ptr[kn] as usize, w.val_ptr[kn + 1] as usize);
+                let mut acc = 0.0f32;
+                for (x, vi) in (vb..ve).enumerate() {
+                    acc += a[base + offs[ps + x] + ci] * lut[w.values.index(vi)];
+                }
+                c[ir * n + co] += acc;
+            }
+        }
+    }
+}
+
+/// Multithreaded LUT pattern GEMM over disjoint row panels, default
+/// cutover.
+pub fn qpattern_gemm_parallel(
+    a: &[f32],
+    w: &QPattern,
+    c: &mut [f32],
+    m: usize,
+    epilogue: &Epilogue,
+) {
+    qpattern_gemm_parallel_cutover(a, w, c, m, epilogue, PARALLEL_M_CUTOVER);
+}
+
+/// Multithreaded LUT pattern GEMM with a caller-chosen serial cutover.
+pub fn qpattern_gemm_parallel_cutover(
+    a: &[f32],
+    w: &QPattern,
+    c: &mut [f32],
+    m: usize,
+    epilogue: &Epilogue,
+    cutover: usize,
+) {
+    let (k, n) = (w.rows, w.cols);
+    let threads = pool::global().size().min(m.div_ceil(64)).max(1);
+    if threads <= 1 || m < cutover {
+        return qpattern_gemm(a, w, c, m, epilogue);
+    }
+    let offs = row_offsets(w);
+    let chunk = m.div_ceil(threads);
+    let cptr = SendPtr(c.as_mut_ptr());
+    pool::parallel_for_n(threads, threads, |t| {
+        let m0 = t * chunk;
+        let m1 = ((t + 1) * chunk).min(m);
+        if m0 >= m1 {
+            return;
+        }
+        // SAFETY: disjoint row panels.
+        let c_all = unsafe { std::slice::from_raw_parts_mut(cptr.get(), m * n) };
+        qpattern_gemm_rows(a, w, &offs, c_all, m0, m1, k, n);
+        epilogue.apply(&mut c_all[m0 * n..m1 * n], m1 - m0, n);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Dispatch
+// ---------------------------------------------------------------------------
+
+/// Run the matching LUT kernel for a quantized payload (the executor's
+/// one entry point for `NodeWeights::QuantSparse`).
+pub fn qsparse_gemm_parallel_cutover(
+    a: &[f32],
+    w: &QSparseMatrix,
+    c: &mut [f32],
+    m: usize,
+    epilogue: &Epilogue,
+    cutover: usize,
+) {
+    match w {
+        QSparseMatrix::Csr(q) => qcsr_gemm_parallel_cutover(a, q, c, m, epilogue, cutover),
+        QSparseMatrix::Bsr(q) => qbsr_gemm_parallel_cutover(a, q, c, m, epilogue, cutover),
+        QSparseMatrix::Pattern(q) => qpattern_gemm_parallel_cutover(a, q, c, m, epilogue, cutover),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::bsr::BsrMatrix;
+    use crate::compress::csr::CsrMatrix;
+    use crate::compress::pattern::{prune_patterns, PatternMatrix};
+    use crate::kernels::{bsr::bsr_gemm, pattern::pattern_gemm, sparse::csr_gemm};
+    use crate::prop_assert;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn random_sparse(rng: &mut Rng, len: usize, density: f64) -> Vec<f32> {
+        let mut dense = vec![0.0f32; len];
+        for v in dense.iter_mut() {
+            if rng.f64() < density {
+                *v = rng.normal() as f32;
+            }
+        }
+        dense
+    }
+
+    /// The tentpole equivalence: every LUT kernel is bit-identical to
+    /// its f32 kernel on the dequantized matrix — the quantization error
+    /// lives entirely in the fit, never in the execution.
+    #[test]
+    fn prop_lut_kernels_bit_identical_to_dequantized_f32() {
+        prop::check_n("lut vs dequantized f32", 48, |rng: &mut Rng| {
+            let kh = [2usize, 3][rng.below(2)];
+            let kw = [2usize, 3][rng.below(2)];
+            let cin = rng.range(1, 7);
+            let n = rng.range(1, 16);
+            let k = kh * kw * cin;
+            let m = rng.range(1, 18);
+            let bits = [4u8, 8][rng.below(2)];
+            let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+            let dense = random_sparse(rng, k * n, rng.f64());
+            let epi = Epilogue::bias_relu((0..n).map(|_| rng.f32() - 0.5).collect(), true);
+
+            let csr = CsrMatrix::from_dense(&dense, k, n);
+            let qcsr = crate::compress::qsparse::QCsr::from_csr(&csr, bits);
+            let mut c_ref = vec![0.0; m * n];
+            let mut c = vec![0.0; m * n];
+            csr_gemm(&a, &qcsr.to_csr(), &mut c_ref, m, &epi);
+            qcsr_gemm(&a, &qcsr, &mut c, m, &epi);
+            prop_assert!(c == c_ref, "qcsr not bit-identical");
+
+            let (br, bc) = [(4usize, 1usize), (4, 4), (3, 2)][rng.below(3)];
+            let bsr = BsrMatrix::from_dense(&dense, k, n, br, bc);
+            let qbsr = crate::compress::qsparse::QBsr::from_bsr(&bsr, bits);
+            let mut b_ref = vec![0.0; m * n];
+            let mut b = vec![0.0; m * n];
+            bsr_gemm(&a, &qbsr.to_bsr(), &mut b_ref, m, &epi);
+            qbsr_gemm(&a, &qbsr, &mut b, m, &epi);
+            prop_assert!(b == b_ref, "qbsr {br}x{bc} not bit-identical");
+
+            let pat = PatternMatrix::from_dense(&dense, kh, kw, cin, n);
+            let qpat = crate::compress::qsparse::QPattern::from_pattern(&pat, bits);
+            let mut p_ref = vec![0.0; m * n];
+            let mut p = vec![0.0; m * n];
+            pattern_gemm(&a, &qpat.to_pattern(), &mut p_ref, m, &epi);
+            qpattern_gemm(&a, &qpat, &mut p, m, &epi);
+            prop_assert!(p == p_ref, "qpattern not bit-identical");
+            Ok(())
+        });
+    }
+
+    /// LUT output vs the *unquantized* f32 kernel stays within the
+    /// fit's error bound propagated through the reduction: each output
+    /// element sums at most (column nnz) perturbed products.
+    #[test]
+    fn lut_error_bounded_by_fit() {
+        let (kh, kw, cin, n) = (3usize, 3usize, 8usize, 16usize);
+        let k = kh * kw * cin;
+        let m = 9;
+        let mut rng = Rng::new(23);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+        let mut dense = vec![0.0f32; k * n];
+        rng.fill_normal(&mut dense, 0.5);
+        prune_patterns(&mut dense, kh, kw, cin, n, 0.8, 4, 8);
+        let pat = PatternMatrix::from_dense(&dense, kh, kw, cin, n);
+        let qpat = crate::compress::qsparse::QPattern::from_pattern(&pat, 4);
+        let eb = qpat.values.error_bound() as f64;
+        assert!(eb > 0.0, "rich normal values must not fit a 4-bit codebook losslessly");
+
+        let mut c_f32 = vec![0.0; m * n];
+        let mut c_q = vec![0.0; m * n];
+        pattern_gemm(&a, &pat, &mut c_f32, m, &Epilogue::None);
+        qpattern_gemm(&a, &qpat, &mut c_q, m, &Epilogue::None);
+        let amax = a.iter().fold(0.0f32, |mx, v| mx.max(v.abs())) as f64;
+        let bound = eb * amax * k as f64 + 1e-4;
+        for (x, y) in c_f32.iter().zip(&c_q) {
+            let d = (*x as f64 - *y as f64).abs();
+            assert!(d <= bound, "diff {d} exceeds propagated bound {bound}");
+        }
+    }
+
+    #[test]
+    fn parallel_and_cutover_match_serial() {
+        let (kh, kw, cin, n) = (3usize, 3usize, 4usize, 8usize);
+        let k = kh * kw * cin;
+        let m = 300;
+        let mut rng = Rng::new(31);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+        let dense = random_sparse(&mut rng, k * n, 0.3);
+        let csr = CsrMatrix::from_dense(&dense, k, n);
+        let qcsr = crate::compress::qsparse::QCsr::from_csr(&csr, 8);
+        let mut c1 = vec![0.0; m * n];
+        let mut c2 = vec![0.0; m * n];
+        let mut c3 = vec![0.0; m * n];
+        qcsr_gemm(&a, &qcsr, &mut c1, m, &Epilogue::None);
+        qcsr_gemm_parallel_cutover(&a, &qcsr, &mut c2, m, &Epilogue::None, PARALLEL_M_CUTOVER);
+        qcsr_gemm_parallel_cutover(&a, &qcsr, &mut c3, m, &Epilogue::None, m + 1);
+        assert_eq!(c1, c2, "row panels must not change the result");
+        assert_eq!(c1, c3, "serial-cutover path must be the serial kernel");
+
+        let pat = PatternMatrix::from_dense(&dense, kh, kw, cin, n);
+        let qpat = crate::compress::qsparse::QPattern::from_pattern(&pat, 4);
+        let mut p1 = vec![0.0; m * n];
+        let mut p2 = vec![0.0; m * n];
+        qpattern_gemm(&a, &qpat, &mut p1, m, &Epilogue::None);
+        qpattern_gemm_parallel_cutover(&a, &qpat, &mut p2, m, &Epilogue::None, PARALLEL_M_CUTOVER);
+        assert_eq!(p1, p2);
+
+        let bsr = BsrMatrix::from_dense(&dense, k, n, 4, 4);
+        let qbsr = crate::compress::qsparse::QBsr::from_bsr(&bsr, 8);
+        let mut b1 = vec![0.0; m * n];
+        let mut b2 = vec![0.0; m * n];
+        qbsr_gemm(&a, &qbsr, &mut b1, m, &Epilogue::None);
+        qbsr_gemm_parallel_cutover(&a, &qbsr, &mut b2, m, &Epilogue::None, PARALLEL_M_CUTOVER);
+        assert_eq!(b1, b2);
+    }
+
+    #[test]
+    fn empty_weights_give_zero_plus_epilogue() {
+        let (m, k, n) = (6, 18, 4);
+        let a = vec![1.0; m * k];
+        let csr = CsrMatrix::from_dense(&vec![0.0; k * n], k, n);
+        let qcsr = crate::compress::qsparse::QCsr::from_csr(&csr, 4);
+        let mut c = vec![9.0; m * n];
+        let ep = Epilogue::bias_relu(vec![0.5; n], false);
+        qcsr_gemm(&a, &qcsr, &mut c, m, &ep);
+        assert!(c.iter().all(|&v| v == 0.5));
+    }
+
+    #[test]
+    fn dispatch_routes_by_payload() {
+        let (kh, kw, cin, n) = (3usize, 3usize, 2usize, 6usize);
+        let k = kh * kw * cin;
+        let m = 5;
+        let mut rng = Rng::new(3);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+        let dense = random_sparse(&mut rng, k * n, 0.4);
+        let csr = CsrMatrix::from_dense(&dense, k, n);
+        let qcsr = crate::compress::qsparse::QCsr::from_csr(&csr, 8);
+        // all three payloads fit on the same nonzero multiset (BSR's
+        // padding zeros pack to the reserved entry), so one dequantized
+        // CSR reference serves every variant
+        let mut c_ref = vec![0.0; m * n];
+        csr_gemm(&a, &qcsr.to_csr(), &mut c_ref, m, &Epilogue::None);
+        let variants = [
+            QSparseMatrix::Csr(qcsr),
+            QSparseMatrix::Bsr(crate::compress::qsparse::QBsr::from_bsr(
+                &BsrMatrix::from_dense(&dense, k, n, 4, 4),
+                8,
+            )),
+            QSparseMatrix::Pattern(crate::compress::qsparse::QPattern::from_pattern(
+                &PatternMatrix::from_dense(&dense, kh, kw, cin, n),
+                8,
+            )),
+        ];
+        for q in &variants {
+            let mut c = vec![0.0; m * n];
+            qsparse_gemm_parallel_cutover(&a, q, &mut c, m, &Epilogue::None, usize::MAX);
+            for (x, y) in c_ref.iter().zip(&c) {
+                assert!((x - y).abs() < 1e-4, "{x} vs {y}");
+            }
+        }
+    }
+}

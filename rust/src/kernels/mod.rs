@@ -7,6 +7,7 @@
 pub mod bsr;
 pub mod conv;
 pub mod gemm;
+pub mod lut;
 pub mod pattern;
 pub mod sparse;
 pub mod tensor;

@@ -6,6 +6,7 @@
 //! cadnn compress [--report PATH]            §3 compression claims
 //! cadnn tune [--model NAME]                 optimization-parameter selection demo
 //! cadnn plan [--model NAME] [--format auto|csr|bsr|pattern]
+//!            [--value-bits auto|f32|q8|q4]
 //!            [--pruning element|block|pattern] [--measured]
 //!                                           per-layer sparse-format plan
 //! cadnn serve [--model M] [--variant V] [--requests N] [--rps R] [--native]
@@ -29,7 +30,7 @@ use cadnn::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig};
 use cadnn::costmodel::calibrate;
 use cadnn::exec::Personality;
 use cadnn::models;
-use cadnn::planner::FormatPolicy;
+use cadnn::planner::{FormatPolicy, ValuePolicy};
 use cadnn::serve::{QueueConfig, ServeRequest, Server};
 use cadnn::util::json::Json;
 use cadnn::util::rng::Rng;
@@ -49,6 +50,18 @@ fn format_policy(args: &[String]) -> Result<FormatPolicy> {
         Some("bsr") => Ok(FormatPolicy::Bsr),
         Some("pattern") => Ok(FormatPolicy::Pattern),
         Some(other) => Err(anyhow!("unknown --format '{other}' (auto|csr|bsr|pattern)")),
+    }
+}
+
+/// `--value-bits` policy: how sparse payloads store their values (the
+/// precision axis next to `--format`). `auto` follows the profile's
+/// exported codebooks; `q8`/`q4` pin codebook payloads on the LUT
+/// kernels; `f32` pins raw floats.
+fn value_policy(args: &[String]) -> Result<ValuePolicy> {
+    match opt(args, "--value-bits") {
+        None => Ok(ValuePolicy::Auto),
+        Some(s) => ValuePolicy::parse(&s)
+            .ok_or_else(|| anyhow!("unknown --value-bits '{s}' (auto|f32|q8|q4)")),
     }
 }
 
@@ -91,6 +104,7 @@ fn main() -> Result<()> {
 fn cmd_plan(args: &[String]) -> Result<()> {
     let model = opt(args, "--model").unwrap_or_else(|| "resnet50".into());
     let policy = format_policy(args)?;
+    let vpolicy = value_policy(args)?;
     let structure = prune_structure(args)?;
     let g = models::build(&model, 1).ok_or_else(|| anyhow!("unknown model {model}"))?;
     let mut profile = paper_profile(&g);
@@ -103,7 +117,8 @@ fn cmd_plan(args: &[String]) -> Result<()> {
     let mut builder = Engine::native(&model)
         .personality(Personality::CadnnSparse)
         .sparsity_profile(profile.clone())
-        .sparse_format(policy);
+        .sparse_format(policy)
+        .value_bits(vpolicy);
     if flag(args, "--measured") {
         eprintln!("measuring candidate kernels per layer (tuner mode)...");
         builder = builder.tuned(true);
@@ -119,12 +134,14 @@ fn cmd_plan(args: &[String]) -> Result<()> {
             name.clone(),
             format!("{:.1}%", 100.0 * profile.get(name)),
             lp.format.label(),
+            lp.value_bits.label().to_string(),
             if lp.reorder { "yes" } else { "-" }.to_string(),
             format!("{}", lp.parallel_cutover),
         ]);
     }
-    println!("sparse-format plan for {model} ({:?} policy)\n", policy);
-    print_table(&["layer", "sparsity", "format", "reorder", "cutover"], &rows);
+    println!("sparse-format plan for {model} ({:?} policy, {} values)\n", policy,
+        vpolicy.label());
+    print_table(&["layer", "sparsity", "format", "values", "reorder", "cutover"], &rows);
     let counts: Vec<String> = inst
         .plan
         .format_counts()
@@ -332,7 +349,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             "serving {model}/{variant} from {artifacts_dir} — {requests} requests @ {rps:.0} req/s (Poisson)"
         );
         let coord = Coordinator::start(CoordinatorConfig {
-            artifacts_dir,
+            artifacts_dir: artifacts_dir.clone(),
             model: model.clone(),
             variant: variant.clone(),
             max_batch,
@@ -351,8 +368,30 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         for rx in pending {
             let _ = rx.recv();
         }
-        println!("\n{}", coord.metrics.lock().unwrap().report());
+        let (report, us_per_unit) = {
+            let m = coord.metrics.lock().unwrap();
+            (m.report(), m.us_per_unit)
+        };
+        println!("\n{report}");
         coord.shutdown()?;
+        // persist the converged serving-cost calibration next to
+        // exec_plan, so the next process's scheduler is deadline-accurate
+        // from its first batch
+        if let Some(u) = us_per_unit {
+            let path = format!("{artifacts_dir}/manifest.json");
+            match std::fs::read_to_string(&path)
+                .map_err(anyhow::Error::from)
+                .and_then(|text| cadnn::runtime::Manifest::parse(&text))
+            {
+                Ok(mut man) => {
+                    if man.record_calibration(&model, &variant, u) > 0 {
+                        std::fs::write(&path, man.to_json().to_string_pretty())?;
+                        println!("persisted us_per_unit={u:.4} into {path}");
+                    }
+                }
+                Err(e) => eprintln!("calibration not persisted ({path}: {e})"),
+            }
+        }
         return Ok(());
     }
 
@@ -370,6 +409,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         max_wait_us,
         fallback: policy,
         planned: !flag(args, "--no-planner"),
+        ..QueueConfig::default()
     };
     let sizes: Vec<usize> = [1usize, 2, 4, 8]
         .into_iter()

@@ -35,6 +35,7 @@ use crate::compress::bsr::BsrMatrix;
 use crate::compress::csr::CsrMatrix;
 use crate::compress::pattern;
 use crate::compress::pattern::PatternMatrix;
+use crate::compress::qsparse::ValueBits;
 use crate::compress::reorder;
 use crate::compress::reorder::Permutation;
 use crate::kernels::{Epilogue, PARALLEL_M_CUTOVER};
@@ -106,6 +107,78 @@ impl SparseFormat {
     }
 }
 
+/// User-facing value-precision policy (`EngineBuilder::value_bits`) —
+/// the second, orthogonal axis next to [`FormatPolicy`]: *how a sparse
+/// payload's values are stored*, independent of which format stores
+/// them. The resolved per-layer decision is
+/// [`crate::compress::qsparse::ValueBits`] in `LayerPlan::value_bits`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ValuePolicy {
+    /// Follow the profile: a layer whose compress report exported a
+    /// codebook (`SparsityProfile::quant`) gets a quantized payload at
+    /// the exported width; everything else stays f32. This is how a
+    /// python-side unified prune+quantize run propagates into native
+    /// execution without any per-model flags.
+    #[default]
+    Auto,
+    /// Pin every payload to raw f32 values (the pre-quantization
+    /// behavior, and the only choice for Dense layers).
+    F32,
+    /// Pin every sparse payload to an 8-bit codebook.
+    Q8,
+    /// Pin every sparse payload to a 4-bit codebook.
+    Q4,
+}
+
+impl ValuePolicy {
+    /// Stable textual name (`auto`, `f32`, `q8`, `q4`) — the CLI
+    /// encoding (`cadnn plan --value-bits`).
+    pub fn label(&self) -> &'static str {
+        match self {
+            ValuePolicy::Auto => "auto",
+            ValuePolicy::F32 => "f32",
+            ValuePolicy::Q8 => "q8",
+            ValuePolicy::Q4 => "q4",
+        }
+    }
+
+    /// Inverse of [`ValuePolicy::label`].
+    pub fn parse(s: &str) -> Option<ValuePolicy> {
+        match s {
+            "auto" => Some(ValuePolicy::Auto),
+            "f32" => Some(ValuePolicy::F32),
+            "q8" => Some(ValuePolicy::Q8),
+            "q4" => Some(ValuePolicy::Q4),
+            _ => None,
+        }
+    }
+}
+
+/// Resolve the per-layer value precision from the policy, the profile's
+/// exported codebook width (`declared`, from
+/// `SparsityProfile::quant_bits`), and the chosen format. Dense payloads
+/// are always f32 — the blocked GEMM has no LUT path, and shallow
+/// pruning is not where storage hurts.
+pub fn resolve_value_bits(
+    policy: ValuePolicy,
+    declared: Option<u8>,
+    format: SparseFormat,
+) -> ValueBits {
+    if format == SparseFormat::Dense {
+        return ValueBits::F32;
+    }
+    match policy {
+        ValuePolicy::F32 => ValueBits::F32,
+        ValuePolicy::Q8 => ValueBits::Q8,
+        ValuePolicy::Q4 => ValueBits::Q4,
+        ValuePolicy::Auto => match declared {
+            Some(b) if b <= 4 => ValueBits::Q4,
+            Some(_) => ValueBits::Q8,
+            None => ValueBits::F32,
+        },
+    }
+}
+
 /// User-facing format policy (`EngineBuilder::sparse_format`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum FormatPolicy {
@@ -138,6 +211,11 @@ pub fn pattern_eligible(csr: &CsrMatrix, hwio: [usize; 4]) -> bool {
 #[derive(Debug, Clone, PartialEq)]
 pub struct LayerPlan {
     pub format: SparseFormat,
+    /// How the payload's values are stored: raw f32 or a packed
+    /// 8/4-bit codebook executed through the LUT kernels
+    /// ([`crate::kernels::lut`]). Orthogonal to `format`; always
+    /// [`ValueBits::F32`] for Dense.
+    pub value_bits: ValueBits,
     /// Carry a filter-kernel column permutation with the weights.
     pub reorder: bool,
     /// Serial→parallel row cutover for this layer's kernel.
@@ -160,6 +238,7 @@ impl LayerPlan {
     pub fn csr() -> LayerPlan {
         LayerPlan {
             format: SparseFormat::Csr,
+            value_bits: ValueBits::F32,
             reorder: false,
             parallel_cutover: PARALLEL_M_CUTOVER,
             cost_per_row: 0.0,
@@ -174,6 +253,7 @@ impl LayerPlan {
     pub fn to_json(&self) -> Json {
         obj(vec![
             ("format", Json::Str(self.format.label())),
+            ("value_bits", Json::Num(self.value_bits.bits() as f64)),
             ("reorder", Json::Bool(self.reorder)),
             ("cutover", Json::Num(self.parallel_cutover as f64)),
             ("cost_per_row", Json::Num(self.cost_per_row)),
@@ -181,12 +261,19 @@ impl LayerPlan {
         ])
     }
 
-    /// Missing optional fields default (reorder=false, cutover=default,
-    /// costs unknown); an unknown format string rejects the whole plan.
+    /// Missing optional fields default (value_bits=32 — the pre-
+    /// quantization manifest fallback — reorder=false, cutover=default,
+    /// costs unknown); an unknown format string or value width rejects
+    /// the whole plan.
     pub fn from_json(j: &Json) -> Option<LayerPlan> {
         let format = SparseFormat::parse(j.get("format")?.as_str()?)?;
+        let value_bits = match j.get("value_bits") {
+            None => ValueBits::F32,
+            Some(v) => ValueBits::from_bits(v.as_usize()?)?,
+        };
         Some(LayerPlan {
             format,
+            value_bits,
             reorder: j.get("reorder").and_then(|v| v.as_bool()).unwrap_or(false),
             parallel_cutover: j
                 .get("cutover")
@@ -371,6 +458,28 @@ pub const COST_PATTERN_VAL: f64 = 0.45;
 /// keeps Auto on the CSR baseline; pattern-pruned layers amortize it
 /// over a full pattern (4+ entries) per kernel.
 pub const COST_PATTERN_KERNEL: f64 = 0.80;
+/// Per-stored-value cost multiplier of the 8-bit LUT kernels relative
+/// to their f32 counterparts: one byte-index load plus a dependent
+/// codebook gather replaces the f32 value load. The 256-entry table
+/// lives in L1, so the penalty is small and partially offset by the 4x
+/// smaller value stream.
+pub const COST_LUT_Q8: f64 = 1.05;
+/// Per-stored-value cost multiplier of the 4-bit LUT kernels: the
+/// nibble unpack (shift+mask) adds ALU work on top of the gather; the
+/// 16-entry table is register-resident. Applied in heuristic and
+/// measured modes alike (both price plans through [`lut_cost_factor`]).
+pub const COST_LUT_Q4: f64 = 1.12;
+
+/// The [`COST_LUT_Q8`]/[`COST_LUT_Q4`] multiplier for a value width
+/// (1.0 for f32).
+pub fn lut_cost_factor(v: ValueBits) -> f64 {
+    match v {
+        ValueBits::F32 => 1.0,
+        ValueBits::Q8 => COST_LUT_Q8,
+        ValueBits::Q4 => COST_LUT_Q4,
+    }
+}
+
 /// A non-CSR format must beat the CSR estimate by this factor before
 /// Auto switches away from the baseline (GEMM-shaped layers).
 pub const AUTO_SWITCH_MARGIN: f64 = 0.85;
@@ -474,8 +583,37 @@ impl LayerArtifacts {
 #[derive(Debug, Default)]
 pub struct PlanCache {
     layers: BTreeMap<String, LayerArtifacts>,
-    /// (kh, kw, cin, entries) -> selected pattern library.
-    pattern_libs: BTreeMap<(usize, usize, usize, usize), Arc<Vec<Vec<u8>>>>,
+    /// (kh, kw, cin, entries) -> the family's resolved pattern
+    /// libraries, each tagged with the weight fingerprint it was
+    /// resolved FOR (selection or a passed fit check), so identical
+    /// weights — the same layer across batch variants — exact-hit
+    /// without re-scoring. More than one distinct library means the
+    /// family's layers had magnitude layouts too different for one
+    /// library ([`LIBRARY_FIT_THRESHOLD`]).
+    pattern_libs: BTreeMap<(usize, usize, usize, usize), Vec<(u64, Arc<Vec<Vec<u8>>>)>>,
+}
+
+/// Minimum [`pattern::library_fit`] a cached family library must score
+/// on a layer's own weights before [`PlanCache::pattern_library`] hands
+/// it out. Below this, the cache re-selects from the layer's weights
+/// instead of silently reusing another layer's patterns (the PR-4
+/// aliasing bug: every same-(kh, kw, cin) layer inherited the *first*
+/// layer's library regardless of fit). Same-layer reuse across batch
+/// variants always passes (a library fits its own weights at ~1.0);
+/// 0.80 keeps PatDNN's library-transfer win for homogeneous layers
+/// while catching genuinely mismatched magnitude layouts.
+pub const LIBRARY_FIT_THRESHOLD: f64 = 0.80;
+
+/// FNV-1a over a dense weight slice's bit patterns — the exact-weights
+/// key of [`PlanCache::pattern_library`].
+fn weights_fingerprint(mat: &[f32]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    let mix = |h: u64, x: u64| (h ^ x).wrapping_mul(0x100000001b3);
+    h = mix(h, mat.len() as u64);
+    for &v in mat {
+        h = mix(h, v.to_bits() as u64);
+    }
+    h
 }
 
 /// FNV-1a over a CSR matrix's support and values (bit patterns), the
@@ -514,37 +652,85 @@ impl PlanCache {
         e
     }
 
-    /// The pattern library for a (kh, kw, cin) layer family, selecting it
-    /// from the first such layer's weights (`build`) and reusing it for
-    /// every later family member — the PatDNN observation that pattern
-    /// libraries transfer across layers of one family.
+    /// The pattern library for a layer of the (kh, kw, cin) family,
+    /// selected from `mat`'s own weights the first time and *reused for
+    /// later family members only when it actually fits them*. Lookup
+    /// order:
+    ///
+    /// 1. **exact weights** (content fingerprint) — the same layer
+    ///    across batch variants resolves without re-scoring or
+    ///    re-selecting, even for layers whose own best library scores
+    ///    below the threshold (possible: a family is capped at
+    ///    [`pattern::DEFAULT_LIBRARY`] masks);
+    /// 2. **fit check** — each distinct cached library is scored with
+    ///    [`pattern::library_fit`]; the first at or above
+    ///    [`LIBRARY_FIT_THRESHOLD`] transfers (PatDNN's cross-layer
+    ///    claim), and the match is memoized under this fingerprint;
+    /// 3. **fresh selection** otherwise, memoized likewise.
+    ///
+    /// This keeps the library-transfer win without the aliasing failure
+    /// where every same-shape layer silently inherited the first
+    /// layer's patterns, and without re-running selection per batch
+    /// variant when no cached library fits.
     pub fn pattern_library(
         &mut self,
         kh: usize,
         kw: usize,
         cin: usize,
         entries: usize,
-        build: impl FnOnce() -> Vec<Vec<u8>>,
+        cols: usize,
+        mat: &[f32],
     ) -> Arc<Vec<Vec<u8>>> {
-        self.pattern_libs
-            .entry((kh, kw, cin, entries))
-            .or_insert_with(|| Arc::new(build()))
-            .clone()
+        let fp = weights_fingerprint(mat);
+        let libs = self.pattern_libs.entry((kh, kw, cin, entries)).or_default();
+        if let Some((_, lib)) = libs.iter().find(|(f, _)| *f == fp) {
+            return lib.clone();
+        }
+        let mut distinct: Vec<&Arc<Vec<Vec<u8>>>> = Vec::new();
+        for (_, lib) in libs.iter() {
+            if !distinct.iter().any(|d| Arc::ptr_eq(d, lib)) {
+                distinct.push(lib);
+            }
+        }
+        let resolved = distinct
+            .into_iter()
+            .find(|lib| {
+                pattern::library_fit(mat, kh, kw, cin, cols, entries, lib)
+                    >= LIBRARY_FIT_THRESHOLD
+            })
+            .cloned()
+            .unwrap_or_else(|| {
+                Arc::new(pattern::select_pattern_library(
+                    mat,
+                    kh,
+                    kw,
+                    cin,
+                    cols,
+                    entries,
+                    pattern::DEFAULT_LIBRARY,
+                ))
+            });
+        libs.push((fp, resolved.clone()));
+        resolved
     }
 }
 
-/// Per-row execution cost (units) of a layer under `lp`'s format — the
-/// `cost_per_row` every planned [`LayerPlan`] carries.
+/// Per-row execution cost (units) of a layer under `lp`'s format and
+/// value width — the `cost_per_row` every planned [`LayerPlan`]
+/// carries. Quantized payloads scale the sparse-kernel estimates by
+/// [`lut_cost_factor`] (Dense is always f32), so serving-cost estimates
+/// stay honest when a codebook payload rides a LUT kernel.
 fn unit_cost(lp: &LayerPlan, csr: &CsrMatrix, hwio: [usize; 4], arts: &mut LayerArtifacts) -> f64 {
+    let lut = lut_cost_factor(lp.value_bits);
     match lp.format {
         SparseFormat::Dense => (csr.rows * csr.cols) as f64 * COST_DENSE_MAC,
-        SparseFormat::Csr => csr.nnz() as f64 * COST_CSR_NNZ,
+        SparseFormat::Csr => csr.nnz() as f64 * COST_CSR_NNZ * lut,
         SparseFormat::Bsr { br, bc } => {
             let (blocks, _) = arts.blocks_for(csr, br, bc);
-            (blocks * br * bc) as f64 * bsr_cost(br, bc)
+            (blocks * br * bc) as f64 * bsr_cost(br, bc) * lut
         }
         SparseFormat::Pattern => {
-            csr.nnz() as f64 * COST_PATTERN_VAL
+            csr.nnz() as f64 * COST_PATTERN_VAL * lut
                 + pattern::count_kernels(csr, hwio[2]) as f64 * COST_PATTERN_KERNEL
         }
     }
@@ -591,7 +777,27 @@ pub fn plan_layer(
     hwio: [usize; 4],
     arts: &mut LayerArtifacts,
 ) -> LayerPlan {
+    plan_layer_valued(policy, ValuePolicy::Auto, None, csr, m, hwio, arts)
+}
+
+/// [`plan_layer`] with the value-precision axis: `value_policy` is the
+/// engine-level knob (`EngineBuilder::value_bits`), `declared` the
+/// codebook width the layer's compress report exported
+/// (`SparsityProfile::quant_bits`) — [`resolve_value_bits`] combines
+/// them with the chosen format, and the plan's `cost_per_row` prices
+/// the LUT kernel via [`lut_cost_factor`].
+#[allow(clippy::too_many_arguments)]
+pub fn plan_layer_valued(
+    policy: FormatPolicy,
+    value_policy: ValuePolicy,
+    declared: Option<u8>,
+    csr: &CsrMatrix,
+    m: usize,
+    hwio: [usize; 4],
+    arts: &mut LayerArtifacts,
+) -> LayerPlan {
     let mut lp = choose_impl(policy, csr, m, hwio, arts);
+    lp.value_bits = resolve_value_bits(value_policy, declared, lp.format);
     lp.cost_per_row = unit_cost(&lp, csr, hwio, arts);
     lp
 }
@@ -717,8 +923,28 @@ pub fn plan_layer_measured(
     seed: u64,
     arts: &mut LayerArtifacts,
 ) -> LayerPlan {
+    plan_layer_measured_valued(policy, ValuePolicy::Auto, None, csr, m, hwio, seed, arts)
+}
+
+/// [`plan_layer_measured`] with the value-precision axis. The measured
+/// times pick the *format* (value width doesn't change which kernel
+/// family wins — the LUT factors are within a few percent); the
+/// resolved `value_bits` then scales `cost_per_row` through
+/// [`lut_cost_factor`], exactly as the heuristic mode does, so measured
+/// and heuristic plans price quantized payloads consistently.
+#[allow(clippy::too_many_arguments)]
+pub fn plan_layer_measured_valued(
+    policy: FormatPolicy,
+    value_policy: ValuePolicy,
+    declared: Option<u8>,
+    csr: &CsrMatrix,
+    m: usize,
+    hwio: [usize; 4],
+    seed: u64,
+    arts: &mut LayerArtifacts,
+) -> LayerPlan {
     if policy != FormatPolicy::Auto {
-        return plan_layer(policy, csr, m, hwio, arts);
+        return plan_layer_valued(policy, value_policy, declared, csr, m, hwio, arts);
     }
     let (k, n) = (csr.rows, csr.cols);
     if csr.nnz() == 0 || k == 0 || n == 0 {
@@ -788,6 +1014,7 @@ pub fn plan_layer_measured(
     let per_row_us = (best_us.max(1e-3)) / mm as f64;
     let amortize_rows = (2.0 * PARALLEL_DISPATCH_US / per_row_us).ceil() as usize;
     best.parallel_cutover = amortize_rows.max(PARALLEL_M_CUTOVER);
+    best.value_bits = resolve_value_bits(value_policy, declared, best.format);
     best.cost_per_row = unit_cost(&best, csr, hwio, arts);
     best
 }
@@ -955,6 +1182,7 @@ mod tests {
             "c2".into(),
             LayerPlan {
                 format: SparseFormat::Bsr { br: 4, bc: 4 },
+                value_bits: ValueBits::Q4,
                 reorder: true,
                 parallel_cutover: 256,
                 cost_per_row: 172.8,
@@ -964,6 +1192,130 @@ mod tests {
         let text = plan.to_json().to_string_pretty();
         let parsed = ExecPlan::from_json(&Json::parse(&text).unwrap()).unwrap();
         assert_eq!(parsed, plan);
+    }
+
+    /// Old manifests carry no `value_bits`: plans load as f32 payloads;
+    /// an unknown width rejects the plan like an unknown format does.
+    #[test]
+    fn value_bits_json_fallback_and_rejection() {
+        let j = Json::parse(r#"{"layers": {"c1": {"format": "pattern"}}}"#).unwrap();
+        let p = ExecPlan::from_json(&j).unwrap();
+        assert_eq!(p.get("c1").unwrap().value_bits, ValueBits::F32);
+        let j = Json::parse(r#"{"layers": {"c1": {"format": "csr", "value_bits": 4}}}"#).unwrap();
+        assert_eq!(
+            ExecPlan::from_json(&j).unwrap().get("c1").unwrap().value_bits,
+            ValueBits::Q4
+        );
+        let j = Json::parse(r#"{"layers": {"c1": {"format": "csr", "value_bits": 16}}}"#).unwrap();
+        assert!(ExecPlan::from_json(&j).is_none(), "unknown width must reject the plan");
+    }
+
+    /// The value axis is orthogonal to the format axis: the policy and
+    /// the declared codebook resolve per format, Dense never quantizes,
+    /// and quantized plans carry the LUT-scaled cost.
+    #[test]
+    fn value_policy_resolution_and_lut_costs() {
+        use crate::compress::qsparse::ValueBits as VB;
+        let pat = SparseFormat::Pattern;
+        assert_eq!(resolve_value_bits(ValuePolicy::F32, Some(4), pat), VB::F32);
+        assert_eq!(resolve_value_bits(ValuePolicy::Q8, None, pat), VB::Q8);
+        assert_eq!(resolve_value_bits(ValuePolicy::Q4, None, pat), VB::Q4);
+        assert_eq!(resolve_value_bits(ValuePolicy::Auto, None, pat), VB::F32);
+        assert_eq!(resolve_value_bits(ValuePolicy::Auto, Some(4), pat), VB::Q4);
+        assert_eq!(resolve_value_bits(ValuePolicy::Auto, Some(8), pat), VB::Q8);
+        assert_eq!(
+            resolve_value_bits(ValuePolicy::Q4, Some(4), SparseFormat::Dense),
+            VB::F32,
+            "dense payloads never quantize"
+        );
+
+        // plan_layer_valued: the declared codebook reaches the plan and
+        // scales cost_per_row by the LUT factor
+        let csr = random_csr(128, 64, 0.08, 1);
+        let hwio = gemm_hwio(128, 64);
+        let mut arts = LayerArtifacts::default();
+        let f32_lp =
+            plan_layer_valued(FormatPolicy::Auto, ValuePolicy::Auto, None, &csr, 196, hwio,
+                &mut arts);
+        assert_eq!(f32_lp.format, SparseFormat::Csr);
+        assert_eq!(f32_lp.value_bits, VB::F32);
+        let q4_lp = plan_layer_valued(
+            FormatPolicy::Auto,
+            ValuePolicy::Auto,
+            Some(4),
+            &csr,
+            196,
+            hwio,
+            &mut arts,
+        );
+        assert_eq!(q4_lp.format, SparseFormat::Csr, "value axis must not change the format");
+        assert_eq!(q4_lp.value_bits, VB::Q4);
+        assert!(
+            (q4_lp.cost_per_row - f32_lp.cost_per_row * COST_LUT_Q4).abs() < 1e-9,
+            "q4 cost {} vs f32 {} * {}",
+            q4_lp.cost_per_row,
+            f32_lp.cost_per_row,
+            COST_LUT_Q4
+        );
+    }
+
+    /// The PR-4 aliasing regression: two same-(kh, kw, cin) layers with
+    /// disjoint magnitude layouts must NOT share one pattern library —
+    /// the fit check re-selects for the second layer — while the same
+    /// weights (batch variants) and genuinely similar layers still hit
+    /// the cache.
+    #[test]
+    fn pattern_library_cache_respects_fit() {
+        let (kh, kw, cin, cols) = (3usize, 3usize, 2usize, 8usize);
+        let kk = kh * kw;
+        // layer A: all energy on even positions; layer B: odd positions
+        let fill = |positions: &[usize]| {
+            let mut m = vec![0.0f32; kk * cin * cols];
+            for ci in 0..cin {
+                for co in 0..cols {
+                    for (rank, &pos) in positions.iter().enumerate() {
+                        m[(pos * cin + ci) * cols + co] = 2.0 - 0.1 * rank as f32;
+                    }
+                }
+            }
+            m
+        };
+        let a = fill(&[0, 2, 4, 6]);
+        let b = fill(&[1, 3, 5, 7]);
+        let mut cache = PlanCache::default();
+        let lib_a = cache.pattern_library(kh, kw, cin, 4, cols, &a);
+        assert!(
+            pattern::library_fit(&a, kh, kw, cin, cols, 4, &lib_a) > 0.99,
+            "own library must fit its own weights"
+        );
+        // same weights again (another batch variant): cache hit
+        let lib_a2 = cache.pattern_library(kh, kw, cin, 4, cols, &a);
+        assert!(Arc::ptr_eq(&lib_a, &lib_a2), "identical weights must reuse the library");
+        // disjoint layout: must re-select, and the new library must fit
+        assert!(
+            pattern::library_fit(&b, kh, kw, cin, cols, 4, &lib_a) < LIBRARY_FIT_THRESHOLD,
+            "the regression precondition: A's library does not fit B"
+        );
+        let lib_b = cache.pattern_library(kh, kw, cin, 4, cols, &b);
+        assert!(!Arc::ptr_eq(&lib_a, &lib_b), "aliasing regression: B reused A's library");
+        assert!(pattern::library_fit(&b, kh, kw, cin, cols, 4, &lib_b) > 0.99);
+        // interleaved revisits resolve by exact fingerprint, not scan
+        // order — A still gets A's library after B entered the family
+        let lib_a3 = cache.pattern_library(kh, kw, cin, 4, cols, &a);
+        assert!(Arc::ptr_eq(&lib_a, &lib_a3), "fingerprint memo must survive new entries");
+        // and pruning B with its own library keeps B's positions
+        let mut pruned = b.clone();
+        pattern::prune_with_library(&mut pruned, kh, kw, cin, cols, 0.6, 4, &lib_b);
+        let kept_positions: Vec<usize> = (0..kk)
+            .filter(|&pos| (0..cin * cols).any(|kn| {
+                let (ci, co) = (kn / cols, kn % cols);
+                pruned[(pos * cin + ci) * cols + co] != 0.0
+            }))
+            .collect();
+        assert!(
+            kept_positions.iter().all(|p| p % 2 == 1),
+            "B must keep its own (odd) positions, kept {kept_positions:?}"
+        );
     }
 
     #[test]

@@ -23,6 +23,12 @@ pub struct ManifestEntry {
     /// Planned per-layer formats; `None` for old manifests (pre-planner)
     /// or dense variants.
     pub exec_plan: Option<ExecPlan>,
+    /// Converged serving-cost calibration (µs per plan cost unit) from a
+    /// previous serving run of this entry — `serve::Scheduler`s seeded
+    /// with it are deadline-accurate from their first batch instead of
+    /// re-learning the scale online. `None` for old manifests or entries
+    /// never served.
+    pub us_per_unit: Option<f64>,
 }
 
 #[derive(Debug, Clone, Default)]
@@ -74,6 +80,10 @@ impl Manifest {
                     .and_then(|v| v.as_f64())
                     .unwrap_or(1.0),
                 exec_plan: m.get("exec_plan").and_then(ExecPlan::from_json),
+                us_per_unit: m
+                    .get("us_per_unit")
+                    .and_then(|v| v.as_f64())
+                    .filter(|u| u.is_finite() && *u > 0.0),
             });
         }
         Ok(Manifest { models })
@@ -102,10 +112,33 @@ impl Manifest {
                 if let Some(plan) = &e.exec_plan {
                     kv.push(("exec_plan", plan.to_json()));
                 }
+                if let Some(u) = e.us_per_unit {
+                    kv.push(("us_per_unit", Json::Num(u)));
+                }
                 obj(kv)
             })
             .collect();
         obj(vec![("format", Json::Num(1.0)), ("models", Json::Arr(models))])
+    }
+
+    /// Record a converged serving-cost calibration (µs per plan cost
+    /// unit, from `serve::Scheduler::us_per_unit` /
+    /// `MetricsSnapshot::us_per_unit`) on every batch variant of
+    /// (model, variant), so the next process seeds its schedulers
+    /// deadline-accurate. Returns how many entries were updated
+    /// (0 for unknown models or a non-positive calibration).
+    pub fn record_calibration(&mut self, name: &str, variant: &str, us_per_unit: f64) -> usize {
+        if !us_per_unit.is_finite() || us_per_unit <= 0.0 {
+            return 0;
+        }
+        let mut n = 0;
+        for e in self.models.iter_mut() {
+            if e.name == name && e.variant == variant {
+                e.us_per_unit = Some(us_per_unit);
+                n += 1;
+            }
+        }
+        n
     }
 
     /// Distinct (name, variant) pairs.
@@ -218,6 +251,7 @@ mod tests {
 
     #[test]
     fn exec_plan_round_trips_through_json() {
+        use crate::compress::qsparse::ValueBits;
         use crate::planner::{LayerPlan, SparseFormat};
         let mut plan = ExecPlan::default();
         plan.layers.insert("c1".into(), LayerPlan::csr());
@@ -225,6 +259,7 @@ mod tests {
             "f1".into(),
             LayerPlan {
                 format: SparseFormat::Bsr { br: 4, bc: 4 },
+                value_bits: ValueBits::Q8,
                 reorder: true,
                 parallel_cutover: 192,
                 cost_per_row: 57.6,
@@ -238,6 +273,27 @@ mod tests {
         assert_eq!(back.models, m.models);
         assert_eq!(back.models[1].exec_plan.as_ref(), Some(&plan));
         assert!(back.models[0].exec_plan.is_none());
+    }
+
+    /// The serving-cost calibration satellite: `us_per_unit` round-trips
+    /// next to `exec_plan`, old manifests load without it, and junk
+    /// values are dropped rather than poisoning fresh schedulers.
+    #[test]
+    fn us_per_unit_roundtrip_and_fallback() {
+        let mut m = Manifest::parse(SAMPLE).unwrap();
+        assert!(m.models.iter().all(|e| e.us_per_unit.is_none()), "old manifests: None");
+        assert_eq!(m.record_calibration("lenet5", "sparse", 0.37), 1);
+        assert_eq!(m.record_calibration("lenet5", "nope", 0.37), 0);
+        assert_eq!(m.record_calibration("lenet5", "dense", -1.0), 0, "junk rejected");
+        let text = m.to_json().to_string_pretty();
+        let back = Manifest::parse(&text).unwrap();
+        assert_eq!(back.models[1].us_per_unit, Some(0.37));
+        assert_eq!(back.models[0].us_per_unit, None);
+        // junk in the file is filtered at parse time
+        let entry = r#"{"name": "m", "batch": 1, "path": "p", "input_shape": [1, 2],
+                        "us_per_unit": -3.0}"#;
+        let m = Manifest::parse(&wrap(entry)).unwrap();
+        assert_eq!(m.models[0].us_per_unit, None);
     }
 
     #[test]

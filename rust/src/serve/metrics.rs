@@ -20,6 +20,11 @@ pub struct Metrics {
     pub backend_errors: u64,
     /// requests answered with a deadline-miss outcome (never executed).
     pub deadline_misses: u64,
+    /// The scheduler's current units→µs calibration (seeded at startup
+    /// from a persisted manifest value, refined per executed batch) —
+    /// surfaced so callers can persist it back
+    /// (`runtime::Manifest::record_calibration`).
+    pub us_per_unit: Option<f64>,
 }
 
 /// Plain-data view of one model's [`Metrics`] at a point in time — what
@@ -39,6 +44,8 @@ pub struct MetricsSnapshot {
     pub throughput_rps: f64,
     pub latency: Option<Summary>,
     pub exec: Option<Summary>,
+    /// Scheduler units→µs calibration at snapshot time (persistable).
+    pub us_per_unit: Option<f64>,
 }
 
 impl Metrics {
@@ -54,7 +61,15 @@ impl Metrics {
             total_slots: 0,
             backend_errors: 0,
             deadline_misses: 0,
+            us_per_unit: None,
         }
+    }
+
+    /// Publish the scheduler's current units→µs calibration (the worker
+    /// calls this at startup with the seeded value and after each
+    /// observed batch).
+    pub fn record_calibration(&mut self, us_per_unit: Option<f64>) {
+        self.us_per_unit = us_per_unit;
     }
 
     pub fn record_request(&mut self, latency_us: f64) {
@@ -120,6 +135,7 @@ impl Metrics {
             throughput_rps: self.throughput_rps(),
             latency: self.latency_summary(),
             exec: self.exec_summary(),
+            us_per_unit: self.us_per_unit,
         }
     }
 
@@ -150,6 +166,9 @@ impl Metrics {
                 s.p50 / 1e3,
                 s.mean / 1e3
             ));
+        }
+        if let Some(u) = self.us_per_unit {
+            out.push_str(&format!("calib    us_per_unit={u:.4}\n"));
         }
         out
     }

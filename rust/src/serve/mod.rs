@@ -67,6 +67,13 @@ pub struct QueueConfig {
     /// provides one. Off = always the plain `fallback` policy (the
     /// pre-planner behavior, kept for A/B benchmarking).
     pub planned: bool,
+    /// Seed the scheduler's units→µs scale (µs per plan cost unit) so a
+    /// fresh process is deadline-accurate from its first batch. `None`
+    /// falls back to the backend's persisted calibration
+    /// ([`crate::api::Backend::calibration`], e.g. the artifact
+    /// manifest's `us_per_unit`), then to online learning. Ignored when
+    /// `planned` is off.
+    pub calibration: Option<f64>,
 }
 
 impl Default for QueueConfig {
@@ -76,6 +83,7 @@ impl Default for QueueConfig {
             max_wait_us: 2_000,
             fallback: BatchPolicy::PadToFit,
             planned: true,
+            calibration: None,
         }
     }
 }
@@ -492,6 +500,15 @@ fn worker_loop(
     let classes = backend.classes();
     let plan_costs = if cfg.planned { backend.plan_costs() } else { Vec::new() };
     let mut sched = Scheduler::new(batches.clone(), plan_costs.clone(), cfg.fallback);
+    if cfg.planned {
+        // seed the units→µs scale: explicit config first, then the
+        // backend's persisted calibration (artifact manifest) — a seeded
+        // scheduler is deadline-accurate before its first observation
+        if let Some(c) = cfg.calibration.or_else(|| backend.calibration()) {
+            sched.calibrate(c);
+        }
+    }
+    metrics.lock().unwrap().record_calibration(sched.us_per_unit());
     let _ = ready.send(Ok(ReadyInfo {
         input_shape,
         classes,
@@ -667,6 +684,7 @@ fn flush(
         let exec_us = t0.elapsed().as_secs_f64() * 1e6;
         sched.observe(b, exec_us);
         let mut m = metrics.lock().unwrap();
+        m.record_calibration(sched.us_per_unit());
         m.record_batch(b, take, exec_us);
         for (i, r) in queue.drain(..take).enumerate() {
             let latency_us = r.enqueued.elapsed().as_secs_f64() * 1e6;

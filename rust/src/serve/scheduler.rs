@@ -100,12 +100,21 @@ impl Scheduler {
         !self.available.is_empty() && self.available.iter().all(|b| self.units.contains_key(b))
     }
 
-    /// Seed the units→µs scale directly (tests, benches, or a known
-    /// device profile); observations keep refining it.
+    /// Seed the units→µs scale directly (a persisted calibration from
+    /// the artifact manifest, tests, benches, or a known device
+    /// profile); observations keep refining it.
     pub fn calibrate(&mut self, us_per_unit: f64) {
         if us_per_unit > 0.0 {
             self.us_per_unit = Some(us_per_unit);
         }
+    }
+
+    /// The current units→µs scale (EWMA-converged over observations, or
+    /// the seeded value before any) — what gets persisted into the
+    /// artifact manifest (`Manifest::record_calibration`) so the next
+    /// process is deadline-accurate from its first batch.
+    pub fn us_per_unit(&self) -> Option<f64> {
+        self.us_per_unit
     }
 
     /// Feed back one executed batch's wall-clock time. Updates the

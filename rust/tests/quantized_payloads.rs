@@ -1,0 +1,204 @@
+//! End-to-end coverage of quantized sparse payloads through the public
+//! API: Auto planning + an exported codebook select a quantized pattern
+//! payload on a ResNet-50-shaped layer, the engine executes it through
+//! the LUT kernels within the fit's error bound, plans round-trip the
+//! manifest with the value axis, and q4 pattern payloads land under 40%
+//! of the f32 bytes — the issue's acceptance criteria, verbatim.
+
+use cadnn::api::Engine;
+use cadnn::compress::csr::CsrMatrix;
+use cadnn::compress::pattern::prune_patterns;
+use cadnn::compress::profile::{PruneStructure, SparsityProfile};
+use cadnn::compress::qsparse::{QPattern, ValueBits};
+use cadnn::compress::size::format_bytes_valued;
+use cadnn::compress::PatternMatrix;
+use cadnn::exec::Personality;
+use cadnn::ir::ops::{ActKind, Op};
+use cadnn::ir::{Graph, Shape};
+use cadnn::planner::{FormatPolicy, SparseFormat, ValuePolicy};
+use cadnn::runtime::Manifest;
+use cadnn::util::rng::Rng;
+
+/// A ResNet-50-shaped residual-stage fragment: 3x3 conv (the pattern
+/// regime) into a 1x1 projection, both pruned, with a pooled classifier
+/// head. Channel counts are scaled down from (256, 256) so the test
+/// stays unit-test fast while keeping the 3x3-vs-1x1 planning contrast.
+fn resnet_shaped() -> Graph {
+    let relu = || Op::Activation { kind: ActKind::Relu };
+    let mut g = Graph::new("res_quant", Shape::nhwc(1, 14, 14, 16));
+    let c1 = g.add("res_3x3", Op::conv(3, 3, 16, 32, 1, 1), vec![0]);
+    let b1 = g.add("res_3x3_bn", Op::BatchNorm { c: 32 }, vec![c1]);
+    let r1 = g.add("res_3x3_relu", relu(), vec![b1]);
+    let c2 = g.add("res_1x1", Op::conv(1, 1, 32, 16, 1, 0), vec![r1]);
+    let b2 = g.add("res_1x1_bn", Op::BatchNorm { c: 16 }, vec![c2]);
+    let r2 = g.add("res_1x1_relu", relu(), vec![b2]);
+    let p = g.add("gap", Op::GlobalAvgPool, vec![r2]);
+    g.add("fc", Op::fc(16, 8), vec![p]);
+    g.validate().unwrap();
+    g
+}
+
+fn engine(profile: &SparsityProfile, vp: ValuePolicy) -> Engine {
+    Engine::from_graph(resnet_shaped())
+        .personality(Personality::CadnnSparse)
+        .sparsity_profile(profile.clone())
+        .sparse_format(FormatPolicy::Auto)
+        .value_bits(vp)
+        .build()
+        .unwrap()
+}
+
+fn image(len: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    let mut v = vec![0.0f32; len];
+    rng.fill_normal(&mut v, 0.5);
+    v
+}
+
+/// The acceptance path: pattern-pruned profile + exported codebook →
+/// Auto plans a quantized pattern payload → LUT execution within the
+/// quantization error bound of the f32 path.
+#[test]
+fn auto_with_exported_codebook_selects_and_executes_quantized_pattern() {
+    let g = resnet_shaped();
+    let profile =
+        SparsityProfile::uniform_structured(&g, 0.8, PruneStructure::Pattern { entries: 4 });
+    let qprofile = profile.clone().with_uniform_quant(4);
+
+    let f32_engine = engine(&profile, ValuePolicy::Auto);
+    let q_engine = engine(&qprofile, ValuePolicy::Auto);
+
+    let fplan = f32_engine.exec_plan().unwrap();
+    let qplan = q_engine.exec_plan().unwrap();
+    let f3 = fplan.get("res_3x3").unwrap();
+    let q3 = qplan.get("res_3x3").unwrap();
+    assert_eq!(f3.format, SparseFormat::Pattern, "{f3:?}");
+    assert_eq!(f3.value_bits, ValueBits::F32, "no codebook -> f32 payload");
+    assert_eq!(q3.format, SparseFormat::Pattern, "{q3:?}");
+    assert_eq!(q3.value_bits, ValueBits::Q4, "exported codebook -> quantized payload");
+    // the plan prices the LUT gather, so serving costs stay honest
+    assert!(q3.cost_per_row > f3.cost_per_row);
+
+    // execution: same pruned weights, value store quantized — outputs
+    // within a loose propagated bound, and actually different (the LUT
+    // path really ran on 4-bit values)
+    let img = image(f32_engine.input_len(), 5);
+    let a = f32_engine.session().run(&img).unwrap();
+    let b = q_engine.session().run(&img).unwrap();
+    let max_diff = a.iter().zip(&b).map(|(x, y)| (x - y).abs()).fold(0f32, f32::max);
+    assert!(max_diff > 0.0, "q4 payload must differ from f32 on rich values");
+    // kernel-level bit-identity and the instance-level propagated bound
+    // are tested elsewhere; here a loose sanity bound distinguishes
+    // quantization-sized drift from a broken gather (which diverges at
+    // the scale of the logits themselves)
+    assert!(max_diff < 1.0, "q4 drift {max_diff} is not quantization-sized");
+}
+
+/// The Q-index round-trip is bit-identical: the packed index stream
+/// reconstructs exactly the values the fit assigned (pack/unpack is
+/// lossless), and a second quantization pass over the dequantized
+/// payload is a fixed point — all loss happens in the first fit, none
+/// in the index path or the execution.
+#[test]
+fn q_index_roundtrip_bit_identical() {
+    let (kh, kw, cin, cout) = (3usize, 3usize, 16usize, 64usize);
+    let mut rng = Rng::new(11);
+    let mut w = vec![0.0f32; kh * kw * cin * cout];
+    rng.fill_normal(&mut w, 0.5);
+    prune_patterns(&mut w, kh, kw, cin, cout, 0.8, 4, 8);
+    let pat = PatternMatrix::from_dense(&w, kh, kw, cin, cout);
+    for bits in [4u8, 8] {
+        let q = QPattern::from_pattern(&pat, bits);
+        // unpacked indices gather to exactly the dequantized values
+        let idx = q.values.unpack_indices();
+        let deq = q.to_pattern();
+        deq.validate().unwrap();
+        for (i, &ix) in idx.iter().enumerate() {
+            assert_eq!(q.values.codebook[ix as usize].to_bits(), deq.values[i].to_bits());
+        }
+        // a second pass is a lossless fixed point
+        let q2 = QPattern::from_pattern(&deq, bits);
+        assert_eq!(q2.values.error_bound(), 0.0);
+        assert_eq!(q2.to_pattern().values, deq.values, "second pass must be bit-identical");
+    }
+}
+
+/// The storage acceptance: on a pattern-pruned ResNet-50-shaped layer
+/// (3x3, cin=256→64 scaled), the reported q4 pattern payload bytes —
+/// codebook charged — are under 40% of the f32 pattern payload.
+#[test]
+fn q4_pattern_disk_bytes_under_40_percent() {
+    let (kh, kw, cin, cout) = (3usize, 3usize, 64usize, 64usize);
+    let mut rng = Rng::new(17);
+    let mut w = vec![0.0f32; kh * kw * cin * cout];
+    rng.fill_normal(&mut w, 0.5);
+    prune_patterns(&mut w, kh, kw, cin, cout, 0.9, 4, 8);
+    let csr = CsrMatrix::from_dense(&w, kh * kw * cin, cout);
+    let hwio = [kh, kw, cin, cout];
+    let f32_rows = format_bytes_valued(&csr, hwio, ValueBits::F32);
+    let q4_rows = format_bytes_valued(&csr, hwio, ValueBits::Q4);
+    let f32_pat = f32_rows.iter().find(|r| r.format == "pattern").unwrap();
+    let q4_pat = q4_rows.iter().find(|r| r.format == "pattern+q4").unwrap();
+    assert!(
+        (q4_pat.bytes_idx16 as f64) < 0.4 * f32_pat.bytes_idx16 as f64,
+        "q4 {} vs f32 {} ({:.1}%)",
+        q4_pat.bytes_idx16,
+        f32_pat.bytes_idx16,
+        100.0 * q4_pat.bytes_idx16 as f64 / f32_pat.bytes_idx16 as f64
+    );
+}
+
+/// Quantized plans survive the artifact manifest; pre-quantization
+/// manifests load with f32 payload plans.
+#[test]
+fn quantized_plan_survives_manifest_roundtrip() {
+    let g = resnet_shaped();
+    let profile = SparsityProfile::uniform_structured(
+        &g,
+        0.8,
+        PruneStructure::Pattern { entries: 4 },
+    )
+    .with_uniform_quant(4);
+    let plan = engine(&profile, ValuePolicy::Auto).exec_plan().unwrap();
+    assert!(plan.layers.values().any(|lp| lp.value_bits == ValueBits::Q4));
+
+    let mut manifest = Manifest::parse(
+        r#"{"format": 1, "models": [
+            {"name": "m", "variant": "sparse", "batch": 1, "path": "p",
+             "input_shape": [1, 14, 14, 16]}
+        ]}"#,
+    )
+    .unwrap();
+    manifest.models[0].exec_plan = Some(plan.clone());
+    let back = Manifest::parse(&manifest.to_json().to_string_pretty()).unwrap();
+    assert_eq!(back.models[0].exec_plan.as_ref(), Some(&plan));
+}
+
+/// Pinned value policies through the engine: Q4/Q8/F32 all compute the
+/// same function within quantization tolerance on an element-pruned
+/// model (CSR payloads riding the LUT kernels).
+#[test]
+fn pinned_value_policies_agree_on_csr_payloads() {
+    let g = resnet_shaped();
+    let profile = SparsityProfile::uniform(&g, 0.9);
+    let f = engine(&profile, ValuePolicy::F32);
+    let q8 = engine(&profile, ValuePolicy::Q8);
+    let q4 = engine(&profile, ValuePolicy::Q4);
+    // deep scattered pruning keeps CSR; the pinned policies quantize it
+    for (e, want) in [(&q8, ValueBits::Q8), (&q4, ValueBits::Q4)] {
+        let plan = e.exec_plan().unwrap();
+        for (name, lp) in &plan.layers {
+            if lp.format != SparseFormat::Dense {
+                assert_eq!(lp.value_bits, want, "{name}: {lp:?}");
+            }
+        }
+    }
+    let img = image(f.input_len(), 29);
+    let a = f.session().run(&img).unwrap();
+    let b = q8.session().run(&img).unwrap();
+    let c = q4.session().run(&img).unwrap();
+    for i in 0..a.len() {
+        assert!((a[i] - b[i]).abs() < 0.1, "f32 vs q8 at {i}: {} vs {}", a[i], b[i]);
+        assert!((a[i] - c[i]).abs() < 1.0, "f32 vs q4 at {i}: {} vs {}", a[i], c[i]);
+    }
+}

@@ -34,6 +34,48 @@ fn sparse_engine(batches: &[usize]) -> Engine {
         .unwrap()
 }
 
+/// The calibration-persistence satellite: a worker seeded with a
+/// units→µs scale reports it before any request runs (so a fresh
+/// process's scheduler is deadline-accurate from its first batch), and
+/// the converged value is exposed for persisting back into the artifact
+/// manifest next to `exec_plan`.
+#[test]
+fn calibration_seeds_fresh_schedulers_and_is_persistable() {
+    let sparse = sparse_engine(&[1, 2, 4]);
+    assert!(!sparse.plan_costs().is_empty(), "sparse engine must carry plan costs");
+    assert_eq!(sparse.calibration(), None, "native engines persist no calibration");
+    let seeded = Server::builder()
+        .engine_with("m", &sparse, QueueConfig { calibration: Some(0.42), ..qcfg() })
+        .build()
+        .unwrap();
+    // before ANY request: the seeded scale is live and snapshotable
+    assert_eq!(seeded.stats()["m"].us_per_unit, Some(0.42));
+    // after traffic, the EWMA keeps refining but stays present
+    let img = image(28 * 28, 9);
+    seeded.infer(ServeRequest::new("m", img.clone())).unwrap().logits().unwrap();
+    let converged = seeded.stats()["m"].us_per_unit.expect("observations keep it live");
+    assert!(converged > 0.0);
+    seeded.shutdown().unwrap();
+
+    // the persistence path: the converged value round-trips through the
+    // artifact manifest next to exec_plan
+    let mut manifest = cadnn::runtime::Manifest::parse(
+        r#"{"format": 1, "models": [
+            {"name": "lenet5", "variant": "sparse", "batch": 1, "path": "p",
+             "input_shape": [1, 28, 28, 1]}
+        ]}"#,
+    )
+    .unwrap();
+    assert_eq!(manifest.record_calibration("lenet5", "sparse", converged), 1);
+    let back = cadnn::runtime::Manifest::parse(&manifest.to_json().to_string_pretty()).unwrap();
+    assert_eq!(back.models[0].us_per_unit, Some(converged));
+
+    // an unseeded worker starts uncalibrated (online learning only)
+    let plain = Server::builder().engine_with("m", &sparse, qcfg()).build().unwrap();
+    assert_eq!(plain.stats()["m"].us_per_unit, None);
+    plain.shutdown().unwrap();
+}
+
 /// Two registered engines, interleaved requests: every response routes
 /// back from the model its request named, per-model stats stay separate,
 /// and the dense model's answers match a direct session run.

@@ -215,6 +215,7 @@ fn exec_plan_survives_a_manifest_round_trip() {
         "c2".into(),
         LayerPlan {
             format: SparseFormat::Bsr { br: 4, bc: 4 },
+            value_bits: cadnn::compress::qsparse::ValueBits::Q8,
             reorder: true,
             parallel_cutover: 256,
             cost_per_row: 172.8,
@@ -225,6 +226,7 @@ fn exec_plan_survives_a_manifest_round_trip() {
         "c3".into(),
         LayerPlan {
             format: SparseFormat::Pattern,
+            value_bits: cadnn::compress::qsparse::ValueBits::Q4,
             parallel_cutover: 128,
             cost_per_row: 96.5,
             rows_per_image: 100,
