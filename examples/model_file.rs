@@ -1,0 +1,69 @@
+//! User-defined models end to end: parse a `.cadnn` file, plan its
+//! hinted layers, and serve it — no Rust code per architecture.
+//!
+//! Defaults to the checked-in golden `models/resnet50.cadnn` (hint-free,
+//! so the paper's §3 profile is attached for planning); point it at
+//! your own file to run the full compress → plan → serve pipeline on a
+//! model this repo has never seen (see `docs/MODEL_FORMAT.md`).
+//!
+//! ```sh
+//! cargo run --release --example model_file [-- path/to/model.cadnn]
+//! ```
+
+use anyhow::Result;
+use cadnn::api::Engine;
+use cadnn::compress::profile::paper_profile;
+use cadnn::exec::Personality;
+use cadnn::front;
+use cadnn::util::rng::Rng;
+use cadnn::util::Stopwatch;
+
+fn main() -> Result<()> {
+    let path = std::env::args().nth(1).unwrap_or_else(|| "models/resnet50.cadnn".into());
+
+    // what did we just read? (parse once here for reporting; the
+    // builder parses again internally)
+    let parsed = front::parse_file(&path)?;
+    println!(
+        "{path}: model '{}', {} nodes, {} weights, {} inline hints",
+        parsed.graph.name,
+        parsed.graph.nodes.len(),
+        parsed.graph.weight_count(),
+        parsed.profile.layers.len()
+    );
+
+    // hinted files carry their own per-layer profile; hint-free files
+    // get the paper's §3 profile so the planner has something to chew on
+    let mut builder = Engine::from_model_file(&path).personality(Personality::CadnnSparse);
+    if parsed.profile.is_empty() {
+        builder = builder.sparsity_profile(paper_profile(&parsed.graph));
+    }
+    let engine = builder.build()?;
+    println!(
+        "engine: {} — input {:?} -> {} classes",
+        engine.name(),
+        engine.input_shape(),
+        engine.classes()
+    );
+    if let Some(plan) = engine.exec_plan() {
+        println!("plan: {} pruned layers, formats {:?}", plan.len(), plan.format_counts());
+    }
+
+    // warmup + one timed inference on a deterministic random image
+    let mut image = vec![0.0f32; engine.input_len()];
+    Rng::new(7).fill_normal(&mut image, 0.5);
+    let mut session = engine.session();
+    let _ = session.run(&image)?;
+    let sw = Stopwatch::new();
+    let out = session.run(&image)?;
+    let us = sw.elapsed_us();
+
+    let pred = out
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap();
+    println!("prediction: class {pred} in {:.2} ms", us / 1e3);
+    Ok(())
+}

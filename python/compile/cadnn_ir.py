@@ -1,0 +1,733 @@
+"""Pure-python reader for the `.cadnn` textual model IR.
+
+A transliteration of the Rust front-end (`rust/src/front/`, grammar in
+docs/MODEL_FORMAT.md) so the python compression pipeline can consume the
+same user-defined model files the Rust planner and server do — same
+tokenizer, same per-op validation, same shape inference, same per-layer
+weight accounting. No jax/numpy: this is pure accounting, importable
+from anywhere (compress_run uses it for `--model-file` reports).
+
+Malformed input raises :class:`ParseError` (a ``ValueError``) whose
+message matches the Rust diagnostic shape:
+``parse error at L:C near 'tok': reason``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+# Anti-DoS caps — keep in sync with rust/src/front/parser.rs.
+MAX_RANK = 8
+MAX_DIM = 1 << 20
+MAX_NUMEL = 1 << 31
+MAX_WEIGHTS = 1 << 31
+MAX_KERNEL = 1 << 10
+MAX_RECEPTIVE = 1 << 20
+MAX_NODES = 2048
+MAX_ATTR_INT = 1 << 31
+
+
+class ParseError(ValueError):
+    def __init__(self, line, col, token, reason):
+        self.line, self.col, self.token, self.reason = line, col, token, reason
+        super().__init__(f"parse error at {line}:{col} near '{token}': {reason}")
+
+
+# ---------------------------------------------------------------- lexer
+
+_PUNCT = {"=": "eq", "(": "lparen", ")": "rparen", "[": "lbracket",
+          "]": "rbracket", ",": "comma"}
+
+
+@dataclass
+class Token:
+    kind: str  # ident|str|int|pair|float|eq|lparen|rparen|lbracket|rbracket|comma|newline|eof
+    value: object
+    line: int
+    col: int
+
+    def display(self):
+        if self.kind == "str":
+            return f'"{self.value}"'
+        if self.kind == "pair":
+            return f"{self.value[0]}x{self.value[1]}"
+        if self.kind == "newline":
+            return "<newline>"
+        if self.kind == "eof":
+            return "<eof>"
+        return str(self.value)
+
+
+def lex(src):
+    toks, line, col, i, n = [], 1, 1, 0, len(src)
+    while i < n:
+        c = src[i]
+        tl, tc = line, col
+        if c == "\n":
+            toks.append(Token("newline", "\n", tl, tc))
+            i, line, col = i + 1, line + 1, 1
+        elif c in " \t\r":
+            i, col = i + 1, col + 1
+        elif c == "#":
+            while i < n and src[i] != "\n":
+                i, col = i + 1, col + 1
+        elif c in _PUNCT:
+            toks.append(Token(_PUNCT[c], c, tl, tc))
+            i, col = i + 1, col + 1
+        elif c == '"':
+            i, col = i + 1, col + 1
+            out = []
+            while True:
+                if i >= n or src[i] == "\n":
+                    raise ParseError(tl, tc, '"', "unterminated string")
+                if src[i] == '"':
+                    i, col = i + 1, col + 1
+                    break
+                if src[i] == "\\":
+                    if i + 1 >= n:
+                        raise ParseError(tl, tc, '"', "unterminated string")
+                    e = src[i + 1]
+                    if e not in ('"', "\\"):
+                        raise ParseError(line, col, f"\\{e}",
+                                         'unknown escape (use \\" or \\\\)')
+                    out.append(e)
+                    i, col = i + 2, col + 2
+                else:
+                    out.append(src[i])
+                    i, col = i + 1, col + 1
+            toks.append(Token("str", "".join(out), tl, tc))
+        elif c.isdigit():
+            j = i
+            while j < n and src[j].isdigit():
+                j += 1
+            a = src[i:j]
+            if j + 1 < n and src[j] == "." and src[j + 1].isdigit():
+                k = j + 1
+                while k < n and src[k].isdigit():
+                    k += 1
+                tok = Token("float", float(f"{a}.{src[j + 1:k]}"), tl, tc)
+                j = k
+            elif j + 1 < n and src[j] == "x" and src[j + 1].isdigit():
+                k = j + 1
+                while k < n and src[k].isdigit():
+                    k += 1
+                x, y = int(a), int(src[j + 1:k])
+                if x >= 2**64 or y >= 2**64:
+                    raise ParseError(tl, tc, f"{a}x{src[j + 1:k]}",
+                                     "dimension pair too large")
+                tok = Token("pair", (x, y), tl, tc)
+                j = k
+            else:
+                v = int(a)
+                if v >= 2**64:
+                    raise ParseError(tl, tc, a, "integer literal too large")
+                tok = Token("int", v, tl, tc)
+            col += j - i
+            i = j
+            toks.append(tok)
+        elif c.isascii() and (c.isalpha() or c == "_"):
+            j = i
+            while j < n and src[j].isascii() and (src[j].isalnum() or src[j] == "_"):
+                j += 1
+            toks.append(Token("ident", src[i:j], tl, tc))
+            col += j - i
+            i = j
+        else:
+            raise ParseError(tl, tc, c, "unexpected character")
+    toks.append(Token("eof", "", line, col))
+    return toks
+
+
+# --------------------------------------------------------------- model
+
+
+@dataclass
+class Node:
+    name: str
+    op: str          # op name as written (canonical, e.g. "conv2d")
+    inputs: list     # node indices
+    shape: list      # output shape
+    params: dict     # op attributes (kh, kw, cout, stride, ...)
+    weight_count: int
+    aux_params: int
+    prunable: bool
+
+
+@dataclass
+class Model:
+    name: str
+    nodes: list
+    output: int
+    # per-layer hints keyed by node name
+    sparsity: dict = field(default_factory=dict)
+    structures: dict = field(default_factory=dict)
+    quant: dict = field(default_factory=dict)
+
+    def weight_total(self):
+        return sum(nd.weight_count for nd in self.nodes)
+
+    def prunable_nodes(self):
+        return [nd for nd in self.nodes if nd.prunable]
+
+
+def _prod(dims):
+    out = 1
+    for d in dims:
+        out *= d
+    return out
+
+
+def parse_structure(label):
+    """`element` / `block<R>x<C>` / `pattern<N>` → label, or None."""
+    if label == "element":
+        return label
+    if label.startswith("block"):
+        body = label[len("block"):].split("x")
+        if len(body) == 2 and all(p.isdigit() and int(p) > 0 for p in body):
+            return label
+    if label.startswith("pattern") and label[len("pattern"):].isdigit():
+        if int(label[len("pattern"):]) > 0:
+            return label
+    return None
+
+
+# --------------------------------------------------------------- parser
+
+
+class _Parser:
+    def __init__(self, toks):
+        self.toks = toks
+        self.pos = 0
+
+    def peek(self):
+        return self.toks[self.pos]
+
+    def next(self):
+        t = self.toks[self.pos]
+        if t.kind != "eof":
+            self.pos += 1
+        return t
+
+    def err(self, t, reason):
+        raise ParseError(t.line, t.col, t.display(), reason)
+
+    def skip_newlines(self):
+        while self.peek().kind == "newline":
+            self.pos += 1
+
+    def name(self, what):
+        t = self.next()
+        if t.kind not in ("ident", "str"):
+            self.err(t, f"expected {what}")
+        return t.value, t
+
+    def end_of_stmt(self):
+        t = self.next()
+        if t.kind not in ("newline", "eof"):
+            self.err(t, "expected end of line")
+
+    def shape_literal(self):
+        opn = self.next()
+        if opn.kind != "lbracket":
+            self.err(opn, "expected '[' to start a shape")
+        dims = []
+        while True:
+            t = self.next()
+            if t.kind != "int":
+                self.err(t, "expected a dimension (positive integer)")
+            if not 1 <= t.value <= MAX_DIM:
+                self.err(t, f"dimension must be in 1..={MAX_DIM}")
+            dims.append(t.value)
+            t = self.next()
+            if t.kind == "comma":
+                continue
+            if t.kind == "rbracket":
+                break
+            self.err(t, "expected ',' or ']' in shape")
+        if len(dims) > MAX_RANK:
+            self.err(opn, f"shape rank {len(dims)} exceeds max {MAX_RANK}")
+        if _prod(dims) > MAX_NUMEL:
+            self.err(opn, f"shape has {_prod(dims)} elements; max {MAX_NUMEL}")
+        return dims
+
+    def attrs(self):
+        out = []
+        while self.peek().kind == "ident":
+            kt = self.next()
+            key = kt.value
+            if any(a[0] == key for a in out):
+                self.err(kt, f"duplicate attribute '{key}'")
+            if self.peek().kind == "eq":
+                self.pos += 1
+                if self.peek().kind == "lbracket":
+                    val = ("shape", self.shape_literal())
+                else:
+                    vt = self.next()
+                    if vt.kind not in ("int", "pair", "float", "ident"):
+                        self.err(vt, f"expected a value for '{key}'")
+                    val = (vt.kind, vt.value)
+            else:
+                val = ("flag", None)
+            out.append((key, val, kt))
+        return out
+
+
+class _Attrs:
+    def __init__(self, items):
+        self.items = items
+
+    def take(self, key):
+        for i, a in enumerate(self.items):
+            if a[0] == key:
+                return self.items.pop(i)
+        return None
+
+    def _perr(self, a, reason):
+        raise ParseError(a[2].line, a[2].col, a[0], reason)
+
+    def req_int(self, key, maximum, ot):
+        a = self.take(key)
+        if a is None:
+            raise ParseError(ot.line, ot.col, ot.display(),
+                             f"missing required attribute '{key}'")
+        kind, v = a[1]
+        if kind == "int" and 1 <= v <= maximum:
+            return v
+        if kind == "int":
+            raise ParseError(a[2].line, a[2].col, str(v),
+                             f"'{key}' must be in 1..={maximum}")
+        self._perr(a, f"'{key}' takes a positive integer")
+
+    def opt_int(self, key, default, lo, hi):
+        a = self.take(key)
+        if a is None:
+            return default
+        kind, v = a[1]
+        if kind == "int" and lo <= v <= hi:
+            return v
+        self._perr(a, f"'{key}' must be an integer in {lo}..={hi}")
+
+    def req_k(self, ot):
+        a = self.take("k")
+        if a is None:
+            raise ParseError(ot.line, ot.col, ot.display(),
+                             "missing required attribute 'k'")
+        kind, v = a[1]
+        if kind == "int":
+            kh = kw = v
+        elif kind == "pair":
+            kh, kw = v
+        else:
+            raise ParseError(a[2].line, a[2].col, "k",
+                             "'k' takes an integer or HxW pair")
+        if not (1 <= kh <= MAX_KERNEL and 1 <= kw <= MAX_KERNEL):
+            raise ParseError(a[2].line, a[2].col, "k",
+                             f"kernel dims must be in 1..={MAX_KERNEL}")
+        return kh, kw
+
+    def opt_pad(self):
+        a = self.take("pad")
+        if a is None:
+            return 0, 0
+        kind, v = a[1]
+        if kind == "int":
+            ph = pw = v
+        elif kind == "pair":
+            ph, pw = v
+        else:
+            raise ParseError(a[2].line, a[2].col, "pad",
+                             "'pad' takes an integer or HxW pair")
+        if ph > MAX_KERNEL or pw > MAX_KERNEL:
+            raise ParseError(a[2].line, a[2].col, "pad",
+                             f"padding must be <= {MAX_KERNEL}")
+        return ph, pw
+
+    def opt_pad_sym(self):
+        a = self.take("pad")
+        if a is None:
+            return 0
+        kind, v = a[1]
+        if kind == "int" and v <= MAX_KERNEL:
+            return v
+        if kind == "int":
+            raise ParseError(a[2].line, a[2].col, "pad",
+                             f"padding must be <= {MAX_KERNEL}")
+        raise ParseError(a[2].line, a[2].col, "pad",
+                         "this op takes a single symmetric 'pad' integer")
+
+    def flag(self, key):
+        a = self.take(key)
+        if a is None:
+            return False
+        if a[1][0] == "flag":
+            return True
+        self._perr(a, f"'{key}' is a flag and takes no value")
+
+    def act(self, ot):
+        a = self.take("act")
+        if a is None:
+            raise ParseError(ot.line, ot.col, ot.display(),
+                             "missing required attribute 'act'")
+        kind, v = a[1]
+        if kind == "ident" and v in ("relu", "relu6", "none"):
+            return v
+        raise ParseError(a[2].line, a[2].col, "act",
+                         "'act' must be relu, relu6 or none")
+
+    def req_shape(self, key, ot):
+        a = self.take(key)
+        if a is None:
+            raise ParseError(ot.line, ot.col, ot.display(),
+                             f"missing required attribute '{key}'")
+        if a[1][0] == "shape":
+            return a[1][1]
+        self._perr(a, f"'{key}' takes a shape like [1,56,56,64]")
+
+    def take_hints(self):
+        sp, pr, qu = self.take("sparsity"), self.take("prune"), self.take("quant")
+        if sp is None:
+            if pr is not None or qu is not None:
+                a = pr if pr is not None else qu
+                self._perr(a, "'prune'/'quant' hints require a 'sparsity' hint")
+            return None
+        kind, v = sp[1]
+        if kind == "float":
+            s = v
+        elif kind == "int":
+            s = float(v)
+        else:
+            raise ParseError(sp[2].line, sp[2].col, "sparsity",
+                             "'sparsity' takes a fraction like 0.9")
+        if not 0.0 <= s < 1.0:
+            raise ParseError(sp[2].line, sp[2].col, "sparsity",
+                             "'sparsity' must be in [0, 1)")
+        structure = "element"
+        if pr is not None:
+            kind, v = pr[1]
+            if kind != "ident":
+                raise ParseError(pr[2].line, pr[2].col, "prune",
+                                 "'prune' takes a label like block4x4")
+            structure = parse_structure(v)
+            if structure is None:
+                raise ParseError(pr[2].line, pr[2].col, v,
+                                 "unknown prune structure (element | block<R>x<C> | pattern<N>)")
+        quant = None
+        if qu is not None:
+            kind, v = qu[1]
+            if kind != "int" or not 2 <= v <= 8:
+                raise ParseError(qu[2].line, qu[2].col, "quant",
+                                 "'quant' takes a bit width in 2..=8")
+            quant = v
+        return s, structure, quant, sp[2]
+
+    def finish(self, op_name):
+        if self.items:
+            a = self.items[0]
+            self._perr(a, f"unknown attribute '{a[0]}' for op '{op_name}'")
+
+
+def _one_input(op_name, ot, ins):
+    if len(ins) != 1:
+        raise ParseError(ot.line, ot.col, op_name,
+                         f"'{op_name}' takes exactly 1 input, got {len(ins)}")
+    return ins[0]
+
+
+def _rank4(op_name, ot, s):
+    if len(s) != 4:
+        raise ParseError(ot.line, ot.col, op_name,
+                         f"'{op_name}' needs a rank-4 NHWC input, got rank {len(s)}")
+
+
+def _window_fits(op_name, ot, s, kh, kw, ph, pw):
+    if s[1] + 2 * ph < kh or s[2] + 2 * pw < kw:
+        raise ParseError(ot.line, ot.col, op_name,
+                         f"window {kh}x{kw} with pad {ph}x{pw} does not fit "
+                         f"input {s[1]}x{s[2]}")
+
+
+def _check_numel(ot, numel):
+    if numel > MAX_NUMEL:
+        raise ParseError(ot.line, ot.col, ot.display(),
+                         f"output has {numel} elements; max {MAX_NUMEL}")
+
+
+def _weights_err(ot, op_name):
+    raise ParseError(ot.line, ot.col, op_name,
+                     f"layer weight count exceeds max {MAX_WEIGHTS}")
+
+
+def _shape_str(s):
+    return "[" + ",".join(str(d) for d in s) + "]"
+
+
+def _build_op(op_name, ot, ins, attrs):
+    """Validate attributes for `op_name` and return
+    (params, out_shape, weight_count, aux_params, prunable)."""
+    if op_name in ("conv2d", "fused_conv_bn_act"):
+        s = _one_input(op_name, ot, ins)
+        _rank4(op_name, ot, s)
+        kh, kw = attrs.req_k(ot)
+        cout = attrs.req_int("cout", MAX_ATTR_INT, ot)
+        stride = attrs.opt_int("stride", 1, 1, MAX_DIM)
+        padh, padw = attrs.opt_pad()
+        groups = attrs.opt_int("groups", 1, 1, MAX_DIM)
+        cin = s[3]
+        if cin % groups or cout % groups:
+            raise ParseError(ot.line, ot.col, op_name,
+                             f"groups={groups} must divide both cin={cin} and cout={cout}")
+        _window_fits(op_name, ot, s, kh, kw, padh, padw)
+        receptive = kh * kw * (cin // groups)
+        if receptive > MAX_RECEPTIVE:
+            raise ParseError(ot.line, ot.col, op_name,
+                             f"receptive field {receptive} too large (max {MAX_RECEPTIVE})")
+        if receptive * cout > MAX_WEIGHTS:
+            _weights_err(ot, op_name)
+        oh = (s[1] + 2 * padh - kh) // stride + 1
+        ow = (s[2] + 2 * padw - kw) // stride + 1
+        _check_numel(ot, s[0] * oh * ow * cout)
+        params = dict(kh=kh, kw=kw, cin=cin, cout=cout, stride=stride,
+                      padh=padh, padw=padw, groups=groups)
+        wc = kh * kw * (cin // groups) * cout
+        if op_name == "conv2d":
+            params["bias"] = attrs.flag("bias")
+            aux = cout if params["bias"] else 0
+        else:
+            params["act"] = attrs.act(ot)
+            aux = 2 * cout
+        return params, [s[0], oh, ow, cout], wc, aux, True
+    if op_name in ("dwconv2d", "fused_dw_bn_act"):
+        s = _one_input(op_name, ot, ins)
+        _rank4(op_name, ot, s)
+        kh, kw = attrs.req_k(ot)
+        stride = attrs.opt_int("stride", 1, 1, MAX_DIM)
+        padding = attrs.opt_pad_sym()
+        c = s[3]
+        _window_fits(op_name, ot, s, kh, kw, padding, padding)
+        if kh * kw * c > MAX_WEIGHTS:
+            _weights_err(ot, op_name)
+        oh = (s[1] + 2 * padding - kh) // stride + 1
+        ow = (s[2] + 2 * padding - kw) // stride + 1
+        _check_numel(ot, s[0] * oh * ow * c)
+        params = dict(kh=kh, kw=kw, c=c, stride=stride, padding=padding)
+        aux = 0
+        if op_name == "fused_dw_bn_act":
+            params["act"] = attrs.act(ot)
+            aux = 2 * c
+        return params, [s[0], oh, ow, c], kh * kw * c, aux, False
+    if op_name == "batchnorm":
+        s = _one_input(op_name, ot, ins)
+        return dict(c=s[-1]), list(s), 0, 4 * s[-1], False
+    if op_name in ("relu", "relu6", "identity"):
+        s = _one_input(op_name, ot, ins)
+        return dict(), list(s), 0, 0, False
+    if op_name in ("maxpool", "avgpool"):
+        s = _one_input(op_name, ot, ins)
+        _rank4(op_name, ot, s)
+        k = attrs.req_int("k", MAX_KERNEL, ot)
+        stride = attrs.opt_int("stride", k, 1, MAX_DIM)
+        padding = attrs.opt_pad_sym()
+        _window_fits(op_name, ot, s, k, k, padding, padding)
+        oh = (s[1] + 2 * padding - k) // stride + 1
+        ow = (s[2] + 2 * padding - k) // stride + 1
+        _check_numel(ot, s[0] * oh * ow * s[3])
+        return (dict(k=k, stride=stride, padding=padding),
+                [s[0], oh, ow, s[3]], 0, 0, False)
+    if op_name == "global_avg_pool":
+        s = _one_input(op_name, ot, ins)
+        _rank4(op_name, ot, s)
+        return dict(), [s[0], s[3]], 0, 0, False
+    if op_name in ("dense", "fc"):
+        s = _one_input(op_name, ot, ins)
+        if len(s) != 2:
+            raise ParseError(ot.line, ot.col, op_name,
+                             f"'{op_name}' needs a rank-2 [batch, features] input "
+                             f"(got rank {len(s)}); insert flatten or "
+                             f"global_avg_pool first")
+        cout = attrs.req_int("cout", MAX_ATTR_INT, ot)
+        bias = attrs.flag("bias")
+        cin = s[1]
+        if cin * cout > MAX_WEIGHTS:
+            _weights_err(ot, op_name)
+        _check_numel(ot, s[0] * cout)
+        return (dict(cin=cin, cout=cout, bias=bias), [s[0], cout],
+                cin * cout, cout if bias else 0, True)
+    if op_name == "add":
+        if len(ins) != 2:
+            raise ParseError(ot.line, ot.col, op_name,
+                             f"'add' takes exactly 2 inputs, got {len(ins)}")
+        if ins[0] != ins[1]:
+            raise ParseError(ot.line, ot.col, op_name,
+                             f"'add' inputs must have identical shapes, got "
+                             f"{_shape_str(ins[0])} vs {_shape_str(ins[1])}")
+        return dict(), list(ins[0]), 0, 0, False
+    if op_name == "concat":
+        if len(ins) < 2:
+            raise ParseError(ot.line, ot.col, op_name,
+                             f"'concat' takes at least 2 inputs, got {len(ins)}")
+        for s in ins:
+            _rank4(op_name, ot, s)
+        s0 = ins[0]
+        for s in ins[1:]:
+            if s[:3] != s0[:3]:
+                raise ParseError(ot.line, ot.col, op_name,
+                                 f"'concat' inputs must share N/H/W, got "
+                                 f"{_shape_str(s)} vs {_shape_str(s0)}")
+        _check_numel(ot, sum(_prod(s) for s in ins))
+        c = sum(s[3] for s in ins)
+        return dict(), [s0[0], s0[1], s0[2], c], 0, 0, False
+    if op_name == "softmax":
+        s = _one_input(op_name, ot, ins)
+        return dict(), list(s), 0, 0, False
+    if op_name == "flatten":
+        s = _one_input(op_name, ot, ins)
+        return dict(), [s[0], _prod(s[1:])], 0, 0, False
+    if op_name == "gemm":
+        s = _one_input(op_name, ot, ins)
+        m = attrs.req_int("m", MAX_ATTR_INT, ot)
+        k = attrs.req_int("k", MAX_ATTR_INT, ot)
+        nn = attrs.req_int("n", MAX_ATTR_INT, ot)
+        act = attrs.act(ot)
+        epilogue = attrs.flag("epilogue")
+        out_shape = attrs.req_shape("out", ot)
+        if m * k != _prod(s):
+            raise ParseError(ot.line, ot.col, op_name,
+                             f"gemm m*k = {m * k} must equal input numel {_prod(s)}")
+        if m * nn != _prod(out_shape):
+            raise ParseError(ot.line, ot.col, op_name,
+                             f"gemm m*n = {m * nn} must equal output numel "
+                             f"{_prod(out_shape)}")
+        if k * nn > MAX_WEIGHTS:
+            _weights_err(ot, op_name)
+        aux = 2 * nn if epilogue else nn
+        return (dict(m=m, k=k, n=nn, act=act, epilogue=epilogue),
+                list(out_shape), k * nn, aux, True)
+    raise ParseError(ot.line, ot.col, op_name,
+                     f"unknown op '{op_name}' (expected conv2d, dwconv2d, batchnorm, "
+                     f"relu, relu6, identity, maxpool, avgpool, global_avg_pool, "
+                     f"dense, add, concat, softmax, flatten, fused_conv_bn_act, "
+                     f"fused_dw_bn_act, gemm)")
+
+
+def parse(src):
+    """Parse `.cadnn` source into a :class:`Model`."""
+    p = _Parser(lex(src))
+    p.skip_newlines()
+    t = p.next()
+    if not (t.kind == "ident" and t.value == "model"):
+        p.err(t, "expected 'model <name>' header")
+    model_name, _ = p.name("a model name")
+    p.end_of_stmt()
+    p.skip_newlines()
+    t = p.next()
+    if not (t.kind == "ident" and t.value == "input"):
+        p.err(t, "expected 'input <name> [dims]' after the model header")
+    input_name, _ = p.name("an input name")
+    shape = p.shape_literal()
+    p.end_of_stmt()
+
+    model = Model(model_name,
+                  [Node(input_name, "input", [], shape, {}, 0, 0, False)], 0)
+    ids = {input_name: 0}
+
+    while True:
+        p.skip_newlines()
+        if p.peek().kind == "eof":
+            break
+        name, nt = p.name("a node name or 'output'")
+        if p.peek().kind != "eq":
+            if name == "output":
+                target, tt = p.name("an output node name")
+                if target not in ids:
+                    raise ParseError(tt.line, tt.col, target,
+                                     f"output references unknown node '{target}'")
+                model.output = ids[target]
+                p.end_of_stmt()
+                p.skip_newlines()
+                if p.peek().kind != "eof":
+                    p.err(p.peek(), "'output' must be the last statement")
+                break
+            if name == "input":
+                p.err(nt, "duplicate 'input' statement (a model has exactly one)")
+            p.err(p.peek(), f"expected '=' after node name '{name}'")
+        if name in ids:
+            p.err(nt, f"duplicate node name '{name}'")
+        p.pos += 1  # consume '='
+        ot = p.next()
+        if ot.kind != "ident":
+            p.err(ot, "expected an op name")
+        op_name = ot.value
+        t = p.next()
+        if t.kind != "lparen":
+            p.err(t, f"expected '(' after op '{op_name}'")
+        args = []
+        if p.peek().kind == "rparen":
+            p.err(p.next(), f"'{op_name}' needs at least one input")
+        while True:
+            an, at = p.name("an op input name")
+            if an not in ids:
+                raise ParseError(at.line, at.col, an,
+                                 f"unknown input '{an}' (nodes must be defined before use)")
+            args.append(ids[an])
+            t = p.next()
+            if t.kind == "comma":
+                continue
+            if t.kind == "rparen":
+                break
+            p.err(t, "expected ',' or ')' in op inputs")
+        attrs = _Attrs(p.attrs())
+        hints = attrs.take_hints()
+        if len(model.nodes) >= MAX_NODES:
+            raise ParseError(nt.line, nt.col, name,
+                             f"model too large (max {MAX_NODES} nodes)")
+        ins = [model.nodes[i].shape for i in args]
+        params, out_shape, wc, aux, prunable = _build_op(op_name, ot, ins, attrs)
+        attrs.finish(op_name)
+        if hints is not None:
+            s, structure, quant, st = hints
+            if not prunable:
+                raise ParseError(st.line, st.col, "sparsity",
+                                 f"sparsity hints only apply to weight layers; "
+                                 f"'{op_name}' is not one")
+            model.sparsity[name] = s
+            if structure != "element":
+                model.structures[name] = structure
+            if quant is not None:
+                model.quant[name] = quant
+        model.output = len(model.nodes)
+        model.nodes.append(Node(name, op_name, args, out_shape, params, wc, aux,
+                                prunable))
+        ids[name] = model.output
+        p.end_of_stmt()
+    return model
+
+
+def parse_file(path):
+    with open(path, "r", encoding="utf-8") as f:
+        return parse(f.read())
+
+
+def accounting_report(model):
+    """Per-layer pruning accounting for a hinted model, shaped like the
+    `measured.<name>.per_layer` entries of compress_report.json so the
+    Rust `cadnn compress --report` reader and `SparsityProfile::from_report`
+    consume it unchanged (layer names == parsed node names)."""
+    per_layer, total, nnz = {}, 0, 0
+    for nd in model.prunable_nodes():
+        s = model.sparsity.get(nd.name, 0.0)
+        keep = int(round(nd.weight_count * (1.0 - s)))
+        per_layer[nd.name] = {
+            "nnz": keep,
+            "total": nd.weight_count,
+            "structure": model.structures.get(nd.name, "element"),
+            "quant": model.quant.get(nd.name),
+        }
+        total += nd.weight_count
+        nnz += keep
+    return {
+        "model": model.name,
+        "total_weights": total,
+        "nnz": nnz,
+        "rate": round(total / nnz, 1) if nnz else None,
+        "per_layer": per_layer,
+    }

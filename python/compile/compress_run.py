@@ -21,7 +21,15 @@ Emits artifacts/compress_report.json; `examples/compress_report.rs`
 cross-checks the accounted numbers against the Rust `compress::size`
 module.
 
+A third mode, `--model-file path/to/model.cadnn`, skips training and
+emits pure accounting for a user-defined textual model (the same
+`.cadnn` dialect the Rust front-end parses — see docs/MODEL_FORMAT.md):
+per-layer nnz/total/structure/quant derived from the file's inline
+`sparsity=` hints, keyed by the parsed node names so the Rust
+`SparsityProfile` report reader matches layers without renaming.
+
 Usage: python -m compile.compress_run [--out ../artifacts/compress_report.json] [--quick]
+       python -m compile.compress_run --model-file models/resnet50.cadnn [--out ...]
 """
 
 from __future__ import annotations
@@ -34,6 +42,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import admm as A
+from . import cadnn_ir
 from . import datasets as D
 from . import model as M
 from . import train as T
@@ -189,6 +198,19 @@ def accounted():
     return out
 
 
+def model_file_accounting(path, log):
+    model = cadnn_ir.parse_file(path)
+    acc = cadnn_ir.accounting_report(model)
+    hinted = sum(1 for name in acc["per_layer"] if name in model.sparsity)
+    log(
+        f"{model.name}: {len(model.nodes)} nodes, "
+        f"{acc['total_weights']} weights across {len(acc['per_layer'])} prunable "
+        f"layers ({hinted} hinted)"
+        + (f", overall rate {acc['rate']}x" if hinted and acc["rate"] else "")
+    )
+    return acc
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="../artifacts/compress_report.json")
@@ -200,11 +222,21 @@ def main():
         help="ADMM projection constraint; the per_layer structure labels "
         "in the report record what each layer actually got",
     )
+    ap.add_argument(
+        "--model-file",
+        default=None,
+        help="accounting-only mode: read a .cadnn textual model and report "
+        "per-layer pruning from its inline sparsity hints (no training)",
+    )
     args = ap.parse_args()
-    report = {
-        "measured": {"lenet5": measured_lenet5(args.quick, print, args.granularity)},
-        "accounted": accounted(),
-    }
+    if args.model_file is not None:
+        acc = model_file_accounting(args.model_file, print)
+        report = {"model_file": {acc["model"]: acc}}
+    else:
+        report = {
+            "measured": {"lenet5": measured_lenet5(args.quick, print, args.granularity)},
+            "accounted": accounted(),
+        }
     with open(args.out, "w") as f:
         json.dump(report, f, indent=1)
     print(f"wrote {args.out}")

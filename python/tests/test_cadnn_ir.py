@@ -1,0 +1,140 @@
+"""Tests for the pure-python `.cadnn` reader (compile/cadnn_ir.py).
+
+Pins the golden models/*.cadnn files against the canonical parameter
+counts the Rust model builders pin, so the python and Rust front-ends
+cannot drift apart silently.
+"""
+
+import sys
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).parents[1]))
+from compile import cadnn_ir as C  # noqa: E402
+
+MODELS = Path(__file__).parents[2] / "models"
+
+TINY = """\
+model tiny
+input input [1,8,8,3]
+c1 = conv2d(input) k=3 cout=8 stride=1 pad=1 sparsity=0.5
+b1 = batchnorm(c1)
+r1 = relu(b1)
+p1 = maxpool(r1) k=2
+gap = global_avg_pool(p1)
+fc = dense(gap) cout=10 bias sparsity=0.8 prune=block4x4 quant=4
+out = softmax(fc)
+output out
+"""
+
+
+def test_parses_tiny_model():
+    m = C.parse(TINY)
+    assert m.name == "tiny"
+    assert [nd.name for nd in m.nodes[:3]] == ["input", "c1", "b1"]
+    assert m.nodes[1].shape == [1, 8, 8, 8]
+    assert m.nodes[4].shape == [1, 4, 4, 8]
+    assert m.nodes[-1].shape == [1, 10]
+    assert m.nodes[m.output].name == "out"
+    assert m.nodes[1].weight_count == 3 * 3 * 3 * 8
+    assert m.nodes[6].weight_count == 80 and m.nodes[6].aux_params == 10
+
+
+def test_hints_become_profile_entries():
+    m = C.parse(TINY)
+    assert m.sparsity == {"c1": 0.5, "fc": 0.8}
+    assert m.structures == {"fc": "block4x4"}
+    assert m.quant == {"fc": 4}
+
+
+def test_accounting_report_uses_node_names():
+    acc = C.accounting_report(C.parse(TINY))
+    assert set(acc["per_layer"]) == {"c1", "fc"}
+    c1 = acc["per_layer"]["c1"]
+    assert c1["total"] == 216 and c1["nnz"] == 108
+    fc = acc["per_layer"]["fc"]
+    assert fc["structure"] == "block4x4" and fc["quant"] == 4
+
+
+GOLDEN_PINS = {
+    # name -> (exact params or (lo, hi), weight layers, final shape)
+    "lenet5": (61_706, 5, [1, 10]),
+    "mobilenet_v1": ((4_200_000, 4_280_000), 28, [1, 1000]),
+    "resnet50": (25_610_152, 54, [1, 1000]),
+    "inception_v3": ((23_600_000, 24_000_000), 95, [1, 1000]),
+}
+
+
+@pytest.mark.parametrize("name", sorted(GOLDEN_PINS))
+def test_golden_files_parse_with_pinned_accounting(name):
+    m = C.parse_file(MODELS / f"{name}.cadnn")
+    assert m.name == name
+    names = [nd.name for nd in m.nodes]
+    assert len(names) == len(set(names))
+    params = sum(nd.weight_count + nd.aux_params for nd in m.nodes)
+    pin, weight_layers, final = GOLDEN_PINS[name]
+    if isinstance(pin, tuple):
+        assert pin[0] <= params <= pin[1], params
+    else:
+        assert params == pin
+    assert sum(1 for nd in m.nodes if nd.weight_count > 0) == weight_layers
+    assert m.nodes[m.output].shape == final
+
+
+def test_resnet50_golden_shape_pins():
+    m = C.parse_file(MODELS / "resnet50.cadnn")
+    shapes = {nd.name: nd.shape for nd in m.nodes}
+    assert shapes["maxpool"] == [1, 56, 56, 64]
+    assert shapes["s0b2_out"] == [1, 56, 56, 256]
+    assert shapes["s3b2_out"] == [1, 7, 7, 2048]
+
+
+def test_inception_golden_grid_pins():
+    m = C.parse_file(MODELS / "inception_v3.cadnn")
+    shapes = {nd.name: nd.shape for nd in m.nodes}
+    assert shapes["mixed2_cat"] == [1, 35, 35, 288]
+    assert shapes["mixed3_cat"] == [1, 17, 17, 768]
+    assert shapes["mixed8_cat"] == [1, 8, 8, 1280]
+    assert shapes["mixed10_cat"] == [1, 8, 8, 2048]
+
+
+MALFORMED = [
+    ("", "expected 'model"),
+    ("model t\n", "expected 'input"),
+    ("model t\ninput x [0]\n", "dimension must be"),
+    ("model t\ninput x [1,4,4,2]\na = add(x, y)\n", "unknown input 'y'"),
+    ("model t\ninput x [1,4,4,2]\nx = relu(x)\n", "duplicate node name"),
+    ("model t\ninput x [1,4,4,2]\nc = conv2d(x) k=9 cout=4\n", "does not fit"),
+    ("model t\ninput x [1,4,4,2]\nd = dense(x) cout=4\n", "rank-2"),
+    ("model t\ninput x [1,4,4,2]\nr = relu(x) bogus=1\n", "unknown attribute"),
+    ("model t\ninput x [1,4,4,2]\nr = relu(x) sparsity=0.5\n", "weight layers"),
+    ("model t\ninput x [1,4,4,2]\noutput y\n", "unknown node"),
+    ("model t\ninput x [1,4,4,2]\noutput x\nr = relu(x)\n", "last statement"),
+    ("model t\ninput x [1,4,4,2]\nc = convv2d(x) k=3\n", "unknown op"),
+    ("a @ b", "unexpected character"),
+]
+
+
+@pytest.mark.parametrize("src,frag", MALFORMED)
+def test_malformed_input_raises_positioned_errors(src, frag):
+    with pytest.raises(C.ParseError) as e:
+        C.parse(src)
+    assert frag in str(e.value)
+    assert "parse error at" in str(e.value)
+
+
+def test_error_positions_are_exact():
+    with pytest.raises(C.ParseError) as e:
+        C.parse("model t\ninput x [1,8,8,3]\nc = convv2d(x) k=3 cout=8\n")
+    err = e.value
+    assert (err.line, err.col, err.token) == (3, 5, "convv2d")
+
+
+def test_truncation_never_crashes_differently():
+    src = TINY
+    for cut in range(len(src)):
+        try:
+            C.parse(src[:cut])
+        except C.ParseError:
+            pass  # only ParseError is acceptable

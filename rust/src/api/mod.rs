@@ -50,8 +50,41 @@ enum ModelSource {
     Named(String),
     /// A caller-supplied graph (fixed batch = the graph's input batch).
     Graph(Box<Graph>),
+    /// A `.cadnn` textual model on disk ([`crate::front`]), rebatched
+    /// per requested batch size via [`Graph::with_batch`].
+    File { path: String },
     /// AOT artifacts on disk: (dir, model, variant).
     Artifacts { dir: String, model: String, variant: String },
+}
+
+/// Reject profiles that match nothing (the planner would silently plan
+/// Dense for every layer — exactly the failure mode a renamed layer in a
+/// compress report or `.cadnn` file used to hit); warn on partial
+/// mismatches, listing the orphaned names.
+fn check_profile_matches(profile: &SparsityProfile, g: &Graph) -> Result<(), CadnnError> {
+    if profile.is_empty() {
+        return Ok(());
+    }
+    let unmatched = profile.unmatched_layers(g);
+    if unmatched.len() == profile.layers.len() {
+        return Err(CadnnError::config(format!(
+            "sparsity profile matches no prunable layer of '{}' (profile names e.g. {:?}); \
+             every layer would plan Dense — profile layer names must equal graph node names",
+            g.name,
+            &unmatched[..unmatched.len().min(4)]
+        )));
+    }
+    if !unmatched.is_empty() {
+        let shown: Vec<&str> = unmatched.iter().take(8).map(String::as_str).collect();
+        crate::warn!(
+            "api",
+            "profile layers {:?}{} match no prunable node of '{}' and will plan Dense",
+            shown,
+            if unmatched.len() > 8 { " (+more)" } else { "" },
+            g.name
+        );
+    }
+    Ok(())
 }
 
 /// Typed, named options for constructing an [`Engine`]. Replaces the old
@@ -139,8 +172,9 @@ impl EngineBuilder {
         self
     }
 
-    /// Batch sizes to build (named models only; the coordinator's dynamic
-    /// batcher picks among them). Default: `[1]`.
+    /// Batch sizes to build (named and `.cadnn` file models; the serving
+    /// layer's dynamic batcher picks among them). Default: `[1]` for
+    /// named models, the file's own input batch for file models.
     pub fn batch_sizes(mut self, sizes: &[usize]) -> EngineBuilder {
         self.batch_sizes = Some(sizes.to_vec());
         self
@@ -192,6 +226,11 @@ impl EngineBuilder {
                 for &b in &sizes {
                     let g = models::build(&name, b)
                         .ok_or_else(|| CadnnError::UnknownModel { name: name.clone() })?;
+                    if b == sizes[0] {
+                        if let Some(p) = &self.profile {
+                            check_profile_matches(p, &g)?;
+                        }
+                    }
                     let inst = ModelInstance::build_planned_cached(
                         &g,
                         self.personality,
@@ -210,6 +249,9 @@ impl EngineBuilder {
             }
             ModelSource::Graph(g) => {
                 g.validate()?;
+                if let Some(p) = &self.profile {
+                    check_profile_matches(p, &g)?;
+                }
                 let graph_batch = g.nodes[0].shape.0.first().copied().unwrap_or(0);
                 if let Some(sizes) = &self.batch_sizes {
                     if sizes.len() != 1 || sizes[0] != graph_batch {
@@ -233,6 +275,59 @@ impl EngineBuilder {
                 let label = format!("{}[{}]", g.name, self.personality.label());
                 let mut instances = BTreeMap::new();
                 instances.insert(graph_batch, inst);
+                let nb = Arc::new(NativeBackend::from_instances(label, instances)?);
+                Ok(Engine { backend: nb.clone(), native: Some(nb) })
+            }
+            ModelSource::File { path } => {
+                let parsed = crate::front::parse_file(&path)?;
+                parsed.graph.validate()?;
+                // explicit builder profile wins over inline hints; hints
+                // only attach under a sparse personality (they are a
+                // compression request, meaningless to dense execution)
+                let profile = match (&self.profile, self.personality.sparse()) {
+                    (Some(p), _) => Some(p.clone()),
+                    (None, true) if !parsed.profile.is_empty() => Some(parsed.profile.clone()),
+                    (None, _) => {
+                        if !parsed.profile.is_empty() {
+                            crate::warn!(
+                                "api",
+                                "'{}' carries sparsity hints but personality {} is not sparse; \
+                                 hints ignored",
+                                path,
+                                self.personality.label()
+                            );
+                        }
+                        None
+                    }
+                };
+                if let Some(p) = &profile {
+                    check_profile_matches(p, &parsed.graph)?;
+                }
+                let file_batch = parsed.graph.nodes[0].shape.0.first().copied().unwrap_or(1);
+                let mut sizes = self.batch_sizes.clone().unwrap_or_else(|| vec![file_batch]);
+                sizes.sort_unstable();
+                sizes.dedup();
+                if sizes.is_empty() || sizes[0] == 0 {
+                    return Err(CadnnError::config("batch sizes must be nonempty and nonzero"));
+                }
+                let mut cache = TunerCache::new();
+                let mut plan_cache = PlanCache::default();
+                let mut instances = BTreeMap::new();
+                for &b in &sizes {
+                    let g = parsed.graph.with_batch(b)?;
+                    let inst = ModelInstance::build_planned_cached(
+                        &g,
+                        self.personality,
+                        profile.as_ref(),
+                        if self.tuned { Some(&mut cache) } else { None },
+                        self.cache_bytes,
+                        self.sparse_format,
+                        self.value_bits,
+                        Some(&mut plan_cache),
+                    )?;
+                    instances.insert(b, inst);
+                }
+                let label = format!("{}[{}]", parsed.graph.name, self.personality.label());
                 let nb = Arc::new(NativeBackend::from_instances(label, instances)?);
                 Ok(Engine { backend: nb.clone(), native: Some(nb) })
             }
@@ -270,6 +365,15 @@ impl Engine {
     /// Build a caller-supplied graph on the native kernels.
     pub fn from_graph(graph: Graph) -> EngineBuilder {
         EngineBuilder::new(ModelSource::Graph(Box::new(graph)))
+    }
+
+    /// Build a `.cadnn` textual model file ([`crate::front`], grammar in
+    /// `docs/MODEL_FORMAT.md`) on the native kernels. The file's inline
+    /// `sparsity=` hints become the engine's profile under a sparse
+    /// personality unless [`EngineBuilder::sparsity_profile`] overrides
+    /// them; batch variants are built with [`Graph::with_batch`].
+    pub fn from_model_file(path: &str) -> EngineBuilder {
+        EngineBuilder::new(ModelSource::File { path: path.to_string() })
     }
 
     /// Open AOT artifacts compiled by `make artifacts`.
@@ -636,6 +740,60 @@ mod tests {
         let mut session = engine.session();
         let out = session.run_batch(2, &image(2 * engine.input_len(), 9)).unwrap();
         assert_eq!(out.len(), 20);
+    }
+
+    /// A `.cadnn` file is a complete engine input: inline hints become
+    /// the profile under a sparse personality, batch variants come from
+    /// `Graph::with_batch`, and the session answers with the file's
+    /// output width.
+    #[test]
+    fn model_file_engine_end_to_end() {
+        let path = std::env::temp_dir().join(format!("cadnn_api_{}.cadnn", std::process::id()));
+        let src = "model filenet\n\
+                   input x [1,8,8,3]\n\
+                   c1 = conv2d(x) k=3 cout=16 pad=1 sparsity=0.9\n\
+                   r1 = relu(c1)\n\
+                   gap = global_avg_pool(r1)\n\
+                   fc = dense(gap) cout=10 bias sparsity=0.8\n\
+                   sm = softmax(fc)\n\
+                   output sm\n";
+        std::fs::write(&path, src).unwrap();
+        let engine = Engine::from_model_file(path.to_str().unwrap())
+            .personality(Personality::CadnnSparse)
+            .batch_sizes(&[1, 2])
+            .build()
+            .unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(engine.batch_sizes(), vec![1, 2]);
+        assert_eq!(engine.classes(), 10);
+        let plan = engine.exec_plan().expect("inline hints must yield a plan");
+        assert!(!plan.is_empty(), "hinted layers must be planned: {plan:?}");
+        let mut session = engine.session();
+        let out = session.run_batch(2, &image(2 * engine.input_len(), 11)).unwrap();
+        assert_eq!(out.len(), 20);
+    }
+
+    /// A profile whose layer names match nothing must fail the build
+    /// loudly instead of silently planning Dense everywhere.
+    #[test]
+    fn mismatched_profile_fails_loudly() {
+        let mut profile = SparsityProfile::default();
+        profile.layers.insert("no_such_layer".into(), 0.9);
+        let err = Engine::native("lenet5")
+            .personality(Personality::CadnnSparse)
+            .sparsity_profile(profile)
+            .build()
+            .err()
+            .unwrap();
+        assert!(matches!(err, CadnnError::Config { .. }), "{err}");
+        assert!(err.to_string().contains("matches no prunable layer"), "{err}");
+    }
+
+    #[test]
+    fn missing_model_file_is_config_error() {
+        let err = Engine::from_model_file("/nonexistent/nope.cadnn").build().err().unwrap();
+        assert!(matches!(err, CadnnError::Config { .. }), "{err}");
+        assert!(err.to_string().contains("cannot read model file"), "{err}");
     }
 
     #[test]

@@ -85,7 +85,7 @@ pub struct QuantSpec {
     pub codebook: Vec<f32>,
 }
 
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct SparsityProfile {
     /// layer name -> sparsity (fraction of weights pruned).
     pub layers: BTreeMap<String, f64>,
@@ -159,6 +159,28 @@ impl SparsityProfile {
             nnz += w as f64 * (1.0 - self.get(&n.name));
         }
         total as f64 / nnz.max(1.0)
+    }
+
+    /// True when no layer carries a sparsity entry.
+    pub fn is_empty(&self) -> bool {
+        self.layers.is_empty()
+    }
+
+    /// Profile layer names that match no *prunable* node of `graph` —
+    /// entries the planner would silently ignore, planning Dense for the
+    /// layers they were meant to cover. Imported reports (and parsed
+    /// `.cadnn` hints) are keyed by layer name, so a rename on either
+    /// side used to degrade to an all-Dense plan with no signal; callers
+    /// ([`crate::api::EngineBuilder`], `cadnn plan`) now surface this
+    /// list instead.
+    pub fn unmatched_layers(&self, graph: &Graph) -> Vec<String> {
+        self.layers
+            .keys()
+            .filter(|name| {
+                !graph.nodes.iter().any(|n| n.op.prunable() && &n.name == *name)
+            })
+            .cloned()
+            .collect()
     }
 
     /// Remaining (non-zero) weights over the graph.
@@ -429,6 +451,17 @@ mod tests {
             assert_eq!(p.quant_bits(name), Some(4));
         }
         assert_eq!(p.quant_bits("not_a_layer"), None);
+    }
+
+    #[test]
+    fn unmatched_layers_surface_renames() {
+        let g = models::build("lenet5", 1).unwrap();
+        let mut p = SparsityProfile::uniform(&g, 0.9);
+        assert!(p.unmatched_layers(&g).is_empty());
+        assert!(!p.is_empty());
+        p.layers.insert("c1_typo".into(), 0.9);
+        assert_eq!(p.unmatched_layers(&g), vec!["c1_typo".to_string()]);
+        assert!(SparsityProfile::default().is_empty());
     }
 
     #[test]

@@ -37,6 +37,10 @@ pub enum CadnnError {
     Execution { reason: String },
     /// Builder/config misuse (e.g. batch variants on a fixed graph source).
     Config { reason: String },
+    /// A textual model (`.cadnn`, see `docs/MODEL_FORMAT.md`) failed to
+    /// parse. Carries the 1-based source position and the offending
+    /// token so front-end diagnostics stay actionable.
+    Parse { line: usize, col: usize, token: String, reason: String },
 }
 
 impl CadnnError {
@@ -48,6 +52,16 @@ impl CadnnError {
     /// Shorthand for [`CadnnError::Config`].
     pub fn config(reason: impl Into<String>) -> CadnnError {
         CadnnError::Config { reason: reason.into() }
+    }
+
+    /// Shorthand for [`CadnnError::Parse`].
+    pub fn parse(
+        line: usize,
+        col: usize,
+        token: impl Into<String>,
+        reason: impl Into<String>,
+    ) -> CadnnError {
+        CadnnError::Parse { line, col, token: token.into(), reason: reason.into() }
     }
 }
 
@@ -78,6 +92,9 @@ impl fmt::Display for CadnnError {
             CadnnError::Manifest { reason } => write!(f, "manifest: {reason}"),
             CadnnError::Execution { reason } => write!(f, "execution failed: {reason}"),
             CadnnError::Config { reason } => write!(f, "invalid configuration: {reason}"),
+            CadnnError::Parse { line, col, token, reason } => {
+                write!(f, "parse error at {line}:{col} near '{token}': {reason}")
+            }
         }
     }
 }
@@ -111,6 +128,16 @@ mod tests {
         }
         let e = fails().unwrap_err();
         assert!(e.to_string().contains("unknown model 'nope'"));
+    }
+
+    #[test]
+    fn parse_errors_carry_position() {
+        let e = CadnnError::parse(3, 14, "convv2d", "unknown op");
+        assert_eq!(e.to_string(), "parse error at 3:14 near 'convv2d': unknown op");
+        match e {
+            CadnnError::Parse { line, col, .. } => assert_eq!((line, col), (3, 14)),
+            other => panic!("expected Parse, got {other:?}"),
+        }
     }
 
     #[test]

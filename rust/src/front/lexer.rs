@@ -1,0 +1,298 @@
+//! Tokenizer for the `.cadnn` textual model IR (`docs/MODEL_FORMAT.md`).
+//!
+//! Line-oriented: newlines terminate statements and are tokens in their
+//! own right; `#` starts a comment that runs to end of line. Every token
+//! carries its 1-based source position so the parser's
+//! [`crate::error::CadnnError::Parse`] diagnostics can point at the
+//! offending token.
+
+use crate::error::CadnnError;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tok {
+    /// `[A-Za-z_][A-Za-z0-9_]*` — names, op names, attribute keys.
+    Ident(String),
+    /// `"..."` with `\"` / `\\` escapes — names outside the ident charset.
+    Str(String),
+    Int(usize),
+    /// `5x5` — a kernel/pad dimension pair.
+    Pair(usize, usize),
+    Float(f64),
+    Eq,
+    LParen,
+    RParen,
+    LBracket,
+    RBracket,
+    Comma,
+    Newline,
+    Eof,
+}
+
+impl Tok {
+    /// Rendering used in diagnostics (`near '<token>'`).
+    pub fn display(&self) -> String {
+        match self {
+            Tok::Ident(s) => s.clone(),
+            Tok::Str(s) => format!("\"{s}\""),
+            Tok::Int(v) => v.to_string(),
+            Tok::Pair(a, b) => format!("{a}x{b}"),
+            Tok::Float(v) => v.to_string(),
+            Tok::Eq => "=".into(),
+            Tok::LParen => "(".into(),
+            Tok::RParen => ")".into(),
+            Tok::LBracket => "[".into(),
+            Tok::RBracket => "]".into(),
+            Tok::Comma => ",".into(),
+            Tok::Newline => "<newline>".into(),
+            Tok::Eof => "<eof>".into(),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Token {
+    pub tok: Tok,
+    pub line: usize,
+    pub col: usize,
+}
+
+fn perr<T>(line: usize, col: usize, token: &str, reason: impl Into<String>) -> Result<T, CadnnError> {
+    Err(CadnnError::parse(line, col, token, reason))
+}
+
+/// Tokenize a whole source text. The resulting stream always ends with
+/// [`Tok::Eof`]; malformed input yields a positioned parse error, never
+/// a panic.
+pub fn lex(src: &str) -> Result<Vec<Token>, CadnnError> {
+    let chars: Vec<char> = src.chars().collect();
+    let mut toks = Vec::new();
+    let (mut line, mut col) = (1usize, 1usize);
+    let mut i = 0usize;
+    while i < chars.len() {
+        let c = chars[i];
+        let (tl, tc) = (line, col);
+        let mut punct = |tok: Tok| toks.push(Token { tok, line: tl, col: tc });
+        match c {
+            '\n' => {
+                punct(Tok::Newline);
+                i += 1;
+                line += 1;
+                col = 1;
+            }
+            ' ' | '\t' | '\r' => {
+                i += 1;
+                col += 1;
+            }
+            '#' => {
+                while i < chars.len() && chars[i] != '\n' {
+                    i += 1;
+                    col += 1;
+                }
+            }
+            '=' => {
+                punct(Tok::Eq);
+                i += 1;
+                col += 1;
+            }
+            '(' => {
+                punct(Tok::LParen);
+                i += 1;
+                col += 1;
+            }
+            ')' => {
+                punct(Tok::RParen);
+                i += 1;
+                col += 1;
+            }
+            '[' => {
+                punct(Tok::LBracket);
+                i += 1;
+                col += 1;
+            }
+            ']' => {
+                punct(Tok::RBracket);
+                i += 1;
+                col += 1;
+            }
+            ',' => {
+                punct(Tok::Comma);
+                i += 1;
+                col += 1;
+            }
+            '"' => {
+                i += 1;
+                col += 1;
+                let mut s = String::new();
+                loop {
+                    if i >= chars.len() || chars[i] == '\n' {
+                        return perr(tl, tc, "\"", "unterminated string");
+                    }
+                    match chars[i] {
+                        '"' => {
+                            i += 1;
+                            col += 1;
+                            break;
+                        }
+                        '\\' => {
+                            if i + 1 >= chars.len() {
+                                return perr(tl, tc, "\"", "unterminated string");
+                            }
+                            let e = chars[i + 1];
+                            if e != '"' && e != '\\' {
+                                return perr(
+                                    line,
+                                    col,
+                                    &format!("\\{e}"),
+                                    "unknown escape (use \\\" or \\\\)",
+                                );
+                            }
+                            s.push(e);
+                            i += 2;
+                            col += 2;
+                        }
+                        c => {
+                            s.push(c);
+                            i += 1;
+                            col += 1;
+                        }
+                    }
+                }
+                toks.push(Token { tok: Tok::Str(s), line: tl, col: tc });
+            }
+            c if c.is_ascii_digit() => {
+                let digits = |chars: &[char], mut j: usize| {
+                    let start = j;
+                    while j < chars.len() && chars[j].is_ascii_digit() {
+                        j += 1;
+                    }
+                    let s: String = chars[start..j].iter().collect();
+                    (s, j)
+                };
+                let (a, mut j) = digits(&chars, i);
+                let tok = if j + 1 < chars.len() && chars[j] == '.' && chars[j + 1].is_ascii_digit()
+                {
+                    let (b, j2) = digits(&chars, j + 1);
+                    j = j2;
+                    let text = format!("{a}.{b}");
+                    match text.parse::<f64>() {
+                        Ok(v) => Tok::Float(v),
+                        Err(_) => return perr(tl, tc, &text, "malformed number"),
+                    }
+                } else if j + 1 < chars.len() && chars[j] == 'x' && chars[j + 1].is_ascii_digit() {
+                    let (b, j2) = digits(&chars, j + 1);
+                    j = j2;
+                    match (a.parse::<usize>(), b.parse::<usize>()) {
+                        (Ok(x), Ok(y)) => Tok::Pair(x, y),
+                        _ => return perr(tl, tc, &format!("{a}x{b}"), "dimension pair too large"),
+                    }
+                } else {
+                    match a.parse::<usize>() {
+                        Ok(v) => Tok::Int(v),
+                        Err(_) => return perr(tl, tc, &a, "integer literal too large"),
+                    }
+                };
+                col += j - i;
+                i = j;
+                toks.push(Token { tok, line: tl, col: tc });
+            }
+            c if c.is_ascii_alphabetic() || c == '_' => {
+                let start = i;
+                while i < chars.len() && (chars[i].is_ascii_alphanumeric() || chars[i] == '_') {
+                    i += 1;
+                    col += 1;
+                }
+                let s: String = chars[start..i].iter().collect();
+                toks.push(Token { tok: Tok::Ident(s), line: tl, col: tc });
+            }
+            other => {
+                return perr(tl, tc, &other.to_string(), "unexpected character");
+            }
+        }
+    }
+    toks.push(Token { tok: Tok::Eof, line, col });
+    Ok(toks)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(src: &str) -> Vec<Tok> {
+        lex(src).unwrap().into_iter().map(|t| t.tok).collect()
+    }
+
+    #[test]
+    fn basic_stream() {
+        assert_eq!(
+            toks("c1 = conv2d(input) k=5x5 pad=2\n"),
+            vec![
+                Tok::Ident("c1".into()),
+                Tok::Eq,
+                Tok::Ident("conv2d".into()),
+                Tok::LParen,
+                Tok::Ident("input".into()),
+                Tok::RParen,
+                Tok::Ident("k".into()),
+                Tok::Eq,
+                Tok::Pair(5, 5),
+                Tok::Ident("pad".into()),
+                Tok::Eq,
+                Tok::Int(2),
+                Tok::Newline,
+                Tok::Eof,
+            ]
+        );
+    }
+
+    #[test]
+    fn comments_and_floats() {
+        assert_eq!(
+            toks("# header\nsparsity=0.93 # trailing\n"),
+            vec![
+                Tok::Newline,
+                Tok::Ident("sparsity".into()),
+                Tok::Eq,
+                Tok::Float(0.93),
+                Tok::Newline,
+                Tok::Eof,
+            ]
+        );
+    }
+
+    #[test]
+    fn quoted_names_unescape() {
+        assert_eq!(
+            toks(r#""a b" "q\"uote" "back\\slash""#),
+            vec![
+                Tok::Str("a b".into()),
+                Tok::Str("q\"uote".into()),
+                Tok::Str("back\\slash".into()),
+                Tok::Eof,
+            ]
+        );
+    }
+
+    #[test]
+    fn positions_are_one_based() {
+        let ts = lex("a\n  b").unwrap();
+        assert_eq!((ts[0].line, ts[0].col), (1, 1));
+        assert_eq!((ts[2].line, ts[2].col), (2, 3));
+    }
+
+    #[test]
+    fn errors_are_positioned_parse_errors() {
+        for (src, frag) in [
+            ("a @ b", "unexpected character"),
+            ("\"open", "unterminated string"),
+            ("\"bad \\n esc\"", "unknown escape"),
+            ("999999999999999999999999999", "too large"),
+        ] {
+            match lex(src) {
+                Err(CadnnError::Parse { reason, .. }) => {
+                    assert!(reason.contains(frag), "{src}: {reason}")
+                }
+                other => panic!("{src}: expected Parse error, got {other:?}"),
+            }
+        }
+    }
+}

@@ -1,0 +1,52 @@
+//! Textual model IR front-end: user-defined DNNs as `.cadnn` files.
+//!
+//! The four hand-built graphs in [`crate::models`] cap what the
+//! compress → plan → serve pipeline can ever run. This module removes
+//! that cap: a compact, line-oriented dialect covering the whole
+//! pre-pass [`crate::ir::ops::Op`] surface (plus the fused/lowered ops,
+//! so post-pass graphs print too), a recursive-descent [`parse`] into
+//! [`crate::ir::Graph`], and a canonical [`print`]er whose output
+//! reparses to the same graph node-for-node. Per-layer compression
+//! hints (`sparsity=` / `prune=` / `quant=`) ride on the layer
+//! statements and come back as a [`crate::compress::profile::SparsityProfile`]
+//! keyed by node name, so a `.cadnn` file is a complete, self-contained
+//! input to `cadnn plan` / `cadnn serve` (see `docs/MODEL_FORMAT.md`).
+//!
+//! ```
+//! let src = "model m\ninput x [1,8,8,3]\nc = conv2d(x) k=3 cout=8 pad=1 sparsity=0.9\noutput c\n";
+//! let parsed = cadnn::front::parse(src).unwrap();
+//! assert_eq!(parsed.graph.nodes[1].shape, cadnn::ir::Shape::nhwc(1, 8, 8, 8));
+//! assert_eq!(parsed.profile.get("c"), 0.9);
+//! let text = cadnn::front::print(&parsed.graph);
+//! assert_eq!(cadnn::front::parse(&text).unwrap().graph, parsed.graph);
+//! ```
+//!
+//! Malformed input of any kind — truncation, unknown ops, shape
+//! mismatches, overflow-baiting dimensions — yields a positioned
+//! [`crate::error::CadnnError::Parse`], never a panic: the parser
+//! pre-checks everything `Graph::add` and `Op::infer_shape` assume.
+
+mod lexer;
+mod parser;
+mod printer;
+
+pub use parser::{parse, ParsedModel};
+pub use printer::{print, print_with_hints};
+
+use crate::error::CadnnError;
+use crate::ir::Graph;
+
+/// Parse just the graph, discarding any inline compression hints.
+pub fn parse_graph(src: &str) -> Result<Graph, CadnnError> {
+    parse(src).map(|m| m.graph)
+}
+
+/// Read and parse a `.cadnn` model file. I/O failures surface as
+/// [`CadnnError::Config`] (they are environment problems, not grammar
+/// problems); everything else is a positioned
+/// [`CadnnError::Parse`].
+pub fn parse_file(path: &str) -> Result<ParsedModel, CadnnError> {
+    let src = std::fs::read_to_string(path)
+        .map_err(|e| CadnnError::config(format!("cannot read model file '{path}': {e}")))?;
+    parse(&src)
+}

@@ -1,0 +1,952 @@
+//! Recursive-descent parser: `.cadnn` text into [`crate::ir::Graph`].
+//!
+//! Grammar (full reference in `docs/MODEL_FORMAT.md`):
+//!
+//! ```text
+//! model   := "model" name NL "input" name shape NL (node NL)* ["output" name NL]
+//! node    := name "=" op "(" name ("," name)* ")" attr*
+//! attr    := key "=" value | key            (flags: bias, epilogue)
+//! shape   := "[" INT ("," INT)* "]"
+//! ```
+//!
+//! The parser is *total* over untrusted text: every rejection is a
+//! positioned [`CadnnError::Parse`], never a panic. That requires doing
+//! all the shape/arity/overflow validation that `Graph::add` and
+//! `Op::infer_shape` assume (their `debug_assert`s) up front, plus
+//! anti-DoS caps on dimensions so downstream `numel`/`weight_count`/
+//! `flops` arithmetic cannot overflow.
+
+use std::collections::BTreeMap;
+
+use super::lexer::{lex, Tok, Token};
+use crate::compress::profile::{PruneStructure, QuantSpec, SparsityProfile};
+use crate::error::CadnnError;
+use crate::ir::ops::{ActKind, Op, PoolKind};
+use crate::ir::{Graph, Shape};
+
+/// A parsed `.cadnn` model: the graph plus any inline per-layer
+/// compression hints (`sparsity=` / `prune=` / `quant=`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParsedModel {
+    pub graph: Graph,
+    /// Hints keyed by node name; empty when the file carries none.
+    pub profile: SparsityProfile,
+}
+
+// Anti-DoS caps (documented in MODEL_FORMAT.md). Chosen so that every
+// derived quantity the rest of the stack computes eagerly — `numel`,
+// `weight_count`, per-node and whole-graph `flops` — stays within usize
+// / u64 with wide margin.
+const MAX_RANK: usize = 8;
+const MAX_DIM: usize = 1 << 20;
+const MAX_NUMEL: u128 = 1 << 31;
+const MAX_WEIGHTS: u128 = 1 << 31;
+const MAX_KERNEL: usize = 1 << 10;
+const MAX_RECEPTIVE: u128 = 1 << 20;
+const MAX_NODES: usize = 2048;
+const MAX_ATTR_INT: usize = 1 << 31;
+
+fn perr<T>(
+    line: usize,
+    col: usize,
+    token: impl Into<String>,
+    reason: impl Into<String>,
+) -> Result<T, CadnnError> {
+    Err(CadnnError::parse(line, col, token, reason))
+}
+
+struct Parser {
+    toks: Vec<Token>,
+    pos: usize,
+}
+
+impl Parser {
+    fn peek(&self) -> &Token {
+        &self.toks[self.pos]
+    }
+
+    fn next(&mut self) -> Token {
+        let t = self.toks[self.pos].clone();
+        if !matches!(t.tok, Tok::Eof) {
+            self.pos += 1;
+        }
+        t
+    }
+
+    fn err<T>(&self, t: &Token, reason: impl Into<String>) -> Result<T, CadnnError> {
+        perr(t.line, t.col, t.tok.display(), reason)
+    }
+
+    fn skip_newlines(&mut self) {
+        while matches!(self.peek().tok, Tok::Newline) {
+            self.pos += 1;
+        }
+    }
+
+    /// A name: bare identifier or quoted string.
+    fn name(&mut self, what: &str) -> Result<(String, Token), CadnnError> {
+        let t = self.next();
+        let s = match &t.tok {
+            Tok::Ident(s) | Tok::Str(s) => s.clone(),
+            _ => return self.err(&t, format!("expected {what}")),
+        };
+        Ok((s, t))
+    }
+
+    fn end_of_stmt(&mut self) -> Result<(), CadnnError> {
+        let t = self.next();
+        match t.tok {
+            Tok::Newline | Tok::Eof => Ok(()),
+            _ => self.err(&t, "expected end of line"),
+        }
+    }
+
+    /// `[d1,d2,...]`, capped so shape arithmetic cannot overflow.
+    fn shape_literal(&mut self) -> Result<Shape, CadnnError> {
+        let open = self.next();
+        if !matches!(open.tok, Tok::LBracket) {
+            return self.err(&open, "expected '[' to start a shape");
+        }
+        let mut dims = Vec::new();
+        loop {
+            let t = self.next();
+            let d = match t.tok {
+                Tok::Int(v) => v,
+                _ => return self.err(&t, "expected a dimension (positive integer)"),
+            };
+            if !(1..=MAX_DIM).contains(&d) {
+                return self.err(&t, format!("dimension must be in 1..={MAX_DIM}"));
+            }
+            dims.push(d);
+            let t = self.next();
+            match t.tok {
+                Tok::Comma => continue,
+                Tok::RBracket => break,
+                _ => return self.err(&t, "expected ',' or ']' in shape"),
+            }
+        }
+        if dims.len() > MAX_RANK {
+            return self.err(&open, format!("shape rank {} exceeds max {MAX_RANK}", dims.len()));
+        }
+        let numel: u128 = dims.iter().map(|&d| d as u128).product();
+        if numel > MAX_NUMEL {
+            return self.err(&open, format!("shape has {numel} elements; max {MAX_NUMEL}"));
+        }
+        Ok(Shape(dims))
+    }
+
+    /// Trailing `key=value` / `key` attributes up to end of line.
+    fn attrs(&mut self) -> Result<Attrs, CadnnError> {
+        let mut list: Vec<Attr> = Vec::new();
+        loop {
+            let key = match &self.peek().tok {
+                Tok::Ident(s) => s.clone(),
+                _ => break,
+            };
+            let kt = self.next();
+            if list.iter().any(|a| a.key == key) {
+                return self.err(&kt, format!("duplicate attribute '{key}'"));
+            }
+            let val = if matches!(self.peek().tok, Tok::Eq) {
+                self.pos += 1;
+                if matches!(self.peek().tok, Tok::LBracket) {
+                    AttrVal::Shape(self.shape_literal()?)
+                } else {
+                    let vt = self.next();
+                    match vt.tok {
+                        Tok::Int(v) => AttrVal::Int(v),
+                        Tok::Pair(a, b) => AttrVal::Pair(a, b),
+                        Tok::Float(v) => AttrVal::Float(v),
+                        Tok::Ident(w) => AttrVal::Word(w),
+                        _ => return self.err(&vt, format!("expected a value for '{key}'")),
+                    }
+                }
+            } else {
+                AttrVal::Flag
+            };
+            list.push(Attr { key, val, line: kt.line, col: kt.col });
+        }
+        Ok(Attrs(list))
+    }
+}
+
+#[derive(Debug, Clone)]
+enum AttrVal {
+    Int(usize),
+    Pair(usize, usize),
+    Float(f64),
+    Word(String),
+    Shape(Shape),
+    Flag,
+}
+
+#[derive(Debug, Clone)]
+struct Attr {
+    key: String,
+    val: AttrVal,
+    line: usize,
+    col: usize,
+}
+
+/// Per-layer compression hints lifted off a node statement.
+struct Hints {
+    sparsity: f64,
+    structure: PruneStructure,
+    quant: Option<u8>,
+    line: usize,
+    col: usize,
+}
+
+struct Attrs(Vec<Attr>);
+
+impl Attrs {
+    fn take(&mut self, key: &str) -> Option<Attr> {
+        self.0.iter().position(|a| a.key == key).map(|i| self.0.remove(i))
+    }
+
+    fn req_int(&mut self, key: &str, max: usize, op: &Token) -> Result<usize, CadnnError> {
+        let a = match self.take(key) {
+            Some(a) => a,
+            None => {
+                return perr(
+                    op.line,
+                    op.col,
+                    op.tok.display(),
+                    format!("missing required attribute '{key}'"),
+                )
+            }
+        };
+        match a.val {
+            AttrVal::Int(v) if (1..=max).contains(&v) => Ok(v),
+            AttrVal::Int(v) => {
+                perr(a.line, a.col, v.to_string(), format!("'{key}' must be in 1..={max}"))
+            }
+            _ => perr(a.line, a.col, a.key.as_str(), format!("'{key}' takes a positive integer")),
+        }
+    }
+
+    fn opt_int(
+        &mut self,
+        key: &str,
+        default: usize,
+        min: usize,
+        max: usize,
+    ) -> Result<usize, CadnnError> {
+        let a = match self.take(key) {
+            Some(a) => a,
+            None => return Ok(default),
+        };
+        match a.val {
+            AttrVal::Int(v) if (min..=max).contains(&v) => Ok(v),
+            _ => perr(
+                a.line,
+                a.col,
+                a.key.as_str(),
+                format!("'{key}' must be an integer in {min}..={max}"),
+            ),
+        }
+    }
+
+    /// `k=` kernel: a single integer or an `HxW` pair.
+    fn req_k(&mut self, op: &Token) -> Result<(usize, usize), CadnnError> {
+        let a = match self.take("k") {
+            Some(a) => a,
+            None => {
+                return perr(op.line, op.col, op.tok.display(), "missing required attribute 'k'")
+            }
+        };
+        let (kh, kw) = match a.val {
+            AttrVal::Int(v) => (v, v),
+            AttrVal::Pair(h, w) => (h, w),
+            _ => return perr(a.line, a.col, "k", "'k' takes an integer or HxW pair"),
+        };
+        if !(1..=MAX_KERNEL).contains(&kh) || !(1..=MAX_KERNEL).contains(&kw) {
+            return perr(a.line, a.col, "k", format!("kernel dims must be in 1..={MAX_KERNEL}"));
+        }
+        Ok((kh, kw))
+    }
+
+    /// `pad=` padding: a single integer or an `HxW` pair; defaults to 0.
+    fn opt_pad(&mut self) -> Result<(usize, usize), CadnnError> {
+        let a = match self.take("pad") {
+            Some(a) => a,
+            None => return Ok((0, 0)),
+        };
+        let (ph, pw) = match a.val {
+            AttrVal::Int(v) => (v, v),
+            AttrVal::Pair(h, w) => (h, w),
+            _ => return perr(a.line, a.col, "pad", "'pad' takes an integer or HxW pair"),
+        };
+        if ph > MAX_KERNEL || pw > MAX_KERNEL {
+            return perr(a.line, a.col, "pad", format!("padding must be <= {MAX_KERNEL}"));
+        }
+        Ok((ph, pw))
+    }
+
+    /// Symmetric-only padding (dwconv / pool); defaults to 0.
+    fn opt_pad_sym(&mut self) -> Result<usize, CadnnError> {
+        let a = match self.take("pad") {
+            Some(a) => a,
+            None => return Ok(0),
+        };
+        match a.val {
+            AttrVal::Int(v) if v <= MAX_KERNEL => Ok(v),
+            AttrVal::Int(_) => {
+                perr(a.line, a.col, "pad", format!("padding must be <= {MAX_KERNEL}"))
+            }
+            _ => perr(a.line, a.col, "pad", "this op takes a single symmetric 'pad' integer"),
+        }
+    }
+
+    fn flag(&mut self, key: &str) -> Result<bool, CadnnError> {
+        let a = match self.take(key) {
+            Some(a) => a,
+            None => return Ok(false),
+        };
+        match a.val {
+            AttrVal::Flag => Ok(true),
+            _ => perr(
+                a.line,
+                a.col,
+                a.key.as_str(),
+                format!("'{key}' is a flag and takes no value"),
+            ),
+        }
+    }
+
+    fn act(&mut self, op: &Token) -> Result<ActKind, CadnnError> {
+        let a = match self.take("act") {
+            Some(a) => a,
+            None => {
+                return perr(op.line, op.col, op.tok.display(), "missing required attribute 'act'")
+            }
+        };
+        match &a.val {
+            AttrVal::Word(w) if w == "relu" => Ok(ActKind::Relu),
+            AttrVal::Word(w) if w == "relu6" => Ok(ActKind::Relu6),
+            AttrVal::Word(w) if w == "none" => Ok(ActKind::None),
+            _ => perr(a.line, a.col, "act", "'act' must be relu, relu6 or none"),
+        }
+    }
+
+    fn req_shape(&mut self, key: &str, op: &Token) -> Result<Shape, CadnnError> {
+        let a = match self.take(key) {
+            Some(a) => a,
+            None => {
+                return perr(
+                    op.line,
+                    op.col,
+                    op.tok.display(),
+                    format!("missing required attribute '{key}'"),
+                )
+            }
+        };
+        match a.val {
+            AttrVal::Shape(s) => Ok(s),
+            _ => perr(
+                a.line,
+                a.col,
+                a.key.as_str(),
+                format!("'{key}' takes a shape like [1,56,56,64]"),
+            ),
+        }
+    }
+
+    /// Lift `sparsity=` / `prune=` / `quant=` off the attribute list.
+    fn take_hints(&mut self) -> Result<Option<Hints>, CadnnError> {
+        let sp = self.take("sparsity");
+        let pr = self.take("prune");
+        let qu = self.take("quant");
+        let sp = match sp {
+            Some(sp) => sp,
+            None => {
+                if let Some(a) = pr.or(qu) {
+                    return perr(
+                        a.line,
+                        a.col,
+                        a.key.as_str(),
+                        "'prune'/'quant' hints require a 'sparsity' hint",
+                    );
+                }
+                return Ok(None);
+            }
+        };
+        let s = match sp.val {
+            AttrVal::Float(v) => v,
+            AttrVal::Int(v) => v as f64,
+            _ => return perr(sp.line, sp.col, "sparsity", "'sparsity' takes a fraction like 0.9"),
+        };
+        if !(0.0..1.0).contains(&s) {
+            return perr(sp.line, sp.col, "sparsity", "'sparsity' must be in [0, 1)");
+        }
+        let structure = match pr {
+            None => PruneStructure::Element,
+            Some(a) => match &a.val {
+                AttrVal::Word(w) => match PruneStructure::parse(w) {
+                    Some(st) => st,
+                    None => {
+                        return perr(
+                            a.line,
+                            a.col,
+                            w.as_str(),
+                            "unknown prune structure (element | block<R>x<C> | pattern<N>)",
+                        )
+                    }
+                },
+                _ => {
+                    return perr(a.line, a.col, "prune", "'prune' takes a label like block4x4")
+                }
+            },
+        };
+        let quant = match qu {
+            None => None,
+            Some(a) => match a.val {
+                AttrVal::Int(b) if (2..=8).contains(&b) => Some(b as u8),
+                _ => return perr(a.line, a.col, "quant", "'quant' takes a bit width in 2..=8"),
+            },
+        };
+        Ok(Some(Hints { sparsity: s, structure, quant, line: sp.line, col: sp.col }))
+    }
+
+    /// Error on anything the op builder did not consume.
+    fn finish(&self, op_name: &str) -> Result<(), CadnnError> {
+        if let Some(a) = self.0.first() {
+            return perr(
+                a.line,
+                a.col,
+                a.key.as_str(),
+                format!("unknown attribute '{}' for op '{op_name}'", a.key),
+            );
+        }
+        Ok(())
+    }
+}
+
+fn numel_u128(s: &Shape) -> u128 {
+    s.0.iter().map(|&d| d as u128).product()
+}
+
+fn one_input<'a>(op_name: &str, ot: &Token, ins: &'a [Shape]) -> Result<&'a Shape, CadnnError> {
+    if ins.len() != 1 {
+        return perr(
+            ot.line,
+            ot.col,
+            op_name,
+            format!("'{op_name}' takes exactly 1 input, got {}", ins.len()),
+        );
+    }
+    Ok(&ins[0])
+}
+
+fn rank4(op_name: &str, ot: &Token, s: &Shape) -> Result<(), CadnnError> {
+    if s.rank() != 4 {
+        return perr(
+            ot.line,
+            ot.col,
+            op_name,
+            format!("'{op_name}' needs a rank-4 NHWC input, got rank {}", s.rank()),
+        );
+    }
+    Ok(())
+}
+
+fn window_fits(
+    op_name: &str,
+    ot: &Token,
+    s: &Shape,
+    kh: usize,
+    kw: usize,
+    ph: usize,
+    pw: usize,
+) -> Result<(), CadnnError> {
+    if s.h() + 2 * ph < kh || s.w() + 2 * pw < kw {
+        return perr(
+            ot.line,
+            ot.col,
+            op_name,
+            format!("window {kh}x{kw} with pad {ph}x{pw} does not fit input {}x{}", s.h(), s.w()),
+        );
+    }
+    Ok(())
+}
+
+fn check_numel(ot: &Token, numel: u128) -> Result<(), CadnnError> {
+    if numel > MAX_NUMEL {
+        return perr(
+            ot.line,
+            ot.col,
+            ot.tok.display(),
+            format!("output has {numel} elements; max {MAX_NUMEL}"),
+        );
+    }
+    Ok(())
+}
+
+fn weights_err<T>(ot: &Token, op_name: &str) -> Result<T, CadnnError> {
+    perr(ot.line, ot.col, op_name, format!("layer weight count exceeds max {MAX_WEIGHTS}"))
+}
+
+/// Build a fully validated `Op` for `op_name` — every `debug_assert`
+/// downstream (`infer_shape`, `conv_out`) is pre-checked here.
+fn build_op(
+    op_name: &str,
+    ot: &Token,
+    ins: &[Shape],
+    attrs: &mut Attrs,
+) -> Result<Op, CadnnError> {
+    let op = match op_name {
+        "conv2d" | "fused_conv_bn_act" => {
+            let s = one_input(op_name, ot, ins)?;
+            rank4(op_name, ot, s)?;
+            let (kh, kw) = attrs.req_k(ot)?;
+            let cout = attrs.req_int("cout", MAX_ATTR_INT, ot)?;
+            let stride = attrs.opt_int("stride", 1, 1, MAX_DIM)?;
+            let (padh, padw) = attrs.opt_pad()?;
+            let groups = attrs.opt_int("groups", 1, 1, MAX_DIM)?;
+            let cin = s.c();
+            if cin % groups != 0 || cout % groups != 0 {
+                return perr(
+                    ot.line,
+                    ot.col,
+                    op_name,
+                    format!("groups={groups} must divide both cin={cin} and cout={cout}"),
+                );
+            }
+            window_fits(op_name, ot, s, kh, kw, padh, padw)?;
+            let receptive = kh as u128 * kw as u128 * (cin / groups) as u128;
+            if receptive > MAX_RECEPTIVE {
+                return perr(
+                    ot.line,
+                    ot.col,
+                    op_name,
+                    format!("receptive field {receptive} too large (max {MAX_RECEPTIVE})"),
+                );
+            }
+            if receptive * cout as u128 > MAX_WEIGHTS {
+                return weights_err(ot, op_name);
+            }
+            let oh = (s.h() + 2 * padh - kh) / stride + 1;
+            let ow = (s.w() + 2 * padw - kw) / stride + 1;
+            check_numel(ot, s.n() as u128 * oh as u128 * ow as u128 * cout as u128)?;
+            if op_name == "conv2d" {
+                let bias = attrs.flag("bias")?;
+                Op::Conv2d { kh, kw, cin, cout, stride, padh, padw, bias, groups }
+            } else {
+                let act = attrs.act(ot)?;
+                Op::FusedConvBnAct { kh, kw, cin, cout, stride, padh, padw, act, groups }
+            }
+        }
+        "dwconv2d" | "fused_dw_bn_act" => {
+            let s = one_input(op_name, ot, ins)?;
+            rank4(op_name, ot, s)?;
+            let (kh, kw) = attrs.req_k(ot)?;
+            let stride = attrs.opt_int("stride", 1, 1, MAX_DIM)?;
+            let padding = attrs.opt_pad_sym()?;
+            let c = s.c();
+            window_fits(op_name, ot, s, kh, kw, padding, padding)?;
+            if kh as u128 * kw as u128 * c as u128 > MAX_WEIGHTS {
+                return weights_err(ot, op_name);
+            }
+            let oh = (s.h() + 2 * padding - kh) / stride + 1;
+            let ow = (s.w() + 2 * padding - kw) / stride + 1;
+            check_numel(ot, s.n() as u128 * oh as u128 * ow as u128 * c as u128)?;
+            if op_name == "dwconv2d" {
+                Op::DepthwiseConv2d { kh, kw, c, stride, padding }
+            } else {
+                let act = attrs.act(ot)?;
+                Op::FusedDwBnAct { kh, kw, c, stride, padding, act }
+            }
+        }
+        "batchnorm" => {
+            let s = one_input(op_name, ot, ins)?;
+            Op::BatchNorm { c: s.c() }
+        }
+        "relu" => {
+            one_input(op_name, ot, ins)?;
+            Op::Activation { kind: ActKind::Relu }
+        }
+        "relu6" => {
+            one_input(op_name, ot, ins)?;
+            Op::Activation { kind: ActKind::Relu6 }
+        }
+        "identity" => {
+            one_input(op_name, ot, ins)?;
+            Op::Activation { kind: ActKind::None }
+        }
+        "maxpool" | "avgpool" => {
+            let s = one_input(op_name, ot, ins)?;
+            rank4(op_name, ot, s)?;
+            let k = attrs.req_int("k", MAX_KERNEL, ot)?;
+            let stride = attrs.opt_int("stride", k, 1, MAX_DIM)?;
+            let padding = attrs.opt_pad_sym()?;
+            window_fits(op_name, ot, s, k, k, padding, padding)?;
+            let oh = (s.h() + 2 * padding - k) / stride + 1;
+            let ow = (s.w() + 2 * padding - k) / stride + 1;
+            check_numel(ot, s.n() as u128 * oh as u128 * ow as u128 * s.c() as u128)?;
+            let kind = if op_name == "maxpool" { PoolKind::Max } else { PoolKind::Avg };
+            Op::Pool { kind, k, stride, padding }
+        }
+        "global_avg_pool" => {
+            let s = one_input(op_name, ot, ins)?;
+            rank4(op_name, ot, s)?;
+            Op::GlobalAvgPool
+        }
+        "dense" | "fc" => {
+            let s = one_input(op_name, ot, ins)?;
+            if s.rank() != 2 {
+                return perr(
+                    ot.line,
+                    ot.col,
+                    op_name,
+                    format!(
+                        "'{op_name}' needs a rank-2 [batch, features] input (got rank {}); \
+                         insert flatten or global_avg_pool first",
+                        s.rank()
+                    ),
+                );
+            }
+            let cout = attrs.req_int("cout", MAX_ATTR_INT, ot)?;
+            let bias = attrs.flag("bias")?;
+            let cin = s.0[1];
+            if cin as u128 * cout as u128 > MAX_WEIGHTS {
+                return weights_err(ot, op_name);
+            }
+            check_numel(ot, s.0[0] as u128 * cout as u128)?;
+            Op::FullyConnected { cin, cout, bias }
+        }
+        "add" => {
+            if ins.len() != 2 {
+                return perr(
+                    ot.line,
+                    ot.col,
+                    op_name,
+                    format!("'add' takes exactly 2 inputs, got {}", ins.len()),
+                );
+            }
+            if ins[0] != ins[1] {
+                return perr(
+                    ot.line,
+                    ot.col,
+                    op_name,
+                    format!(
+                        "'add' inputs must have identical shapes, got {} vs {}",
+                        ins[0], ins[1]
+                    ),
+                );
+            }
+            Op::Add
+        }
+        "concat" => {
+            if ins.len() < 2 {
+                return perr(
+                    ot.line,
+                    ot.col,
+                    op_name,
+                    format!("'concat' takes at least 2 inputs, got {}", ins.len()),
+                );
+            }
+            for s in ins {
+                rank4(op_name, ot, s)?;
+            }
+            let s0 = &ins[0];
+            for s in &ins[1..] {
+                if s.n() != s0.n() || s.h() != s0.h() || s.w() != s0.w() {
+                    return perr(
+                        ot.line,
+                        ot.col,
+                        op_name,
+                        format!("'concat' inputs must share N/H/W, got {s} vs {s0}"),
+                    );
+                }
+            }
+            let numel: u128 = ins.iter().map(numel_u128).sum();
+            check_numel(ot, numel)?;
+            Op::Concat
+        }
+        "softmax" => {
+            one_input(op_name, ot, ins)?;
+            Op::Softmax
+        }
+        "flatten" => {
+            one_input(op_name, ot, ins)?;
+            Op::Flatten
+        }
+        "gemm" => {
+            let s = one_input(op_name, ot, ins)?;
+            let m = attrs.req_int("m", MAX_ATTR_INT, ot)?;
+            let k = attrs.req_int("k", MAX_ATTR_INT, ot)?;
+            let n = attrs.req_int("n", MAX_ATTR_INT, ot)?;
+            let act = attrs.act(ot)?;
+            let fused_epilogue = attrs.flag("epilogue")?;
+            let out_shape = attrs.req_shape("out", ot)?;
+            let in_numel = numel_u128(s);
+            let mk = m as u128 * k as u128;
+            if mk != in_numel {
+                return perr(
+                    ot.line,
+                    ot.col,
+                    op_name,
+                    format!("gemm m*k = {mk} must equal input numel {in_numel}"),
+                );
+            }
+            let out_numel = numel_u128(&out_shape);
+            let mn = m as u128 * n as u128;
+            if mn != out_numel {
+                return perr(
+                    ot.line,
+                    ot.col,
+                    op_name,
+                    format!("gemm m*n = {mn} must equal output numel {out_numel}"),
+                );
+            }
+            if k as u128 * n as u128 > MAX_WEIGHTS {
+                return weights_err(ot, op_name);
+            }
+            Op::Gemm { m, k, n, act, fused_epilogue, out_shape }
+        }
+        other => {
+            return perr(
+                ot.line,
+                ot.col,
+                other,
+                format!(
+                    "unknown op '{other}' (expected conv2d, dwconv2d, batchnorm, relu, relu6, \
+                     identity, maxpool, avgpool, global_avg_pool, dense, add, concat, softmax, \
+                     flatten, fused_conv_bn_act, fused_dw_bn_act, gemm)"
+                ),
+            );
+        }
+    };
+    Ok(op)
+}
+
+/// Parse `.cadnn` source into a graph plus inline compression hints.
+pub fn parse(src: &str) -> Result<ParsedModel, CadnnError> {
+    let toks = lex(src)?;
+    let mut p = Parser { toks, pos: 0 };
+    p.skip_newlines();
+    let t = p.next();
+    match &t.tok {
+        Tok::Ident(s) if s == "model" => {}
+        _ => return p.err(&t, "expected 'model <name>' header"),
+    }
+    let (model_name, _) = p.name("a model name")?;
+    p.end_of_stmt()?;
+    p.skip_newlines();
+    let t = p.next();
+    match &t.tok {
+        Tok::Ident(s) if s == "input" => {}
+        _ => return p.err(&t, "expected 'input <name> [dims]' after the model header"),
+    }
+    let (input_name, _) = p.name("an input name")?;
+    let shape = p.shape_literal()?;
+    p.end_of_stmt()?;
+
+    let mut graph = Graph::new(&model_name, shape);
+    graph.nodes[0].name = input_name.clone();
+    let mut ids: BTreeMap<String, usize> = BTreeMap::new();
+    ids.insert(input_name, 0);
+    let mut profile = SparsityProfile::default();
+
+    loop {
+        p.skip_newlines();
+        if matches!(p.peek().tok, Tok::Eof) {
+            break;
+        }
+        let (name, nt) = p.name("a node name or 'output'")?;
+        if !matches!(p.peek().tok, Tok::Eq) {
+            if name == "output" {
+                let (target, tt) = p.name("an output node name")?;
+                let id = match ids.get(&target) {
+                    Some(&id) => id,
+                    None => {
+                        return perr(
+                            tt.line,
+                            tt.col,
+                            target.as_str(),
+                            format!("output references unknown node '{target}'"),
+                        )
+                    }
+                };
+                graph.output = id;
+                p.end_of_stmt()?;
+                p.skip_newlines();
+                let t = p.peek().clone();
+                if !matches!(t.tok, Tok::Eof) {
+                    return p.err(&t, "'output' must be the last statement");
+                }
+                break;
+            }
+            if name == "input" {
+                return p.err(&nt, "duplicate 'input' statement (a model has exactly one)");
+            }
+            let t = p.peek().clone();
+            return p.err(&t, format!("expected '=' after node name '{name}'"));
+        }
+        if ids.contains_key(&name) {
+            return p.err(&nt, format!("duplicate node name '{name}'"));
+        }
+        p.pos += 1; // consume '='
+        let ot = p.next();
+        let op_name = match &ot.tok {
+            Tok::Ident(s) => s.clone(),
+            _ => return p.err(&ot, "expected an op name"),
+        };
+        let t = p.next();
+        if !matches!(t.tok, Tok::LParen) {
+            return p.err(&t, format!("expected '(' after op '{op_name}'"));
+        }
+        let mut args: Vec<usize> = Vec::new();
+        if matches!(p.peek().tok, Tok::RParen) {
+            let t = p.next();
+            return p.err(&t, format!("'{op_name}' needs at least one input"));
+        }
+        loop {
+            let (an, at) = p.name("an op input name")?;
+            let id = match ids.get(&an) {
+                Some(&id) => id,
+                None => {
+                    return perr(
+                        at.line,
+                        at.col,
+                        an.as_str(),
+                        format!("unknown input '{an}' (nodes must be defined before use)"),
+                    )
+                }
+            };
+            args.push(id);
+            let t = p.next();
+            match t.tok {
+                Tok::Comma => continue,
+                Tok::RParen => break,
+                _ => return p.err(&t, "expected ',' or ')' in op inputs"),
+            }
+        }
+        let mut attrs = p.attrs()?;
+        let hints = attrs.take_hints()?;
+        if graph.len() >= MAX_NODES {
+            return perr(
+                nt.line,
+                nt.col,
+                name.as_str(),
+                format!("model too large (max {MAX_NODES} nodes)"),
+            );
+        }
+        let ins: Vec<Shape> = args.iter().map(|&i| graph.nodes[i].shape.clone()).collect();
+        let op = build_op(&op_name, &ot, &ins, &mut attrs)?;
+        attrs.finish(&op_name)?;
+        if let Some(h) = hints {
+            if !op.prunable() {
+                return perr(
+                    h.line,
+                    h.col,
+                    "sparsity",
+                    format!("sparsity hints only apply to weight layers; '{op_name}' is not one"),
+                );
+            }
+            profile.layers.insert(name.clone(), h.sparsity);
+            if h.structure != PruneStructure::Element {
+                profile.structures.insert(name.clone(), h.structure);
+            }
+            if let Some(bits) = h.quant {
+                profile.quant.insert(name.clone(), QuantSpec { bits, codebook: Vec::new() });
+            }
+        }
+        let id = graph.add(name.clone(), op, args);
+        ids.insert(name, id);
+        p.end_of_stmt()?;
+    }
+    Ok(ParsedModel { graph, profile })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const TINY: &str = "\
+model tiny
+input input [1,8,8,3]
+c1 = conv2d(input) k=3 cout=8 stride=1 pad=1 sparsity=0.5
+b1 = batchnorm(c1)
+r1 = relu(b1)
+p1 = maxpool(r1) k=2
+gap = global_avg_pool(p1)
+fc = dense(gap) cout=10 bias
+out = softmax(fc)
+output out
+";
+
+    #[test]
+    fn parses_a_small_model() {
+        let m = parse(TINY).unwrap();
+        let g = &m.graph;
+        g.validate().unwrap();
+        assert_eq!(g.name, "tiny");
+        assert_eq!(g.len(), 8);
+        assert_eq!(g.nodes[1].shape, Shape::nhwc(1, 8, 8, 8));
+        assert_eq!(g.nodes[4].shape, Shape::nhwc(1, 4, 4, 8));
+        assert_eq!(g.nodes.last().unwrap().shape, Shape::vec2(1, 10));
+        assert_eq!(g.output, 7);
+        assert_eq!(m.profile.get("c1"), 0.5);
+        assert!(m.profile.unmatched_layers(g).is_empty());
+    }
+
+    #[test]
+    fn pool_stride_defaults_to_k() {
+        let m = parse("model p\ninput x [1,8,8,4]\npl = avgpool(x) k=2\n").unwrap();
+        match &m.graph.nodes[1].op {
+            Op::Pool { kind, k, stride, padding } => {
+                assert_eq!((*kind, *k, *stride, *padding), (PoolKind::Avg, 2, 2, 0));
+            }
+            other => panic!("expected pool, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn hints_build_a_profile() {
+        let src = "model h\ninput x [1,8,8,4]\n\
+                   c = conv2d(x) k=3 cout=8 pad=1 sparsity=0.9 prune=block4x4 quant=4\n";
+        let m = parse(src).unwrap();
+        assert_eq!(m.profile.get("c"), 0.9);
+        assert_eq!(m.profile.structure("c"), PruneStructure::Block { br: 4, bc: 4 });
+        assert_eq!(m.profile.quant_bits("c"), Some(4));
+    }
+
+    #[test]
+    fn positioned_errors() {
+        let src = "model t\ninput x [1,8,8,3]\nc = convv2d(x) k=3 cout=8\n";
+        match parse(src) {
+            Err(CadnnError::Parse { line, col, token, reason }) => {
+                assert_eq!((line, col), (3, 5));
+                assert_eq!(token, "convv2d");
+                assert!(reason.contains("unknown op"), "{reason}");
+            }
+            other => panic!("expected Parse error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn rejects_structural_mistakes() {
+        for (src, frag) in [
+            ("", "expected 'model"),
+            ("model t\n", "expected 'input"),
+            ("model t\ninput x [0]\n", "dimension must be"),
+            ("model t\ninput x [1,4,4,2]\na = add(x, y)\n", "unknown input 'y'"),
+            ("model t\ninput x [1,4,4,2]\nx = relu(x)\n", "duplicate node name"),
+            ("model t\ninput x [1,4,4,2]\nc = conv2d(x) k=9 cout=4\n", "does not fit"),
+            ("model t\ninput x [1,4,4,2]\nc = conv2d(x) k=3 pad=1\n", "missing required"),
+            ("model t\ninput x [1,4,4,2]\nd = dense(x) cout=4\n", "rank-2"),
+            ("model t\ninput x [1,4,4,2]\nr = relu(x) bogus=1\n", "unknown attribute"),
+            ("model t\ninput x [1,4,4,2]\nr = relu(x) sparsity=0.5\n", "not"),
+            ("model t\ninput x [1,4,4,2]\noutput y\n", "unknown node"),
+            ("model t\ninput x [1,4,4,2]\noutput x\nr = relu(x)\n", "last statement"),
+        ] {
+            match parse(src) {
+                Err(CadnnError::Parse { reason, .. }) => {
+                    assert!(reason.contains(frag), "{src:?}: {reason}")
+                }
+                other => panic!("{src:?}: expected Parse error, got {other:?}"),
+            }
+        }
+    }
+}

@@ -1,0 +1,283 @@
+//! Pretty-printer: [`crate::ir::Graph`] back into canonical `.cadnn`
+//! text. `parse(print(g))` reproduces `g` node-for-node, and
+//! `print(parse(src))` is a fixpoint — the property the golden
+//! `models/*.cadnn` files and the round-trip tests pin.
+//!
+//! Canonical form: one statement per line, no blank lines, attributes in
+//! a fixed order, defaults printed explicitly (`stride=`, `pad=`) so a
+//! file diff always shows the full layer configuration.
+
+use std::fmt::Write;
+
+use crate::compress::profile::{PruneStructure, SparsityProfile};
+use crate::ir::ops::{ActKind, Op, PoolKind};
+use crate::ir::Graph;
+
+/// Print a graph in the canonical `.cadnn` dialect.
+pub fn print(g: &Graph) -> String {
+    print_inner(g, None)
+}
+
+/// Print a graph with per-layer `sparsity=` / `prune=` / `quant=` hints
+/// taken from `profile` (layers the profile does not cover get none).
+/// Hint values are only emitted for prunable nodes, mirroring what the
+/// parser accepts.
+pub fn print_with_hints(g: &Graph, profile: &SparsityProfile) -> String {
+    print_inner(g, Some(profile))
+}
+
+fn ident_ok(s: &str) -> bool {
+    let mut chars = s.chars();
+    match chars.next() {
+        Some(c) if c.is_ascii_alphabetic() || c == '_' => {}
+        _ => return false,
+    }
+    chars.all(|c| c.is_ascii_alphanumeric() || c == '_')
+}
+
+/// Bare identifier when possible, quoted (with escapes) otherwise.
+fn fmt_name(s: &str) -> String {
+    if ident_ok(s) {
+        s.to_string()
+    } else {
+        format!("\"{}\"", s.replace('\\', "\\\\").replace('"', "\\\""))
+    }
+}
+
+fn act_label(a: ActKind) -> &'static str {
+    match a {
+        ActKind::Relu => "relu",
+        ActKind::Relu6 => "relu6",
+        ActKind::None => "none",
+    }
+}
+
+/// `3` for symmetric values, `1x7` for asymmetric (kernels and pads).
+fn fmt_hw(h: usize, w: usize) -> String {
+    if h == w {
+        format!("{h}")
+    } else {
+        format!("{h}x{w}")
+    }
+}
+
+/// The op's surface syntax: name plus canonically ordered attributes.
+fn op_surface(op: &Op) -> (&'static str, String) {
+    match op {
+        Op::Input { .. } => ("input", String::new()),
+        Op::Conv2d { kh, kw, cin: _, cout, stride, padh, padw, bias, groups } => {
+            let mut a = format!(
+                " k={} cout={cout} stride={stride} pad={}",
+                fmt_hw(*kh, *kw),
+                fmt_hw(*padh, *padw)
+            );
+            if *bias {
+                a.push_str(" bias");
+            }
+            if *groups > 1 {
+                let _ = write!(a, " groups={groups}");
+            }
+            ("conv2d", a)
+        }
+        Op::DepthwiseConv2d { kh, kw, c: _, stride, padding } => {
+            ("dwconv2d", format!(" k={} stride={stride} pad={padding}", fmt_hw(*kh, *kw)))
+        }
+        Op::BatchNorm { .. } => ("batchnorm", String::new()),
+        Op::Activation { kind: ActKind::Relu } => ("relu", String::new()),
+        Op::Activation { kind: ActKind::Relu6 } => ("relu6", String::new()),
+        Op::Activation { kind: ActKind::None } => ("identity", String::new()),
+        Op::Pool { kind, k, stride, padding } => {
+            let name = match kind {
+                PoolKind::Max => "maxpool",
+                PoolKind::Avg => "avgpool",
+            };
+            (name, format!(" k={k} stride={stride} pad={padding}"))
+        }
+        Op::GlobalAvgPool => ("global_avg_pool", String::new()),
+        Op::FullyConnected { cin: _, cout, bias } => {
+            let mut a = format!(" cout={cout}");
+            if *bias {
+                a.push_str(" bias");
+            }
+            ("dense", a)
+        }
+        Op::Add => ("add", String::new()),
+        Op::Concat => ("concat", String::new()),
+        Op::Softmax => ("softmax", String::new()),
+        Op::Flatten => ("flatten", String::new()),
+        Op::FusedConvBnAct { kh, kw, cin: _, cout, stride, padh, padw, act, groups } => {
+            let mut a = format!(
+                " k={} cout={cout} stride={stride} pad={} act={}",
+                fmt_hw(*kh, *kw),
+                fmt_hw(*padh, *padw),
+                act_label(*act)
+            );
+            if *groups > 1 {
+                let _ = write!(a, " groups={groups}");
+            }
+            ("fused_conv_bn_act", a)
+        }
+        Op::FusedDwBnAct { kh, kw, c: _, stride, padding, act } => (
+            "fused_dw_bn_act",
+            format!(
+                " k={} stride={stride} pad={padding} act={}",
+                fmt_hw(*kh, *kw),
+                act_label(*act)
+            ),
+        ),
+        Op::Gemm { m, k, n, act, fused_epilogue, out_shape } => {
+            let mut a = format!(" m={m} k={k} n={n} act={}", act_label(*act));
+            if *fused_epilogue {
+                a.push_str(" epilogue");
+            }
+            let _ = write!(a, " out={out_shape}");
+            ("gemm", a)
+        }
+    }
+}
+
+fn print_inner(g: &Graph, profile: Option<&SparsityProfile>) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "model {}", fmt_name(&g.name));
+    let _ = writeln!(out, "input {} {}", fmt_name(&g.nodes[0].name), g.nodes[0].shape);
+    for n in g.nodes.iter().skip(1) {
+        let args: Vec<String> = n.inputs.iter().map(|&i| fmt_name(&g.nodes[i].name)).collect();
+        let (op_name, attrs) = op_surface(&n.op);
+        let _ = write!(out, "{} = {op_name}({}){attrs}", fmt_name(&n.name), args.join(", "));
+        if let Some(p) = profile {
+            if n.op.prunable() {
+                if let Some(&s) = p.layers.get(&n.name) {
+                    let _ = write!(out, " sparsity={s}");
+                    let st = p.structure(&n.name);
+                    if st != PruneStructure::Element {
+                        let _ = write!(out, " prune={}", st.label());
+                    }
+                    if let Some(bits) = p.quant_bits(&n.name) {
+                        let _ = write!(out, " quant={bits}");
+                    }
+                }
+            }
+        }
+        out.push('\n');
+    }
+    let _ = writeln!(out, "output {}", fmt_name(&g.nodes[g.output].name));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::parser::parse;
+    use super::*;
+    use crate::ir::ops::Op;
+    use crate::ir::Shape;
+
+    fn tiny() -> Graph {
+        let mut g = Graph::new("tiny", Shape::nhwc(1, 8, 8, 3));
+        let c = g.add("c1", Op::conv_b(3, 3, 3, 8, 1, 1), vec![0]);
+        let b = g.add("b1", Op::BatchNorm { c: 8 }, vec![c]);
+        let r = g.add("r1", Op::Activation { kind: ActKind::Relu }, vec![b]);
+        let p = g.add("p1", Op::Pool { kind: PoolKind::Max, k: 2, stride: 2, padding: 0 }, vec![r]);
+        let gp = g.add("gap", Op::GlobalAvgPool, vec![p]);
+        g.add("fc", Op::fc(8, 10), vec![gp]);
+        g
+    }
+
+    #[test]
+    fn canonical_text_is_stable() {
+        let text = print(&tiny());
+        assert_eq!(
+            text,
+            "model tiny\n\
+             input input [1,8,8,3]\n\
+             c1 = conv2d(input) k=3 cout=8 stride=1 pad=1 bias\n\
+             b1 = batchnorm(c1)\n\
+             r1 = relu(b1)\n\
+             p1 = maxpool(r1) k=2 stride=2 pad=0\n\
+             gap = global_avg_pool(p1)\n\
+             fc = dense(gap) cout=10 bias\n\
+             output fc\n"
+        );
+    }
+
+    #[test]
+    fn print_parse_print_fixpoint() {
+        let text = print(&tiny());
+        let reparsed = parse(&text).unwrap();
+        assert_eq!(reparsed.graph, tiny());
+        assert_eq!(print(&reparsed.graph), text);
+    }
+
+    #[test]
+    fn quoted_names_roundtrip() {
+        let mut g = Graph::new("weird name", Shape::nhwc(1, 4, 4, 2));
+        g.nodes[0].name = "the input".into();
+        g.add("relu 1", Op::Activation { kind: ActKind::Relu }, vec![0]);
+        g.add("q\"x\\y", Op::Softmax, vec![1]);
+        let text = print(&g);
+        let reparsed = parse(&text).unwrap();
+        assert_eq!(reparsed.graph, g);
+        assert_eq!(print(&reparsed.graph), text);
+    }
+
+    #[test]
+    fn hints_roundtrip_through_text() {
+        let g = tiny();
+        let mut profile = SparsityProfile::default();
+        profile.layers.insert("c1".into(), 0.93);
+        profile.structures.insert("c1".into(), PruneStructure::Pattern { entries: 4 });
+        profile.layers.insert("fc".into(), 0.75);
+        let text = print_with_hints(&g, &profile);
+        assert!(text.contains("sparsity=0.93 prune=pattern4"), "{text}");
+        let reparsed = parse(&text).unwrap();
+        assert_eq!(reparsed.graph, g);
+        assert_eq!(reparsed.profile, profile);
+    }
+
+    #[test]
+    fn asymmetric_and_fused_surfaces() {
+        let mut g = Graph::new("asym", Shape::nhwc(1, 17, 17, 8));
+        g.add("a", Op::conv_asym(1, 7, 8, 16, 1, 0, 3), vec![0]);
+        g.add(
+            "f",
+            Op::FusedConvBnAct {
+                kh: 3,
+                kw: 3,
+                cin: 16,
+                cout: 16,
+                stride: 1,
+                padh: 1,
+                padw: 1,
+                act: ActKind::Relu6,
+                groups: 2,
+            },
+            vec![1],
+        );
+        let text = print(&g);
+        assert!(text.contains("k=1x7"), "{text}");
+        assert!(text.contains("pad=0x3"), "{text}");
+        assert!(text.contains("act=relu6 groups=2"), "{text}");
+        let reparsed = parse(&text).unwrap();
+        assert_eq!(reparsed.graph, g);
+    }
+
+    #[test]
+    fn gemm_surface_roundtrips() {
+        let mut g = Graph::new("low", Shape::nhwc(1, 4, 4, 8));
+        g.add(
+            "g0",
+            Op::Gemm {
+                m: 16,
+                k: 8,
+                n: 12,
+                act: ActKind::Relu,
+                fused_epilogue: true,
+                out_shape: Shape::nhwc(1, 4, 4, 12),
+            },
+            vec![0],
+        );
+        let text = print(&g);
+        assert!(text.contains("m=16 k=8 n=12 act=relu epilogue out=[1,4,4,12]"), "{text}");
+        let reparsed = parse(&text).unwrap();
+        assert_eq!(reparsed.graph, g);
+    }
+}

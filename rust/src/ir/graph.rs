@@ -8,7 +8,7 @@ use crate::error::CadnnError;
 
 pub type NodeId = usize;
 
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Node {
     pub id: NodeId,
     pub name: String,
@@ -18,7 +18,7 @@ pub struct Node {
     pub shape: Shape,
 }
 
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Graph {
     pub name: String,
     pub nodes: Vec<Node>,
@@ -111,8 +111,10 @@ impl Graph {
         out
     }
 
-    /// Validate topological invariants: inputs precede users, shapes are
-    /// consistent under re-inference, single entry node.
+    /// Validate topological invariants: inputs precede users, node names
+    /// are unique, shapes are consistent under re-inference, single entry
+    /// node. Diagnostics name the participating nodes (not just their
+    /// ids) so errors over parsed `.cadnn` models stay actionable.
     pub fn validate(&self) -> Result<(), CadnnError> {
         let invalid = |reason: String| CadnnError::InvalidGraph {
             graph: self.name.clone(),
@@ -124,15 +126,34 @@ impl Graph {
         if !matches!(self.nodes[0].op, Op::Input { .. }) {
             return Err(invalid("node 0 must be Input".into()));
         }
+        let mut seen: std::collections::BTreeMap<&str, NodeId> = Default::default();
+        for n in &self.nodes {
+            if let Some(&first) = seen.get(n.name.as_str()) {
+                return Err(invalid(format!(
+                    "duplicate node name '{}' (nodes {first} and {})",
+                    n.name, n.id
+                )));
+            }
+            seen.insert(&n.name, n.id);
+        }
         for n in &self.nodes {
             if n.id >= self.nodes.len() {
                 return Err(invalid(format!("node {} id out of range", n.name)));
             }
             for &i in &n.inputs {
                 if i >= n.id {
+                    // append-only ids make any back-reference to self or a
+                    // later node the cycle/forward-edge case; name both
+                    // endpoints when the target exists
+                    let target = self
+                        .nodes
+                        .get(i)
+                        .map(|t| format!("'{}' ({i})", t.name))
+                        .unwrap_or_else(|| format!("out-of-range id {i}"));
                     return Err(invalid(format!(
-                        "node '{}' ({}) uses input {} that does not precede it",
-                        n.name, n.id, i
+                        "node '{}' ({}) uses input {target} that does not precede it \
+                         (cycle or forward edge)",
+                        n.name, n.id
                     )));
                 }
             }
@@ -152,6 +173,43 @@ impl Graph {
             return Err(invalid("output id out of range".into()));
         }
         Ok(())
+    }
+
+    /// This graph rebuilt at a different input batch size (leading input
+    /// dimension), with every shape re-inferred — how file-defined models
+    /// (`.cadnn`, a single fixed-batch graph on disk) get batch variants.
+    /// Post-pass graphs containing [`Op::Gemm`] bake the batch into `m` /
+    /// `out_shape`, so they only support the batch they were lowered at.
+    pub fn with_batch(&self, batch: usize) -> Result<Graph, CadnnError> {
+        if batch == 0 {
+            return Err(CadnnError::config("batch size must be nonzero"));
+        }
+        let in_shape = &self.nodes[0].shape;
+        if in_shape.rank() == 0 {
+            return Err(CadnnError::config(format!(
+                "graph '{}' has a rank-0 input; no batch axis to rewrite",
+                self.name
+            )));
+        }
+        if in_shape.0[0] == batch {
+            return Ok(self.clone());
+        }
+        if self.nodes.iter().any(|n| matches!(n.op, Op::Gemm { .. })) {
+            return Err(CadnnError::config(format!(
+                "graph '{}' contains lowered Gemm nodes that fix batch {}; \
+                 rebatch the pre-pass graph instead",
+                self.name, in_shape.0[0]
+            )));
+        }
+        let mut dims = in_shape.0.clone();
+        dims[0] = batch;
+        let mut g = Graph::new(&self.name, Shape(dims));
+        g.nodes[0].name = self.nodes[0].name.clone();
+        for n in self.nodes.iter().skip(1) {
+            g.add(n.name.clone(), n.op.clone(), n.inputs.clone());
+        }
+        g.output = self.output;
+        Ok(g)
     }
 
     /// Per-op-kind FLOP histogram (used by reports and the cost model).
@@ -215,6 +273,56 @@ mod tests {
         // manually corrupt: make node 1 depend on node 3
         g.nodes[1].inputs = vec![3];
         assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_duplicate_names() {
+        let mut g = tiny();
+        g.nodes[3].name = "conv".into();
+        let err = g.validate().unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("duplicate node name 'conv'"), "{msg}");
+        assert!(msg.contains("nodes 1 and 3"), "{msg}");
+    }
+
+    #[test]
+    fn forward_edge_diagnostic_names_both_nodes() {
+        let mut g = tiny();
+        g.nodes[1].inputs = vec![3];
+        let msg = g.validate().unwrap_err().to_string();
+        assert!(msg.contains("node 'conv' (1)"), "{msg}");
+        assert!(msg.contains("'relu' (3)"), "{msg}");
+        assert!(msg.contains("cycle or forward edge"), "{msg}");
+    }
+
+    #[test]
+    fn with_batch_rebuilds_shapes() {
+        let g = tiny();
+        let g4 = g.with_batch(4).unwrap();
+        assert!(g4.validate().is_ok());
+        assert_eq!(g4.nodes[0].shape, Shape::nhwc(4, 8, 8, 3));
+        assert_eq!(g4.nodes.last().unwrap().shape, Shape::vec2(4, 10));
+        assert_eq!(g4.len(), g.len());
+        assert_eq!(g4.with_batch(4).unwrap(), g4, "same batch is identity");
+        assert!(g.with_batch(0).is_err());
+    }
+
+    #[test]
+    fn with_batch_rejects_lowered_gemm() {
+        let mut g = Graph::new("lowered", Shape::nhwc(1, 4, 4, 8));
+        g.add(
+            "g",
+            Op::Gemm {
+                m: 16,
+                k: 8,
+                n: 8,
+                act: ActKind::None,
+                fused_epilogue: false,
+                out_shape: Shape::nhwc(1, 4, 4, 8),
+            },
+            vec![0],
+        );
+        assert!(g.with_batch(2).is_err());
     }
 
     #[test]

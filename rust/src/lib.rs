@@ -58,6 +58,7 @@
 //! |---------------|----------------------------------------------------------|
 //! | [`api`]       | Engine/Session/Backend — the public inference surface    |
 //! | [`error`]     | `CadnnError`, the crate-wide typed error enum            |
+//! | [`front`]     | `.cadnn` textual model IR: parser + canonical printer    |
 //! | [`ir`]        | dataflow graph IR of the exact paper architectures       |
 //! | [`models`]    | graph builders (ResNet-50, MobileNets, Inception, §3 nets)|
 //! | [`passes`]    | fusion / 1x1→GEMM / layout / load-elimination passes     |
@@ -86,6 +87,7 @@ pub mod coordinator;
 pub mod costmodel;
 pub mod error;
 pub mod exec;
+pub mod front;
 pub mod ir;
 pub mod kernels;
 pub mod models;

@@ -5,12 +5,14 @@
 //! cadnn table2                              regenerate Table 2
 //! cadnn compress [--report PATH]            §3 compression claims
 //! cadnn tune [--model NAME]                 optimization-parameter selection demo
-//! cadnn plan [--model NAME] [--format auto|csr|bsr|pattern]
+//! cadnn plan [--model NAME | --model-file F.cadnn]
+//!            [--format auto|csr|bsr|pattern]
 //!            [--value-bits auto|f32|q8|q4]
 //!            [--pruning element|block|pattern] [--measured]
 //!                                           per-layer sparse-format plan
-//! cadnn serve [--model M] [--variant V] [--requests N] [--rps R] [--native]
-//!             [--models a=lenet5,b=lenet5:sparse] [--deadline-ms D]
+//! cadnn serve [--model M | --model-file F.cadnn] [--variant V]
+//!             [--requests N] [--rps R] [--native]
+//!             [--models a=lenet5,b=models/net.cadnn:sparse] [--deadline-ms D]
 //!             [--greedy] [--no-planner] [--topk K]
 //!             [--format auto|csr|bsr|pattern] serve a Poisson trace and report
 //!                                           (--native / --models: no artifacts
@@ -20,6 +22,12 @@
 //!                                           batch selection)
 //! cadnn calibrate                           host kernel calibration table
 //! ```
+//!
+//! Anywhere a builtin name is accepted, `--model-file` (or a `--models`
+//! entry ending in `.cadnn`) substitutes a user-defined textual model —
+//! grammar in `docs/MODEL_FORMAT.md`. Inline `sparsity=` hints in the
+//! file drive the sparse planner; a hintless file under a sparse
+//! personality falls back to the paper profile.
 
 use anyhow::{anyhow, Result};
 use cadnn::api::Engine;
@@ -65,6 +73,12 @@ fn value_policy(args: &[String]) -> Result<ValuePolicy> {
     }
 }
 
+/// `models/resnet50.cadnn` → `resnet50`: the default alias for file models.
+fn file_stem(path: &str) -> String {
+    let base = path.rsplit('/').next().unwrap_or(path);
+    base.strip_suffix(".cadnn").unwrap_or(base).to_string()
+}
+
 /// `--pruning` structure applied on top of the paper profile's per-layer
 /// sparsities (element = the paper's scattered magnitude pruning; block /
 /// pattern = the structured ADMM projections).
@@ -102,23 +116,44 @@ fn main() -> Result<()> {
 /// Per-layer sparse-format plan for a model under the paper profile —
 /// the planner subsystem's front door.
 fn cmd_plan(args: &[String]) -> Result<()> {
-    let model = opt(args, "--model").unwrap_or_else(|| "resnet50".into());
     let policy = format_policy(args)?;
     let vpolicy = value_policy(args)?;
     let structure = prune_structure(args)?;
-    let g = models::build(&model, 1).ok_or_else(|| anyhow!("unknown model {model}"))?;
-    let mut profile = paper_profile(&g);
+    // a `.cadnn` file carries its own graph and (optionally) its own
+    // per-layer hints; hintless files and builtin names use the paper
+    // profile
+    let model_file = opt(args, "--model-file");
+    let (model, mut profile) = match &model_file {
+        Some(path) => {
+            let parsed = cadnn::front::parse_file(path)?;
+            let label = format!("{} ({path})", parsed.graph.name);
+            let profile = if parsed.profile.is_empty() {
+                paper_profile(&parsed.graph)
+            } else {
+                parsed.profile
+            };
+            (label, profile)
+        }
+        None => {
+            let model = opt(args, "--model").unwrap_or_else(|| "resnet50".into());
+            let g = models::build(&model, 1).ok_or_else(|| anyhow!("unknown model {model}"))?;
+            (model, paper_profile(&g))
+        }
+    };
     if structure != cadnn::compress::PruneStructure::Element {
         let names: Vec<String> = profile.layers.keys().cloned().collect();
         for name in names {
             profile.structures.insert(name, structure);
         }
     }
-    let mut builder = Engine::native(&model)
-        .personality(Personality::CadnnSparse)
-        .sparsity_profile(profile.clone())
-        .sparse_format(policy)
-        .value_bits(vpolicy);
+    let mut builder = match &model_file {
+        Some(path) => Engine::from_model_file(path).batch_sizes(&[1]),
+        None => Engine::native(&model),
+    }
+    .personality(Personality::CadnnSparse)
+    .sparsity_profile(profile.clone())
+    .sparse_format(policy)
+    .value_bits(vpolicy);
     if flag(args, "--measured") {
         eprintln!("measuring candidate kernels per layer (tuner mode)...");
         builder = builder.tuned(true);
@@ -305,19 +340,22 @@ fn cmd_tune(args: &[String]) -> Result<()> {
 /// Parse `--models a=lenet5,b=lenet5:sparse` into
 /// `(alias, model, sparse?)` triples. A bare entry (`lenet5`) registers
 /// under its own name; a `:sparse` suffix serves the compressed variant.
+/// A model ending in `.cadnn` is a textual model file; its bare alias is
+/// the file stem (`models/net.cadnn` → `net`).
 fn parse_model_specs(spec: &str) -> Result<Vec<(String, String, bool)>> {
     let mut out = Vec::new();
     for part in spec.split(',').filter(|s| !s.is_empty()) {
         let (alias, rest) = match part.split_once('=') {
-            Some((a, r)) => (a.to_string(), r),
-            None => (part.split(':').next().unwrap_or(part).to_string(), part),
+            Some((a, r)) => (Some(a.to_string()), r),
+            None => (None, part),
         };
-        let (model, sparse) = match rest.split_once(':') {
+        let (model, sparse) = match rest.rsplit_once(':') {
             Some((m, "sparse")) => (m.to_string(), true),
             Some((m, "dense")) => (m.to_string(), false),
             Some((_, v)) => return Err(anyhow!("unknown variant ':{v}' (dense|sparse)")),
             None => (rest.to_string(), false),
         };
+        let alias = alias.unwrap_or_else(|| file_stem(&model));
         if alias.is_empty() || model.is_empty() {
             return Err(anyhow!("bad --models entry '{part}' (alias=model[:sparse])"));
         }
@@ -341,8 +379,9 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     let deadline_ms: Option<u64> = opt(args, "--deadline-ms").and_then(|s| s.parse().ok());
     let topk: Option<usize> = opt(args, "--topk").and_then(|s| s.parse().ok());
     let models_spec = opt(args, "--models");
+    let model_file = opt(args, "--model-file");
 
-    if !flag(args, "--native") && models_spec.is_none() {
+    if !flag(args, "--native") && models_spec.is_none() && model_file.is_none() {
         // the artifact path keeps the original single-model coordinator
         let artifacts_dir = opt(args, "--artifacts").unwrap_or_else(|| "artifacts".into());
         println!(
@@ -396,9 +435,10 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     }
 
     // native multi-model serving through cadnn::serve::Server
-    let specs = match &models_spec {
-        Some(s) => parse_model_specs(s)?,
-        None => vec![(model.clone(), model.clone(), variant == "sparse")],
+    let specs = match (&models_spec, &model_file) {
+        (Some(s), _) => parse_model_specs(s)?,
+        (None, Some(path)) => vec![(file_stem(path), path.clone(), variant == "sparse")],
+        (None, None) => vec![(model.clone(), model.clone(), variant == "sparse")],
     };
     let policy_fmt = format_policy(args)?;
     if opt(args, "--format").is_some() && !specs.iter().any(|(_, _, sp)| *sp) {
@@ -417,12 +457,24 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         .collect();
     let mut builder = Server::builder();
     for (alias, name, sparse) in &specs {
-        let mut eb = Engine::native(name)
+        let is_file = name.ends_with(".cadnn");
+        let mut eb = if is_file { Engine::from_model_file(name) } else { Engine::native(name) }
             .personality(if *sparse { Personality::CadnnSparse } else { Personality::CadnnDense })
             .batch_sizes(&sizes);
         if *sparse {
-            let g = models::build(name, 1).ok_or_else(|| anyhow!("unknown model {name}"))?;
-            eb = eb.sparsity_profile(paper_profile(&g)).sparse_format(policy_fmt);
+            if is_file {
+                // inline hints (if any) attach inside the builder; a
+                // hintless file gets the paper profile so `:sparse`
+                // always means a planned sparse engine
+                let parsed = cadnn::front::parse_file(name)?;
+                if parsed.profile.is_empty() {
+                    eb = eb.sparsity_profile(paper_profile(&parsed.graph));
+                }
+            } else {
+                let g = models::build(name, 1).ok_or_else(|| anyhow!("unknown model {name}"))?;
+                eb = eb.sparsity_profile(paper_profile(&g));
+            }
+            eb = eb.sparse_format(policy_fmt);
         }
         let engine = eb.build()?;
         let planned = qcfg.planned && !engine.plan_costs().is_empty();
@@ -495,12 +547,29 @@ fn cmd_profile(args: &[String]) -> Result<()> {
     if opt(args, "--format").is_some() && !personality.sparse() {
         return Err(anyhow!("--format requires --personality cadnn-sparse"));
     }
-    let mut builder = Engine::native(&model).personality(personality);
+    let model_file = opt(args, "--model-file");
+    let mut builder = match &model_file {
+        Some(path) => Engine::from_model_file(path).batch_sizes(&[1]),
+        None => Engine::native(&model),
+    }
+    .personality(personality);
     if personality.sparse() {
-        let g = models::build(&model, 1).ok_or_else(|| anyhow!("unknown model {model}"))?;
-        builder = builder
-            .sparsity_profile(paper_profile(&g))
-            .sparse_format(policy);
+        match &model_file {
+            // inline hints attach inside the builder; hintless files
+            // and builtin names use the paper profile
+            Some(path) => {
+                let parsed = cadnn::front::parse_file(path)?;
+                if parsed.profile.is_empty() {
+                    builder = builder.sparsity_profile(paper_profile(&parsed.graph));
+                }
+            }
+            None => {
+                let g =
+                    models::build(&model, 1).ok_or_else(|| anyhow!("unknown model {model}"))?;
+                builder = builder.sparsity_profile(paper_profile(&g));
+            }
+        }
+        builder = builder.sparse_format(policy);
     }
     let engine = builder.build()?;
     let inst = engine
@@ -510,7 +579,8 @@ fn cmd_profile(args: &[String]) -> Result<()> {
     let mut input = Tensor::zeros(&inst.graph.nodes[0].shape.0);
     let mut rng = Rng::new(1);
     rng.fill_normal(&mut input.data, 0.5);
-    eprintln!("profiling {model} under {} ...", personality.label());
+    let label = model_file.as_deref().unwrap_or(&model);
+    eprintln!("profiling {label} under {} ...", personality.label());
     let mut prof = inst.profile(&input, 1)?;
     let total: f64 = prof.iter().map(|p| p.us).sum();
     prof.sort_by(|a, b| b.us.partial_cmp(&a.us).unwrap());

@@ -1,0 +1,313 @@
+//! End-to-end coverage of the textual model IR front-end through the
+//! public API: the golden `models/*.cadnn` files are bit-identical to
+//! what the canonical printer emits for the builtin builders, every
+//! builtin round-trips through text, print→parse→print is a fixpoint on
+//! randomly generated graphs, malformed input always yields a
+//! positioned `CadnnError::Parse` (never a panic), and a `.cadnn` file
+//! alone is a complete input to the compress → plan → serve pipeline.
+
+use cadnn::api::Engine;
+use cadnn::compress::profile::{PruneStructure, SparsityProfile};
+use cadnn::error::CadnnError;
+use cadnn::exec::Personality;
+use cadnn::front;
+use cadnn::ir::ops::{ActKind, Op, PoolKind};
+use cadnn::ir::{Graph, Shape};
+use cadnn::models;
+use cadnn::planner::SparseFormat;
+use cadnn::util::rng::Rng;
+
+const GOLDEN: [&str; 4] = ["lenet5", "mobilenet_v1", "resnet50", "inception_v3"];
+
+fn golden_path(name: &str) -> String {
+    format!("{}/models/{name}.cadnn", env!("CARGO_MANIFEST_DIR"))
+}
+
+/// The checked-in `.cadnn` files ARE the printer's output for the
+/// builtin builders — byte for byte. Regenerate with
+/// `front::print(&models::build(name, 1).unwrap())` if an op's surface
+/// syntax changes; any drift between builders, printer, and goldens
+/// fails here first.
+#[test]
+fn golden_files_are_bit_identical_to_builders() {
+    for name in GOLDEN {
+        let g = models::build(name, 1).unwrap();
+        let text = front::print(&g);
+        let file = std::fs::read_to_string(golden_path(name))
+            .unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert_eq!(text, file, "{name}: golden file drifted from printer output");
+    }
+}
+
+/// Parsing a golden file reconstructs the builder's graph node-for-node
+/// (names, ops, wiring, shapes — `Graph` equality is structural).
+#[test]
+fn golden_files_parse_back_to_the_builders() {
+    for name in GOLDEN {
+        let parsed = front::parse_file(&golden_path(name))
+            .unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert_eq!(parsed.graph, models::build(name, 1).unwrap(), "{name}");
+        assert!(parsed.profile.is_empty(), "{name}: goldens carry no hints");
+    }
+}
+
+/// Every builtin — including the four without golden files — survives a
+/// full print → parse round trip, and the reprint is a fixpoint.
+#[test]
+fn every_builtin_round_trips_through_text() {
+    let all = models::EVAL_MODELS.iter().chain(models::COMPRESS_MODELS.iter());
+    for name in all {
+        let g = models::build(name, 1).unwrap();
+        let text = front::print(&g);
+        let parsed = front::parse(&text).unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert_eq!(parsed.graph, g, "{name}: round trip changed the graph");
+        assert_eq!(front::print(&parsed.graph), text, "{name}: print not a fixpoint");
+    }
+}
+
+/// Random chain CNN over the user-facing op vocabulary: conv blocks
+/// (incl. asymmetric kernels, bias, grouped), depthwise blocks, pools,
+/// residual adds, concat branches, and both flatten+fc and gap+fc
+/// tails. Every graph it returns passes `Graph::validate`.
+fn random_graph(case: u64, rng: &mut Rng) -> Graph {
+    let h = [8usize, 10, 12, 16][rng.below(4)];
+    let c0 = [2usize, 3, 4, 8][rng.below(4)];
+    let mut g = Graph::new(&format!("rand{case}"), Shape::nhwc(1, h, h, c0));
+    let mut x = 0usize;
+    let mut cin = c0;
+    let layers = rng.range(2, 7);
+    for i in 0..layers {
+        match rng.below(7) {
+            // conv (+ optional bn+act), sometimes asymmetric / biased
+            0 | 1 => {
+                let cout = [4usize, 8, 12, 16][rng.below(4)];
+                let (k, s, p): (usize, usize, usize) =
+                    [(1, 1, 0), (3, 1, 1), (3, 2, 1), (5, 1, 2)][rng.below(4)];
+                if g.node(x).shape.h() + 2 * p < k {
+                    continue;
+                }
+                let op = match rng.below(3) {
+                    0 => Op::conv(k, k, cin, cout, s, p),
+                    1 => Op::conv_b(k, k, cin, cout, s, p),
+                    _ => Op::conv_asym(1, k, cin, cout, s, 0, p),
+                };
+                let c = g.add(format!("l{i}_conv"), op, vec![x]);
+                let b = g.add(format!("l{i}_bn"), Op::BatchNorm { c: cout }, vec![c]);
+                let kind = [ActKind::Relu, ActKind::Relu6][rng.below(2)];
+                x = g.add(format!("l{i}_act"), Op::Activation { kind }, vec![b]);
+                cin = cout;
+            }
+            // depthwise block
+            2 => {
+                let stride = 1 + rng.below(2);
+                let d = g.add(
+                    format!("l{i}_dw"),
+                    Op::DepthwiseConv2d { kh: 3, kw: 3, c: cin, stride, padding: 1 },
+                    vec![x],
+                );
+                let b = g.add(format!("l{i}_dw_bn"), Op::BatchNorm { c: cin }, vec![d]);
+                x = g.add(
+                    format!("l{i}_dw_act"),
+                    Op::Activation { kind: ActKind::Relu },
+                    vec![b],
+                );
+            }
+            // pool
+            3 => {
+                if g.node(x).shape.h() < 2 {
+                    continue;
+                }
+                let kind = [PoolKind::Max, PoolKind::Avg][rng.below(2)];
+                x = g.add(
+                    format!("l{i}_pool"),
+                    Op::Pool { kind, k: 2, stride: 2, padding: 0 },
+                    vec![x],
+                );
+            }
+            // residual 1x1 branch + add (shape-preserving)
+            4 => {
+                let c = g.add(format!("l{i}_res"), Op::conv(1, 1, cin, cin, 1, 0), vec![x]);
+                let b = g.add(format!("l{i}_res_bn"), Op::BatchNorm { c: cin }, vec![c]);
+                x = g.add(format!("l{i}_add"), Op::Add, vec![b, x]);
+            }
+            // two 1x1 branches concatenated on channels
+            5 => {
+                let (ca, cb) = ([4usize, 8][rng.below(2)], [4usize, 8][rng.below(2)]);
+                let a = g.add(format!("l{i}_br_a"), Op::conv(1, 1, cin, ca, 1, 0), vec![x]);
+                let b = g.add(format!("l{i}_br_b"), Op::conv(1, 1, cin, cb, 1, 0), vec![x]);
+                x = g.add(format!("l{i}_cat"), Op::Concat, vec![a, b]);
+                cin = ca + cb;
+            }
+            // identity — keeps chains of differing lengths in the pool
+            _ => {
+                x = g.add(format!("l{i}_id"), Op::Activation { kind: ActKind::None }, vec![x]);
+            }
+        }
+    }
+    let shape = g.node(x).shape.clone();
+    let head = if rng.below(2) == 0 {
+        let f = g.add("flatten", Op::Flatten, vec![x]);
+        let flat = shape.h() * shape.w() * cin;
+        g.add("fc", Op::FullyConnected { cin: flat, cout: 10, bias: rng.below(2) == 0 }, vec![f])
+    } else {
+        let gap = g.add("gap", Op::GlobalAvgPool, vec![x]);
+        g.add("fc", Op::fc(cin, 10), vec![gap])
+    };
+    if rng.below(2) == 0 {
+        g.add("sm", Op::Softmax, vec![head]);
+    }
+    g
+}
+
+/// Property: for ≥200 seeded random graphs, print → parse → print is a
+/// fixpoint and parse reconstructs the graph exactly. Half the cases
+/// also carry a sparsity profile through `print_with_hints` and require
+/// it back intact (values, structures, quant bits).
+#[test]
+fn prop_print_parse_print_is_a_fixpoint() {
+    let cases = 200u64;
+    for case in 0..cases {
+        let mut rng = Rng::new(0xBEEF ^ case.wrapping_mul(0x9E3779B97F4A7C15));
+        let g = random_graph(case, &mut rng);
+        g.validate().unwrap_or_else(|e| panic!("case {case}: generator bug: {e}"));
+
+        let text = if case % 2 == 0 {
+            front::print(&g)
+        } else {
+            let s = [0.5, 0.8, 0.9, 0.93][rng.below(4)];
+            let mut profile = match rng.below(3) {
+                0 => SparsityProfile::uniform(&g, s),
+                1 => SparsityProfile::uniform_structured(
+                    &g,
+                    s,
+                    PruneStructure::parse("block4x4").unwrap(),
+                ),
+                _ => SparsityProfile::uniform(&g, s).with_uniform_quant(4),
+            };
+            // profiles over graphs with no prunable layer print hint-free
+            if profile.is_empty() {
+                profile = SparsityProfile::default();
+            }
+            let text = front::print_with_hints(&g, &profile);
+            let parsed = front::parse(&text).unwrap_or_else(|e| panic!("case {case}: {e}\n{text}"));
+            assert_eq!(parsed.profile, profile, "case {case}: hints changed\n{text}");
+            text
+        };
+        let parsed = front::parse(&text).unwrap_or_else(|e| panic!("case {case}: {e}\n{text}"));
+        assert_eq!(parsed.graph, g, "case {case}: graph changed\n{text}");
+        assert_eq!(front::print(&parsed.graph), front::print(&g), "case {case}: not a fixpoint");
+    }
+}
+
+const TINY: &str = "model tiny\n\
+                    input input [1,8,8,3]\n\
+                    c1 = conv2d(input) k=3 cout=8 stride=1 pad=1 sparsity=0.5\n\
+                    b1 = batchnorm(c1)\n\
+                    r1 = relu(b1)\n\
+                    p1 = maxpool(r1) k=2\n\
+                    gap = global_avg_pool(p1)\n\
+                    fc = dense(gap) cout=10 bias sparsity=0.9 prune=block4x4 quant=4\n\
+                    out = softmax(fc)\n\
+                    output out\n";
+
+/// Malformed source of every kind yields a positioned `Parse` error with
+/// the expected diagnostic — the same corpus the python reader pins
+/// (`python/tests/test_cadnn_ir.py`), so the two front-ends reject
+/// identically.
+#[test]
+fn malformed_input_yields_positioned_parse_errors() {
+    let cases: [(&str, &str); 13] = [
+        ("", "expected 'model"),
+        ("model t\n", "expected 'input"),
+        ("model t\ninput x [0]\n", "dimension must be"),
+        ("model t\ninput x [1,4,4,2]\na = add(x, y)\n", "unknown input 'y'"),
+        ("model t\ninput x [1,4,4,2]\nx = relu(x)\n", "duplicate node name"),
+        ("model t\ninput x [1,4,4,2]\nc = conv2d(x) k=9 cout=4\n", "does not fit"),
+        ("model t\ninput x [1,4,4,2]\nd = dense(x) cout=4\n", "rank-2"),
+        ("model t\ninput x [1,4,4,2]\nr = relu(x) bogus=1\n", "unknown attribute"),
+        ("model t\ninput x [1,4,4,2]\nr = relu(x) sparsity=0.5\n", "weight layers"),
+        ("model t\ninput x [1,4,4,2]\noutput y\n", "unknown node"),
+        ("model t\ninput x [1,4,4,2]\noutput x\nr = relu(x)\n", "last statement"),
+        ("model t\ninput x [1,4,4,2]\nc = convv2d(x) k=3\n", "unknown op"),
+        ("a @ b", "unexpected character"),
+    ];
+    for (src, frag) in cases {
+        let err = front::parse(src).err().unwrap_or_else(|| panic!("accepted: {src:?}"));
+        assert!(matches!(err, CadnnError::Parse { .. }), "{src:?}: {err}");
+        let msg = err.to_string();
+        assert!(msg.contains("parse error at"), "{src:?}: {msg}");
+        assert!(msg.contains(frag), "{src:?}: missing {frag:?} in {msg}");
+    }
+}
+
+/// Error positions are exact (1-based line and column of the offending
+/// token), so editors can jump to them.
+#[test]
+fn error_positions_are_exact() {
+    let err =
+        front::parse("model t\ninput x [1,8,8,3]\nc = convv2d(x) k=3 cout=8\n").err().unwrap();
+    match err {
+        CadnnError::Parse { line, col, ref token, .. } => {
+            assert_eq!((line, col, token.as_str()), (3, 5, "convv2d"), "{err}");
+        }
+        other => panic!("expected Parse, got {other}"),
+    }
+}
+
+/// Truncating a valid model at EVERY byte offset either parses (the
+/// optional-output grammar admits some prefixes) or returns `Parse` —
+/// never a panic, never a different error kind.
+#[test]
+fn truncation_at_every_offset_never_panics() {
+    for cut in 0..TINY.len() {
+        match front::parse(&TINY[..cut]) {
+            Ok(_) | Err(CadnnError::Parse { .. }) => {}
+            Err(other) => panic!("cut at {cut}: unexpected error kind: {other}"),
+        }
+    }
+}
+
+/// A hinted `.cadnn` file alone drives the full pipeline: parse →
+/// profile → plan (hinted layers leave Dense) → serve with the right
+/// output arity. This is the acceptance path for user-defined models.
+#[test]
+fn cadnn_file_is_a_complete_pipeline_input() {
+    let path = std::env::temp_dir().join(format!("cadnn_mir_{}.cadnn", std::process::id()));
+    std::fs::write(&path, TINY).unwrap();
+    let engine = Engine::from_model_file(path.to_str().unwrap())
+        .personality(Personality::CadnnSparse)
+        .build()
+        .unwrap();
+    std::fs::remove_file(&path).ok();
+
+    assert_eq!(engine.classes(), 10);
+    let plan = engine.exec_plan().expect("inline hints must produce a plan");
+    let fc = plan.get("fc").expect("hinted fc layer must be planned");
+    assert_ne!(fc.format, SparseFormat::Dense, "90% sparse fc stayed dense: {fc:?}");
+    let mut rng = Rng::new(42);
+    let mut img = vec![0.0f32; engine.input_len()];
+    rng.fill_normal(&mut img, 0.5);
+    let out = engine.session().run(&img).unwrap();
+    assert_eq!(out.len(), 10);
+    let sum: f32 = out.iter().sum();
+    assert!((sum - 1.0).abs() < 1e-4, "softmax output must normalize: {sum}");
+}
+
+/// An explicit profile whose names match nothing in the parsed file
+/// fails the build loudly (every layer would silently plan Dense).
+#[test]
+fn mismatched_profile_on_model_file_is_config_error() {
+    let path = std::env::temp_dir().join(format!("cadnn_mir_bad_{}.cadnn", std::process::id()));
+    std::fs::write(&path, TINY).unwrap();
+    let mut profile = SparsityProfile::default();
+    profile.layers.insert("not_a_layer".into(), 0.9);
+    let err = Engine::from_model_file(path.to_str().unwrap())
+        .personality(Personality::CadnnSparse)
+        .sparsity_profile(profile)
+        .build()
+        .err()
+        .unwrap();
+    std::fs::remove_file(&path).ok();
+    assert!(matches!(err, CadnnError::Config { .. }), "{err}");
+    assert!(err.to_string().contains("matches no prunable layer"), "{err}");
+}
