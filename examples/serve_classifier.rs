@@ -175,7 +175,7 @@ fn main() -> Result<()> {
         println!("--- variant: {variant} ---");
         println!(
             "{}accuracy on trace: {}/{} = {:.1}% (deadline misses: {})\n",
-            m.lock().unwrap().report(),
+            m.report(),
             correct[slot],
             requests,
             100.0 * correct[slot] as f64 / requests as f64,

@@ -29,7 +29,7 @@ fn run(variant: &str, rps: f64, requests: usize, policy: BatchPolicy) -> Option<
     for rx in rxs {
         let _ = rx.recv();
     }
-    let m = coord.metrics.lock().unwrap();
+    let m = &coord.metrics;
     let lat = m.latency_summary()?;
     let exec = m.exec_summary()?;
     let row = vec![
@@ -42,7 +42,6 @@ fn run(variant: &str, rps: f64, requests: usize, policy: BatchPolicy) -> Option<
         format!("{:.0}%", m.batch_utilization() * 100.0),
         format!("{:.1}", exec.p50 / 1e3),
     ];
-    drop(m);
     coord.shutdown().ok()?;
     Some(row)
 }

@@ -2,8 +2,10 @@
 //! lenet5 engine, sweeping offered load across three batch-selection
 //! modes — the old greedy batcher, pad-to-fit, and the planner-informed
 //! deadline-aware scheduler (`ExecPlan::cost_at` + online calibration).
-//! Quantifies what plan-aware batching buys: p50/p99 latency, batch
-//! utilization, and deadline misses at each load. No artifacts needed.
+//! Quantifies what plan-aware batching buys: p50/p99 latency, queue-wait
+//! percentiles, batch utilization, and deadline misses (split by cause)
+//! at each load. A final A/B pass measures the span-recorder overhead on
+//! the exec hot path (obs enabled vs disabled). No artifacts needed.
 //! Emits `BENCH_serving.json`. Run: cargo bench --bench bench_serving
 
 use cadnn::api::Engine;
@@ -20,8 +22,12 @@ const DEADLINE_MS: u64 = 60;
 struct RunResult {
     ok: usize,
     missed: usize,
+    missed_queue: u64,
+    missed_infeasible: u64,
     p50_ms: f64,
     p99_ms: f64,
+    queue_p50_ms: f64,
+    queue_p95_ms: f64,
     batch_util: f64,
     batches: u64,
 }
@@ -58,16 +64,73 @@ fn run(engine: &Engine, cfg: QueueConfig, rps: f64, requests: usize) -> Option<R
         .as_ref()
         .map(|l| (l.p50 / 1e3, l.p99 / 1e3))
         .unwrap_or((0.0, 0.0));
+    let (q50, q95) = s
+        .queue_wait
+        .as_ref()
+        .map(|q| (q.p50 / 1e3, q.p95 / 1e3))
+        .unwrap_or((0.0, 0.0));
     let result = RunResult {
         ok,
         missed,
+        missed_queue: s.deadline_misses_queue,
+        missed_infeasible: s.deadline_misses_infeasible,
         p50_ms: p50,
         p99_ms: p99,
+        queue_p50_ms: q50,
+        queue_p95_ms: q95,
         batch_util: s.batch_utilization,
         batches: s.batches,
     };
     server.shutdown().ok()?;
     Some(result)
+}
+
+/// A/B the span recorder on the exec hot path: median single-inference
+/// latency over direct session runs with obs disabled vs enabled.
+/// Prints the delta and returns the JSON blob embedded in the report
+/// (`Json::Null` when the `obs` feature is compiled out — overhead is
+/// zero by construction, there is nothing to measure).
+fn measure_obs_overhead(engine: &Engine) -> Json {
+    if !cadnn::obs::COMPILED {
+        println!("\nobs overhead: feature compiled out — recorder cost is exactly 0");
+        return Json::Null;
+    }
+    const WARMUP: usize = 5;
+    const ITERS: usize = 50;
+    let mut session = engine.session();
+    let img: Vec<f32> = (0..28 * 28).map(|i| ((i % 17) as f32) / 17.0).collect();
+    let median_us = |session: &mut cadnn::api::Session| -> f64 {
+        let mut samples: Vec<f64> = (0..ITERS)
+            .map(|_| {
+                let t0 = std::time::Instant::now();
+                session.run(&img).expect("lenet5 session runs");
+                t0.elapsed().as_secs_f64() * 1e6
+            })
+            .collect();
+        samples.sort_by(|a, b| a.partial_cmp(b).expect("finite timings"));
+        samples[ITERS / 2]
+    };
+    for _ in 0..WARMUP {
+        session.run(&img).expect("lenet5 session runs");
+    }
+    cadnn::obs::disable();
+    let off_us = median_us(&mut session);
+    cadnn::obs::reset();
+    cadnn::obs::enable();
+    let on_us = median_us(&mut session);
+    cadnn::obs::disable();
+    cadnn::obs::reset();
+    let pct = if off_us > 0.0 { (on_us / off_us - 1.0) * 100.0 } else { 0.0 };
+    println!(
+        "\nobs overhead: median inference {off_us:.1}us recorder-off vs {on_us:.1}us \
+         recorder-on ({pct:+.2}%; target <2% enabled, 0 when compiled out)"
+    );
+    obj(vec![
+        ("iters", Json::Num(ITERS as f64)),
+        ("disabled_median_us", Json::Num(off_us)),
+        ("enabled_median_us", Json::Num(on_us)),
+        ("overhead_pct", Json::Num(pct)),
+    ])
 }
 
 fn main() {
@@ -111,9 +174,11 @@ fn main() {
                 mode.to_string(),
                 format!("{rps:.0}"),
                 format!("{}", r.ok),
-                format!("{}", r.missed),
+                format!("{} ({}/{})", r.missed, r.missed_queue, r.missed_infeasible),
                 format!("{:.1}", r.p50_ms),
                 format!("{:.1}", r.p99_ms),
+                format!("{:.1}", r.queue_p50_ms),
+                format!("{:.1}", r.queue_p95_ms),
                 format!("{:.0}%", r.batch_util * 100.0),
                 format!("{}", r.batches),
             ]);
@@ -123,21 +188,38 @@ fn main() {
                 ("requests", Json::Num(requests as f64)),
                 ("ok", Json::Num(r.ok as f64)),
                 ("deadline_missed", Json::Num(r.missed as f64)),
+                ("deadline_missed_queue", Json::Num(r.missed_queue as f64)),
+                ("deadline_missed_infeasible", Json::Num(r.missed_infeasible as f64)),
                 ("p50_ms", Json::Num(r.p50_ms)),
                 ("p99_ms", Json::Num(r.p99_ms)),
+                ("queue_wait_p50_ms", Json::Num(r.queue_p50_ms)),
+                ("queue_wait_p95_ms", Json::Num(r.queue_p95_ms)),
                 ("batch_utilization", Json::Num(r.batch_util)),
                 ("batches", Json::Num(r.batches as f64)),
             ]));
         }
     }
     print_table(
-        &["mode", "offered rps", "ok", "missed", "p50 ms", "p99 ms", "batch util", "batches"],
+        &[
+            "mode",
+            "offered rps",
+            "ok",
+            "missed (q/inf)",
+            "p50 ms",
+            "p99 ms",
+            "qwait p50",
+            "qwait p95",
+            "batch util",
+            "batches",
+        ],
         &rows,
     );
+    let obs_overhead = measure_obs_overhead(&engine);
     let out = Json::Obj(vec![
         ("bench".to_string(), Json::Str("serving".to_string())),
         ("deadline_ms".to_string(), Json::Num(DEADLINE_MS as f64)),
         ("rows".to_string(), Json::Arr(report)),
+        ("obs_overhead".to_string(), obs_overhead),
     ]);
     let path = "BENCH_serving.json";
     match std::fs::write(path, out.to_string_pretty()) {

@@ -19,7 +19,7 @@ use cadnn::kernels::bsr::bsr_gemm;
 use cadnn::kernels::gemm::gemm_blocked;
 use cadnn::kernels::lut::{qbsr_gemm, qcsr_gemm, qpattern_gemm};
 use cadnn::kernels::pattern::pattern_gemm;
-use cadnn::kernels::sparse::csr_gemm;
+use cadnn::kernels::sparse::{csr_gemm, csr_gemm_parallel};
 use cadnn::kernels::Epilogue;
 use cadnn::passes::layout::TileConfig;
 use cadnn::planner::{choose, FormatPolicy};
@@ -82,6 +82,44 @@ fn pattern_weights(rng: &mut Rng, hwio: [usize; 4], density: f64) -> Vec<f32> {
     rng.fill_normal(&mut dense, 0.5);
     prune_patterns(&mut dense, hwio[0], hwio[1], hwio[2], hwio[3], 1.0 - density, 4, 8);
     dense
+}
+
+/// A/B the kernel counter hooks (rows/nnz/panel dispatch) on the
+/// instrumented CSR entry point: p50 over the largest sweep shape with
+/// the recorder off vs on. Returns the JSON blob embedded in the report
+/// (`Json::Null` when the `obs` feature is compiled out — the hooks are
+/// `if false` branches and cost exactly 0).
+fn measure_obs_overhead(rng: &mut Rng) -> Json {
+    if !cadnn::obs::COMPILED {
+        println!("\nobs overhead: feature compiled out — counter cost is exactly 0");
+        return Json::Null;
+    }
+    let (m, hwio) = (3136usize, [3usize, 3, 64, 64]);
+    let (k, n) = (hwio[0] * hwio[1] * hwio[2], hwio[3]);
+    let dense = random_weights(rng, k, n, 0.2);
+    let csr = CsrMatrix::from_dense(&dense, k, n);
+    let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+    let mut c = vec![0.0f32; m * n];
+    cadnn::obs::disable();
+    let off = measure(|| csr_gemm_parallel(&a, &csr, &mut c, m, &Epilogue::None));
+    cadnn::obs::reset();
+    cadnn::obs::enable();
+    let on = measure(|| csr_gemm_parallel(&a, &csr, &mut c, m, &Epilogue::None));
+    cadnn::obs::disable();
+    cadnn::obs::reset();
+    let pct = if off > 0.0 { (on / off - 1.0) * 100.0 } else { 0.0 };
+    println!(
+        "\nobs overhead: csr_gemm_parallel res2_3x3 @20% p50 {off:.1}us recorder-off vs \
+         {on:.1}us recorder-on ({pct:+.2}%; target <2% enabled, 0 when compiled out)"
+    );
+    obj(vec![
+        ("kernel", Json::Str("csr_gemm_parallel".to_string())),
+        ("shape", Json::Str(format!("{m}x{k}x{n}"))),
+        ("density", Json::Num(0.2)),
+        ("disabled_p50_us", Json::Num(off)),
+        ("enabled_p50_us", Json::Num(on)),
+        ("overhead_pct", Json::Num(pct)),
+    ])
 }
 
 fn main() {
@@ -202,9 +240,11 @@ fn main() {
         ],
         &rows,
     );
+    let obs_overhead = measure_obs_overhead(&mut rng);
     let out = Json::Obj(vec![
         ("bench".to_string(), Json::Str("sparse_formats".to_string())),
         ("rows".to_string(), Json::Arr(report)),
+        ("obs_overhead".to_string(), obs_overhead),
     ]);
     let path = "BENCH_sparse_formats.json";
     match std::fs::write(path, out.to_string_pretty()) {

@@ -36,7 +36,7 @@ use crate::error::CadnnError;
 use crate::serve::{QueueConfig, ServeRequest, Server};
 use anyhow::{anyhow, Result};
 use std::sync::mpsc::Receiver;
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 /// The one registry name the shim serves under.
 const MODEL: &str = "default";
@@ -96,7 +96,11 @@ impl Default for CoordinatorConfig {
 /// [`Server`] underneath.
 pub struct Coordinator {
     server: Server,
-    pub metrics: Arc<Mutex<Metrics>>,
+    /// Live metrics handle; recording and reading are both lock-free
+    /// (`&self` methods on [`Metrics`]), so this never contends with
+    /// the worker. The pre-obs `Arc<Mutex<Metrics>>` is gone — see the
+    /// `docs/API.md` migration table.
+    pub metrics: Arc<Metrics>,
     pub input_len: usize,
     pub classes: usize,
 }

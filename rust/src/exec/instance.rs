@@ -743,7 +743,11 @@ impl ModelInstance {
         }
         values[0] = Some(pool.take_copy(in_shape, input));
         for n in g.nodes.iter().skip(1) {
+            let obs_t0 = crate::obs::timer();
             let out = self.exec_node(n, values, pool)?;
+            if let Some(t0) = obs_t0 {
+                self.record_node_span(n, &out, t0);
+            }
             values[n.id] = Some(out);
             // free dead values into the pool
             for &i in &n.inputs {
@@ -757,6 +761,41 @@ impl ModelInstance {
         values[g.output]
             .take()
             .ok_or_else(|| CadnnError::execution("output value missing"))
+    }
+
+    /// Emit one `exec` span for a completed node: op, the layer plan's
+    /// format label (`+q8`/`+q4` when the value store is quantized),
+    /// value bits, GEMM rows produced, and the planner-predicted cost
+    /// (`cost_per_row x rows`) that [`crate::obs::CostReport`] turns
+    /// into residuals. Unplanned nodes (activations, pools, `none`
+    /// format) carry `pred_units = 0` and are skipped by the fit.
+    fn record_node_span(&self, n: &crate::ir::Node, out: &Tensor, t0_us: f64) {
+        use crate::obs::{self, ArgValue};
+        let rows = if out.rank() >= 2 { out.numel() / out.c() } else { 1 };
+        let (format, bits, pred) = match self.plan.get(&n.name) {
+            Some(lp) => {
+                let mut f = lp.format.label();
+                match lp.value_bits.bits() {
+                    8 => f.push_str("+q8"),
+                    4 => f.push_str("+q4"),
+                    _ => {}
+                }
+                (f, lp.value_bits.bits(), lp.cost_per_row * rows as f64)
+            }
+            None => ("none".to_string(), 32, 0.0),
+        };
+        obs::span_since(
+            obs::CAT_EXEC,
+            n.name.clone(),
+            t0_us,
+            vec![
+                ("op", ArgValue::Str(n.op.name().to_string())),
+                ("format", ArgValue::Str(format)),
+                ("bits", ArgValue::Num(bits as f64)),
+                ("m", ArgValue::Num(rows as f64)),
+                ("pred_units", ArgValue::Num(pred)),
+            ],
+        );
     }
 
     fn exec_node(

@@ -14,6 +14,7 @@
 
 use super::{Epilogue, SendPtr, PARALLEL_M_CUTOVER};
 use crate::compress::bsr::BsrMatrix;
+use crate::obs::{self, Counter};
 use crate::util::pool;
 
 /// C(M,N) = A(M,K) @ W_bsr(K,N), single thread.
@@ -203,9 +204,18 @@ pub fn bsr_gemm_parallel_cutover(
     cutover: usize,
 ) {
     let (k, n) = (w.rows, w.cols);
+    if obs::on() {
+        obs::add(Counter::BsrRows, m as u64);
+        obs::add(Counter::BsrBlocks, w.blocks() as u64);
+    }
     let threads = pool::global().size().min(m.div_ceil(64)).max(1);
     if threads <= 1 || m < cutover {
+        obs::add(Counter::BsrSerial, 1);
         return bsr_gemm(a, w, c, m, epilogue);
+    }
+    if obs::on() {
+        obs::add(Counter::BsrParallel, 1);
+        obs::add(Counter::BsrPanels, threads as u64);
     }
     let chunk = m.div_ceil(threads);
     let cptr = SendPtr(c.as_mut_ptr());

@@ -15,6 +15,7 @@
 //! separate bn/act sweeps instead.
 
 use super::{Epilogue, SendPtr, PARALLEL_M_CUTOVER};
+use crate::obs::{self, Counter};
 use crate::passes::layout::TileConfig;
 use crate::util::pool;
 
@@ -195,10 +196,13 @@ pub fn gemm_parallel(
     tile: &TileConfig,
     epilogue: &Epilogue,
 ) {
+    obs::add(Counter::GemmRows, m as u64);
     let threads = pool::global().size().min(m.div_ceil(64)).max(1);
     if threads <= 1 || m < PARALLEL_M_CUTOVER {
+        obs::add(Counter::GemmSerial, 1);
         return gemm_blocked(a, b, c, m, k, n, tile, epilogue);
     }
+    obs::add(Counter::GemmParallel, 1);
     let chunk = m.div_ceil(threads);
     let cptr = SendPtr(c.as_mut_ptr());
     pool::parallel_for_n(threads, threads, |t| {

@@ -31,7 +31,25 @@
 
 use super::{Epilogue, SendPtr, PARALLEL_M_CUTOVER};
 use crate::compress::qsparse::{QBsr, QCsr, QPattern, QSparseMatrix};
+use crate::obs::{self, Counter};
 use crate::util::pool;
+
+/// Counter bump shared by the three LUT dispatchers (`vals` = stored
+/// quantized values the kernel will gather).
+#[inline]
+fn count_dispatch(m: usize, vals: usize, parallel: bool, panels: usize) {
+    if !obs::on() {
+        return;
+    }
+    obs::add(Counter::LutRows, m as u64);
+    obs::add(Counter::LutVals, vals as u64);
+    if parallel {
+        obs::add(Counter::LutParallel, 1);
+        obs::add(Counter::LutPanels, panels as u64);
+    } else {
+        obs::add(Counter::LutSerial, 1);
+    }
+}
 
 // ---------------------------------------------------------------------------
 // CSR
@@ -106,8 +124,10 @@ pub fn qcsr_gemm_parallel_cutover(
     let (k, n) = (w.rows, w.cols);
     let threads = pool::global().size().min(m.div_ceil(64)).max(1);
     if threads <= 1 || m < cutover {
+        count_dispatch(m, w.nnz(), false, 0);
         return qcsr_gemm(a, w, c, m, epilogue);
     }
+    count_dispatch(m, w.nnz(), true, threads);
     let chunk = m.div_ceil(threads);
     let cptr = SendPtr(c.as_mut_ptr());
     pool::parallel_for_n(threads, threads, |t| {
@@ -319,10 +339,13 @@ pub fn qbsr_gemm_parallel_cutover(
     cutover: usize,
 ) {
     let (k, n) = (w.rows, w.cols);
+    let vals = w.col_idx.len() * w.br * w.bc;
     let threads = pool::global().size().min(m.div_ceil(64)).max(1);
     if threads <= 1 || m < cutover {
+        count_dispatch(m, vals, false, 0);
         return qbsr_gemm(a, w, c, m, epilogue);
     }
+    count_dispatch(m, vals, true, threads);
     let chunk = m.div_ceil(threads);
     let cptr = SendPtr(c.as_mut_ptr());
     pool::parallel_for_n(threads, threads, |t| {
@@ -461,8 +484,10 @@ pub fn qpattern_gemm_parallel_cutover(
     let (k, n) = (w.rows, w.cols);
     let threads = pool::global().size().min(m.div_ceil(64)).max(1);
     if threads <= 1 || m < cutover {
+        count_dispatch(m, w.nnz(), false, 0);
         return qpattern_gemm(a, w, c, m, epilogue);
     }
+    count_dispatch(m, w.nnz(), true, threads);
     let offs = row_offsets(w);
     let chunk = m.div_ceil(threads);
     let cptr = SendPtr(c.as_mut_ptr());

@@ -19,6 +19,7 @@
 
 use super::{Epilogue, SendPtr, PARALLEL_M_CUTOVER};
 use crate::compress::pattern::PatternMatrix;
+use crate::obs::{self, Counter};
 use crate::util::pool;
 
 /// C(M,N) = A(M,K) @ W_pattern(K,N), single thread.
@@ -128,9 +129,18 @@ pub fn pattern_gemm_parallel_cutover(
     cutover: usize,
 ) {
     let (k, n) = (w.rows, w.cols);
+    if obs::on() {
+        obs::add(Counter::PatRows, m as u64);
+        obs::add(Counter::PatVals, w.nnz() as u64);
+    }
     let threads = pool::global().size().min(m.div_ceil(64)).max(1);
     if threads <= 1 || m < cutover {
+        obs::add(Counter::PatSerial, 1);
         return pattern_gemm(a, w, c, m, epilogue);
+    }
+    if obs::on() {
+        obs::add(Counter::PatParallel, 1);
+        obs::add(Counter::PatPanels, threads as u64);
     }
     let offs = row_offsets(w);
     let chunk = m.div_ceil(threads);

@@ -7,6 +7,7 @@
 
 use super::{Epilogue, SendPtr, PARALLEL_M_CUTOVER};
 use crate::compress::csr::CsrMatrix;
+use crate::obs::{self, Counter};
 use crate::util::pool;
 
 /// C(M,N) = A(M,K) @ W_csr(K,N), single thread.
@@ -76,9 +77,18 @@ pub fn csr_gemm_parallel_cutover(
     cutover: usize,
 ) {
     let (k, n) = (w.rows, w.cols);
+    if obs::on() {
+        obs::add(Counter::CsrRows, m as u64);
+        obs::add(Counter::CsrNnz, w.nnz() as u64);
+    }
     let threads = pool::global().size().min(m.div_ceil(64)).max(1);
     if threads <= 1 || m < cutover {
+        obs::add(Counter::CsrSerial, 1);
         return csr_gemm(a, w, c, m, epilogue);
+    }
+    if obs::on() {
+        obs::add(Counter::CsrParallel, 1);
+        obs::add(Counter::CsrPanels, threads as u64);
     }
     let chunk = m.div_ceil(threads);
     let cptr = SendPtr(c.as_mut_ptr());

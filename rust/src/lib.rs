@@ -71,6 +71,7 @@
 //! | [`serve`]     | multi-model Server: deadline-aware planner-driven batching|
 //! | [`coordinator`]| deprecated single-model shim over [`serve`]             |
 //! | [`costmodel`] | device projection behind Figure 2                        |
+//! | [`obs`]       | spans, counters, histograms, cost residuals (tracing)    |
 //! | [`bench`]     | Figure 2 / Table 2 regeneration harnesses                |
 //! | [`util`]      | offline substrate: json, rng, stats, thread pool, prop   |
 
@@ -91,6 +92,7 @@ pub mod front;
 pub mod ir;
 pub mod kernels;
 pub mod models;
+pub mod obs;
 pub mod passes;
 pub mod planner;
 pub mod runtime;

@@ -20,7 +20,18 @@
 //!                                           batches over native engines with
 //!                                           planner-informed, deadline-aware
 //!                                           batch selection)
-//! cadnn calibrate                           host kernel calibration table
+//! cadnn profile [--model NAME | --model-file F.cadnn] [--personality P]
+//!               [--top N] [--trace OUT.json] [--cost-report OUT.json]
+//!                                           per-layer timing table; --trace
+//!                                           records obs spans and writes
+//!                                           Chrome trace-event JSON
+//!                                           (chrome://tracing / Perfetto),
+//!                                           --cost-report writes the
+//!                                           predicted-vs-measured residuals
+//! cadnn calibrate [--cost-report FILE]      host kernel calibration table;
+//!                                           with --cost-report, re-fit the
+//!                                           planner COST_* constants from a
+//!                                           profile run's residuals
 //! ```
 //!
 //! Anywhere a builtin name is accepted, `--model-file` (or a `--models`
@@ -103,7 +114,7 @@ fn main() -> Result<()> {
         Some("plan") => cmd_plan(&args),
         Some("serve") => cmd_serve(&args),
         Some("profile") => cmd_profile(&args),
-        Some("calibrate") => cmd_calibrate(),
+        Some("calibrate") => cmd_calibrate(&args),
         _ => {
             eprintln!(
                 "usage: cadnn <figure2|table2|compress|tune|plan|serve|profile|calibrate> [options]"
@@ -407,10 +418,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         for rx in pending {
             let _ = rx.recv();
         }
-        let (report, us_per_unit) = {
-            let m = coord.metrics.lock().unwrap();
-            (m.report(), m.us_per_unit)
-        };
+        let (report, us_per_unit) = (coord.metrics.report(), coord.metrics.us_per_unit());
         println!("\n{report}");
         coord.shutdown()?;
         // persist the converged serving-cost calibration next to
@@ -523,7 +531,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     println!("\nok={ok} deadline_missed={missed} failed={failed}");
     for (alias, _, _) in &specs {
         let m = server.metrics(alias).unwrap();
-        println!("--- {alias} ---\n{}", m.lock().unwrap().report());
+        println!("--- {alias} ---\n{}", m.report());
     }
     server.shutdown()?;
     Ok(())
@@ -597,10 +605,66 @@ fn cmd_profile(args: &[String]) -> Result<()> {
     }
     println!("total {:.1} ms over {} nodes; top {top} layers:", total / 1e3, prof.len());
     print_table(&["layer", "kind", "us", "share", "GF/s", "out KiB"], &rows);
+
+    // --trace / --cost-report: one instrumented forward pass through the
+    // obs recorder — every node becomes an `exec` span carrying its
+    // measured µs and the planner-predicted cost
+    let trace_path = opt(args, "--trace");
+    let cost_path = opt(args, "--cost-report");
+    if trace_path.is_some() || cost_path.is_some() {
+        use cadnn::obs;
+        if !obs::COMPILED {
+            return Err(anyhow!(
+                "--trace/--cost-report need the 'obs' cargo feature (on by default; \
+                 this binary was built with --no-default-features)"
+            ));
+        }
+        obs::reset();
+        obs::enable();
+        let mut scratch = inst.scratch();
+        let run = inst.execute_with(&input, &mut scratch);
+        obs::disable();
+        run?;
+        let spans = obs::drain();
+        let nodes = inst.graph.len() - 1; // node 0 is the input
+        let exec_spans = spans.iter().filter(|s| s.cat == obs::CAT_EXEC).count();
+        if exec_spans < nodes {
+            return Err(anyhow!(
+                "incomplete trace: {exec_spans} exec spans for {nodes} graph nodes \
+                 (span ring overflowed?)"
+            ));
+        }
+        let report = obs::CostReport::from_spans(&spans);
+        if let Some(path) = &trace_path {
+            let doc = obs::trace::chrome_trace(&spans, &obs::counters(), obs::dropped_spans());
+            std::fs::write(path, doc.to_string_pretty())
+                .map_err(|e| anyhow!("writing {path}: {e}"))?;
+            println!(
+                "trace: {exec_spans} exec spans over {nodes} nodes -> {path} \
+                 (load in chrome://tracing or Perfetto)"
+            );
+        }
+        if let Some(path) = &cost_path {
+            std::fs::write(path, report.to_json().to_string_pretty())
+                .map_err(|e| anyhow!("writing {path}: {e}"))?;
+            println!("cost report -> {path} (feed to `cadnn calibrate --cost-report`)");
+        }
+        print!("{}", report.render());
+    }
     Ok(())
 }
 
-fn cmd_calibrate() -> Result<()> {
+fn cmd_calibrate(args: &[String]) -> Result<()> {
+    // --cost-report: consume a profile run's residuals and suggest
+    // re-fitted planner COST_* constants (the obs calibration loop)
+    if let Some(path) = opt(args, "--cost-report") {
+        let text = std::fs::read_to_string(&path).map_err(|e| anyhow!("reading {path}: {e}"))?;
+        let json = Json::parse(&text).map_err(|e| anyhow!("parsing {path}: {e}"))?;
+        let report = cadnn::obs::CostReport::from_json(&json)
+            .map_err(|e| anyhow!("invalid cost report {path}: {e}"))?;
+        print!("{}", report.render());
+        return Ok(());
+    }
     println!("measuring host kernels...");
     let t = calibrate::measure_host();
     println!("host peak (parallel blocked gemm): {:.1} GFLOPS", t.host_peak_gflops);

@@ -1,0 +1,310 @@
+//! Fixed-bucket log₂ latency histograms.
+//!
+//! A [`Log2Hist`] is a lock-free accumulator: 40 power-of-two buckets
+//! plus exact count / sum / min / max, every field a relaxed atomic, so
+//! single-writer recording never contends with snapshot readers (the
+//! serve worker records, [`crate::serve::Server::stats`] reads). The
+//! bucket layout is pinned:
+//!
+//! - bucket 0 holds values `v < 1` (µs),
+//! - bucket `i ≥ 1` holds `2^(i-1) <= v < 2^i`,
+//! - the last bucket (39) is open-ended above `2^38` µs (~76 hours).
+//!
+//! Percentiles come from the bucket walk: nearest-rank over cumulative
+//! counts, reported as the containing bucket's *upper edge* clamped to
+//! the exact observed `[min, max]`. That makes the estimate conservative
+//! (never under-reports) and at most 2x the true value — and exact
+//! whenever all samples in the tail bucket are equal (min == max case).
+
+use crate::util::json::Json;
+use crate::util::stats::Summary;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Number of fixed buckets. Bucket 39 covers everything above 2^38 µs.
+pub const BUCKETS: usize = 40;
+
+/// Bucket index for a sample in microseconds (layout in the module doc).
+/// Non-finite and negative samples land in bucket 0.
+#[inline]
+pub fn bucket_of(v_us: f64) -> usize {
+    if !(v_us >= 1.0) {
+        return 0;
+    }
+    let f = v_us.floor() as u64;
+    let b = (63 - f.leading_zeros()) as usize + 1;
+    b.min(BUCKETS - 1)
+}
+
+/// Upper edge (exclusive) of bucket `i`, in microseconds.
+pub fn bucket_upper_us(i: usize) -> f64 {
+    if i == 0 {
+        1.0
+    } else {
+        (1u64 << i.min(63)) as f64
+    }
+}
+
+/// Lock-free log₂ histogram (all-relaxed atomics; see module doc).
+#[derive(Debug)]
+pub struct Log2Hist {
+    buckets: [AtomicU64; BUCKETS],
+    count: AtomicU64,
+    /// Sum of samples rounded to whole microseconds (mean to ±0.5µs).
+    sum_us: AtomicU64,
+    /// `u64::MAX` while empty.
+    min_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+impl Log2Hist {
+    pub const fn new() -> Log2Hist {
+        #[allow(clippy::declare_interior_mutable_const)]
+        const Z: AtomicU64 = AtomicU64::new(0);
+        Log2Hist {
+            buckets: [Z; BUCKETS],
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+            min_us: AtomicU64::new(u64::MAX),
+            max_us: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one sample (µs). Never blocks: five relaxed atomic ops.
+    pub fn record(&self, v_us: f64) {
+        let v = if v_us.is_finite() && v_us > 0.0 { v_us } else { 0.0 };
+        let w = v.round() as u64;
+        self.buckets[bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(w, Ordering::Relaxed);
+        self.min_us.fetch_min(w, Ordering::Relaxed);
+        self.max_us.fetch_max(w, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn clear(&self) {
+        for b in &self.buckets {
+            b.store(0, Ordering::Relaxed);
+        }
+        self.count.store(0, Ordering::Relaxed);
+        self.sum_us.store(0, Ordering::Relaxed);
+        self.min_us.store(u64::MAX, Ordering::Relaxed);
+        self.max_us.store(0, Ordering::Relaxed);
+    }
+
+    /// Freeze into a plain-data view; `None` while empty. Relaxed reads:
+    /// a snapshot taken concurrently with recording may be mid-sample by
+    /// one count, which is fine for metrics.
+    pub fn snapshot(&self) -> Option<HistSnapshot> {
+        let count = self.count.load(Ordering::Relaxed);
+        if count == 0 {
+            return None;
+        }
+        let mut buckets = Vec::new();
+        for (i, b) in self.buckets.iter().enumerate() {
+            let c = b.load(Ordering::Relaxed);
+            if c > 0 {
+                buckets.push((bucket_upper_us(i), c));
+            }
+        }
+        Some(HistSnapshot {
+            count,
+            mean_us: self.sum_us.load(Ordering::Relaxed) as f64 / count as f64,
+            min_us: self.min_us.load(Ordering::Relaxed) as f64,
+            max_us: self.max_us.load(Ordering::Relaxed) as f64,
+            buckets,
+        })
+    }
+}
+
+impl Default for Log2Hist {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Point-in-time view of a [`Log2Hist`]: non-empty buckets as
+/// `(upper_edge_us, count)` pairs in ascending edge order, plus exact
+/// count / mean / min / max.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HistSnapshot {
+    pub count: u64,
+    pub mean_us: f64,
+    pub min_us: f64,
+    pub max_us: f64,
+    pub buckets: Vec<(f64, u64)>,
+}
+
+impl HistSnapshot {
+    /// Nearest-rank quantile (`q` in [0, 1]): the upper edge of the
+    /// bucket holding rank `ceil(q * count)`, clamped to `[min, max]`.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut cum = 0u64;
+        for &(edge, c) in &self.buckets {
+            cum += c;
+            if cum >= rank {
+                return edge.clamp(self.min_us, self.max_us);
+            }
+        }
+        self.max_us
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.quantile(0.50)
+    }
+
+    pub fn p95(&self) -> f64 {
+        self.quantile(0.95)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.quantile(0.99)
+    }
+
+    /// Bridge to the crate-wide [`Summary`] shape (what
+    /// [`crate::serve::MetricsSnapshot`] carried before histograms):
+    /// exact count / mean / min / max, bucket-walk percentiles.
+    pub fn summary(&self) -> Summary {
+        Summary {
+            count: self.count as usize,
+            mean: self.mean_us,
+            min: self.min_us,
+            p50: self.quantile(0.50),
+            p90: self.quantile(0.90),
+            p95: self.quantile(0.95),
+            p99: self.quantile(0.99),
+            max: self.max_us,
+        }
+    }
+
+    /// JSON shape used by the benches' `BENCH_*.json` emissions.
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("count".into(), Json::Num(self.count as f64)),
+            ("mean_us".into(), Json::Num(self.mean_us)),
+            ("min_us".into(), Json::Num(self.min_us)),
+            ("max_us".into(), Json::Num(self.max_us)),
+            ("p50_us".into(), Json::Num(self.p50())),
+            ("p95_us".into(), Json::Num(self.p95())),
+            ("p99_us".into(), Json::Num(self.p99())),
+            (
+                "buckets".into(),
+                Json::Arr(
+                    self.buckets
+                        .iter()
+                        .map(|&(edge, c)| {
+                            Json::Arr(vec![Json::Num(edge), Json::Num(c as f64)])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_boundaries_pinned() {
+        assert_eq!(bucket_of(0.0), 0);
+        assert_eq!(bucket_of(0.5), 0);
+        assert_eq!(bucket_of(-3.0), 0);
+        assert_eq!(bucket_of(f64::NAN), 0);
+        assert_eq!(bucket_of(1.0), 1);
+        assert_eq!(bucket_of(1.99), 1);
+        assert_eq!(bucket_of(2.0), 2);
+        assert_eq!(bucket_of(3.0), 2);
+        assert_eq!(bucket_of(4.0), 3);
+        assert_eq!(bucket_of(1023.0), 10);
+        assert_eq!(bucket_of(1024.0), 11);
+        assert_eq!(bucket_of(1e18), BUCKETS - 1);
+        assert_eq!(bucket_upper_us(0), 1.0);
+        assert_eq!(bucket_upper_us(1), 2.0);
+        assert_eq!(bucket_upper_us(11), 2048.0);
+    }
+
+    #[test]
+    fn empty_hist_snapshots_none() {
+        let h = Log2Hist::new();
+        assert!(h.snapshot().is_none());
+        assert_eq!(h.count(), 0);
+    }
+
+    #[test]
+    fn single_sample_percentiles_exact() {
+        let h = Log2Hist::new();
+        h.record(3000.0);
+        let s = h.snapshot().unwrap();
+        // 3000µs sits in [2048, 4096) but the max clamp makes the
+        // single-sample percentile exact
+        assert_eq!(s.p50(), 3000.0);
+        assert_eq!(s.p99(), 3000.0);
+        assert_eq!(s.min_us, 3000.0);
+        assert_eq!(s.max_us, 3000.0);
+        assert_eq!(s.count, 1);
+        assert_eq!(s.mean_us, 3000.0);
+    }
+
+    #[test]
+    fn uniform_ramp_p99_pinned() {
+        let h = Log2Hist::new();
+        for v in 0..1000 {
+            h.record(v as f64);
+        }
+        let s = h.snapshot().unwrap();
+        // rank ceil(0.99 * 1000) = 990 lands in [512, 1024); the upper
+        // edge 1024 clamps to the observed max 999
+        assert_eq!(s.p99(), 999.0);
+        // rank 500 lands in [256, 512): edge 512
+        assert_eq!(s.p50(), 512.0);
+        assert!(s.p50() <= s.p95() && s.p95() <= s.p99());
+        assert_eq!(s.count, 1000);
+        assert_eq!(s.min_us, 0.0);
+    }
+
+    #[test]
+    fn percentile_overestimates_bounded_by_2x() {
+        let h = Log2Hist::new();
+        for v in [100.0, 200.0, 400.0, 800.0, 1600.0] {
+            h.record(v);
+        }
+        let s = h.snapshot().unwrap();
+        // true p50 is 400; bucket [256, 512) reports 512 <= 2 * 400
+        assert_eq!(s.p50(), 512.0);
+        assert!(s.p50() <= 2.0 * 400.0);
+    }
+
+    #[test]
+    fn summary_bridge_and_json() {
+        let h = Log2Hist::new();
+        h.record(1000.0);
+        h.record(3000.0);
+        let s = h.snapshot().unwrap();
+        let sum = s.summary();
+        assert_eq!(sum.count, 2);
+        assert_eq!(sum.mean, 2000.0);
+        assert_eq!(sum.min, 1000.0);
+        assert_eq!(sum.max, 3000.0);
+        let j = s.to_json();
+        assert_eq!(j.get("count").and_then(|v| v.as_f64()), Some(2.0));
+        assert_eq!(j.get("buckets").and_then(|b| b.as_arr()).unwrap().len(), 2);
+    }
+
+    #[test]
+    fn clear_resets() {
+        let h = Log2Hist::new();
+        h.record(5.0);
+        h.clear();
+        assert!(h.snapshot().is_none());
+        h.record(7.0);
+        assert_eq!(h.snapshot().unwrap().count, 1);
+    }
+}

@@ -1,0 +1,428 @@
+//! `cadnn::obs` — low-overhead tracing and profiling for every layer of
+//! the stack (the paper's 26ms headline is a per-microsecond accounting
+//! claim; this module is how the repo makes that accounting).
+//!
+//! Design (`docs/OBSERVABILITY.md` has the full walkthrough):
+//!
+//! - **Gate.** A single `AtomicBool` ([`enable`] / [`disable`]); every
+//!   probe site checks [`on`] first, so the disabled cost is one relaxed
+//!   load per site. Building with `--no-default-features` (dropping the
+//!   `obs` cargo feature) turns [`on`] into a compile-time `false` and
+//!   the probes vanish entirely.
+//! - **Spans.** Thread-local ring buffers ([`RING_CAPACITY`] spans per
+//!   thread, oldest dropped and counted on overflow). The hot path never
+//!   blocks: a thread writes its own ring through `try_lock`, which only
+//!   a concurrent [`drain`] can contend with — contended writes are
+//!   dropped and counted instead of waiting.
+//! - **Counters.** A fixed global array of relaxed `AtomicU64`s keyed by
+//!   [`Counter`] — what the kernels record (rows, nnz, panels,
+//!   parallel-vs-serial path) with zero allocation.
+//! - **Exporters.** [`trace::chrome_trace`] (Chrome trace-event JSON for
+//!   `chrome://tracing` / Perfetto), [`hist::Log2Hist`] (the latency
+//!   histograms behind [`crate::serve::MetricsSnapshot`]), and
+//!   [`report::CostReport`] (predicted-vs-measured cost residuals that
+//!   `cadnn calibrate --cost-report` consumes to re-fit
+//!   `planner::COST_*`).
+//!
+//! Instrumentation map: `exec` emits one span per executed node (op,
+//! format, value_bits, rows, predicted cost units); `kernels` bump
+//! counters; `serve` emits request lifecycle spans (enqueue →
+//! batch-formed → executed → replied, with deadline slack).
+
+pub mod hist;
+pub mod report;
+pub mod trace;
+
+pub use hist::{HistSnapshot, Log2Hist};
+pub use report::{CostGroup, CostReport};
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+/// Spans recorded per thread before the oldest is dropped (and counted
+/// in [`dropped_spans`]). 16Ki spans ≈ 2MiB per active thread, enough
+/// for ~100 ResNet-50 passes between drains.
+pub const RING_CAPACITY: usize = 16 * 1024;
+
+/// Span category for per-node executor spans.
+pub const CAT_EXEC: &str = "exec";
+/// Span category for serving lifecycle spans (requests, batches).
+pub const CAT_SERVE: &str = "serve";
+
+/// True when the crate was built with the `obs` feature (the default).
+pub const COMPILED: bool = cfg!(feature = "obs");
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Is recording live? One relaxed load; compile-time `false` without the
+/// `obs` feature. Probe sites check this before doing any work.
+#[inline(always)]
+pub fn on() -> bool {
+    COMPILED && ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn recording on (no-op without the `obs` feature).
+pub fn enable() {
+    ENABLED.store(true, Ordering::Relaxed);
+}
+
+/// Turn recording off. Already-recorded spans stay until [`drain`] or
+/// [`reset`].
+pub fn disable() {
+    ENABLED.store(false, Ordering::Relaxed);
+}
+
+// ---------------------------------------------------------------------
+// time base
+
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Microseconds since the recorder epoch (first use in this process).
+pub fn now_us() -> f64 {
+    epoch().elapsed().as_secs_f64() * 1e6
+}
+
+/// Convert an [`Instant`] into recorder-epoch microseconds (0 for
+/// instants before the epoch).
+pub fn at_us(t: Instant) -> f64 {
+    t.saturating_duration_since(epoch()).as_secs_f64() * 1e6
+}
+
+/// `Some(start timestamp)` when recording is live — the cheap way to
+/// bracket a region:
+///
+/// ```ignore
+/// let t0 = obs::timer();
+/// work();
+/// if let Some(t0) = t0 {
+///     obs::span_since(obs::CAT_EXEC, "work".into(), t0, vec![]);
+/// }
+/// ```
+#[inline]
+pub fn timer() -> Option<f64> {
+    if on() {
+        Some(now_us())
+    } else {
+        None
+    }
+}
+
+// ---------------------------------------------------------------------
+// spans
+
+/// A span argument value (rendered into Chrome trace `args`).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ArgValue {
+    Num(f64),
+    Str(String),
+}
+
+/// One recorded span: a `[start, start+dur)` interval on one thread's
+/// track, with a small set of key/value arguments.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Span {
+    /// [`CAT_EXEC`] or [`CAT_SERVE`].
+    pub cat: &'static str,
+    /// Node name for exec spans; `"request"` / `"batch"` for serve spans.
+    pub name: String,
+    /// Microseconds since the recorder epoch.
+    pub start_us: f64,
+    pub dur_us: f64,
+    /// Small per-thread track id (assigned at first record on a thread).
+    pub tid: u64,
+    pub args: Vec<(&'static str, ArgValue)>,
+}
+
+impl Span {
+    /// Numeric argument by key.
+    pub fn num_arg(&self, key: &str) -> Option<f64> {
+        self.args.iter().find_map(|(k, v)| match v {
+            ArgValue::Num(n) if *k == key => Some(*n),
+            _ => None,
+        })
+    }
+
+    /// String argument by key.
+    pub fn str_arg(&self, key: &str) -> Option<&str> {
+        self.args.iter().find_map(|(k, v)| match v {
+            ArgValue::Str(s) if *k == key => Some(s.as_str()),
+            _ => None,
+        })
+    }
+}
+
+/// The argument keys spans may carry — a closed set so trace JSON parses
+/// back into [`Span`]s without allocation games ([`intern_key`]).
+pub const ARG_KEYS: &[&str] = &[
+    "op", "format", "bits", "m", "pred_units", "model", "id", "batch", "used", "wait_us",
+    "exec_us", "slack_us", "outcome", "cause", "nodes",
+];
+
+/// Map an arbitrary string onto the matching entry of [`ARG_KEYS`].
+pub fn intern_key(key: &str) -> Option<&'static str> {
+    ARG_KEYS.iter().find(|&&k| k == key).copied()
+}
+
+/// Map a category string onto [`CAT_EXEC`] / [`CAT_SERVE`].
+pub fn intern_cat(cat: &str) -> Option<&'static str> {
+    [CAT_EXEC, CAT_SERVE].into_iter().find(|&c| c == cat)
+}
+
+struct Ring {
+    spans: std::collections::VecDeque<Span>,
+}
+
+struct ThreadTrack {
+    ring: Mutex<Ring>,
+    /// Writes lost to ring overflow or to a drain in progress.
+    dropped: AtomicU64,
+}
+
+fn registry() -> &'static Mutex<Vec<Arc<ThreadTrack>>> {
+    static REGISTRY: OnceLock<Mutex<Vec<Arc<ThreadTrack>>>> = OnceLock::new();
+    REGISTRY.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    static LOCAL: RefCell<Option<(Arc<ThreadTrack>, u64)>> = const { RefCell::new(None) };
+}
+
+fn register_thread() -> (Arc<ThreadTrack>, u64) {
+    let track = Arc::new(ThreadTrack {
+        ring: Mutex::new(Ring { spans: std::collections::VecDeque::with_capacity(64) }),
+        dropped: AtomicU64::new(0),
+    });
+    registry().lock().unwrap().push(track.clone());
+    (track, NEXT_TID.fetch_add(1, Ordering::Relaxed))
+}
+
+/// Record a finished span. No-op when recording is off. Never blocks:
+/// if a drain holds this thread's ring, the span is dropped and counted.
+pub fn record_span(
+    cat: &'static str,
+    name: String,
+    start_us: f64,
+    dur_us: f64,
+    args: Vec<(&'static str, ArgValue)>,
+) {
+    if !on() {
+        return;
+    }
+    LOCAL.with(|l| {
+        let mut l = l.borrow_mut();
+        let (track, tid) = l.get_or_insert_with(register_thread);
+        let span = Span { cat, name, start_us, dur_us, tid: *tid, args };
+        match track.ring.try_lock() {
+            Ok(mut ring) => {
+                if ring.spans.len() >= RING_CAPACITY {
+                    ring.spans.pop_front();
+                    track.dropped.fetch_add(1, Ordering::Relaxed);
+                }
+                ring.spans.push_back(span);
+            }
+            Err(_) => {
+                track.dropped.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    });
+}
+
+/// Record a span that started at `t0_us` (from [`timer`]) and ends now.
+pub fn span_since(
+    cat: &'static str,
+    name: String,
+    t0_us: f64,
+    args: Vec<(&'static str, ArgValue)>,
+) {
+    if !on() {
+        return;
+    }
+    let dur = (now_us() - t0_us).max(0.0);
+    record_span(cat, name, t0_us, dur, args);
+}
+
+/// Collect (and clear) every thread's recorded spans, sorted by start
+/// time. Threads recording concurrently keep going: a write that races
+/// the drain lands in the next drain or counts as dropped.
+pub fn drain() -> Vec<Span> {
+    let mut out = Vec::new();
+    for track in registry().lock().unwrap().iter() {
+        let mut ring = track.ring.lock().unwrap();
+        out.extend(ring.spans.drain(..));
+    }
+    out.sort_by(|a, b| {
+        a.start_us
+            .partial_cmp(&b.start_us)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.tid.cmp(&b.tid))
+    });
+    out
+}
+
+/// Total spans lost to ring overflow or drain contention since the last
+/// [`reset`].
+pub fn dropped_spans() -> u64 {
+    registry()
+        .lock()
+        .unwrap()
+        .iter()
+        .map(|t| t.dropped.load(Ordering::Relaxed))
+        .sum()
+}
+
+/// Discard all recorded spans, zero the drop accounting and every
+/// counter. Rings stay registered (threads keep their handles).
+pub fn reset() {
+    for track in registry().lock().unwrap().iter() {
+        track.ring.lock().unwrap().spans.clear();
+        track.dropped.store(0, Ordering::Relaxed);
+    }
+    for c in counter_cells().iter() {
+        c.store(0, Ordering::Relaxed);
+    }
+}
+
+// ---------------------------------------------------------------------
+// counters
+
+/// Kernel-side counters: what ran, how much of it, and which path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Counter {
+    /// Dense GEMM rows / path taken.
+    GemmRows,
+    GemmParallel,
+    GemmSerial,
+    /// CSR kernel rows, stored nonzeros, row panels, path taken.
+    CsrRows,
+    CsrNnz,
+    CsrPanels,
+    CsrParallel,
+    CsrSerial,
+    /// BSR kernel rows, stored blocks, row panels, path taken.
+    BsrRows,
+    BsrBlocks,
+    BsrPanels,
+    BsrParallel,
+    BsrSerial,
+    /// Pattern kernel rows, stored values, row panels, path taken.
+    PatRows,
+    PatVals,
+    PatPanels,
+    PatParallel,
+    PatSerial,
+    /// LUT (quantized) kernel rows, stored values, row panels, path.
+    LutRows,
+    LutVals,
+    LutPanels,
+    LutParallel,
+    LutSerial,
+}
+
+/// Number of distinct [`Counter`]s.
+pub const COUNTER_COUNT: usize = 23;
+
+/// Stable names, index-aligned with the [`Counter`] discriminants.
+pub const COUNTER_NAMES: [&str; COUNTER_COUNT] = [
+    "gemm_rows",
+    "gemm_parallel",
+    "gemm_serial",
+    "csr_rows",
+    "csr_nnz",
+    "csr_panels",
+    "csr_parallel",
+    "csr_serial",
+    "bsr_rows",
+    "bsr_blocks",
+    "bsr_panels",
+    "bsr_parallel",
+    "bsr_serial",
+    "pat_rows",
+    "pat_vals",
+    "pat_panels",
+    "pat_parallel",
+    "pat_serial",
+    "lut_rows",
+    "lut_vals",
+    "lut_panels",
+    "lut_parallel",
+    "lut_serial",
+];
+
+fn counter_cells() -> &'static [AtomicU64; COUNTER_COUNT] {
+    static CELLS: OnceLock<[AtomicU64; COUNTER_COUNT]> = OnceLock::new();
+    CELLS.get_or_init(|| {
+        #[allow(clippy::declare_interior_mutable_const)]
+        const Z: AtomicU64 = AtomicU64::new(0);
+        [Z; COUNTER_COUNT]
+    })
+}
+
+/// Bump a counter by `n`. No-op when recording is off; one relaxed
+/// fetch-add when it is on.
+#[inline]
+pub fn add(c: Counter, n: u64) {
+    if !on() {
+        return;
+    }
+    counter_cells()[c as usize].fetch_add(n, Ordering::Relaxed);
+}
+
+/// All counters as `(name, value)` pairs (zeros included, stable order).
+pub fn counters() -> Vec<(&'static str, u64)> {
+    counter_cells()
+        .iter()
+        .zip(COUNTER_NAMES.iter())
+        .map(|(c, &n)| (n, c.load(Ordering::Relaxed)))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_names_align_with_discriminants() {
+        assert_eq!(COUNTER_NAMES.len(), COUNTER_COUNT);
+        assert_eq!(COUNTER_NAMES[Counter::GemmRows as usize], "gemm_rows");
+        assert_eq!(COUNTER_NAMES[Counter::CsrNnz as usize], "csr_nnz");
+        assert_eq!(COUNTER_NAMES[Counter::BsrBlocks as usize], "bsr_blocks");
+        assert_eq!(COUNTER_NAMES[Counter::PatSerial as usize], "pat_serial");
+        assert_eq!(COUNTER_NAMES[Counter::LutSerial as usize], "lut_serial");
+        assert_eq!(Counter::LutSerial as usize, COUNTER_COUNT - 1);
+    }
+
+    #[test]
+    fn key_and_cat_interning() {
+        assert_eq!(intern_key("pred_units"), Some("pred_units"));
+        assert_eq!(intern_key("nonsense"), None);
+        assert_eq!(intern_cat("exec"), Some(CAT_EXEC));
+        assert_eq!(intern_cat("serve"), Some(CAT_SERVE));
+        assert_eq!(intern_cat("metrics"), None);
+    }
+
+    #[test]
+    fn span_arg_accessors() {
+        let s = Span {
+            cat: CAT_EXEC,
+            name: "conv1".into(),
+            start_us: 1.0,
+            dur_us: 2.0,
+            tid: 1,
+            args: vec![
+                ("m", ArgValue::Num(64.0)),
+                ("format", ArgValue::Str("csr".into())),
+            ],
+        };
+        assert_eq!(s.num_arg("m"), Some(64.0));
+        assert_eq!(s.str_arg("format"), Some("csr"));
+        assert_eq!(s.num_arg("format"), None);
+        assert_eq!(s.str_arg("missing"), None);
+    }
+}

@@ -1,0 +1,344 @@
+//! Predicted-vs-measured cost residuals: the feedback half of the
+//! planner's cost model.
+//!
+//! [`ExecPlan::cost_at`](crate::planner::ExecPlan) predicts per-layer
+//! cost in abstract *units* (`COST_*` constants x work items); `exec`
+//! spans carry that prediction (`pred_units`) next to the measured
+//! wall-clock µs. A [`CostReport`] fits the single global `us_per_unit`
+//! scale by least squares through the origin, then expresses each
+//! (op, format) group's deviation as a multiplicative **residual**:
+//!
+//! - residual ≈ 1.0 — the `COST_*` constant for that format is
+//!   consistent with the others,
+//! - residual > 1.0 — the format is *slower* than the model thinks
+//!   (its constant should grow by that factor),
+//! - residual < 1.0 — faster; the constant should shrink.
+//!
+//! `cadnn calibrate --cost-report <file>` turns the residuals into
+//! concrete suggested values for `planner::COST_*` — closing the
+//! measure → re-fit loop from ROADMAP item 1.
+
+use super::{ArgValue, Span, CAT_EXEC};
+use crate::util::json::Json;
+
+/// Aggregated spans for one (op, format) pair. `format` is the layer
+/// plan's format label with a `+q8` / `+q4` suffix when the payload is
+/// quantized (LUT kernels have their own cost constants).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CostGroup {
+    pub op: String,
+    pub format: String,
+    /// Number of spans aggregated.
+    pub spans: u64,
+    /// Total planner-predicted cost (abstract units).
+    pub pred_units: f64,
+    /// Total measured wall-clock µs.
+    pub measured_us: f64,
+    /// This group's own scale: `measured_us / pred_units`.
+    pub us_per_unit: f64,
+    /// `us_per_unit / global us_per_unit` — the factor by which the
+    /// format's `COST_*` constant under- (>1) or over- (<1) predicts.
+    pub residual: f64,
+}
+
+/// Residual summary over one profiled run; see the module doc.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CostReport {
+    /// Global scale fitted over all groups: least squares through the
+    /// origin, `Σ(us·pred) / Σ(pred²)`.
+    pub us_per_unit: f64,
+    /// Exec spans that carried a prediction (spans with no plan entry
+    /// contribute nothing).
+    pub spans: u64,
+    /// Groups sorted by measured µs, heaviest first.
+    pub groups: Vec<CostGroup>,
+}
+
+/// Map a group's format label to the `planner::COST_*` constant it
+/// calibrates: `(constant name, current value)`. Quantized payloads map
+/// to the LUT constants regardless of the container format.
+fn cost_constant(format: &str) -> Option<(&'static str, f64)> {
+    use crate::planner as p;
+    if format.ends_with("+q8") {
+        return Some(("COST_LUT_Q8", p::COST_LUT_Q8));
+    }
+    if format.ends_with("+q4") {
+        return Some(("COST_LUT_Q4", p::COST_LUT_Q4));
+    }
+    match format {
+        "dense" => Some(("COST_DENSE_MAC", p::COST_DENSE_MAC)),
+        "csr" => Some(("COST_CSR_NNZ", p::COST_CSR_NNZ)),
+        "bsr4x1" => Some(("COST_BSR_4X1", p::COST_BSR_4X1)),
+        "bsr4x4" => Some(("COST_BSR_4X4", p::COST_BSR_4X4)),
+        "pattern" => Some(("COST_PATTERN_VAL", p::COST_PATTERN_VAL)),
+        _ => None,
+    }
+}
+
+impl CostReport {
+    /// Build a report from drained spans: keep `exec`-category spans
+    /// whose `pred_units` arg is present and positive, group by
+    /// (op, format), fit the global scale, compute residuals.
+    pub fn from_spans(spans: &[Span]) -> CostReport {
+        let mut groups: Vec<CostGroup> = Vec::new();
+        let mut total_spans = 0u64;
+        for s in spans {
+            if s.cat != CAT_EXEC {
+                continue;
+            }
+            let pred = match s.num_arg("pred_units") {
+                Some(p) if p > 0.0 => p,
+                _ => continue,
+            };
+            let op = s.str_arg("op").unwrap_or("?").to_string();
+            let format = s.str_arg("format").unwrap_or("?").to_string();
+            total_spans += 1;
+            match groups.iter_mut().find(|g| g.op == op && g.format == format) {
+                Some(g) => {
+                    g.spans += 1;
+                    g.pred_units += pred;
+                    g.measured_us += s.dur_us;
+                }
+                None => groups.push(CostGroup {
+                    op,
+                    format,
+                    spans: 1,
+                    pred_units: pred,
+                    measured_us: s.dur_us,
+                    us_per_unit: 0.0,
+                    residual: 0.0,
+                }),
+            }
+        }
+        // Global fit: minimize Σ(us_i - k·pred_i)² over the groups.
+        let num: f64 = groups.iter().map(|g| g.measured_us * g.pred_units).sum();
+        let den: f64 = groups.iter().map(|g| g.pred_units * g.pred_units).sum();
+        let global = if den > 0.0 { num / den } else { 0.0 };
+        for g in &mut groups {
+            g.us_per_unit = g.measured_us / g.pred_units;
+            g.residual = if global > 0.0 { g.us_per_unit / global } else { 0.0 };
+        }
+        groups.sort_by(|a, b| {
+            b.measured_us.partial_cmp(&a.measured_us).unwrap_or(std::cmp::Ordering::Equal)
+        });
+        CostReport { us_per_unit: global, spans: total_spans, groups }
+    }
+
+    /// Suggested re-fits for `planner::COST_*`:
+    /// `(constant name, current value, suggested = current x residual)`.
+    /// Residuals of format groups sharing a constant (e.g. several conv
+    /// ops on `csr`) are combined weighted by predicted units. Formats
+    /// with no matching constant are skipped.
+    pub fn suggestions(&self) -> Vec<(&'static str, f64, f64)> {
+        let mut out: Vec<(&'static str, f64, f64, f64)> = Vec::new();
+        for g in &self.groups {
+            let Some((name, current)) = cost_constant(&g.format) else { continue };
+            match out.iter_mut().find(|e| e.0 == name) {
+                // Accumulate (Σ residual·weight, Σ weight) per constant.
+                Some(e) => {
+                    e.2 += g.residual * g.pred_units;
+                    e.3 += g.pred_units;
+                }
+                None => out.push((name, current, g.residual * g.pred_units, g.pred_units)),
+            }
+        }
+        out.into_iter()
+            .filter(|&(_, _, _, w)| w > 0.0)
+            .map(|(name, current, rw, w)| (name, current, current * (rw / w)))
+            .collect()
+    }
+
+    /// Human-readable table for `cadnn calibrate` / `cadnn profile`.
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "cost model fit: {} spans, global scale {:.4} us/unit\n",
+            self.spans, self.us_per_unit
+        ));
+        s.push_str(&format!(
+            "{:<12} {:<12} {:>6} {:>12} {:>12} {:>10} {:>9}\n",
+            "op", "format", "spans", "pred_units", "measured_us", "us/unit", "residual"
+        ));
+        for g in &self.groups {
+            s.push_str(&format!(
+                "{:<12} {:<12} {:>6} {:>12.1} {:>12.1} {:>10.4} {:>9.3}\n",
+                g.op, g.format, g.spans, g.pred_units, g.measured_us, g.us_per_unit, g.residual
+            ));
+        }
+        let sug = self.suggestions();
+        if !sug.is_empty() {
+            s.push_str("suggested planner constants (current -> refit):\n");
+            for (name, current, suggested) in sug {
+                s.push_str(&format!("  {name:<18} {current:.3} -> {suggested:.3}\n"));
+            }
+        }
+        s
+    }
+
+    /// Serialize for `cadnn profile --cost-report <file>`.
+    pub fn to_json(&self) -> Json {
+        let groups = self
+            .groups
+            .iter()
+            .map(|g| {
+                Json::Obj(vec![
+                    ("op".into(), Json::Str(g.op.clone())),
+                    ("format".into(), Json::Str(g.format.clone())),
+                    ("spans".into(), Json::Num(g.spans as f64)),
+                    ("pred_units".into(), Json::Num(g.pred_units)),
+                    ("measured_us".into(), Json::Num(g.measured_us)),
+                    ("us_per_unit".into(), Json::Num(g.us_per_unit)),
+                    ("residual".into(), Json::Num(g.residual)),
+                ])
+            })
+            .collect();
+        Json::Obj(vec![
+            ("us_per_unit".into(), Json::Num(self.us_per_unit)),
+            ("spans".into(), Json::Num(self.spans as f64)),
+            ("groups".into(), Json::Arr(groups)),
+        ])
+    }
+
+    /// Inverse of [`CostReport::to_json`] — what `cadnn calibrate
+    /// --cost-report <file>` reads back.
+    pub fn from_json(j: &Json) -> Result<CostReport, String> {
+        let num = |o: &Json, k: &str| {
+            o.get(k).and_then(|v| v.as_f64()).ok_or_else(|| format!("missing number '{k}'"))
+        };
+        let us_per_unit = num(j, "us_per_unit")?;
+        let spans = num(j, "spans")? as u64;
+        let raw = j
+            .get("groups")
+            .and_then(|g| g.as_arr())
+            .ok_or_else(|| "missing groups array".to_string())?;
+        let mut groups = Vec::with_capacity(raw.len());
+        for (i, g) in raw.iter().enumerate() {
+            let txt = |k: &str| {
+                g.get(k)
+                    .and_then(|v| v.as_str())
+                    .map(str::to_string)
+                    .ok_or_else(|| format!("group {i}: missing string '{k}'"))
+            };
+            groups.push(CostGroup {
+                op: txt("op")?,
+                format: txt("format")?,
+                spans: num(g, "spans")? as u64,
+                pred_units: num(g, "pred_units")?,
+                measured_us: num(g, "measured_us")?,
+                us_per_unit: num(g, "us_per_unit")?,
+                residual: num(g, "residual")?,
+            });
+        }
+        Ok(CostReport { us_per_unit, spans, groups })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::CAT_SERVE;
+
+    fn exec_span(op: &str, format: &str, pred: f64, us: f64) -> Span {
+        Span {
+            cat: CAT_EXEC,
+            name: format!("{op}-node"),
+            start_us: 0.0,
+            dur_us: us,
+            tid: 1,
+            args: vec![
+                ("op", ArgValue::Str(op.to_string())),
+                ("format", ArgValue::Str(format.to_string())),
+                ("pred_units", ArgValue::Num(pred)),
+            ],
+        }
+    }
+
+    #[test]
+    fn residuals_recover_a_known_skew() {
+        // Two groups, same predicted units; csr measures 2x slower than
+        // bsr4x4. Global fit k = Σ(us·pred)/Σ(pred²) with pred=1000 each:
+        // (2000·1000 + 1000·1000) / (2·1000²) = 1.5 us/unit.
+        let spans = vec![
+            exec_span("conv2d", "csr", 1000.0, 2000.0),
+            exec_span("conv2d", "bsr4x4", 1000.0, 1000.0),
+        ];
+        let r = CostReport::from_spans(&spans);
+        assert_eq!(r.spans, 2);
+        assert!((r.us_per_unit - 1.5).abs() < 1e-12);
+        // heaviest (csr, 2000us) first
+        assert_eq!(r.groups[0].format, "csr");
+        assert!((r.groups[0].residual - 2.0 / 1.5).abs() < 1e-12);
+        assert!((r.groups[1].residual - 1.0 / 1.5).abs() < 1e-12);
+        // suggestions scale the current constants by the residuals
+        let sug = r.suggestions();
+        let csr = sug.iter().find(|s| s.0 == "COST_CSR_NNZ").unwrap();
+        assert!((csr.2 - csr.1 * (2.0 / 1.5)).abs() < 1e-9);
+        let bsr = sug.iter().find(|s| s.0 == "COST_BSR_4X4").unwrap();
+        assert!((bsr.2 - bsr.1 * (1.0 / 1.5)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn perfect_model_residuals_are_one() {
+        let spans = vec![
+            exec_span("conv2d", "csr", 500.0, 250.0),
+            exec_span("dense", "dense", 2000.0, 1000.0),
+        ];
+        let r = CostReport::from_spans(&spans);
+        assert!((r.us_per_unit - 0.5).abs() < 1e-12);
+        for g in &r.groups {
+            assert!((g.residual - 1.0).abs() < 1e-12, "{g:?}");
+        }
+    }
+
+    #[test]
+    fn ignores_unpredicted_and_non_exec_spans() {
+        let mut serve = exec_span("request", "csr", 100.0, 50.0);
+        serve.cat = CAT_SERVE;
+        let mut unplanned = exec_span("relu", "csr", 0.0, 10.0);
+        unplanned.args.retain(|(k, _)| *k != "pred_units");
+        let spans = vec![serve, unplanned, exec_span("conv2d", "csr", 100.0, 70.0)];
+        let r = CostReport::from_spans(&spans);
+        assert_eq!(r.spans, 1);
+        assert_eq!(r.groups.len(), 1);
+    }
+
+    #[test]
+    fn quantized_formats_map_to_lut_constants() {
+        let spans = vec![
+            exec_span("conv2d", "csr+q8", 100.0, 100.0),
+            exec_span("conv2d", "bsr4x1+q4", 100.0, 100.0),
+        ];
+        let sug = CostReport::from_spans(&spans).suggestions();
+        assert!(sug.iter().any(|s| s.0 == "COST_LUT_Q8"));
+        assert!(sug.iter().any(|s| s.0 == "COST_LUT_Q4"));
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let spans = vec![
+            exec_span("conv2d", "csr", 1000.0, 2000.0),
+            exec_span("dense", "dense", 400.0, 300.0),
+        ];
+        let r = CostReport::from_spans(&spans);
+        let back = CostReport::from_json(&r.to_json()).unwrap();
+        assert_eq!(back, r);
+        assert!(CostReport::from_json(&Json::Obj(vec![])).is_err());
+    }
+
+    #[test]
+    fn render_mentions_suggestions() {
+        let spans = vec![exec_span("conv2d", "pattern", 100.0, 100.0)];
+        let txt = CostReport::from_spans(&spans).render();
+        assert!(txt.contains("COST_PATTERN_VAL"));
+        assert!(txt.contains("pattern"));
+    }
+
+    #[test]
+    fn empty_input_is_well_formed() {
+        let r = CostReport::from_spans(&[]);
+        assert_eq!(r.spans, 0);
+        assert_eq!(r.us_per_unit, 0.0);
+        assert!(r.groups.is_empty());
+        assert!(r.suggestions().is_empty());
+    }
+}

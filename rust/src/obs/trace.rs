@@ -1,0 +1,175 @@
+//! Chrome trace-event JSON export: `cadnn profile --trace out.json`
+//! writes a file that loads directly in `chrome://tracing` or Perfetto.
+//!
+//! The emitted shape is the trace-event "JSON object format": every span
+//! becomes one complete (`"ph": "X"`) event with `ts`/`dur` in
+//! microseconds on a per-thread track, and the recorder's counters ride
+//! along under `otherData`. [`parse_chrome_trace`] is the exact inverse
+//! over events this module writes — the round-trip through
+//! [`crate::util::json`] is pinned by `rust/tests/observability.rs`.
+
+use super::{intern_cat, intern_key, ArgValue, Span};
+use crate::util::json::Json;
+
+/// Render spans (plus counters and the drop count) as a Chrome
+/// trace-event JSON document.
+pub fn chrome_trace(spans: &[Span], counters: &[(&'static str, u64)], dropped: u64) -> Json {
+    let events = spans
+        .iter()
+        .map(|s| {
+            let mut ev = vec![
+                ("name".to_string(), Json::Str(s.name.clone())),
+                ("cat".to_string(), Json::Str(s.cat.to_string())),
+                ("ph".to_string(), Json::Str("X".to_string())),
+                ("ts".to_string(), Json::Num(s.start_us)),
+                ("dur".to_string(), Json::Num(s.dur_us)),
+                ("pid".to_string(), Json::Num(1.0)),
+                ("tid".to_string(), Json::Num(s.tid as f64)),
+            ];
+            if !s.args.is_empty() {
+                let args = s
+                    .args
+                    .iter()
+                    .map(|(k, v)| {
+                        let jv = match v {
+                            ArgValue::Num(n) => Json::Num(*n),
+                            ArgValue::Str(t) => Json::Str(t.clone()),
+                        };
+                        (k.to_string(), jv)
+                    })
+                    .collect();
+                ev.push(("args".to_string(), Json::Obj(args)));
+            }
+            Json::Obj(ev)
+        })
+        .collect();
+    let counter_obj = counters
+        .iter()
+        .map(|&(name, v)| (name.to_string(), Json::Num(v as f64)))
+        .collect();
+    Json::Obj(vec![
+        ("traceEvents".to_string(), Json::Arr(events)),
+        ("displayTimeUnit".to_string(), Json::Str("ms".to_string())),
+        (
+            "otherData".to_string(),
+            Json::Obj(vec![
+                ("dropped_spans".to_string(), Json::Num(dropped as f64)),
+                ("counters".to_string(), Json::Obj(counter_obj)),
+            ]),
+        ),
+    ])
+}
+
+/// Parse a document written by [`chrome_trace`] back into spans.
+/// Categories and argument keys must belong to the recorder's closed
+/// sets ([`super::intern_cat`], [`super::ARG_KEYS`]); anything else is
+/// an error rather than a silent drop.
+pub fn parse_chrome_trace(j: &Json) -> Result<Vec<Span>, String> {
+    let events = j
+        .get("traceEvents")
+        .and_then(|e| e.as_arr())
+        .ok_or("missing traceEvents array")?;
+    let mut out = Vec::with_capacity(events.len());
+    for (i, ev) in events.iter().enumerate() {
+        let field = |key: &str| ev.get(key).ok_or_else(|| format!("event {i}: missing '{key}'"));
+        let ph = field("ph")?.as_str().ok_or_else(|| format!("event {i}: ph not a string"))?;
+        if ph != "X" {
+            return Err(format!("event {i}: unsupported phase '{ph}' (writer emits X only)"));
+        }
+        let name = field("name")?
+            .as_str()
+            .ok_or_else(|| format!("event {i}: name not a string"))?
+            .to_string();
+        let cat_s = field("cat")?.as_str().ok_or_else(|| format!("event {i}: cat not a string"))?;
+        let cat = intern_cat(cat_s)
+            .ok_or_else(|| format!("event {i}: unknown category '{cat_s}'"))?;
+        let start_us = field("ts")?.as_f64().ok_or_else(|| format!("event {i}: ts not a number"))?;
+        let dur_us = field("dur")?.as_f64().ok_or_else(|| format!("event {i}: dur not a number"))?;
+        let tid =
+            field("tid")?.as_f64().ok_or_else(|| format!("event {i}: tid not a number"))? as u64;
+        let mut args = Vec::new();
+        if let Some(Json::Obj(kv)) = ev.get("args") {
+            for (k, v) in kv {
+                let key = intern_key(k).ok_or_else(|| format!("event {i}: unknown arg key '{k}'"))?;
+                let val = match v {
+                    Json::Num(n) => ArgValue::Num(*n),
+                    Json::Str(s) => ArgValue::Str(s.clone()),
+                    other => return Err(format!("event {i}: arg '{k}' bad type {other:?}")),
+                };
+                args.push((key, val));
+            }
+        }
+        out.push(Span { cat, name, start_us, dur_us, tid, args });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::{CAT_EXEC, CAT_SERVE};
+
+    fn sample_spans() -> Vec<Span> {
+        vec![
+            Span {
+                cat: CAT_EXEC,
+                name: "conv1".into(),
+                start_us: 10.0,
+                dur_us: 120.5,
+                tid: 1,
+                args: vec![
+                    ("op", ArgValue::Str("conv2d".into())),
+                    ("m", ArgValue::Num(3136.0)),
+                    ("pred_units", ArgValue::Num(9000.0)),
+                ],
+            },
+            Span {
+                cat: CAT_SERVE,
+                name: "request".into(),
+                start_us: 0.0,
+                dur_us: 900.0,
+                tid: 2,
+                args: vec![
+                    ("model", ArgValue::Str("lenet5".into())),
+                    ("id", ArgValue::Num(7.0)),
+                    ("outcome", ArgValue::Str("ok".into())),
+                ],
+            },
+        ]
+    }
+
+    #[test]
+    fn round_trips_through_text() {
+        let spans = sample_spans();
+        let j = chrome_trace(&spans, &[("csr_rows", 42)], 3);
+        // through the actual serialized text, not just the Json tree
+        let text = j.to_string_pretty();
+        let parsed = Json::parse(&text).unwrap();
+        let back = parse_chrome_trace(&parsed).unwrap();
+        assert_eq!(back, spans);
+        // counters and drop accounting survive too
+        let other = parsed.get("otherData").unwrap();
+        assert_eq!(other.get("dropped_spans").and_then(|v| v.as_f64()), Some(3.0));
+        let c = other.get("counters").unwrap();
+        assert_eq!(c.get("csr_rows").and_then(|v| v.as_f64()), Some(42.0));
+    }
+
+    #[test]
+    fn unknown_keys_and_cats_rejected() {
+        let mut j = chrome_trace(&sample_spans(), &[], 0);
+        // corrupt the category of the first event
+        if let Json::Obj(top) = &mut j {
+            if let Some((_, Json::Arr(evs))) = top.iter_mut().find(|(k, _)| k == "traceEvents") {
+                if let Json::Obj(kv) = &mut evs[0] {
+                    for (k, v) in kv.iter_mut() {
+                        if k == "cat" {
+                            *v = Json::Str("mystery".into());
+                        }
+                    }
+                }
+            }
+        }
+        assert!(parse_chrome_trace(&j).unwrap_err().contains("unknown category"));
+        assert!(parse_chrome_trace(&Json::Obj(vec![])).is_err());
+    }
+}

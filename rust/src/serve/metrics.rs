@@ -1,41 +1,66 @@
-//! Serving metrics: per-request latency percentiles, batch utilization,
-//! throughput, deadline misses — recorded per model, snapshotable for
+//! Serving metrics: per-request latency histograms, queue-wait
+//! distribution, batch utilization, throughput, deadline misses broken
+//! down by cause — recorded per model, snapshotable for
 //! [`crate::serve::Server::stats`].
+//!
+//! Everything here is lock-free: counters are relaxed atomics and the
+//! latency distributions are [`Log2Hist`]s, so the serve worker records
+//! with `&self` while `stats()` readers snapshot concurrently — no
+//! `Mutex<Metrics>` on the hot path (the pre-obs design). The scalar
+//! `latency` / `exec` [`Summary`]s in [`MetricsSnapshot`] are preserved
+//! for API compatibility, now derived from the histograms (exact
+//! count / mean / min / max, bucket-walk percentiles — see
+//! `docs/OBSERVABILITY.md` for the error bound).
 
-use crate::util::stats::{Recorder, Summary};
+use crate::obs::{HistSnapshot, Log2Hist};
+use crate::util::stats::Summary;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
 
+/// Lock-free per-model serving metrics; all recording takes `&self`.
 #[derive(Debug)]
 pub struct Metrics {
     started: Instant,
-    latency: Recorder,
-    /// exec time per batch run
-    exec: Recorder,
-    pub requests: u64,
-    pub batches: u64,
+    /// End-to-end request latency (enqueue → reply), µs.
+    latency: Log2Hist,
+    /// Exec time per batch run, µs.
+    exec: Log2Hist,
+    /// Queue wait (enqueue → batch formed), µs.
+    queue_wait: Log2Hist,
+    requests: AtomicU64,
+    batches: AtomicU64,
     /// sum over runs of (used slots) and (total slots) — padding waste.
-    pub used_slots: u64,
-    pub total_slots: u64,
+    used_slots: AtomicU64,
+    total_slots: AtomicU64,
     /// requests answered with a backend-error outcome.
-    pub backend_errors: u64,
-    /// requests answered with a deadline-miss outcome (never executed).
-    pub deadline_misses: u64,
-    /// The scheduler's current units→µs calibration (seeded at startup
-    /// from a persisted manifest value, refined per executed batch) —
-    /// surfaced so callers can persist it back
-    /// (`runtime::Manifest::record_calibration`).
-    pub us_per_unit: Option<f64>,
+    backend_errors: AtomicU64,
+    /// deadline misses by cause: expired while queued vs infeasible the
+    /// moment they arrived (budget below the smallest batch's estimate).
+    deadline_misses_queue: AtomicU64,
+    deadline_misses_infeasible: AtomicU64,
+    /// Current queue depth gauge (set by the worker each loop).
+    queue_depth: AtomicU64,
+    /// Scheduler units→µs calibration as f64 bits; 0 = unset (`None`).
+    /// Seeded from a persisted manifest value, refined per batch.
+    us_per_unit_bits: AtomicU64,
 }
 
 /// Plain-data view of one model's [`Metrics`] at a point in time — what
 /// [`crate::serve::Server::stats`] hands out per model, safe to hold
-/// without keeping the metrics mutex.
+/// indefinitely (the live metrics keep moving underneath).
 #[derive(Debug, Clone, PartialEq)]
 pub struct MetricsSnapshot {
     pub requests: u64,
     pub batches: u64,
     pub backend_errors: u64,
+    /// Total deadline misses (both causes) — the pre-obs field.
     pub deadline_misses: u64,
+    /// ... broken down: expired while waiting in the queue,
+    pub deadline_misses_queue: u64,
+    /// ... vs infeasible on arrival (budget can't fit any batch).
+    pub deadline_misses_infeasible: u64,
+    /// Queue depth at snapshot time (requests waiting, gauge).
+    pub queue_depth: u64,
     /// Fraction of executed batch slots carrying real requests
     /// (0.0 when nothing executed yet).
     pub batch_utilization: f64,
@@ -44,6 +69,12 @@ pub struct MetricsSnapshot {
     pub throughput_rps: f64,
     pub latency: Option<Summary>,
     pub exec: Option<Summary>,
+    /// Enqueue → batch-formed wait distribution.
+    pub queue_wait: Option<Summary>,
+    /// Full log₂ bucket histograms behind the summaries above.
+    pub latency_hist: Option<HistSnapshot>,
+    pub exec_hist: Option<HistSnapshot>,
+    pub queue_wait_hist: Option<HistSnapshot>,
     /// Scheduler units→µs calibration at snapshot time (persistable).
     pub us_per_unit: Option<f64>,
 }
@@ -53,54 +84,124 @@ impl Metrics {
     pub fn new() -> Metrics {
         Metrics {
             started: Instant::now(),
-            latency: Recorder::new(),
-            exec: Recorder::new(),
-            requests: 0,
-            batches: 0,
-            used_slots: 0,
-            total_slots: 0,
-            backend_errors: 0,
-            deadline_misses: 0,
-            us_per_unit: None,
+            latency: Log2Hist::new(),
+            exec: Log2Hist::new(),
+            queue_wait: Log2Hist::new(),
+            requests: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            used_slots: AtomicU64::new(0),
+            total_slots: AtomicU64::new(0),
+            backend_errors: AtomicU64::new(0),
+            deadline_misses_queue: AtomicU64::new(0),
+            deadline_misses_infeasible: AtomicU64::new(0),
+            queue_depth: AtomicU64::new(0),
+            us_per_unit_bits: AtomicU64::new(0),
         }
     }
 
     /// Publish the scheduler's current units→µs calibration (the worker
     /// calls this at startup with the seeded value and after each
     /// observed batch).
-    pub fn record_calibration(&mut self, us_per_unit: Option<f64>) {
-        self.us_per_unit = us_per_unit;
+    pub fn record_calibration(&self, us_per_unit: Option<f64>) {
+        let bits = match us_per_unit {
+            Some(v) if v.is_finite() && v > 0.0 => v.to_bits(),
+            _ => 0,
+        };
+        self.us_per_unit_bits.store(bits, Ordering::Relaxed);
     }
 
-    pub fn record_request(&mut self, latency_us: f64) {
+    pub fn record_request(&self, latency_us: f64) {
         self.latency.record(latency_us);
-        self.requests += 1;
+        self.requests.fetch_add(1, Ordering::Relaxed);
     }
 
-    pub fn record_batch(&mut self, batch: usize, used: usize, exec_us: f64) {
-        self.batches += 1;
-        self.used_slots += used as u64;
-        self.total_slots += batch as u64;
+    /// Record how long a request sat queued before its batch formed.
+    pub fn record_queue_wait(&self, wait_us: f64) {
+        self.queue_wait.record(wait_us);
+    }
+
+    pub fn record_batch(&self, batch: usize, used: usize, exec_us: f64) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.used_slots.fetch_add(used as u64, Ordering::Relaxed);
+        self.total_slots.fetch_add(batch as u64, Ordering::Relaxed);
         self.exec.record(exec_us);
     }
 
     /// Count requests that received an explicit backend-error response.
-    pub fn record_errors(&mut self, n: u64) {
-        self.backend_errors += n;
+    pub fn record_errors(&self, n: u64) {
+        self.backend_errors.fetch_add(n, Ordering::Relaxed);
     }
 
-    /// Count requests answered with `ServeError::Deadline` (expired in
-    /// the queue, never executed).
-    pub fn record_deadline_misses(&mut self, n: u64) {
-        self.deadline_misses += n;
+    /// Count one request answered with `ServeError::Deadline`, by cause:
+    /// `infeasible` means the deadline budget was already below the
+    /// smallest batch's estimated exec time when the worker first saw
+    /// the request — it never had a chance; `false` means it expired
+    /// while waiting in the queue.
+    pub fn record_deadline_miss(&self, infeasible: bool) {
+        if infeasible {
+            self.deadline_misses_infeasible.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.deadline_misses_queue.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Count `n` queue-expired deadline misses (compatibility shim for
+    /// callers without cause information).
+    pub fn record_deadline_misses(&self, n: u64) {
+        self.deadline_misses_queue.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Update the queue-depth gauge (worker, once per loop).
+    pub fn set_queue_depth(&self, depth: usize) {
+        self.queue_depth.store(depth as u64, Ordering::Relaxed);
+    }
+
+    pub fn requests(&self) -> u64 {
+        self.requests.load(Ordering::Relaxed)
+    }
+
+    pub fn batches(&self) -> u64 {
+        self.batches.load(Ordering::Relaxed)
+    }
+
+    pub fn backend_errors(&self) -> u64 {
+        self.backend_errors.load(Ordering::Relaxed)
+    }
+
+    /// Total deadline misses across both causes.
+    pub fn deadline_misses(&self) -> u64 {
+        self.deadline_misses_queue() + self.deadline_misses_infeasible()
+    }
+
+    pub fn deadline_misses_queue(&self) -> u64 {
+        self.deadline_misses_queue.load(Ordering::Relaxed)
+    }
+
+    pub fn deadline_misses_infeasible(&self) -> u64 {
+        self.deadline_misses_infeasible.load(Ordering::Relaxed)
+    }
+
+    pub fn queue_depth(&self) -> u64 {
+        self.queue_depth.load(Ordering::Relaxed)
+    }
+
+    pub fn us_per_unit(&self) -> Option<f64> {
+        match self.us_per_unit_bits.load(Ordering::Relaxed) {
+            0 => None,
+            bits => Some(f64::from_bits(bits)),
+        }
     }
 
     pub fn latency_summary(&self) -> Option<Summary> {
-        self.latency.summary()
+        self.latency.snapshot().map(|h| h.summary())
     }
 
     pub fn exec_summary(&self) -> Option<Summary> {
-        self.exec.summary()
+        self.exec.snapshot().map(|h| h.summary())
+    }
+
+    pub fn queue_wait_summary(&self) -> Option<Summary> {
+        self.queue_wait.snapshot().map(|h| h.summary())
     }
 
     /// Requests per second since start. 0.0 when nothing has been served
@@ -108,34 +209,46 @@ impl Metrics {
     /// after startup) — never a division-blowup artifact.
     pub fn throughput_rps(&self) -> f64 {
         let secs = self.started.elapsed().as_secs_f64();
-        if self.requests == 0 || secs <= 0.0 {
+        let requests = self.requests();
+        if requests == 0 || secs <= 0.0 {
             return 0.0;
         }
-        self.requests as f64 / secs
+        requests as f64 / secs
     }
 
     /// Fraction of executed batch slots carrying real requests. 0.0
     /// before the first batch executes: an idle model reports no
     /// utilization rather than a fake-perfect 100%.
     pub fn batch_utilization(&self) -> f64 {
-        if self.total_slots == 0 {
+        let total = self.total_slots.load(Ordering::Relaxed);
+        if total == 0 {
             return 0.0;
         }
-        self.used_slots as f64 / self.total_slots as f64
+        self.used_slots.load(Ordering::Relaxed) as f64 / total as f64
     }
 
     /// Freeze the current counters into a plain-data snapshot.
     pub fn snapshot(&self) -> MetricsSnapshot {
+        let latency_hist = self.latency.snapshot();
+        let exec_hist = self.exec.snapshot();
+        let queue_wait_hist = self.queue_wait.snapshot();
         MetricsSnapshot {
-            requests: self.requests,
-            batches: self.batches,
-            backend_errors: self.backend_errors,
-            deadline_misses: self.deadline_misses,
+            requests: self.requests(),
+            batches: self.batches(),
+            backend_errors: self.backend_errors(),
+            deadline_misses: self.deadline_misses(),
+            deadline_misses_queue: self.deadline_misses_queue(),
+            deadline_misses_infeasible: self.deadline_misses_infeasible(),
+            queue_depth: self.queue_depth(),
             batch_utilization: self.batch_utilization(),
             throughput_rps: self.throughput_rps(),
-            latency: self.latency_summary(),
-            exec: self.exec_summary(),
-            us_per_unit: self.us_per_unit,
+            latency: latency_hist.as_ref().map(|h| h.summary()),
+            exec: exec_hist.as_ref().map(|h| h.summary()),
+            queue_wait: queue_wait_hist.as_ref().map(|h| h.summary()),
+            latency_hist,
+            exec_hist,
+            queue_wait_hist,
+            us_per_unit: self.us_per_unit(),
         }
     }
 
@@ -143,17 +256,30 @@ impl Metrics {
         let mut out = String::new();
         out.push_str(&format!(
             "requests={} batches={} errors={} deadline_misses={} \
+             (queue={} infeasible={}) queue_depth={} \
              throughput={:.1} req/s batch_util={:.0}%\n",
-            self.requests,
-            self.batches,
-            self.backend_errors,
-            self.deadline_misses,
+            self.requests(),
+            self.batches(),
+            self.backend_errors(),
+            self.deadline_misses(),
+            self.deadline_misses_queue(),
+            self.deadline_misses_infeasible(),
+            self.queue_depth(),
             self.throughput_rps(),
             self.batch_utilization() * 100.0
         ));
         if let Some(s) = self.latency_summary() {
             out.push_str(&format!(
                 "latency  p50={:.1}ms p95={:.1}ms p99={:.1}ms max={:.1}ms\n",
+                s.p50 / 1e3,
+                s.p95 / 1e3,
+                s.p99 / 1e3,
+                s.max / 1e3
+            ));
+        }
+        if let Some(s) = self.queue_wait_summary() {
+            out.push_str(&format!(
+                "queue    p50={:.1}ms p95={:.1}ms p99={:.1}ms max={:.1}ms\n",
                 s.p50 / 1e3,
                 s.p95 / 1e3,
                 s.p99 / 1e3,
@@ -167,7 +293,7 @@ impl Metrics {
                 s.mean / 1e3
             ));
         }
-        if let Some(u) = self.us_per_unit {
+        if let Some(u) = self.us_per_unit() {
             out.push_str(&format!("calib    us_per_unit={u:.4}\n"));
         }
         out
@@ -180,13 +306,13 @@ mod tests {
 
     #[test]
     fn records_and_reports() {
-        let mut m = Metrics::new();
+        let m = Metrics::new();
         m.record_request(1000.0);
         m.record_request(3000.0);
         m.record_batch(4, 2, 500.0);
         m.record_deadline_misses(1);
-        assert_eq!(m.requests, 2);
-        assert_eq!(m.batches, 1);
+        assert_eq!(m.requests(), 2);
+        assert_eq!(m.batches(), 1);
         assert_eq!(m.batch_utilization(), 0.5);
         let s = m.latency_summary().unwrap();
         assert_eq!(s.count, 2);
@@ -210,7 +336,7 @@ mod tests {
 
     #[test]
     fn snapshot_freezes_counters() {
-        let mut m = Metrics::new();
+        let m = Metrics::new();
         m.record_request(2000.0);
         m.record_batch(2, 2, 800.0);
         m.record_errors(3);
@@ -224,5 +350,49 @@ mod tests {
         // the snapshot is detached: later recording doesn't change it
         m.record_errors(1);
         assert_eq!(s.backend_errors, 3);
+    }
+
+    #[test]
+    fn deadline_misses_split_by_cause() {
+        let m = Metrics::new();
+        m.record_deadline_miss(false);
+        m.record_deadline_miss(false);
+        m.record_deadline_miss(true);
+        assert_eq!(m.deadline_misses(), 3);
+        assert_eq!(m.deadline_misses_queue(), 2);
+        assert_eq!(m.deadline_misses_infeasible(), 1);
+        let rpt = m.report();
+        assert!(rpt.contains("deadline_misses=3"));
+        assert!(rpt.contains("queue=2"));
+        assert!(rpt.contains("infeasible=1"));
+        let s = m.snapshot();
+        assert_eq!(s.deadline_misses_queue, 2);
+        assert_eq!(s.deadline_misses_infeasible, 1);
+    }
+
+    #[test]
+    fn queue_wait_and_hists_surface_in_snapshot() {
+        let m = Metrics::new();
+        m.record_request(4000.0);
+        m.record_queue_wait(1500.0);
+        m.set_queue_depth(7);
+        let s = m.snapshot();
+        assert_eq!(s.queue_depth, 7);
+        assert_eq!(s.queue_wait.as_ref().unwrap().count, 1);
+        // single-sample percentiles are exact (min==max clamp)
+        assert_eq!(s.queue_wait.as_ref().unwrap().p99, 1500.0);
+        assert_eq!(s.latency_hist.as_ref().unwrap().p99(), 4000.0);
+        assert!(s.exec_hist.is_none());
+        assert!(m.report().contains("queue "));
+    }
+
+    #[test]
+    fn calibration_round_trips_through_bits() {
+        let m = Metrics::new();
+        assert_eq!(m.us_per_unit(), None);
+        m.record_calibration(Some(0.0123));
+        assert_eq!(m.us_per_unit(), Some(0.0123));
+        m.record_calibration(None);
+        assert_eq!(m.us_per_unit(), None);
     }
 }

@@ -45,11 +45,12 @@ pub use scheduler::{pick_batch, BatchPolicy, Scheduler};
 
 use crate::api::Backend;
 use crate::error::CadnnError;
+use crate::obs::{self, ArgValue};
 use crate::planner::ExecPlan;
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Per-model queue/batcher knobs.
@@ -215,7 +216,7 @@ struct ReadyInfo {
 struct ModelHandle {
     tx: Sender<Msg>,
     worker: Option<std::thread::JoinHandle<Result<(), CadnnError>>>,
-    metrics: Arc<Mutex<Metrics>>,
+    metrics: Arc<Metrics>,
     input_len: usize,
 }
 
@@ -291,7 +292,7 @@ impl ServerBuilder {
                 )));
             }
             let (tx, rx) = channel::<Msg>();
-            let metrics = Arc::new(Mutex::new(Metrics::new()));
+            let metrics = Arc::new(Metrics::new());
             let m2 = metrics.clone();
             let (ready_tx, ready_rx) = channel::<Result<ReadyInfo, CadnnError>>();
             let name = spec.name.clone();
@@ -369,8 +370,10 @@ impl Server {
     }
 
     /// One model's live metrics handle (the shim and the CLI report off
-    /// this); prefer [`Server::stats`] for point-in-time reads.
-    pub fn metrics(&self, model: &str) -> Option<Arc<Mutex<Metrics>>> {
+    /// this). Lock-free: recording and reading both take `&self`, so
+    /// holding this never contends with the worker; prefer
+    /// [`Server::stats`] for point-in-time reads.
+    pub fn metrics(&self, model: &str) -> Option<Arc<Metrics>> {
         self.handles.get(model).map(|h| h.metrics.clone())
     }
 
@@ -378,7 +381,7 @@ impl Server {
     pub fn stats(&self) -> BTreeMap<String, MetricsSnapshot> {
         self.handles
             .iter()
-            .map(|(name, h)| (name.clone(), h.metrics.lock().unwrap().snapshot()))
+            .map(|(name, h)| (name.clone(), h.metrics.snapshot()))
             .collect()
     }
 
@@ -476,7 +479,7 @@ fn worker_loop(
     factory: BackendFactory,
     cfg: QueueConfig,
     rx: Receiver<Msg>,
-    metrics: Arc<Mutex<Metrics>>,
+    metrics: Arc<Metrics>,
     ready: Sender<Result<ReadyInfo, CadnnError>>,
 ) -> Result<(), CadnnError> {
     // Backend objects are created inside the worker thread (no Send bound
@@ -508,7 +511,7 @@ fn worker_loop(
             sched.calibrate(c);
         }
     }
-    metrics.lock().unwrap().record_calibration(sched.us_per_unit());
+    metrics.record_calibration(sched.us_per_unit());
     let _ = ready.send(Ok(ReadyInfo {
         input_shape,
         classes,
@@ -572,8 +575,13 @@ fn worker_loop(
 }
 
 /// Answer every queued request whose deadline already passed with an
-/// explicit [`ServeError::Deadline`] — they are never executed.
-fn expire(model: &str, queue: &mut Vec<Pending>, metrics: &Arc<Mutex<Metrics>>) {
+/// explicit [`ServeError::Deadline`] — they are never executed. Each
+/// miss is attributed to a cause: *infeasible on arrival* when the
+/// request's whole deadline budget was below the cheapest batch's
+/// estimated exec time (`min_est_us` — no admission decision could have
+/// saved it), else *expired in queue* (it waited too long behind other
+/// work).
+fn expire(model: &str, queue: &mut Vec<Pending>, metrics: &Metrics, min_est_us: Option<f64>) {
     let now = Instant::now();
     if !queue.iter().any(|r| r.deadline.is_some_and(|d| d <= now)) {
         return;
@@ -582,12 +590,32 @@ fn expire(model: &str, queue: &mut Vec<Pending>, metrics: &Arc<Mutex<Metrics>>) 
         .drain(..)
         .partition(|r| r.deadline.is_some_and(|d| d <= now));
     *queue = keep;
-    metrics
-        .lock()
-        .unwrap()
-        .record_deadline_misses(expired.len() as u64);
     for r in expired {
         let waited_us = r.enqueued.elapsed().as_secs_f64() * 1e6;
+        let budget_us = r.deadline_us.unwrap_or(0) as f64;
+        let infeasible = min_est_us.is_some_and(|e| budget_us < e);
+        metrics.record_deadline_miss(infeasible);
+        if obs::on() {
+            obs::record_span(
+                obs::CAT_SERVE,
+                "request".to_string(),
+                obs::at_us(r.enqueued),
+                waited_us,
+                vec![
+                    ("model", ArgValue::Str(model.to_string())),
+                    ("id", ArgValue::Num(r.id as f64)),
+                    ("wait_us", ArgValue::Num(waited_us)),
+                    ("slack_us", ArgValue::Num(budget_us - waited_us)),
+                    ("outcome", ArgValue::Str("deadline".to_string())),
+                    (
+                        "cause",
+                        ArgValue::Str(
+                            if infeasible { "infeasible" } else { "queue" }.to_string(),
+                        ),
+                    ),
+                ],
+            );
+        }
         let _ = r.reply.send(ServeResponse {
             id: r.id,
             model: model.to_string(),
@@ -615,7 +643,9 @@ fn topk_of(logits: &[f32], k: usize) -> Vec<(usize, f32)> {
 }
 
 /// Execute and reply to as many queued requests as scheduled batches
-/// allow, expiring dead requests between rounds.
+/// allow, expiring dead requests between rounds. Emits one `serve`
+/// "request" span per reply and one "batch" span per executed batch
+/// when the obs recorder is on.
 #[allow(clippy::too_many_arguments)]
 fn flush(
     model: &str,
@@ -625,12 +655,13 @@ fn flush(
     queue: &mut Vec<Pending>,
     per_image: usize,
     classes: usize,
-    metrics: &Arc<Mutex<Metrics>>,
+    metrics: &Metrics,
 ) {
     while !queue.is_empty() {
-        expire(model, queue, metrics);
+        metrics.set_queue_depth(queue.len());
+        expire(model, queue, metrics, sched.min_est_us());
         if queue.is_empty() {
-            return;
+            break;
         }
         // per-prefix deadline slack: a batch of size b serves the first
         // min(b, horizon) FIFO requests, so only their deadlines
@@ -653,7 +684,37 @@ fn flush(
         for (i, r) in queue.iter().take(take).enumerate() {
             input[i * per_image..(i + 1) * per_image].copy_from_slice(&r.input);
         }
+        // batch formed: the prefix's queue wait ends here, whatever the
+        // execution outcome
         let t0 = Instant::now();
+        let waits_us: Vec<f64> = queue
+            .iter()
+            .take(take)
+            .map(|r| t0.duration_since(r.enqueued).as_secs_f64() * 1e6)
+            .collect();
+        for &w in &waits_us {
+            metrics.record_queue_wait(w);
+        }
+        let request_span = |r: &Pending, i: usize, latency_us: f64, exec_us: f64, out: &str| {
+            let mut args = vec![
+                ("model", ArgValue::Str(model.to_string())),
+                ("id", ArgValue::Num(r.id as f64)),
+                ("batch", ArgValue::Num(b as f64)),
+                ("wait_us", ArgValue::Num(waits_us[i])),
+                ("exec_us", ArgValue::Num(exec_us)),
+                ("outcome", ArgValue::Str(out.to_string())),
+            ];
+            if let Some(d) = r.deadline_us {
+                args.push(("slack_us", ArgValue::Num(d as f64 - latency_us)));
+            }
+            obs::record_span(
+                obs::CAT_SERVE,
+                "request".to_string(),
+                obs::at_us(r.enqueued),
+                latency_us,
+                args,
+            );
+        };
         let out = match backend.run_batch(b, &input) {
             Ok(o) => o,
             Err(e) => {
@@ -666,9 +727,13 @@ fn flush(
                 // error so clients can distinguish this from shutdown
                 // (where the reply channel just closes)
                 let err = ServeError::Backend(e.to_string());
-                metrics.lock().unwrap().record_errors(take as u64);
-                for r in queue.drain(..take) {
+                let exec_us = t0.elapsed().as_secs_f64() * 1e6;
+                metrics.record_errors(take as u64);
+                for (i, r) in queue.drain(..take).enumerate() {
                     let latency_us = r.enqueued.elapsed().as_secs_f64() * 1e6;
+                    if obs::on() {
+                        request_span(&r, i, latency_us, exec_us, "error");
+                    }
                     let _ = r.reply.send(ServeResponse {
                         id: r.id,
                         model: model.to_string(),
@@ -683,12 +748,27 @@ fn flush(
         };
         let exec_us = t0.elapsed().as_secs_f64() * 1e6;
         sched.observe(b, exec_us);
-        let mut m = metrics.lock().unwrap();
-        m.record_calibration(sched.us_per_unit());
-        m.record_batch(b, take, exec_us);
+        metrics.record_calibration(sched.us_per_unit());
+        metrics.record_batch(b, take, exec_us);
+        if obs::on() {
+            obs::record_span(
+                obs::CAT_SERVE,
+                "batch".to_string(),
+                obs::at_us(t0),
+                exec_us,
+                vec![
+                    ("model", ArgValue::Str(model.to_string())),
+                    ("batch", ArgValue::Num(b as f64)),
+                    ("used", ArgValue::Num(take as f64)),
+                ],
+            );
+        }
         for (i, r) in queue.drain(..take).enumerate() {
             let latency_us = r.enqueued.elapsed().as_secs_f64() * 1e6;
-            m.record_request(latency_us);
+            metrics.record_request(latency_us);
+            if obs::on() {
+                request_span(&r, i, latency_us, exec_us, "ok");
+            }
             let logits = out[i * classes..(i + 1) * classes].to_vec();
             let topk = r.topk.map(|k| topk_of(&logits, k));
             let _ = r.reply.send(ServeResponse {
@@ -701,6 +781,7 @@ fn flush(
             });
         }
     }
+    metrics.set_queue_depth(queue.len());
 }
 
 #[cfg(test)]

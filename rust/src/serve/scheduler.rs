@@ -147,6 +147,19 @@ impl Scheduler {
         }
     }
 
+    /// Estimated exec µs of the *cheapest* available batch — the bar a
+    /// request's whole deadline budget must clear to be servable at all.
+    /// A fresh request whose budget is below this was infeasible on
+    /// arrival (the metrics' deadline-miss cause split); one above it
+    /// that still expires died waiting in the queue. `None` until the
+    /// scheduler can estimate (uncalibrated or unplanned).
+    pub fn min_est_us(&self) -> Option<f64> {
+        self.available
+            .iter()
+            .filter_map(|&b| self.est_us(b))
+            .min_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal))
+    }
+
     /// Choose the batch for `pending` queued requests. `slack_us` is the
     /// tightest pending deadline's remaining time (`None` when no queued
     /// request carries a deadline).
@@ -471,6 +484,19 @@ mod tests {
         assert_eq!(picked, 4, "free prefix must keep the throughput batch");
         // uniform slack (the degenerate pick()) would have collapsed to 2
         assert_eq!(s.pick(8, Some(3_500.0)), 2);
+    }
+
+    #[test]
+    fn min_est_tracks_cheapest_batch() {
+        let avail = vec![1usize, 4, 8];
+        let mut s = Scheduler::new(avail.clone(), affine_costs(&avail, 1000.0, 1000.0),
+            BatchPolicy::Greedy);
+        assert_eq!(s.min_est_us(), None, "uncalibrated: no estimate");
+        s.calibrate(1.0); // est(b) = 1000 + 1000b
+        assert_eq!(s.min_est_us(), Some(2_000.0));
+        // an observation that makes a bigger batch cheaper wins the min
+        s.observe(8, 500.0);
+        assert_eq!(s.min_est_us(), Some(500.0));
     }
 
     #[test]

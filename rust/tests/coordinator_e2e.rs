@@ -47,16 +47,15 @@ fn serves_burst_and_batches() {
     ids.sort_unstable();
     ids.dedup();
     assert_eq!(ids.len(), n);
-    let m = coord.metrics.lock().unwrap();
-    assert_eq!(m.requests as usize, n);
+    let m = &coord.metrics;
+    assert_eq!(m.requests() as usize, n);
     // a burst must produce some multi-request batches
     assert!(
-        (m.batches as usize) < n,
+        (m.batches() as usize) < n,
         "no batching happened: {} batches for {} requests",
-        m.batches,
+        m.batches(),
         n
     );
-    drop(m);
     coord.shutdown().unwrap();
 }
 

@@ -47,12 +47,11 @@ fn coordinator_serves_native_engine_end_to_end() {
     ids.dedup();
     assert_eq!(ids.len(), n, "every request answered exactly once");
 
-    let m = coord.metrics.lock().unwrap();
-    assert_eq!(m.requests as usize, n);
-    assert_eq!(m.backend_errors, 0);
+    let m = &coord.metrics;
+    assert_eq!(m.requests() as usize, n);
+    assert_eq!(m.backend_errors(), 0);
     // a burst must produce some multi-request batches
-    assert!((m.batches as usize) < n, "no batching: {} batches / {n} requests", m.batches);
-    drop(m);
+    assert!((m.batches() as usize) < n, "no batching: {} batches / {n} requests", m.batches());
     coord.shutdown().unwrap();
 }
 
@@ -140,10 +139,9 @@ fn backend_errors_reach_clients_as_explicit_responses() {
             Ok(_) => panic!("failing backend produced logits"),
         }
     }
-    let m = coord.metrics.lock().unwrap();
-    assert_eq!(m.backend_errors, 3);
-    assert_eq!(m.requests, 0, "failed requests must not count as served");
-    drop(m);
+    let m = &coord.metrics;
+    assert_eq!(m.backend_errors(), 3);
+    assert_eq!(m.requests(), 0, "failed requests must not count as served");
     coord.shutdown().unwrap();
 }
 

@@ -1,0 +1,234 @@
+//! Integration: the `cadnn::obs` recorder end to end — ring overflow
+//! accounting, trace JSON round-trips through the actual serialized
+//! text, histogram quantiles, cost residuals on a synthetic plan, and a
+//! served workload where every request leaves a complete lifecycle span.
+//!
+//! The recorder is process-global, so every test that touches it holds
+//! `LOCK` and starts from `obs::reset()` — spans left in pooled worker
+//! threads by another test would otherwise leak into `drain()`.
+
+use cadnn::api::Engine;
+use cadnn::models;
+use cadnn::obs::{self, trace, ArgValue, CostReport, Log2Hist, RING_CAPACITY};
+use cadnn::serve::{QueueConfig, ServeRequest, Server};
+use cadnn::util::json::Json;
+use std::sync::Mutex;
+
+static LOCK: Mutex<()> = Mutex::new(());
+
+fn serialize() -> std::sync::MutexGuard<'static, ()> {
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[test]
+fn ring_overflow_drops_oldest_and_counts() {
+    if !obs::COMPILED {
+        return;
+    }
+    let _g = serialize();
+    obs::reset();
+    obs::enable();
+    let extra = 10;
+    for i in 0..RING_CAPACITY + extra {
+        obs::record_span(obs::CAT_EXEC, "n".into(), i as f64, 1.0, vec![]);
+    }
+    obs::disable();
+    assert_eq!(obs::dropped_spans(), extra as u64);
+    let spans = obs::drain();
+    assert_eq!(spans.len(), RING_CAPACITY);
+    // oldest `extra` spans were the ones evicted
+    let min_start = spans.iter().map(|s| s.start_us).fold(f64::MAX, f64::min);
+    assert_eq!(min_start, extra as f64);
+    obs::reset();
+    assert_eq!(obs::dropped_spans(), 0);
+}
+
+#[test]
+fn recorded_spans_round_trip_through_trace_text() {
+    if !obs::COMPILED {
+        return;
+    }
+    let _g = serialize();
+    obs::reset();
+    obs::enable();
+    obs::record_span(
+        obs::CAT_EXEC,
+        "conv1".into(),
+        5.0,
+        40.0,
+        vec![
+            ("op", ArgValue::Str("conv2d".into())),
+            ("format", ArgValue::Str("csr".into())),
+            ("m", ArgValue::Num(784.0)),
+            ("pred_units", ArgValue::Num(1000.0)),
+        ],
+    );
+    obs::record_span(
+        obs::CAT_SERVE,
+        "request".into(),
+        0.0,
+        100.0,
+        vec![("outcome", ArgValue::Str("ok".into())), ("id", ArgValue::Num(3.0))],
+    );
+    obs::add(obs::Counter::CsrRows, 784);
+    obs::disable();
+    let spans = obs::drain();
+    assert_eq!(spans.len(), 2);
+    let doc = trace::chrome_trace(&spans, &obs::counters(), obs::dropped_spans());
+    // through the serialized text — what `cadnn profile --trace` writes
+    let text = doc.to_string_pretty();
+    let parsed = Json::parse(&text).expect("trace output must be valid JSON");
+    let back = trace::parse_chrome_trace(&parsed).expect("writer output must parse back");
+    assert_eq!(back, spans);
+    let counters = parsed.get("otherData").and_then(|o| o.get("counters")).unwrap();
+    assert_eq!(counters.get("csr_rows").and_then(|v| v.as_f64()), Some(784.0));
+    obs::reset();
+}
+
+#[test]
+fn histogram_quantiles_pin_bucket_upper_edges() {
+    // pure-value API, no global state: fine to run unserialized
+    let h = Log2Hist::new();
+    for v in 0..1000 {
+        h.record(v as f64);
+    }
+    let s = h.snapshot().unwrap().summary();
+    assert_eq!(s.count, 1000);
+    // nearest-rank quantiles resolve to bucket upper edges, clamped to
+    // the observed max
+    assert_eq!(s.p50, 512.0);
+    assert_eq!(s.p99, 999.0);
+    assert_eq!(s.max, 999.0);
+
+    let one = Log2Hist::new();
+    one.record(3000.0);
+    let s1 = one.snapshot().unwrap().summary();
+    assert_eq!((s1.p50, s1.p99), (3000.0, 3000.0));
+}
+
+#[test]
+fn residuals_on_a_synthetic_plan_recover_the_skew() {
+    if !obs::COMPILED {
+        return;
+    }
+    // two formats, one measured 2x the global fit, one measured at it —
+    // entirely through public Span values, no recorder involvement
+    let mk = |name: &str, format: &str, pred: f64, dur: f64| obs::Span {
+        cat: obs::CAT_EXEC,
+        name: name.to_string(),
+        start_us: 0.0,
+        dur_us: dur,
+        tid: 1,
+        args: vec![
+            ("op", ArgValue::Str("fc".into())),
+            ("format", ArgValue::Str(format.to_string())),
+            ("pred_units", ArgValue::Num(pred)),
+        ],
+    };
+    let spans = vec![
+        mk("a", "csr", 1000.0, 2000.0),
+        mk("b", "csr", 1000.0, 2000.0),
+        mk("c", "dense", 1000.0, 1000.0),
+        mk("d", "dense", 1000.0, 1000.0),
+    ];
+    let report = CostReport::from_spans(&spans);
+    assert_eq!(report.spans, 4);
+    // least-squares global fit: (2*2000 + 2*1000) / 4000 = 1.5 us/unit
+    assert!((report.us_per_unit - 1.5).abs() < 1e-9, "{}", report.us_per_unit);
+    let csr = report.groups.iter().find(|g| g.format == "csr").unwrap();
+    let dense = report.groups.iter().find(|g| g.format == "dense").unwrap();
+    assert!((csr.residual - 2.0 / 1.5).abs() < 1e-9);
+    assert!((dense.residual - 1.0 / 1.5).abs() < 1e-9);
+    // suggestions scale the constants by the residuals
+    let sug = report.suggestions();
+    let csr_sug = sug.iter().find(|(n, _, _)| *n == "COST_CSR_NNZ").unwrap();
+    assert!((csr_sug.2 / csr_sug.1 - 2.0 / 1.5).abs() < 1e-9);
+}
+
+#[test]
+fn served_requests_emit_complete_lifecycle_spans() {
+    if !obs::COMPILED {
+        return;
+    }
+    let _g = serialize();
+    let engine = Engine::native("lenet5").batch_sizes(&[1, 2, 4]).build().unwrap();
+    let nodes = models::build("lenet5", 1).unwrap().len() - 1; // node 0 is the input
+    let cfg = QueueConfig { max_batch: 4, max_wait_us: 1_000, ..QueueConfig::default() };
+    let server = Server::builder().engine_with("m", &engine, cfg).build().unwrap();
+    let input_len = server.input_len("m").unwrap();
+
+    obs::reset();
+    obs::enable();
+    let n = 8;
+    let mut rxs = Vec::new();
+    for _ in 0..n {
+        let req = ServeRequest::new("m", vec![0.25f32; input_len]);
+        rxs.push(server.submit(req).unwrap());
+    }
+    let mut ids = Vec::new();
+    for rx in rxs {
+        let resp = rx.recv().unwrap();
+        assert!(resp.outcome.is_ok());
+        ids.push(resp.id);
+    }
+    let stats = server.stats();
+    server.shutdown().unwrap();
+    obs::disable();
+    let spans = obs::drain();
+    obs::reset();
+
+    // every request: exactly one "request" span, outcome ok, with the
+    // full lifecycle accounting attached
+    for id in ids {
+        let req_spans: Vec<_> = spans
+            .iter()
+            .filter(|s| {
+                s.cat == obs::CAT_SERVE
+                    && s.name == "request"
+                    && s.num_arg("id") == Some(id as f64)
+            })
+            .collect();
+        assert_eq!(req_spans.len(), 1, "request {id} must leave exactly one span");
+        let s = req_spans[0];
+        assert_eq!(s.str_arg("outcome"), Some("ok"));
+        assert_eq!(s.str_arg("model"), Some("m"));
+        assert!(s.num_arg("wait_us").is_some_and(|w| w >= 0.0));
+        assert!(s.num_arg("exec_us").is_some_and(|e| e > 0.0));
+        assert!(s.num_arg("batch").is_some_and(|b| b >= 1.0));
+        assert!(s.dur_us >= 0.0);
+    }
+    // batches leave their own spans, and the executor traced each node
+    // of each batch run
+    let batches = spans
+        .iter()
+        .filter(|s| s.cat == obs::CAT_SERVE && s.name == "batch")
+        .count();
+    assert!(batches >= 1, "no batch spans recorded");
+    let exec = spans.iter().filter(|s| s.cat == obs::CAT_EXEC).count();
+    assert!(
+        exec >= nodes * batches,
+        "{exec} exec spans for {batches} batches over {nodes} nodes"
+    );
+    // the atomic metrics saw the same traffic, histograms included
+    let m = &stats["m"];
+    assert_eq!(m.requests as usize, n);
+    let q = m.queue_wait.as_ref().expect("queue-wait summary present");
+    assert_eq!(q.count, n);
+    assert!(m.latency_hist.is_some() && m.queue_wait_hist.is_some());
+}
+
+#[test]
+fn disabled_recorder_records_nothing() {
+    if !obs::COMPILED {
+        return;
+    }
+    let _g = serialize();
+    obs::reset();
+    obs::disable();
+    assert!(obs::timer().is_none());
+    obs::record_span(obs::CAT_EXEC, "ghost".into(), 0.0, 1.0, vec![]);
+    obs::add(obs::Counter::GemmRows, 99);
+    assert!(obs::drain().is_empty());
+    assert!(obs::counters().iter().all(|&(_, v)| v == 0));
+    assert_eq!(obs::dropped_spans(), 0);
+}

@@ -299,8 +299,6 @@ fn coordinator_shim_still_serves() {
     assert_eq!(coord.input_len, 28 * 28);
     let resp = coord.infer(image(28 * 28, 11)).unwrap();
     assert_eq!(resp.into_logits().unwrap().len(), 10);
-    let m = coord.metrics.lock().unwrap();
-    assert_eq!(m.requests, 1);
-    drop(m);
+    assert_eq!(coord.metrics.requests(), 1);
     coord.shutdown().unwrap();
 }
