@@ -4,16 +4,22 @@
 //! deadline-aware scheduler (`ExecPlan::cost_at` + online calibration).
 //! Quantifies what plan-aware batching buys: p50/p99 latency, queue-wait
 //! percentiles, batch utilization, and deadline misses (split by cause)
-//! at each load. A final A/B pass measures the span-recorder overhead on
-//! the exec hot path (obs enabled vs disabled). No artifacts needed.
-//! Emits `BENCH_serving.json`. Run: cargo bench --bench bench_serving
+//! at each load. A second sweep serves two models together at 0.5×–2.0×
+//! the calibrated capacity with admission control on/off, showing
+//! overload turning queue-expiry misses into early sheds. A final A/B
+//! pass measures the span-recorder overhead on the exec hot path (obs
+//! enabled vs disabled). No artifacts needed. Emits
+//! `BENCH_serving.json`. Run: cargo bench --bench bench_serving
 
 use cadnn::api::Engine;
 use cadnn::bench::print_table;
 use cadnn::compress::profile::paper_profile;
 use cadnn::exec::Personality;
 use cadnn::models;
-use cadnn::serve::{BatchPolicy, QueueConfig, ServeError, ServeRequest, Server};
+use cadnn::planner::BatchCost;
+use cadnn::serve::{
+    AdmissionConfig, BatchPolicy, QueueConfig, ServeError, ServeRequest, Server,
+};
 use cadnn::util::json::{obj, Json};
 use cadnn::util::rng::Rng;
 
@@ -133,6 +139,112 @@ fn measure_obs_overhead(engine: &Engine) -> Json {
     ])
 }
 
+/// Converge the serving-cost calibration (units → µs) with a short
+/// closed-loop warm-up, so the overload sweep's capacity axis is in
+/// calibrated units rather than guesses.
+fn calibrate_upu(engine: &Engine) -> Option<f64> {
+    let server = Server::builder().engine_with("m", engine, QueueConfig::default()).build().ok()?;
+    let input_len = server.input_len("m")?;
+    let mut rng = Rng::new(13);
+    for _ in 0..8 {
+        let mut img = vec![0.0f32; input_len];
+        rng.fill_normal(&mut img, 0.5);
+        server.infer(ServeRequest::new("m", img)).ok()?;
+    }
+    let upu = server.stats()["m"].us_per_unit;
+    server.shutdown().ok()?;
+    upu
+}
+
+/// Recover the affine batch cost model from the engine's plan-cost
+/// samples (they are `cost_at(b)` evaluations, so two points determine
+/// the line exactly).
+fn affine_cost(engine: &Engine) -> Option<BatchCost> {
+    let costs = engine.plan_costs();
+    let (&(b0, c0), &(b1, c1)) = (costs.first()?, costs.last()?);
+    if b1 == b0 {
+        return None;
+    }
+    let per_image = (c1 - c0) / (b1 - b0) as f64;
+    Some(BatchCost { per_image, overhead: c0 - per_image * b0 as f64 })
+}
+
+struct OverloadCell {
+    model: String,
+    ok: usize,
+    missed: usize,
+    shed: usize,
+    shed_quota: u64,
+    shed_deadline: u64,
+    p99_ms: f64,
+}
+
+/// One overload cell: two models (same engine twice) served together at
+/// `load_x ×` the calibrated full-batch capacity each, admission on or
+/// off. Returns one result row per model.
+fn overload_run(
+    engine: &Engine,
+    upu: f64,
+    capacity_rps: f64,
+    load_x: f64,
+    admission: bool,
+    requests: usize,
+) -> Option<Vec<OverloadCell>> {
+    let names = ["a", "b"];
+    let cfg = QueueConfig { calibration: Some(upu), ..QueueConfig::default() };
+    let mut builder = Server::builder()
+        .admission(AdmissionConfig { enabled: admission, max_backlog_us: None });
+    for n in names {
+        builder = builder.engine_with(n, engine, cfg);
+    }
+    let server = builder.build().ok()?;
+    let input_len = server.input_len("a")?;
+    // each model is offered load_x × its own capacity; the joint stream
+    // alternates, so it runs at twice that rate
+    let rps = 2.0 * load_x * capacity_rps;
+    let mut rng = Rng::new(101);
+    let mut inflight: Vec<(usize, _)> = Vec::new();
+    for i in 0..requests {
+        let m = i % names.len();
+        let mut img = vec![0.0f32; input_len];
+        rng.fill_normal(&mut img, 0.5);
+        let req = ServeRequest::new(names[m], img).deadline_ms(DEADLINE_MS);
+        inflight.push((m, server.submit(req).ok()?));
+        std::thread::sleep(std::time::Duration::from_secs_f64(rng.exp(rps)));
+    }
+    let mut per: Vec<(usize, usize, usize)> = vec![(0, 0, 0); names.len()];
+    for (m, rx) in inflight {
+        match rx.recv() {
+            Ok(resp) => match resp.outcome {
+                Ok(_) => per[m].0 += 1,
+                Err(ServeError::Deadline { .. }) => per[m].1 += 1,
+                Err(ServeError::Shed { .. }) => per[m].2 += 1,
+                Err(_) => {}
+            },
+            Err(_) => {}
+        }
+    }
+    let stats = server.stats();
+    let cells = names
+        .iter()
+        .zip(per)
+        .map(|(n, (ok, missed, shed))| {
+            let s = &stats[*n];
+            OverloadCell {
+                model: n.to_string(),
+                ok,
+                missed,
+                shed,
+                shed_quota: s.shed_quota,
+                shed_deadline: s.shed_deadline,
+                p99_ms: s.latency.as_ref().map(|l| l.p99 / 1e3).unwrap_or(0.0),
+            }
+        })
+        .collect();
+    server.shutdown().ok()?;
+    Some(cells)
+}
+
 fn main() {
     let g = models::build("lenet5", 1).expect("lenet5 exists");
     let engine = Engine::native("lenet5")
@@ -214,11 +326,69 @@ fn main() {
         ],
         &rows,
     );
+    // multi-model overload sweep: two models served together, offered
+    // load at {0.5, 1.0, 2.0}× the calibrated full-batch capacity each,
+    // with and without the admission controller
+    let mut overload_rows = Vec::new();
+    match (calibrate_upu(&engine), affine_cost(&engine)) {
+        (Some(upu), Some(cost)) => {
+            let capacity = cost.capacity_rps(8, upu);
+            println!(
+                "\n== overload sweep (2 models, calibrated capacity {capacity:.0} req/s \
+                 per model, deadline {DEADLINE_MS}ms) ==\n"
+            );
+            let mut table = Vec::new();
+            for load_x in [0.5, 1.0, 2.0] {
+                for admission in [true, false] {
+                    let Some(cells) =
+                        overload_run(&engine, upu, capacity, load_x, admission, requests)
+                    else {
+                        eprintln!("overload run failed: {load_x}x admission={admission}");
+                        continue;
+                    };
+                    for c in cells {
+                        table.push(vec![
+                            format!("{load_x:.1}x"),
+                            if admission { "on" } else { "off" }.to_string(),
+                            c.model.clone(),
+                            format!("{}", c.ok),
+                            format!("{}", c.missed),
+                            format!("{}", c.shed),
+                            format!("{:.1}", c.p99_ms),
+                        ]);
+                        overload_rows.push(obj(vec![
+                            ("load_x", Json::Num(load_x)),
+                            ("admission", Json::Bool(admission)),
+                            ("model", Json::Str(c.model)),
+                            ("requests_offered", Json::Num((requests / 2) as f64)),
+                            ("ok", Json::Num(c.ok as f64)),
+                            ("deadline_missed", Json::Num(c.missed as f64)),
+                            ("shed", Json::Num(c.shed as f64)),
+                            ("shed_deadline", Json::Num(c.shed_deadline as f64)),
+                            ("shed_quota", Json::Num(c.shed_quota as f64)),
+                            ("p99_ms", Json::Num(c.p99_ms)),
+                        ]));
+                    }
+                }
+            }
+            print_table(
+                &["offered", "admission", "model", "ok", "missed", "shed", "p99 ms"],
+                &table,
+            );
+            println!(
+                "(with admission on, overload turns queue-expiry misses into early sheds \
+                 and the admitted p99 stays near the feasible bound)"
+            );
+        }
+        _ => eprintln!("overload sweep skipped: engine did not calibrate"),
+    }
+
     let obs_overhead = measure_obs_overhead(&engine);
     let out = Json::Obj(vec![
         ("bench".to_string(), Json::Str("serving".to_string())),
         ("deadline_ms".to_string(), Json::Num(DEADLINE_MS as f64)),
         ("rows".to_string(), Json::Arr(report)),
+        ("overload_rows".to_string(), Json::Arr(overload_rows)),
         ("obs_overhead".to_string(), obs_overhead),
     ]);
     let path = "BENCH_serving.json";

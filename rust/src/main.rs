@@ -50,7 +50,7 @@ use cadnn::costmodel::calibrate;
 use cadnn::exec::Personality;
 use cadnn::models;
 use cadnn::planner::{FormatPolicy, ValuePolicy};
-use cadnn::serve::{QueueConfig, ServeRequest, Server};
+use cadnn::serve::{AdmissionConfig, QueueConfig, ServeRequest, Server};
 use cadnn::util::json::Json;
 use cadnn::util::rng::Rng;
 
@@ -452,18 +452,29 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     if opt(args, "--format").is_some() && !specs.iter().any(|(_, _, sp)| *sp) {
         return Err(anyhow!("--format applies to sparse variants only"));
     }
+    let replicas: usize =
+        opt(args, "--replicas").and_then(|s| s.parse().ok()).unwrap_or(1).max(1);
+    let quota_us: Option<u64> = opt(args, "--quota-us").and_then(|s| s.parse().ok());
+    let backlog_us: Option<u64> = opt(args, "--backlog-us").and_then(|s| s.parse().ok());
+    let calibration: Option<f64> = opt(args, "--calibration").and_then(|s| s.parse().ok());
     let qcfg = QueueConfig {
         max_batch,
         max_wait_us,
         fallback: policy,
         planned: !flag(args, "--no-planner"),
+        replicas,
+        quota_us,
+        calibration,
         ..QueueConfig::default()
     };
     let sizes: Vec<usize> = [1usize, 2, 4, 8]
         .into_iter()
         .filter(|&b| b <= max_batch.max(1))
         .collect();
-    let mut builder = Server::builder();
+    let mut builder = Server::builder().admission(AdmissionConfig {
+        enabled: !flag(args, "--no-admission"),
+        max_backlog_us: backlog_us,
+    });
     for (alias, name, sparse) in &specs {
         let is_file = name.ends_with(".cadnn");
         let mut eb = if is_file { Engine::from_model_file(name) } else { Engine::native(name) }
@@ -487,9 +498,11 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         let engine = eb.build()?;
         let planned = qcfg.planned && !engine.plan_costs().is_empty();
         println!(
-            "registered '{alias}' -> {} ({} batch variants, scheduler: {})",
+            "registered '{alias}' -> {} ({} batch variants, {} replica(s){}, scheduler: {})",
             engine.name(),
             engine.batch_sizes().len(),
+            replicas,
+            quota_us.map(|q| format!(", quota {q}µs")).unwrap_or_default(),
             if planned { "planner cost model" } else { "policy fallback" },
         );
         builder = builder.engine_with(alias.as_str(), &engine, qcfg);
@@ -517,21 +530,23 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         pending.push(server.submit(req)?);
         std::thread::sleep(std::time::Duration::from_secs_f64(rng.exp(rps)));
     }
-    let (mut ok, mut missed, mut failed) = (0usize, 0usize, 0usize);
+    let (mut ok, mut missed, mut shed, mut failed) = (0usize, 0usize, 0usize, 0usize);
     for rx in pending {
         match rx.recv() {
             Ok(resp) => match resp.outcome {
                 Ok(_) => ok += 1,
                 Err(cadnn::serve::ServeError::Deadline { .. }) => missed += 1,
+                Err(cadnn::serve::ServeError::Shed { .. }) => shed += 1,
                 Err(_) => failed += 1,
             },
             Err(_) => failed += 1,
         }
     }
-    println!("\nok={ok} deadline_missed={missed} failed={failed}");
+    println!("\nok={ok} deadline_missed={missed} shed={shed} failed={failed}");
+    // merged-across-replicas snapshots, admission accounting stamped
+    let stats = server.stats();
     for (alias, _, _) in &specs {
-        let m = server.metrics(alias).unwrap();
-        println!("--- {alias} ---\n{}", m.report());
+        println!("--- {alias} ---\n{}", stats[alias.as_str()].report());
     }
     server.shutdown()?;
     Ok(())

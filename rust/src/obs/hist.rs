@@ -183,6 +183,61 @@ impl HistSnapshot {
         }
     }
 
+    /// Combine two snapshots as if every sample had been recorded into
+    /// one histogram: bucket-wise count addition (merge-join on the
+    /// bucket edges, which are exact powers of two, so `f64` equality is
+    /// sound), exact count / min / max, count-weighted mean. The
+    /// operation is associative and commutative — merging replica
+    /// snapshots in any order or grouping yields the identical result,
+    /// which `rust/tests/observability.rs` pins against a
+    /// single-recorder oracle.
+    pub fn merge(&self, other: &HistSnapshot) -> HistSnapshot {
+        let count = self.count + other.count;
+        let mut buckets: Vec<(f64, u64)> =
+            Vec::with_capacity(self.buckets.len() + other.buckets.len());
+        let (mut i, mut j) = (0, 0);
+        while i < self.buckets.len() || j < other.buckets.len() {
+            match (self.buckets.get(i), other.buckets.get(j)) {
+                (Some(&(ea, ca)), Some(&(eb, cb))) if ea == eb => {
+                    buckets.push((ea, ca + cb));
+                    i += 1;
+                    j += 1;
+                }
+                (Some(&(ea, ca)), Some(&(eb, _))) if ea < eb => {
+                    buckets.push((ea, ca));
+                    i += 1;
+                }
+                (Some(_), Some(&(eb, cb))) => {
+                    buckets.push((eb, cb));
+                    j += 1;
+                }
+                (Some(&(ea, ca)), None) => {
+                    buckets.push((ea, ca));
+                    i += 1;
+                }
+                (None, Some(&(eb, cb))) => {
+                    buckets.push((eb, cb));
+                    j += 1;
+                }
+                (None, None) => unreachable!("loop condition"),
+            }
+        }
+        // means are integer-µs sums over counts, so the count-weighted
+        // recombination reproduces the joint mean exactly
+        let mean_us = if count == 0 {
+            0.0
+        } else {
+            (self.mean_us * self.count as f64 + other.mean_us * other.count as f64) / count as f64
+        };
+        HistSnapshot {
+            count,
+            mean_us,
+            min_us: self.min_us.min(other.min_us),
+            max_us: self.max_us.max(other.max_us),
+            buckets,
+        }
+    }
+
     /// JSON shape used by the benches' `BENCH_*.json` emissions.
     pub fn to_json(&self) -> Json {
         Json::Obj(vec![
@@ -296,6 +351,31 @@ mod tests {
         let j = s.to_json();
         assert_eq!(j.get("count").and_then(|v| v.as_f64()), Some(2.0));
         assert_eq!(j.get("buckets").and_then(|b| b.as_arr()).unwrap().len(), 2);
+    }
+
+    #[test]
+    fn merge_equals_single_recorder() {
+        let samples = [3.0, 17.0, 900.0, 900.0, 4_000.0, 65.0, 0.4, 1.0];
+        let (a, b, all) = (Log2Hist::new(), Log2Hist::new(), Log2Hist::new());
+        for (i, &v) in samples.iter().enumerate() {
+            if i % 2 == 0 { a.record(v) } else { b.record(v) }
+            all.record(v);
+        }
+        let (sa, sb) = (a.snapshot().unwrap(), b.snapshot().unwrap());
+        let oracle = all.snapshot().unwrap();
+        let merged = sa.merge(&sb);
+        assert_eq!(merged, oracle, "merge reproduces the single-recorder snapshot");
+        assert_eq!(sb.merge(&sa), oracle, "commutative");
+    }
+
+    #[test]
+    fn merge_is_associative() {
+        let hs: Vec<Log2Hist> = (0..3).map(|_| Log2Hist::new()).collect();
+        for (i, v) in [2.0, 40.0, 500.0, 7.0, 123.0, 9_000.0].iter().enumerate() {
+            hs[i % 3].record(*v);
+        }
+        let s: Vec<HistSnapshot> = hs.iter().map(|h| h.snapshot().unwrap()).collect();
+        assert_eq!(s[0].merge(&s[1]).merge(&s[2]), s[0].merge(&s[1].merge(&s[2])));
     }
 
     #[test]

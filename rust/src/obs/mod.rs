@@ -160,7 +160,7 @@ impl Span {
 /// back into [`Span`]s without allocation games ([`intern_key`]).
 pub const ARG_KEYS: &[&str] = &[
     "op", "format", "bits", "m", "pred_units", "model", "id", "batch", "used", "wait_us",
-    "exec_us", "slack_us", "outcome", "cause", "nodes",
+    "exec_us", "slack_us", "outcome", "cause", "nodes", "predicted_us",
 ];
 
 /// Map an arbitrary string onto the matching entry of [`ARG_KEYS`].
@@ -323,10 +323,16 @@ pub enum Counter {
     LutPanels,
     LutParallel,
     LutSerial,
+    /// Serving admission: requests shed at enqueue, by cause.
+    ServeShedDeadline,
+    ServeShedQuota,
+    ServeShedBacklog,
+    /// Serving replica sharding: queue-tail steals between replicas.
+    ServeSteals,
 }
 
 /// Number of distinct [`Counter`]s.
-pub const COUNTER_COUNT: usize = 23;
+pub const COUNTER_COUNT: usize = 27;
 
 /// Stable names, index-aligned with the [`Counter`] discriminants.
 pub const COUNTER_NAMES: [&str; COUNTER_COUNT] = [
@@ -353,6 +359,10 @@ pub const COUNTER_NAMES: [&str; COUNTER_COUNT] = [
     "lut_panels",
     "lut_parallel",
     "lut_serial",
+    "serve_shed_deadline",
+    "serve_shed_quota",
+    "serve_shed_backlog",
+    "serve_steals",
 ];
 
 fn counter_cells() -> &'static [AtomicU64; COUNTER_COUNT] {
@@ -395,7 +405,12 @@ mod tests {
         assert_eq!(COUNTER_NAMES[Counter::BsrBlocks as usize], "bsr_blocks");
         assert_eq!(COUNTER_NAMES[Counter::PatSerial as usize], "pat_serial");
         assert_eq!(COUNTER_NAMES[Counter::LutSerial as usize], "lut_serial");
-        assert_eq!(Counter::LutSerial as usize, COUNTER_COUNT - 1);
+        assert_eq!(
+            COUNTER_NAMES[Counter::ServeShedDeadline as usize],
+            "serve_shed_deadline"
+        );
+        assert_eq!(COUNTER_NAMES[Counter::ServeSteals as usize], "serve_steals");
+        assert_eq!(Counter::ServeSteals as usize, COUNTER_COUNT - 1);
     }
 
     #[test]

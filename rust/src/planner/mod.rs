@@ -425,6 +425,29 @@ impl BatchCost {
     pub fn cost_at(&self, m: usize) -> f64 {
         self.overhead + m as f64 * self.per_image
     }
+
+    /// Estimated wall-clock µs of one batch of `m` images under a
+    /// calibrated units→µs scale (the serving scheduler's
+    /// `us_per_unit`). 0.0 for degenerate scales.
+    pub fn est_us(&self, m: usize, us_per_unit: f64) -> f64 {
+        if !(us_per_unit > 0.0) {
+            return 0.0;
+        }
+        self.cost_at(m) * us_per_unit
+    }
+
+    /// Calibrated serving capacity at batch size `m`, in images per
+    /// second: `m` images every `est_us(m)` microseconds, back to back.
+    /// The admission controller's notion of "calibrated capacity" — an
+    /// offered rate above `capacity_rps(max_batch)` *must* shed or miss.
+    /// 0.0 when the scale or the cost is degenerate.
+    pub fn capacity_rps(&self, m: usize, us_per_unit: f64) -> f64 {
+        let est = self.est_us(m, us_per_unit);
+        if !(est > 0.0) || m == 0 {
+            return 0.0;
+        }
+        m as f64 * 1e6 / est
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -1341,6 +1364,26 @@ mod tests {
         // per-image cost shrinks with m: the overhead amortizes
         assert!(c.cost_at(8) / 8.0 < c.cost_at(1));
         assert_eq!(plan.cost_at(8), Some(c.cost_at(8)));
+    }
+
+    #[test]
+    fn capacity_math_is_pinned() {
+        // 1000 + 1000·m units at 1 µs/unit: batch 1 runs in 2000µs,
+        // batch 8 in 9000µs
+        let c = BatchCost { per_image: 1_000.0, overhead: 1_000.0 };
+        assert_eq!(c.est_us(1, 1.0), 2_000.0);
+        assert_eq!(c.est_us(8, 1.0), 9_000.0);
+        assert_eq!(c.est_us(8, 0.5), 4_500.0);
+        // capacity: 1 image / 2000µs = 500/s; 8 images / 9000µs ≈ 888.9/s
+        assert_eq!(c.capacity_rps(1, 1.0), 500.0);
+        assert_eq!(c.capacity_rps(8, 1.0), 8.0 * 1e6 / 9_000.0);
+        // batching always raises capacity under an affine cost
+        assert!(c.capacity_rps(8, 1.0) > c.capacity_rps(1, 1.0));
+        // degenerate scales and batch 0 are safe zeros, never NaN/inf
+        assert_eq!(c.est_us(4, 0.0), 0.0);
+        assert_eq!(c.capacity_rps(4, 0.0), 0.0);
+        assert_eq!(c.capacity_rps(0, 1.0), 0.0);
+        assert_eq!(c.capacity_rps(4, f64::NAN), 0.0);
     }
 
     /// Planned layers carry a positive `cost_per_row` matching the

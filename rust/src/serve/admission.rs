@@ -1,0 +1,359 @@
+//! Global admission control: decide **at enqueue** whether a request
+//! can be served, instead of letting it queue to death.
+//!
+//! The price signal is the planner's cost model: each model exposes
+//! `(batch, plan cost units)` via [`crate::api::Backend::plan_costs`],
+//! and the serving scheduler calibrates µs-per-unit online
+//! ([`crate::serve::Scheduler::us_per_unit`], mirrored into
+//! [`crate::serve::Metrics`]). Admission multiplies the two:
+//!
+//! - every admitted request **commits** `min_units × us_per_unit` —
+//!   an upper bound on its amortized drain cost, because the
+//!   throughput-argmax scheduler never spends more than the cheapest
+//!   batch estimate per served request (see `fleet_serving` property
+//!   tests, which assert this bound over 200 random workloads);
+//! - a request's **predicted completion** is
+//!   `committed / replicas + max_wait_us + worst_batch_us`: the
+//!   committed backlog drains ahead of it, at most one batching window
+//!   of idleness can pass once it is queued, and its own batch costs at
+//!   most the largest batch estimate.
+//!
+//! Three shed classes, checked in order:
+//!
+//! 1. **Quota** — the model's committed backlog would exceed its
+//!    configured `quota_us` ([`crate::serve::QueueConfig::quota_us`]).
+//!    Answered as [`crate::serve::ServeError::Shed`].
+//! 2. **Backlog** — the *global* committed backlog across all models
+//!    would exceed [`AdmissionConfig::max_backlog_us`]. Also
+//!    [`crate::serve::ServeError::Shed`].
+//! 3. **Deadline** — the request carries a deadline the prediction says
+//!    it cannot meet. Answered as an early
+//!    [`crate::serve::ServeError::Deadline`] with `waited_us = 0`, the
+//!    same type a queue expiry produces — clients handle one miss shape,
+//!    but metrics split the counts ([`shed-vs-miss taxonomy`][tax]).
+//!
+//! Both checks keep a progress guarantee: with zero outstanding work a
+//! request is never quota- or backlog-shed, so tiny quotas throttle
+//! concurrency rather than deadlock a tenant. Models without plan costs
+//! or calibration are unpriced: always admitted, commitment zero —
+//! admission is strictly opt-in via the cost model.
+//!
+//! [tax]: ../../docs/SERVING.md
+
+use super::metrics::Metrics;
+use crate::obs;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, OnceLock};
+
+/// Server-wide admission policy knobs ([`crate::serve::ServerBuilder::admission`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AdmissionConfig {
+    /// Master switch. Off ⇒ every request is admitted with zero
+    /// commitment (the pre-admission behavior, bit for bit).
+    pub enabled: bool,
+    /// Global committed-work ceiling in µs across **all** models;
+    /// `None` = unbounded. The shared-CPU analogue of a per-model quota.
+    pub max_backlog_us: Option<u64>,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> AdmissionConfig {
+        AdmissionConfig { enabled: true, max_backlog_us: None }
+    }
+}
+
+/// Why a request was refused by quota/backlog accounting (deadline
+/// sheds surface as [`crate::serve::ServeError::Deadline`] instead).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShedCause {
+    /// The model's `quota_us` committed-work budget was full.
+    Quota,
+    /// The server-wide `max_backlog_us` budget was full.
+    Backlog,
+}
+
+impl std::fmt::Display for ShedCause {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ShedCause::Quota => write!(f, "quota"),
+            ShedCause::Backlog => write!(f, "backlog"),
+        }
+    }
+}
+
+/// Outcome of one admission check.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum AdmitDecision {
+    /// Proceed. `cost_us` was committed against the model and global
+    /// budgets and must be released exactly once at the terminal reply;
+    /// `predicted_us` is the completion estimate the decision used
+    /// (0 = unpriced).
+    Admit { cost_us: u64, predicted_us: u64 },
+    /// Refuse: the deadline cannot be met. Answer
+    /// [`crate::serve::ServeError::Deadline`] with `waited_us = 0`.
+    ShedDeadline { predicted_us: u64 },
+    /// Refuse: quota or global backlog. Answer
+    /// [`crate::serve::ServeError::Shed`].
+    Shed { cause: ShedCause, predicted_us: u64 },
+}
+
+/// Plan-derived price list, fixed once the backend is built.
+#[derive(Debug, Clone, Copy)]
+struct Pricing {
+    /// Cheapest batch estimate in plan units — the per-request charge.
+    min_units: f64,
+    /// Costliest batch estimate in plan units — the own-batch term of
+    /// the completion prediction.
+    max_units: f64,
+}
+
+/// Per-model admission state. Shared between the submit path (admit)
+/// and every replica worker (release at terminal reply).
+#[derive(Debug)]
+pub struct ModelAdmission {
+    cfg: AdmissionConfig,
+    replicas: u64,
+    max_wait_us: u64,
+    quota_us: Option<u64>,
+    /// Filled by the first replica whose backend reports plan costs;
+    /// until then the model is unpriced.
+    pricing: OnceLock<Pricing>,
+    /// Replica-0 metrics — the live µs-per-unit source (seeded at
+    /// startup when a calibration is persisted or configured).
+    calibration: Arc<Metrics>,
+    committed_us: AtomicU64,
+    global_committed_us: Arc<AtomicU64>,
+    shed_deadline: AtomicU64,
+    shed_quota: AtomicU64,
+    shed_backlog: AtomicU64,
+}
+
+impl ModelAdmission {
+    pub(crate) fn new(
+        cfg: AdmissionConfig,
+        replicas: usize,
+        max_wait_us: u64,
+        quota_us: Option<u64>,
+        calibration: Arc<Metrics>,
+        global_committed_us: Arc<AtomicU64>,
+    ) -> ModelAdmission {
+        ModelAdmission {
+            cfg,
+            replicas: replicas.max(1) as u64,
+            max_wait_us,
+            quota_us,
+            pricing: OnceLock::new(),
+            calibration,
+            committed_us: AtomicU64::new(0),
+            global_committed_us,
+            shed_deadline: AtomicU64::new(0),
+            shed_quota: AtomicU64::new(0),
+            shed_backlog: AtomicU64::new(0),
+        }
+    }
+
+    /// Install the plan-unit price list (first writer wins; replicas all
+    /// report the same plan). Empty cost lists leave the model unpriced.
+    pub(crate) fn set_pricing(&self, plan_costs: &[(usize, f64)]) {
+        let units: Vec<f64> = plan_costs.iter().map(|&(_, u)| u).filter(|u| *u > 0.0).collect();
+        let (Some(&min), Some(&max)) = (
+            units.iter().min_by(|a, b| a.total_cmp(b)),
+            units.iter().max_by(|a, b| a.total_cmp(b)),
+        ) else {
+            return;
+        };
+        let _ = self.pricing.set(Pricing { min_units: min, max_units: max });
+    }
+
+    /// Decide one request. On `Admit` the returned `cost_us` is already
+    /// committed; the caller must [`ModelAdmission::release`] it at the
+    /// terminal reply (success, backend error, or queue expiry).
+    pub(crate) fn admit(&self, deadline_us: Option<u64>) -> AdmitDecision {
+        let unpriced = AdmitDecision::Admit { cost_us: 0, predicted_us: 0 };
+        if !self.cfg.enabled {
+            return unpriced;
+        }
+        let Some(p) = self.pricing.get() else { return unpriced };
+        let Some(upu) = self.calibration.us_per_unit() else { return unpriced };
+        // ceil keeps the charge an upper bound; max(1) keeps commitment
+        // visible even for absurdly cheap plans
+        let est_us = ((p.min_units * upu).ceil() as u64).max(1);
+        let worst_us = (p.max_units * upu).ceil() as u64;
+        let committed = self.committed_us.load(Ordering::Relaxed);
+        let predicted_us = committed / self.replicas + self.max_wait_us + worst_us;
+        if let Some(quota) = self.quota_us {
+            if committed > 0 && committed.saturating_add(est_us) > quota {
+                self.shed_quota.fetch_add(1, Ordering::Relaxed);
+                obs::add(obs::Counter::ServeShedQuota, 1);
+                return AdmitDecision::Shed { cause: ShedCause::Quota, predicted_us };
+            }
+        }
+        if let Some(max_backlog) = self.cfg.max_backlog_us {
+            let global = self.global_committed_us.load(Ordering::Relaxed);
+            if global > 0 && global.saturating_add(est_us) > max_backlog {
+                self.shed_backlog.fetch_add(1, Ordering::Relaxed);
+                obs::add(obs::Counter::ServeShedBacklog, 1);
+                return AdmitDecision::Shed { cause: ShedCause::Backlog, predicted_us };
+            }
+        }
+        if let Some(budget) = deadline_us {
+            if budget < predicted_us {
+                self.shed_deadline.fetch_add(1, Ordering::Relaxed);
+                obs::add(obs::Counter::ServeShedDeadline, 1);
+                return AdmitDecision::ShedDeadline { predicted_us };
+            }
+        }
+        self.committed_us.fetch_add(est_us, Ordering::Relaxed);
+        self.global_committed_us.fetch_add(est_us, Ordering::Relaxed);
+        AdmitDecision::Admit { cost_us: est_us, predicted_us }
+    }
+
+    /// Return an admitted request's commitment. `cost_us == 0`
+    /// (unpriced admit) is a no-op.
+    pub(crate) fn release(&self, cost_us: u64) {
+        if cost_us > 0 {
+            self.committed_us.fetch_sub(cost_us, Ordering::Relaxed);
+            self.global_committed_us.fetch_sub(cost_us, Ordering::Relaxed);
+        }
+    }
+
+    /// Outstanding committed work for this model, µs.
+    pub fn committed_us(&self) -> u64 {
+        self.committed_us.load(Ordering::Relaxed)
+    }
+
+    /// Configured per-model quota, if any.
+    pub fn quota_us(&self) -> Option<u64> {
+        self.quota_us
+    }
+
+    /// Replica count this model's prediction divides backlog by.
+    pub fn replicas(&self) -> u64 {
+        self.replicas
+    }
+
+    /// `(deadline, quota, backlog)` shed counts since start.
+    pub fn shed_counts(&self) -> (u64, u64, u64) {
+        (
+            self.shed_deadline.load(Ordering::Relaxed),
+            self.shed_quota.load(Ordering::Relaxed),
+            self.shed_backlog.load(Ordering::Relaxed),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model(
+        cfg: AdmissionConfig,
+        replicas: usize,
+        quota_us: Option<u64>,
+        upu: Option<f64>,
+    ) -> ModelAdmission {
+        let metrics = Arc::new(Metrics::new());
+        metrics.record_calibration(upu);
+        let m = ModelAdmission::new(
+            cfg,
+            replicas,
+            2_000,
+            quota_us,
+            metrics,
+            Arc::new(AtomicU64::new(0)),
+        );
+        m.set_pricing(&[(1, 1_100.0), (4, 4_100.0), (8, 8_100.0)]);
+        m
+    }
+
+    #[test]
+    fn unpriced_uncalibrated_or_disabled_admits_everything() {
+        let free = AdmitDecision::Admit { cost_us: 0, predicted_us: 0 };
+        let off = model(AdmissionConfig { enabled: false, ..Default::default() }, 1, Some(1), None);
+        assert_eq!(off.admit(Some(1)), free);
+        let uncal = model(AdmissionConfig::default(), 1, Some(1), None);
+        assert_eq!(uncal.admit(Some(1)), free);
+        let metrics = Arc::new(Metrics::new());
+        metrics.record_calibration(Some(1.0));
+        // calibrated but no pricing installed: still unpriced
+        let unpriced = ModelAdmission::new(
+            AdmissionConfig::default(),
+            1,
+            2_000,
+            Some(1),
+            metrics,
+            Arc::new(AtomicU64::new(0)),
+        );
+        assert_eq!(unpriced.admit(Some(1)), free);
+        assert_eq!(unpriced.committed_us(), 0);
+    }
+
+    #[test]
+    fn deadline_shed_fires_exactly_at_the_prediction() {
+        let m = model(AdmissionConfig::default(), 1, None, Some(1.0));
+        // empty backlog: predicted = 0 + 2_000 + 8_100
+        assert_eq!(m.admit(Some(10_099)), AdmitDecision::ShedDeadline { predicted_us: 10_100 });
+        assert_eq!(
+            m.admit(Some(10_100)),
+            AdmitDecision::Admit { cost_us: 1_100, predicted_us: 10_100 }
+        );
+        // backlog of one committed request shifts the prediction
+        assert_eq!(
+            m.admit(Some(11_199)),
+            AdmitDecision::ShedDeadline { predicted_us: 11_200 }
+        );
+        assert_eq!(m.shed_counts(), (2, 0, 0));
+        m.release(1_100);
+        assert_eq!(m.committed_us(), 0);
+    }
+
+    #[test]
+    fn quota_always_admits_the_first_outstanding_request() {
+        let m = model(AdmissionConfig::default(), 1, Some(1), Some(1.0));
+        let first = m.admit(None);
+        assert!(matches!(first, AdmitDecision::Admit { cost_us: 1_100, .. }), "{first:?}");
+        assert!(matches!(
+            m.admit(None),
+            AdmitDecision::Shed { cause: ShedCause::Quota, .. }
+        ));
+        m.release(1_100);
+        assert!(matches!(m.admit(None), AdmitDecision::Admit { .. }));
+        assert_eq!(m.shed_counts(), (0, 1, 0));
+    }
+
+    #[test]
+    fn global_backlog_spans_models() {
+        let global = Arc::new(AtomicU64::new(0));
+        let cfg = AdmissionConfig { enabled: true, max_backlog_us: Some(2_000) };
+        let mk = || {
+            let metrics = Arc::new(Metrics::new());
+            metrics.record_calibration(Some(1.0));
+            let m = ModelAdmission::new(cfg, 1, 2_000, None, metrics, Arc::clone(&global));
+            m.set_pricing(&[(1, 1_100.0)]);
+            m
+        };
+        let (a, b) = (mk(), mk());
+        assert!(matches!(a.admit(None), AdmitDecision::Admit { cost_us: 1_100, .. }));
+        // b's own backlog is empty, but the shared budget is charged
+        assert!(matches!(
+            b.admit(None),
+            AdmitDecision::Shed { cause: ShedCause::Backlog, .. }
+        ));
+        a.release(1_100);
+        assert!(matches!(b.admit(None), AdmitDecision::Admit { .. }));
+        assert_eq!(b.shed_counts(), (0, 0, 1));
+    }
+
+    #[test]
+    fn replicas_divide_the_backlog_prediction() {
+        let m = model(AdmissionConfig::default(), 2, None, Some(1.0));
+        for _ in 0..2 {
+            assert!(matches!(m.admit(None), AdmitDecision::Admit { .. }));
+        }
+        // committed 2_200 over 2 replicas: predicted = 1_100 + 2_000 + 8_100
+        assert_eq!(
+            m.admit(Some(11_200)),
+            AdmitDecision::Admit { cost_us: 1_100, predicted_us: 11_200 }
+        );
+    }
+}

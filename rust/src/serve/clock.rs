@@ -1,0 +1,114 @@
+//! Time as a seam: the serving layer reads *microseconds since server
+//! start* through a [`Clock`] trait instead of calling
+//! [`std::time::Instant::now`] directly. Production servers run on
+//! [`SystemClock`]; tests and the deterministic discrete-event harness
+//! ([`crate::serve::sim::SimServer`]) inject a [`VirtualClock`] they
+//! advance by hand, so deadline expiry, batching windows, admission
+//! predictions, and throughput windows are all reproducible — no
+//! sleeps, no wall-clock tolerances.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Monotonic microsecond source for the serving layer. Implementations
+/// must be cheap (called on every submit/flush) and monotonic per
+/// instance; absolute zero is the clock's own epoch, not Unix time.
+pub trait Clock: Send + Sync + std::fmt::Debug {
+    /// Microseconds elapsed since this clock's epoch.
+    fn now_us(&self) -> u64;
+}
+
+/// Shared handle servers and workers thread around.
+pub type SharedClock = Arc<dyn Clock>;
+
+/// Wall-clock time, epoch = construction. The default for real servers.
+#[derive(Debug)]
+pub struct SystemClock {
+    epoch: Instant,
+}
+
+impl SystemClock {
+    /// A system clock whose zero is "now".
+    pub fn new() -> SystemClock {
+        SystemClock { epoch: Instant::now() }
+    }
+}
+
+impl Default for SystemClock {
+    fn default() -> SystemClock {
+        SystemClock::new()
+    }
+}
+
+impl Clock for SystemClock {
+    fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+}
+
+/// A fresh [`SystemClock`] behind the shared handle.
+pub fn system() -> SharedClock {
+    Arc::new(SystemClock::new())
+}
+
+/// Hand-advanced clock for deterministic tests. Cloning shares the
+/// underlying counter, so a test can hold one handle while the server
+/// under test reads another. Time never moves unless the test moves it.
+#[derive(Debug, Clone, Default)]
+pub struct VirtualClock {
+    us: Arc<AtomicU64>,
+}
+
+impl VirtualClock {
+    /// A virtual clock at t = 0 µs.
+    pub fn new() -> VirtualClock {
+        VirtualClock::default()
+    }
+
+    /// Move time forward by `us` microseconds; returns the new time.
+    pub fn advance(&self, us: u64) -> u64 {
+        self.us.fetch_add(us, Ordering::SeqCst) + us
+    }
+
+    /// Jump to an absolute time. Monotonicity is the caller's contract:
+    /// the discrete-event harness only ever sets nondecreasing values.
+    pub fn set_us(&self, us: u64) {
+        self.us.store(us, Ordering::SeqCst);
+    }
+
+    /// Shared-handle form of this clock.
+    pub fn shared(&self) -> SharedClock {
+        Arc::new(self.clone())
+    }
+}
+
+impl Clock for VirtualClock {
+    fn now_us(&self) -> u64 {
+        self.us.load(Ordering::SeqCst)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn virtual_clock_is_shared_across_clones() {
+        let c = VirtualClock::new();
+        let view: SharedClock = c.shared();
+        assert_eq!(view.now_us(), 0);
+        assert_eq!(c.advance(250), 250);
+        assert_eq!(view.now_us(), 250);
+        c.set_us(1_000_000);
+        assert_eq!(view.now_us(), 1_000_000);
+    }
+
+    #[test]
+    fn system_clock_is_monotonic_from_its_own_epoch() {
+        let c = SystemClock::new();
+        let a = c.now_us();
+        let b = c.now_us();
+        assert!(b >= a);
+    }
+}

@@ -1,6 +1,7 @@
 //! Serving metrics: per-request latency histograms, queue-wait
 //! distribution, batch utilization, throughput, deadline misses broken
-//! down by cause — recorded per model, snapshotable for
+//! down by cause, admission shed counts, replica steals — recorded per
+//! model replica, snapshotable and **mergeable** for
 //! [`crate::serve::Server::stats`].
 //!
 //! Everything here is lock-free: counters are relaxed atomics and the
@@ -11,16 +12,27 @@
 //! for API compatibility, now derived from the histograms (exact
 //! count / mean / min / max, bucket-walk percentiles — see
 //! `docs/OBSERVABILITY.md` for the error bound).
+//!
+//! With replica sharding one logical model has one recorder per
+//! replica; [`MetricsSnapshot::merge`] combines them exactly
+//! (histograms add bucket-wise via [`HistSnapshot::merge`] —
+//! associative and commutative, pinned against a single-recorder
+//! oracle in `rust/tests/observability.rs`). Time comes from the
+//! server's injectable [`Clock`], so virtual-clock tests get
+//! deterministic throughput windows too.
 
+use super::clock::{self, Clock, SharedClock};
 use crate::obs::{HistSnapshot, Log2Hist};
 use crate::util::stats::Summary;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::time::Instant;
 
-/// Lock-free per-model serving metrics; all recording takes `&self`.
+/// Lock-free per-model-replica serving metrics; all recording takes
+/// `&self`.
 #[derive(Debug)]
 pub struct Metrics {
-    started: Instant,
+    clock: SharedClock,
+    /// Clock reading at construction — the throughput window's origin.
+    started_us: u64,
     /// End-to-end request latency (enqueue → reply), µs.
     latency: Log2Hist,
     /// Exec time per batch run, µs.
@@ -38,6 +50,8 @@ pub struct Metrics {
     /// moment they arrived (budget below the smallest batch's estimate).
     deadline_misses_queue: AtomicU64,
     deadline_misses_infeasible: AtomicU64,
+    /// Queue-tail steals this replica performed (as the thief).
+    steals: AtomicU64,
     /// Current queue depth gauge (set by the worker each loop).
     queue_depth: AtomicU64,
     /// Scheduler units→µs calibration as f64 bits; 0 = unset (`None`).
@@ -48,22 +62,56 @@ pub struct Metrics {
 /// Plain-data view of one model's [`Metrics`] at a point in time — what
 /// [`crate::serve::Server::stats`] hands out per model, safe to hold
 /// indefinitely (the live metrics keep moving underneath).
-#[derive(Debug, Clone, PartialEq)]
+///
+/// The `shed_*`, `committed_us`, `quota_us`, and `quota_utilization`
+/// fields live on the admission controller, not the per-replica
+/// recorders; `Server::stats` stamps them onto the merged snapshot
+/// (raw [`Metrics::snapshot`]s report them as zero / `None`).
+#[derive(Debug, Clone, PartialEq, Default)]
 pub struct MetricsSnapshot {
     pub requests: u64,
     pub batches: u64,
     pub backend_errors: u64,
-    /// Total deadline misses (both causes) — the pre-obs field.
+    /// Total deadline misses (both causes) — the pre-obs field. Does
+    /// NOT include admission sheds: those requests never queued.
     pub deadline_misses: u64,
     /// ... broken down: expired while waiting in the queue,
     pub deadline_misses_queue: u64,
     /// ... vs infeasible on arrival (budget can't fit any batch).
     pub deadline_misses_infeasible: u64,
-    /// Queue depth at snapshot time (requests waiting, gauge).
+    /// Requests refused at enqueue because the admission prediction said
+    /// the deadline could not be met (answered `ServeError::Deadline`
+    /// with `waited_us == 0`).
+    pub shed_deadline: u64,
+    /// Requests refused at enqueue by the model's `quota_us` budget.
+    pub shed_quota: u64,
+    /// Requests refused at enqueue by the global `max_backlog_us` budget.
+    pub shed_backlog: u64,
+    /// Outstanding admitted-but-unanswered committed work, µs.
+    pub committed_us: u64,
+    /// The model's configured committed-work quota, if any.
+    pub quota_us: Option<u64>,
+    /// `committed_us / quota_us` at snapshot time (`None` without a
+    /// quota).
+    pub quota_utilization: Option<f64>,
+    /// Worker replicas merged into this snapshot (1 for a raw
+    /// single-recorder snapshot).
+    pub replicas: u64,
+    /// Queue-tail steals between replicas (thief-side count).
+    pub steals: u64,
+    /// Queue depth at snapshot time (requests waiting, gauge; summed
+    /// across replicas in a merged snapshot).
     pub queue_depth: u64,
+    /// Raw slot accounting behind `batch_utilization` (kept so merges
+    /// can recompute the ratio exactly).
+    pub used_slots: u64,
+    pub total_slots: u64,
     /// Fraction of executed batch slots carrying real requests
     /// (0.0 when nothing executed yet).
     pub batch_utilization: f64,
+    /// Seconds covered by this snapshot's throughput window (clock time
+    /// since metrics start; max across replicas in a merged snapshot).
+    pub window_s: f64,
     /// Served requests per second over the window since metrics start
     /// (0.0 when nothing served or the window has zero width).
     pub throughput_rps: f64,
@@ -80,10 +128,20 @@ pub struct MetricsSnapshot {
 }
 
 impl Metrics {
+    /// A recorder on the wall clock (its own epoch).
     #[allow(clippy::new_without_default)]
     pub fn new() -> Metrics {
+        Metrics::with_clock(clock::system())
+    }
+
+    /// A recorder whose throughput window runs on an injected clock —
+    /// the server passes its own, so virtual-clock tests see
+    /// deterministic windows.
+    pub fn with_clock(clock: SharedClock) -> Metrics {
+        let started_us = clock.now_us();
         Metrics {
-            started: Instant::now(),
+            clock,
+            started_us,
             latency: Log2Hist::new(),
             exec: Log2Hist::new(),
             queue_wait: Log2Hist::new(),
@@ -94,6 +152,7 @@ impl Metrics {
             backend_errors: AtomicU64::new(0),
             deadline_misses_queue: AtomicU64::new(0),
             deadline_misses_infeasible: AtomicU64::new(0),
+            steals: AtomicU64::new(0),
             queue_depth: AtomicU64::new(0),
             us_per_unit_bits: AtomicU64::new(0),
         }
@@ -151,6 +210,11 @@ impl Metrics {
         self.deadline_misses_queue.fetch_add(n, Ordering::Relaxed);
     }
 
+    /// Count one queue-tail steal this replica performed as the thief.
+    pub fn record_steal(&self) {
+        self.steals.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// Update the queue-depth gauge (worker, once per loop).
     pub fn set_queue_depth(&self, depth: usize) {
         self.queue_depth.store(depth as u64, Ordering::Relaxed);
@@ -181,6 +245,10 @@ impl Metrics {
         self.deadline_misses_infeasible.load(Ordering::Relaxed)
     }
 
+    pub fn steals(&self) -> u64 {
+        self.steals.load(Ordering::Relaxed)
+    }
+
     pub fn queue_depth(&self) -> u64 {
         self.queue_depth.load(Ordering::Relaxed)
     }
@@ -204,11 +272,16 @@ impl Metrics {
         self.queue_wait.snapshot().map(|h| h.summary())
     }
 
+    /// Seconds since this recorder was constructed, on its clock.
+    pub fn window_s(&self) -> f64 {
+        self.clock.now_us().saturating_sub(self.started_us) as f64 / 1e6
+    }
+
     /// Requests per second since start. 0.0 when nothing has been served
-    /// yet or the elapsed window has zero width (coarse clocks right
-    /// after startup) — never a division-blowup artifact.
+    /// yet or the elapsed window has zero width (coarse or frozen clocks
+    /// right after startup) — never a division-blowup artifact.
     pub fn throughput_rps(&self) -> f64 {
-        let secs = self.started.elapsed().as_secs_f64();
+        let secs = self.window_s();
         let requests = self.requests();
         if requests == 0 || secs <= 0.0 {
             return 0.0;
@@ -239,8 +312,19 @@ impl Metrics {
             deadline_misses: self.deadline_misses(),
             deadline_misses_queue: self.deadline_misses_queue(),
             deadline_misses_infeasible: self.deadline_misses_infeasible(),
+            shed_deadline: 0,
+            shed_quota: 0,
+            shed_backlog: 0,
+            committed_us: 0,
+            quota_us: None,
+            quota_utilization: None,
+            replicas: 1,
+            steals: self.steals(),
             queue_depth: self.queue_depth(),
+            used_slots: self.used_slots.load(Ordering::Relaxed),
+            total_slots: self.total_slots.load(Ordering::Relaxed),
             batch_utilization: self.batch_utilization(),
+            window_s: self.window_s(),
             throughput_rps: self.throughput_rps(),
             latency: latency_hist.as_ref().map(|h| h.summary()),
             exec: exec_hist.as_ref().map(|h| h.summary()),
@@ -253,22 +337,129 @@ impl Metrics {
     }
 
     pub fn report(&self) -> String {
+        self.snapshot().report()
+    }
+}
+
+fn merge_hists(
+    a: Option<HistSnapshot>,
+    b: Option<HistSnapshot>,
+) -> Option<HistSnapshot> {
+    match (a, b) {
+        (Some(x), Some(y)) => Some(x.merge(&y)),
+        (x, y) => x.or(y),
+    }
+}
+
+impl MetricsSnapshot {
+    /// Requests refused at enqueue, across all three shed causes.
+    pub fn shed_total(&self) -> u64 {
+        self.shed_deadline + self.shed_quota + self.shed_backlog
+    }
+
+    /// Combine two snapshots as if one recorder had seen both replicas'
+    /// traffic: counts add, histograms merge bucket-wise (exactly —
+    /// see [`HistSnapshot::merge`]), summaries and ratios are recomputed
+    /// from the merged data, the throughput window is the longest of the
+    /// two, and the calibration keeps the first present value (replicas
+    /// of one model converge to the same scale). Associative and
+    /// commutative.
+    pub fn merge(&self, other: &MetricsSnapshot) -> MetricsSnapshot {
+        let latency_hist = merge_hists(self.latency_hist.clone(), other.latency_hist.clone());
+        let exec_hist = merge_hists(self.exec_hist.clone(), other.exec_hist.clone());
+        let queue_wait_hist =
+            merge_hists(self.queue_wait_hist.clone(), other.queue_wait_hist.clone());
+        let requests = self.requests + other.requests;
+        let used_slots = self.used_slots + other.used_slots;
+        let total_slots = self.total_slots + other.total_slots;
+        let window_s = self.window_s.max(other.window_s);
+        let committed_us = self.committed_us + other.committed_us;
+        let quota_us = self.quota_us.or(other.quota_us);
+        MetricsSnapshot {
+            requests,
+            batches: self.batches + other.batches,
+            backend_errors: self.backend_errors + other.backend_errors,
+            deadline_misses: self.deadline_misses + other.deadline_misses,
+            deadline_misses_queue: self.deadline_misses_queue + other.deadline_misses_queue,
+            deadline_misses_infeasible: self.deadline_misses_infeasible
+                + other.deadline_misses_infeasible,
+            shed_deadline: self.shed_deadline + other.shed_deadline,
+            shed_quota: self.shed_quota + other.shed_quota,
+            shed_backlog: self.shed_backlog + other.shed_backlog,
+            committed_us,
+            quota_us,
+            quota_utilization: quota_us
+                .map(|q| if q == 0 { 0.0 } else { committed_us as f64 / q as f64 }),
+            replicas: self.replicas + other.replicas,
+            steals: self.steals + other.steals,
+            queue_depth: self.queue_depth + other.queue_depth,
+            used_slots,
+            total_slots,
+            batch_utilization: if total_slots == 0 {
+                0.0
+            } else {
+                used_slots as f64 / total_slots as f64
+            },
+            window_s,
+            throughput_rps: if requests == 0 || window_s <= 0.0 {
+                0.0
+            } else {
+                requests as f64 / window_s
+            },
+            latency: latency_hist.as_ref().map(|h| h.summary()),
+            exec: exec_hist.as_ref().map(|h| h.summary()),
+            queue_wait: queue_wait_hist.as_ref().map(|h| h.summary()),
+            latency_hist,
+            exec_hist,
+            queue_wait_hist,
+            us_per_unit: self.us_per_unit.or(other.us_per_unit),
+        }
+    }
+
+    /// Fold any number of snapshots with [`MetricsSnapshot::merge`];
+    /// `None` for an empty iterator.
+    pub fn merge_all(snaps: impl IntoIterator<Item = MetricsSnapshot>) -> Option<MetricsSnapshot> {
+        snaps.into_iter().reduce(|a, b| a.merge(&b))
+    }
+
+    /// Human-readable multi-line report (the `cadnn serve` stats block).
+    pub fn report(&self) -> String {
         let mut out = String::new();
         out.push_str(&format!(
             "requests={} batches={} errors={} deadline_misses={} \
              (queue={} infeasible={}) queue_depth={} \
              throughput={:.1} req/s batch_util={:.0}%\n",
-            self.requests(),
-            self.batches(),
-            self.backend_errors(),
-            self.deadline_misses(),
-            self.deadline_misses_queue(),
-            self.deadline_misses_infeasible(),
-            self.queue_depth(),
-            self.throughput_rps(),
-            self.batch_utilization() * 100.0
+            self.requests,
+            self.batches,
+            self.backend_errors,
+            self.deadline_misses,
+            self.deadline_misses_queue,
+            self.deadline_misses_infeasible,
+            self.queue_depth,
+            self.throughput_rps,
+            self.batch_utilization * 100.0
         ));
-        if let Some(s) = self.latency_summary() {
+        if self.shed_total() > 0 || self.quota_us.is_some() {
+            out.push_str(&format!(
+                "shed={} (deadline={} quota={} backlog={}) committed={}us",
+                self.shed_total(),
+                self.shed_deadline,
+                self.shed_quota,
+                self.shed_backlog,
+                self.committed_us
+            ));
+            if let (Some(q), Some(u)) = (self.quota_us, self.quota_utilization) {
+                out.push_str(&format!(" quota={q}us quota_util={:.0}%", u * 100.0));
+            }
+            out.push('\n');
+        }
+        if self.replicas > 1 || self.steals > 0 {
+            out.push_str(&format!(
+                "replicas={} steals={}\n",
+                self.replicas, self.steals
+            ));
+        }
+        if let Some(s) = &self.latency {
             out.push_str(&format!(
                 "latency  p50={:.1}ms p95={:.1}ms p99={:.1}ms max={:.1}ms\n",
                 s.p50 / 1e3,
@@ -277,7 +468,7 @@ impl Metrics {
                 s.max / 1e3
             ));
         }
-        if let Some(s) = self.queue_wait_summary() {
+        if let Some(s) = &self.queue_wait {
             out.push_str(&format!(
                 "queue    p50={:.1}ms p95={:.1}ms p99={:.1}ms max={:.1}ms\n",
                 s.p50 / 1e3,
@@ -286,14 +477,14 @@ impl Metrics {
                 s.max / 1e3
             ));
         }
-        if let Some(s) = self.exec_summary() {
+        if let Some(s) = &self.exec {
             out.push_str(&format!(
                 "exec     p50={:.1}ms mean={:.1}ms\n",
                 s.p50 / 1e3,
                 s.mean / 1e3
             ));
         }
-        if let Some(u) = self.us_per_unit() {
+        if let Some(u) = self.us_per_unit {
             out.push_str(&format!("calib    us_per_unit={u:.4}\n"));
         }
         out
@@ -303,6 +494,7 @@ impl Metrics {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::serve::clock::VirtualClock;
 
     #[test]
     fn records_and_reports() {
@@ -346,6 +538,7 @@ mod tests {
         assert_eq!(s.backend_errors, 3);
         assert_eq!(s.deadline_misses, 0);
         assert_eq!(s.batch_utilization, 1.0);
+        assert_eq!(s.replicas, 1);
         assert_eq!(s.latency.as_ref().unwrap().count, 1);
         // the snapshot is detached: later recording doesn't change it
         m.record_errors(1);
@@ -394,5 +587,65 @@ mod tests {
         assert_eq!(m.us_per_unit(), Some(0.0123));
         m.record_calibration(None);
         assert_eq!(m.us_per_unit(), None);
+    }
+
+    #[test]
+    fn virtual_clock_drives_the_throughput_window() {
+        let clock = VirtualClock::new();
+        let m = Metrics::with_clock(clock.shared());
+        m.record_request(100.0);
+        assert_eq!(m.throughput_rps(), 0.0, "frozen clock: zero-width window");
+        clock.advance(2_000_000);
+        assert_eq!(m.window_s(), 2.0);
+        assert_eq!(m.throughput_rps(), 0.5, "1 request over exactly 2 virtual seconds");
+    }
+
+    #[test]
+    fn merged_snapshot_adds_counts_and_recomputes_ratios() {
+        let clock = VirtualClock::new();
+        let (a, b) = (
+            Metrics::with_clock(clock.shared()),
+            Metrics::with_clock(clock.shared()),
+        );
+        a.record_request(1_000.0);
+        a.record_batch(4, 2, 500.0);
+        a.record_steal();
+        b.record_request(3_000.0);
+        b.record_request(5_000.0);
+        b.record_batch(4, 4, 700.0);
+        b.record_deadline_miss(false);
+        clock.advance(1_000_000);
+        let m = a.snapshot().merge(&b.snapshot());
+        assert_eq!(m.requests, 3);
+        assert_eq!(m.batches, 2);
+        assert_eq!(m.deadline_misses_queue, 1);
+        assert_eq!(m.replicas, 2);
+        assert_eq!(m.steals, 1);
+        assert_eq!(m.batch_utilization, 6.0 / 8.0);
+        assert_eq!(m.window_s, 1.0);
+        assert_eq!(m.throughput_rps, 3.0);
+        assert_eq!(m.latency.as_ref().unwrap().count, 3);
+        assert_eq!(m.latency.as_ref().unwrap().min, 1_000.0);
+        assert_eq!(m.latency.as_ref().unwrap().max, 5_000.0);
+        // merge is commutative (field for field)
+        assert_eq!(m, b.snapshot().merge(&a.snapshot()));
+    }
+
+    #[test]
+    fn merge_all_folds_and_report_shows_sheds() {
+        assert!(MetricsSnapshot::merge_all(Vec::new()).is_none());
+        let m = Metrics::new();
+        m.record_request(100.0);
+        let mut s = MetricsSnapshot::merge_all([m.snapshot()]).unwrap();
+        s.shed_deadline = 2;
+        s.shed_quota = 1;
+        s.quota_us = Some(10_000);
+        s.committed_us = 2_500;
+        s.quota_utilization = Some(0.25);
+        assert_eq!(s.shed_total(), 3);
+        let rpt = s.report();
+        assert!(rpt.contains("shed=3"), "{rpt}");
+        assert!(rpt.contains("deadline=2"), "{rpt}");
+        assert!(rpt.contains("quota_util=25%"), "{rpt}");
     }
 }

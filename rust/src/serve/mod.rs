@@ -1,22 +1,37 @@
 //! Multi-model serving: named engines behind one [`Server`], a request
-//! queue per model, and a planner-informed, deadline-aware dynamic
-//! batcher.
+//! queue per model replica, and a planner-informed, deadline-aware
+//! dynamic batcher with fleet-scale admission control.
 //!
 //! The paper's real-time claim (26 ms ResNet-50) is a statement about
 //! *latency under load*, so the serving layer must understand what a
-//! batch costs before it commits to one. This module closes that loop:
-//! every registered model carries its [`crate::planner::ExecPlan`], the
-//! plan prices each batch variant
+//! batch costs before it commits to one. This module closes that loop
+//! twice: per batch, every registered model carries its
+//! [`crate::planner::ExecPlan`], the plan prices each batch variant
 //! ([`crate::planner::ExecPlan::cost_at`]), and the [`Scheduler`] picks
 //! the batch that maximizes throughput *subject to the tightest pending
-//! request's deadline* — instead of greedily filling to `max_batch`.
+//! request's deadline*; per request, the same price × calibration feeds
+//! a global [`admission`] controller that refuses work **at enqueue**
+//! when the committed backlog says a deadline cannot be met (or a
+//! model's quota / the server-wide backlog budget is full) — graceful
+//! shedding instead of queueing to death.
+//!
+//! One logical model may be backed by `N` worker **replicas**
+//! ([`QueueConfig::replicas`]) sharing the engine's `PlanCache`d build:
+//! submits go to the shortest replica queue, and an idle replica steals
+//! the tail half of the longest sibling queue, so a burst dispatched to
+//! one queue cannot strand work while other replicas sit idle.
 //!
 //! ```ignore
-//! use cadnn::serve::{QueueConfig, ServeRequest, Server};
+//! use cadnn::serve::{AdmissionConfig, QueueConfig, ServeRequest, Server};
 //!
 //! let server = Server::builder()
 //!     .engine("resnet50", &resnet)            // default queue config
-//!     .engine_with("lenet5", &lenet, QueueConfig::default())
+//!     .engine_with(
+//!         "lenet5",
+//!         &lenet,
+//!         QueueConfig { replicas: 2, quota_us: Some(50_000), ..QueueConfig::default() },
+//!     )
+//!     .admission(AdmissionConfig::default())
 //!     .build()?;
 //!
 //! let resp = server.infer(
@@ -24,34 +39,47 @@
 //! )?;
 //! match resp.outcome {
 //!     Ok(logits) => println!("top-1 {:?}", resp.topk),
-//!     Err(e) => eprintln!("{e}"),             // Deadline | Backend
+//!     Err(e) => eprintln!("{e}"),             // Deadline | Shed | Backend
 //! }
-//! let stats = server.stats();                 // per-model snapshots
+//! let stats = server.stats();                 // merged per-model snapshots
 //! server.shutdown()?;
 //! ```
 //!
-//! Request lifecycle, deadline semantics, and the cost model are
-//! documented in `docs/SERVING.md`. The old single-model
+//! All deadline math runs on microseconds from an injectable
+//! [`clock::Clock`], and the batching/stealing/shedding pipeline is
+//! factored into pure helpers shared with [`sim::SimServer`], a
+//! single-threaded discrete-event harness on a [`clock::VirtualClock`] —
+//! overload behavior is tested deterministically, with exact
+//! assertions and zero sleeps. Request lifecycle, deadline semantics,
+//! the shed taxonomy, and the cost model are documented in
+//! `docs/SERVING.md`. The old single-model
 //! [`crate::coordinator::Coordinator`] remains as a thin deprecated shim
 //! over this module.
 
+pub mod admission;
+pub mod clock;
 pub mod metrics;
 pub mod registry;
 pub mod scheduler;
+pub mod sim;
 
+pub use admission::{AdmissionConfig, AdmitDecision, ShedCause};
+pub use clock::{Clock, SharedClock, SystemClock, VirtualClock};
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use registry::{ModelEntry, Registry};
 pub use scheduler::{pick_batch, BatchPolicy, Scheduler};
+pub use sim::SimServer;
 
 use crate::api::Backend;
 use crate::error::CadnnError;
 use crate::obs::{self, ArgValue};
 use crate::planner::ExecPlan;
-use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use admission::ModelAdmission;
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
-use std::time::{Duration, Instant};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::time::Duration;
 
 /// Per-model queue/batcher knobs.
 #[derive(Debug, Clone, Copy)]
@@ -66,7 +94,8 @@ pub struct QueueConfig {
     pub fallback: BatchPolicy,
     /// Use the planner cost model for batch-size choice when the backend
     /// provides one. Off = always the plain `fallback` policy (the
-    /// pre-planner behavior, kept for A/B benchmarking).
+    /// pre-planner behavior, kept for A/B benchmarking). Also disables
+    /// admission pricing for this model (no cost model ⇒ unpriced).
     pub planned: bool,
     /// Seed the scheduler's units→µs scale (µs per plan cost unit) so a
     /// fresh process is deadline-accurate from its first batch. `None`
@@ -75,6 +104,15 @@ pub struct QueueConfig {
     /// manifest's `us_per_unit`), then to online learning. Ignored when
     /// `planned` is off.
     pub calibration: Option<f64>,
+    /// Worker replicas backing this logical model (min 1). Values > 1
+    /// require an engine-registered model: each replica clones the
+    /// [`crate::api::Engine`], sharing its built instances.
+    pub replicas: usize,
+    /// Per-model committed-work quota in µs: when the model's admitted
+    /// outstanding cost would exceed this, new requests are shed with
+    /// [`ServeError::Shed`] (`cause: Quota`). At least one outstanding
+    /// request is always admitted. `None` = unlimited.
+    pub quota_us: Option<u64>,
 }
 
 impl Default for QueueConfig {
@@ -85,6 +123,8 @@ impl Default for QueueConfig {
             fallback: BatchPolicy::PadToFit,
             planned: true,
             calibration: None,
+            replicas: 1,
+            quota_us: None,
         }
     }
 }
@@ -101,7 +141,9 @@ pub struct ServeRequest {
     /// when its deadline passes is answered with
     /// [`ServeError::Deadline`] instead of being executed; the scheduler
     /// also avoids batch sizes whose estimated run time would blow the
-    /// tightest queued deadline.
+    /// tightest queued deadline, and the admission controller sheds the
+    /// request up front when its completion prediction already exceeds
+    /// the budget.
     pub deadline_us: Option<u64>,
     /// Attach the top-k (class, logit) pairs to the response.
     pub topk: Option<usize>,
@@ -133,15 +175,27 @@ impl ServeRequest {
 pub enum ServeError {
     /// The backend rejected or failed the batch this request rode in.
     Backend(String),
-    /// The request's deadline passed while it was queued; it was never
-    /// executed. (A request that *starts* executing is always answered
-    /// with its logits — clients can compare `latency_us` against their
-    /// budget for the overran-while-running case.)
+    /// The request's deadline cannot be (or was not) met; it was never
+    /// executed. `waited_us == 0` means the admission controller shed it
+    /// at enqueue (predicted completion past the budget); `waited_us > 0`
+    /// means it expired in queue. (A request that *starts* executing is
+    /// always answered with its logits — clients can compare
+    /// `latency_us` against their budget for the overran-while-running
+    /// case.)
     Deadline {
         /// The request's deadline budget.
         deadline_us: u64,
         /// How long it had been queued when the miss was detected.
         waited_us: u64,
+    },
+    /// Refused at enqueue by quota/backlog accounting — the model's
+    /// `quota_us` or the server's `max_backlog_us` committed-work budget
+    /// was full. Never executed, never queued.
+    Shed {
+        /// Which budget refused it.
+        cause: ShedCause,
+        /// The admission controller's completion estimate at refusal.
+        predicted_us: u64,
     },
 }
 
@@ -152,6 +206,10 @@ impl std::fmt::Display for ServeError {
             ServeError::Deadline { deadline_us, waited_us } => write!(
                 f,
                 "deadline missed: budget {deadline_us}µs, waited {waited_us}µs"
+            ),
+            ServeError::Shed { cause, predicted_us } => write!(
+                f,
+                "shed ({cause}): predicted completion {predicted_us}µs"
             ),
         }
     }
@@ -188,20 +246,18 @@ impl ServeResponse {
     }
 }
 
-/// Queued request, inside the worker.
-struct Pending {
-    id: u64,
-    input: Vec<f32>,
-    enqueued: Instant,
-    deadline: Option<Instant>,
-    deadline_us: Option<u64>,
-    topk: Option<usize>,
-    reply: Sender<ServeResponse>,
-}
-
-enum Msg {
-    Req(Pending),
-    Shutdown,
+/// Queued request, inside a replica queue. All times are µs on the
+/// server's [`Clock`].
+pub(crate) struct Pending {
+    pub(crate) id: u64,
+    pub(crate) input: Vec<f32>,
+    pub(crate) enqueued_us: u64,
+    pub(crate) deadline_at_us: Option<u64>,
+    pub(crate) deadline_us: Option<u64>,
+    /// Commitment charged at admission; released at the terminal reply.
+    pub(crate) cost_us: u64,
+    pub(crate) topk: Option<usize>,
+    pub(crate) reply: Sender<ServeResponse>,
 }
 
 /// What a worker reports back once its backend is up.
@@ -213,10 +269,56 @@ struct ReadyInfo {
     plan_costs: Vec<(usize, f64)>,
 }
 
+/// One replica's FIFO queue + its worker's wakeup channel.
+struct ReplicaQueue {
+    q: Mutex<VecDeque<Pending>>,
+    cv: Condvar,
+    /// Mirror of `q.len()` for lock-free dispatch/steal victim choice.
+    depth: AtomicU64,
+}
+
+impl ReplicaQueue {
+    fn new() -> ReplicaQueue {
+        ReplicaQueue {
+            q: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            depth: AtomicU64::new(0),
+        }
+    }
+
+    fn lock(&self) -> MutexGuard<'_, VecDeque<Pending>> {
+        self.q.lock().unwrap_or_else(|e| e.into_inner())
+    }
+}
+
+/// One logical model's replica set.
+struct Shard {
+    replicas: Vec<Arc<ReplicaQueue>>,
+    shutdown: AtomicBool,
+}
+
+impl Shard {
+    fn new(n: usize) -> Shard {
+        Shard {
+            replicas: (0..n.max(1)).map(|_| Arc::new(ReplicaQueue::new())).collect(),
+            shutdown: AtomicBool::new(false),
+        }
+    }
+
+    fn signal_shutdown(&self) {
+        self.shutdown.store(true, Ordering::Release);
+        for rq in &self.replicas {
+            rq.cv.notify_all();
+        }
+    }
+}
+
 struct ModelHandle {
-    tx: Sender<Msg>,
-    worker: Option<std::thread::JoinHandle<Result<(), CadnnError>>>,
-    metrics: Arc<Metrics>,
+    shard: Arc<Shard>,
+    workers: Vec<std::thread::JoinHandle<Result<(), CadnnError>>>,
+    /// One metrics recorder per replica (index-aligned with the shard).
+    metrics: Vec<Arc<Metrics>>,
+    admission: Arc<ModelAdmission>,
     input_len: usize,
 }
 
@@ -230,10 +332,12 @@ struct ModelSpec {
 }
 
 /// Configure a [`Server`]: register models, then `build` to spawn one
-/// worker (queue + scheduler + metrics) per model.
+/// worker (queue + scheduler + metrics) per model replica.
 #[derive(Default)]
 pub struct ServerBuilder {
     specs: Vec<ModelSpec>,
+    clock: Option<SharedClock>,
+    admission: AdmissionConfig,
 }
 
 impl ServerBuilder {
@@ -261,8 +365,15 @@ impl ServerBuilder {
     }
 
     /// Register a backend built *inside* the worker thread (required for
-    /// backends whose handles are not `Send`, e.g. real PJRT).
-    pub fn backend_with<F>(mut self, name: impl Into<String>, factory: F, cfg: QueueConfig) -> ServerBuilder
+    /// backends whose handles are not `Send`, e.g. real PJRT). Limited
+    /// to `replicas == 1`: the factory runs once, so there is nothing to
+    /// clone a second replica from.
+    pub fn backend_with<F>(
+        mut self,
+        name: impl Into<String>,
+        factory: F,
+        cfg: QueueConfig,
+    ) -> ServerBuilder
     where
         F: FnOnce() -> Result<Box<dyn Backend>, CadnnError> + Send + 'static,
     {
@@ -275,47 +386,131 @@ impl ServerBuilder {
         self
     }
 
-    /// Spawn every model's worker and wait until each backend is up (so
-    /// client latency measurements see steady state and load errors
-    /// surface here).
+    /// Server-wide admission policy (default: enabled, no global
+    /// backlog cap).
+    pub fn admission(mut self, cfg: AdmissionConfig) -> ServerBuilder {
+        self.admission = cfg;
+        self
+    }
+
+    /// Inject the time source every queue/deadline/admission decision
+    /// reads (default: a fresh [`SystemClock`]). Threaded workers poll
+    /// in bounded slices, so a frozen [`VirtualClock`] cannot hang them —
+    /// but for fully deterministic virtual-time tests prefer
+    /// [`sim::SimServer`], which shares this module's pipeline helpers.
+    pub fn clock(mut self, clock: SharedClock) -> ServerBuilder {
+        self.clock = Some(clock);
+        self
+    }
+
+    /// Spawn every model's replica workers and wait until each backend
+    /// is up (so client latency measurements see steady state and load
+    /// errors surface here).
     pub fn build(self) -> Result<Server, CadnnError> {
         if self.specs.is_empty() {
             return Err(CadnnError::config("no models registered"));
         }
-        let mut handles = BTreeMap::new();
+        let clock = self.clock.unwrap_or_else(clock::system);
+        let global_committed = Arc::new(AtomicU64::new(0));
+        let mut handles: BTreeMap<String, ModelHandle> = BTreeMap::new();
         let mut registry = Registry::default();
+        // On any failure, tear down everything spawned so far: signal
+        // every shard, then join — condvar workers never exit on their
+        // own (there is no channel whose closure could stop them).
+        let fail = |handles: &mut BTreeMap<String, ModelHandle>, e: CadnnError| {
+            shutdown_handles(handles);
+            Err(e)
+        };
         for spec in self.specs {
             if handles.contains_key(&spec.name) {
-                return Err(CadnnError::config(format!(
-                    "model '{}' registered twice",
-                    spec.name
-                )));
+                return fail(
+                    &mut handles,
+                    CadnnError::config(format!("model '{}' registered twice", spec.name)),
+                );
             }
-            let (tx, rx) = channel::<Msg>();
-            let metrics = Arc::new(Metrics::new());
-            let m2 = metrics.clone();
-            let (ready_tx, ready_rx) = channel::<Result<ReadyInfo, CadnnError>>();
-            let name = spec.name.clone();
-            let cfg = spec.cfg;
-            let factory = spec.factory;
-            let worker = std::thread::Builder::new()
-                .name(format!("cadnn-serve-{name}"))
-                .spawn(move || worker_loop(name, factory, cfg, rx, m2, ready_tx))
-                .map_err(|e| CadnnError::execution(format!("spawn failed: {e}")))?;
-            let info = match ready_rx.recv() {
-                Ok(Ok(info)) => info,
-                Ok(Err(e)) => {
-                    let _ = worker.join();
-                    return Err(e);
-                }
-                Err(_) => {
-                    let _ = worker.join();
-                    return Err(CadnnError::execution(format!(
-                        "serve worker for '{}' died during startup",
+            let replicas = spec.cfg.replicas.max(1);
+            if replicas > 1 && spec.engine.is_none() {
+                return fail(
+                    &mut handles,
+                    CadnnError::config(format!(
+                        "model '{}': replicas > 1 requires an engine-registered model \
+                         (a backend factory runs once and cannot be cloned)",
                         spec.name
-                    )));
+                    )),
+                );
+            }
+            let shard = Arc::new(Shard::new(replicas));
+            let metrics: Vec<Arc<Metrics>> = (0..replicas)
+                .map(|_| Arc::new(Metrics::with_clock(Arc::clone(&clock))))
+                .collect();
+            let adm = Arc::new(ModelAdmission::new(
+                self.admission,
+                replicas,
+                spec.cfg.max_wait_us,
+                spec.cfg.quota_us,
+                Arc::clone(&metrics[0]),
+                Arc::clone(&global_committed),
+            ));
+            let mut factories: Vec<BackendFactory> = vec![spec.factory];
+            for _ in 1..replicas {
+                let e = spec.engine.clone().expect("checked above: replicas > 1 has an engine");
+                factories.push(Box::new(move || Ok(Box::new(e) as Box<dyn Backend>)));
+            }
+            let (ready_tx, ready_rx) = channel::<Result<ReadyInfo, CadnnError>>();
+            let mut workers = Vec::with_capacity(replicas);
+            for (r, factory) in factories.into_iter().enumerate() {
+                let ctx = WorkerCtx {
+                    model: spec.name.clone(),
+                    replica: r,
+                    cfg: spec.cfg,
+                    shard: Arc::clone(&shard),
+                    metrics: Arc::clone(&metrics[r]),
+                    clock: Arc::clone(&clock),
+                    admission: Arc::clone(&adm),
+                };
+                let ready = ready_tx.clone();
+                let w = std::thread::Builder::new()
+                    .name(format!("cadnn-serve-{}-{r}", spec.name))
+                    .spawn(move || worker_loop(ctx, factory, ready));
+                match w {
+                    Ok(w) => workers.push(w),
+                    Err(e) => {
+                        shard.signal_shutdown();
+                        for w in workers {
+                            let _ = w.join();
+                        }
+                        return fail(
+                            &mut handles,
+                            CadnnError::execution(format!("spawn failed: {e}")),
+                        );
+                    }
                 }
-            };
+            }
+            drop(ready_tx);
+            let mut info: Option<ReadyInfo> = None;
+            let mut first_err: Option<CadnnError> = None;
+            for _ in 0..replicas {
+                match ready_rx.recv() {
+                    Ok(Ok(i)) => info = info.or(Some(i)),
+                    Ok(Err(e)) => first_err = first_err.or(Some(e)),
+                    Err(_) => {
+                        first_err = first_err.or(Some(CadnnError::execution(format!(
+                            "serve worker for '{}' died during startup",
+                            spec.name
+                        ))))
+                    }
+                }
+            }
+            let handle = ModelHandle { shard, workers, metrics, admission: adm, input_len: 0 };
+            if let Some(e) = first_err {
+                handle.shard.signal_shutdown();
+                for w in handle.workers {
+                    let _ = w.join();
+                }
+                return fail(&mut handles, e);
+            }
+            let info = info.expect("no error implies every replica reported ready");
+            handle.admission.set_pricing(&info.plan_costs);
             let entry = ModelEntry {
                 name: spec.name.clone(),
                 engine: spec.engine,
@@ -324,24 +519,52 @@ impl ServerBuilder {
                 input_shape: info.input_shape,
                 classes: info.classes,
                 batch_sizes: info.batch_sizes,
+                replicas,
             };
             let input_len = entry.input_len();
             registry.insert(entry);
-            handles.insert(
-                spec.name,
-                ModelHandle { tx, worker: Some(worker), metrics, input_len },
-            );
+            handles.insert(spec.name, ModelHandle { input_len, ..handle });
         }
-        Ok(Server { handles, registry, next_id: AtomicU64::new(1) })
+        Ok(Server { handles, registry, next_id: AtomicU64::new(1), clock })
     }
 }
 
+/// Signal + join every handle's workers (build-failure path, shutdown,
+/// and Drop all funnel here). Idempotent: joined workers are drained.
+fn shutdown_handles(handles: &mut BTreeMap<String, ModelHandle>) -> Result<(), CadnnError> {
+    for h in handles.values() {
+        h.shard.signal_shutdown();
+    }
+    let mut result = Ok(());
+    for (name, h) in handles.iter_mut() {
+        for w in h.workers.drain(..) {
+            match w.join() {
+                Ok(r) => {
+                    if result.is_ok() {
+                        if let Err(e) = r {
+                            result = Err(e);
+                        }
+                    }
+                }
+                Err(_) => {
+                    if result.is_ok() {
+                        result =
+                            Err(CadnnError::execution(format!("worker for '{name}' panicked")));
+                    }
+                }
+            }
+        }
+    }
+    result
+}
+
 /// Multi-model serving front: owns the [`Registry`] and one worker
-/// (queue → scheduler → backend) per registered model.
+/// (queue → scheduler → backend) per registered model replica.
 pub struct Server {
     handles: BTreeMap<String, ModelHandle>,
     registry: Registry,
     next_id: AtomicU64,
+    clock: SharedClock,
 }
 
 impl Server {
@@ -369,25 +592,45 @@ impl Server {
         self.registry.get(model).map(|e| e.classes)
     }
 
-    /// One model's live metrics handle (the shim and the CLI report off
-    /// this). Lock-free: recording and reading both take `&self`, so
-    /// holding this never contends with the worker; prefer
-    /// [`Server::stats`] for point-in-time reads.
+    /// One model's live metrics handle — **replica 0's** recorder (exact
+    /// for single-replica models; the shim and the CLI report off this).
+    /// Lock-free: recording and reading both take `&self`, so holding
+    /// this never contends with the worker; prefer [`Server::stats`] for
+    /// point-in-time reads merged across replicas.
     pub fn metrics(&self, model: &str) -> Option<Arc<Metrics>> {
-        self.handles.get(model).map(|h| h.metrics.clone())
+        self.handles.get(model).map(|h| h.metrics[0].clone())
     }
 
-    /// Point-in-time per-model metrics snapshots.
+    /// One model's admission state: committed work, quota, shed counts.
+    pub fn admission(&self, model: &str) -> Option<&ModelAdmission> {
+        self.handles.get(model).map(|h| h.admission.as_ref())
+    }
+
+    /// Per-replica raw snapshots for one model (index = replica).
+    pub fn replica_stats(&self, model: &str) -> Option<Vec<MetricsSnapshot>> {
+        self.handles
+            .get(model)
+            .map(|h| h.metrics.iter().map(|m| m.snapshot()).collect())
+    }
+
+    /// Point-in-time per-model metrics snapshots: replica recorders
+    /// merged (histogram buckets added, rates recomputed), admission
+    /// accounting (shed splits, quota utilization) stamped on top.
     pub fn stats(&self) -> BTreeMap<String, MetricsSnapshot> {
         self.handles
             .iter()
-            .map(|(name, h)| (name.clone(), h.metrics.snapshot()))
+            .map(|(name, h)| {
+                let merged = MetricsSnapshot::merge_all(h.metrics.iter().map(|m| m.snapshot()))
+                    .unwrap_or_default();
+                (name.clone(), stamp_admission(merged, &h.admission))
+            })
             .collect()
     }
 
     /// Submit one request; returns a receiver for its response. Routing
-    /// and input-length errors surface synchronously; deadline misses
-    /// and backend failures arrive as explicit response outcomes.
+    /// and input-length errors surface synchronously; admission sheds,
+    /// deadline misses, and backend failures arrive as explicit response
+    /// outcomes.
     pub fn submit(&self, req: ServeRequest) -> Result<Receiver<ServeResponse>, CadnnError> {
         let handle = self
             .handles
@@ -405,20 +648,36 @@ impl Server {
         }
         let (rtx, rrx) = channel();
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let enqueued = Instant::now();
+        let cost_us = match handle.admission.admit(req.deadline_us) {
+            AdmitDecision::Admit { cost_us, .. } => cost_us,
+            decision => {
+                let _ = rtx.send(shed_response(&req.model, id, req.deadline_us, decision));
+                return Ok(rrx);
+            }
+        };
+        let enqueued_us = self.clock.now_us();
         let pending = Pending {
             id,
             input: req.input,
-            enqueued,
-            deadline: req.deadline_us.map(|us| enqueued + Duration::from_micros(us)),
+            enqueued_us,
+            deadline_at_us: req.deadline_us.map(|us| enqueued_us.saturating_add(us)),
             deadline_us: req.deadline_us,
+            cost_us,
             topk: req.topk,
             reply: rtx,
         };
-        handle
-            .tx
-            .send(Msg::Req(pending))
-            .map_err(|_| CadnnError::execution(format!("model '{}' stopped", req.model)))?;
+        // dispatch to the shortest replica queue (ties: lowest index)
+        let shard = &handle.shard;
+        let r = (0..shard.replicas.len())
+            .min_by_key(|&i| shard.replicas[i].depth.load(Ordering::Acquire))
+            .unwrap_or(0);
+        let rq = &shard.replicas[r];
+        {
+            let mut q = rq.lock();
+            q.push_back(pending);
+            rq.depth.store(q.len() as u64, Ordering::Release);
+        }
+        rq.cv.notify_one();
         Ok(rrx)
     }
 
@@ -433,53 +692,89 @@ impl Server {
     /// are signalled before any is joined, so the total shutdown time is
     /// the slowest model's drain, not the sum of all drains.
     pub fn shutdown(mut self) -> Result<(), CadnnError> {
-        for h in self.handles.values() {
-            let _ = h.tx.send(Msg::Shutdown);
-        }
-        let mut result = Ok(());
-        for (name, h) in self.handles.iter_mut() {
-            if let Some(w) = h.worker.take() {
-                match w.join() {
-                    Ok(r) => {
-                        if result.is_ok() {
-                            if let Err(e) = r {
-                                result = Err(e);
-                            }
-                        }
-                    }
-                    Err(_) => {
-                        if result.is_ok() {
-                            result = Err(CadnnError::execution(format!(
-                                "worker for '{name}' panicked"
-                            )));
-                        }
-                    }
-                }
-            }
-        }
-        result
+        shutdown_handles(&mut self.handles)
     }
 }
 
 impl Drop for Server {
     fn drop(&mut self) {
-        for h in self.handles.values() {
-            let _ = h.tx.send(Msg::Shutdown);
-        }
-        for h in self.handles.values_mut() {
-            if let Some(w) = h.worker.take() {
-                let _ = w.join();
-            }
-        }
+        let _ = shutdown_handles(&mut self.handles);
     }
 }
 
-fn worker_loop(
+/// Stamp one model's admission accounting onto its merged snapshot.
+pub(crate) fn stamp_admission(mut snap: MetricsSnapshot, adm: &ModelAdmission) -> MetricsSnapshot {
+    let (sd, sq, sb) = adm.shed_counts();
+    snap.shed_deadline = sd;
+    snap.shed_quota = sq;
+    snap.shed_backlog = sb;
+    snap.committed_us = adm.committed_us();
+    snap.quota_us = adm.quota_us();
+    snap.quota_utilization = adm
+        .quota_us()
+        .map(|q| if q == 0 { 0.0 } else { snap.committed_us as f64 / q as f64 });
+    snap
+}
+
+/// The immediate reply for a request refused at enqueue, plus its
+/// shed-decision span.
+pub(crate) fn shed_response(
+    model: &str,
+    id: u64,
+    deadline_us: Option<u64>,
+    decision: AdmitDecision,
+) -> ServeResponse {
+    let (outcome, cause, predicted_us) = match decision {
+        AdmitDecision::ShedDeadline { predicted_us } => (
+            Err(ServeError::Deadline { deadline_us: deadline_us.unwrap_or(0), waited_us: 0 }),
+            "deadline",
+            predicted_us,
+        ),
+        AdmitDecision::Shed { cause, predicted_us } => {
+            (Err(ServeError::Shed { cause, predicted_us }), match cause {
+                ShedCause::Quota => "quota",
+                ShedCause::Backlog => "backlog",
+            }, predicted_us)
+        }
+        AdmitDecision::Admit { .. } => unreachable!("admitted requests are not shed replies"),
+    };
+    if obs::on() {
+        obs::record_span(
+            obs::CAT_SERVE,
+            "request".to_string(),
+            obs::now_us(),
+            0.0,
+            vec![
+                ("model", ArgValue::Str(model.to_string())),
+                ("id", ArgValue::Num(id as f64)),
+                ("outcome", ArgValue::Str("shed".to_string())),
+                ("cause", ArgValue::Str(cause.to_string())),
+                ("predicted_us", ArgValue::Num(predicted_us as f64)),
+            ],
+        );
+    }
+    ServeResponse { id, model: model.to_string(), outcome, topk: None, latency_us: 0.0, batch: 0 }
+}
+
+/// Everything a replica worker thread needs, bundled.
+struct WorkerCtx {
     model: String,
-    factory: BackendFactory,
+    replica: usize,
     cfg: QueueConfig,
-    rx: Receiver<Msg>,
+    shard: Arc<Shard>,
     metrics: Arc<Metrics>,
+    clock: SharedClock,
+    admission: Arc<ModelAdmission>,
+}
+
+/// Threaded workers poll in bounded slices instead of waiting the full
+/// batching window: keeps them responsive to steal opportunities and
+/// shutdown, and keeps a frozen [`VirtualClock`] from hanging them.
+const WORKER_POLL: Duration = Duration::from_millis(5);
+
+fn worker_loop(
+    ctx: WorkerCtx,
+    factory: BackendFactory,
     ready: Sender<Result<ReadyInfo, CadnnError>>,
 ) -> Result<(), CadnnError> {
     // Backend objects are created inside the worker thread (no Send bound
@@ -501,17 +796,19 @@ fn worker_loop(
     let input_shape = backend.input_shape().to_vec();
     let per_image: usize = input_shape.iter().product();
     let classes = backend.classes();
-    let plan_costs = if cfg.planned { backend.plan_costs() } else { Vec::new() };
-    let mut sched = Scheduler::new(batches.clone(), plan_costs.clone(), cfg.fallback);
-    if cfg.planned {
+    let plan_costs = if ctx.cfg.planned { backend.plan_costs() } else { Vec::new() };
+    let mut sched = Scheduler::new(batches.clone(), plan_costs.clone(), ctx.cfg.fallback);
+    if ctx.cfg.planned {
         // seed the units→µs scale: explicit config first, then the
         // backend's persisted calibration (artifact manifest) — a seeded
-        // scheduler is deadline-accurate before its first observation
-        if let Some(c) = cfg.calibration.or_else(|| backend.calibration()) {
+        // scheduler is deadline-accurate before its first observation,
+        // and a seeded replica-0 recorder activates admission pricing
+        // before the first batch
+        if let Some(c) = ctx.cfg.calibration.or_else(|| backend.calibration()) {
             sched.calibrate(c);
         }
     }
-    metrics.record_calibration(sched.us_per_unit());
+    ctx.metrics.record_calibration(sched.us_per_unit());
     let _ = ready.send(Ok(ReadyInfo {
         input_shape,
         classes,
@@ -520,58 +817,152 @@ fn worker_loop(
         plan_costs,
     }));
     let backend = backend.as_ref();
+    let rq = Arc::clone(&ctx.shard.replicas[ctx.replica]);
 
-    let mut queue: Vec<Pending> = Vec::new();
     loop {
-        // fill the queue: block for the first request, then drain the
-        // burst that arrived while the previous batch executed
-        if queue.is_empty() {
-            match rx.recv() {
-                Ok(Msg::Req(r)) => queue.push(r),
-                Ok(Msg::Shutdown) | Err(_) => return Ok(()),
-            }
-        }
-        while queue.len() < cfg.max_batch {
-            match rx.try_recv() {
-                Ok(Msg::Req(r)) => queue.push(r),
-                Ok(Msg::Shutdown) => {
-                    flush(&model, backend, &cfg, &mut sched, &mut queue, per_image, classes, &metrics);
-                    return Ok(());
-                }
-                Err(_) => break,
-            }
-        }
-        // batching window: wait for co-riders up to max_wait_us past the
-        // head-of-line arrival — but never past a pending deadline
-        let mut wait_until = queue[0].enqueued + Duration::from_micros(cfg.max_wait_us);
-        if let Some(d) = queue.iter().filter_map(|r| r.deadline).min() {
-            wait_until = wait_until.min(d);
-        }
-        while queue.len() < cfg.max_batch {
-            let now = Instant::now();
-            if now >= wait_until {
+        // --- acquire: own queue first, then steal, then sleep ---
+        let mut guard = rq.lock();
+        loop {
+            if !guard.is_empty() {
                 break;
             }
-            match rx.recv_timeout(wait_until - now) {
-                Ok(Msg::Req(r)) => {
-                    if let Some(d) = r.deadline {
-                        wait_until = wait_until.min(d);
-                    }
-                    queue.push(r);
-                }
-                Ok(Msg::Shutdown) => {
-                    flush(&model, backend, &cfg, &mut sched, &mut queue, per_image, classes, &metrics);
-                    return Ok(());
-                }
-                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => break,
-                Err(_) => {
-                    flush(&model, backend, &cfg, &mut sched, &mut queue, per_image, classes, &metrics);
-                    return Ok(());
-                }
+            if ctx.shard.shutdown.load(Ordering::Acquire) {
+                return Ok(());
+            }
+            drop(guard);
+            if try_steal(&ctx.shard, ctx.replica, &ctx.metrics) {
+                guard = rq.lock();
+                continue;
+            }
+            guard = rq.lock();
+            if guard.is_empty() && !ctx.shard.shutdown.load(Ordering::Acquire) {
+                guard = rq
+                    .cv
+                    .wait_timeout(guard, WORKER_POLL)
+                    .unwrap_or_else(|e| e.into_inner())
+                    .0;
             }
         }
-        flush(&model, backend, &cfg, &mut sched, &mut queue, per_image, classes, &metrics);
+        // --- batching window: wait for co-riders until the formation
+        // deadline (head arrival + max_wait, clipped by any pending
+        // request deadline), or until the queue fills ---
+        while !ctx.shard.shutdown.load(Ordering::Acquire) && guard.len() < ctx.cfg.max_batch {
+            let due = formation_due_us(&guard, &ctx.cfg);
+            let now = ctx.clock.now_us();
+            if now >= due {
+                break;
+            }
+            let wait = Duration::from_micros(due - now).min(WORKER_POLL);
+            guard = rq.cv.wait_timeout(guard, wait).unwrap_or_else(|e| e.into_inner()).0;
+            if guard.is_empty() {
+                // a sibling stole everything while we waited
+                break;
+            }
+        }
+        drop(guard);
+        flush_replica(&ctx, backend, &rq, &mut sched, per_image, classes);
     }
+}
+
+/// Steal the tail half of the deepest sibling queue (≥ 2 entries) into
+/// our own. Taking from the *tail* preserves the victim's FIFO prefix —
+/// the requests it already owes answers to stay in order — and the
+/// stolen block itself stays in arrival order at the thief. Locks are
+/// taken one at a time (victim, then own), so two thieves can never
+/// deadlock.
+fn try_steal(shard: &Shard, me: usize, metrics: &Metrics) -> bool {
+    let victim = (0..shard.replicas.len())
+        .filter(|&i| i != me)
+        .max_by_key(|&i| shard.replicas[i].depth.load(Ordering::Acquire));
+    let Some(victim) = victim else { return false };
+    if shard.replicas[victim].depth.load(Ordering::Acquire) < 2 {
+        return false;
+    }
+    let vq = &shard.replicas[victim];
+    let stolen: Vec<Pending> = {
+        let mut q = vq.lock();
+        if q.len() < 2 {
+            return false;
+        }
+        let keep = q.len() - q.len() / 2;
+        let stolen = q.split_off(keep);
+        vq.depth.store(q.len() as u64, Ordering::Release);
+        stolen.into()
+    };
+    let rq = &shard.replicas[me];
+    {
+        let mut q = rq.lock();
+        q.extend(stolen);
+        rq.depth.store(q.len() as u64, Ordering::Release);
+    }
+    metrics.record_steal();
+    obs::add(obs::Counter::ServeSteals, 1);
+    true
+}
+
+/// Drain one replica's queue: expire, plan, execute, reply — until the
+/// queue is empty. The queue lock is never held across `run_batch`, so
+/// submits and thieves proceed while a batch executes.
+fn flush_replica(
+    ctx: &WorkerCtx,
+    backend: &dyn Backend,
+    rq: &ReplicaQueue,
+    sched: &mut Scheduler,
+    per_image: usize,
+    classes: usize,
+) {
+    loop {
+        let mut q = rq.lock();
+        ctx.metrics.set_queue_depth(q.len());
+        let now = ctx.clock.now_us();
+        expire_queue(&ctx.model, &mut q, &ctx.metrics, sched.min_est_us(), now, &ctx.admission);
+        rq.depth.store(q.len() as u64, Ordering::Release);
+        if q.is_empty() {
+            ctx.metrics.set_queue_depth(0);
+            return;
+        }
+        let b = plan_batch(&q, &ctx.cfg, sched, now);
+        let take = b.min(q.len());
+        let batch: Vec<Pending> = q.drain(..take).collect();
+        rq.depth.store(q.len() as u64, Ordering::Release);
+        ctx.metrics.set_queue_depth(q.len());
+        drop(q);
+        let input = gather_input(&batch, b, per_image);
+        let formed_at_us = ctx.clock.now_us();
+        let result = backend.run_batch(b, &input);
+        let exec_us = ctx.clock.now_us().saturating_sub(formed_at_us).max(1);
+        if result.is_ok() {
+            sched.observe(b, exec_us as f64);
+            ctx.metrics.record_calibration(sched.us_per_unit());
+        }
+        complete_batch(
+            &ctx.model,
+            result,
+            batch,
+            b,
+            formed_at_us,
+            exec_us,
+            classes,
+            &ctx.metrics,
+            &ctx.admission,
+        );
+    }
+}
+
+/// Absolute µs time at which the queue's next batch should form: the
+/// head-of-line arrival plus the batching window, clipped by the
+/// earliest pending deadline; immediately (0) once the queue can fill a
+/// `max_batch`.
+pub(crate) fn formation_due_us(queue: &VecDeque<Pending>, cfg: &QueueConfig) -> u64 {
+    if queue.len() >= cfg.max_batch {
+        return 0;
+    }
+    let Some(head) = queue.front() else { return 0 };
+    let mut due = head.enqueued_us.saturating_add(cfg.max_wait_us);
+    if let Some(d) = queue.iter().filter_map(|r| r.deadline_at_us).min() {
+        due = due.min(d);
+    }
+    due
 }
 
 /// Answer every queued request whose deadline already passed with an
@@ -580,26 +971,34 @@ fn worker_loop(
 /// request's whole deadline budget was below the cheapest batch's
 /// estimated exec time (`min_est_us` — no admission decision could have
 /// saved it), else *expired in queue* (it waited too long behind other
-/// work).
-fn expire(model: &str, queue: &mut Vec<Pending>, metrics: &Metrics, min_est_us: Option<f64>) {
-    let now = Instant::now();
-    if !queue.iter().any(|r| r.deadline.is_some_and(|d| d <= now)) {
+/// work). Expired commitments are released.
+pub(crate) fn expire_queue(
+    model: &str,
+    queue: &mut VecDeque<Pending>,
+    metrics: &Metrics,
+    min_est_us: Option<f64>,
+    now_us: u64,
+    admission: &ModelAdmission,
+) {
+    if !queue.iter().any(|r| r.deadline_at_us.is_some_and(|d| d <= now_us)) {
         return;
     }
-    let (expired, keep): (Vec<Pending>, Vec<Pending>) = queue
-        .drain(..)
-        .partition(|r| r.deadline.is_some_and(|d| d <= now));
-    *queue = keep;
-    for r in expired {
-        let waited_us = r.enqueued.elapsed().as_secs_f64() * 1e6;
+    let mut keep = VecDeque::with_capacity(queue.len());
+    while let Some(r) = queue.pop_front() {
+        if !r.deadline_at_us.is_some_and(|d| d <= now_us) {
+            keep.push_back(r);
+            continue;
+        }
+        let waited_us = now_us.saturating_sub(r.enqueued_us) as f64;
         let budget_us = r.deadline_us.unwrap_or(0) as f64;
         let infeasible = min_est_us.is_some_and(|e| budget_us < e);
         metrics.record_deadline_miss(infeasible);
+        admission.release(r.cost_us);
         if obs::on() {
             obs::record_span(
                 obs::CAT_SERVE,
                 "request".to_string(),
-                obs::at_us(r.enqueued),
+                obs::now_us() - waited_us,
                 waited_us,
                 vec![
                     ("model", ArgValue::Str(model.to_string())),
@@ -628,10 +1027,151 @@ fn expire(model: &str, queue: &mut Vec<Pending>, metrics: &Metrics, min_est_us: 
             batch: 0,
         });
     }
+    *queue = keep;
+}
+
+/// Pick the batch size for the queue's FIFO prefix: per-prefix deadline
+/// slack feeds the scheduler, because a batch of size `b` serves the
+/// first `min(b, horizon)` requests — an urgent request deeper in the
+/// queue is not helped by shrinking a batch that won't include it.
+pub(crate) fn plan_batch(
+    queue: &VecDeque<Pending>,
+    cfg: &QueueConfig,
+    sched: &mut Scheduler,
+    now_us: u64,
+) -> usize {
+    let horizon = queue.len().min(cfg.max_batch).max(1);
+    let mut prefix_slack: Vec<Option<f64>> = Vec::with_capacity(horizon);
+    let mut tightest: Option<f64> = None;
+    for r in queue.iter().take(horizon) {
+        if let Some(d) = r.deadline_at_us {
+            let s = d.saturating_sub(now_us) as f64;
+            tightest = Some(tightest.map_or(s, |t: f64| t.min(s)));
+        }
+        prefix_slack.push(tightest);
+    }
+    sched.pick_with(horizon, |b| prefix_slack[b.min(horizon) - 1])
+}
+
+/// Pack the batch's inputs into one flat buffer (padding slots stay 0).
+pub(crate) fn gather_input(batch: &[Pending], b: usize, per_image: usize) -> Vec<f32> {
+    let mut input = vec![0.0f32; b * per_image];
+    for (i, r) in batch.iter().enumerate() {
+        input[i * per_image..(i + 1) * per_image].copy_from_slice(&r.input);
+    }
+    input
+}
+
+/// Account for and answer one executed (or failed) batch: queue-wait and
+/// latency histograms, spans, top-k, commitment release, replies. Shared
+/// verbatim by the threaded workers and the discrete-event sim, so the
+/// deterministic tests exercise the same accounting the real server
+/// runs.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn complete_batch(
+    model: &str,
+    result: Result<Vec<f32>, CadnnError>,
+    batch: Vec<Pending>,
+    b: usize,
+    formed_at_us: u64,
+    exec_us: u64,
+    classes: usize,
+    metrics: &Metrics,
+    admission: &ModelAdmission,
+) {
+    let take = batch.len();
+    let reply_at_us = formed_at_us.saturating_add(exec_us);
+    let request_span = |r: &Pending, wait_us: f64, latency_us: f64, out: &str| {
+        let mut args = vec![
+            ("model", ArgValue::Str(model.to_string())),
+            ("id", ArgValue::Num(r.id as f64)),
+            ("batch", ArgValue::Num(b as f64)),
+            ("wait_us", ArgValue::Num(wait_us)),
+            ("exec_us", ArgValue::Num(exec_us as f64)),
+            ("outcome", ArgValue::Str(out.to_string())),
+        ];
+        if let Some(d) = r.deadline_us {
+            args.push(("slack_us", ArgValue::Num(d as f64 - latency_us)));
+        }
+        obs::record_span(
+            obs::CAT_SERVE,
+            "request".to_string(),
+            obs::now_us() - latency_us,
+            latency_us,
+            args,
+        );
+    };
+    match result {
+        Ok(out) => {
+            metrics.record_batch(b, take, exec_us as f64);
+            if obs::on() {
+                obs::record_span(
+                    obs::CAT_SERVE,
+                    "batch".to_string(),
+                    obs::now_us() - exec_us as f64,
+                    exec_us as f64,
+                    vec![
+                        ("model", ArgValue::Str(model.to_string())),
+                        ("batch", ArgValue::Num(b as f64)),
+                        ("used", ArgValue::Num(take as f64)),
+                    ],
+                );
+            }
+            for (i, r) in batch.into_iter().enumerate() {
+                let wait_us = formed_at_us.saturating_sub(r.enqueued_us) as f64;
+                metrics.record_queue_wait(wait_us);
+                let latency_us = reply_at_us.saturating_sub(r.enqueued_us) as f64;
+                metrics.record_request(latency_us);
+                if obs::on() {
+                    request_span(&r, wait_us, latency_us, "ok");
+                }
+                let logits = out[i * classes..(i + 1) * classes].to_vec();
+                let topk = r.topk.map(|k| topk_of(&logits, k));
+                admission.release(r.cost_us);
+                let _ = r.reply.send(ServeResponse {
+                    id: r.id,
+                    model: model.to_string(),
+                    outcome: Ok(logits),
+                    topk,
+                    latency_us,
+                    batch: b,
+                });
+            }
+        }
+        Err(e) => {
+            crate::util::log::log(
+                crate::util::log::Level::Error,
+                "serve",
+                format_args!("{model}: execute failed: {e}"),
+            );
+            // answer the affected requests with an explicit backend
+            // error so clients can distinguish this from shutdown
+            // (where the reply channel just closes)
+            let err = ServeError::Backend(e.to_string());
+            metrics.record_errors(take as u64);
+            for r in batch {
+                let wait_us = formed_at_us.saturating_sub(r.enqueued_us) as f64;
+                metrics.record_queue_wait(wait_us);
+                let latency_us = reply_at_us.saturating_sub(r.enqueued_us) as f64;
+                if obs::on() {
+                    request_span(&r, wait_us, latency_us, "error");
+                }
+                admission.release(r.cost_us);
+                let _ = r.reply.send(ServeResponse {
+                    id: r.id,
+                    model: model.to_string(),
+                    outcome: Err(err.clone()),
+                    topk: None,
+                    latency_us,
+                    batch: b,
+                });
+            }
+        }
+    }
 }
 
 /// (class, logit) pairs sorted by descending logit, ties by class.
-fn topk_of(logits: &[f32], k: usize) -> Vec<(usize, f32)> {
+pub(crate) fn topk_of(logits: &[f32], k: usize) -> Vec<(usize, f32)> {
     let mut idx: Vec<usize> = (0..logits.len()).collect();
     idx.sort_by(|&a, &b| {
         logits[b]
@@ -640,148 +1180,6 @@ fn topk_of(logits: &[f32], k: usize) -> Vec<(usize, f32)> {
             .then(a.cmp(&b))
     });
     idx.into_iter().take(k).map(|i| (i, logits[i])).collect()
-}
-
-/// Execute and reply to as many queued requests as scheduled batches
-/// allow, expiring dead requests between rounds. Emits one `serve`
-/// "request" span per reply and one "batch" span per executed batch
-/// when the obs recorder is on.
-#[allow(clippy::too_many_arguments)]
-fn flush(
-    model: &str,
-    backend: &dyn Backend,
-    cfg: &QueueConfig,
-    sched: &mut Scheduler,
-    queue: &mut Vec<Pending>,
-    per_image: usize,
-    classes: usize,
-    metrics: &Metrics,
-) {
-    while !queue.is_empty() {
-        metrics.set_queue_depth(queue.len());
-        expire(model, queue, metrics, sched.min_est_us());
-        if queue.is_empty() {
-            break;
-        }
-        // per-prefix deadline slack: a batch of size b serves the first
-        // min(b, horizon) FIFO requests, so only their deadlines
-        // constrain it — an urgent request deeper in the queue is not
-        // helped by shrinking a batch that won't include it
-        let now = Instant::now();
-        let horizon = queue.len().min(cfg.max_batch);
-        let mut prefix_slack: Vec<Option<f64>> = Vec::with_capacity(horizon);
-        let mut tightest: Option<f64> = None;
-        for r in queue.iter().take(horizon) {
-            if let Some(d) = r.deadline {
-                let s = d.saturating_duration_since(now).as_secs_f64() * 1e6;
-                tightest = Some(tightest.map_or(s, |t: f64| t.min(s)));
-            }
-            prefix_slack.push(tightest);
-        }
-        let b = sched.pick_with(horizon, |b| prefix_slack[b.min(horizon) - 1]);
-        let take = b.min(queue.len());
-        let mut input = vec![0.0f32; b * per_image];
-        for (i, r) in queue.iter().take(take).enumerate() {
-            input[i * per_image..(i + 1) * per_image].copy_from_slice(&r.input);
-        }
-        // batch formed: the prefix's queue wait ends here, whatever the
-        // execution outcome
-        let t0 = Instant::now();
-        let waits_us: Vec<f64> = queue
-            .iter()
-            .take(take)
-            .map(|r| t0.duration_since(r.enqueued).as_secs_f64() * 1e6)
-            .collect();
-        for &w in &waits_us {
-            metrics.record_queue_wait(w);
-        }
-        let request_span = |r: &Pending, i: usize, latency_us: f64, exec_us: f64, out: &str| {
-            let mut args = vec![
-                ("model", ArgValue::Str(model.to_string())),
-                ("id", ArgValue::Num(r.id as f64)),
-                ("batch", ArgValue::Num(b as f64)),
-                ("wait_us", ArgValue::Num(waits_us[i])),
-                ("exec_us", ArgValue::Num(exec_us)),
-                ("outcome", ArgValue::Str(out.to_string())),
-            ];
-            if let Some(d) = r.deadline_us {
-                args.push(("slack_us", ArgValue::Num(d as f64 - latency_us)));
-            }
-            obs::record_span(
-                obs::CAT_SERVE,
-                "request".to_string(),
-                obs::at_us(r.enqueued),
-                latency_us,
-                args,
-            );
-        };
-        let out = match backend.run_batch(b, &input) {
-            Ok(o) => o,
-            Err(e) => {
-                crate::util::log::log(
-                    crate::util::log::Level::Error,
-                    "serve",
-                    format_args!("{model}: execute failed: {e}"),
-                );
-                // answer the affected requests with an explicit backend
-                // error so clients can distinguish this from shutdown
-                // (where the reply channel just closes)
-                let err = ServeError::Backend(e.to_string());
-                let exec_us = t0.elapsed().as_secs_f64() * 1e6;
-                metrics.record_errors(take as u64);
-                for (i, r) in queue.drain(..take).enumerate() {
-                    let latency_us = r.enqueued.elapsed().as_secs_f64() * 1e6;
-                    if obs::on() {
-                        request_span(&r, i, latency_us, exec_us, "error");
-                    }
-                    let _ = r.reply.send(ServeResponse {
-                        id: r.id,
-                        model: model.to_string(),
-                        outcome: Err(err.clone()),
-                        topk: None,
-                        latency_us,
-                        batch: b,
-                    });
-                }
-                continue;
-            }
-        };
-        let exec_us = t0.elapsed().as_secs_f64() * 1e6;
-        sched.observe(b, exec_us);
-        metrics.record_calibration(sched.us_per_unit());
-        metrics.record_batch(b, take, exec_us);
-        if obs::on() {
-            obs::record_span(
-                obs::CAT_SERVE,
-                "batch".to_string(),
-                obs::at_us(t0),
-                exec_us,
-                vec![
-                    ("model", ArgValue::Str(model.to_string())),
-                    ("batch", ArgValue::Num(b as f64)),
-                    ("used", ArgValue::Num(take as f64)),
-                ],
-            );
-        }
-        for (i, r) in queue.drain(..take).enumerate() {
-            let latency_us = r.enqueued.elapsed().as_secs_f64() * 1e6;
-            metrics.record_request(latency_us);
-            if obs::on() {
-                request_span(&r, i, latency_us, exec_us, "ok");
-            }
-            let logits = out[i * classes..(i + 1) * classes].to_vec();
-            let topk = r.topk.map(|k| topk_of(&logits, k));
-            let _ = r.reply.send(ServeResponse {
-                id: r.id,
-                model: model.to_string(),
-                outcome: Ok(logits),
-                topk,
-                latency_us,
-                batch: b,
-            });
-        }
-    }
-    metrics.set_queue_depth(queue.len());
 }
 
 #[cfg(test)]
@@ -815,11 +1213,64 @@ mod tests {
         let s = d.to_string();
         assert!(s.contains("5000") && s.contains("7500"), "{s}");
         assert!(ServeError::Backend("boom".into()).to_string().contains("boom"));
+        let shed = ServeError::Shed { cause: ShedCause::Quota, predicted_us: 12_000 };
+        let s = shed.to_string();
+        assert!(s.contains("quota") && s.contains("12000"), "{s}");
     }
 
     #[test]
     fn empty_builder_is_a_config_error() {
         let err = Server::builder().build().err().unwrap();
         assert!(matches!(err, CadnnError::Config { .. }), "{err}");
+    }
+
+    fn pending(id: u64, enqueued_us: u64, deadline_at_us: Option<u64>) -> Pending {
+        let (tx, _rx) = channel();
+        Pending {
+            id,
+            input: Vec::new(),
+            enqueued_us,
+            deadline_at_us,
+            deadline_us: deadline_at_us.map(|d| d - enqueued_us),
+            cost_us: 0,
+            topk: None,
+            reply: tx,
+        }
+    }
+
+    #[test]
+    fn formation_due_tracks_head_window_deadlines_and_fill() {
+        let cfg = QueueConfig { max_batch: 2, max_wait_us: 1_000, ..QueueConfig::default() };
+        let mut q: VecDeque<Pending> = VecDeque::new();
+        q.push_back(pending(1, 100, None));
+        assert_eq!(formation_due_us(&q, &cfg), 1_100, "head arrival + window");
+        q[0].deadline_at_us = Some(700);
+        assert_eq!(formation_due_us(&q, &cfg), 700, "a pending deadline clips the window");
+        q.push_back(pending(2, 150, None));
+        assert_eq!(formation_due_us(&q, &cfg), 0, "a full queue forms immediately");
+    }
+
+    #[test]
+    fn stealing_takes_the_tail_half_and_preserves_order() {
+        let shard = Shard::new(2);
+        {
+            let mut q = shard.replicas[0].lock();
+            for id in 1..=5 {
+                q.push_back(pending(id, id * 10, None));
+            }
+            shard.replicas[0].depth.store(5, Ordering::Release);
+        }
+        let metrics = Metrics::new();
+        assert!(try_steal(&shard, 1, &metrics));
+        let victim: Vec<u64> = shard.replicas[0].lock().iter().map(|r| r.id).collect();
+        let thief: Vec<u64> = shard.replicas[1].lock().iter().map(|r| r.id).collect();
+        assert_eq!(victim, vec![1, 2, 3], "victim keeps its FIFO prefix");
+        assert_eq!(thief, vec![4, 5], "stolen tail stays in arrival order");
+        assert_eq!(shard.replicas[0].depth.load(Ordering::Acquire), 3);
+        assert_eq!(shard.replicas[1].depth.load(Ordering::Acquire), 2);
+        assert_eq!(metrics.snapshot().steals, 1);
+        // nothing left worth stealing (victim depth < 2 after a re-steal
+        // from the other side leaves 1)
+        assert!(!try_steal(&shard, 0, &metrics) || shard.replicas[1].lock().len() <= 1);
     }
 }

@@ -30,6 +30,8 @@ pub struct ModelEntry {
     pub classes: usize,
     /// Ascending executable batch sizes.
     pub batch_sizes: Vec<usize>,
+    /// Worker replicas backing this entry (≥ 1).
+    pub replicas: usize,
 }
 
 impl ModelEntry {

@@ -450,6 +450,67 @@ mod tests {
         });
     }
 
+    /// The invariant the admission controller's per-request charge
+    /// rests on (`admission.rs` commits `min_units × us_per_unit` per
+    /// admitted request): a planned, calibrated scheduler never spends
+    /// more than the cheapest batch estimate per *served* request —
+    /// `est(picked) <= min(pending, picked) × min_est_us`, for every
+    /// pending count and every deadline-slack shape. Amortized over any
+    /// sequence of picks, the backlog therefore drains at least one
+    /// committed charge per served request, which is what makes
+    /// `predicted = committed/replicas + max_wait + worst_batch` an
+    /// upper bound.
+    #[test]
+    fn prop_pick_amortized_cost_bounded_by_min_est() {
+        prop::check_n("admission amortized cost bound", 200, |rng: &mut Rng| {
+            let mut avail = vec![rng.range(1, 3)];
+            for _ in 0..rng.range(1, 4) {
+                let next = avail.last().unwrap() * rng.range(2, 4);
+                avail.push(next);
+            }
+            let overhead = rng.range(0, 5_000) as f64;
+            let per_image = rng.range(1, 3_000) as f64;
+            let mut s = Scheduler::new(
+                avail.clone(),
+                affine_costs(&avail, overhead, per_image),
+                BatchPolicy::PadToFit,
+            );
+            s.calibrate(0.25 + 2.0 * rng.f64());
+            // a few observations at the true cost keep the EWMA at its
+            // fixed point but exercise the observed-estimate path too
+            for _ in 0..rng.range(0, 3) {
+                let b = avail[rng.below(avail.len() as u64) as usize];
+                s.observe(b, s.est_us(b).unwrap());
+            }
+            let min_est = s.min_est_us().unwrap();
+            let pending = rng.range(1, 64);
+            // three slack shapes: none, uniform, random per-prefix
+            let uniform = rng.range(1, 30_000) as f64;
+            let per_prefix: Vec<Option<f64>> = (0..avail.len())
+                .map(|_| (rng.f64() < 0.7).then(|| rng.range(1, 30_000) as f64))
+                .collect();
+            let shapes: [Box<dyn Fn(usize) -> Option<f64>>; 3] = [
+                Box::new(|_| None),
+                Box::new(move |_| Some(uniform)),
+                Box::new(move |b| per_prefix[b.saturating_sub(1).min(per_prefix.len() - 1)]),
+            ];
+            for slack_of in shapes {
+                let picked = s.pick_with(pending, &slack_of);
+                let served = pending.min(picked) as f64;
+                let est = s.est_us(picked).unwrap();
+                prop_assert!(
+                    est <= served * min_est + 1e-6,
+                    "batch {} est {:.1}µs exceeds {} served × min_est {:.1}µs",
+                    picked,
+                    est,
+                    served,
+                    min_est
+                );
+            }
+            Ok(())
+        });
+    }
+
     /// `QueueConfig { planned: false }` builds the scheduler with no
     /// cost units; exec-time observations must never flip it into
     /// planner mode — the policy stays in charge forever (that's what

@@ -1,0 +1,692 @@
+//! Deterministic serving simulator: the server's batching, admission,
+//! expiry, replica-dispatch, and work-stealing pipeline driven by a
+//! single-threaded discrete-event loop on a [`VirtualClock`].
+//!
+//! [`SimServer`] reuses the *exact* production helpers —
+//! [`super::expire_queue`], [`super::formation_due_us`],
+//! [`super::plan_batch`], [`super::gather_input`],
+//! [`super::complete_batch`], and the real [`ModelAdmission`] /
+//! [`Scheduler`] / [`Metrics`] objects — so what the tests prove about
+//! shedding taxonomy, deadline math, and metric partitions is a
+//! statement about the served code path, not a model of it. Only the
+//! threads and the wall clock are replaced: arrivals, batching-window
+//! expirations, and batch completions are heap-ordered events, batch
+//! execution time comes from an injectable cost function (defaulting to
+//! plan units × calibration, the same estimate the scheduler and the
+//! admission controller price with), and ties break on submission
+//! order — every run is bit-for-bit reproducible, with zero sleeps.
+//!
+//! ```ignore
+//! let mut sim = SimServer::new();
+//! sim.register("m", Box::new(backend), QueueConfig::default())?;
+//! let rx = sim.submit_at(0, ServeRequest::new("m", img).deadline_ms(10))?;
+//! sim.run(); // drain every event; virtual time advances as needed
+//! let resp = rx.try_recv().unwrap();
+//! let stats = sim.stats();
+//! ```
+
+use super::admission::{AdmitDecision, ModelAdmission};
+use super::clock::{Clock, VirtualClock};
+use super::metrics::{Metrics, MetricsSnapshot};
+use super::{
+    complete_batch, expire_queue, formation_due_us, gather_input, plan_batch, shed_response,
+    stamp_admission, AdmissionConfig, Pending, QueueConfig, Scheduler, ServeRequest,
+    ServeResponse,
+};
+use crate::api::Backend;
+use crate::error::CadnnError;
+use crate::obs;
+use std::cmp::Reverse;
+use std::collections::{BTreeMap, BinaryHeap, VecDeque};
+use std::sync::atomic::AtomicU64;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+
+/// One admission decision, as the simulator saw it (audit trail for
+/// exact-assertion tests: the recorded `predicted_us` of an `Admit` is
+/// the bound the request's measured latency must stay within).
+#[derive(Debug, Clone, PartialEq)]
+pub struct AdmitRecord {
+    pub id: u64,
+    pub model: String,
+    /// Virtual time of the admission decision.
+    pub at_us: u64,
+    pub decision: AdmitDecision,
+}
+
+/// One executed request, as the simulator formed its batch (audit trail
+/// for FIFO/work-stealing properties).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ExecRecord {
+    pub id: u64,
+    pub model: String,
+    /// Replica the dispatcher originally queued the request on.
+    pub dispatched: usize,
+    /// Replica that actually executed it (differs after a steal).
+    pub executed: usize,
+    /// Virtual time the batch formed.
+    pub formed_at_us: u64,
+    /// Batch variant it rode in.
+    pub batch: usize,
+}
+
+struct Submission {
+    id: u64,
+    model: String,
+    input: Vec<f32>,
+    deadline_us: Option<u64>,
+    topk: Option<usize>,
+    reply: Sender<ServeResponse>,
+}
+
+enum EvKind {
+    Arrival(Submission),
+    Wake {
+        model: String,
+        replica: usize,
+    },
+    Complete {
+        model: String,
+        replica: usize,
+        b: usize,
+        formed_at_us: u64,
+        exec_us: u64,
+        result: Result<Vec<f32>, CadnnError>,
+        batch: Vec<Pending>,
+    },
+}
+
+struct Ev {
+    at: u64,
+    seq: u64,
+    kind: EvKind,
+}
+
+impl PartialEq for Ev {
+    fn eq(&self, other: &Ev) -> bool {
+        (self.at, self.seq) == (other.at, other.seq)
+    }
+}
+impl Eq for Ev {}
+impl PartialOrd for Ev {
+    fn partial_cmp(&self, other: &Ev) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Ev {
+    fn cmp(&self, other: &Ev) -> std::cmp::Ordering {
+        (self.at, self.seq).cmp(&(other.at, other.seq))
+    }
+}
+
+/// Min-heap of events, tie-broken by insertion order (determinism).
+#[derive(Default)]
+struct EventQueue {
+    heap: BinaryHeap<Reverse<Ev>>,
+    seq: u64,
+}
+
+impl EventQueue {
+    fn push(&mut self, at: u64, kind: EvKind) {
+        self.seq += 1;
+        self.heap.push(Reverse(Ev { at, seq: self.seq, kind }));
+    }
+
+    fn pop(&mut self) -> Option<Ev> {
+        self.heap.pop().map(|Reverse(e)| e)
+    }
+}
+
+/// Exec-time model for one simulated backend: µs for one run of batch
+/// `b`.
+pub type CostFn = Box<dyn Fn(usize) -> u64>;
+
+struct SimReplica {
+    queue: VecDeque<Pending>,
+    sched: Scheduler,
+    metrics: Arc<Metrics>,
+    busy: bool,
+}
+
+struct SimModel {
+    cfg: QueueConfig,
+    backend: Box<dyn Backend>,
+    cost_fn: CostFn,
+    per_image: usize,
+    classes: usize,
+    admission: Arc<ModelAdmission>,
+    replicas: Vec<SimReplica>,
+}
+
+/// Single-threaded discrete-event twin of [`super::Server`]. See the
+/// module docs; API mirrors the server where it can
+/// ([`SimServer::submit_at`] ≈ `Server::submit` with an explicit
+/// arrival time, [`SimServer::stats`] = merged + admission-stamped
+/// snapshots).
+#[derive(Default)]
+pub struct SimServer {
+    clock: VirtualClock,
+    admission_cfg: AdmissionConfig,
+    global_committed: Arc<AtomicU64>,
+    models: BTreeMap<String, SimModel>,
+    events: EventQueue,
+    next_id: u64,
+    dispatched: BTreeMap<u64, usize>,
+    audit: Vec<AdmitRecord>,
+    exec_log: Vec<ExecRecord>,
+}
+
+impl SimServer {
+    /// A simulator with default admission (enabled, no global backlog
+    /// cap) at virtual t = 0.
+    pub fn new() -> SimServer {
+        SimServer::default()
+    }
+
+    /// A simulator with an explicit server-wide admission policy.
+    pub fn with_admission(cfg: AdmissionConfig) -> SimServer {
+        SimServer { admission_cfg: cfg, ..SimServer::default() }
+    }
+
+    /// The virtual clock every queue/deadline/metrics decision reads.
+    /// `run` advances it; tests only read it.
+    pub fn clock(&self) -> &VirtualClock {
+        &self.clock
+    }
+
+    /// Current virtual time, µs.
+    pub fn now_us(&self) -> u64 {
+        self.clock.now_us()
+    }
+
+    /// Register a model whose batch exec time is *priced like the
+    /// scheduler prices it*: plan cost units × the seeded calibration
+    /// (`cfg.calibration`, else the backend's persisted one). With exact
+    /// costs the scheduler's EWMA sits at its fixed point, so estimates
+    /// never drift mid-test — the foundation for exact assertions.
+    /// Models without costs or calibration execute in a nominal 1000 µs
+    /// per batch.
+    pub fn register(
+        &mut self,
+        name: impl Into<String>,
+        backend: Box<dyn Backend>,
+        cfg: QueueConfig,
+    ) -> Result<(), CadnnError> {
+        let costs = if cfg.planned { backend.plan_costs() } else { Vec::new() };
+        let cal = cfg.calibration.or_else(|| backend.calibration());
+        let cost_fn: CostFn = match cal {
+            Some(c) if !costs.is_empty() => {
+                let costs = costs.clone();
+                Box::new(move |b| {
+                    costs
+                        .iter()
+                        .find(|&&(bb, _)| bb == b)
+                        .map(|&(_, units)| (units * c).ceil() as u64)
+                        .unwrap_or(1_000)
+                })
+            }
+            _ => Box::new(|_| 1_000),
+        };
+        self.register_with_cost(name, backend, cfg, cost_fn)
+    }
+
+    /// Register a model with an explicit exec-time model (µs per batch
+    /// run). The backend still produces the actual logits; `cost` only
+    /// decides how much virtual time each batch consumes.
+    pub fn register_with_cost(
+        &mut self,
+        name: impl Into<String>,
+        backend: Box<dyn Backend>,
+        cfg: QueueConfig,
+        cost: CostFn,
+    ) -> Result<(), CadnnError> {
+        let name = name.into();
+        if self.models.contains_key(&name) {
+            return Err(CadnnError::config(format!("model '{name}' registered twice")));
+        }
+        let batches = backend.batch_sizes();
+        if batches.is_empty() {
+            return Err(CadnnError::config("backend reports no batch variants"));
+        }
+        let per_image: usize = backend.input_shape().iter().product();
+        let classes = backend.classes();
+        let plan_costs = if cfg.planned { backend.plan_costs() } else { Vec::new() };
+        let n = cfg.replicas.max(1);
+        let replicas: Vec<SimReplica> = (0..n)
+            .map(|_| {
+                let mut sched =
+                    Scheduler::new(batches.clone(), plan_costs.clone(), cfg.fallback);
+                if cfg.planned {
+                    if let Some(c) = cfg.calibration.or_else(|| backend.calibration()) {
+                        sched.calibrate(c);
+                    }
+                }
+                let metrics = Arc::new(Metrics::with_clock(self.clock.shared()));
+                metrics.record_calibration(sched.us_per_unit());
+                SimReplica { queue: VecDeque::new(), sched, metrics, busy: false }
+            })
+            .collect();
+        let admission = Arc::new(ModelAdmission::new(
+            self.admission_cfg,
+            n,
+            cfg.max_wait_us,
+            cfg.quota_us,
+            Arc::clone(&replicas[0].metrics),
+            Arc::clone(&self.global_committed),
+        ));
+        admission.set_pricing(&plan_costs);
+        self.models.insert(
+            name,
+            SimModel { cfg, backend, cost_fn: cost, per_image, classes, admission, replicas },
+        );
+        Ok(())
+    }
+
+    /// Schedule one request to arrive at virtual time `at_us`. Routing
+    /// and input-length errors surface synchronously (same contract as
+    /// `Server::submit`); the admission decision happens at *arrival*
+    /// processing, in event order. The reply lands in the returned
+    /// receiver during [`SimServer::run`].
+    pub fn submit_at(
+        &mut self,
+        at_us: u64,
+        req: ServeRequest,
+    ) -> Result<Receiver<ServeResponse>, CadnnError> {
+        let model = self
+            .models
+            .get(&req.model)
+            .ok_or_else(|| CadnnError::UnknownModel { name: req.model.clone() })?;
+        if req.input.len() != model.per_image {
+            return Err(CadnnError::InvalidInput {
+                reason: format!(
+                    "input length {} != expected {} for model '{}'",
+                    req.input.len(),
+                    model.per_image,
+                    req.model
+                ),
+            });
+        }
+        let (rtx, rrx) = channel();
+        self.next_id += 1;
+        self.events.push(
+            at_us,
+            EvKind::Arrival(Submission {
+                id: self.next_id,
+                model: req.model,
+                input: req.input,
+                deadline_us: req.deadline_us,
+                topk: req.topk,
+                reply: rtx,
+            }),
+        );
+        Ok(rrx)
+    }
+
+    /// Drain every event, advancing virtual time to each event's stamp.
+    /// Returns the final virtual time. Deterministic: identical
+    /// registrations + submissions ⇒ identical replies, metrics, and
+    /// audit trails.
+    pub fn run(&mut self) -> u64 {
+        while let Some(ev) = self.events.pop() {
+            // monotonic guard: an event scheduled "now" during handling
+            // can never move time backward
+            if ev.at > self.clock.now_us() {
+                self.clock.set_us(ev.at);
+            }
+            match ev.kind {
+                EvKind::Arrival(sub) => self.handle_arrival(sub),
+                EvKind::Wake { model, replica } => self.handle_wake(&model, replica),
+                EvKind::Complete { model, replica, b, formed_at_us, exec_us, result, batch } => {
+                    self.handle_complete(&model, replica, b, formed_at_us, exec_us, result, batch)
+                }
+            }
+        }
+        self.clock.now_us()
+    }
+
+    /// Every admission decision made so far, in decision order.
+    pub fn audit(&self) -> &[AdmitRecord] {
+        &self.audit
+    }
+
+    /// Every executed request so far, in batch-formation order.
+    pub fn exec_log(&self) -> &[ExecRecord] {
+        &self.exec_log
+    }
+
+    /// Per-model snapshots: replica recorders merged, admission
+    /// accounting stamped — the same shape `Server::stats` returns.
+    pub fn stats(&self) -> BTreeMap<String, MetricsSnapshot> {
+        self.models
+            .iter()
+            .map(|(name, m)| {
+                let merged =
+                    MetricsSnapshot::merge_all(m.replicas.iter().map(|r| r.metrics.snapshot()))
+                        .unwrap_or_default();
+                (name.clone(), stamp_admission(merged, &m.admission))
+            })
+            .collect()
+    }
+
+    /// Per-replica raw snapshots for one model (index = replica).
+    pub fn replica_stats(&self, model: &str) -> Option<Vec<MetricsSnapshot>> {
+        self.models
+            .get(model)
+            .map(|m| m.replicas.iter().map(|r| r.metrics.snapshot()).collect())
+    }
+
+    /// One model's admission state (committed work, shed counts).
+    pub fn admission(&self, model: &str) -> Option<&ModelAdmission> {
+        self.models.get(model).map(|m| m.admission.as_ref())
+    }
+
+    fn handle_arrival(&mut self, sub: Submission) {
+        let now = self.clock.now_us();
+        let Some(model) = self.models.get_mut(&sub.model) else { return };
+        let decision = model.admission.admit(sub.deadline_us);
+        self.audit.push(AdmitRecord {
+            id: sub.id,
+            model: sub.model.clone(),
+            at_us: now,
+            decision,
+        });
+        let cost_us = match decision {
+            AdmitDecision::Admit { cost_us, .. } => cost_us,
+            refused => {
+                let _ = sub
+                    .reply
+                    .send(shed_response(&sub.model, sub.id, sub.deadline_us, refused));
+                return;
+            }
+        };
+        // shortest replica queue, ties to the lowest index — same
+        // dispatch rule as the threaded server
+        let r = (0..model.replicas.len())
+            .min_by_key(|&i| model.replicas[i].queue.len())
+            .unwrap_or(0);
+        self.dispatched.insert(sub.id, r);
+        let rep = &mut model.replicas[r];
+        rep.queue.push_back(Pending {
+            id: sub.id,
+            input: sub.input,
+            enqueued_us: now,
+            deadline_at_us: sub.deadline_us.map(|d| now.saturating_add(d)),
+            deadline_us: sub.deadline_us,
+            cost_us,
+            topk: sub.topk,
+            reply: sub.reply,
+        });
+        rep.metrics.set_queue_depth(rep.queue.len());
+        if !rep.busy {
+            self.events.push(now, EvKind::Wake { model: sub.model, replica: r });
+        }
+    }
+
+    fn handle_wake(&mut self, name: &str, r: usize) {
+        let now = self.clock.now_us();
+        let Some(model) = self.models.get_mut(name) else { return };
+        if model.replicas[r].busy {
+            return; // Complete will re-wake
+        }
+        loop {
+            {
+                let rep = &mut model.replicas[r];
+                let min_est = rep.sched.min_est_us();
+                expire_queue(name, &mut rep.queue, &rep.metrics, min_est, now, &model.admission);
+                rep.metrics.set_queue_depth(rep.queue.len());
+            }
+            if model.replicas[r].queue.is_empty() {
+                if !sim_steal(model, r) {
+                    return;
+                }
+                continue; // stolen work may itself be expired
+            }
+            let due = formation_due_us(&model.replicas[r].queue, &model.cfg);
+            if now < due {
+                self.events
+                    .push(due, EvKind::Wake { model: name.to_string(), replica: r });
+                return;
+            }
+            let (b, batch, input) = {
+                let rep = &mut model.replicas[r];
+                let b = plan_batch(&rep.queue, &model.cfg, &mut rep.sched, now);
+                let take = b.min(rep.queue.len());
+                let batch: Vec<Pending> = rep.queue.drain(..take).collect();
+                rep.metrics.set_queue_depth(rep.queue.len());
+                let input = gather_input(&batch, b, model.per_image);
+                (b, batch, input)
+            };
+            let result = model.backend.run_batch(b, &input);
+            let exec_us = (model.cost_fn)(b).max(1);
+            for p in &batch {
+                self.exec_log.push(ExecRecord {
+                    id: p.id,
+                    model: name.to_string(),
+                    dispatched: self.dispatched.get(&p.id).copied().unwrap_or(r),
+                    executed: r,
+                    formed_at_us: now,
+                    batch: b,
+                });
+            }
+            model.replicas[r].busy = true;
+            self.events.push(
+                now.saturating_add(exec_us),
+                EvKind::Complete {
+                    model: name.to_string(),
+                    replica: r,
+                    b,
+                    formed_at_us: now,
+                    exec_us,
+                    result,
+                    batch,
+                },
+            );
+            return;
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn handle_complete(
+        &mut self,
+        name: &str,
+        r: usize,
+        b: usize,
+        formed_at_us: u64,
+        exec_us: u64,
+        result: Result<Vec<f32>, CadnnError>,
+        batch: Vec<Pending>,
+    ) {
+        let Some(model) = self.models.get_mut(name) else { return };
+        let rep = &mut model.replicas[r];
+        rep.busy = false;
+        if result.is_ok() {
+            rep.sched.observe(b, exec_us as f64);
+            rep.metrics.record_calibration(rep.sched.us_per_unit());
+        }
+        complete_batch(
+            name,
+            result,
+            batch,
+            b,
+            formed_at_us,
+            exec_us,
+            model.classes,
+            &rep.metrics,
+            &model.admission,
+        );
+        let now = self.clock.now_us();
+        self.events.push(now, EvKind::Wake { model: name.to_string(), replica: r });
+    }
+}
+
+/// Same stealing rule as the threaded [`super::try_steal`]: take the
+/// tail half of the deepest sibling queue (≥ 2 entries); the victim's
+/// FIFO prefix and the stolen block's internal order are preserved.
+fn sim_steal(model: &mut SimModel, me: usize) -> bool {
+    let victim = (0..model.replicas.len())
+        .filter(|&i| i != me)
+        .max_by_key(|&i| model.replicas[i].queue.len());
+    let Some(victim) = victim else { return false };
+    if model.replicas[victim].queue.len() < 2 {
+        return false;
+    }
+    let stolen = {
+        let vq = &mut model.replicas[victim].queue;
+        let keep = vq.len() - vq.len() / 2;
+        let stolen = vq.split_off(keep);
+        model.replicas[victim].metrics.set_queue_depth(model.replicas[victim].queue.len());
+        stolen
+    };
+    let rep = &mut model.replicas[me];
+    rep.queue.extend(stolen);
+    rep.metrics.set_queue_depth(rep.queue.len());
+    rep.metrics.record_steal();
+    obs::add(obs::Counter::ServeSteals, 1);
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::ServeError;
+
+    /// Synthetic backend: identity-ish logits, affine plan costs.
+    struct CostBackend {
+        batches: Vec<usize>,
+    }
+
+    impl Backend for CostBackend {
+        fn name(&self) -> &str {
+            "cost-backend"
+        }
+        fn input_shape(&self) -> &[usize] {
+            &[2, 2, 1]
+        }
+        fn classes(&self) -> usize {
+            4
+        }
+        fn batch_sizes(&self) -> Vec<usize> {
+            self.batches.clone()
+        }
+        fn run_batch(&self, batch: usize, input: &[f32]) -> Result<Vec<f32>, CadnnError> {
+            // logits = the image itself (4 values in, 4 classes out)
+            Ok(input[..batch * 4].to_vec())
+        }
+        fn plan_costs(&self) -> Vec<(usize, f64)> {
+            self.batches.iter().map(|&b| (b, 100.0 + 1_000.0 * b as f64)).collect()
+        }
+    }
+
+    fn cfg() -> QueueConfig {
+        QueueConfig { calibration: Some(1.0), ..QueueConfig::default() }
+    }
+
+    #[test]
+    fn two_arrivals_in_one_window_ride_one_batch() {
+        let mut sim = SimServer::new();
+        sim.register("m", Box::new(CostBackend { batches: vec![1, 2, 4, 8] }), cfg())
+            .unwrap();
+        let a = sim.submit_at(0, ServeRequest::new("m", vec![1.0; 4])).unwrap();
+        let b = sim.submit_at(500, ServeRequest::new("m", vec![2.0; 4]).topk(1)).unwrap();
+        sim.run();
+        let ra = a.try_recv().unwrap();
+        let rb = b.try_recv().unwrap();
+        assert_eq!(ra.batch, 2, "window held the batch until the co-rider arrived");
+        assert_eq!(rb.batch, 2);
+        // batch formed at the head's window expiry (t = 0 + 2000µs),
+        // exec = 100 + 1000·2 = 2100µs
+        assert_eq!(ra.latency_us, 4_100.0);
+        assert_eq!(rb.latency_us, 3_600.0);
+        assert_eq!(ra.logits().unwrap(), &[1.0; 4]);
+        assert_eq!(rb.topk.as_ref().unwrap()[0], (0, 2.0));
+        let s = &sim.stats()["m"];
+        assert_eq!(s.requests, 2);
+        assert_eq!(s.batches, 1);
+        assert_eq!(s.committed_us, 0, "commitments fully released");
+    }
+
+    #[test]
+    fn queued_deadline_expiry_is_exact_and_attributed() {
+        let mut sim = SimServer::new();
+        // quota admits only ~one outstanding request; the second is shed
+        let mut c = cfg();
+        c.max_batch = 1;
+        sim.register("m", Box::new(CostBackend { batches: vec![1] }), c).unwrap();
+        // batch of 1 costs 1100µs; deadline 40_000µs is feasible for the
+        // first two, but the third arrives behind 2 queued batches and a
+        // deadline the admission estimate says it cannot make
+        let a = sim
+            .submit_at(0, ServeRequest::new("m", vec![0.0; 4]).deadline_us(40_000))
+            .unwrap();
+        let b = sim
+            .submit_at(10, ServeRequest::new("m", vec![0.0; 4]).deadline_us(40_000))
+            .unwrap();
+        let c2 = sim
+            .submit_at(20, ServeRequest::new("m", vec![0.0; 4]).deadline_us(1_000))
+            .unwrap();
+        sim.run();
+        assert!(a.try_recv().unwrap().outcome.is_ok());
+        assert!(b.try_recv().unwrap().outcome.is_ok());
+        let shed = c2.try_recv().unwrap();
+        assert_eq!(
+            shed.outcome,
+            Err(ServeError::Deadline { deadline_us: 1_000, waited_us: 0 }),
+            "predicted completion exceeds the 1ms budget: shed at enqueue"
+        );
+        let s = &sim.stats()["m"];
+        assert_eq!(s.shed_deadline, 1);
+        assert_eq!(s.deadline_misses_queue, 0);
+        assert_eq!(s.requests, 2);
+    }
+
+    #[test]
+    fn replicas_share_a_burst_and_audit_records_the_dispatch() {
+        let mut sim = SimServer::new();
+        let mut c = cfg();
+        c.replicas = 2;
+        c.max_batch = 2;
+        sim.register("m", Box::new(CostBackend { batches: vec![1, 2] }), c).unwrap();
+        let rxs: Vec<_> = (0..6)
+            .map(|_| sim.submit_at(0, ServeRequest::new("m", vec![0.0; 4])).unwrap())
+            .collect();
+        sim.run();
+        for rx in rxs {
+            assert!(rx.try_recv().unwrap().outcome.is_ok());
+        }
+        let used: std::collections::BTreeSet<usize> =
+            sim.exec_log().iter().map(|e| e.executed).collect();
+        assert_eq!(used.len(), 2, "both replicas executed work");
+        assert_eq!(sim.exec_log().len(), 6);
+        let s = &sim.stats()["m"];
+        assert_eq!(s.requests, 6);
+        assert_eq!(s.replicas, 2);
+    }
+
+    #[test]
+    fn identical_runs_are_bit_identical() {
+        let run_once = || {
+            let mut sim = SimServer::new();
+            let mut c = cfg();
+            c.replicas = 2;
+            sim.register("m", Box::new(CostBackend { batches: vec![1, 2, 4, 8] }), c)
+                .unwrap();
+            let rxs: Vec<_> = (0..40)
+                .map(|i| {
+                    sim.submit_at(
+                        i * 300,
+                        ServeRequest::new("m", vec![i as f32; 4]).deadline_us(20_000),
+                    )
+                    .unwrap()
+                })
+                .collect();
+            let end = sim.run();
+            let outcomes: Vec<String> = rxs
+                .iter()
+                .map(|rx| format!("{:?}", rx.try_recv().map(|r| (r.id, r.latency_us, r.batch))))
+                .collect();
+            let log: Vec<ExecRecord> = sim.exec_log().to_vec();
+            (end, outcomes, log)
+        };
+        assert_eq!(run_once(), run_once());
+    }
+}

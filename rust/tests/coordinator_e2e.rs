@@ -1,8 +1,14 @@
 //! Integration: the serving coordinator over real PJRT artifacts —
 //! batching invariants, response integrity, shutdown under load.
-//! Requires `make artifacts`; no-ops otherwise.
+//! Requires `make artifacts`; no-ops otherwise. The burst/batching
+//! invariant also runs artifact-free and deterministically on the
+//! virtual-clock simulator (`burst_batches_deterministically_on_the_
+//! virtual_clock`), so the coalescing property is always exercised.
 
+use cadnn::api::{Backend, Engine};
 use cadnn::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig};
+use cadnn::serve::sim::SimServer;
+use cadnn::serve::{QueueConfig, ServeRequest};
 use cadnn::util::rng::Rng;
 
 fn cfg(variant: &str) -> Option<CoordinatorConfig> {
@@ -101,4 +107,49 @@ fn unknown_model_fails_fast() {
     let Some(mut cfg) = cfg("dense") else { return };
     cfg.model = "nonexistent".into();
     assert!(Coordinator::start(cfg).is_err());
+}
+
+/// The `serves_burst_and_batches` invariant, artifact-free and with no
+/// wall-clock dependence: a real lenet5 engine runs as the backend of
+/// the virtual-clock simulator, a 24-request burst at t = 0 coalesces
+/// into max-batch groups, and every request is answered exactly once.
+#[test]
+fn burst_batches_deterministically_on_the_virtual_clock() {
+    let engine = Engine::native("lenet5").batch_sizes(&[1, 2, 4, 8]).build().unwrap();
+    let input_len: usize = engine.input_shape().iter().product();
+    let mut sim = SimServer::new();
+    let qcfg = QueueConfig { max_batch: 8, max_wait_us: 1_000, ..QueueConfig::default() };
+    sim.register_with_cost(
+        "lenet5",
+        Box::new(engine) as Box<dyn Backend>,
+        qcfg,
+        Box::new(|b| 500 + 250 * b as u64),
+    )
+    .unwrap();
+    let mut rng = Rng::new(5);
+    let n = 24;
+    let rxs: Vec<_> = (0..n)
+        .map(|_| {
+            let mut img = vec![0.0f32; input_len];
+            rng.fill_normal(&mut img, 0.5);
+            sim.submit_at(0, ServeRequest::new("lenet5", img)).unwrap()
+        })
+        .collect();
+    sim.run();
+    let mut ids = Vec::new();
+    for rx in rxs {
+        let resp = rx.try_recv().unwrap();
+        let logits = resp.logits().expect("backend must not error");
+        assert_eq!(logits.len(), 10);
+        assert!(logits.iter().all(|v| v.is_finite()));
+        assert!(resp.latency_us > 0.0);
+        assert!(resp.batch >= 1 && resp.batch <= 8);
+        ids.push(resp.id);
+    }
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), n, "every request answered exactly once");
+    let s = &sim.stats()["lenet5"];
+    assert_eq!(s.requests as usize, n);
+    assert_eq!(s.batches, 3, "a 24-burst at max_batch 8 forms exactly 3 full batches");
 }

@@ -1,0 +1,453 @@
+//! Fleet-scale serving, proven on the deterministic virtual-clock
+//! simulator (`serve::sim::SimServer`): admission control sheds at
+//! enqueue exactly when the cost-model prediction says a deadline is
+//! infeasible, admitted requests always finish within that prediction,
+//! replica work stealing preserves FIFO prefixes, and the shed/served/
+//! queue-miss counters exactly partition the offered load.
+//!
+//! Every assertion here is exact — no sleeps, no wall-clock tolerances.
+//! The simulator prices batch execution at the same `plan units ×
+//! us_per_unit` estimate the scheduler and admission controller use, and
+//! all costs are chosen integral so the scheduler's EWMA sits at its
+//! fixed point: estimates never drift, so `==` is sound.
+
+use cadnn::api::Backend;
+use cadnn::error::CadnnError;
+use cadnn::serve::sim::{AdmitRecord, SimServer};
+use cadnn::serve::{AdmissionConfig, AdmitDecision, QueueConfig, ServeError, ServeRequest};
+use cadnn::util::prop::{check_n, CASES};
+use cadnn::util::rng::Rng;
+use cadnn::{prop_assert, prop_assert_eq};
+use std::cell::Cell;
+
+/// Synthetic backend with an affine plan-cost model:
+/// `cost_at(b) = overhead + per_image · b` plan units.
+struct AffineBackend {
+    batches: Vec<usize>,
+    per_image: f64,
+    overhead: f64,
+}
+
+impl AffineBackend {
+    fn new(batches: &[usize], per_image: f64, overhead: f64) -> AffineBackend {
+        AffineBackend { batches: batches.to_vec(), per_image, overhead }
+    }
+}
+
+impl Backend for AffineBackend {
+    fn name(&self) -> &str {
+        "affine"
+    }
+    fn input_shape(&self) -> &[usize] {
+        &[2, 2, 1]
+    }
+    fn classes(&self) -> usize {
+        4
+    }
+    fn batch_sizes(&self) -> Vec<usize> {
+        self.batches.clone()
+    }
+    fn run_batch(&self, batch: usize, input: &[f32]) -> Result<Vec<f32>, CadnnError> {
+        Ok(input[..batch * 4].to_vec())
+    }
+    fn plan_costs(&self) -> Vec<(usize, f64)> {
+        self.batches
+            .iter()
+            .map(|&b| (b, self.overhead + self.per_image * b as f64))
+            .collect()
+    }
+}
+
+/// min/worst batch estimates in µs for an affine backend at `upu`.
+fn estimates(b: &AffineBackend, upu: f64) -> (u64, u64) {
+    let min_b = *b.batches.iter().min().unwrap() as f64;
+    let max_b = *b.batches.iter().max().unwrap() as f64;
+    let min = ((b.overhead + b.per_image * min_b) * upu).ceil() as u64;
+    let worst = ((b.overhead + b.per_image * max_b) * upu).ceil() as u64;
+    (min.max(1), worst)
+}
+
+fn predicted_of(rec: &AdmitRecord) -> u64 {
+    match rec.decision {
+        AdmitDecision::Admit { predicted_us, .. } => predicted_us,
+        AdmitDecision::ShedDeadline { predicted_us } => predicted_us,
+        AdmitDecision::Shed { predicted_us, .. } => predicted_us,
+    }
+}
+
+/// The acceptance scenario from the issue: one model, offered load at 2×
+/// the calibrated per-request capacity, 15ms deadlines. Admission sheds
+/// the excess with early `ServeError::Deadline` answers at enqueue
+/// (`waited_us == 0`), queue-expiry misses stay at exactly zero, and
+/// every admitted request's measured latency is within the completion
+/// estimate its own admission decision recorded — so the admitted p99 is
+/// within the admission estimate by construction.
+#[test]
+fn overload_at_twice_capacity_sheds_early_and_admitted_p99_holds() {
+    let mut sim = SimServer::new();
+    let backend = AffineBackend::new(&[1, 2, 4, 8], 1_000.0, 100.0);
+    let (min_est, worst) = estimates(&backend, 1.0);
+    assert_eq!((min_est, worst), (1_100, 8_100));
+    let cfg = QueueConfig { calibration: Some(1.0), ..QueueConfig::default() };
+    sim.register("m", Box::new(backend), cfg).unwrap();
+
+    // amortized capacity is one request per min_est = 1100µs; offer one
+    // every 550µs = exactly 2× calibrated capacity
+    let n = 300u64;
+    let deadline_us = 15_000u64;
+    let rxs: Vec<_> = (0..n)
+        .map(|i| {
+            let req = ServeRequest::new("m", vec![i as f32; 4]).deadline_us(deadline_us);
+            sim.submit_at(i * 550, req).unwrap()
+        })
+        .collect();
+    sim.run();
+
+    let audit = sim.audit().to_vec();
+    assert_eq!(audit.len() as u64, n, "every arrival gets an admission decision");
+    let (mut ok, mut shed) = (0u64, 0u64);
+    for (rx, rec) in rxs.iter().zip(&audit) {
+        let resp = rx.try_recv().expect("every request is answered");
+        match (&resp.outcome, &rec.decision) {
+            (Ok(_), AdmitDecision::Admit { predicted_us, .. }) => {
+                ok += 1;
+                // the latency bound is per-request and exact: measured
+                // completion never exceeds the admission estimate, so
+                // p50 = p99 = max all sit within it
+                assert!(
+                    resp.latency_us <= *predicted_us as f64,
+                    "admitted latency {} > predicted {}",
+                    resp.latency_us,
+                    predicted_us
+                );
+                assert!(*predicted_us <= deadline_us, "admit implies feasible");
+            }
+            (Err(ServeError::Deadline { deadline_us: d, waited_us }), dec) => {
+                shed += 1;
+                assert_eq!(*d, deadline_us);
+                assert_eq!(*waited_us, 0, "shed at enqueue, before any queueing");
+                assert_eq!(resp.batch, 0);
+                assert!(
+                    matches!(dec, AdmitDecision::ShedDeadline { .. }),
+                    "early Deadline answers come only from admission: {dec:?}"
+                );
+                assert!(predicted_of(rec) > deadline_us, "shed implies infeasible");
+            }
+            (outcome, dec) => panic!("unexpected outcome {outcome:?} for decision {dec:?}"),
+        }
+    }
+
+    let s = &sim.stats()["m"];
+    assert!(shed > 0, "2× overload must shed");
+    assert!(ok > 0, "admission keeps serving at capacity");
+    assert_eq!(ok + shed, n, "shed + served exactly partition the offered load");
+    assert_eq!(s.requests, ok);
+    assert_eq!(s.shed_deadline, shed);
+    assert_eq!((s.shed_quota, s.shed_backlog), (0, 0));
+    assert_eq!(s.deadline_misses, 0, "admitted requests never expire in queue");
+    assert_eq!(s.committed_us, 0, "every commitment released at reply");
+}
+
+/// Strictly-under-capacity traffic is never shed and never misses: with
+/// arrival gaps ≥ one batching window plus the worst batch estimate, the
+/// queue drains to empty between arrivals, so every prediction is the
+/// empty-backlog `max_wait + worst` bound and every deadline ≥ that
+/// bound is admitted and met.
+#[test]
+fn under_capacity_traffic_is_never_shed() {
+    check_n("under-capacity no shed", CASES, |rng| {
+        let (per_image, overhead) = (2 * rng.range(100, 900), 2 * rng.range(50, 400));
+        let upu = [0.5, 1.0, 2.0][rng.below(3)];
+        let backend = AffineBackend::new(&[1, 2, 4, 8], per_image as f64, overhead as f64);
+        let (_, worst) = estimates(&backend, upu);
+        let cfg = QueueConfig { calibration: Some(upu), ..QueueConfig::default() };
+        let bound = cfg.max_wait_us + worst;
+        let mut sim = SimServer::new();
+        sim.register("m", Box::new(backend), cfg).unwrap();
+        let n = (1 + rng.below(30)) as u64;
+        let mut at = 0u64;
+        let rxs: Vec<_> = (0..n)
+            .map(|i| {
+                let rx = sim
+                    .submit_at(
+                        at,
+                        ServeRequest::new("m", vec![i as f32; 4])
+                            .deadline_us(bound + rng.below(50_000) as u64),
+                    )
+                    .unwrap();
+                at += bound + rng.below(5_000) as u64;
+                rx
+            })
+            .collect();
+        sim.run();
+        for rx in &rxs {
+            let resp = rx.try_recv().expect("answered");
+            prop_assert!(resp.outcome.is_ok(), "under capacity, got {:?}", resp.outcome);
+            prop_assert!(
+                resp.latency_us <= bound as f64,
+                "latency {} exceeds empty-backlog bound {bound}",
+                resp.latency_us
+            );
+        }
+        let s = &sim.stats()["m"];
+        prop_assert_eq!(s.requests, n);
+        prop_assert_eq!(s.shed_deadline + s.shed_quota + s.shed_backlog, 0);
+        prop_assert_eq!(s.deadline_misses, 0);
+        Ok(())
+    });
+}
+
+/// Property (a) from the issue: **no admitted request ever misses a
+/// deadline the admission controller called feasible**. Single replica,
+/// integral costs (so estimates are exact), random load far past
+/// saturation: every admitted request completes with latency ≤ the
+/// `predicted_us` its own admission decision recorded, queue-expiry
+/// misses are exactly zero, and the counters partition the offered load.
+#[test]
+fn prop_admitted_requests_meet_the_admission_prediction() {
+    check_n("admitted never miss", 200, |rng| {
+        let (per_image, overhead) = (2 * rng.range(100, 900), 2 * rng.range(50, 400));
+        let upu = [0.5, 1.0, 2.0][rng.below(3)];
+        let backend = AffineBackend::new(&[1, 2, 4, 8], per_image as f64, overhead as f64);
+        let (min_est, worst) = estimates(&backend, upu);
+        let cfg = QueueConfig {
+            calibration: Some(upu),
+            max_wait_us: [1_000, 2_000, 4_000][rng.below(3)],
+            ..QueueConfig::default()
+        };
+        let mut sim = SimServer::new();
+        sim.register("m", Box::new(backend), cfg).unwrap();
+        let n = (10 + rng.below(40)) as u64;
+        let mut at = 0u64;
+        let rxs: Vec<_> = (0..n)
+            .map(|i| {
+                // mean gap ≈ min_est/2: ~2× overload, with bursts
+                at += rng.below(min_est.max(2) as usize) as u64;
+                let mut req = ServeRequest::new("m", vec![i as f32; 4]);
+                if rng.below(4) > 0 {
+                    // deadlines from hopeless to generous
+                    req = req.deadline_us(cfg.max_wait_us + rng.below(4 * worst as usize) as u64);
+                }
+                sim.submit_at(at, req).unwrap()
+            })
+            .collect();
+        sim.run();
+        let audit = sim.audit().to_vec();
+        prop_assert_eq!(audit.len() as u64, n);
+        let mut served = 0u64;
+        for (rx, rec) in rxs.iter().zip(&audit) {
+            let resp = rx.try_recv().expect("answered");
+            match rec.decision {
+                AdmitDecision::Admit { predicted_us, .. } => {
+                    served += 1;
+                    prop_assert!(
+                        resp.outcome.is_ok(),
+                        "admitted id {} must be served, got {:?}",
+                        rec.id,
+                        resp.outcome
+                    );
+                    prop_assert!(
+                        resp.latency_us <= predicted_us as f64,
+                        "id {}: latency {} > predicted {}",
+                        rec.id,
+                        resp.latency_us,
+                        predicted_us
+                    );
+                }
+                AdmitDecision::ShedDeadline { .. } => {
+                    prop_assert!(
+                        matches!(
+                            resp.outcome,
+                            Err(ServeError::Deadline { waited_us: 0, .. })
+                        ),
+                        "shed id {} answered {:?}",
+                        rec.id,
+                        resp.outcome
+                    );
+                }
+                AdmitDecision::Shed { .. } => {
+                    prop_assert!(false, "no quota/backlog configured, got {:?}", rec.decision)
+                }
+            }
+        }
+        let s = &sim.stats()["m"];
+        prop_assert_eq!(s.requests, served);
+        prop_assert_eq!(s.requests + s.shed_deadline, n);
+        prop_assert_eq!(s.deadline_misses, 0);
+        prop_assert_eq!(s.committed_us, 0);
+        Ok(())
+    });
+}
+
+/// Property (b) from the issue: **work stealing never reorders a
+/// replica's FIFO prefix**. With 2–3 replicas and bursty arrivals, the
+/// requests a replica dispatched *and* executed itself (its FIFO prefix;
+/// steals only ever remove the tail) execute in strictly increasing
+/// submission order, and the partition invariant still holds.
+#[test]
+fn prop_work_stealing_preserves_fifo_prefixes() {
+    let steals_seen = Cell::new(0u64);
+    check_n("steal keeps FIFO prefix", 200, |rng| {
+        let (per_image, overhead) = (2 * rng.range(100, 900), 2 * rng.range(50, 400));
+        let backend = AffineBackend::new(&[1, 2, 4], per_image as f64, overhead as f64);
+        let (min_est, _) = estimates(&backend, 1.0);
+        let cfg = QueueConfig {
+            calibration: Some(1.0),
+            replicas: 2 + rng.below(2),
+            max_batch: 4,
+            ..QueueConfig::default()
+        };
+        let mut sim = SimServer::new();
+        sim.register("m", Box::new(backend), cfg).unwrap();
+        let n = (10 + rng.below(40)) as u64;
+        let mut at = 0u64;
+        let rxs: Vec<_> = (0..n)
+            .map(|i| {
+                // bursts of up to 6 at the same instant force imbalance,
+                // long gaps let idle replicas steal
+                if rng.below(6) == 0 {
+                    at += min_est * rng.range(1, 4) as u64;
+                }
+                sim.submit_at(at, ServeRequest::new("m", vec![i as f32; 4])).unwrap()
+            })
+            .collect();
+        sim.run();
+        for rx in &rxs {
+            prop_assert!(rx.try_recv().expect("answered").outcome.is_ok(), "no deadlines set");
+        }
+        // each replica's self-dispatched, self-executed stream is its
+        // FIFO prefix: submission ids strictly increase
+        for r in 0..cfg.replicas {
+            let mut last = 0u64;
+            for e in sim.exec_log().iter().filter(|e| e.dispatched == r && e.executed == r) {
+                prop_assert!(
+                    e.id > last,
+                    "replica {r} executed id {} after {} — prefix reordered",
+                    e.id,
+                    last
+                );
+                last = e.id;
+            }
+        }
+        let s = &sim.stats()["m"];
+        steals_seen.set(steals_seen.get() + s.steals);
+        prop_assert_eq!(s.requests, n);
+        prop_assert_eq!(s.replicas, cfg.replicas as u64);
+        prop_assert_eq!(sim.exec_log().len() as u64, n);
+        prop_assert_eq!(s.committed_us, 0);
+        Ok(())
+    });
+    assert!(steals_seen.get() > 0, "200 bursty cases must exercise work stealing");
+}
+
+/// Property (c) from the issue: **shed + served + queue-miss counts
+/// exactly partition the offered load**, under random per-model quotas
+/// and a random global backlog cap, across two models sharing the
+/// budget. Commitments are always fully released.
+#[test]
+fn prop_counters_partition_offered_load_under_quotas() {
+    check_n("counters partition load", 200, |rng| {
+        let admission = AdmissionConfig {
+            enabled: true,
+            max_backlog_us: if rng.below(2) == 0 {
+                Some(rng.range(2_000, 30_000) as u64)
+            } else {
+                None
+            },
+        };
+        let mut sim = SimServer::with_admission(admission);
+        let names = ["a", "b"];
+        let mut min_ests = [0u64; 2];
+        for (i, name) in names.iter().enumerate() {
+            let (per_image, overhead) = (2 * rng.range(100, 900), 2 * rng.range(50, 400));
+            let backend = AffineBackend::new(&[1, 2, 4, 8], per_image as f64, overhead as f64);
+            min_ests[i] = estimates(&backend, 1.0).0;
+            let cfg = QueueConfig {
+                calibration: Some(1.0),
+                quota_us: if rng.below(2) == 0 {
+                    Some(rng.range(1_000, 20_000) as u64)
+                } else {
+                    None
+                },
+                replicas: 1 + rng.below(2),
+                ..QueueConfig::default()
+            };
+            sim.register(*name, Box::new(backend), cfg).unwrap();
+        }
+        let mut offered = [0u64; 2];
+        let mut at = 0u64;
+        let n = 20 + rng.below(60);
+        let rxs: Vec<_> = (0..n)
+            .map(|i| {
+                let m = rng.below(2);
+                offered[m] += 1;
+                at += rng.below(min_ests[m].max(2) as usize) as u64;
+                let mut req = ServeRequest::new(names[m], vec![i as f32; 4]);
+                if rng.below(3) == 0 {
+                    req = req.deadline_us(rng.range(1_000, 60_000) as u64);
+                }
+                sim.submit_at(at, req).unwrap()
+            })
+            .collect();
+        sim.run();
+        for rx in &rxs {
+            rx.try_recv().expect("every request is answered exactly once");
+        }
+        let stats = sim.stats();
+        for (i, name) in names.iter().enumerate() {
+            let s = &stats[*name];
+            let answered = s.requests
+                + s.shed_deadline
+                + s.shed_quota
+                + s.shed_backlog
+                + s.deadline_misses
+                + s.backend_errors;
+            prop_assert!(
+                answered == offered[i],
+                "model {name}: served {} + shed ({},{},{}) + missed {} + errors {} != offered {}",
+                s.requests,
+                s.shed_deadline,
+                s.shed_quota,
+                s.shed_backlog,
+                s.deadline_misses,
+                s.backend_errors,
+                offered[i]
+            );
+            prop_assert_eq!(s.committed_us, 0);
+            if let (Some(q), Some(u)) = (s.quota_us, s.quota_utilization) {
+                prop_assert!(q > 0 && u == 0.0, "drained quota shows zero utilization");
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Disabling admission restores the pre-admission behavior: nothing is
+/// shed at enqueue, infeasible requests expire in the queue instead, and
+/// the taxonomy splits the two miss shapes (shed vs queue expiry).
+#[test]
+fn disabled_admission_shifts_sheds_into_queue_expiries() {
+    let run = |enabled: bool| {
+        let mut sim =
+            SimServer::with_admission(AdmissionConfig { enabled, max_backlog_us: None });
+        let backend = AffineBackend::new(&[1, 2, 4, 8], 1_000.0, 100.0);
+        let cfg = QueueConfig { calibration: Some(1.0), ..QueueConfig::default() };
+        sim.register("m", Box::new(backend), cfg).unwrap();
+        for i in 0..40u64 {
+            // 4× overload with a deadline only the first few can meet
+            sim.submit_at(i * 275, ServeRequest::new("m", vec![0.0; 4]).deadline_us(12_000))
+                .unwrap();
+        }
+        sim.run();
+        sim.stats()["m"].clone()
+    };
+    let on = run(true);
+    assert!(on.shed_deadline > 0, "admission sheds the infeasible tail");
+    assert_eq!(on.deadline_misses, 0, "and nothing admitted ever expires");
+    assert_eq!(on.requests + on.shed_deadline, 40);
+
+    let off = run(false);
+    assert_eq!(off.shed_total(), 0, "no admission, no sheds");
+    assert!(off.deadline_misses > 0, "the same overload now dies in the queue");
+    assert_eq!(off.requests + off.deadline_misses, 40);
+}

@@ -217,6 +217,44 @@ fn served_requests_emit_complete_lifecycle_spans() {
     assert!(m.latency_hist.is_some() && m.queue_wait_hist.is_some());
 }
 
+/// Replica metrics aggregation rests on `HistSnapshot::merge` being an
+/// order-insensitive bucket-wise fold. Pin it against the
+/// single-recorder oracle: 500 random samples split round-robin across
+/// three recorders merge — in every grouping and order — to exactly the
+/// histogram one recorder sees: count, extrema, bucket contents, and
+/// the quantiles snapshots report. (Means recombine count-weighted;
+/// with non-power-of-two counts that recombination is exact up to f64
+/// rounding, so it gets an epsilon while everything else gets `==`.)
+#[test]
+fn replica_hist_merge_matches_a_single_recorder_oracle() {
+    use cadnn::util::rng::Rng;
+    let mut rng = Rng::new(0x0b5);
+    let oracle = Log2Hist::new();
+    let parts = [Log2Hist::new(), Log2Hist::new(), Log2Hist::new()];
+    for i in 0..500 {
+        // spread over ~6 decades, fractional values included
+        let v = rng.below(1_000_000) as f64 / 7.0;
+        oracle.record(v);
+        parts[i % 3].record(v);
+    }
+    let [a, b, c] = parts.map(|h| h.snapshot().unwrap());
+    let want = oracle.snapshot().unwrap();
+    let orders = [
+        a.merge(&b).merge(&c),       // left fold
+        a.merge(&b.merge(&c)),       // right fold (associativity)
+        c.merge(&b).merge(&a),       // reversed (commutativity)
+        b.merge(&c.merge(&a)),       // rotated
+    ];
+    for got in &orders {
+        assert_eq!(got.count, want.count);
+        assert_eq!(got.min_us, want.min_us);
+        assert_eq!(got.max_us, want.max_us);
+        assert_eq!(got.buckets, want.buckets, "bucket-wise merge must be exact");
+        assert_eq!((got.p50(), got.p95(), got.p99()), (want.p50(), want.p95(), want.p99()));
+        assert!((got.mean_us - want.mean_us).abs() <= 1e-9 * want.mean_us.abs());
+    }
+}
+
 #[test]
 fn disabled_recorder_records_nothing() {
     if !obs::COMPILED {

@@ -8,8 +8,9 @@ use cadnn::compress::profile::paper_profile;
 use cadnn::error::CadnnError;
 use cadnn::exec::Personality;
 use cadnn::models;
+use cadnn::serve::sim::SimServer;
 use cadnn::serve::{
-    pick_batch, BatchPolicy, QueueConfig, Scheduler, ServeError, ServeRequest, Server,
+    pick_batch, BatchPolicy, QueueConfig, Scheduler, ServeError, ServeRequest, Server, ShedCause,
 };
 use cadnn::util::rng::Rng;
 
@@ -150,11 +151,10 @@ fn duplicate_model_name_is_a_config_error() {
     assert!(matches!(err, CadnnError::Config { .. }), "{err}");
 }
 
-/// A backend slow enough that a short-deadline request expires while the
-/// previous batch executes.
+/// A backend the virtual-clock simulator can make arbitrarily slow
+/// (execution time is injected; `run_batch` itself is instant).
 struct SlowBackend {
     shape: Vec<usize>,
-    delay_ms: u64,
 }
 
 impl Backend for SlowBackend {
@@ -171,7 +171,6 @@ impl Backend for SlowBackend {
         vec![1, 2]
     }
     fn run_batch(&self, batch: usize, _input: &[f32]) -> Result<Vec<f32>, CadnnError> {
-        std::thread::sleep(std::time::Duration::from_millis(self.delay_ms));
         Ok(vec![0.25; batch * 4])
     }
 }
@@ -179,44 +178,161 @@ impl Backend for SlowBackend {
 /// The deadline-miss path: a request whose deadline passes while queued
 /// is answered with an explicit `ServeError::Deadline` (never executed),
 /// counted in the per-model metrics — while the in-flight request still
-/// gets its logits.
+/// gets its logits. Formerly a sleep-based test; on the virtual clock
+/// every number is exact.
 #[test]
 fn expired_request_gets_explicit_deadline_error() {
+    let mut sim = SimServer::new();
+    // every batch takes 120ms of virtual time
+    sim.register_with_cost(
+        "slow",
+        Box::new(SlowBackend { shape: vec![2, 2, 1] }),
+        qcfg(),
+        Box::new(|_| 120_000),
+    )
+    .unwrap();
+    // r1 starts executing (120ms); r2 arrives mid-flight with a 5ms
+    // deadline, so it has expired long before the worker frees up
+    let r1 = sim.submit_at(0, ServeRequest::new("slow", vec![0.1; 4])).unwrap();
+    let r2 = sim
+        .submit_at(40_000, ServeRequest::new("slow", vec![0.2; 4]).deadline_ms(5))
+        .unwrap();
+    sim.run();
+
+    let first = r1.try_recv().expect("served request answered");
+    assert!(first.outcome.is_ok(), "in-flight request must succeed: {:?}", first.outcome);
+    // 1000µs batching window + 120_000µs execution, exactly
+    assert_eq!(first.latency_us, 121_000.0);
+    let second = r2.try_recv().expect("expired request still answered");
+    assert_eq!(
+        second.outcome,
+        Err(ServeError::Deadline { deadline_us: 5_000, waited_us: 81_000 }),
+        "expired while the first batch ran: 121_000 - 40_000 = 81_000µs waited"
+    );
+    assert_eq!(second.batch, 0, "expired requests never ride a batch");
+
+    let stats = sim.stats();
+    assert_eq!(stats["slow"].deadline_misses, 1);
+    assert_eq!(
+        stats["slow"].deadline_misses_infeasible, 1,
+        "5ms budget < the observed 120ms batch estimate: attributed as infeasible"
+    );
+    assert_eq!(stats["slow"].requests, 1, "only the served request counts");
+}
+
+/// Replica sharding on the threaded server: one logical model backed by
+/// two workers. Every request of a burst is answered exactly once, the
+/// merged snapshot accounts for all of them, and per-replica snapshots
+/// are exposed. (No timing assertions — scheduling across real threads
+/// is nondeterministic; the exact load-split properties live in the
+/// virtual-clock `fleet_serving` suite.)
+#[test]
+fn replicated_model_serves_a_burst_across_workers() {
+    let engine = Engine::native("lenet5").batch_sizes(&[1, 2, 4]).build().unwrap();
+    let server = Server::builder()
+        .engine_with("m", &engine, QueueConfig { replicas: 2, ..qcfg() })
+        .build()
+        .unwrap();
+    let img = image(28 * 28, 21);
+    let n = 12;
+    let rxs: Vec<_> = (0..n)
+        .map(|_| server.submit(ServeRequest::new("m", img.clone())).unwrap())
+        .collect();
+    let mut ids = Vec::new();
+    for rx in rxs {
+        let resp = rx.recv().unwrap();
+        assert_eq!(resp.logits().expect("no backend errors").len(), 10);
+        ids.push(resp.id);
+    }
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), n, "every request answered exactly once");
+    let stats = server.stats();
+    assert_eq!(stats["m"].requests as usize, n);
+    assert_eq!(stats["m"].replicas, 2);
+    assert_eq!(server.replica_stats("m").unwrap().len(), 2);
+    server.shutdown().unwrap();
+}
+
+/// A backend that parks inside `run_batch` until the test releases it —
+/// a rendezvous, not a sleep — so quota admission can be exercised on
+/// the threaded server with zero timing assumptions.
+struct GatedBackend {
+    started: std::sync::mpsc::Sender<()>,
+    gate: std::sync::Mutex<std::sync::mpsc::Receiver<()>>,
+}
+
+impl Backend for GatedBackend {
+    fn name(&self) -> &str {
+        "gated"
+    }
+    fn input_shape(&self) -> &[usize] {
+        &[2, 2, 1]
+    }
+    fn classes(&self) -> usize {
+        4
+    }
+    fn batch_sizes(&self) -> Vec<usize> {
+        vec![1, 2]
+    }
+    fn run_batch(&self, batch: usize, _input: &[f32]) -> Result<Vec<f32>, CadnnError> {
+        let _ = self.started.send(());
+        let _ = self.gate.lock().unwrap().recv();
+        Ok(vec![0.5; batch * 4])
+    }
+    fn plan_costs(&self) -> Vec<(usize, f64)> {
+        vec![(1, 1.0), (2, 2.0)]
+    }
+}
+
+/// Per-model quota on the threaded server: while one admitted request
+/// holds the entire (tiny) quota in flight, every further submit is
+/// refused synchronously with `ServeError::Shed { cause: quota }`, and
+/// the shed + served counts exactly partition the offered load.
+#[test]
+fn quota_sheds_synchronously_while_budget_is_held() {
+    let (started_tx, started_rx) = std::sync::mpsc::channel();
+    let (gate_tx, gate_rx) = std::sync::mpsc::channel();
     let server = Server::builder()
         .backend_with(
-            "slow",
-            || {
-                let b: Box<dyn Backend> =
-                    Box::new(SlowBackend { shape: vec![2, 2, 1], delay_ms: 120 });
+            "gated",
+            move || {
+                let b: Box<dyn Backend> = Box::new(GatedBackend {
+                    started: started_tx,
+                    gate: std::sync::Mutex::new(gate_rx),
+                });
                 Ok(b)
             },
-            qcfg(),
+            QueueConfig {
+                quota_us: Some(1),
+                calibration: Some(1_000.0),
+                ..qcfg()
+            },
         )
         .build()
         .unwrap();
-    // r1 starts executing (~120ms); r2 arrives mid-flight with a 5ms
-    // deadline, so it has expired long before the worker frees up
-    let r1 = server.submit(ServeRequest::new("slow", vec![0.1; 4])).unwrap();
-    std::thread::sleep(std::time::Duration::from_millis(40));
-    let r2 = server
-        .submit(ServeRequest::new("slow", vec![0.2; 4]).deadline_ms(5))
-        .unwrap();
-
-    let first = r1.recv().expect("served request answered");
-    assert!(first.outcome.is_ok(), "in-flight request must succeed: {:?}", first.outcome);
-    let second = r2.recv().expect("expired request still answered");
-    match second.outcome {
-        Err(ServeError::Deadline { deadline_us, waited_us }) => {
-            assert_eq!(deadline_us, 5_000);
-            assert!(waited_us >= 5_000, "waited {waited_us}µs < budget");
+    let first = server.submit(ServeRequest::new("gated", vec![0.1; 4])).unwrap();
+    // rendezvous: the worker is now parked inside run_batch, so the
+    // first request's 1000µs commitment is held against the 1µs quota
+    started_rx.recv().expect("first batch started");
+    let n = 7;
+    let shed_rxs: Vec<_> = (0..n)
+        .map(|_| server.submit(ServeRequest::new("gated", vec![0.2; 4])).unwrap())
+        .collect();
+    for rx in &shed_rxs {
+        let resp = rx.recv().expect("shed requests are answered immediately");
+        match resp.outcome {
+            Err(ServeError::Shed { cause, .. }) => assert_eq!(cause, ShedCause::Quota),
+            other => panic!("expected quota shed, got {other:?}"),
         }
-        other => panic!("expected Deadline, got {other:?}"),
+        assert_eq!(resp.batch, 0);
     }
-    assert_eq!(second.batch, 0, "expired requests never ride a batch");
-
+    gate_tx.send(()).unwrap();
+    assert!(first.recv().unwrap().outcome.is_ok(), "the admitted request completes");
     let stats = server.stats();
-    assert_eq!(stats["slow"].deadline_misses, 1);
-    assert_eq!(stats["slow"].requests, 1, "only the served request counts");
+    assert_eq!(stats["gated"].requests, 1);
+    assert_eq!(stats["gated"].shed_quota, n);
+    assert_eq!(stats["gated"].quota_us, Some(1));
     server.shutdown().unwrap();
 }
 
