@@ -22,7 +22,9 @@ use cadnn::kernels::pattern::pattern_gemm;
 use cadnn::kernels::sparse::{csr_gemm, csr_gemm_parallel};
 use cadnn::kernels::Epilogue;
 use cadnn::passes::layout::TileConfig;
-use cadnn::planner::{choose, FormatPolicy};
+use cadnn::planner::db::{CostTable, PlanDb, Provenance, SpecKey};
+use cadnn::planner::search::search_layer;
+use cadnn::planner::{choose, plan_layer_valued, FormatPolicy, PlanCache, ValuePolicy};
 use cadnn::util::json::{obj, Json};
 use cadnn::util::rng::Rng;
 use cadnn::util::stats;
@@ -120,6 +122,103 @@ fn measure_obs_overhead(rng: &mut Rng) -> Json {
         ("enabled_p50_us", Json::Num(on)),
         ("overhead_pct", Json::Num(pct)),
     ])
+}
+
+/// Tuned (beam-searched) vs heuristic modeled cost, and warm-vs-cold
+/// plan wall time through the plan database, over the sweep shapes at
+/// 20% random density. The warm column is the `plan --tune --plan-db`
+/// replay path: every spec answered by a JSON-round-tripped database,
+/// zero searches, zero measurements.
+fn measure_plan_db(rng: &mut Rng) -> Json {
+    let table = CostTable::builtin();
+    let mut cache = PlanCache::default();
+    let mut db = PlanDb::in_memory();
+    let mut rows = Vec::new();
+    let mut report = Vec::new();
+    let mut specs = Vec::new();
+    for (m, hwio, label) in SHAPES {
+        let (k, n) = (hwio[0] * hwio[1] * hwio[2], hwio[3]);
+        let dense = random_weights(rng, k, n, 0.2);
+        let csr = CsrMatrix::from_dense(&dense, k, n);
+        let t0 = std::time::Instant::now();
+        let heuristic = {
+            let arts = cache.layer(label, &csr);
+            plan_layer_valued(FormatPolicy::Auto, ValuePolicy::Auto, None, &csr, m, hwio, arts)
+        };
+        let heur_us = t0.elapsed().as_secs_f64() * 1e6;
+        let spec = SpecKey::from_layer(
+            FormatPolicy::Auto,
+            ValuePolicy::Auto,
+            None,
+            &csr,
+            hwio,
+            db.device_fp(),
+        );
+        let arts = cache.layer(label, &csr);
+        let t1 = std::time::Instant::now();
+        let out = search_layer(
+            FormatPolicy::Auto,
+            ValuePolicy::Auto,
+            None,
+            &csr,
+            m,
+            hwio,
+            &table,
+            &[],
+            false,
+            spec.seed(),
+            arts,
+        );
+        let cold_us = t1.elapsed().as_secs_f64() * 1e6;
+        let tuned = out.best().expect("nonempty search").clone();
+        db.insert(spec, out.candidates, Provenance::Modeled);
+        specs.push((spec, label, heuristic, tuned, heur_us, cold_us));
+    }
+    // warm replay: the round-tripped database answers every spec
+    let mut warm_db =
+        PlanDb::load_str(&db.to_json().to_string_pretty()).expect("fresh database round-trips");
+    for (spec, label, heuristic, tuned, heur_us, cold_us) in specs {
+        let t2 = std::time::Instant::now();
+        let hit = warm_db.best_plan(&spec).expect("warm database answers its own spec");
+        let warm_us = t2.elapsed().as_secs_f64() * 1e6;
+        assert_eq!(hit, tuned.plan, "warm lookup must replay the cold search");
+        let ratio = if heuristic.cost_per_row > 0.0 {
+            tuned.cost / heuristic.cost_per_row
+        } else {
+            1.0
+        };
+        rows.push(vec![
+            label.to_string(),
+            format!("{:.0}", heuristic.cost_per_row),
+            heuristic.format.label().to_string(),
+            format!("{:.0}", tuned.cost),
+            tuned.plan.format.label().to_string(),
+            format!("{ratio:.3}"),
+            format!("{cold_us:.0}"),
+            format!("{warm_us:.1}"),
+        ]);
+        report.push(obj(vec![
+            ("layer", Json::Str(label.to_string())),
+            ("density", Json::Num(0.2)),
+            ("heuristic_cost", Json::Num(heuristic.cost_per_row)),
+            ("heuristic_format", Json::Str(heuristic.format.label().to_string())),
+            ("tuned_cost", Json::Num(tuned.cost)),
+            ("tuned_format", Json::Str(tuned.plan.format.label().to_string())),
+            ("tuned_over_heuristic", Json::Num(ratio)),
+            ("heuristic_plan_us", Json::Num(heur_us)),
+            ("cold_plan_us", Json::Num(cold_us)),
+            ("warm_plan_us", Json::Num(warm_us)),
+        ]));
+    }
+    println!("\n== plan search vs heuristic, cold vs warm plan time (modeled cost units) ==\n");
+    print_table(
+        &[
+            "layer", "heur_cost", "heur_fmt", "tuned_cost", "tuned_fmt", "tuned/heur", "cold_us",
+            "warm_us",
+        ],
+        &rows,
+    );
+    Json::Arr(report)
 }
 
 fn main() {
@@ -240,10 +339,12 @@ fn main() {
         ],
         &rows,
     );
+    let plan_db = measure_plan_db(&mut rng);
     let obs_overhead = measure_obs_overhead(&mut rng);
     let out = Json::Obj(vec![
         ("bench".to_string(), Json::Str("sparse_formats".to_string())),
         ("rows".to_string(), Json::Arr(report)),
+        ("plan_db".to_string(), plan_db),
         ("obs_overhead".to_string(), obs_overhead),
     ]);
     let path = "BENCH_sparse_formats.json";

@@ -39,7 +39,7 @@ use crate::error::CadnnError;
 use crate::exec::{ModelInstance, Personality};
 use crate::ir::Graph;
 use crate::models;
-use crate::planner::{ExecPlan, FormatPolicy, PlanCache, ValuePolicy};
+use crate::planner::{db, ExecPlan, FormatPolicy, PlanCache, ValuePolicy};
 use crate::tuner::TunerCache;
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -100,6 +100,8 @@ pub struct EngineBuilder {
     cache_bytes: usize,
     batch_sizes: Option<Vec<usize>>,
     threads: Option<usize>,
+    plan_db: Option<String>,
+    tune_plans: bool,
 }
 
 impl EngineBuilder {
@@ -114,6 +116,8 @@ impl EngineBuilder {
             cache_bytes: 2 << 20,
             batch_sizes: None,
             threads: None,
+            plan_db: None,
+            tune_plans: false,
         }
     }
 
@@ -187,6 +191,29 @@ impl EngineBuilder {
         self
     }
 
+    /// Attach a persistent plan database (format in `docs/PLANDB.md`):
+    /// layer plans whose spec — shape, sparsity structure, policies,
+    /// device generation — matches a stored entry are answered from
+    /// `path` without planning, and every cold search result is written
+    /// back when the build finishes. A missing file starts cold; a
+    /// corrupt or truncated file degrades to a cold search with a
+    /// warning, never an error. Requires [`Personality::CadnnSparse`].
+    pub fn plan_db(mut self, path: &str) -> EngineBuilder {
+        self.plan_db = Some(path.to_string());
+        self
+    }
+
+    /// Run the beam / branch-and-bound plan search with real kernel
+    /// measurements per pruned layer ([`crate::planner::search`])
+    /// instead of the one-shot heuristic. Combine with
+    /// [`EngineBuilder::plan_db`] to persist the results: a warm
+    /// database replans with zero measurements. Requires
+    /// [`Personality::CadnnSparse`]. Default: off.
+    pub fn tune_plans(mut self, on: bool) -> EngineBuilder {
+        self.tune_plans = on;
+        self
+    }
+
     /// Validate the configuration and construct the engine.
     pub fn build(self) -> Result<Engine, CadnnError> {
         if let Some(n) = self.threads {
@@ -207,6 +234,18 @@ impl EngineBuilder {
                 "value_bits pinned but personality is not CadnnSparse",
             ));
         }
+        if (self.plan_db.is_some() || self.tune_plans) && !self.personality.sparse() {
+            return Err(CadnnError::config(
+                "plan_db / tune_plans require the CadnnSparse personality",
+            ));
+        }
+        // one plan cache for whichever native arm runs below; carries the
+        // on-disk database and the tuning switch when configured
+        let mut plan_cache = PlanCache::default();
+        if let Some(path) = &self.plan_db {
+            plan_cache.attach_db(db::PlanDb::open(path));
+        }
+        plan_cache.set_tune(self.tune_plans);
         match self.source {
             ModelSource::Named(name) => {
                 let mut sizes = self.batch_sizes.clone().unwrap_or_else(|| vec![1]);
@@ -216,12 +255,12 @@ impl EngineBuilder {
                     return Err(CadnnError::config("batch sizes must be nonempty and nonzero"));
                 }
                 let mut cache = TunerCache::new();
-                // one plan cache across every batch variant: column
-                // clustering, densification, and pattern-library
-                // selection run once per pruned layer, not once per
-                // variant (weights are keyed by layer name, so variants
-                // share them exactly)
-                let mut plan_cache = PlanCache::default();
+                // the outer plan cache spans every batch variant: column
+                // clustering, densification, pattern-library selection,
+                // and (satellite of the plan database) the per-spec plan
+                // memo run once per pruned layer, not once per variant
+                // (weights are keyed by layer name, so variants share
+                // them exactly)
                 let mut instances = BTreeMap::new();
                 for &b in &sizes {
                     let g = models::build(&name, b)
@@ -243,9 +282,16 @@ impl EngineBuilder {
                     )?;
                     instances.insert(b, inst);
                 }
+                if let Err(e) = plan_cache.save_db() {
+                    crate::warn!("api", "plan database not saved: {e}");
+                }
                 let label = format!("{name}[{}]", self.personality.label());
                 let nb = Arc::new(NativeBackend::from_instances(label, instances)?);
-                Ok(Engine { backend: nb.clone(), native: Some(nb) })
+                Ok(Engine {
+                    backend: nb.clone(),
+                    native: Some(nb),
+                    tune: Some(plan_cache.tune_stats()),
+                })
             }
             ModelSource::Graph(g) => {
                 g.validate()?;
@@ -270,13 +316,20 @@ impl EngineBuilder {
                     self.cache_bytes,
                     self.sparse_format,
                     self.value_bits,
-                    None,
+                    Some(&mut plan_cache),
                 )?;
+                if let Err(e) = plan_cache.save_db() {
+                    crate::warn!("api", "plan database not saved: {e}");
+                }
                 let label = format!("{}[{}]", g.name, self.personality.label());
                 let mut instances = BTreeMap::new();
                 instances.insert(graph_batch, inst);
                 let nb = Arc::new(NativeBackend::from_instances(label, instances)?);
-                Ok(Engine { backend: nb.clone(), native: Some(nb) })
+                Ok(Engine {
+                    backend: nb.clone(),
+                    native: Some(nb),
+                    tune: Some(plan_cache.tune_stats()),
+                })
             }
             ModelSource::File { path } => {
                 let parsed = crate::front::parse_file(&path)?;
@@ -311,7 +364,6 @@ impl EngineBuilder {
                     return Err(CadnnError::config("batch sizes must be nonempty and nonzero"));
                 }
                 let mut cache = TunerCache::new();
-                let mut plan_cache = PlanCache::default();
                 let mut instances = BTreeMap::new();
                 for &b in &sizes {
                     let g = parsed.graph.with_batch(b)?;
@@ -327,9 +379,16 @@ impl EngineBuilder {
                     )?;
                     instances.insert(b, inst);
                 }
+                if let Err(e) = plan_cache.save_db() {
+                    crate::warn!("api", "plan database not saved: {e}");
+                }
                 let label = format!("{}[{}]", parsed.graph.name, self.personality.label());
                 let nb = Arc::new(NativeBackend::from_instances(label, instances)?);
-                Ok(Engine { backend: nb.clone(), native: Some(nb) })
+                Ok(Engine {
+                    backend: nb.clone(),
+                    native: Some(nb),
+                    tune: Some(plan_cache.tune_stats()),
+                })
             }
             ModelSource::Artifacts { dir, model, variant } => {
                 if self.batch_sizes.is_some() {
@@ -337,11 +396,16 @@ impl EngineBuilder {
                         "artifact batch variants come from the manifest, not the builder",
                     ));
                 }
+                if self.plan_db.is_some() || self.tune_plans {
+                    return Err(CadnnError::config(
+                        "artifact engines are pre-planned; plan_db / tune_plans do not apply",
+                    ));
+                }
                 // NOTE: with the real (non-stub) xla binding, PJRT handles
                 // are not Sync; artifact engines would then need the
                 // factory-based Coordinator::serve_with path instead.
                 let backend = Arc::new(ArtifactBackend::open(&dir, &model, &variant)?);
-                Ok(Engine { backend, native: None })
+                Ok(Engine { backend, native: None, tune: None })
             }
         }
     }
@@ -353,6 +417,10 @@ impl EngineBuilder {
 pub struct Engine {
     backend: Arc<dyn Backend + Send + Sync>,
     native: Option<Arc<NativeBackend>>,
+    /// Build-time planning counters (memo / database hits, searches,
+    /// measurements). `None` for artifact engines, whose plans were
+    /// fixed at compile time.
+    tune: Option<db::TuneStats>,
 }
 
 impl Engine {
@@ -438,6 +506,14 @@ impl Engine {
     /// kernels (profiling, weight inspection).
     pub fn native_backend(&self) -> Option<&NativeBackend> {
         self.native.as_deref()
+    }
+
+    /// Build-time plan-tuning counters: how many layer-planning requests
+    /// were answered by the in-process memo, the plan database, or a
+    /// cold search, and how many kernel measurements ran (see
+    /// [`crate::planner::db::TuneStats`]). `None` for artifact engines.
+    pub fn tune_stats(&self) -> Option<db::TuneStats> {
+        self.tune
     }
 }
 
@@ -589,6 +665,59 @@ mod tests {
             .err()
             .unwrap();
         assert!(matches!(err, CadnnError::Config { .. }), "{err}");
+    }
+
+    #[test]
+    fn plan_db_requires_sparse_personality() {
+        let err = Engine::native("lenet5").plan_db("x.json").build().err().unwrap();
+        assert!(matches!(err, CadnnError::Config { .. }), "{err}");
+        let err = Engine::native("lenet5").tune_plans(true).build().err().unwrap();
+        assert!(matches!(err, CadnnError::Config { .. }), "{err}");
+    }
+
+    #[test]
+    fn artifact_engine_rejects_plan_db() {
+        let err = Engine::artifacts("artifacts", "lenet5", "dense")
+            .personality(Personality::CadnnSparse)
+            .plan_db("x.json")
+            .build()
+            .err()
+            .unwrap();
+        assert!(matches!(err, CadnnError::Config { .. }), "{err}");
+    }
+
+    /// The plan database end-to-end through the public API: a cold build
+    /// writes its searched plans to disk, a rebuild answers every pruned
+    /// layer from the database without searching, and the two engines'
+    /// plans are bit-identical through the JSON round trip.
+    #[test]
+    fn plan_db_warm_rebuild_is_hit_only_and_identical() {
+        let path =
+            std::env::temp_dir().join(format!("cadnn_api_plandb_{}.json", std::process::id()));
+        std::fs::remove_file(&path).ok();
+        let g = models::build("lenet5", 1).unwrap();
+        let build = || {
+            Engine::native("lenet5")
+                .personality(Personality::CadnnSparse)
+                .sparsity_profile(paper_profile(&g))
+                .batch_sizes(&[1, 2])
+                .plan_db(path.to_str().unwrap())
+                .build()
+                .unwrap()
+        };
+        let cold = build();
+        let cs = cold.tune_stats().expect("native engines report tune stats");
+        assert!(cs.searched > 0, "cold build must search: {cs:?}");
+        assert_eq!(cs.measurements, 0, "database without tuning stays modeled: {cs:?}");
+        let warm = build();
+        std::fs::remove_file(&path).ok();
+        let ws = warm.tune_stats().unwrap();
+        assert_eq!(ws.searched, 0, "warm build must not search: {ws:?}");
+        assert_eq!(ws.measurements, 0, "{ws:?}");
+        assert!(ws.db_hits > 0, "{ws:?}");
+        let a = cold.exec_plan().unwrap().to_json().to_string_pretty();
+        let b = warm.exec_plan().unwrap().to_json().to_string_pretty();
+        assert_eq!(a, b, "warm plans must be bit-identical to the cold run's");
     }
 
     /// The value axis end-to-end through the public API: a pinned Q8

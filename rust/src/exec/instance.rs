@@ -520,25 +520,24 @@ impl ModelInstance {
             // the exported codebook width (if the compress report
             // declared one) is what ValuePolicy::Auto resolves against
             let declared = profile.and_then(|p| p.quant_bits(&node.name));
-            let arts = build_cache.layer(&node.name, csr);
-            let mut lp = if measured_formats {
-                planner::plan_layer_measured_valued(
-                    policy,
-                    value_policy,
-                    declared,
-                    csr,
-                    m,
-                    *hwio,
-                    name_seed(&node.name),
-                    arts,
-                )
-            } else {
-                planner::plan_layer_valued(policy, value_policy, declared, csr, m, *hwio, arts)
-            };
+            let mut lp = build_cache.plan_node(
+                &node.name,
+                policy,
+                value_policy,
+                declared,
+                csr,
+                m,
+                *hwio,
+                measured_formats,
+            );
             // one image contributes m/batch GEMM rows to this layer —
             // with cost_per_row this makes ExecPlan::cost_at batch-aware
             lp.rows_per_image = m / batch;
             plan.layers.insert(node.name.clone(), lp.clone());
+            // re-borrow the layer's artifacts for the payload rewrite:
+            // the same memoized permutation / densified matrix the plan
+            // was priced with (computed on demand after a database hit)
+            let arts = build_cache.layer(&node.name, csr);
             let qbits = lp.value_bits.bits() as u8;
             match lp.format {
                 SparseFormat::Csr => {

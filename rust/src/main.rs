@@ -9,12 +9,21 @@
 //!            [--format auto|csr|bsr|pattern]
 //!            [--value-bits auto|f32|q8|q4]
 //!            [--pruning element|block|pattern] [--measured]
-//!                                           per-layer sparse-format plan
+//!            [--tune] [--plan-db PATH]       per-layer sparse-format plan;
+//!                                           --tune runs the beam search with
+//!                                           kernel measurements, --plan-db
+//!                                           persists/reuses results (a warm
+//!                                           database replans with zero
+//!                                           measurements; see docs/PLANDB.md)
+//! cadnn db <stats|prune|export|import>
+//!          [--plan-db PATH] [--out F] [--from F]
+//!                                           manage the plan database
 //! cadnn serve [--model M | --model-file F.cadnn] [--variant V]
 //!             [--requests N] [--rps R] [--native]
 //!             [--models a=lenet5,b=models/net.cadnn:sparse] [--deadline-ms D]
 //!             [--greedy] [--no-planner] [--topk K]
-//!             [--format auto|csr|bsr|pattern] serve a Poisson trace and report
+//!             [--format auto|csr|bsr|pattern]
+//!             [--plan-db PATH]              serve a Poisson trace and report
 //!                                           (--native / --models: no artifacts
 //!                                           needed — the multi-model Server
 //!                                           batches over native engines with
@@ -28,10 +37,15 @@
 //!                                           (chrome://tracing / Perfetto),
 //!                                           --cost-report writes the
 //!                                           predicted-vs-measured residuals
-//! cadnn calibrate [--cost-report FILE]      host kernel calibration table;
+//! cadnn calibrate [--cost-report FILE] [--apply-db PATH]
+//!                                           host kernel calibration table;
 //!                                           with --cost-report, re-fit the
 //!                                           planner COST_* constants from a
-//!                                           profile run's residuals
+//!                                           profile run's residuals;
+//!                                           --apply-db folds the re-fits into
+//!                                           the plan database as a new device
+//!                                           generation (stale entries become
+//!                                           search seeds, never answers)
 //! ```
 //!
 //! Anywhere a builtin name is accepted, `--model-file` (or a `--models`
@@ -112,12 +126,13 @@ fn main() -> Result<()> {
         Some("compress") => cmd_compress(&args),
         Some("tune") => cmd_tune(&args),
         Some("plan") => cmd_plan(&args),
+        Some("db") => cmd_db(&args),
         Some("serve") => cmd_serve(&args),
         Some("profile") => cmd_profile(&args),
         Some("calibrate") => cmd_calibrate(&args),
         _ => {
             eprintln!(
-                "usage: cadnn <figure2|table2|compress|tune|plan|serve|profile|calibrate> [options]"
+                "usage: cadnn <figure2|table2|compress|tune|plan|db|serve|profile|calibrate> [options]"
             );
             Ok(())
         }
@@ -169,6 +184,19 @@ fn cmd_plan(args: &[String]) -> Result<()> {
         eprintln!("measuring candidate kernels per layer (tuner mode)...");
         builder = builder.tuned(true);
     }
+    let tune = flag(args, "--tune");
+    // --tune without an explicit --plan-db still persists: searching is
+    // exactly the work the default database exists to amortize
+    let plan_db_path = opt(args, "--plan-db").or_else(|| {
+        tune.then(|| cadnn::planner::db::default_path().to_string_lossy().into_owned())
+    });
+    if let Some(p) = &plan_db_path {
+        builder = builder.plan_db(p);
+    }
+    if tune {
+        eprintln!("searching per-layer plans (beam search + kernel measurements)...");
+        builder = builder.tune_plans(true);
+    }
     let engine = builder.build()?;
     let inst = engine
         .native_backend()
@@ -195,6 +223,77 @@ fn cmd_plan(args: &[String]) -> Result<()> {
         .map(|(f, c)| format!("{f} x{c}"))
         .collect();
     println!("\n{} pruned layers planned: {}", inst.plan.len(), counts.join(", "));
+    if tune || plan_db_path.is_some() {
+        if let Some(ts) = engine.tune_stats() {
+            println!("plan-db: {}", ts.render());
+        }
+        if let Some(p) = &plan_db_path {
+            println!("plan-db path: {p}");
+        }
+    }
+    Ok(())
+}
+
+/// Manage the persistent plan database (format and spec-key definition
+/// in `docs/PLANDB.md`).
+fn cmd_db(args: &[String]) -> Result<()> {
+    use cadnn::planner::db::PlanDb;
+    let path = opt(args, "--plan-db")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(cadnn::planner::db::default_path);
+    match args.get(1).map(String::as_str) {
+        Some("stats") => {
+            let db = PlanDb::open(&path);
+            if let Some(why) = db.degraded() {
+                eprintln!("warning: {}: {why} (showing an empty database)", path.display());
+            }
+            println!("plan database {}", path.display());
+            println!("{}", db.stats().render());
+        }
+        Some("prune") => {
+            let mut db = PlanDb::open(&path);
+            if let Some(why) = db.degraded() {
+                return Err(anyhow!("{}: {why}; nothing to prune", path.display()));
+            }
+            let (kept, dropped) = db.prune();
+            db.save().map_err(|e| anyhow!(e))?;
+            println!("pruned {}: kept {kept}, dropped {dropped} stale entries", path.display());
+        }
+        Some("export") => {
+            let db = PlanDb::open(&path);
+            if let Some(why) = db.degraded() {
+                return Err(anyhow!("{}: {why}; nothing to export", path.display()));
+            }
+            let text = db.to_json().to_string_pretty();
+            match opt(args, "--out") {
+                Some(out) => {
+                    std::fs::write(&out, &text).map_err(|e| anyhow!("writing {out}: {e}"))?;
+                    println!("exported {} entries -> {out}", db.len());
+                }
+                None => println!("{text}"),
+            }
+        }
+        Some("import") => {
+            let from =
+                opt(args, "--from").ok_or_else(|| anyhow!("db import needs --from PATH"))?;
+            let other = PlanDb::open(&from);
+            if let Some(why) = other.degraded() {
+                return Err(anyhow!("cannot import {from}: {why}"));
+            }
+            let mut db = PlanDb::open(&path);
+            let (added, merged) = db.merge(&other);
+            db.save().map_err(|e| anyhow!(e))?;
+            println!(
+                "imported {from} into {}: {added} new entries, {merged} merged",
+                path.display()
+            );
+        }
+        _ => {
+            eprintln!(
+                "usage: cadnn db <stats|prune|export|import> [--plan-db PATH] [--out F] [--from F]"
+            );
+        }
+    }
     Ok(())
 }
 
@@ -452,6 +551,13 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     if opt(args, "--format").is_some() && !specs.iter().any(|(_, _, sp)| *sp) {
         return Err(anyhow!("--format applies to sparse variants only"));
     }
+    // sparse engines consult the plan database at model load, so a
+    // database tuned offline (`cadnn plan --tune --plan-db`) makes serve
+    // startup plan-search-free
+    let plan_db = opt(args, "--plan-db");
+    if plan_db.is_some() && !specs.iter().any(|(_, _, sp)| *sp) {
+        return Err(anyhow!("--plan-db applies to sparse variants only"));
+    }
     let replicas: usize =
         opt(args, "--replicas").and_then(|s| s.parse().ok()).unwrap_or(1).max(1);
     let quota_us: Option<u64> = opt(args, "--quota-us").and_then(|s| s.parse().ok());
@@ -494,8 +600,16 @@ fn cmd_serve(args: &[String]) -> Result<()> {
                 eb = eb.sparsity_profile(paper_profile(&g));
             }
             eb = eb.sparse_format(policy_fmt);
+            if let Some(p) = &plan_db {
+                eb = eb.plan_db(p);
+            }
         }
         let engine = eb.build()?;
+        if plan_db.is_some() {
+            if let Some(ts) = engine.tune_stats() {
+                println!("  plan-db: {}", ts.render());
+            }
+        }
         let planned = qcfg.planned && !engine.plan_costs().is_empty();
         println!(
             "registered '{alias}' -> {} ({} batch variants, {} replica(s){}, scheduler: {})",
@@ -678,7 +792,30 @@ fn cmd_calibrate(args: &[String]) -> Result<()> {
         let report = cadnn::obs::CostReport::from_json(&json)
             .map_err(|e| anyhow!("invalid cost report {path}: {e}"))?;
         print!("{}", report.render());
+        // --apply-db: fold the re-fitted constants into the plan database
+        // as a new device generation; entries priced under the old table
+        // stop answering exactly and become search seeds
+        if let Some(dbp) = opt(args, "--apply-db") {
+            use cadnn::planner::db::PlanDb;
+            let mut db = PlanDb::open(&dbp);
+            let sugg = report.suggestions();
+            let gen = db
+                .apply_calibration(
+                    &sugg,
+                    Some(report.us_per_unit),
+                    &format!("calibrate --cost-report {path}"),
+                )
+                .map_err(|e| anyhow!(e))?;
+            db.save().map_err(|e| anyhow!(e))?;
+            println!(
+                "applied {} constant re-fits as device generation {gen:016x} -> {dbp}",
+                sugg.len()
+            );
+        }
         return Ok(());
+    }
+    if opt(args, "--apply-db").is_some() {
+        return Err(anyhow!("--apply-db requires --cost-report FILE"));
     }
     println!("measuring host kernels...");
     let t = calibrate::measure_host();

@@ -1,0 +1,1288 @@
+//! The persistent plan database: memoized planner search results, keyed
+//! by layer *spec*, versioned by *device generation*.
+//!
+//! [`super::search`] explores the compositional per-layer space (format x
+//! block shape x reorder x value width x cutover). That exploration is
+//! worth memoizing across builds and models: two layers with the same
+//! shape and sparsity *structure* under the same policies cost the same,
+//! whatever model they came from. [`PlanDb`] stores the top-k
+//! [`super::LayerPlan`] candidates per [`SpecKey`] in one JSON file
+//! (`~/.cache/cadnn/plandb.json` or `--plan-db PATH`), so tuning cost is
+//! paid once per (shape, structure, device) family.
+//!
+//! **Device generations.** Each entry is keyed to the cost-model
+//! generation it was searched under: a [`CostTable`] (the `COST_*`
+//! constants, possibly re-fitted by `cadnn calibrate --cost-report
+//! --apply-db`, plus the calibrated µs/unit scale) fingerprinted into a
+//! generation id. A new generation *soft-invalidates* older entries:
+//! they stop answering exact lookups but remain available as search
+//! seeds ([`PlanDb::seed_plans`]), so recalibration never throws the
+//! searched space away.
+//!
+//! **Durability.** Loading never panics and never errors out of a build:
+//! a missing file is a fresh database, and a corrupt / truncated /
+//! wrong-version / oversized file degrades to a cold (empty) database
+//! with a [`crate::warn!`] — the same anti-DoS discipline as
+//! `cadnn::front` (hard caps on file size, entry count, and candidate
+//! count). Saving goes through a temp file + atomic rename, so a reader
+//! racing a writer sees either the old or the new file, never a torn
+//! one.
+
+use super::{FormatPolicy, LayerPlan, ValuePolicy};
+use crate::compress::csr::CsrMatrix;
+use crate::compress::qsparse::ValueBits;
+use crate::util::json::{obj, Json};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// On-disk format version; a mismatch degrades to a cold database (old
+/// files are not migrated — plans are cheap to re-search).
+pub const FORMAT_VERSION: usize = 1;
+/// Candidates retained per spec (ranked best-first).
+pub const TOP_K: usize = 4;
+
+// Anti-DoS caps, mirroring `front::parser`: a hostile or corrupt file is
+// rejected (degrading to a cold database), never chased.
+const MAX_FILE_BYTES: usize = 1 << 26;
+const MAX_ENTRIES: usize = 1 << 16;
+const MAX_CANDIDATES: usize = 16;
+const MAX_GENERATIONS: usize = 64;
+const MAX_SPEC_DIM: usize = 1 << 48;
+const MAX_HITS: f64 = (1u64 << 50) as f64;
+
+fn hex64(v: u64) -> String {
+    format!("{v:016x}")
+}
+
+fn parse_hex64(s: &str) -> Option<u64> {
+    if s.len() != 16 {
+        return None;
+    }
+    u64::from_str_radix(s, 16).ok()
+}
+
+fn fnv(h: u64, x: u64) -> u64 {
+    (h ^ x).wrapping_mul(0x100000001b3)
+}
+
+const FNV_BASIS: u64 = 0xcbf29ce484222325;
+
+// ---------------------------------------------------------------------------
+// SpecKey
+// ---------------------------------------------------------------------------
+
+/// What makes two layers "the same layer" to the planner: geometry, the
+/// sparsity *structure* (support fingerprint — values don't change
+/// format costs), the planning policies, the declared codebook width,
+/// and the device generation the costs were searched under.
+///
+/// `device_fp` sorts last, so one `BTreeMap` range scan finds every
+/// generation's entry for a spec ([`PlanDb::seed_plans`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct SpecKey {
+    pub rows: usize,
+    pub cols: usize,
+    pub nnz: usize,
+    /// Conv weight shape `[kh, kw, cin, cout]` (`[1, 1, k, n]` for GEMM)
+    /// — the spatial-vs-GEMM and pattern-eligibility signal.
+    pub hwio: [usize; 4],
+    /// FNV-1a over the CSR support (`col_idx` + `row_ptr`), *not* the
+    /// values: two prunings with the same support cost the same in every
+    /// format, whatever the surviving magnitudes are.
+    pub support_fp: u64,
+    pub policy: FormatPolicy,
+    pub value_policy: ValuePolicy,
+    /// Codebook width the compress report declared for this layer
+    /// (`SparsityProfile::quant_bits`), resolved by `ValuePolicy::Auto`.
+    pub declared: Option<u8>,
+    /// The [`CostTable`] generation id ([`CostTable::fingerprint`]).
+    pub device_fp: u64,
+}
+
+/// FNV-1a over a CSR matrix's support only (shape + `col_idx` +
+/// `row_ptr`) — the structure part of a [`SpecKey`].
+pub fn support_fingerprint(csr: &CsrMatrix) -> u64 {
+    let mut h = FNV_BASIS;
+    h = fnv(h, csr.rows as u64);
+    h = fnv(h, csr.cols as u64);
+    for &c in &csr.col_idx {
+        h = fnv(h, c as u64);
+    }
+    for &p in &csr.row_ptr {
+        h = fnv(h, p as u64);
+    }
+    h
+}
+
+/// The deterministic tie/measurement seed for a layer spec — what
+/// [`super::choose_measured`] seeds its input generator from, so
+/// identical specs resolve identically across builds and processes
+/// (device-independent: the generation does not change the layer).
+pub fn spec_seed(
+    policy: FormatPolicy,
+    value_policy: ValuePolicy,
+    declared: Option<u8>,
+    csr: &CsrMatrix,
+    hwio: [usize; 4],
+) -> u64 {
+    SpecKey::from_layer(policy, value_policy, declared, csr, hwio, 0).seed()
+}
+
+impl SpecKey {
+    /// Build the key for one pruned layer under the given policies and
+    /// device generation.
+    pub fn from_layer(
+        policy: FormatPolicy,
+        value_policy: ValuePolicy,
+        declared: Option<u8>,
+        csr: &CsrMatrix,
+        hwio: [usize; 4],
+        device_fp: u64,
+    ) -> SpecKey {
+        SpecKey {
+            rows: csr.rows,
+            cols: csr.cols,
+            nnz: csr.nnz(),
+            hwio,
+            support_fp: support_fingerprint(csr),
+            policy,
+            value_policy,
+            declared,
+            device_fp,
+        }
+    }
+
+    /// FNV-1a over every field — the spec's deterministic hash, used to
+    /// seed measurement inputs and break exact cost ties.
+    pub fn seed(&self) -> u64 {
+        let mut h = FNV_BASIS;
+        for v in [self.rows, self.cols, self.nnz] {
+            h = fnv(h, v as u64);
+        }
+        for v in self.hwio {
+            h = fnv(h, v as u64);
+        }
+        h = fnv(h, self.support_fp);
+        for &b in self.policy.label().as_bytes() {
+            h = fnv(h, b as u64);
+        }
+        for &b in self.value_policy.label().as_bytes() {
+            h = fnv(h, b as u64);
+        }
+        h = fnv(h, self.declared.map(|b| b as u64 + 1).unwrap_or(0));
+        h = fnv(h, self.device_fp);
+        h
+    }
+
+    /// The same spec under a different device generation.
+    pub fn with_device(&self, device_fp: u64) -> SpecKey {
+        SpecKey { device_fp, ..*self }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut kv = vec![
+            ("rows", Json::Num(self.rows as f64)),
+            ("cols", Json::Num(self.cols as f64)),
+            ("nnz", Json::Num(self.nnz as f64)),
+            (
+                "hwio",
+                Json::Arr(self.hwio.iter().map(|&v| Json::Num(v as f64)).collect()),
+            ),
+            ("support", Json::Str(hex64(self.support_fp))),
+            ("policy", Json::Str(self.policy.label().to_string())),
+            ("values", Json::Str(self.value_policy.label().to_string())),
+        ];
+        if let Some(b) = self.declared {
+            kv.push(("declared", Json::Num(b as f64)));
+        }
+        kv.push(("device", Json::Str(hex64(self.device_fp))));
+        obj(kv)
+    }
+
+    pub fn from_json(j: &Json) -> Option<SpecKey> {
+        let dim = |key: &str| -> Option<usize> {
+            let v = j.get(key)?.as_usize()?;
+            (v <= MAX_SPEC_DIM).then_some(v)
+        };
+        let Json::Arr(hw) = j.get("hwio")? else {
+            return None;
+        };
+        if hw.len() != 4 {
+            return None;
+        }
+        let mut hwio = [0usize; 4];
+        for (slot, v) in hwio.iter_mut().zip(hw) {
+            let d = v.as_usize()?;
+            if d > MAX_SPEC_DIM {
+                return None;
+            }
+            *slot = d;
+        }
+        let declared = match j.get("declared") {
+            None => None,
+            Some(v) => {
+                let b = v.as_usize()?;
+                if b == 0 || b > 32 {
+                    return None;
+                }
+                Some(b as u8)
+            }
+        };
+        Some(SpecKey {
+            rows: dim("rows")?,
+            cols: dim("cols")?,
+            nnz: dim("nnz")?,
+            hwio,
+            support_fp: parse_hex64(j.get("support")?.as_str()?)?,
+            policy: FormatPolicy::parse(j.get("policy")?.as_str()?)?,
+            value_policy: ValuePolicy::parse(j.get("values")?.as_str()?)?,
+            declared,
+            device_fp: parse_hex64(j.get("device")?.as_str()?)?,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CostTable + generations
+// ---------------------------------------------------------------------------
+
+/// One device generation's cost model: the `planner::COST_*` constants
+/// (possibly re-fitted from [`crate::obs::report::CostReport`]
+/// residuals) plus the calibrated units→µs scale, when one converged.
+/// Fingerprinted into the generation id every [`SpecKey`] carries.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CostTable {
+    pub dense_mac: f64,
+    pub csr_nnz: f64,
+    pub bsr_4x1: f64,
+    pub bsr_4x4: f64,
+    pub pattern_val: f64,
+    pub pattern_kernel: f64,
+    pub lut_q8: f64,
+    pub lut_q4: f64,
+    /// Calibrated wall-clock scale (µs per cost unit) from a profiled
+    /// run; lets the search derive real parallel cutovers without
+    /// measuring. `None` before any calibration reached the table.
+    pub us_per_unit: Option<f64>,
+}
+
+impl CostTable {
+    /// The compiled-in constants — the generation every fresh database
+    /// starts from.
+    pub fn builtin() -> CostTable {
+        CostTable {
+            dense_mac: super::COST_DENSE_MAC,
+            csr_nnz: super::COST_CSR_NNZ,
+            bsr_4x1: super::COST_BSR_4X1,
+            bsr_4x4: super::COST_BSR_4X4,
+            pattern_val: super::COST_PATTERN_VAL,
+            pattern_kernel: super::COST_PATTERN_KERNEL,
+            lut_q8: super::COST_LUT_Q8,
+            lut_q4: super::COST_LUT_Q4,
+            us_per_unit: None,
+        }
+    }
+
+    fn fields(&self) -> [f64; 8] {
+        [
+            self.dense_mac,
+            self.csr_nnz,
+            self.bsr_4x1,
+            self.bsr_4x4,
+            self.pattern_val,
+            self.pattern_kernel,
+            self.lut_q8,
+            self.lut_q4,
+        ]
+    }
+
+    /// FNV-1a over the constants' bit patterns and the calibration — the
+    /// device generation id.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = FNV_BASIS;
+        for v in self.fields() {
+            h = fnv(h, v.to_bits());
+        }
+        match self.us_per_unit {
+            None => h = fnv(h, 0),
+            Some(u) => {
+                h = fnv(h, 1);
+                h = fnv(h, u.to_bits());
+            }
+        }
+        h
+    }
+
+    /// Set one constant by its `planner::COST_*` name (the names
+    /// [`crate::obs::report::CostReport::suggestions`] emits). Rejects
+    /// unknown names and non-finite / non-positive values.
+    pub fn apply(&mut self, name: &str, value: f64) -> bool {
+        if !value.is_finite() || value <= 0.0 {
+            return false;
+        }
+        let slot = match name {
+            "COST_DENSE_MAC" => &mut self.dense_mac,
+            "COST_CSR_NNZ" => &mut self.csr_nnz,
+            "COST_BSR_4X1" => &mut self.bsr_4x1,
+            "COST_BSR_4X4" => &mut self.bsr_4x4,
+            "COST_PATTERN_VAL" => &mut self.pattern_val,
+            "COST_PATTERN_KERNEL" => &mut self.pattern_kernel,
+            "COST_LUT_Q8" => &mut self.lut_q8,
+            "COST_LUT_Q4" => &mut self.lut_q4,
+            _ => return false,
+        };
+        *slot = value;
+        true
+    }
+
+    /// The LUT cost multiplier for a value width (1.0 for f32) — the
+    /// table-driven counterpart of [`super::lut_cost_factor`].
+    pub fn lut_factor(&self, v: ValueBits) -> f64 {
+        match v {
+            ValueBits::F32 => 1.0,
+            ValueBits::Q8 => self.lut_q8,
+            ValueBits::Q4 => self.lut_q4,
+        }
+    }
+
+    /// Per-stored-value cost of a BSR block shape (unknown shapes fall
+    /// back to the 4x1 rate, like [`super::BSR_CANDIDATES`] pricing).
+    pub fn bsr(&self, br: usize, bc: usize) -> f64 {
+        match (br, bc) {
+            (4, 1) => self.bsr_4x1,
+            (4, 4) => self.bsr_4x4,
+            _ => self.bsr_4x1,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut kv = vec![
+            ("dense_mac", Json::Num(self.dense_mac)),
+            ("csr_nnz", Json::Num(self.csr_nnz)),
+            ("bsr_4x1", Json::Num(self.bsr_4x1)),
+            ("bsr_4x4", Json::Num(self.bsr_4x4)),
+            ("pattern_val", Json::Num(self.pattern_val)),
+            ("pattern_kernel", Json::Num(self.pattern_kernel)),
+            ("lut_q8", Json::Num(self.lut_q8)),
+            ("lut_q4", Json::Num(self.lut_q4)),
+        ];
+        if let Some(u) = self.us_per_unit {
+            kv.push(("us_per_unit", Json::Num(u)));
+        }
+        obj(kv)
+    }
+
+    pub fn from_json(j: &Json) -> Option<CostTable> {
+        let pos = |key: &str| -> Option<f64> {
+            let v = j.get(key)?.as_f64()?;
+            (v.is_finite() && v > 0.0).then_some(v)
+        };
+        let us_per_unit = match j.get("us_per_unit") {
+            None => None,
+            Some(v) => {
+                let u = v.as_f64()?;
+                if !u.is_finite() || u <= 0.0 {
+                    return None;
+                }
+                Some(u)
+            }
+        };
+        Some(CostTable {
+            dense_mac: pos("dense_mac")?,
+            csr_nnz: pos("csr_nnz")?,
+            bsr_4x1: pos("bsr_4x1")?,
+            bsr_4x4: pos("bsr_4x4")?,
+            pattern_val: pos("pattern_val")?,
+            pattern_kernel: pos("pattern_kernel")?,
+            lut_q8: pos("lut_q8")?,
+            lut_q4: pos("lut_q4")?,
+            us_per_unit,
+        })
+    }
+}
+
+/// One device profile generation: an id (the table fingerprint), a
+/// monotonically growing sequence number, the table itself, and a
+/// human-readable provenance note.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Generation {
+    pub id: u64,
+    pub seq: usize,
+    pub note: String,
+    pub table: CostTable,
+}
+
+impl Generation {
+    fn builtin() -> Generation {
+        let table = CostTable::builtin();
+        Generation { id: table.fingerprint(), seq: 0, note: "builtin".to_string(), table }
+    }
+
+    fn to_json(&self) -> Json {
+        obj(vec![
+            ("id", Json::Str(hex64(self.id))),
+            ("seq", Json::Num(self.seq as f64)),
+            ("note", Json::Str(self.note.clone())),
+            ("costs", self.table.to_json()),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Option<Generation> {
+        let table = CostTable::from_json(j.get("costs")?)?;
+        let id = parse_hex64(j.get("id")?.as_str()?)?;
+        if id != table.fingerprint() {
+            return None; // tampered / hand-edited: id must match the table
+        }
+        Some(Generation {
+            id,
+            seq: j.get("seq")?.as_usize()?,
+            note: j.get("note")?.as_str()?.to_string(),
+            table,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Entries
+// ---------------------------------------------------------------------------
+
+/// Where an entry's candidates came from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Provenance {
+    /// Cost-model search, no kernel timing.
+    Modeled,
+    /// Search refined by real-kernel measurement (`--tune`).
+    Measured,
+    /// Merged in by `cadnn db import`.
+    Imported,
+}
+
+impl Provenance {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Provenance::Modeled => "modeled",
+            Provenance::Measured => "measured",
+            Provenance::Imported => "imported",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Provenance> {
+        match s {
+            "modeled" => Some(Provenance::Modeled),
+            "measured" => Some(Provenance::Measured),
+            "imported" => Some(Provenance::Imported),
+            _ => None,
+        }
+    }
+}
+
+/// One ranked plan candidate: the plan, its modeled cost per GEMM row
+/// (comparable across generations of the same table), and the measured
+/// serial µs when `--tune` timed it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StoredCandidate {
+    pub plan: LayerPlan,
+    pub cost: f64,
+    pub measured_us: Option<f64>,
+}
+
+impl StoredCandidate {
+    /// Dedup identity: two candidates proposing the same execution
+    /// configuration are the same candidate.
+    fn identity(&self) -> (String, usize, bool, usize) {
+        (
+            self.plan.format.label(),
+            self.plan.value_bits.bits(),
+            self.plan.reorder,
+            self.plan.parallel_cutover,
+        )
+    }
+
+    fn to_json(&self) -> Json {
+        let mut kv = vec![("plan", self.plan.to_json()), ("cost", Json::Num(self.cost))];
+        if let Some(us) = self.measured_us {
+            kv.push(("measured_us", Json::Num(us)));
+        }
+        obj(kv)
+    }
+
+    fn from_json(j: &Json) -> Option<StoredCandidate> {
+        let cost = j.get("cost")?.as_f64()?;
+        if !cost.is_finite() || cost < 0.0 {
+            return None;
+        }
+        let measured_us = match j.get("measured_us") {
+            None => None,
+            Some(v) => {
+                let us = v.as_f64()?;
+                if !us.is_finite() || us < 0.0 {
+                    return None;
+                }
+                Some(us)
+            }
+        };
+        Some(StoredCandidate { plan: LayerPlan::from_json(j.get("plan")?)?, cost, measured_us })
+    }
+}
+
+/// One spec's memoized search result: candidates ranked best-first
+/// (index 0 is what [`PlanDb::best_plan`] answers), plus hit/provenance
+/// metadata.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DbEntry {
+    pub candidates: Vec<StoredCandidate>,
+    pub hits: u64,
+    pub provenance: Provenance,
+}
+
+impl DbEntry {
+    fn to_json(&self, spec: &SpecKey) -> Json {
+        obj(vec![
+            ("spec", spec.to_json()),
+            ("hits", Json::Num(self.hits as f64)),
+            ("provenance", Json::Str(self.provenance.label().to_string())),
+            (
+                "candidates",
+                Json::Arr(self.candidates.iter().map(StoredCandidate::to_json).collect()),
+            ),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Option<(SpecKey, DbEntry)> {
+        let spec = SpecKey::from_json(j.get("spec")?)?;
+        let hits_f = j.get("hits")?.as_f64()?;
+        if !(0.0..=MAX_HITS).contains(&hits_f) {
+            return None;
+        }
+        let Json::Arr(cands) = j.get("candidates")? else {
+            return None;
+        };
+        if cands.is_empty() || cands.len() > MAX_CANDIDATES {
+            return None;
+        }
+        let candidates =
+            cands.iter().map(StoredCandidate::from_json).collect::<Option<Vec<_>>>()?;
+        Some((
+            spec,
+            DbEntry {
+                candidates,
+                hits: hits_f as u64,
+                provenance: Provenance::parse(j.get("provenance")?.as_str()?)?,
+            },
+        ))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The database
+// ---------------------------------------------------------------------------
+
+/// Session counters the tuning pipeline reports (`cadnn plan --tune`
+/// prints them; CI asserts on them): how many planning requests were
+/// answered from where, and how many kernel measurements actually ran.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TuneStats {
+    /// Planning requests (pruned layer x batch variant).
+    pub requests: usize,
+    /// Answered by the in-process memo (same spec, later variant).
+    pub memo_hits: usize,
+    /// Answered by the database (exact spec + current generation).
+    pub db_hits: usize,
+    /// Cold: a search (or legacy heuristic/measured planning) ran.
+    pub searched: usize,
+    /// Individual kernel timings performed across all searches.
+    pub measurements: usize,
+}
+
+impl TuneStats {
+    /// One-line counters summary (the `plan-db:` line CI greps).
+    pub fn render(&self) -> String {
+        format!(
+            "requests={} memo_hits={} db_hits={} searched={} measurements={}",
+            self.requests, self.memo_hits, self.db_hits, self.searched, self.measurements
+        )
+    }
+}
+
+/// Aggregate statistics for `cadnn db stats`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DbStats {
+    pub entries: usize,
+    pub candidates: usize,
+    pub hits: u64,
+    pub generations: usize,
+    pub current: u64,
+    /// Entries under the current generation (exact-answer eligible).
+    pub current_entries: usize,
+    /// Entries from older generations (seed-only).
+    pub stale_entries: usize,
+}
+
+impl DbStats {
+    pub fn render(&self) -> String {
+        format!(
+            "entries={} (current={} stale={}) candidates={} hits={} generations={} \
+             current_generation={}",
+            self.entries,
+            self.current_entries,
+            self.stale_entries,
+            self.candidates,
+            self.hits,
+            self.generations,
+            hex64(self.current)
+        )
+    }
+}
+
+/// The on-disk plan database. See the module doc for the design; the
+/// lifecycle is `open` → (`best_plan` | `seed_plans` | `insert`)* →
+/// `save`.
+#[derive(Debug)]
+pub struct PlanDb {
+    path: Option<PathBuf>,
+    generations: Vec<Generation>,
+    current: u64,
+    entries: BTreeMap<SpecKey, DbEntry>,
+    degraded: Option<String>,
+    dirty: bool,
+}
+
+impl PlanDb {
+    fn fresh(path: Option<PathBuf>) -> PlanDb {
+        let g = Generation::builtin();
+        PlanDb {
+            path,
+            current: g.id,
+            generations: vec![g],
+            entries: BTreeMap::new(),
+            degraded: None,
+            dirty: false,
+        }
+    }
+
+    /// A database with no backing file (`save` is a no-op) — build-time
+    /// ephemeral use and tests.
+    pub fn in_memory() -> PlanDb {
+        PlanDb::fresh(None)
+    }
+
+    /// Open (or create) the database at `path`. Never fails: a missing
+    /// file is a fresh database; an unreadable or invalid one degrades
+    /// to a fresh database with a warning ([`PlanDb::degraded`] carries
+    /// the reason).
+    pub fn open(path: impl Into<PathBuf>) -> PlanDb {
+        let path = path.into();
+        let bytes = match std::fs::read(&path) {
+            Ok(b) => b,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                return PlanDb::fresh(Some(path));
+            }
+            Err(e) => {
+                return PlanDb::degraded_fresh(Some(path), format!("unreadable: {e}"));
+            }
+        };
+        if bytes.len() > MAX_FILE_BYTES {
+            return PlanDb::degraded_fresh(
+                Some(path),
+                format!("file exceeds {} bytes cap", MAX_FILE_BYTES),
+            );
+        }
+        let text = match std::str::from_utf8(&bytes) {
+            Ok(t) => t,
+            Err(e) => {
+                return PlanDb::degraded_fresh(Some(path), format!("not utf-8: {e}"));
+            }
+        };
+        match PlanDb::load_str(text) {
+            Ok(mut db) => {
+                db.path = Some(path);
+                db
+            }
+            Err(e) => PlanDb::degraded_fresh(Some(path), e),
+        }
+    }
+
+    fn degraded_fresh(path: Option<PathBuf>, reason: String) -> PlanDb {
+        crate::warn!(
+            "plandb",
+            "plan db {} is invalid ({reason}); starting cold",
+            path.as_deref().map(|p| p.display().to_string()).unwrap_or_default()
+        );
+        let mut db = PlanDb::fresh(path);
+        db.degraded = Some(reason);
+        db
+    }
+
+    /// Parse a serialized database. All validation lives here so the
+    /// fuzz corpora can drive it directly; every rejection is a typed
+    /// reason string, never a panic.
+    pub fn load_str(text: &str) -> Result<PlanDb, String> {
+        if text.len() > MAX_FILE_BYTES {
+            return Err(format!("file exceeds {MAX_FILE_BYTES} bytes cap"));
+        }
+        let j = Json::parse(text).map_err(|e| format!("json: {e}"))?;
+        match j.get("cadnn_plandb").and_then(|v| v.as_usize()) {
+            Some(v) if v == FORMAT_VERSION => {}
+            Some(v) => return Err(format!("format version {v}, expected {FORMAT_VERSION}")),
+            None => return Err("missing cadnn_plandb version key".to_string()),
+        }
+        let current =
+            parse_hex64(j.get("current").and_then(|v| v.as_str()).unwrap_or_default())
+                .ok_or("missing/invalid current generation id")?;
+        let Some(Json::Arr(gens)) = j.get("generations") else {
+            return Err("missing generations array".to_string());
+        };
+        if gens.is_empty() || gens.len() > MAX_GENERATIONS {
+            return Err(format!("generation count {} outside 1..={}", gens.len(),
+                MAX_GENERATIONS));
+        }
+        let mut generations = Vec::with_capacity(gens.len());
+        for g in gens {
+            generations.push(Generation::from_json(g).ok_or("malformed generation")?);
+        }
+        if !generations.iter().any(|g| g.id == current) {
+            return Err("current generation id not in generation list".to_string());
+        }
+        let Some(Json::Arr(ents)) = j.get("entries") else {
+            return Err("missing entries array".to_string());
+        };
+        if ents.len() > MAX_ENTRIES {
+            return Err(format!("entry count {} exceeds {} cap", ents.len(), MAX_ENTRIES));
+        }
+        let mut entries = BTreeMap::new();
+        for e in ents {
+            let (spec, entry) = DbEntry::from_json(e).ok_or("malformed entry")?;
+            entries.insert(spec, entry);
+        }
+        Ok(PlanDb { path: None, generations, current, entries, degraded: None, dirty: false })
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("cadnn_plandb", Json::Num(FORMAT_VERSION as f64)),
+            ("current", Json::Str(hex64(self.current))),
+            (
+                "generations",
+                Json::Arr(self.generations.iter().map(Generation::to_json).collect()),
+            ),
+            (
+                "entries",
+                Json::Arr(self.entries.iter().map(|(s, e)| e.to_json(s)).collect()),
+            ),
+        ])
+    }
+
+    /// Persist to the backing file (temp file + atomic rename; parent
+    /// directories are created). No-op without a path or when nothing
+    /// changed since the last save.
+    pub fn save(&mut self) -> Result<(), String> {
+        let Some(path) = self.path.clone() else {
+            return Ok(());
+        };
+        if !self.dirty {
+            return Ok(());
+        }
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir).map_err(|e| format!("mkdir {dir:?}: {e}"))?;
+            }
+        }
+        let tmp = path.with_extension(format!("tmp{}", std::process::id()));
+        let text = self.to_json().to_string_pretty();
+        std::fs::write(&tmp, text).map_err(|e| format!("write {tmp:?}: {e}"))?;
+        std::fs::rename(&tmp, &path).map_err(|e| format!("rename to {path:?}: {e}"))?;
+        self.dirty = false;
+        Ok(())
+    }
+
+    pub fn path(&self) -> Option<&Path> {
+        self.path.as_deref()
+    }
+
+    /// Why the backing file was discarded at open, if it was.
+    pub fn degraded(&self) -> Option<&str> {
+        self.degraded.as_deref()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// The current device generation id — the `device_fp` new
+    /// [`SpecKey`]s should carry.
+    pub fn device_fp(&self) -> u64 {
+        self.current
+    }
+
+    /// The current generation's cost table.
+    pub fn current_table(&self) -> &CostTable {
+        self.generations
+            .iter()
+            .find(|g| g.id == self.current)
+            .map(|g| &g.table)
+            .expect("current generation always exists")
+    }
+
+    pub fn generations(&self) -> &[Generation] {
+        &self.generations
+    }
+
+    /// Exact lookup: the best stored plan for this spec under its own
+    /// generation. Records the hit. Entries from other generations never
+    /// answer here — they only seed ([`PlanDb::seed_plans`]).
+    pub fn best_plan(&mut self, spec: &SpecKey) -> Option<LayerPlan> {
+        let e = self.entries.get_mut(spec)?;
+        e.hits = e.hits.saturating_add(1);
+        self.dirty = true;
+        Some(e.candidates.first()?.plan.clone())
+    }
+
+    /// Stored plans for this spec under *any* generation, best-first per
+    /// generation — cold searches price these first so a recalibrated
+    /// database converges in one exact pricing per seed instead of a
+    /// full re-exploration.
+    pub fn seed_plans(&self, spec: &SpecKey) -> Vec<LayerPlan> {
+        let lo = spec.with_device(0);
+        let hi = spec.with_device(u64::MAX);
+        let mut out = Vec::new();
+        for (_, e) in self.entries.range(lo..=hi) {
+            for c in &e.candidates {
+                if !out.contains(&c.plan) {
+                    out.push(c.plan.clone());
+                }
+            }
+        }
+        out
+    }
+
+    /// Record a search result: candidates ranked best-first (the search
+    /// owns the ranking — a measured winner stays first even when a
+    /// modeled cost disagrees). Replaces any previous candidates for the
+    /// spec, keeps accumulated hits, truncates to [`TOP_K`].
+    pub fn insert(&mut self, spec: SpecKey, candidates: Vec<StoredCandidate>, prov: Provenance) {
+        if candidates.is_empty() || self.entries.len() >= MAX_ENTRIES {
+            return;
+        }
+        let mut ranked: Vec<StoredCandidate> = Vec::new();
+        for c in candidates {
+            if !c.cost.is_finite() || c.cost < 0.0 {
+                continue;
+            }
+            if ranked.iter().all(|r| r.identity() != c.identity()) {
+                ranked.push(c);
+            }
+        }
+        ranked.truncate(TOP_K);
+        if ranked.is_empty() {
+            return;
+        }
+        let hits = self.entries.get(&spec).map(|e| e.hits).unwrap_or(0);
+        self.entries.insert(spec, DbEntry { candidates: ranked, hits, provenance: prov });
+        self.dirty = true;
+    }
+
+    /// Install a new device generation (id = the table's fingerprint)
+    /// and make it current. Existing entries keep their old generation
+    /// key — soft-invalidated into seeds. Returns the new id; a table
+    /// identical to an existing generation just re-selects it.
+    pub fn new_generation(&mut self, table: CostTable, note: &str) -> Result<u64, String> {
+        let id = table.fingerprint();
+        if let Some(g) = self.generations.iter().find(|g| g.id == id) {
+            let id = g.id;
+            if self.current != id {
+                self.current = id;
+                self.dirty = true;
+            }
+            return Ok(id);
+        }
+        if self.generations.len() >= MAX_GENERATIONS {
+            return Err(format!("generation cap {MAX_GENERATIONS} reached; prune first"));
+        }
+        let seq = self.generations.iter().map(|g| g.seq).max().unwrap_or(0) + 1;
+        self.generations.push(Generation { id, seq, note: note.to_string(), table });
+        self.current = id;
+        self.dirty = true;
+        Ok(id)
+    }
+
+    /// Fold a cost report into a new generation: re-fitted constants
+    /// from `suggestions` (unknown names are skipped), the fitted
+    /// µs/unit scale when positive. Returns the new generation id.
+    pub fn apply_calibration(
+        &mut self,
+        suggestions: &[(&str, f64, f64)],
+        us_per_unit: Option<f64>,
+        note: &str,
+    ) -> Result<u64, String> {
+        let mut table = self.current_table().clone();
+        for (name, _, suggested) in suggestions {
+            table.apply(name, *suggested);
+        }
+        if let Some(u) = us_per_unit {
+            if u.is_finite() && u > 0.0 {
+                table.us_per_unit = Some(u);
+            }
+        }
+        self.new_generation(table, note)
+    }
+
+    /// Drop every entry not under the current generation (and every
+    /// non-current generation). Returns (kept, dropped) entry counts.
+    pub fn prune(&mut self) -> (usize, usize) {
+        let before = self.entries.len();
+        self.entries.retain(|s, _| s.device_fp == self.current);
+        let dropped = before - self.entries.len();
+        let had_gens = self.generations.len();
+        self.generations.retain(|g| g.id == self.current);
+        if dropped > 0 || had_gens != self.generations.len() {
+            self.dirty = true;
+        }
+        (self.entries.len(), dropped)
+    }
+
+    /// Merge another database's entries (marked [`Provenance::Imported`]
+    /// unless already present) and unknown generations into this one.
+    /// Hits are summed for entries both sides know; candidate lists keep
+    /// the local ranking and append novel imported candidates up to
+    /// [`TOP_K`]. Returns (new entries, merged entries).
+    pub fn merge(&mut self, other: &PlanDb) -> (usize, usize) {
+        for g in &other.generations {
+            if !self.generations.iter().any(|m| m.id == g.id)
+                && self.generations.len() < MAX_GENERATIONS
+            {
+                self.generations.push(g.clone());
+                self.dirty = true;
+            }
+        }
+        let (mut added, mut merged) = (0, 0);
+        for (spec, theirs) in &other.entries {
+            match self.entries.get_mut(spec) {
+                None => {
+                    if self.entries.len() >= MAX_ENTRIES {
+                        continue;
+                    }
+                    let mut e = theirs.clone();
+                    e.provenance = Provenance::Imported;
+                    e.candidates.truncate(TOP_K);
+                    self.entries.insert(*spec, e);
+                    added += 1;
+                    self.dirty = true;
+                }
+                Some(mine) => {
+                    mine.hits = mine.hits.saturating_add(theirs.hits);
+                    for c in &theirs.candidates {
+                        if mine.candidates.len() >= TOP_K {
+                            break;
+                        }
+                        if mine.candidates.iter().all(|m| m.identity() != c.identity()) {
+                            mine.candidates.push(c.clone());
+                        }
+                    }
+                    merged += 1;
+                    self.dirty = true;
+                }
+            }
+        }
+        (added, merged)
+    }
+
+    pub fn stats(&self) -> DbStats {
+        let current_entries =
+            self.entries.keys().filter(|s| s.device_fp == self.current).count();
+        DbStats {
+            entries: self.entries.len(),
+            candidates: self.entries.values().map(|e| e.candidates.len()).sum(),
+            hits: self.entries.values().map(|e| e.hits).sum(),
+            generations: self.generations.len(),
+            current: self.current,
+            current_entries,
+            stale_entries: self.entries.len() - current_entries,
+        }
+    }
+}
+
+/// The default database location: `$CADNN_PLAN_DB`, else
+/// `$XDG_CACHE_HOME/cadnn/plandb.json`, else
+/// `$HOME/.cache/cadnn/plandb.json` (relative `./plandb.json` as the
+/// last resort).
+pub fn default_path() -> PathBuf {
+    if let Ok(p) = std::env::var("CADNN_PLAN_DB") {
+        if !p.is_empty() {
+            return PathBuf::from(p);
+        }
+    }
+    let base = std::env::var("XDG_CACHE_HOME").ok().filter(|p| !p.is_empty()).map(
+        PathBuf::from,
+    );
+    let base = base.or_else(|| {
+        std::env::var("HOME")
+            .ok()
+            .filter(|p| !p.is_empty())
+            .map(|h| PathBuf::from(h).join(".cache"))
+    });
+    match base {
+        Some(b) => b.join("cadnn").join("plandb.json"),
+        None => PathBuf::from("plandb.json"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::SparseFormat;
+    use super::*;
+
+    fn tiny_csr(seed: u64) -> CsrMatrix {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let mut dense = vec![0.0f32; 32 * 16];
+        for v in dense.iter_mut() {
+            if rng.f64() < 0.2 {
+                *v = rng.normal() as f32;
+            }
+        }
+        CsrMatrix::from_dense(&dense, 32, 16)
+    }
+
+    fn spec(seed: u64, device_fp: u64) -> SpecKey {
+        SpecKey::from_layer(
+            FormatPolicy::Auto,
+            ValuePolicy::Auto,
+            None,
+            &tiny_csr(seed),
+            [1, 1, 32, 16],
+            device_fp,
+        )
+    }
+
+    fn cand(format: SparseFormat, cost: f64) -> StoredCandidate {
+        StoredCandidate {
+            plan: LayerPlan { format, cost_per_row: cost, ..LayerPlan::csr() },
+            cost,
+            measured_us: None,
+        }
+    }
+
+    #[test]
+    fn spec_key_json_roundtrip() {
+        for s in [
+            spec(1, CostTable::builtin().fingerprint()),
+            SpecKey {
+                declared: Some(4),
+                policy: FormatPolicy::Bsr,
+                value_policy: ValuePolicy::Q4,
+                ..spec(2, 7)
+            },
+        ] {
+            let j = s.to_json();
+            assert_eq!(SpecKey::from_json(&j), Some(s));
+        }
+        // values don't enter the key: same support, different magnitudes
+        let a = tiny_csr(3);
+        let mut b = a.clone();
+        for v in b.values.iter_mut() {
+            *v *= 2.0;
+        }
+        assert_eq!(support_fingerprint(&a), support_fingerprint(&b));
+        // ...but a different support does
+        assert_ne!(support_fingerprint(&a), support_fingerprint(&tiny_csr(4)));
+    }
+
+    #[test]
+    fn spec_seed_is_device_free_and_deterministic() {
+        let csr = tiny_csr(5);
+        let s1 = spec_seed(FormatPolicy::Auto, ValuePolicy::Auto, None, &csr, [1, 1, 32, 16]);
+        let s2 = spec_seed(FormatPolicy::Auto, ValuePolicy::Auto, None, &csr, [1, 1, 32, 16]);
+        assert_eq!(s1, s2);
+        let s3 = spec_seed(FormatPolicy::Auto, ValuePolicy::Q8, None, &csr, [1, 1, 32, 16]);
+        assert_ne!(s1, s3, "policy axis must reach the seed");
+    }
+
+    #[test]
+    fn cost_table_builtin_fingerprint_and_apply() {
+        let t = CostTable::builtin();
+        assert_eq!(t.fingerprint(), CostTable::builtin().fingerprint());
+        let mut t2 = t.clone();
+        assert!(t2.apply("COST_CSR_NNZ", 1.3));
+        assert_ne!(t2.fingerprint(), t.fingerprint());
+        assert!(!t2.apply("COST_NOPE", 1.0));
+        assert!(!t2.apply("COST_CSR_NNZ", f64::NAN));
+        assert!(!t2.apply("COST_CSR_NNZ", 0.0));
+        // calibration alone is a new generation too
+        let mut t3 = t.clone();
+        t3.us_per_unit = Some(0.01);
+        assert_ne!(t3.fingerprint(), t.fingerprint());
+        let j = t3.to_json();
+        assert_eq!(CostTable::from_json(&j), Some(t3));
+    }
+
+    #[test]
+    fn insert_ranks_dedups_and_caps_at_top_k() {
+        let mut db = PlanDb::in_memory();
+        let s = spec(1, db.device_fp());
+        let cands = vec![
+            cand(SparseFormat::Csr, 5.0),
+            cand(SparseFormat::Csr, 9.0), // duplicate identity: dropped
+            cand(SparseFormat::Dense, 6.0),
+            cand(SparseFormat::Bsr { br: 4, bc: 1 }, 7.0),
+            cand(SparseFormat::Bsr { br: 4, bc: 4 }, 8.0),
+            cand(SparseFormat::Pattern, 9.0), // beyond TOP_K: evicted
+        ];
+        db.insert(s, cands, Provenance::Modeled);
+        let e = db.entries.get(&s).unwrap();
+        assert_eq!(e.candidates.len(), TOP_K);
+        let labels: Vec<String> =
+            e.candidates.iter().map(|c| c.plan.format.label()).collect();
+        assert_eq!(labels, ["csr", "dense", "bsr4x1", "bsr4x4"], "ranked order preserved");
+        // best_plan answers rank 0 and records the hit
+        assert_eq!(db.best_plan(&s).unwrap().format, SparseFormat::Csr);
+        assert_eq!(db.entries.get(&s).unwrap().hits, 1);
+        // a re-insert keeps accumulated hits
+        db.insert(s, vec![cand(SparseFormat::Dense, 4.0)], Provenance::Measured);
+        let e = db.entries.get(&s).unwrap();
+        assert_eq!(e.hits, 1);
+        assert_eq!(e.provenance, Provenance::Measured);
+        assert_eq!(e.candidates.len(), 1);
+    }
+
+    #[test]
+    fn generations_soft_invalidate_into_seeds() {
+        let mut db = PlanDb::in_memory();
+        let s = spec(1, db.device_fp());
+        db.insert(s, vec![cand(SparseFormat::Dense, 3.0)], Provenance::Modeled);
+        assert!(db.best_plan(&s).is_some());
+
+        let mut table = db.current_table().clone();
+        table.apply("COST_CSR_NNZ", 1.4);
+        let new_fp = db.new_generation(table, "recalibrated").unwrap();
+        assert_ne!(new_fp, s.device_fp);
+        assert_eq!(db.device_fp(), new_fp);
+
+        // the old entry no longer answers under the new generation...
+        let s_new = s.with_device(new_fp);
+        assert!(db.best_plan(&s_new).is_none(), "stale entries must not answer");
+        // ...but still seeds the search for the same layer
+        let seeds = db.seed_plans(&s_new);
+        assert_eq!(seeds.len(), 1);
+        assert_eq!(seeds[0].format, SparseFormat::Dense);
+
+        // an identical table re-selects the existing generation
+        let again = db.new_generation(db.current_table().clone(), "same").unwrap();
+        assert_eq!(again, new_fp);
+        assert_eq!(db.generations().len(), 2);
+
+        // prune drops the stale entry and the old generation
+        let (kept, dropped) = db.prune();
+        assert_eq!((kept, dropped), (0, 1));
+        assert_eq!(db.generations().len(), 1);
+    }
+
+    #[test]
+    fn save_open_roundtrip_and_stats() {
+        let path = std::env::temp_dir()
+            .join(format!("cadnn_plandb_rt_{}.json", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let mut db = PlanDb::open(&path);
+        assert!(db.degraded().is_none(), "missing file is fresh, not degraded");
+        let s = spec(1, db.device_fp());
+        db.insert(
+            s,
+            vec![
+                StoredCandidate {
+                    plan: LayerPlan {
+                        format: SparseFormat::Bsr { br: 4, bc: 4 },
+                        value_bits: ValueBits::Q4,
+                        reorder: true,
+                        parallel_cutover: 96,
+                        cost_per_row: 172.8,
+                        rows_per_image: 0,
+                    },
+                    cost: 172.8,
+                    measured_us: Some(13.25),
+                },
+                cand(SparseFormat::Csr, 200.0),
+            ],
+            Provenance::Measured,
+        );
+        db.best_plan(&s);
+        db.save().unwrap();
+
+        let mut back = PlanDb::open(&path);
+        assert!(back.degraded().is_none());
+        assert_eq!(back.len(), 1);
+        let plan = back.best_plan(&s).unwrap();
+        assert_eq!(plan.format, SparseFormat::Bsr { br: 4, bc: 4 });
+        assert_eq!(plan.value_bits, ValueBits::Q4);
+        assert!(plan.reorder);
+        assert_eq!(plan.parallel_cutover, 96);
+        assert_eq!(plan.cost_per_row, 172.8, "f64 costs round-trip bit-exactly");
+        let st = back.stats();
+        assert_eq!(st.entries, 1);
+        assert_eq!(st.candidates, 2);
+        assert_eq!(st.hits, 2, "hits persist and accumulate");
+        assert_eq!(st.current_entries, 1);
+        assert!(st.render().contains("entries=1"));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn version_bump_and_junk_degrade_cold() {
+        let mut db = PlanDb::in_memory();
+        let s = spec(1, db.device_fp());
+        db.insert(s, vec![cand(SparseFormat::Csr, 5.0)], Provenance::Modeled);
+        let mut text = db.to_json().to_string_pretty();
+        assert!(PlanDb::load_str(&text).is_ok());
+        // a future format version must not half-load
+        text = text.replace("\"cadnn_plandb\": 1", "\"cadnn_plandb\": 2");
+        let err = PlanDb::load_str(&text).unwrap_err();
+        assert!(err.contains("version"), "{err}");
+        for junk in ["", "{", "[1,2,3]", "{\"cadnn_plandb\": 1}", "\u{0}\u{0}"] {
+            assert!(PlanDb::load_str(junk).is_err(), "{junk:?} must not load");
+        }
+        // open() on a junk file warns + degrades instead of failing
+        let path = std::env::temp_dir()
+            .join(format!("cadnn_plandb_junk_{}.json", std::process::id()));
+        std::fs::write(&path, "{\"cadnn_plandb\": \"nope\"").unwrap();
+        let db = PlanDb::open(&path);
+        assert!(db.degraded().is_some());
+        assert!(db.is_empty());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn merge_sums_hits_and_marks_imports() {
+        let mut a = PlanDb::in_memory();
+        let mut b = PlanDb::in_memory();
+        let fp = a.device_fp();
+        let s1 = spec(1, fp);
+        let s2 = spec(2, fp);
+        a.insert(s1, vec![cand(SparseFormat::Csr, 5.0)], Provenance::Modeled);
+        a.best_plan(&s1);
+        b.insert(
+            s1,
+            vec![cand(SparseFormat::Csr, 5.0), cand(SparseFormat::Dense, 6.0)],
+            Provenance::Measured,
+        );
+        b.best_plan(&s1);
+        b.best_plan(&s1);
+        b.insert(s2, vec![cand(SparseFormat::Pattern, 2.0)], Provenance::Modeled);
+        let (added, merged) = a.merge(&b);
+        assert_eq!((added, merged), (1, 1));
+        let e1 = a.entries.get(&s1).unwrap();
+        assert_eq!(e1.hits, 3, "hits summed");
+        assert_eq!(e1.provenance, Provenance::Modeled, "local provenance kept");
+        assert_eq!(e1.candidates.len(), 2, "novel imported candidate appended");
+        assert_eq!(a.entries.get(&s2).unwrap().provenance, Provenance::Imported);
+    }
+
+    #[test]
+    fn default_path_honors_env_override() {
+        // CADNN_PLAN_DB is read at call time; don't mutate the process
+        // env in tests (other tests run in parallel) — just check the
+        // fallback shape.
+        let p = default_path();
+        assert!(p.to_string_lossy().ends_with("plandb.json") || p.is_absolute());
+    }
+}

@@ -26,9 +26,22 @@
 //!   micro-benchmark loop the tile tuner runs — enabled with the tuner
 //!   (`EngineBuilder::tuned(true)`).
 //!
+//! On top of both sits the **search-based tuner** ([`search`] +
+//! [`db`]): a branch-and-bound search over the full compositional space
+//! (format x block shape x reorder x value width x cutover), priced
+//! through a per-device [`db::CostTable`] generation and memoized in a
+//! persistent plan database (`EngineBuilder::plan_db`, `cadnn plan
+//! --tune --plan-db`), so tuning cost is paid once per (shape,
+//! structure, device) family across builds and models — see
+//! `docs/PLANDB.md`. [`PlanCache::plan_node`] is the build-time entry
+//! point that arbitrates memo → database → search → legacy planning.
+//!
 //! The cost constants are relative per-value costs calibrated against
 //! this crate's kernels (see `docs/FORMATS.md` for the derivation and
 //! `benches/bench_sparse_formats.rs` for the regeneration harness).
+
+pub mod db;
+pub mod search;
 
 use crate::compress::bsr;
 use crate::compress::bsr::BsrMatrix;
@@ -112,7 +125,7 @@ impl SparseFormat {
 /// payload's values are stored*, independent of which format stores
 /// them. The resolved per-layer decision is
 /// [`crate::compress::qsparse::ValueBits`] in `LayerPlan::value_bits`.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Default)]
 pub enum ValuePolicy {
     /// Follow the profile: a layer whose compress report exported a
     /// codebook (`SparsityProfile::quant`) gets a quantized payload at
@@ -180,7 +193,7 @@ pub fn resolve_value_bits(
 }
 
 /// User-facing format policy (`EngineBuilder::sparse_format`).
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Default)]
 pub enum FormatPolicy {
     /// Planner decides per layer (never knowingly worse than CSR).
     #[default]
@@ -194,6 +207,30 @@ pub enum FormatPolicy {
     /// format; ineligible layers (1x1 / GEMM, or kernels larger than the
     /// pattern table supports) keep the CSR baseline.
     Pattern,
+}
+
+impl FormatPolicy {
+    /// Stable textual name (`auto`, `csr`, `bsr`, `pattern`) — the CLI
+    /// (`cadnn plan --format`) and plan-database encoding.
+    pub fn label(&self) -> &'static str {
+        match self {
+            FormatPolicy::Auto => "auto",
+            FormatPolicy::Csr => "csr",
+            FormatPolicy::Bsr => "bsr",
+            FormatPolicy::Pattern => "pattern",
+        }
+    }
+
+    /// Inverse of [`FormatPolicy::label`].
+    pub fn parse(s: &str) -> Option<FormatPolicy> {
+        match s {
+            "auto" => Some(FormatPolicy::Auto),
+            "csr" => Some(FormatPolicy::Csr),
+            "bsr" => Some(FormatPolicy::Bsr),
+            "pattern" => Some(FormatPolicy::Pattern),
+            _ => None,
+        }
+    }
 }
 
 /// Whether the pattern format can encode a layer of this HWIO shape:
@@ -603,9 +640,27 @@ impl LayerArtifacts {
 /// by layer name, plus the per-layer-family PatDNN pattern library so
 /// tuned ResNet-50 builds don't re-run library selection for every layer
 /// with the same (kh, kw, cin) shape.
+///
+/// It is also the build-time face of the plan-tuning subsystem: an
+/// attached [`db::PlanDb`] and/or the `tune` flag switch
+/// [`PlanCache::plan_node`] from the legacy heuristic/measured planners
+/// to the [`search`] module, with an in-process memo keyed by the same
+/// [`db::SpecKey`] the database uses — so "same layer" means the same
+/// thing in memory and on disk, and a layer that differs only by batch
+/// variant never re-measures ([`db::TuneStats`] counts all of this).
 #[derive(Debug, Default)]
 pub struct PlanCache {
     layers: BTreeMap<String, LayerArtifacts>,
+    /// Persistent plan database, when the build attached one
+    /// (`EngineBuilder::plan_db` / `cadnn plan --plan-db`).
+    db: Option<db::PlanDb>,
+    /// Search with beam measurement (`EngineBuilder::tune_plans` /
+    /// `cadnn plan --tune`).
+    tune: bool,
+    /// In-process spec-key memo: batch variants of one layer (and
+    /// same-spec layers across models in one build) plan once.
+    memo: BTreeMap<db::SpecKey, LayerPlan>,
+    stats: db::TuneStats,
     /// (kh, kw, cin, entries) -> the family's resolved pattern
     /// libraries, each tagged with the weight fingerprint it was
     /// resolved FOR (selection or a passed fit check), so identical
@@ -736,6 +791,135 @@ impl PlanCache {
         libs.push((fp, resolved.clone()));
         resolved
     }
+
+    /// Attach a plan database: [`PlanCache::plan_node`] now answers from
+    /// it when it can and records every cold search into it. Call
+    /// [`PlanCache::save_db`] after the build to persist.
+    pub fn attach_db(&mut self, db: db::PlanDb) {
+        self.db = Some(db);
+    }
+
+    /// Enable measured (beam-timed) search — `cadnn plan --tune`.
+    pub fn set_tune(&mut self, tune: bool) {
+        self.tune = tune;
+    }
+
+    pub fn db(&self) -> Option<&db::PlanDb> {
+        self.db.as_ref()
+    }
+
+    pub fn db_mut(&mut self) -> Option<&mut db::PlanDb> {
+        self.db.as_mut()
+    }
+
+    /// Whether [`PlanCache::plan_node`] runs the search (a database is
+    /// attached or tuning is on) instead of the legacy planners.
+    pub fn searching(&self) -> bool {
+        self.db.is_some() || self.tune
+    }
+
+    /// This build's planning counters so far.
+    pub fn tune_stats(&self) -> db::TuneStats {
+        self.stats
+    }
+
+    /// Persist the attached database, if any (no-op otherwise).
+    pub fn save_db(&mut self) -> Result<(), String> {
+        match self.db.as_mut() {
+            Some(d) => d.save(),
+            None => Ok(()),
+        }
+    }
+
+    /// Plan one pruned layer — the instance build's single entry point,
+    /// arbitrating (in order): the in-process spec memo, the attached
+    /// [`db::PlanDb`] (exact spec + current generation), the
+    /// [`search`] module (when a database is attached or `tune` is on),
+    /// and the legacy measured/heuristic planners. `measure` is the
+    /// caller's tuner flag — with the search engaged it (or `tune`)
+    /// turns on beam measurement; cold results are recorded back into
+    /// the database ranked best-first. The returned plan has
+    /// `rows_per_image = 0`; the caller owns that field (it is the one
+    /// axis that legitimately differs across batch variants of the same
+    /// spec).
+    #[allow(clippy::too_many_arguments)]
+    pub fn plan_node(
+        &mut self,
+        name: &str,
+        policy: FormatPolicy,
+        value_policy: ValuePolicy,
+        declared: Option<u8>,
+        csr: &CsrMatrix,
+        m: usize,
+        hwio: [usize; 4],
+        measure: bool,
+    ) -> LayerPlan {
+        self.stats.requests += 1;
+        let device_fp = self.db.as_ref().map(|d| d.device_fp()).unwrap_or(0);
+        let spec = db::SpecKey::from_layer(policy, value_policy, declared, csr, hwio,
+            device_fp);
+        if let Some(lp) = self.memo.get(&spec) {
+            self.stats.memo_hits += 1;
+            return lp.clone();
+        }
+        if let Some(d) = self.db.as_mut() {
+            if let Some(lp) = d.best_plan(&spec) {
+                self.stats.db_hits += 1;
+                self.memo.insert(spec, lp.clone());
+                return lp;
+            }
+        }
+        self.stats.searched += 1;
+        let lp = if self.searching() {
+            let do_measure = measure || self.tune;
+            let (table, seeds) = match self.db.as_ref() {
+                Some(d) => (d.current_table().clone(), d.seed_plans(&spec)),
+                None => (db::CostTable::builtin(), Vec::new()),
+            };
+            let mm_seed = spec.seed();
+            let arts = self.layer(name, csr);
+            let out = search::search_layer(
+                policy,
+                value_policy,
+                declared,
+                csr,
+                m,
+                hwio,
+                &table,
+                &seeds,
+                do_measure,
+                mm_seed,
+                arts,
+            );
+            self.stats.measurements += out.measurements;
+            let lp = out.best().map(|c| c.plan.clone()).unwrap_or_else(LayerPlan::csr);
+            if let Some(d) = self.db.as_mut() {
+                let prov = if do_measure { db::Provenance::Measured } else {
+                    db::Provenance::Modeled };
+                d.insert(spec, out.candidates, prov);
+            }
+            lp
+        } else if measure {
+            self.stats.measurements += measured_candidate_count(policy, csr, hwio);
+            let arts = self.layer(name, csr);
+            plan_layer_measured_valued(policy, value_policy, declared, csr, m, hwio, arts)
+        } else {
+            let arts = self.layer(name, csr);
+            plan_layer_valued(policy, value_policy, declared, csr, m, hwio, arts)
+        };
+        self.memo.insert(spec, lp.clone());
+        lp
+    }
+}
+
+/// How many kernel timings [`plan_layer_measured_valued`] runs for a
+/// layer: CSR + dense + the BSR candidates + Pattern where eligible
+/// (Auto only — pinned policies and degenerate layers skip measurement).
+fn measured_candidate_count(policy: FormatPolicy, csr: &CsrMatrix, hwio: [usize; 4]) -> usize {
+    if policy != FormatPolicy::Auto || csr.nnz() == 0 || csr.rows == 0 || csr.cols == 0 {
+        return 0;
+    }
+    2 + BSR_CANDIDATES.len() + usize::from(pattern_eligible(csr, hwio))
 }
 
 /// Per-row execution cost (units) of a layer under `lp`'s format and
@@ -922,15 +1106,16 @@ fn measure_us<F: FnMut()>(f: F) -> f64 {
 /// kernels on the layer's own weights, then pick the winner — CSR keeps
 /// ties. Also refines the layer's parallel cutover from the measured
 /// per-row cost: cheap layers need more rows before the pool dispatch
-/// amortizes.
+/// amortizes. The measurement inputs are seeded from the layer's own
+/// spec-key hash ([`db::spec_seed`]), so identical specs resolve
+/// identically across builds and processes.
 pub fn choose_measured(
     policy: FormatPolicy,
     csr: &CsrMatrix,
     m: usize,
     hwio: [usize; 4],
-    seed: u64,
 ) -> LayerPlan {
-    plan_layer_measured(policy, csr, m, hwio, seed, &mut LayerArtifacts::default())
+    plan_layer_measured(policy, csr, m, hwio, &mut LayerArtifacts::default())
 }
 
 /// [`choose_measured`] with memoized per-layer artifacts (densification
@@ -943,10 +1128,9 @@ pub fn plan_layer_measured(
     csr: &CsrMatrix,
     m: usize,
     hwio: [usize; 4],
-    seed: u64,
     arts: &mut LayerArtifacts,
 ) -> LayerPlan {
-    plan_layer_measured_valued(policy, ValuePolicy::Auto, None, csr, m, hwio, seed, arts)
+    plan_layer_measured_valued(policy, ValuePolicy::Auto, None, csr, m, hwio, arts)
 }
 
 /// [`plan_layer_measured`] with the value-precision axis. The measured
@@ -963,7 +1147,6 @@ pub fn plan_layer_measured_valued(
     csr: &CsrMatrix,
     m: usize,
     hwio: [usize; 4],
-    seed: u64,
     arts: &mut LayerArtifacts,
 ) -> LayerPlan {
     if policy != FormatPolicy::Auto {
@@ -974,6 +1157,9 @@ pub fn plan_layer_measured_valued(
         return LayerPlan::csr();
     }
     let mm = m.clamp(1, MEASURE_M_CAP);
+    // deterministic per spec, not per caller: identical specs measure on
+    // identical inputs across builds and processes
+    let seed = db::spec_seed(policy, value_policy, declared, csr, hwio);
     let mut rng = crate::util::rng::Rng::new(seed);
     let mut a = vec![0.0f32; mm * k];
     rng.fill_normal(&mut a, 0.5);
@@ -1461,7 +1647,7 @@ mod tests {
     #[test]
     fn measured_mode_returns_a_shortlist_member() {
         let csr = random_csr(48, 24, 0.25, 7);
-        let lp = choose_measured(FormatPolicy::Auto, &csr, 64, gemm_hwio(48, 24), 11);
+        let lp = choose_measured(FormatPolicy::Auto, &csr, 64, gemm_hwio(48, 24));
         assert!(lp.parallel_cutover >= PARALLEL_M_CUTOVER);
         assert!(matches!(
             lp.format,
@@ -1470,5 +1656,71 @@ mod tests {
                 | SparseFormat::Bsr { .. }
                 | SparseFormat::Pattern
         ));
+    }
+
+    /// Without a database or tuning, `plan_node` is the heuristic
+    /// planner plus the spec memo: batch variants of one layer (same
+    /// csr, different m) plan once and identically.
+    #[test]
+    fn plan_node_memoizes_across_batch_variants() {
+        let csr = random_csr(96, 48, 0.1, 13);
+        let hwio = gemm_hwio(96, 48);
+        let mut cache = PlanCache::default();
+        let lp1 = cache.plan_node("c1", FormatPolicy::Auto, ValuePolicy::Auto, None, &csr,
+            196, hwio, false);
+        let lp4 = cache.plan_node("c1", FormatPolicy::Auto, ValuePolicy::Auto, None, &csr,
+            4 * 196, hwio, false);
+        assert_eq!(lp1, lp4, "batch variants must share one plan");
+        let direct = plan_layer_valued(
+            FormatPolicy::Auto,
+            ValuePolicy::Auto,
+            None,
+            &csr,
+            196,
+            hwio,
+            &mut LayerArtifacts::default(),
+        );
+        assert_eq!(lp1, direct, "no-db plan_node must equal the heuristic planner");
+        let st = cache.tune_stats();
+        assert_eq!((st.requests, st.memo_hits, st.searched), (2, 1, 1));
+        assert_eq!(st.measurements, 0);
+        // a different value policy is a different spec
+        let q8 = cache.plan_node("c1", FormatPolicy::Auto, ValuePolicy::Q8, None, &csr, 196,
+            hwio, false);
+        assert_eq!(q8.value_bits, ValueBits::Q8);
+        assert_eq!(cache.tune_stats().searched, 2);
+    }
+
+    /// With an in-memory database attached, the first build populates it
+    /// and the second answers every request from it — zero searches,
+    /// zero measurements, identical plans (the warm-replan contract in
+    /// miniature; `rust/tests/plan_db.rs` proves it end-to-end).
+    #[test]
+    fn plan_node_warm_db_answers_without_searching() {
+        let csrs: Vec<CsrMatrix> =
+            (0..4).map(|i| random_csr(64 + 8 * i, 32, 0.1 + 0.1 * i as f64, 40 + i as
+                u64)).collect();
+        let mut cold = PlanCache::default();
+        cold.attach_db(db::PlanDb::in_memory());
+        let mut cold_plans = Vec::new();
+        for (i, csr) in csrs.iter().enumerate() {
+            let hwio = gemm_hwio(csr.rows, csr.cols);
+            cold_plans.push(cold.plan_node(&format!("c{i}"), FormatPolicy::Auto,
+                ValuePolicy::Auto, None, csr, 196, hwio, false));
+        }
+        assert_eq!(cold.tune_stats().searched, csrs.len());
+        // move the populated database into a fresh cache (a new build)
+        let text = cold.db().unwrap().to_json().to_string_pretty();
+        let mut warm = PlanCache::default();
+        warm.attach_db(db::PlanDb::load_str(&text).unwrap());
+        for (i, csr) in csrs.iter().enumerate() {
+            let hwio = gemm_hwio(csr.rows, csr.cols);
+            let lp = warm.plan_node(&format!("c{i}"), FormatPolicy::Auto, ValuePolicy::Auto,
+                None, csr, 196, hwio, false);
+            assert_eq!(lp, cold_plans[i], "warm plan must be identical");
+        }
+        let st = warm.tune_stats();
+        assert_eq!(st.db_hits, csrs.len());
+        assert_eq!((st.searched, st.measurements), (0, 0));
     }
 }

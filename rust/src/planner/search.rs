@@ -1,0 +1,566 @@
+//! Search-based per-layer planning over the compositional space
+//! `SparseFormat` x BSR block shape x reorder x `value_bits` x parallel
+//! cutover.
+//!
+//! The heuristic planner ([`super::choose`]) walks a fixed menu with
+//! switch margins; this module *searches* the same space top-down,
+//! priced through a device generation's [`CostTable`] (so recalibrated
+//! constants — `cadnn calibrate --apply-db` — change the answers without
+//! a recompile), and is what [`super::PlanCache::plan_node`] runs when a
+//! plan database or `--tune` is attached:
+//!
+//! - **branch and bound**: cheap families (CSR, Dense) are priced
+//!   exactly in O(1); expensive families (BSR needs block counting and
+//!   possibly column clustering, Pattern needs kernel counting) are
+//!   visited in a fixed order behind O(1) *lower bounds* — a family
+//!   whose bound already exceeds the incumbent is pruned un-evaluated.
+//!   Pruning is strict-inequality only, so exact ties never make the
+//!   outcome depend on visit order;
+//! - **seeds**: plans remembered by the database (any generation — see
+//!   `super::db`) have their families priced first, tightening the
+//!   incumbent before the bounds are consulted. Seeds never change the
+//!   winner (the winner is the exact minimum either way); they only
+//!   shrink the work;
+//! - **beam measurement** (`--tune`): the top [`BEAM`] candidates by
+//!   modeled cost are timed with the real serial kernels on the layer's
+//!   own weights (the same micro-benchmark loop as
+//!   [`super::choose_measured`]), the beam re-ranks on measured time
+//!   (CSR keeps ties, modeled order breaks measured ties), and the
+//!   winner's parallel cutover is refined from its measured per-row
+//!   cost. Modeled `cost_per_row` is kept on every candidate so costs
+//!   stay comparable across layers and batch sizes.
+//!
+//! The returned candidates are ranked best-first — exactly what
+//! `super::db::PlanDb::insert` persists and what a warm
+//! `PlanDb::best_plan` answers later, which is why a warm replan is
+//! bit-identical to the cold search that seeded it.
+
+use super::db::{CostTable, StoredCandidate};
+use super::{
+    pattern_eligible, resolve_value_bits, FormatPolicy, LayerArtifacts, LayerPlan, SparseFormat,
+    ValuePolicy, BSR_CANDIDATES, PARALLEL_DISPATCH_US,
+};
+use crate::compress::bsr;
+use crate::compress::bsr::BsrMatrix;
+use crate::compress::csr::CsrMatrix;
+use crate::compress::pattern;
+use crate::compress::pattern::PatternMatrix;
+use crate::compress::reorder;
+use crate::kernels::{Epilogue, PARALLEL_M_CUTOVER};
+use crate::passes::layout::TileConfig;
+
+/// Candidates timed with real kernels in measured mode.
+pub const BEAM: usize = 3;
+
+/// One search result: ranked candidates (best first) and how many kernel
+/// measurements ran (0 in modeled mode — the counter CI asserts on).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SearchOutcome {
+    pub candidates: Vec<StoredCandidate>,
+    pub measurements: usize,
+}
+
+impl SearchOutcome {
+    /// The winning plan (rank 0). Only empty for degenerate inputs the
+    /// caller already filtered.
+    pub fn best(&self) -> Option<&StoredCandidate> {
+        self.candidates.first()
+    }
+}
+
+/// The search's family axis: which exact-evaluation step produces a
+/// format's candidates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Family {
+    Csr,
+    Dense,
+    Bsr(usize, usize),
+    Pattern,
+}
+
+impl Family {
+    fn of(format: SparseFormat) -> Family {
+        match format {
+            SparseFormat::Csr => Family::Csr,
+            SparseFormat::Dense => Family::Dense,
+            SparseFormat::Bsr { br, bc } => Family::Bsr(br, bc),
+            SparseFormat::Pattern => Family::Pattern,
+        }
+    }
+}
+
+/// Deterministic candidate ordering: modeled cost, then format label,
+/// reorder, cutover — so equal-cost candidates rank identically however
+/// the search visited them.
+fn rank_key(c: &StoredCandidate) -> (f64, String, bool, usize) {
+    (c.cost, c.plan.format.label(), c.plan.reorder, c.plan.parallel_cutover)
+}
+
+fn sort_candidates(cands: &mut [StoredCandidate]) {
+    cands.sort_by(|a, b| {
+        let (ka, kb) = (rank_key(a), rank_key(b));
+        ka.0.total_cmp(&kb.0).then_with(|| ka.1.cmp(&kb.1).then(ka.2.cmp(&kb.2)).then(
+            ka.3.cmp(&kb.3)))
+    });
+}
+
+/// Search one layer's plan. `table` prices every candidate (the current
+/// device generation); `seeds` are remembered plans priced first;
+/// `measure` times the top [`BEAM`] with real kernels; `seed` makes the
+/// measurement inputs deterministic per spec ([`super::db::spec_seed`]).
+/// Candidates come back ranked best-first with modeled `cost` (and
+/// `measured_us` where timed).
+#[allow(clippy::too_many_arguments)]
+pub fn search_layer(
+    policy: FormatPolicy,
+    value_policy: ValuePolicy,
+    declared: Option<u8>,
+    csr: &CsrMatrix,
+    m: usize,
+    hwio: [usize; 4],
+    table: &CostTable,
+    seeds: &[LayerPlan],
+    measure: bool,
+    seed: u64,
+    arts: &mut LayerArtifacts,
+) -> SearchOutcome {
+    let (k, n, nnz) = (csr.rows, csr.cols, csr.nnz());
+    if nnz == 0 || k == 0 || n == 0 {
+        return SearchOutcome {
+            candidates: vec![StoredCandidate {
+                plan: LayerPlan::csr(),
+                cost: 0.0,
+                measured_us: None,
+            }],
+            measurements: 0,
+        };
+    }
+
+    let eligible = pattern_eligible(csr, hwio);
+    // the policy's family menu, in the fixed (deterministic) visit order
+    let menu: Vec<Family> = match policy {
+        FormatPolicy::Csr => vec![Family::Csr],
+        FormatPolicy::Bsr => BSR_CANDIDATES.iter().map(|&(br, bc, _)| Family::Bsr(br,
+            bc)).collect(),
+        FormatPolicy::Pattern => {
+            if eligible {
+                vec![Family::Pattern]
+            } else {
+                vec![Family::Csr]
+            }
+        }
+        FormatPolicy::Auto => {
+            let mut v = vec![Family::Csr, Family::Dense];
+            v.extend(BSR_CANDIDATES.iter().map(|&(br, bc, _)| Family::Bsr(br, bc)));
+            if eligible {
+                v.push(Family::Pattern);
+            }
+            v
+        }
+    };
+
+    // per-format value widths (fixed per format, never searched freely:
+    // free choice would always land on f32 — the LUT factors are > 1 —
+    // and lose the quantized payload the profile asked for)
+    let vb_sparse = resolve_value_bits(value_policy, declared, SparseFormat::Csr);
+    let lut = table.lut_factor(vb_sparse);
+
+    let cutover_for = |cost_per_row: f64| -> usize {
+        match table.us_per_unit {
+            Some(u) if cost_per_row > 0.0 && u > 0.0 => {
+                // rows before the pool dispatch amortizes to <50% overhead
+                // at the modeled per-row wall-clock cost
+                let rows = (2.0 * PARALLEL_DISPATCH_US / (cost_per_row * u)).ceil();
+                if rows.is_finite() {
+                    (rows as usize).max(PARALLEL_M_CUTOVER)
+                } else {
+                    PARALLEL_M_CUTOVER
+                }
+            }
+            _ => PARALLEL_M_CUTOVER,
+        }
+    };
+    let cand = |format: SparseFormat, reorder: bool, cost: f64| -> StoredCandidate {
+        StoredCandidate {
+            plan: LayerPlan {
+                format,
+                value_bits: resolve_value_bits(value_policy, declared, format),
+                reorder,
+                parallel_cutover: cutover_for(cost),
+                cost_per_row: cost,
+                rows_per_image: 0,
+            },
+            cost,
+            measured_us: None,
+        }
+    };
+
+    // exact family evaluation (the "expand" step); expensive families
+    // do their block/kernel counting here, memoized in `arts`
+    let mut evaluated: Vec<Family> = Vec::new();
+    let mut candidates: Vec<StoredCandidate> = Vec::new();
+    let mut best = f64::INFINITY;
+    let mut expand = |fam: Family,
+                      evaluated: &mut Vec<Family>,
+                      candidates: &mut Vec<StoredCandidate>,
+                      best: &mut f64,
+                      arts: &mut LayerArtifacts| {
+        if evaluated.contains(&fam) {
+            return;
+        }
+        evaluated.push(fam);
+        let mut push = |c: StoredCandidate, best: &mut f64| {
+            if c.cost < *best {
+                *best = c.cost;
+            }
+            candidates.push(c);
+        };
+        match fam {
+            Family::Csr => push(cand(SparseFormat::Csr, false, nnz as f64 * table.csr_nnz *
+                lut), best),
+            Family::Dense => {
+                // dense rematerializes the zeros and has no LUT path
+                push(cand(SparseFormat::Dense, false, (k * n) as f64 * table.dense_mac), best);
+            }
+            Family::Bsr(br, bc) => {
+                let (blocks, reorder_on) = arts.blocks_for(csr, br, bc);
+                let rate = table.bsr(br, bc);
+                push(
+                    cand(
+                        SparseFormat::Bsr { br, bc },
+                        reorder_on,
+                        (blocks * br * bc) as f64 * rate * lut,
+                    ),
+                    best,
+                );
+                if reorder_on {
+                    // the hysteresis picked the permuted layout; keep the
+                    // plain layout as a ranked alternative so the database
+                    // remembers both sides of the reorder axis
+                    let plain = bsr::count_blocks(csr, br, bc);
+                    push(
+                        cand(SparseFormat::Bsr { br, bc }, false, (plain * br * bc) as f64 *
+                            rate * lut),
+                        best,
+                    );
+                }
+            }
+            Family::Pattern => {
+                let kernels = pattern::count_kernels(csr, hwio[2]);
+                push(
+                    cand(
+                        SparseFormat::Pattern,
+                        false,
+                        nnz as f64 * table.pattern_val * lut
+                            + kernels as f64 * table.pattern_kernel,
+                    ),
+                    best,
+                );
+            }
+        }
+    };
+
+    // seeds first: exact-price the families the database remembers, so
+    // the incumbent is tight before any bound is consulted
+    for s in seeds {
+        let fam = Family::of(s.format);
+        if menu.contains(&fam) {
+            expand(fam, &mut evaluated, &mut candidates, &mut best, arts);
+        }
+    }
+    // then the rest of the menu, cheapest-to-bound first, pruning on a
+    // strict bound violation (ties are never pruned: determinism)
+    for &fam in &menu {
+        let bound = match fam {
+            // O(1) families: no useful bound, always expand
+            Family::Csr | Family::Dense => f64::NEG_INFINITY,
+            // every stored block covers >= 1 nonzero
+            Family::Bsr(br, bc) => nnz as f64 * table.bsr(br, bc) * lut,
+            // every surviving kernel covers <= kh*kw nonzeros
+            Family::Pattern => {
+                let kk = (hwio[0] * hwio[1]).max(1);
+                nnz as f64 * table.pattern_val * lut
+                    + (nnz.div_ceil(kk)) as f64 * table.pattern_kernel
+            }
+        };
+        if bound > best {
+            continue;
+        }
+        expand(fam, &mut evaluated, &mut candidates, &mut best, arts);
+    }
+
+    sort_candidates(&mut candidates);
+
+    let mut measurements = 0;
+    if measure && !candidates.is_empty() {
+        let beam = BEAM.min(candidates.len());
+        let mm = m.clamp(1, super::MEASURE_M_CAP);
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let mut a = vec![0.0f32; mm * k];
+        rng.fill_normal(&mut a, 0.5);
+        let mut c = vec![0.0f32; mm * n];
+        let mut timed: Vec<(usize, f64, f64)> = Vec::new(); // (rank, eff_us, raw_us)
+        for (rank, sc) in candidates.iter().take(beam).enumerate() {
+            let raw = match sc.plan.format {
+                SparseFormat::Csr => super::measure_us(|| {
+                    crate::kernels::sparse::csr_gemm(&a, csr, &mut c, mm, &Epilogue::None);
+                }),
+                SparseFormat::Dense => {
+                    let dense = arts.dense(csr);
+                    super::measure_us(|| {
+                        crate::kernels::gemm::gemm_blocked(
+                            &a,
+                            &dense,
+                            &mut c,
+                            mm,
+                            k,
+                            n,
+                            &TileConfig::DEFAULT,
+                            &Epilogue::None,
+                        );
+                    })
+                }
+                SparseFormat::Bsr { br, bc } => {
+                    let dense = arts.dense(csr);
+                    let mat = if sc.plan.reorder {
+                        let perm = arts.permutation(csr, br).clone();
+                        let permuted = reorder::permute_cols(&dense, k, n, &perm);
+                        BsrMatrix::from_dense(&permuted, k, n, br, bc)
+                    } else {
+                        BsrMatrix::from_dense(&dense, k, n, br, bc)
+                    };
+                    super::measure_us(|| {
+                        crate::kernels::bsr::bsr_gemm(&a, &mat, &mut c, mm, &Epilogue::None);
+                    })
+                }
+                SparseFormat::Pattern => {
+                    let dense = arts.dense(csr);
+                    let mat = PatternMatrix::from_dense(&dense, hwio[0], hwio[1], hwio[2], n);
+                    super::measure_us(|| {
+                        crate::kernels::pattern::pattern_gemm(&a, &mat, &mut c, mm,
+                            &Epilogue::None);
+                    })
+                }
+            };
+            measurements += 1;
+            // CSR keeps ties, mirroring choose_measured
+            let eff = if sc.plan.format == SparseFormat::Csr { raw * 0.98 } else { raw };
+            timed.push((rank, eff, raw));
+        }
+        // re-rank the beam on measured time; modeled rank breaks ties
+        timed.sort_by(|x, y| x.1.total_cmp(&y.1).then(x.0.cmp(&y.0)));
+        let mut beam_ranked: Vec<StoredCandidate> = Vec::with_capacity(beam);
+        for &(rank, eff, raw) in &timed {
+            let mut sc = candidates[rank].clone();
+            if raw.is_finite() {
+                sc.measured_us = Some(raw);
+            }
+            if beam_ranked.is_empty() {
+                // the measured winner: refine its cutover from the
+                // measured per-row cost
+                let per_row_us = eff.max(1e-3) / mm as f64;
+                let rows = (2.0 * PARALLEL_DISPATCH_US / per_row_us).ceil() as usize;
+                sc.plan.parallel_cutover = rows.max(PARALLEL_M_CUTOVER);
+            }
+            beam_ranked.push(sc);
+        }
+        beam_ranked.extend(candidates.into_iter().skip(beam));
+        candidates = beam_ranked;
+    }
+
+    SearchOutcome { candidates, measurements }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{plan_layer_valued, COST_CSR_NNZ, COST_LUT_Q4};
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_csr(k: usize, n: usize, density: f64, seed: u64) -> CsrMatrix {
+        let mut rng = Rng::new(seed);
+        let mut dense = vec![0.0f32; k * n];
+        for v in dense.iter_mut() {
+            if rng.f64() < density {
+                *v = rng.normal() as f32;
+            }
+        }
+        CsrMatrix::from_dense(&dense, k, n)
+    }
+
+    fn modeled(
+        policy: FormatPolicy,
+        csr: &CsrMatrix,
+        hwio: [usize; 4],
+        seeds: &[LayerPlan],
+    ) -> SearchOutcome {
+        search_layer(
+            policy,
+            ValuePolicy::Auto,
+            None,
+            csr,
+            196,
+            hwio,
+            &CostTable::builtin(),
+            seeds,
+            false,
+            7,
+            &mut LayerArtifacts::default(),
+        )
+    }
+
+    /// The acceptance property: against the builtin table, the searched
+    /// winner's modeled cost never exceeds the heuristic plan's modeled
+    /// cost (the search takes the exact minimum of a superset of the
+    /// heuristic's menu; the heuristic's switch margins can only keep it
+    /// on a costlier baseline).
+    #[test]
+    fn searched_cost_never_exceeds_heuristic() {
+        for seed in 0..40u64 {
+            let density = 0.02 + 0.02 * (seed % 30) as f64;
+            let (k, n) = (16 + 8 * (seed % 5) as usize, 16 + 4 * (seed % 7) as usize);
+            let csr = random_csr(k, n, density, seed);
+            let hwio = [1, 1, k, n];
+            let heur = plan_layer_valued(
+                FormatPolicy::Auto,
+                ValuePolicy::Auto,
+                None,
+                &csr,
+                196,
+                hwio,
+                &mut LayerArtifacts::default(),
+            );
+            let out = modeled(FormatPolicy::Auto, &csr, hwio, &[]);
+            let best = out.best().unwrap();
+            assert!(
+                best.cost <= heur.cost_per_row + 1e-9,
+                "seed {seed}: searched {} > heuristic {} ({:?} vs {:?})",
+                best.cost,
+                heur.cost_per_row,
+                best.plan.format,
+                heur.format
+            );
+            assert_eq!(out.measurements, 0, "modeled mode must not measure");
+        }
+    }
+
+    #[test]
+    fn builtin_table_prices_like_the_unit_model() {
+        let csr = random_csr(64, 32, 0.08, 3);
+        let out = modeled(FormatPolicy::Csr, &csr, [1, 1, 64, 32], &[]);
+        let best = out.best().unwrap();
+        assert_eq!(best.plan.format, SparseFormat::Csr);
+        assert_eq!(best.cost, csr.nnz() as f64 * COST_CSR_NNZ);
+        assert_eq!(best.cost, best.plan.cost_per_row);
+    }
+
+    #[test]
+    fn seeds_do_not_change_the_winner() {
+        for seed in 0..20u64 {
+            let csr = random_csr(96, 48, 0.05 + 0.03 * (seed % 10) as f64, 100 + seed);
+            let hwio = [1, 1, 96, 48];
+            let cold = modeled(FormatPolicy::Auto, &csr, hwio, &[]);
+            // seed with every cold candidate (the warm-db scenario)
+            let seeds: Vec<LayerPlan> =
+                cold.candidates.iter().map(|c| c.plan.clone()).collect();
+            let warm = modeled(FormatPolicy::Auto, &csr, hwio, &seeds);
+            assert_eq!(
+                warm.best().unwrap().plan,
+                cold.best().unwrap().plan,
+                "seed {seed}: seeds changed the winner"
+            );
+        }
+    }
+
+    #[test]
+    fn quantized_payloads_scale_costs_and_keep_format() {
+        let csr = random_csr(128, 64, 0.08, 1);
+        let hwio = [1, 1, 128, 64];
+        let f32_out = modeled(FormatPolicy::Auto, &csr, hwio, &[]);
+        let q4 = search_layer(
+            FormatPolicy::Auto,
+            ValuePolicy::Q4,
+            None,
+            &csr,
+            196,
+            hwio,
+            &CostTable::builtin(),
+            &[],
+            false,
+            7,
+            &mut LayerArtifacts::default(),
+        );
+        let (f, q) = (f32_out.best().unwrap(), q4.best().unwrap());
+        assert_eq!(f.plan.format, SparseFormat::Csr);
+        assert_eq!(q.plan.format, SparseFormat::Csr);
+        assert_eq!(q.plan.value_bits, crate::compress::qsparse::ValueBits::Q4);
+        assert!((q.cost - f.cost * COST_LUT_Q4).abs() < 1e-9);
+    }
+
+    #[test]
+    fn calibrated_scale_raises_cutovers_for_cheap_layers() {
+        let csr = random_csr(32, 16, 0.1, 5);
+        let mut table = CostTable::builtin();
+        // cost_per_row ~ nnz ~ 51 units; at 0.01 µs/unit one row is
+        // ~0.5µs, so amortizing 60µs of dispatch needs >100 rows
+        table.us_per_unit = Some(0.01);
+        let out = search_layer(
+            FormatPolicy::Csr,
+            ValuePolicy::Auto,
+            None,
+            &csr,
+            196,
+            [1, 1, 32, 16],
+            &table,
+            &[],
+            false,
+            7,
+            &mut LayerArtifacts::default(),
+        );
+        let best = out.best().unwrap();
+        let expect = (2.0 * PARALLEL_DISPATCH_US / (best.cost * 0.01)).ceil() as usize;
+        assert_eq!(best.plan.parallel_cutover, expect.max(PARALLEL_M_CUTOVER));
+        assert!(best.plan.parallel_cutover > PARALLEL_M_CUTOVER);
+    }
+
+    #[test]
+    fn degenerate_and_pinned_menus() {
+        // empty matrix: the csr baseline, nothing measured
+        let empty = CsrMatrix::from_dense(&[0.0f32; 64], 8, 8);
+        let out = modeled(FormatPolicy::Auto, &empty, [1, 1, 8, 8], &[]);
+        assert_eq!(out.best().unwrap().plan, LayerPlan::csr());
+        // pattern policy off-spatial falls back to csr, like the heuristic
+        let csr = random_csr(64, 32, 0.1, 9);
+        let out = modeled(FormatPolicy::Pattern, &csr, [1, 1, 64, 32], &[]);
+        assert_eq!(out.best().unwrap().plan.format, SparseFormat::Csr);
+        // bsr pin searches only block shapes
+        let out = modeled(FormatPolicy::Bsr, &csr, [1, 1, 64, 32], &[]);
+        assert!(out
+            .candidates
+            .iter()
+            .all(|c| matches!(c.plan.format, SparseFormat::Bsr { .. })));
+    }
+
+    #[test]
+    fn measured_mode_times_the_beam_and_refines_cutover() {
+        let csr = random_csr(48, 24, 0.25, 7);
+        let out = search_layer(
+            FormatPolicy::Auto,
+            ValuePolicy::Auto,
+            None,
+            &csr,
+            64,
+            [1, 1, 48, 24],
+            &CostTable::builtin(),
+            &[],
+            true,
+            11,
+            &mut LayerArtifacts::default(),
+        );
+        assert!(out.measurements >= 1 && out.measurements <= BEAM);
+        let best = out.best().unwrap();
+        assert!(best.measured_us.is_some(), "the winner must carry its timing");
+        assert!(best.plan.parallel_cutover >= PARALLEL_M_CUTOVER);
+        assert!(best.cost > 0.0, "modeled cost survives measurement");
+    }
+}

@@ -29,6 +29,13 @@ pub struct ManifestEntry {
     /// re-learning the scale online. `None` for old manifests or entries
     /// never served.
     pub us_per_unit: Option<f64>,
+    /// The plan-database device generation (`PlanDb::device_fp`, see
+    /// `docs/PLANDB.md`) this entry's `exec_plan` was searched under.
+    /// Serialized as a 16-hex-digit string; `None` for old manifests or
+    /// heuristic (non-database) plans. A deployment can compare it
+    /// against its database's current generation to detect a plan that
+    /// predates a recalibration.
+    pub plan_generation: Option<u64>,
 }
 
 #[derive(Debug, Clone, Default)]
@@ -84,6 +91,12 @@ impl Manifest {
                     .get("us_per_unit")
                     .and_then(|v| v.as_f64())
                     .filter(|u| u.is_finite() && *u > 0.0),
+                plan_generation: m
+                    .get("plan_generation")
+                    .and_then(|v| v.as_str())
+                    .and_then(|s| {
+                        if s.len() == 16 { u64::from_str_radix(s, 16).ok() } else { None }
+                    }),
             });
         }
         Ok(Manifest { models })
@@ -115,6 +128,9 @@ impl Manifest {
                 if let Some(u) = e.us_per_unit {
                     kv.push(("us_per_unit", Json::Num(u)));
                 }
+                if let Some(g) = e.plan_generation {
+                    kv.push(("plan_generation", Json::Str(format!("{g:016x}"))));
+                }
                 obj(kv)
             })
             .collect();
@@ -135,6 +151,23 @@ impl Manifest {
         for e in self.models.iter_mut() {
             if e.name == name && e.variant == variant {
                 e.us_per_unit = Some(us_per_unit);
+                n += 1;
+            }
+        }
+        n
+    }
+
+    /// Stamp the plan-database device generation onto every batch
+    /// variant of (model, variant) whose entry carries an `exec_plan`,
+    /// so a deployment can tell whether the pinned plans predate a
+    /// later `cadnn calibrate --apply-db` recalibration. Returns how
+    /// many entries were updated (planless entries are skipped — a
+    /// generation without a plan is meaningless).
+    pub fn record_plan_generation(&mut self, name: &str, variant: &str, gen: u64) -> usize {
+        let mut n = 0;
+        for e in self.models.iter_mut() {
+            if e.name == name && e.variant == variant && e.exec_plan.is_some() {
+                e.plan_generation = Some(gen);
                 n += 1;
             }
         }
@@ -294,6 +327,36 @@ mod tests {
                         "us_per_unit": -3.0}"#;
         let m = Manifest::parse(&wrap(entry)).unwrap();
         assert_eq!(m.models[0].us_per_unit, None);
+    }
+
+    /// `plan_generation` rides next to `exec_plan` as a 16-hex-digit
+    /// string: it round-trips, only attaches to planned entries, old
+    /// manifests load without it, and malformed values degrade to None.
+    #[test]
+    fn plan_generation_roundtrip_and_degrade() {
+        use crate::planner::LayerPlan;
+        let mut m = Manifest::parse(SAMPLE).unwrap();
+        assert!(m.models.iter().all(|e| e.plan_generation.is_none()), "old manifests: None");
+        // planless entries refuse the stamp
+        assert_eq!(m.record_plan_generation("lenet5", "sparse", 0xabcd), 0);
+        let mut plan = ExecPlan::default();
+        plan.layers.insert("c1".into(), LayerPlan::csr());
+        m.models[1].exec_plan = Some(plan);
+        assert_eq!(m.record_plan_generation("lenet5", "sparse", 0xabcd), 1);
+        let text = m.to_json().to_string_pretty();
+        assert!(text.contains("\"000000000000abcd\""), "hex-string encoding: {text}");
+        let back = Manifest::parse(&text).unwrap();
+        assert_eq!(back.models[1].plan_generation, Some(0xabcd));
+        assert_eq!(back.models[0].plan_generation, None);
+        // wrong width / non-hex / non-string values all degrade to None
+        for junk in [r#""abcd""#, r#""zzzzzzzzzzzzzzzz""#, "12"] {
+            let entry = format!(
+                r#"{{"name": "m", "batch": 1, "path": "p", "input_shape": [1, 2],
+                    "plan_generation": {junk}}}"#
+            );
+            let m = Manifest::parse(&wrap(&entry)).unwrap();
+            assert_eq!(m.models[0].plan_generation, None, "junk {junk} must degrade");
+        }
     }
 
     #[test]

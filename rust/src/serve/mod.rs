@@ -511,11 +511,16 @@ impl ServerBuilder {
             }
             let info = info.expect("no error implies every replica reported ready");
             handle.admission.set_pricing(&info.plan_costs);
+            // how the engine's plan was obtained (memo / database hits,
+            // searches, measurements) — captured before the engine moves
+            // into the entry
+            let plan_tuning = spec.engine.as_ref().and_then(|e| e.tune_stats());
             let entry = ModelEntry {
                 name: spec.name.clone(),
                 engine: spec.engine,
                 plan: info.plan,
                 plan_costs: info.plan_costs,
+                plan_tuning,
                 input_shape: info.input_shape,
                 classes: info.classes,
                 batch_sizes: info.batch_sizes,

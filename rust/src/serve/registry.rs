@@ -2,6 +2,7 @@
 //! plan, at which batch variants and costs.
 
 use crate::api::Engine;
+use crate::planner::db::TuneStats;
 use crate::planner::ExecPlan;
 use std::collections::BTreeMap;
 
@@ -24,6 +25,12 @@ pub struct ModelEntry {
     /// `ExecPlan::cost_at(b)` evaluated per variant; empty when the
     /// backend has no cost model (nothing pruned, or planning disabled).
     pub plan_costs: Vec<(usize, f64)>,
+    /// How the plan was obtained at model load: build-time planning
+    /// counters (in-process memo hits, plan-database hits, cold
+    /// searches, kernel measurements — see
+    /// [`crate::planner::db::TuneStats`]). `None` for opaque factory
+    /// backends and artifact engines, whose plans predate the server.
+    pub plan_tuning: Option<TuneStats>,
     /// Per-image input shape (batch axis excluded).
     pub input_shape: Vec<usize>,
     /// Logits per image.

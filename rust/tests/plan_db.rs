@@ -1,0 +1,388 @@
+//! Durability and determinism of the persistent plan database
+//! (`planner::db` + `planner::search`), through the public API only:
+//!
+//! - corrupt input (truncation at every byte, junk-byte corpora,
+//!   version bumps) loads as a cold database with a warning — never a
+//!   panic, never a build failure (mirrors the `model_ir.rs` fuzz
+//!   discipline);
+//! - a warm database returns exactly the plan a cold search would have
+//!   produced (200-seed property test);
+//! - the tentpole acceptance criteria: a warm-database replan of
+//!   ResNet-50 performs zero measurements and yields a bit-identical
+//!   `ExecPlan`, and the searched plan's modeled cost never exceeds the
+//!   heuristic plan's on any builtin model.
+
+use cadnn::api::Engine;
+use cadnn::compress::csr::CsrMatrix;
+use cadnn::compress::profile::paper_profile;
+use cadnn::exec::Personality;
+use cadnn::front;
+use cadnn::ir::ops::Op;
+use cadnn::models;
+use cadnn::planner::db::{
+    spec_seed, CostTable, PlanDb, Provenance, SpecKey, StoredCandidate, TOP_K,
+};
+use cadnn::planner::search::search_layer;
+use cadnn::planner::{plan_layer_valued, FormatPolicy, LayerPlan, PlanCache, ValuePolicy};
+use cadnn::util::rng::Rng;
+
+fn tmp(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("cadnn_plandb_it_{tag}_{}.json", std::process::id()))
+}
+
+/// A small random CSR support (via dense round trip: sorted, unique
+/// column indices per row come for free).
+fn random_csr(rows: usize, cols: usize, density: f64, rng: &mut Rng) -> CsrMatrix {
+    let mut dense = vec![0.0f32; rows * cols];
+    for v in dense.iter_mut() {
+        if rng.f64() < density {
+            *v = rng.normal() as f32 * 0.5 + 0.01;
+        }
+    }
+    // guarantee at least one stored value so the layer is plannable
+    dense[0] = 1.0;
+    CsrMatrix::from_dense(&dense, rows, cols)
+}
+
+/// Direct CSR synthesis for shapes too large to materialize densely
+/// (vgg16's fc layers): `per_row` sorted unique columns per row, nnz
+/// capped so no builtin layer costs minutes to price.
+fn synth_csr(rows: usize, cols: usize, nnz_cap: usize, rng: &mut Rng) -> CsrMatrix {
+    let per_row = (nnz_cap / rows.max(1)).clamp(1, cols);
+    let stride = (cols / per_row).max(1);
+    let mut row_ptr = Vec::with_capacity(rows + 1);
+    let mut col_idx = Vec::with_capacity(rows * per_row);
+    let mut values = Vec::with_capacity(rows * per_row);
+    row_ptr.push(0u32);
+    for _ in 0..rows {
+        for j in 0..per_row {
+            let c = (j * stride + rng.below(stride)).min(cols - 1);
+            col_idx.push(c as u32);
+            values.push(rng.normal() as f32 * 0.5 + 0.01);
+        }
+        row_ptr.push(col_idx.len() as u32);
+    }
+    CsrMatrix { rows, cols, row_ptr, col_idx, values }
+}
+
+/// A database with real searched content to corrupt: a few layer specs,
+/// each holding its search's ranked candidates.
+fn seeded_db_text() -> String {
+    let mut db = PlanDb::in_memory();
+    let mut cache = PlanCache::default();
+    let mut rng = Rng::new(41);
+    for i in 0..3u64 {
+        let csr = random_csr(48, 32, 0.12, &mut rng);
+        let hwio = [4, 3, 4, 32];
+        let spec = SpecKey::from_layer(
+            FormatPolicy::Auto,
+            ValuePolicy::Auto,
+            None,
+            &csr,
+            hwio,
+            db.device_fp(),
+        );
+        let arts = cache.layer(&format!("l{i}"), &csr);
+        let out = search_layer(
+            FormatPolicy::Auto,
+            ValuePolicy::Auto,
+            None,
+            &csr,
+            64,
+            hwio,
+            &CostTable::builtin(),
+            &[],
+            false,
+            spec.seed(),
+            arts,
+        );
+        db.insert(spec, out.candidates, Provenance::Modeled);
+    }
+    assert_eq!(db.len(), 3);
+    db.to_json().to_string_pretty()
+}
+
+/// Truncating the file at EVERY byte offset must yield a clean parse
+/// error (or, for a pure trailing-whitespace cut, the full database) —
+/// never a panic, never a partial load.
+#[test]
+fn truncation_at_every_byte_loads_cold_or_complete() {
+    let text = seeded_db_text();
+    let full = PlanDb::load_str(&text).expect("untruncated text loads");
+    assert_eq!(full.len(), 3);
+    for i in 0..text.len() {
+        let Some(prefix) = text.get(..i) else { continue };
+        match PlanDb::load_str(prefix) {
+            Err(_) => {}
+            Ok(db) => {
+                assert!(
+                    text[i..].trim().is_empty(),
+                    "byte {i}/{}: truncated text parsed as a database",
+                    text.len()
+                );
+                assert_eq!(db.len(), full.len());
+            }
+        }
+    }
+    // the same truncations through the file path degrade, never panic
+    let path = tmp("trunc");
+    for i in [0, 1, text.len() / 2, text.len() - 1] {
+        std::fs::write(&path, &text.as_bytes()[..i]).unwrap();
+        let db = PlanDb::open(&path);
+        assert!(db.degraded().is_some(), "byte {i}: truncated file must degrade");
+        assert!(db.is_empty(), "byte {i}: degraded database starts cold");
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+/// Random junk bytes: the loader rejects them with an error; the file
+/// path degrades cold with a warning — whatever the bytes contain.
+#[test]
+fn junk_bytes_degrade_to_cold() {
+    let mut rng = Rng::new(7);
+    let path = tmp("junk");
+    for case in 0..64 {
+        let len = rng.range(1, 512);
+        let bytes: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
+        let text = String::from_utf8_lossy(&bytes).into_owned();
+        assert!(PlanDb::load_str(&text).is_err(), "case {case}: junk must not load");
+        std::fs::write(&path, &bytes).unwrap();
+        let db = PlanDb::open(&path);
+        assert!(db.degraded().is_some(), "case {case}: junk file must degrade");
+        assert!(db.is_empty());
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+/// A future format version is not migrated — it degrades cold (old
+/// binaries never misread new files).
+#[test]
+fn version_bump_invalidates_the_whole_file() {
+    let text = seeded_db_text();
+    assert!(text.contains("\"cadnn_plandb\": 1"), "version key missing from serialization");
+    let bumped = text.replace("\"cadnn_plandb\": 1", "\"cadnn_plandb\": 2");
+    let err = PlanDb::load_str(&bumped).unwrap_err();
+    assert!(err.contains("version"), "{err}");
+    let path = tmp("vbump");
+    std::fs::write(&path, &bumped).unwrap();
+    let db = PlanDb::open(&path);
+    assert!(db.degraded().is_some() && db.is_empty());
+    std::fs::remove_file(&path).ok();
+}
+
+/// Candidates beyond [`TOP_K`] are evicted from the tail: the ranked
+/// order the search supplied is preserved, the overflow dropped — and
+/// the order survives the JSON round trip.
+#[test]
+fn top_k_eviction_drops_the_tail_in_order() {
+    let mut rng = Rng::new(11);
+    let csr = random_csr(16, 16, 0.3, &mut rng);
+    let mut db = PlanDb::in_memory();
+    let spec = SpecKey::from_layer(
+        FormatPolicy::Auto,
+        ValuePolicy::Auto,
+        None,
+        &csr,
+        [1, 1, 16, 16],
+        db.device_fp(),
+    );
+    // 2*TOP_K candidates, distinct identities (cutover), ascending cost
+    let cands: Vec<StoredCandidate> = (0..2 * TOP_K)
+        .map(|i| {
+            let mut plan = LayerPlan::csr();
+            plan.parallel_cutover = 100 + i;
+            StoredCandidate { plan, cost: 10.0 + i as f64, measured_us: None }
+        })
+        .collect();
+    db.insert(spec, cands.clone(), Provenance::Modeled);
+    let kept = db.seed_plans(&spec);
+    assert_eq!(kept.len(), TOP_K, "eviction keeps exactly TOP_K");
+    for (i, plan) in kept.iter().enumerate() {
+        assert_eq!(plan.parallel_cutover, 100 + i, "rank {i} must keep supplied order");
+    }
+    let mut back = PlanDb::load_str(&db.to_json().to_string_pretty()).unwrap();
+    assert_eq!(back.seed_plans(&spec), kept, "ranking survives the round trip");
+    assert_eq!(back.best_plan(&spec).unwrap(), kept[0]);
+}
+
+/// 200-seed property: a warm database (after a full JSON round trip)
+/// returns exactly the plan the cold search produced, over random
+/// shapes, sparsities, policies, and value widths.
+#[test]
+fn warm_db_returns_the_cold_search_plan_200_seeds() {
+    let policies =
+        [FormatPolicy::Auto, FormatPolicy::Csr, FormatPolicy::Bsr, FormatPolicy::Pattern];
+    let vpolicies = [ValuePolicy::Auto, ValuePolicy::F32, ValuePolicy::Q8, ValuePolicy::Q4];
+    let mut db = PlanDb::in_memory();
+    let mut cache = PlanCache::default();
+    let mut cases = Vec::new();
+    for seed in 0..200u64 {
+        let mut rng = Rng::new(seed * 7919 + 1);
+        let (kh, kw) = ([1usize, 3, 5][rng.below(3)], [1usize, 3][rng.below(2)]);
+        let cin = rng.range(2, 12);
+        let cout = rng.range(8, 48);
+        let hwio = [kh, kw, cin, cout];
+        let csr = random_csr(kh * kw * cin, cout, 0.05 + rng.f64() * 0.3, &mut rng);
+        let m = rng.range(1, 256);
+        let policy = policies[rng.below(4)];
+        let vp = vpolicies[rng.below(4)];
+        let declared = [None, Some(4u8), Some(8u8)][rng.below(3)];
+        let spec = SpecKey::from_layer(policy, vp, declared, &csr, hwio, db.device_fp());
+        let arts = cache.layer(&format!("case{seed}"), &csr);
+        let out = search_layer(
+            policy,
+            vp,
+            declared,
+            &csr,
+            m,
+            hwio,
+            &CostTable::builtin(),
+            &[],
+            false,
+            spec.seed(),
+            arts,
+        );
+        let best = out.best().expect("nonempty search").plan.clone();
+        db.insert(spec, out.candidates, Provenance::Modeled);
+        cases.push((spec, best));
+    }
+    // the round trip is the "next process": serialize, reload, look up
+    let mut warm = PlanDb::load_str(&db.to_json().to_string_pretty()).unwrap();
+    for (i, (spec, cold)) in cases.iter().enumerate() {
+        let got = warm.best_plan(spec);
+        assert_eq!(got.as_ref(), Some(cold), "seed {i}: warm lookup diverged from cold search");
+    }
+}
+
+/// Acceptance: on every builtin model, for every prunable layer shape
+/// (paper-profile sparsity, nnz capped at 2M for the vgg16 fc giants),
+/// the searched plan's modeled cost is <= the heuristic plan's.
+#[test]
+fn searched_cost_never_exceeds_heuristic_on_every_builtin() {
+    let mut cache = PlanCache::default();
+    let mut rng = Rng::new(3);
+    let mut checked = 0usize;
+    for name in models::all_names() {
+        let g = models::build(name, 1).unwrap();
+        let profile = paper_profile(&g);
+        for node in &g.nodes {
+            let Some(&sparsity) = profile.layers.get(&node.name) else { continue };
+            let (rows, cols, hwio, m) = match node.op {
+                Op::Conv2d { kh, kw, cin, cout, .. } => {
+                    let m = node.shape.0.get(1).copied().unwrap_or(1)
+                        * node.shape.0.get(2).copied().unwrap_or(1);
+                    (kh * kw * cin, cout, [kh, kw, cin, cout], m)
+                }
+                Op::FullyConnected { cin, cout, .. } => (cin, cout, [1, 1, cin, cout], 1),
+                _ => continue,
+            };
+            let dense_nnz = ((rows * cols) as f64 * (1.0 - sparsity)).ceil() as usize;
+            let csr = synth_csr(rows, cols, dense_nnz.clamp(1, 2_000_000), &mut rng);
+            let key = format!("{name}/{}", node.name);
+            let heuristic = {
+                let arts = cache.layer(&key, &csr);
+                plan_layer_valued(FormatPolicy::Auto, ValuePolicy::Auto, None, &csr, m, hwio, arts)
+            };
+            let arts = cache.layer(&key, &csr);
+            let out = search_layer(
+                FormatPolicy::Auto,
+                ValuePolicy::Auto,
+                None,
+                &csr,
+                m,
+                hwio,
+                &CostTable::builtin(),
+                &[],
+                false,
+                spec_seed(FormatPolicy::Auto, ValuePolicy::Auto, None, &csr, hwio),
+                arts,
+            );
+            let searched = out.best().expect("search never returns empty for nnz > 0");
+            assert!(
+                searched.cost <= heuristic.cost_per_row + 1e-9,
+                "{key}: searched {:.3} (fmt {}) > heuristic {:.3} (fmt {})",
+                searched.cost,
+                searched.plan.format.label(),
+                heuristic.cost_per_row,
+                heuristic.format.label()
+            );
+            checked += 1;
+        }
+    }
+    assert!(checked >= 50, "expected dozens of prunable layers, checked {checked}");
+}
+
+/// The tentpole acceptance test at full scale: plan-database semantics
+/// through the engine API on the real ResNet-50 model file (modeled
+/// search — the measured `--tune` variant of the same double-run is the
+/// release-mode CI smoke, where kernel timing is affordable). The cold
+/// build searches every pruned layer and persists; the warm rebuild
+/// answers 100% from the database with zero searches, zero measurements,
+/// and reproduces the `ExecPlan` bit-for-bit (JSON string equality).
+#[test]
+fn resnet50_warm_replan_zero_measurements_bit_identical() {
+    let model = format!("{}/models/resnet50.cadnn", env!("CARGO_MANIFEST_DIR"));
+    let parsed = front::parse_file(&model).expect("golden resnet50 model parses");
+    let profile = paper_profile(&parsed.graph);
+    let dbf = tmp("resnet50");
+    std::fs::remove_file(&dbf).ok();
+    let build = || {
+        Engine::from_model_file(&model)
+            .personality(Personality::CadnnSparse)
+            .sparsity_profile(profile.clone())
+            .batch_sizes(&[1])
+            .plan_db(dbf.to_str().unwrap())
+            .build()
+            .unwrap()
+    };
+    let cold = build();
+    let cs = cold.tune_stats().expect("native engines report tune stats");
+    assert!(cs.searched > 0, "cold build must search: {cs:?}");
+    assert_eq!(cs.measurements, 0, "modeled search must not measure: {cs:?}");
+    let warm = build();
+    std::fs::remove_file(&dbf).ok();
+    let ws = warm.tune_stats().unwrap();
+    assert_eq!(ws.measurements, 0, "warm replan must not measure: {ws:?}");
+    assert_eq!(ws.searched, 0, "warm replan must not search: {ws:?}");
+    assert_eq!(ws.db_hits, ws.requests, "100% database hits: {ws:?}");
+    assert!(ws.requests > 0, "resnet50 must have pruned layers to plan");
+    let a = cold.exec_plan().expect("pruned engine has a plan").to_json().to_string_pretty();
+    let b = warm.exec_plan().unwrap().to_json().to_string_pretty();
+    assert_eq!(a, b, "warm ExecPlan must be bit-identical to the cold run's");
+}
+
+/// The measured (`--tune`) half of the acceptance, on a model small
+/// enough to time kernels in a debug-build test: the cold tuned build
+/// measures the beam; the warm rebuild replays the *measured* winners
+/// with zero measurements and a bit-identical `ExecPlan` — timing noise
+/// only ever existed in the run that wrote the database.
+#[test]
+fn lenet5_measured_tune_warm_replay_is_bit_identical() {
+    let g = models::build("lenet5", 1).expect("builtin lenet5");
+    let profile = paper_profile(&g);
+    let dbf = tmp("lenet5");
+    std::fs::remove_file(&dbf).ok();
+    let build = || {
+        Engine::native("lenet5")
+            .personality(Personality::CadnnSparse)
+            .sparsity_profile(profile.clone())
+            .batch_sizes(&[1])
+            .tune_plans(true)
+            .plan_db(dbf.to_str().unwrap())
+            .build()
+            .unwrap()
+    };
+    let cold = build();
+    let cs = cold.tune_stats().unwrap();
+    assert!(cs.searched > 0, "cold tuned build must search: {cs:?}");
+    assert!(cs.measurements > 0, "tuning must measure kernels: {cs:?}");
+    let warm = build();
+    std::fs::remove_file(&dbf).ok();
+    let ws = warm.tune_stats().unwrap();
+    assert_eq!(ws.measurements, 0, "warm replay must not measure: {ws:?}");
+    assert_eq!(ws.searched, 0, "warm replay must not search: {ws:?}");
+    assert_eq!(ws.db_hits, ws.requests, "100% database hits: {ws:?}");
+    let a = cold.exec_plan().unwrap().to_json().to_string_pretty();
+    let b = warm.exec_plan().unwrap().to_json().to_string_pretty();
+    assert_eq!(a, b, "warm ExecPlan must replay the measured winners bit-for-bit");
+}
