@@ -6,10 +6,12 @@
 //! percentiles, batch utilization, and deadline misses (split by cause)
 //! at each load. A second sweep serves two models together at 0.5×–2.0×
 //! the calibrated capacity with admission control on/off, showing
-//! overload turning queue-expiry misses into early sheds. A final A/B
-//! pass measures the span-recorder overhead on the exec hot path (obs
-//! enabled vs disabled). No artifacts needed. Emits
-//! `BENCH_serving.json`. Run: cargo bench --bench bench_serving
+//! overload turning queue-expiry misses into early sheds. Two final A/B
+//! passes measure observability cost: the span-recorder overhead on the
+//! exec hot path (obs enabled vs disabled), and the full telemetry
+//! stack on the serving path (off vs head-1% sampling vs always-on).
+//! No artifacts needed. Emits `BENCH_serving.json`. Run:
+//! cargo bench --bench bench_serving
 
 use cadnn::api::Engine;
 use cadnn::bench::print_table;
@@ -18,7 +20,7 @@ use cadnn::exec::Personality;
 use cadnn::models;
 use cadnn::planner::BatchCost;
 use cadnn::serve::{
-    AdmissionConfig, BatchPolicy, QueueConfig, ServeError, ServeRequest, Server,
+    AdmissionConfig, BatchPolicy, QueueConfig, ServeError, ServeRequest, Server, TelemetryConfig,
 };
 use cadnn::util::json::{obj, Json};
 use cadnn::util::rng::Rng;
@@ -136,6 +138,71 @@ fn measure_obs_overhead(engine: &Engine) -> Json {
         ("disabled_median_us", Json::Num(off_us)),
         ("enabled_median_us", Json::Num(on_us)),
         ("overhead_pct", Json::Num(pct)),
+    ])
+}
+
+/// A/B the full always-on tracing stack on the serving path: mean
+/// per-request closed-loop latency with telemetry off, head-sampled at
+/// 1%, and always-on (rate 1.0). Each configuration serves the same
+/// load; the telemetry sink is a temp file, removed afterwards. Returns
+/// the JSON blob embedded in the report (`Json::Null` when the `obs`
+/// feature is compiled out).
+fn measure_telemetry_overhead(engine: &Engine) -> Json {
+    if !cadnn::obs::COMPILED {
+        println!("\ntelemetry overhead: obs feature compiled out — cost is exactly 0");
+        return Json::Null;
+    }
+    const REQUESTS: usize = 64;
+    let path = std::env::temp_dir()
+        .join(format!("cadnn-bench-telemetry-{}.jsonl", std::process::id()));
+    let mut run_cfg = |rate: Option<f64>| -> Option<f64> {
+        cadnn::obs::disable();
+        cadnn::obs::reset();
+        let mut builder = Server::builder().engine_with("m", engine, QueueConfig::default());
+        if let Some(r) = rate {
+            let mut tcfg = TelemetryConfig::new(&path);
+            tcfg.sample_rate = r;
+            tcfg.period_ms = 50;
+            builder = builder.telemetry(tcfg);
+        }
+        let server = builder.build().ok()?;
+        let input_len = server.input_len("m")?;
+        let mut rng = Rng::new(29);
+        let t0 = std::time::Instant::now();
+        for _ in 0..REQUESTS {
+            let mut img = vec![0.0f32; input_len];
+            rng.fill_normal(&mut img, 0.5);
+            server.infer(ServeRequest::new("m", img)).ok()?;
+        }
+        let total_us = t0.elapsed().as_secs_f64() * 1e6;
+        server.shutdown().ok()?;
+        cadnn::obs::disable();
+        cadnn::obs::reset();
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_file(cadnn::obs::export::rotated_path(&path));
+        Some(total_us / REQUESTS as f64)
+    };
+    let (off, head, always) = match (run_cfg(None), run_cfg(Some(0.01)), run_cfg(Some(1.0))) {
+        (Some(a), Some(b), Some(c)) => (a, b, c),
+        _ => {
+            eprintln!("telemetry overhead runs failed");
+            return Json::Null;
+        }
+    };
+    let pct = |on: f64| if off > 0.0 { (on / off - 1.0) * 100.0 } else { 0.0 };
+    println!(
+        "\ntelemetry overhead: per-request {off:.1}us off vs {head:.1}us head-1% \
+         ({:+.2}%) vs {always:.1}us always-on ({:+.2}%)",
+        pct(head),
+        pct(always),
+    );
+    obj(vec![
+        ("requests", Json::Num(REQUESTS as f64)),
+        ("off_mean_us", Json::Num(off)),
+        ("head_1pct_mean_us", Json::Num(head)),
+        ("always_on_mean_us", Json::Num(always)),
+        ("head_1pct_overhead_pct", Json::Num(pct(head))),
+        ("always_on_overhead_pct", Json::Num(pct(always))),
     ])
 }
 
@@ -384,12 +451,14 @@ fn main() {
     }
 
     let obs_overhead = measure_obs_overhead(&engine);
+    let telemetry_overhead = measure_telemetry_overhead(&engine);
     let out = Json::Obj(vec![
         ("bench".to_string(), Json::Str("serving".to_string())),
         ("deadline_ms".to_string(), Json::Num(DEADLINE_MS as f64)),
         ("rows".to_string(), Json::Arr(report)),
         ("overload_rows".to_string(), Json::Arr(overload_rows)),
         ("obs_overhead".to_string(), obs_overhead),
+        ("telemetry_overhead".to_string(), telemetry_overhead),
     ]);
     let path = "BENCH_serving.json";
     match std::fs::write(path, out.to_string_pretty()) {

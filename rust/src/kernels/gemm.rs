@@ -186,7 +186,31 @@ pub fn gemm_blocked(
 }
 
 /// Multithreaded blocked GEMM: row panels are disjoint slices of C.
+/// Emits a `kernel` span (family `gemm`) when the recorder is on,
+/// inheriting the calling thread's trace context.
 pub fn gemm_parallel(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    tile: &TileConfig,
+    epilogue: &Epilogue,
+) {
+    let t0 = obs::timer();
+    gemm_parallel_impl(a, b, c, m, k, n, tile, epilogue);
+    if let Some(t0) = t0 {
+        obs::span_since(
+            obs::CAT_KERNEL,
+            "gemm".to_string(),
+            t0,
+            vec![("m", obs::ArgValue::Num(m as f64))],
+        );
+    }
+}
+
+fn gemm_parallel_impl(
     a: &[f32],
     b: &[f32],
     c: &mut [f32],

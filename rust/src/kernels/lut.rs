@@ -509,7 +509,9 @@ pub fn qpattern_gemm_parallel_cutover(
 // ---------------------------------------------------------------------------
 
 /// Run the matching LUT kernel for a quantized payload (the executor's
-/// one entry point for `NodeWeights::QuantSparse`).
+/// one entry point for `NodeWeights::QuantSparse`). Emits a `kernel`
+/// span (family `lut`) when the recorder is on, inheriting the calling
+/// thread's trace context.
 pub fn qsparse_gemm_parallel_cutover(
     a: &[f32],
     w: &QSparseMatrix,
@@ -518,10 +520,19 @@ pub fn qsparse_gemm_parallel_cutover(
     epilogue: &Epilogue,
     cutover: usize,
 ) {
+    let t0 = obs::timer();
     match w {
         QSparseMatrix::Csr(q) => qcsr_gemm_parallel_cutover(a, q, c, m, epilogue, cutover),
         QSparseMatrix::Bsr(q) => qbsr_gemm_parallel_cutover(a, q, c, m, epilogue, cutover),
         QSparseMatrix::Pattern(q) => qpattern_gemm_parallel_cutover(a, q, c, m, epilogue, cutover),
+    }
+    if let Some(t0) = t0 {
+        obs::span_since(
+            obs::CAT_KERNEL,
+            "lut".to_string(),
+            t0,
+            vec![("m", obs::ArgValue::Num(m as f64))],
+        );
     }
 }
 

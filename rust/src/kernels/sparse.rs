@@ -67,8 +67,30 @@ pub fn csr_gemm_parallel(a: &[f32], w: &CsrMatrix, c: &mut [f32], m: usize, epil
 }
 
 /// Multithreaded CSR GEMM with a caller-chosen serial cutover (the
-/// planner's per-layer override; see [`PARALLEL_M_CUTOVER`]).
+/// planner's per-layer override; see [`PARALLEL_M_CUTOVER`]). Emits a
+/// `kernel` span (family `csr`) when the recorder is on, inheriting the
+/// calling thread's trace context.
 pub fn csr_gemm_parallel_cutover(
+    a: &[f32],
+    w: &CsrMatrix,
+    c: &mut [f32],
+    m: usize,
+    epilogue: &Epilogue,
+    cutover: usize,
+) {
+    let t0 = obs::timer();
+    csr_gemm_parallel_cutover_impl(a, w, c, m, epilogue, cutover);
+    if let Some(t0) = t0 {
+        obs::span_since(
+            obs::CAT_KERNEL,
+            "csr".to_string(),
+            t0,
+            vec![("m", obs::ArgValue::Num(m as f64))],
+        );
+    }
+}
+
+fn csr_gemm_parallel_cutover_impl(
     a: &[f32],
     w: &CsrMatrix,
     c: &mut [f32],

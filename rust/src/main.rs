@@ -23,12 +23,22 @@
 //!             [--models a=lenet5,b=models/net.cadnn:sparse] [--deadline-ms D]
 //!             [--greedy] [--no-planner] [--topk K]
 //!             [--format auto|csr|bsr|pattern]
+//!             [--telemetry-out T.jsonl] [--sample-rate R]
 //!             [--plan-db PATH]              serve a Poisson trace and report
 //!                                           (--native / --models: no artifacts
 //!                                           needed — the multi-model Server
 //!                                           batches over native engines with
 //!                                           planner-informed, deadline-aware
-//!                                           batch selection)
+//!                                           batch selection; --telemetry-out
+//!                                           streams sampled request traces,
+//!                                           metrics snapshots, and cost-drift
+//!                                           events as JSONL)
+//! cadnn tail FILE [--trace ID] [--model M]
+//!                 [--kind spans|snapshot|drift] [--limit N]
+//!                                           pretty-print a telemetry JSONL
+//!                                           stream written by serve
+//!                                           --telemetry-out (malformed lines
+//!                                           are skipped and counted)
 //! cadnn profile [--model NAME | --model-file F.cadnn] [--personality P]
 //!               [--top N] [--trace OUT.json] [--cost-report OUT.json]
 //!                                           per-layer timing table; --trace
@@ -64,7 +74,7 @@ use cadnn::costmodel::calibrate;
 use cadnn::exec::Personality;
 use cadnn::models;
 use cadnn::planner::{FormatPolicy, ValuePolicy};
-use cadnn::serve::{AdmissionConfig, QueueConfig, ServeRequest, Server};
+use cadnn::serve::{AdmissionConfig, QueueConfig, ServeRequest, Server, TelemetryConfig};
 use cadnn::util::json::Json;
 use cadnn::util::rng::Rng;
 
@@ -130,9 +140,10 @@ fn main() -> Result<()> {
         Some("serve") => cmd_serve(&args),
         Some("profile") => cmd_profile(&args),
         Some("calibrate") => cmd_calibrate(&args),
+        Some("tail") => cmd_tail(&args),
         _ => {
             eprintln!(
-                "usage: cadnn <figure2|table2|compress|tune|plan|db|serve|profile|calibrate> [options]"
+                "usage: cadnn <figure2|table2|compress|tune|plan|db|serve|profile|calibrate|tail> [options]"
             );
             Ok(())
         }
@@ -490,8 +501,16 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     let topk: Option<usize> = opt(args, "--topk").and_then(|s| s.parse().ok());
     let models_spec = opt(args, "--models");
     let model_file = opt(args, "--model-file");
+    let telemetry_out = opt(args, "--telemetry-out");
+    let sample_rate: f64 = opt(args, "--sample-rate")
+        .and_then(|s| s.parse().ok())
+        .map(|r: f64| r.clamp(0.0, 1.0))
+        .unwrap_or(0.01);
 
     if !flag(args, "--native") && models_spec.is_none() && model_file.is_none() {
+        if telemetry_out.is_some() {
+            return Err(anyhow!("--telemetry-out requires the native server (--native / --models)"));
+        }
         // the artifact path keeps the original single-model coordinator
         let artifacts_dir = opt(args, "--artifacts").unwrap_or_else(|| "artifacts".into());
         println!(
@@ -620,6 +639,15 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             if planned { "planner cost model" } else { "policy fallback" },
         );
         builder = builder.engine_with(alias.as_str(), &engine, qcfg);
+    }
+    if let Some(path) = &telemetry_out {
+        let mut tcfg = TelemetryConfig::new(path);
+        tcfg.sample_rate = sample_rate;
+        builder = builder.telemetry(tcfg);
+        println!(
+            "telemetry -> {path} (head sample rate {:.1}%, tail keeps sheds/misses/errors/p99)",
+            sample_rate * 100.0
+        );
     }
     let server = builder.build()?;
     println!(
@@ -825,5 +853,101 @@ fn cmd_calibrate(args: &[String]) -> Result<()> {
     println!("  direct conv (naive): {:.3}", t.direct_conv.compute);
     println!("  blocked gemm:        {:.3}", t.gemm.compute);
     println!("  csr gemm (90% sp):   {:.3}", t.csr_gemm.compute);
+    Ok(())
+}
+
+/// Pretty-print a telemetry JSONL stream written by
+/// `serve --telemetry-out`: span batches, metrics snapshots, drift
+/// events. `--trace` reconstructs one request's lifecycle across
+/// batches; malformed lines (e.g. a truncated final line after a crash)
+/// are skipped and counted, never fatal.
+fn cmd_tail(args: &[String]) -> Result<()> {
+    use cadnn::obs::export::{read_telemetry, TelemetryLine};
+    let path = args
+        .get(1)
+        .filter(|a| !a.starts_with("--"))
+        .ok_or_else(|| {
+            anyhow!("usage: cadnn tail FILE [--trace ID] [--model M] [--kind spans|snapshot|drift] [--limit N]")
+        })?;
+    let trace: Option<u64> = opt(args, "--trace").and_then(|s| s.parse().ok());
+    let model = opt(args, "--model");
+    let kind = opt(args, "--kind");
+    if let Some(k) = kind.as_deref() {
+        if !matches!(k, "spans" | "snapshot" | "drift") {
+            return Err(anyhow!("unknown --kind '{k}' (spans|snapshot|drift)"));
+        }
+    }
+    let limit: usize = opt(args, "--limit").and_then(|s| s.parse().ok()).unwrap_or(usize::MAX);
+    let (lines, malformed) = read_telemetry(std::path::Path::new(path))
+        .map_err(|e| anyhow!("reading {path}: {e}"))?;
+    let mut printed = 0usize;
+    for line in &lines {
+        if printed >= limit {
+            break;
+        }
+        match line {
+            TelemetryLine::Spans { at_us, spans, dropped } => {
+                if kind.as_deref().is_some_and(|k| k != "spans") {
+                    continue;
+                }
+                let picked: Vec<_> = spans
+                    .iter()
+                    .filter(|s| trace.is_none_or(|t| s.trace == t))
+                    .filter(|s| {
+                        model
+                            .as_deref()
+                            .is_none_or(|m| s.str_arg("model").is_none_or(|sm| sm == m))
+                    })
+                    .collect();
+                if picked.is_empty() {
+                    continue;
+                }
+                println!("[{at_us:.0}us] spans: {} kept, {dropped} dropped so far", picked.len());
+                for s in picked {
+                    let outcome = s
+                        .str_arg("outcome")
+                        .map(|o| format!(" outcome={o}"))
+                        .unwrap_or_default();
+                    println!(
+                        "  trace={} {}/{} @{:.0}us +{:.0}us{}",
+                        s.trace, s.cat, s.name, s.start_us, s.dur_us, outcome
+                    );
+                }
+                printed += 1;
+            }
+            TelemetryLine::Snapshot { at_us, model: m, stats, .. } => {
+                if kind.as_deref().is_some_and(|k| k != "snapshot") || trace.is_some() {
+                    continue;
+                }
+                if model.as_deref().is_some_and(|f| f != m) {
+                    continue;
+                }
+                let num = |key: &str| stats.get(key).and_then(|v| v.as_f64()).unwrap_or(0.0);
+                let p99 = stats
+                    .get("latency")
+                    .and_then(|l| l.get("p99_us"))
+                    .and_then(|v| v.as_f64())
+                    .map(|p| format!(" p99={p:.0}us"))
+                    .unwrap_or_default();
+                println!(
+                    "[{at_us:.0}us] snapshot {m}: requests={:.0} shed={:.0} misses={:.0}{p99}",
+                    num("requests"),
+                    num("shed_total"),
+                    num("deadline_misses"),
+                );
+                printed += 1;
+            }
+            TelemetryLine::Drift(j) => {
+                if kind.as_deref().is_some_and(|k| k != "drift") || trace.is_some() {
+                    continue;
+                }
+                println!("drift: {}", j.to_string_compact());
+                printed += 1;
+            }
+        }
+    }
+    if malformed > 0 {
+        eprintln!("({malformed} malformed line(s) skipped)");
+    }
     Ok(())
 }

@@ -1,0 +1,400 @@
+//! Cost-drift watchdog: the online half of the calibration loop.
+//!
+//! `cadnn profile --cost-report` → `cadnn calibrate --apply-db` is a
+//! *pull* workflow — someone has to notice the planner's `COST_*`
+//! constants went stale. The [`DriftWatchdog`] notices for you: it
+//! streams the same predicted-vs-measured `exec` spans the
+//! [`CostReport`](super::CostReport) fit consumes, closes a window every
+//! [`DriftConfig::min_spans`] priced spans, and compares each
+//! (op, format) group's residual (group µs/unit over the window's
+//! global least-squares fit) against a threshold band. A group outside
+//! the band for [`DriftConfig::windows`] *consecutive* windows raises
+//! one structured [`DriftEvent`] into the telemetry stream — naming the
+//! stale `planner::COST_*` constant, the suggested re-fit, and the
+//! remediation command — then disarms for that group until a compliant
+//! window passes (no event storms while the operator reacts).
+//!
+//! Residuals are *relative*: a uniform slowdown across every format is
+//! absorbed by the global fit (that is a device-scale change, which the
+//! serving scheduler's online `us_per_unit` calibration already tracks);
+//! only per-format skew — exactly what makes the planner pick wrong
+//! formats — trips the watchdog. Pure values in, values out: no
+//! recorder coupling, deterministic, unit-testable.
+
+use super::report::cost_constant;
+use super::{Span, CAT_EXEC};
+use crate::util::json::Json;
+
+/// Watchdog thresholds.
+#[derive(Debug, Clone, Copy)]
+pub struct DriftConfig {
+    /// A window's residual outside `[1/threshold, threshold]` counts as
+    /// drifted.
+    pub threshold: f64,
+    /// Consecutive drifted windows required before an event fires.
+    pub windows: u32,
+    /// Priced exec spans that close one observation window.
+    pub min_spans: u64,
+}
+
+impl Default for DriftConfig {
+    fn default() -> DriftConfig {
+        DriftConfig { threshold: 1.5, windows: 3, min_spans: 32 }
+    }
+}
+
+/// One raised drift alarm (serialized into the telemetry stream as a
+/// `{"type":"drift",...}` line).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DriftEvent {
+    pub op: String,
+    pub format: String,
+    /// The offending group's residual in the window that tripped the
+    /// alarm.
+    pub residual: f64,
+    /// Consecutive drifted windows observed.
+    pub windows: u32,
+    /// The stale `planner::COST_*` constant, when the format maps to
+    /// one.
+    pub constant: Option<&'static str>,
+    /// Its current compiled-in value.
+    pub current: Option<f64>,
+    /// `current × residual` — the re-fit a calibration run would land
+    /// on.
+    pub suggested: Option<f64>,
+    /// What to run about it.
+    pub remediation: &'static str,
+}
+
+impl DriftEvent {
+    pub fn to_json(&self) -> Json {
+        let mut kv = vec![
+            ("type".to_string(), Json::Str("drift".to_string())),
+            ("op".to_string(), Json::Str(self.op.clone())),
+            ("format".to_string(), Json::Str(self.format.clone())),
+            ("residual".to_string(), Json::Num(self.residual)),
+            ("windows".to_string(), Json::Num(self.windows as f64)),
+        ];
+        if let (Some(c), Some(cur), Some(sug)) = (self.constant, self.current, self.suggested) {
+            kv.push(("constant".to_string(), Json::Str(c.to_string())));
+            kv.push(("current".to_string(), Json::Num(cur)));
+            kv.push(("suggested".to_string(), Json::Num(sug)));
+        }
+        kv.push(("remediation".to_string(), Json::Str(self.remediation.to_string())));
+        Json::Obj(kv)
+    }
+}
+
+/// The command that folds a re-fit into the plan database.
+pub const REMEDIATION: &str =
+    "cadnn profile --cost-report report.json && cadnn calibrate --cost-report report.json --apply-db";
+
+/// Accumulated sums for one (op, format) group in the open window.
+#[derive(Debug, Clone)]
+struct GroupAcc {
+    op: String,
+    format: String,
+    spans: u64,
+    pred_units: f64,
+    measured_us: f64,
+}
+
+/// Per-group streak state across windows.
+#[derive(Debug, Clone)]
+struct GroupStreak {
+    op: String,
+    format: String,
+    /// Consecutive drifted windows.
+    streak: u32,
+    /// Last drifted residual (the one reported).
+    residual: f64,
+    /// `false` after an event fires, until a compliant window re-arms.
+    armed: bool,
+}
+
+/// Streaming drift detector (module doc). Feed drained span batches to
+/// [`DriftWatchdog::observe`]; it returns any events that fired.
+#[derive(Debug)]
+pub struct DriftWatchdog {
+    cfg: DriftConfig,
+    window: Vec<GroupAcc>,
+    window_spans: u64,
+    streaks: Vec<GroupStreak>,
+    windows_closed: u64,
+    events_fired: u64,
+}
+
+impl DriftWatchdog {
+    pub fn new(cfg: DriftConfig) -> DriftWatchdog {
+        DriftWatchdog {
+            cfg,
+            window: Vec::new(),
+            window_spans: 0,
+            streaks: Vec::new(),
+            windows_closed: 0,
+            events_fired: 0,
+        }
+    }
+
+    /// Windows closed so far.
+    pub fn windows_closed(&self) -> u64 {
+        self.windows_closed
+    }
+
+    /// Events raised so far.
+    pub fn events_fired(&self) -> u64 {
+        self.events_fired
+    }
+
+    /// Stream a span batch through the watchdog; returns events that
+    /// fired as windows closed. Only priced `exec` spans advance the
+    /// window — kernel/serve spans pass through untouched.
+    pub fn observe(&mut self, spans: &[Span]) -> Vec<DriftEvent> {
+        let mut events = Vec::new();
+        for s in spans {
+            if s.cat != CAT_EXEC {
+                continue;
+            }
+            let pred = match s.num_arg("pred_units") {
+                Some(p) if p > 0.0 => p,
+                _ => continue,
+            };
+            let op = s.str_arg("op").unwrap_or("?");
+            let format = s.str_arg("format").unwrap_or("?");
+            match self.window.iter_mut().find(|g| g.op == op && g.format == format) {
+                Some(g) => {
+                    g.spans += 1;
+                    g.pred_units += pred;
+                    g.measured_us += s.dur_us;
+                }
+                None => self.window.push(GroupAcc {
+                    op: op.to_string(),
+                    format: format.to_string(),
+                    spans: 1,
+                    pred_units: pred,
+                    measured_us: s.dur_us,
+                }),
+            }
+            self.window_spans += 1;
+            if self.window_spans >= self.cfg.min_spans.max(1) {
+                events.extend(self.close_window());
+            }
+        }
+        events
+    }
+
+    fn close_window(&mut self) -> Vec<DriftEvent> {
+        let window = std::mem::take(&mut self.window);
+        self.window_spans = 0;
+        self.windows_closed += 1;
+        // the CostReport fit, over this window's sums
+        let num: f64 = window.iter().map(|g| g.measured_us * g.pred_units).sum();
+        let den: f64 = window.iter().map(|g| g.pred_units * g.pred_units).sum();
+        let global = if den > 0.0 { num / den } else { 0.0 };
+        let mut events = Vec::new();
+        if global <= 0.0 {
+            return events;
+        }
+        let band = self.cfg.threshold.max(1.0);
+        for g in &window {
+            let residual = (g.measured_us / g.pred_units) / global;
+            let drifted = residual > band || residual < 1.0 / band;
+            let streak = match self
+                .streaks
+                .iter_mut()
+                .find(|s| s.op == g.op && s.format == g.format)
+            {
+                Some(s) => s,
+                None => {
+                    self.streaks.push(GroupStreak {
+                        op: g.op.clone(),
+                        format: g.format.clone(),
+                        streak: 0,
+                        residual: 1.0,
+                        armed: true,
+                    });
+                    self.streaks.last_mut().expect("just pushed")
+                }
+            };
+            if drifted {
+                streak.streak += 1;
+                streak.residual = residual;
+                if streak.armed && streak.streak >= self.cfg.windows.max(1) {
+                    streak.armed = false;
+                    self.events_fired += 1;
+                    let c = cost_constant(&g.format);
+                    events.push(DriftEvent {
+                        op: g.op.clone(),
+                        format: g.format.clone(),
+                        residual,
+                        windows: streak.streak,
+                        constant: c.map(|(name, _)| name),
+                        current: c.map(|(_, v)| v),
+                        suggested: c.map(|(_, v)| v * residual),
+                        remediation: REMEDIATION,
+                    });
+                }
+            } else {
+                // a compliant window resets the streak and re-arms
+                streak.streak = 0;
+                streak.armed = true;
+            }
+        }
+        events
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::ArgValue;
+
+    fn exec_span(op: &str, format: &str, pred: f64, us: f64) -> Span {
+        Span {
+            cat: CAT_EXEC,
+            name: format!("{op}-node"),
+            start_us: 0.0,
+            dur_us: us,
+            tid: 1,
+            trace: 0,
+            args: vec![
+                ("op", ArgValue::Str(op.to_string())),
+                ("format", ArgValue::Str(format.to_string())),
+                ("pred_units", ArgValue::Num(pred)),
+            ],
+        }
+    }
+
+    /// One window's worth of spans: two groups, csr `skew`× slower than
+    /// its prediction relative to dense.
+    fn window(skew: f64, n: u64) -> Vec<Span> {
+        (0..n)
+            .map(|i| {
+                if i % 2 == 0 {
+                    exec_span("conv2d", "csr", 100.0, 100.0 * skew)
+                } else {
+                    exec_span("conv2d", "dense", 100.0, 100.0)
+                }
+            })
+            .collect()
+    }
+
+    fn cfg() -> DriftConfig {
+        DriftConfig { threshold: 1.5, windows: 3, min_spans: 8 }
+    }
+
+    #[test]
+    fn well_calibrated_stays_silent() {
+        let mut w = DriftWatchdog::new(cfg());
+        for _ in 0..10 {
+            assert!(w.observe(&window(1.0, 8)).is_empty());
+        }
+        assert_eq!(w.windows_closed(), 10);
+        assert_eq!(w.events_fired(), 0);
+    }
+
+    #[test]
+    fn persistent_skew_fires_after_k_windows_and_names_the_constant() {
+        let mut w = DriftWatchdog::new(cfg());
+        // 3x skew: global fit = (300+100)/2 per 100 units = 2.0 us/unit;
+        // csr residual = 3/2 = 1.5... borderline. Use 4x: global 2.5,
+        // csr residual 4/2.5 = 1.6 > 1.5 and dense 1/2.5 = 0.4 < 1/1.5.
+        assert!(w.observe(&window(4.0, 8)).is_empty(), "window 1: streak building");
+        assert!(w.observe(&window(4.0, 8)).is_empty(), "window 2: streak building");
+        let events = w.observe(&window(4.0, 8));
+        // both groups drift (csr slow, dense relatively fast)
+        assert_eq!(events.len(), 2, "{events:?}");
+        let csr = events.iter().find(|e| e.format == "csr").unwrap();
+        assert_eq!(csr.windows, 3);
+        assert!(csr.residual > 1.5);
+        assert_eq!(csr.constant, Some("COST_CSR_NNZ"));
+        let (cur, sug) = (csr.current.unwrap(), csr.suggested.unwrap());
+        assert!((sug / cur - csr.residual).abs() < 1e-9);
+        assert!(csr.remediation.contains("calibrate --cost-report"));
+        // disarmed: continuing skew does not storm
+        assert!(w.observe(&window(4.0, 8)).is_empty());
+        assert_eq!(w.events_fired(), 2);
+        // a compliant window re-arms, then 3 more drifted windows refire
+        assert!(w.observe(&window(1.0, 8)).is_empty());
+        assert!(w.observe(&window(4.0, 8)).is_empty());
+        assert!(w.observe(&window(4.0, 8)).is_empty());
+        assert_eq!(w.observe(&window(4.0, 8)).len(), 2);
+    }
+
+    #[test]
+    fn transient_blips_below_k_windows_never_fire() {
+        let mut w = DriftWatchdog::new(cfg());
+        for _ in 0..5 {
+            assert!(w.observe(&window(4.0, 8)).is_empty());
+            assert!(w.observe(&window(4.0, 8)).is_empty());
+            assert!(w.observe(&window(1.0, 8)).is_empty(), "reset before the 3rd");
+        }
+        assert_eq!(w.events_fired(), 0);
+    }
+
+    #[test]
+    fn uniform_slowdown_is_absorbed_by_the_global_fit() {
+        // everything 5x slower: residuals all 1.0 (us_per_unit moved,
+        // which is the scheduler's online calibration's job, not a
+        // format-skew alarm)
+        let mut w = DriftWatchdog::new(cfg());
+        let spans: Vec<Span> = (0..32)
+            .map(|i| {
+                let f = if i % 2 == 0 { "csr" } else { "dense" };
+                exec_span("conv2d", f, 100.0, 500.0)
+            })
+            .collect();
+        assert!(w.observe(&spans).is_empty());
+        assert_eq!(w.windows_closed(), 4);
+        assert_eq!(w.events_fired(), 0);
+    }
+
+    #[test]
+    fn single_group_never_drifts_against_itself() {
+        // with one (op,format) the global fit IS the group fit
+        let mut w = DriftWatchdog::new(cfg());
+        for _ in 0..5 {
+            let spans: Vec<Span> =
+                (0..8).map(|_| exec_span("conv2d", "csr", 100.0, 900.0)).collect();
+            assert!(w.observe(&spans).is_empty());
+        }
+        assert_eq!(w.events_fired(), 0);
+    }
+
+    #[test]
+    fn event_json_carries_the_story() {
+        let e = DriftEvent {
+            op: "conv2d".into(),
+            format: "csr".into(),
+            residual: 1.8,
+            windows: 3,
+            constant: Some("COST_CSR_NNZ"),
+            current: Some(1.0),
+            suggested: Some(1.8),
+            remediation: REMEDIATION,
+        };
+        let j = e.to_json();
+        let text = j.to_string_compact();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back.get("type").and_then(|v| v.as_str()), Some("drift"));
+        assert_eq!(back.get("constant").and_then(|v| v.as_str()), Some("COST_CSR_NNZ"));
+        assert_eq!(back.get("residual").and_then(|v| v.as_f64()), Some(1.8));
+        assert!(back
+            .get("remediation")
+            .and_then(|v| v.as_str())
+            .is_some_and(|r| r.contains("--apply-db")));
+    }
+
+    #[test]
+    fn unpriced_and_non_exec_spans_do_not_advance_windows() {
+        let mut w = DriftWatchdog::new(cfg());
+        let mut s = exec_span("conv2d", "csr", 100.0, 100.0);
+        s.cat = crate::obs::CAT_SERVE;
+        let mut unpriced = exec_span("relu", "csr", 0.0, 10.0);
+        unpriced.args.retain(|(k, _)| *k != "pred_units");
+        for _ in 0..100 {
+            assert!(w.observe(&[s.clone(), unpriced.clone()]).is_empty());
+        }
+        assert_eq!(w.windows_closed(), 0);
+    }
+}

@@ -1,0 +1,329 @@
+//! JSONL telemetry export: the on-disk stream behind `cadnn serve
+//! --telemetry-out PATH` and the `cadnn tail FILE` reader.
+//!
+//! **Line shapes.** Every line is one complete JSON object with a
+//! `"type"` discriminator:
+//!
+//! - `{"type":"spans","at_us":T,"events":[...],"dropped":N}` — a batch
+//!   of sampled spans in the Chrome trace-event encoding
+//!   ([`super::trace::span_event`], trace ids inside `args.trace_id`);
+//!   `dropped` is the recorder+sampler span loss so far.
+//! - `{"type":"snapshot","at_us":T,"model":"a","stats":{...},
+//!   "counters":{...}}` — one model's merged
+//!   [`crate::serve::MetricsSnapshot`] (`MetricsSnapshot::to_json`) plus
+//!   the global kernel counters.
+//! - `{"type":"drift", ...}` — a [`super::drift::DriftEvent`]
+//!   ([`super::drift::DriftEvent::to_json`]).
+//!
+//! **Writer guarantees.** [`TelemetryWriter`] appends whole lines with a
+//! single `write_all` each, rotates to `<path>.1` when the size cap is
+//! exceeded, and *never* takes the server down: an unwritable path (or
+//! any later I/O error) logs one warning and disables the writer — the
+//! flusher keeps running, the workers never notice. The reader
+//! ([`read_telemetry`]) is the mirror image: malformed or truncated
+//! lines are skipped and counted, never a panic — a stream cut mid-line
+//! by a crash or rotation stays readable.
+
+use super::trace::{parse_span_event, span_event};
+use super::Span;
+use crate::util::json::Json;
+use crate::util::log::{self, Level};
+use std::fs::{File, OpenOptions};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+/// Default rotation cap (16 MiB) — the stream is a ring of two files
+/// (`path` + `path.1`), so peak disk use is ~2× this.
+pub const DEFAULT_MAX_BYTES: u64 = 16 * 1024 * 1024;
+
+/// Size-capped, warn-once-and-disable JSONL appender (module doc).
+#[derive(Debug)]
+pub struct TelemetryWriter {
+    path: PathBuf,
+    file: Option<File>,
+    written: u64,
+    max_bytes: u64,
+    /// Completed rotations (`path` renamed to `path.1`).
+    rotations: u64,
+}
+
+impl TelemetryWriter {
+    /// Open `path` for appending. An unwritable path degrades to a
+    /// disabled writer (warned once) rather than an error: telemetry
+    /// must never stop the server from starting.
+    pub fn open(path: impl Into<PathBuf>, max_bytes: u64) -> TelemetryWriter {
+        let path = path.into();
+        let mut w = TelemetryWriter {
+            path,
+            file: None,
+            written: 0,
+            max_bytes: max_bytes.max(1),
+            rotations: 0,
+        };
+        match OpenOptions::new().create(true).append(true).open(&w.path) {
+            Ok(f) => {
+                w.written = f.metadata().map(|m| m.len()).unwrap_or(0);
+                w.file = Some(f);
+            }
+            Err(e) => w.disable("open", &e.to_string()),
+        }
+        w
+    }
+
+    /// Still writing? `false` after the first I/O failure.
+    pub fn active(&self) -> bool {
+        self.file.is_some()
+    }
+
+    /// Rotations performed so far.
+    pub fn rotations(&self) -> u64 {
+        self.rotations
+    }
+
+    fn disable(&mut self, what: &str, err: &str) {
+        log::log(
+            Level::Warn,
+            "obs::export",
+            format_args!(
+                "telemetry {what} failed for {}: {err} — telemetry disabled, serving continues",
+                self.path.display()
+            ),
+        );
+        self.file = None;
+    }
+
+    /// Append one JSON document as a single line. Whole-line single
+    /// `write_all`, so a reader tailing the file never observes a
+    /// half-line except at a crash/rotation boundary (which
+    /// [`read_telemetry`] tolerates).
+    pub fn write_line(&mut self, doc: &Json) {
+        if self.file.is_none() {
+            return;
+        }
+        let mut line = doc.to_string_compact();
+        line.push('\n');
+        if self.written + line.len() as u64 > self.max_bytes && self.written > 0 {
+            self.rotate();
+            if self.file.is_none() {
+                return;
+            }
+        }
+        let Some(f) = self.file.as_mut() else { return };
+        match f.write_all(line.as_bytes()) {
+            Ok(()) => self.written += line.len() as u64,
+            Err(e) => self.disable("write", &e.to_string()),
+        }
+    }
+
+    /// `path` → `path.1` (clobbering the previous `.1`), then reopen a
+    /// fresh `path`.
+    fn rotate(&mut self) {
+        self.file = None;
+        let old = rotated_path(&self.path);
+        if let Err(e) = std::fs::rename(&self.path, &old) {
+            self.disable("rotate", &e.to_string());
+            return;
+        }
+        match OpenOptions::new().create(true).append(true).open(&self.path) {
+            Ok(f) => {
+                self.written = 0;
+                self.rotations += 1;
+                self.file = Some(f);
+            }
+            Err(e) => self.disable("reopen", &e.to_string()),
+        }
+    }
+}
+
+/// Where rotation moves the previous stream: `t.jsonl` → `t.jsonl.1`.
+pub fn rotated_path(path: &Path) -> PathBuf {
+    let mut s = path.as_os_str().to_os_string();
+    s.push(".1");
+    PathBuf::from(s)
+}
+
+/// Build a `"spans"` line from already-sampled spans.
+pub fn spans_line(at_us: f64, spans: &[Span], dropped: u64) -> Json {
+    Json::Obj(vec![
+        ("type".to_string(), Json::Str("spans".to_string())),
+        ("at_us".to_string(), Json::Num(at_us)),
+        ("events".to_string(), Json::Arr(spans.iter().map(span_event).collect())),
+        ("dropped".to_string(), Json::Num(dropped as f64)),
+    ])
+}
+
+/// Build a `"snapshot"` line for one model.
+pub fn snapshot_line(
+    at_us: f64,
+    model: &str,
+    stats: Json,
+    counters: &[(&'static str, u64)],
+) -> Json {
+    let counter_obj = counters
+        .iter()
+        .map(|&(name, v)| (name.to_string(), Json::Num(v as f64)))
+        .collect();
+    Json::Obj(vec![
+        ("type".to_string(), Json::Str("snapshot".to_string())),
+        ("at_us".to_string(), Json::Num(at_us)),
+        ("model".to_string(), Json::Str(model.to_string())),
+        ("stats".to_string(), stats),
+        ("counters".to_string(), Json::Obj(counter_obj)),
+    ])
+}
+
+/// One parsed telemetry line (`cadnn tail`'s unit of work).
+#[derive(Debug, Clone, PartialEq)]
+pub enum TelemetryLine {
+    Spans { at_us: f64, spans: Vec<Span>, dropped: u64 },
+    Snapshot { at_us: f64, model: String, stats: Json, counters: Json },
+    /// Drift events keep their raw JSON — the schema belongs to
+    /// [`super::drift`], the stream just carries it.
+    Drift(Json),
+}
+
+/// Parse one line of a telemetry stream. Errors describe what broke;
+/// the bulk reader ([`read_telemetry`]) turns them into skip counts.
+pub fn parse_telemetry_line(line: &str) -> Result<TelemetryLine, String> {
+    let j = Json::parse(line.trim()).map_err(|e| format!("bad json: {e}"))?;
+    let ty = j
+        .get("type")
+        .and_then(|t| t.as_str())
+        .ok_or("missing 'type' discriminator")?;
+    let at = |j: &Json| j.get("at_us").and_then(|v| v.as_f64()).unwrap_or(0.0);
+    match ty {
+        "spans" => {
+            let events = j
+                .get("events")
+                .and_then(|e| e.as_arr())
+                .ok_or("spans line missing events array")?;
+            let mut spans = Vec::with_capacity(events.len());
+            for (i, ev) in events.iter().enumerate() {
+                spans.push(parse_span_event(ev, i)?);
+            }
+            let dropped = j.get("dropped").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
+            Ok(TelemetryLine::Spans { at_us: at(&j), spans, dropped })
+        }
+        "snapshot" => {
+            let model = j
+                .get("model")
+                .and_then(|m| m.as_str())
+                .ok_or("snapshot line missing model")?
+                .to_string();
+            let stats = j.get("stats").cloned().ok_or("snapshot line missing stats")?;
+            let counters = j.get("counters").cloned().unwrap_or(Json::Obj(vec![]));
+            Ok(TelemetryLine::Snapshot { at_us: at(&j), model, stats, counters })
+        }
+        "drift" => Ok(TelemetryLine::Drift(j)),
+        other => Err(format!("unknown line type '{other}'")),
+    }
+}
+
+/// Read a telemetry file line by line: `(parsed lines, malformed
+/// count)`. Malformed/truncated lines (and trailing blank lines) are
+/// skipped and counted — never an error, never a panic — so a stream
+/// cut mid-write stays usable.
+pub fn read_telemetry(path: &Path) -> std::io::Result<(Vec<TelemetryLine>, usize)> {
+    let text = std::fs::read_to_string(path)?;
+    let mut out = Vec::new();
+    let mut malformed = 0usize;
+    for line in text.lines() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        match parse_telemetry_line(line) {
+            Ok(l) => out.push(l),
+            Err(_) => malformed += 1,
+        }
+    }
+    Ok((out, malformed))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::{ArgValue, CAT_SERVE};
+
+    fn span(trace: u64) -> Span {
+        Span {
+            cat: CAT_SERVE,
+            name: "request".into(),
+            start_us: 1.0,
+            dur_us: 2.0,
+            tid: 1,
+            trace,
+            args: vec![("outcome", ArgValue::Str("ok".into()))],
+        }
+    }
+
+    #[test]
+    fn lines_round_trip() {
+        let sl = spans_line(10.0, &[span(3)], 2);
+        let parsed = parse_telemetry_line(&sl.to_string_compact()).unwrap();
+        assert_eq!(
+            parsed,
+            TelemetryLine::Spans { at_us: 10.0, spans: vec![span(3)], dropped: 2 }
+        );
+        let snap = snapshot_line(11.0, "m", Json::Obj(vec![]), &[("csr_rows", 5)]);
+        match parse_telemetry_line(&snap.to_string_compact()).unwrap() {
+            TelemetryLine::Snapshot { model, counters, .. } => {
+                assert_eq!(model, "m");
+                assert_eq!(counters.get("csr_rows").and_then(|v| v.as_f64()), Some(5.0));
+            }
+            other => panic!("wrong line kind: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn malformed_lines_skip_and_count() {
+        let dir = std::env::temp_dir().join("cadnn_export_test_malformed");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.jsonl");
+        let good = spans_line(1.0, &[span(1)], 0).to_string_compact();
+        // truncated tail simulates a crash mid-write
+        let cut = &good[..good.len() / 2];
+        std::fs::write(
+            &path,
+            format!("{good}\nnot json\n{{\"type\":\"mystery\"}}\n{good}\n{cut}"),
+        )
+        .unwrap();
+        let (lines, malformed) = read_telemetry(&path).unwrap();
+        assert_eq!(lines.len(), 2);
+        assert_eq!(malformed, 3);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn writer_rotates_at_the_cap() {
+        let dir = std::env::temp_dir().join("cadnn_export_test_rotate");
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.jsonl");
+        let mut w = TelemetryWriter::open(&path, 256);
+        let line = spans_line(1.0, &[span(9)], 0);
+        for _ in 0..20 {
+            w.write_line(&line);
+        }
+        assert!(w.active());
+        assert!(w.rotations() >= 1, "20 ~100B lines through a 256B cap must rotate");
+        // both generations stay within the cap (plus one line of slack)
+        let main_len = std::fs::metadata(&path).unwrap().len();
+        let old_len = std::fs::metadata(rotated_path(&path)).unwrap().len();
+        assert!(main_len <= 512 && old_len <= 512, "{main_len} {old_len}");
+        // and the surviving stream is readable
+        let (lines, malformed) = read_telemetry(&path).unwrap();
+        assert!(!lines.is_empty());
+        assert_eq!(malformed, 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn unwritable_path_degrades_to_disabled() {
+        let mut w =
+            TelemetryWriter::open("/nonexistent-dir-cadnn/t.jsonl", DEFAULT_MAX_BYTES);
+        assert!(!w.active());
+        // writes are silent no-ops, never panics
+        w.write_line(&spans_line(0.0, &[], 0));
+        assert!(!w.active());
+    }
+}

@@ -29,12 +29,18 @@
 //! counters; `serve` emits request lifecycle spans (enqueue →
 //! batch-formed → executed → replied, with deadline slack).
 
+pub mod drift;
+pub mod export;
 pub mod hist;
 pub mod report;
+pub mod sample;
 pub mod trace;
 
+pub use drift::{DriftConfig, DriftEvent, DriftWatchdog};
+pub use export::{TelemetryLine, TelemetryWriter};
 pub use hist::{HistSnapshot, Log2Hist};
 pub use report::{CostGroup, CostReport};
+pub use sample::{SampleConfig, Sampler};
 
 use std::cell::RefCell;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -50,6 +56,9 @@ pub const RING_CAPACITY: usize = 16 * 1024;
 pub const CAT_EXEC: &str = "exec";
 /// Span category for serving lifecycle spans (requests, batches).
 pub const CAT_SERVE: &str = "serve";
+/// Span category for kernel-family spans (one per parallel-dispatch
+/// entry point: gemm / csr / bsr / pattern / lut).
+pub const CAT_KERNEL: &str = "kernel";
 
 /// True when the crate was built with the `obs` feature (the default).
 pub const COMPILED: bool = cfg!(feature = "obs");
@@ -126,7 +135,7 @@ pub enum ArgValue {
 /// track, with a small set of key/value arguments.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Span {
-    /// [`CAT_EXEC`] or [`CAT_SERVE`].
+    /// [`CAT_EXEC`], [`CAT_SERVE`] or [`CAT_KERNEL`].
     pub cat: &'static str,
     /// Node name for exec spans; `"request"` / `"batch"` for serve spans.
     pub name: String,
@@ -135,6 +144,8 @@ pub struct Span {
     pub dur_us: f64,
     /// Small per-thread track id (assigned at first record on a thread).
     pub tid: u64,
+    /// Request trace id ([`next_trace_id`]); 0 = not part of any trace.
+    pub trace: u64,
     pub args: Vec<(&'static str, ArgValue)>,
 }
 
@@ -168,9 +179,55 @@ pub fn intern_key(key: &str) -> Option<&'static str> {
     ARG_KEYS.iter().find(|&&k| k == key).copied()
 }
 
-/// Map a category string onto [`CAT_EXEC`] / [`CAT_SERVE`].
+/// Map a category string onto [`CAT_EXEC`] / [`CAT_SERVE`] /
+/// [`CAT_KERNEL`].
 pub fn intern_cat(cat: &str) -> Option<&'static str> {
-    [CAT_EXEC, CAT_SERVE].into_iter().find(|&c| c == cat)
+    [CAT_EXEC, CAT_SERVE, CAT_KERNEL].into_iter().find(|&c| c == cat)
+}
+
+// ---------------------------------------------------------------------
+// trace context
+
+static NEXT_TRACE: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    static TRACE: std::cell::Cell<u64> = const { std::cell::Cell::new(0) };
+}
+
+/// Mint a fresh process-unique trace id (never 0).
+pub fn next_trace_id() -> u64 {
+    NEXT_TRACE.fetch_add(1, Ordering::Relaxed)
+}
+
+/// The trace id attached to spans recorded on this thread right now
+/// (0 = none). Set by [`with_trace`].
+#[inline]
+pub fn current_trace() -> u64 {
+    TRACE.with(|t| t.get())
+}
+
+/// Scope guard restoring the previous thread trace context on drop.
+pub struct TraceGuard {
+    prev: u64,
+}
+
+impl Drop for TraceGuard {
+    fn drop(&mut self) {
+        TRACE.with(|t| t.set(self.prev));
+    }
+}
+
+/// Attach `trace` to every span this thread records until the returned
+/// guard drops — the scoped thread-local trace context that lets deep
+/// call sites ([`record_span`], `exec` node spans, kernel spans) pick up
+/// the request's trace id without signature churn.
+#[must_use = "the trace context ends when the guard drops"]
+pub fn with_trace(trace: u64) -> TraceGuard {
+    TRACE.with(|t| {
+        let prev = t.get();
+        t.set(trace);
+        TraceGuard { prev }
+    })
 }
 
 struct Ring {
@@ -190,6 +247,9 @@ fn registry() -> &'static Mutex<Vec<Arc<ThreadTrack>>> {
 
 static NEXT_TID: AtomicU64 = AtomicU64::new(1);
 
+/// Drop counts inherited from pruned dead-thread tracks (see [`drain`]).
+static RETIRED_DROPPED: AtomicU64 = AtomicU64::new(0);
+
 thread_local! {
     static LOCAL: RefCell<Option<(Arc<ThreadTrack>, u64)>> = const { RefCell::new(None) };
 }
@@ -203,7 +263,8 @@ fn register_thread() -> (Arc<ThreadTrack>, u64) {
     (track, NEXT_TID.fetch_add(1, Ordering::Relaxed))
 }
 
-/// Record a finished span. No-op when recording is off. Never blocks:
+/// Record a finished span, stamped with this thread's current trace
+/// context ([`with_trace`]). No-op when recording is off. Never blocks:
 /// if a drain holds this thread's ring, the span is dropped and counted.
 pub fn record_span(
     cat: &'static str,
@@ -215,10 +276,11 @@ pub fn record_span(
     if !on() {
         return;
     }
+    let trace = current_trace();
     LOCAL.with(|l| {
         let mut l = l.borrow_mut();
         let (track, tid) = l.get_or_insert_with(register_thread);
-        let span = Span { cat, name, start_us, dur_us, tid: *tid, args };
+        let span = Span { cat, name, start_us, dur_us, tid: *tid, trace, args };
         match track.ring.try_lock() {
             Ok(mut ring) => {
                 if ring.spans.len() >= RING_CAPACITY {
@@ -251,12 +313,26 @@ pub fn span_since(
 /// Collect (and clear) every thread's recorded spans, sorted by start
 /// time. Threads recording concurrently keep going: a write that races
 /// the drain lands in the next drain or counts as dropped.
+///
+/// Exited threads' rings stay registered until drained here, so spans
+/// recorded just before a worker shuts down still reach the final flush;
+/// once emptied, a dead thread's track (registry holds the only `Arc`)
+/// is pruned so a long-lived server does not accumulate tracks.
 pub fn drain() -> Vec<Span> {
     let mut out = Vec::new();
-    for track in registry().lock().unwrap().iter() {
+    let mut tracks = registry().lock().unwrap();
+    for track in tracks.iter() {
         let mut ring = track.ring.lock().unwrap();
         out.extend(ring.spans.drain(..));
     }
+    tracks.retain(|t| {
+        let live = Arc::strong_count(t) > 1;
+        if !live {
+            RETIRED_DROPPED.fetch_add(t.dropped.load(Ordering::Relaxed), Ordering::Relaxed);
+        }
+        live
+    });
+    drop(tracks);
     out.sort_by(|a, b| {
         a.start_us
             .partial_cmp(&b.start_us)
@@ -269,12 +345,13 @@ pub fn drain() -> Vec<Span> {
 /// Total spans lost to ring overflow or drain contention since the last
 /// [`reset`].
 pub fn dropped_spans() -> u64 {
-    registry()
-        .lock()
-        .unwrap()
-        .iter()
-        .map(|t| t.dropped.load(Ordering::Relaxed))
-        .sum()
+    RETIRED_DROPPED.load(Ordering::Relaxed)
+        + registry()
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|t| t.dropped.load(Ordering::Relaxed))
+            .sum::<u64>()
 }
 
 /// Discard all recorded spans, zero the drop accounting and every
@@ -284,6 +361,7 @@ pub fn reset() {
         track.ring.lock().unwrap().spans.clear();
         track.dropped.store(0, Ordering::Relaxed);
     }
+    RETIRED_DROPPED.store(0, Ordering::Relaxed);
     for c in counter_cells().iter() {
         c.store(0, Ordering::Relaxed);
     }
@@ -419,7 +497,25 @@ mod tests {
         assert_eq!(intern_key("nonsense"), None);
         assert_eq!(intern_cat("exec"), Some(CAT_EXEC));
         assert_eq!(intern_cat("serve"), Some(CAT_SERVE));
+        assert_eq!(intern_cat("kernel"), Some(CAT_KERNEL));
         assert_eq!(intern_cat("metrics"), None);
+    }
+
+    #[test]
+    fn trace_context_nests_and_restores() {
+        assert_eq!(current_trace(), 0);
+        {
+            let _a = with_trace(7);
+            assert_eq!(current_trace(), 7);
+            {
+                let _b = with_trace(9);
+                assert_eq!(current_trace(), 9);
+            }
+            assert_eq!(current_trace(), 7);
+        }
+        assert_eq!(current_trace(), 0);
+        let (a, b) = (next_trace_id(), next_trace_id());
+        assert!(a > 0 && b > a);
     }
 
     #[test]
@@ -430,6 +526,7 @@ mod tests {
             start_us: 1.0,
             dur_us: 2.0,
             tid: 1,
+            trace: 0,
             args: vec![
                 ("m", ArgValue::Num(64.0)),
                 ("format", ArgValue::Str("csr".into())),

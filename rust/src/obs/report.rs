@@ -56,8 +56,10 @@ pub struct CostReport {
 
 /// Map a group's format label to the `planner::COST_*` constant it
 /// calibrates: `(constant name, current value)`. Quantized payloads map
-/// to the LUT constants regardless of the container format.
-fn cost_constant(format: &str) -> Option<(&'static str, f64)> {
+/// to the LUT constants regardless of the container format. Shared with
+/// the drift watchdog ([`super::drift`]), which names the stale
+/// constant in its events.
+pub(crate) fn cost_constant(format: &str) -> Option<(&'static str, f64)> {
     use crate::planner as p;
     if format.ends_with("+q8") {
         return Some(("COST_LUT_Q8", p::COST_LUT_Q8));
@@ -245,6 +247,7 @@ mod tests {
             start_us: 0.0,
             dur_us: us,
             tid: 1,
+            trace: 0,
             args: vec![
                 ("op", ArgValue::Str(op.to_string())),
                 ("format", ArgValue::Str(format.to_string())),

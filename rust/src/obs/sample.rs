@@ -1,0 +1,385 @@
+//! Tail-biased span sampling for always-on production tracing.
+//!
+//! A [`Sampler`] decides, per *trace* (every span minted for one request
+//! shares one trace id), whether the trace's spans survive into the
+//! telemetry stream. Two composed policies:
+//!
+//! - **Head sampling.** A configurable rate applied deterministically to
+//!   the trace-id hash ([`hash01`]) — no RNG state, so the
+//!   `serve::sim::SimServer` twin reproduces the exact same sampled set
+//!   for the same trace ids, and a trace is kept or dropped *whole*
+//!   (every span of a head-kept trace survives, including kernel spans
+//!   recorded long before the request's outcome is known).
+//! - **Tail keeping.** Traces whose terminal `request` span reports a
+//!   non-`ok` outcome (shed, deadline miss, backend error) are *always*
+//!   retained, as are `ok` traces whose latency lands at or above the
+//!   rolling p99 (a [`Log2Hist`] over previously observed ok-latencies).
+//!   Until the outcome is known, a head-dropped trace's spans wait in a
+//!   bounded pending buffer; the terminal span either flushes them into
+//!   the output or drops them with accounting.
+//!
+//! Everything is bounded: the pending buffer, the kept/dropped trace
+//! rings, and the drop counters make loss visible instead of silent.
+//! Untraced spans (trace id 0 — anything recorded outside a request
+//! scope) always pass through.
+
+use super::hist::Log2Hist;
+use super::{Span, CAT_SERVE};
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+
+/// Sampling policy knobs. `rate >= 1.0` keeps every trace at the head
+/// (the CI smoke's `--sample-rate 1.0`); `rate <= 0.0` keeps only the
+/// tail (non-ok outcomes and the latency p99).
+#[derive(Debug, Clone, Copy)]
+pub struct SampleConfig {
+    /// Head-sampling probability in `[0, 1]`, applied to
+    /// `hash01(trace)`.
+    pub rate: f64,
+    /// Max spans buffered for not-yet-decided traces; overflow drops the
+    /// buffered spans of the oldest pending trace (counted).
+    pub pending_cap: usize,
+    /// Max remembered kept / dropped trace ids (each); oldest forgotten
+    /// first. A forgotten trace's late spans fall back to the head
+    /// decision, so the rings only bound memory, not correctness of the
+    /// common case.
+    pub trace_cap: usize,
+    /// Ok-latency observations required before the rolling-p99 tail
+    /// keeper arms (too-small samples would keep everything).
+    pub min_hist: u64,
+}
+
+impl Default for SampleConfig {
+    fn default() -> SampleConfig {
+        SampleConfig { rate: 0.01, pending_cap: 4096, trace_cap: 1024, min_hist: 64 }
+    }
+}
+
+/// Deterministic trace-id hash onto `[0, 1)` — the splitmix64 finalizer,
+/// which spreads sequential ids uniformly.
+pub fn hash01(trace: u64) -> f64 {
+    let mut z = trace.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^= z >> 31;
+    // take the top 53 bits: exactly representable in f64
+    (z >> 11) as f64 / (1u64 << 53) as f64
+}
+
+/// Bounded insertion-ordered set of trace ids.
+#[derive(Debug, Default)]
+struct TraceRing {
+    order: VecDeque<u64>,
+    set: BTreeSet<u64>,
+}
+
+impl TraceRing {
+    fn insert(&mut self, trace: u64, cap: usize) {
+        if self.set.insert(trace) {
+            self.order.push_back(trace);
+            while self.order.len() > cap.max(1) {
+                if let Some(old) = self.order.pop_front() {
+                    self.set.remove(&old);
+                }
+            }
+        }
+    }
+
+    fn contains(&self, trace: u64) -> bool {
+        self.set.contains(&trace)
+    }
+}
+
+/// The tail-biased sampler (module doc). Feed it span batches via
+/// [`Sampler::filter`]; call [`Sampler::finish`] at shutdown to flush
+/// still-undecided traces (conservatively kept).
+#[derive(Debug)]
+pub struct Sampler {
+    cfg: SampleConfig,
+    kept: TraceRing,
+    dropped: TraceRing,
+    /// Undecided traces' buffered spans, insertion-ordered by trace
+    /// first-seen (`BTreeMap` keys are minted-in-order trace ids).
+    pending: BTreeMap<u64, Vec<Span>>,
+    pending_spans: usize,
+    /// Rolling ok-latency histogram driving the p99 tail keeper.
+    ok_hist: Log2Hist,
+    head_kept: u64,
+    tail_kept: u64,
+    dropped_traces: u64,
+    dropped_spans: u64,
+}
+
+impl Sampler {
+    pub fn new(cfg: SampleConfig) -> Sampler {
+        Sampler {
+            cfg,
+            kept: TraceRing::default(),
+            dropped: TraceRing::default(),
+            pending: BTreeMap::new(),
+            pending_spans: 0,
+            ok_hist: Log2Hist::new(),
+            head_kept: 0,
+            tail_kept: 0,
+            dropped_traces: 0,
+            dropped_spans: 0,
+        }
+    }
+
+    /// Traces kept by the head sampler so far.
+    pub fn head_kept(&self) -> u64 {
+        self.head_kept
+    }
+
+    /// Traces rescued by the tail keeper (non-ok outcome or p99 tail).
+    pub fn tail_kept(&self) -> u64 {
+        self.tail_kept
+    }
+
+    /// Traces fully dropped so far.
+    pub fn dropped_traces(&self) -> u64 {
+        self.dropped_traces
+    }
+
+    /// Spans dropped so far (sampled out or pending-buffer overflow).
+    pub fn dropped_spans(&self) -> u64 {
+        self.dropped_spans
+    }
+
+    /// Spans currently buffered for undecided traces.
+    pub fn pending_spans(&self) -> usize {
+        self.pending_spans
+    }
+
+    fn terminal_outcome(span: &Span) -> Option<&str> {
+        if span.cat == CAT_SERVE && span.name == "request" {
+            span.str_arg("outcome")
+        } else {
+            None
+        }
+    }
+
+    /// Rolling p99 threshold, `None` until `min_hist` ok-latencies
+    /// have been observed.
+    fn p99_threshold(&self) -> Option<f64> {
+        let snap = self.ok_hist.snapshot()?;
+        if snap.count < self.cfg.min_hist {
+            return None;
+        }
+        Some(snap.p99())
+    }
+
+    fn keep_trace(&mut self, trace: u64, out: &mut Vec<Span>) {
+        self.kept.insert(trace, self.cfg.trace_cap);
+        if let Some(buf) = self.pending.remove(&trace) {
+            self.pending_spans -= buf.len();
+            out.extend(buf);
+        }
+    }
+
+    fn drop_trace(&mut self, trace: u64, extra_spans: u64) {
+        self.dropped.insert(trace, self.cfg.trace_cap);
+        self.dropped_traces += 1;
+        let buffered = self.pending.remove(&trace).map(|b| b.len() as u64).unwrap_or(0);
+        self.pending_spans -= buffered as usize;
+        self.dropped_spans += buffered + extra_spans;
+    }
+
+    fn buffer_pending(&mut self, span: Span) {
+        // overflow evicts the *oldest* pending trace wholesale — its
+        // spans are gone, so if its terminal span later tail-keeps, the
+        // trace survives incomplete (visible in dropped_spans)
+        while self.pending_spans >= self.cfg.pending_cap.max(1) {
+            let Some((&oldest, _)) = self.pending.iter().next() else { break };
+            let buf = self.pending.remove(&oldest).unwrap_or_default();
+            self.pending_spans -= buf.len();
+            self.dropped_spans += buf.len() as u64;
+        }
+        self.pending_spans += 1;
+        self.pending.entry(span.trace).or_default().push(span);
+    }
+
+    /// Run one span batch through the sampler, returning the spans that
+    /// survive (plus any earlier-buffered spans of traces that just
+    /// became kept). Deterministic given the input sequence.
+    pub fn filter(&mut self, spans: Vec<Span>) -> Vec<Span> {
+        let mut out = Vec::new();
+        for span in spans {
+            let trace = span.trace;
+            if trace == 0 || self.kept.contains(trace) {
+                out.push(span);
+                continue;
+            }
+            if self.dropped.contains(trace) {
+                self.dropped_spans += 1;
+                continue;
+            }
+            if hash01(trace) < self.cfg.rate {
+                self.head_kept += 1;
+                self.keep_trace(trace, &mut out);
+                out.push(span);
+                continue;
+            }
+            match Self::terminal_outcome(&span) {
+                Some("ok") => {
+                    let latency = span.dur_us;
+                    // strictly above: the snapshot's p99 is clamped to
+                    // the observed max, so `>=` would keep all of a
+                    // uniform-latency stream
+                    let tail = self.p99_threshold().is_some_and(|p99| latency > p99);
+                    // the decision uses only *prior* traffic; record after
+                    self.ok_hist.record(latency);
+                    if tail {
+                        self.tail_kept += 1;
+                        self.keep_trace(trace, &mut out);
+                        out.push(span);
+                    } else {
+                        self.drop_trace(trace, 1);
+                    }
+                }
+                Some(_) => {
+                    // shed / deadline / error: always kept, whole trace
+                    self.tail_kept += 1;
+                    self.keep_trace(trace, &mut out);
+                    out.push(span);
+                }
+                None => self.buffer_pending(span),
+            }
+        }
+        out
+    }
+
+    /// Flush still-undecided traces (conservatively kept) — the final
+    /// telemetry flush at server shutdown calls this so in-flight
+    /// requests' spans are not lost.
+    pub fn finish(&mut self) -> Vec<Span> {
+        let mut out = Vec::new();
+        let traces: Vec<u64> = self.pending.keys().copied().collect();
+        for t in traces {
+            self.keep_trace(t, &mut out);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::{ArgValue, CAT_EXEC};
+
+    fn req(trace: u64, outcome: &str, dur: f64) -> Span {
+        Span {
+            cat: CAT_SERVE,
+            name: "request".into(),
+            start_us: trace as f64,
+            dur_us: dur,
+            tid: 1,
+            trace,
+            args: vec![("outcome", ArgValue::Str(outcome.into()))],
+        }
+    }
+
+    fn node(trace: u64) -> Span {
+        Span {
+            cat: CAT_EXEC,
+            name: "fc".into(),
+            start_us: trace as f64,
+            dur_us: 1.0,
+            tid: 1,
+            trace,
+            args: vec![],
+        }
+    }
+
+    #[test]
+    fn hash01_is_uniformish_and_deterministic() {
+        let n = 10_000;
+        let hits = (1..=n).filter(|&t| hash01(t) < 0.25).count();
+        let frac = hits as f64 / n as f64;
+        assert!((frac - 0.25).abs() < 0.02, "head rate off: {frac}");
+        assert_eq!(hash01(42), hash01(42));
+        assert!((0.0..1.0).contains(&hash01(0)) && (0.0..1.0).contains(&hash01(u64::MAX)));
+    }
+
+    #[test]
+    fn rate_one_keeps_everything_rate_zero_keeps_only_tail() {
+        let mut all = Sampler::new(SampleConfig { rate: 1.0, ..SampleConfig::default() });
+        let spans: Vec<Span> =
+            (1..=50).flat_map(|t| vec![node(t), req(t, "ok", 100.0)]).collect();
+        assert_eq!(all.filter(spans.clone()).len(), spans.len());
+        assert_eq!(all.dropped_spans(), 0);
+
+        let mut none = Sampler::new(SampleConfig { rate: 0.0, ..SampleConfig::default() });
+        let kept = none.filter(spans);
+        assert!(kept.is_empty(), "ok traces below p99 must drop at rate 0");
+        assert_eq!(none.dropped_traces(), 50);
+    }
+
+    #[test]
+    fn non_ok_outcomes_always_survive_with_their_buffered_spans() {
+        let mut s = Sampler::new(SampleConfig { rate: 0.0, ..SampleConfig::default() });
+        let kept = s.filter(vec![node(5), node(5), req(5, "shed", 0.0)]);
+        assert_eq!(kept.len(), 3, "whole trace flushes on tail keep");
+        assert!(kept.iter().all(|sp| sp.trace == 5));
+        // late spans of a kept trace pass straight through
+        assert_eq!(s.filter(vec![node(5)]).len(), 1);
+        assert_eq!(s.tail_kept(), 1);
+        assert_eq!(s.dropped_spans(), 0);
+    }
+
+    #[test]
+    fn p99_tail_keeper_arms_after_min_hist() {
+        let cfg = SampleConfig { rate: 0.0, min_hist: 64, ..SampleConfig::default() };
+        let mut s = Sampler::new(cfg);
+        // 100 fast oks train the histogram and all drop: the keeper is
+        // unarmed below min_hist, and after arming the rolling p99
+        // clamps to the observed max (100us), which 100us does not
+        // strictly exceed
+        for t in 1..=100 {
+            assert!(s.filter(vec![req(t, "ok", 100.0)]).is_empty());
+        }
+        // a 10x-latency straggler lands above the rolling p99
+        let kept = s.filter(vec![req(1000, "ok", 1000.0)]);
+        assert_eq!(kept.len(), 1);
+        assert_eq!(s.tail_kept(), 1);
+    }
+
+    #[test]
+    fn untraced_spans_pass_through() {
+        let mut s = Sampler::new(SampleConfig { rate: 0.0, ..SampleConfig::default() });
+        let kept = s.filter(vec![node(0)]);
+        assert_eq!(kept.len(), 1);
+        assert_eq!(s.dropped_spans(), 0);
+    }
+
+    #[test]
+    fn pending_overflow_evicts_oldest_trace_and_counts() {
+        let cfg = SampleConfig { rate: 0.0, pending_cap: 4, ..SampleConfig::default() };
+        let mut s = Sampler::new(cfg);
+        // 6 undecided single-span traces through a 4-span buffer
+        for t in 1..=6 {
+            assert!(s.filter(vec![node(t)]).is_empty());
+        }
+        assert_eq!(s.pending_spans(), 4);
+        assert_eq!(s.dropped_spans(), 2);
+        // finish() conservatively keeps what still waits
+        assert_eq!(s.finish().len(), 4);
+        assert_eq!(s.pending_spans(), 0);
+    }
+
+    #[test]
+    fn same_input_same_decisions() {
+        let mk = || {
+            let spans: Vec<Span> = (1..=200)
+                .flat_map(|t| {
+                    let outcome = if t % 7 == 0 { "shed" } else { "ok" };
+                    vec![node(t), req(t, outcome, 50.0 + (t % 13) as f64 * 40.0)]
+                })
+                .collect();
+            let mut s = Sampler::new(SampleConfig { rate: 0.1, ..SampleConfig::default() });
+            let mut kept = s.filter(spans);
+            kept.extend(s.finish());
+            (kept, s.head_kept(), s.tail_kept(), s.dropped_spans())
+        };
+        assert_eq!(mk(), mk());
+    }
+}

@@ -11,38 +11,41 @@
 use super::{intern_cat, intern_key, ArgValue, Span};
 use crate::util::json::Json;
 
+/// Render one span as a Chrome trace-event object (`"ph": "X"`). The
+/// trace id, when set, rides inside `args` under the reserved
+/// `"trace_id"` key — shared by [`chrome_trace`] and the serve-side
+/// telemetry exporter ([`super::export`]).
+pub fn span_event(s: &Span) -> Json {
+    let mut ev = vec![
+        ("name".to_string(), Json::Str(s.name.clone())),
+        ("cat".to_string(), Json::Str(s.cat.to_string())),
+        ("ph".to_string(), Json::Str("X".to_string())),
+        ("ts".to_string(), Json::Num(s.start_us)),
+        ("dur".to_string(), Json::Num(s.dur_us)),
+        ("pid".to_string(), Json::Num(1.0)),
+        ("tid".to_string(), Json::Num(s.tid as f64)),
+    ];
+    if !s.args.is_empty() || s.trace != 0 {
+        let mut args: Vec<(String, Json)> = Vec::with_capacity(s.args.len() + 1);
+        if s.trace != 0 {
+            args.push(("trace_id".to_string(), Json::Num(s.trace as f64)));
+        }
+        for (k, v) in &s.args {
+            let jv = match v {
+                ArgValue::Num(n) => Json::Num(*n),
+                ArgValue::Str(t) => Json::Str(t.clone()),
+            };
+            args.push((k.to_string(), jv));
+        }
+        ev.push(("args".to_string(), Json::Obj(args)));
+    }
+    Json::Obj(ev)
+}
+
 /// Render spans (plus counters and the drop count) as a Chrome
 /// trace-event JSON document.
 pub fn chrome_trace(spans: &[Span], counters: &[(&'static str, u64)], dropped: u64) -> Json {
-    let events = spans
-        .iter()
-        .map(|s| {
-            let mut ev = vec![
-                ("name".to_string(), Json::Str(s.name.clone())),
-                ("cat".to_string(), Json::Str(s.cat.to_string())),
-                ("ph".to_string(), Json::Str("X".to_string())),
-                ("ts".to_string(), Json::Num(s.start_us)),
-                ("dur".to_string(), Json::Num(s.dur_us)),
-                ("pid".to_string(), Json::Num(1.0)),
-                ("tid".to_string(), Json::Num(s.tid as f64)),
-            ];
-            if !s.args.is_empty() {
-                let args = s
-                    .args
-                    .iter()
-                    .map(|(k, v)| {
-                        let jv = match v {
-                            ArgValue::Num(n) => Json::Num(*n),
-                            ArgValue::Str(t) => Json::Str(t.clone()),
-                        };
-                        (k.to_string(), jv)
-                    })
-                    .collect();
-                ev.push(("args".to_string(), Json::Obj(args)));
-            }
-            Json::Obj(ev)
-        })
-        .collect();
+    let events = spans.iter().map(span_event).collect();
     let counter_obj = counters
         .iter()
         .map(|&(name, v)| (name.to_string(), Json::Num(v as f64)))
@@ -71,37 +74,50 @@ pub fn parse_chrome_trace(j: &Json) -> Result<Vec<Span>, String> {
         .ok_or("missing traceEvents array")?;
     let mut out = Vec::with_capacity(events.len());
     for (i, ev) in events.iter().enumerate() {
-        let field = |key: &str| ev.get(key).ok_or_else(|| format!("event {i}: missing '{key}'"));
-        let ph = field("ph")?.as_str().ok_or_else(|| format!("event {i}: ph not a string"))?;
-        if ph != "X" {
-            return Err(format!("event {i}: unsupported phase '{ph}' (writer emits X only)"));
-        }
-        let name = field("name")?
-            .as_str()
-            .ok_or_else(|| format!("event {i}: name not a string"))?
-            .to_string();
-        let cat_s = field("cat")?.as_str().ok_or_else(|| format!("event {i}: cat not a string"))?;
-        let cat = intern_cat(cat_s)
-            .ok_or_else(|| format!("event {i}: unknown category '{cat_s}'"))?;
-        let start_us = field("ts")?.as_f64().ok_or_else(|| format!("event {i}: ts not a number"))?;
-        let dur_us = field("dur")?.as_f64().ok_or_else(|| format!("event {i}: dur not a number"))?;
-        let tid =
-            field("tid")?.as_f64().ok_or_else(|| format!("event {i}: tid not a number"))? as u64;
-        let mut args = Vec::new();
-        if let Some(Json::Obj(kv)) = ev.get("args") {
-            for (k, v) in kv {
-                let key = intern_key(k).ok_or_else(|| format!("event {i}: unknown arg key '{k}'"))?;
-                let val = match v {
-                    Json::Num(n) => ArgValue::Num(*n),
-                    Json::Str(s) => ArgValue::Str(s.clone()),
-                    other => return Err(format!("event {i}: arg '{k}' bad type {other:?}")),
-                };
-                args.push((key, val));
-            }
-        }
-        out.push(Span { cat, name, start_us, dur_us, tid, args });
+        out.push(parse_span_event(ev, i)?);
     }
     Ok(out)
+}
+
+/// Parse one event written by [`span_event`] back into a [`Span`] —
+/// the exact inverse, `i` only labels errors.
+pub fn parse_span_event(ev: &Json, i: usize) -> Result<Span, String> {
+    let field = |key: &str| ev.get(key).ok_or_else(|| format!("event {i}: missing '{key}'"));
+    let ph = field("ph")?.as_str().ok_or_else(|| format!("event {i}: ph not a string"))?;
+    if ph != "X" {
+        return Err(format!("event {i}: unsupported phase '{ph}' (writer emits X only)"));
+    }
+    let name = field("name")?
+        .as_str()
+        .ok_or_else(|| format!("event {i}: name not a string"))?
+        .to_string();
+    let cat_s = field("cat")?.as_str().ok_or_else(|| format!("event {i}: cat not a string"))?;
+    let cat =
+        intern_cat(cat_s).ok_or_else(|| format!("event {i}: unknown category '{cat_s}'"))?;
+    let start_us = field("ts")?.as_f64().ok_or_else(|| format!("event {i}: ts not a number"))?;
+    let dur_us = field("dur")?.as_f64().ok_or_else(|| format!("event {i}: dur not a number"))?;
+    let tid = field("tid")?.as_f64().ok_or_else(|| format!("event {i}: tid not a number"))? as u64;
+    let mut args = Vec::new();
+    let mut trace = 0u64;
+    if let Some(Json::Obj(kv)) = ev.get("args") {
+        for (k, v) in kv {
+            if k == "trace_id" {
+                trace = v
+                    .as_f64()
+                    .ok_or_else(|| format!("event {i}: trace_id not a number"))?
+                    as u64;
+                continue;
+            }
+            let key = intern_key(k).ok_or_else(|| format!("event {i}: unknown arg key '{k}'"))?;
+            let val = match v {
+                Json::Num(n) => ArgValue::Num(*n),
+                Json::Str(s) => ArgValue::Str(s.clone()),
+                other => return Err(format!("event {i}: arg '{k}' bad type {other:?}")),
+            };
+            args.push((key, val));
+        }
+    }
+    Ok(Span { cat, name, start_us, dur_us, tid, trace, args })
 }
 
 #[cfg(test)]
@@ -117,6 +133,7 @@ mod tests {
                 start_us: 10.0,
                 dur_us: 120.5,
                 tid: 1,
+                trace: 41,
                 args: vec![
                     ("op", ArgValue::Str("conv2d".into())),
                     ("m", ArgValue::Num(3136.0)),
@@ -129,6 +146,7 @@ mod tests {
                 start_us: 0.0,
                 dur_us: 900.0,
                 tid: 2,
+                trace: 0,
                 args: vec![
                     ("model", ArgValue::Str("lenet5".into())),
                     ("id", ArgValue::Num(7.0)),
@@ -152,6 +170,25 @@ mod tests {
         assert_eq!(other.get("dropped_spans").and_then(|v| v.as_f64()), Some(3.0));
         let c = other.get("counters").unwrap();
         assert_eq!(c.get("csr_rows").and_then(|v| v.as_f64()), Some(42.0));
+    }
+
+    #[test]
+    fn trace_id_survives_even_without_args() {
+        use crate::obs::CAT_KERNEL;
+        let spans = vec![Span {
+            cat: CAT_KERNEL,
+            name: "csr".into(),
+            start_us: 1.0,
+            dur_us: 2.0,
+            tid: 3,
+            trace: 99,
+            args: vec![],
+        }];
+        let j = chrome_trace(&spans, &[], 0);
+        let parsed = Json::parse(&j.to_string_pretty()).unwrap();
+        let back = parse_chrome_trace(&parsed).unwrap();
+        assert_eq!(back, spans);
+        assert_eq!(back[0].trace, 99);
     }
 
     #[test]

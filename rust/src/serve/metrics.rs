@@ -422,6 +422,58 @@ impl MetricsSnapshot {
         snaps.into_iter().reduce(|a, b| a.merge(&b))
     }
 
+    /// JSON rendering for the telemetry stream (`--telemetry-out`
+    /// snapshot lines). Counters always; optional summaries become
+    /// nested objects or are omitted; histograms reuse
+    /// [`HistSnapshot::to_json`].
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let num = |v: u64| Json::Num(v as f64);
+        let mut kv = vec![
+            ("requests".to_string(), num(self.requests)),
+            ("batches".to_string(), num(self.batches)),
+            ("backend_errors".to_string(), num(self.backend_errors)),
+            ("deadline_misses".to_string(), num(self.deadline_misses)),
+            ("deadline_misses_queue".to_string(), num(self.deadline_misses_queue)),
+            (
+                "deadline_misses_infeasible".to_string(),
+                num(self.deadline_misses_infeasible),
+            ),
+            ("shed_deadline".to_string(), num(self.shed_deadline)),
+            ("shed_quota".to_string(), num(self.shed_quota)),
+            ("shed_backlog".to_string(), num(self.shed_backlog)),
+            ("shed_total".to_string(), num(self.shed_total())),
+            ("committed_us".to_string(), num(self.committed_us)),
+            ("replicas".to_string(), num(self.replicas)),
+            ("steals".to_string(), num(self.steals)),
+            ("queue_depth".to_string(), num(self.queue_depth)),
+            ("used_slots".to_string(), num(self.used_slots)),
+            ("total_slots".to_string(), num(self.total_slots)),
+            ("batch_utilization".to_string(), Json::Num(self.batch_utilization)),
+            ("window_s".to_string(), Json::Num(self.window_s)),
+            ("throughput_rps".to_string(), Json::Num(self.throughput_rps)),
+        ];
+        if let Some(q) = self.quota_us {
+            kv.push(("quota_us".to_string(), num(q)));
+        }
+        if let Some(u) = self.quota_utilization {
+            kv.push(("quota_utilization".to_string(), Json::Num(u)));
+        }
+        if let Some(u) = self.us_per_unit {
+            kv.push(("us_per_unit".to_string(), Json::Num(u)));
+        }
+        for (key, hist) in [
+            ("latency", &self.latency_hist),
+            ("exec", &self.exec_hist),
+            ("queue_wait", &self.queue_wait_hist),
+        ] {
+            if let Some(h) = hist {
+                kv.push((key.to_string(), h.to_json()));
+            }
+        }
+        Json::Obj(kv)
+    }
+
     /// Human-readable multi-line report (the `cadnn serve` stats block).
     pub fn report(&self) -> String {
         let mut out = String::new();
@@ -629,6 +681,27 @@ mod tests {
         assert_eq!(m.latency.as_ref().unwrap().max, 5_000.0);
         // merge is commutative (field for field)
         assert_eq!(m, b.snapshot().merge(&a.snapshot()));
+    }
+
+    #[test]
+    fn snapshot_to_json_carries_sheds_and_hists() {
+        let m = Metrics::new();
+        m.record_request(2000.0);
+        m.record_batch(2, 2, 800.0);
+        let mut s = m.snapshot();
+        s.shed_quota = 4;
+        s.quota_us = Some(10_000);
+        let j = s.to_json();
+        // through the serialized compact text (the telemetry line shape)
+        let text = j.to_string_compact();
+        assert!(!text.contains('\n'));
+        let back = crate::util::json::Json::parse(&text).unwrap();
+        assert_eq!(back.get("requests").and_then(|v| v.as_f64()), Some(1.0));
+        assert_eq!(back.get("shed_quota").and_then(|v| v.as_f64()), Some(4.0));
+        assert_eq!(back.get("shed_total").and_then(|v| v.as_f64()), Some(4.0));
+        assert_eq!(back.get("quota_us").and_then(|v| v.as_f64()), Some(10_000.0));
+        assert!(back.get("latency").and_then(|h| h.get("p99_us")).is_some());
+        assert!(back.get("queue_wait").is_none(), "empty hists omitted");
     }
 
     #[test]

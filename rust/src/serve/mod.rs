@@ -256,6 +256,10 @@ pub(crate) struct Pending {
     pub(crate) deadline_us: Option<u64>,
     /// Commitment charged at admission; released at the terminal reply.
     pub(crate) cost_us: u64,
+    /// Request trace id ([`obs::next_trace_id`]); 0 = untraced. Carried
+    /// through queue → batch → execution so every span the request
+    /// touches shares one id.
+    pub(crate) trace: u64,
     pub(crate) topk: Option<usize>,
     pub(crate) reply: Sender<ServeResponse>,
 }
@@ -338,6 +342,37 @@ pub struct ServerBuilder {
     specs: Vec<ModelSpec>,
     clock: Option<SharedClock>,
     admission: AdmissionConfig,
+    telemetry: Option<TelemetryConfig>,
+}
+
+/// Live telemetry export knobs (see [`crate::obs::export`]): where the
+/// JSONL stream goes, how spans are sampled, how often the background
+/// flusher wakes.
+#[derive(Debug, Clone)]
+pub struct TelemetryConfig {
+    /// Telemetry JSONL destination (line-appended, rotated at
+    /// `max_bytes` to `<path>.1`).
+    pub path: std::path::PathBuf,
+    /// Head sampling rate in `[0, 1]` ([`crate::obs::SampleConfig::rate`]);
+    /// tail-kept traces (sheds, deadline misses, errors, p99 stragglers)
+    /// survive regardless.
+    pub sample_rate: f64,
+    /// Flush period. The flusher also drains once more at shutdown, so
+    /// short-lived servers still emit their final snapshot.
+    pub period_ms: u64,
+    /// Rotation cap per telemetry file generation.
+    pub max_bytes: u64,
+}
+
+impl TelemetryConfig {
+    pub fn new(path: impl Into<std::path::PathBuf>) -> TelemetryConfig {
+        TelemetryConfig {
+            path: path.into(),
+            sample_rate: obs::SampleConfig::default().rate,
+            period_ms: 500,
+            max_bytes: obs::export::DEFAULT_MAX_BYTES,
+        }
+    }
 }
 
 impl ServerBuilder {
@@ -393,6 +428,17 @@ impl ServerBuilder {
         self
     }
 
+    /// Enable always-on production tracing: turns the span recorder on
+    /// and spawns a background flusher that samples traces
+    /// ([`crate::obs::Sampler`]), watches cost-model drift
+    /// ([`crate::obs::DriftWatchdog`]), and appends JSONL telemetry to
+    /// `cfg.path`. Export failures degrade to a warning — they never
+    /// block or fail serving.
+    pub fn telemetry(mut self, cfg: TelemetryConfig) -> ServerBuilder {
+        self.telemetry = Some(cfg);
+        self
+    }
+
     /// Inject the time source every queue/deadline/admission decision
     /// reads (default: a fresh [`SystemClock`]). Threaded workers poll
     /// in bounded slices, so a frozen [`VirtualClock`] cannot hang them —
@@ -411,9 +457,14 @@ impl ServerBuilder {
             return Err(CadnnError::config("no models registered"));
         }
         let clock = self.clock.unwrap_or_else(clock::system);
+        if self.telemetry.is_some() {
+            // telemetry implies tracing: spans must exist to be sampled
+            obs::enable();
+        }
         let global_committed = Arc::new(AtomicU64::new(0));
         let mut handles: BTreeMap<String, ModelHandle> = BTreeMap::new();
         let mut registry = Registry::default();
+        let mut flusher_sources: Vec<FlusherSource> = Vec::new();
         // On any failure, tear down everything spawned so far: signal
         // every shard, then join — condvar workers never exit on their
         // own (there is no channel whose closure could stop them).
@@ -456,6 +507,11 @@ impl ServerBuilder {
                 let e = spec.engine.clone().expect("checked above: replicas > 1 has an engine");
                 factories.push(Box::new(move || Ok(Box::new(e) as Box<dyn Backend>)));
             }
+            flusher_sources.push(FlusherSource {
+                model: spec.name.clone(),
+                metrics: metrics.clone(),
+                admission: Arc::clone(&adm),
+            });
             let (ready_tx, ready_rx) = channel::<Result<ReadyInfo, CadnnError>>();
             let mut workers = Vec::with_capacity(replicas);
             for (r, factory) in factories.into_iter().enumerate() {
@@ -530,7 +586,107 @@ impl ServerBuilder {
             registry.insert(entry);
             handles.insert(spec.name, ModelHandle { input_len, ..handle });
         }
-        Ok(Server { handles, registry, next_id: AtomicU64::new(1), clock })
+        let telemetry = self
+            .telemetry
+            .map(|cfg| TelemetryFlusher::spawn(cfg, flusher_sources));
+        Ok(Server { handles, registry, next_id: AtomicU64::new(1), clock, telemetry })
+    }
+}
+
+/// What the telemetry flusher reads per model: replica metrics to merge
+/// and the admission state to stamp on top — the same inputs as
+/// [`Server::stats`].
+struct FlusherSource {
+    model: String,
+    metrics: Vec<Arc<Metrics>>,
+    admission: Arc<ModelAdmission>,
+}
+
+/// Background telemetry thread: periodically drains the span recorder,
+/// streams spans through the drift watchdog and the sampler, and
+/// appends JSONL lines ([`crate::obs::export`]). Runs entirely off the
+/// request path — workers only ever touch their lock-free span rings.
+struct TelemetryFlusher {
+    stop: Arc<AtomicBool>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+/// Shutdown-responsiveness slice for the flusher's sleep.
+const FLUSHER_POLL: Duration = Duration::from_millis(10);
+
+impl TelemetryFlusher {
+    fn spawn(cfg: TelemetryConfig, sources: Vec<FlusherSource>) -> TelemetryFlusher {
+        let stop = Arc::new(AtomicBool::new(false));
+        let flag = Arc::clone(&stop);
+        let thread = std::thread::Builder::new()
+            .name("cadnn-telemetry".to_string())
+            .spawn(move || flusher_loop(cfg, sources, flag));
+        let thread = match thread {
+            Ok(t) => Some(t),
+            Err(e) => {
+                crate::util::log::log(
+                    crate::util::log::Level::Warn,
+                    "obs::export",
+                    format_args!("telemetry flusher spawn failed: {e} — telemetry disabled"),
+                );
+                None
+            }
+        };
+        TelemetryFlusher { stop, thread }
+    }
+
+    /// Idempotent: the thread handle is taken on the first call.
+    fn stop_and_join(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn flusher_loop(cfg: TelemetryConfig, sources: Vec<FlusherSource>, stop: Arc<AtomicBool>) {
+    use crate::obs::export;
+    let mut writer = export::TelemetryWriter::open(&cfg.path, cfg.max_bytes);
+    let mut sampler = obs::Sampler::new(obs::SampleConfig {
+        rate: cfg.sample_rate,
+        ..obs::SampleConfig::default()
+    });
+    let mut drift = obs::DriftWatchdog::new(obs::DriftConfig::default());
+    loop {
+        // read the flag BEFORE draining: spans recorded before a
+        // shutdown signal are guaranteed to be in this final drain
+        // (workers are joined before the flusher is stopped)
+        let stopping = stop.load(Ordering::Acquire);
+        let spans = obs::drain();
+        let at_us = obs::now_us();
+        for ev in drift.observe(&spans) {
+            writer.write_line(&ev.to_json());
+        }
+        let mut kept = sampler.filter(spans);
+        if stopping {
+            // undecided traces are conservatively kept at shutdown
+            kept.extend(sampler.finish());
+        }
+        if !kept.is_empty() {
+            let dropped = obs::dropped_spans() + sampler.dropped_spans();
+            writer.write_line(&export::spans_line(at_us, &kept, dropped));
+        }
+        let counters = obs::counters();
+        for s in &sources {
+            let merged = MetricsSnapshot::merge_all(s.metrics.iter().map(|m| m.snapshot()))
+                .unwrap_or_default();
+            let snap = stamp_admission(merged, &s.admission);
+            writer.write_line(&export::snapshot_line(at_us, &s.model, snap.to_json(), &counters));
+        }
+        if stopping {
+            return;
+        }
+        let mut left = Duration::from_millis(cfg.period_ms.max(1));
+        while !stop.load(Ordering::Acquire) && left > Duration::ZERO {
+            let slice = left.min(FLUSHER_POLL);
+            std::thread::sleep(slice);
+            left -= slice;
+        }
     }
 }
 
@@ -570,6 +726,7 @@ pub struct Server {
     registry: Registry,
     next_id: AtomicU64,
     clock: SharedClock,
+    telemetry: Option<TelemetryFlusher>,
 }
 
 impl Server {
@@ -653,10 +810,30 @@ impl Server {
         }
         let (rtx, rrx) = channel();
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        // mint the trace id at the front door: every span this request
+        // touches (admit, queue expiry, batch, exec, kernels, reply)
+        // carries it, so a sampled trace reconstructs the full lifecycle
+        let trace = if obs::on() { obs::next_trace_id() } else { 0 };
         let cost_us = match handle.admission.admit(req.deadline_us) {
-            AdmitDecision::Admit { cost_us, .. } => cost_us,
+            AdmitDecision::Admit { cost_us, predicted_us } => {
+                if obs::on() {
+                    let _tg = obs::with_trace(trace);
+                    obs::record_span(
+                        obs::CAT_SERVE,
+                        "admit".to_string(),
+                        obs::now_us(),
+                        0.0,
+                        vec![
+                            ("model", ArgValue::Str(req.model.clone())),
+                            ("id", ArgValue::Num(id as f64)),
+                            ("predicted_us", ArgValue::Num(predicted_us as f64)),
+                        ],
+                    );
+                }
+                cost_us
+            }
             decision => {
-                let _ = rtx.send(shed_response(&req.model, id, req.deadline_us, decision));
+                let _ = rtx.send(shed_response(&req.model, id, trace, req.deadline_us, decision));
                 return Ok(rrx);
             }
         };
@@ -668,6 +845,7 @@ impl Server {
             deadline_at_us: req.deadline_us.map(|us| enqueued_us.saturating_add(us)),
             deadline_us: req.deadline_us,
             cost_us,
+            trace,
             topk: req.topk,
             reply: rtx,
         };
@@ -697,13 +875,22 @@ impl Server {
     /// are signalled before any is joined, so the total shutdown time is
     /// the slowest model's drain, not the sum of all drains.
     pub fn shutdown(mut self) -> Result<(), CadnnError> {
-        shutdown_handles(&mut self.handles)
+        // workers first: once they are joined, every span they recorded
+        // is in the rings, so the flusher's final drain misses nothing
+        let result = shutdown_handles(&mut self.handles);
+        if let Some(f) = self.telemetry.as_mut() {
+            f.stop_and_join();
+        }
+        result
     }
 }
 
 impl Drop for Server {
     fn drop(&mut self) {
         let _ = shutdown_handles(&mut self.handles);
+        if let Some(f) = self.telemetry.as_mut() {
+            f.stop_and_join();
+        }
     }
 }
 
@@ -726,6 +913,7 @@ pub(crate) fn stamp_admission(mut snap: MetricsSnapshot, adm: &ModelAdmission) -
 pub(crate) fn shed_response(
     model: &str,
     id: u64,
+    trace: u64,
     deadline_us: Option<u64>,
     decision: AdmitDecision,
 ) -> ServeResponse {
@@ -744,6 +932,7 @@ pub(crate) fn shed_response(
         AdmitDecision::Admit { .. } => unreachable!("admitted requests are not shed replies"),
     };
     if obs::on() {
+        let _tg = obs::with_trace(trace);
         obs::record_span(
             obs::CAT_SERVE,
             "request".to_string(),
@@ -934,7 +1123,12 @@ fn flush_replica(
         drop(q);
         let input = gather_input(&batch, b, per_image);
         let formed_at_us = ctx.clock.now_us();
-        let result = backend.run_batch(b, &input);
+        // exec/kernel spans recorded inside run_batch inherit the head
+        // request's trace via the thread-local trace context
+        let result = {
+            let _tg = obs::with_trace(batch.first().map(|r| r.trace).unwrap_or(0));
+            backend.run_batch(b, &input)
+        };
         let exec_us = ctx.clock.now_us().saturating_sub(formed_at_us).max(1);
         if result.is_ok() {
             sched.observe(b, exec_us as f64);
@@ -1000,6 +1194,7 @@ pub(crate) fn expire_queue(
         metrics.record_deadline_miss(infeasible);
         admission.release(r.cost_us);
         if obs::on() {
+            let _tg = obs::with_trace(r.trace);
             obs::record_span(
                 obs::CAT_SERVE,
                 "request".to_string(),
@@ -1098,6 +1293,7 @@ pub(crate) fn complete_batch(
         if let Some(d) = r.deadline_us {
             args.push(("slack_us", ArgValue::Num(d as f64 - latency_us)));
         }
+        let _tg = obs::with_trace(r.trace);
         obs::record_span(
             obs::CAT_SERVE,
             "request".to_string(),
@@ -1106,10 +1302,14 @@ pub(crate) fn complete_batch(
             args,
         );
     };
+    // the batch span is attributed to the head request's trace (a batch
+    // serves many traces; the head is the one that formed it)
+    let head_trace = batch.first().map(|r| r.trace).unwrap_or(0);
     match result {
         Ok(out) => {
             metrics.record_batch(b, take, exec_us as f64);
             if obs::on() {
+                let _tg = obs::with_trace(head_trace);
                 obs::record_span(
                     obs::CAT_SERVE,
                     "batch".to_string(),
@@ -1238,6 +1438,7 @@ mod tests {
             deadline_at_us,
             deadline_us: deadline_at_us.map(|d| d - enqueued_us),
             cost_us: 0,
+            trace: 0,
             topk: None,
             reply: tx,
         }

@@ -72,6 +72,10 @@ pub struct ExecRecord {
 
 struct Submission {
     id: u64,
+    /// Deterministic trace id (== `id`): the sim never consults the
+    /// process-global trace counter, so identical runs produce identical
+    /// trace ids and identical sampling decisions.
+    trace: u64,
     model: String,
     input: Vec<f32>,
     deadline_us: Option<u64>,
@@ -312,6 +316,7 @@ impl SimServer {
             at_us,
             EvKind::Arrival(Submission {
                 id: self.next_id,
+                trace: self.next_id,
                 model: req.model,
                 input: req.input,
                 deadline_us: req.deadline_us,
@@ -395,7 +400,7 @@ impl SimServer {
             refused => {
                 let _ = sub
                     .reply
-                    .send(shed_response(&sub.model, sub.id, sub.deadline_us, refused));
+                    .send(shed_response(&sub.model, sub.id, sub.trace, sub.deadline_us, refused));
                 return;
             }
         };
@@ -413,6 +418,7 @@ impl SimServer {
             deadline_at_us: sub.deadline_us.map(|d| now.saturating_add(d)),
             deadline_us: sub.deadline_us,
             cost_us,
+            trace: sub.trace,
             topk: sub.topk,
             reply: sub.reply,
         });
@@ -456,7 +462,12 @@ impl SimServer {
                 let input = gather_input(&batch, b, model.per_image);
                 (b, batch, input)
             };
-            let result = model.backend.run_batch(b, &input);
+            // same trace propagation as the threaded worker: exec spans
+            // recorded inside run_batch carry the head request's trace
+            let result = {
+                let _tg = crate::obs::with_trace(batch.first().map(|p| p.trace).unwrap_or(0));
+                model.backend.run_batch(b, &input)
+            };
             let exec_us = (model.cost_fn)(b).max(1);
             for p in &batch {
                 self.exec_log.push(ExecRecord {

@@ -86,6 +86,14 @@ impl Json {
         out
     }
 
+    /// Single-line rendering (no newlines or indentation) — the JSONL
+    /// telemetry stream needs one document per line.
+    pub fn to_string_compact(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out, 0, false);
+        out
+    }
+
     fn write(&self, out: &mut String, indent: usize, pretty: bool) {
         match self {
             Json::Null => out.push_str("null"),

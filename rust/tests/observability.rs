@@ -119,6 +119,7 @@ fn residuals_on_a_synthetic_plan_recover_the_skew() {
         start_us: 0.0,
         dur_us: dur,
         tid: 1,
+        trace: 0,
         args: vec![
             ("op", ArgValue::Str("fc".into())),
             ("format", ArgValue::Str(format.to_string())),
